@@ -1,0 +1,8 @@
+//! Fig 3 bench: isolated resolution-level influence on positive retention
+//! rate and speedup across β = 1..14.
+use pyramidai::experiments::{fig345, Ctx, CtxConfig, ModelKind};
+
+fn main() {
+    let ctx = Ctx::load(CtxConfig { model: ModelKind::Auto, ..Default::default() }).expect("ctx");
+    fig345::fig3(&ctx).unwrap();
+}

@@ -1,0 +1,8 @@
+//! Fig 4 bench: metric-based strategy — objective retention rate vs
+//! achieved test retention and speedup.
+use pyramidai::experiments::{fig345, Ctx, CtxConfig, ModelKind};
+
+fn main() {
+    let ctx = Ctx::load(CtxConfig { model: ModelKind::Auto, ..Default::default() }).expect("ctx");
+    fig345::fig4(&ctx).unwrap();
+}

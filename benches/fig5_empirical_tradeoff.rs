@@ -1,0 +1,8 @@
+//! Fig 5 bench: empirical strategy — β sweep of retention vs speedup on
+//! train and test sets.
+use pyramidai::experiments::{fig345, Ctx, CtxConfig, ModelKind};
+
+fn main() {
+    let ctx = Ctx::load(CtxConfig { model: ModelKind::Auto, ..Default::default() }).expect("ctx");
+    fig345::fig5(&ctx).unwrap();
+}

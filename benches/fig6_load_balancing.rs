@@ -1,0 +1,9 @@
+//! Fig 6 bench: simulated data distributions × load-balancing policies —
+//! max tiles analyzed by the busiest worker over a worker-count sweep.
+use pyramidai::experiments::{fig6, Ctx, CtxConfig, ModelKind};
+
+fn main() {
+    let ctx = Ctx::load(CtxConfig { model: ModelKind::Auto, ..Default::default() }).expect("ctx");
+    let rows = fig6::run(&ctx, &[1, 2, 4, 8, 12, 16, 24]).unwrap();
+    fig6::print_report(&ctx, &rows).unwrap();
+}

@@ -1,0 +1,10 @@
+//! Fig 7 bench: real TCP cluster — average execution time per image vs
+//! worker count, with and without work stealing, on three slide kinds.
+use std::time::Duration;
+use pyramidai::experiments::{fig7, Ctx, CtxConfig, ModelKind};
+
+fn main() {
+    let ctx = Ctx::load(CtxConfig { model: ModelKind::Oracle, ..Default::default() }).expect("ctx");
+    let rows = fig7::run(&ctx, &[1, 2, 4, 8, 12], 3, Duration::from_millis(10)).unwrap();
+    fig7::print_report(&rows).unwrap();
+}

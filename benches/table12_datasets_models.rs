@@ -1,0 +1,11 @@
+//! Table 1 & 2 bench: dataset sizes and model accuracies (paper vs built),
+//! including the cross-language transfer accuracy of the PJRT model on
+//! rust-generated tiles.
+use pyramidai::experiments::table12;
+
+fn main() {
+    match table12::run(true) {
+        Ok(rows) => table12::print_report(&rows).unwrap(),
+        Err(e) => println!("table 1/2 skipped: {e:#} (run `make artifacts`)"),
+    }
+}

@@ -1,0 +1,9 @@
+//! Table 3 bench: per-phase computation time (initialization, per-level
+//! analysis block, task creation) on the deployed PJRT model when
+//! artifacts are present (falls back to the oracle otherwise).
+use pyramidai::experiments::{table3, ModelKind};
+
+fn main() {
+    let t = table3::run(ModelKind::Auto, 50, 16).expect("table3");
+    table3::print_report(&t).unwrap();
+}

@@ -1,0 +1,9 @@
+//! §4.6 bench: whole-slide classification accuracy under reference,
+//! empirical and metric-based executions.
+use pyramidai::experiments::{wsi46, Ctx, CtxConfig, ModelKind};
+
+fn main() {
+    let ctx = Ctx::load(CtxConfig { model: ModelKind::Auto, ..Default::default() }).expect("ctx");
+    let rows = wsi46::run(&ctx).unwrap();
+    wsi46::print_report(&rows).unwrap();
+}

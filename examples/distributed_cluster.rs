@@ -1,0 +1,64 @@
+//! Distributed analysis on the decentralized TCP cluster: spawn workers
+//! (threads with real localhost sockets, standing in for the paper's 12
+//! mainstream computers), compare work-stealing on/off across worker
+//! counts on one slide.
+//!
+//! ```sh
+//! cargo run --release --example distributed_cluster [-- --per-tile-ms 10]
+//! ```
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use pyramidai::cli::Args;
+use pyramidai::cluster::{run_cluster, ClusterConfig};
+use pyramidai::harness::print_table;
+use pyramidai::model::oracle::OracleAnalyzer;
+use pyramidai::model::{Analyzer, DelayAnalyzer};
+use pyramidai::pyramid::tree::Thresholds;
+use pyramidai::sim::Distribution;
+use pyramidai::synth::slide_gen::{SlideKind, SlideSpec};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let per_tile = Duration::from_millis(args.u64_or("per-tile-ms", 10)?);
+    let spec = SlideSpec::new("cluster_demo", 11, 48, 32, 3, 64, SlideKind::LargeTumor);
+    let thresholds = Thresholds {
+        zoom: vec![0.5, 0.35, 0.35],
+    };
+    // Per-tile delay emulates the paper's 0.33 s analysis block so worker
+    // threads overlap like separate machines (see DESIGN.md S3).
+    let analyzer: Arc<dyn Analyzer> =
+        Arc::new(DelayAnalyzer::new(OracleAnalyzer::new(1), per_tile));
+
+    let mut rows = Vec::new();
+    for workers in [1usize, 2, 4, 8, 12] {
+        for steal in [false, true] {
+            let res = run_cluster(
+                &spec,
+                &thresholds,
+                Arc::clone(&analyzer),
+                &ClusterConfig {
+                    workers,
+                    distribution: Distribution::RoundRobin,
+                    steal,
+                    batch: 1,
+                    seed: 5,
+                },
+            )?;
+            rows.push(vec![
+                workers.to_string(),
+                if steal { "work-stealing" } else { "round-robin only" }.into(),
+                format!("{:.2}s", res.wall.as_secs_f64()),
+                res.max_tiles().to_string(),
+                res.steals.to_string(),
+            ]);
+        }
+    }
+    print_table(
+        "cluster execution (one slide)",
+        &["workers", "policy", "wall", "max tiles/worker", "steals"],
+        &rows,
+    );
+    Ok(())
+}

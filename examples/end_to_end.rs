@@ -1,0 +1,139 @@
+//! End-to-end driver — proves all layers compose on a real workload:
+//!
+//! 1. L1/L2: the Pallas-kernel TinyInception, AOT-compiled at build time,
+//!    loaded through PJRT (no Python anywhere in this binary).
+//! 2. Synthetic gigapixel slide sets (train + test) with ground truth.
+//! 3. Real inference over every lineage tile → prediction caches.
+//! 4. Both §3.2 threshold-selection strategies on the train set.
+//! 5. Pyramidal vs reference on the test set: retention + speedup.
+//! 6. The distributed TCP cluster (12 workers, work stealing) on a slide.
+//! 7. §4.6 whole-slide classification.
+//!
+//! The run is recorded in EXPERIMENTS.md. Requires `make artifacts`.
+//!
+//! ```sh
+//! cargo run --release --example end_to_end
+//! ```
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use pyramidai::cluster::{run_cluster, ClusterConfig};
+use pyramidai::experiments::ctx::{artifacts_dir, make_analyzer, ModelKind};
+use pyramidai::harness::print_table;
+use pyramidai::predcache::PredCache;
+use pyramidai::sim::Distribution;
+use pyramidai::slide::pyramid::Slide;
+use pyramidai::synth::slide_gen::{gen_slide_set, DatasetParams};
+use pyramidai::tuning::{empirical, metric_based};
+use pyramidai::wsi::{tree_features, BaggingClassifier, BaggingParams, Sample};
+
+fn main() -> anyhow::Result<()> {
+    let t0 = Instant::now();
+    anyhow::ensure!(
+        artifacts_dir().join("meta.json").exists(),
+        "artifacts/ missing — run `make artifacts` first"
+    );
+    let (analyzer, name) = make_analyzer(ModelKind::Pjrt, 1)?;
+    println!("[1/7] analyzer: {name} (AOT TinyInception via PJRT, Pallas kernels inside)");
+
+    let params = DatasetParams::default();
+    let train: Vec<Slide> = gen_slide_set("e2e_train", 8, 31, &params)
+        .into_iter()
+        .map(Slide::from_spec)
+        .collect();
+    let test: Vec<Slide> = gen_slide_set("e2e_test", 6, 32, &params)
+        .into_iter()
+        .map(Slide::from_spec)
+        .collect();
+    println!(
+        "[2/7] slide sets: {} train / {} test ({}×{} L0 tiles, 3 levels)",
+        train.len(),
+        test.len(),
+        params.tiles_x,
+        params.tiles_y
+    );
+
+    let t = Instant::now();
+    let train_cache = PredCache::collect_set(&train, analyzer.as_ref(), 32);
+    let test_cache = PredCache::collect_set(&test, analyzer.as_ref(), 32);
+    let n_preds: usize = train_cache
+        .slides
+        .iter()
+        .chain(&test_cache.slides)
+        .map(|s| s.preds.len())
+        .sum();
+    println!(
+        "[3/7] real inference over {} tiles in {:.1}s ({:.2} ms/tile incl. rendering)",
+        n_preds,
+        t.elapsed().as_secs_f64(),
+        t.elapsed().as_secs_f64() * 1e3 / n_preds as f64
+    );
+
+    let emp = empirical::select(&train_cache, 3, 0.90);
+    let met = metric_based::select(&train_cache, 3, 0.90);
+    println!(
+        "[4/7] tuned: empirical β={} → thresholds {:?}; metric-based βs {:?}",
+        emp.beta, emp.thresholds.zoom, met.betas
+    );
+
+    let (e_ret, e_spd, _) = metric_based::evaluate(&test_cache, &emp.thresholds);
+    let (m_ret, m_spd, _) = metric_based::evaluate(&test_cache, &met.thresholds);
+    print_table(
+        "[5/7] test-set results (paper: 90% retention at 2.65× / 92% at 2.34×)",
+        &["strategy", "retention", "speedup"],
+        &[
+            vec!["empirical".into(), format!("{e_ret:.3}"), format!("{e_spd:.2}×")],
+            vec!["metric-based".into(), format!("{m_ret:.3}"), format!("{m_spd:.2}×")],
+        ],
+    );
+
+    // Distributed run with the real PJRT analyzer on 12 workers.
+    let spec = &test[0].spec;
+    let res = run_cluster(
+        spec,
+        &emp.thresholds,
+        Arc::clone(&analyzer),
+        &ClusterConfig {
+            workers: 12,
+            distribution: Distribution::RoundRobin,
+            steal: true,
+            batch: 8,
+            seed: 99,
+        },
+    )?;
+    println!(
+        "[6/7] 12-worker TCP cluster on {}: {} tiles in {:.2}s, busiest worker {} tiles, {} steals",
+        spec.id,
+        res.tree.total_analyzed(),
+        res.wall.as_secs_f64(),
+        res.max_tiles(),
+        res.steals
+    );
+
+    // WSI classification.
+    let label = |cache: &PredCache, i: usize| {
+        cache.slides[i]
+            .preds
+            .iter()
+            .any(|(t, p)| t.level == 0 && p.tumor && p.prob >= 0.5)
+    };
+    let mk = |cache: &PredCache| -> Vec<Sample> {
+        (0..cache.slides.len())
+            .map(|i| Sample {
+                x: tree_features(&cache.slides[i].replay(&emp.thresholds)),
+                y: label(cache, i),
+            })
+            .collect()
+    };
+    let clf = BaggingClassifier::fit(&mk(&train_cache), &BaggingParams::default());
+    let acc = clf.accuracy(&mk(&test_cache));
+    println!("[7/7] WSI classification accuracy: {acc:.2} (paper: 0.84)");
+
+    println!(
+        "\nend-to-end OK in {} — all three layers composed: rust coordinator → PJRT → XLA(HLO from JAX+Pallas)",
+        pyramidai::util::stats::fmt_duration(t0.elapsed())
+    );
+    let _ = Duration::ZERO;
+    Ok(())
+}

@@ -1,0 +1,58 @@
+//! Quickstart: generate a synthetic gigapixel slide, run the pyramidal
+//! analysis against the reference (highest-resolution-only) execution and
+//! print the speedup/retention trade-off.
+//!
+//! Uses the AOT-compiled PJRT classifier when `artifacts/` exists (run
+//! `make artifacts`), the calibrated oracle otherwise.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use pyramidai::experiments::ctx::{make_analyzer, ModelKind};
+use pyramidai::metrics::retention::retention_and_speedup;
+use pyramidai::predcache::SlidePredictions;
+use pyramidai::pyramid::driver::{run_pyramidal, run_reference};
+use pyramidai::pyramid::tree::Thresholds;
+use pyramidai::slide::pyramid::Slide;
+use pyramidai::synth::slide_gen::{SlideKind, SlideSpec};
+
+fn main() -> anyhow::Result<()> {
+    // 1. A synthetic whole-slide image: 48×32 level-0 tiles of 64px over a
+    //    3-level pyramid with scale factor 2 — the paper's structure.
+    let slide = Slide::from_spec(SlideSpec::new(
+        "quickstart",
+        7,
+        48,
+        32,
+        3,
+        64,
+        SlideKind::LargeTumor,
+    ));
+
+    // 2. An analysis block A(.): the AOT TinyInception through PJRT, or
+    //    the oracle fallback.
+    let (analyzer, name) = make_analyzer(ModelKind::Auto, 1)?;
+    println!("analyzer: {name}");
+
+    // 3. Decision blocks D(.): zoom in when P(tumor) ≥ threshold.
+    let thresholds = Thresholds {
+        zoom: vec![0.5, 0.35, 0.35],
+    };
+
+    // 4. Pyramidal vs reference execution.
+    let pyramid = run_pyramidal(&slide, analyzer.as_ref(), &thresholds, 32);
+    let reference = run_reference(&slide, analyzer.as_ref(), 32);
+    let preds = SlidePredictions::collect(&slide, analyzer.as_ref(), 32);
+    let m = retention_and_speedup(&preds, &pyramid);
+
+    println!(
+        "tiles analyzed: pyramid {} vs reference {}",
+        pyramid.total_analyzed(),
+        reference.total_analyzed()
+    );
+    println!("per level (0=highest): {:?}", pyramid.analyzed_per_level());
+    println!("speedup   : {:.2}× fewer tiles", m.speedup());
+    println!("retention : {:.1}% of true positive tiles", m.retention() * 100.0);
+    Ok(())
+}

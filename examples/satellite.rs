@@ -1,0 +1,76 @@
+//! Generality demo (paper §6): "though illustrated on a gigapixel
+//! biomedical use case, the approach is generalizable to any gigapixel
+//! images, such as satellite or spatial images."
+//!
+//! Same pyramid, same algorithm, different domain: a satellite-like
+//! scene set where sparse built-up structures are the targets of
+//! interest, detected by a ground-truth-driven analysis block.
+//! Everything downstream — decision blocks, threshold tuning,
+//! retention/speedup, the distributed simulator — is reused unchanged.
+//!
+//! ```sh
+//! cargo run --release --example satellite
+//! ```
+
+use pyramidai::metrics::retention::retention_and_speedup;
+use pyramidai::model::oracle::OracleAnalyzer;
+use pyramidai::predcache::PredCache;
+use pyramidai::pyramid::driver::run_pyramidal;
+use pyramidai::sim::{simulate, Distribution, Policy};
+use pyramidai::slide::pyramid::Slide;
+use pyramidai::synth::slide_gen::{gen_slide_set, DatasetParams};
+use pyramidai::tuning::empirical;
+
+fn main() -> anyhow::Result<()> {
+    // A "scene set": the generator's kinds map onto sparse/dense target
+    // layouts (LargeTumor ↔ a city block, SmallScattered ↔ isolated
+    // installations, Negative ↔ empty countryside).
+    let params = DatasetParams {
+        tiles_x: 64,
+        tiles_y: 32,
+        levels: 3,
+        tile_px: 64,
+    };
+    let scenes: Vec<Slide> = gen_slide_set("scene", 9, 77, &params)
+        .into_iter()
+        .map(Slide::from_spec)
+        .collect();
+    // Analysis block: ground-truth-driven detector (the oracle reads the
+    // same analytic fields regardless of palette — the algorithm never
+    // looks at domain semantics, only at per-tile probabilities).
+    let analyzer = OracleAnalyzer::new(3);
+
+    // Tune on the first 6 scenes, deploy on the rest.
+    let train: Vec<Slide> = scenes[..6]
+        .iter()
+        .map(|s| Slide::from_spec(s.spec.clone()))
+        .collect();
+    let cache = PredCache::collect_set(&train, &analyzer, 32);
+    let sel = empirical::select(&cache, 3, 0.9);
+    println!(
+        "tuned on {} scenes: β={} thresholds {:?}",
+        train.len(),
+        sel.beta,
+        sel.thresholds.zoom
+    );
+
+    for scene in &scenes[6..] {
+        let tree = run_pyramidal(scene, &analyzer, &sel.thresholds, 32);
+        let preds = pyramidai::predcache::SlidePredictions::collect(scene, &analyzer, 32);
+        let m = retention_and_speedup(&preds, &tree);
+        let sim = simulate(&tree, 8, Distribution::RoundRobin, Policy::WorkStealing, 1);
+        println!(
+            "{} ({}): {} of {} tiles analyzed → {:.2}× speedup, {:.0}% target retention; \
+             8 stealing workers → busiest analyzes {} tiles",
+            scene.id(),
+            scene.spec.kind.as_str(),
+            tree.total_analyzed(),
+            preds.reference_count(),
+            m.speedup(),
+            m.retention() * 100.0,
+            sim.max_tiles(),
+        );
+    }
+    println!("\nsame pyramid, same tuning, same scheduler — different domain (paper §6)");
+    Ok(())
+}

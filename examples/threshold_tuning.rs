@@ -1,0 +1,52 @@
+//! Threshold tuning walkthrough: collect predictions over a training slide
+//! set, then run both §3.2 strategies and compare them on held-out slides.
+//!
+//! ```sh
+//! cargo run --release --example threshold_tuning [-- --model oracle]
+//! ```
+
+use pyramidai::cli::Args;
+use pyramidai::experiments::{Ctx, CtxConfig, ModelKind};
+use pyramidai::harness::print_table;
+use pyramidai::tuning::{empirical, metric_based};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let model = ModelKind::from_str(&args.str_or("model", "auto")).expect("--model");
+    let ctx = Ctx::load(CtxConfig {
+        model,
+        ..Default::default()
+    })?;
+    println!(
+        "tuned on {} train slides, evaluated on {} test slides ({})",
+        ctx.train_cache.slides.len(),
+        ctx.test_cache.slides.len(),
+        ctx.analyzer_name
+    );
+
+    let mut rows = Vec::new();
+    for target in [0.80, 0.90, 0.95] {
+        let emp = empirical::select(&ctx.train_cache, 3, target);
+        let (ret, spd, _) = metric_based::evaluate(&ctx.test_cache, &emp.thresholds);
+        rows.push(vec![
+            format!("empirical(target {target})"),
+            format!("β={}", emp.beta),
+            format!("{ret:.3}"),
+            format!("{spd:.2}×"),
+        ]);
+        let met = metric_based::select(&ctx.train_cache, 3, target);
+        let (ret, spd, _) = metric_based::evaluate(&ctx.test_cache, &met.thresholds);
+        rows.push(vec![
+            format!("metric-based(objective {target})"),
+            format!("β={:?}/{:?}", met.betas[1], met.betas[2]),
+            format!("{ret:.3}"),
+            format!("{spd:.2}×"),
+        ]);
+    }
+    print_table(
+        "strategy comparison on the held-out test set",
+        &["strategy", "chosen β", "test retention", "test speedup"],
+        &rows,
+    );
+    Ok(())
+}

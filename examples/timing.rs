@@ -1,0 +1,38 @@
+use std::time::Instant;
+use pyramidai::slide::pyramid::Slide;
+use pyramidai::slide::tile::TileId;
+use pyramidai::synth::slide_gen::{SlideKind, SlideSpec};
+fn main() {
+    let slide = Slide::from_spec(SlideSpec::new("t", 7, 48, 32, 3, 64, SlideKind::LargeTumor));
+    // render 50 tiles at level 0
+    let t0 = Instant::now();
+    let mut acc = 0.0f32;
+    for i in 0..50 { let px = slide.tile_pixels(TileId::new(0, i % 48, i / 48)); acc += px[0]; }
+    println!("render: {:.2} ms/tile (acc {acc})", t0.elapsed().as_secs_f64()*1e3/50.0);
+    // PJRT load + infer
+    let t0 = Instant::now();
+    let reg = pyramidai::runtime::Registry::load_dir(std::path::Path::new("artifacts")).unwrap();
+    println!("registry load+compile: {:.1} s", t0.elapsed().as_secs_f64());
+    let tiles: Vec<Vec<f32>> = (0..32).map(|i| slide.tile_pixels(TileId::new(0, i, 0))).collect();
+    let refs: Vec<&[f32]> = tiles.iter().map(|t| t.as_slice()).collect();
+    let t0 = Instant::now();
+    for _ in 0..5 { let _ = reg.infer(0, &refs).unwrap(); }
+    println!("pjrt b32: {:.2} ms/tile", t0.elapsed().as_secs_f64()*1e3/(5.0*32.0));
+    let one: Vec<&[f32]> = refs[..1].to_vec();
+    let t0 = Instant::now();
+    for _ in 0..20 { let _ = reg.infer(0, &one).unwrap(); }
+    println!("pjrt b1: {:.2} ms/tile", t0.elapsed().as_secs_f64()*1e3/20.0);
+    let eight: Vec<&[f32]> = refs[..8].to_vec();
+    let t0 = Instant::now();
+    for _ in 0..10 { let _ = reg.infer(0, &eight).unwrap(); }
+    println!("pjrt b8: {:.2} ms/tile", t0.elapsed().as_secs_f64()*1e3/80.0);
+    for level in [1usize, 2] {
+        let t0 = Instant::now();
+        for _ in 0..10 { let _ = reg.infer(level, &eight).unwrap(); }
+        println!("pjrt L{level} b8: {:.2} ms/tile", t0.elapsed().as_secs_f64()*1e3/80.0);
+    }
+    // otsu bg removal
+    let t0 = Instant::now();
+    let m = pyramidai::preprocess::otsu::background_removal(&slide, 0.02);
+    println!("bg removal: {:.1} ms ({} tissue tiles)", t0.elapsed().as_secs_f64()*1e3, m.tissue_tiles.len());
+}

@@ -1,0 +1,113 @@
+"""AOT compile path: train (or reuse) per-level weights, bake them into the
+Pallas-kernel forward pass, lower to HLO **text**, write artifacts.
+
+HLO text — NOT ``lowered.compiler_ir().serialize()`` — is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids that the
+xla_extension 0.5.1 behind the rust `xla` crate rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Artifacts:
+    artifacts/weights_l{level}.npz        trained parameters
+    artifacts/classifier_l{level}_b{B}.hlo.txt   AOT module per batch size
+    artifacts/meta.json                   shapes, batch sizes, accuracies
+                                          (-> Tables 1-2), provenance
+
+Python runs once (`make artifacts`); the rust binary is self-contained
+afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import TILE_PX, forward
+from .train import load_weights, save_weights, train_level
+
+LEVELS = 3
+BATCH_SIZES = [1, 8, 32]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple for rust side).
+
+    ``as_hlo_text(True)`` = print_large_constants: the default printer
+    elides big constants as ``constant({...})`` and the 0.5.1-era text
+    parser silently reads that as ZEROS — the baked weights vanish and the
+    model returns a constant. Full printing round-trips correctly.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(True)
+
+
+def lower_level(params, batch: int) -> str:
+    """Lower the Pallas-kernel forward pass with baked weights."""
+    frozen = {k: jnp.asarray(v) for k, v in params.items()}
+
+    @functools.partial(jax.jit)
+    def infer(x):
+        return (forward(frozen, x, use_pallas=True),)
+
+    spec = jax.ShapeDtypeStruct((batch, TILE_PX, TILE_PX, 3), jnp.float32)
+    return to_hlo_text(infer.lower(spec))
+
+
+def build(out_dir: str, retrain: bool = False, verbose: bool = True) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    meta = {
+        "tile_px": TILE_PX,
+        "levels": LEVELS,
+        "batch_sizes": BATCH_SIZES,
+        "built_at": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "jax_version": jax.__version__,
+        "levels_meta": [],
+    }
+    for level in range(LEVELS):
+        wpath = os.path.join(out_dir, f"weights_l{level}.npz")
+        acc = {}
+        if os.path.exists(wpath) and not retrain:
+            params = load_weights(wpath)
+            if verbose:
+                print(f"[aot] reusing {wpath}")
+        else:
+            result = train_level(level, verbose=verbose)
+            params = result.pop("params")
+            acc = result
+            save_weights(wpath, params)
+        for batch in BATCH_SIZES:
+            hlo = lower_level(params, batch)
+            path = os.path.join(out_dir, f"classifier_l{level}_b{batch}.hlo.txt")
+            with open(path, "w") as f:
+                f.write(hlo)
+            if verbose:
+                print(f"[aot] wrote {path} ({len(hlo)} chars)")
+        meta["levels_meta"].append({"level": level, **acc})
+    with open(os.path.join(out_dir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+    if verbose:
+        print(f"[aot] wrote {out_dir}/meta.json")
+    return meta
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifacts directory")
+    ap.add_argument("--retrain", action="store_true", help="force retraining")
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args()
+    build(args.out, retrain=args.retrain, verbose=not args.quiet)
+
+
+if __name__ == "__main__":
+    main()

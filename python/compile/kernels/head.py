@@ -1,0 +1,70 @@
+"""L1 Pallas kernel: fused classifier head.
+
+GlobalAveragePooling → dense(ReLU) → dense(1) → sigmoid in a single kernel
+(the paper's InceptionV3 head: GlobalAverage2D + dense + sigmoid, §4.2).
+All three stages are tiny, so fusing them avoids three HBM round-trips of
+(B, C)-sized intermediates; one grid step handles a block of images.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_B = 32
+
+
+def _head_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref):
+    x = x_ref[...]  # (BB, H, W, C)
+    pooled = jnp.mean(x, axis=(1, 2))  # GAP → (BB, C)
+    h = jnp.maximum(
+        jnp.dot(pooled, w1_ref[...], preferred_element_type=jnp.float32)
+        + b1_ref[...][None, :],
+        0.0,
+    )
+    logit = (
+        jnp.dot(h, w2_ref[...], preferred_element_type=jnp.float32)
+        + b2_ref[...][None, :]
+    )
+    o_ref[...] = jax.nn.sigmoid(logit)
+
+
+def gap_mlp_head(
+    x: jax.Array,
+    w1: jax.Array,
+    b1: jax.Array,
+    w2: jax.Array,
+    b2: jax.Array,
+) -> jax.Array:
+    """Fused GAP + 2-layer MLP + sigmoid.
+
+    x: (B, H, W, C); w1: (C, D); b1: (D,); w2: (D, 1); b2: (1,).
+    Returns (B, 1) probabilities.
+    """
+    b, h, w, c = x.shape
+    d = w1.shape[1]
+    assert w1.shape == (c, d) and b1.shape == (d,)
+    assert w2.shape == (d, 1) and b2.shape == (1,)
+
+    bb = min(BLOCK_B, b)
+    bp = (b + bb - 1) // bb * bb
+    xp = jnp.pad(x, ((0, bp - b), (0, 0), (0, 0), (0, 0)))
+
+    out = pl.pallas_call(
+        functools.partial(_head_kernel),
+        grid=(bp // bb,),
+        in_specs=[
+            pl.BlockSpec((bb, h, w, c), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((c, d), lambda i: (0, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bb, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bp, 1), jnp.float32),
+        interpret=True,
+    )(xp, w1, b1, w2, b2)
+    return out[:b]

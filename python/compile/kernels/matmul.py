@@ -1,0 +1,95 @@
+"""L1 Pallas kernel: tiled matmul with fused bias + activation epilogue.
+
+This is the compute hot-spot of the whole stack: every convolution in the
+tile classifier is lowered to ``im2col patches @ filter matrix`` and every
+dense layer is a plain matmul, so one well-tiled kernel serves the entire
+network.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid tiles M (patch rows)
+and N (output channels) in MXU-friendly blocks; K (receptive field ·
+in-channels, ≤ 288 in this model) stays resident, so each grid step is a
+single (BM×K)·(K×BN) systolic-array pass with the bias-add + ReLU epilogue
+fused into the same VMEM round-trip. VMEM footprint per step is
+(BM·K + K·BN + BM·BN)·4 B ≈ 0.6 MiB at BM=BN=128, K=288 — far under the
+~16 MiB budget, leaving room for double buffering.
+
+CPU execution uses ``interpret=True`` (the image's CPU PJRT cannot run
+Mosaic custom-calls); numerics are identical.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Block sizes tile the VMEM working set (the MXU consumes 128×128 slabs
+# *within* a block). Large BLOCK_M keeps the interpret-mode grid short —
+# each grid step lowers to one iteration of an XLA while loop, so at
+# batch 32 a 128-row block meant >1000 serialized steps (~90 ms/tile on
+# CPU); 8192-row blocks cut that to ≤16 steps (~1 ms/tile) while the
+# worst-case VMEM footprint stays ≈6 MiB (8192·144·4 B in + 8192·32·4 B
+# out), well under the ~16 MiB budget. See EXPERIMENTS.md §Perf.
+BLOCK_M = 8192
+BLOCK_N = 128
+
+
+def _matmul_kernel(x_ref, w_ref, b_ref, o_ref, *, activation: str):
+    """One (BM, K) × (K, BN) tile with fused bias + activation."""
+    acc = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    acc = acc + b_ref[...][None, :]
+    if activation == "relu":
+        acc = jnp.maximum(acc, 0.0)
+    elif activation == "sigmoid":
+        acc = jax.nn.sigmoid(acc)
+    elif activation != "none":
+        raise ValueError(f"unknown activation {activation!r}")
+    o_ref[...] = acc
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+@functools.partial(jax.named_call, name="pallas_matmul_bias_act")
+def matmul_bias_act(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    activation: str = "none",
+    block_m: int = BLOCK_M,
+    block_n: int = BLOCK_N,
+) -> jax.Array:
+    """``act(x @ w + b)`` via a tiled Pallas kernel.
+
+    x: (M, K) float32, w: (K, N) float32, b: (N,) float32.
+    M and N are padded up to the block size; K stays whole (small here).
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims {k} vs {k2}"
+    assert b.shape == (n,)
+
+    bm = min(block_m, _ceil_to(m, 8))
+    bn = min(block_n, _ceil_to(n, 8))
+    mp = _ceil_to(m, bm)
+    np_ = _ceil_to(n, bn)
+    xp = jnp.pad(x, ((0, mp - m), (0, 0)))
+    wp = jnp.pad(w, ((0, 0), (0, np_ - n)))
+    bp = jnp.pad(b, (0, np_ - n))
+
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, activation=activation),
+        grid=(mp // bm, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, wp, bp)
+    return out[:m, :n]

@@ -1,0 +1,34 @@
+"""L1 Pallas kernel: 2×2 max-pooling (stride 2) over NHWC feature maps.
+
+One grid step processes one image's full feature map: at the model's sizes
+(≤ 64×64×8 f32 = 128 KiB in, 32 KiB out) a whole map fits comfortably in
+VMEM, so the natural BlockSpec is per-image — the HBM↔VMEM schedule the
+paper's GPU framing would express with a threadblock per image.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _maxpool_kernel(x_ref, o_ref):
+    x = x_ref[...]  # (1, H, W, C)
+    _, h, w, c = x.shape
+    x = x.reshape(1, h // 2, 2, w // 2, 2, c)
+    o_ref[...] = jnp.max(x, axis=(2, 4))
+
+
+def maxpool2(x: jax.Array) -> jax.Array:
+    """2×2/stride-2 max pool; x: (B, H, W, C) with even H, W."""
+    b, h, w, c = x.shape
+    assert h % 2 == 0 and w % 2 == 0, f"odd spatial dims {h}x{w}"
+    return pl.pallas_call(
+        _maxpool_kernel,
+        grid=(b,),
+        in_specs=[pl.BlockSpec((1, h, w, c), lambda i: (i, 0, 0, 0))],
+        out_specs=pl.BlockSpec((1, h // 2, w // 2, c), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h // 2, w // 2, c), jnp.float32),
+        interpret=True,
+    )(x)

@@ -1,0 +1,78 @@
+"""Pure-jnp reference oracle for every Pallas kernel.
+
+pytest asserts ``assert_allclose(kernel(x), ref(x))`` across shapes/dtypes
+(hypothesis sweeps) — this is the core L1 correctness signal. The reference
+implementations are deliberately written with standard jax/lax primitives,
+independent of the kernels' tiling logic.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_bias_act(x, w, b, activation: str = "none"):
+    out = x @ w + b[None, :]
+    if activation == "relu":
+        out = jnp.maximum(out, 0.0)
+    elif activation == "sigmoid":
+        out = jax.nn.sigmoid(out)
+    elif activation != "none":
+        raise ValueError(activation)
+    return out
+
+
+def maxpool2(x):
+    return jax.lax.reduce_window(
+        x,
+        -jnp.inf,
+        jax.lax.max,
+        window_dimensions=(1, 2, 2, 1),
+        window_strides=(1, 2, 2, 1),
+        padding="VALID",
+    )
+
+
+def gap_mlp_head(x, w1, b1, w2, b2):
+    pooled = jnp.mean(x, axis=(1, 2))
+    h = jnp.maximum(pooled @ w1 + b1[None, :], 0.0)
+    return jax.nn.sigmoid(h @ w2 + b2[None, :])
+
+
+def im2col(x, kh: int, kw: int):
+    """Extract kh×kw patches with SAME (zero) padding, stride 1.
+
+    x: (B, H, W, C) → (B·H·W, kh·kw·C), rows ordered (b, y, x), patch
+    elements ordered (dy, dx, c) — the layout both the Pallas conv path
+    and this reference share.
+    """
+    b, h, w, c = x.shape
+    ph, pw = kh // 2, kw // 2
+    xp = jnp.pad(x, ((0, 0), (ph, ph), (pw, pw), (0, 0)))
+    cols = []
+    for dy in range(kh):
+        for dx in range(kw):
+            cols.append(xp[:, dy : dy + h, dx : dx + w, :])
+    patches = jnp.concatenate(cols, axis=-1)  # (B, H, W, kh·kw·C)
+    return patches.reshape(b * h * w, kh * kw * c)
+
+
+def conv2d_same(x, filt, bias, activation: str = "relu"):
+    """Reference SAME conv via lax.conv_general_dilated.
+
+    x: (B, H, W, Cin); filt: (KH, KW, Cin, Cout); bias: (Cout,).
+    """
+    out = jax.lax.conv_general_dilated(
+        x,
+        filt,
+        window_strides=(1, 1),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    out = out + bias[None, None, None, :]
+    if activation == "relu":
+        out = jnp.maximum(out, 0.0)
+    elif activation != "none":
+        raise ValueError(activation)
+    return out

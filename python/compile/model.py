@@ -1,0 +1,90 @@
+"""L2: the TinyInception tile classifier (per resolution level).
+
+The paper's analysis block is InceptionV3 (224×224 input) with a
+GlobalAverage2D pooling layer, a dense layer and a sigmoid (§4.2). The
+CPU-feasible stand-in (DESIGN.md substitution S2) keeps the same role and
+head structure on 64×64 tiles:
+
+    conv3×3(3→8)  ReLU → maxpool2   64→32
+    conv3×3(8→16) ReLU → maxpool2   32→16
+    conv3×3(16→32)ReLU → maxpool2   16→8
+    GAP → dense(32→24) ReLU → dense(24→1) → sigmoid
+
+Every convolution lowers to ``im2col @ filter-matrix`` so the Pallas
+matmul kernel (L1) carries all the FLOPs; pooling and the fused
+GAP+MLP+sigmoid head are the other two Pallas kernels. The pure-jnp path
+(`use_pallas=False`) is used for training (it is differentiable and fast
+on CPU); pytest asserts both paths agree to float tolerance.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import ref
+from .kernels.head import gap_mlp_head
+from .kernels.matmul import matmul_bias_act
+from .kernels.pool import maxpool2
+
+TILE_PX = 64
+IN_CHANNELS = 3
+# (name, cin, cout) per conv stage.
+CONV_STAGES = [("conv1", 3, 8), ("conv2", 8, 16), ("conv3", 16, 32)]
+HEAD_HIDDEN = 24
+
+
+def init_params(seed: int) -> dict:
+    """He-initialized parameter pytree for one level's model."""
+    rng = np.random.default_rng(seed)
+    params = {}
+    for name, cin, cout in CONV_STAGES:
+        fan_in = 3 * 3 * cin
+        params[f"{name}/w"] = (
+            rng.normal(0.0, np.sqrt(2.0 / fan_in), (3, 3, cin, cout)).astype(np.float32)
+        )
+        params[f"{name}/b"] = np.zeros(cout, np.float32)
+    c_top = CONV_STAGES[-1][2]
+    params["head/w1"] = rng.normal(0.0, np.sqrt(2.0 / c_top), (c_top, HEAD_HIDDEN)).astype(
+        np.float32
+    )
+    params["head/b1"] = np.zeros(HEAD_HIDDEN, np.float32)
+    params["head/w2"] = rng.normal(0.0, np.sqrt(1.0 / HEAD_HIDDEN), (HEAD_HIDDEN, 1)).astype(
+        np.float32
+    )
+    params["head/b2"] = np.zeros(1, np.float32)
+    return {k: jnp.asarray(v) for k, v in params.items()}
+
+
+def _conv_pallas(x, filt, bias):
+    """SAME conv+ReLU as im2col + the Pallas matmul kernel."""
+    b, h, w, cin = x.shape
+    kh, kw, _, cout = filt.shape
+    patches = ref.im2col(x, kh, kw)  # (B·H·W, kh·kw·cin)
+    fmat = filt.reshape(kh * kw * cin, cout)
+    out = matmul_bias_act(patches, fmat, bias, activation="relu")
+    return out.reshape(b, h, w, cout)
+
+
+def forward(params: dict, x: jax.Array, use_pallas: bool = True) -> jax.Array:
+    """Tumor probability per tile; x: (B, 64, 64, 3) → (B,)."""
+    assert x.shape[1:] == (TILE_PX, TILE_PX, IN_CHANNELS), x.shape
+    for name, _cin, _cout in CONV_STAGES:
+        filt, bias = params[f"{name}/w"], params[f"{name}/b"]
+        if use_pallas:
+            x = _conv_pallas(x, filt, bias)
+            x = maxpool2(x)
+        else:
+            x = ref.conv2d_same(x, filt, bias, activation="relu")
+            x = ref.maxpool2(x)
+    args = (params["head/w1"], params["head/b1"], params["head/w2"], params["head/b2"])
+    probs = gap_mlp_head(x, *args) if use_pallas else ref.gap_mlp_head(x, *args)
+    return probs[:, 0]
+
+
+def bce_loss(params: dict, x: jax.Array, y: jax.Array) -> jax.Array:
+    """Binary cross-entropy on the jnp path (training objective)."""
+    p = forward(params, x, use_pallas=False)
+    p = jnp.clip(p, 1e-6, 1.0 - 1e-6)
+    return -jnp.mean(y * jnp.log(p) + (1.0 - y) * jnp.log(1.0 - p))

@@ -1,0 +1,320 @@
+"""Procedural H&E-like texture — numpy mirror of ``rust/src/synth/texture.rs``.
+
+The rust side generates evaluation slides; this module generates the
+*training corpus* with the same formulas (identical integer hash, identical
+field/nuclei/noise math), so the classifier trained here transfers to
+rust-generated tiles. Seeds differ between the two sides — only the
+statistics must match, and they do by construction.
+
+Everything is vectorized over pixel grids; dtype discipline matters:
+hashes are uint64 with wrapping semantics (numpy wraps silently), field
+math is float64, output pixels are float32 in [0, 1].
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+# SplitMix64-flavored constants — keep in sync with texture.rs.
+_C0 = np.uint64(0x517CC1B727220A95)
+_C1 = np.uint64(0x9E3779B97F4A7C15)
+_C2 = np.uint64(0xBF58476D1CE4E5B9)
+_C3 = np.uint64(0x94D049BB133111EB)
+_C4 = np.uint64(0xD6E8FEB86659FD93)
+
+NUCLEI_CELL_L0 = 10.0
+MIN_TUMOR_FRAC = 0.03  # slide/pyramid.rs::MIN_TUMOR_FRAC
+MIN_TISSUE_FRAC = 0.05
+
+
+def hash2(seed, x, y):
+    """Vectorized 2-D integer hash; mirrors texture.rs::hash2.
+
+    ``x``/``y`` may be any integer arrays (converted to int64 then
+    reinterpreted as uint64, matching rust's ``as u64`` on i64).
+    """
+    xs = np.asarray(x, dtype=np.int64).astype(np.uint64)
+    ys = np.asarray(y, dtype=np.int64).astype(np.uint64)
+    with np.errstate(over="ignore"):
+        h = np.uint64(seed) ^ _C0
+        h = (h ^ (xs * _C1)) * _C2
+        h = (h ^ (ys * _C3)) * _C4
+        return h ^ (h >> np.uint64(32))
+
+
+def unit(h):
+    """uint64 hash → float64 in [0, 1). Mirrors texture.rs::unit."""
+    return (h >> np.uint64(11)).astype(np.float64) * (1.0 / float(1 << 53))
+
+
+def sigmoid(x):
+    return 1.0 / (1.0 + np.exp(-x))
+
+
+@dataclasses.dataclass
+class Field:
+    """Sum-of-Gaussian-blobs field, iso-threshold 1.0 (synth/field.rs)."""
+
+    cx: np.ndarray  # (n,)
+    cy: np.ndarray
+    r: np.ndarray
+    w: np.ndarray
+
+    @staticmethod
+    def empty() -> "Field":
+        z = np.zeros(0)
+        return Field(z, z, z, z)
+
+    @staticmethod
+    def random(rng: np.random.Generator, count, r_lo, r_hi, w_lo, w_hi, pad) -> "Field":
+        return Field(
+            cx=rng.uniform(pad, 1.0 - pad, count),
+            cy=rng.uniform(pad, 1.0 - pad, count),
+            r=rng.uniform(r_lo, r_hi, count),
+            w=rng.uniform(w_lo, w_hi, count),
+        )
+
+    @staticmethod
+    def random_inside(
+        rng: np.random.Generator, host: "Field", count, r_lo, r_hi, w_lo, w_hi
+    ) -> "Field":
+        cxs, cys = [], []
+        attempts = 0
+        while len(cxs) < count and attempts < count * 200:
+            attempts += 1
+            cx, cy = rng.uniform(0.02, 0.98, 2)
+            if host.value(np.array([cx]), np.array([cy]))[0] > 1.0:
+                cxs.append(cx)
+                cys.append(cy)
+        n = len(cxs)
+        return Field(
+            cx=np.array(cxs),
+            cy=np.array(cys),
+            r=rng.uniform(r_lo, r_hi, n),
+            w=rng.uniform(w_lo, w_hi, n),
+        )
+
+    def value(self, u: np.ndarray, v: np.ndarray) -> np.ndarray:
+        """Field value at normalized coords; u, v broadcastable arrays."""
+        out = np.zeros(np.broadcast(u, v).shape)
+        for cx, cy, r, w in zip(self.cx, self.cy, self.r, self.w):
+            d2 = (u - cx) ** 2 + (v - cy) ** 2
+            out += w * np.exp(-d2 / (2.0 * r * r))
+        return out
+
+    def soft(self, u, v):
+        return sigmoid((self.value(u, v) - 1.0) * 8.0)
+
+    def coverage(self, u0, v0, u1, v1, n=8) -> float:
+        """Fraction of the rect inside the iso-surface, n×n grid."""
+        ii = (np.arange(n) + 0.5) / n
+        u = u0 + (u1 - u0) * ii[None, :]
+        v = v0 + (v1 - v0) * ii[:, None]
+        return float(np.mean(self.value(u, v) > 1.0))
+
+
+# TextureParams defaults — keep in sync with texture.rs.
+PARAMS = dict(
+    bg=np.array([0.93, 0.92, 0.94]),
+    tissue=np.array([0.86, 0.67, 0.79]),
+    tumor=np.array([0.83, 0.63, 0.77]),
+    p_nucleus_normal=0.42,
+    p_nucleus_tumor=0.95,
+    dark_normal=0.34,
+    dark_tumor=0.68,
+    nucleus_tint=np.array([0.52, 0.62, 0.38]),
+    noise_amp=0.02,
+)
+
+
+@dataclasses.dataclass
+class SlideFields:
+    """A synthetic slide's identity: seed + analytic fields."""
+
+    seed: int
+    tissue: Field
+    tumor: Field
+    distractor: Field
+
+
+def make_slide(rng: np.random.Generator, kind: str) -> SlideFields:
+    """Python analogue of SlideSpec::fields (same parameter ranges)."""
+    seed = int(rng.integers(0, 2**63))
+    n_tissue = int(rng.integers(3, 7))
+    tissue = Field.random(rng, n_tissue, 0.14, 0.26, 1.4, 2.8, 0.18)
+    if kind == "negative":
+        tumor = Field.empty()
+    elif kind == "small_scattered":
+        n = int(rng.integers(6, 15))
+        tumor = Field.random_inside(rng, tissue, n, 0.015, 0.04, 1.4, 2.4)
+    elif kind == "large_tumor":
+        n = int(rng.integers(2, 5))
+        tumor = Field.random_inside(rng, tissue, n, 0.07, 0.15, 1.6, 2.6)
+    else:
+        raise ValueError(kind)
+    n_distr = int(rng.integers(4, 10))
+    distractor = Field.random_inside(rng, tissue, n_distr, 0.02, 0.06, 1.4, 2.4)
+    return SlideFields(seed=seed, tissue=tissue, tumor=tumor, distractor=distractor)
+
+
+def render_tile(
+    slide: SlideFields,
+    level: int,
+    tx: int,
+    ty: int,
+    tile_px: int,
+    w_px: int,
+    h_px: int,
+) -> np.ndarray:
+    """Render one tile as float32 HWC RGB in [0,1].
+
+    Mirrors Texture::pixel in texture.rs, vectorized over the tile.
+    """
+    px = tx * tile_px + np.arange(tile_px)
+    py = ty * tile_px + np.arange(tile_px)
+    pxg, pyg = np.meshgrid(px, py)  # (H, W), x fastest like rust loops
+    u = (pxg + 0.5) / w_px
+    v = (pyg + 0.5) / h_px
+
+    s_tissue = slide.tissue.soft(u, v)
+    s_tumor = slide.tumor.soft(u, v) * s_tissue
+    s_distr = slide.distractor.soft(u, v) * s_tissue * (1.0 - s_tumor)
+
+    p = PARAMS
+    tissue_c = p["tissue"][None, None, :] * (1.0 - s_tumor[..., None]) + p["tumor"][
+        None, None, :
+    ] * s_tumor[..., None]
+    rgb = p["bg"][None, None, :] * (1.0 - s_tissue[..., None]) + tissue_c * s_tissue[
+        ..., None
+    ]
+
+    # --- nuclei (level-0 pixel space) ---------------------------------
+    scale = float(1 << level)
+    x0 = (pxg + 0.5) * scale
+    y0 = (pyg + 0.5) * scale
+    dark = _nuclei_darkening(slide, x0, y0, scale, s_tissue, s_tumor, s_distr)
+    rgb = rgb * (1.0 - dark[..., None] * p["nucleus_tint"][None, None, :])
+
+    # --- pixel noise ----------------------------------------------------
+    nh = hash2(np.uint64(slide.seed) ^ np.uint64(0xA5A50000) ^ np.uint64(level), pxg, pyg)
+    for c in range(3):
+        n = unit(hash2_scalar_xy(nh, c, 0)) - 0.5
+        rgb[..., c] = np.clip(rgb[..., c] + n * 2.0 * p["noise_amp"], 0.0, 1.0)
+
+    return rgb.astype(np.float32)
+
+
+def hash2_scalar_xy(seed_arr: np.ndarray, x: int, y: int) -> np.ndarray:
+    """hash2 with array *seed* and scalar x, y (rust calls hash2(nh, c, 0))."""
+    xs = np.uint64(np.int64(x))
+    ys = np.uint64(np.int64(y))
+    with np.errstate(over="ignore"):
+        h = seed_arr ^ _C0
+        h = (h ^ (xs * _C1)) * _C2
+        h = (h ^ (ys * _C3)) * _C4
+        return h ^ (h >> np.uint64(32))
+
+
+def _nuclei_darkening(slide, x0, y0, scale, s_tissue, s_tumor, s_distr):
+    """Vectorized mirror of Texture::nuclei_darkening."""
+    p = PARAMS
+    cell = NUCLEI_CELL_L0
+    cx = np.floor(x0 / cell).astype(np.int64)
+    cy = np.floor(y0 / cell).astype(np.int64)
+    blur2 = (scale * 0.5) ** 2
+    # mirror texture.rs: attenuate nuclei contrast with the pixel footprint
+    attenuation = 1.0 / (1.0 + 0.30 * (scale - 1.0))
+    # mirror texture.rs: distractors share tumor nucleus *density* but
+    # keep near-normal splat strength/size.
+    dense = np.minimum(s_tumor + s_distr, 1.0)
+    p_nucleus = p["p_nucleus_normal"] * (1.0 - dense) + p["p_nucleus_tumor"] * dense
+    strength = (
+        p["dark_normal"] * (1.0 - s_tumor - 0.45 * s_distr)
+        + p["dark_tumor"] * (s_tumor + 0.45 * s_distr)
+    ) * attenuation
+
+    dark = np.zeros_like(x0)
+    seed = np.uint64(slide.seed) ^ np.uint64(0x5EED0001)
+    for dy in (-1, 0, 1):
+        for dx in (-1, 0, 1):
+            gx = cx + dx
+            gy = cy + dy
+            h = hash2(seed, gx, gy)
+            present = unit(h) < p_nucleus
+            jx = unit(hash2_scalar_xy(h, 1, 0))
+            jy = unit(hash2_scalar_xy(h, 2, 0))
+            nx = (gx + jx) * cell
+            ny = (gy + jy) * cell
+            r = 2.2 + 1.8 * (0.35 * unit(hash2_scalar_xy(h, 3, 0)) + 0.65 * s_tumor)
+            r2 = r * r
+            r_eff2 = r2 + blur2
+            d2 = (x0 - nx) ** 2 + (y0 - ny) ** 2
+            amp = strength * r2 / r_eff2
+            dark += np.where(present, amp * np.exp(-d2 / (2.0 * r_eff2)), 0.0)
+
+    dark = np.where(s_tissue < 0.02, 0.0, dark)
+    return np.minimum(dark * s_tissue, 0.95)
+
+
+def sample_training_tiles(
+    seed: int,
+    n_tiles: int,
+    level: int,
+    tile_px: int = 64,
+    tiles_x: int = 48,
+    tiles_y: int = 32,
+    pos_frac: float = 0.5,
+    n_slides: int = 12,
+):
+    """Build a balanced labeled tile set at one pyramid level.
+
+    Matches the paper's §4.2 protocol: tiles are extracted from a pool of
+    slides, the set is balanced by keeping tumoral tiles and sampling an
+    equal number of normal *tissue* tiles. Returns (X, y) with X float32
+    NHWC and y float32 {0,1}.
+    """
+    rng = np.random.default_rng(seed)
+    kinds = ["large_tumor", "small_scattered"]  # positives come from these
+    slides = [make_slide(rng, kinds[i % 2]) for i in range(n_slides)]
+
+    f = 1 << level
+    ntx, nty = tiles_x // f, tiles_y // f
+    w_px, h_px = ntx * tile_px, nty * tile_px
+
+    pos, neg = [], []
+    want_pos = int(n_tiles * pos_frac)
+    want_neg = n_tiles - want_pos
+    guard = 0
+    while (len(pos) < want_pos or len(neg) < want_neg) and guard < n_tiles * 400:
+        guard += 1
+        s = slides[int(rng.integers(0, n_slides))]
+        if len(pos) < want_pos and len(s.tumor.cx) > 0 and rng.random() < 0.6:
+            # Bias half the draws toward tumor blobs so positives (rare
+            # under uniform sampling) fill up quickly.
+            b = int(rng.integers(0, len(s.tumor.cx)))
+            tx = int(np.clip(s.tumor.cx[b] * ntx + rng.integers(-1, 2), 0, ntx - 1))
+            ty = int(np.clip(s.tumor.cy[b] * nty + rng.integers(-1, 2), 0, nty - 1))
+        else:
+            tx = int(rng.integers(0, ntx))
+            ty = int(rng.integers(0, nty))
+        u0, v0 = tx / ntx, ty / nty
+        u1, v1 = (tx + 1) / ntx, (ty + 1) / nty
+        tissue_cov = s.tissue.coverage(u0, v0, u1, v1)
+        if tissue_cov < MIN_TISSUE_FRAC:
+            continue
+        tumor_cov = s.tumor.coverage(u0, v0, u1, v1)
+        label = tumor_cov >= MIN_TUMOR_FRAC
+        if label and len(pos) < want_pos:
+            pos.append((s, level, tx, ty, True))
+        elif not label and len(neg) < want_neg:
+            neg.append((s, level, tx, ty, False))
+
+    items = pos + neg
+    rng.shuffle(items)
+    X = np.stack(
+        [render_tile(s, lvl, tx, ty, tile_px, w_px, h_px) for s, lvl, tx, ty, _ in items]
+    )
+    y = np.array([float(lbl) for *_, lbl in items], dtype=np.float32)
+    return X, y

@@ -1,0 +1,127 @@
+"""Build-time training of the per-level TinyInception models (§4.2).
+
+One model per pyramid level, trained in a supervised manner on balanced
+synthetic tiles (texture.py renders the same H&E-like distribution the
+rust evaluation slides use). Adam, binary cross-entropy, online
+augmentation by random flips/rotations — the paper's protocol scaled to a
+single-CPU build step.
+
+Outputs per level: ``artifacts/weights_l{level}.npz`` plus train/val/test
+accuracies recorded into the metadata the AOT step embeds in
+``artifacts/meta.json`` (→ Tables 1 and 2 of the paper).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import texture
+from .model import bce_loss, forward, init_params
+
+# Scaled-down dataset sizes (paper Table 1 uses ~26k/38k/92k per level; a
+# single-core build step gets the same protocol on fewer tiles).
+TRAIN_N = 2048
+VAL_N = 384
+TEST_N = 512
+BATCH = 64
+EPOCHS = 8  # passes over the training set
+LR = 1e-3  # paper uses 1e-4 with 100 epochs; scaled for the small budget
+
+
+def adam_init(params):
+    zeros = {k: jnp.zeros_like(v) for k, v in params.items()}
+    return {"m": zeros, "v": {k: jnp.zeros_like(v) for k, v in params.items()}, "t": 0}
+
+
+def adam_step(params, grads, state, lr=LR, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = {k: b1 * state["m"][k] + (1 - b1) * grads[k] for k in params}
+    v = {k: b2 * state["v"][k] + (1 - b2) * grads[k] ** 2 for k in params}
+    mhat = {k: m[k] / (1 - b1**t) for k in params}
+    vhat = {k: v[k] / (1 - b2**t) for k in params}
+    new = {k: params[k] - lr * mhat[k] / (jnp.sqrt(vhat[k]) + eps) for k in params}
+    return new, {"m": m, "v": v, "t": t}
+
+
+def augment(rng: np.random.Generator, x: np.ndarray) -> np.ndarray:
+    """Random flips and 90° rotations (online data augmentation, §4.2)."""
+    if rng.random() < 0.5:
+        x = x[:, :, ::-1, :]
+    if rng.random() < 0.5:
+        x = x[:, ::-1, :, :]
+    k = int(rng.integers(0, 4))
+    if k:
+        x = np.rot90(x, k, axes=(1, 2))
+    return np.ascontiguousarray(x)
+
+
+def accuracy(params, x: np.ndarray, y: np.ndarray, batch: int = 128) -> float:
+    hits = 0
+    fwd = jax.jit(lambda p, xb: forward(p, xb, use_pallas=False))
+    for i in range(0, len(x), batch):
+        p = np.asarray(fwd(params, jnp.asarray(x[i : i + batch])))
+        hits += int(np.sum((p >= 0.5) == (y[i : i + batch] >= 0.5)))
+    return hits / len(x)
+
+
+def train_level(level: int, seed: int = 2025, verbose: bool = True) -> dict:
+    """Train one level's model; returns {params, accuracies, sizes}."""
+    t0 = time.time()
+    rng = np.random.default_rng(seed + level)
+    x_train, y_train = texture.sample_training_tiles(seed * 7 + level, TRAIN_N, level)
+    x_val, y_val = texture.sample_training_tiles(seed * 13 + level + 100, VAL_N, level)
+    x_test, y_test = texture.sample_training_tiles(seed * 17 + level + 200, TEST_N, level)
+
+    params = init_params(seed + 31 * level)
+    state = adam_init(params)
+    step_fn = jax.jit(
+        lambda p, s, xb, yb: (lambda l_g: (l_g[0], *adam_step(p, l_g[1], s)))(
+            jax.value_and_grad(bce_loss)(p, xb, yb)
+        )
+    )
+
+    steps = 0
+    for epoch in range(EPOCHS):
+        order = rng.permutation(len(x_train))
+        for i in range(0, len(order) - BATCH + 1, BATCH):
+            idx = order[i : i + BATCH]
+            xb = augment(rng, x_train[idx])
+            loss, params, state = step_fn(params, state, jnp.asarray(xb), jnp.asarray(y_train[idx]))
+            steps += 1
+        if verbose:
+            va = accuracy(params, x_val, y_val)
+            print(
+                f"[train L{level}] epoch {epoch + 1}/{EPOCHS} "
+                f"loss={float(loss):.4f} val_acc={va:.4f} ({time.time() - t0:.0f}s)"
+            )
+
+    result = {
+        "params": {k: np.asarray(v) for k, v in params.items()},
+        "train_accuracy": accuracy(params, x_train, y_train),
+        "val_accuracy": accuracy(params, x_val, y_val),
+        "test_accuracy": accuracy(params, x_test, y_test),
+        "train_size": len(x_train),
+        "val_size": len(x_val),
+        "test_size": len(x_test),
+        "steps": steps,
+        "seconds": time.time() - t0,
+    }
+    if verbose:
+        print(
+            f"[train L{level}] done: train={result['train_accuracy']:.4f} "
+            f"val={result['val_accuracy']:.4f} test={result['test_accuracy']:.4f}"
+        )
+    return result
+
+
+def save_weights(path: str, params: dict) -> None:
+    np.savez(path, **params)
+
+
+def load_weights(path: str) -> dict:
+    with np.load(path) as z:
+        return {k: jnp.asarray(z[k]) for k in z.files}

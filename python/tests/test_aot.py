@@ -1,0 +1,72 @@
+"""AOT artifact tests: HLO text is produced, parseable and batch-correct.
+
+These run against a fresh tiny lowering (not the trained artifacts) so the
+suite works before `make artifacts`; artifact-dependent checks are gated.
+"""
+
+import json
+import os
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import numpy as np
+import pytest
+
+from compile.aot import BATCH_SIZES, LEVELS, lower_level
+from compile.model import init_params
+
+ARTIFACTS = Path(__file__).resolve().parents[2] / "artifacts"
+
+
+def test_lower_produces_hlo_text():
+    hlo = lower_level(init_params(0), batch=2)
+    assert "HloModule" in hlo
+    assert "f32[2,64,64,3]" in hlo  # the only runtime parameter
+    # weights are baked: exactly one parameter in the ENTRY computation
+    # (nested pad/reduce regions have their own parameter lists).
+    entry = hlo.split("ENTRY ")[1]
+    entry_params = [l for l in entry.splitlines() if "parameter(" in l]
+    assert sum("parameter(0)" in l for l in entry_params) == 1
+    assert not any("parameter(1)" in l for l in entry_params), "weights must be constants"
+    # large constants must be printed in full, not elided as {...}
+    assert "constant({...})" not in hlo
+
+
+def test_lowered_batch_shape_varies():
+    h1 = lower_level(init_params(0), batch=1)
+    assert "f32[1,64,64,3]" in h1
+
+
+@pytest.mark.skipif(not (ARTIFACTS / "meta.json").exists(), reason="run `make artifacts` first")
+def test_artifacts_complete_and_meta_consistent():
+    meta = json.loads((ARTIFACTS / "meta.json").read_text())
+    assert meta["levels"] == LEVELS
+    assert meta["batch_sizes"] == BATCH_SIZES
+    for level in range(LEVELS):
+        assert (ARTIFACTS / f"weights_l{level}.npz").exists()
+        for b in BATCH_SIZES:
+            p = ARTIFACTS / f"classifier_l{level}_b{b}.hlo.txt"
+            assert p.exists(), p
+            head = p.read_text()[:4000]
+            assert "HloModule" in head
+    # Table 2 shape: accuracies recorded and in a sane band
+    for lm in meta["levels_meta"]:
+        if "test_accuracy" in lm:
+            assert 0.75 <= lm["test_accuracy"] <= 1.0
+
+
+@pytest.mark.skipif(not (ARTIFACTS / "meta.json").exists(), reason="run `make artifacts` first")
+def test_trained_model_beats_chance_on_fresh_tiles():
+    import jax.numpy as jnp
+
+    from compile import texture
+    from compile.model import forward
+    from compile.train import load_weights
+
+    params = load_weights(str(ARTIFACTS / "weights_l0.npz"))
+    X, y = texture.sample_training_tiles(987654, 128, 0)
+    p = np.asarray(forward(params, jnp.asarray(X), use_pallas=False))
+    acc = float(np.mean((p >= 0.5) == (y >= 0.5)))
+    assert acc > 0.8, f"trained L0 accuracy {acc} on fresh synthetic tiles"

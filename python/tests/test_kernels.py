@@ -1,0 +1,146 @@
+"""L1 correctness: every Pallas kernel vs the pure-jnp oracle in ref.py.
+
+Hypothesis sweeps shapes (and the matmul's activation choices); every
+property asserts allclose against the reference implementation.
+"""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.head import gap_mlp_head
+from compile.kernels.matmul import matmul_bias_act
+from compile.kernels.pool import maxpool2
+
+RNG = np.random.default_rng(12345)
+
+
+def rand(*shape):
+    return RNG.standard_normal(shape).astype(np.float32)
+
+
+# ---------------------------------------------------------------- matmul
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 200),
+    k=st.integers(1, 96),
+    n=st.integers(1, 64),
+    act=st.sampled_from(["none", "relu", "sigmoid"]),
+)
+def test_matmul_matches_ref(m, k, n, act):
+    x, w, b = rand(m, k), rand(k, n), rand(n)
+    got = np.asarray(matmul_bias_act(x, w, b, act))
+    want = np.asarray(ref.matmul_bias_act(x, w, b, act))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_matmul_exact_block_multiple():
+    # M, N exactly at block boundaries (no padding path).
+    x, w, b = rand(256, 27), rand(27, 128), rand(128)
+    got = np.asarray(matmul_bias_act(x, w, b, "relu"))
+    want = np.asarray(ref.matmul_bias_act(x, w, b, "relu"))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_matmul_single_row_and_col():
+    x, w, b = rand(1, 5), rand(5, 1), rand(1)
+    np.testing.assert_allclose(
+        np.asarray(matmul_bias_act(x, w, b)),
+        np.asarray(ref.matmul_bias_act(x, w, b)),
+        rtol=1e-5,
+        atol=1e-6,
+    )
+
+
+def test_matmul_rejects_bad_activation():
+    with pytest.raises(ValueError):
+        matmul_bias_act(rand(4, 4), rand(4, 4), rand(4), "tanh")
+
+
+def test_matmul_relu_clamps_negatives():
+    x = -np.ones((8, 8), np.float32)
+    w = np.eye(8, dtype=np.float32)
+    b = np.zeros(8, np.float32)
+    out = np.asarray(matmul_bias_act(x, w, b, "relu"))
+    assert (out == 0).all()
+
+
+# ---------------------------------------------------------------- maxpool
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(1, 8),
+    h=st.sampled_from([2, 4, 8, 16, 64]),
+    w=st.sampled_from([2, 4, 8, 16, 64]),
+    c=st.integers(1, 16),
+)
+def test_maxpool_matches_ref(b, h, w, c):
+    x = rand(b, h, w, c)
+    np.testing.assert_allclose(
+        np.asarray(maxpool2(x)), np.asarray(ref.maxpool2(x)), rtol=1e-6
+    )
+
+
+def test_maxpool_odd_dims_rejected():
+    with pytest.raises(AssertionError):
+        maxpool2(rand(1, 3, 4, 2))
+
+
+def test_maxpool_picks_maximum():
+    x = np.zeros((1, 2, 2, 1), np.float32)
+    x[0, 1, 0, 0] = 7.0
+    assert np.asarray(maxpool2(x))[0, 0, 0, 0] == 7.0
+
+
+# ---------------------------------------------------------------- head
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(1, 40),
+    hw=st.sampled_from([1, 2, 4, 8]),
+    c=st.integers(1, 48),
+    d=st.integers(1, 32),
+)
+def test_head_matches_ref(b, hw, c, d):
+    x = rand(b, hw, hw, c)
+    w1, b1, w2, b2 = rand(c, d), rand(d), rand(d, 1), rand(1)
+    got = np.asarray(gap_mlp_head(x, w1, b1, w2, b2))
+    want = np.asarray(ref.gap_mlp_head(x, w1, b1, w2, b2))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_head_output_is_probability():
+    x = rand(64, 8, 8, 32) * 10
+    w1, b1, w2, b2 = rand(32, 24), rand(24), rand(24, 1), rand(1)
+    out = np.asarray(gap_mlp_head(x, w1, b1, w2, b2))
+    assert out.shape == (64, 1)
+    assert ((out >= 0) & (out <= 1)).all()
+
+
+# ---------------------------------------------------------------- im2col
+
+
+@settings(max_examples=15, deadline=None)
+@given(b=st.integers(1, 4), h=st.sampled_from([4, 8, 16]), c=st.integers(1, 8))
+def test_im2col_conv_equals_lax_conv(b, h, c):
+    """conv-as-im2col-matmul (the model's Pallas path) == lax conv."""
+    cout = 5
+    x = rand(b, h, h, c)
+    filt = rand(3, 3, c, cout)
+    bias = rand(cout)
+    patches = np.asarray(ref.im2col(x, 3, 3))
+    got = np.asarray(
+        matmul_bias_act(patches, filt.reshape(9 * c, cout), bias, "relu")
+    ).reshape(b, h, h, cout)
+    want = np.asarray(ref.conv2d_same(x, filt, bias, "relu"))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)

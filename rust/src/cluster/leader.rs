@@ -1,0 +1,181 @@
+//! Cluster leader (node 0): deals the initial distribution over TCP,
+//! collects every worker's subtree, reconstructs and validates the full
+//! execution tree (§5.4), and reports per-worker loads + wall time.
+
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::model::Analyzer;
+use crate::preprocess::otsu::background_removal;
+use crate::pyramid::driver::BG_MARGIN;
+use crate::pyramid::tree::{ExecTree, Thresholds};
+use crate::sim::distribution::Distribution;
+use crate::slide::pyramid::Slide;
+use crate::synth::slide_gen::SlideSpec;
+
+use super::proto::Msg;
+use super::worker::{run_worker, WorkerConfig};
+
+/// Cluster run configuration.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    pub workers: usize,
+    pub distribution: Distribution,
+    pub steal: bool,
+    pub batch: usize,
+    pub seed: u64,
+}
+
+/// Outcome of one cluster execution of one slide.
+#[derive(Debug)]
+pub struct ClusterResult {
+    pub tree: ExecTree,
+    pub per_worker: Vec<usize>,
+    pub steals: usize,
+    pub steal_fails: usize,
+    pub wall: Duration,
+}
+
+impl ClusterResult {
+    pub fn max_tiles(&self) -> usize {
+        self.per_worker.iter().copied().max().unwrap_or(0)
+    }
+}
+
+/// Run a full cluster analysis of one slide with `cfg.workers` worker
+/// threads talking over real localhost TCP sockets.
+///
+/// The workers are threads of this process standing in for the paper's 12
+/// physical machines (DESIGN.md substitution S3): protocol, queues and
+/// stealing logic are identical; only the compute substrate is shared.
+pub fn run_cluster(
+    spec: &SlideSpec,
+    thresholds: &Thresholds,
+    analyzer: Arc<dyn Analyzer>,
+    cfg: &ClusterConfig,
+) -> Result<ClusterResult> {
+    assert!(cfg.workers >= 1);
+
+    // Bind every listener up front on OS-assigned ports (":0") — no fixed
+    // ranges, no races, no collisions with concurrent runs.
+    let leader_listener =
+        TcpListener::bind(("127.0.0.1", 0)).context("leader bind")?;
+    let leader_port = leader_listener.local_addr()?.port();
+    let mut worker_listeners = Vec::with_capacity(cfg.workers);
+    let mut worker_ports = Vec::with_capacity(cfg.workers);
+    for _ in 0..cfg.workers {
+        let l = TcpListener::bind(("127.0.0.1", 0)).context("worker bind")?;
+        worker_ports.push(l.local_addr()?.port());
+        worker_listeners.push(l);
+    }
+
+    // Initial working set: leader runs background removal once (cheap,
+    // lowest level) — the paper's initialization phase.
+    let slide = Slide::from_spec(spec.clone());
+    let initial = background_removal(&slide, BG_MARGIN).tissue_tiles;
+    let assignment = cfg
+        .distribution
+        .assign(&initial, cfg.workers, cfg.seed ^ 0xD157);
+
+    // Spawn workers with their pre-bound listeners.
+    let mut handles = Vec::with_capacity(cfg.workers);
+    for (id, listener) in worker_listeners.into_iter().enumerate() {
+        let wcfg = WorkerConfig {
+            id,
+            ports: worker_ports.clone(),
+            leader_port,
+            slide: spec.clone(),
+            thresholds: thresholds.clone(),
+            batch: cfg.batch,
+            steal: cfg.steal,
+            seed: cfg.seed,
+        };
+        let analyzer = Arc::clone(&analyzer);
+        handles.push(
+            std::thread::Builder::new()
+                .name(format!("worker-{id}"))
+                .spawn(move || run_worker(wcfg, listener, analyzer))?,
+        );
+    }
+
+    let t0 = Instant::now();
+    for (w, tiles) in assignment.iter().enumerate() {
+        for &tile in tiles {
+            send_to(worker_ports[w], &Msg::Task { tile })?;
+        }
+    }
+    for (w, tiles) in assignment.iter().enumerate() {
+        send_to(worker_ports[w], &Msg::Start { tasks: tiles.len() })?;
+    }
+
+    // Collect subtrees.
+    let mut merged = ExecTree::new(&spec.id, spec.levels);
+    let mut per_worker = vec![0usize; cfg.workers];
+    let mut steals = 0usize;
+    let mut steal_fails = 0usize;
+    let mut received = 0usize;
+    while received < cfg.workers {
+        let (mut stream, _) = leader_listener.accept()?;
+        match Msg::read_from(&mut stream)? {
+            Msg::Subtree {
+                worker,
+                tree,
+                steals: s,
+                steal_fails: sf,
+            } => {
+                per_worker[worker] = tree.total_analyzed();
+                steals += s;
+                steal_fails += sf;
+                merged.merge(&tree);
+                received += 1;
+            }
+            other => return Err(anyhow!("leader got unexpected {other:?}")),
+        }
+    }
+    let wall = t0.elapsed();
+
+    // Shut everything down and join.
+    for &p in &worker_ports {
+        let _ = send_to(p, &Msg::Shutdown);
+    }
+    for h in handles {
+        h.join().map_err(|_| anyhow!("worker panicked"))??;
+    }
+
+    merged
+        .check_consistency()
+        .map_err(|e| anyhow!("merged tree inconsistent: {e}"))?;
+    Ok(ClusterResult {
+        tree: merged,
+        per_worker,
+        steals,
+        steal_fails,
+        wall,
+    })
+}
+
+/// Connect with retry/backoff — worker listeners bind asynchronously and
+/// the leader must not race them (observed flaking at ~1 in 100 runs with
+/// a fixed pre-sleep).
+fn send_to(port: u16, msg: &Msg) -> Result<()> {
+    let mut delay = Duration::from_micros(200);
+    let deadline = Instant::now() + Duration::from_secs(5);
+    loop {
+        match TcpStream::connect(("127.0.0.1", port)) {
+            Ok(mut stream) => {
+                stream.set_nodelay(true).ok();
+                return msg.write_to(&mut stream);
+            }
+            Err(e) => {
+                if Instant::now() > deadline {
+                    return Err(e).with_context(|| format!("connect :{port}"));
+                }
+                std::thread::sleep(delay);
+                delay = (delay * 2).min(Duration::from_millis(50));
+            }
+        }
+    }
+}

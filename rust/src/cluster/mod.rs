@@ -1,0 +1,9 @@
+//! Decentralized cluster runtime (§5.4): leader + workers over real TCP
+//! sockets with random-victim work stealing. Workers are threads standing
+//! in for the paper's 12 mainstream computers (DESIGN.md S3).
+
+pub mod leader;
+pub mod proto;
+pub mod worker;
+
+pub use leader::{run_cluster, ClusterConfig, ClusterResult};

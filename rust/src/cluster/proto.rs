@@ -1,0 +1,212 @@
+//! Wire protocol of the decentralized cluster (§5.4).
+//!
+//! Length-prefixed JSON frames over TCP — the role DecentralizePy's
+//! TCP layer plays in the paper. Messages are small (a tile id, a steal
+//! request) except the final subtree upload to node 0.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+
+use anyhow::{anyhow, Result};
+
+use crate::pyramid::tree::ExecTree;
+use crate::slide::tile::TileId;
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Msg {
+    /// Leader → worker: one initial tile for your queue.
+    Task { tile: TileId },
+    /// Leader → worker: initial distribution complete (you were dealt
+    /// `tasks` tiles), start analyzing.
+    Start { tasks: usize },
+    /// Worker → worker: give me a task (thief's id for bookkeeping).
+    StealRequest { thief: usize },
+    /// Reply to a steal: one task, or None. `idle` reports whether the
+    /// victim itself is out of work (steal-phase or finished) — thieves
+    /// prune idle victims, but keep retrying busy ones that merely had no
+    /// spare task at this instant.
+    StealReply { task: Option<TileId>, idle: bool },
+    /// Worker → leader: my execution subtree plus counters.
+    Subtree {
+        worker: usize,
+        tree: ExecTree,
+        steals: usize,
+        steal_fails: usize,
+    },
+    /// Leader → worker: experiment over, stop listening.
+    Shutdown,
+}
+
+fn tile_json(t: TileId) -> Json {
+    Json::Arr(vec![
+        Json::Num(t.level as f64),
+        Json::Num(t.tx as f64),
+        Json::Num(t.ty as f64),
+    ])
+}
+
+fn tile_from(v: &Json) -> Result<TileId> {
+    let a = v.as_arr()?;
+    Ok(TileId::new(
+        a[0].as_usize()?,
+        a[1].as_usize()?,
+        a[2].as_usize()?,
+    ))
+}
+
+impl Msg {
+    pub fn to_json(&self) -> Json {
+        match self {
+            Msg::Task { tile } => Json::obj().set("t", "task").set("tile", tile_json(*tile)),
+            Msg::Start { tasks } => Json::obj().set("t", "start").set("tasks", *tasks),
+            Msg::StealRequest { thief } => {
+                Json::obj().set("t", "steal_req").set("thief", *thief)
+            }
+            Msg::StealReply { task, idle } => Json::obj()
+                .set("t", "steal_rep")
+                .set("idle", *idle)
+                .set(
+                    "task",
+                    match task {
+                        Some(t) => tile_json(*t),
+                        None => Json::Null,
+                    },
+                ),
+            Msg::Subtree {
+                worker,
+                tree,
+                steals,
+                steal_fails,
+            } => Json::obj()
+                .set("t", "subtree")
+                .set("worker", *worker)
+                .set("steals", *steals)
+                .set("steal_fails", *steal_fails)
+                .set("tree", tree.to_json()),
+            Msg::Shutdown => Json::obj().set("t", "shutdown"),
+        }
+    }
+
+    pub fn from_json(v: &Json) -> Result<Msg> {
+        Ok(match v.get("t")?.as_str()? {
+            "task" => Msg::Task {
+                tile: tile_from(v.get("tile")?)?,
+            },
+            "start" => Msg::Start {
+                tasks: v.get("tasks")?.as_usize()?,
+            },
+            "steal_req" => Msg::StealRequest {
+                thief: v.get("thief")?.as_usize()?,
+            },
+            "steal_rep" => Msg::StealReply {
+                task: match v.opt("task") {
+                    Some(t) => Some(tile_from(t)?),
+                    None => None,
+                },
+                idle: v.get("idle")?.as_bool()?,
+            },
+            "subtree" => Msg::Subtree {
+                worker: v.get("worker")?.as_usize()?,
+                steals: v.get("steals")?.as_usize()?,
+                steal_fails: v.get("steal_fails")?.as_usize()?,
+                tree: ExecTree::from_json(v.get("tree")?)?,
+            },
+            "shutdown" => Msg::Shutdown,
+            other => return Err(anyhow!("unknown message type {other:?}")),
+        })
+    }
+
+    /// Write one length-prefixed frame.
+    pub fn write_to(&self, stream: &mut TcpStream) -> Result<()> {
+        let body = self.to_json().to_string();
+        let len = (body.len() as u32).to_le_bytes();
+        stream.write_all(&len)?;
+        stream.write_all(body.as_bytes())?;
+        stream.flush()?;
+        Ok(())
+    }
+
+    /// Read one length-prefixed frame.
+    pub fn read_from(stream: &mut TcpStream) -> Result<Msg> {
+        let mut len = [0u8; 4];
+        stream.read_exact(&mut len)?;
+        let n = u32::from_le_bytes(len) as usize;
+        if n > 256 * 1024 * 1024 {
+            return Err(anyhow!("frame too large: {n}"));
+        }
+        let mut body = vec![0u8; n];
+        stream.read_exact(&mut body)?;
+        let text = String::from_utf8(body)?;
+        Msg::from_json(&Json::parse(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::{TcpListener, TcpStream};
+
+    #[test]
+    fn json_roundtrip_all_variants() {
+        let mut tree = ExecTree::new("s", 3);
+        tree.initial = vec![TileId::new(2, 0, 0)];
+        tree.nodes[2].push(crate::pyramid::tree::ExecNode {
+            tile: TileId::new(2, 0, 0),
+            prob: 0.5,
+            zoom: false,
+        });
+        let msgs = vec![
+            Msg::Task {
+                tile: TileId::new(2, 3, 1),
+            },
+            Msg::Start { tasks: 12 },
+            Msg::StealRequest { thief: 7 },
+            Msg::StealReply {
+                task: Some(TileId::new(1, 2, 2)),
+                idle: false,
+            },
+            Msg::StealReply { task: None, idle: true },
+            Msg::Subtree {
+                worker: 3,
+                tree,
+                steals: 5,
+                steal_fails: 2,
+            },
+            Msg::Shutdown,
+        ];
+        for m in msgs {
+            let j = m.to_json().to_string();
+            let back = Msg::from_json(&Json::parse(&j).unwrap()).unwrap();
+            match (&m, &back) {
+                (Msg::Subtree { tree: a, .. }, Msg::Subtree { tree: b, .. }) => {
+                    assert_eq!(a.nodes, b.nodes);
+                }
+                _ => assert_eq!(m, back),
+            }
+        }
+    }
+
+    #[test]
+    fn tcp_frame_roundtrip() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let handle = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let m = Msg::read_from(&mut s).unwrap();
+            Msg::write_to(&m, &mut s).unwrap(); // echo
+        });
+        let mut stream = TcpStream::connect(addr).unwrap();
+        let m = Msg::StealRequest { thief: 4 };
+        m.write_to(&mut stream).unwrap();
+        let back = Msg::read_from(&mut stream).unwrap();
+        assert_eq!(m, back);
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn rejects_unknown_type() {
+        let v = Json::parse(r#"{"t": "bogus"}"#).unwrap();
+        assert!(Msg::from_json(&v).is_err());
+    }
+}

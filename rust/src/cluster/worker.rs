@@ -1,0 +1,257 @@
+//! Cluster worker (§5.4): own task queue, batched analysis, random-victim
+//! work stealing with victim-list pruning, subtree upload to node 0.
+//!
+//! Each worker is a "modest computer": it rebuilds the slide from the
+//! replicated spec, owns a TCP listener (tasks + steal requests) and a
+//! compute loop, and shares nothing with other workers except messages.
+
+use std::collections::VecDeque;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::model::Analyzer;
+use crate::pyramid::tree::{ExecNode, ExecTree, Thresholds};
+use crate::slide::pyramid::Slide;
+use crate::slide::tile::TileId;
+use crate::synth::slide_gen::SlideSpec;
+use crate::util::prng::Pcg32;
+
+use super::proto::Msg;
+
+/// Static configuration of one worker.
+#[derive(Clone)]
+pub struct WorkerConfig {
+    pub id: usize,
+    /// Listen address of every worker, indexed by worker id.
+    pub ports: Vec<u16>,
+    pub leader_port: u16,
+    pub slide: SlideSpec,
+    pub thresholds: Thresholds,
+    /// Analysis batch size.
+    pub batch: usize,
+    /// Enable the work-stealing policy (Fig. 7 compares on/off).
+    pub steal: bool,
+    pub seed: u64,
+}
+
+struct Shared {
+    queue: Mutex<VecDeque<TileId>>,
+    /// Set by the Start message: number of initially dealt tasks
+    /// (usize::MAX until Start arrives).
+    expected: std::sync::atomic::AtomicUsize,
+    /// Main loop running: until set, steal requests are refused — a thief
+    /// must not drain tasks out of the queue while the worker is still
+    /// waiting for its own Start handshake to complete.
+    running: AtomicBool,
+    /// Worker is out of local work (steal phase or finished); reported to
+    /// thieves so they can prune their victim lists (§5.3/§5.4).
+    idle: AtomicBool,
+    done: AtomicBool,
+}
+
+/// Run one worker to completion (blocking). Returns its subtree, after it
+/// has also been uploaded to the leader.
+///
+/// The listener is pre-bound by the leader (to port 0 → OS-assigned), so
+/// worker startup can never race or collide on ports.
+pub fn run_worker(
+    cfg: WorkerConfig,
+    listener: TcpListener,
+    analyzer: Arc<dyn Analyzer>,
+) -> Result<ExecTree> {
+    let slide = Slide::from_spec(cfg.slide.clone());
+    let shared = Arc::new(Shared {
+        queue: Mutex::new(VecDeque::new()),
+        expected: std::sync::atomic::AtomicUsize::new(usize::MAX),
+        running: AtomicBool::new(false),
+        idle: AtomicBool::new(false),
+        done: AtomicBool::new(false),
+    });
+
+    // --- listener: tasks, steal requests, shutdown --------------------
+    listener.set_nonblocking(true)?;
+    let l_shared = Arc::clone(&shared);
+    let listen_handle = std::thread::Builder::new()
+        .name(format!("w{}-listen", cfg.id))
+        .spawn(move || listen_loop(listener, l_shared))?;
+
+    // --- wait for Start and for every dealt task to arrive -------------
+    // (Task and Start frames ride separate connections; the count in
+    // Start removes any dependence on arrival order.)
+    loop {
+        let expected = shared.expected.load(Ordering::Acquire);
+        if expected != usize::MAX && shared.queue.lock().unwrap().len() >= expected {
+            break;
+        }
+        std::thread::sleep(Duration::from_micros(200));
+    }
+    // --- compute loop ----------------------------------------------------
+    let mut tree = ExecTree::new(&cfg.slide.id, cfg.slide.levels);
+    {
+        let q = shared.queue.lock().unwrap();
+        tree.initial = q.iter().copied().collect();
+        shared.running.store(true, Ordering::Release);
+    }
+    let mut rng = Pcg32::new(cfg.seed ^ (cfg.id as u64) << 32);
+    let mut victims: Vec<usize> = (0..cfg.ports.len()).filter(|&v| v != cfg.id).collect();
+    let mut steals = 0usize;
+    let mut steal_fails = 0usize;
+
+    'outer: loop {
+        // Drain a batch of same-level tiles from the front of the queue.
+        let batch: Vec<TileId> = {
+            let mut q = shared.queue.lock().unwrap();
+            match q.front().copied() {
+                Some(first) => {
+                    let level = first.level;
+                    let mut b = Vec::with_capacity(cfg.batch);
+                    let mut rest: VecDeque<TileId> = VecDeque::with_capacity(q.len());
+                    while let Some(t) = q.pop_front() {
+                        if t.level == level && b.len() < cfg.batch {
+                            b.push(t);
+                        } else {
+                            rest.push_back(t);
+                        }
+                    }
+                    *q = rest;
+                    b
+                }
+                None => Vec::new(),
+            }
+        };
+
+        if batch.is_empty() {
+            if !cfg.steal {
+                break 'outer;
+            }
+            // Steal phase: random victims; prune the ones that are
+            // themselves idle, keep retrying busy ones (they may spawn
+            // more work when a zoom-in fires).
+            shared.idle.store(true, Ordering::Release);
+            while !victims.is_empty() {
+                let vi = rng.usize_range(0, victims.len());
+                let victim = victims[vi];
+                match request_steal(cfg.ports[victim], cfg.id) {
+                    Ok((Some(task), _)) => {
+                        steals += 1;
+                        shared.queue.lock().unwrap().push_back(task);
+                        shared.idle.store(false, Ordering::Release);
+                        continue 'outer;
+                    }
+                    Ok((None, idle)) => {
+                        steal_fails += 1;
+                        if idle {
+                            victims.swap_remove(vi);
+                        } else {
+                            // busy victim with no spare task right now
+                            std::thread::sleep(Duration::from_micros(300));
+                        }
+                    }
+                    Err(_) => {
+                        steal_fails += 1;
+                        victims.swap_remove(vi);
+                    }
+                }
+            }
+            break 'outer; // no victims left
+        }
+
+        let level = batch[0].level as usize;
+        let probs = analyzer.analyze(&slide, level, &batch);
+        let thr = cfg.thresholds.zoom[level] as f32;
+        let mut q = shared.queue.lock().unwrap();
+        for (&tile, &prob) in batch.iter().zip(&probs) {
+            let zoom = level > 0 && prob >= thr;
+            tree.nodes[level].push(ExecNode { tile, prob, zoom });
+            if zoom {
+                q.extend(tile.children());
+            }
+        }
+    }
+
+    shared.idle.store(true, Ordering::Release);
+
+    // --- upload subtree to node 0 ---------------------------------------
+    let mut leader = TcpStream::connect(("127.0.0.1", cfg.leader_port))?;
+    Msg::Subtree {
+        worker: cfg.id,
+        tree: tree.clone(),
+        steals,
+        steal_fails,
+    }
+    .write_to(&mut leader)?;
+
+    // Keep answering steal requests (with None) until the leader shuts the
+    // listener down, so late thieves don't hang on connect.
+    listen_handle.join().ok();
+    Ok(tree)
+}
+
+fn listen_loop(listener: TcpListener, shared: Arc<Shared>) {
+    loop {
+        match listener.accept() {
+            Ok((mut stream, _)) => {
+                // The listener is non-blocking; the accepted stream must
+                // be switched back to blocking or read_exact can fail
+                // with WouldBlock and silently drop a frame.
+                stream.set_nonblocking(false).ok();
+                stream.set_read_timeout(Some(Duration::from_secs(30))).ok();
+                stream.set_nodelay(true).ok();
+                if let Ok(msg) = Msg::read_from(&mut stream) {
+                    match msg {
+                        Msg::Task { tile } => {
+                            shared.queue.lock().unwrap().push_back(tile);
+                        }
+                        Msg::Start { tasks } => {
+                            shared.expected.store(tasks, Ordering::Release)
+                        }
+                        Msg::StealRequest { .. } => {
+                            let (task, idle) = {
+                                let mut q = shared.queue.lock().unwrap();
+                                // Only victims with more than one remaining
+                                // task give one away (§5.3), and only once
+                                // this worker's own run has begun.
+                                let task = if shared.running.load(Ordering::Acquire)
+                                    && q.len() > 1
+                                {
+                                    q.pop_front()
+                                } else {
+                                    None
+                                };
+                                (task, shared.idle.load(Ordering::Acquire))
+                            };
+                            let _ = Msg::StealReply { task, idle }.write_to(&mut stream);
+                        }
+                        Msg::Shutdown => {
+                            shared.done.store(true, Ordering::Release);
+                            return;
+                        }
+                        _ => {}
+                    }
+                }
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if shared.done.load(Ordering::Acquire) {
+                    return;
+                }
+                std::thread::sleep(Duration::from_micros(200));
+            }
+            Err(_) => return,
+        }
+    }
+}
+
+fn request_steal(victim_port: u16, thief: usize) -> Result<(Option<TileId>, bool)> {
+    let mut stream = TcpStream::connect(("127.0.0.1", victim_port))?;
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+    Msg::StealRequest { thief }.write_to(&mut stream)?;
+    match Msg::read_from(&mut stream)? {
+        Msg::StealReply { task, idle } => Ok((task, idle)),
+        other => anyhow::bail!("unexpected reply {other:?}"),
+    }
+}

@@ -1,0 +1,72 @@
+//! Figure 2: tumor-probability heatmaps per pyramid level vs ground truth.
+//!
+//! Emits one CSV per level (`fig2_heatmap_l{level}.csv` with columns
+//! tx, ty, probability, truth) plus PGM images for quick eyeballing —
+//! the repo's stand-in for the paper's color renderings.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::harness::CsvOut;
+use crate::slide::pyramid::Slide;
+use crate::synth::slide_gen::{DatasetParams, SlideKind, SlideSpec};
+
+use super::ctx::{make_analyzer, ModelKind};
+
+pub fn run(model: ModelKind) -> Result<Vec<String>> {
+    let (analyzer, _) = make_analyzer(model, 5)?;
+    let p = DatasetParams::default();
+    let slide = Slide::from_spec(SlideSpec::new(
+        "fig2",
+        31337,
+        p.tiles_x,
+        p.tiles_y,
+        p.levels,
+        p.tile_px,
+        SlideKind::LargeTumor,
+    ));
+    let mut outputs = Vec::new();
+    for level in (0..slide.levels()).rev() {
+        let tiles = slide.level_tile_ids(level);
+        let probs = analyzer.analyze(&slide, level, &tiles);
+        let (nx, ny) = slide.level_tiles(level);
+
+        let mut csv = CsvOut::create(
+            &format!("fig2_heatmap_l{level}.csv"),
+            &["tx", "ty", "probability", "tumor_truth"],
+        )?;
+        for (&t, &prob) in tiles.iter().zip(&probs) {
+            csv.row(&[
+                t.tx.to_string(),
+                t.ty.to_string(),
+                format!("{prob:.4}"),
+                format!("{}", slide.is_tumor(t) as u8),
+            ])?;
+        }
+        outputs.push(csv.path().display().to_string());
+
+        // PGM heatmap (prob) and ground truth mask.
+        for (suffix, vals) in [
+            (
+                "prob",
+                probs.iter().map(|&p| (p * 255.0) as u8).collect::<Vec<u8>>(),
+            ),
+            (
+                "truth",
+                tiles
+                    .iter()
+                    .map(|&t| if slide.is_tumor(t) { 255 } else { 0 })
+                    .collect(),
+            ),
+        ] {
+            let path = Path::new("bench_results").join(format!("fig2_l{level}_{suffix}.pgm"));
+            let mut f = std::fs::File::create(&path)?;
+            write!(f, "P5\n{nx} {ny}\n255\n")?;
+            f.write_all(&vals)?;
+            outputs.push(path.display().to_string());
+        }
+    }
+    Ok(outputs)
+}

@@ -1,0 +1,134 @@
+//! Figures 3, 4 and 5: the accuracy-performance trade-off studies.
+//!
+//! * **Fig. 3** — isolated per-level β sweep: positive retention rate and
+//!   speedup when only one level filters (others pass through).
+//! * **Fig. 4** — metric-based selection: for each objective retention
+//!   rate, the per-level βs chosen on the train set and the achieved
+//!   retention/speedup on the test set.
+//! * **Fig. 5** — empirical β sweep: one β for all levels, retention and
+//!   speedup on train and test sets.
+
+use anyhow::Result;
+
+use crate::harness::{print_table, CsvOut};
+use crate::tuning::empirical;
+use crate::tuning::metric_based::{self, evaluate, isolated_curve};
+
+use super::ctx::Ctx;
+
+/// Fig. 3 rows: per level × β.
+pub fn fig3(ctx: &Ctx) -> Result<()> {
+    let levels = ctx.cfg.params.levels;
+    let mut csv = CsvOut::create(
+        "fig3_isolated_levels.csv",
+        &["level", "beta", "threshold", "retention", "speedup"],
+    )?;
+    let mut rows = Vec::new();
+    for level in 1..levels {
+        let curve = isolated_curve(&ctx.train_cache, levels, level);
+        for p in &curve.points {
+            let row = vec![
+                level.to_string(),
+                p.beta.to_string(),
+                format!("{:.3}", p.threshold),
+                format!("{:.4}", p.retention),
+                format!("{:.3}", p.speedup),
+            ];
+            csv.row(&row)?;
+            rows.push(row);
+        }
+    }
+    print_table(
+        "Fig 3: isolated resolution levels — retention & speedup vs β (train set)",
+        &["level", "beta", "threshold", "retention", "speedup"],
+        &rows,
+    );
+    Ok(())
+}
+
+/// Fig. 4 rows: objective sweep for the metric-based strategy.
+pub fn fig4(ctx: &Ctx) -> Result<()> {
+    let levels = ctx.cfg.params.levels;
+    let mut csv = CsvOut::create(
+        "fig4_metric_tradeoff.csv",
+        &[
+            "objective",
+            "beta_l1",
+            "beta_l2",
+            "train_retention",
+            "train_speedup",
+            "test_retention",
+            "test_speedup",
+        ],
+    )?;
+    let mut rows = Vec::new();
+    for objective in [0.70, 0.75, 0.80, 0.85, 0.90, 0.95, 0.99] {
+        let sel = metric_based::select(&ctx.train_cache, levels, objective);
+        let (tr_ret, tr_sp, _) = evaluate(&ctx.train_cache, &sel.thresholds);
+        let (te_ret, te_sp, _) = evaluate(&ctx.test_cache, &sel.thresholds);
+        let row = vec![
+            format!("{objective:.2}"),
+            sel.betas[1].map_or("-".into(), |b| b.to_string()),
+            sel.betas
+                .get(2)
+                .copied()
+                .flatten()
+                .map_or("-".into(), |b| b.to_string()),
+            format!("{tr_ret:.4}"),
+            format!("{tr_sp:.3}"),
+            format!("{te_ret:.4}"),
+            format!("{te_sp:.3}"),
+        ];
+        csv.row(&row)?;
+        rows.push(row);
+    }
+    print_table(
+        "Fig 4: metric-based strategy — objective retention vs achieved (paper: objective 0.90 → test retention 0.92, speedup 2.34)",
+        &[
+            "objective",
+            "β L1",
+            "β L2",
+            "train_ret",
+            "train_spd",
+            "test_ret",
+            "test_spd",
+        ],
+        &rows,
+    );
+    Ok(())
+}
+
+/// Fig. 5 rows: empirical β sweep on train + test.
+pub fn fig5(ctx: &Ctx) -> Result<()> {
+    let levels = ctx.cfg.params.levels;
+    let sweep = empirical::sweep(&ctx.train_cache, levels);
+    let mut csv = CsvOut::create(
+        "fig5_empirical_tradeoff.csv",
+        &[
+            "beta",
+            "train_retention",
+            "train_speedup",
+            "test_retention",
+            "test_speedup",
+        ],
+    )?;
+    let mut rows = Vec::new();
+    for p in &sweep {
+        let (te_ret, te_sp, _) = evaluate(&ctx.test_cache, &p.thresholds);
+        let row = vec![
+            p.beta.to_string(),
+            format!("{:.4}", p.retention),
+            format!("{:.3}", p.speedup),
+            format!("{te_ret:.4}"),
+            format!("{te_sp:.3}"),
+        ];
+        csv.row(&row)?;
+        rows.push(row);
+    }
+    print_table(
+        "Fig 5: empirical strategy — β sweep (paper: β=8 → 90% retention, 2.65× speedup; β=5 → 80%, 5.63×)",
+        &["beta", "train_ret", "train_spd", "test_ret", "test_spd"],
+        &rows,
+    );
+    Ok(())
+}

@@ -1,0 +1,115 @@
+//! Figure 6: simulated load balancing — max tiles analyzed by the busiest
+//! worker for every (distribution × policy) combination over a sweep of
+//! worker counts, averaged over the test set (§5.2-5.3).
+
+use anyhow::Result;
+
+use crate::harness::{print_table, CsvOut};
+use crate::sim::{simulate, Distribution, Policy};
+use crate::tuning::empirical;
+
+use super::ctx::Ctx;
+
+#[derive(Debug, Clone)]
+pub struct Fig6Row {
+    pub workers: usize,
+    pub distribution: Distribution,
+    pub policy: Policy,
+    pub avg_max_tiles: f64,
+    pub avg_steals: f64,
+}
+
+pub fn run(ctx: &Ctx, workers: &[usize]) -> Result<Vec<Fig6Row>> {
+    // Thresholds per §5.1: "the pyramidal execution tree retrieved using
+    // thresholds from §4.5" — empirical selection at 0.90.
+    let sel = empirical::select(&ctx.train_cache, ctx.cfg.params.levels, 0.90);
+    let trees: Vec<_> = ctx
+        .test_cache
+        .slides
+        .iter()
+        .map(|sp| sp.replay(&sel.thresholds))
+        .collect();
+
+    // Fig 6a: sync policy × all distributions; Fig 6b: none × all + RR+WS
+    // + ideal. We sweep everything and let the bench print both panels.
+    let mut rows = Vec::new();
+    for &w in workers {
+        for dist in Distribution::ALL {
+            for policy in Policy::ALL {
+                let mut max_sum = 0.0;
+                let mut steal_sum = 0.0;
+                for (i, tree) in trees.iter().enumerate() {
+                    let r = simulate(tree, w, dist, policy, ctx.cfg.seed ^ i as u64);
+                    max_sum += r.max_tiles() as f64;
+                    steal_sum += r.steals as f64;
+                }
+                rows.push(Fig6Row {
+                    workers: w,
+                    distribution: dist,
+                    policy,
+                    avg_max_tiles: max_sum / trees.len() as f64,
+                    avg_steals: steal_sum / trees.len() as f64,
+                });
+            }
+        }
+    }
+    Ok(rows)
+}
+
+/// Average reference (highest-resolution-only) tile count — the "R." line.
+pub fn reference_line(ctx: &Ctx) -> f64 {
+    let n = ctx.test_cache.slides.len().max(1);
+    ctx.test_cache
+        .slides
+        .iter()
+        .map(|s| s.reference_count() as f64)
+        .sum::<f64>()
+        / n as f64
+}
+
+pub fn print_report(ctx: &Ctx, rows: &[Fig6Row]) -> Result<()> {
+    let mut csv = CsvOut::create(
+        "fig6_load_balancing.csv",
+        &["workers", "distribution", "policy", "avg_max_tiles", "avg_steals"],
+    )?;
+    for r in rows {
+        csv.row(&[
+            r.workers.to_string(),
+            r.distribution.as_str().into(),
+            r.policy.as_str().into(),
+            format!("{:.1}", r.avg_max_tiles),
+            format!("{:.1}", r.avg_steals),
+        ])?;
+    }
+
+    let panel = |title: &str, select: &dyn Fn(&Fig6Row) -> bool| {
+        let mut out: Vec<Vec<String>> = Vec::new();
+        for r in rows.iter().filter(|r| select(r)) {
+            out.push(vec![
+                r.workers.to_string(),
+                format!("{}+{}", r.distribution.as_str(), r.policy.as_str()),
+                format!("{:.1}", r.avg_max_tiles),
+            ]);
+        }
+        print_table(title, &["workers", "strategy", "avg max tiles/worker"], &out);
+    };
+    panel(
+        "Fig 6a: synchronization-based balancing (paper: round-robin ≈ random ≫ block)",
+        &|r| r.policy == Policy::SyncPerLevel,
+    );
+    panel(
+        "Fig 6b: no-sync policies (paper: work-stealing ≈ ideal from ≥4 workers)",
+        &|r| {
+            r.policy == Policy::NoBalancing
+                || (r.policy == Policy::WorkStealing
+                    && r.distribution == Distribution::RoundRobin)
+                || (r.policy == Policy::OracleIdeal
+                    && r.distribution == Distribution::RoundRobin)
+        },
+    );
+    println!(
+        "\nR. (reference execution on one worker): {:.0} tiles",
+        reference_line(ctx)
+    );
+    Ok(())
+}

@@ -1,0 +1,151 @@
+//! Figure 7: real-cluster execution time per image vs number of workers,
+//! with and without work stealing (§5.4).
+//!
+//! Three slides (large tumors / several small ones / negative), each
+//! measured `reps` times per configuration on the TCP cluster. A per-tile
+//! delay stands in for the paper's 0.33 s analysis block so the run is
+//! latency-bound and worker threads overlap like separate machines
+//! (DESIGN.md S3); the oracle provides probabilities so the tree shape
+//! matches the tuned execution.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::cluster::{run_cluster, ClusterConfig};
+use crate::harness::{print_table, CsvOut};
+use crate::model::oracle::OracleAnalyzer;
+use crate::model::{Analyzer, DelayAnalyzer};
+use crate::sim::Distribution;
+use crate::synth::slide_gen::{DatasetParams, SlideKind, SlideSpec};
+use crate::tuning::empirical;
+use crate::util::stats::Summary;
+
+use super::ctx::Ctx;
+
+#[derive(Debug, Clone)]
+pub struct Fig7Row {
+    pub slide_kind: &'static str,
+    pub workers: usize,
+    pub steal: bool,
+    pub mean_secs: f64,
+    pub std_secs: f64,
+    pub max_tiles: f64,
+    pub steals: f64,
+}
+
+pub fn run(
+    ctx: &Ctx,
+    workers: &[usize],
+    reps: usize,
+    per_tile: Duration,
+) -> Result<Vec<Fig7Row>> {
+    let sel = empirical::select(&ctx.train_cache, ctx.cfg.params.levels, 0.90);
+    let p = DatasetParams::default();
+    let slides = [
+        ("large_tumor", SlideKind::LargeTumor),
+        ("small_scattered", SlideKind::SmallScattered),
+        ("negative", SlideKind::Negative),
+    ];
+    let analyzer: Arc<dyn Analyzer> = Arc::new(DelayAnalyzer::new(
+        OracleAnalyzer::new(1),
+        per_tile,
+    ));
+
+    let mut rows = Vec::new();
+    for (name, kind) in slides {
+        let spec = SlideSpec::new(
+            format!("fig7_{name}"),
+            0xF16_7 ^ kind as u64,
+            p.tiles_x,
+            p.tiles_y,
+            p.levels,
+            p.tile_px,
+            kind,
+        );
+        for &w in workers {
+            for steal in [false, true] {
+                let mut secs = Summary::new();
+                let mut max_tiles = 0.0;
+                let mut steals = 0.0;
+                for rep in 0..reps {
+                    // TCP setup can flake under heavy thread contention on
+                    // this 1-core box (listener backlog, bind timing);
+                    // retry the whole run like a real deployment would.
+                    let mut attempt = 0;
+                    let res = loop {
+                        attempt += 1;
+                        match run_cluster(
+                            &spec,
+                            &sel.thresholds,
+                            Arc::clone(&analyzer),
+                            &ClusterConfig {
+                                workers: w,
+                                distribution: Distribution::RoundRobin,
+                                steal,
+                                batch: 1, // per-tile tasks, like the paper
+                                seed: 1000 + rep as u64 + attempt * 7919,
+                            },
+                        ) {
+                            Ok(r) => break r,
+                            Err(e) if attempt < 3 => {
+                                log::warn!("cluster run retry {attempt}: {e:#}");
+                                std::thread::sleep(Duration::from_millis(100));
+                            }
+                            Err(e) => return Err(e),
+                        }
+                    };
+                    secs.push(res.wall.as_secs_f64());
+                    max_tiles += res.max_tiles() as f64 / reps as f64;
+                    steals += res.steals as f64 / reps as f64;
+                }
+                rows.push(Fig7Row {
+                    slide_kind: name,
+                    workers: w,
+                    steal,
+                    mean_secs: secs.mean(),
+                    std_secs: secs.std(),
+                    max_tiles,
+                    steals,
+                });
+            }
+        }
+    }
+    Ok(rows)
+}
+
+pub fn print_report(rows: &[Fig7Row]) -> Result<()> {
+    let mut csv = CsvOut::create(
+        "fig7_cluster.csv",
+        &[
+            "slide",
+            "workers",
+            "steal",
+            "mean_secs",
+            "std_secs",
+            "avg_max_tiles",
+            "avg_steals",
+        ],
+    )?;
+    let mut out = Vec::new();
+    for r in rows {
+        let row = vec![
+            r.slide_kind.to_string(),
+            r.workers.to_string(),
+            if r.steal { "ws" } else { "no-ws" }.to_string(),
+            format!("{:.3}", r.mean_secs),
+            format!("{:.3}", r.std_secs),
+            format!("{:.1}", r.max_tiles),
+            format!("{:.1}", r.steals),
+        ];
+        csv.row(&row)?;
+        out.push(row);
+    }
+    print_table(
+        "Fig 7: real TCP cluster — avg time per image vs workers (paper: >1h → ~15min at 12 workers, WS best)",
+        &["slide", "workers", "policy", "mean_s", "std_s", "max_tiles", "steals"],
+        &out,
+    );
+    Ok(())
+}

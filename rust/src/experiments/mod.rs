@@ -1,0 +1,15 @@
+//! Experiment drivers — one module per paper table/figure (see DESIGN.md
+//! §5 for the index). Shared by `benches/*` and the `pyramidai report`
+//! CLI; every run prints the paper-style table and writes
+//! `bench_results/*.csv`.
+
+pub mod ctx;
+pub mod fig2;
+pub mod fig345;
+pub mod fig6;
+pub mod fig7;
+pub mod table12;
+pub mod table3;
+pub mod wsi46;
+
+pub use ctx::{Ctx, CtxConfig, ModelKind};

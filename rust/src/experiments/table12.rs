@@ -1,0 +1,136 @@
+//! Tables 1 & 2: dataset sizes and per-level model accuracies.
+//!
+//! The python build step records its train/val/test sizes and accuracies
+//! in `artifacts/meta.json`; this experiment reports them next to the
+//! paper's values, and additionally measures the deployed model's accuracy
+//! on rust-generated tiles (the cross-language transfer number).
+
+use anyhow::Result;
+
+use crate::harness::{print_table, CsvOut};
+use crate::runtime::ArtifactsMeta;
+use crate::slide::pyramid::Slide;
+use crate::synth::slide_gen::{gen_slide_set, DatasetParams};
+
+use super::ctx::{artifacts_dir, make_analyzer, ModelKind};
+
+/// Paper values for the comparison columns.
+pub const PAPER_T1: [(usize, usize, usize); 3] = [
+    (26576, 38400, 92000),
+    (26134, 38400, 92000),
+    (25504, 38400, 72568),
+];
+pub const PAPER_T2: [(f64, f64, f64); 3] = [
+    (0.9328, 0.9498, 0.9480),
+    (0.9439, 0.9590, 0.9584),
+    (0.8982, 0.9110, 0.9166),
+];
+
+#[derive(Debug, Clone)]
+pub struct LevelReport {
+    pub level: usize,
+    pub sizes: Option<(usize, usize, usize)>,
+    pub accs: Option<(f64, f64, f64)>,
+    /// Accuracy of the deployed (PJRT) model on decisive rust tiles.
+    pub rust_acc: Option<f64>,
+}
+
+pub fn run(measure_rust_transfer: bool) -> Result<Vec<LevelReport>> {
+    let meta = ArtifactsMeta::load(&artifacts_dir())?;
+    let mut reports: Vec<LevelReport> = (0..meta.levels)
+        .map(|level| LevelReport {
+            level,
+            sizes: meta.dataset_sizes.get(level).copied().flatten(),
+            accs: meta.accuracies.get(level).copied().flatten(),
+            rust_acc: None,
+        })
+        .collect();
+
+    if measure_rust_transfer {
+        let (analyzer, _) = make_analyzer(ModelKind::Pjrt, 1)?;
+        let slides: Vec<Slide> = gen_slide_set("t2", 4, 999, &DatasetParams::default())
+            .into_iter()
+            .map(Slide::from_spec)
+            .collect();
+        for report in reports.iter_mut() {
+            let level = report.level;
+            let mut correct = 0usize;
+            let mut total = 0usize;
+            for slide in &slides {
+                let tiles: Vec<_> = slide
+                    .level_tile_ids(level)
+                    .into_iter()
+                    .filter(|&t| {
+                        let tf = slide.tumor_fraction(t);
+                        slide.tissue_fraction(t) > 0.6 && (tf == 0.0 || tf > 0.3)
+                    })
+                    .collect();
+                if tiles.is_empty() {
+                    continue;
+                }
+                let probs = analyzer.analyze(slide, level, &tiles);
+                for (&t, &p) in tiles.iter().zip(&probs) {
+                    if (p >= 0.5) == (slide.tumor_fraction(t) > 0.3) {
+                        correct += 1;
+                    }
+                    total += 1;
+                }
+            }
+            report.rust_acc = Some(correct as f64 / total.max(1) as f64);
+        }
+    }
+    Ok(reports)
+}
+
+pub fn print_report(reports: &[LevelReport]) -> Result<()> {
+    let mut csv = CsvOut::create(
+        "table1_2.csv",
+        &[
+            "level",
+            "train_size",
+            "val_size",
+            "test_size",
+            "train_acc",
+            "val_acc",
+            "test_acc",
+            "rust_transfer_acc",
+            "paper_test_acc",
+        ],
+    )?;
+    let rows: Vec<Vec<String>> = reports
+        .iter()
+        .map(|r| {
+            let (ts, vs, xs) = r.sizes.unwrap_or((0, 0, 0));
+            let (ta, va, xa) = r.accs.unwrap_or((f64::NAN, f64::NAN, f64::NAN));
+            let row = vec![
+                format!("{}", r.level),
+                ts.to_string(),
+                vs.to_string(),
+                xs.to_string(),
+                format!("{ta:.4}"),
+                format!("{va:.4}"),
+                format!("{xa:.4}"),
+                r.rust_acc.map_or("-".into(), |a| format!("{a:.4}")),
+                format!("{:.4}", PAPER_T2[r.level.min(2)].2),
+            ];
+            csv.row(&row).ok();
+            row
+        })
+        .collect();
+    print_table(
+        "Tables 1-2: dataset sizes and model accuracies (paper: 26k/38k/92k tiles, acc 0.90-0.96)",
+        &[
+            "level",
+            "train",
+            "val",
+            "test",
+            "train_acc",
+            "val_acc",
+            "test_acc",
+            "rust_acc",
+            "paper_acc",
+        ],
+        &rows,
+    );
+    Ok(())
+}

@@ -1,0 +1,149 @@
+//! Benchmark harness (criterion-lite): warmup + sampled measurement with
+//! mean ± σ, aligned table printing and CSV output. Used by every
+//! `benches/*.rs` target and the `pyramidai report` CLI.
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+use crate::util::stats::{fmt_duration, Summary};
+
+/// Timing result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub samples: usize,
+    pub mean: Duration,
+    pub std: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl Measurement {
+    pub fn row(&self) -> Vec<String> {
+        vec![
+            self.name.clone(),
+            fmt_duration(self.mean),
+            format!("±{}", fmt_duration(self.std)),
+            fmt_duration(self.min),
+            fmt_duration(self.max),
+            self.samples.to_string(),
+        ]
+    }
+}
+
+/// Measure a closure: `warmup` unrecorded runs, then `samples` timed runs.
+pub fn measure<F: FnMut()>(name: &str, warmup: usize, samples: usize, mut f: F) -> Measurement {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut s = Summary::new();
+    for _ in 0..samples.max(1) {
+        let t0 = Instant::now();
+        f();
+        s.push(t0.elapsed().as_secs_f64());
+    }
+    Measurement {
+        name: name.to_string(),
+        samples: s.count() as usize,
+        mean: Duration::from_secs_f64(s.mean()),
+        std: Duration::from_secs_f64(s.std()),
+        min: Duration::from_secs_f64(s.min()),
+        max: Duration::from_secs_f64(s.max()),
+    }
+}
+
+/// Print an aligned table with a header row.
+pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
+    println!("\n=== {title} ===");
+    let ncol = header.len();
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate().take(ncol) {
+            widths[i] = widths[i].max(cell.chars().count());
+        }
+    }
+    let fmt_row = |cells: &[String]| {
+        let mut line = String::new();
+        for (i, c) in cells.iter().enumerate().take(ncol) {
+            line.push_str(&format!("{:<width$}  ", c, width = widths[i]));
+        }
+        line.trim_end().to_string()
+    };
+    let header_cells: Vec<String> = header.iter().map(|s| s.to_string()).collect();
+    println!("{}", fmt_row(&header_cells));
+    println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * ncol));
+    for row in rows {
+        println!("{}", fmt_row(row));
+    }
+}
+
+/// CSV writer under `bench_results/`.
+pub struct CsvOut {
+    path: PathBuf,
+    file: std::fs::File,
+}
+
+impl CsvOut {
+    pub fn create(name: &str, header: &[&str]) -> std::io::Result<CsvOut> {
+        let dir = Path::new("bench_results");
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(name);
+        let mut file = std::fs::File::create(&path)?;
+        writeln!(file, "{}", header.join(","))?;
+        Ok(CsvOut { path, file })
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> std::io::Result<()> {
+        // Minimal CSV quoting: cells with commas/quotes get quoted.
+        let enc: Vec<String> = cells
+            .iter()
+            .map(|c| {
+                if c.contains(',') || c.contains('"') {
+                    format!("\"{}\"", c.replace('"', "\"\""))
+                } else {
+                    c.clone()
+                }
+            })
+            .collect();
+        writeln!(self.file, "{}", enc.join(","))
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_counts_samples() {
+        let mut n = 0;
+        let m = measure("t", 2, 5, || n += 1);
+        assert_eq!(n, 7); // 2 warmup + 5 samples
+        assert_eq!(m.samples, 5);
+        assert!(m.mean >= Duration::ZERO);
+        assert!(m.min <= m.max);
+    }
+
+    #[test]
+    fn csv_writes_and_quotes() {
+        let mut csv = CsvOut::create("test_harness.csv", &["a", "b"]).unwrap();
+        csv.row(&["x".into(), "y,z".into()]).unwrap();
+        let text = std::fs::read_to_string(csv.path()).unwrap();
+        assert!(text.contains("a,b"));
+        assert!(text.contains("x,\"y,z\""));
+        std::fs::remove_file(csv.path()).ok();
+    }
+
+    #[test]
+    fn table_prints_without_panic() {
+        print_table(
+            "t",
+            &["col1", "c2"],
+            &[vec!["a".into(), "b".into()], vec!["longer".into(), "x".into()]],
+        );
+    }
+}

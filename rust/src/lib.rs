@@ -1,0 +1,34 @@
+//! # PyramidAI
+//!
+//! Reproduction of *"Efficient Pyramidal Analysis of Gigapixel Images on a
+//! Decentralized Modest Computer Cluster"* (Reinbigler et al., 2025).
+//!
+//! The library is the L3 (rust) layer of a three-layer stack:
+//!
+//! * **L1** — Pallas kernels (`python/compile/kernels/`): conv-as-matmul,
+//!   pooling and the classifier head, lowered at build time.
+//! * **L2** — JAX TinyInception tile classifier (`python/compile/model.py`),
+//!   AOT-exported to `artifacts/*.hlo.txt`.
+//! * **L3** — this crate: the pyramidal analysis coordinator, threshold
+//!   tuning, the distributed simulator, the TCP work-stealing cluster, the
+//!   whole-slide classifier and the experiment harness.
+//!
+//! See `DESIGN.md` for the system inventory and the per-experiment index,
+//! and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod cli;
+pub mod cluster;
+pub mod experiments;
+pub mod harness;
+pub mod preprocess;
+pub mod sim;
+pub mod slide;
+pub mod synth;
+pub mod util;
+pub mod wsi;
+pub mod metrics;
+pub mod model;
+pub mod predcache;
+pub mod runtime;
+pub mod pyramid;
+pub mod tuning;

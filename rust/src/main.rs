@@ -1,0 +1,318 @@
+//! `pyramidai` — command-line entry point of the L3 coordinator.
+//!
+//! Subcommands mirror the workflow in DESIGN.md §6:
+//!
+//! ```text
+//! pyramidai gen       --out slides.json [--count 9] [--seed 2025]
+//! pyramidai predict   --slides slides.json --out cache.json [--model auto]
+//! pyramidai tune      --cache cache.json --out thresholds.json
+//!                     [--strategy empirical|metric] [--target 0.9]
+//! pyramidai analyze   --slide-seed 1 [--kind large_tumor] [--model auto]
+//!                     [--thresholds thresholds.json]
+//! pyramidai simulate  --workers 1,2,4,8,12 [--model oracle]
+//! pyramidai cluster   --workers 4 [--steal=true] [--per-tile-ms 20]
+//! pyramidai report    [--model auto] [--fast=true]
+//! ```
+
+use std::path::Path;
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use pyramidai::cli::Args;
+use pyramidai::experiments::{self, Ctx, CtxConfig, ModelKind};
+use pyramidai::harness::print_table;
+use pyramidai::metrics::retention::retention_and_speedup;
+use pyramidai::predcache::PredCache;
+use pyramidai::predcache::SlidePredictions;
+use pyramidai::pyramid::driver::{run_pyramidal, run_reference};
+use pyramidai::pyramid::tree::Thresholds;
+use pyramidai::slide::pyramid::Slide;
+use pyramidai::synth::slide_gen::{gen_slide_set, DatasetParams, SlideKind, SlideSpec};
+use pyramidai::tuning::{empirical, metric_based};
+use pyramidai::util::json::Json;
+
+fn main() {
+    let args = Args::from_env();
+    let code = match dispatch(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.subcommand.as_deref() {
+        Some("gen") => cmd_gen(args),
+        Some("predict") => cmd_predict(args),
+        Some("tune") => cmd_tune(args),
+        Some("analyze") => cmd_analyze(args),
+        Some("simulate") => cmd_simulate(args),
+        Some("cluster") => cmd_cluster(args),
+        Some("report") => cmd_report(args),
+        Some(other) => Err(anyhow!("unknown subcommand {other:?}\n{USAGE}")),
+        None => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+const USAGE: &str = "\
+pyramidai — pyramidal analysis of gigapixel images (paper reproduction)
+
+subcommands:
+  gen       generate a synthetic slide set        (--out --count --seed)
+  predict   collect predictions for a slide set   (--slides --out --model)
+  tune      tune decision thresholds from a cache (--cache --out --strategy --target)
+  analyze   pyramidal vs reference on one slide   (--slide-seed --kind --model --thresholds)
+  simulate  Fig-6 load-balancing simulation       (--workers --model)
+  cluster   run the TCP work-stealing cluster     (--workers --per-tile-ms --reps)
+  report    regenerate every paper table/figure   (--model --fast)";
+
+fn model_kind(args: &Args) -> Result<ModelKind> {
+    let s = args.str_or("model", "auto");
+    ModelKind::from_str(&s).ok_or_else(|| anyhow!("unknown --model {s:?} (oracle|pjrt|auto)"))
+}
+
+fn dataset_params(args: &Args) -> Result<DatasetParams> {
+    Ok(DatasetParams {
+        tiles_x: args.usize_or("tiles-x", 48)?,
+        tiles_y: args.usize_or("tiles-y", 32)?,
+        levels: args.usize_or("levels", 3)?,
+        tile_px: args.usize_or("tile-px", 64)?,
+    })
+}
+
+fn cmd_gen(args: &Args) -> Result<()> {
+    let out = args.require("out")?;
+    let count = args.usize_or("count", 9)?;
+    let seed = args.u64_or("seed", 2025)?;
+    let prefix = args.str_or("prefix", "slide");
+    let params = dataset_params(args)?;
+    args.finish()?;
+    let specs = gen_slide_set(&prefix, count, seed, &params);
+    let json = Json::Arr(specs.iter().map(|s| s.to_json()).collect());
+    std::fs::write(&out, json.to_pretty())?;
+    println!("wrote {count} slide specs to {out}");
+    Ok(())
+}
+
+fn load_specs(path: &str) -> Result<Vec<SlideSpec>> {
+    let v = Json::parse(&std::fs::read_to_string(path)?)?;
+    Ok(v.as_arr()?
+        .iter()
+        .map(SlideSpec::from_json)
+        .collect::<Result<Vec<_>, _>>()?)
+}
+
+fn cmd_predict(args: &Args) -> Result<()> {
+    let slides = args.require("slides")?;
+    let out = args.require("out")?;
+    let kind = model_kind(args)?;
+    let batch = args.usize_or("batch", 32)?;
+    let jobs = args.usize_or("jobs", 1)?;
+    args.finish()?;
+    let (analyzer, name) = experiments::ctx::make_analyzer(kind, 7)?;
+    let specs = load_specs(&slides)?;
+    println!("predicting {} slides ({name}, {jobs} jobs)…", specs.len());
+    let cache = PredCache::collect_set_parallel(&specs, analyzer, batch, jobs);
+    cache.save(Path::new(&out))?;
+    println!("wrote prediction cache to {out}");
+    Ok(())
+}
+
+fn cmd_tune(args: &Args) -> Result<()> {
+    let cache_path = args.require("cache")?;
+    let out = args.require("out")?;
+    let strategy = args.str_or("strategy", "empirical");
+    let target = args.f64_or("target", 0.90)?;
+    args.finish()?;
+    let cache = PredCache::load(Path::new(&cache_path))?;
+    let levels = cache
+        .slides
+        .first()
+        .ok_or_else(|| anyhow!("empty cache"))?
+        .spec
+        .levels;
+    let json = match strategy.as_str() {
+        "empirical" => {
+            let sel = empirical::select(&cache, levels, target);
+            println!(
+                "empirical: β={} thresholds={:?}",
+                sel.beta, sel.thresholds.zoom
+            );
+            sel.to_json()
+        }
+        "metric" => {
+            let sel = metric_based::select(&cache, levels, target);
+            println!(
+                "metric-based: βs={:?} thresholds={:?}",
+                sel.betas, sel.thresholds.zoom
+            );
+            sel.to_json()
+        }
+        other => return Err(anyhow!("unknown --strategy {other:?}")),
+    };
+    std::fs::write(&out, json.to_pretty())?;
+    println!("wrote thresholds to {out}");
+    Ok(())
+}
+
+fn load_thresholds(path: &str) -> Result<Thresholds> {
+    let v = Json::parse(&std::fs::read_to_string(path)?)?;
+    Ok(Thresholds::from_json(v.get("thresholds")?)?)
+}
+
+fn cmd_analyze(args: &Args) -> Result<()> {
+    let seed = args.u64_or("slide-seed", 1)?;
+    let kind_s = args.str_or("kind", "large_tumor");
+    let kind = SlideKind::from_str(&kind_s).ok_or_else(|| anyhow!("bad --kind"))?;
+    let model = model_kind(args)?;
+    let batch = args.usize_or("batch", 32)?;
+    let thr = match args.get("thresholds") {
+        Some(p) => load_thresholds(p)?,
+        None => Thresholds {
+            zoom: vec![0.5, 0.35, 0.35],
+        },
+    };
+    let params = dataset_params(args)?;
+    args.finish()?;
+
+    let (analyzer, name) = experiments::ctx::make_analyzer(model, 7)?;
+    let slide = Slide::from_spec(SlideSpec::new(
+        format!("cli_{seed}"),
+        seed,
+        params.tiles_x,
+        params.tiles_y,
+        params.levels,
+        params.tile_px,
+        kind,
+    ));
+    println!("analyzing {} with {name}…", slide.id());
+    let (pyr, t_pyr) =
+        pyramidai::util::stats::timed(|| run_pyramidal(&slide, analyzer.as_ref(), &thr, batch));
+    let (reference, t_ref) =
+        pyramidai::util::stats::timed(|| run_reference(&slide, analyzer.as_ref(), batch));
+    let preds = SlidePredictions::collect(&slide, analyzer.as_ref(), batch);
+    let m = retention_and_speedup(&preds, &pyr);
+    print_table(
+        "pyramidal vs reference",
+        &["metric", "value"],
+        &[
+            vec!["tiles (pyramid)".into(), pyr.total_analyzed().to_string()],
+            vec![
+                "tiles (reference)".into(),
+                reference.total_analyzed().to_string(),
+            ],
+            vec!["tile speedup".into(), format!("{:.2}×", m.speedup())],
+            vec![
+                "positive retention".into(),
+                format!("{:.3}", m.retention()),
+            ],
+            vec![
+                "wall (pyramid)".into(),
+                pyramidai::util::stats::fmt_duration(t_pyr),
+            ],
+            vec![
+                "wall (reference)".into(),
+                pyramidai::util::stats::fmt_duration(t_ref),
+            ],
+            vec![
+                "per-level".into(),
+                format!("{:?}", pyr.analyzed_per_level()),
+            ],
+        ],
+    );
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let workers = args.usize_list_or("workers", &[1, 2, 4, 8, 12, 16, 24])?;
+    let model = model_kind(args)?;
+    args.finish()?;
+    let ctx = Ctx::load(CtxConfig {
+        model,
+        ..Default::default()
+    })?;
+    let rows = experiments::fig6::run(&ctx, &workers)?;
+    experiments::fig6::print_report(&ctx, &rows)?;
+    Ok(())
+}
+
+fn cmd_cluster(args: &Args) -> Result<()> {
+    let workers = args.usize_list_or("workers", &[1, 2, 4, 8, 12])?;
+    let reps = args.usize_or("reps", 3)?;
+    let per_tile_ms = args.u64_or("per-tile-ms", 20)?;
+    let model = model_kind(args)?;
+    args.finish()?;
+    let ctx = Ctx::load(CtxConfig {
+        model,
+        ..Default::default()
+    })?;
+    let rows =
+        experiments::fig7::run(&ctx, &workers, reps, Duration::from_millis(per_tile_ms))?;
+    experiments::fig7::print_report(&rows)?;
+    Ok(())
+}
+
+fn cmd_report(args: &Args) -> Result<()> {
+    let model = model_kind(args)?;
+    let fast = args.bool("fast");
+    args.finish()?;
+
+    println!("# PyramidAI full report (model={model:?}, fast={fast})");
+    let ctx = Ctx::load(CtxConfig {
+        model,
+        ..Default::default()
+    })?;
+
+    // Tables 1-3
+    if experiments::ctx::artifacts_dir().join("meta.json").exists() {
+        let t12 = experiments::table12::run(!fast)?;
+        experiments::table12::print_report(&t12)?;
+    } else {
+        println!("(artifacts/ missing — skipping Tables 1-2; run `make artifacts`)");
+    }
+    let t3 = experiments::table3::run(model, if fast { 10 } else { 100 }, 16)?;
+    experiments::table3::print_report(&t3)?;
+
+    // Fig 2 heatmaps
+    let outputs = experiments::fig2::run(model)?;
+    println!("\nFig 2 heatmaps written: {outputs:?}");
+
+    // Figs 3-5
+    experiments::fig345::fig3(&ctx)?;
+    experiments::fig345::fig4(&ctx)?;
+    experiments::fig345::fig5(&ctx)?;
+
+    // Fig 6
+    let workers = if fast {
+        vec![1, 4, 12]
+    } else {
+        vec![1, 2, 4, 8, 12, 16, 24]
+    };
+    let rows = experiments::fig6::run(&ctx, &workers)?;
+    experiments::fig6::print_report(&ctx, &rows)?;
+
+    // Fig 7
+    let wlist = if fast { vec![1, 4, 12] } else { vec![1, 2, 4, 8, 12] };
+    let reps = if fast { 1 } else { 3 };
+    let rows = experiments::fig7::run(
+        &ctx,
+        &wlist,
+        reps,
+        Duration::from_millis(if fast { 5 } else { 20 }),
+    )?;
+    experiments::fig7::print_report(&rows)?;
+
+    // §4.6
+    let rows = experiments::wsi46::run(&ctx)?;
+    experiments::wsi46::print_report(&rows)?;
+
+    println!("\nCSV outputs in bench_results/");
+    Ok(())
+}

@@ -1,0 +1,6 @@
+//! Evaluation metrics: positive retention rate and speedup (the paper's
+//! two axes), plus precision/recall counts shared with the tuning code.
+
+pub mod retention;
+
+pub use retention::{retention_and_speedup, RunMetrics};

@@ -1,0 +1,152 @@
+//! Positive retention rate and speedup of a pyramidal execution, measured
+//! against the reference (highest-resolution-only) execution — §4.1:
+//!
+//! > "The final metric to preserve is the ratio of true positive tiles
+//! >  retained at the highest resolution by our pyramidal approach versus
+//! >  the ones detected by the reference execution."
+//!
+//! A *true positive tile* is a level-0 tile that is ground-truth tumoral
+//! AND classified positive by the level-0 model. The reference detects all
+//! of them (it analyzes every lineage tile at level 0); the pyramid only
+//! detects those it reaches. Speedup is the ratio of tiles analyzed.
+
+use std::collections::HashSet;
+
+use crate::predcache::SlidePredictions;
+use crate::pyramid::tree::{ExecTree, POSITIVE_THRESHOLD};
+use crate::slide::tile::TileId;
+
+/// Metrics of one pyramidal run against the reference on the same slide.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RunMetrics {
+    /// True-positive level-0 tiles detected by the reference.
+    pub ref_true_positives: usize,
+    /// Of those, how many the pyramidal execution also detected.
+    pub retained: usize,
+    /// Tiles analyzed by the pyramid (all levels).
+    pub pyramid_tiles: usize,
+    /// Tiles analyzed by the reference (level 0 lineage).
+    pub reference_tiles: usize,
+}
+
+impl RunMetrics {
+    /// Positive retention rate in [0,1]; 1.0 when the reference found
+    /// nothing (nothing to lose — matches the paper's averaging over
+    /// negative slides).
+    pub fn retention(&self) -> f64 {
+        if self.ref_true_positives == 0 {
+            1.0
+        } else {
+            self.retained as f64 / self.ref_true_positives as f64
+        }
+    }
+
+    /// Speedup = reference tiles / pyramid tiles (in analysis-block units;
+    /// Table 3 shows per-tile cost is level-independent).
+    pub fn speedup(&self) -> f64 {
+        self.reference_tiles as f64 / self.pyramid_tiles.max(1) as f64
+    }
+}
+
+/// Compute retention/speedup of a replayed (or live) pyramidal tree using
+/// the prediction cache as the reference execution record.
+pub fn retention_and_speedup(preds: &SlidePredictions, tree: &ExecTree) -> RunMetrics {
+    let thr = POSITIVE_THRESHOLD as f32;
+    // Reference true positives: every lineage level-0 tile with prob ≥ θ
+    // and ground-truth tumor.
+    let ref_tp: HashSet<TileId> = preds
+        .preds
+        .iter()
+        .filter(|(t, p)| t.level == 0 && p.prob >= thr && p.tumor)
+        .map(|(t, _)| *t)
+        .collect();
+
+    // Pyramid-detected positives at level 0.
+    let retained = tree
+        .level0()
+        .iter()
+        .filter(|n| n.prob >= thr && ref_tp.contains(&n.tile))
+        .count();
+
+    RunMetrics {
+        ref_true_positives: ref_tp.len(),
+        retained,
+        pyramid_tiles: tree.total_analyzed(),
+        reference_tiles: preds.reference_count(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::oracle::OracleAnalyzer;
+    use crate::predcache::SlidePredictions;
+    use crate::pyramid::tree::Thresholds;
+    use crate::slide::pyramid::Slide;
+    use crate::synth::slide_gen::{SlideKind, SlideSpec};
+
+    fn preds(kind: SlideKind, seed: u64) -> SlidePredictions {
+        let s = Slide::from_spec(SlideSpec::new("m", seed, 32, 16, 3, 64, kind));
+        SlidePredictions::collect(&s, &OracleAnalyzer::new(1), 16)
+    }
+
+    #[test]
+    fn pass_through_retains_everything() {
+        let p = preds(SlideKind::LargeTumor, 41);
+        let tree = p.replay(&Thresholds::pass_through(3));
+        let m = retention_and_speedup(&p, &tree);
+        assert!(m.ref_true_positives > 0, "need positives for this test");
+        assert_eq!(m.retained, m.ref_true_positives);
+        assert_eq!(m.retention(), 1.0);
+        // Pass-through analyzes MORE than the reference → speedup < 1,
+        // bounded below by 1/S(2) = 0.75.
+        assert!(m.speedup() < 1.0);
+        assert!(m.speedup() >= 0.75 - 1e-9);
+    }
+
+    #[test]
+    fn prune_all_loses_everything_but_is_fast() {
+        let p = preds(SlideKind::LargeTumor, 42);
+        let tree = p.replay(&Thresholds::uniform(3, 1.1));
+        let m = retention_and_speedup(&p, &tree);
+        assert_eq!(m.retained, 0);
+        assert_eq!(m.retention(), 0.0);
+        // Only the lowest level is analyzed → speedup = 16·n/n = 16.
+        assert!((m.speedup() - 16.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn negative_slide_has_unit_retention() {
+        let p = preds(SlideKind::Negative, 43);
+        let tree = p.replay(&Thresholds::uniform(3, 0.5));
+        let m = retention_and_speedup(&p, &tree);
+        assert_eq!(m.ref_true_positives, 0);
+        assert_eq!(m.retention(), 1.0);
+        assert!(m.speedup() > 1.0, "negative slides should be fast");
+    }
+
+    #[test]
+    fn retention_monotone_in_threshold() {
+        let p = preds(SlideKind::SmallScattered, 44);
+        let mut last_ret = f64::INFINITY;
+        for thr in [0.0, 0.25, 0.5, 0.75, 1.01] {
+            let m = retention_and_speedup(&p, &p.replay(&Thresholds::uniform(3, thr)));
+            assert!(
+                m.retention() <= last_ret + 1e-12,
+                "retention should not increase with threshold"
+            );
+            last_ret = m.retention();
+        }
+    }
+
+    #[test]
+    fn speedup_monotone_in_threshold() {
+        let p = preds(SlideKind::LargeTumor, 45);
+        let mut last = 0.0;
+        for thr in [0.0, 0.25, 0.5, 0.75, 1.01] {
+            let m = retention_and_speedup(&p, &p.replay(&Thresholds::uniform(3, thr)));
+            assert!(m.speedup() >= last - 1e-12);
+            last = m.speedup();
+        }
+    }
+}

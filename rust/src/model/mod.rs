@@ -1,0 +1,59 @@
+//! Analysis blocks A(.): tile → tumor probability.
+//!
+//! Two implementations of the [`Analyzer`] trait:
+//!
+//! * [`oracle::OracleAnalyzer`] — a calibrated synthetic model whose
+//!   per-level accuracy is tuned to the paper's Table 2 band. It needs no
+//!   XLA artifacts, so unit tests, the tuning logic and large simulator
+//!   sweeps run anywhere, fast.
+//! * [`pjrt::PjrtAnalyzer`] — the real thing: extracts tile pixels,
+//!   optionally Macenko-normalizes them, and runs the AOT-compiled
+//!   TinyInception classifier through the PJRT runtime (`crate::runtime`).
+
+pub mod oracle;
+pub mod pjrt;
+
+use std::time::Duration;
+
+use crate::slide::pyramid::Slide;
+use crate::slide::tile::TileId;
+
+/// An analysis block: predicts tumor probability for a batch of tiles of a
+/// slide at one resolution level. Implementations are `Send + Sync` so the
+/// cluster workers can share one instance.
+pub trait Analyzer: Send + Sync {
+    /// Tumor probabilities in [0,1], one per tile. All tiles must belong
+    /// to the same `level`.
+    fn analyze(&self, slide: &Slide, level: usize, tiles: &[TileId]) -> Vec<f32>;
+
+    /// Human-readable name for reports.
+    fn name(&self) -> &str;
+}
+
+/// Wraps an analyzer with a fixed per-tile delay, emulating the paper's
+/// analysis-block cost (Table 3: ≈0.33 s per tile on an i5-9500). On this
+/// single-core testbed the delay makes cluster executions latency-bound,
+/// so worker threads overlap like the paper's separate machines and the
+/// Fig. 7 scaling shape is measurable.
+pub struct DelayAnalyzer<A: Analyzer> {
+    pub inner: A,
+    pub per_tile: Duration,
+}
+
+impl<A: Analyzer> DelayAnalyzer<A> {
+    pub fn new(inner: A, per_tile: Duration) -> Self {
+        DelayAnalyzer { inner, per_tile }
+    }
+}
+
+impl<A: Analyzer> Analyzer for DelayAnalyzer<A> {
+    fn analyze(&self, slide: &Slide, level: usize, tiles: &[TileId]) -> Vec<f32> {
+        let out = self.inner.analyze(slide, level, tiles);
+        std::thread::sleep(self.per_tile * tiles.len() as u32);
+        out
+    }
+
+    fn name(&self) -> &str {
+        "delayed"
+    }
+}

@@ -1,0 +1,190 @@
+//! Calibrated synthetic analysis block.
+//!
+//! Mimics a trained per-level classifier without touching pixels: the
+//! tumor probability is a logistic function of the tile's ground-truth
+//! tumor coverage plus seeded per-(tile, level) Gaussian noise. The curve
+//! and noise are calibrated so per-level accuracies land in the paper's
+//! Table 2 band (≈0.90–0.96) with errors concentrated on low-coverage
+//! border tiles — the same place real models fail.
+//!
+//! The oracle makes the entire tuning/simulation stack testable without
+//! XLA artifacts, and mirrors the paper's own "post-mortem" methodology
+//! (§4.3): once probabilities exist, everything downstream is deterministic
+//! replay.
+
+use crate::slide::pyramid::Slide;
+use crate::slide::tile::TileId;
+use crate::synth::texture::{hash2, unit};
+
+use super::Analyzer;
+
+/// Per-level noise scale (logit units). Level 2 (lowest resolution) is the
+/// noisiest — small metastases blur away, mirroring Table 2 where the
+/// level-2 model is the weakest.
+const LOGIT_NOISE: [f64; 8] = [1.25, 1.15, 1.80, 2.0, 2.2, 2.4, 2.6, 2.8];
+/// Logistic steepness and midpoint on the sqrt-coverage axis.
+const STEEP: f64 = 7.0;
+const MID: f64 = 0.32;
+/// Coverage saturating point: tiles with ≥ this tumor fraction look
+/// "fully tumoral" to the model.
+const SAT: f64 = 0.25;
+/// Distractor confusion per level: dense benign regions read as tumor at
+/// low resolution (nucleus size is invisible once blurred), barely at
+/// full resolution. Mirrors the texture's distractor design.
+const DISTRACTOR_GAIN: [f64; 8] = [0.3, 1.2, 2.1, 2.3, 2.5, 2.7, 2.9, 3.1];
+
+#[derive(Debug, Clone)]
+pub struct OracleAnalyzer {
+    /// Model seed — analogous to training randomness; fixed per experiment.
+    pub seed: u64,
+}
+
+impl OracleAnalyzer {
+    pub fn new(seed: u64) -> Self {
+        OracleAnalyzer { seed }
+    }
+
+    /// Probability for one tile (deterministic in (slide, tile, seed)).
+    pub fn prob(&self, slide: &Slide, t: TileId) -> f32 {
+        let level = t.level as usize;
+        let q = slide.tumor_fraction(t);
+        let signal = (q / SAT).min(1.0).sqrt();
+        let d = slide.distractor_fraction(t);
+        let confusion = DISTRACTOR_GAIN[level.min(DISTRACTOR_GAIN.len() - 1)]
+            * (d / SAT).min(1.0).sqrt();
+        // Two independent normals from the tile hash (Box–Muller).
+        let h = hash2(
+            self.seed ^ (level as u64).wrapping_mul(0x9E37_79B9),
+            (t.tx as i64) ^ ((slide.spec.seed as i64) << 20),
+            t.ty as i64,
+        );
+        let u1 = unit(h).max(1e-12);
+        let u2 = unit(hash2(h, 17, 23));
+        let n = (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos();
+        let sigma = LOGIT_NOISE[level.min(LOGIT_NOISE.len() - 1)];
+        let logit = STEEP * (signal - MID) + confusion + sigma * n;
+        (1.0 / (1.0 + (-logit).exp())) as f32
+    }
+}
+
+impl Analyzer for OracleAnalyzer {
+    fn analyze(&self, slide: &Slide, level: usize, tiles: &[TileId]) -> Vec<f32> {
+        tiles
+            .iter()
+            .map(|&t| {
+                debug_assert_eq!(t.level as usize, level);
+                self.prob(slide, t)
+            })
+            .collect()
+    }
+
+    fn name(&self) -> &str {
+        "oracle"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::synth::slide_gen::{gen_slide_set, DatasetParams, SlideKind, SlideSpec};
+
+    fn accuracy_at_level(level: usize) -> f64 {
+        let analyzer = OracleAnalyzer::new(1);
+        let slides: Vec<Slide> = gen_slide_set("acc", 6, 99, &DatasetParams::default())
+            .into_iter()
+            .map(Slide::from_spec)
+            .collect();
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        for s in &slides {
+            for t in s.level_tile_ids(level) {
+                if !s.is_tissue(t) {
+                    continue; // models are trained/evaluated on tissue tiles
+                }
+                let p = analyzer.prob(s, t);
+                let pred = p >= 0.5;
+                if pred == s.is_tumor(t) {
+                    correct += 1;
+                }
+                total += 1;
+            }
+        }
+        correct as f64 / total.max(1) as f64
+    }
+
+    #[test]
+    fn per_level_accuracy_in_paper_band() {
+        // Paper Table 2 test accuracies: 0.948 / 0.958 / 0.917 — measured
+        // on *curated balanced* tile sets. This test measures in-slide
+        // accuracy (unbalanced, distractor-laden), which sits a few points
+        // lower, especially at level 2 where distractors confuse the
+        // model by design (the source of the paper's low-resolution false
+        // positives). Keep a generous band.
+        for level in 0..3 {
+            let acc = accuracy_at_level(level);
+            assert!(
+                (0.82..=0.995).contains(&acc),
+                "level {level} accuracy {acc} outside band"
+            );
+        }
+    }
+
+    #[test]
+    fn lowest_level_is_weakest() {
+        let a0 = accuracy_at_level(0);
+        let a2 = accuracy_at_level(2);
+        assert!(
+            a2 < a0 + 0.02,
+            "level-2 model should not beat level-0 materially: a0={a0} a2={a2}"
+        );
+    }
+
+    #[test]
+    fn deterministic() {
+        let spec = SlideSpec::new("d", 5, 16, 8, 3, 64, SlideKind::LargeTumor);
+        let s = Slide::from_spec(spec);
+        let a = OracleAnalyzer::new(7);
+        let t = TileId::new(1, 3, 2);
+        assert_eq!(a.prob(&s, t), a.prob(&s, t));
+        let b = OracleAnalyzer::new(8);
+        assert_ne!(a.prob(&s, t), b.prob(&s, t));
+    }
+
+    #[test]
+    fn negative_tiles_have_low_probability_mass() {
+        let s = Slide::from_spec(SlideSpec::new("n", 6, 16, 8, 3, 64, SlideKind::Negative));
+        let a = OracleAnalyzer::new(2);
+        let probs = a.analyze(&s, 0, &s.level_tile_ids(0));
+        let high = probs.iter().filter(|&&p| p >= 0.5).count();
+        let frac = high as f64 / probs.len() as f64;
+        assert!(frac < 0.15, "false-positive fraction {frac}");
+    }
+
+    #[test]
+    fn heavily_covered_tiles_have_high_probability() {
+        let s = Slide::from_spec(SlideSpec::new("p", 3, 16, 8, 3, 64, SlideKind::LargeTumor));
+        let a = OracleAnalyzer::new(2);
+        for level in 0..3 {
+            for t in s.level_tile_ids(level) {
+                if s.tumor_fraction(t) > 0.5 {
+                    assert!(
+                        a.prob(&s, t) > 0.5,
+                        "saturated tumor tile {t} got p={}",
+                        a.prob(&s, t)
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batch_matches_single() {
+        let s = Slide::from_spec(SlideSpec::new("b", 4, 16, 8, 3, 64, SlideKind::LargeTumor));
+        let a = OracleAnalyzer::new(3);
+        let tiles = s.level_tile_ids(1);
+        let batch = a.analyze(&s, 1, &tiles);
+        for (i, &t) in tiles.iter().enumerate() {
+            assert_eq!(batch[i], a.prob(&s, t));
+        }
+    }
+}

@@ -1,0 +1,72 @@
+//! PJRT-backed analysis block: extract tile pixels, optionally Macenko-
+//! normalize, run the AOT-compiled TinyInception classifier.
+//!
+//! This is the production analyzer — the L3 hot path calls straight into
+//! compiled XLA with no Python anywhere.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::preprocess::stain::macenko_normalize;
+use crate::runtime::registry::Registry;
+use crate::slide::pyramid::Slide;
+use crate::slide::tile::TileId;
+
+use super::Analyzer;
+
+pub struct PjrtAnalyzer {
+    registry: Arc<Registry>,
+    /// Apply Macenko stain normalization before inference (paper §4.1;
+    /// costs extra per-tile CPU — measured in Table 3 / §Perf).
+    pub stain_normalize: bool,
+}
+
+impl PjrtAnalyzer {
+    pub fn load(artifacts_dir: &Path) -> Result<PjrtAnalyzer> {
+        Ok(PjrtAnalyzer {
+            registry: Arc::new(Registry::load_dir(artifacts_dir)?),
+            stain_normalize: false,
+        })
+    }
+
+    pub fn with_stain_normalization(mut self, on: bool) -> Self {
+        self.stain_normalize = on;
+        self
+    }
+
+    pub fn from_registry(registry: Arc<Registry>) -> PjrtAnalyzer {
+        PjrtAnalyzer {
+            registry,
+            stain_normalize: false,
+        }
+    }
+
+    pub fn registry(&self) -> &Arc<Registry> {
+        &self.registry
+    }
+
+    /// Extract (and optionally normalize) one tile's pixels.
+    pub fn tile_pixels(&self, slide: &Slide, t: TileId) -> Vec<f32> {
+        let mut px = slide.tile_pixels(t);
+        if self.stain_normalize {
+            macenko_normalize(&mut px);
+        }
+        px
+    }
+}
+
+impl Analyzer for PjrtAnalyzer {
+    fn analyze(&self, slide: &Slide, level: usize, tiles: &[TileId]) -> Vec<f32> {
+        let pixels: Vec<Vec<f32>> = tiles.iter().map(|&t| self.tile_pixels(slide, t)).collect();
+        let refs: Vec<&[f32]> = pixels.iter().map(|p| p.as_slice()).collect();
+        self.registry
+            .infer(level, &refs)
+            .expect("PJRT inference failed")
+    }
+
+    fn name(&self) -> &str {
+        "pjrt"
+    }
+}

@@ -1,0 +1,364 @@
+//! Prediction cache: every lineage tile's probability and ground truth,
+//! for every resolution level of a slide set.
+//!
+//! This mirrors the paper's methodology (§4.3-4.5): inference runs *once*
+//! over all tiles of all levels; threshold tuning, pyramidal replay,
+//! speedup estimation and the distributed simulator are then deterministic
+//! post-mortem computations over the cached probabilities.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::model::Analyzer;
+use crate::preprocess::otsu::background_removal;
+use crate::pyramid::driver::BG_MARGIN;
+use crate::pyramid::tree::{ExecTree, Thresholds};
+use crate::slide::pyramid::Slide;
+use crate::slide::tile::TileId;
+use crate::synth::slide_gen::SlideSpec;
+use crate::util::json::{Json, JsonError};
+
+/// Cached per-tile data.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TilePred {
+    pub prob: f32,
+    /// Ground-truth tumor label at this tile's level.
+    pub tumor: bool,
+}
+
+/// All predictions for one slide.
+#[derive(Debug, Clone)]
+pub struct SlidePredictions {
+    pub spec: SlideSpec,
+    /// Lowest-level working set after background removal.
+    pub initial: Vec<TileId>,
+    /// Probability + label for every tile in the lineage of `initial`, at
+    /// every level.
+    pub preds: HashMap<TileId, TilePred>,
+}
+
+impl SlidePredictions {
+    /// Run the analyzer over the full lineage of the initial working set at
+    /// every level (pass-through execution) and record everything.
+    pub fn collect(slide: &Slide, analyzer: &dyn Analyzer, batch: usize) -> SlidePredictions {
+        let initial = background_removal(slide, BG_MARGIN).tissue_tiles;
+        let mut preds = HashMap::new();
+        let mut frontier = initial.clone();
+        let mut level = slide.lowest_level();
+        loop {
+            for chunk in frontier.chunks(batch.max(1)) {
+                let ps = analyzer.analyze(slide, level, chunk);
+                for (&tile, &prob) in chunk.iter().zip(&ps) {
+                    preds.insert(
+                        tile,
+                        TilePred {
+                            prob,
+                            tumor: slide.is_tumor(tile),
+                        },
+                    );
+                }
+            }
+            if level == 0 {
+                break;
+            }
+            frontier = frontier.iter().flat_map(|t| t.children()).collect();
+            level -= 1;
+        }
+        SlidePredictions {
+            spec: slide.spec.clone(),
+            initial,
+            preds,
+        }
+    }
+
+    /// Replay a pyramidal execution under `thresholds` (post-mortem run).
+    pub fn replay(&self, thresholds: &Thresholds) -> ExecTree {
+        crate::pyramid::driver::run_with_provider(
+            &self.spec.id,
+            self.spec.levels,
+            self.initial.clone(),
+            thresholds,
+            |_, tiles| {
+                tiles
+                    .iter()
+                    .map(|t| self.preds.get(t).expect("lineage tile cached").prob)
+                    .collect()
+            },
+        )
+    }
+
+    /// (probability, label) pairs for all cached tiles at one level — the
+    /// tuning input for that level's decision block.
+    pub fn level_pairs(&self, level: usize) -> Vec<(f32, bool)> {
+        self.preds
+            .iter()
+            .filter(|(t, _)| t.level as usize == level)
+            .map(|(_, p)| (p.prob, p.tumor))
+            .collect()
+    }
+
+    /// Level-0 lineage size = the reference execution's tile count.
+    pub fn reference_count(&self) -> usize {
+        let f2 = crate::slide::tile::SCALE_FACTOR.pow(2);
+        self.initial.len() * f2.pow(self.spec.levels as u32 - 1)
+    }
+
+    pub fn to_json(&self) -> Json {
+        // Compact encoding: per tile [level, tx, ty, prob, tumor].
+        let mut entries: Vec<(&TileId, &TilePred)> = self.preds.iter().collect();
+        entries.sort_by_key(|(t, _)| **t);
+        let preds: Vec<Json> = entries
+            .into_iter()
+            .map(|(t, p)| {
+                Json::Arr(vec![
+                    Json::Num(t.level as f64),
+                    Json::Num(t.tx as f64),
+                    Json::Num(t.ty as f64),
+                    Json::Num((p.prob as f64 * 1e6).round() / 1e6),
+                    Json::Bool(p.tumor),
+                ])
+            })
+            .collect();
+        let initial: Vec<Json> = self
+            .initial
+            .iter()
+            .map(|t| {
+                Json::Arr(vec![
+                    Json::Num(t.level as f64),
+                    Json::Num(t.tx as f64),
+                    Json::Num(t.ty as f64),
+                ])
+            })
+            .collect();
+        Json::obj()
+            .set("spec", self.spec.to_json())
+            .set("initial", Json::Arr(initial))
+            .set("preds", Json::Arr(preds))
+    }
+
+    pub fn from_json(v: &Json) -> Result<SlidePredictions, JsonError> {
+        let spec = SlideSpec::from_json(v.get("spec")?)?;
+        let initial = v
+            .get("initial")?
+            .as_arr()?
+            .iter()
+            .map(|t| {
+                let t = t.as_arr()?;
+                Ok(TileId::new(
+                    t[0].as_usize()?,
+                    t[1].as_usize()?,
+                    t[2].as_usize()?,
+                ))
+            })
+            .collect::<Result<Vec<_>, JsonError>>()?;
+        let mut preds = HashMap::new();
+        for e in v.get("preds")?.as_arr()? {
+            let e = e.as_arr()?;
+            preds.insert(
+                TileId::new(e[0].as_usize()?, e[1].as_usize()?, e[2].as_usize()?),
+                TilePred {
+                    prob: e[3].as_f64()? as f32,
+                    tumor: e[4].as_bool()?,
+                },
+            );
+        }
+        Ok(SlidePredictions {
+            spec,
+            initial,
+            preds,
+        })
+    }
+}
+
+/// A cache over a whole slide set, with file I/O.
+#[derive(Debug, Clone, Default)]
+pub struct PredCache {
+    pub slides: Vec<SlidePredictions>,
+}
+
+impl PredCache {
+    pub fn collect_set(
+        slides: &[Slide],
+        analyzer: &dyn Analyzer,
+        batch: usize,
+    ) -> PredCache {
+        PredCache {
+            slides: slides
+                .iter()
+                .map(|s| SlidePredictions::collect(s, analyzer, batch))
+                .collect(),
+        }
+    }
+
+    /// Parallel collection over a thread pool (PJRT executions are
+    /// thread-safe; useful on multi-core deployments — on this one-core
+    /// testbed it matches `collect_set`).
+    pub fn collect_set_parallel(
+        specs: &[crate::synth::slide_gen::SlideSpec],
+        analyzer: std::sync::Arc<dyn Analyzer>,
+        batch: usize,
+        jobs: usize,
+    ) -> PredCache {
+        if jobs <= 1 {
+            let slides: Vec<Slide> = specs.iter().cloned().map(Slide::from_spec).collect();
+            return Self::collect_set(&slides, analyzer.as_ref(), batch);
+        }
+        let pool = crate::util::threadpool::ThreadPool::new(jobs);
+        let slides = pool.map(specs.to_vec(), move |spec| {
+            let slide = Slide::from_spec(spec);
+            SlidePredictions::collect(&slide, analyzer.as_ref(), batch)
+        });
+        PredCache { slides }
+    }
+
+    /// Pooled (probability, label) pairs at one level across all slides.
+    pub fn level_pairs(&self, level: usize) -> Vec<(f32, bool)> {
+        self.slides
+            .iter()
+            .flat_map(|s| s.level_pairs(level))
+            .collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj().set(
+            "slides",
+            Json::Arr(self.slides.iter().map(|s| s.to_json()).collect()),
+        )
+    }
+
+    pub fn from_json(v: &Json) -> Result<PredCache, JsonError> {
+        Ok(PredCache {
+            slides: v
+                .get("slides")?
+                .as_arr()?
+                .iter()
+                .map(SlidePredictions::from_json)
+                .collect::<Result<Vec<_>, _>>()?,
+        })
+    }
+
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().to_string())
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<PredCache> {
+        let text = std::fs::read_to_string(path)?;
+        Ok(PredCache::from_json(&Json::parse(&text)?)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::oracle::OracleAnalyzer;
+    use crate::synth::slide_gen::SlideKind;
+
+    fn cache_one() -> (Slide, SlidePredictions) {
+        let s = Slide::from_spec(SlideSpec::new(
+            "pc",
+            31,
+            16,
+            8,
+            3,
+            64,
+            SlideKind::LargeTumor,
+        ));
+        let a = OracleAnalyzer::new(1);
+        let c = SlidePredictions::collect(&s, &a, 8);
+        (s, c)
+    }
+
+    #[test]
+    fn lineage_is_complete() {
+        let (_, c) = cache_one();
+        let n = c.initial.len();
+        let l2 = c.level_pairs(2).len();
+        let l1 = c.level_pairs(1).len();
+        let l0 = c.level_pairs(0).len();
+        assert_eq!(l2, n);
+        assert_eq!(l1, n * 4);
+        assert_eq!(l0, n * 16);
+        assert_eq!(c.reference_count(), n * 16);
+    }
+
+    #[test]
+    fn replay_matches_live_run() {
+        let (s, c) = cache_one();
+        let a = OracleAnalyzer::new(1);
+        let thr = Thresholds::uniform(3, 0.4);
+        let live = crate::pyramid::driver::run_pyramidal(&s, &a, &thr, 8);
+        let replayed = c.replay(&thr);
+        assert_eq!(live.analyzed_per_level(), replayed.analyzed_per_level());
+        assert_eq!(live.nodes[0], replayed.nodes[0]);
+    }
+
+    #[test]
+    fn replay_is_consistent_for_any_threshold() {
+        let (_, c) = cache_one();
+        for thr in [0.0, 0.2, 0.5, 0.8, 1.1] {
+            let t = c.replay(&Thresholds::uniform(3, thr));
+            t.check_consistency().unwrap();
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let (_, c) = cache_one();
+        let cache = PredCache {
+            slides: vec![c.clone()],
+        };
+        let parsed = PredCache::from_json(&Json::parse(&cache.to_json().to_string()).unwrap())
+            .unwrap();
+        assert_eq!(parsed.slides.len(), 1);
+        let p = &parsed.slides[0];
+        assert_eq!(p.spec, c.spec);
+        assert_eq!(p.initial, c.initial);
+        assert_eq!(p.preds.len(), c.preds.len());
+        // probabilities quantized to 1e-6 in the encoding
+        for (t, v) in &c.preds {
+            let got = p.preds[t];
+            assert!((got.prob - v.prob).abs() < 1e-5);
+            assert_eq!(got.tumor, v.tumor);
+        }
+    }
+
+    #[test]
+    fn parallel_collection_matches_serial() {
+        use crate::synth::slide_gen::{gen_slide_set, DatasetParams};
+        let specs = gen_slide_set("pp", 4, 5, &DatasetParams {
+            tiles_x: 16,
+            tiles_y: 8,
+            levels: 3,
+            tile_px: 64,
+        });
+        let analyzer: std::sync::Arc<dyn crate::model::Analyzer> =
+            std::sync::Arc::new(OracleAnalyzer::new(1));
+        let serial = {
+            let slides: Vec<Slide> = specs.iter().cloned().map(Slide::from_spec).collect();
+            PredCache::collect_set(&slides, analyzer.as_ref(), 8)
+        };
+        let parallel =
+            PredCache::collect_set_parallel(&specs, std::sync::Arc::clone(&analyzer), 8, 3);
+        assert_eq!(serial.slides.len(), parallel.slides.len());
+        for (a, b) in serial.slides.iter().zip(&parallel.slides) {
+            assert_eq!(a.spec.id, b.spec.id);
+            assert_eq!(a.preds.len(), b.preds.len());
+            for (t, p) in &a.preds {
+                assert_eq!(b.preds[t], *p, "mismatch at {t}");
+            }
+        }
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let (_, c) = cache_one();
+        let cache = PredCache { slides: vec![c] };
+        let dir = std::env::temp_dir().join(format!("pyramidai_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cache.json");
+        cache.save(&path).unwrap();
+        let loaded = PredCache::load(&path).unwrap();
+        assert_eq!(loaded.slides.len(), 1);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

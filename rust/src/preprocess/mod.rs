@@ -1,0 +1,8 @@
+//! Preprocessing substrates (substitution S5 in DESIGN.md): Otsu
+//! background removal and Macenko stain normalization, from scratch.
+
+pub mod otsu;
+pub mod stain;
+
+pub use otsu::{background_removal, otsu_threshold, BackgroundMask};
+pub use stain::macenko_normalize;

@@ -1,0 +1,360 @@
+//! Macenko stain normalization (Macenko et al., ISBI 2009), from scratch.
+//!
+//! H&E slides vary in staining; the paper normalizes every tile with the
+//! Macenko method before classification. The algorithm:
+//!
+//! 1. convert RGB to optical density `OD = −ln(I)` (I in (0,1], I₀ = 1);
+//! 2. drop near-transparent pixels (‖OD‖ < β);
+//! 3. find the top-2 eigenvectors of the OD covariance (tissue ODs live in
+//!    the 2-D plane spanned by the two stains);
+//! 4. project ODs into that plane and take the robust extreme angles
+//!    (α / 100−α percentiles) — these are the slide's stain vectors;
+//! 5. solve for per-pixel stain concentrations (2×2 least squares);
+//! 6. rescale concentrations so their 99th percentiles match a reference,
+//!    and recompose with the *reference* stain matrix.
+//!
+//! The 3×3 symmetric eigen-solver is a cyclic Jacobi iteration — no LAPACK
+//! in the vendor set.
+
+/// Reference H&E stain matrix (columns = OD vectors of hematoxylin, eosin),
+/// the standard values from the original Macenko reference implementation.
+pub const REF_STAINS: [[f64; 3]; 2] = [
+    [0.5626, 0.7201, 0.4062], // hematoxylin
+    [0.2159, 0.8012, 0.5581], // eosin
+];
+/// Reference maximum concentrations (99th percentile targets).
+pub const REF_MAX_CONC: [f64; 2] = [1.9705, 1.0308];
+
+const OD_BETA: f64 = 0.15;
+const ALPHA_PCT: f64 = 1.0;
+const EPS: f64 = 1e-6;
+
+/// Jacobi eigendecomposition of a symmetric 3×3 matrix.
+/// Returns (eigenvalues, eigenvectors as rows), sorted descending.
+pub fn eigen_sym3(m: [[f64; 3]; 3]) -> ([f64; 3], [[f64; 3]; 3]) {
+    let mut a = m;
+    let mut v = [[0.0; 3]; 3];
+    for (i, row) in v.iter_mut().enumerate() {
+        row[i] = 1.0;
+    }
+    for _sweep in 0..50 {
+        let off = a[0][1] * a[0][1] + a[0][2] * a[0][2] + a[1][2] * a[1][2];
+        if off < 1e-24 {
+            break;
+        }
+        for p in 0..2 {
+            for q in (p + 1)..3 {
+                if a[p][q].abs() < 1e-18 {
+                    continue;
+                }
+                let theta = (a[q][q] - a[p][p]) / (2.0 * a[p][q]);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // Rotate A in the (p,q) plane: A' = Jᵀ A J.
+                for k in 0..3 {
+                    let akp = a[k][p];
+                    let akq = a[k][q];
+                    a[k][p] = c * akp - s * akq;
+                    a[k][q] = s * akp + c * akq;
+                }
+                for k in 0..3 {
+                    let apk = a[p][k];
+                    let aqk = a[q][k];
+                    a[p][k] = c * apk - s * aqk;
+                    a[q][k] = s * apk + c * aqk;
+                }
+                for vk in v.iter_mut() {
+                    let vp = vk[p];
+                    let vq = vk[q];
+                    vk[p] = c * vp - s * vq;
+                    vk[q] = s * vp + c * vq;
+                }
+            }
+        }
+    }
+    // Extract eigenvalues (diagonal) and sort descending.
+    let mut pairs: Vec<(f64, [f64; 3])> = (0..3)
+        .map(|i| (a[i][i], [v[0][i], v[1][i], v[2][i]]))
+        .collect();
+    pairs.sort_by(|x, y| y.0.partial_cmp(&x.0).unwrap());
+    (
+        [pairs[0].0, pairs[1].0, pairs[2].0],
+        [pairs[0].1, pairs[1].1, pairs[2].1],
+    )
+}
+
+fn percentile(xs: &mut [f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (xs.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let w = rank - lo as f64;
+    xs[lo] * (1.0 - w) + xs[hi] * w
+}
+
+/// Estimated stain basis of one tile.
+#[derive(Debug, Clone)]
+pub struct StainBasis {
+    /// Two unit OD stain vectors (rows).
+    pub stains: [[f64; 3]; 2],
+    /// 99th-percentile concentration per stain.
+    pub max_conc: [f64; 2],
+}
+
+/// Estimate the Macenko stain basis of an RGB tile (HWC, values in (0,1]).
+/// Returns `None` when the tile has too few non-background pixels for a
+/// stable estimate (e.g. pure glass) — callers skip normalization then.
+pub fn estimate_stains(rgb: &[f32]) -> Option<StainBasis> {
+    assert_eq!(rgb.len() % 3, 0);
+    // 1-2. optical density of non-transparent pixels
+    let mut ods: Vec<[f64; 3]> = Vec::with_capacity(rgb.len() / 3);
+    for px in rgb.chunks_exact(3) {
+        let od = [
+            -((px[0] as f64).max(EPS)).ln(),
+            -((px[1] as f64).max(EPS)).ln(),
+            -((px[2] as f64).max(EPS)).ln(),
+        ];
+        let norm = (od[0] * od[0] + od[1] * od[1] + od[2] * od[2]).sqrt();
+        if norm > OD_BETA {
+            ods.push(od);
+        }
+    }
+    if ods.len() < 32 {
+        return None;
+    }
+
+    // 3. covariance (not centered — Macenko operates on raw OD) + eigen
+    let n = ods.len() as f64;
+    let mut cov = [[0.0; 3]; 3];
+    for od in &ods {
+        for i in 0..3 {
+            for j in 0..3 {
+                cov[i][j] += od[i] * od[j] / n;
+            }
+        }
+    }
+    let (_vals, vecs) = eigen_sym3(cov);
+    let (e1, e2) = (vecs[0], vecs[1]);
+
+    // 4. project and take extreme angles
+    let mut phis: Vec<f64> = ods
+        .iter()
+        .map(|od| {
+            let x = od[0] * e1[0] + od[1] * e1[1] + od[2] * e1[2];
+            let y = od[0] * e2[0] + od[1] * e2[1] + od[2] * e2[2];
+            y.atan2(x)
+        })
+        .collect();
+    let phi_lo = percentile(&mut phis, ALPHA_PCT);
+    let phi_hi = percentile(&mut phis, 100.0 - ALPHA_PCT);
+    let mk = |phi: f64| -> [f64; 3] {
+        let (s, c) = phi.sin_cos();
+        let mut v = [
+            c * e1[0] + s * e2[0],
+            c * e1[1] + s * e2[1],
+            c * e1[2] + s * e2[2],
+        ];
+        // stain OD vectors are non-negative; flip if needed, then normalize
+        if v[0] + v[1] + v[2] < 0.0 {
+            v = [-v[0], -v[1], -v[2]];
+        }
+        let norm = (v[0] * v[0] + v[1] * v[1] + v[2] * v[2]).sqrt().max(EPS);
+        [v[0] / norm, v[1] / norm, v[2] / norm]
+    };
+    let v_lo = mk(phi_lo);
+    let v_hi = mk(phi_hi);
+    // Convention: hematoxylin has the larger blue(-ish) OD component; in
+    // RGB-OD space hematoxylin is the vector with larger first component
+    // per the reference implementation's ordering heuristic.
+    let (h, e) = if v_lo[0] > v_hi[0] {
+        (v_lo, v_hi)
+    } else {
+        (v_hi, v_lo)
+    };
+    let stains = [h, e];
+
+    // 5. concentrations via 2×2 normal equations, collect 99th percentiles
+    let (mut c1s, mut c2s) = (Vec::with_capacity(ods.len()), Vec::with_capacity(ods.len()));
+    for od in &ods {
+        let (c1, c2) = solve_conc(&stains, *od);
+        c1s.push(c1);
+        c2s.push(c2);
+    }
+    let max_conc = [percentile(&mut c1s, 99.0), percentile(&mut c2s, 99.0)];
+    Some(StainBasis { stains, max_conc })
+}
+
+/// Least-squares concentrations of one OD pixel in a 2-stain basis.
+#[inline]
+fn solve_conc(stains: &[[f64; 3]; 2], od: [f64; 3]) -> (f64, f64) {
+    let s1 = stains[0];
+    let s2 = stains[1];
+    let a11 = s1[0] * s1[0] + s1[1] * s1[1] + s1[2] * s1[2];
+    let a12 = s1[0] * s2[0] + s1[1] * s2[1] + s1[2] * s2[2];
+    let a22 = s2[0] * s2[0] + s2[1] * s2[1] + s2[2] * s2[2];
+    let b1 = s1[0] * od[0] + s1[1] * od[1] + s1[2] * od[2];
+    let b2 = s2[0] * od[0] + s2[1] * od[1] + s2[2] * od[2];
+    let det = a11 * a22 - a12 * a12;
+    if det.abs() < 1e-12 {
+        return (b1 / a11.max(EPS), 0.0);
+    }
+    ((b1 * a22 - b2 * a12) / det, (a11 * b2 - a12 * b1) / det)
+}
+
+/// Normalize a tile in place to the reference stain appearance.
+/// No-op (returns false) when the stain basis cannot be estimated.
+pub fn macenko_normalize(rgb: &mut [f32]) -> bool {
+    let basis = match estimate_stains(rgb) {
+        Some(b) => b,
+        None => return false,
+    };
+    let scale = [
+        REF_MAX_CONC[0] / basis.max_conc[0].max(EPS),
+        REF_MAX_CONC[1] / basis.max_conc[1].max(EPS),
+    ];
+    for px in rgb.chunks_exact_mut(3) {
+        let od = [
+            -((px[0] as f64).max(EPS)).ln(),
+            -((px[1] as f64).max(EPS)).ln(),
+            -((px[2] as f64).max(EPS)).ln(),
+        ];
+        let (c1, c2) = solve_conc(&basis.stains, od);
+        let c1 = (c1 * scale[0]).max(0.0);
+        let c2 = (c2 * scale[1]).max(0.0);
+        for k in 0..3 {
+            let od_new = c1 * REF_STAINS[0][k] + c2 * REF_STAINS[1][k];
+            px[k] = (-od_new).exp().clamp(0.0, 1.0) as f32;
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg32;
+
+    #[test]
+    fn eigen_diagonal_matrix() {
+        let (vals, vecs) = eigen_sym3([[3.0, 0.0, 0.0], [0.0, 1.0, 0.0], [0.0, 0.0, 2.0]]);
+        assert!((vals[0] - 3.0).abs() < 1e-10);
+        assert!((vals[1] - 2.0).abs() < 1e-10);
+        assert!((vals[2] - 1.0).abs() < 1e-10);
+        assert!((vecs[0][0].abs() - 1.0).abs() < 1e-8);
+    }
+
+    #[test]
+    fn eigen_reconstructs_matrix() {
+        let m = [[4.0, 1.0, 0.5], [1.0, 3.0, 0.2], [0.5, 0.2, 2.0]];
+        let (vals, vecs) = eigen_sym3(m);
+        // Check A·v = λ·v for each pair.
+        for k in 0..3 {
+            let v = vecs[k];
+            for i in 0..3 {
+                let av: f64 = (0..3).map(|j| m[i][j] * v[j]).sum();
+                assert!(
+                    (av - vals[k] * v[i]).abs() < 1e-8,
+                    "eigpair {k} row {i}: {av} vs {}",
+                    vals[k] * v[i]
+                );
+            }
+        }
+        // Orthonormality
+        for a in 0..3 {
+            for b in 0..3 {
+                let dot: f64 = (0..3).map(|i| vecs[a][i] * vecs[b][i]).sum();
+                let want = if a == b { 1.0 } else { 0.0 };
+                assert!((dot - want).abs() < 1e-8);
+            }
+        }
+    }
+
+    /// Build a synthetic two-stain image: I = exp(-(c1·S1 + c2·S2)).
+    fn synth_stained(n: usize, s1: [f64; 3], s2: [f64; 3], seed: u64) -> Vec<f32> {
+        let mut rng = Pcg32::new(seed);
+        let mut img = Vec::with_capacity(n * 3);
+        for _ in 0..n {
+            let c1 = rng.f64_range(0.05, 1.5);
+            let c2 = rng.f64_range(0.05, 0.9);
+            for k in 0..3 {
+                let od = c1 * s1[k] + c2 * s2[k];
+                img.push((-od).exp() as f32);
+            }
+        }
+        img
+    }
+
+    #[test]
+    fn recovers_stain_plane_of_synthetic_image() {
+        let s1 = REF_STAINS[0];
+        let s2 = REF_STAINS[1];
+        let img = synth_stained(4096, s1, s2, 7);
+        let basis = estimate_stains(&img).expect("basis");
+        // Each estimated stain must lie (almost) in span{s1, s2}: residual
+        // of projecting onto the true plane should be tiny.
+        let cross = [
+            s1[1] * s2[2] - s1[2] * s2[1],
+            s1[2] * s2[0] - s1[0] * s2[2],
+            s1[0] * s2[1] - s1[1] * s2[0],
+        ];
+        let nrm = (cross[0] * cross[0] + cross[1] * cross[1] + cross[2] * cross[2]).sqrt();
+        for st in &basis.stains {
+            let out_of_plane =
+                (st[0] * cross[0] + st[1] * cross[1] + st[2] * cross[2]).abs() / nrm;
+            assert!(out_of_plane < 0.05, "out-of-plane {out_of_plane}");
+        }
+    }
+
+    #[test]
+    fn normalization_standardizes_two_scans_of_same_tissue() {
+        // Same concentrations, two different stain bases ("scanners").
+        let mut rng = Pcg32::new(3);
+        let mut concs = Vec::new();
+        for _ in 0..2048 {
+            concs.push((rng.f64_range(0.05, 1.5), rng.f64_range(0.05, 0.9)));
+        }
+        let render = |s1: [f64; 3], s2: [f64; 3]| -> Vec<f32> {
+            concs
+                .iter()
+                .flat_map(|&(c1, c2)| {
+                    (0..3).map(move |k| (-(c1 * s1[k] + c2 * s2[k])).exp() as f32)
+                })
+                .collect()
+        };
+        let norm = |v: [f64; 3]| {
+            let n = (v[0] * v[0] + v[1] * v[1] + v[2] * v[2]).sqrt();
+            [v[0] / n, v[1] / n, v[2] / n]
+        };
+        let mut a = render(REF_STAINS[0], REF_STAINS[1]);
+        let mut b = render(norm([0.65, 0.70, 0.29]), norm([0.27, 0.68, 0.68]));
+        assert!(macenko_normalize(&mut a));
+        assert!(macenko_normalize(&mut b));
+        // After normalization both scans should look alike.
+        let diff: f64 = a
+            .iter()
+            .zip(&b)
+            .map(|(x, y)| ((x - y) as f64).abs())
+            .sum::<f64>()
+            / a.len() as f64;
+        assert!(diff < 0.06, "mean abs diff after normalization: {diff}");
+    }
+
+    #[test]
+    fn background_tile_is_skipped() {
+        let mut img = vec![0.97f32; 64 * 64 * 3];
+        assert!(!macenko_normalize(&mut img));
+        assert!(img.iter().all(|&v| v == 0.97));
+    }
+
+    #[test]
+    fn output_stays_in_unit_range() {
+        let img0 = synth_stained(1024, REF_STAINS[0], REF_STAINS[1], 11);
+        let mut img = img0;
+        macenko_normalize(&mut img);
+        assert!(img.iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+}

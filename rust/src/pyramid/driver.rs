@@ -1,0 +1,221 @@
+//! Single-worker pyramidal and reference drivers (§3.1 of the paper).
+//!
+//! Both are expressed over a *probability provider* so the same logic runs
+//! live (an [`Analyzer`] batching tiles through the model runtime) or
+//! post-mortem (replaying a [`crate::predcache::SlidePredictions`] under
+//! new thresholds, the paper's §4.3 methodology).
+
+use crate::model::Analyzer;
+use crate::preprocess::otsu::background_removal;
+use crate::slide::pyramid::Slide;
+use crate::slide::tile::TileId;
+
+use super::tree::{ExecNode, ExecTree, Thresholds};
+
+/// Background-removal luma margin (see `preprocess::otsu`).
+pub const BG_MARGIN: f64 = 0.02;
+
+/// Default analysis batch size (amortizes one PJRT dispatch across tiles;
+/// see EXPERIMENTS.md §Perf for the measured effect).
+pub const DEFAULT_BATCH: usize = 16;
+
+/// Run the pyramidal analysis with an arbitrary probability provider.
+/// `probs(level, tiles)` must return one probability per tile.
+pub fn run_with_provider<F>(
+    slide_id: &str,
+    levels: usize,
+    initial: Vec<TileId>,
+    thresholds: &Thresholds,
+    mut probs: F,
+) -> ExecTree
+where
+    F: FnMut(usize, &[TileId]) -> Vec<f32>,
+{
+    assert_eq!(thresholds.zoom.len(), levels, "one threshold per level");
+    let mut tree = ExecTree::new(slide_id, levels);
+    tree.initial = initial.clone();
+
+    let mut frontier = initial;
+    let mut level = levels - 1;
+    loop {
+        if frontier.is_empty() {
+            break;
+        }
+        let ps = probs(level, &frontier);
+        assert_eq!(ps.len(), frontier.len(), "provider returned wrong count");
+        let thr = thresholds.zoom[level] as f32;
+        let mut next = Vec::new();
+        for (&tile, &p) in frontier.iter().zip(&ps) {
+            let zoom = level > 0 && p >= thr;
+            tree.nodes[level].push(ExecNode { tile, prob: p, zoom });
+            if zoom {
+                next.extend(tile.children());
+            }
+        }
+        if level == 0 {
+            break;
+        }
+        frontier = next;
+        level -= 1;
+    }
+    tree
+}
+
+/// Live pyramidal run: Otsu background removal at the lowest level, then
+/// level-by-level analyze/decide/zoom with batched analyzer calls.
+pub fn run_pyramidal(
+    slide: &Slide,
+    analyzer: &dyn Analyzer,
+    thresholds: &Thresholds,
+    batch: usize,
+) -> ExecTree {
+    let initial = background_removal(slide, BG_MARGIN).tissue_tiles;
+    run_with_provider(
+        slide.id(),
+        slide.levels(),
+        initial,
+        thresholds,
+        |level, tiles| analyze_batched(slide, analyzer, level, tiles, batch),
+    )
+}
+
+/// Reference run: analyze *all* highest-resolution descendants of the
+/// initial working set (the paper's "highest resolution only" baseline).
+/// The returned tree has nodes at level 0 only; `initial` records the
+/// lowest-level working set for bookkeeping.
+pub fn run_reference(slide: &Slide, analyzer: &dyn Analyzer, batch: usize) -> ExecTree {
+    let initial = background_removal(slide, BG_MARGIN).tissue_tiles;
+    let mut tree = ExecTree::new(slide.id(), slide.levels());
+    tree.initial = initial.clone();
+    let l0: Vec<TileId> = descendants_at_level0(&initial, slide.levels());
+    let ps = analyze_batched(slide, analyzer, 0, &l0, batch);
+    tree.nodes[0] = l0
+        .into_iter()
+        .zip(ps)
+        .map(|(tile, prob)| ExecNode {
+            tile,
+            prob,
+            zoom: false,
+        })
+        .collect();
+    tree
+}
+
+/// All level-0 descendants of a set of lowest-level tiles.
+pub fn descendants_at_level0(initial: &[TileId], levels: usize) -> Vec<TileId> {
+    let mut frontier: Vec<TileId> = initial.to_vec();
+    for _ in 0..levels - 1 {
+        frontier = frontier.iter().flat_map(|t| t.children()).collect();
+    }
+    frontier
+}
+
+fn analyze_batched(
+    slide: &Slide,
+    analyzer: &dyn Analyzer,
+    level: usize,
+    tiles: &[TileId],
+    batch: usize,
+) -> Vec<f32> {
+    let batch = batch.max(1);
+    let mut out = Vec::with_capacity(tiles.len());
+    for chunk in tiles.chunks(batch) {
+        out.extend(analyzer.analyze(slide, level, chunk));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::oracle::OracleAnalyzer;
+    use crate::pyramid::tree::slowdown_bound;
+    use crate::slide::tile::SCALE_FACTOR;
+    use crate::synth::slide_gen::{SlideKind, SlideSpec};
+
+    fn slide(kind: SlideKind, seed: u64) -> Slide {
+        Slide::from_spec(SlideSpec::new("drv", seed, 32, 16, 3, 64, kind))
+    }
+
+    #[test]
+    fn pyramidal_tree_is_consistent() {
+        let s = slide(SlideKind::LargeTumor, 21);
+        let a = OracleAnalyzer::new(1);
+        let t = run_pyramidal(&s, &a, &Thresholds::uniform(3, 0.3), 8);
+        t.check_consistency().unwrap();
+        assert!(t.nodes[2].len() > 0);
+    }
+
+    #[test]
+    fn pass_through_analyzes_full_lineage() {
+        let s = slide(SlideKind::LargeTumor, 22);
+        let a = OracleAnalyzer::new(1);
+        let t = run_pyramidal(&s, &a, &Thresholds::pass_through(3), 8);
+        let n2 = t.nodes[2].len();
+        let f2 = SCALE_FACTOR * SCALE_FACTOR;
+        assert_eq!(t.nodes[1].len(), n2 * f2);
+        assert_eq!(t.nodes[0].len(), n2 * f2 * f2);
+    }
+
+    #[test]
+    fn eq1_worst_case_bound_holds() {
+        // Pass-through is the worst case: total analyzed ≤ S(f) · reference.
+        let s = slide(SlideKind::LargeTumor, 23);
+        let a = OracleAnalyzer::new(1);
+        let pyr = run_pyramidal(&s, &a, &Thresholds::pass_through(3), 8);
+        let reference = run_reference(&s, &a, 8);
+        let bound = slowdown_bound(SCALE_FACTOR);
+        let ratio = pyr.total_analyzed() as f64 / reference.total_analyzed() as f64;
+        assert!(
+            ratio <= bound + 1e-9,
+            "ratio {ratio} exceeds S(f) = {bound}"
+        );
+    }
+
+    #[test]
+    fn high_threshold_prunes_everything() {
+        let s = slide(SlideKind::Negative, 24);
+        let a = OracleAnalyzer::new(1);
+        let t = run_pyramidal(&s, &a, &Thresholds::uniform(3, 1.1), 8);
+        assert_eq!(t.nodes[1].len(), 0);
+        assert_eq!(t.nodes[0].len(), 0);
+        assert!(t.nodes[2].len() > 0, "lowest level always analyzed");
+    }
+
+    #[test]
+    fn reference_covers_initial_lineage_exactly() {
+        let s = slide(SlideKind::SmallScattered, 25);
+        let a = OracleAnalyzer::new(1);
+        let r = run_reference(&s, &a, 8);
+        let f2 = SCALE_FACTOR * SCALE_FACTOR;
+        assert_eq!(r.nodes[0].len(), r.initial.len() * f2 * f2);
+        assert_eq!(r.nodes[1].len(), 0);
+        assert_eq!(r.nodes[2].len(), 0);
+    }
+
+    #[test]
+    fn batch_size_does_not_change_result() {
+        let s = slide(SlideKind::LargeTumor, 26);
+        let a = OracleAnalyzer::new(1);
+        let t1 = run_pyramidal(&s, &a, &Thresholds::uniform(3, 0.4), 1);
+        let t16 = run_pyramidal(&s, &a, &Thresholds::uniform(3, 0.4), 16);
+        assert_eq!(t1.analyzed_per_level(), t16.analyzed_per_level());
+        assert_eq!(t1.nodes[0], t16.nodes[0]);
+    }
+
+    #[test]
+    fn provider_tree_matches_live_tree() {
+        let s = slide(SlideKind::LargeTumor, 27);
+        let a = OracleAnalyzer::new(1);
+        let thr = Thresholds::uniform(3, 0.35);
+        let live = run_pyramidal(&s, &a, &thr, 8);
+        let via_provider = run_with_provider(
+            s.id(),
+            s.levels(),
+            live.initial.clone(),
+            &thr,
+            |level, tiles| a.analyze(&s, level, tiles),
+        );
+        assert_eq!(live.nodes, via_provider.nodes);
+    }
+}

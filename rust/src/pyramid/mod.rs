@@ -1,0 +1,8 @@
+//! The pyramidal analysis core (§3.1): execution tree, thresholds and the
+//! single-worker drivers (live and post-mortem).
+
+pub mod driver;
+pub mod tree;
+
+pub use driver::{run_pyramidal, run_reference, run_with_provider, DEFAULT_BATCH};
+pub use tree::{ExecNode, ExecTree, Thresholds, POSITIVE_THRESHOLD};

@@ -1,0 +1,350 @@
+//! The pyramidal execution tree: which tiles were analyzed at which level,
+//! their probabilities, and whether each triggered a zoom-in.
+//!
+//! The tree is the exchange format between the single-worker driver, the
+//! "post-mortem" replayer, the distributed simulator and the cluster
+//! leader (workers ship their subtrees back to node 0, §5.4).
+
+use crate::slide::tile::TileId;
+use crate::util::json::{Json, JsonError};
+
+/// One analyzed tile.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ExecNode {
+    pub tile: TileId,
+    pub prob: f32,
+    /// Did the decision block trigger a zoom-in (spawn f² children)?
+    pub zoom: bool,
+}
+
+/// Execution record of one pyramidal (or reference) analysis of one slide.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ExecTree {
+    pub slide_id: String,
+    /// Number of pyramid levels.
+    pub levels: usize,
+    /// Analyzed nodes grouped by level: `nodes[level]`.
+    pub nodes: Vec<Vec<ExecNode>>,
+    /// The initial working set (lowest-level tiles after background
+    /// removal).
+    pub initial: Vec<TileId>,
+}
+
+impl ExecTree {
+    pub fn new(slide_id: impl Into<String>, levels: usize) -> ExecTree {
+        ExecTree {
+            slide_id: slide_id.into(),
+            levels,
+            nodes: vec![Vec::new(); levels],
+            initial: Vec::new(),
+        }
+    }
+
+    /// Number of tiles analyzed at each level.
+    pub fn analyzed_per_level(&self) -> Vec<usize> {
+        self.nodes.iter().map(|v| v.len()).collect()
+    }
+
+    /// Total number of tiles analyzed (the paper's cost unit — analysis
+    /// block time is ~constant across levels, Table 3).
+    pub fn total_analyzed(&self) -> usize {
+        self.nodes.iter().map(|v| v.len()).sum()
+    }
+
+    /// Tiles analyzed at the highest resolution with their probabilities.
+    pub fn level0(&self) -> &[ExecNode] {
+        &self.nodes[0]
+    }
+
+    /// Merge another tree's nodes into this one (cluster leader
+    /// reconstruction from worker subtrees). Panics on level mismatch.
+    pub fn merge(&mut self, other: &ExecTree) {
+        assert_eq!(self.levels, other.levels, "level count mismatch");
+        for (mine, theirs) in self.nodes.iter_mut().zip(&other.nodes) {
+            mine.extend_from_slice(theirs);
+        }
+        self.initial.extend_from_slice(&other.initial);
+    }
+
+    /// Structural invariant: every non-initial analyzed tile has a zoomed
+    /// parent in the tree, and no tile appears twice at a level. Used by
+    /// tests and by the cluster leader after reconstruction.
+    pub fn check_consistency(&self) -> Result<(), String> {
+        use std::collections::HashSet;
+        let initial: HashSet<TileId> = self.initial.iter().copied().collect();
+        let mut zoomed: HashSet<TileId> = HashSet::new();
+        for lvl in self.nodes.iter() {
+            for n in lvl {
+                if n.zoom {
+                    zoomed.insert(n.tile);
+                }
+            }
+        }
+        for (level, lvl_nodes) in self.nodes.iter().enumerate() {
+            let mut seen: HashSet<TileId> = HashSet::new();
+            for n in lvl_nodes {
+                if n.tile.level as usize != level {
+                    return Err(format!("node {} stored at level {level}", n.tile));
+                }
+                if !seen.insert(n.tile) {
+                    return Err(format!("duplicate node {}", n.tile));
+                }
+                let is_lowest = level == self.levels - 1;
+                if is_lowest {
+                    if !initial.contains(&n.tile) {
+                        return Err(format!("lowest-level node {} not in initial set", n.tile));
+                    }
+                } else if !zoomed.contains(&n.tile.parent()) {
+                    return Err(format!("node {} has no zoomed parent", n.tile));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let nodes: Vec<Json> = self
+            .nodes
+            .iter()
+            .map(|lvl| {
+                Json::Arr(
+                    lvl.iter()
+                        .map(|n| {
+                            Json::Arr(vec![
+                                Json::Num(n.tile.level as f64),
+                                Json::Num(n.tile.tx as f64),
+                                Json::Num(n.tile.ty as f64),
+                                Json::Num(n.prob as f64),
+                                Json::Bool(n.zoom),
+                            ])
+                        })
+                        .collect(),
+                )
+            })
+            .collect();
+        let initial: Vec<Json> = self
+            .initial
+            .iter()
+            .map(|t| {
+                Json::Arr(vec![
+                    Json::Num(t.level as f64),
+                    Json::Num(t.tx as f64),
+                    Json::Num(t.ty as f64),
+                ])
+            })
+            .collect();
+        Json::obj()
+            .set("slide_id", self.slide_id.as_str())
+            .set("levels", self.levels)
+            .set("nodes", Json::Arr(nodes))
+            .set("initial", Json::Arr(initial))
+    }
+
+    pub fn from_json(v: &Json) -> Result<ExecTree, JsonError> {
+        let levels = v.get("levels")?.as_usize()?;
+        let mut tree = ExecTree::new(v.get("slide_id")?.as_str()?, levels);
+        for (level, lvl) in v.get("nodes")?.as_arr()?.iter().enumerate() {
+            for n in lvl.as_arr()? {
+                let n = n.as_arr()?;
+                tree.nodes[level].push(ExecNode {
+                    tile: TileId::new(
+                        n[0].as_usize()?,
+                        n[1].as_usize()?,
+                        n[2].as_usize()?,
+                    ),
+                    prob: n[3].as_f64()? as f32,
+                    zoom: n[4].as_bool()?,
+                });
+            }
+        }
+        for t in v.get("initial")?.as_arr()? {
+            let t = t.as_arr()?;
+            tree.initial
+                .push(TileId::new(t[0].as_usize()?, t[1].as_usize()?, t[2].as_usize()?));
+        }
+        Ok(tree)
+    }
+}
+
+/// Per-level decision thresholds.
+///
+/// `zoom[level]` is the decision-block threshold at that level: the
+/// analysis proceeds to level-1 children iff `prob ≥ zoom[level]`
+/// (levels ≥ 1). `zoom[0]` is unused for zooming; level-0 positivity uses
+/// [`POSITIVE_THRESHOLD`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct Thresholds {
+    pub zoom: Vec<f64>,
+}
+
+/// Classification threshold at the highest resolution: a level-0 tile is
+/// "detected positive" when its probability is ≥ this. Fixed at the
+/// conventional 0.5 for both the reference and the pyramidal execution so
+/// retention compares like with like.
+pub const POSITIVE_THRESHOLD: f64 = 0.5;
+
+impl Thresholds {
+    /// Pass-through thresholds: zoom in everywhere (the degenerate pyramid
+    /// that analyzes every lineage tile — used for isolated-level studies
+    /// and worst-case bounds).
+    pub fn pass_through(levels: usize) -> Thresholds {
+        Thresholds {
+            zoom: vec![0.0; levels],
+        }
+    }
+
+    /// Uniform threshold at every level.
+    pub fn uniform(levels: usize, t: f64) -> Thresholds {
+        Thresholds {
+            zoom: vec![t; levels],
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj().set(
+            "zoom",
+            Json::Arr(self.zoom.iter().map(|&t| Json::Num(t)).collect()),
+        )
+    }
+
+    pub fn from_json(v: &Json) -> Result<Thresholds, JsonError> {
+        let zoom = v
+            .get("zoom")?
+            .as_arr()?
+            .iter()
+            .map(|x| x.as_f64())
+            .collect::<Result<Vec<f64>, _>>()?;
+        Ok(Thresholds { zoom })
+    }
+}
+
+/// Worst-case slowdown bound of Equation (1): a pyramid with scale factor
+/// `f` analyzes at most `S(f) = f²/(f²−1)` times the reference tile count.
+pub fn slowdown_bound(f: usize) -> f64 {
+    let f2 = (f * f) as f64;
+    f2 / (f2 - 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_tree() -> ExecTree {
+        let mut t = ExecTree::new("s", 3);
+        t.initial = vec![TileId::new(2, 0, 0), TileId::new(2, 1, 0)];
+        t.nodes[2] = vec![
+            ExecNode {
+                tile: TileId::new(2, 0, 0),
+                prob: 0.9,
+                zoom: true,
+            },
+            ExecNode {
+                tile: TileId::new(2, 1, 0),
+                prob: 0.1,
+                zoom: false,
+            },
+        ];
+        t.nodes[1] = TileId::new(2, 0, 0)
+            .children()
+            .into_iter()
+            .enumerate()
+            .map(|(i, c)| ExecNode {
+                tile: c,
+                prob: if i == 0 { 0.8 } else { 0.2 },
+                zoom: i == 0,
+            })
+            .collect();
+        t.nodes[0] = TileId::new(1, 0, 0)
+            .children()
+            .into_iter()
+            .map(|c| ExecNode {
+                tile: c,
+                prob: 0.7,
+                zoom: false,
+            })
+            .collect();
+        t
+    }
+
+    #[test]
+    fn counts() {
+        let t = sample_tree();
+        assert_eq!(t.analyzed_per_level(), vec![4, 4, 2]);
+        assert_eq!(t.total_analyzed(), 10);
+        assert_eq!(t.level0().len(), 4);
+    }
+
+    #[test]
+    fn consistency_ok_and_violations_detected() {
+        let t = sample_tree();
+        t.check_consistency().unwrap();
+
+        // Orphan node at level 1.
+        let mut bad = sample_tree();
+        bad.nodes[1].push(ExecNode {
+            tile: TileId::new(1, 7, 7),
+            prob: 0.5,
+            zoom: false,
+        });
+        assert!(bad.check_consistency().is_err());
+
+        // Duplicate node.
+        let mut dup = sample_tree();
+        let n = dup.nodes[2][0];
+        dup.nodes[2].push(n);
+        assert!(dup.check_consistency().is_err());
+
+        // Lowest-level node outside initial set.
+        let mut noinit = sample_tree();
+        noinit.nodes[2].push(ExecNode {
+            tile: TileId::new(2, 5, 5),
+            prob: 0.5,
+            zoom: false,
+        });
+        assert!(noinit.check_consistency().is_err());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let t = sample_tree();
+        let j = t.to_json().to_string();
+        let back = ExecTree::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(back.slide_id, t.slide_id);
+        assert_eq!(back.nodes, t.nodes);
+        assert_eq!(back.initial, t.initial);
+        back.check_consistency().unwrap();
+    }
+
+    #[test]
+    fn merge_combines_nodes() {
+        let mut a = sample_tree();
+        let b = {
+            let mut b = ExecTree::new("s", 3);
+            b.initial = vec![TileId::new(2, 2, 0)];
+            b.nodes[2].push(ExecNode {
+                tile: TileId::new(2, 2, 0),
+                prob: 0.3,
+                zoom: false,
+            });
+            b
+        };
+        a.merge(&b);
+        assert_eq!(a.analyzed_per_level(), vec![4, 4, 3]);
+        a.check_consistency().unwrap();
+    }
+
+    #[test]
+    fn eq1_bound_values() {
+        assert!((slowdown_bound(2) - 4.0 / 3.0).abs() < 1e-12);
+        assert!((slowdown_bound(3) - 9.0 / 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn thresholds_json_roundtrip() {
+        let t = Thresholds {
+            zoom: vec![0.5, 0.31, 0.22],
+        };
+        let j = t.to_json().to_string();
+        assert_eq!(Thresholds::from_json(&Json::parse(&j).unwrap()).unwrap(), t);
+    }
+}

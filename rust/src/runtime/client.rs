@@ -1,0 +1,33 @@
+//! Process-wide PJRT CPU client.
+//!
+//! One `PjRtClient` serves every executable in the process (clients are
+//! expensive: thread pools, allocator state). PJRT's C++ API is
+//! thread-safe; the rust wrapper type just isn't marked `Send`/`Sync`, so
+//! a small wrapper restores that (see `SAFETY` note).
+
+use once_cell::sync::OnceCell;
+
+pub struct SharedClient(pub xla::PjRtClient);
+
+// SAFETY: PJRT clients are documented thread-safe (the C++
+// `PjRtClient`/TFRT CPU client synchronizes internally; IFRT/PJRT users
+// share one client across threads as a matter of course). The rust `xla`
+// crate wraps a refcounted handle without declaring auto traits.
+unsafe impl Send for SharedClient {}
+unsafe impl Sync for SharedClient {}
+
+static CLIENT: OnceCell<SharedClient> = OnceCell::new();
+
+/// The process-wide CPU client (created on first use).
+pub fn client() -> anyhow::Result<&'static SharedClient> {
+    CLIENT.get_or_try_init(|| {
+        let c = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("create PJRT CPU client: {e}"))?;
+        log::info!(
+            "PJRT client: platform={} devices={}",
+            c.platform_name(),
+            c.device_count()
+        );
+        Ok(SharedClient(c))
+    })
+}

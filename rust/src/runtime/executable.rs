@@ -1,0 +1,109 @@
+//! One AOT-compiled classifier executable: load HLO text → compile on the
+//! PJRT CPU client → execute on f32 NHWC tile batches.
+//!
+//! HLO *text* is the interchange format (jax ≥ 0.5 emits 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects in proto form; the
+//! text parser reassigns ids — see /opt/xla-example/README.md).
+
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+/// A compiled classifier for one (level, batch) pair.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub level: usize,
+    pub batch: usize,
+    pub tile_px: usize,
+    /// Floats per tile (tile_px² · 3).
+    pub tile_len: usize,
+}
+
+// SAFETY: see runtime::client — PJRT executables are thread-safe to
+// execute concurrently; the wrapper type lacks the auto traits only
+// because of its raw handle field.
+unsafe impl Send for Executable {}
+unsafe impl Sync for Executable {}
+
+impl Executable {
+    /// Load and compile `classifier_l{level}_b{batch}.hlo.txt`.
+    pub fn load(path: &Path, level: usize, batch: usize, tile_px: usize) -> Result<Executable> {
+        let client = super::client::client()?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parse {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .0
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {}: {e}", path.display()))?;
+        Ok(Executable {
+            exe,
+            level,
+            batch,
+            tile_px,
+            tile_len: tile_px * tile_px * 3,
+        })
+    }
+
+    /// Run one full batch. `pixels` must hold exactly `batch` tiles in
+    /// NHWC f32 layout; returns `batch` probabilities.
+    pub fn run(&self, pixels: &[f32]) -> Result<Vec<f32>> {
+        let want = self.batch * self.tile_len;
+        if pixels.len() != want {
+            return Err(anyhow!(
+                "batch-{} executable got {} floats, want {want}",
+                self.batch,
+                pixels.len()
+            ));
+        }
+        let lit = xla::Literal::vec1(pixels)
+            .reshape(&[
+                self.batch as i64,
+                self.tile_px as i64,
+                self.tile_px as i64,
+                3,
+            ])
+            .map_err(|e| anyhow!("reshape input: {e}"))?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[lit])
+            .map_err(|e| anyhow!("execute: {e}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch output: {e}"))?;
+        // aot.py lowers with return_tuple=True → 1-tuple of (batch,) f32.
+        let probs = out
+            .to_tuple1()
+            .map_err(|e| anyhow!("untuple output: {e}"))?
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("read output: {e}"))?;
+        if probs.len() != self.batch {
+            return Err(anyhow!(
+                "executable returned {} probs, want {}",
+                probs.len(),
+                self.batch
+            ));
+        }
+        Ok(probs)
+    }
+
+    /// Convenience: artifact filename convention.
+    pub fn artifact_name(level: usize, batch: usize) -> String {
+        format!("classifier_l{level}_b{batch}.hlo.txt")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifact_naming() {
+        assert_eq!(
+            Executable::artifact_name(2, 32),
+            "classifier_l2_b32.hlo.txt"
+        );
+    }
+}

@@ -1,0 +1,9 @@
+//! PJRT runtime: load `artifacts/*.hlo.txt` (AOT-lowered by
+//! `python/compile/aot.py`), compile on the CPU PJRT client, execute from
+//! the L3 hot path. Python never runs here.
+
+pub mod client;
+pub mod executable;
+pub mod registry;
+
+pub use registry::{ArtifactsMeta, Registry};

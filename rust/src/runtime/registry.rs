@@ -1,0 +1,288 @@
+//! Executable registry: per-(level, batch) compiled classifiers plus the
+//! batching policy that maps an arbitrary tile count onto fixed-shape
+//! executables (HLO shapes are static).
+//!
+//! Policy: the registry *calibrates* at load time — it times one warm
+//! inference per batch size and records the per-tile cost — then plans an
+//! arbitrary tile count as repeated uses of the cheapest batch size plus a
+//! cost-minimal tail (padded with zero tiles whose outputs are dropped).
+//! On TPU the large batches would win (dispatch amortization); on this
+//! CPU, interpret-lowered Pallas grids favor small batches — measuring
+//! beats guessing (EXPERIMENTS.md §Perf has the numbers).
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+use super::executable::Executable;
+
+/// Metadata parsed from `artifacts/meta.json`.
+#[derive(Debug, Clone)]
+pub struct ArtifactsMeta {
+    pub tile_px: usize,
+    pub levels: usize,
+    pub batch_sizes: Vec<usize>,
+    /// Per-level (train, val, test) accuracy when the build step trained
+    /// fresh weights (Table 2 data).
+    pub accuracies: Vec<Option<(f64, f64, f64)>>,
+    pub dataset_sizes: Vec<Option<(usize, usize, usize)>>,
+}
+
+impl ArtifactsMeta {
+    pub fn load(dir: &Path) -> Result<ArtifactsMeta> {
+        let text = std::fs::read_to_string(dir.join("meta.json"))
+            .with_context(|| format!("read {}/meta.json — run `make artifacts`", dir.display()))?;
+        let v = Json::parse(&text)?;
+        let levels = v.get("levels")?.as_usize()?;
+        let mut accuracies = Vec::new();
+        let mut dataset_sizes = Vec::new();
+        for lm in v.get("levels_meta")?.as_arr()? {
+            accuracies.push(match (lm.opt("train_accuracy"), lm.opt("val_accuracy"), lm.opt("test_accuracy")) {
+                (Some(a), Some(b), Some(c)) => {
+                    Some((a.as_f64()?, b.as_f64()?, c.as_f64()?))
+                }
+                _ => None,
+            });
+            dataset_sizes.push(match (lm.opt("train_size"), lm.opt("val_size"), lm.opt("test_size")) {
+                (Some(a), Some(b), Some(c)) => {
+                    Some((a.as_usize()?, b.as_usize()?, c.as_usize()?))
+                }
+                _ => None,
+            });
+        }
+        Ok(ArtifactsMeta {
+            tile_px: v.get("tile_px")?.as_usize()?,
+            levels,
+            batch_sizes: v
+                .get("batch_sizes")?
+                .as_arr()?
+                .iter()
+                .map(|b| b.as_usize())
+                .collect::<Result<_, _>>()?,
+            accuracies,
+            dataset_sizes,
+        })
+    }
+}
+
+/// All compiled executables, indexed by level then batch (ascending).
+pub struct Registry {
+    pub meta: ArtifactsMeta,
+    /// `per_level[level]` sorted by batch size ascending.
+    per_level: Vec<Vec<Executable>>,
+    /// Calibrated per-tile cost (seconds) per batch size, parallel to the
+    /// sorted batch list. Uniform when calibration is disabled.
+    per_tile_cost: Vec<f64>,
+}
+
+impl Registry {
+    /// Load and compile every artifact in `dir`, then calibrate.
+    pub fn load_dir(dir: &Path) -> Result<Registry> {
+        let meta = ArtifactsMeta::load(dir)?;
+        let mut batches = meta.batch_sizes.clone();
+        batches.sort_unstable();
+        let mut per_level = Vec::with_capacity(meta.levels);
+        for level in 0..meta.levels {
+            let mut exes = Vec::with_capacity(batches.len());
+            for &b in &batches {
+                let path = dir.join(Executable::artifact_name(level, b));
+                exes.push(Executable::load(&path, level, b, meta.tile_px)?);
+            }
+            per_level.push(exes);
+        }
+        let mut reg = Registry {
+            meta,
+            per_level,
+            per_tile_cost: vec![1.0; batches.len()],
+        };
+        reg.calibrate()?;
+        log::info!(
+            "registry: {} levels × {:?} batch sizes, per-tile costs {:?}",
+            reg.meta.levels,
+            batches,
+            reg.per_tile_cost
+        );
+        Ok(reg)
+    }
+
+    /// Time one warm inference per batch size (level 0 — all levels share
+    /// the architecture) and record per-tile costs for the planner.
+    fn calibrate(&mut self) -> Result<()> {
+        let tl = self.tile_len();
+        for (i, exe) in self.per_level[0].iter().enumerate() {
+            let buf = vec![0.5f32; exe.batch * tl];
+            exe.run(&buf)?; // warm-up (first run may page in code)
+            let t0 = std::time::Instant::now();
+            let reps = 3;
+            for _ in 0..reps {
+                exe.run(&buf)?;
+            }
+            self.per_tile_cost[i] =
+                t0.elapsed().as_secs_f64() / (reps * exe.batch) as f64;
+        }
+        Ok(())
+    }
+
+    pub fn levels(&self) -> usize {
+        self.per_level.len()
+    }
+
+    pub fn tile_px(&self) -> usize {
+        self.meta.tile_px
+    }
+
+    /// Floats per tile.
+    pub fn tile_len(&self) -> usize {
+        self.meta.tile_px * self.meta.tile_px * 3
+    }
+
+    /// Split `n` tiles into executable chunks: (batch_size, used) pairs,
+    /// where `used ≤ batch_size` and Σ used = n. Cost-aware: full chunks
+    /// use the calibrated cheapest batch; the tail picks whichever option
+    /// (several small runs vs one padded larger run) costs least.
+    pub fn plan(&self, level: usize, n: usize) -> Vec<(usize, usize)> {
+        let sizes: Vec<usize> = self.per_level[level].iter().map(|e| e.batch).collect();
+        plan_with_costs(&sizes, &self.per_tile_cost, n)
+    }
+
+    /// Run inference on `tiles.len()` tiles at `level`. `tiles` holds each
+    /// tile's NHWC f32 pixels (each of length `tile_len()`).
+    pub fn infer(&self, level: usize, tiles: &[&[f32]]) -> Result<Vec<f32>> {
+        if level >= self.per_level.len() {
+            return Err(anyhow!("level {level} out of range"));
+        }
+        let tl = self.tile_len();
+        let mut out = Vec::with_capacity(tiles.len());
+        let mut idx = 0usize;
+        let mut buf: Vec<f32> = Vec::new();
+        for (batch, used) in self.plan(level, tiles.len()) {
+            let exe = self.per_level[level]
+                .iter()
+                .find(|e| e.batch == batch)
+                .expect("planned batch exists");
+            buf.clear();
+            buf.reserve(batch * tl);
+            for t in &tiles[idx..idx + used] {
+                if t.len() != tl {
+                    return Err(anyhow!("tile has {} floats, want {tl}", t.len()));
+                }
+                buf.extend_from_slice(t);
+            }
+            buf.resize(batch * tl, 0.0); // zero-pad unused slots
+            let probs = exe.run(&buf)?;
+            out.extend_from_slice(&probs[..used]);
+            idx += used;
+        }
+        Ok(out)
+    }
+}
+
+/// Pure planning over (sizes, per-tile costs): repeated cheapest batch for
+/// the bulk, then an exact dynamic program over the small tail (tail <
+/// cheapest batch size, so the DP domain is tiny).
+pub fn plan_with_costs(sizes: &[usize], costs: &[f64], n: usize) -> Vec<(usize, usize)> {
+    assert_eq!(sizes.len(), costs.len());
+    assert!(!sizes.is_empty());
+    let best = (0..sizes.len())
+        .min_by(|&a, &b| costs[a].partial_cmp(&costs[b]).unwrap())
+        .unwrap();
+    let mut out = Vec::new();
+    let mut left = n;
+    while left >= sizes[best] {
+        out.push((sizes[best], sizes[best]));
+        left -= sizes[best];
+    }
+    if left == 0 {
+        return out;
+    }
+    // DP: cover[j] = min cost to run exactly j more tiles; choice[j] = the
+    // batch used first. A batch b covers min(b, j) tiles (padding beyond).
+    let mut cover = vec![f64::INFINITY; left + 1];
+    let mut choice = vec![usize::MAX; left + 1];
+    cover[0] = 0.0;
+    for j in 1..=left {
+        for (i, &b) in sizes.iter().enumerate() {
+            let run_cost = costs[i] * b as f64; // full batch cost (padded or not)
+            let rest = j.saturating_sub(b);
+            let c = run_cost + cover[rest];
+            if c < cover[j] {
+                cover[j] = c;
+                choice[j] = i;
+            }
+        }
+    }
+    let mut j = left;
+    while j > 0 {
+        let i = choice[j];
+        let b = sizes[i];
+        let used = b.min(j);
+        out.push((b, used));
+        j -= used;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg32;
+    use crate::util::quickcheck::forall_explain;
+
+    #[test]
+    fn plan_covers_exactly_n_property() {
+        forall_explain(
+            11,
+            300,
+            |r: &mut Pcg32| {
+                let n = r.usize_range(0, 300);
+                let costs = [
+                    r.f64_range(0.1, 2.0),
+                    r.f64_range(0.1, 2.0),
+                    r.f64_range(0.1, 2.0),
+                ];
+                (n, costs)
+            },
+            |&(n, costs)| {
+                let sizes = [1usize, 8, 32];
+                let plan = plan_with_costs(&sizes, &costs, n);
+                let used: usize = plan.iter().map(|(_, u)| u).sum();
+                if used != n {
+                    return Err(format!("covered {used} of {n}: {plan:?}"));
+                }
+                for (b, u) in plan {
+                    if u > b || !sizes.contains(&b) {
+                        return Err("invalid chunk".into());
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn plan_prefers_cheapest_batch() {
+        // b=1 cheapest per tile → bulk should be all singles.
+        let plan = plan_with_costs(&[1, 8, 32], &[0.5, 1.0, 3.0], 20);
+        assert!(plan.iter().all(|&(b, _)| b == 1));
+        // b=32 cheapest → two chunks of 32, then tail.
+        let plan = plan_with_costs(&[1, 8, 32], &[3.0, 1.0, 0.2], 70);
+        assert_eq!(plan[0], (32, 32));
+        assert_eq!(plan[1], (32, 32));
+        let used: usize = plan.iter().map(|(_, u)| u).sum();
+        assert_eq!(used, 70);
+    }
+
+    #[test]
+    fn tail_padding_when_cheaper() {
+        // Covering 7 with expensive singles (7·1.0) vs one padded 8-run
+        // (8·0.5 = 4): padding wins.
+        let plan = plan_with_costs(&[1, 8, 32], &[1.0, 0.5, 0.5], 7);
+        assert_eq!(plan, vec![(8, 7)]);
+        // And the reverse: cheap singles beat a padded run.
+        let plan = plan_with_costs(&[1, 8, 32], &[0.1, 1.0, 1.0], 7);
+        assert!(plan.iter().all(|&(b, _)| b == 1));
+        assert_eq!(plan.len(), 7);
+    }
+}

@@ -1,0 +1,171 @@
+//! Initial data-distribution strategies for the lowest-resolution tiles
+//! (§5.1): Round-Robin, Random and Block.
+//!
+//! All three partition the same tile list (row-major over the lowest
+//! level, i.e. sorted by location) among `w` workers; they differ in who
+//! gets which tile, which matters because tumor density is spatially
+//! heterogeneous.
+
+use crate::slide::tile::TileId;
+use crate::util::prng::Pcg32;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Distribution {
+    /// Cyclic dispatch: tile i → worker i mod w.
+    RoundRobin,
+    /// Shuffle the list, then split into balanced contiguous blocks.
+    Random,
+    /// Location-sorted list split into balanced contiguous blocks — keeps
+    /// spatial neighborhoods together (the paper shows this is the worst).
+    Block,
+}
+
+impl Distribution {
+    pub const ALL: [Distribution; 3] = [
+        Distribution::RoundRobin,
+        Distribution::Random,
+        Distribution::Block,
+    ];
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Distribution::RoundRobin => "round_robin",
+            Distribution::Random => "random",
+            Distribution::Block => "block",
+        }
+    }
+
+    pub fn from_str(s: &str) -> Option<Distribution> {
+        match s {
+            "round_robin" => Some(Distribution::RoundRobin),
+            "random" => Some(Distribution::Random),
+            "block" => Some(Distribution::Block),
+            _ => None,
+        }
+    }
+
+    /// Partition `tiles` (row-major / location-sorted) among `w` workers.
+    /// Every tile is assigned to exactly one worker.
+    pub fn assign(self, tiles: &[TileId], w: usize, seed: u64) -> Vec<Vec<TileId>> {
+        assert!(w >= 1);
+        let mut out = vec![Vec::with_capacity(tiles.len() / w + 1); w];
+        match self {
+            Distribution::RoundRobin => {
+                for (i, &t) in tiles.iter().enumerate() {
+                    out[i % w].push(t);
+                }
+            }
+            Distribution::Random => {
+                let mut shuffled = tiles.to_vec();
+                Pcg32::new(seed).shuffle(&mut shuffled);
+                balanced_blocks(&shuffled, &mut out);
+            }
+            Distribution::Block => {
+                balanced_blocks(tiles, &mut out);
+            }
+        }
+        out
+    }
+}
+
+/// Split a list into `out.len()` contiguous blocks whose sizes differ by at
+/// most one.
+fn balanced_blocks(tiles: &[TileId], out: &mut [Vec<TileId>]) {
+    let w = out.len();
+    let n = tiles.len();
+    let base = n / w;
+    let extra = n % w;
+    let mut idx = 0;
+    for (k, bucket) in out.iter_mut().enumerate() {
+        let take = base + usize::from(k < extra);
+        bucket.extend_from_slice(&tiles[idx..idx + take]);
+        idx += take;
+    }
+    debug_assert_eq!(idx, n);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::forall_explain;
+
+    fn tiles(n: usize) -> Vec<TileId> {
+        (0..n).map(|i| TileId::new(2, i % 16, i / 16)).collect()
+    }
+
+    #[test]
+    fn every_tile_assigned_exactly_once_property() {
+        forall_explain(
+            7,
+            300,
+            |r| {
+                (
+                    r.usize_range(0, 200),
+                    r.usize_range(1, 24),
+                    r.next_u64(),
+                    r.usize_range(0, 3),
+                )
+            },
+            |&(n, w, seed, d)| {
+                let dist = Distribution::ALL[d];
+                let ts = tiles(n);
+                let parts = dist.assign(&ts, w, seed);
+                if parts.len() != w {
+                    return Err(format!("{} partitions, want {w}", parts.len()));
+                }
+                let mut all: Vec<TileId> = parts.iter().flatten().copied().collect();
+                all.sort();
+                let mut want = ts.clone();
+                want.sort();
+                if all != want {
+                    return Err("assignment is not a partition".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn balanced_sizes() {
+        for dist in Distribution::ALL {
+            let parts = dist.assign(&tiles(103), 12, 9);
+            let sizes: Vec<usize> = parts.iter().map(|p| p.len()).collect();
+            let min = *sizes.iter().min().unwrap();
+            let max = *sizes.iter().max().unwrap();
+            assert!(max - min <= 1, "{dist:?}: sizes {sizes:?}");
+        }
+    }
+
+    #[test]
+    fn round_robin_is_cyclic() {
+        let ts = tiles(10);
+        let parts = Distribution::RoundRobin.assign(&ts, 3, 0);
+        assert_eq!(parts[0], vec![ts[0], ts[3], ts[6], ts[9]]);
+        assert_eq!(parts[1], vec![ts[1], ts[4], ts[7]]);
+    }
+
+    #[test]
+    fn block_keeps_contiguity() {
+        let ts = tiles(12);
+        let parts = Distribution::Block.assign(&ts, 3, 0);
+        assert_eq!(parts[0], ts[0..4].to_vec());
+        assert_eq!(parts[2], ts[8..12].to_vec());
+    }
+
+    #[test]
+    fn random_is_seed_deterministic() {
+        let ts = tiles(50);
+        let a = Distribution::Random.assign(&ts, 4, 42);
+        let b = Distribution::Random.assign(&ts, 4, 42);
+        let c = Distribution::Random.assign(&ts, 4, 43);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn name_roundtrip() {
+        for d in Distribution::ALL {
+            assert_eq!(Distribution::from_str(d.as_str()), Some(d));
+        }
+    }
+}

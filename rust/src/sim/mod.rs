@@ -1,0 +1,8 @@
+//! Distributed-execution simulator (§5.1-5.3): initial data distributions
+//! × load-balancing policies over recorded pyramidal execution trees.
+
+pub mod distribution;
+pub mod engine;
+
+pub use distribution::Distribution;
+pub use engine::{simulate, Policy, SimResult};

@@ -1,0 +1,8 @@
+//! Slide pyramid model: tile identity, geometry and on-demand pixel
+//! extraction with per-tile ground truth.
+
+pub mod pyramid;
+pub mod tile;
+
+pub use pyramid::Slide;
+pub use tile::{TileId, SCALE_FACTOR};

@@ -1,0 +1,257 @@
+//! A realized slide: spec + analytic fields + texture, exposing the
+//! pyramid geometry, tile pixel extraction and per-tile ground truth.
+
+use crate::synth::field::Field;
+use crate::synth::slide_gen::SlideSpec;
+use crate::synth::texture::{Texture, TextureParams};
+
+use super::tile::{TileId, SCALE_FACTOR};
+
+/// Minimum tumor coverage for a tile to count as a (ground-truth) positive.
+pub const MIN_TUMOR_FRAC: f64 = 0.03;
+/// Minimum tissue coverage for a tile to count as tissue (non-background).
+pub const MIN_TISSUE_FRAC: f64 = 0.05;
+/// Ground-truth coverage sampling grid (n×n per tile).
+const COVERAGE_SAMPLES: usize = 8;
+
+/// A slide ready for analysis. Building one from a spec is cheap (a few
+/// dozen Gaussian blobs); pixels are produced on demand.
+pub struct Slide {
+    pub spec: SlideSpec,
+    tissue: Field,
+    tumor: Field,
+    distractor: Field,
+    params: TextureParams,
+}
+
+impl Slide {
+    pub fn from_spec(spec: SlideSpec) -> Slide {
+        spec.validate();
+        let (tissue, tumor, distractor) = spec.fields();
+        Slide {
+            spec,
+            tissue,
+            tumor,
+            distractor,
+            params: TextureParams::default(),
+        }
+    }
+
+    pub fn id(&self) -> &str {
+        &self.spec.id
+    }
+
+    pub fn levels(&self) -> usize {
+        self.spec.levels
+    }
+
+    /// The lowest-resolution level index (analysis entry point).
+    pub fn lowest_level(&self) -> usize {
+        self.spec.levels - 1
+    }
+
+    /// Tile-grid dimensions at `level`.
+    pub fn level_tiles(&self, level: usize) -> (usize, usize) {
+        assert!(level < self.spec.levels);
+        let f = SCALE_FACTOR.pow(level as u32);
+        (self.spec.tiles_x / f, self.spec.tiles_y / f)
+    }
+
+    /// Pixel dimensions of the full image at `level`.
+    pub fn level_px(&self, level: usize) -> (usize, usize) {
+        let (tx, ty) = self.level_tiles(level);
+        (tx * self.spec.tile_px, ty * self.spec.tile_px)
+    }
+
+    /// Total number of tiles at `level`.
+    pub fn tile_count(&self, level: usize) -> usize {
+        let (tx, ty) = self.level_tiles(level);
+        tx * ty
+    }
+
+    /// All tile ids at `level`, row-major.
+    pub fn level_tile_ids(&self, level: usize) -> Vec<TileId> {
+        let (nx, ny) = self.level_tiles(level);
+        let mut out = Vec::with_capacity(nx * ny);
+        for ty in 0..ny {
+            for tx in 0..nx {
+                out.push(TileId::new(level, tx, ty));
+            }
+        }
+        out
+    }
+
+    fn texture(&self) -> Texture<'_> {
+        Texture {
+            seed: self.spec.seed,
+            tissue: &self.tissue,
+            tumor: &self.tumor,
+            distractor: &self.distractor,
+            params: &self.params,
+        }
+    }
+
+    /// Extract a tile as HWC f32 RGB (len = tile_px² · 3), channels in
+    /// [0,1]. This is the L2 model's expected input layout.
+    pub fn tile_pixels(&self, t: TileId) -> Vec<f32> {
+        let level = t.level as usize;
+        let (w_px, h_px) = self.level_px(level);
+        let tp = self.spec.tile_px;
+        let tex = self.texture();
+        let mut out = Vec::with_capacity(tp * tp * 3);
+        let x0 = t.tx as usize * tp;
+        let y0 = t.ty as usize * tp;
+        for py in 0..tp {
+            for px in 0..tp {
+                let rgb = tex.pixel(level, x0 + px, y0 + py, w_px, h_px);
+                out.extend_from_slice(&rgb);
+            }
+        }
+        out
+    }
+
+    /// Normalized-coordinate bounds of a tile.
+    fn tile_bounds(&self, t: TileId) -> (f64, f64, f64, f64) {
+        let (nx, ny) = self.level_tiles(t.level as usize);
+        let u0 = t.tx as f64 / nx as f64;
+        let v0 = t.ty as f64 / ny as f64;
+        (u0, v0, u0 + 1.0 / nx as f64, v0 + 1.0 / ny as f64)
+    }
+
+    /// Ground-truth tumor coverage of a tile, in [0,1].
+    pub fn tumor_fraction(&self, t: TileId) -> f64 {
+        let (u0, v0, u1, v1) = self.tile_bounds(t);
+        self.tumor.coverage(u0, v0, u1, v1, COVERAGE_SAMPLES)
+    }
+
+    /// Ground-truth tissue coverage of a tile, in [0,1].
+    pub fn tissue_fraction(&self, t: TileId) -> f64 {
+        let (u0, v0, u1, v1) = self.tile_bounds(t);
+        self.tissue.coverage(u0, v0, u1, v1, COVERAGE_SAMPLES)
+    }
+
+    /// Ground-truth distractor (dense benign region) coverage of a tile.
+    pub fn distractor_fraction(&self, t: TileId) -> f64 {
+        let (u0, v0, u1, v1) = self.tile_bounds(t);
+        self.distractor.coverage(u0, v0, u1, v1, COVERAGE_SAMPLES)
+    }
+
+    /// Ground-truth positive label (metastasis present in the tile).
+    pub fn is_tumor(&self, t: TileId) -> bool {
+        self.tumor_fraction(t) >= MIN_TUMOR_FRAC
+    }
+
+    /// Ground-truth tissue label (tile is not background).
+    pub fn is_tissue(&self, t: TileId) -> bool {
+        self.tissue_fraction(t) >= MIN_TISSUE_FRAC
+    }
+
+    /// Mean luma of a tile sampled with `stride` (Otsu histogram input).
+    pub fn tile_mean_luma(&self, t: TileId, stride: usize) -> f64 {
+        let level = t.level as usize;
+        let (w_px, h_px) = self.level_px(level);
+        self.texture().tile_mean_luma(
+            level,
+            t.tx as usize,
+            t.ty as usize,
+            self.spec.tile_px,
+            w_px,
+            h_px,
+            stride,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::synth::slide_gen::SlideKind;
+
+    fn slide(kind: SlideKind) -> Slide {
+        Slide::from_spec(SlideSpec::new("t", 1234, 16, 8, 3, 64, kind))
+    }
+
+    #[test]
+    fn geometry() {
+        let s = slide(SlideKind::LargeTumor);
+        assert_eq!(s.level_tiles(0), (16, 8));
+        assert_eq!(s.level_tiles(1), (8, 4));
+        assert_eq!(s.level_tiles(2), (4, 2));
+        assert_eq!(s.level_px(0), (1024, 512));
+        assert_eq!(s.tile_count(2), 8);
+        assert_eq!(s.lowest_level(), 2);
+        assert_eq!(s.level_tile_ids(2).len(), 8);
+    }
+
+    #[test]
+    fn tile_pixels_shape_and_range() {
+        let s = slide(SlideKind::LargeTumor);
+        let px = s.tile_pixels(TileId::new(2, 1, 1));
+        assert_eq!(px.len(), 64 * 64 * 3);
+        assert!(px.iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+
+    #[test]
+    fn tile_pixels_deterministic() {
+        let s1 = slide(SlideKind::SmallScattered);
+        let s2 = slide(SlideKind::SmallScattered);
+        let t = TileId::new(1, 3, 2);
+        assert_eq!(s1.tile_pixels(t), s2.tile_pixels(t));
+    }
+
+    #[test]
+    fn negative_slide_has_no_tumor_tiles() {
+        let s = slide(SlideKind::Negative);
+        for level in 0..3 {
+            for t in s.level_tile_ids(level) {
+                assert_eq!(s.tumor_fraction(t), 0.0);
+                assert!(!s.is_tumor(t));
+            }
+        }
+    }
+
+    #[test]
+    fn tumor_slide_has_tumor_tiles_and_mask_nests_across_levels() {
+        let s = slide(SlideKind::LargeTumor);
+        let pos0: Vec<TileId> = s
+            .level_tile_ids(0)
+            .into_iter()
+            .filter(|&t| s.is_tumor(t))
+            .collect();
+        assert!(!pos0.is_empty(), "large-tumor slide should have positives");
+        // A positive child implies a parent with positive tumor coverage
+        // (analytic fields nest exactly; thresholds are equal per level).
+        for t in &pos0 {
+            let p = t.parent();
+            assert!(
+                s.tumor_fraction(p) > 0.0,
+                "parent {p} of positive {t} has zero coverage"
+            );
+        }
+    }
+
+    #[test]
+    fn tumor_tiles_are_tissue_tiles() {
+        let s = slide(SlideKind::LargeTumor);
+        for t in s.level_tile_ids(1) {
+            if s.is_tumor(t) {
+                assert!(s.is_tissue(t), "tumor tile {t} not tissue");
+            }
+        }
+    }
+
+    #[test]
+    fn tissue_fraction_sane() {
+        let s = slide(SlideKind::LargeTumor);
+        let total: f64 = s
+            .level_tile_ids(2)
+            .iter()
+            .map(|&t| s.tissue_fraction(t))
+            .sum::<f64>()
+            / s.tile_count(2) as f64;
+        assert!(
+            (0.05..=0.95).contains(&total),
+            "slide tissue coverage {total} outside sane band"
+        );
+    }
+}

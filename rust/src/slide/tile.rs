@@ -1,0 +1,117 @@
+//! Tile identity and the pyramid parent/child relation.
+//!
+//! Levels follow the paper's convention: `R_0` is the *highest* resolution,
+//! `R_{N-1}` the lowest. With scale factor `f = 2`, one tile at level `n`
+//! corresponds to `f² = 4` tiles of the same pixel size at level `n-1`.
+
+/// Pyramid scale factor between adjacent levels (paper: f = 2).
+pub const SCALE_FACTOR: usize = 2;
+
+/// Identifies one tile: (level, tile-x, tile-y) within the level grid.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TileId {
+    pub level: u8,
+    pub tx: u32,
+    pub ty: u32,
+}
+
+impl TileId {
+    pub fn new(level: usize, tx: usize, ty: usize) -> TileId {
+        TileId {
+            level: level as u8,
+            tx: tx as u32,
+            ty: ty as u32,
+        }
+    }
+
+    /// The f² children of this tile at the next higher resolution
+    /// (level - 1). Returns an empty vec at level 0.
+    pub fn children(&self) -> Vec<TileId> {
+        if self.level == 0 {
+            return Vec::new();
+        }
+        let f = SCALE_FACTOR as u32;
+        let mut out = Vec::with_capacity((SCALE_FACTOR * SCALE_FACTOR) as usize);
+        for dy in 0..f {
+            for dx in 0..f {
+                out.push(TileId {
+                    level: self.level - 1,
+                    tx: self.tx * f + dx,
+                    ty: self.ty * f + dy,
+                });
+            }
+        }
+        out
+    }
+
+    /// The parent tile at the next lower resolution (level + 1).
+    pub fn parent(&self) -> TileId {
+        let f = SCALE_FACTOR as u32;
+        TileId {
+            level: self.level + 1,
+            tx: self.tx / f,
+            ty: self.ty / f,
+        }
+    }
+
+    /// Flat index within a level grid of width `tiles_x`.
+    pub fn flat(&self, tiles_x: usize) -> usize {
+        self.ty as usize * tiles_x + self.tx as usize
+    }
+}
+
+impl std::fmt::Display for TileId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "L{}({},{})", self.level, self.tx, self.ty)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg32;
+    use crate::util::quickcheck::forall;
+
+    #[test]
+    fn children_of_level0_empty() {
+        assert!(TileId::new(0, 3, 4).children().is_empty());
+    }
+
+    #[test]
+    fn four_children_with_correct_coords() {
+        let t = TileId::new(2, 1, 2);
+        let c = t.children();
+        assert_eq!(c.len(), 4);
+        assert_eq!(c[0], TileId::new(1, 2, 4));
+        assert_eq!(c[3], TileId::new(1, 3, 5));
+        assert!(c.iter().all(|x| x.level == 1));
+    }
+
+    #[test]
+    fn parent_child_bijection_property() {
+        // Every child's parent is the original tile; children are distinct.
+        forall(
+            42,
+            500,
+            |r: &mut Pcg32| {
+                TileId::new(
+                    r.usize_range(1, 6),
+                    r.usize_range(0, 1000),
+                    r.usize_range(0, 1000),
+                )
+            },
+            |t| {
+                let cs = t.children();
+                let mut uniq = cs.clone();
+                uniq.sort();
+                uniq.dedup();
+                uniq.len() == cs.len() && cs.iter().all(|c| c.parent() == *t)
+            },
+        );
+    }
+
+    #[test]
+    fn flat_index_is_row_major() {
+        assert_eq!(TileId::new(0, 3, 2).flat(10), 23);
+    }
+}

@@ -1,0 +1,199 @@
+//! Analytic ground-truth fields for synthetic slides.
+//!
+//! Tissue and tumor regions are defined as *metaball* fields — sums of
+//! Gaussian blobs in normalized slide coordinates `[0,1]²`. Because the
+//! fields are analytic they can be evaluated consistently at every pyramid
+//! level, which is exactly the property the real multiresolution images
+//! have: the tumor mask at level n is the downsampled mask of level n-1.
+
+use crate::util::prng::Pcg32;
+
+/// One Gaussian blob: contributes `w · exp(-d² / (2r²))` at distance d.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Blob {
+    pub cx: f64,
+    pub cy: f64,
+    pub r: f64,
+    pub w: f64,
+}
+
+/// A sum-of-blobs scalar field with an iso-threshold of 1.0.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Field {
+    pub blobs: Vec<Blob>,
+}
+
+impl Field {
+    /// Field value at normalized coordinates (u, v).
+    pub fn value(&self, u: f64, v: f64) -> f64 {
+        let mut s = 0.0;
+        for b in &self.blobs {
+            let du = u - b.cx;
+            let dv = v - b.cy;
+            let d2 = du * du + dv * dv;
+            s += b.w * (-d2 / (2.0 * b.r * b.r)).exp();
+        }
+        s
+    }
+
+    /// Hard membership: inside the iso-surface.
+    pub fn inside(&self, u: f64, v: f64) -> bool {
+        self.value(u, v) > 1.0
+    }
+
+    /// Smooth membership in [0,1] (sigmoid around the iso-surface), used by
+    /// the texture compositor so region borders anti-alias.
+    pub fn soft(&self, u: f64, v: f64) -> f64 {
+        sigmoid((self.value(u, v) - 1.0) * 8.0)
+    }
+
+    /// Fraction of a rectangle [u0,u1]×[v0,v1] inside the iso-surface,
+    /// estimated on an `n×n` sample grid. This is the per-tile ground
+    /// truth (tumor fraction / tissue fraction).
+    pub fn coverage(&self, u0: f64, v0: f64, u1: f64, v1: f64, n: usize) -> f64 {
+        let n = n.max(1);
+        let mut hits = 0usize;
+        for j in 0..n {
+            let v = v0 + (v1 - v0) * (j as f64 + 0.5) / n as f64;
+            for i in 0..n {
+                let u = u0 + (u1 - u0) * (i as f64 + 0.5) / n as f64;
+                if self.inside(u, v) {
+                    hits += 1;
+                }
+            }
+        }
+        hits as f64 / (n * n) as f64
+    }
+
+    /// Generate `count` blobs with radii in [r_lo, r_hi], weights in
+    /// [w_lo, w_hi], centers padded away from the border by `pad`.
+    pub fn random(
+        rng: &mut Pcg32,
+        count: usize,
+        r_lo: f64,
+        r_hi: f64,
+        w_lo: f64,
+        w_hi: f64,
+        pad: f64,
+    ) -> Field {
+        let blobs = (0..count)
+            .map(|_| Blob {
+                cx: rng.f64_range(pad, 1.0 - pad),
+                cy: rng.f64_range(pad, 1.0 - pad),
+                r: rng.f64_range(r_lo, r_hi),
+                w: rng.f64_range(w_lo, w_hi),
+            })
+            .collect();
+        Field { blobs }
+    }
+
+    /// Generate blobs clustered *inside* a host field (tumors grow in
+    /// tissue): candidate centers are rejection-sampled until the host
+    /// field is above threshold there.
+    pub fn random_inside(
+        rng: &mut Pcg32,
+        host: &Field,
+        count: usize,
+        r_lo: f64,
+        r_hi: f64,
+        w_lo: f64,
+        w_hi: f64,
+    ) -> Field {
+        let mut blobs = Vec::with_capacity(count);
+        let mut attempts = 0;
+        while blobs.len() < count && attempts < count * 200 {
+            attempts += 1;
+            let cx = rng.f64_range(0.02, 0.98);
+            let cy = rng.f64_range(0.02, 0.98);
+            if host.inside(cx, cy) {
+                blobs.push(Blob {
+                    cx,
+                    cy,
+                    r: rng.f64_range(r_lo, r_hi),
+                    w: rng.f64_range(w_lo, w_hi),
+                });
+            }
+        }
+        Field { blobs }
+    }
+}
+
+#[inline]
+pub fn sigmoid(x: f64) -> f64 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_blob_geometry() {
+        let f = Field {
+            blobs: vec![Blob {
+                cx: 0.5,
+                cy: 0.5,
+                r: 0.1,
+                w: 2.0,
+            }],
+        };
+        assert!(f.inside(0.5, 0.5));
+        assert!(!f.inside(0.0, 0.0));
+        // iso-contour radius: w·exp(-d²/2r²) = 1 → d = r·sqrt(2 ln w)
+        let d_iso = 0.1 * (2.0f64 * 2.0f64.ln()).sqrt();
+        assert!(f.inside(0.5 + d_iso - 1e-3, 0.5));
+        assert!(!f.inside(0.5 + d_iso + 1e-3, 0.5));
+    }
+
+    #[test]
+    fn empty_field_is_everywhere_outside() {
+        let f = Field::default();
+        assert_eq!(f.value(0.3, 0.7), 0.0);
+        assert!(!f.inside(0.3, 0.7));
+        assert_eq!(f.coverage(0.0, 0.0, 1.0, 1.0, 8), 0.0);
+    }
+
+    #[test]
+    fn coverage_bounds_and_monotonicity() {
+        let mut rng = Pcg32::new(9);
+        let f = Field::random(&mut rng, 5, 0.05, 0.2, 1.2, 3.0, 0.1);
+        let c = f.coverage(0.0, 0.0, 1.0, 1.0, 16);
+        assert!((0.0..=1.0).contains(&c));
+        // A blob-centered small box should be fully covered.
+        let b = &f.blobs[0];
+        let eps = b.r * 0.05;
+        let c2 = f.coverage(b.cx - eps, b.cy - eps, b.cx + eps, b.cy + eps, 4);
+        assert!(c2 > 0.99, "c2={c2}");
+    }
+
+    #[test]
+    fn soft_matches_hard_far_from_border() {
+        let f = Field {
+            blobs: vec![Blob {
+                cx: 0.5,
+                cy: 0.5,
+                r: 0.15,
+                w: 4.0,
+            }],
+        };
+        assert!(f.soft(0.5, 0.5) > 0.99);
+        assert!(f.soft(0.0, 0.0) < 0.01);
+    }
+
+    #[test]
+    fn random_inside_lands_in_host() {
+        let mut rng = Pcg32::new(4);
+        let host = Field::random(&mut rng, 4, 0.15, 0.3, 1.5, 3.0, 0.2);
+        let inner = Field::random_inside(&mut rng, &host, 6, 0.01, 0.05, 1.5, 2.5);
+        for b in &inner.blobs {
+            assert!(host.inside(b.cx, b.cy));
+        }
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let f1 = Field::random(&mut Pcg32::new(5), 3, 0.1, 0.2, 1.0, 2.0, 0.1);
+        let f2 = Field::random(&mut Pcg32::new(5), 3, 0.1, 0.2, 1.0, 2.0, 0.1);
+        assert_eq!(f1, f2);
+    }
+}

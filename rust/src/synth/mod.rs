@@ -1,0 +1,11 @@
+//! Synthetic gigapixel-slide substrate (substitution S1 in DESIGN.md):
+//! analytic tissue/tumor fields, an H&E-like procedural texture, and
+//! deterministic slide/dataset specs.
+
+pub mod field;
+pub mod slide_gen;
+pub mod texture;
+
+pub use field::Field;
+pub use slide_gen::{gen_slide_set, DatasetParams, SlideKind, SlideSpec};
+pub use texture::{Texture, TextureParams};

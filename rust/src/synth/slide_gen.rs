@@ -1,0 +1,255 @@
+//! Slide specifications and dataset generation.
+//!
+//! A `SlideSpec` is a few dozen bytes: seed + geometry + tumor-burden kind.
+//! Workers rebuild the full slide procedurally from the spec, which is the
+//! repo's analogue of the paper's "data is replicated among workers" —
+//! shipping a spec replicates the whole image.
+
+use crate::util::json::{Json, JsonError};
+use crate::util::prng::Pcg32;
+
+use super::field::Field;
+
+/// Tumor burden archetypes. The paper validates on "one image with large
+/// tumors, one with several small ones, and one negative image" (§5.4);
+/// datasets here mix the three kinds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SlideKind {
+    /// No metastasis anywhere.
+    Negative,
+    /// Several small scattered metastases (hard case for retention).
+    SmallScattered,
+    /// One to three large contiguous tumors.
+    LargeTumor,
+}
+
+impl SlideKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            SlideKind::Negative => "negative",
+            SlideKind::SmallScattered => "small_scattered",
+            SlideKind::LargeTumor => "large_tumor",
+        }
+    }
+
+    pub fn from_str(s: &str) -> Option<SlideKind> {
+        match s {
+            "negative" => Some(SlideKind::Negative),
+            "small_scattered" => Some(SlideKind::SmallScattered),
+            "large_tumor" => Some(SlideKind::LargeTumor),
+            _ => None,
+        }
+    }
+}
+
+/// Geometry + identity of one synthetic whole-slide image.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SlideSpec {
+    pub id: String,
+    pub seed: u64,
+    /// Tile grid at level 0 (highest resolution). Must be divisible by
+    /// `2^(levels-1)`.
+    pub tiles_x: usize,
+    pub tiles_y: usize,
+    /// Number of pyramid levels (paper: 3, scale factor 2).
+    pub levels: usize,
+    /// Tile side in pixels (model input size).
+    pub tile_px: usize,
+    pub kind: SlideKind,
+}
+
+impl SlideSpec {
+    pub fn new(
+        id: impl Into<String>,
+        seed: u64,
+        tiles_x: usize,
+        tiles_y: usize,
+        levels: usize,
+        tile_px: usize,
+        kind: SlideKind,
+    ) -> SlideSpec {
+        let s = SlideSpec {
+            id: id.into(),
+            seed,
+            tiles_x,
+            tiles_y,
+            levels,
+            tile_px,
+            kind,
+        };
+        s.validate();
+        s
+    }
+
+    pub fn validate(&self) {
+        let div = 1usize << (self.levels - 1);
+        assert!(self.levels >= 1, "at least one level");
+        assert!(
+            self.tiles_x % div == 0 && self.tiles_y % div == 0,
+            "tile grid {}x{} not divisible by 2^(levels-1)={div}",
+            self.tiles_x,
+            self.tiles_y
+        );
+        assert!(self.tile_px >= 8);
+    }
+
+    /// Build the slide's ground-truth fields from the seed:
+    /// (tissue, tumor, distractor). Distractors are dense *benign*
+    /// regions (lymphoid aggregates and the like): every slide kind has
+    /// them, they look tumor-like at low resolution but are separable at
+    /// full resolution — the source of the low-level false positives that
+    /// make the paper's accuracy-performance trade-off non-trivial.
+    pub fn fields(&self) -> (Field, Field, Field) {
+        let mut rng = Pcg32::new(self.seed);
+        // Tissue: a handful of large blobs covering roughly half the slide.
+        let n_tissue = rng.usize_range(3, 7);
+        let tissue = Field::random(&mut rng, n_tissue, 0.14, 0.26, 1.4, 2.8, 0.18);
+        let tumor = match self.kind {
+            SlideKind::Negative => Field::default(),
+            SlideKind::SmallScattered => {
+                let n = rng.usize_range(6, 15);
+                Field::random_inside(&mut rng, &tissue, n, 0.015, 0.04, 1.4, 2.4)
+            }
+            SlideKind::LargeTumor => {
+                let n = rng.usize_range(2, 5);
+                Field::random_inside(&mut rng, &tissue, n, 0.07, 0.15, 1.6, 2.6)
+            }
+        };
+        let n_distr = rng.usize_range(4, 10);
+        let distractor = Field::random_inside(&mut rng, &tissue, n_distr, 0.02, 0.06, 1.4, 2.4);
+        (tissue, tumor, distractor)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("id", self.id.as_str())
+            .set("seed", self.seed)
+            .set("tiles_x", self.tiles_x)
+            .set("tiles_y", self.tiles_y)
+            .set("levels", self.levels)
+            .set("tile_px", self.tile_px)
+            .set("kind", self.kind.as_str())
+    }
+
+    pub fn from_json(v: &Json) -> Result<SlideSpec, JsonError> {
+        let kind_s = v.get("kind")?.as_str()?.to_string();
+        let kind = SlideKind::from_str(&kind_s).ok_or(JsonError::Type {
+            expected: "slide kind",
+            got: "string",
+        })?;
+        Ok(SlideSpec::new(
+            v.get("id")?.as_str()?,
+            v.get("seed")?.as_u64()?,
+            v.get("tiles_x")?.as_usize()?,
+            v.get("tiles_y")?.as_usize()?,
+            v.get("levels")?.as_usize()?,
+            v.get("tile_px")?.as_usize()?,
+            kind,
+        ))
+    }
+}
+
+/// Dataset geometry knobs (defaults give a CPU-friendly slide: 48×32
+/// level-0 tiles of 64 px → a 3072×2048 px "gigapixel" stand-in with the
+/// exact pyramid structure of the paper's 3-level, f=2 setup).
+#[derive(Debug, Clone)]
+pub struct DatasetParams {
+    pub tiles_x: usize,
+    pub tiles_y: usize,
+    pub levels: usize,
+    pub tile_px: usize,
+}
+
+impl Default for DatasetParams {
+    fn default() -> Self {
+        Self {
+            tiles_x: 48,
+            tiles_y: 32,
+            levels: 3,
+            tile_px: 64,
+        }
+    }
+}
+
+/// Generate a deterministic slide set. Kinds cycle
+/// LargeTumor / SmallScattered / Negative / LargeTumor / … with the ratio
+/// ~2:1 positive:negative, echoing Camelyon16's 110/160 (train) and 49/80
+/// (test) positive/negative mix; `prefix` keeps train/test ids distinct.
+pub fn gen_slide_set(
+    prefix: &str,
+    count: usize,
+    base_seed: u64,
+    params: &DatasetParams,
+) -> Vec<SlideSpec> {
+    let mut rng = Pcg32::new(base_seed);
+    (0..count)
+        .map(|i| {
+            let kind = match i % 3 {
+                0 => SlideKind::LargeTumor,
+                1 => SlideKind::SmallScattered,
+                _ => SlideKind::Negative,
+            };
+            SlideSpec::new(
+                format!("{prefix}_{i:03}"),
+                rng.next_u64(),
+                params.tiles_x,
+                params.tiles_y,
+                params.levels,
+                params.tile_px,
+                kind,
+            )
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_json_roundtrip() {
+        let s = SlideSpec::new("train_007", 42, 48, 32, 3, 64, SlideKind::SmallScattered);
+        let j = s.to_json();
+        let back = SlideSpec::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(s, back);
+    }
+
+    #[test]
+    #[should_panic(expected = "not divisible")]
+    fn invalid_grid_rejected() {
+        SlideSpec::new("x", 1, 50, 32, 3, 64, SlideKind::Negative);
+    }
+
+    #[test]
+    fn fields_deterministic_and_kind_sensitive() {
+        let mk = |kind| SlideSpec::new("s", 9, 48, 32, 3, 64, kind);
+        let (t1, u1, d1) = mk(SlideKind::LargeTumor).fields();
+        let (t2, u2, d2) = mk(SlideKind::LargeTumor).fields();
+        assert_eq!(t1, t2);
+        assert_eq!(u1, u2);
+        assert_eq!(d1, d2);
+        assert!(!d1.blobs.is_empty(), "every slide has distractors");
+        let (_, neg, _) = mk(SlideKind::Negative).fields();
+        assert!(neg.blobs.is_empty());
+        let (_, small, _) = mk(SlideKind::SmallScattered).fields();
+        assert!(!small.blobs.is_empty());
+        for b in &small.blobs {
+            assert!(b.r <= 0.04 + 1e-12);
+        }
+    }
+
+    #[test]
+    fn slide_set_ids_unique_and_kinds_cycle() {
+        let set = gen_slide_set("train", 9, 1, &DatasetParams::default());
+        assert_eq!(set.len(), 9);
+        let mut ids: Vec<&str> = set.iter().map(|s| s.id.as_str()).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 9);
+        assert_eq!(set[0].kind, SlideKind::LargeTumor);
+        assert_eq!(set[1].kind, SlideKind::SmallScattered);
+        assert_eq!(set[2].kind, SlideKind::Negative);
+        // Seeds differ per slide.
+        assert_ne!(set[0].seed, set[1].seed);
+    }
+}

@@ -1,0 +1,377 @@
+//! Procedural H&E-like texture, evaluated per pixel at any pyramid level.
+//!
+//! The texture must (a) give tumor vs normal tissue a *learnable but not
+//! trivial* appearance difference — the paper's per-level models sit at
+//! 0.90–0.96 accuracy, and the pyramidal trade-off curves only make sense
+//! in that regime — and (b) weaken at lower resolution the way real
+//! pyramids do, so the level-2 model is the weakest (paper Table 2).
+//!
+//! Ingredients, all deterministic functions of `(slide_seed, level, pixel)`:
+//!
+//! * **Regions** — analytic tissue / tumor metaball fields (`field.rs`).
+//! * **Nuclei** — Worley-style jittered lattice points in *level-0 pixel
+//!   space*; each nucleus darkens nearby pixels with a Gaussian splat.
+//!   Tumor tissue has denser, larger, darker nuclei (the real H&E cue).
+//!   At level ℓ one pixel covers 2^ℓ level-0 pixels, so splats are
+//!   convolved with the pixel footprint: radius → sqrt(r² + (2^ℓ/2)²) with
+//!   energy-preserving amplitude scaling. This reproduces the information
+//!   loss of box-downsampling without materializing level-0 pixels.
+//! * **Noise** — per-pixel hash noise so tiles are not flat.
+//!
+//! `python/compile/texture.py` mirrors these formulas (vectorized numpy)
+//! to synthesize the training corpus; the statistics match, which is all
+//! the classifier transfer needs (see DESIGN.md S1/S2 and the integration
+//! test `rust/tests/pjrt_integration.rs`).
+
+use super::field::Field;
+
+/// Stable 2-D integer hash (SplitMix64-flavored finalizers). Mirrored in
+/// `python/compile/texture.py::hash2`.
+#[inline]
+pub fn hash2(seed: u64, x: i64, y: i64) -> u64 {
+    let mut h = seed ^ 0x517c_c1b7_2722_0a95;
+    h = (h ^ (x as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+        .wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    h = (h ^ (y as u64).wrapping_mul(0x94D0_49BB_1331_11EB))
+        .wrapping_mul(0xD6E8_FEB8_6659_FD93);
+    h ^ (h >> 32)
+}
+
+/// Map a hash to f64 in [0,1).
+#[inline]
+pub fn unit(h: u64) -> f64 {
+    (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+/// Nuclei lattice cell size, in level-0 pixels.
+pub const NUCLEI_CELL_L0: f64 = 10.0;
+
+/// Parameters of the H&E-like compositor. One set is shared by all slides;
+/// variation comes from the per-slide fields and seeds.
+#[derive(Debug, Clone)]
+pub struct TextureParams {
+    /// Background (glass) base color.
+    pub bg: [f64; 3],
+    /// Normal tissue base color (eosin pink).
+    pub tissue: [f64; 3],
+    /// Tumor-region base color (denser, more hematoxylin).
+    pub tumor: [f64; 3],
+    /// Nucleus presence probability per lattice cell, normal tissue.
+    pub p_nucleus_normal: f64,
+    /// Nucleus presence probability per lattice cell, tumor tissue.
+    pub p_nucleus_tumor: f64,
+    /// Nucleus splat strength (normal / tumor).
+    pub dark_normal: f64,
+    pub dark_tumor: f64,
+    /// Per-channel darkening weights of a nucleus splat.
+    pub nucleus_tint: [f64; 3],
+    /// Amplitude of per-pixel hash noise.
+    pub noise_amp: f64,
+}
+
+impl Default for TextureParams {
+    fn default() -> Self {
+        Self {
+            bg: [0.93, 0.92, 0.94],
+            tissue: [0.86, 0.67, 0.79],
+            tumor: [0.83, 0.63, 0.77],
+            p_nucleus_normal: 0.42,
+            p_nucleus_tumor: 0.95,
+            dark_normal: 0.34,
+            dark_tumor: 0.68,
+            nucleus_tint: [0.52, 0.62, 0.38],
+            noise_amp: 0.02,
+        }
+    }
+}
+
+/// Everything needed to evaluate one slide's texture.
+pub struct Texture<'a> {
+    pub seed: u64,
+    pub tissue: &'a Field,
+    pub tumor: &'a Field,
+    /// Dense benign regions (lymphoid-aggregate stand-ins): same base
+    /// color as normal tissue, near-tumor nucleus *density* but
+    /// normal-sized nuclei — separable at full resolution, confusable
+    /// once blurring washes out nucleus size.
+    pub distractor: &'a Field,
+    pub params: &'a TextureParams,
+}
+
+impl<'a> Texture<'a> {
+    /// RGB at a given pyramid `level` for the pixel at integer coordinates
+    /// `(px, py)` in that level's pixel grid, where the full level-ℓ image
+    /// is `w_px × h_px` pixels. Returns channels in [0,1].
+    pub fn pixel(&self, level: usize, px: usize, py: usize, w_px: usize, h_px: usize) -> [f32; 3] {
+        let u = (px as f64 + 0.5) / w_px as f64;
+        let v = (py as f64 + 0.5) / h_px as f64;
+
+        let s_tissue = self.tissue.soft(u, v);
+        let s_tumor = self.tumor.soft(u, v) * s_tissue;
+        let s_distr = self.distractor.soft(u, v) * s_tissue * (1.0 - s_tumor);
+
+        // --- base color: background → tissue → tumor mix --------------
+        let p = self.params;
+        let mut rgb = [0.0f64; 3];
+        for c in 0..3 {
+            let tissue_c = p.tissue[c] * (1.0 - s_tumor) + p.tumor[c] * s_tumor;
+            rgb[c] = p.bg[c] * (1.0 - s_tissue) + tissue_c * s_tissue;
+        }
+
+        // --- nuclei splats (in level-0 pixel space) --------------------
+        let scale = (1u64 << level) as f64; // level-ℓ pixel covers `scale` L0 px
+        let x0 = (px as f64 + 0.5) * scale;
+        let y0 = (py as f64 + 0.5) * scale;
+        let dark = self.nuclei_darkening(x0, y0, scale, s_tissue, s_tumor, s_distr);
+        for c in 0..3 {
+            rgb[c] *= 1.0 - dark * p.nucleus_tint[c];
+        }
+
+        // --- pixel noise ------------------------------------------------
+        let nh = hash2(self.seed ^ 0xA5A5_0000 ^ level as u64, px as i64, py as i64);
+        for (c, v) in rgb.iter_mut().enumerate() {
+            let n = unit(hash2(nh, c as i64, 0)) - 0.5;
+            *v = (*v + n * 2.0 * p.noise_amp).clamp(0.0, 1.0);
+        }
+
+        [rgb[0] as f32, rgb[1] as f32, rgb[2] as f32]
+    }
+
+    /// Total nucleus darkening at a level-0 position `(x0, y0)`, where the
+    /// querying pixel has a footprint of `scale` level-0 pixels.
+    fn nuclei_darkening(
+        &self,
+        x0: f64,
+        y0: f64,
+        scale: f64,
+        s_tissue: f64,
+        s_tumor: f64,
+        s_distr: f64,
+    ) -> f64 {
+        if s_tissue < 0.02 {
+            return 0.0;
+        }
+        let p = self.params;
+        let cell = NUCLEI_CELL_L0;
+        let cx = (x0 / cell).floor() as i64;
+        let cy = (y0 / cell).floor() as i64;
+        // Effective splat of a nucleus with radius r, blurred by the pixel
+        // footprint (σ_px ≈ scale/2): r_eff² = r² + (scale/2)², amplitude
+        // scaled by r²/r_eff² to conserve splat energy.
+        let blur2 = (scale * 0.5) * (scale * 0.5);
+        // Downsampling destroys the high-frequency morphology real CNNs
+        // key on; attenuate nuclei contrast with the pixel footprint so
+        // lower-resolution models face a genuinely harder problem
+        // (paper Table 2: the level-2 model is the weakest).
+        let attenuation = 1.0 / (1.0 + 0.30 * (scale - 1.0));
+        // Distractors share the tumor's nucleus *density* (that is what
+        // fools a blurred view) but keep normal nucleus size/strength.
+        let dense = (s_tumor + s_distr).min(1.0);
+        let p_nucleus =
+            p.p_nucleus_normal * (1.0 - dense) + p.p_nucleus_tumor * dense;
+        let strength = (p.dark_normal * (1.0 - s_tumor - 0.45 * s_distr)
+            + p.dark_tumor * (s_tumor + 0.45 * s_distr))
+            * attenuation;
+
+        let mut dark: f64 = 0.0;
+        for dy in -1..=1i64 {
+            for dx in -1..=1i64 {
+                let gx = cx + dx;
+                let gy = cy + dy;
+                let h = hash2(self.seed ^ 0x5EED_0001, gx, gy);
+                if unit(h) >= p_nucleus {
+                    continue;
+                }
+                // Jittered nucleus center inside the cell.
+                let jx = unit(hash2(h, 1, 0));
+                let jy = unit(hash2(h, 2, 0));
+                let nx = (gx as f64 + jx) * cell;
+                let ny = (gy as f64 + jy) * cell;
+                // Radius 2.2..4.0 L0 px, tumor nuclei at the large end.
+                let r = 2.2 + 1.8 * (0.35 * unit(hash2(h, 3, 0)) + 0.65 * s_tumor);
+                let r2 = r * r;
+                let r_eff2 = r2 + blur2;
+                let d2 = (x0 - nx) * (x0 - nx) + (y0 - ny) * (y0 - ny);
+                let amp = strength * r2 / r_eff2;
+                dark += amp * (-d2 / (2.0 * r_eff2)).exp();
+            }
+        }
+        (dark * s_tissue).min(0.95)
+    }
+
+    /// Mean grayscale of a tile, cheap proxy used by tests and by the Otsu
+    /// histogram builder (luma = 0.299R+0.587G+0.114B).
+    pub fn tile_mean_luma(
+        &self,
+        level: usize,
+        tx: usize,
+        ty: usize,
+        tile_px: usize,
+        w_px: usize,
+        h_px: usize,
+        stride: usize,
+    ) -> f64 {
+        let stride = stride.max(1);
+        let mut sum = 0.0;
+        let mut n = 0usize;
+        let mut py = ty * tile_px;
+        while py < (ty + 1) * tile_px {
+            let mut px = tx * tile_px;
+            while px < (tx + 1) * tile_px {
+                let [r, g, b] = self.pixel(level, px, py, w_px, h_px);
+                sum += 0.299 * r as f64 + 0.587 * g as f64 + 0.114 * b as f64;
+                n += 1;
+                px += stride;
+            }
+            py += stride;
+        }
+        sum / n as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::synth::field::Blob;
+
+    fn fixture() -> (Field, Field, Field, TextureParams) {
+        let tissue = Field {
+            blobs: vec![Blob {
+                cx: 0.5,
+                cy: 0.5,
+                r: 0.28,
+                w: 3.0,
+            }],
+        };
+        let tumor = Field {
+            blobs: vec![Blob {
+                cx: 0.42,
+                cy: 0.42,
+                r: 0.08,
+                w: 2.0,
+            }],
+        };
+        let distractor = Field {
+            blobs: vec![Blob {
+                cx: 0.62,
+                cy: 0.42,
+                r: 0.05,
+                w: 2.0,
+            }],
+        };
+        (tissue, tumor, distractor, TextureParams::default())
+    }
+
+    #[test]
+    fn hash_is_stable_and_spread() {
+        assert_eq!(hash2(1, 2, 3), hash2(1, 2, 3));
+        assert_ne!(hash2(1, 2, 3), hash2(1, 3, 2));
+        assert_ne!(hash2(1, 2, 3), hash2(2, 2, 3));
+        // unit() in [0,1)
+        for i in 0..1000 {
+            let u = unit(hash2(7, i, -i));
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn pixels_deterministic_and_in_range() {
+        let (tissue, tumor, distractor, params) = fixture();
+        let t = Texture {
+            seed: 11,
+            tissue: &tissue,
+            tumor: &tumor,
+            distractor: &distractor,
+            params: &params,
+        };
+        let a = t.pixel(0, 100, 120, 1024, 1024);
+        let b = t.pixel(0, 100, 120, 1024, 1024);
+        assert_eq!(a, b);
+        for c in a {
+            assert!((0.0..=1.0).contains(&c));
+        }
+    }
+
+    #[test]
+    fn background_is_brighter_than_tissue_and_tumor_darker() {
+        let (tissue, tumor, distractor, params) = fixture();
+        let t = Texture {
+            seed: 3,
+            tissue: &tissue,
+            tumor: &tumor,
+            distractor: &distractor,
+            params: &params,
+        };
+        let w = 2048;
+        let mean = |cx: f64, cy: f64| {
+            // average a small patch to wash out nuclei/noise
+            let mut s = 0.0;
+            let n = 24;
+            for j in 0..n {
+                for i in 0..n {
+                    let px = (cx * w as f64) as usize + i;
+                    let py = (cy * w as f64) as usize + j;
+                    let [r, g, b] = t.pixel(0, px, py, w, w);
+                    s += (r + g + b) as f64 / 3.0;
+                }
+            }
+            s / (n * n) as f64
+        };
+        let bg = mean(0.02, 0.02);
+        let normal = mean(0.60, 0.60); // inside tissue, outside tumor
+        let tum = mean(0.42, 0.42);
+        assert!(bg > normal, "bg={bg} normal={normal}");
+        assert!(normal > tum, "normal={normal} tumor={tum}");
+    }
+
+    #[test]
+    fn tumor_contrast_shrinks_at_lower_resolution() {
+        // The level-2 model must face a harder problem than level-0
+        // (paper Table 2). Proxy: |mean(normal patch) - mean(tumor patch)|
+        // measured at level 0 vs level 2.
+        let (tissue, tumor, distractor, params) = fixture();
+        let t = Texture {
+            seed: 8,
+            tissue: &tissue,
+            tumor: &tumor,
+            distractor: &distractor,
+            params: &params,
+        };
+        let contrast = |level: usize| {
+            let w = 2048usize >> level;
+            let patch = |cx: f64, cy: f64| {
+                let mut s = 0.0;
+                let n = 16;
+                for j in 0..n {
+                    for i in 0..n {
+                        let px = (cx * w as f64) as usize + i;
+                        let py = (cy * w as f64) as usize + j;
+                        let [r, g, b] = t.pixel(level, px, py, w, w);
+                        s += (r + g + b) as f64 / 3.0;
+                    }
+                }
+                s / (n * n) as f64
+            };
+            (patch(0.60, 0.60) - patch(0.42, 0.42)).abs()
+        };
+        let c0 = contrast(0);
+        let c2 = contrast(2);
+        assert!(c2 < c0, "c0={c0} c2={c2}");
+    }
+
+    #[test]
+    fn mean_luma_separates_background_from_tissue() {
+        let (tissue, tumor, distractor, params) = fixture();
+        let t = Texture {
+            seed: 5,
+            tissue: &tissue,
+            tumor: &tumor,
+            distractor: &distractor,
+            params: &params,
+        };
+        // 16x16 tiles of 64px at level 0 → 1024px image
+        let bg_tile = t.tile_mean_luma(0, 0, 0, 64, 1024, 1024, 4);
+        let tis_tile = t.tile_mean_luma(0, 8, 8, 64, 1024, 1024, 4);
+        assert!(bg_tile > tis_tile + 0.03, "bg={bg_tile} tissue={tis_tile}");
+    }
+}

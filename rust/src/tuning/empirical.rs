@@ -1,0 +1,165 @@
+//! Empirical threshold selection (§3.2, second strategy; §4.5).
+//!
+//! One β is applied at *all* levels: each level's threshold is the argmax
+//! of F_β on that level's pooled train predictions. For each β in 1..=14
+//! the full pyramidal execution is replayed on every train slide, giving a
+//! retention-vs-speedup curve (Fig. 5) from which the user picks a single
+//! β for the desired trade-off.
+
+use crate::pyramid::tree::Thresholds;
+use crate::predcache::PredCache;
+use crate::util::json::Json;
+
+use super::fbeta::{best_threshold, BETA_RANGE};
+use super::metric_based::evaluate;
+
+/// One row of the empirical sweep — a point of Fig. 5.
+#[derive(Debug, Clone)]
+pub struct EmpiricalPoint {
+    pub beta: usize,
+    pub thresholds: Thresholds,
+    pub retention: f64,
+    pub speedup: f64,
+}
+
+/// Full β sweep (Fig. 5 series).
+pub fn sweep(cache: &PredCache, levels: usize) -> Vec<EmpiricalPoint> {
+    // Per-level pooled pairs, computed once.
+    let pairs_per_level: Vec<Vec<(f32, bool)>> =
+        (0..levels).map(|l| cache.level_pairs(l)).collect();
+    BETA_RANGE
+        .map(|beta| {
+            let mut thresholds = Thresholds::pass_through(levels);
+            for level in 1..levels {
+                thresholds.zoom[level] =
+                    best_threshold(&pairs_per_level[level], beta as f64);
+            }
+            let (retention, speedup, _) = evaluate(cache, &thresholds);
+            EmpiricalPoint {
+                beta,
+                thresholds,
+                retention,
+                speedup,
+            }
+        })
+        .collect()
+}
+
+/// Result of the empirical selection.
+#[derive(Debug, Clone)]
+pub struct EmpiricalSelection {
+    /// Minimum train retention the user asked for (e.g. 0.90 → β=8 in the
+    /// paper).
+    pub target_retention: f64,
+    pub beta: usize,
+    pub thresholds: Thresholds,
+    /// The full sweep (Fig. 5 data).
+    pub points: Vec<EmpiricalPoint>,
+}
+
+/// Pick the smallest β whose train retention meets the target (the paper
+/// picks β=8 for a 0.90 target). Falls back to the largest β.
+pub fn select(cache: &PredCache, levels: usize, target_retention: f64) -> EmpiricalSelection {
+    let points = sweep(cache, levels);
+    let chosen = points
+        .iter()
+        .find(|p| p.retention >= target_retention)
+        .or_else(|| points.last())
+        .expect("non-empty β range");
+    EmpiricalSelection {
+        target_retention,
+        beta: chosen.beta,
+        thresholds: chosen.thresholds.clone(),
+        points,
+    }
+}
+
+impl EmpiricalSelection {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("strategy", "empirical")
+            .set("target_retention", self.target_retention)
+            .set("beta", self.beta)
+            .set("thresholds", self.thresholds.to_json())
+            .set(
+                "sweep",
+                Json::Arr(
+                    self.points
+                        .iter()
+                        .map(|p| {
+                            Json::obj()
+                                .set("beta", p.beta)
+                                .set("retention", p.retention)
+                                .set("speedup", p.speedup)
+                        })
+                        .collect(),
+                ),
+            )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::oracle::OracleAnalyzer;
+    use crate::slide::pyramid::Slide;
+    use crate::synth::slide_gen::{gen_slide_set, DatasetParams};
+
+    fn train_cache(n: usize) -> PredCache {
+        let slides: Vec<Slide> = gen_slide_set("emp", n, 11, &DatasetParams::default())
+            .into_iter()
+            .map(Slide::from_spec)
+            .collect();
+        PredCache::collect_set(&slides, &OracleAnalyzer::new(1), 32)
+    }
+
+    #[test]
+    fn sweep_has_14_points_with_tradeoff_shape() {
+        let cache = train_cache(6);
+        let points = sweep(&cache, 3);
+        assert_eq!(points.len(), 14);
+        for w in points.windows(2) {
+            // retention weakly increases with β, speedup weakly decreases
+            assert!(w[1].retention >= w[0].retention - 1e-9);
+            assert!(w[1].speedup <= w[0].speedup + 1e-9);
+        }
+        // The sweep must include a genuinely fast point and a genuinely
+        // accurate point — otherwise there is no trade-off to pick.
+        assert!(points.first().unwrap().speedup > 1.2);
+        assert!(points.last().unwrap().retention > 0.9);
+    }
+
+    #[test]
+    fn select_meets_target_on_train() {
+        let cache = train_cache(9);
+        let sel = select(&cache, 3, 0.90);
+        assert!(
+            sel.points
+                .iter()
+                .find(|p| p.beta == sel.beta)
+                .unwrap()
+                .retention
+                >= 0.90
+        );
+        // Headline shape (paper: speedup 2.65 at 90% retention): demand a
+        // material speedup, not the exact constant.
+        let p = sel.points.iter().find(|p| p.beta == sel.beta).unwrap();
+        assert!(p.speedup > 1.3, "speedup {} too small", p.speedup);
+    }
+
+    #[test]
+    fn lower_target_picks_smaller_or_equal_beta() {
+        let cache = train_cache(6);
+        let lo = select(&cache, 3, 0.75);
+        let hi = select(&cache, 3, 0.95);
+        assert!(lo.beta <= hi.beta);
+    }
+
+    #[test]
+    fn json_has_sweep_rows() {
+        let cache = train_cache(3);
+        let sel = select(&cache, 3, 0.9);
+        let j = sel.to_json();
+        assert_eq!(j.get("sweep").unwrap().as_arr().unwrap().len(), 14);
+    }
+}

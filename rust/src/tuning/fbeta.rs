@@ -1,0 +1,198 @@
+//! F_β score machinery (Equation 2 of the paper) and per-level threshold
+//! selection: for a given β, the decision-block threshold is the one
+//! maximizing F_β over the collected (probability, label) pairs, searched
+//! over a finite grid of sampled thresholds.
+
+/// Confusion counts of a probability threshold over (prob, label) pairs.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Confusion {
+    pub tp: usize,
+    pub fp: usize,
+    pub fn_: usize,
+    pub tn: usize,
+}
+
+impl Confusion {
+    pub fn at_threshold(pairs: &[(f32, bool)], thr: f64) -> Confusion {
+        let mut c = Confusion::default();
+        let thr = thr as f32;
+        for &(p, y) in pairs {
+            match (p >= thr, y) {
+                (true, true) => c.tp += 1,
+                (true, false) => c.fp += 1,
+                (false, true) => c.fn_ += 1,
+                (false, false) => c.tn += 1,
+            }
+        }
+        c
+    }
+
+    pub fn precision(&self) -> f64 {
+        let denom = self.tp + self.fp;
+        if denom == 0 {
+            0.0
+        } else {
+            self.tp as f64 / denom as f64
+        }
+    }
+
+    pub fn recall(&self) -> f64 {
+        let denom = self.tp + self.fn_;
+        if denom == 0 {
+            0.0
+        } else {
+            self.tp as f64 / denom as f64
+        }
+    }
+
+    pub fn accuracy(&self) -> f64 {
+        let total = self.tp + self.fp + self.fn_ + self.tn;
+        if total == 0 {
+            0.0
+        } else {
+            (self.tp + self.tn) as f64 / total as f64
+        }
+    }
+
+    /// F_β from the counts (Equation 2, right-hand form):
+    /// `(1+β²)·TP / ((1+β²)·TP + β²·FN + FP)`.
+    pub fn fbeta(&self, beta: f64) -> f64 {
+        let b2 = beta * beta;
+        let denom = (1.0 + b2) * self.tp as f64 + b2 * self.fn_ as f64 + self.fp as f64;
+        if denom == 0.0 {
+            0.0
+        } else {
+            (1.0 + b2) * self.tp as f64 / denom
+        }
+    }
+}
+
+/// F_β from precision and recall (Equation 2, left-hand form).
+pub fn fbeta_pr(precision: f64, recall: f64, beta: f64) -> f64 {
+    let b2 = beta * beta;
+    let denom = b2 * precision + recall;
+    if denom == 0.0 {
+        0.0
+    } else {
+        (1.0 + b2) * precision * recall / denom
+    }
+}
+
+/// Number of sampled thresholds in the argmax search (the paper
+/// approximates `argmax_{t∈[0,1]} F_β(t)` over a finite set).
+pub const THRESHOLD_GRID: usize = 99;
+
+/// The threshold in (0,1) maximizing F_β over the pairs, searched on a
+/// uniform grid. Ties break toward the *higher* threshold (more pruning
+/// for equal F_β).
+pub fn best_threshold(pairs: &[(f32, bool)], beta: f64) -> f64 {
+    let mut best_t = 0.5;
+    let mut best_f = -1.0;
+    for i in 1..=THRESHOLD_GRID {
+        let t = i as f64 / (THRESHOLD_GRID + 1) as f64;
+        let f = Confusion::at_threshold(pairs, t).fbeta(beta);
+        if f >= best_f {
+            best_f = f;
+            best_t = t;
+        }
+    }
+    best_t
+}
+
+/// β sweep range used throughout the paper's evaluation (§4.4: "β values
+/// ranging from 1 to 14").
+pub const BETA_RANGE: std::ops::RangeInclusive<usize> = 1..=14;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg32;
+
+    fn sample_pairs(seed: u64, n: usize) -> Vec<(f32, bool)> {
+        // positives ~ N(0.7, 0.15), negatives ~ N(0.3, 0.15)
+        let mut rng = Pcg32::new(seed);
+        (0..n)
+            .map(|i| {
+                let y = i % 3 == 0;
+                let mu = if y { 0.7 } else { 0.3 };
+                ((mu + 0.15 * rng.normal()).clamp(0.0, 1.0) as f32, y)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn equation2_forms_agree() {
+        let pairs = sample_pairs(1, 500);
+        for thr in [0.2, 0.5, 0.8] {
+            let c = Confusion::at_threshold(&pairs, thr);
+            for beta in [0.5, 1.0, 4.0, 9.0] {
+                let lhs = fbeta_pr(c.precision(), c.recall(), beta);
+                let rhs = c.fbeta(beta);
+                assert!((lhs - rhs).abs() < 1e-12, "β={beta} thr={thr}");
+            }
+        }
+    }
+
+    #[test]
+    fn f1_is_harmonic_mean() {
+        let c = Confusion {
+            tp: 30,
+            fp: 10,
+            fn_: 20,
+            tn: 40,
+        };
+        let p = c.precision();
+        let r = c.recall();
+        assert!((c.fbeta(1.0) - 2.0 * p * r / (p + r)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn higher_beta_lowers_best_threshold() {
+        // Favoring recall (higher β) must not raise the decision threshold.
+        let pairs = sample_pairs(2, 2000);
+        let mut last = f64::INFINITY;
+        for beta in [1.0, 2.0, 4.0, 8.0, 14.0] {
+            let t = best_threshold(&pairs, beta);
+            assert!(t <= last + 1e-12, "β={beta}: t={t} > prev {last}");
+            last = t;
+        }
+    }
+
+    #[test]
+    fn recall_at_high_beta_threshold_is_high() {
+        let pairs = sample_pairs(3, 2000);
+        let t = best_threshold(&pairs, 10.0);
+        let c = Confusion::at_threshold(&pairs, t);
+        assert!(c.recall() > 0.95, "recall {}", c.recall());
+    }
+
+    #[test]
+    fn confusion_totals() {
+        let pairs = sample_pairs(4, 321);
+        let c = Confusion::at_threshold(&pairs, 0.5);
+        assert_eq!(c.tp + c.fp + c.fn_ + c.tn, 321);
+    }
+
+    #[test]
+    fn degenerate_inputs() {
+        assert_eq!(Confusion::at_threshold(&[], 0.5), Confusion::default());
+        assert_eq!(Confusion::default().fbeta(2.0), 0.0);
+        assert_eq!(fbeta_pr(0.0, 0.0, 1.0), 0.0);
+        // All-negative pairs: F_β = 0 at any threshold, best_threshold
+        // still returns something in (0,1).
+        let t = best_threshold(&[(0.3, false), (0.6, false)], 2.0);
+        assert!((0.0..1.0).contains(&t));
+    }
+
+    #[test]
+    fn perfect_separation_yields_perfect_fbeta() {
+        let pairs: Vec<(f32, bool)> = (0..100)
+            .map(|i| ((i as f32) / 100.0, i >= 50))
+            .collect();
+        let t = best_threshold(&pairs, 1.0);
+        let c = Confusion::at_threshold(&pairs, t);
+        assert_eq!(c.fp, 0);
+        assert_eq!(c.fn_, 0);
+        assert!((c.fbeta(1.0) - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,217 @@
+//! Metric-based threshold selection (§3.2, first strategy; §4.4).
+//!
+//! Given an objective positive-retention rate `r` and `n` intermediate
+//! levels, each level in isolation must retain at least `r^(1/n)`:
+//! the *isolated* execution zooms in everywhere except at the level under
+//! study. For each level, the chosen β is the smallest one whose isolated
+//! retention (averaged over the train slides) meets the per-level
+//! objective; the level's threshold is then argmax F_β.
+
+use crate::metrics::retention::{retention_and_speedup, RunMetrics};
+use crate::predcache::PredCache;
+use crate::pyramid::tree::Thresholds;
+use crate::util::json::Json;
+
+use super::fbeta::{best_threshold, BETA_RANGE};
+
+/// One (β, threshold) point of an isolated-level study — a row of Fig. 3.
+#[derive(Debug, Clone, Copy)]
+pub struct IsolatedPoint {
+    pub beta: usize,
+    pub threshold: f64,
+    /// Mean positive retention rate over the slide set.
+    pub retention: f64,
+    /// Mean speedup over the slide set.
+    pub speedup: f64,
+}
+
+/// The full isolated-level curve for one resolution level (Fig. 3 series).
+#[derive(Debug, Clone)]
+pub struct IsolatedCurve {
+    pub level: usize,
+    pub points: Vec<IsolatedPoint>,
+}
+
+/// Thresholds where every level passes through except `level`, which uses
+/// `t`.
+pub fn isolated_thresholds(levels: usize, level: usize, t: f64) -> Thresholds {
+    let mut thr = Thresholds::pass_through(levels);
+    thr.zoom[level] = t;
+    thr
+}
+
+/// Mean retention and speedup of a threshold setting over a slide set.
+pub fn evaluate(cache: &PredCache, thresholds: &Thresholds) -> (f64, f64, Vec<RunMetrics>) {
+    let mut metrics = Vec::with_capacity(cache.slides.len());
+    for sp in &cache.slides {
+        let tree = sp.replay(thresholds);
+        metrics.push(retention_and_speedup(sp, &tree));
+    }
+    let n = metrics.len().max(1) as f64;
+    let retention = metrics.iter().map(|m| m.retention()).sum::<f64>() / n;
+    let speedup = metrics.iter().map(|m| m.speedup()).sum::<f64>() / n;
+    (retention, speedup, metrics)
+}
+
+/// Sweep β over one isolated level (Fig. 3 for that level).
+pub fn isolated_curve(cache: &PredCache, levels: usize, level: usize) -> IsolatedCurve {
+    let pairs = cache.level_pairs(level);
+    let points = BETA_RANGE
+        .map(|beta| {
+            let threshold = best_threshold(&pairs, beta as f64);
+            let thr = isolated_thresholds(levels, level, threshold);
+            let (retention, speedup, _) = evaluate(cache, &thr);
+            IsolatedPoint {
+                beta,
+                threshold,
+                retention,
+                speedup,
+            }
+        })
+        .collect();
+    IsolatedCurve { level, points }
+}
+
+/// Result of the metric-based selection.
+#[derive(Debug, Clone)]
+pub struct MetricBasedSelection {
+    pub objective: f64,
+    /// Per-level objective = objective^(1/n_intermediate).
+    pub per_level_objective: f64,
+    /// Chosen β per intermediate level (index = level, level ≥ 1).
+    pub betas: Vec<Option<usize>>,
+    pub thresholds: Thresholds,
+    /// The isolated curves used for the selection (Fig. 3 data).
+    pub curves: Vec<IsolatedCurve>,
+}
+
+/// Run the §4.4 procedure: isolated β sweep per intermediate level, pick
+/// the smallest β whose isolated retention meets `objective^(1/n)`.
+/// Falls back to the largest β (max recall) when no β reaches the
+/// per-level objective.
+pub fn select(cache: &PredCache, levels: usize, objective: f64) -> MetricBasedSelection {
+    assert!((0.0..=1.0).contains(&objective));
+    let n_intermediate = levels - 1; // levels 1..levels-1 carry decisions
+    let per_level_objective = objective.powf(1.0 / n_intermediate as f64);
+
+    let mut thresholds = Thresholds::pass_through(levels);
+    let mut betas = vec![None; levels];
+    let mut curves = Vec::new();
+    for level in 1..levels {
+        let curve = isolated_curve(cache, levels, level);
+        let chosen = curve
+            .points
+            .iter()
+            .find(|p| p.retention >= per_level_objective)
+            .or_else(|| curve.points.last());
+        if let Some(p) = chosen {
+            thresholds.zoom[level] = p.threshold;
+            betas[level] = Some(p.beta);
+        }
+        curves.push(curve);
+    }
+    MetricBasedSelection {
+        objective,
+        per_level_objective,
+        betas,
+        thresholds,
+        curves,
+    }
+}
+
+impl MetricBasedSelection {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("strategy", "metric_based")
+            .set("objective", self.objective)
+            .set("per_level_objective", self.per_level_objective)
+            .set(
+                "betas",
+                Json::Arr(
+                    self.betas
+                        .iter()
+                        .map(|b| match b {
+                            Some(b) => Json::Num(*b as f64),
+                            None => Json::Null,
+                        })
+                        .collect(),
+                ),
+            )
+            .set("thresholds", self.thresholds.to_json())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::oracle::OracleAnalyzer;
+    use crate::slide::pyramid::Slide;
+    use crate::synth::slide_gen::{gen_slide_set, DatasetParams};
+
+    fn train_cache(n: usize) -> PredCache {
+        let slides: Vec<Slide> = gen_slide_set("mb", n, 7, &DatasetParams::default())
+            .into_iter()
+            .map(Slide::from_spec)
+            .collect();
+        PredCache::collect_set(&slides, &OracleAnalyzer::new(1), 32)
+    }
+
+    #[test]
+    fn isolated_curve_monotone_retention_in_beta() {
+        let cache = train_cache(6);
+        let curve = isolated_curve(&cache, 3, 2);
+        assert_eq!(curve.points.len(), 14);
+        // Higher β → lower threshold → weakly higher retention.
+        for w in curve.points.windows(2) {
+            assert!(
+                w[1].retention >= w[0].retention - 1e-9,
+                "retention must not drop with β: {:?} -> {:?}",
+                w[0],
+                w[1]
+            );
+        }
+    }
+
+    #[test]
+    fn isolated_execution_only_filters_at_that_level() {
+        let cache = train_cache(3);
+        let sp = &cache.slides[0];
+        // Isolate level 1 with an impossible threshold: level-2 passes
+        // through, so level-1 analyzes the full lineage, level-0 nothing.
+        let thr = isolated_thresholds(3, 1, 1.1);
+        let tree = sp.replay(&thr);
+        assert_eq!(tree.nodes[2].len(), sp.initial.len());
+        assert_eq!(tree.nodes[1].len(), sp.initial.len() * 4);
+        assert_eq!(tree.nodes[0].len(), 0);
+    }
+
+    #[test]
+    fn selection_meets_objective_on_train_set() {
+        let cache = train_cache(9);
+        let sel = select(&cache, 3, 0.90);
+        assert!((sel.per_level_objective - 0.90f64.sqrt()).abs() < 1e-12);
+        // Betas chosen for both intermediate levels.
+        assert!(sel.betas[1].is_some());
+        assert!(sel.betas[2].is_some());
+        // The combined execution should meet (approximately) the global
+        // objective on the train set: per-level isolation guarantees the
+        // product bound, allow small slack for interactions.
+        let (retention, speedup, _) = evaluate(&cache, &sel.thresholds);
+        assert!(
+            retention >= 0.85,
+            "train retention {retention} far below objective"
+        );
+        assert!(speedup > 1.0, "speedup {speedup} should beat reference");
+    }
+
+    #[test]
+    fn stricter_objective_needs_higher_or_equal_betas() {
+        let cache = train_cache(6);
+        let loose = select(&cache, 3, 0.80);
+        let strict = select(&cache, 3, 0.97);
+        for level in 1..3 {
+            let (l, s) = (loose.betas[level].unwrap(), strict.betas[level].unwrap());
+            assert!(s >= l, "level {level}: strict β {s} < loose β {l}");
+        }
+    }
+}

@@ -1,0 +1,8 @@
+//! Decision-block threshold tuning (§3.2): F_β machinery and the two
+//! selection strategies (metric-based §4.4, empirical §4.5).
+
+pub mod empirical;
+pub mod fbeta;
+pub mod metric_based;
+
+pub use fbeta::{best_threshold, Confusion, BETA_RANGE};

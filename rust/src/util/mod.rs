@@ -1,0 +1,8 @@
+//! Dependency-free substrates: PRNG, JSON, statistics, thread pool and a
+//! property-testing harness. See DESIGN.md §3 (substitution S4).
+
+pub mod json;
+pub mod prng;
+pub mod quickcheck;
+pub mod stats;
+pub mod threadpool;

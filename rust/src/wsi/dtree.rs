@@ -1,0 +1,251 @@
+//! CART decision tree (gini impurity, axis-aligned splits) — the base
+//! learner of the §4.6 bagging classifier. Built from scratch (no ML crate
+//! in the offline vendor set).
+
+/// One labeled sample: fixed-length features + binary label.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub x: Vec<f64>,
+    pub y: bool,
+}
+
+#[derive(Debug, Clone)]
+pub enum Node {
+    Leaf {
+        /// Probability of the positive class at this leaf.
+        p: f64,
+    },
+    Split {
+        feature: usize,
+        threshold: f64,
+        left: Box<Node>,  // x[feature] <= threshold
+        right: Box<Node>, // x[feature] >  threshold
+    },
+}
+
+#[derive(Debug, Clone)]
+pub struct DecisionTree {
+    root: Node,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct TreeParams {
+    pub max_depth: usize,
+    pub min_samples_leaf: usize,
+}
+
+impl Default for TreeParams {
+    fn default() -> Self {
+        Self {
+            max_depth: 5,
+            min_samples_leaf: 2,
+        }
+    }
+}
+
+fn gini(pos: f64, n: f64) -> f64 {
+    if n == 0.0 {
+        return 0.0;
+    }
+    let p = pos / n;
+    2.0 * p * (1.0 - p) // binary gini = 1 - p² - (1-p)²
+}
+
+impl DecisionTree {
+    pub fn fit(samples: &[Sample], params: TreeParams) -> DecisionTree {
+        assert!(!samples.is_empty());
+        let idx: Vec<usize> = (0..samples.len()).collect();
+        DecisionTree {
+            root: build(samples, &idx, params, 0),
+        }
+    }
+
+    pub fn predict_proba(&self, x: &[f64]) -> f64 {
+        let mut node = &self.root;
+        loop {
+            match node {
+                Node::Leaf { p } => return *p,
+                Node::Split {
+                    feature,
+                    threshold,
+                    left,
+                    right,
+                } => {
+                    node = if x[*feature] <= *threshold { left } else { right };
+                }
+            }
+        }
+    }
+
+    pub fn predict(&self, x: &[f64]) -> bool {
+        self.predict_proba(x) >= 0.5
+    }
+
+    pub fn depth(&self) -> usize {
+        fn d(n: &Node) -> usize {
+            match n {
+                Node::Leaf { .. } => 0,
+                Node::Split { left, right, .. } => 1 + d(left).max(d(right)),
+            }
+        }
+        d(&self.root)
+    }
+}
+
+fn leaf(samples: &[Sample], idx: &[usize]) -> Node {
+    let pos = idx.iter().filter(|&&i| samples[i].y).count() as f64;
+    Node::Leaf {
+        p: pos / idx.len().max(1) as f64,
+    }
+}
+
+fn build(samples: &[Sample], idx: &[usize], params: TreeParams, depth: usize) -> Node {
+    let n = idx.len();
+    let pos = idx.iter().filter(|&&i| samples[i].y).count();
+    if depth >= params.max_depth || n < 2 * params.min_samples_leaf || pos == 0 || pos == n {
+        return leaf(samples, idx);
+    }
+    let dim = samples[idx[0]].x.len();
+    let parent_gini = gini(pos as f64, n as f64);
+
+    let mut best: Option<(f64, usize, f64)> = None; // (impurity decrease, feature, threshold)
+    for f in 0..dim {
+        // Sort indices by feature value; candidate thresholds are midpoints
+        // between distinct consecutive values.
+        let mut order: Vec<usize> = idx.to_vec();
+        order.sort_by(|&a, &b| samples[a].x[f].partial_cmp(&samples[b].x[f]).unwrap());
+        let mut left_n = 0.0;
+        let mut left_pos = 0.0;
+        let total_pos = pos as f64;
+        for w in 0..n - 1 {
+            let i = order[w];
+            left_n += 1.0;
+            if samples[i].y {
+                left_pos += 1.0;
+            }
+            let a = samples[order[w]].x[f];
+            let b = samples[order[w + 1]].x[f];
+            if a == b {
+                continue;
+            }
+            let right_n = n as f64 - left_n;
+            if (left_n as usize) < params.min_samples_leaf
+                || (right_n as usize) < params.min_samples_leaf
+            {
+                continue;
+            }
+            let g = (left_n / n as f64) * gini(left_pos, left_n)
+                + (right_n / n as f64) * gini(total_pos - left_pos, right_n);
+            let gain = parent_gini - g;
+            if best.map_or(true, |(bg, _, _)| gain > bg) {
+                best = Some((gain, f, (a + b) / 2.0));
+            }
+        }
+    }
+
+    match best {
+        Some((gain, feature, threshold)) if gain > 1e-12 => {
+            let (li, ri): (Vec<usize>, Vec<usize>) = idx
+                .iter()
+                .partition(|&&i| samples[i].x[feature] <= threshold);
+            Node::Split {
+                feature,
+                threshold,
+                left: Box::new(build(samples, &li, params, depth + 1)),
+                right: Box::new(build(samples, &ri, params, depth + 1)),
+            }
+        }
+        _ => leaf(samples, idx),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg32;
+
+    fn xor_data(n: usize, seed: u64) -> Vec<Sample> {
+        let mut rng = Pcg32::new(seed);
+        (0..n)
+            .map(|_| {
+                let a = rng.f64();
+                let b = rng.f64();
+                Sample {
+                    x: vec![a, b],
+                    y: (a > 0.5) != (b > 0.5),
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn learns_axis_aligned_rule() {
+        let data: Vec<Sample> = (0..100)
+            .map(|i| Sample {
+                x: vec![i as f64 / 100.0],
+                y: i >= 30,
+            })
+            .collect();
+        let t = DecisionTree::fit(&data, TreeParams::default());
+        assert!(!t.predict(&[0.1]));
+        assert!(t.predict(&[0.9]));
+        assert!(t.depth() >= 1);
+    }
+
+    #[test]
+    fn learns_xor_with_depth() {
+        let data = xor_data(400, 1);
+        let t = DecisionTree::fit(
+            &data,
+            TreeParams {
+                max_depth: 4,
+                min_samples_leaf: 2,
+            },
+        );
+        let acc = data
+            .iter()
+            .filter(|s| t.predict(&s.x) == s.y)
+            .count() as f64
+            / data.len() as f64;
+        assert!(acc > 0.95, "xor train accuracy {acc}");
+    }
+
+    #[test]
+    fn pure_node_becomes_leaf() {
+        let data: Vec<Sample> = (0..10)
+            .map(|i| Sample {
+                x: vec![i as f64],
+                y: true,
+            })
+            .collect();
+        let t = DecisionTree::fit(&data, TreeParams::default());
+        assert_eq!(t.depth(), 0);
+        assert!((t.predict_proba(&[3.0]) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn respects_max_depth() {
+        let data = xor_data(300, 2);
+        let t = DecisionTree::fit(
+            &data,
+            TreeParams {
+                max_depth: 2,
+                min_samples_leaf: 1,
+            },
+        );
+        assert!(t.depth() <= 2);
+    }
+
+    #[test]
+    fn constant_features_yield_leaf() {
+        let data: Vec<Sample> = (0..20)
+            .map(|i| Sample {
+                x: vec![1.0, 1.0],
+                y: i % 2 == 0,
+            })
+            .collect();
+        let t = DecisionTree::fit(&data, TreeParams::default());
+        assert_eq!(t.depth(), 0);
+        assert!((t.predict_proba(&[1.0, 1.0]) - 0.5).abs() < 1e-12);
+    }
+}

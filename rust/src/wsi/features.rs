@@ -1,0 +1,176 @@
+//! Whole-slide feature extraction (§4.6).
+//!
+//! The paper trains a bagging decision-tree classifier "to predict tumoral
+//! images from the distribution of tile prediction probabilities", and —
+//! when PyramidAI stopped at a lower resolution — "projected the predicted
+//! probability onto all corresponding tiles at the highest resolution".
+//!
+//! This module turns one execution tree into that distribution: every
+//! level-0 lineage tile gets a probability (its own if analyzed, else its
+//! deepest analyzed ancestor's), summarized as a histogram + tail stats.
+
+use std::collections::HashMap;
+
+use crate::pyramid::tree::ExecTree;
+use crate::slide::tile::TileId;
+
+pub const HIST_BINS: usize = 10;
+/// Histogram + [mean, max, frac ≥ 0.5, frac ≥ 0.9].
+pub const FEATURE_DIM: usize = HIST_BINS + 4;
+
+/// Probability of every level-0 lineage tile, projecting pruned branches'
+/// probabilities down from the deepest analyzed ancestor.
+pub fn project_to_level0(tree: &ExecTree) -> Vec<f32> {
+    let analyzed: HashMap<TileId, f32> = tree
+        .nodes
+        .iter()
+        .flatten()
+        .map(|n| (n.tile, n.prob))
+        .collect();
+    let mut out = Vec::new();
+    // Walk down from every initial tile; where a node was not analyzed,
+    // inherit the parent's probability for its whole sub-lineage.
+    fn walk(
+        t: TileId,
+        inherited: f32,
+        analyzed: &HashMap<TileId, f32>,
+        out: &mut Vec<f32>,
+    ) {
+        let p = analyzed.get(&t).copied().unwrap_or(inherited);
+        if t.level == 0 {
+            out.push(p);
+            return;
+        }
+        for c in t.children() {
+            walk(c, p, analyzed, out);
+        }
+    }
+    for &t in &tree.initial {
+        let p = analyzed.get(&t).copied().unwrap_or(0.0);
+        walk(t, p, &analyzed, &mut out);
+    }
+    out
+}
+
+/// Fixed-length feature vector from projected probabilities.
+pub fn features(projected: &[f32]) -> Vec<f64> {
+    let n = projected.len().max(1) as f64;
+    let mut hist = vec![0.0f64; HIST_BINS];
+    let mut sum = 0.0f64;
+    let mut max = 0.0f64;
+    let mut ge05 = 0.0f64;
+    let mut ge09 = 0.0f64;
+    for &p in projected {
+        let b = ((p as f64 * HIST_BINS as f64) as usize).min(HIST_BINS - 1);
+        hist[b] += 1.0;
+        sum += p as f64;
+        max = max.max(p as f64);
+        if p >= 0.5 {
+            ge05 += 1.0;
+        }
+        if p >= 0.9 {
+            ge09 += 1.0;
+        }
+    }
+    let mut f: Vec<f64> = hist.into_iter().map(|h| h / n).collect();
+    f.push(sum / n);
+    f.push(max);
+    f.push(ge05 / n);
+    f.push(ge09 / n);
+    debug_assert_eq!(f.len(), FEATURE_DIM);
+    f
+}
+
+/// Convenience: features straight from a tree.
+pub fn tree_features(tree: &ExecTree) -> Vec<f64> {
+    features(&project_to_level0(tree))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::oracle::OracleAnalyzer;
+    use crate::pyramid::driver::{run_pyramidal, run_reference};
+    use crate::pyramid::tree::Thresholds;
+    use crate::slide::pyramid::Slide;
+    use crate::slide::tile::SCALE_FACTOR;
+    use crate::synth::slide_gen::{SlideKind, SlideSpec};
+
+    fn slide(kind: SlideKind, seed: u64) -> Slide {
+        Slide::from_spec(SlideSpec::new("w", seed, 16, 8, 3, 64, kind))
+    }
+
+    #[test]
+    fn projection_covers_full_lineage() {
+        let s = slide(SlideKind::LargeTumor, 80);
+        let a = OracleAnalyzer::new(1);
+        for thr in [0.0, 0.5, 1.1] {
+            let tree = run_pyramidal(&s, &a, &Thresholds::uniform(3, thr), 8);
+            let proj = project_to_level0(&tree);
+            let f2 = SCALE_FACTOR * SCALE_FACTOR;
+            assert_eq!(proj.len(), tree.initial.len() * f2 * f2, "thr={thr}");
+        }
+    }
+
+    #[test]
+    fn reference_projection_equals_level0_probs() {
+        let s = slide(SlideKind::SmallScattered, 81);
+        let a = OracleAnalyzer::new(1);
+        let r = run_reference(&s, &a, 8);
+        let proj = project_to_level0(&r);
+        // Reference analyzes every level-0 tile, so projection = raw probs
+        // (possibly reordered); compare as multisets via sorted lists.
+        let mut got = proj;
+        let mut want: Vec<f32> = r.level0().iter().map(|n| n.prob).collect();
+        got.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        want.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn pruned_branches_inherit_ancestor_probability() {
+        let s = slide(SlideKind::Negative, 82);
+        let a = OracleAnalyzer::new(1);
+        // Prune everything: all L0 tiles inherit their L2 ancestor's prob.
+        let tree = run_pyramidal(&s, &a, &Thresholds::uniform(3, 1.1), 8);
+        let proj = project_to_level0(&tree);
+        let l2: HashMap<TileId, f32> =
+            tree.nodes[2].iter().map(|n| (n.tile, n.prob)).collect();
+        // Every projected value must equal some L2 probability.
+        for p in proj {
+            assert!(
+                l2.values().any(|&q| (q - p).abs() < 1e-6),
+                "projected {p} not an L2 prob"
+            );
+        }
+    }
+
+    #[test]
+    fn feature_vector_shape_and_normalization() {
+        let s = slide(SlideKind::LargeTumor, 83);
+        let a = OracleAnalyzer::new(1);
+        let tree = run_pyramidal(&s, &a, &Thresholds::uniform(3, 0.4), 8);
+        let f = tree_features(&tree);
+        assert_eq!(f.len(), FEATURE_DIM);
+        let hist_sum: f64 = f[..HIST_BINS].iter().sum();
+        assert!((hist_sum - 1.0).abs() < 1e-9);
+        assert!(f.iter().all(|&v| (0.0..=1.0 + 1e-9).contains(&v)));
+    }
+
+    #[test]
+    fn tumor_slide_features_differ_from_negative() {
+        let a = OracleAnalyzer::new(1);
+        let thr = Thresholds::uniform(3, 0.4);
+        let ft = tree_features(&run_pyramidal(&slide(SlideKind::LargeTumor, 84), &a, &thr, 8));
+        let fn_ = tree_features(&run_pyramidal(&slide(SlideKind::Negative, 85), &a, &thr, 8));
+        // frac ≥ 0.5 (index HIST_BINS+2) should separate them clearly.
+        assert!(ft[HIST_BINS + 2] > fn_[HIST_BINS + 2] + 0.01);
+    }
+
+    #[test]
+    fn empty_projection_is_safe() {
+        let f = features(&[]);
+        assert_eq!(f.len(), FEATURE_DIM);
+        assert!(f.iter().all(|v| v.is_finite()));
+    }
+}

@@ -1,0 +1,10 @@
+//! Whole-slide image classification (§4.6): probability-distribution
+//! features with pyramid→level-0 projection, CART trees, bagging.
+
+pub mod bagging;
+pub mod dtree;
+pub mod features;
+
+pub use bagging::{BaggingClassifier, BaggingParams};
+pub use dtree::{DecisionTree, Sample, TreeParams};
+pub use features::{features, project_to_level0, tree_features};

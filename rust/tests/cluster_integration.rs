@@ -1,0 +1,139 @@
+//! Cluster integration over real localhost TCP sockets, using the oracle
+//! analyzer (no artifacts needed): conservation, consistency with the
+//! single-worker execution, and work-stealing behavior.
+
+use std::sync::Arc;
+
+use pyramidai::cluster::{run_cluster, ClusterConfig};
+use pyramidai::model::oracle::OracleAnalyzer;
+use pyramidai::model::{Analyzer, DelayAnalyzer};
+use pyramidai::pyramid::driver::run_pyramidal;
+use pyramidai::pyramid::tree::Thresholds;
+use pyramidai::sim::Distribution;
+use pyramidai::slide::pyramid::Slide;
+use pyramidai::synth::slide_gen::{SlideKind, SlideSpec};
+
+fn spec(seed: u64, kind: SlideKind) -> SlideSpec {
+    SlideSpec::new(format!("cl_{seed}"), seed, 32, 16, 3, 64, kind)
+}
+
+fn thresholds() -> Thresholds {
+    Thresholds {
+        zoom: vec![0.5, 0.35, 0.35],
+    }
+}
+
+#[test]
+fn cluster_matches_single_worker_execution() {
+    let sp = spec(301, SlideKind::LargeTumor);
+    let analyzer: Arc<dyn Analyzer> = Arc::new(OracleAnalyzer::new(1));
+    let thr = thresholds();
+
+    // Ground truth: single-worker in-process driver.
+    let slide = Slide::from_spec(sp.clone());
+    let solo = run_pyramidal(&slide, analyzer.as_ref(), &thr, 8);
+
+    for workers in [1usize, 4] {
+        let res = run_cluster(
+            &sp,
+            &thr,
+            Arc::clone(&analyzer),
+            &ClusterConfig {
+                workers,
+                distribution: Distribution::RoundRobin,
+                steal: true,
+                batch: 8,
+                seed: 99,
+            },
+        )
+        .expect("cluster run");
+        // The oracle is deterministic, so the merged cluster tree must
+        // analyze exactly the same tiles as the solo run.
+        assert_eq!(
+            res.tree.total_analyzed(),
+            solo.total_analyzed(),
+            "workers={workers}"
+        );
+        let mut a: Vec<_> = res.tree.level0().iter().map(|n| n.tile).collect();
+        let mut b: Vec<_> = solo.level0().iter().map(|n| n.tile).collect();
+        a.sort();
+        b.sort();
+        assert_eq!(a, b, "level-0 tile sets differ (workers={workers})");
+        // Per-worker counts sum to the total.
+        assert_eq!(res.per_worker.iter().sum::<usize>(), solo.total_analyzed());
+    }
+}
+
+#[test]
+fn work_stealing_balances_block_distribution() {
+    // Block distribution is maximally imbalanced on a slide whose tumor
+    // sits in one region; stealing must spread the load. A per-tile delay
+    // emulates the paper's 0.33 s analysis block so workers genuinely
+    // overlap on this single-core testbed and steals can happen.
+    let sp = spec(302, SlideKind::LargeTumor);
+    let analyzer: Arc<dyn Analyzer> = Arc::new(DelayAnalyzer::new(
+        OracleAnalyzer::new(1),
+        std::time::Duration::from_millis(2),
+    ));
+    let thr = thresholds();
+    let base = ClusterConfig {
+        workers: 4,
+        distribution: Distribution::Block,
+        steal: false,
+        batch: 4,
+        seed: 7,
+    };
+    let no_steal = run_cluster(&sp, &thr, Arc::clone(&analyzer), &base).unwrap();
+    let steal = run_cluster(
+        &sp,
+        &thr,
+        Arc::clone(&analyzer),
+        &ClusterConfig {
+            steal: true,
+            ..base.clone()
+        },
+    )
+    .unwrap();
+    assert!(steal.steals > 0, "expected steals under block distribution");
+    assert!(
+        steal.max_tiles() <= no_steal.max_tiles(),
+        "stealing should not worsen the busiest worker: {} vs {}",
+        steal.max_tiles(),
+        no_steal.max_tiles()
+    );
+    // Totals conserved in both modes.
+    assert_eq!(
+        steal.tree.total_analyzed(),
+        no_steal.tree.total_analyzed()
+    );
+}
+
+#[test]
+fn twelve_workers_negative_slide() {
+    // The paper's §5.4 validates on 12 machines incl. a negative image;
+    // exercise the same worker count end to end.
+    let sp = spec(303, SlideKind::Negative);
+    let analyzer: Arc<dyn Analyzer> = Arc::new(OracleAnalyzer::new(1));
+    let res = run_cluster(
+        &sp,
+        &thresholds(),
+        analyzer,
+        &ClusterConfig {
+            workers: 12,
+            distribution: Distribution::RoundRobin,
+            steal: true,
+            batch: 8,
+            seed: 3,
+        },
+    )
+    .unwrap();
+    assert_eq!(res.per_worker.len(), 12);
+    assert!(res.tree.total_analyzed() > 0);
+    // Negative slide: hardly any zoom-ins, so level 0 nearly empty.
+    let l0 = res.tree.level0().len();
+    let l2 = res.tree.nodes[2].len();
+    assert!(
+        l0 < l2 * 4,
+        "negative slide exploded: {l0} level-0 tiles from {l2} initial"
+    );
+}

@@ -1,0 +1,111 @@
+//! Full-pipeline integration with the oracle analyzer (artifact-free):
+//! dataset → prediction cache → both tuning strategies → replay →
+//! retention/speedup → simulator → WSI classification.
+//!
+//! This is the rust-side analogue of the paper's §4-§5 workflow end to end.
+
+use pyramidai::metrics::retention::retention_and_speedup;
+use pyramidai::model::oracle::OracleAnalyzer;
+use pyramidai::predcache::PredCache;
+use pyramidai::pyramid::tree::POSITIVE_THRESHOLD;
+use pyramidai::sim::{simulate, Distribution, Policy};
+use pyramidai::slide::pyramid::Slide;
+use pyramidai::synth::slide_gen::{gen_slide_set, DatasetParams};
+use pyramidai::tuning::{empirical, metric_based};
+use pyramidai::wsi::{tree_features, BaggingClassifier, BaggingParams, Sample};
+
+fn caches() -> (PredCache, PredCache, Vec<Slide>) {
+    let params = DatasetParams::default();
+    let analyzer = OracleAnalyzer::new(1);
+    let train: Vec<Slide> = gen_slide_set("train", 12, 100, &params)
+        .into_iter()
+        .map(Slide::from_spec)
+        .collect();
+    let test: Vec<Slide> = gen_slide_set("test", 9, 200, &params)
+        .into_iter()
+        .map(Slide::from_spec)
+        .collect();
+    let train_cache = PredCache::collect_set(&train, &analyzer, 32);
+    let test_cache = PredCache::collect_set(&test, &analyzer, 32);
+    (train_cache, test_cache, test)
+}
+
+#[test]
+fn full_pipeline_reproduces_paper_shape() {
+    let (train_cache, test_cache, _) = caches();
+
+    // --- empirical strategy (§4.5): tune on train, evaluate on test ----
+    let sel = empirical::select(&train_cache, 3, 0.90);
+    let (test_ret, test_speedup, _) = metric_based::evaluate(&test_cache, &sel.thresholds);
+    assert!(
+        test_ret >= 0.80,
+        "test retention {test_ret} collapsed vs train target 0.90"
+    );
+    assert!(
+        test_speedup > 1.5,
+        "test speedup {test_speedup} — paper reports 2.65 at 90% retention"
+    );
+
+    // --- metric-based strategy (§4.4) ----------------------------------
+    let mb = metric_based::select(&train_cache, 3, 0.90);
+    let (mb_ret, mb_speedup, _) = metric_based::evaluate(&test_cache, &mb.thresholds);
+    assert!(mb_ret >= 0.80, "metric-based test retention {mb_ret}");
+    assert!(mb_speedup > 1.0, "metric-based speedup {mb_speedup}");
+
+    // --- distributed simulation (§5): work stealing ≈ ideal ------------
+    let sp = &test_cache.slides[0];
+    let tree = sp.replay(&sel.thresholds);
+    let ideal = simulate(&tree, 12, Distribution::RoundRobin, Policy::OracleIdeal, 1);
+    let steal = simulate(&tree, 12, Distribution::RoundRobin, Policy::WorkStealing, 1);
+    assert!(steal.max_tiles() as f64 <= ideal.max_tiles() as f64 * 1.5 + 4.0);
+
+    // --- WSI classification (§4.6) --------------------------------------
+    // Train on the train set's replayed trees, test on the test set.
+    let label = |cache: &PredCache, i: usize| -> bool {
+        cache.slides[i]
+            .preds
+            .iter()
+            .any(|(t, p)| t.level == 0 && p.tumor && p.prob >= POSITIVE_THRESHOLD as f32)
+    };
+    let mk_samples = |cache: &PredCache| -> Vec<Sample> {
+        (0..cache.slides.len())
+            .map(|i| Sample {
+                x: tree_features(&cache.slides[i].replay(&sel.thresholds)),
+                y: label(cache, i),
+            })
+            .collect()
+    };
+    let train_s = mk_samples(&train_cache);
+    let test_s = mk_samples(&test_cache);
+    let clf = BaggingClassifier::fit(&train_s, &BaggingParams::default());
+    let acc = clf.accuracy(&test_s);
+    assert!(acc >= 0.7, "WSI accuracy {acc} (paper: 0.84)");
+}
+
+#[test]
+fn retention_speedup_tradeoff_exists_on_test_set() {
+    let (train_cache, test_cache, _) = caches();
+    let points = empirical::sweep(&train_cache, 3);
+    // Evaluate the extreme betas on the held-out test set.
+    let (lo_ret, lo_speedup, _) =
+        metric_based::evaluate(&test_cache, &points.first().unwrap().thresholds);
+    let (hi_ret, hi_speedup, _) =
+        metric_based::evaluate(&test_cache, &points.last().unwrap().thresholds);
+    assert!(hi_ret > lo_ret, "retention: β=14 {hi_ret} vs β=1 {lo_ret}");
+    assert!(lo_speedup > hi_speedup, "speedup: β=1 {lo_speedup} vs β=14 {hi_speedup}");
+    // Fig 5 headline: low β should be dramatically faster.
+    assert!(lo_speedup > 2.0, "β=1 speedup {lo_speedup}");
+}
+
+#[test]
+fn metrics_consistent_between_cache_and_replay() {
+    let (train_cache, _, _) = caches();
+    let sel = empirical::select(&train_cache, 3, 0.9);
+    for sp in &train_cache.slides {
+        let tree = sp.replay(&sel.thresholds);
+        tree.check_consistency().unwrap();
+        let m = retention_and_speedup(sp, &tree);
+        assert!(m.pyramid_tiles <= (m.reference_tiles as f64 * 4.0 / 3.0).ceil() as usize + 1);
+        assert!((0.0..=1.0).contains(&m.retention()));
+    }
+}

@@ -1,0 +1,194 @@
+//! End-to-end integration across the three layers: rust-generated slides →
+//! PJRT-compiled TinyInception (Pallas kernels inside) → pyramidal driver.
+//!
+//! These tests are gated on `artifacts/` (run `make artifacts` first); they
+//! are the proof that the python-trained model transfers to rust-generated
+//! tiles, i.e. that the two texture implementations really match.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use pyramidai::model::pjrt::PjrtAnalyzer;
+use pyramidai::model::Analyzer;
+use pyramidai::pyramid::driver::{run_pyramidal, run_reference};
+use pyramidai::pyramid::tree::Thresholds;
+use pyramidai::runtime::Registry;
+use pyramidai::slide::pyramid::Slide;
+use pyramidai::synth::slide_gen::{SlideKind, SlideSpec};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("meta.json").exists().then_some(dir)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts_dir() {
+            Some(d) => d,
+            None => {
+                eprintln!("skipping: artifacts/ not built");
+                return;
+            }
+        }
+    };
+}
+
+fn registry() -> Option<Arc<Registry>> {
+    use std::sync::OnceLock;
+    static REG: OnceLock<Option<Arc<Registry>>> = OnceLock::new();
+    REG.get_or_init(|| {
+        artifacts_dir().map(|d| Arc::new(Registry::load_dir(&d).expect("load registry")))
+    })
+    .clone()
+}
+
+#[test]
+fn batch_sizes_agree_on_same_tiles() {
+    let _ = require_artifacts!();
+    let reg = registry().unwrap();
+    let analyzer = PjrtAnalyzer::from_registry(reg);
+    let slide = Slide::from_spec(SlideSpec::new(
+        "int_b",
+        505,
+        16,
+        8,
+        3,
+        64,
+        SlideKind::LargeTumor,
+    ));
+    let tiles = slide.level_tile_ids(1);
+    // Same tiles through different batching plans must give identical
+    // probabilities (padding must not leak).
+    let one_by_one: Vec<f32> = tiles
+        .iter()
+        .flat_map(|&t| analyzer.analyze(&slide, 1, &[t]))
+        .collect();
+    let batched = analyzer.analyze(&slide, 1, &tiles);
+    assert_eq!(one_by_one.len(), batched.len());
+    for (a, b) in one_by_one.iter().zip(&batched) {
+        assert!((a - b).abs() < 1e-5, "batching changed prob: {a} vs {b}");
+    }
+}
+
+#[test]
+fn model_transfers_to_rust_tiles() {
+    let _ = require_artifacts!();
+    let reg = registry().unwrap();
+    let analyzer = PjrtAnalyzer::from_registry(reg);
+    // Accuracy of the python-trained model on rust-generated tiles, over
+    // clear-cut cases (background-free, decisively tumor or decisively
+    // normal): must be well above chance at every level.
+    let slides: Vec<Slide> = (0..4)
+        .map(|i| {
+            Slide::from_spec(SlideSpec::new(
+                format!("int_{i}"),
+                900 + i as u64,
+                32,
+                16,
+                3,
+                64,
+                if i % 2 == 0 {
+                    SlideKind::LargeTumor
+                } else {
+                    SlideKind::SmallScattered
+                },
+            ))
+        })
+        .collect();
+    for level in 0..3 {
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        for slide in &slides {
+            let tiles: Vec<_> = slide
+                .level_tile_ids(level)
+                .into_iter()
+                .filter(|&t| {
+                    let tf = slide.tumor_fraction(t);
+                    slide.tissue_fraction(t) > 0.6 && (tf == 0.0 || tf > 0.3)
+                })
+                .collect();
+            if tiles.is_empty() {
+                continue;
+            }
+            let probs = analyzer.analyze(slide, level, &tiles);
+            for (&t, &p) in tiles.iter().zip(&probs) {
+                let pred = p >= 0.5;
+                if pred == (slide.tumor_fraction(t) > 0.3) {
+                    correct += 1;
+                }
+                total += 1;
+            }
+        }
+        let acc = correct as f64 / total.max(1) as f64;
+        assert!(
+            acc > 0.85,
+            "level {level}: cross-language accuracy {acc} ({correct}/{total})"
+        );
+    }
+}
+
+#[test]
+fn pyramidal_run_with_real_model() {
+    let _ = require_artifacts!();
+    let reg = registry().unwrap();
+    let analyzer = PjrtAnalyzer::from_registry(reg);
+    let slide = Slide::from_spec(SlideSpec::new(
+        "int_pyr",
+        777,
+        32,
+        16,
+        3,
+        64,
+        SlideKind::LargeTumor,
+    ));
+    let thresholds = Thresholds {
+        zoom: vec![0.5, 0.3, 0.3],
+    };
+    let pyr = run_pyramidal(&slide, &analyzer, &thresholds, 32);
+    pyr.check_consistency().unwrap();
+    let reference = run_reference(&slide, &analyzer, 32);
+    assert!(pyr.total_analyzed() > 0);
+    assert!(
+        pyr.total_analyzed() < reference.total_analyzed(),
+        "pyramid {} should beat reference {}",
+        pyr.total_analyzed(),
+        reference.total_analyzed()
+    );
+    // The pyramid must find positives on a large-tumor slide.
+    let positives = pyr.level0().iter().filter(|n| n.prob >= 0.5).count();
+    assert!(positives > 0, "no positives found at level 0");
+}
+
+#[test]
+fn stain_normalization_keeps_predictions_sane() {
+    let _ = require_artifacts!();
+    let reg = registry().unwrap();
+    let plain = PjrtAnalyzer::from_registry(reg.clone());
+    let normed = PjrtAnalyzer::from_registry(reg).with_stain_normalization(true);
+    let slide = Slide::from_spec(SlideSpec::new(
+        "int_s",
+        606,
+        16,
+        8,
+        3,
+        64,
+        SlideKind::LargeTumor,
+    ));
+    let tiles: Vec<_> = slide
+        .level_tile_ids(0)
+        .into_iter()
+        .filter(|&t| slide.tissue_fraction(t) > 0.8)
+        .take(16)
+        .collect();
+    if tiles.is_empty() {
+        return;
+    }
+    let a = plain.analyze(&slide, 0, &tiles);
+    let b = normed.analyze(&slide, 0, &tiles);
+    // Normalization shifts colors toward the reference stains; the model
+    // was trained on un-normalized tiles, so probabilities move, but they
+    // must stay finite probabilities.
+    for p in a.iter().chain(&b) {
+        assert!((0.0..=1.0).contains(p) && p.is_finite());
+    }
+}
