@@ -1,0 +1,88 @@
+//! Service throughput bench: the same synthetic job stream served by 1, 4
+//! and 8 pool workers. A per-tile delay stands in for the paper's ≈0.33 s
+//! analysis block (scaled down), so worker threads genuinely overlap on
+//! this testbed and tiles/sec scales with the pool.
+use std::sync::Arc;
+use std::time::Duration;
+
+use pyramidai::harness::{print_table, CsvOut};
+use pyramidai::model::oracle::OracleAnalyzer;
+use pyramidai::model::{Analyzer, DelayAnalyzer};
+use pyramidai::pyramid::tree::Thresholds;
+use pyramidai::service::{AnalysisService, JobSource, JobSpec, Policy, ServiceConfig};
+use pyramidai::synth::slide_gen::{gen_slide_set, DatasetParams};
+use pyramidai::util::stats::fmt_duration;
+
+const JOBS: usize = 9;
+const PER_TILE: Duration = Duration::from_millis(2);
+
+fn run_once(workers: usize) -> (f64, Duration, usize) {
+    let analyzer: Arc<dyn Analyzer> =
+        Arc::new(DelayAnalyzer::new(OracleAnalyzer::new(1), PER_TILE));
+    let svc = AnalysisService::start(
+        analyzer,
+        ServiceConfig {
+            workers,
+            queue_capacity: JOBS,
+            max_in_flight: 4,
+            batch: 4,
+            policy: Policy::Fifo,
+        },
+    );
+    let params = DatasetParams {
+        tiles_x: 32,
+        tiles_y: 16,
+        levels: 3,
+        tile_px: 64,
+    };
+    let thr = Thresholds {
+        zoom: vec![0.5, 0.35, 0.35],
+    };
+    for spec in gen_slide_set("bench", JOBS, 77, &params) {
+        svc.submit(JobSpec::new(JobSource::Spec(spec), thr.clone()))
+            .expect("queue sized for all jobs");
+    }
+    let report = svc.shutdown();
+    assert_eq!(report.metrics.completed, JOBS, "all jobs must complete");
+    (
+        report.metrics.tiles_per_sec(),
+        report.metrics.wall,
+        report.metrics.tiles,
+    )
+}
+
+fn main() {
+    let mut rows = Vec::new();
+    let mut csv = CsvOut::create("service_throughput.csv", &["workers", "tiles_per_sec", "wall_s"])
+        .expect("bench_results dir");
+    let mut baseline = None;
+    for workers in [1usize, 4, 8] {
+        let (tps, wall, tiles) = run_once(workers);
+        let speedup = match baseline {
+            None => {
+                baseline = Some(tps);
+                1.0
+            }
+            Some(b) => tps / b,
+        };
+        csv.row(&[
+            workers.to_string(),
+            format!("{tps:.1}"),
+            format!("{:.3}", wall.as_secs_f64()),
+        ])
+        .unwrap();
+        rows.push(vec![
+            workers.to_string(),
+            tiles.to_string(),
+            format!("{tps:.1}"),
+            fmt_duration(wall),
+            format!("{speedup:.2}×"),
+        ]);
+    }
+    print_table(
+        "service throughput vs pool size",
+        &["workers", "tiles", "tiles/s", "wall", "vs 1 worker"],
+        &rows,
+    );
+    println!("csv: {}", csv.path().display());
+}

@@ -31,4 +31,5 @@ pub mod model;
 pub mod predcache;
 pub mod runtime;
 pub mod pyramid;
+pub mod service;
 pub mod tuning;

@@ -52,6 +52,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("analyze") => cmd_analyze(args),
         Some("simulate") => cmd_simulate(args),
         Some("cluster") => cmd_cluster(args),
+        Some("serve") => cmd_serve(args),
         Some("report") => cmd_report(args),
         Some(other) => Err(anyhow!("unknown subcommand {other:?}\n{USAGE}")),
         None => {
@@ -71,6 +72,9 @@ subcommands:
   analyze   pyramidal vs reference on one slide   (--slide-seed --kind --model --thresholds)
   simulate  Fig-6 load-balancing simulation       (--workers --model)
   cluster   run the TCP work-stealing cluster     (--workers --per-tile-ms --reps)
+  serve     multi-slide analysis service          (--jobs --workers --policy --max-in-flight
+                                                   --queue-cap --batch --per-tile-ms --tenants
+                                                   --seed --model --csv)
   report    regenerate every paper table/figure   (--model --fast)";
 
 fn model_kind(args: &Args) -> Result<ModelKind> {
@@ -256,6 +260,96 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     let rows =
         experiments::fig7::run(&ctx, &workers, reps, Duration::from_millis(per_tile_ms))?;
     experiments::fig7::print_report(&rows)?;
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    use pyramidai::model::DelayAnalyzer;
+    use pyramidai::service::{
+        metrics as svc_metrics, AnalysisService, JobSource, JobSpec, Policy, Priority,
+        ServiceConfig, SubmitError,
+    };
+
+    let jobs = args.usize_or("jobs", 32)?;
+    let workers = args.usize_or("workers", 8)?;
+    let policy_s = args.str_or("policy", "fifo");
+    let policy = Policy::from_str(&policy_s)
+        .ok_or_else(|| anyhow!("unknown --policy {policy_s:?} (fifo|priority|fair)"))?;
+    let max_in_flight = args.usize_or("max-in-flight", workers.max(1))?;
+    let queue_cap = args.usize_or("queue-cap", jobs.max(1))?;
+    let batch = args.usize_or("batch", 16)?;
+    let per_tile_ms = args.u64_or("per-tile-ms", 0)?;
+    let tenants = args.usize_or("tenants", 3)?.max(1);
+    let seed = args.u64_or("seed", 2025)?;
+    let model = model_kind(args)?;
+    let params = dataset_params(args)?;
+    let csv = args.bool("csv");
+    args.finish()?;
+
+    let (analyzer, name) = experiments::ctx::make_analyzer(model, 7)?;
+    let analyzer: std::sync::Arc<dyn pyramidai::model::Analyzer> = if per_tile_ms > 0 {
+        std::sync::Arc::new(DelayAnalyzer::new(
+            analyzer,
+            Duration::from_millis(per_tile_ms),
+        ))
+    } else {
+        analyzer
+    };
+
+    println!(
+        "serving {jobs} jobs on {workers} workers ({name}, policy={}, max-in-flight={max_in_flight}, queue-cap={queue_cap})…",
+        policy.as_str()
+    );
+    let svc = AnalysisService::start(
+        analyzer,
+        ServiceConfig {
+            workers,
+            queue_capacity: queue_cap,
+            max_in_flight,
+            batch,
+            policy,
+        },
+    );
+
+    // Synthetic job stream: kinds, priorities and tenants cycle so every
+    // policy has something to bite on; seeds derive from --seed.
+    let specs = gen_slide_set("serve", jobs, seed, &params);
+    let prios = [Priority::Low, Priority::Normal, Priority::High];
+    let thr = if params.levels == 3 {
+        Thresholds {
+            zoom: vec![0.5, 0.35, 0.35],
+        }
+    } else {
+        Thresholds::uniform(params.levels, 0.35)
+    };
+    for (i, spec) in specs.into_iter().enumerate() {
+        let job = JobSpec::new(JobSource::Spec(spec), thr.clone())
+            .with_priority(prios[i % prios.len()])
+            .with_tenant(format!("tenant{}", i % tenants));
+        // Backpressure: retry until the queue has room.
+        loop {
+            match svc.submit(job.clone()) {
+                Ok(_) => break,
+                Err(SubmitError::QueueFull(_)) => {
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+    }
+    let report = svc.shutdown();
+    svc_metrics::print_report(&report.results, &report.metrics);
+    if report.pool_panics > 0 {
+        println!("pool absorbed {} analyzer panics", report.pool_panics);
+    }
+    if csv {
+        let path = svc_metrics::write_csv(&report.results, "service_jobs.csv")?;
+        println!("wrote {}", path.display());
+    }
+    let incomplete = report.results.len() - report.metrics.completed;
+    if incomplete > 0 {
+        return Err(anyhow!("{incomplete} jobs did not complete"));
+    }
     Ok(())
 }
 

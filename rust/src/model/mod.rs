@@ -30,6 +30,18 @@ pub trait Analyzer: Send + Sync {
     fn name(&self) -> &str;
 }
 
+/// Analyzers are object-safe and shared via `Arc`; delegate through the
+/// pointer so wrappers like [`DelayAnalyzer`] can take `Arc<dyn Analyzer>`.
+impl<A: Analyzer + ?Sized> Analyzer for std::sync::Arc<A> {
+    fn analyze(&self, slide: &Slide, level: usize, tiles: &[TileId]) -> Vec<f32> {
+        (**self).analyze(slide, level, tiles)
+    }
+
+    fn name(&self) -> &str {
+        (**self).name()
+    }
+}
+
 /// Wraps an analyzer with a fixed per-tile delay, emulating the paper's
 /// analysis-block cost (Table 3: ≈0.33 s per tile on an i5-9500). On this
 /// single-core testbed the delay makes cluster executions latency-bound,

@@ -361,4 +361,43 @@ mod tests {
         assert_eq!(loaded.slides.len(), 1);
         std::fs::remove_dir_all(&dir).unwrap();
     }
+
+    #[test]
+    fn file_roundtrip_preserves_replay_and_tuning_inputs() {
+        // Save → load must preserve everything downstream code consumes:
+        // replayed trees (1e-6 prob quantization must not flip any zoom
+        // decision at these thresholds) and per-level tuning pairs.
+        let (_, c) = cache_one();
+        let cache = PredCache {
+            slides: vec![c.clone()],
+        };
+        let dir = std::env::temp_dir().join(format!("pyramidai_replay_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cache.json");
+        cache.save(&path).unwrap();
+        let loaded = PredCache::load(&path).unwrap();
+        let lp = &loaded.slides[0];
+        assert_eq!(lp.initial, c.initial, "initial working set survives I/O");
+        for thr in [0.2, 0.4, 0.7] {
+            let t = Thresholds::uniform(3, thr);
+            let orig = c.replay(&t);
+            let back = lp.replay(&t);
+            back.check_consistency().unwrap();
+            assert_eq!(orig.analyzed_per_level(), back.analyzed_per_level());
+            assert_eq!(
+                orig.nodes.iter().flatten().map(|n| n.tile).collect::<Vec<_>>(),
+                back.nodes.iter().flatten().map(|n| n.tile).collect::<Vec<_>>(),
+                "replayed tile sets differ at thr={thr}"
+            );
+        }
+        for level in 0..3 {
+            assert_eq!(
+                lp.level_pairs(level).len(),
+                c.level_pairs(level).len(),
+                "tuning pairs lost at level {level}"
+            );
+        }
+        assert_eq!(lp.reference_count(), c.reference_count());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
 }

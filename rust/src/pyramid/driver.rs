@@ -31,6 +31,12 @@ pub fn run_with_provider<F>(
 where
     F: FnMut(usize, &[TileId]) -> Vec<f32>,
 {
+    // A zero-level pyramid has no entry level: `levels - 1` below would
+    // wrap and index nonsense. Reject it loudly.
+    assert!(
+        levels > 0,
+        "run_with_provider requires at least one pyramid level (slide {slide_id:?})"
+    );
     assert_eq!(thresholds.zoom.len(), levels, "one threshold per level");
     let mut tree = ExecTree::new(slide_id, levels);
     tree.initial = initial.clone();
@@ -201,6 +207,20 @@ mod tests {
         let t16 = run_pyramidal(&s, &a, &Thresholds::uniform(3, 0.4), 16);
         assert_eq!(t1.analyzed_per_level(), t16.analyzed_per_level());
         assert_eq!(t1.nodes[0], t16.nodes[0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one pyramid level")]
+    fn zero_level_input_is_rejected_not_underflowed() {
+        // Regression: `level = levels - 1` used to wrap on levels == 0 and
+        // die on an opaque out-of-bounds/overflow panic.
+        run_with_provider(
+            "zero",
+            0,
+            vec![],
+            &Thresholds { zoom: vec![] },
+            |_, _| Vec::new(),
+        );
     }
 
     #[test]

@@ -1,0 +1,239 @@
+//! Job descriptors and results of the multi-slide analysis service.
+//!
+//! A job is one slide analysis request: either a live [`SlideSpec`] run
+//! through the shared analyzer pool, or a replay of a cached
+//! [`SlidePredictions`] under (possibly new) thresholds — the same two
+//! execution modes the single-slide driver supports (§4.3).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::predcache::SlidePredictions;
+use crate::pyramid::tree::{ExecTree, Thresholds};
+use crate::synth::slide_gen::SlideSpec;
+
+/// Service-assigned job identifier (monotonic per service instance).
+pub type JobId = u64;
+
+/// Scheduling priority: higher runs first under [`Policy::Priority`].
+///
+/// [`Policy::Priority`]: crate::service::scheduler::Policy::Priority
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Priority {
+    Low,
+    Normal,
+    High,
+}
+
+impl Priority {
+    /// Numeric rank for selection (higher wins).
+    pub fn rank(self) -> u8 {
+        match self {
+            Priority::Low => 0,
+            Priority::Normal => 1,
+            Priority::High => 2,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Priority::Low => "low",
+            Priority::Normal => "normal",
+            Priority::High => "high",
+        }
+    }
+
+    pub fn from_str(s: &str) -> Option<Priority> {
+        match s {
+            "low" => Some(Priority::Low),
+            "normal" => Some(Priority::Normal),
+            "high" => Some(Priority::High),
+            _ => None,
+        }
+    }
+}
+
+/// Where a job's probabilities come from.
+#[derive(Clone)]
+pub enum JobSource {
+    /// Live analysis: rebuild the slide from its spec and run the shared
+    /// analyzer pool over every frontier batch.
+    Spec(SlideSpec),
+    /// Post-mortem replay of a prediction cache (no analyzer time).
+    Cached(Arc<SlidePredictions>),
+}
+
+impl JobSource {
+    pub fn slide_id(&self) -> &str {
+        match self {
+            JobSource::Spec(s) => &s.id,
+            JobSource::Cached(c) => &c.spec.id,
+        }
+    }
+
+    pub fn levels(&self) -> usize {
+        match self {
+            JobSource::Spec(s) => s.levels,
+            JobSource::Cached(c) => c.spec.levels,
+        }
+    }
+}
+
+impl std::fmt::Debug for JobSource {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            JobSource::Spec(s) => write!(f, "Spec({})", s.id),
+            JobSource::Cached(c) => write!(f, "Cached({})", c.spec.id),
+        }
+    }
+}
+
+/// One analysis request.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    pub source: JobSource,
+    pub thresholds: Thresholds,
+    pub priority: Priority,
+    /// Fair-share accounting key (a user, a lab, a billing account…).
+    pub tenant: String,
+    /// Maximum time the job may wait in the admission queue; expired jobs
+    /// are dropped at admission instead of running late (`None` = wait
+    /// forever).
+    pub deadline: Option<Duration>,
+}
+
+impl JobSpec {
+    /// A job with default priority/tenant and no deadline.
+    pub fn new(source: JobSource, thresholds: Thresholds) -> JobSpec {
+        JobSpec {
+            source,
+            thresholds,
+            priority: Priority::Normal,
+            tenant: "default".to_string(),
+            deadline: None,
+        }
+    }
+
+    pub fn with_priority(mut self, p: Priority) -> JobSpec {
+        self.priority = p;
+        self
+    }
+
+    pub fn with_tenant(mut self, tenant: impl Into<String>) -> JobSpec {
+        self.tenant = tenant.into();
+        self
+    }
+
+    pub fn with_deadline(mut self, d: Duration) -> JobSpec {
+        self.deadline = Some(d);
+        self
+    }
+}
+
+/// Terminal state of a job.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum JobState {
+    /// Ran to completion; `JobResult::tree` is set.
+    Completed,
+    /// Cancelled while still queued.
+    Cancelled,
+    /// Queue wait exceeded the job's deadline; dropped at admission.
+    Expired,
+    /// The job's execution panicked (analyzer fault); the service survives.
+    Failed(String),
+}
+
+impl JobState {
+    pub fn as_str(&self) -> &str {
+        match self {
+            JobState::Completed => "completed",
+            JobState::Cancelled => "cancelled",
+            JobState::Expired => "expired",
+            JobState::Failed(_) => "failed",
+        }
+    }
+}
+
+/// Terminal record of one job: state, execution tree and timings.
+#[derive(Debug, Clone)]
+pub struct JobResult {
+    pub id: JobId,
+    pub slide_id: String,
+    pub tenant: String,
+    pub priority: Priority,
+    pub state: JobState,
+    /// The execution tree (identical to a standalone `run_pyramidal` /
+    /// `replay` of the same source). `None` unless `Completed`.
+    pub tree: Option<ExecTree>,
+    /// Time spent in the admission queue before the scheduler started it.
+    pub queue_wait: Duration,
+    /// Time from scheduler start to completion.
+    pub run_time: Duration,
+    /// Tiles analyzed (0 for cancelled/expired jobs).
+    pub tiles: usize,
+}
+
+impl JobResult {
+    /// End-to-end latency: queue wait + run time.
+    pub fn latency(&self) -> Duration {
+        self.queue_wait + self.run_time
+    }
+
+    /// Throughput of the run phase in tiles per second.
+    pub fn tiles_per_sec(&self) -> f64 {
+        let s = self.run_time.as_secs_f64();
+        if s > 0.0 {
+            self.tiles as f64 / s
+        } else {
+            0.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::synth::slide_gen::SlideKind;
+
+    #[test]
+    fn priority_ordering_and_strings() {
+        assert!(Priority::High.rank() > Priority::Normal.rank());
+        assert!(Priority::Normal.rank() > Priority::Low.rank());
+        for p in [Priority::Low, Priority::Normal, Priority::High] {
+            assert_eq!(Priority::from_str(p.as_str()), Some(p));
+        }
+        assert_eq!(Priority::from_str("urgent"), None);
+    }
+
+    #[test]
+    fn job_spec_builder() {
+        let spec = SlideSpec::new("j", 1, 16, 8, 3, 64, SlideKind::Negative);
+        let j = JobSpec::new(JobSource::Spec(spec), Thresholds::uniform(3, 0.4))
+            .with_priority(Priority::High)
+            .with_tenant("lab_a")
+            .with_deadline(Duration::from_secs(5));
+        assert_eq!(j.source.slide_id(), "j");
+        assert_eq!(j.source.levels(), 3);
+        assert_eq!(j.priority, Priority::High);
+        assert_eq!(j.tenant, "lab_a");
+        assert_eq!(j.deadline, Some(Duration::from_secs(5)));
+    }
+
+    #[test]
+    fn result_latency_and_throughput() {
+        let r = JobResult {
+            id: 1,
+            slide_id: "s".into(),
+            tenant: "t".into(),
+            priority: Priority::Normal,
+            state: JobState::Completed,
+            tree: None,
+            queue_wait: Duration::from_millis(200),
+            run_time: Duration::from_millis(800),
+            tiles: 400,
+        };
+        assert_eq!(r.latency(), Duration::from_secs(1));
+        assert!((r.tiles_per_sec() - 500.0).abs() < 1e-9);
+        assert_eq!(r.state.as_str(), "completed");
+    }
+}

@@ -1,0 +1,244 @@
+//! Service throughput metrics: per-job latency breakdowns and aggregate
+//! tiles/sec, rendered through the same harness table/CSV machinery as the
+//! paper experiments so `pyramidai serve` output lines up with the report
+//! tables.
+
+use std::time::Duration;
+
+use crate::harness::{print_table, CsvOut};
+use crate::util::stats::{fmt_duration, percentile};
+
+use super::job::{JobResult, JobState};
+
+/// Aggregate view over one service run.
+#[derive(Debug, Clone)]
+pub struct ServiceMetrics {
+    pub completed: usize,
+    pub cancelled: usize,
+    pub expired: usize,
+    pub failed: usize,
+    /// Tiles analyzed by completed jobs.
+    pub tiles: usize,
+    /// Wall-clock time of the whole service run (service start → drain).
+    pub wall: Duration,
+    /// Mean / p50 / p95 end-to-end latency (queue wait + run) over
+    /// completed jobs.
+    pub latency_mean: Duration,
+    pub latency_p50: Duration,
+    pub latency_p95: Duration,
+    /// Mean queue wait over completed jobs.
+    pub queue_wait_mean: Duration,
+}
+
+impl ServiceMetrics {
+    pub fn from_results(results: &[JobResult], wall: Duration) -> ServiceMetrics {
+        let mut completed = 0;
+        let mut cancelled = 0;
+        let mut expired = 0;
+        let mut failed = 0;
+        let mut tiles = 0;
+        let mut latencies = Vec::new();
+        let mut waits = Vec::new();
+        for r in results {
+            match r.state {
+                JobState::Completed => {
+                    completed += 1;
+                    tiles += r.tiles;
+                    latencies.push(r.latency().as_secs_f64());
+                    waits.push(r.queue_wait.as_secs_f64());
+                }
+                JobState::Cancelled => cancelled += 1,
+                JobState::Expired => expired += 1,
+                JobState::Failed(_) => failed += 1,
+            }
+        }
+        let mean = |xs: &[f64]| {
+            if xs.is_empty() {
+                0.0
+            } else {
+                xs.iter().sum::<f64>() / xs.len() as f64
+            }
+        };
+        let pct = |xs: &[f64], p: f64| if xs.is_empty() { 0.0 } else { percentile(xs, p) };
+        ServiceMetrics {
+            completed,
+            cancelled,
+            expired,
+            failed,
+            tiles,
+            wall,
+            latency_mean: Duration::from_secs_f64(mean(&latencies)),
+            latency_p50: Duration::from_secs_f64(pct(&latencies, 50.0)),
+            latency_p95: Duration::from_secs_f64(pct(&latencies, 95.0)),
+            queue_wait_mean: Duration::from_secs_f64(mean(&waits)),
+        }
+    }
+
+    /// Aggregate service throughput: completed tiles per wall-clock second.
+    pub fn tiles_per_sec(&self) -> f64 {
+        let s = self.wall.as_secs_f64();
+        if s > 0.0 {
+            self.tiles as f64 / s
+        } else {
+            0.0
+        }
+    }
+
+    /// Completed jobs per wall-clock second.
+    pub fn jobs_per_sec(&self) -> f64 {
+        let s = self.wall.as_secs_f64();
+        if s > 0.0 {
+            self.completed as f64 / s
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Print the per-job table (sorted by job id) and the aggregate summary.
+pub fn print_report(results: &[JobResult], metrics: &ServiceMetrics) {
+    let mut by_id: Vec<&JobResult> = results.iter().collect();
+    by_id.sort_by_key(|r| r.id);
+    let rows: Vec<Vec<String>> = by_id
+        .iter()
+        .map(|r| {
+            vec![
+                r.id.to_string(),
+                r.slide_id.clone(),
+                r.tenant.clone(),
+                r.priority.as_str().to_string(),
+                r.state.as_str().to_string(),
+                r.tiles.to_string(),
+                fmt_duration(r.queue_wait),
+                fmt_duration(r.run_time),
+                format!("{:.0}", r.tiles_per_sec()),
+            ]
+        })
+        .collect();
+    print_table(
+        "service jobs",
+        &[
+            "job", "slide", "tenant", "prio", "state", "tiles", "queue", "run", "tiles/s",
+        ],
+        &rows,
+    );
+    print_table(
+        "service throughput",
+        &["metric", "value"],
+        &[
+            vec!["jobs completed".into(), metrics.completed.to_string()],
+            vec!["jobs cancelled".into(), metrics.cancelled.to_string()],
+            vec!["jobs expired".into(), metrics.expired.to_string()],
+            vec!["jobs failed".into(), metrics.failed.to_string()],
+            vec!["tiles analyzed".into(), metrics.tiles.to_string()],
+            vec!["wall".into(), fmt_duration(metrics.wall)],
+            vec![
+                "aggregate tiles/s".into(),
+                format!("{:.1}", metrics.tiles_per_sec()),
+            ],
+            vec![
+                "jobs/s".into(),
+                format!("{:.2}", metrics.jobs_per_sec()),
+            ],
+            vec![
+                "latency mean".into(),
+                fmt_duration(metrics.latency_mean),
+            ],
+            vec!["latency p50".into(), fmt_duration(metrics.latency_p50)],
+            vec!["latency p95".into(), fmt_duration(metrics.latency_p95)],
+            vec![
+                "queue wait mean".into(),
+                fmt_duration(metrics.queue_wait_mean),
+            ],
+        ],
+    );
+}
+
+/// Write per-job rows to `bench_results/<name>` for later analysis.
+pub fn write_csv(results: &[JobResult], name: &str) -> std::io::Result<std::path::PathBuf> {
+    let mut csv = CsvOut::create(
+        name,
+        &[
+            "job", "slide", "tenant", "priority", "state", "tiles", "queue_wait_s", "run_s",
+            "tiles_per_sec",
+        ],
+    )?;
+    let mut by_id: Vec<&JobResult> = results.iter().collect();
+    by_id.sort_by_key(|r| r.id);
+    for r in by_id {
+        csv.row(&[
+            r.id.to_string(),
+            r.slide_id.clone(),
+            r.tenant.clone(),
+            r.priority.as_str().to_string(),
+            r.state.as_str().to_string(),
+            r.tiles.to_string(),
+            format!("{:.6}", r.queue_wait.as_secs_f64()),
+            format!("{:.6}", r.run_time.as_secs_f64()),
+            format!("{:.1}", r.tiles_per_sec()),
+        ])?;
+    }
+    Ok(csv.path().to_path_buf())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::service::job::Priority;
+
+    fn result(id: u64, state: JobState, tiles: usize, wait_ms: u64, run_ms: u64) -> JobResult {
+        JobResult {
+            id,
+            slide_id: format!("s{id}"),
+            tenant: "t".into(),
+            priority: Priority::Normal,
+            state,
+            tree: None,
+            queue_wait: Duration::from_millis(wait_ms),
+            run_time: Duration::from_millis(run_ms),
+            tiles,
+        }
+    }
+
+    #[test]
+    fn aggregates_count_states_and_tiles() {
+        let rs = vec![
+            result(1, JobState::Completed, 100, 0, 500),
+            result(2, JobState::Completed, 300, 100, 500),
+            result(3, JobState::Cancelled, 0, 50, 0),
+            result(4, JobState::Expired, 0, 80, 0),
+            result(5, JobState::Failed("x".into()), 10, 0, 20),
+        ];
+        let m = ServiceMetrics::from_results(&rs, Duration::from_secs(2));
+        assert_eq!(m.completed, 2);
+        assert_eq!(m.cancelled, 1);
+        assert_eq!(m.expired, 1);
+        assert_eq!(m.failed, 1);
+        assert_eq!(m.tiles, 400, "failed job tiles excluded");
+        assert!((m.tiles_per_sec() - 200.0).abs() < 1e-9);
+        assert!((m.jobs_per_sec() - 1.0).abs() < 1e-9);
+        // latencies: 0.5s and 0.6s → mean 0.55, p50 0.55
+        assert!((m.latency_mean.as_secs_f64() - 0.55).abs() < 1e-9);
+        assert!((m.latency_p50.as_secs_f64() - 0.55).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_results_are_all_zero() {
+        let m = ServiceMetrics::from_results(&[], Duration::ZERO);
+        assert_eq!(m.completed, 0);
+        assert_eq!(m.tiles_per_sec(), 0.0);
+        assert_eq!(m.latency_p95, Duration::ZERO);
+    }
+
+    #[test]
+    fn report_prints_and_csv_writes() {
+        let rs = vec![result(1, JobState::Completed, 40, 1, 10)];
+        let m = ServiceMetrics::from_results(&rs, Duration::from_millis(20));
+        print_report(&rs, &m);
+        let path = write_csv(&rs, "test_service_metrics.csv").unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("job,slide,tenant"));
+        assert!(text.contains("s1"));
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -1,0 +1,215 @@
+//! Shared analyzer pool: one [`ThreadPool`] serving every job's frontier
+//! batches.
+//!
+//! A level frontier is split into `batch`-sized chunks that spread over
+//! the pool's workers; chunk results are reassembled in submission order,
+//! so probabilities come back exactly as a serial `analyze_batched` would
+//! produce them — scheduling never changes a job's ExecTree. Dispatch is
+//! asynchronous (`analyze_async`): the scheduler fires a batch and moves
+//! on, so frontier batches of *different* slides genuinely overlap on the
+//! same workers.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::model::Analyzer;
+use crate::slide::pyramid::Slide;
+use crate::slide::tile::TileId;
+use crate::util::threadpool::ThreadPool;
+
+/// Shared analysis-worker pool.
+pub struct AnalyzerPool {
+    pool: ThreadPool,
+    analyzer: Arc<dyn Analyzer>,
+    workers: usize,
+    /// Analyzer panics caught in chunk closures (the inner catch fires
+    /// before `ThreadPool`'s own counter can see the unwind).
+    panics: Arc<AtomicUsize>,
+}
+
+/// In-flight chunk results of one frontier batch (order-preserving).
+struct BatchSlots {
+    out: Vec<Option<Vec<f32>>>,
+    left: usize,
+    done: Option<Box<dyn FnOnce(Vec<f32>) + Send>>,
+}
+
+impl AnalyzerPool {
+    pub fn new(analyzer: Arc<dyn Analyzer>, workers: usize) -> AnalyzerPool {
+        let workers = workers.max(1);
+        AnalyzerPool {
+            pool: ThreadPool::new(workers),
+            analyzer,
+            workers,
+            panics: Arc::new(AtomicUsize::new(0)),
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Analyzer faults absorbed so far (the workers survive them).
+    pub fn panic_count(&self) -> usize {
+        self.panics.load(Ordering::SeqCst) + self.pool.panic_count()
+    }
+
+    pub fn analyzer_name(&self) -> &str {
+        self.analyzer.name()
+    }
+
+    /// Analyze one frontier batch asynchronously: chunk, fan out over the
+    /// pool, and call `done` with the reassembled per-tile probabilities
+    /// once the last chunk lands. A chunk whose analyzer call panics
+    /// reports an empty result, which the driver's provider-count check
+    /// turns into a per-job failure instead of a wedged service.
+    pub fn analyze_async(
+        &self,
+        slide: Arc<Slide>,
+        level: usize,
+        tiles: Vec<TileId>,
+        batch: usize,
+        done: Box<dyn FnOnce(Vec<f32>) + Send>,
+    ) {
+        let chunks: Vec<Vec<TileId>> = tiles
+            .chunks(batch.max(1))
+            .map(|c| c.to_vec())
+            .collect();
+        let n = chunks.len();
+        if n == 0 {
+            done(Vec::new());
+            return;
+        }
+        let slots = Arc::new(Mutex::new(BatchSlots {
+            out: (0..n).map(|_| None).collect(),
+            left: n,
+            done: Some(done),
+        }));
+        for (i, chunk) in chunks.into_iter().enumerate() {
+            let slide = Arc::clone(&slide);
+            let analyzer = Arc::clone(&self.analyzer);
+            let slots = Arc::clone(&slots);
+            let panics = Arc::clone(&self.panics);
+            self.pool.execute(move || {
+                let ps = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    analyzer.analyze(&slide, level, &chunk)
+                }))
+                .unwrap_or_else(|_| {
+                    panics.fetch_add(1, Ordering::SeqCst);
+                    Vec::new()
+                });
+                let finish = {
+                    let mut s = slots.lock().unwrap();
+                    s.out[i] = Some(ps);
+                    s.left -= 1;
+                    if s.left == 0 {
+                        let probs: Vec<f32> =
+                            s.out.iter_mut().flat_map(|o| o.take().unwrap()).collect();
+                        Some((s.done.take().expect("done callback set"), probs))
+                    } else {
+                        None
+                    }
+                };
+                if let Some((done, probs)) = finish {
+                    done(probs);
+                }
+            });
+        }
+    }
+
+    /// Synchronous convenience wrapper around [`Self::analyze_async`].
+    pub fn analyze(
+        &self,
+        slide: &Arc<Slide>,
+        level: usize,
+        tiles: &[TileId],
+        batch: usize,
+    ) -> Vec<f32> {
+        let (tx, rx) = std::sync::mpsc::channel();
+        self.analyze_async(
+            Arc::clone(slide),
+            level,
+            tiles.to_vec(),
+            batch,
+            Box::new(move |ps| {
+                let _ = tx.send(ps);
+            }),
+        );
+        rx.recv().expect("pool completes batch")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::oracle::OracleAnalyzer;
+    use crate::synth::slide_gen::{SlideKind, SlideSpec};
+
+    fn slide() -> Arc<Slide> {
+        Arc::new(Slide::from_spec(SlideSpec::new(
+            "pool",
+            5,
+            16,
+            8,
+            3,
+            64,
+            SlideKind::LargeTumor,
+        )))
+    }
+
+    #[test]
+    fn pooled_analysis_matches_direct_call() {
+        let analyzer: Arc<dyn Analyzer> = Arc::new(OracleAnalyzer::new(1));
+        let pool = AnalyzerPool::new(Arc::clone(&analyzer), 4);
+        let s = slide();
+        let tiles = s.level_tile_ids(2);
+        let direct = analyzer.analyze(&s, 2, &tiles);
+        // Any chunking must reassemble to the same ordered probabilities.
+        for batch in [1, 3, 16, 1000] {
+            let pooled = pool.analyze(&s, 2, &tiles, batch);
+            assert_eq!(pooled, direct, "batch={batch}");
+        }
+    }
+
+    #[test]
+    fn empty_frontier_completes_immediately() {
+        let analyzer: Arc<dyn Analyzer> = Arc::new(OracleAnalyzer::new(1));
+        let pool = AnalyzerPool::new(analyzer, 2);
+        let s = slide();
+        assert_eq!(pool.analyze(&s, 0, &[], 8), Vec::<f32>::new());
+    }
+
+    #[test]
+    fn analyzer_panic_is_counted_and_pool_survives() {
+        let pool = AnalyzerPool::new(Arc::new(crate::service::FaultyAnalyzer), 2);
+        let s = slide();
+        let tiles = s.level_tile_ids(1);
+        // Faulting level: chunks report empty, the counter records them.
+        let ps = pool.analyze(&s, 1, &tiles, 8);
+        assert!(ps.len() < tiles.len(), "faulting chunks yield no probs");
+        assert!(pool.panic_count() >= 1);
+        // The pool still serves healthy levels afterwards.
+        let ok = pool.analyze(&s, 2, &s.level_tile_ids(2), 8);
+        assert_eq!(ok.len(), s.level_tile_ids(2).len());
+    }
+
+    #[test]
+    fn concurrent_batches_from_many_threads() {
+        let analyzer: Arc<dyn Analyzer> = Arc::new(OracleAnalyzer::new(1));
+        let pool = Arc::new(AnalyzerPool::new(Arc::clone(&analyzer), 3));
+        let s = slide();
+        let tiles = s.level_tile_ids(1);
+        let expect = analyzer.analyze(&s, 1, &tiles);
+        let handles: Vec<_> = (0..6)
+            .map(|_| {
+                let pool = Arc::clone(&pool);
+                let s = Arc::clone(&s);
+                let tiles = tiles.clone();
+                std::thread::spawn(move || pool.analyze(&s, 1, &tiles, 4))
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), expect);
+        }
+    }
+}

@@ -1,0 +1,195 @@
+//! Bounded admission queue with backpressure and cancellation.
+//!
+//! Submissions beyond `capacity` are rejected immediately (the caller sees
+//! [`SubmitError::QueueFull`] and decides whether to retry, shed or defer)
+//! rather than buffered without bound — under sustained overload an
+//! unbounded queue only converts memory into latency. Pop order is decided
+//! by the scheduler's policy, not the queue, so one queue serves all
+//! policies.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use super::job::{JobId, JobSpec};
+
+/// Why a submission was not admitted.
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+pub enum SubmitError {
+    #[error("admission queue full ({0} jobs)")]
+    QueueFull(usize),
+    #[error("service is shutting down")]
+    Closed,
+    #[error("invalid job: {0}")]
+    Invalid(String),
+}
+
+/// A job admitted to the queue, stamped with identity and arrival time.
+#[derive(Debug, Clone)]
+pub struct QueuedJob {
+    pub id: JobId,
+    pub spec: JobSpec,
+    pub submitted: Instant,
+}
+
+struct Inner {
+    entries: VecDeque<QueuedJob>,
+    next_id: JobId,
+    closed: bool,
+}
+
+/// The service's admission queue. Thread-safe; submitters and the
+/// scheduler share it through an `Arc`.
+pub struct AdmissionQueue {
+    capacity: usize,
+    inner: Mutex<Inner>,
+}
+
+impl AdmissionQueue {
+    pub fn new(capacity: usize) -> AdmissionQueue {
+        AdmissionQueue {
+            capacity: capacity.max(1),
+            inner: Mutex::new(Inner {
+                entries: VecDeque::new(),
+                next_id: 1,
+                closed: false,
+            }),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Admit a job, returning its service-assigned id, or reject it when
+    /// the queue is at capacity (backpressure) or closed.
+    pub fn submit(&self, spec: JobSpec) -> Result<JobId, SubmitError> {
+        if spec.source.levels() == 0 {
+            return Err(SubmitError::Invalid(format!(
+                "job {:?} has zero pyramid levels",
+                spec.source
+            )));
+        }
+        let mut inner = self.inner.lock().unwrap();
+        if inner.closed {
+            return Err(SubmitError::Closed);
+        }
+        if inner.entries.len() >= self.capacity {
+            return Err(SubmitError::QueueFull(self.capacity));
+        }
+        let id = inner.next_id;
+        inner.next_id += 1;
+        inner.entries.push_back(QueuedJob {
+            id,
+            spec,
+            submitted: Instant::now(),
+        });
+        Ok(id)
+    }
+
+    /// Remove a still-queued job. Returns it so the caller can record a
+    /// `Cancelled` result; `None` when the job already left the queue
+    /// (started, finished, or never existed) — cancellation is
+    /// admission-time only, a running analysis is never aborted mid-level.
+    pub fn cancel(&self, id: JobId) -> Option<QueuedJob> {
+        let mut inner = self.inner.lock().unwrap();
+        let pos = inner.entries.iter().position(|q| q.id == id)?;
+        inner.entries.remove(pos)
+    }
+
+    /// Remove and return the queued job selected by `pick` (an index into
+    /// the current queue snapshot). The scheduler passes its policy here.
+    pub fn pop_with<F>(&self, pick: F) -> Option<QueuedJob>
+    where
+        F: FnOnce(&[QueuedJob]) -> Option<usize>,
+    {
+        let mut inner = self.inner.lock().unwrap();
+        inner.entries.make_contiguous();
+        let idx = pick(inner.entries.as_slices().0)?;
+        inner.entries.remove(idx)
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Stop accepting new submissions; queued jobs still drain.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pyramid::tree::Thresholds;
+    use crate::service::job::JobSource;
+    use crate::synth::slide_gen::{SlideKind, SlideSpec};
+
+    fn job(name: &str) -> JobSpec {
+        let spec = SlideSpec::new(name, 1, 16, 8, 3, 64, SlideKind::Negative);
+        JobSpec::new(JobSource::Spec(spec), Thresholds::uniform(3, 0.4))
+    }
+
+    #[test]
+    fn backpressure_rejects_when_full() {
+        let q = AdmissionQueue::new(2);
+        assert!(q.submit(job("a")).is_ok());
+        assert!(q.submit(job("b")).is_ok());
+        assert_eq!(q.submit(job("c")), Err(SubmitError::QueueFull(2)));
+        // Draining one slot re-opens admission.
+        q.pop_with(|e| (!e.is_empty()).then_some(0)).unwrap();
+        assert!(q.submit(job("c")).is_ok());
+    }
+
+    #[test]
+    fn ids_are_monotonic_and_pop_sees_fifo_order() {
+        let q = AdmissionQueue::new(8);
+        let a = q.submit(job("a")).unwrap();
+        let b = q.submit(job("b")).unwrap();
+        assert!(b > a);
+        let first = q.pop_with(|e| {
+            assert_eq!(e.len(), 2);
+            assert!(e[0].id < e[1].id);
+            Some(0)
+        });
+        assert_eq!(first.unwrap().id, a);
+    }
+
+    #[test]
+    fn cancel_removes_only_queued_jobs() {
+        let q = AdmissionQueue::new(8);
+        let a = q.submit(job("a")).unwrap();
+        let b = q.submit(job("b")).unwrap();
+        let got = q.cancel(a).expect("a still queued");
+        assert_eq!(got.id, a);
+        assert_eq!(q.len(), 1);
+        assert!(q.cancel(a).is_none(), "double cancel");
+        assert!(q.cancel(9999).is_none(), "unknown id");
+        let left = q.pop_with(|_| Some(0)).unwrap();
+        assert_eq!(left.id, b);
+    }
+
+    #[test]
+    fn close_stops_admission_but_drains() {
+        let q = AdmissionQueue::new(8);
+        q.submit(job("a")).unwrap();
+        q.close();
+        assert_eq!(q.submit(job("b")), Err(SubmitError::Closed));
+        assert_eq!(q.len(), 1, "queued work survives close");
+    }
+
+    #[test]
+    fn zero_level_jobs_rejected_at_submission() {
+        let q = AdmissionQueue::new(8);
+        // Build an invalid spec bypassing SlideSpec::new's validation.
+        let mut spec = SlideSpec::new("z", 1, 16, 8, 1, 64, SlideKind::Negative);
+        spec.levels = 0;
+        let j = JobSpec::new(JobSource::Spec(spec), Thresholds::uniform(0, 0.4));
+        assert!(matches!(q.submit(j), Err(SubmitError::Invalid(_))));
+    }
+}

@@ -1,0 +1,481 @@
+//! Scheduling policies and the service event loop.
+//!
+//! Each running job is driven by a lightweight coordinator thread that
+//! executes the unmodified [`run_with_provider`] driver; the probability
+//! provider ships every level frontier to the scheduler as a
+//! [`BatchRequest`] and blocks for the probabilities. The scheduler orders
+//! pending requests by policy and fires them at the shared
+//! [`AnalyzerPool`], so the level-by-level progress of different slides
+//! interleaves on the same workers. Because the provider returns exactly
+//! what a standalone run would compute, a job's ExecTree is identical to
+//! `run_pyramidal` / `SlidePredictions::replay` no matter how the
+//! scheduler interleaved it.
+//!
+//! [`run_with_provider`]: crate::pyramid::driver::run_with_provider
+
+use std::collections::HashMap;
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::predcache::SlidePredictions;
+use crate::preprocess::otsu::background_removal;
+use crate::pyramid::driver::{run_with_provider, BG_MARGIN};
+use crate::pyramid::tree::ExecTree;
+use crate::slide::pyramid::Slide;
+use crate::slide::tile::TileId;
+
+use super::job::{JobId, JobResult, JobState, Priority};
+use super::pool::AnalyzerPool;
+use super::queue::{AdmissionQueue, QueuedJob};
+
+/// Which job goes next — both at admission (queue → running set) and at
+/// batch dispatch (pending frontiers → pool).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    /// Strict submission order.
+    Fifo,
+    /// Higher [`Priority`] first; submission order breaks ties.
+    Priority,
+    /// The tenant with the fewest tiles consumed so far goes first, so one
+    /// heavy tenant cannot starve the others.
+    FairShare,
+}
+
+impl Policy {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Policy::Fifo => "fifo",
+            Policy::Priority => "priority",
+            Policy::FairShare => "fair",
+        }
+    }
+
+    pub fn from_str(s: &str) -> Option<Policy> {
+        match s {
+            "fifo" => Some(Policy::Fifo),
+            "priority" => Some(Policy::Priority),
+            "fair" | "fair_share" | "fair-share" => Some(Policy::FairShare),
+            _ => None,
+        }
+    }
+
+    /// Pick the next candidate's index. `usage` is tiles consumed per
+    /// tenant (fair-share state). Ties always fall back to submission
+    /// order (lowest job id), which makes every policy deterministic for a
+    /// fixed candidate set.
+    pub fn select(self, cands: &[Candidate<'_>], usage: &HashMap<String, u64>) -> Option<usize> {
+        if cands.is_empty() {
+            return None;
+        }
+        let idx = match self {
+            Policy::Fifo => {
+                cands
+                    .iter()
+                    .enumerate()
+                    .min_by_key(|(_, c)| c.id)
+                    .unwrap()
+                    .0
+            }
+            Policy::Priority => {
+                cands
+                    .iter()
+                    .enumerate()
+                    .min_by_key(|(_, c)| (std::cmp::Reverse(c.priority.rank()), c.id))
+                    .unwrap()
+                    .0
+            }
+            Policy::FairShare => {
+                cands
+                    .iter()
+                    .enumerate()
+                    .min_by_key(|(_, c)| (usage.get(c.tenant).copied().unwrap_or(0), c.id))
+                    .unwrap()
+                    .0
+            }
+        };
+        Some(idx)
+    }
+}
+
+/// What a policy needs to know about one schedulable unit.
+#[derive(Debug, Clone, Copy)]
+pub struct Candidate<'a> {
+    pub id: JobId,
+    pub priority: Priority,
+    pub tenant: &'a str,
+}
+
+/// One level frontier of one job, awaiting pool time.
+pub(crate) struct BatchRequest {
+    pub id: JobId,
+    pub level: usize,
+    pub tiles: Vec<TileId>,
+    pub reply: Sender<Vec<f32>>,
+}
+
+/// Scheduler-internal events (coordinators and the service handle feed
+/// these into the loop).
+pub(crate) enum Event {
+    /// New submissions may be waiting in the admission queue.
+    JobsAvailable,
+    /// A queued job was removed by `AnalysisService::cancel`.
+    Cancelled(QueuedJob),
+    /// A coordinator wants its next frontier analyzed.
+    Batch(BatchRequest),
+    /// A coordinator finished (tree) or its driver panicked (message).
+    Done {
+        id: JobId,
+        outcome: Result<ExecTree, String>,
+    },
+    /// Admission is closed; exit once everything drains.
+    Close,
+}
+
+/// Scheduler tuning knobs.
+#[derive(Debug, Clone)]
+pub struct SchedulerConfig {
+    pub policy: Policy,
+    /// How many jobs may be in the running set at once. Small values make
+    /// the policy order starkly visible; larger values increase overlap.
+    pub max_in_flight: usize,
+    /// Analysis chunk size within one frontier batch.
+    pub batch: usize,
+}
+
+#[derive(Clone)]
+enum RunSource {
+    Live(Arc<Slide>),
+    Cached(Arc<SlidePredictions>),
+}
+
+struct RunningJob {
+    slide_id: String,
+    tenant: String,
+    priority: Priority,
+    source: RunSource,
+    queue_wait: Duration,
+    started: Instant,
+    tiles: usize,
+    /// The coordinator thread; reaped when its `Done` event is handled so
+    /// handles don't accumulate over a long-lived service.
+    handle: std::thread::JoinHandle<()>,
+}
+
+pub(crate) struct Scheduler {
+    cfg: SchedulerConfig,
+    queue: Arc<AdmissionQueue>,
+    pool: Arc<AnalyzerPool>,
+    events_tx: Sender<Event>,
+    running: HashMap<JobId, RunningJob>,
+    pending: Vec<BatchRequest>,
+    usage: HashMap<String, u64>,
+    results: Vec<JobResult>,
+    closed: bool,
+}
+
+impl Scheduler {
+    pub(crate) fn new(
+        cfg: SchedulerConfig,
+        queue: Arc<AdmissionQueue>,
+        pool: Arc<AnalyzerPool>,
+        events_tx: Sender<Event>,
+    ) -> Scheduler {
+        Scheduler {
+            cfg,
+            queue,
+            pool,
+            events_tx,
+            running: HashMap::new(),
+            pending: Vec::new(),
+            usage: HashMap::new(),
+            results: Vec::new(),
+            closed: false,
+        }
+    }
+
+    /// The event loop. Returns every job's terminal record, in completion
+    /// order.
+    pub(crate) fn run(mut self, rx: Receiver<Event>) -> Vec<JobResult> {
+        loop {
+            while let Ok(ev) = rx.try_recv() {
+                self.handle(ev);
+            }
+            self.admit();
+            self.dispatch();
+            if self.closed && self.running.is_empty() && self.queue.is_empty() {
+                break;
+            }
+            match rx.recv() {
+                Ok(ev) => self.handle(ev),
+                Err(_) => break, // every sender gone: nothing can arrive
+            }
+        }
+        self.results
+    }
+
+    fn handle(&mut self, ev: Event) {
+        match ev {
+            Event::JobsAvailable => {}
+            Event::Cancelled(q) => {
+                self.results.push(JobResult {
+                    id: q.id,
+                    slide_id: q.spec.source.slide_id().to_string(),
+                    tenant: q.spec.tenant,
+                    priority: q.spec.priority,
+                    state: JobState::Cancelled,
+                    tree: None,
+                    queue_wait: q.submitted.elapsed(),
+                    run_time: Duration::ZERO,
+                    tiles: 0,
+                });
+            }
+            Event::Batch(req) => self.pending.push(req),
+            Event::Done { id, outcome } => {
+                let r = self.running.remove(&id).expect("done job was running");
+                // The coordinator sent Done as its last action; reap it now
+                // instead of accumulating handles for the service lifetime.
+                let _ = r.handle.join();
+                let (state, tree, tiles) = match outcome {
+                    Ok(tree) => {
+                        let tiles = tree.total_analyzed();
+                        (JobState::Completed, Some(tree), tiles)
+                    }
+                    Err(msg) => (JobState::Failed(msg), None, r.tiles),
+                };
+                self.results.push(JobResult {
+                    id,
+                    slide_id: r.slide_id,
+                    tenant: r.tenant,
+                    priority: r.priority,
+                    state,
+                    tree,
+                    queue_wait: r.queue_wait,
+                    run_time: r.started.elapsed(),
+                    tiles,
+                });
+            }
+            Event::Close => self.closed = true,
+        }
+    }
+
+    /// Move jobs from the admission queue into the running set, in policy
+    /// order, up to `max_in_flight`. Jobs whose deadline lapsed while they
+    /// waited are dropped here (`Expired`) instead of running late.
+    fn admit(&mut self) {
+        while self.running.len() < self.cfg.max_in_flight.max(1) {
+            let picked = self.queue.pop_with(|entries| {
+                let cands: Vec<Candidate<'_>> = entries
+                    .iter()
+                    .map(|q| Candidate {
+                        id: q.id,
+                        priority: q.spec.priority,
+                        tenant: &q.spec.tenant,
+                    })
+                    .collect();
+                self.cfg.policy.select(&cands, &self.usage)
+            });
+            let Some(q) = picked else { break };
+            let waited = q.submitted.elapsed();
+            if q.spec.deadline.map_or(false, |d| waited > d) {
+                self.results.push(JobResult {
+                    id: q.id,
+                    slide_id: q.spec.source.slide_id().to_string(),
+                    tenant: q.spec.tenant,
+                    priority: q.spec.priority,
+                    state: JobState::Expired,
+                    tree: None,
+                    queue_wait: waited,
+                    run_time: Duration::ZERO,
+                    tiles: 0,
+                });
+                continue;
+            }
+            self.start_job(q, waited);
+        }
+    }
+
+    fn start_job(&mut self, q: QueuedJob, queue_wait: Duration) {
+        use super::job::JobSource;
+        let source = match &q.spec.source {
+            JobSource::Spec(spec) => RunSource::Live(Arc::new(Slide::from_spec(spec.clone()))),
+            JobSource::Cached(c) => RunSource::Cached(Arc::clone(c)),
+        };
+        let coord_source = source.clone();
+        let events = self.events_tx.clone();
+        let thresholds = q.spec.thresholds.clone();
+        let id = q.id;
+        let handle = std::thread::Builder::new()
+            .name(format!("job-{id}"))
+            .spawn(move || {
+                let events_for_provider = events.clone();
+                let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    let (slide_id, levels, initial) = match &coord_source {
+                        RunSource::Live(slide) => (
+                            slide.id().to_string(),
+                            slide.levels(),
+                            background_removal(slide, BG_MARGIN).tissue_tiles,
+                        ),
+                        RunSource::Cached(c) => {
+                            (c.spec.id.clone(), c.spec.levels, c.initial.clone())
+                        }
+                    };
+                    run_with_provider(&slide_id, levels, initial, &thresholds, |level, tiles| {
+                        let (tx, rx) = std::sync::mpsc::channel();
+                        events_for_provider
+                            .send(Event::Batch(BatchRequest {
+                                id,
+                                level,
+                                tiles: tiles.to_vec(),
+                                reply: tx,
+                            }))
+                            .expect("scheduler alive");
+                        rx.recv().expect("scheduler replies to batch")
+                    })
+                }));
+                let outcome = outcome.map_err(|p| panic_message(&p));
+                let _ = events.send(Event::Done { id, outcome });
+            })
+            .expect("spawn job coordinator");
+        // Insert after spawning so the handle rides along; the coordinator's
+        // first Batch event is only processed by this same thread after
+        // start_job returns, so the entry is in place in time.
+        self.running.insert(
+            q.id,
+            RunningJob {
+                slide_id: q.spec.source.slide_id().to_string(),
+                tenant: q.spec.tenant.clone(),
+                priority: q.spec.priority,
+                source,
+                queue_wait,
+                started: Instant::now(),
+                tiles: 0,
+                handle,
+            },
+        );
+    }
+
+    /// Fire every pending frontier at the pool, in policy order. Dispatch
+    /// is asynchronous, so batches of different jobs overlap on the pool;
+    /// the order still matters because the pool serves its queue FIFO.
+    fn dispatch(&mut self) {
+        loop {
+            let idx = {
+                let cands: Vec<Candidate<'_>> = self
+                    .pending
+                    .iter()
+                    .map(|req| {
+                        let r = self.running.get(&req.id).expect("pending implies running");
+                        Candidate {
+                            id: req.id,
+                            priority: r.priority,
+                            tenant: &r.tenant,
+                        }
+                    })
+                    .collect();
+                self.cfg.policy.select(&cands, &self.usage)
+            };
+            let Some(idx) = idx else { break };
+            let req = self.pending.remove(idx);
+            let ntiles = req.tiles.len();
+            let r = self.running.get_mut(&req.id).expect("pending implies running");
+            r.tiles += ntiles;
+            *self.usage.entry(r.tenant.clone()).or_default() += ntiles as u64;
+            match &r.source {
+                RunSource::Live(slide) => {
+                    let reply = req.reply;
+                    self.pool.analyze_async(
+                        Arc::clone(slide),
+                        req.level,
+                        req.tiles,
+                        self.cfg.batch,
+                        Box::new(move |ps| {
+                            let _ = reply.send(ps);
+                        }),
+                    );
+                }
+                RunSource::Cached(c) => {
+                    // Replay: look the frontier up in the cache. A missing
+                    // lineage tile means a corrupt cache; reply short so
+                    // the driver's count check fails that one job.
+                    let probs: Vec<f32> = req
+                        .tiles
+                        .iter()
+                        .filter_map(|t| c.preds.get(t).map(|p| p.prob))
+                        .collect();
+                    let _ = req.reply.send(probs);
+                }
+            }
+        }
+    }
+}
+
+fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "job coordinator panicked".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cands<'a>(v: &'a [(JobId, Priority, &'a str)]) -> Vec<Candidate<'a>> {
+        v.iter()
+            .map(|&(id, priority, tenant)| Candidate {
+                id,
+                priority,
+                tenant,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn fifo_picks_lowest_id() {
+        let c = cands(&[
+            (3, Priority::High, "a"),
+            (1, Priority::Low, "b"),
+            (2, Priority::High, "a"),
+        ]);
+        assert_eq!(Policy::Fifo.select(&c, &HashMap::new()), Some(1));
+        assert_eq!(Policy::Fifo.select(&[], &HashMap::new()), None);
+    }
+
+    #[test]
+    fn priority_beats_submission_order_with_fifo_tiebreak() {
+        let c = cands(&[
+            (1, Priority::Normal, "a"),
+            (2, Priority::High, "a"),
+            (3, Priority::High, "a"),
+        ]);
+        // Both high-priority jobs beat job 1; id 2 beats id 3.
+        assert_eq!(Policy::Priority.select(&c, &HashMap::new()), Some(1));
+    }
+
+    #[test]
+    fn fair_share_prefers_least_served_tenant() {
+        let c = cands(&[
+            (1, Priority::Normal, "heavy"),
+            (2, Priority::Normal, "light"),
+        ]);
+        let mut usage = HashMap::new();
+        usage.insert("heavy".to_string(), 500u64);
+        assert_eq!(Policy::FairShare.select(&c, &usage), Some(1));
+        // Unknown tenants count as zero usage; ties fall back to FIFO.
+        usage.insert("heavy".to_string(), 0);
+        assert_eq!(Policy::FairShare.select(&c, &usage), Some(0));
+    }
+
+    #[test]
+    fn policy_strings_roundtrip() {
+        for p in [Policy::Fifo, Policy::Priority, Policy::FairShare] {
+            assert_eq!(Policy::from_str(p.as_str()), Some(p));
+        }
+        assert_eq!(Policy::from_str("fair_share"), Some(Policy::FairShare));
+        assert_eq!(Policy::from_str("lifo"), None);
+    }
+}

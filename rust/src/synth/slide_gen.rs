@@ -82,8 +82,10 @@ impl SlideSpec {
     }
 
     pub fn validate(&self) {
-        let div = 1usize << (self.levels - 1);
+        // Check levels before using it: `levels - 1` in the shift would
+        // underflow first and mask this assert with an overflow panic.
         assert!(self.levels >= 1, "at least one level");
+        let div = 1usize << (self.levels - 1);
         assert!(
             self.tiles_x % div == 0 && self.tiles_y % div == 0,
             "tile grid {}x{} not divisible by 2^(levels-1)={div}",
@@ -218,6 +220,14 @@ mod tests {
     #[should_panic(expected = "not divisible")]
     fn invalid_grid_rejected() {
         SlideSpec::new("x", 1, 50, 32, 3, 64, SlideKind::Negative);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one level")]
+    fn zero_levels_rejected_with_clear_message() {
+        // Regression: validate() computed `1 << (levels - 1)` before the
+        // levels assert, so levels == 0 died on overflow instead.
+        SlideSpec::new("x", 1, 48, 32, 0, 64, SlideKind::Negative);
     }
 
     #[test]

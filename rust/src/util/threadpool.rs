@@ -4,6 +4,7 @@
 //! local-cluster launcher. The vendor set has no `rayon`; this covers the
 //! fork-join patterns the project needs.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -13,6 +14,7 @@ type Job = Box<dyn FnOnce() + Send + 'static>;
 pub struct ThreadPool {
     tx: Option<mpsc::Sender<Job>>,
     workers: Vec<JoinHandle<()>>,
+    panics: Arc<AtomicUsize>,
 }
 
 impl ThreadPool {
@@ -21,9 +23,11 @@ impl ThreadPool {
         let n = n.max(1);
         let (tx, rx) = mpsc::channel::<Job>();
         let rx = Arc::new(Mutex::new(rx));
+        let panics = Arc::new(AtomicUsize::new(0));
         let workers = (0..n)
             .map(|i| {
                 let rx = Arc::clone(&rx);
+                let panics = Arc::clone(&panics);
                 std::thread::Builder::new()
                     .name(format!("pool-{i}"))
                     .spawn(move || loop {
@@ -32,7 +36,18 @@ impl ThreadPool {
                             guard.recv()
                         };
                         match job {
-                            Ok(job) => job(),
+                            Ok(job) => {
+                                // A panicking job must not kill the worker:
+                                // that would silently shrink the pool for
+                                // the rest of the process lifetime. Catch,
+                                // count, keep serving.
+                                let r = std::panic::catch_unwind(
+                                    std::panic::AssertUnwindSafe(job),
+                                );
+                                if r.is_err() {
+                                    panics.fetch_add(1, Ordering::SeqCst);
+                                }
+                            }
                             Err(_) => break, // sender dropped: shut down
                         }
                     })
@@ -42,7 +57,29 @@ impl ThreadPool {
         Self {
             tx: Some(tx),
             workers,
+            panics,
         }
+    }
+
+    /// Number of worker threads.
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Number of jobs that panicked so far (the workers survived them).
+    pub fn panic_count(&self) -> usize {
+        self.panics.load(Ordering::SeqCst)
+    }
+
+    /// Explicit shutdown: close the channel, wait for every worker to
+    /// finish its remaining jobs, and return the panic count. `Drop` does
+    /// the same joining implicitly but cannot report.
+    pub fn join(mut self) -> usize {
+        drop(self.tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        self.panics.load(Ordering::SeqCst)
     }
 
     /// Submit a job.
@@ -121,5 +158,43 @@ mod tests {
         let pool = ThreadPool::new(1);
         let out = pool.map(vec![1, 2, 3], |x| x + 1);
         assert_eq!(out, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn panicking_job_does_not_kill_worker() {
+        // Regression: a panicking job used to unwind the worker thread,
+        // permanently losing pool capacity. With one worker the loss was
+        // total — the pool deadlocked on the next job.
+        let pool = ThreadPool::new(1);
+        let counter = Arc::new(AtomicUsize::new(0));
+        pool.execute(|| panic!("job fault"));
+        for _ in 0..10 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        let panics = pool.join();
+        assert_eq!(counter.load(Ordering::SeqCst), 10, "worker died");
+        assert_eq!(panics, 1);
+    }
+
+    #[test]
+    fn panic_counter_tracks_every_fault() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for i in 0..40 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                if i % 4 == 0 {
+                    panic!("fault {i}");
+                }
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        assert_eq!(pool.workers(), 4);
+        let panics = pool.join();
+        assert_eq!(panics, 10);
+        assert_eq!(counter.load(Ordering::SeqCst), 30);
     }
 }

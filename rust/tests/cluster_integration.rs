@@ -109,6 +109,59 @@ fn work_stealing_balances_block_distribution() {
 }
 
 #[test]
+fn steal_accounting_is_consistent() {
+    // `steals` / `steal_fails` must reconcile with what physically
+    // happened: no stealing → both zero; stealing on → every successful
+    // steal moved exactly one task, so steals is bounded by the total
+    // tile count, and totals/per-worker loads are conserved either way.
+    let sp = spec(304, SlideKind::LargeTumor);
+    let analyzer: Arc<dyn Analyzer> = Arc::new(DelayAnalyzer::new(
+        OracleAnalyzer::new(1),
+        std::time::Duration::from_millis(1),
+    ));
+    let thr = thresholds();
+    let base = ClusterConfig {
+        workers: 4,
+        distribution: Distribution::Block,
+        steal: false,
+        batch: 4,
+        seed: 11,
+    };
+
+    let off = run_cluster(&sp, &thr, Arc::clone(&analyzer), &base).unwrap();
+    assert_eq!(off.steals, 0, "steal disabled but steals counted");
+    assert_eq!(off.steal_fails, 0, "steal disabled but failures counted");
+
+    let on = run_cluster(
+        &sp,
+        &thr,
+        Arc::clone(&analyzer),
+        &ClusterConfig {
+            steal: true,
+            ..base.clone()
+        },
+    )
+    .unwrap();
+    let total = on.tree.total_analyzed();
+    // A task can in principle be stolen more than once (thief re-victimized
+    // before analyzing it), so bound with slack rather than exactly.
+    assert!(
+        on.steals <= total * 2,
+        "{} steals for {} tasks — accounting runaway",
+        on.steals,
+        total
+    );
+    // Every worker that ran out of victims recorded at least one failed
+    // attempt per pruned victim; the counter must be finite and sane.
+    assert!(on.steal_fails >= on.per_worker.iter().filter(|&&n| n == 0).count());
+    // Conservation under both policies.
+    assert_eq!(on.per_worker.iter().sum::<usize>(), total);
+    assert_eq!(off.per_worker.iter().sum::<usize>(), off.tree.total_analyzed());
+    assert_eq!(total, off.tree.total_analyzed());
+    on.tree.check_consistency().unwrap();
+}
+
+#[test]
 fn twelve_workers_negative_slide() {
     // The paper's §5.4 validates on 12 machines incl. a negative image;
     // exercise the same worker count end to end.

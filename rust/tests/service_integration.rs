@@ -1,0 +1,310 @@
+//! Multi-slide service integration: determinism against the standalone
+//! driver, scheduling-policy ordering, backpressure, cancellation,
+//! deadlines and cached-replay jobs — all with the oracle analyzer (no
+//! artifacts needed).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use pyramidai::model::oracle::OracleAnalyzer;
+use pyramidai::model::{Analyzer, DelayAnalyzer};
+use pyramidai::predcache::SlidePredictions;
+use pyramidai::pyramid::driver::run_pyramidal;
+use pyramidai::pyramid::tree::Thresholds;
+use pyramidai::service::{
+    AnalysisService, JobSource, JobSpec, JobState, Policy, Priority, ServiceConfig, SubmitError,
+};
+use pyramidai::slide::pyramid::Slide;
+use pyramidai::synth::slide_gen::{SlideKind, SlideSpec};
+
+fn spec(seed: u64, kind: SlideKind) -> SlideSpec {
+    SlideSpec::new(format!("svc_{seed}"), seed, 32, 16, 3, 64, kind)
+}
+
+fn thresholds() -> Thresholds {
+    Thresholds {
+        zoom: vec![0.5, 0.35, 0.35],
+    }
+}
+
+fn oracle() -> Arc<dyn Analyzer> {
+    Arc::new(OracleAnalyzer::new(1))
+}
+
+/// Slow oracle: makes run phases long enough that admission order is
+/// observable on a fast machine.
+fn slow_oracle(per_tile_ms: u64) -> Arc<dyn Analyzer> {
+    Arc::new(DelayAnalyzer::new(
+        OracleAnalyzer::new(1),
+        Duration::from_millis(per_tile_ms),
+    ))
+}
+
+#[test]
+fn service_trees_match_standalone_runs_for_every_policy() {
+    // The acceptance bar: scheduling (any policy, any interleaving) must
+    // not change a single job's ExecTree vs a standalone run_pyramidal.
+    let kinds = [
+        SlideKind::LargeTumor,
+        SlideKind::SmallScattered,
+        SlideKind::Negative,
+    ];
+    let specs: Vec<SlideSpec> = (0..6).map(|i| spec(500 + i, kinds[i as usize % 3])).collect();
+    let thr = thresholds();
+    let solo: Vec<_> = specs
+        .iter()
+        .map(|sp| {
+            let slide = Slide::from_spec(sp.clone());
+            run_pyramidal(&slide, oracle().as_ref(), &thr, 8)
+        })
+        .collect();
+
+    for policy in [Policy::Fifo, Policy::Priority, Policy::FairShare] {
+        let svc = AnalysisService::start(
+            oracle(),
+            ServiceConfig {
+                workers: 4,
+                queue_capacity: 16,
+                max_in_flight: 3,
+                batch: 8,
+                policy,
+            },
+        );
+        let ids: Vec<_> = specs
+            .iter()
+            .enumerate()
+            .map(|(i, sp)| {
+                let j = JobSpec::new(JobSource::Spec(sp.clone()), thr.clone())
+                    .with_priority([Priority::Low, Priority::Normal, Priority::High][i % 3])
+                    .with_tenant(format!("tenant{}", i % 2));
+                svc.submit(j).unwrap()
+            })
+            .collect();
+        let report = svc.shutdown();
+        assert_eq!(report.metrics.completed, specs.len(), "policy {policy:?}");
+        assert_eq!(report.pool_panics, 0);
+        for (i, id) in ids.iter().enumerate() {
+            let r = report.job(*id).expect("job recorded");
+            assert_eq!(r.state, JobState::Completed, "policy {policy:?} job {i}");
+            let tree = r.tree.as_ref().unwrap();
+            tree.check_consistency().unwrap();
+            assert_eq!(
+                tree.nodes, solo[i].nodes,
+                "policy {policy:?}: job {i} diverged from standalone driver"
+            );
+            assert_eq!(r.tiles, solo[i].total_analyzed());
+        }
+    }
+}
+
+#[test]
+fn cached_replay_jobs_match_predcache_replay() {
+    let sp = spec(600, SlideKind::LargeTumor);
+    let slide = Slide::from_spec(sp.clone());
+    let preds = Arc::new(SlidePredictions::collect(&slide, oracle().as_ref(), 16));
+    let thr = thresholds();
+    let expect = preds.replay(&thr);
+
+    let svc = AnalysisService::start(oracle(), ServiceConfig::default());
+    let id = svc
+        .submit(JobSpec::new(JobSource::Cached(Arc::clone(&preds)), thr))
+        .unwrap();
+    let report = svc.shutdown();
+    let r = report.job(id).unwrap();
+    assert_eq!(r.state, JobState::Completed);
+    assert_eq!(r.tree.as_ref().unwrap().nodes, expect.nodes);
+}
+
+#[test]
+fn priority_policy_starts_high_before_low() {
+    // One job at a time, slow tiles: completion order == admission order.
+    // Submit low, low, high while the first low occupies the service; the
+    // high-priority job must overtake the second low one.
+    let svc = AnalysisService::start(
+        slow_oracle(1),
+        ServiceConfig {
+            workers: 2,
+            queue_capacity: 8,
+            max_in_flight: 1,
+            batch: 8,
+            policy: Policy::Priority,
+        },
+    );
+    let first = svc
+        .submit(
+            JobSpec::new(JobSource::Spec(spec(610, SlideKind::Negative)), thresholds())
+                .with_priority(Priority::Low),
+        )
+        .unwrap();
+    let second_low = svc
+        .submit(
+            JobSpec::new(JobSource::Spec(spec(611, SlideKind::Negative)), thresholds())
+                .with_priority(Priority::Low),
+        )
+        .unwrap();
+    let high = svc
+        .submit(
+            JobSpec::new(JobSource::Spec(spec(612, SlideKind::Negative)), thresholds())
+                .with_priority(Priority::High),
+        )
+        .unwrap();
+    let report = svc.shutdown();
+    assert_eq!(report.metrics.completed, 3);
+    // results are recorded in completion order.
+    let order: Vec<_> = report.results.iter().map(|r| r.id).collect();
+    let pos = |id| order.iter().position(|&x| x == id).unwrap();
+    assert!(
+        pos(high) < pos(second_low),
+        "high-priority job ran after a low one: order {order:?} (first={first})"
+    );
+}
+
+#[test]
+fn fair_share_lets_light_tenant_through() {
+    // Tenant A floods the queue; tenant B submits one job last. Fair-share
+    // must run B's job before A's backlog drains.
+    let svc = AnalysisService::start(
+        slow_oracle(1),
+        ServiceConfig {
+            workers: 2,
+            queue_capacity: 16,
+            max_in_flight: 1,
+            batch: 8,
+            policy: Policy::FairShare,
+        },
+    );
+    let mut heavy = Vec::new();
+    for i in 0..4 {
+        heavy.push(
+            svc.submit(
+                JobSpec::new(
+                    JobSource::Spec(spec(620 + i, SlideKind::Negative)),
+                    thresholds(),
+                )
+                .with_tenant("heavy"),
+            )
+            .unwrap(),
+        );
+    }
+    let light = svc
+        .submit(
+            JobSpec::new(JobSource::Spec(spec(630, SlideKind::Negative)), thresholds())
+                .with_tenant("light"),
+        )
+        .unwrap();
+    let report = svc.shutdown();
+    assert_eq!(report.metrics.completed, 5);
+    let order: Vec<_> = report.results.iter().map(|r| r.id).collect();
+    let pos = |id| order.iter().position(|&x| x == id).unwrap();
+    // The light tenant overtakes at least the heavy tenant's tail.
+    assert!(
+        pos(light) < pos(*heavy.last().unwrap()),
+        "fair-share starved the light tenant: order {order:?}"
+    );
+}
+
+#[test]
+fn backpressure_rejects_and_cancellation_records() {
+    // Capacity 2, nothing admitted yet (slow first job occupies the
+    // single run slot only after the scheduler picks it up) — so a burst
+    // overflows, and a queued job can be cancelled.
+    let svc = AnalysisService::start(
+        slow_oracle(2),
+        ServiceConfig {
+            workers: 1,
+            queue_capacity: 2,
+            max_in_flight: 1,
+            batch: 8,
+            policy: Policy::Fifo,
+        },
+    );
+    let a = svc
+        .submit(JobSpec::new(
+            JobSource::Spec(spec(640, SlideKind::Negative)),
+            thresholds(),
+        ))
+        .unwrap();
+    // Wait until `a` leaves the queue so the two slots are genuinely free.
+    while svc.queued() > 0 {
+        std::thread::sleep(Duration::from_micros(200));
+    }
+    let b = svc
+        .submit(JobSpec::new(
+            JobSource::Spec(spec(641, SlideKind::Negative)),
+            thresholds(),
+        ))
+        .unwrap();
+    let c = svc
+        .submit(JobSpec::new(
+            JobSource::Spec(spec(642, SlideKind::Negative)),
+            thresholds(),
+        ))
+        .unwrap();
+    // Queue now holds b and c (a runs) → the next submission bounces.
+    let overflow = svc.submit(JobSpec::new(
+        JobSource::Spec(spec(643, SlideKind::Negative)),
+        thresholds(),
+    ));
+    assert_eq!(overflow, Err(SubmitError::QueueFull(2)));
+
+    assert!(svc.cancel(c), "c still queued, cancellable");
+    let report = svc.shutdown();
+    assert_eq!(report.job(a).unwrap().state, JobState::Completed);
+    assert_eq!(report.job(b).unwrap().state, JobState::Completed);
+    assert_eq!(report.job(c).unwrap().state, JobState::Cancelled);
+    assert_eq!(report.metrics.completed, 2);
+    assert_eq!(report.metrics.cancelled, 1);
+}
+
+#[test]
+fn zero_deadline_job_expires_in_queue() {
+    let svc = AnalysisService::start(
+        slow_oracle(1),
+        ServiceConfig {
+            workers: 1,
+            queue_capacity: 8,
+            max_in_flight: 1,
+            batch: 8,
+            policy: Policy::Fifo,
+        },
+    );
+    let slow = svc
+        .submit(JobSpec::new(
+            JobSource::Spec(spec(650, SlideKind::LargeTumor)),
+            thresholds(),
+        ))
+        .unwrap();
+    // Admitted strictly after `slow`, with no tolerance for queue wait.
+    let doomed = svc
+        .submit(
+            JobSpec::new(JobSource::Spec(spec(651, SlideKind::Negative)), thresholds())
+                .with_deadline(Duration::ZERO),
+        )
+        .unwrap();
+    let report = svc.shutdown();
+    assert_eq!(report.job(slow).unwrap().state, JobState::Completed);
+    assert_eq!(report.job(doomed).unwrap().state, JobState::Expired);
+    assert_eq!(report.metrics.expired, 1);
+}
+
+#[test]
+fn results_cover_every_submitted_job_exactly_once() {
+    let svc = AnalysisService::start(oracle(), ServiceConfig::default());
+    let mut ids = Vec::new();
+    for i in 0..10 {
+        ids.push(
+            svc.submit(JobSpec::new(
+                JobSource::Spec(spec(660 + i, SlideKind::SmallScattered)),
+                thresholds(),
+            ))
+            .unwrap(),
+        );
+    }
+    let report = svc.shutdown();
+    assert_eq!(report.results.len(), 10);
+    let mut seen: Vec<_> = report.results.iter().map(|r| r.id).collect();
+    seen.sort_unstable();
+    let mut want = ids.clone();
+    want.sort_unstable();
+    assert_eq!(seen, want, "every job exactly one terminal record");
+}
