@@ -2,6 +2,11 @@
 //! and 8 pool workers. A per-tile delay stands in for the paper's ≈0.33 s
 //! analysis block (scaled down), so worker threads genuinely overlap on
 //! this testbed and tiles/sec scales with the pool.
+//!
+//! The 1-worker row is also run with cross-job frontier coalescing
+//! disabled: the coalesced dispatch path must not regress single-worker
+//! throughput (it only merges same-level chunks into shared pool tasks;
+//! the analysis work is identical).
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -16,7 +21,7 @@ use pyramidai::util::stats::fmt_duration;
 const JOBS: usize = 9;
 const PER_TILE: Duration = Duration::from_millis(2);
 
-fn run_once(workers: usize) -> (f64, Duration, usize) {
+fn run_once(workers: usize, coalesce: bool) -> (f64, Duration, usize) {
     let analyzer: Arc<dyn Analyzer> =
         Arc::new(DelayAnalyzer::new(OracleAnalyzer::new(1), PER_TILE));
     let svc = AnalysisService::start(
@@ -27,6 +32,8 @@ fn run_once(workers: usize) -> (f64, Duration, usize) {
             max_in_flight: 4,
             batch: 4,
             policy: Policy::Fifo,
+            coalesce,
+            ..ServiceConfig::default()
         },
     );
     let params = DatasetParams {
@@ -53,11 +60,14 @@ fn run_once(workers: usize) -> (f64, Duration, usize) {
 
 fn main() {
     let mut rows = Vec::new();
-    let mut csv = CsvOut::create("service_throughput.csv", &["workers", "tiles_per_sec", "wall_s"])
-        .expect("bench_results dir");
+    let mut csv = CsvOut::create(
+        "service_throughput.csv",
+        &["workers", "coalesce", "tiles_per_sec", "wall_s"],
+    )
+    .expect("bench_results dir");
     let mut baseline = None;
-    for workers in [1usize, 4, 8] {
-        let (tps, wall, tiles) = run_once(workers);
+    for (workers, coalesce) in [(1usize, false), (1, true), (4, true), (8, true)] {
+        let (tps, wall, tiles) = run_once(workers, coalesce);
         let speedup = match baseline {
             None => {
                 baseline = Some(tps);
@@ -67,12 +77,13 @@ fn main() {
         };
         csv.row(&[
             workers.to_string(),
+            coalesce.to_string(),
             format!("{tps:.1}"),
             format!("{:.3}", wall.as_secs_f64()),
         ])
         .unwrap();
         rows.push(vec![
-            workers.to_string(),
+            format!("{workers}{}", if coalesce { "" } else { " (no coalesce)" }),
             tiles.to_string(),
             format!("{tps:.1}"),
             fmt_duration(wall),
@@ -80,8 +91,8 @@ fn main() {
         ]);
     }
     print_table(
-        "service throughput vs pool size",
-        &["workers", "tiles", "tiles/s", "wall", "vs 1 worker"],
+        "service throughput vs pool size (baseline: 1 worker, no coalescing)",
+        &["workers", "tiles", "tiles/s", "wall", "vs baseline"],
         &rows,
     );
     println!("csv: {}", csv.path().display());

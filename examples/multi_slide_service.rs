@@ -63,6 +63,7 @@ fn main() -> anyhow::Result<()> {
             max_in_flight: 2,
             batch: 8,
             policy,
+            ..ServiceConfig::default()
         },
     );
     let ids: Vec<_> = specs

@@ -1,0 +1,113 @@
+//! The sans-IO pyramidal driver, stepped by hand: pull frontier requests
+//! from a `PyramidRun`, execute them on any `ExecutionBackend`, feed the
+//! probabilities back — and get the exact tree the blocking driver would
+//! have produced, plus things the blocking driver cannot do (abandon a
+//! run at a frontier boundary and keep the partial tree).
+//!
+//! ```sh
+//! cargo run --release --example steppable_driver
+//! ```
+
+use std::sync::Arc;
+
+use pyramidai::model::oracle::OracleAnalyzer;
+use pyramidai::model::Analyzer;
+use pyramidai::predcache::SlidePredictions;
+use pyramidai::pyramid::driver::run_pyramidal;
+use pyramidai::pyramid::tree::Thresholds;
+use pyramidai::pyramid::{drive, ExecutionBackend, PoolBackend, PyramidRun, ReplayBackend};
+use pyramidai::service::pool::AnalyzerPool;
+use pyramidai::sim::SimBackend;
+use pyramidai::slide::pyramid::Slide;
+use pyramidai::synth::slide_gen::{SlideKind, SlideSpec};
+
+fn main() {
+    let spec = SlideSpec::new("steppable", 7, 32, 16, 3, 64, SlideKind::LargeTumor);
+    let analyzer: Arc<dyn Analyzer> = Arc::new(OracleAnalyzer::new(1));
+    let slide = Arc::new(Slide::from_spec(spec));
+    let thr = Thresholds {
+        zoom: vec![0.5, 0.35, 0.35],
+    };
+
+    // Reference: the classic blocking driver (itself a PyramidRun shim).
+    let reference = run_pyramidal(&slide, analyzer.as_ref(), &thr, 8);
+    println!(
+        "blocking driver: {:?} tiles per level",
+        reference.analyzed_per_level()
+    );
+
+    // 1. Manual stepping on the in-process pool, 6 tiles per request.
+    let pool = Arc::new(AnalyzerPool::new(Arc::clone(&analyzer), 2));
+    let mut backend = PoolBackend::new(pool, Arc::clone(&slide), 4);
+    let mut run = PyramidRun::new(
+        slide.id(),
+        slide.levels(),
+        reference.initial.clone(),
+        thr.clone(),
+        6,
+    );
+    let mut requests = 0usize;
+    while !run.is_complete() {
+        while let Some(req) = run.next_request() {
+            requests += 1;
+            backend.dispatch(req);
+        }
+        if let Some(c) = backend.poll(true) {
+            run.feed(c.id, c.probs).expect("pool results fit requests");
+        }
+    }
+    let tree = run.finish();
+    assert_eq!(tree.nodes, reference.nodes);
+    println!("pool backend:    identical tree from {requests} chunked requests");
+
+    // 2. The same run abandoned after its first completed level — the
+    //    partial tree is consistent and holds exactly the finished levels.
+    let mut run = PyramidRun::new(
+        slide.id(),
+        slide.levels(),
+        reference.initial.clone(),
+        thr.clone(),
+        0,
+    );
+    let req = run.next_request().expect("lowest level");
+    let probs = analyzer.analyze(&slide, req.level, &req.tiles);
+    run.feed(req.id, probs).unwrap();
+    let partial = run.finish();
+    partial.check_consistency().unwrap();
+    println!(
+        "abandoned run:   partial tree holds {} of {} tiles",
+        partial.total_analyzed(),
+        reference.total_analyzed()
+    );
+
+    // 3. Post-mortem replay and the simulator's virtual workers drive the
+    //    very same state machine.
+    let preds = SlidePredictions::collect(&slide, analyzer.as_ref(), 16);
+    let mut replay = ReplayBackend::new(&preds);
+    let mut run = PyramidRun::new(
+        slide.id(),
+        slide.levels(),
+        reference.initial.clone(),
+        thr.clone(),
+        0,
+    );
+    drive(&mut run, &mut replay).unwrap();
+    assert_eq!(run.finish().nodes, reference.nodes);
+    println!("replay backend:  identical tree from the prediction cache");
+
+    let mut sim = SimBackend::new(&reference, 4);
+    let mut run = PyramidRun::new(
+        slide.id(),
+        slide.levels(),
+        reference.initial.clone(),
+        thr,
+        4,
+    );
+    drive(&mut run, &mut sim).unwrap();
+    assert_eq!(run.finish().nodes, reference.nodes);
+    println!(
+        "sim backend:     identical tree; virtual worker loads {:?} (makespan {})",
+        sim.per_worker(),
+        sim.makespan()
+    );
+}

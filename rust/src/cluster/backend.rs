@@ -1,0 +1,518 @@
+//! Persistent TCP execution cluster behind the unified
+//! [`ExecutionBackend`] API.
+//!
+//! Unlike [`super::leader::run_cluster`] — which runs one slide to
+//! completion with workers making their own zoom decisions — this module
+//! keeps the zoom logic in a [`crate::pyramid::PyramidRun`] on the
+//! dispatcher and uses the cluster purely as an analysis substrate: the
+//! leader deals each [`FrontierRequest`] to a worker as a steal-able
+//! [`ChunkTask`]; idle workers steal whole chunks from random victims
+//! (§5.3's policy with the chunk as the unit); probabilities stream back
+//! to the leader as [`Msg::ChunkDone`] frames. Workers rebuild slides
+//! from the replicated [`SlideSpec`] riding each chunk and cache them by
+//! id, so one cluster serves chunks of many slides — the multi-slide
+//! service's distributed mode.
+//!
+//! [`FrontierRequest`]: crate::pyramid::FrontierRequest
+
+use std::collections::{HashMap, VecDeque};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::model::Analyzer;
+use crate::pyramid::{Completion, ExecutionBackend, FrontierRequest};
+use crate::slide::pyramid::Slide;
+use crate::synth::slide_gen::SlideSpec;
+use crate::util::prng::Pcg32;
+
+use super::leader::send_to;
+use super::proto::{ChunkTask, Msg};
+
+/// Configuration of a persistent execution cluster.
+#[derive(Debug, Clone)]
+pub struct ClusterExecConfig {
+    /// Worker threads (each a "modest computer" with its own TCP
+    /// listener, queue and analyzer handle).
+    pub workers: usize,
+    /// Enable chunk stealing between idle workers.
+    pub steal: bool,
+    pub seed: u64,
+}
+
+impl Default for ClusterExecConfig {
+    fn default() -> ClusterExecConfig {
+        ClusterExecConfig {
+            workers: 2,
+            steal: true,
+            seed: 0x5EED,
+        }
+    }
+}
+
+/// Handle to a running execution cluster: submit chunks, read results.
+/// Thread-safe (`submit` from one thread, `recv_result` from another).
+/// [`ClusterExec::shutdown`] is idempotent and also runs on drop.
+pub struct ClusterExec {
+    ports: Vec<u16>,
+    next: AtomicUsize,
+    results: Mutex<Receiver<(u64, usize, Vec<f32>)>>,
+    done: Arc<AtomicBool>,
+    workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    reader: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl ClusterExec {
+    /// Bind every listener, spawn the workers and the result reader.
+    pub fn start(analyzer: Arc<dyn Analyzer>, cfg: &ClusterExecConfig) -> Result<ClusterExec> {
+        assert!(cfg.workers >= 1, "cluster needs at least one worker");
+        let leader_listener =
+            TcpListener::bind(("127.0.0.1", 0)).context("backend leader bind")?;
+        let leader_port = leader_listener.local_addr()?.port();
+        let mut listeners = Vec::with_capacity(cfg.workers);
+        let mut ports = Vec::with_capacity(cfg.workers);
+        for _ in 0..cfg.workers {
+            let l = TcpListener::bind(("127.0.0.1", 0)).context("backend worker bind")?;
+            ports.push(l.local_addr()?.port());
+            listeners.push(l);
+        }
+
+        let done = Arc::new(AtomicBool::new(false));
+        let mut workers = Vec::with_capacity(cfg.workers);
+        for (id, listener) in listeners.into_iter().enumerate() {
+            let wcfg = ExecWorkerConfig {
+                id,
+                ports: ports.clone(),
+                leader_port,
+                steal: cfg.steal,
+                seed: cfg.seed,
+            };
+            let analyzer = Arc::clone(&analyzer);
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("exec-worker-{id}"))
+                    .spawn(move || run_exec_worker(wcfg, listener, analyzer))?,
+            );
+        }
+
+        let (tx, rx) = channel();
+        let reader_done = Arc::clone(&done);
+        let reader = std::thread::Builder::new()
+            .name("exec-leader-reader".to_string())
+            .spawn(move || result_reader(leader_listener, tx, reader_done))?;
+
+        Ok(ClusterExec {
+            ports,
+            next: AtomicUsize::new(0),
+            results: Mutex::new(rx),
+            done,
+            workers: Mutex::new(workers),
+            reader: Mutex::new(Some(reader)),
+        })
+    }
+
+    pub fn workers(&self) -> usize {
+        self.ports.len()
+    }
+
+    /// Deal one chunk to a worker (round-robin; stealing rebalances).
+    pub fn submit(
+        &self,
+        key: u64,
+        spec: &SlideSpec,
+        level: usize,
+        tiles: Vec<crate::slide::tile::TileId>,
+    ) -> Result<()> {
+        let w = self.next.fetch_add(1, Ordering::Relaxed) % self.ports.len();
+        send_to(
+            self.ports[w],
+            &Msg::Chunk(ChunkTask {
+                key,
+                spec: spec.clone(),
+                level,
+                tiles,
+            }),
+        )
+    }
+
+    /// Next completed chunk, non-blocking.
+    pub fn try_result(&self) -> Option<(u64, Vec<f32>)> {
+        self.results
+            .lock()
+            .unwrap()
+            .try_recv()
+            .ok()
+            .map(|(k, _, p)| (k, p))
+    }
+
+    /// Next completed chunk; blocks until one arrives. `None` once the
+    /// cluster has shut down and no more results can come.
+    pub fn recv_result(&self) -> Option<(u64, Vec<f32>)> {
+        self.results
+            .lock()
+            .unwrap()
+            .recv()
+            .ok()
+            .map(|(k, _, p)| (k, p))
+    }
+
+    /// Stop workers and the reader. Pending (unserved) chunks are
+    /// dropped — callers shut down only after draining their runs.
+    pub fn shutdown(&self) {
+        if self.done.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        for &p in &self.ports {
+            let _ = send_to(p, &Msg::Shutdown);
+        }
+        for h in self.workers.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
+        if let Some(h) = self.reader.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ClusterExec {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Accept loop on the leader's result port: every connection carries one
+/// [`Msg::ChunkDone`] frame.
+fn result_reader(
+    listener: TcpListener,
+    tx: Sender<(u64, usize, Vec<f32>)>,
+    done: Arc<AtomicBool>,
+) {
+    if listener.set_nonblocking(true).is_err() {
+        return;
+    }
+    loop {
+        match listener.accept() {
+            Ok((mut stream, _)) => {
+                stream.set_nonblocking(false).ok();
+                stream.set_read_timeout(Some(Duration::from_secs(30))).ok();
+                if let Ok(Msg::ChunkDone { key, worker, probs }) = Msg::read_from(&mut stream) {
+                    if tx.send((key, worker, probs)).is_err() {
+                        return; // every receiver gone
+                    }
+                }
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if done.load(Ordering::Acquire) {
+                    return;
+                }
+                std::thread::sleep(Duration::from_micros(200));
+            }
+            Err(_) => return,
+        }
+    }
+}
+
+struct ExecWorkerConfig {
+    id: usize,
+    ports: Vec<u16>,
+    leader_port: u16,
+    steal: bool,
+    seed: u64,
+}
+
+struct ExecShared {
+    queue: Mutex<VecDeque<ChunkTask>>,
+    done: AtomicBool,
+    idle: AtomicBool,
+}
+
+/// One persistent worker: queue of chunks, analyze loop, chunk stealing.
+fn run_exec_worker(cfg: ExecWorkerConfig, listener: TcpListener, analyzer: Arc<dyn Analyzer>) {
+    let shared = Arc::new(ExecShared {
+        queue: Mutex::new(VecDeque::new()),
+        done: AtomicBool::new(false),
+        idle: AtomicBool::new(true),
+    });
+    if listener.set_nonblocking(true).is_err() {
+        return;
+    }
+    let l_shared = Arc::clone(&shared);
+    let listen_handle = std::thread::Builder::new()
+        .name(format!("exec-w{}-listen", cfg.id))
+        .spawn(move || exec_listen_loop(listener, l_shared));
+
+    // Slides rebuilt from specs are cheap (a few dozen Gaussian blobs),
+    // so the cache is a convenience, not a necessity — cap it so a
+    // long-lived service streaming unique slides cannot grow it without
+    // bound.
+    const SLIDE_CACHE_CAP: usize = 16;
+    let mut slides: HashMap<String, Slide> = HashMap::new();
+    let mut rng = Pcg32::new(cfg.seed ^ ((cfg.id as u64) << 32) ^ 0xC1C1);
+    let mut idle_streak: u32 = 0;
+    loop {
+        let task = shared.queue.lock().unwrap().pop_front();
+        match task {
+            Some(t) => {
+                idle_streak = 0;
+                shared.idle.store(false, Ordering::Release);
+                if slides.len() >= SLIDE_CACHE_CAP && !slides.contains_key(&t.spec.id) {
+                    slides.clear();
+                }
+                let slide = slides
+                    .entry(t.spec.id.clone())
+                    .or_insert_with(|| Slide::from_spec(t.spec.clone()));
+                // A panicking analyzer yields a short (empty) result; the
+                // dispatcher's PyramidRun rejects it and fails that one
+                // run — the worker itself survives, like the pool does.
+                let mut probs = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    analyzer.analyze(slide, t.level, &t.tiles)
+                }))
+                .unwrap_or_default();
+                // Non-finite probabilities cannot survive the JSON wire
+                // (they serialize as null and the leader would drop the
+                // whole frame, stranding the run). Send a short reply
+                // instead: the dispatcher fails that one job cleanly.
+                if probs.iter().any(|p| !p.is_finite()) {
+                    probs.clear();
+                }
+                // Results must not be lost — a dropped ChunkDone would
+                // strand the dispatcher's run forever. send_to retries
+                // with backoff for 5s; on top of that, keep trying for as
+                // long as the cluster is alive (failure with the leader
+                // still up means transient congestion, not loss).
+                let msg = Msg::ChunkDone {
+                    key: t.key,
+                    worker: cfg.id,
+                    probs,
+                };
+                while send_to(cfg.leader_port, &msg).is_err() {
+                    if shared.done.load(Ordering::Acquire) {
+                        break; // shutting down: the dispatcher is gone
+                    }
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+            }
+            None => {
+                shared.idle.store(true, Ordering::Release);
+                if shared.done.load(Ordering::Acquire) {
+                    break;
+                }
+                if cfg.steal && cfg.ports.len() > 1 {
+                    let victim = {
+                        let v = rng.usize_range(0, cfg.ports.len() - 1);
+                        if v >= cfg.id {
+                            v + 1
+                        } else {
+                            v
+                        }
+                    };
+                    if let Ok((Some(task), _)) = request_chunk_steal(cfg.ports[victim], cfg.id) {
+                        shared.queue.lock().unwrap().push_back(task);
+                        continue;
+                    }
+                }
+                // Exponential backoff while idle: persistent workers sit
+                // between frontiers without hammering their victims.
+                idle_streak = (idle_streak + 1).min(6);
+                std::thread::sleep(Duration::from_micros(200) * (1u32 << idle_streak));
+            }
+        }
+    }
+    if let Ok(h) = listen_handle {
+        let _ = h.join();
+    }
+}
+
+fn exec_listen_loop(listener: TcpListener, shared: Arc<ExecShared>) {
+    loop {
+        match listener.accept() {
+            Ok((mut stream, _)) => {
+                stream.set_nonblocking(false).ok();
+                stream.set_read_timeout(Some(Duration::from_secs(30))).ok();
+                stream.set_nodelay(true).ok();
+                if let Ok(msg) = Msg::read_from(&mut stream) {
+                    match msg {
+                        Msg::Chunk(t) => {
+                            shared.queue.lock().unwrap().push_back(t);
+                        }
+                        Msg::ChunkSteal { .. } => {
+                            let (task, idle) = {
+                                let mut q = shared.queue.lock().unwrap();
+                                // Victims keep their last queued chunk
+                                // (§5.3's "more than one task" rule).
+                                let task = if q.len() > 1 { q.pop_back() } else { None };
+                                (task, shared.idle.load(Ordering::Acquire))
+                            };
+                            let _ = Msg::ChunkStealReply { task, idle }.write_to(&mut stream);
+                        }
+                        Msg::Shutdown => {
+                            shared.done.store(true, Ordering::Release);
+                            return;
+                        }
+                        _ => {}
+                    }
+                }
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if shared.done.load(Ordering::Acquire) {
+                    return;
+                }
+                std::thread::sleep(Duration::from_micros(200));
+            }
+            Err(_) => return,
+        }
+    }
+}
+
+fn request_chunk_steal(victim_port: u16, thief: usize) -> Result<(Option<ChunkTask>, bool)> {
+    let mut stream = TcpStream::connect(("127.0.0.1", victim_port))?;
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+    Msg::ChunkSteal { thief }.write_to(&mut stream)?;
+    match Msg::read_from(&mut stream)? {
+        Msg::ChunkStealReply { task, idle } => Ok((task, idle)),
+        other => anyhow::bail!("unexpected steal reply {other:?}"),
+    }
+}
+
+/// The TCP cluster as an [`ExecutionBackend`] for one slide's
+/// [`crate::pyramid::PyramidRun`]: requests become dealt (steal-able)
+/// chunks; request ids are the routing keys.
+pub struct ClusterBackend {
+    exec: ClusterExec,
+    spec: SlideSpec,
+    in_flight: usize,
+}
+
+impl ClusterBackend {
+    /// Spin up a dedicated cluster for this slide. The cluster shuts down
+    /// when the backend drops.
+    pub fn start(
+        spec: SlideSpec,
+        analyzer: Arc<dyn Analyzer>,
+        cfg: &ClusterExecConfig,
+    ) -> Result<ClusterBackend> {
+        Ok(ClusterBackend {
+            exec: ClusterExec::start(analyzer, cfg)?,
+            spec,
+            in_flight: 0,
+        })
+    }
+
+    /// The underlying cluster handle. Sharing one cluster between many
+    /// concurrent runs is deliberately not modeled here — multi-run
+    /// dispatch over shared workers is the service scheduler's job, which
+    /// talks to [`ClusterExec`] directly.
+    pub fn exec(&self) -> &ClusterExec {
+        &self.exec
+    }
+}
+
+impl ExecutionBackend for ClusterBackend {
+    fn dispatch(&mut self, req: FrontierRequest) {
+        self.exec
+            .submit(req.id, &self.spec, req.level, req.tiles)
+            .expect("cluster chunk submission");
+        self.in_flight += 1;
+    }
+
+    fn poll(&mut self, block: bool) -> Option<Completion> {
+        if self.in_flight == 0 {
+            return None;
+        }
+        let r = if block {
+            self.exec.recv_result()
+        } else {
+            self.exec.try_result()
+        };
+        r.map(|(key, probs)| {
+            self.in_flight -= 1;
+            Completion { id: key, probs }
+        })
+    }
+
+    fn in_flight(&self) -> usize {
+        self.in_flight
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::oracle::OracleAnalyzer;
+    use crate::pyramid::backend::run_on_backend;
+    use crate::pyramid::driver::run_pyramidal;
+    use crate::pyramid::tree::Thresholds;
+    use crate::synth::slide_gen::SlideKind;
+
+    fn spec(seed: u64) -> SlideSpec {
+        SlideSpec::new(format!("cb_{seed}"), seed, 32, 16, 3, 64, SlideKind::LargeTumor)
+    }
+
+    #[test]
+    fn cluster_backend_matches_blocking_driver() {
+        let sp = spec(401);
+        let analyzer: Arc<dyn Analyzer> = Arc::new(OracleAnalyzer::new(1));
+        let thr = Thresholds::uniform(3, 0.35);
+        let slide = Slide::from_spec(sp.clone());
+        let expect = run_pyramidal(&slide, analyzer.as_ref(), &thr, 8);
+
+        for workers in [1usize, 3] {
+            let mut backend = ClusterBackend::start(
+                sp.clone(),
+                Arc::clone(&analyzer),
+                &ClusterExecConfig {
+                    workers,
+                    steal: true,
+                    seed: 11,
+                },
+            )
+            .unwrap();
+            let tree = run_on_backend(
+                slide.id(),
+                slide.levels(),
+                expect.initial.clone(),
+                &thr,
+                4,
+                &mut backend,
+            )
+            .unwrap();
+            assert_eq!(tree.nodes, expect.nodes, "workers={workers}");
+            tree.check_consistency().unwrap();
+        }
+    }
+
+    #[test]
+    fn one_cluster_serves_chunks_of_many_slides() {
+        let analyzer: Arc<dyn Analyzer> = Arc::new(OracleAnalyzer::new(1));
+        let exec = ClusterExec::start(
+            Arc::clone(&analyzer),
+            &ClusterExecConfig {
+                workers: 2,
+                steal: true,
+                seed: 5,
+            },
+        )
+        .unwrap();
+        let specs = [spec(410), spec(411)];
+        let mut want = Vec::new();
+        for (i, sp) in specs.iter().enumerate() {
+            let slide = Slide::from_spec(sp.clone());
+            let tiles = slide.level_tile_ids(2);
+            want.push(analyzer.analyze(&slide, 2, &tiles));
+            exec.submit(i as u64, sp, 2, tiles).unwrap();
+        }
+        let mut got: HashMap<u64, Vec<f32>> = HashMap::new();
+        while got.len() < specs.len() {
+            let (key, probs) = exec.recv_result().expect("cluster alive");
+            got.insert(key, probs);
+        }
+        assert_eq!(got[&0], want[0]);
+        assert_eq!(got[&1], want[1]);
+        exec.shutdown();
+    }
+}

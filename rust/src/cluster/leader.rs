@@ -159,8 +159,9 @@ pub fn run_cluster(
 
 /// Connect with retry/backoff — worker listeners bind asynchronously and
 /// the leader must not race them (observed flaking at ~1 in 100 runs with
-/// a fixed pre-sleep).
-fn send_to(port: u16, msg: &Msg) -> Result<()> {
+/// a fixed pre-sleep). Shared with the persistent chunk backend
+/// (`cluster::backend`).
+pub(crate) fn send_to(port: u16, msg: &Msg) -> Result<()> {
     let mut delay = Duration::from_micros(200);
     let deadline = Instant::now() + Duration::from_secs(5);
     loop {

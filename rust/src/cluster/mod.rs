@@ -1,9 +1,20 @@
 //! Decentralized cluster runtime (§5.4): leader + workers over real TCP
 //! sockets with random-victim work stealing. Workers are threads standing
 //! in for the paper's 12 mainstream computers (DESIGN.md S3).
+//!
+//! Two modes share the wire protocol ([`proto`]):
+//!
+//! * [`leader`]/[`worker`] — the paper's one-shot run: workers make their
+//!   own zoom decisions and upload subtrees (`run_cluster`).
+//! * [`backend`] — a persistent execution cluster behind the unified
+//!   `ExecutionBackend` API: zoom decisions stay in the dispatcher's
+//!   `PyramidRun`; workers analyze steal-able frontier chunks of any
+//!   slide (the multi-slide service's distributed mode).
 
+pub mod backend;
 pub mod leader;
 pub mod proto;
 pub mod worker;
 
+pub use backend::{ClusterBackend, ClusterExec, ClusterExecConfig};
 pub use leader::{run_cluster, ClusterConfig, ClusterResult};

@@ -11,7 +11,20 @@ use anyhow::{anyhow, Result};
 
 use crate::pyramid::tree::ExecTree;
 use crate::slide::tile::TileId;
+use crate::synth::slide_gen::SlideSpec;
 use crate::util::json::Json;
+
+/// One steal-able unit of frontier work in the persistent execution
+/// cluster (`cluster::backend`): a same-level chunk of one slide's
+/// frontier, tagged with the dispatcher's routing key. Workers rebuild
+/// (and cache) the slide from the replicated spec.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChunkTask {
+    pub key: u64,
+    pub spec: SlideSpec,
+    pub level: usize,
+    pub tiles: Vec<TileId>,
+}
 
 #[derive(Debug, Clone, PartialEq)]
 pub enum Msg {
@@ -36,6 +49,22 @@ pub enum Msg {
     },
     /// Leader → worker: experiment over, stop listening.
     Shutdown,
+    /// Backend leader → worker: one frontier chunk for your queue.
+    Chunk(ChunkTask),
+    /// Worker → backend leader: a chunk's probabilities (tile order).
+    ChunkDone {
+        key: u64,
+        worker: usize,
+        probs: Vec<f32>,
+    },
+    /// Worker → worker: give me a whole chunk (backend steal unit).
+    ChunkSteal { thief: usize },
+    /// Reply to a chunk steal: one chunk or None; `idle` mirrors
+    /// [`Msg::StealReply`]'s victim-state report.
+    ChunkStealReply {
+        task: Option<ChunkTask>,
+        idle: bool,
+    },
 }
 
 fn tile_json(t: TileId) -> Json {
@@ -53,6 +82,31 @@ fn tile_from(v: &Json) -> Result<TileId> {
         a[1].as_usize()?,
         a[2].as_usize()?,
     ))
+}
+
+fn chunk_json(c: &ChunkTask) -> Json {
+    Json::obj()
+        .set("key", c.key)
+        .set("spec", c.spec.to_json())
+        .set("level", c.level)
+        .set(
+            "tiles",
+            Json::Arr(c.tiles.iter().map(|&t| tile_json(t)).collect()),
+        )
+}
+
+fn chunk_from(v: &Json) -> Result<ChunkTask> {
+    Ok(ChunkTask {
+        key: v.get("key")?.as_u64()?,
+        spec: SlideSpec::from_json(v.get("spec")?)?,
+        level: v.get("level")?.as_usize()?,
+        tiles: v
+            .get("tiles")?
+            .as_arr()?
+            .iter()
+            .map(tile_from)
+            .collect::<Result<Vec<_>>>()?,
+    })
 }
 
 impl Msg {
@@ -85,6 +139,28 @@ impl Msg {
                 .set("steal_fails", *steal_fails)
                 .set("tree", tree.to_json()),
             Msg::Shutdown => Json::obj().set("t", "shutdown"),
+            Msg::Chunk(c) => Json::obj().set("t", "chunk").set("chunk", chunk_json(c)),
+            Msg::ChunkDone { key, worker, probs } => Json::obj()
+                .set("t", "chunk_done")
+                .set("key", *key)
+                .set("worker", *worker)
+                .set(
+                    "probs",
+                    Json::Arr(probs.iter().map(|&p| Json::Num(p as f64)).collect()),
+                ),
+            Msg::ChunkSteal { thief } => {
+                Json::obj().set("t", "chunk_steal").set("thief", *thief)
+            }
+            Msg::ChunkStealReply { task, idle } => Json::obj()
+                .set("t", "chunk_steal_rep")
+                .set("idle", *idle)
+                .set(
+                    "task",
+                    match task {
+                        Some(c) => chunk_json(c),
+                        None => Json::Null,
+                    },
+                ),
         }
     }
 
@@ -113,6 +189,27 @@ impl Msg {
                 tree: ExecTree::from_json(v.get("tree")?)?,
             },
             "shutdown" => Msg::Shutdown,
+            "chunk" => Msg::Chunk(chunk_from(v.get("chunk")?)?),
+            "chunk_done" => Msg::ChunkDone {
+                key: v.get("key")?.as_u64()?,
+                worker: v.get("worker")?.as_usize()?,
+                probs: v
+                    .get("probs")?
+                    .as_arr()?
+                    .iter()
+                    .map(|p| Ok(p.as_f64()? as f32))
+                    .collect::<Result<Vec<f32>>>()?,
+            },
+            "chunk_steal" => Msg::ChunkSteal {
+                thief: v.get("thief")?.as_usize()?,
+            },
+            "chunk_steal_rep" => Msg::ChunkStealReply {
+                task: match v.opt("task") {
+                    Some(c) => Some(chunk_from(c)?),
+                    None => None,
+                },
+                idle: v.get("idle")?.as_bool()?,
+            },
             other => return Err(anyhow!("unknown message type {other:?}")),
         })
     }
@@ -184,6 +281,39 @@ mod tests {
                 }
                 _ => assert_eq!(m, back),
             }
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_chunk_variants() {
+        use crate::synth::slide_gen::{SlideKind, SlideSpec};
+        let task = ChunkTask {
+            key: (7u64 << 32) | 3,
+            spec: SlideSpec::new("pr", 9, 16, 8, 3, 64, SlideKind::LargeTumor),
+            level: 2,
+            tiles: vec![TileId::new(2, 1, 0), TileId::new(2, 3, 1)],
+        };
+        let msgs = vec![
+            Msg::Chunk(task.clone()),
+            Msg::ChunkDone {
+                key: task.key,
+                worker: 1,
+                probs: vec![0.25, 0.75],
+            },
+            Msg::ChunkSteal { thief: 2 },
+            Msg::ChunkStealReply {
+                task: Some(task),
+                idle: false,
+            },
+            Msg::ChunkStealReply {
+                task: None,
+                idle: true,
+            },
+        ];
+        for m in msgs {
+            let j = m.to_json().to_string();
+            let back = Msg::from_json(&Json::parse(&j).unwrap()).unwrap();
+            assert_eq!(m, back);
         }
     }
 

@@ -1,8 +1,9 @@
 //! Figure 2: tumor-probability heatmaps per pyramid level vs ground truth.
 //!
 //! Emits one CSV per level (`fig2_heatmap_l{level}.csv` with columns
-//! tx, ty, probability, truth) plus PGM images for quick eyeballing —
-//! the repo's stand-in for the paper's color renderings.
+//! tx, ty, probability, truth) plus PGM and PNG images (the tiny
+//! `util::png` encoder) for quick eyeballing — the repo's stand-in for
+//! the paper's color renderings.
 
 use std::io::Write;
 use std::path::Path;
@@ -12,6 +13,7 @@ use anyhow::Result;
 use crate::harness::CsvOut;
 use crate::slide::pyramid::Slide;
 use crate::synth::slide_gen::{DatasetParams, SlideKind, SlideSpec};
+use crate::util::png::write_gray_png;
 
 use super::ctx::{make_analyzer, ModelKind};
 
@@ -47,7 +49,7 @@ pub fn run(model: ModelKind) -> Result<Vec<String>> {
         }
         outputs.push(csv.path().display().to_string());
 
-        // PGM heatmap (prob) and ground truth mask.
+        // PGM + PNG heatmap (prob) and ground truth mask.
         for (suffix, vals) in [
             (
                 "prob",
@@ -66,6 +68,11 @@ pub fn run(model: ModelKind) -> Result<Vec<String>> {
             write!(f, "P5\n{nx} {ny}\n255\n")?;
             f.write_all(&vals)?;
             outputs.push(path.display().to_string());
+
+            let png_path =
+                Path::new("bench_results").join(format!("fig2_l{level}_{suffix}.png"));
+            write_gray_png(&png_path, nx, ny, &vals)?;
+            outputs.push(png_path.display().to_string());
         }
     }
     Ok(outputs)

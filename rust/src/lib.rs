@@ -9,9 +9,12 @@
 //!   pooling and the classifier head, lowered at build time.
 //! * **L2** — JAX TinyInception tile classifier (`python/compile/model.py`),
 //!   AOT-exported to `artifacts/*.hlo.txt`.
-//! * **L3** — this crate: the pyramidal analysis coordinator, threshold
-//!   tuning, the distributed simulator, the TCP work-stealing cluster, the
-//!   whole-slide classifier and the experiment harness.
+//! * **L3** — this crate: the pyramidal analysis coordinator (the sans-IO
+//!   [`pyramid::PyramidRun`] state machine over unified
+//!   [`pyramid::ExecutionBackend`] substrates), threshold tuning, the
+//!   distributed simulator, the TCP work-stealing cluster, the
+//!   multi-slide analysis service, the whole-slide classifier and the
+//!   experiment harness.
 //!
 //! See `DESIGN.md` for the system inventory and the per-experiment index,
 //! and `EXPERIMENTS.md` for paper-vs-measured results.

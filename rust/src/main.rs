@@ -72,9 +72,10 @@ subcommands:
   analyze   pyramidal vs reference on one slide   (--slide-seed --kind --model --thresholds)
   simulate  Fig-6 load-balancing simulation       (--workers --model)
   cluster   run the TCP work-stealing cluster     (--workers --per-tile-ms --reps)
-  serve     multi-slide analysis service          (--jobs --workers --policy --max-in-flight
-                                                   --queue-cap --batch --per-tile-ms --tenants
-                                                   --seed --model --csv)
+  serve     multi-slide analysis service          (--jobs --workers --backend pool|cluster|replay
+                                                   --policy --max-in-flight --queue-cap --batch
+                                                   --coalesce --per-tile-ms --tenants --seed
+                                                   --model --csv)
   report    regenerate every paper table/figure   (--model --fast)";
 
 fn model_kind(args: &Args) -> Result<ModelKind> {
@@ -264,10 +265,11 @@ fn cmd_cluster(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
+    use pyramidai::cluster::ClusterExecConfig;
     use pyramidai::model::DelayAnalyzer;
     use pyramidai::service::{
-        metrics as svc_metrics, AnalysisService, JobSource, JobSpec, Policy, Priority,
-        ServiceConfig, SubmitError,
+        metrics as svc_metrics, AnalysisService, ExecMode, JobSource, JobSpec, Policy,
+        Priority, ServiceConfig, SubmitError,
     };
 
     let jobs = args.usize_or("jobs", 32)?;
@@ -281,40 +283,41 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let per_tile_ms = args.u64_or("per-tile-ms", 0)?;
     let tenants = args.usize_or("tenants", 3)?.max(1);
     let seed = args.u64_or("seed", 2025)?;
+    let backend = args.str_or("backend", "pool");
+    let coalesce = args.str_or("coalesce", "true") != "false";
     let model = model_kind(args)?;
     let params = dataset_params(args)?;
     let csv = args.bool("csv");
     args.finish()?;
 
-    let (analyzer, name) = experiments::ctx::make_analyzer(model, 7)?;
+    let (base_analyzer, name) = experiments::ctx::make_analyzer(model, 7)?;
     let analyzer: std::sync::Arc<dyn pyramidai::model::Analyzer> = if per_tile_ms > 0 {
         std::sync::Arc::new(DelayAnalyzer::new(
-            analyzer,
+            std::sync::Arc::clone(&base_analyzer),
             Duration::from_millis(per_tile_ms),
         ))
     } else {
-        analyzer
+        std::sync::Arc::clone(&base_analyzer)
+    };
+
+    let exec = match backend.as_str() {
+        "pool" | "replay" => ExecMode::Pool,
+        "cluster" => ExecMode::Cluster(ClusterExecConfig {
+            workers,
+            steal: true,
+            seed,
+        }),
+        other => return Err(anyhow!("unknown --backend {other:?} (pool|cluster|replay)")),
     };
 
     println!(
-        "serving {jobs} jobs on {workers} workers ({name}, policy={}, max-in-flight={max_in_flight}, queue-cap={queue_cap})…",
+        "serving {jobs} jobs on {workers} workers ({name}, backend={backend}, policy={}, max-in-flight={max_in_flight}, queue-cap={queue_cap})…",
         policy.as_str()
-    );
-    let svc = AnalysisService::start(
-        analyzer,
-        ServiceConfig {
-            workers,
-            queue_capacity: queue_cap,
-            max_in_flight,
-            batch,
-            policy,
-        },
     );
 
     // Synthetic job stream: kinds, priorities and tenants cycle so every
     // policy has something to bite on; seeds derive from --seed.
     let specs = gen_slide_set("serve", jobs, seed, &params);
-    let prios = [Priority::Low, Priority::Normal, Priority::High];
     let thr = if params.levels == 3 {
         Thresholds {
             zoom: vec![0.5, 0.35, 0.35],
@@ -322,8 +325,48 @@ fn cmd_serve(args: &Args) -> Result<()> {
     } else {
         Thresholds::uniform(params.levels, 0.35)
     };
+
+    // Replay backend: run inference once up front (undelayed), then serve
+    // the jobs as pure post-mortem replays — the §4.3 regime as a service.
+    let caches: Vec<Option<std::sync::Arc<SlidePredictions>>> = if backend == "replay" {
+        println!("collecting prediction caches for {} slides…", specs.len());
+        specs
+            .iter()
+            .map(|sp| {
+                let slide = Slide::from_spec(sp.clone());
+                Some(std::sync::Arc::new(SlidePredictions::collect(
+                    &slide,
+                    base_analyzer.as_ref(),
+                    batch,
+                )))
+            })
+            .collect()
+    } else {
+        specs.iter().map(|_| None).collect()
+    };
+
+    let svc = AnalysisService::start(
+        analyzer,
+        ServiceConfig {
+            // Replay jobs run inline on the scheduler; a full pool would
+            // sit idle.
+            workers: if backend == "replay" { 1 } else { workers },
+            queue_capacity: queue_cap,
+            max_in_flight,
+            batch,
+            policy,
+            coalesce,
+            exec,
+        },
+    );
+
+    let prios = [Priority::Low, Priority::Normal, Priority::High];
     for (i, spec) in specs.into_iter().enumerate() {
-        let job = JobSpec::new(JobSource::Spec(spec), thr.clone())
+        let source = match &caches[i] {
+            Some(c) => JobSource::Cached(std::sync::Arc::clone(c)),
+            None => JobSource::Spec(spec),
+        };
+        let job = JobSpec::new(source, thr.clone())
             .with_priority(prios[i % prios.len()])
             .with_tenant(format!("tenant{}", i % tenants));
         // Backpressure: retry until the queue has room.

@@ -71,20 +71,21 @@ impl SlidePredictions {
         }
     }
 
-    /// Replay a pyramidal execution under `thresholds` (post-mortem run).
+    /// Replay a pyramidal execution under `thresholds` (post-mortem run):
+    /// a [`crate::pyramid::PyramidRun`] driven by a
+    /// [`crate::pyramid::ReplayBackend`] over this cache. Panics when a
+    /// lineage tile is missing (corrupt cache).
     pub fn replay(&self, thresholds: &Thresholds) -> ExecTree {
-        crate::pyramid::driver::run_with_provider(
+        let mut backend = crate::pyramid::ReplayBackend::new(self);
+        crate::pyramid::backend::run_on_backend(
             &self.spec.id,
             self.spec.levels,
             self.initial.clone(),
             thresholds,
-            |_, tiles| {
-                tiles
-                    .iter()
-                    .map(|t| self.preds.get(t).expect("lineage tile cached").prob)
-                    .collect()
-            },
+            0,
+            &mut backend,
         )
+        .expect("every lineage tile cached")
     }
 
     /// (probability, label) pairs for all cached tiles at one level — the

@@ -1,0 +1,293 @@
+//! Execution backends: where [`FrontierRequest`]s actually run.
+//!
+//! [`ExecutionBackend`] is the one API every execution substrate
+//! implements — dispatch a request, poll completions. Four substrates
+//! drive the same [`PyramidRun`] state machine through it:
+//!
+//! * [`PoolBackend`] — the in-process analyzer pool
+//!   ([`crate::service::pool::AnalyzerPool`]).
+//! * [`ReplayBackend`] — post-mortem replay of a
+//!   [`crate::predcache::SlidePredictions`] (§4.3 methodology).
+//! * [`crate::cluster::ClusterBackend`] — the TCP work-stealing cluster
+//!   (§5.4): frontier chunks are dealt to workers as steal-able units.
+//! * [`crate::sim::SimBackend`] — the §5.1 simulator's virtual workers,
+//!   accounting per-worker load while serving recorded probabilities.
+//!
+//! [`drive`] is the canonical single-run loop over the pair; schedulers
+//! that interleave many runs (the multi-slide service) step
+//! [`PyramidRun`]s themselves and use backends only for dispatch.
+
+use std::collections::VecDeque;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+
+use crate::predcache::SlidePredictions;
+use crate::service::pool::AnalyzerPool;
+use crate::slide::pyramid::Slide;
+
+use super::run::{FeedError, FrontierRequest, PyramidRun, RequestId};
+use super::tree::ExecTree;
+
+/// A finished request: the probabilities for its tiles, in tile order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Completion {
+    pub id: RequestId,
+    pub probs: Vec<f32>,
+}
+
+/// An execution substrate for [`FrontierRequest`]s.
+///
+/// `dispatch` must not block on the work itself (it may block briefly on
+/// submission); results come back through `poll`. Implementations decide
+/// where the work runs — threads, a prediction cache, TCP workers or a
+/// simulation.
+pub trait ExecutionBackend {
+    /// Submit one request for execution.
+    fn dispatch(&mut self, req: FrontierRequest);
+
+    /// Take one completed request. With `block`, waits until a dispatched
+    /// request completes; returns `None` only when nothing is in flight
+    /// (or, non-blocking, when nothing has completed yet).
+    fn poll(&mut self, block: bool) -> Option<Completion>;
+
+    /// Requests dispatched but not yet returned by `poll`.
+    fn in_flight(&self) -> usize;
+}
+
+/// Why [`drive`] could not finish a run.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum DriveError {
+    /// A completion was rejected by the run (wrong probability count —
+    /// e.g. an analyzer fault surfaced as a truncated result).
+    Feed(FeedError),
+    /// The backend stopped producing completions while work was pending.
+    Stalled,
+}
+
+impl std::fmt::Display for DriveError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DriveError::Feed(e) => write!(f, "feed rejected: {e}"),
+            DriveError::Stalled => write!(f, "backend stalled with work in flight"),
+        }
+    }
+}
+
+impl std::error::Error for DriveError {}
+
+impl From<FeedError> for DriveError {
+    fn from(e: FeedError) -> DriveError {
+        DriveError::Feed(e)
+    }
+}
+
+/// Drive one run to completion on one backend: issue every available
+/// request, then block for completions, until the run finishes.
+pub fn drive(run: &mut PyramidRun, backend: &mut dyn ExecutionBackend) -> Result<(), DriveError> {
+    loop {
+        while let Some(req) = run.next_request() {
+            backend.dispatch(req);
+        }
+        if run.is_complete() {
+            return Ok(());
+        }
+        match backend.poll(true) {
+            Some(c) => run.feed(c.id, c.probs)?,
+            None => return Err(DriveError::Stalled),
+        }
+    }
+}
+
+/// Convenience: build the run, drive it, return the tree.
+pub fn run_on_backend(
+    slide_id: &str,
+    levels: usize,
+    initial: Vec<crate::slide::tile::TileId>,
+    thresholds: &super::tree::Thresholds,
+    chunk: usize,
+    backend: &mut dyn ExecutionBackend,
+) -> Result<ExecTree, DriveError> {
+    let mut run = PyramidRun::new(slide_id, levels, initial, thresholds.clone(), chunk);
+    drive(&mut run, backend)?;
+    Ok(run.finish())
+}
+
+/// In-process backend: requests fan out over a shared [`AnalyzerPool`].
+pub struct PoolBackend {
+    pool: Arc<AnalyzerPool>,
+    slide: Arc<Slide>,
+    batch: usize,
+    tx: Sender<Completion>,
+    rx: Receiver<Completion>,
+    in_flight: usize,
+}
+
+impl PoolBackend {
+    /// `batch` is the pool-side chunk size within one request.
+    pub fn new(pool: Arc<AnalyzerPool>, slide: Arc<Slide>, batch: usize) -> PoolBackend {
+        let (tx, rx) = channel();
+        PoolBackend {
+            pool,
+            slide,
+            batch,
+            tx,
+            rx,
+            in_flight: 0,
+        }
+    }
+}
+
+impl ExecutionBackend for PoolBackend {
+    fn dispatch(&mut self, req: FrontierRequest) {
+        let tx = self.tx.clone();
+        let id = req.id;
+        self.pool.analyze_async(
+            Arc::clone(&self.slide),
+            req.level,
+            req.tiles,
+            self.batch,
+            Box::new(move |probs| {
+                let _ = tx.send(Completion { id, probs });
+            }),
+        );
+        self.in_flight += 1;
+    }
+
+    fn poll(&mut self, block: bool) -> Option<Completion> {
+        if self.in_flight == 0 {
+            return None;
+        }
+        let c = if block {
+            self.rx.recv().ok()
+        } else {
+            self.rx.try_recv().ok()
+        };
+        if c.is_some() {
+            self.in_flight -= 1;
+        }
+        c
+    }
+
+    fn in_flight(&self) -> usize {
+        self.in_flight
+    }
+}
+
+/// Post-mortem backend: probabilities come from a prediction cache, so
+/// completions are available immediately after dispatch. A tile missing
+/// from the cache (corrupt cache) yields a short completion, which the
+/// run rejects with [`FeedError::WrongCount`] — loud, but recoverable by
+/// the caller.
+pub struct ReplayBackend<'a> {
+    preds: &'a SlidePredictions,
+    ready: VecDeque<Completion>,
+}
+
+impl<'a> ReplayBackend<'a> {
+    pub fn new(preds: &'a SlidePredictions) -> ReplayBackend<'a> {
+        ReplayBackend {
+            preds,
+            ready: VecDeque::new(),
+        }
+    }
+}
+
+impl ExecutionBackend for ReplayBackend<'_> {
+    fn dispatch(&mut self, req: FrontierRequest) {
+        let probs: Vec<f32> = req
+            .tiles
+            .iter()
+            .filter_map(|t| self.preds.preds.get(t).map(|p| p.prob))
+            .collect();
+        self.ready.push_back(Completion { id: req.id, probs });
+    }
+
+    fn poll(&mut self, _block: bool) -> Option<Completion> {
+        self.ready.pop_front()
+    }
+
+    fn in_flight(&self) -> usize {
+        self.ready.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::oracle::OracleAnalyzer;
+    use crate::model::Analyzer;
+    use crate::pyramid::driver::run_pyramidal;
+    use crate::pyramid::tree::Thresholds;
+    use crate::synth::slide_gen::{SlideKind, SlideSpec};
+
+    fn slide() -> Arc<Slide> {
+        Arc::new(Slide::from_spec(SlideSpec::new(
+            "bk",
+            92,
+            32,
+            16,
+            3,
+            64,
+            SlideKind::LargeTumor,
+        )))
+    }
+
+    #[test]
+    fn pool_backend_matches_blocking_driver() {
+        let analyzer: Arc<dyn Analyzer> = Arc::new(OracleAnalyzer::new(1));
+        let s = slide();
+        let thr = Thresholds::uniform(3, 0.35);
+        let expect = run_pyramidal(&s, analyzer.as_ref(), &thr, 8);
+
+        let pool = Arc::new(AnalyzerPool::new(analyzer, 3));
+        let mut backend = PoolBackend::new(pool, Arc::clone(&s), 4);
+        let tree = run_on_backend(
+            s.id(),
+            s.levels(),
+            expect.initial.clone(),
+            &thr,
+            6,
+            &mut backend,
+        )
+        .unwrap();
+        assert_eq!(tree.nodes, expect.nodes);
+        assert_eq!(backend.in_flight(), 0);
+    }
+
+    #[test]
+    fn replay_backend_matches_blocking_driver() {
+        let analyzer = OracleAnalyzer::new(1);
+        let s = slide();
+        let thr = Thresholds::uniform(3, 0.4);
+        let expect = run_pyramidal(&s, &analyzer, &thr, 8);
+        let preds = SlidePredictions::collect(&s, &analyzer, 16);
+
+        let mut backend = ReplayBackend::new(&preds);
+        let tree = run_on_backend(
+            s.id(),
+            s.levels(),
+            expect.initial.clone(),
+            &thr,
+            3,
+            &mut backend,
+        )
+        .unwrap();
+        assert_eq!(tree.nodes, expect.nodes);
+    }
+
+    #[test]
+    fn corrupt_cache_surfaces_as_feed_error_not_a_hang() {
+        let analyzer = OracleAnalyzer::new(1);
+        let s = slide();
+        let thr = Thresholds::uniform(3, 0.4);
+        let mut preds = SlidePredictions::collect(&s, &analyzer, 16);
+        // Drop one lowest-level tile from the cache.
+        let victim = preds.initial[0];
+        preds.preds.remove(&victim);
+        let initial = preds.initial.clone();
+
+        let mut backend = ReplayBackend::new(&preds);
+        let err = run_on_backend(s.id(), s.levels(), initial, &thr, 0, &mut backend).unwrap_err();
+        assert!(matches!(err, DriveError::Feed(FeedError::WrongCount { .. })));
+    }
+}

@@ -1,15 +1,22 @@
 //! Single-worker pyramidal and reference drivers (§3.1 of the paper).
 //!
-//! Both are expressed over a *probability provider* so the same logic runs
-//! live (an [`Analyzer`] batching tiles through the model runtime) or
-//! post-mortem (replaying a [`crate::predcache::SlidePredictions`] under
-//! new thresholds, the paper's §4.3 methodology).
+//! Deprecated compatibility shims: the analyze/threshold/zoom loop lives
+//! in the sans-IO [`PyramidRun`] state machine (`pyramid::run`), and
+//! execution substrates implement `pyramid::backend::ExecutionBackend`.
+//! The functions here keep the original blocking signatures for existing
+//! callers — [`run_with_provider`] drives a [`PyramidRun`] with a closure
+//! provider, so the same logic still runs live (an [`Analyzer`] batching
+//! tiles through the model runtime) or post-mortem (replaying a
+//! [`crate::predcache::SlidePredictions`] under new thresholds, the
+//! paper's §4.3 methodology). Prefer [`PyramidRun`] plus a backend in new
+//! code.
 
 use crate::model::Analyzer;
 use crate::preprocess::otsu::background_removal;
 use crate::slide::pyramid::Slide;
 use crate::slide::tile::TileId;
 
+use super::run::PyramidRun;
 use super::tree::{ExecNode, ExecTree, Thresholds};
 
 /// Background-removal luma margin (see `preprocess::otsu`).
@@ -21,6 +28,11 @@ pub const DEFAULT_BATCH: usize = 16;
 
 /// Run the pyramidal analysis with an arbitrary probability provider.
 /// `probs(level, tiles)` must return one probability per tile.
+///
+/// Deprecated compatibility shim over [`PyramidRun`]: each whole frontier
+/// becomes one request, fed back synchronously — byte-identical trees to
+/// the historical blocking loop. New code should step a [`PyramidRun`]
+/// (or use `pyramid::backend::drive`) directly.
 pub fn run_with_provider<F>(
     slide_id: &str,
     levels: usize,
@@ -31,40 +43,16 @@ pub fn run_with_provider<F>(
 where
     F: FnMut(usize, &[TileId]) -> Vec<f32>,
 {
-    // A zero-level pyramid has no entry level: `levels - 1` below would
-    // wrap and index nonsense. Reject it loudly.
-    assert!(
-        levels > 0,
-        "run_with_provider requires at least one pyramid level (slide {slide_id:?})"
-    );
-    assert_eq!(thresholds.zoom.len(), levels, "one threshold per level");
-    let mut tree = ExecTree::new(slide_id, levels);
-    tree.initial = initial.clone();
-
-    let mut frontier = initial;
-    let mut level = levels - 1;
-    loop {
-        if frontier.is_empty() {
-            break;
-        }
-        let ps = probs(level, &frontier);
-        assert_eq!(ps.len(), frontier.len(), "provider returned wrong count");
-        let thr = thresholds.zoom[level] as f32;
-        let mut next = Vec::new();
-        for (&tile, &p) in frontier.iter().zip(&ps) {
-            let zoom = level > 0 && p >= thr;
-            tree.nodes[level].push(ExecNode { tile, prob: p, zoom });
-            if zoom {
-                next.extend(tile.children());
-            }
-        }
-        if level == 0 {
-            break;
-        }
-        frontier = next;
-        level -= 1;
+    // PyramidRun rejects zero-level pyramids and threshold-count
+    // mismatches with the same messages this function always used.
+    let mut run = PyramidRun::new(slide_id, levels, initial, thresholds.clone(), 0);
+    while let Some(req) = run.next_request() {
+        let ps = probs(req.level, &req.tiles);
+        assert_eq!(ps.len(), req.tiles.len(), "provider returned wrong count");
+        run.feed(req.id, ps)
+            .expect("synchronous feed of a just-issued request");
     }
-    tree
+    run.finish()
 }
 
 /// Live pyramidal run: Otsu background removal at the lowest level, then
@@ -109,6 +97,13 @@ pub fn run_reference(slide: &Slide, analyzer: &dyn Analyzer, batch: usize) -> Ex
 
 /// All level-0 descendants of a set of lowest-level tiles.
 pub fn descendants_at_level0(initial: &[TileId], levels: usize) -> Vec<TileId> {
+    // `levels - 1` would wrap on a zero-level pyramid and die on an opaque
+    // capacity-overflow panic deep in the loop. Reject it loudly, like
+    // `run_with_provider` does.
+    assert!(
+        levels > 0,
+        "descendants_at_level0 requires at least one pyramid level"
+    );
     let mut frontier: Vec<TileId> = initial.to_vec();
     for _ in 0..levels - 1 {
         frontier = frontier.iter().flat_map(|t| t.children()).collect();
@@ -221,6 +216,14 @@ mod tests {
             &Thresholds { zoom: vec![] },
             |_, _| Vec::new(),
         );
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one pyramid level")]
+    fn descendants_of_zero_level_pyramid_rejected_not_underflowed() {
+        // Regression: `0..levels - 1` used to wrap on levels == 0 and
+        // panic opaquely inside the iterator machinery.
+        descendants_at_level0(&[TileId::new(0, 0, 0)], 0);
     }
 
     #[test]

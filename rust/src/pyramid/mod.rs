@@ -1,8 +1,27 @@
-//! The pyramidal analysis core (§3.1): execution tree, thresholds and the
-//! single-worker drivers (live and post-mortem).
+//! The pyramidal analysis core (§3.1): execution tree, thresholds, the
+//! sans-IO [`PyramidRun`] state machine and the [`ExecutionBackend`]
+//! execution substrates, plus the classic blocking driver shims.
+//!
+//! * [`run`] — [`PyramidRun`]: pull [`FrontierRequest`]s, feed
+//!   probabilities back (chunked, out of order), collect the
+//!   [`ExecTree`]. Every execution path — in-process pool, predcache
+//!   replay, TCP cluster, simulator, the multi-slide service — steps this
+//!   one state machine.
+//! * [`backend`] — the [`ExecutionBackend`] trait with the pool and
+//!   replay implementations (the cluster and simulator backends live
+//!   with their substrates in `cluster::backend` / `sim::backend`).
+//! * [`driver`] — blocking compatibility shims (`run_pyramidal`,
+//!   `run_with_provider`, `run_reference`) kept for existing callers.
+//! * [`tree`] — [`ExecTree`], consistency checking, thresholds.
 
+pub mod backend;
 pub mod driver;
+pub mod run;
 pub mod tree;
 
+pub use backend::{
+    drive, run_on_backend, Completion, DriveError, ExecutionBackend, PoolBackend, ReplayBackend,
+};
 pub use driver::{run_pyramidal, run_reference, run_with_provider, DEFAULT_BATCH};
+pub use run::{FeedError, FrontierRequest, PyramidRun, RequestId};
 pub use tree::{ExecNode, ExecTree, Thresholds, POSITIVE_THRESHOLD};

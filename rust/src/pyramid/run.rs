@@ -1,0 +1,387 @@
+//! Sans-IO pyramidal driver: the analyze/threshold/zoom loop of §3.1 as a
+//! pull-based state machine.
+//!
+//! [`PyramidRun`] owns the frontier, thresholds and the growing
+//! [`ExecTree`], but performs no analysis itself: callers pull
+//! [`FrontierRequest`]s with [`PyramidRun::next_request`], execute them on
+//! whatever substrate they like (thread pool, prediction cache, TCP
+//! cluster, simulator — see [`crate::pyramid::backend`]) and return the
+//! probabilities with [`PyramidRun::feed`]. A level frontier may be split
+//! into many requests and fed back out of order; the run advances to the
+//! next level only once every chunk of the current frontier has landed, so
+//! the resulting tree is byte-identical to the classic blocking driver
+//! regardless of chunking or completion order.
+//!
+//! Because the run is steppable, schedulers can interleave many runs on
+//! shared workers, cancel a run at a frontier boundary (drop it and call
+//! [`PyramidRun::finish`] for the partial tree), or coalesce requests from
+//! different runs into one dispatch — the inversions the closure-driven
+//! `run_with_provider` could not express.
+
+use std::collections::HashMap;
+
+use crate::slide::tile::TileId;
+
+use super::tree::{ExecNode, ExecTree, Thresholds};
+
+/// Identifies one issued [`FrontierRequest`] within one [`PyramidRun`]
+/// (monotonic from 0).
+pub type RequestId = u64;
+
+/// One unit of analysis work: a same-level chunk of the current frontier.
+/// The executor must return exactly one probability per tile, in order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FrontierRequest {
+    pub id: RequestId,
+    pub level: usize,
+    pub tiles: Vec<TileId>,
+}
+
+/// Why a [`PyramidRun::feed`] was rejected. The run stays consistent after
+/// an error; the offending request (if any) is considered consumed.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FeedError {
+    /// The id was never issued, or was already fed.
+    UnknownRequest(RequestId),
+    /// The probability count does not match the request's tile count
+    /// (a lost or truncated execution — e.g. an analyzer fault).
+    WrongCount {
+        id: RequestId,
+        expected: usize,
+        got: usize,
+    },
+}
+
+impl std::fmt::Display for FeedError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FeedError::UnknownRequest(id) => {
+                write!(f, "unknown or already-fed request {id}")
+            }
+            FeedError::WrongCount { id, expected, got } => write!(
+                f,
+                "request {id} expected {expected} probabilities, got {got}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for FeedError {}
+
+/// The pyramidal analysis of one slide as a steppable state machine.
+/// See the module docs for the protocol.
+pub struct PyramidRun {
+    thresholds: Thresholds,
+    /// Max tiles per request (0 = whole frontier in one request).
+    chunk: usize,
+    tree: ExecTree,
+    /// Level currently being analyzed (levels-1 → 0).
+    level: usize,
+    /// Full ordered frontier of the current level.
+    frontier: Vec<TileId>,
+    /// Tiles of `frontier` already packed into issued requests.
+    issued: usize,
+    /// Per-frontier-position probabilities, filled by feeds.
+    probs: Vec<Option<f32>>,
+    /// Tiles fed back so far at the current level.
+    fed: usize,
+    /// Issued-but-unfed requests: id → (start, len) into `frontier`.
+    outstanding: HashMap<RequestId, (usize, usize)>,
+    next_id: RequestId,
+    complete: bool,
+}
+
+impl PyramidRun {
+    /// Start a run at the lowest level with an initial working set (the
+    /// tiles surviving background removal). `chunk` caps the tiles per
+    /// request; 0 means one request per whole frontier.
+    ///
+    /// Panics when `levels == 0` or the threshold count mismatches — the
+    /// same contract as the classic driver.
+    pub fn new(
+        slide_id: impl Into<String>,
+        levels: usize,
+        initial: Vec<TileId>,
+        thresholds: Thresholds,
+        chunk: usize,
+    ) -> PyramidRun {
+        let slide_id = slide_id.into();
+        assert!(
+            levels > 0,
+            "PyramidRun requires at least one pyramid level (slide {slide_id:?})"
+        );
+        assert_eq!(thresholds.zoom.len(), levels, "one threshold per level");
+        let mut tree = ExecTree::new(slide_id, levels);
+        tree.initial = initial.clone();
+        let complete = initial.is_empty();
+        let n = initial.len();
+        PyramidRun {
+            thresholds,
+            chunk,
+            tree,
+            level: levels - 1,
+            frontier: initial,
+            issued: 0,
+            probs: vec![None; n],
+            fed: 0,
+            outstanding: HashMap::new(),
+            next_id: 0,
+            complete,
+        }
+    }
+
+    /// The next chunk of analysis work, or `None` when there is nothing to
+    /// issue *right now*: either every tile of the current frontier is
+    /// already in flight (feed them to make progress) or the run is
+    /// complete.
+    pub fn next_request(&mut self) -> Option<FrontierRequest> {
+        if self.complete || self.issued >= self.frontier.len() {
+            return None;
+        }
+        let start = self.issued;
+        let cap = if self.chunk == 0 { usize::MAX } else { self.chunk };
+        let len = (self.frontier.len() - start).min(cap);
+        self.issued += len;
+        let id = self.next_id;
+        self.next_id += 1;
+        self.outstanding.insert(id, (start, len));
+        Some(FrontierRequest {
+            id,
+            level: self.level,
+            tiles: self.frontier[start..start + len].to_vec(),
+        })
+    }
+
+    /// Return the probabilities for one issued request (any order). When
+    /// the last chunk of a frontier lands, the run applies the level's
+    /// threshold, records the level's nodes in frontier order and builds
+    /// the next frontier — so feeds never change the resulting tree, only
+    /// when it materializes.
+    pub fn feed(&mut self, id: RequestId, probs: Vec<f32>) -> Result<(), FeedError> {
+        let (start, len) = self
+            .outstanding
+            .remove(&id)
+            .ok_or(FeedError::UnknownRequest(id))?;
+        if probs.len() != len {
+            return Err(FeedError::WrongCount {
+                id,
+                expected: len,
+                got: probs.len(),
+            });
+        }
+        for (i, p) in probs.into_iter().enumerate() {
+            self.probs[start + i] = Some(p);
+        }
+        self.fed += len;
+        if self.fed == self.frontier.len() && self.issued == self.frontier.len() {
+            self.advance();
+        }
+        Ok(())
+    }
+
+    /// Frontier complete: record the level, zoom into children, descend.
+    fn advance(&mut self) {
+        let thr = self.thresholds.zoom[self.level] as f32;
+        let mut next = Vec::new();
+        for (tile, p) in self.frontier.iter().zip(&self.probs) {
+            let p = (*p).expect("advance only runs on a fully fed frontier");
+            let zoom = self.level > 0 && p >= thr;
+            self.tree.nodes[self.level].push(ExecNode {
+                tile: *tile,
+                prob: p,
+                zoom,
+            });
+            if zoom {
+                next.extend(tile.children());
+            }
+        }
+        if self.level == 0 || next.is_empty() {
+            self.complete = true;
+            self.frontier.clear();
+            self.probs.clear();
+        } else {
+            self.level -= 1;
+            self.probs = vec![None; next.len()];
+            self.frontier = next;
+        }
+        self.issued = 0;
+        self.fed = 0;
+    }
+
+    /// Has the run reached level 0 (or run out of frontier)?
+    pub fn is_complete(&self) -> bool {
+        self.complete
+    }
+
+    /// Requests issued but not yet fed.
+    pub fn in_flight(&self) -> usize {
+        self.outstanding.len()
+    }
+
+    /// The level currently being analyzed (meaningless once complete).
+    pub fn current_level(&self) -> usize {
+        self.level
+    }
+
+    /// Tiles recorded in the tree so far (completed levels only).
+    pub fn tiles_recorded(&self) -> usize {
+        self.tree.total_analyzed()
+    }
+
+    /// Consume the run and return the execution tree. For a complete run
+    /// this is the full tree; for an abandoned run (cancellation at a
+    /// frontier boundary) it contains exactly the fully completed levels —
+    /// a consistent partial tree, never a half-recorded frontier.
+    pub fn finish(self) -> ExecTree {
+        self.tree
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::oracle::OracleAnalyzer;
+    use crate::model::Analyzer;
+    use crate::pyramid::driver::run_pyramidal;
+    use crate::slide::pyramid::Slide;
+    use crate::synth::slide_gen::{SlideKind, SlideSpec};
+
+    fn slide() -> Slide {
+        Slide::from_spec(SlideSpec::new(
+            "run",
+            91,
+            32,
+            16,
+            3,
+            64,
+            SlideKind::LargeTumor,
+        ))
+    }
+
+    fn thr() -> Thresholds {
+        Thresholds::uniform(3, 0.35)
+    }
+
+    #[test]
+    fn chunked_out_of_order_feeds_match_blocking_driver() {
+        let s = slide();
+        let a = OracleAnalyzer::new(1);
+        let expect = run_pyramidal(&s, &a, &thr(), 8);
+
+        let mut run = PyramidRun::new(s.id(), s.levels(), expect.initial.clone(), thr(), 5);
+        while !run.is_complete() {
+            // Drain the whole frontier into requests, then feed in reverse.
+            let mut reqs = Vec::new();
+            while let Some(r) = run.next_request() {
+                reqs.push(r);
+            }
+            assert!(!reqs.is_empty(), "incomplete run must yield requests");
+            for req in reqs.into_iter().rev() {
+                let ps = a.analyze(&s, req.level, &req.tiles);
+                run.feed(req.id, ps).unwrap();
+            }
+        }
+        let tree = run.finish();
+        assert_eq!(tree.nodes, expect.nodes);
+        assert_eq!(tree.initial, expect.initial);
+        tree.check_consistency().unwrap();
+    }
+
+    #[test]
+    fn abandoned_run_yields_partial_tree_of_whole_levels() {
+        let s = slide();
+        let a = OracleAnalyzer::new(1);
+        let full = run_pyramidal(&s, &a, &thr(), 8);
+
+        let mut run = PyramidRun::new(s.id(), s.levels(), full.initial.clone(), thr(), 4);
+        // Complete exactly the lowest level, then abandon.
+        let mut reqs = Vec::new();
+        while let Some(r) = run.next_request() {
+            reqs.push(r);
+        }
+        for req in reqs {
+            let ps = a.analyze(&s, req.level, &req.tiles);
+            run.feed(req.id, ps).unwrap();
+        }
+        assert!(!run.is_complete());
+        // Issue (but never feed) part of the next level.
+        let _in_flight = run.next_request().expect("next level has work");
+        let partial = run.finish();
+        partial.check_consistency().unwrap();
+        assert_eq!(partial.nodes[2], full.nodes[2], "completed level recorded");
+        assert!(partial.nodes[1].is_empty(), "unfinished frontier not recorded");
+        assert!(partial.nodes[0].is_empty());
+    }
+
+    #[test]
+    fn feed_errors_are_reported_and_run_stays_usable() {
+        let s = slide();
+        let a = OracleAnalyzer::new(1);
+        let initial = run_pyramidal(&s, &a, &thr(), 8).initial;
+        let mut run = PyramidRun::new(s.id(), s.levels(), initial, thr(), 3);
+
+        let req = run.next_request().unwrap();
+        assert_eq!(
+            run.feed(999, vec![]),
+            Err(FeedError::UnknownRequest(999)),
+            "never-issued id"
+        );
+        let n = req.tiles.len();
+        assert_eq!(
+            run.feed(req.id, vec![0.5; n + 1]),
+            Err(FeedError::WrongCount {
+                id: req.id,
+                expected: n,
+                got: n + 1
+            })
+        );
+        // The bad feed consumed the request; feeding again is unknown.
+        assert_eq!(
+            run.feed(req.id, vec![0.5; n]),
+            Err(FeedError::UnknownRequest(req.id))
+        );
+        // The run still issues the rest of the frontier.
+        assert!(run.next_request().is_some());
+    }
+
+    #[test]
+    fn double_feed_is_rejected() {
+        let s = slide();
+        let a = OracleAnalyzer::new(1);
+        let initial = run_pyramidal(&s, &a, &thr(), 8).initial;
+        let mut run = PyramidRun::new(s.id(), s.levels(), initial, thr(), 2);
+        let req = run.next_request().unwrap();
+        let ps = a.analyze(&s, req.level, &req.tiles);
+        run.feed(req.id, ps.clone()).unwrap();
+        assert_eq!(run.feed(req.id, ps), Err(FeedError::UnknownRequest(req.id)));
+    }
+
+    #[test]
+    fn empty_initial_set_is_immediately_complete() {
+        let mut run = PyramidRun::new("empty", 3, Vec::new(), thr(), 0);
+        assert!(run.is_complete());
+        assert!(run.next_request().is_none());
+        let tree = run.finish();
+        assert_eq!(tree.total_analyzed(), 0);
+        assert_eq!(tree.levels, 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one pyramid level")]
+    fn zero_levels_rejected() {
+        PyramidRun::new("zero", 0, Vec::new(), Thresholds { zoom: vec![] }, 0);
+    }
+
+    #[test]
+    fn chunk_zero_issues_whole_frontier_at_once() {
+        let s = slide();
+        let a = OracleAnalyzer::new(1);
+        let initial = run_pyramidal(&s, &a, &thr(), 8).initial;
+        let n = initial.len();
+        let mut run = PyramidRun::new(s.id(), s.levels(), initial, thr(), 0);
+        let req = run.next_request().unwrap();
+        assert_eq!(req.tiles.len(), n);
+        assert!(run.next_request().is_none(), "frontier fully in flight");
+        assert_eq!(run.in_flight(), 1);
+    }
+}

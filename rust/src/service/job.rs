@@ -135,7 +135,9 @@ impl JobSpec {
 pub enum JobState {
     /// Ran to completion; `JobResult::tree` is set.
     Completed,
-    /// Cancelled while still queued.
+    /// Cancelled: either while still queued (no tree) or mid-run at a
+    /// level-frontier boundary, in which case `JobResult::tree` holds the
+    /// consistent partial tree of every completed level.
     Cancelled,
     /// Queue wait exceeded the job's deadline; dropped at admission.
     Expired,
@@ -163,13 +165,15 @@ pub struct JobResult {
     pub priority: Priority,
     pub state: JobState,
     /// The execution tree (identical to a standalone `run_pyramidal` /
-    /// `replay` of the same source). `None` unless `Completed`.
+    /// `replay` of the same source). Set for `Completed` jobs and — as a
+    /// partial tree of the completed levels — for jobs cancelled mid-run.
     pub tree: Option<ExecTree>,
     /// Time spent in the admission queue before the scheduler started it.
     pub queue_wait: Duration,
     /// Time from scheduler start to completion.
     pub run_time: Duration,
-    /// Tiles analyzed (0 for cancelled/expired jobs).
+    /// Tiles analyzed (0 for queue-cancelled/expired jobs; the partial
+    /// tree's count for mid-run cancellations).
     pub tiles: usize,
 }
 

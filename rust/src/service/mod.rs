@@ -1,5 +1,5 @@
 //! Multi-slide analysis service: a stream of slide jobs scheduled over a
-//! shared pool of analysis workers.
+//! shared pool of analysis workers (or the TCP cluster).
 //!
 //! The paper optimizes one slide's latency on a modest cluster (§5); a
 //! production deployment faces the complementary regime — many slides in
@@ -9,13 +9,22 @@
 //! * [`job`] — job descriptors (live spec or predcache replay, thresholds,
 //!   priority, tenant, deadline) and terminal results.
 //! * [`queue`] — bounded admission queue with backpressure + cancellation.
-//! * [`scheduler`] — FIFO / priority / fair-share policies deciding which
-//!   job's next level frontier runs; jobs execute through the unmodified
-//!   [`run_with_provider`] driver, so per-job ExecTrees are identical to
-//!   standalone runs regardless of interleaving.
-//! * [`pool`] — the shared analyzer pool over [`crate::util::threadpool`].
+//! * [`scheduler`] — FIFO / priority / fair-share policies over the
+//!   frontier requests of every running job. Each job is a
+//!   [`PyramidRun`] state machine stepped directly by the scheduler, so
+//!   ExecTrees are identical to standalone runs regardless of
+//!   interleaving, jobs can be cancelled mid-run at frontier boundaries,
+//!   and same-level requests from different jobs coalesce into one
+//!   analyzer dispatch.
+//! * [`pool`] — the shared analyzer pool over [`crate::util::threadpool`],
+//!   including the coalesced multi-job dispatch path.
 //! * [`metrics`] — per-job latency / tiles-per-second and aggregate
 //!   throughput, rendered via the harness table/CSV machinery.
+//!
+//! Live jobs execute on the in-process pool by default; with
+//! [`ExecMode::Cluster`] their frontier chunks are dealt to the
+//! persistent TCP work-stealing cluster ([`crate::cluster::ClusterExec`])
+//! instead, so the service schedules across "machines", not threads.
 //!
 //! ```no_run
 //! use std::sync::Arc;
@@ -36,7 +45,7 @@
 //! assert_eq!(report.metrics.completed, 1);
 //! ```
 //!
-//! [`run_with_provider`]: crate::pyramid::driver::run_with_provider
+//! [`PyramidRun`]: crate::pyramid::PyramidRun
 
 pub mod job;
 pub mod metrics;
@@ -44,33 +53,51 @@ pub mod pool;
 pub mod queue;
 pub mod scheduler;
 
+use std::collections::HashSet;
 use std::sync::mpsc::{self, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
+use crate::cluster::{ClusterExec, ClusterExecConfig};
 use crate::model::Analyzer;
 
 use pool::AnalyzerPool;
 use queue::AdmissionQueue;
-use scheduler::{Event, Scheduler, SchedulerConfig};
+use scheduler::{unpack_key, Event, Scheduler, SchedulerConfig};
 
 pub use job::{JobId, JobResult, JobSource, JobSpec, JobState, Priority};
 pub use metrics::ServiceMetrics;
 pub use queue::SubmitError;
 pub use scheduler::Policy;
 
+/// Where live jobs execute.
+#[derive(Debug, Clone)]
+pub enum ExecMode {
+    /// The in-process analyzer pool (default).
+    Pool,
+    /// The persistent TCP work-stealing cluster: frontier chunks of every
+    /// live job are dealt to its workers. Cached-replay jobs always run
+    /// inline regardless of mode.
+    Cluster(ClusterExecConfig),
+}
+
 /// Service-level configuration.
 #[derive(Debug, Clone)]
 pub struct ServiceConfig {
-    /// Analysis worker threads shared by all jobs.
+    /// Analysis worker threads shared by all jobs (pool mode).
     pub workers: usize,
     /// Admission queue capacity (backpressure bound).
     pub queue_capacity: usize,
     /// Maximum jobs in the running set at once.
     pub max_in_flight: usize,
-    /// Analysis chunk size within one frontier batch.
+    /// Analysis chunk size: request granularity and pool task size.
     pub batch: usize,
     pub policy: Policy,
+    /// Merge same-level frontier requests from different jobs into one
+    /// pool dispatch (amortizes per-dispatch overhead).
+    pub coalesce: bool,
+    /// Execution substrate for live jobs.
+    pub exec: ExecMode,
 }
 
 impl Default for ServiceConfig {
@@ -81,6 +108,8 @@ impl Default for ServiceConfig {
             max_in_flight: 4,
             batch: 16,
             policy: Policy::Fifo,
+            coalesce: true,
+            exec: ExecMode::Pool,
         }
     }
 }
@@ -110,26 +139,64 @@ impl ServiceReport {
 pub struct AnalysisService {
     queue: Arc<AdmissionQueue>,
     pool: Arc<AnalyzerPool>,
+    cluster: Option<Arc<ClusterExec>>,
+    running_ids: Arc<Mutex<HashSet<JobId>>>,
     events: Option<Sender<Event>>,
     scheduler: Option<std::thread::JoinHandle<Vec<JobResult>>>,
+    cluster_pump: Option<std::thread::JoinHandle<()>>,
     started: Instant,
 }
 
 impl AnalysisService {
-    /// Spawn the worker pool and the scheduler loop.
+    /// Spawn the worker pool (and cluster, if configured) and the
+    /// scheduler loop.
     pub fn start(analyzer: Arc<dyn Analyzer>, cfg: ServiceConfig) -> AnalysisService {
         let queue = Arc::new(AdmissionQueue::new(cfg.queue_capacity));
-        let pool = Arc::new(AnalyzerPool::new(analyzer, cfg.workers));
+        // In cluster mode live jobs run on the TCP workers and replay jobs
+        // inline, so the in-process pool would sit idle — keep it minimal.
+        let pool_workers = match &cfg.exec {
+            ExecMode::Pool => cfg.workers,
+            ExecMode::Cluster(_) => 1,
+        };
+        let pool = Arc::new(AnalyzerPool::new(Arc::clone(&analyzer), pool_workers));
+        let running_ids = Arc::new(Mutex::new(HashSet::new()));
         let (tx, rx) = mpsc::channel();
+
+        let cluster = match &cfg.exec {
+            ExecMode::Pool => None,
+            ExecMode::Cluster(ccfg) => Some(Arc::new(
+                ClusterExec::start(analyzer, ccfg).expect("start execution cluster"),
+            )),
+        };
+        // Cluster completions flow into the scheduler loop as events.
+        let cluster_pump = cluster.as_ref().map(|exec| {
+            let exec = Arc::clone(exec);
+            let tx = tx.clone();
+            std::thread::Builder::new()
+                .name("service-cluster-pump".to_string())
+                .spawn(move || {
+                    while let Some((key, probs)) = exec.recv_result() {
+                        let (job, req) = unpack_key(key);
+                        if tx.send(Event::ChunkDone { job, req, probs }).is_err() {
+                            break;
+                        }
+                    }
+                })
+                .expect("spawn cluster pump")
+        });
+
         let sched = Scheduler::new(
             SchedulerConfig {
                 policy: cfg.policy,
                 max_in_flight: cfg.max_in_flight,
                 batch: cfg.batch,
+                coalesce: cfg.coalesce,
             },
             Arc::clone(&queue),
             Arc::clone(&pool),
+            cluster.clone(),
             tx.clone(),
+            Arc::clone(&running_ids),
         );
         let scheduler = std::thread::Builder::new()
             .name("service-scheduler".to_string())
@@ -138,8 +205,11 @@ impl AnalysisService {
         AnalysisService {
             queue,
             pool,
+            cluster,
+            running_ids,
             events: Some(tx),
             scheduler: Some(scheduler),
+            cluster_pump,
             started: Instant::now(),
         }
     }
@@ -156,17 +226,22 @@ impl AnalysisService {
         Ok(id)
     }
 
-    /// Cancel a job that is still queued. Returns `true` when the job was
-    /// removed; `false` when it already started (running jobs are never
-    /// aborted mid-level) or never existed.
+    /// Cancel a job. A still-queued job is removed outright; a running
+    /// job is preempted at its next level-frontier boundary and finalizes
+    /// as `Cancelled` with the partial tree of every completed level.
+    /// Returns `true` when a cancellation was accepted, `false` for
+    /// unknown/finished jobs. (A job finishing concurrently may still
+    /// complete — the terminal record is authoritative.)
     pub fn cancel(&self, id: JobId) -> bool {
-        match self.queue.cancel(id) {
-            Some(q) => {
-                let _ = self.events().send(Event::Cancelled(q));
-                true
-            }
-            None => false,
+        if let Some(q) = self.queue.cancel(id) {
+            let _ = self.events().send(Event::Cancelled(q));
+            return true;
         }
+        if self.running_ids.lock().unwrap().contains(&id) {
+            let _ = self.events().send(Event::CancelRunning(id));
+            return true;
+        }
+        false
     }
 
     /// Jobs currently waiting for admission.
@@ -174,15 +249,24 @@ impl AnalysisService {
         self.queue.len()
     }
 
-    /// Close admission, send Close, join the scheduler. Idempotent.
+    /// Close admission, send Close, join the scheduler (then the cluster,
+    /// if any). Idempotent.
     fn drain(&mut self) -> Option<Vec<JobResult>> {
         self.queue.close();
         if let Some(tx) = self.events.take() {
             let _ = tx.send(Event::Close);
         }
-        self.scheduler
+        let results = self
+            .scheduler
             .take()
-            .map(|h| h.join().expect("scheduler thread"))
+            .map(|h| h.join().expect("scheduler thread"));
+        if let Some(c) = self.cluster.take() {
+            c.shutdown();
+        }
+        if let Some(p) = self.cluster_pump.take() {
+            let _ = p.join();
+        }
+        results
     }
 
     /// Close admission, drain every queued and running job, and return the
@@ -268,16 +352,14 @@ mod tests {
     }
 
     #[test]
-    fn cancel_of_unknown_or_started_job_is_false() {
+    fn cancel_of_unknown_job_is_false() {
         let s = svc(ServiceConfig::default());
         assert!(!s.cancel(123));
         let id = s.submit(job(42, SlideKind::Negative)).unwrap();
-        // Give the scheduler a moment to admit it; afterwards cancel must
-        // refuse (it only touches queued jobs).
-        while s.queued() > 0 {
-            std::thread::sleep(std::time::Duration::from_micros(100));
-        }
-        let _ = s.cancel(id); // either way: no panic, consistent report
+        // Queued or running, the job is cancellable (or already done, in
+        // which case cancel reports false) — either way the terminal
+        // record set stays consistent.
+        let _ = s.cancel(id);
         let report = s.shutdown();
         assert_eq!(report.results.len(), 1);
     }

@@ -27,9 +27,19 @@ pub struct AnalyzerPool {
     panics: Arc<AtomicUsize>,
 }
 
-/// In-flight chunk results of one frontier batch (order-preserving).
-struct BatchSlots {
-    out: Vec<Option<Vec<f32>>>,
+/// One member of a coalesced dispatch group
+/// ([`AnalyzerPool::analyze_coalesced_async`]): a same-level frontier
+/// chunk of one slide plus its completion callback.
+pub struct CoalescedItem {
+    pub slide: Arc<Slide>,
+    pub tiles: Vec<TileId>,
+    pub done: Box<dyn FnOnce(Vec<f32>) + Send>,
+}
+
+/// Positional results of one coalesced item (filled span by span, spans
+/// may complete on different workers in any order).
+struct ItemSlots {
+    out: Vec<Option<f32>>,
     left: usize,
     done: Option<Box<dyn FnOnce(Vec<f32>) + Send>>,
 }
@@ -61,8 +71,11 @@ impl AnalyzerPool {
     /// Analyze one frontier batch asynchronously: chunk, fan out over the
     /// pool, and call `done` with the reassembled per-tile probabilities
     /// once the last chunk lands. A chunk whose analyzer call panics
-    /// reports an empty result, which the driver's provider-count check
+    /// reports a short result, which the driver's probability-count check
     /// turns into a per-job failure instead of a wedged service.
+    ///
+    /// This is the one-item case of [`Self::analyze_coalesced_async`] —
+    /// one protocol, one implementation.
     pub fn analyze_async(
         &self,
         slide: Arc<Slide>,
@@ -71,47 +84,102 @@ impl AnalyzerPool {
         batch: usize,
         done: Box<dyn FnOnce(Vec<f32>) + Send>,
     ) {
-        let chunks: Vec<Vec<TileId>> = tiles
-            .chunks(batch.max(1))
-            .map(|c| c.to_vec())
-            .collect();
-        let n = chunks.len();
-        if n == 0 {
-            done(Vec::new());
+        self.analyze_coalesced_async(level, vec![CoalescedItem { slide, tiles, done }], batch);
+    }
+
+    /// Coalesced dispatch: several same-level frontier chunks — typically
+    /// from *different* jobs/slides — submitted as one group. The group's
+    /// tiles are re-chunked by `batch` across item boundaries, so a
+    /// trailing sliver of one job shares a pool task (one "analyzer
+    /// dispatch", the PJRT-overhead unit this testbed stands in for) with
+    /// the head of the next, while large groups still fan out over every
+    /// worker. Each item's `done` fires with its own reassembled,
+    /// tile-ordered probabilities; a panicking span yields a short result
+    /// for exactly the items it covered (the per-job failure signal),
+    /// never a wedged pool.
+    pub fn analyze_coalesced_async(&self, level: usize, items: Vec<CoalescedItem>, batch: usize) {
+        // Items with no tiles complete immediately; the rest get slots.
+        let mut live: Vec<CoalescedItem> = Vec::with_capacity(items.len());
+        for item in items {
+            if item.tiles.is_empty() {
+                (item.done)(Vec::new());
+            } else {
+                live.push(item);
+            }
+        }
+        if live.is_empty() {
             return;
         }
-        let slots = Arc::new(Mutex::new(BatchSlots {
-            out: (0..n).map(|_| None).collect(),
-            left: n,
-            done: Some(done),
-        }));
-        for (i, chunk) in chunks.into_iter().enumerate() {
-            let slide = Arc::clone(&slide);
-            let analyzer = Arc::clone(&self.analyzer);
+        let batch = batch.max(1);
+        // Global chunking: spans of (item, start, len) filling `batch`
+        // tiles per pool task, crossing item boundaries.
+        let mut chunks: Vec<Vec<(usize, usize, usize)>> = Vec::new();
+        let mut cur: Vec<(usize, usize, usize)> = Vec::new();
+        let mut room = batch;
+        for (i, item) in live.iter().enumerate() {
+            let mut start = 0;
+            while start < item.tiles.len() {
+                let take = room.min(item.tiles.len() - start);
+                cur.push((i, start, take));
+                start += take;
+                room -= take;
+                if room == 0 {
+                    chunks.push(std::mem::take(&mut cur));
+                    room = batch;
+                }
+            }
+        }
+        if !cur.is_empty() {
+            chunks.push(cur);
+        }
+
+        let mut slots_vec = Vec::with_capacity(live.len());
+        let mut shared_vec = Vec::with_capacity(live.len());
+        for item in live {
+            slots_vec.push(ItemSlots {
+                out: vec![None; item.tiles.len()],
+                left: item.tiles.len(),
+                done: Some(item.done),
+            });
+            shared_vec.push((item.slide, item.tiles));
+        }
+        let slots = Arc::new(Mutex::new(slots_vec));
+        let shared: Arc<Vec<(Arc<Slide>, Vec<TileId>)>> = Arc::new(shared_vec);
+
+        for spans in chunks {
             let slots = Arc::clone(&slots);
+            let shared = Arc::clone(&shared);
+            let analyzer = Arc::clone(&self.analyzer);
             let panics = Arc::clone(&self.panics);
             self.pool.execute(move || {
-                let ps = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                    analyzer.analyze(&slide, level, &chunk)
-                }))
-                .unwrap_or_else(|_| {
-                    panics.fetch_add(1, Ordering::SeqCst);
-                    Vec::new()
-                });
-                let finish = {
-                    let mut s = slots.lock().unwrap();
-                    s.out[i] = Some(ps);
-                    s.left -= 1;
-                    if s.left == 0 {
-                        let probs: Vec<f32> =
-                            s.out.iter_mut().flat_map(|o| o.take().unwrap()).collect();
-                        Some((s.done.take().expect("done callback set"), probs))
-                    } else {
-                        None
+                for (item_idx, start, len) in spans {
+                    let (slide, tiles) = &shared[item_idx];
+                    let span = &tiles[start..start + len];
+                    let ps = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        analyzer.analyze(slide, level, span)
+                    }))
+                    .unwrap_or_else(|_| {
+                        panics.fetch_add(1, Ordering::SeqCst);
+                        Vec::new()
+                    });
+                    let finish = {
+                        let mut g = slots.lock().unwrap();
+                        let it = &mut g[item_idx];
+                        for (j, p) in ps.into_iter().enumerate().take(len) {
+                            it.out[start + j] = Some(p);
+                        }
+                        it.left -= len;
+                        if it.left == 0 {
+                            let probs: Vec<f32> =
+                                it.out.iter_mut().filter_map(|o| o.take()).collect();
+                            Some((it.done.take().expect("done set once"), probs))
+                        } else {
+                            None
+                        }
+                    };
+                    if let Some((done, probs)) = finish {
+                        done(probs);
                     }
-                };
-                if let Some((done, probs)) = finish {
-                    done(probs);
                 }
             });
         }
@@ -191,6 +259,86 @@ mod tests {
         // The pool still serves healthy levels afterwards.
         let ok = pool.analyze(&s, 2, &s.level_tile_ids(2), 8);
         assert_eq!(ok.len(), s.level_tile_ids(2).len());
+    }
+
+    #[test]
+    fn coalesced_group_matches_per_item_results() {
+        use std::sync::mpsc::channel;
+        let analyzer: Arc<dyn Analyzer> = Arc::new(OracleAnalyzer::new(1));
+        let pool = AnalyzerPool::new(Arc::clone(&analyzer), 3);
+        // Two different slides, one group, chunk boundaries crossing items.
+        let s1 = slide();
+        let s2 = Arc::new(Slide::from_spec(SlideSpec::new(
+            "pool2",
+            6,
+            16,
+            8,
+            3,
+            64,
+            SlideKind::SmallScattered,
+        )));
+        let t1 = s1.level_tile_ids(1);
+        let t2 = s2.level_tile_ids(1);
+        let want1 = analyzer.analyze(&s1, 1, &t1);
+        let want2 = analyzer.analyze(&s2, 1, &t2);
+        for batch in [1usize, 5, 7, 1000] {
+            let (tx1, rx1) = channel();
+            let (tx2, rx2) = channel();
+            let (tx3, rx3) = channel();
+            pool.analyze_coalesced_async(
+                1,
+                vec![
+                    CoalescedItem {
+                        slide: Arc::clone(&s1),
+                        tiles: t1.clone(),
+                        done: Box::new(move |ps| {
+                            let _ = tx1.send(ps);
+                        }),
+                    },
+                    CoalescedItem {
+                        slide: Arc::clone(&s2),
+                        tiles: t2.clone(),
+                        done: Box::new(move |ps| {
+                            let _ = tx2.send(ps);
+                        }),
+                    },
+                    CoalescedItem {
+                        slide: Arc::clone(&s1),
+                        tiles: Vec::new(),
+                        done: Box::new(move |ps| {
+                            let _ = tx3.send(ps);
+                        }),
+                    },
+                ],
+                batch,
+            );
+            assert_eq!(rx1.recv().unwrap(), want1, "batch={batch}");
+            assert_eq!(rx2.recv().unwrap(), want2, "batch={batch}");
+            assert_eq!(rx3.recv().unwrap(), Vec::<f32>::new(), "empty item");
+        }
+    }
+
+    #[test]
+    fn coalesced_fault_fails_only_covered_items() {
+        use std::sync::mpsc::channel;
+        let pool = AnalyzerPool::new(Arc::new(crate::service::FaultyAnalyzer), 2);
+        let s = slide();
+        let tiles = s.level_tile_ids(1);
+        let (tx, rx) = channel();
+        pool.analyze_coalesced_async(
+            1,
+            vec![CoalescedItem {
+                slide: Arc::clone(&s),
+                tiles: tiles.clone(),
+                done: Box::new(move |ps| {
+                    let _ = tx.send(ps);
+                }),
+            }],
+            8,
+        );
+        let got = rx.recv().unwrap();
+        assert!(got.len() < tiles.len(), "faulting spans yield short results");
+        assert!(pool.panic_count() >= 1);
     }
 
     #[test]

@@ -70,6 +70,16 @@ impl AdmissionQueue {
                 spec.source
             )));
         }
+        // The scheduler builds a PyramidRun from these; a mismatched
+        // threshold vector must be rejected here, not panic the service.
+        if spec.thresholds.zoom.len() != spec.source.levels() {
+            return Err(SubmitError::Invalid(format!(
+                "job {:?} has {} levels but {} thresholds",
+                spec.source,
+                spec.source.levels(),
+                spec.thresholds.zoom.len()
+            )));
+        }
         let mut inner = self.inner.lock().unwrap();
         if inner.closed {
             return Err(SubmitError::Closed);
@@ -190,6 +200,14 @@ mod tests {
         let mut spec = SlideSpec::new("z", 1, 16, 8, 1, 64, SlideKind::Negative);
         spec.levels = 0;
         let j = JobSpec::new(JobSource::Spec(spec), Thresholds::uniform(0, 0.4));
+        assert!(matches!(q.submit(j), Err(SubmitError::Invalid(_))));
+    }
+
+    #[test]
+    fn threshold_count_mismatch_rejected_at_submission() {
+        let q = AdmissionQueue::new(8);
+        let spec = SlideSpec::new("t", 1, 16, 8, 3, 64, SlideKind::Negative);
+        let j = JobSpec::new(JobSource::Spec(spec), Thresholds::uniform(2, 0.4));
         assert!(matches!(q.submit(j), Err(SubmitError::Invalid(_))));
     }
 }

@@ -1,36 +1,46 @@
 //! Scheduling policies and the service event loop.
 //!
-//! Each running job is driven by a lightweight coordinator thread that
-//! executes the unmodified [`run_with_provider`] driver; the probability
-//! provider ships every level frontier to the scheduler as a
-//! [`BatchRequest`] and blocks for the probabilities. The scheduler orders
-//! pending requests by policy and fires them at the shared
-//! [`AnalyzerPool`], so the level-by-level progress of different slides
-//! interleaves on the same workers. Because the provider returns exactly
-//! what a standalone run would compute, a job's ExecTree is identical to
-//! `run_pyramidal` / `SlidePredictions::replay` no matter how the
-//! scheduler interleaved it.
+//! Each running job is a [`PyramidRun`] state machine stepped *directly*
+//! by the scheduler — no coordinator threads, no blocking providers. The
+//! loop pulls every available [`FrontierRequest`] from every running job,
+//! orders them by policy, and fires them at the job's execution substrate:
+//! the shared [`AnalyzerPool`] (same-level requests from different jobs
+//! coalesce into one dispatch group), an inline predcache replay, or the
+//! persistent TCP cluster ([`ClusterExec`]). Completions come back as
+//! events and are fed into the owning run; because a run's tree depends
+//! only on what was analyzed — never on scheduling or feed order — a
+//! job's ExecTree is identical to a standalone `run_pyramidal` /
+//! `SlidePredictions::replay` no matter how the scheduler interleaved it.
 //!
-//! [`run_with_provider`]: crate::pyramid::driver::run_with_provider
+//! Stepping the runs directly is what makes mid-run cancellation natural:
+//! a cancelled job simply stops being issued requests; its in-flight
+//! chunks drain into the run and the job finalizes at the last completed
+//! frontier boundary with a consistent partial tree.
+//!
+//! [`PyramidRun`]: crate::pyramid::PyramidRun
+//! [`FrontierRequest`]: crate::pyramid::FrontierRequest
+//! [`AnalyzerPool`]: crate::service::pool::AnalyzerPool
+//! [`ClusterExec`]: crate::cluster::ClusterExec
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::sync::mpsc::{Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::cluster::ClusterExec;
 use crate::predcache::SlidePredictions;
 use crate::preprocess::otsu::background_removal;
-use crate::pyramid::driver::{run_with_provider, BG_MARGIN};
-use crate::pyramid::tree::ExecTree;
+use crate::pyramid::driver::BG_MARGIN;
+use crate::pyramid::{FrontierRequest, PyramidRun, RequestId};
 use crate::slide::pyramid::Slide;
-use crate::slide::tile::TileId;
+use crate::synth::slide_gen::SlideSpec;
 
 use super::job::{JobId, JobResult, JobState, Priority};
-use super::pool::AnalyzerPool;
+use super::pool::{AnalyzerPool, CoalescedItem};
 use super::queue::{AdmissionQueue, QueuedJob};
 
 /// Which job goes next — both at admission (queue → running set) and at
-/// batch dispatch (pending frontiers → pool).
+/// request dispatch (pending frontier chunks → execution substrate).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Policy {
     /// Strict submission order.
@@ -106,30 +116,42 @@ pub struct Candidate<'a> {
     pub tenant: &'a str,
 }
 
-/// One level frontier of one job, awaiting pool time.
-pub(crate) struct BatchRequest {
-    pub id: JobId,
-    pub level: usize,
-    pub tiles: Vec<TileId>,
-    pub reply: Sender<Vec<f32>>,
-}
-
-/// Scheduler-internal events (coordinators and the service handle feed
-/// these into the loop).
+/// Scheduler-internal events (submitters, completion callbacks and the
+/// cluster pump feed these into the loop).
 pub(crate) enum Event {
     /// New submissions may be waiting in the admission queue.
     JobsAvailable,
     /// A queued job was removed by `AnalysisService::cancel`.
     Cancelled(QueuedJob),
-    /// A coordinator wants its next frontier analyzed.
-    Batch(BatchRequest),
-    /// A coordinator finished (tree) or its driver panicked (message).
-    Done {
-        id: JobId,
-        outcome: Result<ExecTree, String>,
+    /// Cancel a *running* job at its next frontier boundary.
+    CancelRunning(JobId),
+    /// One frontier chunk finished on some substrate.
+    ChunkDone {
+        job: JobId,
+        req: RequestId,
+        probs: Vec<f32>,
     },
     /// Admission is closed; exit once everything drains.
     Close,
+}
+
+/// Pack a (job, request) pair into the cluster routing key. Keys travel
+/// the wire as JSON numbers (f64), which are exact only below 2⁵³ — so
+/// the request id gets 21 bits (a run issues one id per frontier chunk,
+/// far below 2²¹) and the job id 32, keeping every key exactly
+/// representable. Checked in release builds too: a rounded key would
+/// silently misroute probabilities.
+pub(crate) fn pack_key(job: JobId, req: RequestId) -> u64 {
+    assert!(
+        job < (1 << 32) && req < (1 << 21),
+        "cluster routing key overflow (job {job}, request {req})"
+    );
+    (job << 21) | req
+}
+
+/// Inverse of [`pack_key`].
+pub(crate) fn unpack_key(key: u64) -> (JobId, RequestId) {
+    (key >> 21, key & ((1 << 21) - 1))
 }
 
 /// Scheduler tuning knobs.
@@ -139,36 +161,55 @@ pub struct SchedulerConfig {
     /// How many jobs may be in the running set at once. Small values make
     /// the policy order starkly visible; larger values increase overlap.
     pub max_in_flight: usize,
-    /// Analysis chunk size within one frontier batch.
+    /// Analysis chunk size: both the PyramidRun request granularity and
+    /// the pool's per-task tile count.
     pub batch: usize,
+    /// Merge same-level requests from different jobs into one pool
+    /// dispatch group (amortizes per-dispatch overhead).
+    pub coalesce: bool,
 }
 
-#[derive(Clone)]
-enum RunSource {
-    Live(Arc<Slide>),
-    Cached(Arc<SlidePredictions>),
+/// Where one job's frontier requests execute.
+enum JobExec {
+    /// Live analysis through the shared pool.
+    Pool(Arc<Slide>),
+    /// Inline predcache replay (no analyzer time).
+    Replay(Arc<SlidePredictions>),
+    /// Chunks dealt to the persistent TCP cluster.
+    Cluster(SlideSpec),
 }
 
 struct RunningJob {
     slide_id: String,
     tenant: String,
     priority: Priority,
-    source: RunSource,
     queue_wait: Duration,
     started: Instant,
+    run: PyramidRun,
+    exec: JobExec,
+    /// Tiles dispatched so far (metrics; counts even chunks that later
+    /// fail).
     tiles: usize,
-    /// The coordinator thread; reaped when its `Done` event is handled so
-    /// handles don't accumulate over a long-lived service.
-    handle: std::thread::JoinHandle<()>,
+    /// Chunks fired and not yet completed — a job never finalizes while
+    /// this is nonzero, so no pool/cluster work ever leaks into a dead
+    /// job.
+    dispatched: usize,
+    cancelled: bool,
+    failed: Option<String>,
 }
 
 pub(crate) struct Scheduler {
     cfg: SchedulerConfig,
     queue: Arc<AdmissionQueue>,
     pool: Arc<AnalyzerPool>,
+    /// Present when the service runs its live jobs on the TCP cluster.
+    cluster: Option<Arc<ClusterExec>>,
     events_tx: Sender<Event>,
     running: HashMap<JobId, RunningJob>,
-    pending: Vec<BatchRequest>,
+    /// Mirror of `running`'s keys shared with the service handle so
+    /// `cancel` can tell running jobs from unknown ones.
+    running_ids: Arc<Mutex<HashSet<JobId>>>,
+    pending: Vec<(JobId, FrontierRequest)>,
     usage: HashMap<String, u64>,
     results: Vec<JobResult>,
     closed: bool,
@@ -179,14 +220,18 @@ impl Scheduler {
         cfg: SchedulerConfig,
         queue: Arc<AdmissionQueue>,
         pool: Arc<AnalyzerPool>,
+        cluster: Option<Arc<ClusterExec>>,
         events_tx: Sender<Event>,
+        running_ids: Arc<Mutex<HashSet<JobId>>>,
     ) -> Scheduler {
         Scheduler {
             cfg,
             queue,
             pool,
+            cluster,
             events_tx,
             running: HashMap::new(),
+            running_ids,
             pending: Vec::new(),
             usage: HashMap::new(),
             results: Vec::new(),
@@ -201,8 +246,16 @@ impl Scheduler {
             while let Ok(ev) = rx.try_recv() {
                 self.handle(ev);
             }
-            self.admit();
-            self.dispatch();
+            // Step until quiescent: finalizing a job frees an admission
+            // slot, so admission must re-run before the loop may block.
+            loop {
+                self.admit();
+                self.pump();
+                self.dispatch();
+                if self.finalize() == 0 {
+                    break;
+                }
+            }
             if self.closed && self.running.is_empty() && self.queue.is_empty() {
                 break;
             }
@@ -230,30 +283,30 @@ impl Scheduler {
                     tiles: 0,
                 });
             }
-            Event::Batch(req) => self.pending.push(req),
-            Event::Done { id, outcome } => {
-                let r = self.running.remove(&id).expect("done job was running");
-                // The coordinator sent Done as its last action; reap it now
-                // instead of accumulating handles for the service lifetime.
-                let _ = r.handle.join();
-                let (state, tree, tiles) = match outcome {
-                    Ok(tree) => {
-                        let tiles = tree.total_analyzed();
-                        (JobState::Completed, Some(tree), tiles)
+            Event::CancelRunning(id) => {
+                if let Some(r) = self.running.get_mut(&id) {
+                    r.cancelled = true;
+                    // Undispatched requests of this job will never run;
+                    // in-flight ones drain normally and feed the run, so
+                    // the job stops exactly at a frontier boundary.
+                    self.pending.retain(|(j, _)| *j != id);
+                }
+            }
+            Event::ChunkDone { job, req, probs } => {
+                let mut failed_now = false;
+                if let Some(r) = self.running.get_mut(&job) {
+                    r.dispatched = r.dispatched.saturating_sub(1);
+                    if r.failed.is_none() {
+                        if let Err(e) = r.run.feed(req, probs) {
+                            r.failed = Some(e.to_string());
+                            failed_now = true;
+                        }
                     }
-                    Err(msg) => (JobState::Failed(msg), None, r.tiles),
-                };
-                self.results.push(JobResult {
-                    id,
-                    slide_id: r.slide_id,
-                    tenant: r.tenant,
-                    priority: r.priority,
-                    state,
-                    tree,
-                    queue_wait: r.queue_wait,
-                    run_time: r.started.elapsed(),
-                    tiles,
-                });
+                }
+                if failed_now {
+                    // Its undispatched requests will never be needed.
+                    self.pending.retain(|(j, _)| *j != job);
+                }
             }
             Event::Close => self.closed = true,
         }
@@ -273,11 +326,20 @@ impl Scheduler {
                         tenant: &q.spec.tenant,
                     })
                     .collect();
-                self.cfg.policy.select(&cands, &self.usage)
+                let idx = self.cfg.policy.select(&cands, &self.usage);
+                if let Some(i) = idx {
+                    // Registered while the queue lock is still held, so
+                    // `cancel` always finds a job either queued or
+                    // running — no handoff window where a live job looks
+                    // unknown.
+                    self.running_ids.lock().unwrap().insert(entries[i].id);
+                }
+                idx
             });
             let Some(q) = picked else { break };
             let waited = q.submitted.elapsed();
             if q.spec.deadline.map_or(false, |d| waited > d) {
+                self.running_ids.lock().unwrap().remove(&q.id);
                 self.results.push(JobResult {
                     id: q.id,
                     slide_id: q.spec.source.slide_id().to_string(),
@@ -295,79 +357,109 @@ impl Scheduler {
         }
     }
 
+    /// Materialize a job into a running [`PyramidRun`]. Source faults
+    /// (invalid specs) fail the one job, never the scheduler.
     fn start_job(&mut self, q: QueuedJob, queue_wait: Duration) {
         use super::job::JobSource;
-        let source = match &q.spec.source {
-            JobSource::Spec(spec) => RunSource::Live(Arc::new(Slide::from_spec(spec.clone()))),
-            JobSource::Cached(c) => RunSource::Cached(Arc::clone(c)),
-        };
-        let coord_source = source.clone();
-        let events = self.events_tx.clone();
         let thresholds = q.spec.thresholds.clone();
-        let id = q.id;
-        let handle = std::thread::Builder::new()
-            .name(format!("job-{id}"))
-            .spawn(move || {
-                let events_for_provider = events.clone();
-                let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                    let (slide_id, levels, initial) = match &coord_source {
-                        RunSource::Live(slide) => (
-                            slide.id().to_string(),
-                            slide.levels(),
-                            background_removal(slide, BG_MARGIN).tissue_tiles,
-                        ),
-                        RunSource::Cached(c) => {
-                            (c.spec.id.clone(), c.spec.levels, c.initial.clone())
-                        }
-                    };
-                    run_with_provider(&slide_id, levels, initial, &thresholds, |level, tiles| {
-                        let (tx, rx) = std::sync::mpsc::channel();
-                        events_for_provider
-                            .send(Event::Batch(BatchRequest {
-                                id,
-                                level,
-                                tiles: tiles.to_vec(),
-                                reply: tx,
-                            }))
-                            .expect("scheduler alive");
-                        rx.recv().expect("scheduler replies to batch")
-                    })
-                }));
-                let outcome = outcome.map_err(|p| panic_message(&p));
-                let _ = events.send(Event::Done { id, outcome });
-            })
-            .expect("spawn job coordinator");
-        // Insert after spawning so the handle rides along; the coordinator's
-        // first Batch event is only processed by this same thread after
-        // start_job returns, so the entry is in place in time.
+        let cluster_mode = self.cluster.is_some();
+        // admit() already registered q.id in running_ids (under the queue
+        // lock), so `cancel` can see this job throughout the slide
+        // materialization below.
+        let prep = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+            || -> (String, usize, Vec<crate::slide::tile::TileId>, JobExec) {
+                match &q.spec.source {
+                    JobSource::Spec(spec) => {
+                        let slide = Arc::new(Slide::from_spec(spec.clone()));
+                        let initial = background_removal(&slide, BG_MARGIN).tissue_tiles;
+                        let exec = if cluster_mode {
+                            JobExec::Cluster(spec.clone())
+                        } else {
+                            JobExec::Pool(Arc::clone(&slide))
+                        };
+                        (slide.id().to_string(), slide.levels(), initial, exec)
+                    }
+                    JobSource::Cached(c) => (
+                        c.spec.id.clone(),
+                        c.spec.levels,
+                        c.initial.clone(),
+                        JobExec::Replay(Arc::clone(c)),
+                    ),
+                }
+            },
+        ));
+        let (slide_id, levels, initial, exec) = match prep {
+            Ok(t) => t,
+            Err(p) => {
+                self.running_ids.lock().unwrap().remove(&q.id);
+                self.results.push(JobResult {
+                    id: q.id,
+                    slide_id: q.spec.source.slide_id().to_string(),
+                    tenant: q.spec.tenant,
+                    priority: q.spec.priority,
+                    state: JobState::Failed(panic_message(&p)),
+                    tree: None,
+                    queue_wait,
+                    run_time: Duration::ZERO,
+                    tiles: 0,
+                });
+                return;
+            }
+        };
+        // The admission queue validated levels and threshold counts, so
+        // this constructor cannot panic.
+        let run = PyramidRun::new(slide_id.as_str(), levels, initial, thresholds, self.cfg.batch);
         self.running.insert(
             q.id,
             RunningJob {
-                slide_id: q.spec.source.slide_id().to_string(),
+                slide_id,
                 tenant: q.spec.tenant.clone(),
                 priority: q.spec.priority,
-                source,
                 queue_wait,
                 started: Instant::now(),
+                run,
+                exec,
                 tiles: 0,
-                handle,
+                dispatched: 0,
+                cancelled: false,
+                failed: None,
             },
         );
     }
 
-    /// Fire every pending frontier at the pool, in policy order. Dispatch
-    /// is asynchronous, so batches of different jobs overlap on the pool;
-    /// the order still matters because the pool serves its queue FIFO.
+    /// Pull every available request from every live run into the pending
+    /// set. Cancelled/failed jobs stop being issued work here — that is
+    /// the frontier-boundary preemption point.
+    fn pump(&mut self) {
+        for (id, r) in self.running.iter_mut() {
+            if r.cancelled || r.failed.is_some() {
+                continue;
+            }
+            while let Some(req) = r.run.next_request() {
+                self.pending.push((*id, req));
+            }
+        }
+    }
+
+    /// Fire every pending request, in policy order. Adjacent same-level
+    /// pool requests (usually from different jobs) merge into one
+    /// coalesced dispatch group; replay requests complete inline; cluster
+    /// requests are dealt to the TCP workers.
     fn dispatch(&mut self) {
+        if self.pending.is_empty() {
+            return;
+        }
+        // Policy-ordered drain with live fair-share accounting.
+        let mut order: Vec<(JobId, FrontierRequest)> = Vec::with_capacity(self.pending.len());
         loop {
             let idx = {
                 let cands: Vec<Candidate<'_>> = self
                     .pending
                     .iter()
-                    .map(|req| {
-                        let r = self.running.get(&req.id).expect("pending implies running");
+                    .map(|(job, _)| {
+                        let r = self.running.get(job).expect("pending implies running");
                         Candidate {
-                            id: req.id,
+                            id: *job,
                             priority: r.priority,
                             tenant: &r.tenant,
                         }
@@ -376,37 +468,151 @@ impl Scheduler {
                 self.cfg.policy.select(&cands, &self.usage)
             };
             let Some(idx) = idx else { break };
-            let req = self.pending.remove(idx);
-            let ntiles = req.tiles.len();
-            let r = self.running.get_mut(&req.id).expect("pending implies running");
-            r.tiles += ntiles;
-            *self.usage.entry(r.tenant.clone()).or_default() += ntiles as u64;
-            match &r.source {
-                RunSource::Live(slide) => {
-                    let reply = req.reply;
-                    self.pool.analyze_async(
-                        Arc::clone(slide),
-                        req.level,
-                        req.tiles,
-                        self.cfg.batch,
-                        Box::new(move |ps| {
-                            let _ = reply.send(ps);
-                        }),
-                    );
+            let (job, req) = self.pending.remove(idx);
+            let r = self.running.get_mut(&job).expect("pending implies running");
+            r.tiles += req.tiles.len();
+            r.dispatched += 1;
+            let tenant = r.tenant.clone();
+            *self.usage.entry(tenant).or_default() += req.tiles.len() as u64;
+            order.push((job, req));
+        }
+        // Fire, grouping adjacent same-level pool requests.
+        let mut group: Vec<(JobId, FrontierRequest)> = Vec::new();
+        let mut group_level = 0usize;
+        for (job, req) in order {
+            enum Fire {
+                Pool,
+                Replay(Arc<SlidePredictions>),
+                Cluster(SlideSpec),
+            }
+            let fire = match &self.running.get(&job).expect("dispatch implies running").exec {
+                JobExec::Pool(_) => Fire::Pool,
+                JobExec::Replay(c) => Fire::Replay(Arc::clone(c)),
+                JobExec::Cluster(spec) => Fire::Cluster(spec.clone()),
+            };
+            match fire {
+                Fire::Pool => {
+                    if !group.is_empty() && (group_level != req.level || !self.cfg.coalesce) {
+                        let g = std::mem::take(&mut group);
+                        self.flush_group(group_level, g);
+                    }
+                    group_level = req.level;
+                    group.push((job, req));
                 }
-                RunSource::Cached(c) => {
-                    // Replay: look the frontier up in the cache. A missing
-                    // lineage tile means a corrupt cache; reply short so
-                    // the driver's count check fails that one job.
+                Fire::Replay(c) => {
+                    let g = std::mem::take(&mut group);
+                    self.flush_group(group_level, g);
+                    // Missing lineage tiles (corrupt cache) reply short;
+                    // the feed rejects that and fails the one job.
                     let probs: Vec<f32> = req
                         .tiles
                         .iter()
                         .filter_map(|t| c.preds.get(t).map(|p| p.prob))
                         .collect();
-                    let _ = req.reply.send(probs);
+                    let _ = self.events_tx.send(Event::ChunkDone {
+                        job,
+                        req: req.id,
+                        probs,
+                    });
+                }
+                Fire::Cluster(spec) => {
+                    let g = std::mem::take(&mut group);
+                    self.flush_group(group_level, g);
+                    let exec = self.cluster.as_ref().expect("cluster exec configured");
+                    // A dead worker fails this one job, never the service
+                    // — the same fault isolation the pool path has.
+                    let sent = exec.submit(pack_key(job, req.id), &spec, req.level, req.tiles);
+                    if let Err(e) = sent {
+                        if let Some(r) = self.running.get_mut(&job) {
+                            r.dispatched = r.dispatched.saturating_sub(1);
+                            r.failed = Some(format!("cluster dispatch failed: {e}"));
+                        }
+                        self.pending.retain(|(j, _)| *j != job);
+                    }
                 }
             }
         }
+        if !group.is_empty() {
+            self.flush_group(group_level, group);
+        }
+    }
+
+    /// Send one group of same-level pool requests to the shared pool as a
+    /// single coalesced dispatch.
+    fn flush_group(&self, level: usize, group: Vec<(JobId, FrontierRequest)>) {
+        if group.is_empty() {
+            return;
+        }
+        let items: Vec<CoalescedItem> = group
+            .into_iter()
+            .map(|(job, req)| {
+                let slide = match &self.running.get(&job).expect("grouped job running").exec {
+                    JobExec::Pool(s) => Arc::clone(s),
+                    _ => unreachable!("grouped requests are pool-backed"),
+                };
+                let tx = self.events_tx.clone();
+                let req_id = req.id;
+                CoalescedItem {
+                    slide,
+                    tiles: req.tiles,
+                    done: Box::new(move |probs| {
+                        let _ = tx.send(Event::ChunkDone {
+                            job,
+                            req: req_id,
+                            probs,
+                        });
+                    }),
+                }
+            })
+            .collect();
+        self.pool.analyze_coalesced_async(level, items, self.cfg.batch);
+    }
+
+    /// Retire finished runs: completed ones with their full tree,
+    /// cancelled/failed ones once their last in-flight chunk drained (so
+    /// nothing ever leaks), cancelled ones carrying the partial tree of
+    /// every completed level. Returns how many jobs were retired.
+    fn finalize(&mut self) -> usize {
+        let ready: Vec<JobId> = self
+            .running
+            .iter()
+            .filter_map(|(id, r)| {
+                let done = r.run.is_complete()
+                    || ((r.cancelled || r.failed.is_some()) && r.dispatched == 0);
+                done.then_some(*id)
+            })
+            .collect();
+        let retired = ready.len();
+        for id in ready {
+            let r = self.running.remove(&id).expect("listed above");
+            self.running_ids.lock().unwrap().remove(&id);
+            self.pending.retain(|(j, _)| *j != id);
+            let complete = r.run.is_complete();
+            let tree = r.run.finish();
+            let (state, tree, tiles) = if let Some(msg) = r.failed {
+                (JobState::Failed(msg), None, r.tiles)
+            } else if complete {
+                let tiles = tree.total_analyzed();
+                (JobState::Completed, Some(tree), tiles)
+            } else {
+                // Cancelled mid-run: the partial tree holds exactly the
+                // fully analyzed levels.
+                let tiles = tree.total_analyzed();
+                (JobState::Cancelled, Some(tree), tiles)
+            };
+            self.results.push(JobResult {
+                id,
+                slide_id: r.slide_id,
+                tenant: r.tenant,
+                priority: r.priority,
+                state,
+                tree,
+                queue_wait: r.queue_wait,
+                run_time: r.started.elapsed(),
+                tiles,
+            });
+        }
+        retired
     }
 }
 
@@ -416,7 +622,7 @@ fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
     } else if let Some(s) = p.downcast_ref::<String>() {
         s.clone()
     } else {
-        "job coordinator panicked".to_string()
+        "job setup panicked".to_string()
     }
 }
 
@@ -477,5 +683,12 @@ mod tests {
         }
         assert_eq!(Policy::from_str("fair_share"), Some(Policy::FairShare));
         assert_eq!(Policy::from_str("lifo"), None);
+    }
+
+    #[test]
+    fn key_packing_roundtrips() {
+        for (job, req) in [(1u64, 0u64), (7, 3), (123_456, 654_321)] {
+            assert_eq!(unpack_key(pack_key(job, req)), (job, req));
+        }
     }
 }

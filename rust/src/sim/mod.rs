@@ -1,8 +1,12 @@
 //! Distributed-execution simulator (§5.1-5.3): initial data distributions
-//! × load-balancing policies over recorded pyramidal execution trees.
+//! × load-balancing policies over recorded pyramidal execution trees,
+//! plus the virtual-worker [`SimBackend`] that drives the unified
+//! `PyramidRun`/`ExecutionBackend` machinery.
 
+pub mod backend;
 pub mod distribution;
 pub mod engine;
 
+pub use backend::SimBackend;
 pub use distribution::Distribution;
 pub use engine::{simulate, Policy, SimResult};

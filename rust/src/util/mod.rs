@@ -1,7 +1,9 @@
-//! Dependency-free substrates: PRNG, JSON, statistics, thread pool and a
-//! property-testing harness. See DESIGN.md §3 (substitution S4).
+//! Dependency-free substrates: PRNG, JSON, statistics, thread pool, PNG
+//! encoding and a property-testing harness. See DESIGN.md §3
+//! (substitution S4).
 
 pub mod json;
+pub mod png;
 pub mod prng;
 pub mod quickcheck;
 pub mod stats;

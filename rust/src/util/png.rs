@@ -1,0 +1,247 @@
+//! Tiny dependency-free PNG encoder (grayscale, 8-bit) and a matching
+//! decoder for round-trip testing.
+//!
+//! The encoder emits a fully standard PNG: signature, IHDR (color type 0,
+//! bit depth 8), one IDAT holding a zlib stream of *stored* (uncompressed)
+//! deflate blocks over filter-0 scanlines, and IEND. Stored blocks keep
+//! the code a page long at the cost of compression — fine for the Fig 2
+//! heatmaps this exists for (a few kilobytes each). Any PNG reader opens
+//! the output; [`decode_gray_png`] reads back exactly this subset.
+
+use std::io;
+use std::path::Path;
+
+/// CRC-32 (IEEE 802.3), bitwise — the PNG chunk checksum.
+fn crc32(data: &[u8]) -> u32 {
+    let mut crc = 0xffff_ffffu32;
+    for &b in data {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xedb8_8320 & mask);
+        }
+    }
+    !crc
+}
+
+/// Adler-32 — the zlib stream checksum.
+fn adler32(data: &[u8]) -> u32 {
+    const MOD: u32 = 65521;
+    let (mut a, mut b) = (1u32, 0u32);
+    for chunk in data.chunks(5552) {
+        for &x in chunk {
+            a += x as u32;
+            b += a;
+        }
+        a %= MOD;
+        b %= MOD;
+    }
+    (b << 16) | a
+}
+
+/// Wrap raw bytes in a zlib stream of stored deflate blocks.
+fn zlib_stored(raw: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(raw.len() + raw.len() / 65535 * 5 + 16);
+    out.push(0x78); // CMF: deflate, 32K window
+    out.push(0x01); // FLG: check bits, no dict, fastest
+    let mut chunks = raw.chunks(65535).peekable();
+    if raw.is_empty() {
+        // One final empty stored block.
+        out.extend_from_slice(&[0x01, 0, 0, 0xff, 0xff]);
+    }
+    while let Some(chunk) = chunks.next() {
+        let last = chunks.peek().is_none();
+        out.push(u8::from(last)); // BFINAL + BTYPE=00 (stored)
+        let len = chunk.len() as u16;
+        out.extend_from_slice(&len.to_le_bytes());
+        out.extend_from_slice(&(!len).to_le_bytes());
+        out.extend_from_slice(chunk);
+    }
+    out.extend_from_slice(&adler32(raw).to_be_bytes());
+    out
+}
+
+fn push_chunk(out: &mut Vec<u8>, kind: &[u8; 4], data: &[u8]) {
+    out.extend_from_slice(&(data.len() as u32).to_be_bytes());
+    let start = out.len();
+    out.extend_from_slice(kind);
+    out.extend_from_slice(data);
+    let crc = crc32(&out[start..]);
+    out.extend_from_slice(&crc.to_be_bytes());
+}
+
+/// Encode an 8-bit grayscale image (`pixels.len() == width * height`,
+/// row-major) as a PNG byte stream.
+pub fn encode_gray_png(width: usize, height: usize, pixels: &[u8]) -> Vec<u8> {
+    assert_eq!(
+        pixels.len(),
+        width * height,
+        "pixel buffer must be width*height"
+    );
+    // Scanlines, each prefixed with filter byte 0 (None).
+    let mut raw = Vec::with_capacity(height * (width + 1));
+    for row in pixels.chunks(width.max(1)) {
+        raw.push(0u8);
+        raw.extend_from_slice(row);
+    }
+    let mut ihdr = Vec::with_capacity(13);
+    ihdr.extend_from_slice(&(width as u32).to_be_bytes());
+    ihdr.extend_from_slice(&(height as u32).to_be_bytes());
+    ihdr.extend_from_slice(&[8, 0, 0, 0, 0]); // depth 8, gray, deflate, filter 0, no interlace
+
+    let mut out = Vec::new();
+    out.extend_from_slice(&[0x89, b'P', b'N', b'G', 0x0d, 0x0a, 0x1a, 0x0a]);
+    push_chunk(&mut out, b"IHDR", &ihdr);
+    push_chunk(&mut out, b"IDAT", &zlib_stored(&raw));
+    push_chunk(&mut out, b"IEND", &[]);
+    out
+}
+
+/// Write an 8-bit grayscale PNG to `path`.
+pub fn write_gray_png(
+    path: impl AsRef<Path>,
+    width: usize,
+    height: usize,
+    pixels: &[u8],
+) -> io::Result<()> {
+    std::fs::write(path, encode_gray_png(width, height, pixels))
+}
+
+/// Decode a grayscale PNG produced by [`encode_gray_png`] (stored deflate
+/// blocks, filter 0 only — not a general PNG reader). Returns
+/// `(width, height, pixels)`; checksums are verified.
+pub fn decode_gray_png(png: &[u8]) -> Result<(usize, usize, Vec<u8>), String> {
+    let sig = [0x89, b'P', b'N', b'G', 0x0d, 0x0a, 0x1a, 0x0a];
+    if png.len() < 8 || png[..8] != sig {
+        return Err("bad PNG signature".into());
+    }
+    let (mut width, mut height) = (0usize, 0usize);
+    let mut idat: Vec<u8> = Vec::new();
+    let mut pos = 8;
+    while pos + 8 <= png.len() {
+        let len = u32::from_be_bytes(png[pos..pos + 4].try_into().unwrap()) as usize;
+        let kind = &png[pos + 4..pos + 8];
+        let data_end = pos + 8 + len;
+        if data_end + 4 > png.len() {
+            return Err("truncated chunk".into());
+        }
+        let data = &png[pos + 8..data_end];
+        let want = u32::from_be_bytes(png[data_end..data_end + 4].try_into().unwrap());
+        if crc32(&png[pos + 4..data_end]) != want {
+            return Err(format!("CRC mismatch in {kind:?}"));
+        }
+        match kind {
+            b"IHDR" => {
+                width = u32::from_be_bytes(data[0..4].try_into().unwrap()) as usize;
+                height = u32::from_be_bytes(data[4..8].try_into().unwrap()) as usize;
+                if data[8] != 8 || data[9] != 0 {
+                    return Err("decoder supports 8-bit grayscale only".into());
+                }
+            }
+            b"IDAT" => idat.extend_from_slice(data),
+            _ => {}
+        }
+        pos = data_end + 4;
+    }
+    // zlib: header + stored blocks + adler.
+    if idat.len() < 6 {
+        return Err("IDAT too short".into());
+    }
+    let mut raw = Vec::new();
+    let mut p = 2; // skip zlib header
+    loop {
+        if p >= idat.len() - 4 {
+            return Err("deflate stream ran out".into());
+        }
+        let hdr = idat[p];
+        if hdr & 0x06 != 0 {
+            return Err("decoder supports stored blocks only".into());
+        }
+        let len = u16::from_le_bytes(idat[p + 1..p + 3].try_into().unwrap()) as usize;
+        let nlen = u16::from_le_bytes(idat[p + 3..p + 5].try_into().unwrap());
+        if nlen != !(len as u16) {
+            return Err("stored block LEN/NLEN mismatch".into());
+        }
+        if p + 5 + len > idat.len() - 4 {
+            return Err("stored block overruns stream".into());
+        }
+        raw.extend_from_slice(&idat[p + 5..p + 5 + len]);
+        p += 5 + len;
+        if hdr & 1 == 1 {
+            break;
+        }
+    }
+    let want = u32::from_be_bytes(idat[idat.len() - 4..].try_into().unwrap());
+    if adler32(&raw) != want {
+        return Err("adler32 mismatch".into());
+    }
+    // Strip the per-scanline filter byte (always 0 from our encoder).
+    let stride = width + 1;
+    if raw.len() != stride * height {
+        return Err("scanline data size mismatch".into());
+    }
+    let mut pixels = Vec::with_capacity(width * height);
+    for line in raw.chunks(stride) {
+        if line[0] != 0 {
+            return Err("decoder supports filter 0 only".into());
+        }
+        pixels.extend_from_slice(&line[1..]);
+    }
+    Ok((width, height, pixels))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_2x2_round_trips() {
+        let pixels = [0u8, 85, 170, 255];
+        let png = encode_gray_png(2, 2, &pixels);
+        // Signature + IHDR present.
+        assert_eq!(&png[..8], &[0x89, b'P', b'N', b'G', 0x0d, 0x0a, 0x1a, 0x0a]);
+        assert_eq!(&png[12..16], b"IHDR");
+        let (w, h, back) = decode_gray_png(&png).unwrap();
+        assert_eq!((w, h), (2, 2));
+        assert_eq!(back, pixels);
+    }
+
+    #[test]
+    fn larger_image_and_multi_block_streams_round_trip() {
+        // > 65535 raw bytes forces multiple stored deflate blocks.
+        let (w, h) = (300, 250);
+        let pixels: Vec<u8> = (0..w * h).map(|i| (i * 7 % 251) as u8).collect();
+        let png = encode_gray_png(w, h, &pixels);
+        let (bw, bh, back) = decode_gray_png(&png).unwrap();
+        assert_eq!((bw, bh), (w, h));
+        assert_eq!(back, pixels);
+    }
+
+    #[test]
+    fn corruption_is_detected() {
+        let png = encode_gray_png(2, 2, &[1, 2, 3, 4]);
+        let mut bad = png.clone();
+        let last_pixel = bad.len() - 20; // somewhere inside IDAT
+        bad[last_pixel] ^= 0xff;
+        assert!(decode_gray_png(&bad).is_err(), "checksum must catch flips");
+        assert!(decode_gray_png(&png[..10]).is_err(), "truncation detected");
+    }
+
+    #[test]
+    fn file_round_trip() {
+        let dir = std::env::temp_dir().join(format!("pyramidai_png_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.png");
+        write_gray_png(&path, 3, 1, &[9, 8, 7]).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        let (w, h, px) = decode_gray_png(&bytes).unwrap();
+        assert_eq!((w, h, px), (3, 1, vec![9, 8, 7]));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    #[should_panic(expected = "width*height")]
+    fn wrong_buffer_size_rejected() {
+        encode_gray_png(2, 2, &[0, 1, 2]);
+    }
+}

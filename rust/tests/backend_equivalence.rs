@@ -1,0 +1,116 @@
+//! Cross-backend equivalence matrix: the same slide driven through every
+//! execution substrate — the classic blocking driver, the in-process pool
+//! backend, predcache replay, the TCP cluster backend and the simulator's
+//! virtual workers — must produce byte-identical ExecTrees. This is the
+//! acceptance bar for the unified `PyramidRun`/`ExecutionBackend` API:
+//! where work runs can never change what was analyzed.
+
+use std::sync::Arc;
+
+use pyramidai::cluster::{ClusterBackend, ClusterExecConfig};
+use pyramidai::model::oracle::OracleAnalyzer;
+use pyramidai::model::Analyzer;
+use pyramidai::predcache::SlidePredictions;
+use pyramidai::pyramid::backend::run_on_backend;
+use pyramidai::pyramid::driver::run_pyramidal;
+use pyramidai::pyramid::tree::{ExecTree, Thresholds};
+use pyramidai::pyramid::{ExecutionBackend, PoolBackend, ReplayBackend};
+use pyramidai::service::pool::AnalyzerPool;
+use pyramidai::sim::SimBackend;
+use pyramidai::slide::pyramid::Slide;
+use pyramidai::synth::slide_gen::{SlideKind, SlideSpec};
+
+fn check(name: &str, expect: &ExecTree, got: &ExecTree) {
+    got.check_consistency().unwrap();
+    assert_eq!(got.initial, expect.initial, "{name}: initial set");
+    assert_eq!(got.nodes, expect.nodes, "{name}: tree diverged");
+}
+
+#[test]
+fn all_backends_produce_identical_trees() {
+    let spec = SlideSpec::new("bkeq", 801, 32, 16, 3, 64, SlideKind::LargeTumor);
+    let analyzer: Arc<dyn Analyzer> = Arc::new(OracleAnalyzer::new(1));
+    let slide = Arc::new(Slide::from_spec(spec.clone()));
+    let thr = Thresholds {
+        zoom: vec![0.5, 0.35, 0.35],
+    };
+
+    // Ground truth: the blocking compatibility driver (itself a shim over
+    // PyramidRun with one whole-frontier request per level).
+    let expect = run_pyramidal(&slide, analyzer.as_ref(), &thr, 8);
+    let initial = expect.initial.clone();
+
+    // Vary the request granularity across backends on purpose: chunking
+    // must never matter.
+    for chunk in [0usize, 5] {
+        let pool = Arc::new(AnalyzerPool::new(Arc::clone(&analyzer), 3));
+        let mut pool_backend = PoolBackend::new(pool, Arc::clone(&slide), 4);
+        let got = run_on_backend(
+            slide.id(),
+            slide.levels(),
+            initial.clone(),
+            &thr,
+            chunk,
+            &mut pool_backend,
+        )
+        .unwrap();
+        check("pool", &expect, &got);
+        assert_eq!(pool_backend.in_flight(), 0, "no leaked pool work");
+
+        let preds = SlidePredictions::collect(&slide, analyzer.as_ref(), 16);
+        let mut replay_backend = ReplayBackend::new(&preds);
+        let got = run_on_backend(
+            slide.id(),
+            slide.levels(),
+            initial.clone(),
+            &thr,
+            chunk,
+            &mut replay_backend,
+        )
+        .unwrap();
+        check("replay", &expect, &got);
+
+        let mut cluster_backend = ClusterBackend::start(
+            spec.clone(),
+            Arc::clone(&analyzer),
+            &ClusterExecConfig {
+                workers: 2,
+                steal: true,
+                seed: 17,
+            },
+        )
+        .unwrap();
+        let got = run_on_backend(
+            slide.id(),
+            slide.levels(),
+            initial.clone(),
+            &thr,
+            chunk,
+            &mut cluster_backend,
+        )
+        .unwrap();
+        check("cluster", &expect, &got);
+        assert_eq!(cluster_backend.in_flight(), 0, "no leaked cluster work");
+
+        let mut sim_backend = SimBackend::new(&expect, 4);
+        let got = run_on_backend(
+            slide.id(),
+            slide.levels(),
+            initial.clone(),
+            &thr,
+            chunk,
+            &mut sim_backend,
+        )
+        .unwrap();
+        check("sim", &expect, &got);
+        assert_eq!(
+            sim_backend.per_worker().iter().sum::<usize>(),
+            expect.total_analyzed(),
+            "virtual workers conserve tiles"
+        );
+    }
+
+    // And the cache's own replay entry point (PyramidRun under the hood).
+    let preds = SlidePredictions::collect(&slide, analyzer.as_ref(), 16);
+    check("predcache::replay", &expect, &preds.replay(&thr));
+}

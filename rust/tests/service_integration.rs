@@ -68,6 +68,7 @@ fn service_trees_match_standalone_runs_for_every_policy() {
                 max_in_flight: 3,
                 batch: 8,
                 policy,
+                ..ServiceConfig::default()
             },
         );
         let ids: Vec<_> = specs
@@ -128,6 +129,7 @@ fn priority_policy_starts_high_before_low() {
             max_in_flight: 1,
             batch: 8,
             policy: Policy::Priority,
+            ..ServiceConfig::default()
         },
     );
     let first = svc
@@ -171,6 +173,7 @@ fn fair_share_lets_light_tenant_through() {
             max_in_flight: 1,
             batch: 8,
             policy: Policy::FairShare,
+            ..ServiceConfig::default()
         },
     );
     let mut heavy = Vec::new();
@@ -216,6 +219,7 @@ fn backpressure_rejects_and_cancellation_records() {
             max_in_flight: 1,
             batch: 8,
             policy: Policy::Fifo,
+            ..ServiceConfig::default()
         },
     );
     let a = svc
@@ -266,6 +270,7 @@ fn zero_deadline_job_expires_in_queue() {
             max_in_flight: 1,
             batch: 8,
             policy: Policy::Fifo,
+            ..ServiceConfig::default()
         },
     );
     let slow = svc
@@ -307,4 +312,156 @@ fn results_cover_every_submitted_job_exactly_once() {
     let mut want = ids.clone();
     want.sort_unstable();
     assert_eq!(seen, want, "every job exactly one terminal record");
+}
+
+#[test]
+fn mid_run_cancellation_stops_at_a_frontier_boundary() {
+    // A slow job is cancelled while running; the service must preempt it
+    // at a level-frontier boundary and finalize it as Cancelled with a
+    // consistent partial tree — and with no in-flight pool work leaked
+    // (shutdown would hang or panic if a chunk callback outlived its job).
+    let sp = SlideSpec::new("svc_cancel", 700, 48, 32, 3, 64, SlideKind::LargeTumor);
+    let thr = thresholds();
+    let slide = Slide::from_spec(sp.clone());
+    let solo = run_pyramidal(&slide, oracle().as_ref(), &thr, 8);
+
+    let svc = AnalysisService::start(
+        slow_oracle(2),
+        ServiceConfig {
+            workers: 2,
+            queue_capacity: 4,
+            max_in_flight: 1,
+            batch: 8,
+            policy: Policy::Fifo,
+            ..ServiceConfig::default()
+        },
+    );
+    let id = svc
+        .submit(JobSpec::new(JobSource::Spec(sp), thr))
+        .unwrap();
+    // Wait until the scheduler picked it up, then let the first frontier
+    // make some progress before cancelling mid-run.
+    while svc.queued() > 0 {
+        std::thread::sleep(Duration::from_micros(200));
+    }
+    std::thread::sleep(Duration::from_millis(30));
+    assert!(svc.cancel(id), "running job accepts cancellation");
+    let report = svc.shutdown();
+    let r = report.job(id).expect("terminal record exists");
+    assert_eq!(r.state, JobState::Cancelled, "cancelled mid-run");
+    let partial = r.tree.as_ref().expect("partial tree recorded");
+    partial.check_consistency().unwrap();
+    assert!(
+        partial.total_analyzed() < solo.total_analyzed(),
+        "cancellation must cut the run short ({} vs {})",
+        partial.total_analyzed(),
+        solo.total_analyzed()
+    );
+    // Frontier-boundary semantics: each level is either untouched or
+    // byte-identical to the standalone run's (no half-recorded frontier).
+    for (level, nodes) in partial.nodes.iter().enumerate() {
+        assert!(
+            nodes.is_empty() || *nodes == solo.nodes[level],
+            "level {level} recorded partially"
+        );
+    }
+    assert_eq!(r.tiles, partial.total_analyzed());
+    assert_eq!(report.pool_panics, 0);
+}
+
+#[test]
+fn cluster_backend_service_matches_standalone_runs() {
+    use pyramidai::cluster::ClusterExecConfig;
+    use pyramidai::service::ExecMode;
+
+    let specs: Vec<SlideSpec> = (0..3)
+        .map(|i| spec(710 + i, [SlideKind::LargeTumor, SlideKind::Negative][i as usize % 2]))
+        .collect();
+    let thr = thresholds();
+    let solo: Vec<_> = specs
+        .iter()
+        .map(|sp| {
+            let slide = Slide::from_spec(sp.clone());
+            run_pyramidal(&slide, oracle().as_ref(), &thr, 8)
+        })
+        .collect();
+
+    let svc = AnalysisService::start(
+        oracle(),
+        ServiceConfig {
+            workers: 2,
+            queue_capacity: 8,
+            max_in_flight: 2,
+            batch: 8,
+            policy: Policy::Fifo,
+            exec: ExecMode::Cluster(ClusterExecConfig {
+                workers: 2,
+                steal: true,
+                seed: 13,
+            }),
+            ..ServiceConfig::default()
+        },
+    );
+    let ids: Vec<_> = specs
+        .iter()
+        .map(|sp| {
+            svc.submit(JobSpec::new(JobSource::Spec(sp.clone()), thr.clone()))
+                .unwrap()
+        })
+        .collect();
+    let report = svc.shutdown();
+    assert_eq!(report.metrics.completed, specs.len());
+    for (i, id) in ids.iter().enumerate() {
+        let r = report.job(*id).unwrap();
+        assert_eq!(r.state, JobState::Completed, "job {i}");
+        assert_eq!(
+            r.tree.as_ref().unwrap().nodes,
+            solo[i].nodes,
+            "cluster-backed job {i} diverged from standalone driver"
+        );
+    }
+}
+
+#[test]
+fn coalescing_toggle_does_not_change_trees() {
+    let specs: Vec<SlideSpec> = (0..4).map(|i| spec(720 + i, SlideKind::LargeTumor)).collect();
+    let thr = thresholds();
+    let solo: Vec<_> = specs
+        .iter()
+        .map(|sp| {
+            let slide = Slide::from_spec(sp.clone());
+            run_pyramidal(&slide, oracle().as_ref(), &thr, 8)
+        })
+        .collect();
+    for coalesce in [true, false] {
+        let svc = AnalysisService::start(
+            oracle(),
+            ServiceConfig {
+                workers: 3,
+                queue_capacity: 8,
+                max_in_flight: 4,
+                batch: 8,
+                policy: Policy::Fifo,
+                coalesce,
+                ..ServiceConfig::default()
+            },
+        );
+        let ids: Vec<_> = specs
+            .iter()
+            .map(|sp| {
+                svc.submit(JobSpec::new(JobSource::Spec(sp.clone()), thr.clone()))
+                    .unwrap()
+            })
+            .collect();
+        let report = svc.shutdown();
+        for (i, id) in ids.iter().enumerate() {
+            let r = report.job(*id).unwrap();
+            assert_eq!(r.state, JobState::Completed, "coalesce={coalesce} job {i}");
+            assert_eq!(
+                r.tree.as_ref().unwrap().nodes,
+                solo[i].nodes,
+                "coalesce={coalesce}: job {i} diverged"
+            );
+        }
+    }
 }
