@@ -1,0 +1,217 @@
+//! Scheduling-policy bench: a skewed two-tenant job mix (a heavy tenant
+//! flooding large slides, a light tenant submitting a few small ones)
+//! served under fifo / priority / wfs / edf, with per-tenant p95
+//! queue-wait and turnaround from the service's own metrics — the
+//! numbers a QoS story is judged on. A per-tile delay stands in for the
+//! paper's analysis block so policy order, not analyzer speed, dominates.
+//!
+//! The same mix also runs through the deterministic workload simulator
+//! (`simulate_workload`), which drives the *same* policy objects — its
+//! completion fingerprint is printed alongside so sim-vs-service drift
+//! would be visible right here in the bench output.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use pyramidai::harness::{print_table, CsvOut};
+use pyramidai::model::oracle::OracleAnalyzer;
+use pyramidai::model::{Analyzer, DelayAnalyzer};
+use pyramidai::pyramid::driver::run_pyramidal;
+use pyramidai::pyramid::tree::Thresholds;
+use pyramidai::service::{
+    AnalysisService, JobSource, JobSpec, PolicySpec, Priority, ServiceConfig,
+};
+use pyramidai::sim::{simulate_workload, SimJobSpec, WorkloadConfig};
+use pyramidai::slide::pyramid::Slide;
+use pyramidai::synth::slide_gen::{SlideKind, SlideSpec};
+use pyramidai::util::stats::fmt_duration;
+
+const PER_TILE: Duration = Duration::from_millis(1);
+
+struct Mix {
+    spec: SlideSpec,
+    tenant: &'static str,
+    priority: Priority,
+    deadline: Duration,
+}
+
+/// Nine heavy-tenant large slides, three light-tenant small ones, with
+/// deadlines that favor the light tenant (it asked for low latency).
+fn mix() -> Vec<Mix> {
+    let mut jobs = Vec::new();
+    for i in 0..9u64 {
+        jobs.push(Mix {
+            spec: SlideSpec::new(
+                format!("heavy_{i}"),
+                300 + i,
+                32,
+                16,
+                3,
+                64,
+                SlideKind::LargeTumor,
+            ),
+            tenant: "heavy",
+            priority: Priority::Normal,
+            deadline: Duration::from_secs(120),
+        });
+    }
+    for i in 0..3u64 {
+        jobs.push(Mix {
+            spec: SlideSpec::new(
+                format!("light_{i}"),
+                400 + i,
+                16,
+                8,
+                3,
+                64,
+                SlideKind::Negative,
+            ),
+            tenant: "light",
+            priority: Priority::High,
+            deadline: Duration::from_secs(30),
+        });
+    }
+    jobs
+}
+
+fn thresholds() -> Thresholds {
+    Thresholds {
+        zoom: vec![0.5, 0.35, 0.35],
+    }
+}
+
+fn policies() -> Vec<PolicySpec> {
+    vec![
+        PolicySpec::fifo(),
+        PolicySpec::priority(),
+        PolicySpec::wfs([("heavy".to_string(), 1.0), ("light".to_string(), 3.0)]),
+        PolicySpec::edf(),
+    ]
+}
+
+fn main() {
+    let jobs = mix();
+    let mut csv = CsvOut::create(
+        "scheduler_policies.csv",
+        &[
+            "policy", "preempt", "tenant", "completed", "wait_p95_s", "turn_p95_s",
+            "preemptions", "wall_s",
+        ],
+    )
+    .expect("bench_results dir");
+    let mut rows = Vec::new();
+
+    for policy in policies() {
+        // Preemption only changes behavior for priority/edf; run it there.
+        let preempts = match policy.kind {
+            pyramidai::service::PolicyKind::Priority | pyramidai::service::PolicyKind::Edf => {
+                vec![false, true]
+            }
+            _ => vec![false],
+        };
+        for preempt in preempts {
+            let analyzer: Arc<dyn Analyzer> =
+                Arc::new(DelayAnalyzer::new(OracleAnalyzer::new(1), PER_TILE));
+            let svc = AnalysisService::start(
+                analyzer,
+                ServiceConfig {
+                    workers: 4,
+                    queue_capacity: jobs.len(),
+                    max_in_flight: 2,
+                    batch: 8,
+                    policy: policy.clone(),
+                    coalesce: true,
+                    preempt,
+                    ..ServiceConfig::default()
+                },
+            );
+            for j in &jobs {
+                svc.submit(
+                    JobSpec::new(JobSource::Spec(j.spec.clone()), thresholds())
+                        .with_tenant(j.tenant)
+                        .with_priority(j.priority)
+                        .with_deadline(j.deadline),
+                )
+                .expect("queue sized for the mix");
+            }
+            let report = svc.shutdown();
+            assert_eq!(
+                report.metrics.completed + report.metrics.expired,
+                jobs.len(),
+                "{}: all jobs terminal",
+                policy.as_str()
+            );
+            for (tenant, t) in &report.metrics.per_tenant {
+                let row = vec![
+                    policy.as_str(),
+                    preempt.to_string(),
+                    tenant.clone(),
+                    t.completed.to_string(),
+                    format!("{:.3}", t.queue_wait_p95.as_secs_f64()),
+                    format!("{:.3}", t.turnaround_p95.as_secs_f64()),
+                    t.preemptions.to_string(),
+                    format!("{:.3}", report.metrics.wall.as_secs_f64()),
+                ];
+                csv.row(&row).expect("csv row");
+                rows.push(row);
+            }
+            println!(
+                "{:<9} preempt={:<5} wall={} preemptions={}",
+                policy.as_str(),
+                preempt,
+                fmt_duration(report.metrics.wall),
+                report.metrics.preemptions
+            );
+        }
+    }
+    print_table(
+        "scheduler policies under a skewed two-tenant mix (per-tenant QoS)",
+        &[
+            "policy", "preempt", "tenant", "done", "wait p95", "turn p95", "preempt#", "wall",
+        ],
+        &rows,
+    );
+
+    // Deterministic cross-check: the same mix through the workload
+    // simulator, driving the same policy objects.
+    let analyzer = OracleAnalyzer::new(1);
+    let sim_jobs: Vec<SimJobSpec> = jobs
+        .iter()
+        .map(|j| {
+            let slide = Slide::from_spec(j.spec.clone());
+            SimJobSpec {
+                tenant: j.tenant.to_string(),
+                priority_rank: j.priority.rank(),
+                arrival: 0,
+                deadline: Some(j.deadline.as_micros() as u64),
+                tree: run_pyramidal(&slide, &analyzer, &thresholds(), 8),
+                thresholds: thresholds(),
+            }
+        })
+        .collect();
+    let mut sim_rows = Vec::new();
+    for policy in policies() {
+        let built = policy.build();
+        let res = simulate_workload(
+            &sim_jobs,
+            built.as_ref(),
+            &WorkloadConfig {
+                workers: 4,
+                max_in_flight: 2,
+                chunk: 8,
+                preempt: true,
+            },
+        );
+        sim_rows.push(vec![
+            policy.as_str(),
+            res.makespan.to_string(),
+            res.preemptions.to_string(),
+            format!("{:?}", res.completion_order),
+        ]);
+    }
+    print_table(
+        "same mix in the workload simulator (virtual ticks, same policy objects)",
+        &["policy", "makespan", "preemptions", "completion order"],
+        &sim_rows,
+    );
+}

@@ -14,7 +14,7 @@ use pyramidai::harness::{print_table, CsvOut};
 use pyramidai::model::oracle::OracleAnalyzer;
 use pyramidai::model::{Analyzer, DelayAnalyzer};
 use pyramidai::pyramid::tree::Thresholds;
-use pyramidai::service::{AnalysisService, JobSource, JobSpec, Policy, ServiceConfig};
+use pyramidai::service::{AnalysisService, JobSource, JobSpec, PolicySpec, ServiceConfig};
 use pyramidai::synth::slide_gen::{gen_slide_set, DatasetParams};
 use pyramidai::util::stats::fmt_duration;
 
@@ -31,7 +31,7 @@ fn run_once(workers: usize, coalesce: bool) -> (f64, Duration, usize) {
             queue_capacity: JOBS,
             max_in_flight: 4,
             batch: 4,
-            policy: Policy::Fifo,
+            policy: PolicySpec::fifo(),
             coalesce,
             ..ServiceConfig::default()
         },

@@ -15,7 +15,7 @@ use pyramidai::model::{Analyzer, DelayAnalyzer};
 use pyramidai::pyramid::driver::run_pyramidal;
 use pyramidai::pyramid::tree::Thresholds;
 use pyramidai::service::{
-    metrics, AnalysisService, JobSource, JobSpec, Policy, Priority, ServiceConfig,
+    metrics, AnalysisService, JobSource, JobSpec, PolicySpec, Priority, ServiceConfig,
 };
 use pyramidai::slide::pyramid::Slide;
 use pyramidai::synth::slide_gen::{SlideKind, SlideSpec};
@@ -23,8 +23,8 @@ use pyramidai::synth::slide_gen::{SlideKind, SlideSpec};
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
     let workers = args.usize_or("workers", 4)?;
-    let policy_s = args.str_or("policy", "fair");
-    let policy = Policy::from_str(&policy_s)
+    let policy_s = args.str_or("policy", "wfs");
+    let policy = PolicySpec::parse(&policy_s)
         .ok_or_else(|| anyhow::anyhow!("unknown --policy {policy_s:?}"))?;
     let per_tile = Duration::from_millis(args.u64_or("per-tile-ms", 1)?);
     args.finish()?;

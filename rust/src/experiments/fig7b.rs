@@ -1,0 +1,203 @@
+//! Figure 7b: scaling sweep for the *persistent* chunk cluster — the
+//! multi-slide service with `--backend cluster` vs the one-shot
+//! [`run_cluster`] path, across worker counts.
+//!
+//! Both modes execute the same six-slide job set (two of each Fig-7
+//! slide kind) with the same per-tile delay standing in for the paper's
+//! 0.33 s analysis block. The one-shot path pays a fresh cluster
+//! spin-up, initial distribution and tear-down per slide (the paper's
+//! §5.4 regime); the service keeps one TCP cluster alive, deals every
+//! job's frontier chunks to the same workers and overlaps jobs up to
+//! `max_in_flight` — the regime a production deployment actually runs.
+//! The gap between the two rows at each worker count is the price of
+//! not keeping the cluster warm.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use crate::cluster::{run_cluster, ClusterConfig, ClusterExecConfig};
+use crate::harness::{print_table, CsvOut};
+use crate::model::oracle::OracleAnalyzer;
+use crate::model::{Analyzer, DelayAnalyzer};
+use crate::service::{
+    AnalysisService, ExecMode, JobSource, JobSpec, PolicySpec, ServiceConfig,
+};
+use crate::sim::Distribution;
+use crate::synth::slide_gen::{DatasetParams, SlideKind, SlideSpec};
+use crate::tuning::empirical;
+use crate::util::stats::{timed, Summary};
+
+use super::ctx::Ctx;
+
+#[derive(Debug, Clone)]
+pub struct Fig7bRow {
+    pub workers: usize,
+    /// `one-shot` ([`run_cluster`] per slide) or `service` (persistent
+    /// cluster behind the multi-slide scheduler).
+    pub mode: &'static str,
+    /// Wall time for the whole job set.
+    pub mean_secs: f64,
+    pub std_secs: f64,
+    pub jobs: usize,
+}
+
+/// The shared job set: two of each Fig-7 slide kind.
+fn job_specs() -> Vec<SlideSpec> {
+    let p = DatasetParams::default();
+    let kinds = [
+        SlideKind::LargeTumor,
+        SlideKind::SmallScattered,
+        SlideKind::Negative,
+    ];
+    (0..6)
+        .map(|i| {
+            SlideSpec::new(
+                format!("fig7b_{i}"),
+                0xF1B7 ^ ((i as u64) << 3),
+                p.tiles_x,
+                p.tiles_y,
+                p.levels,
+                p.tile_px,
+                kinds[i % 3],
+            )
+        })
+        .collect()
+}
+
+pub fn run(
+    ctx: &Ctx,
+    workers: &[usize],
+    reps: usize,
+    per_tile: Duration,
+) -> Result<Vec<Fig7bRow>> {
+    let sel = empirical::select(&ctx.train_cache, ctx.cfg.params.levels, 0.90);
+    let specs = job_specs();
+    let analyzer: Arc<dyn Analyzer> =
+        Arc::new(DelayAnalyzer::new(OracleAnalyzer::new(1), per_tile));
+
+    let mut rows = Vec::new();
+    for &w in workers {
+        // One-shot: a fresh cluster per slide, slides strictly in
+        // sequence (the §5.4 single-image regime, repeated).
+        let mut oneshot = Summary::new();
+        for rep in 0..reps {
+            let (res, wall) = timed(|| -> Result<()> {
+                for spec in &specs {
+                    // TCP setup can flake under heavy thread contention
+                    // on a small box; retry like a real deployment would.
+                    let mut attempt = 0;
+                    loop {
+                        attempt += 1;
+                        match run_cluster(
+                            spec,
+                            &sel.thresholds,
+                            Arc::clone(&analyzer),
+                            &ClusterConfig {
+                                workers: w,
+                                distribution: Distribution::RoundRobin,
+                                steal: true,
+                                batch: 1,
+                                seed: 7000 + rep as u64 + attempt * 7919,
+                            },
+                        ) {
+                            Ok(_) => break,
+                            Err(e) if attempt < 3 => {
+                                log::warn!("one-shot cluster retry {attempt}: {e:#}");
+                                std::thread::sleep(Duration::from_millis(100));
+                            }
+                            Err(e) => return Err(e),
+                        }
+                    }
+                }
+                Ok(())
+            });
+            res?;
+            oneshot.push(wall.as_secs_f64());
+        }
+        rows.push(Fig7bRow {
+            workers: w,
+            mode: "one-shot",
+            mean_secs: oneshot.mean(),
+            std_secs: oneshot.std(),
+            jobs: specs.len(),
+        });
+
+        // Service: one persistent cluster, every job's chunks dealt to
+        // the same warm workers, jobs overlapping up to max_in_flight.
+        let mut service = Summary::new();
+        for rep in 0..reps {
+            let (res, wall) = timed(|| -> Result<()> {
+                let svc = AnalysisService::start(
+                    Arc::clone(&analyzer),
+                    ServiceConfig {
+                        workers: w,
+                        queue_capacity: specs.len(),
+                        max_in_flight: 2,
+                        batch: 8,
+                        policy: PolicySpec::fifo(),
+                        coalesce: false,
+                        preempt: false,
+                        exec: ExecMode::Cluster(ClusterExecConfig {
+                            workers: w,
+                            steal: true,
+                            seed: 7700 + rep as u64,
+                        }),
+                    },
+                );
+                for spec in &specs {
+                    svc.submit(JobSpec::new(
+                        JobSource::Spec(spec.clone()),
+                        sel.thresholds.clone(),
+                    ))
+                    .map_err(|e| anyhow!("submit failed: {e}"))?;
+                }
+                let report = svc.shutdown();
+                if report.metrics.completed != specs.len() {
+                    return Err(anyhow!(
+                        "service completed {}/{} jobs",
+                        report.metrics.completed,
+                        specs.len()
+                    ));
+                }
+                Ok(())
+            });
+            res?;
+            service.push(wall.as_secs_f64());
+        }
+        rows.push(Fig7bRow {
+            workers: w,
+            mode: "service",
+            mean_secs: service.mean(),
+            std_secs: service.std(),
+            jobs: specs.len(),
+        });
+    }
+    Ok(rows)
+}
+
+pub fn print_report(rows: &[Fig7bRow]) -> Result<()> {
+    let mut csv = CsvOut::create(
+        "fig7b_cluster_service.csv",
+        &["workers", "mode", "mean_secs", "std_secs", "jobs"],
+    )?;
+    let mut out = Vec::new();
+    for r in rows {
+        let row = vec![
+            r.workers.to_string(),
+            r.mode.to_string(),
+            format!("{:.3}", r.mean_secs),
+            format!("{:.3}", r.std_secs),
+            r.jobs.to_string(),
+        ];
+        csv.row(&row)?;
+        out.push(row);
+    }
+    print_table(
+        "Fig 7b: persistent chunk cluster (service --backend cluster) vs one-shot run_cluster",
+        &["workers", "mode", "mean_s", "std_s", "jobs"],
+        &out,
+    );
+    Ok(())
+}

@@ -8,6 +8,7 @@ pub mod fig2;
 pub mod fig345;
 pub mod fig6;
 pub mod fig7;
+pub mod fig7b;
 pub mod table12;
 pub mod table3;
 pub mod wsi46;

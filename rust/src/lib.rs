@@ -34,5 +34,6 @@ pub mod model;
 pub mod predcache;
 pub mod runtime;
 pub mod pyramid;
+pub mod sched;
 pub mod service;
 pub mod tuning;

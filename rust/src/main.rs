@@ -71,11 +71,14 @@ subcommands:
   tune      tune decision thresholds from a cache (--cache --out --strategy --target)
   analyze   pyramidal vs reference on one slide   (--slide-seed --kind --model --thresholds)
   simulate  Fig-6 load-balancing simulation       (--workers --model)
-  cluster   run the TCP work-stealing cluster     (--workers --per-tile-ms --reps)
+  cluster   run the TCP work-stealing cluster     (--workers --per-tile-ms --reps
+                                                   --compare-service=true for the Fig-7b
+                                                   service-vs-one-shot sweep)
   serve     multi-slide analysis service          (--jobs --workers --backend pool|cluster|replay
-                                                   --policy --max-in-flight --queue-cap --batch
-                                                   --coalesce --per-tile-ms --tenants --seed
-                                                   --model --csv)
+                                                   --policy fifo|priority|edf|wfs[:t=w,..][;quota=n]
+                                                   --preempt --deadline-ms --max-in-flight
+                                                   --queue-cap --batch --coalesce --per-tile-ms
+                                                   --tenants --seed --model --csv)
   report    regenerate every paper table/figure   (--model --fast)";
 
 fn model_kind(args: &Args) -> Result<ModelKind> {
@@ -252,15 +255,23 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     let workers = args.usize_list_or("workers", &[1, 2, 4, 8, 12])?;
     let reps = args.usize_or("reps", 3)?;
     let per_tile_ms = args.u64_or("per-tile-ms", 20)?;
+    let compare_service = args.bool("compare-service");
     let model = model_kind(args)?;
     args.finish()?;
     let ctx = Ctx::load(CtxConfig {
         model,
         ..Default::default()
     })?;
-    let rows =
-        experiments::fig7::run(&ctx, &workers, reps, Duration::from_millis(per_tile_ms))?;
-    experiments::fig7::print_report(&rows)?;
+    if compare_service {
+        // Fig 7b: persistent service-backed cluster vs one-shot runs.
+        let rows =
+            experiments::fig7b::run(&ctx, &workers, reps, Duration::from_millis(per_tile_ms))?;
+        experiments::fig7b::print_report(&rows)?;
+    } else {
+        let rows =
+            experiments::fig7::run(&ctx, &workers, reps, Duration::from_millis(per_tile_ms))?;
+        experiments::fig7::print_report(&rows)?;
+    }
     Ok(())
 }
 
@@ -268,15 +279,23 @@ fn cmd_serve(args: &Args) -> Result<()> {
     use pyramidai::cluster::ClusterExecConfig;
     use pyramidai::model::DelayAnalyzer;
     use pyramidai::service::{
-        metrics as svc_metrics, AnalysisService, ExecMode, JobSource, JobSpec, Policy,
+        metrics as svc_metrics, AnalysisService, ExecMode, JobSource, JobSpec, PolicySpec,
         Priority, ServiceConfig, SubmitError,
     };
 
     let jobs = args.usize_or("jobs", 32)?;
     let workers = args.usize_or("workers", 8)?;
     let policy_s = args.str_or("policy", "fifo");
-    let policy = Policy::from_str(&policy_s)
-        .ok_or_else(|| anyhow!("unknown --policy {policy_s:?} (fifo|priority|fair)"))?;
+    let policy = PolicySpec::parse(&policy_s).ok_or_else(|| {
+        anyhow!(
+            "unknown --policy {policy_s:?} (fifo|priority|edf|wfs[:tenant=weight,..][;quota=n])"
+        )
+    })?;
+    let preempt = args.bool("preempt");
+    // Base relative deadline for the synthetic jobs (0 = no deadlines).
+    // Staggered per job so EDF has an order to exploit: job i gets
+    // deadline-ms × (1 + i mod 4).
+    let deadline_ms = args.u64_or("deadline-ms", 0)?;
     let max_in_flight = args.usize_or("max-in-flight", workers.max(1))?;
     let queue_cap = args.usize_or("queue-cap", jobs.max(1))?;
     let batch = args.usize_or("batch", 16)?;
@@ -311,7 +330,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     };
 
     println!(
-        "serving {jobs} jobs on {workers} workers ({name}, backend={backend}, policy={}, max-in-flight={max_in_flight}, queue-cap={queue_cap})…",
+        "serving {jobs} jobs on {workers} workers ({name}, backend={backend}, policy={}, preempt={preempt}, max-in-flight={max_in_flight}, queue-cap={queue_cap})…",
         policy.as_str()
     );
 
@@ -356,6 +375,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             batch,
             policy,
             coalesce,
+            preempt,
             exec,
         },
     );
@@ -366,9 +386,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
             Some(c) => JobSource::Cached(std::sync::Arc::clone(c)),
             None => JobSource::Spec(spec),
         };
-        let job = JobSpec::new(source, thr.clone())
+        let mut job = JobSpec::new(source, thr.clone())
             .with_priority(prios[i % prios.len()])
             .with_tenant(format!("tenant{}", i % tenants));
+        if deadline_ms > 0 {
+            job = job.with_deadline(Duration::from_millis(deadline_ms * (1 + i as u64 % 4)));
+        }
         // Backpressure: retry until the queue has room.
         loop {
             match svc.submit(job.clone()) {
@@ -389,9 +412,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let path = svc_metrics::write_csv(&report.results, "service_jobs.csv")?;
         println!("wrote {}", path.display());
     }
-    let incomplete = report.results.len() - report.metrics.completed;
+    // With deadlines in play, expiry is a legitimate outcome (EDF sheds
+    // late work instead of running it); anything else unfinished is a bug.
+    let incomplete =
+        report.results.len() - report.metrics.completed - report.metrics.expired;
     if incomplete > 0 {
         return Err(anyhow!("{incomplete} jobs did not complete"));
+    }
+    if report.metrics.expired > 0 && deadline_ms == 0 {
+        return Err(anyhow!("{} jobs expired without deadlines", report.metrics.expired));
     }
     Ok(())
 }

@@ -1,0 +1,691 @@
+//! One scheduling-policy core shared by the multi-slide service, the
+//! cluster-backed service mode and the distributed simulator.
+//!
+//! The paper's §5 claim is that load-balancing conclusions drawn in the
+//! simulator transfer to the real cluster. For that to be *structural*
+//! rather than coincidental, the simulator and the service must not
+//! re-implement scheduling — they must run the same code. This module is
+//! that code: a [`SchedulingPolicy`] ranks *frontier requests* (not whole
+//! jobs) given a [`SchedContext`] of per-tenant consumption, weights,
+//! quotas, deadlines and queue age. The service scheduler
+//! ([`crate::service::scheduler`]) consults a policy object for
+//! admission, dispatch order and preemption; the workload simulator
+//! ([`crate::sim::engine::simulate_workload`]) drives the *same trait
+//! objects* over virtual workers. A policy decision reproduced by both is
+//! therefore the same branch of the same function, never a re-derivation.
+//!
+//! Policies act at level-frontier granularity because that is where a
+//! [`crate::pyramid::PyramidRun`] has natural suspension points: between
+//! frontiers a run holds no in-flight work, so a scheduler can park it
+//! under preemption and resume it later with a byte-identical final
+//! `ExecTree` (the tree depends only on what was analyzed, never on
+//! scheduling order).
+//!
+//! Four policies are provided:
+//!
+//! * [`Fifo`] — strict submission order.
+//! * [`StrictPriority`] — higher [`priority_rank`] first; preempts lower
+//!   ranks when the scheduler allows preemption.
+//! * [`WeightedFairShare`] — per-tenant weights over consumed tiles, with
+//!   an optional per-tenant running-jobs quota; one heavy tenant cannot
+//!   starve the rest.
+//! * [`Edf`] — earliest absolute deadline first, with natural preemption
+//!   at frontier boundaries.
+//!
+//! [`priority_rank`]: SchedCandidate::priority_rank
+
+use std::collections::HashMap;
+
+/// Everything a policy may know about one schedulable unit — a queued
+/// job waiting for admission, a parked job waiting to resume, or a
+/// running job's next frontier request. Clock fields (`arrival`,
+/// `deadline`, [`SchedContext::now`]) are plain integers in whatever
+/// clock the caller uses — microseconds since service start for the real
+/// scheduler, virtual ticks for the simulator — so the same policy code
+/// is exact and deterministic in both worlds.
+#[derive(Debug, Clone, Copy)]
+pub struct SchedCandidate<'a> {
+    /// Submission-ordered id; the universal deterministic tiebreak.
+    pub job: u64,
+    /// Numeric priority (higher = more urgent).
+    pub priority_rank: u8,
+    /// Fair-share accounting key.
+    pub tenant: &'a str,
+    /// Arrival stamp in the caller's clock (queue age = now − arrival).
+    pub arrival: u64,
+    /// Absolute deadline in the caller's clock; `None` = none.
+    pub deadline: Option<u64>,
+}
+
+impl SchedCandidate<'_> {
+    /// Time spent waiting so far.
+    pub fn queue_age(&self, now: u64) -> u64 {
+        now.saturating_sub(self.arrival)
+    }
+}
+
+/// Shared accounting the policies rank against.
+#[derive(Debug, Clone, Copy)]
+pub struct SchedContext<'a> {
+    /// Tiles dispatched so far, per tenant (the fair-share currency).
+    pub usage: &'a HashMap<String, u64>,
+    /// Jobs currently in the running set, per tenant (quota currency).
+    pub running_per_tenant: &'a HashMap<String, usize>,
+    /// Current time in the caller's clock.
+    pub now: u64,
+}
+
+impl<'a> SchedContext<'a> {
+    pub fn tenant_usage(&self, tenant: &str) -> u64 {
+        self.usage.get(tenant).copied().unwrap_or(0)
+    }
+
+    pub fn tenant_running(&self, tenant: &str) -> usize {
+        self.running_per_tenant.get(tenant).copied().unwrap_or(0)
+    }
+}
+
+/// A scheduling policy over frontier requests. One object serves three
+/// decision points:
+///
+/// * **admission** — [`admit`](SchedulingPolicy::admit) gates a candidate
+///   (quotas), [`select`](SchedulingPolicy::select) picks among the
+///   admissible (queued *and* parked) candidates;
+/// * **dispatch** — `select` orders the pending frontier requests of the
+///   running set;
+/// * **preemption** — [`preempts`](SchedulingPolicy::preempts) decides
+///   whether a waiting candidate should displace a running one at its
+///   next frontier boundary.
+///
+/// Implementations must be deterministic for a fixed candidate set and
+/// context: ties always fall back to the lowest `job` id. That is what
+/// lets the simulator and the service reproduce each other's decisions
+/// exactly.
+pub trait SchedulingPolicy: Send {
+    /// Stable name for tables/CSV.
+    fn name(&self) -> &str;
+
+    /// Index of the best candidate, or `None` when `cands` is empty.
+    fn select(&self, cands: &[SchedCandidate<'_>], ctx: &SchedContext<'_>) -> Option<usize>;
+
+    /// May this candidate enter the running set now? (Quota gate; ranking
+    /// is `select`'s job.) Default: always.
+    fn admit(&self, cand: &SchedCandidate<'_>, ctx: &SchedContext<'_>) -> bool {
+        let _ = (cand, ctx);
+        true
+    }
+
+    /// Should `incoming` (waiting) displace `running` at its next
+    /// frontier boundary? Must be consistent with `select`: whenever this
+    /// returns `true`, `select` over `{incoming, running}` must pick
+    /// `incoming` — otherwise park/resume would livelock. Default: never.
+    fn preempts(
+        &self,
+        incoming: &SchedCandidate<'_>,
+        running: &SchedCandidate<'_>,
+        ctx: &SchedContext<'_>,
+    ) -> bool {
+        let _ = (incoming, running, ctx);
+        false
+    }
+}
+
+/// Admission pick — the quota-gate-then-rank protocol: candidates the
+/// policy refuses to [`admit`](SchedulingPolicy::admit) (tenant quotas)
+/// are removed, then [`select`](SchedulingPolicy::select) ranks the
+/// rest. Returns an index into `cands`.
+///
+/// This free function (and [`pick_preemption_victim`]) *is* the
+/// consultation protocol: the service scheduler and the workload
+/// simulator both call it rather than re-implementing the gate/rank
+/// sequence, so their decisions cannot drift.
+pub fn pick_admission(
+    policy: &dyn SchedulingPolicy,
+    cands: &[SchedCandidate<'_>],
+    ctx: &SchedContext<'_>,
+) -> Option<usize> {
+    let admissible: Vec<usize> = (0..cands.len())
+        .filter(|&i| policy.admit(&cands[i], ctx))
+        .collect();
+    let sub: Vec<SchedCandidate<'_>> = admissible.iter().map(|&i| cands[i]).collect();
+    Some(admissible[policy.select(&sub, ctx)?])
+}
+
+/// Preemption pick: the best admissible `waiting` candidate (same
+/// gate/rank as [`pick_admission`]) is the prospective preemptor; among
+/// the `running` candidates it [`preempts`](SchedulingPolicy::preempts),
+/// the policy-*worst* one (found by dropping the policy's picks one by
+/// one) is the victim. Returns an index into `running`, or `None` when
+/// nothing waits or nothing must yield. Callers pass only healthy
+/// running jobs and only waiting candidates that could actually be
+/// admitted (e.g. not lapsed-deadline queue entries, which expire at
+/// admission instead of running).
+pub fn pick_preemption_victim(
+    policy: &dyn SchedulingPolicy,
+    waiting: &[SchedCandidate<'_>],
+    running: &[SchedCandidate<'_>],
+    ctx: &SchedContext<'_>,
+) -> Option<usize> {
+    let incoming = waiting[pick_admission(policy, waiting, ctx)?];
+    let mut preemptible: Vec<usize> = (0..running.len())
+        .filter(|&i| policy.preempts(&incoming, &running[i], ctx))
+        .collect();
+    if preemptible.is_empty() {
+        return None;
+    }
+    while preemptible.len() > 1 {
+        let cands: Vec<SchedCandidate<'_>> =
+            preemptible.iter().map(|&i| running[i]).collect();
+        let best = policy.select(&cands, ctx).expect("nonempty candidate set");
+        preemptible.remove(best);
+    }
+    Some(preemptible[0])
+}
+
+/// Select helper: minimize a key, break ties by lowest job id.
+fn min_by_key<K: PartialOrd>(
+    cands: &[SchedCandidate<'_>],
+    mut key: impl FnMut(&SchedCandidate<'_>) -> K,
+) -> Option<usize> {
+    let mut best: Option<(usize, K, u64)> = None;
+    for (i, c) in cands.iter().enumerate() {
+        let k = key(c);
+        let better = match &best {
+            None => true,
+            Some((_, bk, bid)) => match k.partial_cmp(bk) {
+                Some(std::cmp::Ordering::Less) => true,
+                Some(std::cmp::Ordering::Equal) => c.job < *bid,
+                _ => false,
+            },
+        };
+        if better {
+            best = Some((i, k, c.job));
+        }
+    }
+    best.map(|(i, _, _)| i)
+}
+
+/// Strict submission order: lowest job id first. Never preempts.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Fifo;
+
+impl SchedulingPolicy for Fifo {
+    fn name(&self) -> &str {
+        "fifo"
+    }
+
+    fn select(&self, cands: &[SchedCandidate<'_>], _ctx: &SchedContext<'_>) -> Option<usize> {
+        min_by_key(cands, |c| c.job)
+    }
+}
+
+/// Higher priority rank first; submission order breaks ties. With
+/// preemption enabled in the scheduler, a waiting candidate displaces any
+/// strictly lower-ranked running job at its next frontier boundary.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StrictPriority;
+
+impl SchedulingPolicy for StrictPriority {
+    fn name(&self) -> &str {
+        "priority"
+    }
+
+    fn select(&self, cands: &[SchedCandidate<'_>], _ctx: &SchedContext<'_>) -> Option<usize> {
+        min_by_key(cands, |c| std::cmp::Reverse(c.priority_rank))
+    }
+
+    fn preempts(
+        &self,
+        incoming: &SchedCandidate<'_>,
+        running: &SchedCandidate<'_>,
+        _ctx: &SchedContext<'_>,
+    ) -> bool {
+        incoming.priority_rank > running.priority_rank
+    }
+}
+
+/// Weighted fair share over consumed tiles: the candidate whose tenant
+/// has the lowest `usage / weight` goes first, so a tenant with weight 3
+/// is entitled to 3× the tiles of a weight-1 tenant before yielding.
+/// An optional per-tenant quota caps how many of one tenant's jobs may
+/// occupy the running set at once. Never preempts — fairness is enforced
+/// continuously at request granularity, which converges without parking.
+#[derive(Debug, Clone)]
+pub struct WeightedFairShare {
+    weights: HashMap<String, f64>,
+    default_weight: f64,
+    /// Max running jobs per tenant (`None` = unlimited).
+    quota: Option<usize>,
+}
+
+impl Default for WeightedFairShare {
+    fn default() -> Self {
+        WeightedFairShare::new(HashMap::new(), 1.0, None)
+    }
+}
+
+impl WeightedFairShare {
+    /// `default_weight` applies to tenants absent from `weights`; weights
+    /// are clamped to a small positive floor so no tenant divides by
+    /// zero. `quota` of `Some(0)` is treated as `Some(1)` — a tenant that
+    /// may never run would deadlock a drain.
+    pub fn new(
+        weights: HashMap<String, f64>,
+        default_weight: f64,
+        quota: Option<usize>,
+    ) -> WeightedFairShare {
+        const FLOOR: f64 = 1e-6;
+        WeightedFairShare {
+            weights: weights
+                .into_iter()
+                .map(|(t, w)| (t, w.max(FLOOR)))
+                .collect(),
+            default_weight: default_weight.max(FLOOR),
+            quota: quota.map(|q| q.max(1)),
+        }
+    }
+
+    pub fn weight(&self, tenant: &str) -> f64 {
+        self.weights
+            .get(tenant)
+            .copied()
+            .unwrap_or(self.default_weight)
+    }
+}
+
+impl SchedulingPolicy for WeightedFairShare {
+    fn name(&self) -> &str {
+        "wfs"
+    }
+
+    fn select(&self, cands: &[SchedCandidate<'_>], ctx: &SchedContext<'_>) -> Option<usize> {
+        min_by_key(cands, |c| ctx.tenant_usage(c.tenant) as f64 / self.weight(c.tenant))
+    }
+
+    fn admit(&self, cand: &SchedCandidate<'_>, ctx: &SchedContext<'_>) -> bool {
+        match self.quota {
+            None => true,
+            Some(q) => ctx.tenant_running(cand.tenant) < q,
+        }
+    }
+}
+
+/// Earliest (absolute) deadline first; deadline-free candidates rank
+/// after every deadlined one, in submission order. With preemption
+/// enabled, a waiting candidate with a strictly earlier deadline parks a
+/// running job at its next frontier boundary — the natural EDF
+/// preemption point in a pyramidal run.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Edf;
+
+impl SchedulingPolicy for Edf {
+    fn name(&self) -> &str {
+        "edf"
+    }
+
+    fn select(&self, cands: &[SchedCandidate<'_>], _ctx: &SchedContext<'_>) -> Option<usize> {
+        min_by_key(cands, |c| c.deadline.unwrap_or(u64::MAX))
+    }
+
+    fn preempts(
+        &self,
+        incoming: &SchedCandidate<'_>,
+        running: &SchedCandidate<'_>,
+        _ctx: &SchedContext<'_>,
+    ) -> bool {
+        match (incoming.deadline, running.deadline) {
+            (Some(i), Some(r)) => i < r,
+            (Some(_), None) => true,
+            _ => false,
+        }
+    }
+}
+
+/// Which policy family a [`PolicySpec`] builds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PolicyKind {
+    Fifo,
+    Priority,
+    WeightedFairShare,
+    Edf,
+}
+
+impl PolicyKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            PolicyKind::Fifo => "fifo",
+            PolicyKind::Priority => "priority",
+            PolicyKind::WeightedFairShare => "wfs",
+            PolicyKind::Edf => "edf",
+        }
+    }
+}
+
+/// Declarative, cloneable policy configuration: what the CLI parses and
+/// `ServiceConfig` carries; [`PolicySpec::build`] turns it into the trait
+/// object both the service scheduler and the simulator drive.
+///
+/// Syntax accepted by [`PolicySpec::parse`]:
+///
+/// ```text
+/// fifo
+/// priority
+/// edf
+/// wfs                       # every tenant weight 1
+/// wfs:tenantA=3,tenantB=1   # per-tenant weights
+/// wfs:tenantA=3;quota=2     # ... plus per-tenant running-jobs quota
+/// ```
+///
+/// `fair` / `fair_share` / `fair-share` are accepted as aliases of `wfs`
+/// (the PR-1 policy name).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PolicySpec {
+    pub kind: PolicyKind,
+    /// Per-tenant weights (WFS only; empty = every tenant weight 1).
+    pub weights: Vec<(String, f64)>,
+    /// Per-tenant running-jobs quota (WFS only).
+    pub quota: Option<usize>,
+}
+
+impl PolicySpec {
+    pub fn fifo() -> PolicySpec {
+        PolicySpec {
+            kind: PolicyKind::Fifo,
+            weights: Vec::new(),
+            quota: None,
+        }
+    }
+
+    pub fn priority() -> PolicySpec {
+        PolicySpec {
+            kind: PolicyKind::Priority,
+            weights: Vec::new(),
+            quota: None,
+        }
+    }
+
+    pub fn edf() -> PolicySpec {
+        PolicySpec {
+            kind: PolicyKind::Edf,
+            weights: Vec::new(),
+            quota: None,
+        }
+    }
+
+    pub fn wfs(weights: impl IntoIterator<Item = (String, f64)>) -> PolicySpec {
+        PolicySpec {
+            kind: PolicyKind::WeightedFairShare,
+            weights: weights.into_iter().collect(),
+            quota: None,
+        }
+    }
+
+    pub fn with_quota(mut self, quota: usize) -> PolicySpec {
+        self.quota = Some(quota);
+        self
+    }
+
+    /// Parse the CLI syntax (see the type docs). `None` on malformed
+    /// input.
+    pub fn parse(s: &str) -> Option<PolicySpec> {
+        let (head, rest) = match s.split_once(':') {
+            Some((h, r)) => (h, Some(r)),
+            None => (s, None),
+        };
+        match head {
+            "fifo" => rest.is_none().then(PolicySpec::fifo),
+            "priority" => rest.is_none().then(PolicySpec::priority),
+            "edf" => rest.is_none().then(PolicySpec::edf),
+            "wfs" | "fair" | "fair_share" | "fair-share" => {
+                let mut spec = PolicySpec::wfs(Vec::new());
+                if let Some(rest) = rest {
+                    for part in rest.split([',', ';']).filter(|p| !p.is_empty()) {
+                        let (k, v) = part.split_once('=')?;
+                        let (k, v) = (k.trim(), v.trim());
+                        if k == "quota" {
+                            spec.quota = Some(v.parse::<usize>().ok().filter(|&q| q > 0)?);
+                        } else {
+                            let w = v.parse::<f64>().ok().filter(|w| *w > 0.0)?;
+                            spec.weights.push((k.to_string(), w));
+                        }
+                    }
+                }
+                Some(spec)
+            }
+            _ => None,
+        }
+    }
+
+    /// Canonical string form (round-trips through [`PolicySpec::parse`]).
+    pub fn as_str(&self) -> String {
+        match self.kind {
+            PolicyKind::WeightedFairShare if !self.weights.is_empty() || self.quota.is_some() => {
+                let mut parts: Vec<String> = self
+                    .weights
+                    .iter()
+                    .map(|(t, w)| format!("{t}={w}"))
+                    .collect();
+                if let Some(q) = self.quota {
+                    parts.push(format!("quota={q}"));
+                }
+                format!("wfs:{}", parts.join(","))
+            }
+            kind => kind.as_str().to_string(),
+        }
+    }
+
+    /// Build the policy object that the service scheduler and the
+    /// simulator both drive.
+    pub fn build(&self) -> Box<dyn SchedulingPolicy> {
+        match self.kind {
+            PolicyKind::Fifo => Box::new(Fifo),
+            PolicyKind::Priority => Box::new(StrictPriority),
+            PolicyKind::Edf => Box::new(Edf),
+            PolicyKind::WeightedFairShare => Box::new(WeightedFairShare::new(
+                self.weights.iter().cloned().collect(),
+                1.0,
+                self.quota,
+            )),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cand(job: u64, rank: u8, tenant: &str) -> SchedCandidate<'_> {
+        SchedCandidate {
+            job,
+            priority_rank: rank,
+            tenant,
+            arrival: 0,
+            deadline: None,
+        }
+    }
+
+    fn ctx<'a>(
+        usage: &'a HashMap<String, u64>,
+        running: &'a HashMap<String, usize>,
+    ) -> SchedContext<'a> {
+        SchedContext {
+            usage,
+            running_per_tenant: running,
+            now: 0,
+        }
+    }
+
+    #[test]
+    fn fifo_picks_lowest_id_and_never_preempts() {
+        let usage = HashMap::new();
+        let running = HashMap::new();
+        let c = ctx(&usage, &running);
+        let cands = [cand(3, 2, "a"), cand(1, 0, "b"), cand(2, 2, "a")];
+        assert_eq!(Fifo.select(&cands, &c), Some(1));
+        assert_eq!(Fifo.select(&[], &c), None);
+        assert!(!Fifo.preempts(&cands[0], &cands[1], &c));
+    }
+
+    #[test]
+    fn priority_ranks_then_ties_by_id_and_preempts_lower() {
+        let usage = HashMap::new();
+        let running = HashMap::new();
+        let c = ctx(&usage, &running);
+        let cands = [cand(1, 1, "a"), cand(2, 2, "a"), cand(3, 2, "a")];
+        assert_eq!(StrictPriority.select(&cands, &c), Some(1));
+        assert!(StrictPriority.preempts(&cands[1], &cands[0], &c));
+        assert!(!StrictPriority.preempts(&cands[1], &cands[2], &c), "equal rank");
+        // Consistency: whenever preempts() is true, select prefers incoming.
+        let pair = [cands[0], cands[1]];
+        assert_eq!(StrictPriority.select(&pair, &c), Some(1));
+    }
+
+    #[test]
+    fn wfs_prefers_lowest_weighted_usage() {
+        let mut usage = HashMap::new();
+        usage.insert("heavy".to_string(), 300u64);
+        usage.insert("light".to_string(), 150u64);
+        let running = HashMap::new();
+        let c = ctx(&usage, &running);
+        let wfs = WeightedFairShare::default();
+        let cands = [cand(1, 1, "heavy"), cand(2, 1, "light")];
+        assert_eq!(wfs.select(&cands, &c), Some(1));
+        // Weight 3 entitles "heavy" to 3× the tiles: 300/3 < 150/1.
+        let wfs = WeightedFairShare::new(
+            [("heavy".to_string(), 3.0)].into_iter().collect(),
+            1.0,
+            None,
+        );
+        assert_eq!(wfs.select(&cands, &c), Some(0));
+        // Unknown tenants fall back to the default weight; ties → FIFO.
+        let empty = HashMap::new();
+        let c0 = ctx(&empty, &running);
+        assert_eq!(wfs.select(&cands, &c0), Some(0));
+    }
+
+    #[test]
+    fn wfs_quota_gates_admission() {
+        let usage = HashMap::new();
+        let mut running = HashMap::new();
+        running.insert("a".to_string(), 2usize);
+        let c = ctx(&usage, &running);
+        let wfs = WeightedFairShare::new(HashMap::new(), 1.0, Some(2));
+        assert!(!wfs.admit(&cand(1, 1, "a"), &c), "tenant at quota");
+        assert!(wfs.admit(&cand(2, 1, "b"), &c), "fresh tenant admissible");
+        // Quota 0 is clamped to 1 so drains cannot deadlock.
+        let wfs = WeightedFairShare::new(HashMap::new(), 1.0, Some(0));
+        let none = HashMap::new();
+        let c = ctx(&usage, &none);
+        assert!(wfs.admit(&cand(1, 1, "a"), &c));
+    }
+
+    #[test]
+    fn edf_ranks_by_deadline_and_preempts_later() {
+        let usage = HashMap::new();
+        let running = HashMap::new();
+        let c = ctx(&usage, &running);
+        let mut early = cand(2, 1, "a");
+        early.deadline = Some(100);
+        let mut late = cand(1, 1, "a");
+        late.deadline = Some(900);
+        let free = cand(3, 1, "a");
+        assert_eq!(Edf.select(&[late, early, free], &c), Some(1));
+        // Deadline-free candidates rank last, FIFO among themselves.
+        assert_eq!(Edf.select(&[free, cand(4, 1, "a")], &c), Some(0));
+        assert!(Edf.preempts(&early, &late, &c));
+        assert!(Edf.preempts(&early, &free, &c));
+        assert!(!Edf.preempts(&free, &early, &c));
+        assert!(!Edf.preempts(&late, &early, &c));
+    }
+
+    #[test]
+    fn queue_age_saturates() {
+        let c = cand(1, 1, "a");
+        assert_eq!(c.queue_age(5), 5);
+        let mut c = c;
+        c.arrival = 10;
+        assert_eq!(c.queue_age(5), 0);
+    }
+
+    #[test]
+    fn policy_spec_parse_and_roundtrip() {
+        for s in ["fifo", "priority", "edf", "wfs"] {
+            let spec = PolicySpec::parse(s).unwrap();
+            assert_eq!(spec.as_str(), s);
+            assert_eq!(PolicySpec::parse(&spec.as_str()), Some(spec));
+        }
+        let spec = PolicySpec::parse("wfs:tenantA=3,tenantB=1").unwrap();
+        assert_eq!(spec.kind, PolicyKind::WeightedFairShare);
+        assert_eq!(
+            spec.weights,
+            vec![("tenantA".to_string(), 3.0), ("tenantB".to_string(), 1.0)]
+        );
+        assert_eq!(PolicySpec::parse(&spec.as_str()), Some(spec));
+        let spec = PolicySpec::parse("wfs:a=2;quota=1").unwrap();
+        assert_eq!(spec.quota, Some(1));
+        assert_eq!(PolicySpec::parse(&spec.as_str()), Some(spec));
+        // PR-1 aliases.
+        assert_eq!(
+            PolicySpec::parse("fair").unwrap().kind,
+            PolicyKind::WeightedFairShare
+        );
+        assert_eq!(
+            PolicySpec::parse("fair_share").unwrap().kind,
+            PolicyKind::WeightedFairShare
+        );
+        for bad in ["lifo", "wfs:novalue", "wfs:w=0", "wfs:quota=0", "edf:x=1", ""] {
+            assert_eq!(PolicySpec::parse(bad), None, "{bad:?} must not parse");
+        }
+    }
+
+    #[test]
+    fn pick_admission_gates_then_ranks() {
+        let usage = HashMap::new();
+        let mut running = HashMap::new();
+        running.insert("full".to_string(), 1usize);
+        let c = ctx(&usage, &running);
+        let wfs = WeightedFairShare::new(HashMap::new(), 1.0, Some(1));
+        // Candidate 0 would win FIFO-wise but its tenant is at quota.
+        let cands = [cand(1, 1, "full"), cand(2, 1, "free")];
+        assert_eq!(pick_admission(&wfs, &cands, &c), Some(1));
+        // Everyone gated → no pick.
+        let cands = [cand(1, 1, "full")];
+        assert_eq!(pick_admission(&wfs, &cands, &c), None);
+        assert_eq!(pick_admission(&wfs, &[], &c), None);
+    }
+
+    #[test]
+    fn pick_preemption_victim_names_the_policy_worst() {
+        let usage = HashMap::new();
+        let running_m = HashMap::new();
+        let c = ctx(&usage, &running_m);
+        let waiting = [cand(9, 2, "a")];
+        // Two outranked running jobs: the *worse* one (lower rank; id
+        // tiebreak) must be the victim, not the first preemptible found.
+        let running = [cand(1, 1, "a"), cand(2, 0, "a"), cand(3, 2, "a")];
+        assert_eq!(
+            pick_preemption_victim(&StrictPriority, &waiting, &running, &c),
+            Some(1),
+            "rank-0 job is the policy-worst victim"
+        );
+        // Equal ranks everywhere → nothing must yield.
+        let peers = [cand(1, 2, "a"), cand(2, 2, "a")];
+        assert_eq!(
+            pick_preemption_victim(&StrictPriority, &waiting, &peers, &c),
+            None
+        );
+        // No waiting candidates → no preemption.
+        assert_eq!(
+            pick_preemption_victim(&StrictPriority, &[], &running, &c),
+            None
+        );
+    }
+
+    #[test]
+    fn built_policies_report_names() {
+        assert_eq!(PolicySpec::fifo().build().name(), "fifo");
+        assert_eq!(PolicySpec::priority().build().name(), "priority");
+        assert_eq!(PolicySpec::edf().build().name(), "edf");
+        assert_eq!(PolicySpec::wfs(Vec::new()).build().name(), "wfs");
+    }
+}

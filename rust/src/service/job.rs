@@ -15,9 +15,10 @@ use crate::synth::slide_gen::SlideSpec;
 /// Service-assigned job identifier (monotonic per service instance).
 pub type JobId = u64;
 
-/// Scheduling priority: higher runs first under [`Policy::Priority`].
-///
-/// [`Policy::Priority`]: crate::service::scheduler::Policy::Priority
+/// Scheduling priority: higher runs first under the
+/// [`StrictPriority`](crate::sched::StrictPriority) policy, which (with
+/// preemption enabled) also parks lower-priority running jobs at their
+/// next frontier boundary.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Priority {
     Low,
@@ -98,7 +99,10 @@ pub struct JobSpec {
     pub tenant: String,
     /// Maximum time the job may wait in the admission queue; expired jobs
     /// are dropped at admission instead of running late (`None` = wait
-    /// forever).
+    /// forever). Under the [`Edf`](crate::sched::Edf) policy the absolute
+    /// deadline (submission + this duration) also ranks the job: earliest
+    /// deadline dispatches first and, with preemption enabled, parks
+    /// later-deadline running jobs at their next frontier boundary.
     pub deadline: Option<Duration>,
 }
 
@@ -175,6 +179,9 @@ pub struct JobResult {
     /// Tiles analyzed (0 for queue-cancelled/expired jobs; the partial
     /// tree's count for mid-run cancellations).
     pub tiles: usize,
+    /// How many times the scheduler parked this job at a frontier
+    /// boundary in favor of another (and later resumed it).
+    pub preemptions: usize,
 }
 
 impl JobResult {
@@ -235,6 +242,7 @@ mod tests {
             queue_wait: Duration::from_millis(200),
             run_time: Duration::from_millis(800),
             tiles: 400,
+            preemptions: 0,
         };
         assert_eq!(r.latency(), Duration::from_secs(1));
         assert!((r.tiles_per_sec() - 500.0).abs() < 1e-9);

@@ -1,14 +1,37 @@
-//! Service throughput metrics: per-job latency breakdowns and aggregate
-//! tiles/sec, rendered through the same harness table/CSV machinery as the
-//! paper experiments so `pyramidai serve` output lines up with the report
-//! tables.
+//! Service throughput metrics: per-job latency breakdowns, per-tenant
+//! queue-wait/turnaround percentiles and preemption counts, and aggregate
+//! tiles/sec — rendered through the same harness table/CSV machinery as
+//! the paper experiments so `pyramidai serve` output lines up with the
+//! report tables.
 
+use std::collections::BTreeMap;
 use std::time::Duration;
 
 use crate::harness::{print_table, CsvOut};
 use crate::util::stats::{fmt_duration, percentile};
 
 use super::job::{JobResult, JobState};
+
+/// Per-tenant QoS view: what one tenant experienced during the run.
+/// Percentiles are over the tenant's *completed* jobs; counts cover every
+/// terminal state.
+#[derive(Debug, Clone, Default)]
+pub struct TenantMetrics {
+    pub completed: usize,
+    pub cancelled: usize,
+    pub expired: usize,
+    pub failed: usize,
+    /// Tiles analyzed by the tenant's completed jobs.
+    pub tiles: usize,
+    /// Frontier-boundary preemptions suffered across all of the tenant's
+    /// jobs (including ones later cancelled).
+    pub preemptions: usize,
+    pub queue_wait_p50: Duration,
+    pub queue_wait_p95: Duration,
+    /// Turnaround = queue wait + run time (end-to-end latency).
+    pub turnaround_p50: Duration,
+    pub turnaround_p95: Duration,
+}
 
 /// Aggregate view over one service run.
 #[derive(Debug, Clone)]
@@ -28,6 +51,10 @@ pub struct ServiceMetrics {
     pub latency_p95: Duration,
     /// Mean queue wait over completed jobs.
     pub queue_wait_mean: Duration,
+    /// Total frontier-boundary preemptions across all jobs.
+    pub preemptions: usize,
+    /// Per-tenant QoS breakdown (sorted by tenant name).
+    pub per_tenant: BTreeMap<String, TenantMetrics>,
 }
 
 impl ServiceMetrics {
@@ -37,19 +64,45 @@ impl ServiceMetrics {
         let mut expired = 0;
         let mut failed = 0;
         let mut tiles = 0;
+        let mut preemptions = 0;
         let mut latencies = Vec::new();
         let mut waits = Vec::new();
+        let mut tenant_waits: BTreeMap<&str, Vec<f64>> = BTreeMap::new();
+        let mut tenant_turnarounds: BTreeMap<&str, Vec<f64>> = BTreeMap::new();
+        let mut per_tenant: BTreeMap<String, TenantMetrics> = BTreeMap::new();
         for r in results {
+            let t = per_tenant.entry(r.tenant.clone()).or_default();
+            t.preemptions += r.preemptions;
+            preemptions += r.preemptions;
             match r.state {
                 JobState::Completed => {
                     completed += 1;
                     tiles += r.tiles;
                     latencies.push(r.latency().as_secs_f64());
                     waits.push(r.queue_wait.as_secs_f64());
+                    t.completed += 1;
+                    t.tiles += r.tiles;
+                    tenant_waits
+                        .entry(&r.tenant)
+                        .or_default()
+                        .push(r.queue_wait.as_secs_f64());
+                    tenant_turnarounds
+                        .entry(&r.tenant)
+                        .or_default()
+                        .push(r.latency().as_secs_f64());
                 }
-                JobState::Cancelled => cancelled += 1,
-                JobState::Expired => expired += 1,
-                JobState::Failed(_) => failed += 1,
+                JobState::Cancelled => {
+                    cancelled += 1;
+                    t.cancelled += 1;
+                }
+                JobState::Expired => {
+                    expired += 1;
+                    t.expired += 1;
+                }
+                JobState::Failed(_) => {
+                    failed += 1;
+                    t.failed += 1;
+                }
             }
         }
         let mean = |xs: &[f64]| {
@@ -60,6 +113,15 @@ impl ServiceMetrics {
             }
         };
         let pct = |xs: &[f64], p: f64| if xs.is_empty() { 0.0 } else { percentile(xs, p) };
+        for (tenant, t) in per_tenant.iter_mut() {
+            let empty = Vec::new();
+            let waits = tenant_waits.get(tenant.as_str()).unwrap_or(&empty);
+            let turns = tenant_turnarounds.get(tenant.as_str()).unwrap_or(&empty);
+            t.queue_wait_p50 = Duration::from_secs_f64(pct(waits, 50.0));
+            t.queue_wait_p95 = Duration::from_secs_f64(pct(waits, 95.0));
+            t.turnaround_p50 = Duration::from_secs_f64(pct(turns, 50.0));
+            t.turnaround_p95 = Duration::from_secs_f64(pct(turns, 95.0));
+        }
         ServiceMetrics {
             completed,
             cancelled,
@@ -71,6 +133,8 @@ impl ServiceMetrics {
             latency_p50: Duration::from_secs_f64(pct(&latencies, 50.0)),
             latency_p95: Duration::from_secs_f64(pct(&latencies, 95.0)),
             queue_wait_mean: Duration::from_secs_f64(mean(&waits)),
+            preemptions,
+            per_tenant,
         }
     }
 
@@ -95,7 +159,8 @@ impl ServiceMetrics {
     }
 }
 
-/// Print the per-job table (sorted by job id) and the aggregate summary.
+/// Print the per-job table (sorted by job id), the per-tenant QoS table
+/// and the aggregate summary.
 pub fn print_report(results: &[JobResult], metrics: &ServiceMetrics) {
     let mut by_id: Vec<&JobResult> = results.iter().collect();
     by_id.sort_by_key(|r| r.id);
@@ -111,6 +176,7 @@ pub fn print_report(results: &[JobResult], metrics: &ServiceMetrics) {
                 r.tiles.to_string(),
                 fmt_duration(r.queue_wait),
                 fmt_duration(r.run_time),
+                r.preemptions.to_string(),
                 format!("{:.0}", r.tiles_per_sec()),
             ]
         })
@@ -118,10 +184,37 @@ pub fn print_report(results: &[JobResult], metrics: &ServiceMetrics) {
     print_table(
         "service jobs",
         &[
-            "job", "slide", "tenant", "prio", "state", "tiles", "queue", "run", "tiles/s",
+            "job", "slide", "tenant", "prio", "state", "tiles", "queue", "run", "preempt",
+            "tiles/s",
         ],
         &rows,
     );
+    if !metrics.per_tenant.is_empty() {
+        let rows: Vec<Vec<String>> = metrics
+            .per_tenant
+            .iter()
+            .map(|(tenant, t)| {
+                vec![
+                    tenant.clone(),
+                    t.completed.to_string(),
+                    t.tiles.to_string(),
+                    fmt_duration(t.queue_wait_p50),
+                    fmt_duration(t.queue_wait_p95),
+                    fmt_duration(t.turnaround_p50),
+                    fmt_duration(t.turnaround_p95),
+                    t.preemptions.to_string(),
+                ]
+            })
+            .collect();
+        print_table(
+            "per-tenant QoS",
+            &[
+                "tenant", "done", "tiles", "wait p50", "wait p95", "turn p50", "turn p95",
+                "preempt",
+            ],
+            &rows,
+        );
+    }
     print_table(
         "service throughput",
         &["metric", "value"],
@@ -150,6 +243,7 @@ pub fn print_report(results: &[JobResult], metrics: &ServiceMetrics) {
                 "queue wait mean".into(),
                 fmt_duration(metrics.queue_wait_mean),
             ],
+            vec!["preemptions".into(), metrics.preemptions.to_string()],
         ],
     );
 }
@@ -160,7 +254,7 @@ pub fn write_csv(results: &[JobResult], name: &str) -> std::io::Result<std::path
         name,
         &[
             "job", "slide", "tenant", "priority", "state", "tiles", "queue_wait_s", "run_s",
-            "tiles_per_sec",
+            "preemptions", "tiles_per_sec",
         ],
     )?;
     let mut by_id: Vec<&JobResult> = results.iter().collect();
@@ -175,6 +269,7 @@ pub fn write_csv(results: &[JobResult], name: &str) -> std::io::Result<std::path
             r.tiles.to_string(),
             format!("{:.6}", r.queue_wait.as_secs_f64()),
             format!("{:.6}", r.run_time.as_secs_f64()),
+            r.preemptions.to_string(),
             format!("{:.1}", r.tiles_per_sec()),
         ])?;
     }
@@ -197,6 +292,7 @@ mod tests {
             queue_wait: Duration::from_millis(wait_ms),
             run_time: Duration::from_millis(run_ms),
             tiles,
+            preemptions: 0,
         }
     }
 
@@ -220,6 +316,32 @@ mod tests {
         // latencies: 0.5s and 0.6s → mean 0.55, p50 0.55
         assert!((m.latency_mean.as_secs_f64() - 0.55).abs() < 1e-9);
         assert!((m.latency_p50.as_secs_f64() - 0.55).abs() < 1e-9);
+    }
+
+    #[test]
+    fn per_tenant_breakdown_separates_tenants_and_counts_preemptions() {
+        let mut a = result(1, JobState::Completed, 100, 100, 400);
+        a.tenant = "lab_a".into();
+        a.preemptions = 2;
+        let mut b = result(2, JobState::Completed, 50, 300, 700);
+        b.tenant = "lab_b".into();
+        let mut c = result(3, JobState::Cancelled, 0, 10, 0);
+        c.tenant = "lab_a".into();
+        c.preemptions = 1;
+        let m = ServiceMetrics::from_results(&[a, b, c], Duration::from_secs(1));
+        assert_eq!(m.preemptions, 3);
+        assert_eq!(m.per_tenant.len(), 2);
+        let ta = &m.per_tenant["lab_a"];
+        assert_eq!(ta.completed, 1);
+        assert_eq!(ta.cancelled, 1);
+        assert_eq!(ta.tiles, 100);
+        assert_eq!(ta.preemptions, 3, "cancelled job's preemptions counted");
+        assert!((ta.queue_wait_p50.as_secs_f64() - 0.1).abs() < 1e-9);
+        assert!((ta.turnaround_p95.as_secs_f64() - 0.5).abs() < 1e-9);
+        let tb = &m.per_tenant["lab_b"];
+        assert_eq!(tb.completed, 1);
+        assert_eq!(tb.preemptions, 0);
+        assert!((tb.turnaround_p50.as_secs_f64() - 1.0).abs() < 1e-9);
     }
 
     #[test]

@@ -9,13 +9,18 @@
 //! * [`job`] — job descriptors (live spec or predcache replay, thresholds,
 //!   priority, tenant, deadline) and terminal results.
 //! * [`queue`] — bounded admission queue with backpressure + cancellation.
-//! * [`scheduler`] — FIFO / priority / fair-share policies over the
-//!   frontier requests of every running job. Each job is a
-//!   [`PyramidRun`] state machine stepped directly by the scheduler, so
-//!   ExecTrees are identical to standalone runs regardless of
-//!   interleaving, jobs can be cancelled mid-run at frontier boundaries,
-//!   and same-level requests from different jobs coalesce into one
-//!   analyzer dispatch.
+//! * [`scheduler`] — the event loop over the shared scheduling-policy
+//!   core ([`crate::sched`]): FIFO / strict-priority / weighted-fair-share
+//!   / EDF policies rank the frontier requests of every running job, gate
+//!   admission (per-tenant quotas) and — with [`ServiceConfig::preempt`]
+//!   — park running jobs at frontier boundaries in favor of waiting ones,
+//!   resuming them later. Each job is a [`PyramidRun`] state machine
+//!   stepped directly by the scheduler, so ExecTrees are identical to
+//!   standalone runs regardless of interleaving, preemption or
+//!   cancellation, and same-level requests from different jobs coalesce
+//!   into one analyzer dispatch. The distributed simulator drives the
+//!   *same* policy objects ([`crate::sim::engine::simulate_workload`]),
+//!   so simulator conclusions transfer to the service structurally.
 //! * [`pool`] — the shared analyzer pool over [`crate::util::threadpool`],
 //!   including the coalesced multi-job dispatch path.
 //! * [`metrics`] — per-job latency / tiles-per-second and aggregate
@@ -65,10 +70,10 @@ use pool::AnalyzerPool;
 use queue::AdmissionQueue;
 use scheduler::{unpack_key, Event, Scheduler, SchedulerConfig};
 
+pub use crate::sched::{PolicyKind, PolicySpec};
 pub use job::{JobId, JobResult, JobSource, JobSpec, JobState, Priority};
-pub use metrics::ServiceMetrics;
+pub use metrics::{ServiceMetrics, TenantMetrics};
 pub use queue::SubmitError;
-pub use scheduler::Policy;
 
 /// Where live jobs execute.
 #[derive(Debug, Clone)]
@@ -92,10 +97,17 @@ pub struct ServiceConfig {
     pub max_in_flight: usize,
     /// Analysis chunk size: request granularity and pool task size.
     pub batch: usize,
-    pub policy: Policy,
+    /// Scheduling-policy configuration; built into the shared
+    /// [`crate::sched::SchedulingPolicy`] object the scheduler consults
+    /// for admission, dispatch order and preemption.
+    pub policy: PolicySpec,
     /// Merge same-level frontier requests from different jobs into one
     /// pool dispatch (amortizes per-dispatch overhead).
     pub coalesce: bool,
+    /// Let the policy park running jobs at level-frontier boundaries in
+    /// favor of waiting ones (strict-priority and EDF preempt; FIFO and
+    /// weighted fair share never do).
+    pub preempt: bool,
     /// Execution substrate for live jobs.
     pub exec: ExecMode,
 }
@@ -107,8 +119,9 @@ impl Default for ServiceConfig {
             queue_capacity: 64,
             max_in_flight: 4,
             batch: 16,
-            policy: Policy::Fifo,
+            policy: PolicySpec::fifo(),
             coalesce: true,
+            preempt: false,
             exec: ExecMode::Pool,
         }
     }
@@ -187,11 +200,12 @@ impl AnalysisService {
 
         let sched = Scheduler::new(
             SchedulerConfig {
-                policy: cfg.policy,
                 max_in_flight: cfg.max_in_flight,
                 batch: cfg.batch,
                 coalesce: cfg.coalesce,
+                preempt: cfg.preempt,
             },
+            cfg.policy.build(),
             Arc::clone(&queue),
             Arc::clone(&pool),
             cluster.clone(),
@@ -227,8 +241,9 @@ impl AnalysisService {
     }
 
     /// Cancel a job. A still-queued job is removed outright; a running
-    /// job is preempted at its next level-frontier boundary and finalizes
-    /// as `Cancelled` with the partial tree of every completed level.
+    /// job is stopped at its next level-frontier boundary (a parked one
+    /// immediately — it holds no in-flight work) and finalizes as
+    /// `Cancelled` with the partial tree of every completed level.
     /// Returns `true` when a cancellation was accepted, `false` for
     /// unknown/finished jobs. (A job finishing concurrently may still
     /// complete — the terminal record is authoritative.)

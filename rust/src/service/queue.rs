@@ -119,6 +119,18 @@ impl AdmissionQueue {
         inner.entries.remove(idx)
     }
 
+    /// Read-only view of the queued entries, under the queue lock. The
+    /// scheduler's preemption check uses this to rank waiting candidates
+    /// without popping anything.
+    pub fn peek_with<F, T>(&self, f: F) -> T
+    where
+        F: FnOnce(&[QueuedJob]) -> T,
+    {
+        let mut inner = self.inner.lock().unwrap();
+        inner.entries.make_contiguous();
+        f(inner.entries.as_slices().0)
+    }
+
     pub fn len(&self) -> usize {
         self.inner.lock().unwrap().entries.len()
     }

@@ -1,15 +1,34 @@
 //! Offline distributed-execution simulator (§5.1).
 //!
-//! Replays a recorded pyramidal execution tree under a worker count, an
-//! initial distribution and a load-balancing policy, and reports the
-//! per-worker tile loads. As in the paper, analysis-block time dominates
-//! and is level-independent (Table 3), so *the number of tiles analyzed by
-//! the busiest worker* is the makespan proxy, and message latency is
-//! neglected.
+//! Two simulators live here:
+//!
+//! * [`simulate`] — the paper's single-tree sweep: replays one recorded
+//!   pyramidal execution tree under a worker count, an initial
+//!   distribution and a tile-granular load-balancing policy
+//!   ([`Policy`]), reporting per-worker tile loads (Fig 6). As in the
+//!   paper, analysis-block time dominates and is level-independent
+//!   (Table 3), so *the number of tiles analyzed by the busiest worker*
+//!   is the makespan proxy, and message latency is neglected.
+//! * [`simulate_workload`] — the multi-job scheduling simulator: a
+//!   stream of jobs (tenants, priorities, arrivals, deadlines) dispatched
+//!   over virtual workers by a [`SchedulingPolicy`] object — the *same*
+//!   trait objects the multi-slide service scheduler drives
+//!   ([`crate::service::scheduler`]), consulted at the same three points
+//!   (admission, dispatch order, preemption). A policy conclusion drawn
+//!   here is the same code path the real service executes, which is what
+//!   makes the paper's "simulator conclusions transfer to the real
+//!   cluster" claim structural. The `Distribution` strategies remain the
+//!   initial-placement story; policies govern steady state.
+//!
+//! [`SchedulingPolicy`]: crate::sched::SchedulingPolicy
 
 use std::collections::{HashMap, VecDeque};
 
-use crate::pyramid::tree::ExecTree;
+use crate::pyramid::tree::{ExecTree, Thresholds};
+use crate::pyramid::PyramidRun;
+use crate::sched::{
+    pick_admission, pick_preemption_victim, SchedCandidate, SchedContext, SchedulingPolicy,
+};
 use crate::slide::tile::TileId;
 use crate::util::prng::Pcg32;
 
@@ -256,12 +275,470 @@ fn sim_steal(
     }
 }
 
+/// One job of a simulated multi-tenant workload: a recorded execution
+/// tree re-driven as a [`PyramidRun`] (probabilities come from the tree,
+/// zoom decisions from `thresholds` — the pair that produced the
+/// recording), plus the scheduling attributes a policy ranks on. All
+/// times are virtual ticks: one tile analysis = one tick on one worker.
+#[derive(Debug, Clone)]
+pub struct SimJobSpec {
+    pub tenant: String,
+    /// Numeric priority (higher = more urgent), as
+    /// [`crate::service::Priority::rank`] produces.
+    pub priority_rank: u8,
+    /// Tick at which the job enters the admission queue.
+    pub arrival: u64,
+    /// Absolute deadline tick (EDF input); `None` = none.
+    pub deadline: Option<u64>,
+    pub tree: ExecTree,
+    pub thresholds: Thresholds,
+}
+
+/// Simulator counterpart of the service's scheduler knobs.
+#[derive(Debug, Clone)]
+pub struct WorkloadConfig {
+    /// Virtual workers (one tile = one tick each).
+    pub workers: usize,
+    /// Running-set size (jobs in flight at once).
+    pub max_in_flight: usize,
+    /// Frontier request granularity (0 = whole frontier per request).
+    pub chunk: usize,
+    /// Allow the policy to park running jobs at frontier boundaries.
+    pub preempt: bool,
+}
+
+impl Default for WorkloadConfig {
+    fn default() -> WorkloadConfig {
+        WorkloadConfig {
+            workers: 4,
+            max_in_flight: 4,
+            chunk: 16,
+            preempt: false,
+        }
+    }
+}
+
+/// Terminal record of one simulated job.
+#[derive(Debug, Clone)]
+pub struct SimJobOutcome {
+    /// Tick the job left the queue for the running set (the expiry tick
+    /// for expired jobs, which never ran).
+    pub admitted_at: u64,
+    /// Tick its last chunk completed (the expiry tick for expired jobs).
+    pub completed_at: u64,
+    pub tiles: usize,
+    /// Frontier-boundary preemptions suffered (actual suspensions).
+    pub preemptions: usize,
+    /// The deadline lapsed while the job waited in queue; it was dropped
+    /// at admission without running — the same `Expired` semantics the
+    /// service applies. `tree` is empty for such jobs.
+    pub expired: bool,
+    /// The rebuilt execution tree — byte-identical to `SimJobSpec::tree`
+    /// no matter how the policy interleaved, parked or resumed the job
+    /// (empty for expired jobs).
+    pub tree: ExecTree,
+}
+
+/// Outcome of one simulated workload.
+#[derive(Debug, Clone)]
+pub struct WorkloadResult {
+    /// Per-job outcomes, indexed like the input slice.
+    pub outcomes: Vec<SimJobOutcome>,
+    /// Job indices in completion order — the scheduling fingerprint the
+    /// service reproduces on the same workload. Expired jobs never
+    /// complete and are not listed.
+    pub completion_order: Vec<usize>,
+    pub per_worker: Vec<usize>,
+    /// Tick the last chunk completed.
+    pub makespan: u64,
+    pub preemptions: usize,
+}
+
+/// Internal per-job state of the workload simulator.
+struct SimJob {
+    /// Service-style 1-based id (deterministic FIFO tiebreak, matching
+    /// the admission queue's id assignment).
+    id: u64,
+    probs: HashMap<TileId, f32>,
+    run: Option<PyramidRun>,
+    admitted_at: u64,
+    tiles: usize,
+    preemptions: usize,
+    /// In-flight chunk count (the service's `dispatched`).
+    dispatched: usize,
+    parking: bool,
+    state: SimState,
+}
+
+#[derive(PartialEq)]
+enum SimState {
+    NotArrived,
+    Waiting,
+    Running,
+    Parked,
+    Done,
+}
+
+/// A dispatched chunk travelling through virtual time.
+struct InFlightChunk {
+    finish: u64,
+    /// Dispatch sequence number: deterministic tiebreak for chunks
+    /// finishing at the same tick.
+    seq: u64,
+    job: usize,
+    req: crate::pyramid::RequestId,
+    probs: Vec<f32>,
+}
+
+/// Simulate a multi-job workload under a shared [`SchedulingPolicy`].
+///
+/// The loop mirrors the service scheduler event loop step for step —
+/// admission over the union of waiting and parked jobs (quota-gated,
+/// policy-ranked), dispatch of pending frontier requests in policy order
+/// with live per-tenant usage accounting, and (with
+/// [`WorkloadConfig::preempt`]) parking the policy-worst preemptible
+/// running job at its next frontier boundary. Chunks land on the
+/// least-loaded virtual worker and take one tick per tile; message
+/// latency is neglected (§5.1). Fully deterministic: same workload +
+/// same policy ⇒ same trace.
+pub fn simulate_workload(
+    jobs: &[SimJobSpec],
+    policy: &dyn SchedulingPolicy,
+    cfg: &WorkloadConfig,
+) -> WorkloadResult {
+    assert!(cfg.workers >= 1, "at least one virtual worker");
+    let slots = cfg.max_in_flight.max(1);
+    let mut sim: Vec<SimJob> = jobs
+        .iter()
+        .enumerate()
+        .map(|(i, j)| SimJob {
+            id: i as u64 + 1,
+            probs: zoom_probs(&j.tree),
+            run: None,
+            admitted_at: 0,
+            tiles: 0,
+            preemptions: 0,
+            dispatched: 0,
+            parking: false,
+            state: SimState::NotArrived,
+        })
+        .collect();
+    let mut usage: HashMap<String, u64> = HashMap::new();
+    let mut worker_free = vec![0u64; cfg.workers];
+    let mut per_worker = vec![0usize; cfg.workers];
+    let mut in_flight: Vec<InFlightChunk> = Vec::new();
+    let mut seq = 0u64;
+    let mut now = 0u64;
+    let mut completion_order = Vec::new();
+    let mut outcomes: Vec<Option<SimJobOutcome>> = jobs.iter().map(|_| None).collect();
+    let mut total_preemptions = 0usize;
+    let mut makespan = 0u64;
+
+    let cand_of = |i: usize, sim: &[SimJob]| SchedCandidate {
+        job: sim[i].id,
+        priority_rank: jobs[i].priority_rank,
+        tenant: &jobs[i].tenant,
+        arrival: jobs[i].arrival,
+        deadline: jobs[i].deadline,
+    };
+
+    loop {
+        // Arrivals up to the current tick join the waiting set.
+        for (i, s) in sim.iter_mut().enumerate() {
+            if s.state == SimState::NotArrived && jobs[i].arrival <= now {
+                s.state = SimState::Waiting;
+            }
+        }
+        let running_count =
+            |sim: &[SimJob]| sim.iter().filter(|s| s.state == SimState::Running).count();
+        let tenants_running = |sim: &[SimJob]| {
+            let mut m: HashMap<String, usize> = HashMap::new();
+            for (i, s) in sim.iter().enumerate() {
+                if s.state == SimState::Running {
+                    *m.entry(jobs[i].tenant.clone()).or_insert(0) += 1;
+                }
+            }
+            m
+        };
+        // Admission: waiting and parked jobs compete for free slots.
+        loop {
+            if running_count(&sim) >= slots {
+                break;
+            }
+            let running_per_tenant = tenants_running(&sim);
+            let ctx = SchedContext {
+                usage: &usage,
+                running_per_tenant: &running_per_tenant,
+                now,
+            };
+            let waiting: Vec<usize> = (0..sim.len())
+                .filter(|&i| matches!(sim[i].state, SimState::Waiting | SimState::Parked))
+                .collect();
+            let cands: Vec<SchedCandidate<'_>> =
+                waiting.iter().map(|&i| cand_of(i, &sim)).collect();
+            let Some(sel) = pick_admission(policy, &cands, &ctx) else {
+                break;
+            };
+            let i = waiting[sel];
+            if sim[i].state == SimState::Waiting {
+                // Mirror of the service's admission expiry: a queued job
+                // whose deadline lapsed is dropped here instead of
+                // running late. (Parked jobs already ran; no expiry.)
+                if jobs[i].deadline.map_or(false, |d| now > d) {
+                    sim[i].state = SimState::Done;
+                    outcomes[i] = Some(SimJobOutcome {
+                        admitted_at: now,
+                        completed_at: now,
+                        tiles: 0,
+                        preemptions: sim[i].preemptions,
+                        expired: true,
+                        tree: ExecTree::new(
+                            jobs[i].tree.slide_id.clone(),
+                            jobs[i].tree.levels,
+                        ),
+                    });
+                    continue;
+                }
+                sim[i].admitted_at = now;
+                sim[i].run = Some(PyramidRun::new(
+                    jobs[i].tree.slide_id.as_str(),
+                    jobs[i].tree.levels,
+                    jobs[i].tree.initial.clone(),
+                    jobs[i].thresholds.clone(),
+                    cfg.chunk,
+                ));
+            }
+            sim[i].state = SimState::Running;
+            sim[i].parking = false;
+        }
+        // Preemption: the policy-worst preemptible running job parks at
+        // its next frontier boundary (one suspension in flight at a
+        // time, like the service).
+        if cfg.preempt
+            && running_count(&sim) >= slots
+            && !sim.iter().any(|s| s.state == SimState::Running && s.parking)
+        {
+            let running_per_tenant = tenants_running(&sim);
+            let ctx = SchedContext {
+                usage: &usage,
+                running_per_tenant: &running_per_tenant,
+                now,
+            };
+            let waiting: Vec<usize> = (0..sim.len())
+                .filter(|&i| {
+                    // Lapsed-deadline waiters will be dropped at
+                    // admission; they must not park a healthy job first
+                    // (same filter as the service's maybe_preempt).
+                    match sim[i].state {
+                        SimState::Waiting => jobs[i].deadline.map_or(true, |d| now <= d),
+                        SimState::Parked => true,
+                        _ => false,
+                    }
+                })
+                .collect();
+            let waiting_cands: Vec<SchedCandidate<'_>> =
+                waiting.iter().map(|&i| cand_of(i, &sim)).collect();
+            let running_idx: Vec<usize> = (0..sim.len())
+                .filter(|&i| sim[i].state == SimState::Running)
+                .collect();
+            let running_cands: Vec<SchedCandidate<'_>> =
+                running_idx.iter().map(|&i| cand_of(i, &sim)).collect();
+            if let Some(v) =
+                pick_preemption_victim(policy, &waiting_cands, &running_cands, &ctx)
+            {
+                // Counted at the actual park transition, not here — a
+                // victim that completes while draining was never really
+                // suspended.
+                sim[running_idx[v]].parking = true;
+            }
+        }
+        // Pump + dispatch: drain every available request of every
+        // healthy running job, in policy order, with live usage
+        // accounting — chunks land on the least-loaded virtual worker.
+        let mut pending: Vec<(usize, crate::pyramid::FrontierRequest)> = Vec::new();
+        for i in 0..sim.len() {
+            if sim[i].state != SimState::Running || sim[i].parking {
+                continue;
+            }
+            let run = sim[i].run.as_mut().expect("running implies run");
+            while let Some(req) = run.next_request() {
+                pending.push((i, req));
+            }
+        }
+        {
+            let running_per_tenant = tenants_running(&sim);
+            while !pending.is_empty() {
+                let ctx = SchedContext {
+                    usage: &usage,
+                    running_per_tenant: &running_per_tenant,
+                    now,
+                };
+                let cands: Vec<SchedCandidate<'_>> =
+                    pending.iter().map(|&(i, _)| cand_of(i, &sim)).collect();
+                let sel = policy.select(&cands, &ctx).expect("nonempty pending");
+                let (i, req) = pending.remove(sel);
+                sim[i].tiles += req.tiles.len();
+                sim[i].dispatched += 1;
+                *usage.entry(jobs[i].tenant.clone()).or_default() += req.tiles.len() as u64;
+                let w = (0..cfg.workers)
+                    .min_by_key(|&w| (worker_free[w], w))
+                    .expect("workers >= 1");
+                let start = worker_free[w].max(now);
+                let finish = start + req.tiles.len() as u64;
+                worker_free[w] = finish;
+                per_worker[w] += req.tiles.len();
+                let probs: Vec<f32> = req
+                    .tiles
+                    .iter()
+                    .map(|t| {
+                        *sim[i]
+                            .probs
+                            .get(t)
+                            .unwrap_or_else(|| panic!("tile {t} absent from recorded tree"))
+                    })
+                    .collect();
+                in_flight.push(InFlightChunk {
+                    finish,
+                    seq,
+                    job: i,
+                    req: req.id,
+                    probs,
+                });
+                seq += 1;
+            }
+        }
+        // A job admitted with an empty initial set is complete without
+        // ever dispatching (mirrors the service's immediate finalize).
+        let instant_done: Vec<usize> = (0..sim.len())
+            .filter(|&i| {
+                sim[i].state == SimState::Running
+                    && sim[i].dispatched == 0
+                    && sim[i].run.as_ref().is_some_and(|r| r.is_complete())
+            })
+            .collect();
+        let mut progressed = !instant_done.is_empty();
+        for i in instant_done {
+            finish_job(i, now, &mut sim, &mut outcomes, &mut completion_order);
+        }
+        // Mirror of the service's settle(): a parking job with nothing in
+        // flight parks right away (it never got to issue this frontier).
+        for s in sim.iter_mut() {
+            if s.state == SimState::Running && s.parking && s.dispatched == 0 {
+                s.state = SimState::Parked;
+                s.parking = false;
+                s.preemptions += 1;
+                total_preemptions += 1;
+                progressed = true;
+            }
+        }
+        if !progressed {
+            // Advance virtual time to the next event — the earlier of the
+            // next chunk completion and the next arrival (an arriving job
+            // must be admitted at its arrival tick, as in the service).
+            let next_completion = in_flight
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, c)| (c.finish, c.seq))
+                .map(|(pos, _)| pos);
+            let next_arrival = (0..sim.len())
+                .filter(|&i| sim[i].state == SimState::NotArrived)
+                .map(|i| jobs[i].arrival)
+                .min();
+            match (next_completion, next_arrival) {
+                (Some(pos), Some(arr)) if arr < in_flight[pos].finish => {
+                    now = now.max(arr);
+                    progressed = true;
+                }
+                (Some(pos), _) => {
+                    let chunk = in_flight.remove(pos);
+                    let i = chunk.job;
+                    now = now.max(chunk.finish);
+                    makespan = makespan.max(chunk.finish);
+                    sim[i].dispatched -= 1;
+                    sim[i]
+                        .run
+                        .as_mut()
+                        .expect("in-flight implies run")
+                        .feed(chunk.req, chunk.probs)
+                        .expect("recorded probabilities always fit");
+                    let run_done = sim[i].run.as_ref().is_some_and(|r| r.is_complete());
+                    if run_done && sim[i].dispatched == 0 {
+                        finish_job(i, now, &mut sim, &mut outcomes, &mut completion_order);
+                    } else if sim[i].parking && sim[i].dispatched == 0 && !run_done {
+                        // Suspension point: every issued chunk has been
+                        // fed — the run sits exactly at a level-frontier
+                        // boundary.
+                        sim[i].state = SimState::Parked;
+                        sim[i].parking = false;
+                        sim[i].preemptions += 1;
+                        total_preemptions += 1;
+                    }
+                    progressed = true;
+                }
+                (None, Some(arr)) => {
+                    now = now.max(arr);
+                    progressed = true;
+                }
+                (None, None) => {}
+            }
+        }
+        if !progressed {
+            break; // no running work, no arrivals, nothing in flight
+        }
+        if sim.iter().all(|s| s.state == SimState::Done) {
+            break;
+        }
+    }
+    assert!(
+        sim.iter().all(|s| s.state == SimState::Done),
+        "workload drained every job"
+    );
+    WorkloadResult {
+        outcomes: outcomes.into_iter().map(|o| o.expect("job done")).collect(),
+        completion_order,
+        per_worker,
+        makespan,
+        preemptions: total_preemptions,
+    }
+}
+
+/// Probabilities of every analyzed tile in a recorded tree.
+fn zoom_probs(tree: &ExecTree) -> HashMap<TileId, f32> {
+    let mut m = HashMap::new();
+    for lvl in &tree.nodes {
+        for n in lvl {
+            m.insert(n.tile, n.prob);
+        }
+    }
+    m
+}
+
+fn finish_job(
+    i: usize,
+    now: u64,
+    sim: &mut [SimJob],
+    outcomes: &mut [Option<SimJobOutcome>],
+    completion_order: &mut Vec<usize>,
+) {
+    let s = &mut sim[i];
+    s.state = SimState::Done;
+    let tree = s.run.take().expect("finished job ran").finish();
+    outcomes[i] = Some(SimJobOutcome {
+        admitted_at: s.admitted_at,
+        completed_at: now,
+        tiles: s.tiles,
+        preemptions: s.preemptions,
+        expired: false,
+        tree,
+    });
+    completion_order.push(i);
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::model::oracle::OracleAnalyzer;
     use crate::pyramid::driver::run_pyramidal;
-    use crate::pyramid::tree::Thresholds;
     use crate::slide::pyramid::Slide;
     use crate::synth::slide_gen::{SlideKind, SlideSpec};
     use crate::util::quickcheck::forall_explain;
@@ -397,5 +874,258 @@ mod tests {
         for p in Policy::ALL {
             assert_eq!(Policy::from_str(p.as_str()), Some(p));
         }
+    }
+
+    // ---- multi-job workload simulator (shared scheduling-policy core) ----
+
+    use crate::sched::{Edf, Fifo, SchedulingPolicy, StrictPriority, WeightedFairShare};
+
+    fn workload_job(
+        seed: u64,
+        tenant: &str,
+        rank: u8,
+        arrival: u64,
+        deadline: Option<u64>,
+    ) -> SimJobSpec {
+        SimJobSpec {
+            tenant: tenant.to_string(),
+            priority_rank: rank,
+            arrival,
+            deadline,
+            tree: tree(seed),
+            thresholds: Thresholds::uniform(3, 0.35),
+        }
+    }
+
+    #[test]
+    fn workload_rebuilds_every_tree_under_every_policy() {
+        // Deadlines far beyond any possible makespan: they order EDF
+        // without ever expiring a job (expiry is its own test below).
+        let jobs: Vec<SimJobSpec> = (0..4)
+            .map(|i| {
+                workload_job(
+                    80 + i,
+                    ["a", "b"][i as usize % 2],
+                    (i % 3) as u8,
+                    0,
+                    Some(1_000_000 + i),
+                )
+            })
+            .collect();
+        let total: usize = jobs.iter().map(|j| j.tree.total_analyzed()).sum();
+        let policies: Vec<Box<dyn SchedulingPolicy>> = vec![
+            Box::new(Fifo),
+            Box::new(StrictPriority),
+            Box::new(WeightedFairShare::default()),
+            Box::new(Edf),
+        ];
+        for policy in &policies {
+            for preempt in [false, true] {
+                let cfg = WorkloadConfig {
+                    workers: 3,
+                    max_in_flight: 2,
+                    chunk: 8,
+                    preempt,
+                };
+                let res = simulate_workload(&jobs, policy.as_ref(), &cfg);
+                assert_eq!(res.completion_order.len(), jobs.len());
+                for (i, out) in res.outcomes.iter().enumerate() {
+                    assert_eq!(
+                        out.tree, jobs[i].tree,
+                        "{}/preempt={preempt}: job {i} tree diverged",
+                        policy.name()
+                    );
+                    assert_eq!(out.tiles, jobs[i].tree.total_analyzed());
+                }
+                // Conservation: every analyzed tile landed on some worker.
+                assert_eq!(res.per_worker.iter().sum::<usize>(), total);
+                assert!(res.makespan as usize >= total / cfg.workers);
+            }
+        }
+    }
+
+    #[test]
+    fn workload_is_deterministic() {
+        let jobs: Vec<SimJobSpec> = (0..3)
+            .map(|i| workload_job(85 + i, "t", i as u8, i * 5, None))
+            .collect();
+        let cfg = WorkloadConfig {
+            workers: 2,
+            max_in_flight: 2,
+            chunk: 4,
+            preempt: true,
+        };
+        let a = simulate_workload(&jobs, &StrictPriority, &cfg);
+        let b = simulate_workload(&jobs, &StrictPriority, &cfg);
+        assert_eq!(a.completion_order, b.completion_order);
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.per_worker, b.per_worker);
+        assert_eq!(a.preemptions, b.preemptions);
+    }
+
+    #[test]
+    fn preempted_job_resumes_with_byte_identical_tree() {
+        // A low-priority job is parked at a frontier boundary when a
+        // high-priority job arrives mid-run, then resumed — the final
+        // tree must be byte-identical to the uninterrupted recording
+        // (which run_pyramidal produced), and the high job finishes
+        // first.
+        let low = workload_job(90, "lab", 0, 0, None);
+        let high = workload_job(91, "lab", 2, 10, None);
+        let jobs = vec![low, high];
+        let cfg = WorkloadConfig {
+            workers: 1,
+            max_in_flight: 1,
+            chunk: 8,
+            preempt: true,
+        };
+        let res = simulate_workload(&jobs, &StrictPriority, &cfg);
+        assert!(
+            res.outcomes[0].preemptions >= 1,
+            "low-priority job must be parked at least once"
+        );
+        assert_eq!(
+            res.preemptions,
+            res.outcomes.iter().map(|o| o.preemptions).sum::<usize>()
+        );
+        assert_eq!(
+            res.completion_order.last(),
+            Some(&0),
+            "preempted job finishes after its preemptor: {:?}",
+            res.completion_order
+        );
+        assert_eq!(res.outcomes[0].tree, jobs[0].tree, "suspend/resume changed the tree");
+        assert_eq!(res.outcomes[1].tree, jobs[1].tree);
+        jobs.iter()
+            .for_each(|j| j.tree.check_consistency().unwrap());
+        // Without preemption the high job waits for the low one instead.
+        let cfg = WorkloadConfig {
+            preempt: false,
+            ..cfg
+        };
+        let res = simulate_workload(&jobs, &StrictPriority, &cfg);
+        assert_eq!(res.preemptions, 0);
+        assert_eq!(res.completion_order, vec![0, 1]);
+        assert_eq!(res.outcomes[0].tree, jobs[0].tree);
+    }
+
+    #[test]
+    fn weighted_fair_share_bounds_a_heavy_tenant_where_fifo_does_not() {
+        // Tenant "heavy" floods five jobs; tenant "light" submits one,
+        // last. FIFO serves strictly by submission, so the light tenant
+        // waits out the whole backlog; weighted fair share lets it
+        // through as soon as a slot frees.
+        let mut jobs: Vec<SimJobSpec> = (0..5)
+            .map(|i| workload_job(100 + i, "heavy", 1, 0, None))
+            .collect();
+        jobs.push(workload_job(110, "light", 1, 0, None));
+        let light = jobs.len() - 1;
+        let cfg = WorkloadConfig {
+            workers: 2,
+            max_in_flight: 2,
+            chunk: 16,
+            preempt: false,
+        };
+        let fifo = simulate_workload(&jobs, &Fifo, &cfg);
+        let wfs = simulate_workload(&jobs, &WeightedFairShare::default(), &cfg);
+        let pos = |r: &WorkloadResult| {
+            r.completion_order
+                .iter()
+                .position(|&i| i == light)
+                .expect("light job completed")
+        };
+        assert_eq!(
+            pos(&fifo),
+            jobs.len() - 1,
+            "FIFO starves the light tenant to the very end"
+        );
+        assert!(
+            pos(&wfs) < pos(&fifo),
+            "fair share must beat FIFO for the light tenant ({} vs {})",
+            pos(&wfs),
+            pos(&fifo)
+        );
+        assert!(
+            wfs.outcomes[light].completed_at < fifo.outcomes[light].completed_at,
+            "light tenant turnaround must shrink under WFS"
+        );
+    }
+
+    #[test]
+    fn edf_orders_by_deadline_not_submission() {
+        // Deadlines run opposite to submission order; with one slot the
+        // completion order must follow the deadlines.
+        let jobs: Vec<SimJobSpec> = (0..3)
+            .map(|i| workload_job(120 + i, "t", 1, 0, Some(1_000 * (3 - i))))
+            .collect();
+        let cfg = WorkloadConfig {
+            workers: 1,
+            max_in_flight: 1,
+            chunk: 0,
+            preempt: false,
+        };
+        let res = simulate_workload(&jobs, &Edf, &cfg);
+        assert_eq!(res.completion_order, vec![2, 1, 0]);
+        let fifo = simulate_workload(&jobs, &Fifo, &cfg);
+        assert_eq!(fifo.completion_order, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn lapsed_deadline_jobs_expire_at_admission() {
+        // Job 0 holds the single slot; job 1's absolute deadline lapses
+        // while it waits, so admission drops it (the service's Expired
+        // semantics) instead of running it late; job 2 completes.
+        let jobs = vec![
+            workload_job(140, "t", 1, 0, None),
+            workload_job(141, "t", 1, 0, Some(1)),
+            workload_job(142, "t", 1, 0, None),
+        ];
+        let cfg = WorkloadConfig {
+            workers: 1,
+            max_in_flight: 1,
+            chunk: 0,
+            preempt: false,
+        };
+        let res = simulate_workload(&jobs, &Fifo, &cfg);
+        assert!(res.outcomes[1].expired, "lapsed job must expire");
+        assert_eq!(res.outcomes[1].tiles, 0);
+        assert_eq!(res.outcomes[1].tree.total_analyzed(), 0);
+        assert!(!res.outcomes[0].expired && !res.outcomes[2].expired);
+        assert_eq!(
+            res.completion_order,
+            vec![0, 2],
+            "expired jobs never complete"
+        );
+    }
+
+    #[test]
+    fn wfs_quota_caps_concurrent_jobs_per_tenant() {
+        // Four one-tenant jobs, quota 1, two slots: the second slot must
+        // sit idle rather than exceed the tenant's quota, so jobs run
+        // one after another — makespan ≈ the serial total.
+        let jobs: Vec<SimJobSpec> = (0..3)
+            .map(|i| workload_job(130 + i, "solo", 1, 0, None))
+            .collect();
+        let total: u64 = jobs.iter().map(|j| j.tree.total_analyzed() as u64).sum();
+        let cfg = WorkloadConfig {
+            workers: 4,
+            max_in_flight: 2,
+            chunk: 0,
+            preempt: false,
+        };
+        let quota = WeightedFairShare::new(HashMap::new(), 1.0, Some(1));
+        let res = simulate_workload(&jobs, &quota, &cfg);
+        assert!(
+            res.makespan >= total,
+            "quota 1 must serialize the tenant's jobs ({} < {total})",
+            res.makespan
+        );
+        let free = simulate_workload(&jobs, &WeightedFairShare::default(), &cfg);
+        assert!(
+            free.makespan < res.makespan,
+            "without the quota two jobs overlap ({} vs {})",
+            free.makespan,
+            res.makespan
+        );
     }
 }

@@ -1,7 +1,10 @@
 //! Distributed-execution simulator (§5.1-5.3): initial data distributions
 //! × load-balancing policies over recorded pyramidal execution trees,
-//! plus the virtual-worker [`SimBackend`] that drives the unified
-//! `PyramidRun`/`ExecutionBackend` machinery.
+//! the virtual-worker [`SimBackend`] that drives the unified
+//! `PyramidRun`/`ExecutionBackend` machinery, and the multi-job workload
+//! simulator ([`simulate_workload`]) that drives the *same*
+//! [`crate::sched::SchedulingPolicy`] objects as the multi-slide service
+//! scheduler.
 
 pub mod backend;
 pub mod distribution;
@@ -9,4 +12,7 @@ pub mod engine;
 
 pub use backend::SimBackend;
 pub use distribution::Distribution;
-pub use engine::{simulate, Policy, SimResult};
+pub use engine::{
+    simulate, simulate_workload, Policy, SimJobOutcome, SimJobSpec, SimResult, WorkloadConfig,
+    WorkloadResult,
+};

@@ -12,7 +12,8 @@ use pyramidai::predcache::SlidePredictions;
 use pyramidai::pyramid::driver::run_pyramidal;
 use pyramidai::pyramid::tree::Thresholds;
 use pyramidai::service::{
-    AnalysisService, JobSource, JobSpec, JobState, Policy, Priority, ServiceConfig, SubmitError,
+    AnalysisService, JobSource, JobSpec, JobState, PolicySpec, Priority, ServiceConfig,
+    SubmitError,
 };
 use pyramidai::slide::pyramid::Slide;
 use pyramidai::synth::slide_gen::{SlideKind, SlideSpec};
@@ -59,7 +60,7 @@ fn service_trees_match_standalone_runs_for_every_policy() {
         })
         .collect();
 
-    for policy in [Policy::Fifo, Policy::Priority, Policy::FairShare] {
+    for policy in [PolicySpec::fifo(), PolicySpec::priority(), PolicySpec::wfs(Vec::new())] {
         let svc = AnalysisService::start(
             oracle(),
             ServiceConfig {
@@ -67,7 +68,7 @@ fn service_trees_match_standalone_runs_for_every_policy() {
                 queue_capacity: 16,
                 max_in_flight: 3,
                 batch: 8,
-                policy,
+                policy: policy.clone(),
                 ..ServiceConfig::default()
             },
         );
@@ -128,7 +129,7 @@ fn priority_policy_starts_high_before_low() {
             queue_capacity: 8,
             max_in_flight: 1,
             batch: 8,
-            policy: Policy::Priority,
+            policy: PolicySpec::priority(),
             ..ServiceConfig::default()
         },
     );
@@ -172,7 +173,7 @@ fn fair_share_lets_light_tenant_through() {
             queue_capacity: 16,
             max_in_flight: 1,
             batch: 8,
-            policy: Policy::FairShare,
+            policy: PolicySpec::wfs(Vec::new()),
             ..ServiceConfig::default()
         },
     );
@@ -218,7 +219,7 @@ fn backpressure_rejects_and_cancellation_records() {
             queue_capacity: 2,
             max_in_flight: 1,
             batch: 8,
-            policy: Policy::Fifo,
+            policy: PolicySpec::fifo(),
             ..ServiceConfig::default()
         },
     );
@@ -269,7 +270,7 @@ fn zero_deadline_job_expires_in_queue() {
             queue_capacity: 8,
             max_in_flight: 1,
             batch: 8,
-            policy: Policy::Fifo,
+            policy: PolicySpec::fifo(),
             ..ServiceConfig::default()
         },
     );
@@ -332,7 +333,7 @@ fn mid_run_cancellation_stops_at_a_frontier_boundary() {
             queue_capacity: 4,
             max_in_flight: 1,
             batch: 8,
-            policy: Policy::Fifo,
+            policy: PolicySpec::fifo(),
             ..ServiceConfig::default()
         },
     );
@@ -393,7 +394,7 @@ fn cluster_backend_service_matches_standalone_runs() {
             queue_capacity: 8,
             max_in_flight: 2,
             batch: 8,
-            policy: Policy::Fifo,
+            policy: PolicySpec::fifo(),
             exec: ExecMode::Cluster(ClusterExecConfig {
                 workers: 2,
                 steal: true,
@@ -441,7 +442,7 @@ fn coalescing_toggle_does_not_change_trees() {
                 queue_capacity: 8,
                 max_in_flight: 4,
                 batch: 8,
-                policy: Policy::Fifo,
+                policy: PolicySpec::fifo(),
                 coalesce,
                 ..ServiceConfig::default()
             },
@@ -463,5 +464,123 @@ fn coalescing_toggle_does_not_change_trees() {
                 "coalesce={coalesce}: job {i} diverged"
             );
         }
+    }
+}
+
+#[test]
+fn preemption_parks_and_resumes_with_identical_tree() {
+    // A big low-priority job occupies the single slot; a high-priority
+    // job submitted mid-run must preempt it at a level-frontier boundary
+    // (park), run to completion, and then the low job resumes — and its
+    // final tree must be byte-identical to an uninterrupted standalone
+    // run. This extends the backend-equivalence guarantee to preemption.
+    let sp = SlideSpec::new("svc_preempt", 800, 48, 32, 3, 64, SlideKind::LargeTumor);
+    let thr = thresholds();
+    let slide = Slide::from_spec(sp.clone());
+    let solo = run_pyramidal(&slide, oracle().as_ref(), &thr, 8);
+
+    let svc = AnalysisService::start(
+        slow_oracle(2),
+        ServiceConfig {
+            workers: 2,
+            queue_capacity: 4,
+            max_in_flight: 1,
+            batch: 8,
+            policy: PolicySpec::priority(),
+            preempt: true,
+            ..ServiceConfig::default()
+        },
+    );
+    let low = svc
+        .submit(
+            JobSpec::new(JobSource::Spec(sp), thr.clone()).with_priority(Priority::Low),
+        )
+        .unwrap();
+    // Wait until the low job is running, then give its first frontier a
+    // head start before the preemptor arrives.
+    while svc.queued() > 0 {
+        std::thread::sleep(Duration::from_micros(200));
+    }
+    std::thread::sleep(Duration::from_millis(30));
+    let high = svc
+        .submit(
+            JobSpec::new(JobSource::Spec(spec(801, SlideKind::Negative)), thr)
+                .with_priority(Priority::High),
+        )
+        .unwrap();
+    let report = svc.shutdown();
+    let low_r = report.job(low).expect("low job recorded");
+    let high_r = report.job(high).expect("high job recorded");
+    assert_eq!(low_r.state, JobState::Completed, "parked job must resume and finish");
+    assert_eq!(high_r.state, JobState::Completed);
+    assert!(
+        low_r.preemptions >= 1,
+        "low job must have been parked at least once"
+    );
+    assert!(report.metrics.preemptions >= 1);
+    let tree = low_r.tree.as_ref().expect("tree present");
+    tree.check_consistency().unwrap();
+    assert_eq!(
+        tree.nodes, solo.nodes,
+        "suspend/resume changed the low job's tree"
+    );
+    assert_eq!(low_r.tiles, solo.total_analyzed());
+    // The preemptor overtakes: it completes before the job it parked.
+    let order: Vec<_> = report.results.iter().map(|r| r.id).collect();
+    let pos = |id| order.iter().position(|&x| x == id).unwrap();
+    assert!(
+        pos(high) < pos(low),
+        "preemptor must finish first: order {order:?}"
+    );
+    // Per-tenant metrics surface the preemption.
+    let t = report
+        .metrics
+        .per_tenant
+        .get("default")
+        .expect("default tenant tracked");
+    assert!(t.preemptions >= 1);
+    assert_eq!(t.completed, 2);
+}
+
+#[test]
+fn wfs_quota_caps_concurrent_jobs_of_one_tenant() {
+    // Quota 1 with two slots: the flood tenant's jobs serialize, so the
+    // other tenant's single job never waits behind more than one of
+    // them. (Smoke-level: all jobs must still complete.)
+    let svc = AnalysisService::start(
+        oracle(),
+        ServiceConfig {
+            workers: 2,
+            queue_capacity: 8,
+            max_in_flight: 2,
+            batch: 8,
+            policy: PolicySpec::wfs(Vec::new()).with_quota(1),
+            ..ServiceConfig::default()
+        },
+    );
+    let mut ids = Vec::new();
+    for i in 0..4 {
+        ids.push(
+            svc.submit(
+                JobSpec::new(
+                    JobSource::Spec(spec(810 + i, SlideKind::Negative)),
+                    thresholds(),
+                )
+                .with_tenant("flood"),
+            )
+            .unwrap(),
+        );
+    }
+    ids.push(
+        svc.submit(
+            JobSpec::new(JobSource::Spec(spec(820, SlideKind::Negative)), thresholds())
+                .with_tenant("calm"),
+        )
+        .unwrap(),
+    );
+    let report = svc.shutdown();
+    assert_eq!(report.metrics.completed, ids.len());
+    for id in ids {
+        assert_eq!(report.job(id).unwrap().state, JobState::Completed);
     }
 }
