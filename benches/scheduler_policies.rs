@@ -200,6 +200,7 @@ fn main() {
                 max_in_flight: 2,
                 chunk: 8,
                 preempt: true,
+                failures: vec![],
             },
         );
         sim_rows.push(vec![

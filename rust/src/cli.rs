@@ -11,24 +11,31 @@
 use std::collections::BTreeMap;
 
 #[derive(Debug, Clone)]
+/// Parsed command line: optional subcommand, positionals and flags.
 pub struct Args {
+    /// First non-flag token, e.g. `simulate`.
     pub subcommand: Option<String>,
+    /// Non-flag tokens after the subcommand.
     pub positional: Vec<String>,
     flags: BTreeMap<String, String>,
     consumed: std::cell::RefCell<std::collections::BTreeSet<String>>,
 }
 
 #[derive(Debug, thiserror::Error)]
+/// Argument-parsing failures, reported verbatim to the user.
 pub enum CliError {
     #[error("missing required flag --{0}")]
+    /// A required flag was not provided.
     Missing(String),
     #[error("invalid value for --{flag}: {value:?} ({msg})")]
+    /// A flag's value failed to parse.
     Invalid {
         flag: String,
         value: String,
         msg: String,
     },
     #[error("unknown flags: {0:?}")]
+    /// Flags nobody consumed — almost always typos.
     Unknown(Vec<String>),
 }
 
@@ -63,6 +70,7 @@ impl Args {
         }
     }
 
+    /// Parse the process arguments (skipping argv[0]).
     pub fn from_env() -> Args {
         Args::parse(std::env::args().skip(1))
     }
@@ -77,28 +85,34 @@ impl Args {
         self.flags.get(key).map(|s| s.as_str())
     }
 
+    /// String flag with a default.
     pub fn str_or(&self, key: &str, default: &str) -> String {
         self.get(key).unwrap_or(default).to_string()
     }
 
+    /// String flag that must be present.
     pub fn require(&self, key: &str) -> Result<String, CliError> {
         self.get(key)
             .map(|s| s.to_string())
             .ok_or_else(|| CliError::Missing(key.to_string()))
     }
 
+    /// Boolean flag: `--x`, `--x=true`, `--x 1`, `--x yes`.
     pub fn bool(&self, key: &str) -> bool {
         matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
     }
 
+    /// `usize` flag with a default.
     pub fn usize_or(&self, key: &str, default: usize) -> Result<usize, CliError> {
         self.parse_or(key, default)
     }
 
+    /// `u64` flag with a default.
     pub fn u64_or(&self, key: &str, default: u64) -> Result<u64, CliError> {
         self.parse_or(key, default)
     }
 
+    /// `f64` flag with a default.
     pub fn f64_or(&self, key: &str, default: f64) -> Result<f64, CliError> {
         self.parse_or(key, default)
     }

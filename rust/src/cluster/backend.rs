@@ -1,4 +1,4 @@
-//! Persistent TCP execution cluster behind the unified
+//! Persistent, fault-tolerant TCP execution cluster behind the unified
 //! [`ExecutionBackend`] API.
 //!
 //! Unlike [`super::leader::run_cluster`] — which runs one slide to
@@ -13,6 +13,38 @@
 //! id, so one cluster serves chunks of many slides — the multi-slide
 //! service's distributed mode.
 //!
+//! # Fault tolerance (DESIGN.md §10)
+//!
+//! The paper's "modest computers" are exactly the machines that reboot
+//! mid-run, so the leader assumes nothing about worker lifetime:
+//!
+//! * **Liveness** — a monitor thread probes every registered worker with
+//!   [`Msg::Ping`] every [`ClusterExecConfig::heartbeat`];
+//!   [`ClusterExecConfig::max_missed`] consecutive failed probes (or a
+//!   refused connection — a closed listener) declare the worker dead.
+//! * **Resubmission** — the leader tracks every dealt chunk in a pending
+//!   map (kept accurate under work stealing by [`Msg::ChunkMoved`]
+//!   notifications). A dead worker's pending chunks are re-dealt to
+//!   surviving workers, with the victim appended to the chunk's
+//!   excluded-victim list so a flaky node is never immediately re-handed
+//!   the same work. Duplicate completions from resubmission races are
+//!   deduplicated by the pending map, so the dispatcher sees each key at
+//!   most once.
+//! * **Escalation** — a chunk that has failed on *every* registered
+//!   worker is abandoned and surfaced as [`ExecEvent::Lost`]; the
+//!   dispatcher requeues it into its [`crate::pyramid::PyramidRun`]
+//!   (fresh excluded-victim list) rather than wedging.
+//! * **Rejoin** — new workers (typically external OS processes started
+//!   with `pyramidai worker --connect <addr>`) register mid-run through
+//!   the [`Msg::Hello`]/[`Msg::Welcome`] handshake and immediately become
+//!   resubmission targets; chunks orphaned while no worker was eligible
+//!   are re-dealt on the next monitor tick.
+//!
+//! Because the dispatcher's `PyramidRun` accepts chunked, out-of-order
+//! feeds and its tree depends only on *what* was analyzed, recovery never
+//! changes the resulting `ExecTree` — byte-identical under any failure
+//! schedule (`rust/tests/backend_equivalence.rs`).
+//!
 //! [`FrontierRequest`]: crate::pyramid::FrontierRequest
 
 use std::collections::{HashMap, VecDeque};
@@ -20,28 +52,50 @@ use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use crate::model::Analyzer;
-use crate::pyramid::{Completion, ExecutionBackend, FrontierRequest};
+use crate::pyramid::{Completion, ExecutionBackend, FrontierRequest, RequestId};
 use crate::slide::pyramid::Slide;
 use crate::synth::slide_gen::SlideSpec;
 use crate::util::prng::Pcg32;
 
-use super::leader::send_to;
+use super::leader::{send_to, send_to_deadline};
 use super::proto::{ChunkTask, Msg};
+
+/// Patience for dealing a chunk to a worker believed alive: long enough
+/// for transient congestion, short enough that a just-crashed worker
+/// fails fast and the chunk is orphaned for the monitor to re-deal.
+const DEAL_PATIENCE: Duration = Duration::from_millis(250);
 
 /// Configuration of a persistent execution cluster.
 #[derive(Debug, Clone)]
 pub struct ClusterExecConfig {
-    /// Worker threads (each a "modest computer" with its own TCP
-    /// listener, queue and analyzer handle).
+    /// In-process worker threads (each a "modest computer" with its own
+    /// TCP listener, queue and analyzer handle).
     pub workers: usize,
-    /// Enable chunk stealing between idle workers.
+    /// Enable chunk stealing between idle in-process workers.
     pub steal: bool,
+    /// Seed for victim selection and worker-local randomness.
     pub seed: u64,
+    /// Liveness probe interval (the §10 heartbeat).
+    pub heartbeat: Duration,
+    /// Consecutive failed probes before a worker is declared dead and its
+    /// pending chunks are resubmitted. Clamped to ≥ 1.
+    pub max_missed: u32,
+    /// Also spawn this many workers as *separate OS processes* running
+    /// `<external_program> worker --connect <leader addr>` — the
+    /// multi-process mode where workers really are isolated machines
+    /// (same host; the wire protocol is identical either way).
+    pub external_workers: usize,
+    /// Program to execute for external workers. Empty = the current
+    /// executable (`pyramidai` itself).
+    pub external_program: String,
+    /// Extra CLI flags appended after `worker --connect <addr>` for each
+    /// external worker (e.g. `--model oracle --analyzer-seed 1`).
+    pub external_args: Vec<String>,
 }
 
 impl Default for ClusterExecConfig {
@@ -50,26 +104,137 @@ impl Default for ClusterExecConfig {
             workers: 2,
             steal: true,
             seed: 0x5EED,
+            heartbeat: Duration::from_millis(25),
+            max_missed: 4,
+            external_workers: 0,
+            external_program: String::new(),
+            external_args: Vec::new(),
         }
     }
 }
 
+/// One completion-stream event of a [`ClusterExec`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum ExecEvent {
+    /// A chunk finished: its probabilities, in tile order.
+    Done {
+        /// The routing key the chunk was submitted under.
+        key: u64,
+        /// Id of the worker that executed it (load accounting).
+        worker: usize,
+        /// One probability per tile, in the chunk's tile order.
+        probs: Vec<f32>,
+    },
+    /// A chunk was abandoned after failing on every registered worker;
+    /// the dispatcher should requeue it into its `PyramidRun` and
+    /// re-dispatch (which resets the chunk's excluded-victim list).
+    Lost {
+        /// The routing key of the abandoned chunk.
+        key: u64,
+    },
+}
+
+/// Counters of everything the recovery machinery did — the operator's
+/// view of §10 in action ([`ClusterExec::fault_stats`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    /// Workers declared dead by the heartbeat monitor.
+    pub workers_lost: usize,
+    /// Workers that joined (or rejoined) through the Hello handshake.
+    pub workers_joined: usize,
+    /// Chunks re-dealt after their holder died (or after an orphaned
+    /// wait for a rejoining worker).
+    pub chunks_resubmitted: usize,
+    /// Chunks abandoned to the dispatcher as [`ExecEvent::Lost`].
+    pub chunks_abandoned: usize,
+}
+
+/// One registered worker, indexed by id. Ids are never reused: a lost
+/// worker keeps its slot (marked dead) and rejoining processes get fresh
+/// ids, so excluded-victim lists stay unambiguous.
+struct WorkerSlot {
+    port: u16,
+    alive: bool,
+    missed: u32,
+}
+
+/// One dealt-but-unfinished chunk. `assigned == None` means orphaned:
+/// no eligible live worker existed when it last needed a home; the
+/// monitor re-deals it as soon as one appears.
+struct PendingChunk {
+    task: ChunkTask,
+    assigned: Option<usize>,
+}
+
+/// State shared between the submit API, the leader's accept loop and the
+/// heartbeat monitor.
+///
+/// Lock order: `pending` may be held while taking `workers` (placement
+/// decisions), never the reverse.
+struct ExecState {
+    leader_port: u16,
+    max_missed: u32,
+    workers: Mutex<Vec<WorkerSlot>>,
+    pending: Mutex<HashMap<u64, PendingChunk>>,
+    rr: AtomicUsize,
+    done: AtomicBool,
+    workers_lost: AtomicUsize,
+    workers_joined: AtomicUsize,
+    chunks_resubmitted: AtomicUsize,
+    chunks_abandoned: AtomicUsize,
+}
+
+impl ExecState {
+    /// Snapshot of the live workers as (id, port) pairs.
+    fn alive_ports(&self) -> Vec<(usize, u16)> {
+        self.workers
+            .lock()
+            .unwrap()
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.alive)
+            .map(|(i, s)| (i, s.port))
+            .collect()
+    }
+
+    /// Pick a live worker not on `exclude`, round-robin. `None` when no
+    /// registered worker is eligible.
+    fn pick_worker(&self, exclude: &[usize]) -> Option<(usize, u16)> {
+        let eligible: Vec<(usize, u16)> = self
+            .alive_ports()
+            .into_iter()
+            .filter(|(id, _)| !exclude.contains(id))
+            .collect();
+        if eligible.is_empty() {
+            return None;
+        }
+        let i = self.rr.fetch_add(1, Ordering::Relaxed) % eligible.len();
+        Some(eligible[i])
+    }
+}
+
 /// Handle to a running execution cluster: submit chunks, read results.
-/// Thread-safe (`submit` from one thread, `recv_result` from another).
+/// Thread-safe (`submit` from one thread, `recv_event` from another).
 /// [`ClusterExec::shutdown`] is idempotent and also runs on drop.
 pub struct ClusterExec {
-    ports: Vec<u16>,
-    next: AtomicUsize,
-    results: Mutex<Receiver<(u64, usize, Vec<f32>)>>,
-    done: Arc<AtomicBool>,
+    state: Arc<ExecState>,
+    results: Mutex<Receiver<ExecEvent>>,
     workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
     reader: Mutex<Option<std::thread::JoinHandle<()>>>,
+    monitor: Mutex<Option<std::thread::JoinHandle<()>>>,
+    children: Mutex<Vec<std::process::Child>>,
 }
 
 impl ClusterExec {
-    /// Bind every listener, spawn the workers and the result reader.
+    /// Bind every listener, spawn the in-process workers, the heartbeat
+    /// monitor and the result reader, and launch any configured external
+    /// worker processes (their Hello handshakes complete asynchronously —
+    /// see [`ClusterExec::wait_for_workers`]).
     pub fn start(analyzer: Arc<dyn Analyzer>, cfg: &ClusterExecConfig) -> Result<ClusterExec> {
-        assert!(cfg.workers >= 1, "cluster needs at least one worker");
+        assert!(
+            cfg.workers + cfg.external_workers >= 1,
+            "cluster needs at least one worker"
+        );
         let leader_listener =
             TcpListener::bind(("127.0.0.1", 0)).context("backend leader bind")?;
         let leader_port = leader_listener.local_addr()?.port();
@@ -81,7 +246,28 @@ impl ClusterExec {
             listeners.push(l);
         }
 
-        let done = Arc::new(AtomicBool::new(false));
+        let state = Arc::new(ExecState {
+            leader_port,
+            max_missed: cfg.max_missed.max(1),
+            workers: Mutex::new(
+                ports
+                    .iter()
+                    .map(|&port| WorkerSlot {
+                        port,
+                        alive: true,
+                        missed: 0,
+                    })
+                    .collect(),
+            ),
+            pending: Mutex::new(HashMap::new()),
+            rr: AtomicUsize::new(0),
+            done: AtomicBool::new(false),
+            workers_lost: AtomicUsize::new(0),
+            workers_joined: AtomicUsize::new(0),
+            chunks_resubmitted: AtomicUsize::new(0),
+            chunks_abandoned: AtomicUsize::new(0),
+        });
+
         let mut workers = Vec::with_capacity(cfg.workers);
         for (id, listener) in listeners.into_iter().enumerate() {
             let wcfg = ExecWorkerConfig {
@@ -100,26 +286,99 @@ impl ClusterExec {
         }
 
         let (tx, rx) = channel();
-        let reader_done = Arc::clone(&done);
-        let reader = std::thread::Builder::new()
-            .name("exec-leader-reader".to_string())
-            .spawn(move || result_reader(leader_listener, tx, reader_done))?;
+        let reader = {
+            let state = Arc::clone(&state);
+            let tx = tx.clone();
+            std::thread::Builder::new()
+                .name("exec-leader-reader".to_string())
+                .spawn(move || leader_loop(leader_listener, state, tx))?
+        };
+        let monitor = {
+            let state = Arc::clone(&state);
+            let heartbeat = cfg.heartbeat.max(Duration::from_millis(1));
+            std::thread::Builder::new()
+                .name("exec-leader-monitor".to_string())
+                .spawn(move || monitor_loop(state, tx, heartbeat))?
+        };
+
+        let mut children = Vec::with_capacity(cfg.external_workers);
+        for i in 0..cfg.external_workers {
+            let program = if cfg.external_program.is_empty() {
+                std::env::current_exe()
+                    .context("resolve current executable for external worker")?
+                    .to_string_lossy()
+                    .into_owned()
+            } else {
+                cfg.external_program.clone()
+            };
+            let mut cmd = std::process::Command::new(&program);
+            cmd.arg("worker")
+                .arg("--connect")
+                .arg(format!("127.0.0.1:{leader_port}"))
+                .args(&cfg.external_args);
+            children.push(
+                cmd.spawn()
+                    .with_context(|| format!("spawn external worker {i} ({program})"))?,
+            );
+        }
 
         Ok(ClusterExec {
-            ports,
-            next: AtomicUsize::new(0),
+            state,
             results: Mutex::new(rx),
-            done,
             workers: Mutex::new(workers),
             reader: Mutex::new(Some(reader)),
+            monitor: Mutex::new(Some(monitor)),
+            children: Mutex::new(children),
         })
     }
 
-    pub fn workers(&self) -> usize {
-        self.ports.len()
+    /// Workers ever registered (in-process + joined), dead ones included.
+    pub fn registered_workers(&self) -> usize {
+        self.state.workers.lock().unwrap().len()
     }
 
-    /// Deal one chunk to a worker (round-robin; stealing rebalances).
+    /// Workers currently believed alive.
+    pub fn alive_workers(&self) -> usize {
+        self.state.alive_ports().len()
+    }
+
+    /// The leader's control/result address, for `pyramidai worker
+    /// --connect` processes joining from outside.
+    pub fn leader_addr(&self) -> String {
+        format!("127.0.0.1:{}", self.state.leader_port)
+    }
+
+    /// Block until at least `n` workers are alive, or `timeout` lapses;
+    /// returns whether the quorum was reached. Useful after spawning
+    /// external workers, whose Hello handshake completes asynchronously.
+    pub fn wait_for_workers(&self, n: usize, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        loop {
+            if self.alive_workers() >= n {
+                return true;
+            }
+            if Instant::now() >= deadline {
+                return false;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
+
+    /// What the recovery machinery has done so far.
+    pub fn fault_stats(&self) -> FaultStats {
+        FaultStats {
+            workers_lost: self.state.workers_lost.load(Ordering::Relaxed),
+            workers_joined: self.state.workers_joined.load(Ordering::Relaxed),
+            chunks_resubmitted: self.state.chunks_resubmitted.load(Ordering::Relaxed),
+            chunks_abandoned: self.state.chunks_abandoned.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Deal one chunk to a live worker (round-robin; stealing
+    /// rebalances). The chunk is tracked until its completion arrives;
+    /// if its holder dies it is resubmitted automatically. With no live
+    /// worker the chunk is parked as an orphan and dealt as soon as one
+    /// (re)joins — `Ok` either way.
     pub fn submit(
         &self,
         key: u64,
@@ -127,52 +386,132 @@ impl ClusterExec {
         level: usize,
         tiles: Vec<crate::slide::tile::TileId>,
     ) -> Result<()> {
-        let w = self.next.fetch_add(1, Ordering::Relaxed) % self.ports.len();
-        send_to(
-            self.ports[w],
-            &Msg::Chunk(ChunkTask {
-                key,
-                spec: spec.clone(),
-                level,
-                tiles,
-            }),
-        )
+        let task = ChunkTask {
+            key,
+            spec: spec.clone(),
+            level,
+            tiles,
+            exclude: Vec::new(),
+        };
+        let target = self.state.pick_worker(&[]);
+        self.state.pending.lock().unwrap().insert(
+            key,
+            PendingChunk {
+                task: task.clone(),
+                assigned: target.map(|(id, _)| id),
+            },
+        );
+        if let Some((id, port)) = target {
+            if send_to_deadline(port, &Msg::Chunk(task), DEAL_PATIENCE).is_err() {
+                // The worker vanished mid-send: orphan the chunk; the
+                // monitor re-deals it once the death is confirmed or a
+                // new worker joins.
+                if let Some(p) = self.state.pending.lock().unwrap().get_mut(&key) {
+                    if p.assigned == Some(id) {
+                        p.assigned = None;
+                    }
+                }
+            }
+        }
+        Ok(())
     }
 
-    /// Next completed chunk, non-blocking.
-    pub fn try_result(&self) -> Option<(u64, Vec<f32>)> {
-        self.results
-            .lock()
-            .unwrap()
-            .try_recv()
-            .ok()
-            .map(|(k, _, p)| (k, p))
+    /// Next completion-stream event; blocks until one arrives. `None`
+    /// once the cluster has shut down and no more events can come.
+    pub fn recv_event(&self) -> Option<ExecEvent> {
+        self.results.lock().unwrap().recv().ok()
+    }
+
+    /// Next completion-stream event, non-blocking.
+    pub fn try_event(&self) -> Option<ExecEvent> {
+        self.results.lock().unwrap().try_recv().ok()
     }
 
     /// Next completed chunk; blocks until one arrives. `None` once the
-    /// cluster has shut down and no more results can come.
+    /// cluster has shut down. This fault-blind view silently skips
+    /// [`ExecEvent::Lost`] — dispatchers that must survive total chunk
+    /// loss use [`ClusterExec::recv_event`] instead.
     pub fn recv_result(&self) -> Option<(u64, Vec<f32>)> {
-        self.results
-            .lock()
-            .unwrap()
-            .recv()
-            .ok()
-            .map(|(k, _, p)| (k, p))
+        loop {
+            match self.recv_event()? {
+                ExecEvent::Done { key, probs, .. } => return Some((key, probs)),
+                ExecEvent::Lost { .. } => continue,
+            }
+        }
     }
 
-    /// Stop workers and the reader. Pending (unserved) chunks are
-    /// dropped — callers shut down only after draining their runs.
+    /// Next completed chunk, non-blocking (fault-blind, like
+    /// [`ClusterExec::recv_result`]).
+    pub fn try_result(&self) -> Option<(u64, Vec<f32>)> {
+        loop {
+            match self.try_event()? {
+                ExecEvent::Done { key, probs, .. } => return Some((key, probs)),
+                ExecEvent::Lost { .. } => continue,
+            }
+        }
+    }
+
+    /// Crash injection (test/chaos hook): order worker `id` to die
+    /// instantly — queued and in-progress work is dropped on the floor
+    /// and the leader is *not* told; discovering the loss is the
+    /// heartbeat monitor's job. Returns whether the kill order could be
+    /// delivered.
+    pub fn kill_worker(&self, id: usize) -> bool {
+        let port = {
+            let ws = self.state.workers.lock().unwrap();
+            ws.get(id).filter(|s| s.alive).map(|s| s.port)
+        };
+        match port {
+            Some(p) => try_send(p, &Msg::Kill).is_ok(),
+            None => false,
+        }
+    }
+
+    /// Kill external worker process `i` (spawn order) with an OS signal —
+    /// the harshest crash available. Returns whether a process was
+    /// killed.
+    pub fn kill_external_worker(&self, i: usize) -> bool {
+        let mut children = self.children.lock().unwrap();
+        match children.get_mut(i) {
+            Some(c) => {
+                let killed = c.kill().is_ok();
+                let _ = c.wait();
+                killed
+            }
+            None => false,
+        }
+    }
+
+    /// Stop workers (in-process and external), the monitor and the
+    /// reader. Pending (unserved) chunks are dropped — callers shut down
+    /// only after draining their runs.
     pub fn shutdown(&self) {
-        if self.done.swap(true, Ordering::SeqCst) {
+        if self.state.done.swap(true, Ordering::SeqCst) {
             return;
         }
-        for &p in &self.ports {
-            let _ = send_to(p, &Msg::Shutdown);
+        // Shutdown goes to every *registered* port, dead ones included:
+        // try_send fails instantly on a truly dead listener, while a
+        // worker the heartbeat wrongly declared dead (a descheduled
+        // probe under load) is still a live thread that must hear
+        // Shutdown or the joins below would hang forever.
+        let ports: Vec<u16> = {
+            let ws = self.state.workers.lock().unwrap();
+            ws.iter().map(|s| s.port).collect()
+        };
+        for port in ports {
+            let _ = try_send(port, &Msg::Shutdown);
         }
         for h in self.workers.lock().unwrap().drain(..) {
             let _ = h.join();
         }
+        for c in self.children.lock().unwrap().iter_mut() {
+            let _ = c.kill();
+            let _ = c.wait();
+        }
         if let Some(h) = self.reader.lock().unwrap().take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.monitor.lock().unwrap().take() {
             let _ = h.join();
         }
     }
@@ -184,13 +523,34 @@ impl Drop for ClusterExec {
     }
 }
 
-/// Accept loop on the leader's result port: every connection carries one
-/// [`Msg::ChunkDone`] frame.
-fn result_reader(
-    listener: TcpListener,
-    tx: Sender<(u64, usize, Vec<f32>)>,
-    done: Arc<AtomicBool>,
-) {
+/// One connect attempt, no retry — for messages where a dead peer is an
+/// acceptable (or expected) outcome, unlike `send_to`'s 5-second
+/// patience.
+fn try_send(port: u16, msg: &Msg) -> Result<()> {
+    let mut stream = TcpStream::connect(("127.0.0.1", port))?;
+    stream.set_nodelay(true).ok();
+    msg.write_to(&mut stream)
+}
+
+/// Liveness probe: Ping, expect Pong on the same stream.
+fn probe(port: u16, timeout: Duration) -> bool {
+    let Ok(mut stream) = TcpStream::connect(("127.0.0.1", port)) else {
+        return false;
+    };
+    stream.set_nodelay(true).ok();
+    if stream.set_read_timeout(Some(timeout)).is_err() {
+        return false;
+    }
+    if Msg::Ping.write_to(&mut stream).is_err() {
+        return false;
+    }
+    matches!(Msg::read_from(&mut stream), Ok(Msg::Pong))
+}
+
+/// Accept loop on the leader's control/result port: completions
+/// (deduplicated against the pending map), Hello registrations and
+/// steal-bookkeeping updates.
+fn leader_loop(listener: TcpListener, state: Arc<ExecState>, tx: Sender<ExecEvent>) {
     if listener.set_nonblocking(true).is_err() {
         return;
     }
@@ -199,19 +559,170 @@ fn result_reader(
             Ok((mut stream, _)) => {
                 stream.set_nonblocking(false).ok();
                 stream.set_read_timeout(Some(Duration::from_secs(30))).ok();
-                if let Ok(Msg::ChunkDone { key, worker, probs }) = Msg::read_from(&mut stream) {
-                    if tx.send((key, worker, probs)).is_err() {
-                        return; // every receiver gone
+                match Msg::read_from(&mut stream) {
+                    Ok(Msg::ChunkDone { key, worker, probs }) => {
+                        // Only chunks still pending are forwarded; a
+                        // duplicate completion from a resubmission race is
+                        // dropped here, so the dispatcher sees each key at
+                        // most once.
+                        let known = state.pending.lock().unwrap().remove(&key).is_some();
+                        if known && tx.send(ExecEvent::Done { key, worker, probs }).is_err() {
+                            return; // every receiver gone
+                        }
+                        // A completing worker is demonstrably alive.
+                        if let Some(s) = state.workers.lock().unwrap().get_mut(worker) {
+                            if s.alive {
+                                s.missed = 0;
+                            }
+                        }
                     }
+                    Ok(Msg::Hello { port }) => {
+                        let id = {
+                            let mut ws = state.workers.lock().unwrap();
+                            ws.push(WorkerSlot {
+                                port,
+                                alive: true,
+                                missed: 0,
+                            });
+                            ws.len() - 1
+                        };
+                        state.workers_joined.fetch_add(1, Ordering::Relaxed);
+                        eprintln!("[cluster] worker {id} joined on :{port}");
+                        let _ = Msg::Welcome { id }.write_to(&mut stream);
+                    }
+                    Ok(Msg::ChunkMoved { key, worker }) => {
+                        if let Some(p) = state.pending.lock().unwrap().get_mut(&key) {
+                            p.assigned = Some(worker);
+                        }
+                    }
+                    _ => {}
                 }
             }
             Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                if done.load(Ordering::Acquire) {
+                if state.done.load(Ordering::Acquire) {
                     return;
                 }
                 std::thread::sleep(Duration::from_micros(200));
             }
             Err(_) => return,
+        }
+    }
+}
+
+/// Heartbeat monitor: probe live workers, declare the unresponsive dead
+/// (resubmitting their chunks), and re-deal orphaned chunks.
+fn monitor_loop(state: Arc<ExecState>, tx: Sender<ExecEvent>, heartbeat: Duration) {
+    // Localhost probe replies arrive in microseconds; the timeout only
+    // bounds a hung (rather than dead) peer.
+    let probe_timeout = heartbeat.max(Duration::from_millis(20)) * 4;
+    loop {
+        std::thread::sleep(heartbeat);
+        if state.done.load(Ordering::Acquire) {
+            return;
+        }
+        for (id, port) in state.alive_ports() {
+            if state.done.load(Ordering::Acquire) {
+                return;
+            }
+            if probe(port, probe_timeout) {
+                if let Some(s) = state.workers.lock().unwrap().get_mut(id) {
+                    s.missed = 0;
+                }
+                continue;
+            }
+            let died = {
+                let mut ws = state.workers.lock().unwrap();
+                match ws.get_mut(id) {
+                    Some(s) if s.alive => {
+                        s.missed += 1;
+                        if s.missed >= state.max_missed {
+                            s.alive = false;
+                            true
+                        } else {
+                            false
+                        }
+                    }
+                    _ => false,
+                }
+            };
+            if died {
+                state.workers_lost.fetch_add(1, Ordering::Relaxed);
+                eprintln!(
+                    "[cluster] worker {id} (:{port}) lost — resubmitting its in-flight chunks"
+                );
+                redeal_chunks(&state, &tx, Some(id));
+            }
+        }
+        redeal_chunks(&state, &tx, None);
+    }
+}
+
+/// Re-deal pending chunks that need a new home. With `dead: Some(w)`
+/// the selection is every chunk assigned to the dead worker `w` (which
+/// is appended to each chunk's excluded-victim list); with `None` it is
+/// the orphans (chunks with no eligible worker at their last
+/// placement). Each selected chunk is dealt to a surviving worker, or —
+/// when its exclusion list covers every live worker — abandoned to the
+/// dispatcher as [`ExecEvent::Lost`]; with no live worker at all it
+/// stays orphaned for a rejoin.
+fn redeal_chunks(state: &ExecState, tx: &Sender<ExecEvent>, dead: Option<usize>) {
+    let mut sends: Vec<(u16, ChunkTask)> = Vec::new();
+    let mut lost: Vec<u64> = Vec::new();
+    {
+        let mut pending = state.pending.lock().unwrap();
+        let keys: Vec<u64> = pending
+            .iter()
+            .filter(|(_, p)| match dead {
+                Some(w) => p.assigned == Some(w),
+                None => p.assigned.is_none(),
+            })
+            .map(|(k, _)| *k)
+            .collect();
+        for key in keys {
+            let p = pending.get_mut(&key).expect("listed above");
+            if let Some(w) = dead {
+                if !p.task.exclude.contains(&w) {
+                    p.task.exclude.push(w);
+                }
+            }
+            match state.pick_worker(&p.task.exclude) {
+                Some((w, port)) => {
+                    p.assigned = Some(w);
+                    sends.push((port, p.task.clone()));
+                }
+                None => {
+                    if state.alive_ports().is_empty() {
+                        p.assigned = None; // orphan: wait for a rejoin
+                    } else {
+                        lost.push(key); // failed on every live worker
+                    }
+                }
+            }
+        }
+        for key in &lost {
+            pending.remove(key);
+        }
+    }
+    deliver(state, sends);
+    for key in lost {
+        state.chunks_abandoned.fetch_add(1, Ordering::Relaxed);
+        eprintln!(
+            "[cluster] chunk {key} abandoned (failed on every worker) — handing it back to the dispatcher"
+        );
+        let _ = tx.send(ExecEvent::Lost { key });
+    }
+}
+
+/// Send planned resubmissions outside any lock; failures re-orphan (and
+/// are not counted — the eventual successful re-deal is the one logical
+/// resubmission).
+fn deliver(state: &ExecState, sends: Vec<(u16, ChunkTask)>) {
+    for (port, task) in sends {
+        let key = task.key;
+        if send_to_deadline(port, &Msg::Chunk(task), DEAL_PATIENCE).is_ok() {
+            state.chunks_resubmitted.fetch_add(1, Ordering::Relaxed);
+        } else if let Some(p) = state.pending.lock().unwrap().get_mut(&key) {
+            p.assigned = None;
         }
     }
 }
@@ -228,6 +739,8 @@ struct ExecShared {
     queue: Mutex<VecDeque<ChunkTask>>,
     done: AtomicBool,
     idle: AtomicBool,
+    /// Crash injection: die immediately, telling no one.
+    killed: AtomicBool,
 }
 
 /// One persistent worker: queue of chunks, analyze loop, chunk stealing.
@@ -236,6 +749,7 @@ fn run_exec_worker(cfg: ExecWorkerConfig, listener: TcpListener, analyzer: Arc<d
         queue: Mutex::new(VecDeque::new()),
         done: AtomicBool::new(false),
         idle: AtomicBool::new(true),
+        killed: AtomicBool::new(false),
     });
     if listener.set_nonblocking(true).is_err() {
         return;
@@ -254,6 +768,9 @@ fn run_exec_worker(cfg: ExecWorkerConfig, listener: TcpListener, analyzer: Arc<d
     let mut rng = Pcg32::new(cfg.seed ^ ((cfg.id as u64) << 32) ^ 0xC1C1);
     let mut idle_streak: u32 = 0;
     loop {
+        if shared.killed.load(Ordering::Acquire) {
+            break; // crash: queued work dies with us, nobody is told
+        }
         let task = shared.queue.lock().unwrap().pop_front();
         match task {
             Some(t) => {
@@ -279,11 +796,15 @@ fn run_exec_worker(cfg: ExecWorkerConfig, listener: TcpListener, analyzer: Arc<d
                 if probs.iter().any(|p| !p.is_finite()) {
                     probs.clear();
                 }
+                if shared.killed.load(Ordering::Acquire) {
+                    break; // died mid-analysis: the result is lost too
+                }
                 // Results must not be lost — a dropped ChunkDone would
-                // strand the dispatcher's run forever. send_to retries
-                // with backoff for 5s; on top of that, keep trying for as
-                // long as the cluster is alive (failure with the leader
-                // still up means transient congestion, not loss).
+                // strand the dispatcher's run until the heartbeat declares
+                // this worker dead. send_to retries with backoff for 5s;
+                // on top of that, keep trying for as long as the cluster
+                // is alive (failure with the leader still up means
+                // transient congestion, not loss).
                 let msg = Msg::ChunkDone {
                     key: t.key,
                     worker: cfg.id,
@@ -311,6 +832,15 @@ fn run_exec_worker(cfg: ExecWorkerConfig, listener: TcpListener, analyzer: Arc<d
                         }
                     };
                     if let Ok((Some(task), _)) = request_chunk_steal(cfg.ports[victim], cfg.id) {
+                        // Tell the leader the chunk moved, so a future
+                        // death of *this* worker resubmits it (§10).
+                        let _ = send_to(
+                            cfg.leader_port,
+                            &Msg::ChunkMoved {
+                                key: task.key,
+                                worker: cfg.id,
+                            },
+                        );
                         shared.queue.lock().unwrap().push_back(task);
                         continue;
                     }
@@ -339,15 +869,27 @@ fn exec_listen_loop(listener: TcpListener, shared: Arc<ExecShared>) {
                         Msg::Chunk(t) => {
                             shared.queue.lock().unwrap().push_back(t);
                         }
-                        Msg::ChunkSteal { .. } => {
+                        Msg::ChunkSteal { thief } => {
                             let (task, idle) = {
                                 let mut q = shared.queue.lock().unwrap();
                                 // Victims keep their last queued chunk
-                                // (§5.3's "more than one task" rule).
-                                let task = if q.len() > 1 { q.pop_back() } else { None };
+                                // (§5.3's "more than one task" rule), and
+                                // never hand a chunk to a worker on its
+                                // excluded-victim list.
+                                let stealable = q.len() > 1
+                                    && q.back().is_some_and(|t| !t.exclude.contains(&thief));
+                                let task = if stealable { q.pop_back() } else { None };
                                 (task, shared.idle.load(Ordering::Acquire))
                             };
                             let _ = Msg::ChunkStealReply { task, idle }.write_to(&mut stream);
+                        }
+                        Msg::Ping => {
+                            let _ = Msg::Pong.write_to(&mut stream);
+                        }
+                        Msg::Kill => {
+                            shared.killed.store(true, Ordering::Release);
+                            shared.done.store(true, Ordering::Release);
+                            return;
                         }
                         Msg::Shutdown => {
                             shared.done.store(true, Ordering::Release);
@@ -379,27 +921,72 @@ fn request_chunk_steal(victim_port: u16, thief: usize) -> Result<(Option<ChunkTa
     }
 }
 
+/// Run one standalone worker process against a leader at `addr`
+/// (`host:port`, localhost in practice — the chunk protocol addresses
+/// workers by port on 127.0.0.1). Binds a fresh listener, registers
+/// through the [`Msg::Hello`]/[`Msg::Welcome`] handshake, then serves
+/// chunks until the leader says [`Msg::Shutdown`] (or a [`Msg::Kill`]
+/// crash order arrives). This is what `pyramidai worker --connect` runs.
+pub fn run_standalone_worker(
+    addr: &str,
+    analyzer: Arc<dyn Analyzer>,
+    seed: u64,
+) -> Result<usize> {
+    let leader_port: u16 = addr
+        .rsplit(':')
+        .next()
+        .and_then(|p| p.parse().ok())
+        .with_context(|| format!("no port in leader address {addr:?}"))?;
+    let listener = TcpListener::bind(("127.0.0.1", 0)).context("worker bind")?;
+    let my_port = listener.local_addr()?.port();
+    let mut stream = TcpStream::connect(addr).with_context(|| format!("connect leader {addr}"))?;
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(Duration::from_secs(30))).ok();
+    Msg::Hello { port: my_port }.write_to(&mut stream)?;
+    let id = match Msg::read_from(&mut stream)? {
+        Msg::Welcome { id } => id,
+        other => anyhow::bail!("unexpected handshake reply {other:?}"),
+    };
+    drop(stream);
+    eprintln!("[worker {id}] joined leader at {addr} (listening on :{my_port})");
+    let cfg = ExecWorkerConfig {
+        id,
+        ports: Vec::new(), // external workers do not steal
+        leader_port,
+        steal: false,
+        seed,
+    };
+    run_exec_worker(cfg, listener, analyzer);
+    Ok(id)
+}
+
 /// The TCP cluster as an [`ExecutionBackend`] for one slide's
 /// [`crate::pyramid::PyramidRun`]: requests become dealt (steal-able)
-/// chunks; request ids are the routing keys.
+/// chunks; request ids are the routing keys. Chunks abandoned by the
+/// cluster surface through [`ExecutionBackend::take_lost`], which
+/// [`crate::pyramid::backend::drive`] feeds back into the run as
+/// requeues.
 pub struct ClusterBackend {
-    exec: ClusterExec,
+    exec: Arc<ClusterExec>,
     spec: SlideSpec,
     in_flight: usize,
+    lost: Vec<RequestId>,
 }
 
 impl ClusterBackend {
     /// Spin up a dedicated cluster for this slide. The cluster shuts down
-    /// when the backend drops.
+    /// when the last handle (backend or [`ClusterBackend::exec_handle`])
+    /// drops.
     pub fn start(
         spec: SlideSpec,
         analyzer: Arc<dyn Analyzer>,
         cfg: &ClusterExecConfig,
     ) -> Result<ClusterBackend> {
         Ok(ClusterBackend {
-            exec: ClusterExec::start(analyzer, cfg)?,
+            exec: Arc::new(ClusterExec::start(analyzer, cfg)?),
             spec,
             in_flight: 0,
+            lost: Vec::new(),
         })
     }
 
@@ -408,7 +995,13 @@ impl ClusterBackend {
     /// dispatch over shared workers is the service scheduler's job, which
     /// talks to [`ClusterExec`] directly.
     pub fn exec(&self) -> &ClusterExec {
-        &self.exec
+        self.exec.as_ref()
+    }
+
+    /// An owning handle to the cluster, e.g. for a fault-injection thread
+    /// that kills workers while the backend is being driven.
+    pub fn exec_handle(&self) -> Arc<ClusterExec> {
+        Arc::clone(&self.exec)
     }
 }
 
@@ -421,22 +1014,35 @@ impl ExecutionBackend for ClusterBackend {
     }
 
     fn poll(&mut self, block: bool) -> Option<Completion> {
-        if self.in_flight == 0 {
-            return None;
+        while self.in_flight > 0 {
+            let ev = if block {
+                self.exec.recv_event()
+            } else {
+                self.exec.try_event()
+            };
+            match ev {
+                Some(ExecEvent::Done { key, probs, .. }) => {
+                    self.in_flight -= 1;
+                    return Some(Completion { id: key, probs });
+                }
+                Some(ExecEvent::Lost { key }) => {
+                    // No longer in flight; the driver requeues it via
+                    // take_lost and re-dispatches.
+                    self.in_flight -= 1;
+                    self.lost.push(key);
+                }
+                None => return None,
+            }
         }
-        let r = if block {
-            self.exec.recv_result()
-        } else {
-            self.exec.try_result()
-        };
-        r.map(|(key, probs)| {
-            self.in_flight -= 1;
-            Completion { id: key, probs }
-        })
+        None
     }
 
     fn in_flight(&self) -> usize {
         self.in_flight
+    }
+
+    fn take_lost(&mut self) -> Vec<RequestId> {
+        std::mem::take(&mut self.lost)
     }
 }
 
@@ -444,6 +1050,7 @@ impl ExecutionBackend for ClusterBackend {
 mod tests {
     use super::*;
     use crate::model::oracle::OracleAnalyzer;
+    use crate::model::DelayAnalyzer;
     use crate::pyramid::backend::run_on_backend;
     use crate::pyramid::driver::run_pyramidal;
     use crate::pyramid::tree::Thresholds;
@@ -469,6 +1076,7 @@ mod tests {
                     workers,
                     steal: true,
                     seed: 11,
+                    ..ClusterExecConfig::default()
                 },
             )
             .unwrap();
@@ -495,6 +1103,7 @@ mod tests {
                 workers: 2,
                 steal: true,
                 seed: 5,
+                ..ClusterExecConfig::default()
             },
         )
         .unwrap();
@@ -514,5 +1123,116 @@ mod tests {
         assert_eq!(got[&0], want[0]);
         assert_eq!(got[&1], want[1]);
         exec.shutdown();
+    }
+
+    #[test]
+    fn killed_workers_chunks_are_resubmitted_to_survivors() {
+        // Two workers, slow analysis, stealing off (so assignment is
+        // exactly the round-robin deal). Kill worker 0 right after the
+        // deal: every chunk it held must still complete, via heartbeat
+        // detection + resubmission to worker 1, each key exactly once.
+        let analyzer: Arc<dyn Analyzer> = Arc::new(DelayAnalyzer::new(
+            OracleAnalyzer::new(1),
+            Duration::from_millis(4),
+        ));
+        let exec = ClusterExec::start(
+            Arc::clone(&analyzer),
+            &ClusterExecConfig {
+                workers: 2,
+                steal: false,
+                seed: 5,
+                heartbeat: Duration::from_millis(10),
+                max_missed: 2,
+                ..ClusterExecConfig::default()
+            },
+        )
+        .unwrap();
+        let sp = spec(420);
+        let slide = Slide::from_spec(sp.clone());
+        let tiles = slide.level_tile_ids(2);
+        let chunks: Vec<_> = tiles.chunks(3).map(|c| c.to_vec()).collect();
+        let n = chunks.len();
+        assert!(n >= 4, "need several chunks to make the kill meaningful");
+        for (i, c) in chunks.into_iter().enumerate() {
+            exec.submit(i as u64, &sp, 2, c).unwrap();
+        }
+        assert!(exec.kill_worker(0), "kill order must be deliverable");
+        let mut got: HashMap<u64, Vec<f32>> = HashMap::new();
+        while got.len() < n {
+            match exec.recv_event().expect("cluster alive") {
+                ExecEvent::Done { key, probs, .. } => {
+                    assert!(got.insert(key, probs).is_none(), "duplicate key {key}");
+                }
+                ExecEvent::Lost { key } => panic!("chunk {key} abandoned with a live worker"),
+            }
+        }
+        let stats = exec.fault_stats();
+        assert_eq!(stats.workers_lost, 1, "heartbeat must declare worker 0 dead");
+        assert!(
+            stats.chunks_resubmitted >= 1,
+            "dead worker held undone chunks"
+        );
+        assert_eq!(stats.chunks_abandoned, 0);
+        // The survivor's results are correct, not just present.
+        for (key, probs) in &got {
+            let start = *key as usize * 3;
+            let want = analyzer.analyze(&slide, 2, &tiles[start..start + probs.len()]);
+            assert_eq!(probs, &want, "chunk {key}");
+        }
+        exec.shutdown();
+    }
+
+    #[test]
+    fn standalone_worker_joins_and_serves() {
+        // The §10 rejoin handshake, exercised in-process: a cluster with
+        // one worker gains a second through Hello/Welcome and the new
+        // worker's results flow like any other's.
+        let analyzer: Arc<dyn Analyzer> = Arc::new(OracleAnalyzer::new(1));
+        let exec = Arc::new(
+            ClusterExec::start(
+                Arc::clone(&analyzer),
+                &ClusterExecConfig {
+                    workers: 1,
+                    steal: false,
+                    seed: 9,
+                    ..ClusterExecConfig::default()
+                },
+            )
+            .unwrap(),
+        );
+        let addr = exec.leader_addr();
+        let worker_analyzer = Arc::clone(&analyzer);
+        let joiner = std::thread::spawn(move || {
+            run_standalone_worker(&addr, worker_analyzer, 77).expect("standalone worker")
+        });
+        assert!(
+            exec.wait_for_workers(2, Duration::from_secs(10)),
+            "joined worker must register"
+        );
+        assert_eq!(exec.fault_stats().workers_joined, 1);
+        let sp = spec(430);
+        let slide = Slide::from_spec(sp.clone());
+        let tiles = slide.level_tile_ids(2);
+        let want = analyzer.analyze(&slide, 2, &tiles);
+        // Several chunks so the round-robin demonstrably reaches the
+        // joined worker too.
+        let chunks: Vec<_> = tiles.chunks(4).map(|c| c.to_vec()).collect();
+        let n = chunks.len();
+        for (i, c) in chunks.into_iter().enumerate() {
+            exec.submit(i as u64, &sp, 2, c).unwrap();
+        }
+        let mut got: HashMap<u64, Vec<f32>> = HashMap::new();
+        while got.len() < n {
+            let (key, probs) = exec.recv_result().expect("cluster alive");
+            got.insert(key, probs);
+        }
+        let mut flat = Vec::new();
+        for i in 0..n {
+            flat.extend(got[&(i as u64)].iter().copied());
+        }
+        assert_eq!(flat, want);
+        exec.shutdown();
+        let id = joiner.join().expect("worker thread");
+        assert_eq!(id, 1, "first joined worker gets the next id");
     }
 }

@@ -22,24 +22,35 @@ use super::worker::{run_worker, WorkerConfig};
 /// Cluster run configuration.
 #[derive(Debug, Clone)]
 pub struct ClusterConfig {
+    /// Worker-thread count (the paper's machine count).
     pub workers: usize,
+    /// Initial tile-distribution strategy (§5.2).
     pub distribution: Distribution,
+    /// Enable random-victim work stealing (§5.3).
     pub steal: bool,
+    /// Analysis batch size per worker.
     pub batch: usize,
+    /// Seed for distribution and victim selection.
     pub seed: u64,
 }
 
 /// Outcome of one cluster execution of one slide.
 #[derive(Debug)]
 pub struct ClusterResult {
+    /// The merged, consistency-checked execution tree.
     pub tree: ExecTree,
+    /// Tiles analyzed per worker.
     pub per_worker: Vec<usize>,
+    /// Successful steals across all workers.
     pub steals: usize,
+    /// Steal attempts that returned no task.
     pub steal_fails: usize,
+    /// Wall time from initial deal to last subtree upload.
     pub wall: Duration,
 }
 
 impl ClusterResult {
+    /// Tile count of the busiest worker (the makespan proxy).
     pub fn max_tiles(&self) -> usize {
         self.per_worker.iter().copied().max().unwrap_or(0)
     }
@@ -162,8 +173,17 @@ pub fn run_cluster(
 /// a fixed pre-sleep). Shared with the persistent chunk backend
 /// (`cluster::backend`).
 pub(crate) fn send_to(port: u16, msg: &Msg) -> Result<()> {
+    send_to_deadline(port, msg, Duration::from_secs(5))
+}
+
+/// [`send_to`] with an explicit patience bound. The fault-tolerant
+/// backend deals chunks with a short bound: its listeners are pre-bound
+/// (no startup race to wait out), and a dead port should fail fast so
+/// the chunk can be orphaned for the monitor instead of stalling the
+/// dispatcher until the heartbeat notices.
+pub(crate) fn send_to_deadline(port: u16, msg: &Msg, patience: Duration) -> Result<()> {
     let mut delay = Duration::from_micros(200);
-    let deadline = Instant::now() + Duration::from_secs(5);
+    let deadline = Instant::now() + patience;
     loop {
         match TcpStream::connect(("127.0.0.1", port)) {
             Ok(mut stream) => {

@@ -6,15 +6,25 @@
 //!
 //! * [`leader`]/[`worker`] — the paper's one-shot run: workers make their
 //!   own zoom decisions and upload subtrees (`run_cluster`).
-//! * [`backend`] — a persistent execution cluster behind the unified
-//!   `ExecutionBackend` API: zoom decisions stay in the dispatcher's
-//!   `PyramidRun`; workers analyze steal-able frontier chunks of any
-//!   slide (the multi-slide service's distributed mode).
+//! * [`backend`] — a persistent, fault-tolerant execution cluster behind
+//!   the unified `ExecutionBackend` API: zoom decisions stay in the
+//!   dispatcher's `PyramidRun`; workers analyze steal-able frontier
+//!   chunks of any slide (the multi-slide service's distributed mode).
+//!   Dead workers are detected by heartbeat and their chunks resubmitted
+//!   with excluded-victim lists; workers — including standalone
+//!   `pyramidai worker` OS processes — can join or rejoin mid-run
+//!   (DESIGN.md §10).
 
+/// Persistent fault-tolerant chunk-execution cluster (§10).
 pub mod backend;
+/// One-shot cluster leader: deal, collect subtrees, merge.
 pub mod leader;
+/// Length-prefixed JSON wire protocol shared by both modes.
 pub mod proto;
+/// One-shot cluster worker: queue, analyze, steal, upload.
 pub mod worker;
 
-pub use backend::{ClusterBackend, ClusterExec, ClusterExecConfig};
+pub use backend::{
+    run_standalone_worker, ClusterBackend, ClusterExec, ClusterExecConfig, ExecEvent, FaultStats,
+};
 pub use leader::{run_cluster, ClusterConfig, ClusterResult};

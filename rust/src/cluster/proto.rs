@@ -20,13 +20,23 @@ use crate::util::json::Json;
 /// (and cache) the slide from the replicated spec.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ChunkTask {
+    /// Dispatcher routing key (echoed back in [`Msg::ChunkDone`]).
     pub key: u64,
+    /// Replicated slide recipe the worker rebuilds the pixels from.
     pub spec: SlideSpec,
+    /// Pyramid level of every tile in the chunk.
     pub level: usize,
+    /// The chunk's tiles, in dispatch order (probabilities must match).
     pub tiles: Vec<TileId>,
+    /// Excluded-victim list: ids of workers that already held this chunk
+    /// when they died. The leader never re-deals the chunk to them and
+    /// thieves on the list are refused the chunk, so a flaky node is not
+    /// immediately re-handed the same work (DESIGN.md §10).
+    pub exclude: Vec<usize>,
 }
 
 #[derive(Debug, Clone, PartialEq)]
+/// Every frame either mode of the cluster puts on the wire.
 pub enum Msg {
     /// Leader → worker: one initial tile for your queue.
     Task { tile: TileId },
@@ -62,8 +72,41 @@ pub enum Msg {
     /// Reply to a chunk steal: one chunk or None; `idle` mirrors
     /// [`Msg::StealReply`]'s victim-state report.
     ChunkStealReply {
+        /// The surrendered chunk, or `None` (no spare work / thief is on
+        /// the chunk's excluded-victim list).
         task: Option<ChunkTask>,
+        /// Whether the victim itself is out of local work.
         idle: bool,
+    },
+    /// Leader → worker: liveness probe; answered with [`Msg::Pong`] on
+    /// the same stream (the §10 heartbeat).
+    Ping,
+    /// Worker → leader: heartbeat reply.
+    Pong,
+    /// Crash injection (test/chaos hook): the worker drops its queue and
+    /// dies *without* telling the leader — detecting the loss is the
+    /// heartbeat's job, exactly as with a yanked power cord.
+    Kill,
+    /// External worker → leader: the §10 rejoin handshake. `port` is the
+    /// worker's freshly bound listener; the leader registers it and
+    /// answers [`Msg::Welcome`] on the same stream.
+    Hello {
+        /// The joining worker's chunk/steal listener port.
+        port: u16,
+    },
+    /// Reply to [`Msg::Hello`]: the id the leader assigned.
+    Welcome {
+        /// Assigned worker id (never reused, even after a loss).
+        id: usize,
+    },
+    /// Thief → leader: chunk `key` now lives on worker `worker`. Keeps
+    /// the leader's pending-chunk assignment map accurate under work
+    /// stealing, so a dead thief's stolen chunks are resubmitted too.
+    ChunkMoved {
+        /// Routing key of the stolen chunk.
+        key: u64,
+        /// The thief's worker id (the chunk's new holder).
+        worker: usize,
     },
 }
 
@@ -93,6 +136,10 @@ fn chunk_json(c: &ChunkTask) -> Json {
             "tiles",
             Json::Arr(c.tiles.iter().map(|&t| tile_json(t)).collect()),
         )
+        .set(
+            "exclude",
+            Json::Arr(c.exclude.iter().map(|&w| Json::Num(w as f64)).collect()),
+        )
 }
 
 fn chunk_from(v: &Json) -> Result<ChunkTask> {
@@ -106,10 +153,20 @@ fn chunk_from(v: &Json) -> Result<ChunkTask> {
             .iter()
             .map(tile_from)
             .collect::<Result<Vec<_>>>()?,
+        // Absent in pre-§10 frames: treat as "no one excluded".
+        exclude: match v.opt("exclude") {
+            Some(a) => a
+                .as_arr()?
+                .iter()
+                .map(|w| w.as_usize())
+                .collect::<Result<Vec<_>, _>>()?,
+            None => Vec::new(),
+        },
     })
 }
 
 impl Msg {
+    /// Serialize one frame body.
     pub fn to_json(&self) -> Json {
         match self {
             Msg::Task { tile } => Json::obj().set("t", "task").set("tile", tile_json(*tile)),
@@ -161,9 +218,19 @@ impl Msg {
                         None => Json::Null,
                     },
                 ),
+            Msg::Ping => Json::obj().set("t", "ping"),
+            Msg::Pong => Json::obj().set("t", "pong"),
+            Msg::Kill => Json::obj().set("t", "kill"),
+            Msg::Hello { port } => Json::obj().set("t", "hello").set("port", *port as u64),
+            Msg::Welcome { id } => Json::obj().set("t", "welcome").set("id", *id),
+            Msg::ChunkMoved { key, worker } => Json::obj()
+                .set("t", "chunk_moved")
+                .set("key", *key)
+                .set("worker", *worker),
         }
     }
 
+    /// Parse one frame body.
     pub fn from_json(v: &Json) -> Result<Msg> {
         Ok(match v.get("t")?.as_str()? {
             "task" => Msg::Task {
@@ -209,6 +276,19 @@ impl Msg {
                     None => None,
                 },
                 idle: v.get("idle")?.as_bool()?,
+            },
+            "ping" => Msg::Ping,
+            "pong" => Msg::Pong,
+            "kill" => Msg::Kill,
+            "hello" => Msg::Hello {
+                port: v.get("port")?.as_u64()? as u16,
+            },
+            "welcome" => Msg::Welcome {
+                id: v.get("id")?.as_usize()?,
+            },
+            "chunk_moved" => Msg::ChunkMoved {
+                key: v.get("key")?.as_u64()?,
+                worker: v.get("worker")?.as_usize()?,
             },
             other => return Err(anyhow!("unknown message type {other:?}")),
         })
@@ -292,6 +372,7 @@ mod tests {
             spec: SlideSpec::new("pr", 9, 16, 8, 3, 64, SlideKind::LargeTumor),
             level: 2,
             tiles: vec![TileId::new(2, 1, 0), TileId::new(2, 3, 1)],
+            exclude: vec![0, 4],
         };
         let msgs = vec![
             Msg::Chunk(task.clone()),
@@ -314,6 +395,45 @@ mod tests {
             let j = m.to_json().to_string();
             let back = Msg::from_json(&Json::parse(&j).unwrap()).unwrap();
             assert_eq!(m, back);
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_fault_tolerance_variants() {
+        let msgs = vec![
+            Msg::Ping,
+            Msg::Pong,
+            Msg::Kill,
+            Msg::Hello { port: 61234 },
+            Msg::Welcome { id: 7 },
+            Msg::ChunkMoved {
+                key: (3u64 << 21) | 9,
+                worker: 2,
+            },
+        ];
+        for m in msgs {
+            let j = m.to_json().to_string();
+            let back = Msg::from_json(&Json::parse(&j).unwrap()).unwrap();
+            assert_eq!(m, back);
+        }
+    }
+
+    #[test]
+    fn chunk_without_exclude_field_parses_as_unexcluded() {
+        // Pre-§10 frames carry no exclude list; they must keep parsing.
+        let task = ChunkTask {
+            key: 5,
+            spec: SlideSpec::new("old", 1, 16, 8, 3, 64, SlideKind::Negative),
+            level: 1,
+            tiles: vec![TileId::new(1, 0, 0)],
+            exclude: Vec::new(),
+        };
+        let mut j = chunk_json(&task).as_obj().unwrap().clone();
+        j.remove("exclude");
+        let wrapped = Json::obj().set("t", "chunk").set("chunk", Json::Obj(j));
+        match Msg::from_json(&wrapped).unwrap() {
+            Msg::Chunk(back) => assert_eq!(back, task),
+            other => panic!("unexpected {other:?}"),
         }
     }
 

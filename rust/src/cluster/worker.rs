@@ -25,16 +25,21 @@ use super::proto::Msg;
 /// Static configuration of one worker.
 #[derive(Clone)]
 pub struct WorkerConfig {
+    /// This worker's id (index into `ports`).
     pub id: usize,
     /// Listen address of every worker, indexed by worker id.
     pub ports: Vec<u16>,
+    /// Where subtrees are uploaded (node 0).
     pub leader_port: u16,
+    /// Replicated slide recipe (workers rebuild pixels locally).
     pub slide: SlideSpec,
+    /// Per-level zoom thresholds for local zoom decisions.
     pub thresholds: Thresholds,
     /// Analysis batch size.
     pub batch: usize,
     /// Enable the work-stealing policy (Fig. 7 compares on/off).
     pub steal: bool,
+    /// Seed for victim selection.
     pub seed: u64,
 }
 
@@ -225,6 +230,12 @@ fn listen_loop(listener: TcpListener, shared: Arc<Shared>) {
                                 (task, shared.idle.load(Ordering::Acquire))
                             };
                             let _ = Msg::StealReply { task, idle }.write_to(&mut stream);
+                        }
+                        Msg::Ping => {
+                            // One-shot workers answer the same liveness
+                            // probe as the persistent backend's (§10), so
+                            // an operator can health-check either kind.
+                            let _ = Msg::Pong.write_to(&mut stream);
                         }
                         Msg::Shutdown => {
                             shared.done.store(true, Ordering::Release);

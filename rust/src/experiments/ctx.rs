@@ -29,6 +29,7 @@ pub enum ModelKind {
 }
 
 impl ModelKind {
+    /// Parse a `--model` flag value.
     pub fn from_str(s: &str) -> Option<ModelKind> {
         match s {
             "oracle" => Some(ModelKind::Oracle),
@@ -52,6 +53,7 @@ impl ModelKind {
     }
 }
 
+/// Where the compiled L1/L2 artifacts live.
 pub fn artifacts_dir() -> PathBuf {
     // Respect the layout: the binary runs from the workspace root;
     // fall back to the manifest dir for `cargo test`/`cargo bench`.
@@ -62,6 +64,8 @@ pub fn artifacts_dir() -> PathBuf {
     Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
 }
 
+/// Build the analyzer for a model kind (auto-resolves to pjrt
+/// when artifacts exist, oracle otherwise).
 pub fn make_analyzer(kind: ModelKind, seed: u64) -> Result<(Arc<dyn Analyzer>, &'static str)> {
     Ok(match kind.resolve() {
         ModelKind::Pjrt => (
@@ -76,10 +80,15 @@ pub fn make_analyzer(kind: ModelKind, seed: u64) -> Result<(Arc<dyn Analyzer>, &
 /// evaluates on the Camelyon16 test set; scaled to this machine.
 #[derive(Debug, Clone)]
 pub struct CtxConfig {
+    /// Which tile model to run.
     pub model: ModelKind,
+    /// Training-set size (threshold tuning).
     pub n_train: usize,
+    /// Test-set size (evaluation).
     pub n_test: usize,
+    /// Slide geometry shared by both sets.
     pub params: DatasetParams,
+    /// Master seed for generation and prediction.
     pub seed: u64,
 }
 
@@ -95,13 +104,22 @@ impl Default for CtxConfig {
     }
 }
 
+/// Shared experiment context: generated slide sets with their
+/// prediction caches, ready for replay-based experiments.
 pub struct Ctx {
+    /// The configuration this context was built from.
     pub cfg: CtxConfig,
+    /// The live analyzer (for non-replay experiments).
     pub analyzer: Arc<dyn Analyzer>,
+    /// Stable analyzer name for tables.
     pub analyzer_name: &'static str,
+    /// Training slide recipes.
     pub train_specs: Vec<SlideSpec>,
+    /// Test slide recipes.
     pub test_specs: Vec<SlideSpec>,
+    /// Predictions for the training set.
     pub train_cache: PredCache,
+    /// Predictions for the test set.
     pub test_cache: PredCache,
 }
 

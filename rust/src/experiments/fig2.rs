@@ -17,6 +17,8 @@ use crate::util::png::write_gray_png;
 
 use super::ctx::{make_analyzer, ModelKind};
 
+/// Emit the Fig-2 probability heatmaps (CSV + PNG); returns the
+/// written paths.
 pub fn run(model: ModelKind) -> Result<Vec<String>> {
     let (analyzer, _) = make_analyzer(model, 5)?;
     let p = DatasetParams::default();

@@ -11,14 +11,21 @@ use crate::tuning::empirical;
 use super::ctx::Ctx;
 
 #[derive(Debug, Clone)]
+/// One (workers × distribution × policy) cell of Fig 6.
 pub struct Fig6Row {
+    /// Simulated worker count.
     pub workers: usize,
+    /// Initial tile distribution.
     pub distribution: Distribution,
+    /// Load-balancing policy.
     pub policy: Policy,
+    /// Busiest-worker tile count, averaged over slides.
     pub avg_max_tiles: f64,
+    /// Steals per run, averaged over slides.
     pub avg_steals: f64,
 }
 
+/// Run the Fig-6 load-balancing sweep.
 pub fn run(ctx: &Ctx, workers: &[usize]) -> Result<Vec<Fig6Row>> {
     // Thresholds per §5.1: "the pyramidal execution tree retrieved using
     // thresholds from §4.5" — empirical selection at 0.90.
@@ -67,6 +74,7 @@ pub fn reference_line(ctx: &Ctx) -> f64 {
         / n as f64
 }
 
+/// Print the sweep and write its CSV.
 pub fn print_report(ctx: &Ctx, rows: &[Fig6Row]) -> Result<()> {
     let mut csv = CsvOut::create(
         "fig6_load_balancing.csv",

@@ -25,16 +25,25 @@ use crate::util::stats::Summary;
 use super::ctx::Ctx;
 
 #[derive(Debug, Clone)]
+/// One (slide kind × workers × steal) cell of Fig 7.
 pub struct Fig7Row {
+    /// Which synthetic slide family ran.
     pub slide_kind: &'static str,
+    /// Cluster worker count.
     pub workers: usize,
+    /// Work stealing on/off.
     pub steal: bool,
+    /// Mean wall seconds over the repetitions.
     pub mean_secs: f64,
+    /// Standard deviation of the wall seconds.
     pub std_secs: f64,
+    /// Busiest-worker tile count (mean).
     pub max_tiles: f64,
+    /// Steals per run (mean).
     pub steals: f64,
 }
 
+/// Run the Fig-7 TCP-cluster sweep.
 pub fn run(
     ctx: &Ctx,
     workers: &[usize],
@@ -115,6 +124,7 @@ pub fn run(
     Ok(rows)
 }
 
+/// Print the sweep and write its CSV.
 pub fn print_report(rows: &[Fig7Row]) -> Result<()> {
     let mut csv = CsvOut::create(
         "fig7_cluster.csv",

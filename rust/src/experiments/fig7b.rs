@@ -32,14 +32,18 @@ use crate::util::stats::{timed, Summary};
 use super::ctx::Ctx;
 
 #[derive(Debug, Clone)]
+/// One worker-count cell of the service-vs-one-shot sweep.
 pub struct Fig7bRow {
+    /// Cluster worker count.
     pub workers: usize,
     /// `one-shot` ([`run_cluster`] per slide) or `service` (persistent
     /// cluster behind the multi-slide scheduler).
     pub mode: &'static str,
     /// Wall time for the whole job set.
     pub mean_secs: f64,
+    /// Standard deviation of the wall seconds.
     pub std_secs: f64,
+    /// Jobs analyzed per repetition.
     pub jobs: usize,
 }
 
@@ -66,6 +70,7 @@ fn job_specs() -> Vec<SlideSpec> {
         .collect()
 }
 
+/// Run the Fig-7b service-backed vs one-shot comparison.
 pub fn run(
     ctx: &Ctx,
     workers: &[usize],
@@ -143,6 +148,7 @@ pub fn run(
                             workers: w,
                             steal: true,
                             seed: 7700 + rep as u64,
+                            ..ClusterExecConfig::default()
                         }),
                     },
                 );
@@ -177,6 +183,7 @@ pub fn run(
     Ok(rows)
 }
 
+/// Print the comparison and write its CSV.
 pub fn print_report(rows: &[Fig7bRow]) -> Result<()> {
     let mut csv = CsvOut::create(
         "fig7b_cluster_service.csv",

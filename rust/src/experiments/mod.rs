@@ -3,14 +3,23 @@
 //! CLI; every run prints the paper-style table and writes
 //! `bench_results/*.csv`.
 
+/// Shared slide sets, caches and analyzer plumbing.
 pub mod ctx;
+/// Fig 2: probability heatmaps.
 pub mod fig2;
+/// Figs 3–5: accuracy/performance trade-off curves.
 pub mod fig345;
+/// Fig 6: simulated load-balancing sweep.
 pub mod fig6;
+/// Fig 7: real TCP-cluster sweep.
 pub mod fig7;
+/// Fig 7b: persistent service vs one-shot cluster.
 pub mod fig7b;
+/// Tables 1–2: dataset and model summaries.
 pub mod table12;
+/// Table 3: phase timing breakdown.
 pub mod table3;
+/// §4.6: whole-slide classification.
 pub mod wsi46;
 
 pub use ctx::{Ctx, CtxConfig, ModelKind};

@@ -20,6 +20,7 @@ pub const PAPER_T1: [(usize, usize, usize); 3] = [
     (26134, 38400, 92000),
     (25504, 38400, 72568),
 ];
+/// Paper Table 2 per-level accuracies (train, val, test).
 pub const PAPER_T2: [(f64, f64, f64); 3] = [
     (0.9328, 0.9498, 0.9480),
     (0.9439, 0.9590, 0.9584),
@@ -27,14 +28,19 @@ pub const PAPER_T2: [(f64, f64, f64); 3] = [
 ];
 
 #[derive(Debug, Clone)]
+/// One pyramid level's dataset sizes and accuracies.
 pub struct LevelReport {
+    /// Pyramid level.
     pub level: usize,
+    /// (train, val, test) sample counts, when artifacts exist.
     pub sizes: Option<(usize, usize, usize)>,
+    /// (train, val, test) accuracies, when artifacts exist.
     pub accs: Option<(f64, f64, f64)>,
     /// Accuracy of the deployed (PJRT) model on decisive rust tiles.
     pub rust_acc: Option<f64>,
 }
 
+/// Build Tables 1–2 from the compiled artifacts.
 pub fn run(measure_rust_transfer: bool) -> Result<Vec<LevelReport>> {
     let meta = ArtifactsMeta::load(&artifacts_dir())?;
     let mut reports: Vec<LevelReport> = (0..meta.levels)
@@ -82,6 +88,7 @@ pub fn run(measure_rust_transfer: bool) -> Result<Vec<LevelReport>> {
     Ok(reports)
 }
 
+/// Print the tables and write their CSV.
 pub fn print_report(reports: &[LevelReport]) -> Result<()> {
     let mut csv = CsvOut::create(
         "table1_2.csv",

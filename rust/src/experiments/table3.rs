@@ -14,11 +14,15 @@ use crate::synth::slide_gen::{DatasetParams, SlideKind, SlideSpec};
 
 use super::ctx::{make_analyzer, ModelKind};
 
+/// Phase timing breakdown (Table 3).
 pub struct Table3 {
+    /// One measurement per phase.
     pub rows: Vec<Measurement>,
+    /// Which analyzer produced the timings.
     pub analyzer_name: &'static str,
 }
 
+/// Measure the per-phase costs.
 pub fn run(model: ModelKind, samples: usize, batch: usize) -> Result<Table3> {
     let (analyzer, analyzer_name) = make_analyzer(model, 7)?;
     let p = DatasetParams::default();
@@ -67,6 +71,7 @@ pub fn run(model: ModelKind, samples: usize, batch: usize) -> Result<Table3> {
     })
 }
 
+/// Print the table and write its CSV.
 pub fn print_report(t: &Table3) -> Result<()> {
     let mut csv = CsvOut::create(
         "table3_phases.csv",

@@ -15,12 +15,19 @@ use crate::wsi::{tree_features, BaggingClassifier, BaggingParams, Sample};
 use super::ctx::Ctx;
 
 #[derive(Debug, Clone)]
+/// One row of the §4.6 whole-slide classification comparison.
 pub struct WsiRow {
+    /// Exhaustive vs pyramidal analysis mode.
     pub mode: &'static str,
+    /// Slide-level classification accuracy.
     pub accuracy: f64,
+    /// Slides flagged positive.
     pub detected: usize,
+    /// Correctly flagged positives.
     pub true_pos: usize,
+    /// Incorrectly flagged negatives.
     pub false_pos: usize,
+    /// Tile-count speedup vs exhaustive.
     pub speedup: f64,
 }
 
@@ -33,6 +40,7 @@ fn samples(cache: &PredCache, thresholds: &Thresholds) -> Vec<Sample> {
         .collect()
 }
 
+/// Run the §4.6 comparison on the test set.
 pub fn run(ctx: &Ctx) -> Result<Vec<WsiRow>> {
     let levels = ctx.cfg.params.levels;
     let emp = empirical::select(&ctx.train_cache, levels, 0.90);
@@ -63,6 +71,7 @@ pub fn run(ctx: &Ctx) -> Result<Vec<WsiRow>> {
     Ok(rows)
 }
 
+/// Print the comparison and write its CSV.
 pub fn print_report(rows: &[WsiRow]) -> Result<()> {
     let mut csv = CsvOut::create(
         "wsi_classification.csv",

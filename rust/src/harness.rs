@@ -11,15 +11,22 @@ use crate::util::stats::{fmt_duration, Summary};
 /// Timing result of one benchmark case.
 #[derive(Debug, Clone)]
 pub struct Measurement {
+    /// What was measured.
     pub name: String,
+    /// Repetitions aggregated into the statistics.
     pub samples: usize,
+    /// Mean wall time per repetition.
     pub mean: Duration,
+    /// Standard deviation of the wall time.
     pub std: Duration,
+    /// Fastest repetition.
     pub min: Duration,
+    /// Slowest repetition.
     pub max: Duration,
 }
 
 impl Measurement {
+    /// The measurement as table cells (name, n, mean, std, min, max).
     pub fn row(&self) -> Vec<String> {
         vec![
             self.name.clone(),
@@ -85,6 +92,7 @@ pub struct CsvOut {
 }
 
 impl CsvOut {
+    /// Create `bench_results/<name>` and write the header row.
     pub fn create(name: &str, header: &[&str]) -> std::io::Result<CsvOut> {
         let dir = Path::new("bench_results");
         std::fs::create_dir_all(dir)?;
@@ -94,6 +102,7 @@ impl CsvOut {
         Ok(CsvOut { path, file })
     }
 
+    /// Append one data row.
     pub fn row(&mut self, cells: &[String]) -> std::io::Result<()> {
         // Minimal CSV quoting: cells with commas/quotes get quoted.
         let enc: Vec<String> = cells
@@ -109,6 +118,7 @@ impl CsvOut {
         writeln!(self.file, "{}", enc.join(","))
     }
 
+    /// Where the CSV is being written.
     pub fn path(&self) -> &Path {
         &self.path
     }

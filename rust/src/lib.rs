@@ -12,28 +12,53 @@
 //! * **L3** — this crate: the pyramidal analysis coordinator (the sans-IO
 //!   [`pyramid::PyramidRun`] state machine over unified
 //!   [`pyramid::ExecutionBackend`] substrates), threshold tuning, the
-//!   distributed simulator, the TCP work-stealing cluster, the
-//!   multi-slide analysis service, the whole-slide classifier and the
+//!   distributed simulator, the fault-tolerant TCP work-stealing cluster,
+//!   the multi-slide analysis service, the whole-slide classifier and the
 //!   experiment harness.
 //!
-//! See `DESIGN.md` for the system inventory and the per-experiment index,
-//! and `EXPERIMENTS.md` for paper-vs-measured results.
+//! See `README.md` for the build/quickstart walkthrough, `DESIGN.md` for
+//! the system inventory (and the §10 failure-model spec), and
+//! `EXPERIMENTS.md` for paper-vs-measured results.
 
+#![warn(missing_docs)]
+
+/// Tiny flag/subcommand parser (no `clap` in the offline vendor set).
 pub mod cli;
+/// Decentralized TCP cluster: one-shot §5.4 runs and the persistent,
+/// fault-tolerant execution backend (heartbeats, chunk resubmission,
+/// worker rejoin — DESIGN.md §10).
 pub mod cluster;
+/// Paper figure/table reproductions and their shared context.
 pub mod experiments;
+/// Table/CSV rendering shared by experiments and the service.
 pub mod harness;
+/// Background removal (Otsu) and stain normalization.
 pub mod preprocess;
+/// Distributed-execution simulator: load balancing (§5.1–5.3), the
+/// multi-job workload simulator, and §10 failure injection.
 pub mod sim;
+/// Synthetic gigapixel slides: pyramids, tiles, ground truth.
 pub mod slide;
+/// Synthetic slide generation (specs, textures, tumor fields).
 pub mod synth;
+/// Support code: JSON, PRNG, stats, thread pool, PNG, quickcheck.
 pub mod util;
+/// Whole-slide classification (§4.6): features, trees, bagging.
 pub mod wsi;
+/// Retention/speedup metrics against exhaustive reference runs.
 pub mod metrics;
+/// Tile analyzers: the calibrated oracle, the PJRT model, delay shims.
 pub mod model;
+/// Per-slide prediction caches for post-mortem replay (§4.3).
 pub mod predcache;
+/// PJRT/XLA runtime bindings for the compiled L2 artifacts.
 pub mod runtime;
+/// The pyramidal analysis core: [`pyramid::PyramidRun`], execution
+/// backends, the classic blocking driver and the execution tree.
 pub mod pyramid;
+/// The scheduling-policy core shared by service and simulator.
 pub mod sched;
+/// Multi-slide analysis service: admission, scheduling, pooling.
 pub mod service;
+/// Zoom-threshold tuning (empirical and metric-based, §4.4–4.5).
 pub mod tuning;

@@ -11,6 +11,7 @@
 //!                     [--thresholds thresholds.json]
 //! pyramidai simulate  --workers 1,2,4,8,12 [--model oracle]
 //! pyramidai cluster   --workers 4 [--steal=true] [--per-tile-ms 20]
+//! pyramidai worker    --connect 127.0.0.1:PORT [--model auto]
 //! pyramidai report    [--model auto] [--fast=true]
 //! ```
 
@@ -52,6 +53,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("analyze") => cmd_analyze(args),
         Some("simulate") => cmd_simulate(args),
         Some("cluster") => cmd_cluster(args),
+        Some("worker") => cmd_worker(args),
         Some("serve") => cmd_serve(args),
         Some("report") => cmd_report(args),
         Some(other) => Err(anyhow!("unknown subcommand {other:?}\n{USAGE}")),
@@ -74,11 +76,16 @@ subcommands:
   cluster   run the TCP work-stealing cluster     (--workers --per-tile-ms --reps
                                                    --compare-service=true for the Fig-7b
                                                    service-vs-one-shot sweep)
+  worker    standalone cluster worker process     (--connect host:port --model
+                                                   --analyzer-seed; joins a serve
+                                                   --backend cluster leader and serves
+                                                   chunks until shutdown)
   serve     multi-slide analysis service          (--jobs --workers --backend pool|cluster|replay
                                                    --policy fifo|priority|edf|wfs[:t=w,..][;quota=n]
                                                    --preempt --deadline-ms --max-in-flight
                                                    --queue-cap --batch --coalesce --per-tile-ms
-                                                   --tenants --seed --model --csv)
+                                                   --tenants --seed --model --csv
+                                                   --external-workers --heartbeat-ms)
   report    regenerate every paper table/figure   (--model --fast)";
 
 fn model_kind(args: &Args) -> Result<ModelKind> {
@@ -275,6 +282,20 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_worker(args: &Args) -> Result<()> {
+    let connect = args.require("connect")?;
+    let model = model_kind(args)?;
+    // Must match the leader's analyzer for byte-identical trees — the
+    // default mirrors `make_analyzer`'s everywhere else.
+    let analyzer_seed = args.u64_or("analyzer-seed", 7)?;
+    args.finish()?;
+    let (analyzer, name) = experiments::ctx::make_analyzer(model, analyzer_seed)?;
+    eprintln!("worker process ({name}) connecting to {connect}…");
+    let id = pyramidai::cluster::run_standalone_worker(&connect, analyzer, analyzer_seed)?;
+    eprintln!("worker {id} shut down cleanly");
+    Ok(())
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     use pyramidai::cluster::ClusterExecConfig;
     use pyramidai::model::DelayAnalyzer;
@@ -304,6 +325,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let seed = args.u64_or("seed", 2025)?;
     let backend = args.str_or("backend", "pool");
     let coalesce = args.str_or("coalesce", "true") != "false";
+    // Fault-tolerance knobs (cluster backend): external OS-process
+    // workers spawned alongside the in-process ones, and the liveness
+    // probe interval (DESIGN.md §10).
+    let external_workers = args.usize_or("external-workers", 0)?;
+    let heartbeat_ms = args.u64_or("heartbeat-ms", 25)?;
     let model = model_kind(args)?;
     let params = dataset_params(args)?;
     let csv = args.bool("csv");
@@ -325,6 +351,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
             workers,
             steal: true,
             seed,
+            heartbeat: Duration::from_millis(heartbeat_ms.max(1)),
+            external_workers,
+            // External worker processes must build the *same* analyzer
+            // as the leader (same resolved model, same seed) or their
+            // chunks would silently produce a mixed tree.
+            external_args: vec![
+                "--model".to_string(),
+                name.to_string(),
+                "--analyzer-seed".to_string(),
+                "7".to_string(),
+            ],
+            ..ClusterExecConfig::default()
         }),
         other => return Err(anyhow!("unknown --backend {other:?} (pool|cluster|replay)")),
     };
@@ -407,6 +445,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
     svc_metrics::print_report(&report.results, &report.metrics);
     if report.pool_panics > 0 {
         println!("pool absorbed {} analyzer panics", report.pool_panics);
+    }
+    // Recovery visibility (§10): operators see worker churn and the
+    // resubmissions that papered over it, instead of silent self-healing.
+    if let Some(f) = report.cluster_faults {
+        println!(
+            "cluster recovery: {} worker(s) lost, {} joined, {} chunk(s) resubmitted, {} abandoned",
+            f.workers_lost, f.workers_joined, f.chunks_resubmitted, f.chunks_abandoned
+        );
     }
     if csv {
         let path = svc_metrics::write_csv(&report.results, "service_jobs.csv")?;

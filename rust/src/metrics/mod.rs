@@ -1,6 +1,7 @@
 //! Evaluation metrics: positive retention rate and speedup (the paper's
 //! two axes), plus precision/recall counts shared with the tuning code.
 
+/// Positive retention and tile-count speedup vs exhaustive runs.
 pub mod retention;
 
 pub use retention::{retention_and_speedup, RunMetrics};

@@ -10,7 +10,9 @@
 //!   optionally Macenko-normalizes them, and runs the AOT-compiled
 //!   TinyInception classifier through the PJRT runtime (`crate::runtime`).
 
+/// Calibrated synthetic analyzer (no artifacts needed).
 pub mod oracle;
+/// The compiled TinyInception classifier over PJRT.
 pub mod pjrt;
 
 use std::time::Duration;
@@ -48,11 +50,14 @@ impl<A: Analyzer + ?Sized> Analyzer for std::sync::Arc<A> {
 /// so worker threads overlap like the paper's separate machines and the
 /// Fig. 7 scaling shape is measurable.
 pub struct DelayAnalyzer<A: Analyzer> {
+    /// The analyzer actually producing probabilities.
     pub inner: A,
+    /// Added latency per tile.
     pub per_tile: Duration,
 }
 
 impl<A: Analyzer> DelayAnalyzer<A> {
+    /// Wrap `inner`, sleeping `per_tile` per analyzed tile.
     pub fn new(inner: A, per_tile: Duration) -> Self {
         DelayAnalyzer { inner, per_tile }
     }

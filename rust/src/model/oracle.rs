@@ -34,12 +34,14 @@ const SAT: f64 = 0.25;
 const DISTRACTOR_GAIN: [f64; 8] = [0.3, 1.2, 2.1, 2.3, 2.5, 2.7, 2.9, 3.1];
 
 #[derive(Debug, Clone)]
+/// The calibrated logistic-plus-noise tile model.
 pub struct OracleAnalyzer {
     /// Model seed — analogous to training randomness; fixed per experiment.
     pub seed: u64,
 }
 
 impl OracleAnalyzer {
+    /// New oracle with the given model seed.
     pub fn new(seed: u64) -> Self {
         OracleAnalyzer { seed }
     }

@@ -16,6 +16,7 @@ use crate::slide::tile::TileId;
 
 use super::Analyzer;
 
+/// Tile analyzer running the compiled L2 model through PJRT.
 pub struct PjrtAnalyzer {
     registry: Arc<Registry>,
     /// Apply Macenko stain normalization before inference (paper §4.1;
@@ -24,6 +25,7 @@ pub struct PjrtAnalyzer {
 }
 
 impl PjrtAnalyzer {
+    /// Load the compiled artifacts from `artifacts_dir`.
     pub fn load(artifacts_dir: &Path) -> Result<PjrtAnalyzer> {
         Ok(PjrtAnalyzer {
             registry: Arc::new(Registry::load_dir(artifacts_dir)?),
@@ -31,11 +33,13 @@ impl PjrtAnalyzer {
         })
     }
 
+    /// Toggle stain normalization before inference (builder style).
     pub fn with_stain_normalization(mut self, on: bool) -> Self {
         self.stain_normalize = on;
         self
     }
 
+    /// Build from an already-loaded artifact registry.
     pub fn from_registry(registry: Arc<Registry>) -> PjrtAnalyzer {
         PjrtAnalyzer {
             registry,
@@ -43,6 +47,7 @@ impl PjrtAnalyzer {
         }
     }
 
+    /// The underlying artifact registry.
     pub fn registry(&self) -> &Arc<Registry> {
         &self.registry
     }

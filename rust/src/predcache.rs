@@ -21,6 +21,7 @@ use crate::util::json::{Json, JsonError};
 /// Cached per-tile data.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct TilePred {
+    /// Predicted tumor probability.
     pub prob: f32,
     /// Ground-truth tumor label at this tile's level.
     pub tumor: bool,
@@ -29,6 +30,7 @@ pub struct TilePred {
 /// All predictions for one slide.
 #[derive(Debug, Clone)]
 pub struct SlidePredictions {
+    /// The slide recipe the predictions were collected from.
     pub spec: SlideSpec,
     /// Lowest-level working set after background removal.
     pub initial: Vec<TileId>,
@@ -104,6 +106,7 @@ impl SlidePredictions {
         self.initial.len() * f2.pow(self.spec.levels as u32 - 1)
     }
 
+    /// Serialize for the on-disk cache format.
     pub fn to_json(&self) -> Json {
         // Compact encoding: per tile [level, tx, ty, prob, tumor].
         let mut entries: Vec<(&TileId, &TilePred)> = self.preds.iter().collect();
@@ -137,6 +140,7 @@ impl SlidePredictions {
             .set("preds", Json::Arr(preds))
     }
 
+    /// Parse one slide's entry of the on-disk cache format.
     pub fn from_json(v: &Json) -> Result<SlidePredictions, JsonError> {
         let spec = SlideSpec::from_json(v.get("spec")?)?;
         let initial = v
@@ -174,10 +178,12 @@ impl SlidePredictions {
 /// A cache over a whole slide set, with file I/O.
 #[derive(Debug, Clone, Default)]
 pub struct PredCache {
+    /// Per-slide prediction sets, in collection order.
     pub slides: Vec<SlidePredictions>,
 }
 
 impl PredCache {
+    /// Collect predictions for a whole slide set, serially.
     pub fn collect_set(
         slides: &[Slide],
         analyzer: &dyn Analyzer,
@@ -220,6 +226,7 @@ impl PredCache {
             .collect()
     }
 
+    /// Serialize the whole cache.
     pub fn to_json(&self) -> Json {
         Json::obj().set(
             "slides",
@@ -227,6 +234,7 @@ impl PredCache {
         )
     }
 
+    /// Parse a whole cache.
     pub fn from_json(v: &Json) -> Result<PredCache, JsonError> {
         Ok(PredCache {
             slides: v
@@ -238,10 +246,12 @@ impl PredCache {
         })
     }
 
+    /// Write the cache to `path` as pretty JSON.
     pub fn save(&self, path: &Path) -> std::io::Result<()> {
         std::fs::write(path, self.to_json().to_string())
     }
 
+    /// Load a cache written by [`PredCache::save`].
     pub fn load(path: &Path) -> anyhow::Result<PredCache> {
         let text = std::fs::read_to_string(path)?;
         Ok(PredCache::from_json(&Json::parse(&text)?)?)

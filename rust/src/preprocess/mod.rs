@@ -1,7 +1,9 @@
 //! Preprocessing substrates (substitution S5 in DESIGN.md): Otsu
 //! background removal and Macenko stain normalization, from scratch.
 
+/// Otsu-threshold background removal.
 pub mod otsu;
+/// Stain normalization for the compiled model.
 pub mod stain;
 
 pub use otsu::{background_removal, otsu_threshold, BackgroundMask};

@@ -8,6 +8,7 @@
 use crate::slide::pyramid::Slide;
 use crate::slide::tile::TileId;
 
+/// Histogram resolution used by the Otsu search.
 pub const HIST_BINS: usize = 256;
 
 /// Otsu threshold over a set of samples in [0,1]: maximizes between-class
@@ -69,6 +70,7 @@ pub fn otsu_from_hist(hist: &[u64; HIST_BINS]) -> f64 {
 /// Result of background removal on a slide.
 #[derive(Debug, Clone)]
 pub struct BackgroundMask {
+    /// The Otsu threshold that produced the mask.
     pub threshold: f64,
     /// Tiles at the lowest level judged to contain tissue.
     pub tissue_tiles: Vec<TileId>,

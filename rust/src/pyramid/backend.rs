@@ -31,7 +31,9 @@ use super::tree::ExecTree;
 /// A finished request: the probabilities for its tiles, in tile order.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Completion {
+    /// Id of the request these probabilities answer.
     pub id: RequestId,
+    /// One probability per tile, in the request's tile order.
     pub probs: Vec<f32>,
 }
 
@@ -41,6 +43,39 @@ pub struct Completion {
 /// submission); results come back through `poll`. Implementations decide
 /// where the work runs — threads, a prediction cache, TCP workers or a
 /// simulation.
+///
+/// # Example
+///
+/// A backend is just "where probabilities come from" — a toy one that
+/// answers 0.0 for every tile (so nothing ever zooms) is a few lines,
+/// and [`run_on_backend`] drives a whole run over it:
+///
+/// ```
+/// use pyramidai::pyramid::backend::run_on_backend;
+/// use pyramidai::pyramid::{Completion, ExecutionBackend, FrontierRequest, Thresholds};
+/// use pyramidai::slide::tile::TileId;
+///
+/// struct Flat(Vec<Completion>);
+///
+/// impl ExecutionBackend for Flat {
+///     fn dispatch(&mut self, req: FrontierRequest) {
+///         let probs = vec![0.0; req.tiles.len()];
+///         self.0.push(Completion { id: req.id, probs });
+///     }
+///     fn poll(&mut self, _block: bool) -> Option<Completion> {
+///         self.0.pop()
+///     }
+///     fn in_flight(&self) -> usize {
+///         self.0.len()
+///     }
+/// }
+///
+/// let tree = run_on_backend(
+///     "doc", 2, vec![TileId::new(1, 0, 0)],
+///     &Thresholds::uniform(2, 0.5), 0, &mut Flat(Vec::new()),
+/// ).unwrap();
+/// assert_eq!(tree.total_analyzed(), 1); // 0.0 < 0.5: never zoomed in
+/// ```
 pub trait ExecutionBackend {
     /// Submit one request for execution.
     fn dispatch(&mut self, req: FrontierRequest);
@@ -52,6 +87,16 @@ pub trait ExecutionBackend {
 
     /// Requests dispatched but not yet returned by `poll`.
     fn in_flight(&self) -> usize;
+
+    /// Drain the ids of requests whose execution the backend has given up
+    /// on (e.g. every cluster worker that could run them died — see
+    /// [`crate::cluster::ExecEvent::Lost`]). Such requests are no longer
+    /// counted in [`ExecutionBackend::in_flight`]; callers requeue them
+    /// into their [`PyramidRun`] and re-dispatch. Default: none — only
+    /// fallible substrates override this.
+    fn take_lost(&mut self) -> Vec<RequestId> {
+        Vec::new()
+    }
 }
 
 /// Why [`drive`] could not finish a run.
@@ -82,9 +127,17 @@ impl From<FeedError> for DriveError {
 }
 
 /// Drive one run to completion on one backend: issue every available
-/// request, then block for completions, until the run finishes.
+/// request, then block for completions, until the run finishes. Requests
+/// the backend reports as lost ([`ExecutionBackend::take_lost`]) are
+/// requeued into the run and re-dispatched, so a fault-tolerant backend's
+/// recovery rides the ordinary dispatch path; the loop errors with
+/// [`DriveError::Stalled`] only when the backend stops producing both
+/// completions and loss reports with work still pending.
 pub fn drive(run: &mut PyramidRun, backend: &mut dyn ExecutionBackend) -> Result<(), DriveError> {
     loop {
+        for id in backend.take_lost() {
+            run.requeue(id)?;
+        }
         while let Some(req) = run.next_request() {
             backend.dispatch(req);
         }
@@ -93,7 +146,15 @@ pub fn drive(run: &mut PyramidRun, backend: &mut dyn ExecutionBackend) -> Result
         }
         match backend.poll(true) {
             Some(c) => run.feed(c.id, c.probs)?,
-            None => return Err(DriveError::Stalled),
+            None => {
+                let lost = backend.take_lost();
+                if lost.is_empty() {
+                    return Err(DriveError::Stalled);
+                }
+                for id in lost {
+                    run.requeue(id)?;
+                }
+            }
         }
     }
 }
@@ -184,6 +245,7 @@ pub struct ReplayBackend<'a> {
 }
 
 impl<'a> ReplayBackend<'a> {
+    /// Replay against one slide's prediction cache.
     pub fn new(preds: &'a SlidePredictions) -> ReplayBackend<'a> {
         ReplayBackend {
             preds,
@@ -273,6 +335,59 @@ mod tests {
         )
         .unwrap();
         assert_eq!(tree.nodes, expect.nodes);
+    }
+
+    #[test]
+    fn drive_requeues_lost_requests_and_tree_is_unchanged() {
+        // A flaky substrate that silently loses the first request of the
+        // run and reports it via take_lost — drive must requeue and
+        // re-dispatch it, converging on the byte-identical tree.
+        struct LoseFirst<'a> {
+            inner: ReplayBackend<'a>,
+            lost: Vec<RequestId>,
+            dropped: bool,
+        }
+        impl ExecutionBackend for LoseFirst<'_> {
+            fn dispatch(&mut self, req: FrontierRequest) {
+                if !self.dropped {
+                    self.dropped = true;
+                    self.lost.push(req.id);
+                } else {
+                    self.inner.dispatch(req);
+                }
+            }
+            fn poll(&mut self, block: bool) -> Option<Completion> {
+                self.inner.poll(block)
+            }
+            fn in_flight(&self) -> usize {
+                self.inner.in_flight()
+            }
+            fn take_lost(&mut self) -> Vec<RequestId> {
+                std::mem::take(&mut self.lost)
+            }
+        }
+
+        let analyzer = OracleAnalyzer::new(1);
+        let s = slide();
+        let thr = Thresholds::uniform(3, 0.4);
+        let expect = run_pyramidal(&s, &analyzer, &thr, 8);
+        let preds = SlidePredictions::collect(&s, &analyzer, 16);
+        let mut backend = LoseFirst {
+            inner: ReplayBackend::new(&preds),
+            lost: Vec::new(),
+            dropped: false,
+        };
+        let tree = run_on_backend(
+            s.id(),
+            s.levels(),
+            expect.initial.clone(),
+            &thr,
+            3,
+            &mut backend,
+        )
+        .unwrap();
+        assert!(backend.dropped, "the fault was actually injected");
+        assert_eq!(tree.nodes, expect.nodes, "recovery changed the tree");
     }
 
     #[test]

@@ -14,9 +14,13 @@
 //!   `run_with_provider`, `run_reference`) kept for existing callers.
 //! * [`tree`] — [`ExecTree`], consistency checking, thresholds.
 
+/// The [`ExecutionBackend`] trait and pool/replay substrates.
 pub mod backend;
+/// Blocking compatibility drivers over [`PyramidRun`].
 pub mod driver;
+/// The sans-IO [`PyramidRun`] state machine.
 pub mod run;
+/// [`ExecTree`], thresholds and consistency checking.
 pub mod tree;
 
 pub use backend::{

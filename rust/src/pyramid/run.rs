@@ -32,8 +32,11 @@ pub type RequestId = u64;
 /// The executor must return exactly one probability per tile, in order.
 #[derive(Debug, Clone, PartialEq)]
 pub struct FrontierRequest {
+    /// Id to feed the probabilities back under.
     pub id: RequestId,
+    /// Pyramid level of every tile in the chunk.
     pub level: usize,
+    /// The chunk's tiles; probabilities must match this order.
     pub tiles: Vec<TileId>,
 }
 
@@ -70,6 +73,32 @@ impl std::error::Error for FeedError {}
 
 /// The pyramidal analysis of one slide as a steppable state machine.
 /// See the module docs for the protocol.
+///
+/// # Example
+///
+/// Drive a two-level pyramid by hand — pull a request, feed its
+/// probabilities, repeat until complete:
+///
+/// ```
+/// use pyramidai::pyramid::{PyramidRun, Thresholds};
+/// use pyramidai::slide::tile::TileId;
+///
+/// // One initial tile at the top level; zoom threshold 0.5 everywhere.
+/// let thr = Thresholds::uniform(2, 0.5);
+/// let mut run = PyramidRun::new("doc", 2, vec![TileId::new(1, 0, 0)], thr, 0);
+///
+/// let req = run.next_request().expect("top frontier");
+/// assert_eq!(req.level, 1);
+/// run.feed(req.id, vec![0.9]).unwrap(); // 0.9 ≥ 0.5 → zoom in
+///
+/// let req = run.next_request().expect("level-0 frontier");
+/// assert_eq!(req.tiles.len(), 4); // the four children
+/// run.feed(req.id, vec![0.1, 0.2, 0.3, 0.4]).unwrap();
+///
+/// assert!(run.is_complete());
+/// let tree = run.finish();
+/// assert_eq!(tree.total_analyzed(), 5);
+/// ```
 pub struct PyramidRun {
     thresholds: Thresholds,
     /// Max tiles per request (0 = whole frontier in one request).
@@ -87,6 +116,9 @@ pub struct PyramidRun {
     fed: usize,
     /// Issued-but-unfed requests: id → (start, len) into `frontier`.
     outstanding: HashMap<RequestId, (usize, usize)>,
+    /// Frontier spans handed back by [`PyramidRun::requeue`] (lost
+    /// executions), re-issued under fresh ids before any new span.
+    requeued: Vec<(usize, usize)>,
     next_id: RequestId,
     complete: bool,
 }
@@ -125,6 +157,7 @@ impl PyramidRun {
             probs: vec![None; n],
             fed: 0,
             outstanding: HashMap::new(),
+            requeued: Vec::new(),
             next_id: 0,
             complete,
         }
@@ -133,15 +166,23 @@ impl PyramidRun {
     /// The next chunk of analysis work, or `None` when there is nothing to
     /// issue *right now*: either every tile of the current frontier is
     /// already in flight (feed them to make progress) or the run is
-    /// complete.
+    /// complete. Spans handed back by [`PyramidRun::requeue`] are
+    /// re-issued (under fresh ids) before any new span.
     pub fn next_request(&mut self) -> Option<FrontierRequest> {
-        if self.complete || self.issued >= self.frontier.len() {
+        if self.complete {
             return None;
         }
-        let start = self.issued;
-        let cap = if self.chunk == 0 { usize::MAX } else { self.chunk };
-        let len = (self.frontier.len() - start).min(cap);
-        self.issued += len;
+        let (start, len) = if let Some(span) = self.requeued.pop() {
+            span
+        } else if self.issued < self.frontier.len() {
+            let start = self.issued;
+            let cap = if self.chunk == 0 { usize::MAX } else { self.chunk };
+            let len = (self.frontier.len() - start).min(cap);
+            self.issued += len;
+            (start, len)
+        } else {
+            return None;
+        };
         let id = self.next_id;
         self.next_id += 1;
         self.outstanding.insert(id, (start, len));
@@ -150,6 +191,22 @@ impl PyramidRun {
             level: self.level,
             tiles: self.frontier[start..start + len].to_vec(),
         })
+    }
+
+    /// Hand an issued-but-unfed request back to the run because its
+    /// execution was lost (a dead worker, a vanished backend). The span
+    /// returns to the issue pool and comes back out of
+    /// [`PyramidRun::next_request`] under a fresh id, so recovery reuses
+    /// the ordinary dispatch path and the resulting tree is unchanged.
+    /// Errors with [`FeedError::UnknownRequest`] for ids never issued or
+    /// already fed.
+    pub fn requeue(&mut self, id: RequestId) -> Result<(), FeedError> {
+        let span = self
+            .outstanding
+            .remove(&id)
+            .ok_or(FeedError::UnknownRequest(id))?;
+        self.requeued.push(span);
+        Ok(())
     }
 
     /// Return the probabilities for one issued request (any order). When
@@ -370,6 +427,48 @@ mod tests {
     #[should_panic(expected = "at least one pyramid level")]
     fn zero_levels_rejected() {
         PyramidRun::new("zero", 0, Vec::new(), Thresholds { zoom: vec![] }, 0);
+    }
+
+    #[test]
+    fn requeued_requests_reissue_under_fresh_ids_and_tree_is_unchanged() {
+        // Simulate lost executions: the first request of every frontier is
+        // requeued once before being served — the run must re-issue the
+        // same span under a new id and converge on the byte-identical
+        // tree (the §10 worker-loss recovery contract).
+        let s = slide();
+        let a = OracleAnalyzer::new(1);
+        let expect = run_pyramidal(&s, &a, &thr(), 8);
+
+        let mut run = PyramidRun::new(s.id(), s.levels(), expect.initial.clone(), thr(), 5);
+        while !run.is_complete() {
+            let mut reqs = Vec::new();
+            while let Some(r) = run.next_request() {
+                reqs.push(r);
+            }
+            assert!(!reqs.is_empty());
+            // Lose the first chunk of the frontier...
+            let lost = reqs.remove(0);
+            run.requeue(lost.id).unwrap();
+            // ...its id is spent: feeding or re-requeueing it must fail.
+            assert_eq!(
+                run.feed(lost.id, vec![0.5; lost.tiles.len()]),
+                Err(FeedError::UnknownRequest(lost.id))
+            );
+            assert_eq!(run.requeue(lost.id), Err(FeedError::UnknownRequest(lost.id)));
+            // The span comes back out under a fresh id, same tiles.
+            let retry = run.next_request().expect("requeued span re-issues");
+            assert!(retry.id > lost.id, "fresh id for the retried span");
+            assert_eq!(retry.tiles, lost.tiles);
+            assert_eq!(retry.level, lost.level);
+            reqs.push(retry);
+            for req in reqs {
+                let ps = a.analyze(&s, req.level, &req.tiles);
+                run.feed(req.id, ps).unwrap();
+            }
+        }
+        let tree = run.finish();
+        assert_eq!(tree.nodes, expect.nodes, "requeues must not change the tree");
+        tree.check_consistency().unwrap();
     }
 
     #[test]

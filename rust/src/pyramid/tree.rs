@@ -11,7 +11,9 @@ use crate::util::json::{Json, JsonError};
 /// One analyzed tile.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct ExecNode {
+    /// The analyzed tile.
     pub tile: TileId,
+    /// Predicted tumor probability.
     pub prob: f32,
     /// Did the decision block trigger a zoom-in (spawn f² children)?
     pub zoom: bool,
@@ -20,6 +22,7 @@ pub struct ExecNode {
 /// Execution record of one pyramidal (or reference) analysis of one slide.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct ExecTree {
+    /// Which slide this execution analyzed.
     pub slide_id: String,
     /// Number of pyramid levels.
     pub levels: usize,
@@ -31,6 +34,7 @@ pub struct ExecTree {
 }
 
 impl ExecTree {
+    /// Empty tree for a slide with `levels` pyramid levels.
     pub fn new(slide_id: impl Into<String>, levels: usize) -> ExecTree {
         ExecTree {
             slide_id: slide_id.into(),
@@ -102,6 +106,7 @@ impl ExecTree {
         Ok(())
     }
 
+    /// Serialize (cluster wire format and experiment dumps).
     pub fn to_json(&self) -> Json {
         let nodes: Vec<Json> = self
             .nodes
@@ -140,6 +145,7 @@ impl ExecTree {
             .set("initial", Json::Arr(initial))
     }
 
+    /// Parse a tree serialized by [`ExecTree::to_json`].
     pub fn from_json(v: &Json) -> Result<ExecTree, JsonError> {
         let levels = v.get("levels")?.as_usize()?;
         let mut tree = ExecTree::new(v.get("slide_id")?.as_str()?, levels);
@@ -174,6 +180,7 @@ impl ExecTree {
 /// [`POSITIVE_THRESHOLD`].
 #[derive(Debug, Clone, PartialEq)]
 pub struct Thresholds {
+    /// Per-level zoom thresholds, indexed by level.
     pub zoom: Vec<f64>,
 }
 
@@ -200,6 +207,7 @@ impl Thresholds {
         }
     }
 
+    /// Serialize for threshold files.
     pub fn to_json(&self) -> Json {
         Json::obj().set(
             "zoom",
@@ -207,6 +215,7 @@ impl Thresholds {
         )
     }
 
+    /// Parse thresholds written by [`Thresholds::to_json`].
     pub fn from_json(v: &Json) -> Result<Thresholds, JsonError> {
         let zoom = v
             .get("zoom")?

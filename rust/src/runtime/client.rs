@@ -7,6 +7,7 @@
 
 use once_cell::sync::OnceCell;
 
+/// Process-wide PJRT client shared by every executable.
 pub struct SharedClient(pub xla::PjRtClient);
 
 // SAFETY: PJRT clients are documented thread-safe (the C++

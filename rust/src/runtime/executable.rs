@@ -12,8 +12,11 @@ use anyhow::{anyhow, Result};
 /// A compiled classifier for one (level, batch) pair.
 pub struct Executable {
     exe: xla::PjRtLoadedExecutable,
+    /// Pyramid level this executable serves.
     pub level: usize,
+    /// Compiled batch size.
     pub batch: usize,
+    /// Tile edge in pixels.
     pub tile_px: usize,
     /// Floats per tile (tile_px² · 3).
     pub tile_len: usize,

@@ -2,8 +2,11 @@
 //! `python/compile/aot.py`), compile on the CPU PJRT client, execute from
 //! the L3 hot path. Python never runs here.
 
+/// Shared PJRT client.
 pub mod client;
+/// One compiled per-level executable.
 pub mod executable;
+/// Artifact discovery and the executable registry.
 pub mod registry;
 
 pub use registry::{ArtifactsMeta, Registry};

@@ -21,16 +21,21 @@ use super::executable::Executable;
 /// Metadata parsed from `artifacts/meta.json`.
 #[derive(Debug, Clone)]
 pub struct ArtifactsMeta {
+    /// Tile edge in pixels.
     pub tile_px: usize,
+    /// Pyramid depth the model was trained for.
     pub levels: usize,
+    /// Batch sizes compiled per level.
     pub batch_sizes: Vec<usize>,
     /// Per-level (train, val, test) accuracy when the build step trained
     /// fresh weights (Table 2 data).
     pub accuracies: Vec<Option<(f64, f64, f64)>>,
+    /// (train, val, test) sample counts per level, if recorded.
     pub dataset_sizes: Vec<Option<(usize, usize, usize)>>,
 }
 
 impl ArtifactsMeta {
+    /// Load `meta.json` from the artifacts directory.
     pub fn load(dir: &Path) -> Result<ArtifactsMeta> {
         let text = std::fs::read_to_string(dir.join("meta.json"))
             .with_context(|| format!("read {}/meta.json — run `make artifacts`", dir.display()))?;
@@ -69,6 +74,7 @@ impl ArtifactsMeta {
 
 /// All compiled executables, indexed by level then batch (ascending).
 pub struct Registry {
+    /// The artifacts' metadata.
     pub meta: ArtifactsMeta,
     /// `per_level[level]` sorted by batch size ascending.
     per_level: Vec<Vec<Executable>>,
@@ -125,10 +131,12 @@ impl Registry {
         Ok(())
     }
 
+    /// Pyramid depth of the loaded model.
     pub fn levels(&self) -> usize {
         self.per_level.len()
     }
 
+    /// Tile edge in pixels of the loaded model.
     pub fn tile_px(&self) -> usize {
         self.meta.tile_px
     }

@@ -76,10 +76,12 @@ pub struct SchedContext<'a> {
 }
 
 impl<'a> SchedContext<'a> {
+    /// Tiles consumed by `tenant` so far.
     pub fn tenant_usage(&self, tenant: &str) -> u64 {
         self.usage.get(tenant).copied().unwrap_or(0)
     }
 
+    /// `tenant`'s jobs currently in the running set.
     pub fn tenant_running(&self, tenant: &str) -> usize {
         self.running_per_tenant.get(tenant).copied().unwrap_or(0)
     }
@@ -101,6 +103,29 @@ impl<'a> SchedContext<'a> {
 /// context: ties always fall back to the lowest `job` id. That is what
 /// lets the simulator and the service reproduce each other's decisions
 /// exactly.
+///
+/// # Example
+///
+/// Policies rank plain candidate snapshots, so they can be exercised
+/// without a service or simulator in sight:
+///
+/// ```
+/// use std::collections::HashMap;
+/// use pyramidai::sched::{Fifo, SchedCandidate, SchedContext, SchedulingPolicy, StrictPriority};
+///
+/// let cands = [
+///     SchedCandidate { job: 2, priority_rank: 0, tenant: "a", arrival: 5, deadline: None },
+///     SchedCandidate { job: 7, priority_rank: 9, tenant: "b", arrival: 9, deadline: None },
+/// ];
+/// let (usage, running) = (HashMap::new(), HashMap::new());
+/// let ctx = SchedContext { usage: &usage, running_per_tenant: &running, now: 10 };
+///
+/// // FIFO picks the lowest job id; strict priority the highest rank.
+/// assert_eq!(Fifo.select(&cands, &ctx), Some(0));
+/// assert_eq!(StrictPriority.select(&cands, &ctx), Some(1));
+/// // ...and rank 9 would preempt rank 0 at its next frontier boundary.
+/// assert!(StrictPriority.preempts(&cands[1], &cands[0], &ctx));
+/// ```
 pub trait SchedulingPolicy: Send {
     /// Stable name for tables/CSV.
     fn name(&self) -> &str;
@@ -285,6 +310,7 @@ impl WeightedFairShare {
         }
     }
 
+    /// The tenant's fair-share weight (default for unknowns).
     pub fn weight(&self, tenant: &str) -> f64 {
         self.weights
             .get(tenant)
@@ -344,13 +370,18 @@ impl SchedulingPolicy for Edf {
 /// Which policy family a [`PolicySpec`] builds.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum PolicyKind {
+    /// Strict submission order.
     Fifo,
+    /// Higher priority rank first; preempts lower ranks.
     Priority,
+    /// Per-tenant weighted fair share with optional quotas.
     WeightedFairShare,
+    /// Earliest absolute deadline first.
     Edf,
 }
 
 impl PolicyKind {
+    /// Stable name for CLI flags and tables.
     pub fn as_str(self) -> &'static str {
         match self {
             PolicyKind::Fifo => "fifo",
@@ -380,6 +411,7 @@ impl PolicyKind {
 /// (the PR-1 policy name).
 #[derive(Debug, Clone, PartialEq)]
 pub struct PolicySpec {
+    /// Which policy family to build.
     pub kind: PolicyKind,
     /// Per-tenant weights (WFS only; empty = every tenant weight 1).
     pub weights: Vec<(String, f64)>,
@@ -388,6 +420,7 @@ pub struct PolicySpec {
 }
 
 impl PolicySpec {
+    /// Strict submission order.
     pub fn fifo() -> PolicySpec {
         PolicySpec {
             kind: PolicyKind::Fifo,
@@ -396,6 +429,7 @@ impl PolicySpec {
         }
     }
 
+    /// Higher priority rank first.
     pub fn priority() -> PolicySpec {
         PolicySpec {
             kind: PolicyKind::Priority,
@@ -404,6 +438,7 @@ impl PolicySpec {
         }
     }
 
+    /// Earliest deadline first.
     pub fn edf() -> PolicySpec {
         PolicySpec {
             kind: PolicyKind::Edf,
@@ -412,6 +447,7 @@ impl PolicySpec {
         }
     }
 
+    /// Weighted fair share with the given per-tenant weights.
     pub fn wfs(weights: impl IntoIterator<Item = (String, f64)>) -> PolicySpec {
         PolicySpec {
             kind: PolicyKind::WeightedFairShare,
@@ -420,6 +456,7 @@ impl PolicySpec {
         }
     }
 
+    /// Add a per-tenant running-jobs quota (builder style).
     pub fn with_quota(mut self, quota: usize) -> PolicySpec {
         self.quota = Some(quota);
         self

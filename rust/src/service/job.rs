@@ -21,8 +21,11 @@ pub type JobId = u64;
 /// next frontier boundary.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Priority {
+    /// Background/batch work.
     Low,
+    /// The default.
     Normal,
+    /// Urgent (e.g. intra-operative) work.
     High,
 }
 
@@ -36,6 +39,7 @@ impl Priority {
         }
     }
 
+    /// Stable name for tables/CSV.
     pub fn as_str(self) -> &'static str {
         match self {
             Priority::Low => "low",
@@ -44,6 +48,7 @@ impl Priority {
         }
     }
 
+    /// Inverse of [`Priority::as_str`].
     pub fn from_str(s: &str) -> Option<Priority> {
         match s {
             "low" => Some(Priority::Low),
@@ -65,6 +70,7 @@ pub enum JobSource {
 }
 
 impl JobSource {
+    /// The slide this source analyzes.
     pub fn slide_id(&self) -> &str {
         match self {
             JobSource::Spec(s) => &s.id,
@@ -72,6 +78,7 @@ impl JobSource {
         }
     }
 
+    /// Pyramid depth of the source slide.
     pub fn levels(&self) -> usize {
         match self {
             JobSource::Spec(s) => s.levels,
@@ -92,8 +99,11 @@ impl std::fmt::Debug for JobSource {
 /// One analysis request.
 #[derive(Debug, Clone)]
 pub struct JobSpec {
+    /// Where the pixels/probabilities come from.
     pub source: JobSource,
+    /// Per-level zoom thresholds for the run.
     pub thresholds: Thresholds,
+    /// Scheduling priority.
     pub priority: Priority,
     /// Fair-share accounting key (a user, a lab, a billing account…).
     pub tenant: String,
@@ -118,16 +128,19 @@ impl JobSpec {
         }
     }
 
+    /// Set the priority (builder style).
     pub fn with_priority(mut self, p: Priority) -> JobSpec {
         self.priority = p;
         self
     }
 
+    /// Set the fair-share tenant (builder style).
     pub fn with_tenant(mut self, tenant: impl Into<String>) -> JobSpec {
         self.tenant = tenant.into();
         self
     }
 
+    /// Set a relative deadline (builder style).
     pub fn with_deadline(mut self, d: Duration) -> JobSpec {
         self.deadline = Some(d);
         self
@@ -150,6 +163,7 @@ pub enum JobState {
 }
 
 impl JobState {
+    /// Stable name for tables/CSV.
     pub fn as_str(&self) -> &str {
         match self {
             JobState::Completed => "completed",
@@ -163,10 +177,15 @@ impl JobState {
 /// Terminal record of one job: state, execution tree and timings.
 #[derive(Debug, Clone)]
 pub struct JobResult {
+    /// Service-assigned id (1-based, submission order).
     pub id: JobId,
+    /// The analyzed slide.
     pub slide_id: String,
+    /// Fair-share tenant.
     pub tenant: String,
+    /// Priority it was scheduled under.
     pub priority: Priority,
+    /// How the job ended.
     pub state: JobState,
     /// The execution tree (identical to a standalone `run_pyramidal` /
     /// `replay` of the same source). Set for `Completed` jobs and — as a

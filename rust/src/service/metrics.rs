@@ -17,28 +17,39 @@ use super::job::{JobResult, JobState};
 /// terminal state.
 #[derive(Debug, Clone, Default)]
 pub struct TenantMetrics {
+    /// Jobs that finished with a full tree.
     pub completed: usize,
+    /// Jobs cancelled (queued or mid-run).
     pub cancelled: usize,
+    /// Jobs whose deadline lapsed while queued.
     pub expired: usize,
+    /// Jobs that failed (analyzer/source faults).
     pub failed: usize,
     /// Tiles analyzed by the tenant's completed jobs.
     pub tiles: usize,
     /// Frontier-boundary preemptions suffered across all of the tenant's
     /// jobs (including ones later cancelled).
     pub preemptions: usize,
+    /// Median queue wait of completed jobs.
     pub queue_wait_p50: Duration,
+    /// 95th-percentile queue wait of completed jobs.
     pub queue_wait_p95: Duration,
     /// Turnaround = queue wait + run time (end-to-end latency).
     pub turnaround_p50: Duration,
+    /// 95th-percentile turnaround of completed jobs.
     pub turnaround_p95: Duration,
 }
 
 /// Aggregate view over one service run.
 #[derive(Debug, Clone)]
 pub struct ServiceMetrics {
+    /// Jobs that finished with a full tree.
     pub completed: usize,
+    /// Jobs cancelled (queued or mid-run).
     pub cancelled: usize,
+    /// Jobs whose deadline lapsed while queued.
     pub expired: usize,
+    /// Jobs that failed (analyzer/source faults).
     pub failed: usize,
     /// Tiles analyzed by completed jobs.
     pub tiles: usize,
@@ -47,7 +58,9 @@ pub struct ServiceMetrics {
     /// Mean / p50 / p95 end-to-end latency (queue wait + run) over
     /// completed jobs.
     pub latency_mean: Duration,
+    /// Median end-to-end latency.
     pub latency_p50: Duration,
+    /// 95th-percentile end-to-end latency.
     pub latency_p95: Duration,
     /// Mean queue wait over completed jobs.
     pub queue_wait_mean: Duration,
@@ -58,6 +71,7 @@ pub struct ServiceMetrics {
 }
 
 impl ServiceMetrics {
+    /// Aggregate the terminal records of one service run.
     pub fn from_results(results: &[JobResult], wall: Duration) -> ServiceMetrics {
         let mut completed = 0;
         let mut cancelled = 0;

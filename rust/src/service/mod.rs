@@ -52,10 +52,15 @@
 //!
 //! [`PyramidRun`]: crate::pyramid::PyramidRun
 
+/// Job descriptors, priorities and terminal results.
 pub mod job;
+/// Per-job and per-tenant throughput/latency metrics.
 pub mod metrics;
+/// The shared analyzer pool (incl. coalesced dispatch).
 pub mod pool;
+/// Bounded admission queue with backpressure and cancel.
 pub mod queue;
+/// The policy-driven event loop stepping every run.
 pub mod scheduler;
 
 use std::collections::HashSet;
@@ -63,7 +68,7 @@ use std::sync::mpsc::{self, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use crate::cluster::{ClusterExec, ClusterExecConfig};
+use crate::cluster::{ClusterExec, ClusterExecConfig, ExecEvent, FaultStats};
 use crate::model::Analyzer;
 
 use pool::AnalyzerPool;
@@ -132,9 +137,14 @@ impl Default for ServiceConfig {
 pub struct ServiceReport {
     /// Terminal record of every job, in completion order.
     pub results: Vec<JobResult>,
+    /// Aggregate and per-tenant throughput/latency metrics.
     pub metrics: ServiceMetrics,
     /// Analyzer panics absorbed by the pool (workers survived them).
     pub pool_panics: usize,
+    /// Cluster recovery counters (workers lost/joined, chunks
+    /// resubmitted/abandoned); `None` when live jobs ran on the
+    /// in-process pool instead of the TCP cluster.
+    pub cluster_faults: Option<FaultStats>,
 }
 
 impl ServiceReport {
@@ -157,6 +167,8 @@ pub struct AnalysisService {
     events: Option<Sender<Event>>,
     scheduler: Option<std::thread::JoinHandle<Vec<JobResult>>>,
     cluster_pump: Option<std::thread::JoinHandle<()>>,
+    /// Recovery counters captured when the cluster drains.
+    cluster_faults: Option<FaultStats>,
     started: Instant,
 }
 
@@ -181,16 +193,27 @@ impl AnalysisService {
                 ClusterExec::start(analyzer, ccfg).expect("start execution cluster"),
             )),
         };
-        // Cluster completions flow into the scheduler loop as events.
+        // Cluster completions — and abandoned-chunk reports, so worker
+        // loss never wedges a job — flow into the scheduler loop as
+        // events.
         let cluster_pump = cluster.as_ref().map(|exec| {
             let exec = Arc::clone(exec);
             let tx = tx.clone();
             std::thread::Builder::new()
                 .name("service-cluster-pump".to_string())
                 .spawn(move || {
-                    while let Some((key, probs)) = exec.recv_result() {
-                        let (job, req) = unpack_key(key);
-                        if tx.send(Event::ChunkDone { job, req, probs }).is_err() {
+                    while let Some(ev) = exec.recv_event() {
+                        let sent = match ev {
+                            ExecEvent::Done { key, probs, .. } => {
+                                let (job, req) = unpack_key(key);
+                                tx.send(Event::ChunkDone { job, req, probs })
+                            }
+                            ExecEvent::Lost { key } => {
+                                let (job, req) = unpack_key(key);
+                                tx.send(Event::ChunkLost { job, req })
+                            }
+                        };
+                        if sent.is_err() {
                             break;
                         }
                     }
@@ -224,6 +247,7 @@ impl AnalysisService {
             events: Some(tx),
             scheduler: Some(scheduler),
             cluster_pump,
+            cluster_faults: None,
             started: Instant::now(),
         }
     }
@@ -264,6 +288,13 @@ impl AnalysisService {
         self.queue.len()
     }
 
+    /// Handle to the TCP cluster backing live jobs (`None` in pool
+    /// mode) — e.g. to watch [`ClusterExec::fault_stats`] live, or to
+    /// inject worker crashes in tests.
+    pub fn cluster(&self) -> Option<Arc<ClusterExec>> {
+        self.cluster.as_ref().map(Arc::clone)
+    }
+
     /// Close admission, send Close, join the scheduler (then the cluster,
     /// if any). Idempotent.
     fn drain(&mut self) -> Option<Vec<JobResult>> {
@@ -277,6 +308,7 @@ impl AnalysisService {
             .map(|h| h.join().expect("scheduler thread"));
         if let Some(c) = self.cluster.take() {
             c.shutdown();
+            self.cluster_faults = Some(c.fault_stats());
         }
         if let Some(p) = self.cluster_pump.take() {
             let _ = p.join();
@@ -294,6 +326,7 @@ impl AnalysisService {
             results,
             metrics,
             pool_panics: self.pool.panic_count(),
+            cluster_faults: self.cluster_faults,
         }
     }
 }

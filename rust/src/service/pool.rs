@@ -31,8 +31,11 @@ pub struct AnalyzerPool {
 /// ([`AnalyzerPool::analyze_coalesced_async`]): a same-level frontier
 /// chunk of one slide plus its completion callback.
 pub struct CoalescedItem {
+    /// Slide the tiles belong to.
     pub slide: Arc<Slide>,
+    /// Tiles to analyze (all at the group's level).
     pub tiles: Vec<TileId>,
+    /// Called with the probabilities, in tile order.
     pub done: Box<dyn FnOnce(Vec<f32>) + Send>,
 }
 
@@ -45,6 +48,7 @@ struct ItemSlots {
 }
 
 impl AnalyzerPool {
+    /// Spawn `workers` threads sharing one analyzer.
     pub fn new(analyzer: Arc<dyn Analyzer>, workers: usize) -> AnalyzerPool {
         let workers = workers.max(1);
         AnalyzerPool {
@@ -55,6 +59,7 @@ impl AnalyzerPool {
         }
     }
 
+    /// Worker-thread count.
     pub fn workers(&self) -> usize {
         self.workers
     }
@@ -64,6 +69,7 @@ impl AnalyzerPool {
         self.panics.load(Ordering::SeqCst) + self.pool.panic_count()
     }
 
+    /// Name of the underlying analyzer (tables/logs).
     pub fn analyzer_name(&self) -> &str {
         self.analyzer.name()
     }

@@ -17,18 +17,24 @@ use super::job::{JobId, JobSpec};
 #[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
 pub enum SubmitError {
     #[error("admission queue full ({0} jobs)")]
+    /// Queue at capacity — retry later or shed.
     QueueFull(usize),
     #[error("service is shutting down")]
+    /// Admission closed; no further submissions.
     Closed,
     #[error("invalid job: {0}")]
+    /// The spec failed validation.
     Invalid(String),
 }
 
 /// A job admitted to the queue, stamped with identity and arrival time.
 #[derive(Debug, Clone)]
 pub struct QueuedJob {
+    /// Service-assigned id (1-based, submission order).
     pub id: JobId,
+    /// The submitted job.
     pub spec: JobSpec,
+    /// Submission stamp (queue-age / deadline basis).
     pub submitted: Instant,
 }
 
@@ -46,6 +52,7 @@ pub struct AdmissionQueue {
 }
 
 impl AdmissionQueue {
+    /// Bounded queue holding at most `capacity` jobs.
     pub fn new(capacity: usize) -> AdmissionQueue {
         AdmissionQueue {
             capacity: capacity.max(1),
@@ -57,6 +64,7 @@ impl AdmissionQueue {
         }
     }
 
+    /// The backpressure bound.
     pub fn capacity(&self) -> usize {
         self.capacity
     }
@@ -131,10 +139,12 @@ impl AdmissionQueue {
         f(inner.entries.as_slices().0)
     }
 
+    /// Jobs currently queued.
     pub fn len(&self) -> usize {
         self.inner.lock().unwrap().entries.len()
     }
 
+    /// Whether nothing is queued.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }

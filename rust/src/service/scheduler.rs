@@ -71,6 +71,11 @@ pub(crate) enum Event {
         req: RequestId,
         probs: Vec<f32>,
     },
+    /// The cluster abandoned one dispatched chunk (every worker that
+    /// could run it died — [`crate::cluster::ExecEvent::Lost`]). The
+    /// owning run requeues it and the ordinary pump/dispatch path
+    /// re-fires it, with a fresh excluded-victim list.
+    ChunkLost { job: JobId, req: RequestId },
     /// Admission is closed; exit once everything drains.
     Close,
 }
@@ -329,6 +334,17 @@ impl Scheduler {
                 if failed_now {
                     // Its undispatched requests will never be needed.
                     self.pending.retain(|(j, _)| *j != job);
+                }
+            }
+            Event::ChunkLost { job, req } => {
+                if let Some(r) = self.running.get_mut(&job) {
+                    r.dispatched = r.dispatched.saturating_sub(1);
+                    // Cancelled/failed jobs just drain; healthy ones get
+                    // the span back for re-dispatch (the tree cannot
+                    // change — only when it materializes).
+                    if !r.cancelled && r.failed.is_none() {
+                        let _ = r.run.requeue(req);
+                    }
                 }
             }
             Event::Close => self.closed = true,
@@ -1021,6 +1037,7 @@ mod tests {
                 max_in_flight: 1,
                 chunk: CHUNK,
                 preempt: false,
+                failures: vec![],
             },
         );
         // Sim job index i ↔ service id i+1 (the admission queue assigns

@@ -10,6 +10,7 @@ use crate::slide::tile::TileId;
 use crate::util::prng::Pcg32;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// Initial tile-distribution strategies (§5.2).
 pub enum Distribution {
     /// Cyclic dispatch: tile i → worker i mod w.
     RoundRobin,
@@ -21,12 +22,14 @@ pub enum Distribution {
 }
 
 impl Distribution {
+    /// Every strategy, in sweep order.
     pub const ALL: [Distribution; 3] = [
         Distribution::RoundRobin,
         Distribution::Random,
         Distribution::Block,
     ];
 
+    /// Stable name for tables/CSV.
     pub fn as_str(self) -> &'static str {
         match self {
             Distribution::RoundRobin => "round_robin",
@@ -35,6 +38,7 @@ impl Distribution {
         }
     }
 
+    /// Inverse of [`Distribution::as_str`].
     pub fn from_str(s: &str) -> Option<Distribution> {
         match s {
             "round_robin" => Some(Distribution::RoundRobin),

@@ -49,6 +49,7 @@ pub enum Policy {
 }
 
 impl Policy {
+    /// Every policy, in sweep order.
     pub const ALL: [Policy; 4] = [
         Policy::NoBalancing,
         Policy::SyncPerLevel,
@@ -56,6 +57,7 @@ impl Policy {
         Policy::OracleIdeal,
     ];
 
+    /// Stable name for tables/CSV.
     pub fn as_str(self) -> &'static str {
         match self {
             Policy::NoBalancing => "none",
@@ -65,6 +67,7 @@ impl Policy {
         }
     }
 
+    /// Inverse of [`Policy::as_str`].
     pub fn from_str(s: &str) -> Option<Policy> {
         match s {
             "none" => Some(Policy::NoBalancing),
@@ -79,20 +82,24 @@ impl Policy {
 /// Outcome of one simulated distributed execution.
 #[derive(Debug, Clone)]
 pub struct SimResult {
+    /// Tiles analyzed per worker.
     pub per_worker: Vec<usize>,
     /// Simulated time units (one tile analysis = one unit). For the
     /// synchronized policy this includes barrier effects
     /// (Σ per-level maxima); for the others it is the busiest worker's
     /// tile count (steals are instantaneous).
     pub makespan: usize,
+    /// Successful steals (work-stealing policy only).
     pub steals: usize,
 }
 
 impl SimResult {
+    /// Tile count of the busiest worker (the makespan proxy).
     pub fn max_tiles(&self) -> usize {
         self.per_worker.iter().copied().max().unwrap_or(0)
     }
 
+    /// Total tiles analyzed across all workers.
     pub fn total(&self) -> usize {
         self.per_worker.iter().sum()
     }
@@ -282,6 +289,7 @@ fn sim_steal(
 /// times are virtual ticks: one tile analysis = one tick on one worker.
 #[derive(Debug, Clone)]
 pub struct SimJobSpec {
+    /// Fair-share accounting key.
     pub tenant: String,
     /// Numeric priority (higher = more urgent), as
     /// [`crate::service::Priority::rank`] produces.
@@ -290,8 +298,29 @@ pub struct SimJobSpec {
     pub arrival: u64,
     /// Absolute deadline tick (EDF input); `None` = none.
     pub deadline: Option<u64>,
+    /// The recorded execution to re-drive.
     pub tree: ExecTree,
+    /// The thresholds that produced the recording.
     pub thresholds: Thresholds,
+}
+
+/// One injected worker fault for [`simulate_workload`]: the §10
+/// failure-model counterpart of a machine rebooting mid-run. At tick
+/// `at` the worker dies — its in-flight chunks are lost and requeued
+/// into their [`PyramidRun`]s (re-dispatched to survivors by the
+/// ordinary pump) — and it takes no new work until `rejoin` (or ever,
+/// with `None`). The simulator predicts *recovery overhead* the same
+/// way it predicts scheduling: results stay byte-identical; only the
+/// makespan (and re-dispatched tile count) grows.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WorkerFailure {
+    /// Index of the virtual worker that dies.
+    pub worker: usize,
+    /// Tick of the crash. A chunk finishing exactly at `at` survives;
+    /// anything later on this worker is lost.
+    pub at: u64,
+    /// Tick the worker rejoins (must be `> at`); `None` = never.
+    pub rejoin: Option<u64>,
 }
 
 /// Simulator counterpart of the service's scheduler knobs.
@@ -305,6 +334,10 @@ pub struct WorkloadConfig {
     pub chunk: usize,
     /// Allow the policy to park running jobs at frontier boundaries.
     pub preempt: bool,
+    /// Injected worker faults (§10 failure model). A schedule that
+    /// leaves no worker alive (and none rejoining) while work remains
+    /// cannot drain and panics — leave capacity.
+    pub failures: Vec<WorkerFailure>,
 }
 
 impl Default for WorkloadConfig {
@@ -314,6 +347,7 @@ impl Default for WorkloadConfig {
             max_in_flight: 4,
             chunk: 16,
             preempt: false,
+            failures: Vec::new(),
         }
     }
 }
@@ -326,6 +360,7 @@ pub struct SimJobOutcome {
     pub admitted_at: u64,
     /// Tick its last chunk completed (the expiry tick for expired jobs).
     pub completed_at: u64,
+    /// Tiles dispatched for the job (lost attempts included).
     pub tiles: usize,
     /// Frontier-boundary preemptions suffered (actual suspensions).
     pub preemptions: usize,
@@ -348,10 +383,17 @@ pub struct WorkloadResult {
     /// service reproduces on the same workload. Expired jobs never
     /// complete and are not listed.
     pub completion_order: Vec<usize>,
+    /// Tiles *completed* per worker (chunks lost to an injected failure
+    /// count where their retry finished, so the sum always equals the
+    /// total analyzed).
     pub per_worker: Vec<usize>,
     /// Tick the last chunk completed.
     pub makespan: u64,
+    /// Frontier-boundary preemptions across all jobs.
     pub preemptions: usize,
+    /// Chunks lost to injected worker failures and requeued — the
+    /// recovery-overhead counter ([`WorkerFailure`]).
+    pub requeued_chunks: usize,
 }
 
 /// Internal per-job state of the workload simulator.
@@ -386,6 +428,8 @@ struct InFlightChunk {
     /// finishing at the same tick.
     seq: u64,
     job: usize,
+    /// Virtual worker executing the chunk (failure-injection target).
+    worker: usize,
     req: crate::pyramid::RequestId,
     probs: Vec<f32>,
 }
@@ -398,15 +442,42 @@ struct InFlightChunk {
 /// with live per-tenant usage accounting, and (with
 /// [`WorkloadConfig::preempt`]) parking the policy-worst preemptible
 /// running job at its next frontier boundary. Chunks land on the
-/// least-loaded virtual worker and take one tick per tile; message
-/// latency is neglected (§5.1). Fully deterministic: same workload +
-/// same policy ⇒ same trace.
+/// least-loaded *live* virtual worker and take one tick per tile;
+/// message latency is neglected (§5.1). Injected faults
+/// ([`WorkloadConfig::failures`]) kill a worker's in-flight chunks —
+/// their spans are requeued into the owning [`PyramidRun`] and
+/// re-dispatched, the same recovery path the real cluster drives — so
+/// the simulator predicts recovery overhead without ever changing a
+/// result tree. Fully deterministic: same workload + same policy + same
+/// fault schedule ⇒ same trace.
 pub fn simulate_workload(
     jobs: &[SimJobSpec],
     policy: &dyn SchedulingPolicy,
     cfg: &WorkloadConfig,
 ) -> WorkloadResult {
     assert!(cfg.workers >= 1, "at least one virtual worker");
+    for f in &cfg.failures {
+        assert!(
+            f.worker < cfg.workers,
+            "failure names worker {} of {}",
+            f.worker,
+            cfg.workers
+        );
+        if let Some(r) = f.rejoin {
+            assert!(r > f.at, "rejoin tick must be after the failure tick");
+        }
+    }
+    let mut fails: Vec<(u64, usize)> = cfg.failures.iter().map(|f| (f.at, f.worker)).collect();
+    fails.sort_unstable();
+    let mut rejoins: Vec<(u64, usize)> = cfg
+        .failures
+        .iter()
+        .filter_map(|f| f.rejoin.map(|r| (r, f.worker)))
+        .collect();
+    rejoins.sort_unstable();
+    let (mut fi, mut ri) = (0usize, 0usize);
+    let mut failed = vec![false; cfg.workers];
+    let mut requeued_chunks = 0usize;
     let slots = cfg.max_in_flight.max(1);
     let mut sim: Vec<SimJob> = jobs
         .iter()
@@ -427,6 +498,9 @@ pub fn simulate_workload(
     let mut worker_free = vec![0u64; cfg.workers];
     let mut per_worker = vec![0usize; cfg.workers];
     let mut in_flight: Vec<InFlightChunk> = Vec::new();
+    // Pulled-but-undispatched requests. Persists across iterations so
+    // work can wait out a window with every worker down.
+    let mut pending: Vec<(usize, crate::pyramid::FrontierRequest)> = Vec::new();
     let mut seq = 0u64;
     let mut now = 0u64;
     let mut completion_order = Vec::new();
@@ -554,8 +628,9 @@ pub fn simulate_workload(
         }
         // Pump + dispatch: drain every available request of every
         // healthy running job, in policy order, with live usage
-        // accounting — chunks land on the least-loaded virtual worker.
-        let mut pending: Vec<(usize, crate::pyramid::FrontierRequest)> = Vec::new();
+        // accounting — chunks land on the least-loaded live virtual
+        // worker. With every worker down, requests wait in `pending`
+        // for a rejoin.
         for i in 0..sim.len() {
             if sim[i].state != SimState::Running || sim[i].parking {
                 continue;
@@ -568,6 +643,12 @@ pub fn simulate_workload(
         {
             let running_per_tenant = tenants_running(&sim);
             while !pending.is_empty() {
+                let Some(w) = (0..cfg.workers)
+                    .filter(|&w| !failed[w])
+                    .min_by_key(|&w| (worker_free[w], w))
+                else {
+                    break; // every worker down: hold work for a rejoin
+                };
                 let ctx = SchedContext {
                     usage: &usage,
                     running_per_tenant: &running_per_tenant,
@@ -580,13 +661,9 @@ pub fn simulate_workload(
                 sim[i].tiles += req.tiles.len();
                 sim[i].dispatched += 1;
                 *usage.entry(jobs[i].tenant.clone()).or_default() += req.tiles.len() as u64;
-                let w = (0..cfg.workers)
-                    .min_by_key(|&w| (worker_free[w], w))
-                    .expect("workers >= 1");
                 let start = worker_free[w].max(now);
                 let finish = start + req.tiles.len() as u64;
                 worker_free[w] = finish;
-                per_worker[w] += req.tiles.len();
                 let probs: Vec<f32> = req
                     .tiles
                     .iter()
@@ -601,6 +678,7 @@ pub fn simulate_workload(
                     finish,
                     seq,
                     job: i,
+                    worker: w,
                     req: req.id,
                     probs,
                 });
@@ -621,9 +699,12 @@ pub fn simulate_workload(
             finish_job(i, now, &mut sim, &mut outcomes, &mut completion_order);
         }
         // Mirror of the service's settle(): a parking job with nothing in
-        // flight parks right away (it never got to issue this frontier).
-        for s in sim.iter_mut() {
-            if s.state == SimState::Running && s.parking && s.dispatched == 0 {
+        // flight — and no undispatched work stranded by an all-workers-
+        // down window — parks right away.
+        for i in 0..sim.len() {
+            let stranded = pending.iter().any(|&(j, _)| j == i);
+            let s = &mut sim[i];
+            if s.state == SimState::Running && s.parking && s.dispatched == 0 && !stranded {
                 s.state = SimState::Parked;
                 s.parking = false;
                 s.preemptions += 1;
@@ -632,9 +713,12 @@ pub fn simulate_workload(
             }
         }
         if !progressed {
-            // Advance virtual time to the next event — the earlier of the
-            // next chunk completion and the next arrival (an arriving job
-            // must be admitted at its arrival tick, as in the service).
+            // Advance virtual time to the next event — the earliest of
+            // the next chunk completion, worker rejoin, worker failure
+            // and job arrival. At equal ticks completions land first (a
+            // chunk finishing exactly at a death tick survives), then
+            // rejoins, then deaths, then arrivals (an arriving job must
+            // be admitted at its arrival tick, as in the service).
             let next_completion = in_flight
                 .iter()
                 .enumerate()
@@ -644,16 +728,27 @@ pub fn simulate_workload(
                 .filter(|&i| sim[i].state == SimState::NotArrived)
                 .map(|i| jobs[i].arrival)
                 .min();
-            match (next_completion, next_arrival) {
-                (Some(pos), Some(arr)) if arr < in_flight[pos].finish => {
-                    now = now.max(arr);
-                    progressed = true;
-                }
-                (Some(pos), _) => {
+            let mut events: Vec<(u64, u8)> = Vec::new();
+            if let Some(pos) = next_completion {
+                events.push((in_flight[pos].finish, 0));
+            }
+            if let Some(&(at, _)) = rejoins.get(ri) {
+                events.push((at, 1));
+            }
+            if let Some(&(at, _)) = fails.get(fi) {
+                events.push((at, 2));
+            }
+            if let Some(at) = next_arrival {
+                events.push((at, 3));
+            }
+            match events.into_iter().min() {
+                Some((_, 0)) => {
+                    let pos = next_completion.expect("rank 0 implies a completion");
                     let chunk = in_flight.remove(pos);
                     let i = chunk.job;
                     now = now.max(chunk.finish);
                     makespan = makespan.max(chunk.finish);
+                    per_worker[chunk.worker] += chunk.probs.len();
                     sim[i].dispatched -= 1;
                     sim[i]
                         .run
@@ -675,11 +770,55 @@ pub fn simulate_workload(
                     }
                     progressed = true;
                 }
-                (None, Some(arr)) => {
-                    now = now.max(arr);
+                Some((at, 1)) => {
+                    let (_, w) = rejoins[ri];
+                    ri += 1;
+                    // Only a worker that is actually down rejoins — a
+                    // stale rejoin (its death was skipped as a duplicate
+                    // of an overlapping failure window) must not rewind
+                    // worker_free under a live worker's feet.
+                    if failed[w] {
+                        failed[w] = false;
+                        worker_free[w] = at;
+                    }
+                    now = now.max(at);
                     progressed = true;
                 }
-                (None, None) => {}
+                Some((at, 2)) => {
+                    let (_, w) = fails[fi];
+                    fi += 1;
+                    if !failed[w] {
+                        failed[w] = true;
+                        worker_free[w] = at;
+                        // The dead worker's unfinished chunks are lost:
+                        // hand their spans back to the owning runs — the
+                        // pump re-dispatches them to survivors, exactly
+                        // the real leader's resubmission path.
+                        let mut keep = Vec::with_capacity(in_flight.len());
+                        for c in in_flight.drain(..) {
+                            if c.worker == w && c.finish > at {
+                                sim[c.job].dispatched -= 1;
+                                requeued_chunks += 1;
+                                sim[c.job]
+                                    .run
+                                    .as_mut()
+                                    .expect("in-flight implies run")
+                                    .requeue(c.req)
+                                    .expect("killed chunk was outstanding");
+                            } else {
+                                keep.push(c);
+                            }
+                        }
+                        in_flight = keep;
+                    }
+                    now = now.max(at);
+                    progressed = true;
+                }
+                Some((at, _)) => {
+                    now = now.max(at);
+                    progressed = true;
+                }
+                None => {}
             }
         }
         if !progressed {
@@ -699,6 +838,7 @@ pub fn simulate_workload(
         per_worker,
         makespan,
         preemptions: total_preemptions,
+        requeued_chunks,
     }
 }
 
@@ -926,6 +1066,7 @@ mod tests {
                     max_in_flight: 2,
                     chunk: 8,
                     preempt,
+                    failures: vec![],
                 };
                 let res = simulate_workload(&jobs, policy.as_ref(), &cfg);
                 assert_eq!(res.completion_order.len(), jobs.len());
@@ -954,6 +1095,7 @@ mod tests {
             max_in_flight: 2,
             chunk: 4,
             preempt: true,
+            failures: vec![],
         };
         let a = simulate_workload(&jobs, &StrictPriority, &cfg);
         let b = simulate_workload(&jobs, &StrictPriority, &cfg);
@@ -978,6 +1120,7 @@ mod tests {
             max_in_flight: 1,
             chunk: 8,
             preempt: true,
+            failures: vec![],
         };
         let res = simulate_workload(&jobs, &StrictPriority, &cfg);
         assert!(
@@ -1001,6 +1144,7 @@ mod tests {
         // Without preemption the high job waits for the low one instead.
         let cfg = WorkloadConfig {
             preempt: false,
+            failures: vec![],
             ..cfg
         };
         let res = simulate_workload(&jobs, &StrictPriority, &cfg);
@@ -1025,6 +1169,7 @@ mod tests {
             max_in_flight: 2,
             chunk: 16,
             preempt: false,
+            failures: vec![],
         };
         let fifo = simulate_workload(&jobs, &Fifo, &cfg);
         let wfs = simulate_workload(&jobs, &WeightedFairShare::default(), &cfg);
@@ -1063,6 +1208,7 @@ mod tests {
             max_in_flight: 1,
             chunk: 0,
             preempt: false,
+            failures: vec![],
         };
         let res = simulate_workload(&jobs, &Edf, &cfg);
         assert_eq!(res.completion_order, vec![2, 1, 0]);
@@ -1085,6 +1231,7 @@ mod tests {
             max_in_flight: 1,
             chunk: 0,
             preempt: false,
+            failures: vec![],
         };
         let res = simulate_workload(&jobs, &Fifo, &cfg);
         assert!(res.outcomes[1].expired, "lapsed job must expire");
@@ -1110,6 +1257,7 @@ mod tests {
         let cfg = WorkloadConfig {
             workers: 4,
             max_in_flight: 2,
+            failures: vec![],
             chunk: 0,
             preempt: false,
         };
@@ -1127,5 +1275,114 @@ mod tests {
             free.makespan,
             res.makespan
         );
+    }
+
+    // ---- §10 failure injection -------------------------------------
+
+    #[test]
+    fn injected_failures_change_makespan_but_not_results() {
+        // Worker 0 dies almost immediately (never rejoins); worker 1
+        // dies mid-run and rejoins later. Every in-flight chunk on a
+        // dying worker is requeued and re-dispatched to a survivor, so
+        // every tree is still byte-identical to its recording — only
+        // the makespan (and re-dispatch counter) shows the faults.
+        let jobs: Vec<SimJobSpec> = (0..3)
+            .map(|i| workload_job(150 + i, "t", 1, 0, None))
+            .collect();
+        let total: usize = jobs.iter().map(|j| j.tree.total_analyzed()).sum();
+        let clean_cfg = WorkloadConfig {
+            workers: 3,
+            max_in_flight: 2,
+            chunk: 4,
+            preempt: false,
+            failures: vec![],
+        };
+        let clean = simulate_workload(&jobs, &Fifo, &clean_cfg);
+        assert_eq!(clean.requeued_chunks, 0);
+
+        let faulty_cfg = WorkloadConfig {
+            failures: vec![
+                WorkerFailure {
+                    worker: 0,
+                    at: 1,
+                    rejoin: None,
+                },
+                WorkerFailure {
+                    worker: 1,
+                    at: 6,
+                    rejoin: Some(40),
+                },
+            ],
+            ..clean_cfg.clone()
+        };
+        let faulty = simulate_workload(&jobs, &Fifo, &faulty_cfg);
+        for (i, out) in faulty.outcomes.iter().enumerate() {
+            assert_eq!(
+                out.tree, jobs[i].tree,
+                "job {i}: failures must not change the result"
+            );
+            // Dispatched-tile counts include the lost attempts — the
+            // per-job face of recovery overhead.
+            assert!(out.tiles >= jobs[i].tree.total_analyzed());
+        }
+        assert_eq!(
+            faulty.completion_order.len(),
+            jobs.len(),
+            "every job still completes"
+        );
+        assert!(
+            faulty.requeued_chunks > 0,
+            "tick-1 failure must catch chunks in flight"
+        );
+        assert!(
+            faulty.makespan > clean.makespan,
+            "losing workers must cost virtual time ({} vs {})",
+            faulty.makespan,
+            clean.makespan
+        );
+        // Conservation: every analyzed tile completed on exactly one
+        // worker, lost attempts excluded.
+        assert_eq!(faulty.per_worker.iter().sum::<usize>(), total);
+        assert_eq!(clean.per_worker.iter().sum::<usize>(), total);
+    }
+
+    #[test]
+    fn failure_injection_is_deterministic_and_survives_total_outage() {
+        // Both workers die early; one rejoins — during the outage the
+        // pending requests wait, then drain. Same schedule twice ⇒ same
+        // trace.
+        let jobs: Vec<SimJobSpec> = (0..2)
+            .map(|i| workload_job(160 + i, "t", 1, 0, None))
+            .collect();
+        let cfg = WorkloadConfig {
+            workers: 2,
+            max_in_flight: 2,
+            chunk: 8,
+            preempt: false,
+            failures: vec![
+                WorkerFailure {
+                    worker: 0,
+                    at: 2,
+                    rejoin: Some(30),
+                },
+                WorkerFailure {
+                    worker: 1,
+                    at: 2,
+                    rejoin: None,
+                },
+            ],
+        };
+        let a = simulate_workload(&jobs, &Fifo, &cfg);
+        let b = simulate_workload(&jobs, &Fifo, &cfg);
+        assert_eq!(a.completion_order, b.completion_order);
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.per_worker, b.per_worker);
+        assert_eq!(a.requeued_chunks, b.requeued_chunks);
+        for (i, out) in a.outcomes.iter().enumerate() {
+            assert_eq!(out.tree, jobs[i].tree);
+        }
+        // Only the rejoined worker can have completed work after tick 2
+        // (everything on worker 1 after the outage was requeued).
+        assert!(a.requeued_chunks > 0);
     }
 }

@@ -6,13 +6,16 @@
 //! [`crate::sched::SchedulingPolicy`] objects as the multi-slide service
 //! scheduler.
 
+/// Virtual-worker `ExecutionBackend` over a recorded tree.
 pub mod backend;
+/// Initial tile-distribution strategies (§5.2).
 pub mod distribution;
+/// The simulators: single-tree sweep and multi-job workload.
 pub mod engine;
 
 pub use backend::SimBackend;
 pub use distribution::Distribution;
 pub use engine::{
-    simulate, simulate_workload, Policy, SimJobOutcome, SimJobSpec, SimResult, WorkloadConfig,
-    WorkloadResult,
+    simulate, simulate_workload, Policy, SimJobOutcome, SimJobSpec, SimResult, WorkerFailure,
+    WorkloadConfig, WorkloadResult,
 };

@@ -1,7 +1,9 @@
 //! Slide pyramid model: tile identity, geometry and on-demand pixel
 //! extraction with per-tile ground truth.
 
+/// The synthetic multi-resolution slide.
 pub mod pyramid;
+/// Tile addressing across pyramid levels.
 pub mod tile;
 
 pub use pyramid::Slide;

@@ -17,6 +17,7 @@ const COVERAGE_SAMPLES: usize = 8;
 /// A slide ready for analysis. Building one from a spec is cheap (a few
 /// dozen Gaussian blobs); pixels are produced on demand.
 pub struct Slide {
+    /// The recipe this slide was built from.
     pub spec: SlideSpec,
     tissue: Field,
     tumor: Field,
@@ -25,6 +26,7 @@ pub struct Slide {
 }
 
 impl Slide {
+    /// Materialize a slide from its recipe (deterministic).
     pub fn from_spec(spec: SlideSpec) -> Slide {
         spec.validate();
         let (tissue, tumor, distractor) = spec.fields();
@@ -37,10 +39,12 @@ impl Slide {
         }
     }
 
+    /// The slide's unique id.
     pub fn id(&self) -> &str {
         &self.spec.id
     }
 
+    /// Pyramid depth.
     pub fn levels(&self) -> usize {
         self.spec.levels
     }

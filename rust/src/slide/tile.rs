@@ -10,12 +10,16 @@ pub const SCALE_FACTOR: usize = 2;
 /// Identifies one tile: (level, tile-x, tile-y) within the level grid.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct TileId {
+    /// Pyramid level (0 = full resolution).
     pub level: u8,
+    /// Column within the level's grid.
     pub tx: u32,
+    /// Row within the level's grid.
     pub ty: u32,
 }
 
 impl TileId {
+    /// Build a tile id (level must fit in a byte).
     pub fn new(level: usize, tx: usize, ty: usize) -> TileId {
         TileId {
             level: level as u8,

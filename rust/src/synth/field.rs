@@ -11,15 +11,20 @@ use crate::util::prng::Pcg32;
 /// One Gaussian blob: contributes `w · exp(-d² / (2r²))` at distance d.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Blob {
+    /// Center x in unit slide coordinates.
     pub cx: f64,
+    /// Center y in unit slide coordinates.
     pub cy: f64,
+    /// Radius in unit coordinates.
     pub r: f64,
+    /// Peak weight (density at the center).
     pub w: f64,
 }
 
 /// A sum-of-blobs scalar field with an iso-threshold of 1.0.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct Field {
+    /// The Gaussian blobs summed into the field.
     pub blobs: Vec<Blob>,
 }
 
@@ -119,6 +124,7 @@ impl Field {
 }
 
 #[inline]
+/// Logistic squashing: 1 / (1 + e^-x).
 pub fn sigmoid(x: f64) -> f64 {
     1.0 / (1.0 + (-x).exp())
 }

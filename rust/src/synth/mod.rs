@@ -2,8 +2,11 @@
 //! analytic tissue/tumor fields, an H&E-like procedural texture, and
 //! deterministic slide/dataset specs.
 
+/// Gaussian-blob density fields (tumor/distractor layouts).
 pub mod field;
+/// Slide recipes ([`slide_gen::SlideSpec`]) and set generation.
 pub mod slide_gen;
+/// Deterministic per-tile texture statistics and hashing.
 pub mod texture;
 
 pub use field::Field;

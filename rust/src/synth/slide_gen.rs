@@ -24,6 +24,7 @@ pub enum SlideKind {
 }
 
 impl SlideKind {
+    /// Stable name for CLI flags and tables.
     pub fn as_str(self) -> &'static str {
         match self {
             SlideKind::Negative => "negative",
@@ -32,6 +33,7 @@ impl SlideKind {
         }
     }
 
+    /// Inverse of [`SlideKind::as_str`].
     pub fn from_str(s: &str) -> Option<SlideKind> {
         match s {
             "negative" => Some(SlideKind::Negative),
@@ -45,20 +47,25 @@ impl SlideKind {
 /// Geometry + identity of one synthetic whole-slide image.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SlideSpec {
+    /// Unique slide id (cache keys, worker-side slide cache).
     pub id: String,
+    /// Seed every deterministic layer derives from.
     pub seed: u64,
     /// Tile grid at level 0 (highest resolution). Must be divisible by
     /// `2^(levels-1)`.
     pub tiles_x: usize,
+    /// Level-0 grid height in tiles.
     pub tiles_y: usize,
     /// Number of pyramid levels (paper: 3, scale factor 2).
     pub levels: usize,
     /// Tile side in pixels (model input size).
     pub tile_px: usize,
+    /// Tumor layout family (large, scattered, negative…).
     pub kind: SlideKind,
 }
 
 impl SlideSpec {
+    /// Build a spec; `validate` panics early on nonsense sizes.
     pub fn new(
         id: impl Into<String>,
         seed: u64,
@@ -81,6 +88,7 @@ impl SlideSpec {
         s
     }
 
+    /// Panic on inconsistent geometry (0 levels, non-divisible grid…).
     pub fn validate(&self) {
         // Check levels before using it: `levels - 1` in the shift would
         // underflow first and mask this assert with an overflow panic.
@@ -122,6 +130,7 @@ impl SlideSpec {
         (tissue, tumor, distractor)
     }
 
+    /// Serialize (slide-set files, cluster wire format).
     pub fn to_json(&self) -> Json {
         Json::obj()
             .set("id", self.id.as_str())
@@ -133,6 +142,7 @@ impl SlideSpec {
             .set("kind", self.kind.as_str())
     }
 
+    /// Parse a spec written by [`SlideSpec::to_json`].
     pub fn from_json(v: &Json) -> Result<SlideSpec, JsonError> {
         let kind_s = v.get("kind")?.as_str()?.to_string();
         let kind = SlideKind::from_str(&kind_s).ok_or(JsonError::Type {
@@ -156,9 +166,13 @@ impl SlideSpec {
 /// exact pyramid structure of the paper's 3-level, f=2 setup).
 #[derive(Debug, Clone)]
 pub struct DatasetParams {
+    /// Level-0 grid width in tiles.
     pub tiles_x: usize,
+    /// Level-0 grid height in tiles.
     pub tiles_y: usize,
+    /// Pyramid depth.
     pub levels: usize,
+    /// Tile edge in pixels.
     pub tile_px: usize,
 }
 

@@ -62,6 +62,7 @@ pub struct TextureParams {
     pub p_nucleus_tumor: f64,
     /// Nucleus splat strength (normal / tumor).
     pub dark_normal: f64,
+    /// Nucleus splat strength in tumor tissue.
     pub dark_tumor: f64,
     /// Per-channel darkening weights of a nucleus splat.
     pub nucleus_tint: [f64; 3],
@@ -87,14 +88,18 @@ impl Default for TextureParams {
 
 /// Everything needed to evaluate one slide's texture.
 pub struct Texture<'a> {
+    /// Per-slide texture seed.
     pub seed: u64,
+    /// Tissue-density field.
     pub tissue: &'a Field,
+    /// Tumor-density field.
     pub tumor: &'a Field,
     /// Dense benign regions (lymphoid-aggregate stand-ins): same base
     /// color as normal tissue, near-tumor nucleus *density* but
     /// normal-sized nuclei — separable at full resolution, confusable
     /// once blurring washes out nucleus size.
     pub distractor: &'a Field,
+    /// Color/noise parameters.
     pub params: &'a TextureParams,
 }
 

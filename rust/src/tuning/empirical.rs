@@ -16,9 +16,13 @@ use super::metric_based::evaluate;
 /// One row of the empirical sweep — a point of Fig. 5.
 #[derive(Debug, Clone)]
 pub struct EmpiricalPoint {
+    /// Candidate β (zoom-budget) value.
     pub beta: usize,
+    /// Thresholds the β induces.
     pub thresholds: Thresholds,
+    /// Positive retention at those thresholds.
     pub retention: f64,
+    /// Tile-count speedup at those thresholds.
     pub speedup: f64,
 }
 
@@ -51,7 +55,9 @@ pub struct EmpiricalSelection {
     /// Minimum train retention the user asked for (e.g. 0.90 → β=8 in the
     /// paper).
     pub target_retention: f64,
+    /// The chosen β.
     pub beta: usize,
+    /// The selected thresholds.
     pub thresholds: Thresholds,
     /// The full sweep (Fig. 5 data).
     pub points: Vec<EmpiricalPoint>,
@@ -75,6 +81,7 @@ pub fn select(cache: &PredCache, levels: usize, target_retention: f64) -> Empiri
 }
 
 impl EmpiricalSelection {
+    /// Serialize for threshold files.
     pub fn to_json(&self) -> Json {
         Json::obj()
             .set("strategy", "empirical")

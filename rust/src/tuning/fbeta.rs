@@ -6,13 +6,18 @@
 /// Confusion counts of a probability threshold over (prob, label) pairs.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct Confusion {
+    /// True positives.
     pub tp: usize,
+    /// False positives.
     pub fp: usize,
+    /// False negatives (`fn` is a keyword, hence the underscore).
     pub fn_: usize,
+    /// True negatives.
     pub tn: usize,
 }
 
 impl Confusion {
+    /// Confusion counts of `prob ≥ thr` against the labels.
     pub fn at_threshold(pairs: &[(f32, bool)], thr: f64) -> Confusion {
         let mut c = Confusion::default();
         let thr = thr as f32;
@@ -27,6 +32,7 @@ impl Confusion {
         c
     }
 
+    /// tp / (tp + fp); 1.0 on no positives.
     pub fn precision(&self) -> f64 {
         let denom = self.tp + self.fp;
         if denom == 0 {
@@ -36,6 +42,7 @@ impl Confusion {
         }
     }
 
+    /// tp / (tp + fn); 1.0 on no ground-truth positives.
     pub fn recall(&self) -> f64 {
         let denom = self.tp + self.fn_;
         if denom == 0 {
@@ -45,6 +52,7 @@ impl Confusion {
         }
     }
 
+    /// (tp + tn) / total.
     pub fn accuracy(&self) -> f64 {
         let total = self.tp + self.fp + self.fn_ + self.tn;
         if total == 0 {

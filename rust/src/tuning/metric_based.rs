@@ -17,7 +17,9 @@ use super::fbeta::{best_threshold, BETA_RANGE};
 /// One (β, threshold) point of an isolated-level study — a row of Fig. 3.
 #[derive(Debug, Clone, Copy)]
 pub struct IsolatedPoint {
+    /// Candidate β value.
     pub beta: usize,
+    /// The F_β-optimal threshold for that β.
     pub threshold: f64,
     /// Mean positive retention rate over the slide set.
     pub retention: f64,
@@ -28,7 +30,9 @@ pub struct IsolatedPoint {
 /// The full isolated-level curve for one resolution level (Fig. 3 series).
 #[derive(Debug, Clone)]
 pub struct IsolatedCurve {
+    /// Pyramid level the curve was measured on.
     pub level: usize,
+    /// The β-sweep points of this level.
     pub points: Vec<IsolatedPoint>,
 }
 
@@ -75,11 +79,13 @@ pub fn isolated_curve(cache: &PredCache, levels: usize, level: usize) -> Isolate
 /// Result of the metric-based selection.
 #[derive(Debug, Clone)]
 pub struct MetricBasedSelection {
+    /// The per-level objective (target recall).
     pub objective: f64,
     /// Per-level objective = objective^(1/n_intermediate).
     pub per_level_objective: f64,
     /// Chosen β per intermediate level (index = level, level ≥ 1).
     pub betas: Vec<Option<usize>>,
+    /// The selected thresholds.
     pub thresholds: Thresholds,
     /// The isolated curves used for the selection (Fig. 3 data).
     pub curves: Vec<IsolatedCurve>,
@@ -120,6 +126,7 @@ pub fn select(cache: &PredCache, levels: usize, objective: f64) -> MetricBasedSe
 }
 
 impl MetricBasedSelection {
+    /// Serialize for threshold files.
     pub fn to_json(&self) -> Json {
         Json::obj()
             .set("strategy", "metric_based")

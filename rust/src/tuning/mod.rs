@@ -1,8 +1,11 @@
 //! Decision-block threshold tuning (§3.2): F_β machinery and the two
 //! selection strategies (metric-based §4.4, empirical §4.5).
 
+/// §4.5: one global β tuned on end-to-end retention/speedup.
 pub mod empirical;
+/// Confusion counts and F_β scores.
 pub mod fbeta;
+/// §4.4: per-level thresholds from isolated F_β curves.
 pub mod metric_based;
 
 pub use fbeta::{best_threshold, Confusion, BETA_RANGE};

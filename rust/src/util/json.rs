@@ -14,30 +14,42 @@ use std::fmt;
 /// output is canonical (stable ordering), which keeps cache files diffable.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (f64, as in the grammar).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (sorted keys → canonical serialization).
     Obj(BTreeMap<String, Json>),
 }
 
 #[derive(Debug, thiserror::Error)]
+/// Parsing or access failures.
 pub enum JsonError {
     #[error("json parse error at byte {pos}: {msg}")]
+    /// The input is not valid JSON.
     Parse { pos: usize, msg: String },
     #[error("json type error: expected {expected}, got {got}")]
+    /// A value had an unexpected type.
     Type {
         expected: &'static str,
         got: &'static str,
     },
     #[error("json missing key: {0}")]
+    /// A required object key was absent.
     MissingKey(String),
 }
 
+/// Result alias with [`JsonError`].
 pub type Result<T> = std::result::Result<T, JsonError>;
 
 impl Json {
+    /// The value's type, for error messages.
     pub fn type_name(&self) -> &'static str {
         match self {
             Json::Null => "null",
@@ -49,6 +61,7 @@ impl Json {
         }
     }
 
+    /// Empty object (builder entry point for [`Json::set`]).
     pub fn obj() -> Json {
         Json::Obj(BTreeMap::new())
     }
@@ -64,6 +77,7 @@ impl Json {
         self
     }
 
+    /// The value as f64.
     pub fn as_f64(&self) -> Result<f64> {
         match self {
             Json::Num(x) => Ok(*x),
@@ -74,18 +88,22 @@ impl Json {
         }
     }
 
+    /// The value as usize (truncating).
     pub fn as_usize(&self) -> Result<usize> {
         Ok(self.as_f64()?.round() as usize)
     }
 
+    /// The value as u64 (truncating).
     pub fn as_u64(&self) -> Result<u64> {
         Ok(self.as_f64()?.round() as u64)
     }
 
+    /// The value as i64 (truncating).
     pub fn as_i64(&self) -> Result<i64> {
         Ok(self.as_f64()?.round() as i64)
     }
 
+    /// The value as bool.
     pub fn as_bool(&self) -> Result<bool> {
         match self {
             Json::Bool(b) => Ok(*b),
@@ -96,6 +114,7 @@ impl Json {
         }
     }
 
+    /// The value as a string slice.
     pub fn as_str(&self) -> Result<&str> {
         match self {
             Json::Str(s) => Ok(s),
@@ -106,6 +125,7 @@ impl Json {
         }
     }
 
+    /// The value as an array slice.
     pub fn as_arr(&self) -> Result<&[Json]> {
         match self {
             Json::Arr(a) => Ok(a),
@@ -116,6 +136,7 @@ impl Json {
         }
     }
 
+    /// The value as an object map.
     pub fn as_obj(&self) -> Result<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Ok(m),

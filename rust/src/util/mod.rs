@@ -2,9 +2,15 @@
 //! encoding and a property-testing harness. See DESIGN.md §3
 //! (substitution S4).
 
+/// JSON value model, parser and serializer.
 pub mod json;
+/// Minimal PNG + zlib encoder/decoder.
 pub mod png;
+/// Small deterministic PRNGs (PCG32, SplitMix64).
 pub mod prng;
+/// Tiny property-testing helper.
 pub mod quickcheck;
+/// Streaming summaries, percentiles, timing helpers.
 pub mod stats;
+/// Fixed-size panic-surviving thread pool.
 pub mod threadpool;

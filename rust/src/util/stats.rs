@@ -14,6 +14,7 @@ pub struct Summary {
 }
 
 impl Summary {
+    /// Empty summary.
     pub fn new() -> Self {
         Self {
             n: 0,
@@ -24,6 +25,7 @@ impl Summary {
         }
     }
 
+    /// Add one observation.
     pub fn push(&mut self, x: f64) {
         self.n += 1;
         let d = x - self.mean;
@@ -33,6 +35,7 @@ impl Summary {
         self.max = self.max.max(x);
     }
 
+    /// Summary of a whole slice.
     pub fn from_slice(xs: &[f64]) -> Self {
         let mut s = Self::new();
         for &x in xs {
@@ -41,10 +44,12 @@ impl Summary {
         s
     }
 
+    /// Observations so far.
     pub fn count(&self) -> u64 {
         self.n
     }
 
+    /// Arithmetic mean (0.0 when empty).
     pub fn mean(&self) -> f64 {
         if self.n == 0 {
             f64::NAN
@@ -62,10 +67,12 @@ impl Summary {
         }
     }
 
+    /// Smallest observation.
     pub fn min(&self) -> f64 {
         self.min
     }
 
+    /// Largest observation.
     pub fn max(&self) -> f64 {
         self.max
     }
@@ -89,10 +96,12 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
     }
 }
 
+/// Arithmetic mean of a slice (0.0 when empty).
 pub fn mean(xs: &[f64]) -> f64 {
     Summary::from_slice(xs).mean()
 }
 
+/// Sample standard deviation of a slice.
 pub fn std(xs: &[f64]) -> f64 {
     Summary::from_slice(xs).std()
 }

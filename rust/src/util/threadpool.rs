@@ -11,6 +11,7 @@ use std::thread::JoinHandle;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
+/// Fixed-size thread pool whose workers survive task panics.
 pub struct ThreadPool {
     tx: Option<mpsc::Sender<Job>>,
     workers: Vec<JoinHandle<()>>,

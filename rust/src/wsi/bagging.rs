@@ -7,9 +7,13 @@ use crate::util::prng::Pcg32;
 use super::dtree::{DecisionTree, Sample, TreeParams};
 
 #[derive(Debug, Clone)]
+/// Ensemble hyperparameters.
 pub struct BaggingParams {
+    /// Trees in the ensemble.
     pub n_trees: usize,
+    /// Per-tree hyperparameters.
     pub tree: TreeParams,
+    /// Bootstrap sampling seed.
     pub seed: u64,
 }
 
@@ -24,6 +28,7 @@ impl Default for BaggingParams {
 }
 
 #[derive(Debug, Clone)]
+/// Majority-vote ensemble of decision trees.
 pub struct BaggingClassifier {
     trees: Vec<DecisionTree>,
 }
@@ -50,6 +55,7 @@ impl BaggingClassifier {
         self.trees.iter().map(|t| t.predict_proba(x)).sum::<f64>() / self.trees.len() as f64
     }
 
+    /// Majority vote over the ensemble.
     pub fn predict(&self, x: &[f64]) -> bool {
         self.predict_proba(x) >= 0.5
     }

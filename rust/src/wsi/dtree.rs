@@ -5,16 +5,21 @@
 /// One labeled sample: fixed-length features + binary label.
 #[derive(Debug, Clone)]
 pub struct Sample {
+    /// Feature vector.
     pub x: Vec<f64>,
+    /// Ground-truth label (slide contains tumor).
     pub y: bool,
 }
 
 #[derive(Debug, Clone)]
+/// One node of a fitted tree.
 pub enum Node {
+    /// Terminal node carrying the positive fraction.
     Leaf {
         /// Probability of the positive class at this leaf.
         p: f64,
     },
+    /// Internal split on one feature.
     Split {
         feature: usize,
         threshold: f64,
@@ -24,13 +29,17 @@ pub enum Node {
 }
 
 #[derive(Debug, Clone)]
+/// A fitted CART-style decision tree.
 pub struct DecisionTree {
     root: Node,
 }
 
 #[derive(Debug, Clone, Copy)]
+/// Tree hyperparameters.
 pub struct TreeParams {
+    /// Depth bound.
     pub max_depth: usize,
+    /// Minimum samples a leaf may hold.
     pub min_samples_leaf: usize,
 }
 
@@ -52,6 +61,7 @@ fn gini(pos: f64, n: f64) -> f64 {
 }
 
 impl DecisionTree {
+    /// Fit a tree greedily (Gini impurity).
     pub fn fit(samples: &[Sample], params: TreeParams) -> DecisionTree {
         assert!(!samples.is_empty());
         let idx: Vec<usize> = (0..samples.len()).collect();
@@ -60,6 +70,7 @@ impl DecisionTree {
         }
     }
 
+    /// Positive probability for one feature vector.
     pub fn predict_proba(&self, x: &[f64]) -> f64 {
         let mut node = &self.root;
         loop {
@@ -77,10 +88,12 @@ impl DecisionTree {
         }
     }
 
+    /// Hard classification at 0.5.
     pub fn predict(&self, x: &[f64]) -> bool {
         self.predict_proba(x) >= 0.5
     }
 
+    /// Depth of the fitted tree.
     pub fn depth(&self) -> usize {
         fn d(n: &Node) -> usize {
             match n {

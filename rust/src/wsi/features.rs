@@ -14,6 +14,7 @@ use std::collections::HashMap;
 use crate::pyramid::tree::ExecTree;
 use crate::slide::tile::TileId;
 
+/// Probability-histogram resolution of the feature vector.
 pub const HIST_BINS: usize = 10;
 /// Histogram + [mean, max, frac ≥ 0.5, frac ≥ 0.9].
 pub const FEATURE_DIM: usize = HIST_BINS + 4;

@@ -1,8 +1,11 @@
 //! Whole-slide image classification (§4.6): probability-distribution
 //! features with pyramid→level-0 projection, CART trees, bagging.
 
+/// Bagged ensemble over decision trees.
 pub mod bagging;
+/// Minimal decision tree (no external ML deps).
 pub mod dtree;
+/// Slide-level feature extraction from execution trees.
 pub mod features;
 
 pub use bagging::{BaggingClassifier, BaggingParams};

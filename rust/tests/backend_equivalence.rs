@@ -77,6 +77,7 @@ fn all_backends_produce_identical_trees() {
                 workers: 2,
                 steal: true,
                 seed: 17,
+                ..ClusterExecConfig::default()
             },
         )
         .unwrap();
@@ -113,4 +114,72 @@ fn all_backends_produce_identical_trees() {
     // And the cache's own replay entry point (PyramidRun under the hood).
     let preds = SlidePredictions::collect(&slide, analyzer.as_ref(), 16);
     check("predcache::replay", &expect, &preds.replay(&thr));
+}
+
+/// The §10 acceptance bar: killing a worker mid-run must not change the
+/// resulting tree by a byte. A slow analyzer keeps the run alive long
+/// enough for the crash to land mid-frontier; the heartbeat detects the
+/// loss and the dead worker's chunks are resubmitted to the survivors.
+#[test]
+fn killing_a_worker_mid_run_preserves_the_tree() {
+    use pyramidai::model::DelayAnalyzer;
+    use std::time::{Duration, Instant};
+
+    let spec = SlideSpec::new("bkkill", 811, 32, 16, 3, 64, SlideKind::LargeTumor);
+    let oracle: Arc<dyn Analyzer> = Arc::new(OracleAnalyzer::new(1));
+    let slide = Arc::new(Slide::from_spec(spec.clone()));
+    let thr = Thresholds {
+        zoom: vec![0.5, 0.35, 0.35],
+    };
+    // Ground truth with the plain (fast) oracle; the cluster runs the
+    // same oracle behind a per-tile delay, so probabilities agree.
+    let expect = run_pyramidal(&slide, oracle.as_ref(), &thr, 8);
+
+    let slow: Arc<dyn Analyzer> = Arc::new(DelayAnalyzer::new(
+        OracleAnalyzer::new(1),
+        Duration::from_millis(2),
+    ));
+    // Stealing off: chunk placement is exactly the round-robin deal, so
+    // the victim is guaranteed to hold work when the crash lands.
+    let mut backend = ClusterBackend::start(
+        spec,
+        slow,
+        &ClusterExecConfig {
+            workers: 3,
+            steal: false,
+            seed: 23,
+            heartbeat: Duration::from_millis(10),
+            max_missed: 2,
+            ..ClusterExecConfig::default()
+        },
+    )
+    .unwrap();
+    let exec = backend.exec_handle();
+    let killer = std::thread::spawn(move || {
+        std::thread::sleep(Duration::from_millis(40));
+        assert!(exec.kill_worker(0), "kill order must be deliverable");
+    });
+    let got = run_on_backend(
+        slide.id(),
+        slide.levels(),
+        expect.initial.clone(),
+        &thr,
+        4,
+        &mut backend,
+    )
+    .unwrap();
+    killer.join().unwrap();
+    check("cluster+kill", &expect, &got);
+    assert_eq!(backend.in_flight(), 0, "no leaked work after recovery");
+
+    // The loss is eventually detected and accounted, even if the run
+    // outpaced the heartbeat.
+    let exec = backend.exec_handle();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while exec.fault_stats().workers_lost == 0 && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let stats = exec.fault_stats();
+    assert_eq!(stats.workers_lost, 1, "heartbeat must declare the victim dead");
+    assert_eq!(exec.alive_workers(), 2);
 }

@@ -1,0 +1,121 @@
+//! Multi-process cluster smoke tests: workers as separate OS processes.
+//!
+//! `ClusterExec` spawns `pyramidai worker --connect <addr>` children
+//! (via `CARGO_BIN_EXE_pyramidai`, which Cargo builds for integration
+//! tests), so the serve/cluster paths exercise *real* process isolation:
+//! separate address spaces, real sockets, and crashes that are actual
+//! `SIGKILL`s. The trees must still be byte-identical to the in-process
+//! blocking driver — and stay so when an external worker is killed
+//! mid-run (DESIGN.md §10).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use pyramidai::cluster::{ClusterBackend, ClusterExecConfig};
+use pyramidai::model::oracle::OracleAnalyzer;
+use pyramidai::model::{Analyzer, DelayAnalyzer};
+use pyramidai::pyramid::backend::run_on_backend;
+use pyramidai::pyramid::driver::run_pyramidal;
+use pyramidai::pyramid::tree::Thresholds;
+use pyramidai::slide::pyramid::Slide;
+use pyramidai::synth::slide_gen::{SlideKind, SlideSpec};
+
+/// Cluster config whose external workers run the real `pyramidai`
+/// binary with an analyzer identical to the in-process oracle.
+fn external_cfg(workers: usize, external: usize, seed: u64) -> ClusterExecConfig {
+    ClusterExecConfig {
+        workers,
+        steal: false,
+        seed,
+        heartbeat: Duration::from_millis(15),
+        max_missed: 3,
+        external_workers: external,
+        external_program: env!("CARGO_BIN_EXE_pyramidai").to_string(),
+        // The in-process side of these tests uses OracleAnalyzer::new(1);
+        // the worker processes must build the same model.
+        external_args: vec![
+            "--model".to_string(),
+            "oracle".to_string(),
+            "--analyzer-seed".to_string(),
+            "1".to_string(),
+        ],
+    }
+}
+
+#[test]
+fn external_worker_processes_serve_chunks() {
+    let spec = SlideSpec::new("mp", 901, 32, 16, 3, 64, SlideKind::LargeTumor);
+    let analyzer: Arc<dyn Analyzer> = Arc::new(OracleAnalyzer::new(1));
+    let slide = Slide::from_spec(spec.clone());
+    let thr = Thresholds {
+        zoom: vec![0.5, 0.35, 0.35],
+    };
+    let expect = run_pyramidal(&slide, analyzer.as_ref(), &thr, 8);
+
+    // One in-process worker plus two external OS processes.
+    let mut backend =
+        ClusterBackend::start(spec, analyzer, &external_cfg(1, 2, 31)).unwrap();
+    assert!(
+        backend.exec().wait_for_workers(3, Duration::from_secs(30)),
+        "external workers must register through the Hello handshake"
+    );
+    assert_eq!(backend.exec().fault_stats().workers_joined, 2);
+
+    let got = run_on_backend(
+        slide.id(),
+        slide.levels(),
+        expect.initial.clone(),
+        &thr,
+        4,
+        &mut backend,
+    )
+    .unwrap();
+    got.check_consistency().unwrap();
+    assert_eq!(got.nodes, expect.nodes, "multi-process tree diverged");
+    assert_eq!(backend.in_flight(), 0);
+}
+
+#[test]
+fn killed_external_worker_process_does_not_change_the_tree() {
+    let spec = SlideSpec::new("mp_kill", 902, 32, 16, 3, 64, SlideKind::LargeTumor);
+    let oracle: Arc<dyn Analyzer> = Arc::new(OracleAnalyzer::new(1));
+    let slide = Slide::from_spec(spec.clone());
+    let thr = Thresholds {
+        zoom: vec![0.5, 0.35, 0.35],
+    };
+    let expect = run_pyramidal(&slide, oracle.as_ref(), &thr, 8);
+
+    // The dispatcher side is slow (per-tile delay) so the SIGKILL lands
+    // while the victim still holds chunks; note the external processes
+    // run the *fast* oracle — only probabilities must match, not speed.
+    let slow: Arc<dyn Analyzer> = Arc::new(DelayAnalyzer::new(
+        OracleAnalyzer::new(1),
+        Duration::from_millis(2),
+    ));
+    let mut backend =
+        ClusterBackend::start(spec, slow, &external_cfg(2, 1, 37)).unwrap();
+    assert!(
+        backend.exec().wait_for_workers(3, Duration::from_secs(30)),
+        "external worker must register before the run starts"
+    );
+    let exec = backend.exec_handle();
+    let killer = std::thread::spawn(move || {
+        std::thread::sleep(Duration::from_millis(30));
+        assert!(exec.kill_external_worker(0), "a child process must die");
+    });
+    let got = run_on_backend(
+        slide.id(),
+        slide.levels(),
+        expect.initial.clone(),
+        &thr,
+        4,
+        &mut backend,
+    )
+    .unwrap();
+    killer.join().unwrap();
+    got.check_consistency().unwrap();
+    assert_eq!(
+        got.nodes, expect.nodes,
+        "killing an external worker changed the tree"
+    );
+}

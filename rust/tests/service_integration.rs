@@ -399,6 +399,7 @@ fn cluster_backend_service_matches_standalone_runs() {
                 workers: 2,
                 steal: true,
                 seed: 13,
+                ..ClusterExecConfig::default()
             }),
             ..ServiceConfig::default()
         },
@@ -412,6 +413,8 @@ fn cluster_backend_service_matches_standalone_runs() {
         .collect();
     let report = svc.shutdown();
     assert_eq!(report.metrics.completed, specs.len());
+    let faults = report.cluster_faults.expect("cluster mode reports faults");
+    assert_eq!(faults.workers_lost, 0, "healthy run must not count losses");
     for (i, id) in ids.iter().enumerate() {
         let r = report.job(*id).unwrap();
         assert_eq!(r.state, JobState::Completed, "job {i}");
@@ -421,6 +424,70 @@ fn cluster_backend_service_matches_standalone_runs() {
             "cluster-backed job {i} diverged from standalone driver"
         );
     }
+}
+
+/// §10 at the service layer: a cluster worker dies while jobs are in
+/// flight — every job still completes with the standalone-driver tree,
+/// and the report surfaces the loss/resubmission counts so operators can
+/// see the recovery (instead of silent self-healing).
+#[test]
+fn cluster_worker_loss_mid_service_recovers_and_is_reported() {
+    use pyramidai::cluster::ClusterExecConfig;
+    use pyramidai::service::ExecMode;
+
+    let specs: Vec<SlideSpec> = (0..2).map(|i| spec(730 + i, SlideKind::LargeTumor)).collect();
+    let thr = thresholds();
+    let solo: Vec<_> = specs
+        .iter()
+        .map(|sp| {
+            let slide = Slide::from_spec(sp.clone());
+            run_pyramidal(&slide, oracle().as_ref(), &thr, 8)
+        })
+        .collect();
+
+    let svc = AnalysisService::start(
+        slow_oracle(2),
+        ServiceConfig {
+            workers: 2,
+            queue_capacity: 8,
+            max_in_flight: 2,
+            batch: 6,
+            policy: PolicySpec::fifo(),
+            exec: ExecMode::Cluster(ClusterExecConfig {
+                workers: 3,
+                steal: false,
+                seed: 41,
+                heartbeat: Duration::from_millis(10),
+                max_missed: 2,
+                ..ClusterExecConfig::default()
+            }),
+            ..ServiceConfig::default()
+        },
+    );
+    let cluster = svc.cluster().expect("cluster mode exposes the handle");
+    let ids: Vec<_> = specs
+        .iter()
+        .map(|sp| {
+            svc.submit(JobSpec::new(JobSource::Spec(sp.clone()), thr.clone()))
+                .unwrap()
+        })
+        .collect();
+    // Let chunks land on the victim, then crash it.
+    std::thread::sleep(Duration::from_millis(30));
+    assert!(cluster.kill_worker(0), "kill order must be deliverable");
+    let report = svc.shutdown();
+    assert_eq!(report.metrics.completed, specs.len(), "no job may wedge");
+    for (i, id) in ids.iter().enumerate() {
+        let r = report.job(*id).unwrap();
+        assert_eq!(r.state, JobState::Completed, "job {i}");
+        assert_eq!(
+            r.tree.as_ref().unwrap().nodes,
+            solo[i].nodes,
+            "worker loss changed job {i}'s tree"
+        );
+    }
+    let faults = report.cluster_faults.expect("cluster mode reports faults");
+    assert_eq!(faults.workers_lost, 1, "the crash must be detected and counted");
 }
 
 #[test]
