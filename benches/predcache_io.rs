@@ -1,0 +1,197 @@
+//! Prediction-cache I/O bench: the legacy whole-set JSON format vs the
+//! binary per-slide shard store, on the same collected predictions.
+//!
+//! Measures save time, load time and on-disk footprint for both formats,
+//! then replay throughput three ways: fully in memory, streamed through
+//! an unbounded [`ShardedPredStore`], and streamed under a 0 MiB budget
+//! (every slide switch evicts — the worst case for the LRU).
+//!
+//! The run *asserts* the tentpole claims instead of just printing them:
+//! binary shard load must be ≥5× faster than JSON load, shards must be
+//! smaller on disk than JSON, and every streamed replay tree must be
+//! byte-identical to the in-memory replay.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use pyramidai::harness::{print_table, CsvOut};
+use pyramidai::model::oracle::OracleAnalyzer;
+use pyramidai::predcache::store::save_sharded;
+use pyramidai::predcache::{PredCache, ShardedPredStore};
+use pyramidai::pyramid::tree::Thresholds;
+use pyramidai::slide::pyramid::Slide;
+use pyramidai::synth::slide_gen::{gen_slide_set, DatasetParams};
+
+const SLIDES: usize = 16;
+const LOAD_REPS: usize = 5;
+
+fn dir_size(dir: &Path) -> u64 {
+    std::fs::read_dir(dir)
+        .map(|rd| {
+            rd.filter_map(|e| e.ok())
+                .filter_map(|e| e.metadata().ok())
+                .map(|m| m.len())
+                .sum()
+        })
+        .unwrap_or(0)
+}
+
+fn timed<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let t = Instant::now();
+    let v = f();
+    (v, t.elapsed())
+}
+
+fn main() -> anyhow::Result<()> {
+    let params = DatasetParams::default();
+    let slides: Vec<Slide> = gen_slide_set("io", SLIDES, 2027, &params)
+        .into_iter()
+        .map(Slide::from_spec)
+        .collect();
+    let analyzer = OracleAnalyzer::new(1);
+    let (cache, t_collect) = timed(|| PredCache::collect_set(&slides, &analyzer, 32));
+    let tiles: usize = cache.slides.iter().map(|s| s.len()).sum();
+    println!(
+        "collected {tiles} tile predictions over {SLIDES} slides in {:.2}s",
+        t_collect.as_secs_f64()
+    );
+
+    let root: PathBuf = std::env::temp_dir().join(format!(
+        "pyramidai_bench_predcache_io_{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&root);
+    std::fs::create_dir_all(&root)?;
+    let json_path = root.join("cache.json");
+    let shard_dir = root.join("shards");
+
+    // --- save -----------------------------------------------------------
+    let ((), t_json_save) = timed(|| cache.save(&json_path).expect("json save"));
+    let (r, t_shard_save) = timed(|| save_sharded(&cache, &shard_dir, 2));
+    r?;
+    let json_bytes = std::fs::metadata(&json_path)?.len();
+    let shard_bytes = dir_size(&shard_dir);
+
+    // --- load (best of LOAD_REPS) ---------------------------------------
+    let t_json_load = (0..LOAD_REPS)
+        .map(|_| timed(|| PredCache::load(&json_path).expect("json load")).1)
+        .min()
+        .unwrap();
+    let t_shard_load = (0..LOAD_REPS)
+        .map(|_| {
+            timed(|| {
+                ShardedPredStore::open(&shard_dir)
+                    .and_then(|s| s.load_all())
+                    .expect("shard load")
+            })
+            .1
+        })
+        .min()
+        .unwrap();
+
+    // --- replay ---------------------------------------------------------
+    let thr = Thresholds {
+        zoom: vec![0.5, 0.35, 0.35],
+    };
+    let (trees, t_mem) = timed(|| {
+        cache
+            .slides
+            .iter()
+            .map(|s| s.replay(&thr))
+            .collect::<Vec<_>>()
+    });
+    let replayed: usize = trees.iter().map(|t| t.total_analyzed()).sum();
+
+    let store = Arc::new(ShardedPredStore::open(&shard_dir)?);
+    let (streamed, t_stream) = timed(|| {
+        (0..store.len())
+            .map(|i| store.replay(i, &thr).expect("streamed replay"))
+            .collect::<Vec<_>>()
+    });
+    let tiny = Arc::new(ShardedPredStore::open_with_budget(&shard_dir, Some(0))?);
+    let (evicted, t_evict) = timed(|| {
+        (0..tiny.len())
+            .map(|i| tiny.replay(i, &thr).expect("evicting replay"))
+            .collect::<Vec<_>>()
+    });
+
+    // Correctness gates: streamed trees byte-identical, with and without
+    // eviction pressure.
+    for i in 0..SLIDES {
+        assert_eq!(trees[i].nodes, streamed[i].nodes, "streamed tree {i}");
+        assert_eq!(trees[i].nodes, evicted[i].nodes, "evicted tree {i}");
+    }
+    let st = tiny.stats();
+    assert!(st.evictions > 0, "0 MiB budget must evict ({st:?})");
+
+    // Performance gates (the ISSUE's acceptance criteria).
+    assert!(
+        shard_bytes < json_bytes,
+        "shards ({shard_bytes} B) must be smaller than JSON ({json_bytes} B)"
+    );
+    let speedup = t_json_load.as_secs_f64() / t_shard_load.as_secs_f64().max(1e-9);
+    assert!(
+        speedup >= 5.0,
+        "binary shard load only {speedup:.1}x faster than JSON (need >=5x)"
+    );
+
+    let fmt_ms = |d: Duration| format!("{:.2}", d.as_secs_f64() * 1e3);
+    let rows = vec![
+        vec![
+            "json".to_string(),
+            fmt_ms(t_json_save),
+            fmt_ms(t_json_load),
+            format!("{}", json_bytes),
+            format!("{:.1}", json_bytes as f64 / tiles as f64),
+        ],
+        vec![
+            "binary shards".to_string(),
+            fmt_ms(t_shard_save),
+            fmt_ms(t_shard_load),
+            format!("{}", shard_bytes),
+            format!("{:.1}", shard_bytes as f64 / tiles as f64),
+        ],
+    ];
+    print_table(
+        &format!(
+            "predcache I/O — {SLIDES} slides, {tiles} tiles (binary load {speedup:.1}x faster)"
+        ),
+        &["format", "save_ms", "load_ms", "bytes", "B/tile"],
+        &rows,
+    );
+
+    let replay_rows = vec![
+        vec![
+            "in-memory".to_string(),
+            fmt_ms(t_mem),
+            format!("{:.0}", replayed as f64 / t_mem.as_secs_f64().max(1e-9)),
+        ],
+        vec![
+            "store (unbounded)".to_string(),
+            fmt_ms(t_stream),
+            format!("{:.0}", replayed as f64 / t_stream.as_secs_f64().max(1e-9)),
+        ],
+        vec![
+            format!("store (0 MiB, {} evictions)", st.evictions),
+            fmt_ms(t_evict),
+            format!("{:.0}", replayed as f64 / t_evict.as_secs_f64().max(1e-9)),
+        ],
+    ];
+    print_table(
+        &format!("replay of {replayed} analyzed tiles — trees byte-identical across all rows"),
+        &["path", "wall_ms", "tiles/s"],
+        &replay_rows,
+    );
+
+    let mut csv = CsvOut::create(
+        "predcache_io.csv",
+        &["format", "save_ms", "load_ms", "bytes"],
+    )?;
+    for r in &rows {
+        csv.row(&r[..4])?;
+    }
+
+    std::fs::remove_dir_all(&root)?;
+    Ok(())
+}

@@ -61,7 +61,7 @@ fn main() -> anyhow::Result<()> {
         .slides
         .iter()
         .chain(&test_cache.slides)
-        .map(|s| s.preds.len())
+        .map(|s| s.len())
         .sum();
     println!(
         "[3/7] real inference over {} tiles in {:.1}s ({:.2} ms/tile incl. rendering)",
@@ -70,15 +70,15 @@ fn main() -> anyhow::Result<()> {
         t.elapsed().as_secs_f64() * 1e3 / n_preds as f64
     );
 
-    let emp = empirical::select(&train_cache, 3, 0.90);
-    let met = metric_based::select(&train_cache, 3, 0.90);
+    let emp = empirical::select(&train_cache, 3, 0.90)?;
+    let met = metric_based::select(&train_cache, 3, 0.90)?;
     println!(
         "[4/7] tuned: empirical β={} → thresholds {:?}; metric-based βs {:?}",
         emp.beta, emp.thresholds.zoom, met.betas
     );
 
-    let (e_ret, e_spd, _) = metric_based::evaluate(&test_cache, &emp.thresholds);
-    let (m_ret, m_spd, _) = metric_based::evaluate(&test_cache, &met.thresholds);
+    let (e_ret, e_spd, _) = metric_based::evaluate(&test_cache, &emp.thresholds)?;
+    let (m_ret, m_spd, _) = metric_based::evaluate(&test_cache, &met.thresholds)?;
     print_table(
         "[5/7] test-set results (paper: 90% retention at 2.65× / 92% at 2.34×)",
         &["strategy", "retention", "speedup"],
@@ -114,9 +114,8 @@ fn main() -> anyhow::Result<()> {
     // WSI classification.
     let label = |cache: &PredCache, i: usize| {
         cache.slides[i]
-            .preds
-            .iter()
-            .any(|(t, p)| t.level == 0 && p.tumor && p.prob >= 0.5)
+            .iter_level(0)
+            .any(|(_, p)| p.tumor && p.prob >= 0.5)
     };
     let mk = |cache: &PredCache| -> Vec<Sample> {
         (0..cache.slides.len())

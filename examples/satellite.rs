@@ -46,7 +46,7 @@ fn main() -> anyhow::Result<()> {
         .map(|s| Slide::from_spec(s.spec.clone()))
         .collect();
     let cache = PredCache::collect_set(&train, &analyzer, 32);
-    let sel = empirical::select(&cache, 3, 0.9);
+    let sel = empirical::select(&cache, 3, 0.9)?;
     println!(
         "tuned on {} scenes: β={} thresholds {:?}",
         train.len(),

@@ -26,16 +26,16 @@ fn main() -> anyhow::Result<()> {
 
     let mut rows = Vec::new();
     for target in [0.80, 0.90, 0.95] {
-        let emp = empirical::select(&ctx.train_cache, 3, target);
-        let (ret, spd, _) = metric_based::evaluate(&ctx.test_cache, &emp.thresholds);
+        let emp = empirical::select(&ctx.train_cache, 3, target)?;
+        let (ret, spd, _) = metric_based::evaluate(&ctx.test_cache, &emp.thresholds)?;
         rows.push(vec![
             format!("empirical(target {target})"),
             format!("β={}", emp.beta),
             format!("{ret:.3}"),
             format!("{spd:.2}×"),
         ]);
-        let met = metric_based::select(&ctx.train_cache, 3, target);
-        let (ret, spd, _) = metric_based::evaluate(&ctx.test_cache, &met.thresholds);
+        let met = metric_based::select(&ctx.train_cache, 3, target)?;
+        let (ret, spd, _) = metric_based::evaluate(&ctx.test_cache, &met.thresholds)?;
         rows.push(vec![
             format!("metric-based(objective {target})"),
             format!("β={:?}/{:?}", met.betas[1], met.betas[2]),

@@ -13,7 +13,8 @@ use anyhow::Result;
 use crate::model::oracle::OracleAnalyzer;
 use crate::model::pjrt::PjrtAnalyzer;
 use crate::model::Analyzer;
-use crate::predcache::PredCache;
+use crate::predcache::store::MANIFEST_FILE;
+use crate::predcache::{PredCache, ShardedPredStore};
 use crate::slide::pyramid::Slide;
 use crate::synth::slide_gen::{gen_slide_set, DatasetParams, SlideSpec};
 
@@ -123,8 +124,7 @@ pub struct Ctx {
     pub test_cache: PredCache,
 }
 
-fn cache_path(tag: &str, model: &str, n: usize, p: &DatasetParams, seed: u64) -> PathBuf {
-    let dir = Path::new("bench_results").join(".cache");
+fn cache_key(tag: &str, model: &str, n: usize, p: &DatasetParams, seed: u64) -> String {
     // Key PJRT caches by the artifacts build stamp so retrained models
     // invalidate stale predictions.
     let stamp = if model == "pjrt" {
@@ -137,12 +137,15 @@ fn cache_path(tag: &str, model: &str, n: usize, p: &DatasetParams, seed: u64) ->
     } else {
         String::new()
     };
-    dir.join(format!(
-        "preds_{tag}_{model}{stamp}_{n}x{}x{}_s{seed}.json",
+    format!(
+        "preds_{tag}_{model}{stamp}_{n}x{}x{}_s{seed}",
         p.tiles_x, p.tiles_y
-    ))
+    )
 }
 
+/// On-disk prediction cache for one (tag, model, dataset) triple: a
+/// binary shard directory (fast path), with the pre-shard JSON file of
+/// the same key imported transparently when present.
 fn load_or_collect(
     tag: &str,
     model: &str,
@@ -150,11 +153,27 @@ fn load_or_collect(
     analyzer: &Arc<dyn Analyzer>,
     cfg: &CtxConfig,
 ) -> Result<PredCache> {
-    let path = cache_path(tag, model, specs.len(), &cfg.params, cfg.seed);
-    if path.exists() {
-        if let Ok(c) = PredCache::load(&path) {
+    let root = Path::new("bench_results").join(".cache");
+    let key = cache_key(tag, model, specs.len(), &cfg.params, cfg.seed);
+    let dir = root.join(format!("{key}.shards"));
+    if dir.join(MANIFEST_FILE).exists() {
+        if let Ok(store) = ShardedPredStore::open(&dir) {
+            if store.len() == specs.len() {
+                if let Ok(c) = store.load_all() {
+                    log::info!("loaded shard cache {}", dir.display());
+                    return Ok(c);
+                }
+            }
+        }
+    }
+    // Migration: a legacy JSON cache of the same key converts to shards
+    // once, then the binary path serves every later run.
+    let legacy = root.join(format!("{key}.json"));
+    if legacy.exists() {
+        if let Ok(c) = PredCache::load(&legacy) {
             if c.slides.len() == specs.len() {
-                log::info!("loaded prediction cache {}", path.display());
+                log::info!("migrating JSON cache {} to shards", legacy.display());
+                c.save_sharded(&dir, 2)?;
                 return Ok(c);
             }
         }
@@ -162,8 +181,8 @@ fn load_or_collect(
     log::info!("collecting predictions for {} ({} slides)…", tag, specs.len());
     let slides: Vec<Slide> = specs.iter().cloned().map(Slide::from_spec).collect();
     let cache = PredCache::collect_set(&slides, analyzer.as_ref(), 32);
-    std::fs::create_dir_all(path.parent().unwrap())?;
-    cache.save(&path)?;
+    std::fs::create_dir_all(&root)?;
+    cache.save_sharded(&dir, 2)?;
     Ok(cache)
 }
 
@@ -190,8 +209,8 @@ impl Ctx {
     /// Ground-truth WSI label of a cached slide: does the reference
     /// execution detect any true positive tile?
     pub fn slide_label(cache: &PredCache, i: usize) -> bool {
-        cache.slides[i].preds.iter().any(|(t, p)| {
-            t.level == 0 && p.tumor && p.prob >= crate::pyramid::tree::POSITIVE_THRESHOLD as f32
+        cache.slides[i].iter_level(0).any(|(_, p)| {
+            p.tumor && p.prob >= crate::pyramid::tree::POSITIVE_THRESHOLD as f32
         })
     }
 }
@@ -220,8 +239,8 @@ mod tests {
         // Second load hits the disk cache (just verify it round-trips).
         let ctx2 = Ctx::load(cfg).unwrap();
         assert_eq!(
-            ctx2.train_cache.slides[0].preds.len(),
-            ctx.train_cache.slides[0].preds.len()
+            ctx2.train_cache.slides[0].len(),
+            ctx.train_cache.slides[0].len()
         );
         // cleanup
         let _ = std::fs::remove_dir_all("bench_results/.cache");

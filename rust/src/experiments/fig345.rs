@@ -25,7 +25,7 @@ pub fn fig3(ctx: &Ctx) -> Result<()> {
     )?;
     let mut rows = Vec::new();
     for level in 1..levels {
-        let curve = isolated_curve(&ctx.train_cache, levels, level);
+        let curve = isolated_curve(&ctx.train_cache, levels, level)?;
         for p in &curve.points {
             let row = vec![
                 level.to_string(),
@@ -63,9 +63,9 @@ pub fn fig4(ctx: &Ctx) -> Result<()> {
     )?;
     let mut rows = Vec::new();
     for objective in [0.70, 0.75, 0.80, 0.85, 0.90, 0.95, 0.99] {
-        let sel = metric_based::select(&ctx.train_cache, levels, objective);
-        let (tr_ret, tr_sp, _) = evaluate(&ctx.train_cache, &sel.thresholds);
-        let (te_ret, te_sp, _) = evaluate(&ctx.test_cache, &sel.thresholds);
+        let sel = metric_based::select(&ctx.train_cache, levels, objective)?;
+        let (tr_ret, tr_sp, _) = evaluate(&ctx.train_cache, &sel.thresholds)?;
+        let (te_ret, te_sp, _) = evaluate(&ctx.test_cache, &sel.thresholds)?;
         let row = vec![
             format!("{objective:.2}"),
             sel.betas[1].map_or("-".into(), |b| b.to_string()),
@@ -101,7 +101,7 @@ pub fn fig4(ctx: &Ctx) -> Result<()> {
 /// Fig. 5 rows: empirical β sweep on train + test.
 pub fn fig5(ctx: &Ctx) -> Result<()> {
     let levels = ctx.cfg.params.levels;
-    let sweep = empirical::sweep(&ctx.train_cache, levels);
+    let sweep = empirical::sweep(&ctx.train_cache, levels)?;
     let mut csv = CsvOut::create(
         "fig5_empirical_tradeoff.csv",
         &[
@@ -114,7 +114,7 @@ pub fn fig5(ctx: &Ctx) -> Result<()> {
     )?;
     let mut rows = Vec::new();
     for p in &sweep {
-        let (te_ret, te_sp, _) = evaluate(&ctx.test_cache, &p.thresholds);
+        let (te_ret, te_sp, _) = evaluate(&ctx.test_cache, &p.thresholds)?;
         let row = vec![
             p.beta.to_string(),
             format!("{:.4}", p.retention),

@@ -29,7 +29,7 @@ pub struct Fig6Row {
 pub fn run(ctx: &Ctx, workers: &[usize]) -> Result<Vec<Fig6Row>> {
     // Thresholds per §5.1: "the pyramidal execution tree retrieved using
     // thresholds from §4.5" — empirical selection at 0.90.
-    let sel = empirical::select(&ctx.train_cache, ctx.cfg.params.levels, 0.90);
+    let sel = empirical::select(&ctx.train_cache, ctx.cfg.params.levels, 0.90)?;
     let trees: Vec<_> = ctx
         .test_cache
         .slides

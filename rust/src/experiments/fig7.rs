@@ -50,7 +50,7 @@ pub fn run(
     reps: usize,
     per_tile: Duration,
 ) -> Result<Vec<Fig7Row>> {
-    let sel = empirical::select(&ctx.train_cache, ctx.cfg.params.levels, 0.90);
+    let sel = empirical::select(&ctx.train_cache, ctx.cfg.params.levels, 0.90)?;
     let p = DatasetParams::default();
     let slides = [
         ("large_tumor", SlideKind::LargeTumor),

@@ -77,7 +77,7 @@ pub fn run(
     reps: usize,
     per_tile: Duration,
 ) -> Result<Vec<Fig7bRow>> {
-    let sel = empirical::select(&ctx.train_cache, ctx.cfg.params.levels, 0.90);
+    let sel = empirical::select(&ctx.train_cache, ctx.cfg.params.levels, 0.90)?;
     let specs = job_specs();
     let analyzer: Arc<dyn Analyzer> =
         Arc::new(DelayAnalyzer::new(OracleAnalyzer::new(1), per_tile));

@@ -43,8 +43,8 @@ fn samples(cache: &PredCache, thresholds: &Thresholds) -> Vec<Sample> {
 /// Run the §4.6 comparison on the test set.
 pub fn run(ctx: &Ctx) -> Result<Vec<WsiRow>> {
     let levels = ctx.cfg.params.levels;
-    let emp = empirical::select(&ctx.train_cache, levels, 0.90);
-    let met = metric_based::select(&ctx.train_cache, levels, 0.90);
+    let emp = empirical::select(&ctx.train_cache, levels, 0.90)?;
+    let met = metric_based::select(&ctx.train_cache, levels, 0.90)?;
     let reference = Thresholds::pass_through(levels);
 
     let modes: [(&'static str, &Thresholds); 3] = [
@@ -58,7 +58,7 @@ pub fn run(ctx: &Ctx) -> Result<Vec<WsiRow>> {
         let test = samples(&ctx.test_cache, thr);
         let clf = BaggingClassifier::fit(&train, &BaggingParams::default());
         let (accuracy, tp, fp, detected) = clf.confusion(&test);
-        let (_, speedup, _) = metric_based::evaluate(&ctx.test_cache, thr);
+        let (_, speedup, _) = metric_based::evaluate(&ctx.test_cache, thr)?;
         rows.push(WsiRow {
             mode,
             accuracy,

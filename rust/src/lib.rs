@@ -49,7 +49,9 @@ pub mod wsi;
 pub mod metrics;
 /// Tile analyzers: the calibrated oracle, the PJRT model, delay shims.
 pub mod model;
-/// Per-slide prediction caches for post-mortem replay (§4.3).
+/// Columnar per-slide prediction caches for post-mortem replay (§4.3):
+/// dense level grids in memory, binary shards + budgeted LRU store on
+/// disk.
 pub mod predcache;
 /// PJRT/XLA runtime bindings for the compiled L2 artifacts.
 pub mod runtime;

@@ -4,8 +4,10 @@
 //!
 //! ```text
 //! pyramidai gen       --out slides.json [--count 9] [--seed 2025]
-//! pyramidai predict   --slides slides.json --out cache.json [--model auto]
-//! pyramidai tune      --cache cache.json --out thresholds.json
+//! pyramidai predict   --slides slides.json --cache-dir preds/ [--model auto]
+//!                     [--out cache.json]
+//! pyramidai tune      --cache-dir preds/ --out thresholds.json
+//!                     [--cache-budget-mb 64]
 //!                     [--strategy empirical|metric] [--target 0.9]
 //! pyramidai analyze   --slide-seed 1 [--kind large_tumor] [--model auto]
 //!                     [--thresholds thresholds.json]
@@ -24,8 +26,7 @@ use pyramidai::cli::Args;
 use pyramidai::experiments::{self, Ctx, CtxConfig, ModelKind};
 use pyramidai::harness::print_table;
 use pyramidai::metrics::retention::retention_and_speedup;
-use pyramidai::predcache::PredCache;
-use pyramidai::predcache::SlidePredictions;
+use pyramidai::predcache::{PredCache, PredSource, ShardedPredStore, SlidePredictions};
 use pyramidai::pyramid::driver::{run_pyramidal, run_reference};
 use pyramidai::pyramid::tree::Thresholds;
 use pyramidai::slide::pyramid::Slide;
@@ -69,8 +70,15 @@ pyramidai — pyramidal analysis of gigapixel images (paper reproduction)
 
 subcommands:
   gen       generate a synthetic slide set        (--out --count --seed)
-  predict   collect predictions for a slide set   (--slides --out --model)
-  tune      tune decision thresholds from a cache (--cache --out --strategy --target)
+  predict   collect predictions for a slide set   (--slides --model, plus
+                                                   --cache-dir DIR for binary
+                                                   per-slide shards and/or
+                                                   --out FILE.json for legacy JSON)
+  tune      tune decision thresholds from a cache (--cache FILE.json or
+                                                   --cache-dir DIR [--cache-budget-mb N]
+                                                   --out --strategy --target;
+                                                   a shard dir streams slides
+                                                   under the memory budget)
   analyze   pyramidal vs reference on one slide   (--slide-seed --kind --model --thresholds)
   simulate  Fig-6 load-balancing simulation       (--workers --model)
   cluster   run the TCP work-stealing cluster     (--workers --per-tile-ms --reps
@@ -85,7 +93,9 @@ subcommands:
                                                    --preempt --deadline-ms --max-in-flight
                                                    --queue-cap --batch --coalesce --per-tile-ms
                                                    --tenants --seed --model --csv
-                                                   --external-workers --heartbeat-ms)
+                                                   --external-workers --heartbeat-ms
+                                                   --cache-dir DIR --cache-budget-mb N
+                                                   for streamed shard replay)
   report    regenerate every paper table/figure   (--model --fast)";
 
 fn model_kind(args: &Args) -> Result<ModelKind> {
@@ -126,36 +136,69 @@ fn load_specs(path: &str) -> Result<Vec<SlideSpec>> {
 
 fn cmd_predict(args: &Args) -> Result<()> {
     let slides = args.require("slides")?;
-    let out = args.require("out")?;
+    let out = args.get("out").map(String::from);
+    let cache_dir = args.get("cache-dir").map(String::from);
     let kind = model_kind(args)?;
     let batch = args.usize_or("batch", 32)?;
     let jobs = args.usize_or("jobs", 1)?;
     args.finish()?;
+    if out.is_none() && cache_dir.is_none() {
+        return Err(anyhow!(
+            "predict needs --cache-dir DIR (binary shards) and/or --out FILE.json (legacy JSON)"
+        ));
+    }
     let (analyzer, name) = experiments::ctx::make_analyzer(kind, 7)?;
     let specs = load_specs(&slides)?;
     println!("predicting {} slides ({name}, {jobs} jobs)…", specs.len());
     let cache = PredCache::collect_set_parallel(&specs, analyzer, batch, jobs);
-    cache.save(Path::new(&out))?;
-    println!("wrote prediction cache to {out}");
+    if let Some(dir) = &cache_dir {
+        cache.save_sharded(Path::new(dir), jobs)?;
+        println!("wrote {} binary shards + manifest to {dir}", cache.slides.len());
+    }
+    if let Some(out) = &out {
+        cache.save(Path::new(out))?;
+        println!("wrote JSON prediction cache to {out}");
+    }
     Ok(())
 }
 
+/// The `tune` input: a legacy JSON cache fully in memory, or a shard
+/// directory streamed under `--cache-budget-mb`.
+fn open_tuning_source(args: &Args) -> Result<(Box<dyn PredSource>, usize)> {
+    let budget = args.usize_or("cache-budget-mb", 0)?;
+    match (args.get("cache"), args.get("cache-dir")) {
+        (Some(path), None) => {
+            let cache = PredCache::load(Path::new(path))?;
+            let levels = cache
+                .slides
+                .first()
+                .ok_or_else(|| anyhow!("empty cache"))?
+                .spec
+                .levels;
+            Ok((Box::new(cache), levels))
+        }
+        (None, Some(dir)) => {
+            let budget = if budget == 0 { None } else { Some(budget) };
+            let store = ShardedPredStore::open_with_budget(Path::new(dir), budget)?;
+            let levels = store
+                .slide_levels(0)
+                .ok_or_else(|| anyhow!("empty shard store"))?;
+            Ok((Box::new(store), levels))
+        }
+        (Some(_), Some(_)) => Err(anyhow!("--cache and --cache-dir are mutually exclusive")),
+        (None, None) => Err(anyhow!("tune needs --cache FILE.json or --cache-dir DIR")),
+    }
+}
+
 fn cmd_tune(args: &Args) -> Result<()> {
-    let cache_path = args.require("cache")?;
     let out = args.require("out")?;
     let strategy = args.str_or("strategy", "empirical");
     let target = args.f64_or("target", 0.90)?;
+    let (source, levels) = open_tuning_source(args)?;
     args.finish()?;
-    let cache = PredCache::load(Path::new(&cache_path))?;
-    let levels = cache
-        .slides
-        .first()
-        .ok_or_else(|| anyhow!("empty cache"))?
-        .spec
-        .levels;
     let json = match strategy.as_str() {
         "empirical" => {
-            let sel = empirical::select(&cache, levels, target);
+            let sel = empirical::select(&source, levels, target)?;
             println!(
                 "empirical: β={} thresholds={:?}",
                 sel.beta, sel.thresholds.zoom
@@ -163,7 +206,7 @@ fn cmd_tune(args: &Args) -> Result<()> {
             sel.to_json()
         }
         "metric" => {
-            let sel = metric_based::select(&cache, levels, target);
+            let sel = metric_based::select(&source, levels, target)?;
             println!(
                 "metric-based: βs={:?} thresholds={:?}",
                 sel.betas, sel.thresholds.zoom
@@ -333,6 +376,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let model = model_kind(args)?;
     let params = dataset_params(args)?;
     let csv = args.bool("csv");
+    // Replay-backend cache placement: shard directory + residency budget
+    // (0 = unlimited). Without --cache-dir replay jobs pin their cache in
+    // memory as before.
+    let cache_dir = args.get("cache-dir").map(String::from);
+    let cache_budget_mb = args.usize_or("cache-budget-mb", 0)?;
     args.finish()?;
 
     let (base_analyzer, name) = experiments::ctx::make_analyzer(model, 7)?;
@@ -385,21 +433,51 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
     // Replay backend: run inference once up front (undelayed), then serve
     // the jobs as pure post-mortem replays — the §4.3 regime as a service.
-    let caches: Vec<Option<std::sync::Arc<SlidePredictions>>> = if backend == "replay" {
+    // With --cache-dir the predictions live in binary shards and jobs
+    // stream them through a budgeted store (--cache-budget-mb) instead of
+    // pinning every slide behind an Arc.
+    enum ReplaySource {
+        None,
+        Pinned(Vec<std::sync::Arc<SlidePredictions>>),
+        Store(std::sync::Arc<ShardedPredStore>),
+    }
+    let replay_source = if backend == "replay" {
         println!("collecting prediction caches for {} slides…", specs.len());
-        specs
-            .iter()
-            .map(|sp| {
-                let slide = Slide::from_spec(sp.clone());
-                Some(std::sync::Arc::new(SlidePredictions::collect(
-                    &slide,
-                    base_analyzer.as_ref(),
-                    batch,
-                )))
-            })
-            .collect()
+        let cache = PredCache::collect_set_parallel(
+            &specs,
+            std::sync::Arc::clone(&base_analyzer),
+            batch,
+            1,
+        );
+        match &cache_dir {
+            Some(dir) => {
+                let dir = Path::new(dir);
+                cache.save_sharded(dir, 2)?;
+                let budget = if cache_budget_mb == 0 {
+                    None
+                } else {
+                    Some(cache_budget_mb)
+                };
+                let store =
+                    std::sync::Arc::new(ShardedPredStore::open_with_budget(dir, budget)?);
+                println!(
+                    "replay jobs stream {} shards from {} (budget: {})",
+                    store.len(),
+                    dir.display(),
+                    if cache_budget_mb == 0 {
+                        "unlimited".to_string()
+                    } else {
+                        format!("{cache_budget_mb} MiB")
+                    }
+                );
+                ReplaySource::Store(store)
+            }
+            None => ReplaySource::Pinned(
+                cache.slides.into_iter().map(std::sync::Arc::new).collect(),
+            ),
+        }
     } else {
-        specs.iter().map(|_| None).collect()
+        ReplaySource::None
     };
 
     let svc = AnalysisService::start(
@@ -420,9 +498,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
     let prios = [Priority::Low, Priority::Normal, Priority::High];
     for (i, spec) in specs.into_iter().enumerate() {
-        let source = match &caches[i] {
-            Some(c) => JobSource::Cached(std::sync::Arc::clone(c)),
-            None => JobSource::Spec(spec),
+        let source = match &replay_source {
+            ReplaySource::Pinned(caches) => JobSource::Cached(std::sync::Arc::clone(&caches[i])),
+            ReplaySource::Store(store) => JobSource::Sharded {
+                store: std::sync::Arc::clone(store),
+                slide: i,
+            },
+            ReplaySource::None => JobSource::Spec(spec),
         };
         let mut job = JobSpec::new(source, thr.clone())
             .with_priority(prios[i % prios.len()])
@@ -443,6 +525,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     let report = svc.shutdown();
     svc_metrics::print_report(&report.results, &report.metrics);
+    if let ReplaySource::Store(store) = &replay_source {
+        let st = store.stats();
+        println!(
+            "shard store: {} loads, {} hits, {} evictions, {} slide(s) resident ({} KiB)",
+            st.loads,
+            st.hits,
+            st.evictions,
+            st.resident_slides,
+            st.resident_bytes / 1024
+        );
+    }
     if report.pool_panics > 0 {
         println!("pool absorbed {} analyzer panics", report.pool_panics);
     }

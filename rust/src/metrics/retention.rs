@@ -10,11 +10,8 @@
 //! of them (it analyzes every lineage tile at level 0); the pyramid only
 //! detects those it reaches. Speedup is the ratio of tiles analyzed.
 
-use std::collections::HashSet;
-
 use crate::predcache::SlidePredictions;
 use crate::pyramid::tree::{ExecTree, POSITIVE_THRESHOLD};
-use crate::slide::tile::TileId;
 
 /// Metrics of one pyramidal run against the reference on the same slide.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -53,23 +50,27 @@ impl RunMetrics {
 pub fn retention_and_speedup(preds: &SlidePredictions, tree: &ExecTree) -> RunMetrics {
     let thr = POSITIVE_THRESHOLD as f32;
     // Reference true positives: every lineage level-0 tile with prob ≥ θ
-    // and ground-truth tumor.
-    let ref_tp: HashSet<TileId> = preds
-        .preds
-        .iter()
-        .filter(|(t, p)| t.level == 0 && p.prob >= thr && p.tumor)
-        .map(|(t, _)| *t)
-        .collect();
+    // and ground-truth tumor — one sweep over the dense level-0 plane.
+    let ref_true_positives = preds
+        .iter_level(0)
+        .filter(|(_, p)| p.prob >= thr && p.tumor)
+        .count();
 
-    // Pyramid-detected positives at level 0.
+    // Pyramid-detected positives at level 0, membership checked by O(1)
+    // grid reads instead of a hash set.
     let retained = tree
         .level0()
         .iter()
-        .filter(|n| n.prob >= thr && ref_tp.contains(&n.tile))
+        .filter(|n| {
+            n.prob >= thr
+                && preds
+                    .get(n.tile)
+                    .is_some_and(|p| p.prob >= thr && p.tumor)
+        })
         .count();
 
     RunMetrics {
-        ref_true_positives: ref_tp.len(),
+        ref_true_positives,
         retained,
         pyramid_tiles: tree.total_analyzed(),
         reference_tiles: preds.reference_count(),

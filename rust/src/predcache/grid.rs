@@ -1,0 +1,328 @@
+//! Dense per-level columnar storage for cached tile predictions.
+//!
+//! One [`LevelGrid`] holds everything the replay/tuning paths need about
+//! one resolution level of one slide: a dense `Vec<f32>` probability
+//! plane plus two packed bitsets (presence and ground-truth label),
+//! all indexed by `(tx, ty)` in row-major order. Lookups are O(1) array
+//! reads — no hashing, no pointer chasing — and per-level tuning pairs
+//! come from a single slice sweep instead of a full-map scan.
+
+use crate::slide::tile::TileId;
+
+/// Cached per-tile data.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TilePred {
+    /// Predicted tumor probability.
+    pub prob: f32,
+    /// Ground-truth tumor label at this tile's level.
+    pub tumor: bool,
+}
+
+/// Dense storage for every cached tile of one pyramid level: a row-major
+/// probability plane and packed presence/label bitsets.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LevelGrid {
+    /// Grid width in tiles at this level.
+    tiles_x: usize,
+    /// Grid height in tiles at this level.
+    tiles_y: usize,
+    /// Probability plane, `tiles_x * tiles_y` entries; cells outside the
+    /// cached lineage hold NaN and are masked by `present`.
+    probs: Vec<f32>,
+    /// One bit per cell: is this tile part of the cached lineage?
+    present: Vec<u64>,
+    /// One bit per cell: ground-truth tumor label (meaningful only where
+    /// `present` is set).
+    tumor: Vec<u64>,
+    /// Number of set bits in `present` (kept incrementally).
+    count: usize,
+}
+
+#[inline]
+fn word_bit(idx: usize) -> (usize, u64) {
+    (idx >> 6, 1u64 << (idx & 63))
+}
+
+impl LevelGrid {
+    /// An empty grid of `tiles_x × tiles_y` cells.
+    pub fn new(tiles_x: usize, tiles_y: usize) -> LevelGrid {
+        let cells = tiles_x * tiles_y;
+        let words = cells.div_ceil(64);
+        LevelGrid {
+            tiles_x,
+            tiles_y,
+            probs: vec![f32::NAN; cells],
+            present: vec![0; words],
+            tumor: vec![0; words],
+            count: 0,
+        }
+    }
+
+    /// Rebuild a grid from its raw parts (the binary shard decoder).
+    /// Returns `None` when the slice lengths are inconsistent with the
+    /// grid dimensions.
+    pub(crate) fn from_parts(
+        tiles_x: usize,
+        tiles_y: usize,
+        probs: Vec<f32>,
+        present: Vec<u64>,
+        tumor: Vec<u64>,
+    ) -> Option<LevelGrid> {
+        let cells = tiles_x.checked_mul(tiles_y)?;
+        let words = cells.div_ceil(64);
+        if probs.len() != cells || present.len() != words || tumor.len() != words {
+            return None;
+        }
+        // Padding bits past `cells` must be clear: `count` and the pair
+        // sweep trust the popcount.
+        if cells % 64 != 0 {
+            let tail_mask = !0u64 << (cells % 64);
+            if present.last().is_some_and(|w| w & tail_mask != 0) {
+                return None;
+            }
+        }
+        let count = present.iter().map(|w| w.count_ones() as usize).sum();
+        Some(LevelGrid {
+            tiles_x,
+            tiles_y,
+            probs,
+            present,
+            tumor,
+            count,
+        })
+    }
+
+    /// Grid width in tiles.
+    pub fn tiles_x(&self) -> usize {
+        self.tiles_x
+    }
+
+    /// Grid height in tiles.
+    pub fn tiles_y(&self) -> usize {
+        self.tiles_y
+    }
+
+    /// Number of cached tiles at this level.
+    pub fn len(&self) -> usize {
+        self.count
+    }
+
+    /// True when no tile is cached at this level.
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Raw probability plane (row-major; NaN outside the lineage).
+    pub(crate) fn probs(&self) -> &[f32] {
+        &self.probs
+    }
+
+    /// Raw presence bitset words.
+    pub(crate) fn present_words(&self) -> &[u64] {
+        &self.present
+    }
+
+    /// Raw label bitset words.
+    pub(crate) fn tumor_words(&self) -> &[u64] {
+        &self.tumor
+    }
+
+    #[inline]
+    fn idx(&self, tx: usize, ty: usize) -> Option<usize> {
+        if tx < self.tiles_x && ty < self.tiles_y {
+            Some(ty * self.tiles_x + tx)
+        } else {
+            None
+        }
+    }
+
+    /// Insert (or overwrite) one tile. Returns `false` when `(tx, ty)` is
+    /// outside the grid.
+    pub fn insert(&mut self, tx: usize, ty: usize, prob: f32, tumor: bool) -> bool {
+        let Some(idx) = self.idx(tx, ty) else {
+            return false;
+        };
+        let (w, b) = word_bit(idx);
+        if self.present[w] & b == 0 {
+            self.present[w] |= b;
+            self.count += 1;
+        }
+        self.probs[idx] = prob;
+        if tumor {
+            self.tumor[w] |= b;
+        } else {
+            self.tumor[w] &= !b;
+        }
+        true
+    }
+
+    /// Remove one tile (corrupt-cache tests). Returns `true` when the
+    /// tile was present.
+    pub fn remove(&mut self, tx: usize, ty: usize) -> bool {
+        let Some(idx) = self.idx(tx, ty) else {
+            return false;
+        };
+        let (w, b) = word_bit(idx);
+        if self.present[w] & b == 0 {
+            return false;
+        }
+        self.present[w] &= !b;
+        self.tumor[w] &= !b;
+        self.probs[idx] = f32::NAN;
+        self.count -= 1;
+        true
+    }
+
+    /// The cached prediction at `(tx, ty)`, or `None` outside the lineage.
+    #[inline]
+    pub fn get(&self, tx: usize, ty: usize) -> Option<TilePred> {
+        let idx = self.idx(tx, ty)?;
+        let (w, b) = word_bit(idx);
+        if self.present[w] & b == 0 {
+            return None;
+        }
+        Some(TilePred {
+            prob: self.probs[idx],
+            tumor: self.tumor[w] & b != 0,
+        })
+    }
+
+    /// The cached probability at `(tx, ty)` — the replay hot path.
+    #[inline]
+    pub fn prob(&self, tx: usize, ty: usize) -> Option<f32> {
+        let idx = self.idx(tx, ty)?;
+        let (w, b) = word_bit(idx);
+        if self.present[w] & b == 0 {
+            return None;
+        }
+        Some(self.probs[idx])
+    }
+
+    /// (probability, label) pairs of every cached tile, in row-major
+    /// order — one slice sweep, the tuning input for this level.
+    pub fn pairs(&self) -> impl Iterator<Item = (f32, bool)> + '_ {
+        self.iter().map(|(_, _, p)| (p.prob, p.tumor))
+    }
+
+    /// Every cached tile as `(tx, ty, pred)`, row-major.
+    pub fn iter(&self) -> impl Iterator<Item = (usize, usize, TilePred)> + '_ {
+        self.present
+            .iter()
+            .enumerate()
+            .flat_map(move |(w, &word)| {
+                let mut word = word;
+                std::iter::from_fn(move || {
+                    if word == 0 {
+                        return None;
+                    }
+                    let bit = word.trailing_zeros() as usize;
+                    word &= word - 1;
+                    Some(w * 64 + bit)
+                })
+            })
+            .map(move |idx| {
+                let (w, b) = word_bit(idx);
+                (
+                    idx % self.tiles_x,
+                    idx / self.tiles_x,
+                    TilePred {
+                        prob: self.probs[idx],
+                        tumor: self.tumor[w] & b != 0,
+                    },
+                )
+            })
+    }
+
+    /// Every cached tile as a full [`TileId`] at `level`.
+    pub fn iter_ids(&self, level: usize) -> impl Iterator<Item = (TileId, TilePred)> + '_ {
+        self.iter()
+            .map(move |(tx, ty, p)| (TileId::new(level, tx, ty), p))
+    }
+
+    /// Approximate resident heap size in bytes (LRU budget accounting).
+    pub fn resident_bytes(&self) -> usize {
+        self.probs.len() * std::mem::size_of::<f32>()
+            + (self.present.len() + self.tumor.len()) * std::mem::size_of::<u64>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_get_remove_roundtrip() {
+        let mut g = LevelGrid::new(7, 3);
+        assert!(g.is_empty());
+        assert!(g.insert(6, 2, 0.25, true));
+        assert!(g.insert(0, 0, 0.5, false));
+        assert_eq!(g.len(), 2);
+        assert_eq!(
+            g.get(6, 2),
+            Some(TilePred {
+                prob: 0.25,
+                tumor: true
+            })
+        );
+        assert_eq!(g.prob(0, 0), Some(0.5));
+        assert_eq!(g.get(1, 1), None);
+        assert!(!g.insert(7, 0, 0.1, false), "out of bounds rejected");
+        assert!(g.remove(6, 2));
+        assert!(!g.remove(6, 2));
+        assert_eq!(g.len(), 1);
+        assert_eq!(g.get(6, 2), None);
+    }
+
+    #[test]
+    fn overwrite_does_not_grow_count() {
+        let mut g = LevelGrid::new(4, 4);
+        g.insert(1, 1, 0.2, false);
+        g.insert(1, 1, 0.9, true);
+        assert_eq!(g.len(), 1);
+        assert_eq!(
+            g.get(1, 1),
+            Some(TilePred {
+                prob: 0.9,
+                tumor: true
+            })
+        );
+    }
+
+    #[test]
+    fn pairs_sweep_row_major_and_complete() {
+        let mut g = LevelGrid::new(3, 2);
+        g.insert(2, 1, 0.3, true);
+        g.insert(0, 0, 0.1, false);
+        g.insert(1, 0, 0.2, true);
+        let pairs: Vec<_> = g.pairs().collect();
+        assert_eq!(pairs, vec![(0.1, false), (0.2, true), (0.3, true)]);
+        let ids: Vec<_> = g.iter_ids(2).map(|(t, _)| t).collect();
+        assert_eq!(
+            ids,
+            vec![TileId::new(2, 0, 0), TileId::new(2, 1, 0), TileId::new(2, 2, 1)]
+        );
+    }
+
+    #[test]
+    fn from_parts_validates_lengths_and_padding() {
+        let g = LevelGrid::from_parts(3, 2, vec![0.0; 6], vec![0b111], vec![0]).unwrap();
+        assert_eq!(g.len(), 3);
+        assert!(LevelGrid::from_parts(3, 2, vec![0.0; 5], vec![0], vec![0]).is_none());
+        assert!(LevelGrid::from_parts(3, 2, vec![0.0; 6], vec![0, 0], vec![0]).is_none());
+        // A presence bit beyond the 6 real cells must be rejected.
+        assert!(LevelGrid::from_parts(3, 2, vec![0.0; 6], vec![1 << 6], vec![0]).is_none());
+    }
+
+    #[test]
+    fn word_boundary_tiles_survive() {
+        // A grid spanning >64 cells exercises multi-word bitsets.
+        let mut g = LevelGrid::new(16, 8);
+        for i in 0..128 {
+            assert!(g.insert(i % 16, i / 16, i as f32, i % 3 == 0));
+        }
+        assert_eq!(g.len(), 128);
+        assert_eq!(g.pairs().count(), 128);
+        assert_eq!(g.get(15, 3).unwrap().prob, 63.0);
+        assert_eq!(g.get(0, 4).unwrap().prob, 64.0);
+    }
+}

@@ -1,0 +1,685 @@
+//! Prediction cache: every lineage tile's probability and ground truth,
+//! for every resolution level of a slide set.
+//!
+//! This mirrors the paper's methodology (§4.3-4.5): inference runs *once*
+//! over all tiles of all levels; threshold tuning, pyramidal replay,
+//! speedup estimation and the distributed simulator are then deterministic
+//! post-mortem computations over the cached probabilities.
+//!
+//! Storage is columnar and sharded:
+//!
+//! * In memory, a slide's predictions are dense per-level grids
+//!   ([`grid::LevelGrid`]) — a probability plane plus packed
+//!   presence/label bitsets — so replay lookups are O(1) array reads and
+//!   per-level tuning pairs are one slice sweep.
+//! * On disk, each slide is a checksummed binary shard ([`shard`]) next
+//!   to a manifest, loaded lazily under a memory budget with LRU
+//!   eviction by [`store::ShardedPredStore`]. The legacy whole-cache JSON
+//!   format remains readable/writable as a migration path.
+//!
+//! Code that only *consumes* predictions should accept [`PredSource`] —
+//! both the fully-resident [`PredCache`] and the streaming
+//! [`store::ShardedPredStore`] implement it, so tuning sweeps run
+//! unchanged in-core or out-of-core.
+
+/// Dense per-level columnar grids.
+pub mod grid;
+/// The versioned binary per-slide shard codec.
+pub mod shard;
+/// The sharded on-disk store with budgeted LRU residency.
+pub mod store;
+
+use std::path::Path;
+
+use crate::model::Analyzer;
+use crate::preprocess::otsu::background_removal;
+use crate::pyramid::driver::BG_MARGIN;
+use crate::pyramid::tree::{ExecTree, Thresholds};
+use crate::slide::pyramid::Slide;
+use crate::slide::tile::TileId;
+use crate::synth::slide_gen::SlideSpec;
+use crate::util::json::{Json, JsonError};
+
+pub use grid::{LevelGrid, TilePred};
+pub use shard::{ShardError, SHARD_VERSION};
+pub use store::{ShardedPredStore, StoreError, StoreStats};
+
+/// Level-0 lineage size of a pyramidal run: `initial · (f²)^(levels-1)`
+/// tiles, computed in u128 so deep pyramids cannot silently wrap.
+/// `None` when `levels` is zero or the count overflows u128.
+pub fn reference_tile_count(initial: usize, levels: usize) -> Option<u128> {
+    let f2 = (crate::slide::tile::SCALE_FACTOR as u128).checked_pow(2)?;
+    let depth = u32::try_from(levels.checked_sub(1)?).ok()?;
+    f2.checked_pow(depth)?.checked_mul(initial as u128)
+}
+
+/// All predictions for one slide, as dense per-level grids.
+#[derive(Debug, Clone)]
+pub struct SlidePredictions {
+    /// The slide recipe the predictions were collected from.
+    pub spec: SlideSpec,
+    /// Lowest-level working set after background removal.
+    pub initial: Vec<TileId>,
+    /// One dense grid per level (index = level; level 0 is full
+    /// resolution).
+    levels: Vec<LevelGrid>,
+}
+
+impl SlidePredictions {
+    /// An empty prediction set for `spec`'s geometry.
+    pub fn new(spec: SlideSpec, initial: Vec<TileId>) -> SlidePredictions {
+        let levels = (0..spec.levels)
+            .map(|l| LevelGrid::new(spec.tiles_x >> l, spec.tiles_y >> l))
+            .collect();
+        SlidePredictions {
+            spec,
+            initial,
+            levels,
+        }
+    }
+
+    /// Rebuild from decoded parts (the shard decoder). Validates that the
+    /// grids match the spec's geometry.
+    pub(crate) fn from_parts(
+        spec: SlideSpec,
+        initial: Vec<TileId>,
+        levels: Vec<LevelGrid>,
+    ) -> Result<SlidePredictions, String> {
+        if levels.len() != spec.levels {
+            return Err(format!(
+                "{} level grids for a {}-level spec",
+                levels.len(),
+                spec.levels
+            ));
+        }
+        for (l, g) in levels.iter().enumerate() {
+            if g.tiles_x() != spec.tiles_x >> l || g.tiles_y() != spec.tiles_y >> l {
+                return Err(format!("level {l} grid does not match the spec geometry"));
+            }
+        }
+        for t in &initial {
+            if t.level as usize >= spec.levels {
+                return Err(format!("initial tile {t} outside the pyramid"));
+            }
+        }
+        Ok(SlidePredictions {
+            spec,
+            initial,
+            levels,
+        })
+    }
+
+    /// Run the analyzer over the full lineage of the initial working set at
+    /// every level (pass-through execution) and record everything.
+    pub fn collect(slide: &Slide, analyzer: &dyn Analyzer, batch: usize) -> SlidePredictions {
+        let initial = background_removal(slide, BG_MARGIN).tissue_tiles;
+        let mut out = SlidePredictions::new(slide.spec.clone(), initial.clone());
+        let mut frontier = initial;
+        let mut level = slide.lowest_level();
+        loop {
+            for chunk in frontier.chunks(batch.max(1)) {
+                let ps = analyzer.analyze(slide, level, chunk);
+                for (&tile, &prob) in chunk.iter().zip(&ps) {
+                    out.insert(tile, prob, slide.is_tumor(tile));
+                }
+            }
+            if level == 0 {
+                break;
+            }
+            frontier = frontier.iter().flat_map(|t| t.children()).collect();
+            level -= 1;
+        }
+        out
+    }
+
+    /// The per-level grids (level 0 first).
+    pub fn grids(&self) -> &[LevelGrid] {
+        &self.levels
+    }
+
+    /// One level's dense grid, or `None` beyond the pyramid.
+    pub fn grid(&self, level: usize) -> Option<&LevelGrid> {
+        self.levels.get(level)
+    }
+
+    /// Record one tile. Returns `false` when the tile lies outside the
+    /// pyramid (wrong level or grid bounds).
+    pub fn insert(&mut self, tile: TileId, prob: f32, tumor: bool) -> bool {
+        match self.levels.get_mut(tile.level as usize) {
+            Some(g) => g.insert(tile.tx as usize, tile.ty as usize, prob, tumor),
+            None => false,
+        }
+    }
+
+    /// Drop one tile from the cache (corrupt-cache tests). Returns `true`
+    /// when it was present.
+    pub fn remove(&mut self, tile: TileId) -> bool {
+        match self.levels.get_mut(tile.level as usize) {
+            Some(g) => g.remove(tile.tx as usize, tile.ty as usize),
+            None => false,
+        }
+    }
+
+    /// The cached prediction for `tile` — an O(1) grid read.
+    #[inline]
+    pub fn get(&self, tile: TileId) -> Option<TilePred> {
+        self.levels
+            .get(tile.level as usize)?
+            .get(tile.tx as usize, tile.ty as usize)
+    }
+
+    /// The cached probability for `tile` — the replay hot path.
+    #[inline]
+    pub fn prob(&self, tile: TileId) -> Option<f32> {
+        self.levels
+            .get(tile.level as usize)?
+            .prob(tile.tx as usize, tile.ty as usize)
+    }
+
+    /// Total cached tiles across all levels.
+    pub fn len(&self) -> usize {
+        self.levels.iter().map(|g| g.len()).sum()
+    }
+
+    /// True when nothing is cached.
+    pub fn is_empty(&self) -> bool {
+        self.levels.iter().all(|g| g.is_empty())
+    }
+
+    /// Every cached tile, lowest level (coarsest) first, row-major within
+    /// a level.
+    pub fn iter(&self) -> impl Iterator<Item = (TileId, TilePred)> + '_ {
+        self.levels
+            .iter()
+            .enumerate()
+            .rev()
+            .flat_map(|(l, g)| g.iter_ids(l))
+    }
+
+    /// Every cached tile of one level, row-major.
+    pub fn iter_level(&self, level: usize) -> impl Iterator<Item = (TileId, TilePred)> + '_ {
+        self.levels
+            .get(level)
+            .into_iter()
+            .flat_map(move |g| g.iter_ids(level))
+    }
+
+    /// Approximate resident heap size in bytes (store budget accounting).
+    pub fn resident_bytes(&self) -> usize {
+        self.levels.iter().map(|g| g.resident_bytes()).sum::<usize>()
+            + self.initial.len() * std::mem::size_of::<TileId>()
+    }
+
+    /// Replay a pyramidal execution under `thresholds` (post-mortem run):
+    /// a [`crate::pyramid::PyramidRun`] driven by a
+    /// [`crate::pyramid::ReplayBackend`] over this cache. Panics when a
+    /// lineage tile is missing (corrupt cache).
+    pub fn replay(&self, thresholds: &Thresholds) -> ExecTree {
+        let mut backend = crate::pyramid::ReplayBackend::new(self);
+        crate::pyramid::backend::run_on_backend(
+            &self.spec.id,
+            self.spec.levels,
+            self.initial.clone(),
+            thresholds,
+            0,
+            &mut backend,
+        )
+        .expect("every lineage tile cached")
+    }
+
+    /// (probability, label) pairs for all cached tiles at one level — the
+    /// tuning input for that level's decision block. A single slice sweep
+    /// over the level's dense plane.
+    pub fn level_pairs(&self, level: usize) -> Vec<(f32, bool)> {
+        match self.levels.get(level) {
+            Some(g) => g.pairs().collect(),
+            None => Vec::new(),
+        }
+    }
+
+    /// Level-0 lineage size = the reference execution's tile count.
+    /// Computed with checked arithmetic; panics loudly (never wraps) if
+    /// the count exceeds `usize` on this platform.
+    pub fn reference_count(&self) -> usize {
+        reference_tile_count(self.initial.len(), self.spec.levels)
+            .and_then(|n| usize::try_from(n).ok())
+            .expect("reference tile count overflows usize")
+    }
+
+    /// Serialize for the legacy JSON cache format (migration path).
+    pub fn to_json(&self) -> Json {
+        // Compact encoding: per tile [level, tx, ty, prob, tumor].
+        let mut preds: Vec<Json> = Vec::with_capacity(self.len());
+        for (l, g) in self.levels.iter().enumerate() {
+            for (tx, ty, p) in g.iter() {
+                preds.push(Json::Arr(vec![
+                    Json::Num(l as f64),
+                    Json::Num(tx as f64),
+                    Json::Num(ty as f64),
+                    Json::Num((p.prob as f64 * 1e6).round() / 1e6),
+                    Json::Bool(p.tumor),
+                ]));
+            }
+        }
+        let initial: Vec<Json> = self
+            .initial
+            .iter()
+            .map(|t| {
+                Json::Arr(vec![
+                    Json::Num(t.level as f64),
+                    Json::Num(t.tx as f64),
+                    Json::Num(t.ty as f64),
+                ])
+            })
+            .collect();
+        Json::obj()
+            .set("spec", self.spec.to_json())
+            .set("initial", Json::Arr(initial))
+            .set("preds", Json::Arr(preds))
+    }
+
+    /// Parse one slide's entry of the legacy JSON cache format.
+    pub fn from_json(v: &Json) -> Result<SlidePredictions, JsonError> {
+        let spec = SlideSpec::from_json(v.get("spec")?)?;
+        let initial = v
+            .get("initial")?
+            .as_arr()?
+            .iter()
+            .map(|t| {
+                let t = t.as_arr()?;
+                Ok(TileId::new(
+                    t[0].as_usize()?,
+                    t[1].as_usize()?,
+                    t[2].as_usize()?,
+                ))
+            })
+            .collect::<Result<Vec<_>, JsonError>>()?;
+        let mut out = SlidePredictions::new(spec, initial);
+        for e in v.get("preds")?.as_arr()? {
+            let e = e.as_arr()?;
+            let tile = TileId::new(e[0].as_usize()?, e[1].as_usize()?, e[2].as_usize()?);
+            if !out.insert(tile, e[3].as_f64()? as f32, e[4].as_bool()?) {
+                return Err(JsonError::Value(format!(
+                    "cached tile {tile} outside the {}x{}x{} pyramid",
+                    out.spec.tiles_x, out.spec.tiles_y, out.spec.levels
+                )));
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// A read-only source of per-slide predictions: the seam between
+/// prediction *consumers* (tuning sweeps, evaluation, experiments) and
+/// prediction *storage*. [`PredCache`] serves slides from memory;
+/// [`ShardedPredStore`] streams them from disk shards under its LRU
+/// budget. Consumers written against this trait run unchanged either
+/// way.
+pub trait PredSource {
+    /// Number of slides in the source.
+    fn n_slides(&self) -> usize;
+
+    /// Run `f` over one slide's predictions. Streaming sources load (and
+    /// may later evict) the slide; errors surface I/O or corruption.
+    fn with_slide(
+        &self,
+        index: usize,
+        f: &mut dyn FnMut(&SlidePredictions),
+    ) -> anyhow::Result<()>;
+
+    /// Pooled (probability, label) pairs at one level across all slides.
+    fn pooled_pairs(&self, level: usize) -> anyhow::Result<Vec<(f32, bool)>> {
+        let mut out = Vec::new();
+        for i in 0..self.n_slides() {
+            self.with_slide(i, &mut |s| out.extend(s.level_pairs(level)))?;
+        }
+        Ok(out)
+    }
+}
+
+impl<T: PredSource + ?Sized> PredSource for Box<T> {
+    fn n_slides(&self) -> usize {
+        (**self).n_slides()
+    }
+
+    fn with_slide(
+        &self,
+        index: usize,
+        f: &mut dyn FnMut(&SlidePredictions),
+    ) -> anyhow::Result<()> {
+        (**self).with_slide(index, f)
+    }
+
+    fn pooled_pairs(&self, level: usize) -> anyhow::Result<Vec<(f32, bool)>> {
+        (**self).pooled_pairs(level)
+    }
+}
+
+/// A fully-resident cache over a whole slide set, with file I/O.
+#[derive(Debug, Clone, Default)]
+pub struct PredCache {
+    /// Per-slide prediction sets, in collection order.
+    pub slides: Vec<SlidePredictions>,
+}
+
+impl PredCache {
+    /// Collect predictions for a whole slide set, serially.
+    pub fn collect_set(slides: &[Slide], analyzer: &dyn Analyzer, batch: usize) -> PredCache {
+        PredCache {
+            slides: slides
+                .iter()
+                .map(|s| SlidePredictions::collect(s, analyzer, batch))
+                .collect(),
+        }
+    }
+
+    /// Parallel collection over a thread pool (PJRT executions are
+    /// thread-safe; useful on multi-core deployments — on this one-core
+    /// testbed it matches `collect_set`).
+    pub fn collect_set_parallel(
+        specs: &[crate::synth::slide_gen::SlideSpec],
+        analyzer: std::sync::Arc<dyn Analyzer>,
+        batch: usize,
+        jobs: usize,
+    ) -> PredCache {
+        if jobs <= 1 {
+            let slides: Vec<Slide> = specs.iter().cloned().map(Slide::from_spec).collect();
+            return Self::collect_set(&slides, analyzer.as_ref(), batch);
+        }
+        let pool = crate::util::threadpool::ThreadPool::new(jobs);
+        let slides = pool.map(specs.to_vec(), move |spec| {
+            let slide = Slide::from_spec(spec);
+            SlidePredictions::collect(&slide, analyzer.as_ref(), batch)
+        });
+        PredCache { slides }
+    }
+
+    /// Pooled (probability, label) pairs at one level across all slides.
+    pub fn level_pairs(&self, level: usize) -> Vec<(f32, bool)> {
+        self.slides
+            .iter()
+            .flat_map(|s| s.level_pairs(level))
+            .collect()
+    }
+
+    /// Serialize the whole cache (legacy JSON format).
+    pub fn to_json(&self) -> Json {
+        Json::obj().set(
+            "slides",
+            Json::Arr(self.slides.iter().map(|s| s.to_json()).collect()),
+        )
+    }
+
+    /// Parse a whole JSON cache.
+    pub fn from_json(v: &Json) -> Result<PredCache, JsonError> {
+        Ok(PredCache {
+            slides: v
+                .get("slides")?
+                .as_arr()?
+                .iter()
+                .map(SlidePredictions::from_json)
+                .collect::<Result<Vec<_>, _>>()?,
+        })
+    }
+
+    /// Write the cache to `path` as compact JSON, streamed slide-by-slide
+    /// through a buffered writer — the serialized cache is never
+    /// materialized as one string.
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        use std::io::Write;
+        let file = std::fs::File::create(path)?;
+        let mut w = std::io::BufWriter::new(file);
+        // Envelope matches `to_json()`'s canonical single-key object.
+        w.write_all(b"{\"slides\":[")?;
+        for (i, s) in self.slides.iter().enumerate() {
+            if i > 0 {
+                w.write_all(b",")?;
+            }
+            s.to_json().write_to(&mut w)?;
+        }
+        w.write_all(b"]}")?;
+        w.flush()
+    }
+
+    /// Load a cache written by [`PredCache::save`].
+    pub fn load(path: &Path) -> anyhow::Result<PredCache> {
+        let text = std::fs::read_to_string(path)?;
+        Ok(PredCache::from_json(&Json::parse(&text)?)?)
+    }
+
+    /// Write the cache as binary per-slide shards plus a manifest under
+    /// `dir` (see [`store::save_sharded`]).
+    pub fn save_sharded(&self, dir: &Path, jobs: usize) -> Result<(), StoreError> {
+        store::save_sharded(self, dir, jobs)
+    }
+}
+
+impl PredSource for PredCache {
+    fn n_slides(&self) -> usize {
+        self.slides.len()
+    }
+
+    fn with_slide(
+        &self,
+        index: usize,
+        f: &mut dyn FnMut(&SlidePredictions),
+    ) -> anyhow::Result<()> {
+        let s = self
+            .slides
+            .get(index)
+            .ok_or_else(|| anyhow::anyhow!("slide {index} out of range"))?;
+        f(s);
+        Ok(())
+    }
+
+    fn pooled_pairs(&self, level: usize) -> anyhow::Result<Vec<(f32, bool)>> {
+        Ok(self.level_pairs(level))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::oracle::OracleAnalyzer;
+    use crate::synth::slide_gen::SlideKind;
+
+    fn cache_one() -> (Slide, SlidePredictions) {
+        let s = Slide::from_spec(SlideSpec::new(
+            "pc",
+            31,
+            16,
+            8,
+            3,
+            64,
+            SlideKind::LargeTumor,
+        ));
+        let a = OracleAnalyzer::new(1);
+        let c = SlidePredictions::collect(&s, &a, 8);
+        (s, c)
+    }
+
+    #[test]
+    fn lineage_is_complete() {
+        let (_, c) = cache_one();
+        let n = c.initial.len();
+        let l2 = c.level_pairs(2).len();
+        let l1 = c.level_pairs(1).len();
+        let l0 = c.level_pairs(0).len();
+        assert_eq!(l2, n);
+        assert_eq!(l1, n * 4);
+        assert_eq!(l0, n * 16);
+        assert_eq!(c.reference_count(), n * 16);
+        assert_eq!(c.len(), n + n * 4 + n * 16);
+    }
+
+    #[test]
+    fn replay_matches_live_run() {
+        let (s, c) = cache_one();
+        let a = OracleAnalyzer::new(1);
+        let thr = Thresholds::uniform(3, 0.4);
+        let live = crate::pyramid::driver::run_pyramidal(&s, &a, &thr, 8);
+        let replayed = c.replay(&thr);
+        assert_eq!(live.analyzed_per_level(), replayed.analyzed_per_level());
+        assert_eq!(live.nodes[0], replayed.nodes[0]);
+    }
+
+    #[test]
+    fn replay_is_consistent_for_any_threshold() {
+        let (_, c) = cache_one();
+        for thr in [0.0, 0.2, 0.5, 0.8, 1.1] {
+            let t = c.replay(&Thresholds::uniform(3, thr));
+            t.check_consistency().unwrap();
+        }
+    }
+
+    #[test]
+    fn reference_count_uses_checked_arithmetic() {
+        // 4^(levels-1) would silently wrap a u32/usize pow chain on deep
+        // pyramids; the u128 path stays exact far beyond real depths.
+        assert_eq!(reference_tile_count(3, 1), Some(3));
+        assert_eq!(reference_tile_count(5, 3), Some(80));
+        assert_eq!(reference_tile_count(1, 33), Some(1u128 << 64));
+        assert_eq!(reference_tile_count(1, 0), None, "zero levels");
+        // Way past any real pyramid: overflow is reported, not wrapped.
+        assert_eq!(reference_tile_count(usize::MAX, 64), None);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let (_, c) = cache_one();
+        let cache = PredCache {
+            slides: vec![c.clone()],
+        };
+        let parsed =
+            PredCache::from_json(&Json::parse(&cache.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(parsed.slides.len(), 1);
+        let p = &parsed.slides[0];
+        assert_eq!(p.spec, c.spec);
+        assert_eq!(p.initial, c.initial);
+        assert_eq!(p.len(), c.len());
+        // probabilities quantized to 1e-6 in the encoding
+        for (t, v) in c.iter() {
+            let got = p.get(t).unwrap();
+            assert!((got.prob - v.prob).abs() < 1e-5);
+            assert_eq!(got.tumor, v.tumor);
+        }
+    }
+
+    #[test]
+    fn out_of_pyramid_json_tile_is_an_error_not_a_panic() {
+        let (_, c) = cache_one();
+        let mut j = c.to_json();
+        if let Json::Obj(m) = &mut j {
+            if let Some(Json::Arr(preds)) = m.get_mut("preds") {
+                preds.push(Json::Arr(vec![
+                    Json::Num(9.0), // level 9 of a 3-level pyramid
+                    Json::Num(0.0),
+                    Json::Num(0.0),
+                    Json::Num(0.5),
+                    Json::Bool(false),
+                ]));
+            }
+        }
+        assert!(SlidePredictions::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn parallel_collection_matches_serial() {
+        use crate::synth::slide_gen::{gen_slide_set, DatasetParams};
+        let specs = gen_slide_set(
+            "pp",
+            4,
+            5,
+            &DatasetParams {
+                tiles_x: 16,
+                tiles_y: 8,
+                levels: 3,
+                tile_px: 64,
+            },
+        );
+        let analyzer: std::sync::Arc<dyn crate::model::Analyzer> =
+            std::sync::Arc::new(OracleAnalyzer::new(1));
+        let serial = {
+            let slides: Vec<Slide> = specs.iter().cloned().map(Slide::from_spec).collect();
+            PredCache::collect_set(&slides, analyzer.as_ref(), 8)
+        };
+        let parallel =
+            PredCache::collect_set_parallel(&specs, std::sync::Arc::clone(&analyzer), 8, 3);
+        assert_eq!(serial.slides.len(), parallel.slides.len());
+        for (a, b) in serial.slides.iter().zip(&parallel.slides) {
+            assert_eq!(a.spec.id, b.spec.id);
+            assert_eq!(a.len(), b.len());
+            for (t, p) in a.iter() {
+                assert_eq!(b.get(t), Some(p), "mismatch at {t}");
+            }
+        }
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let (_, c) = cache_one();
+        let cache = PredCache { slides: vec![c] };
+        let dir = std::env::temp_dir().join(format!("pyramidai_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cache.json");
+        cache.save(&path).unwrap();
+        let loaded = PredCache::load(&path).unwrap();
+        assert_eq!(loaded.slides.len(), 1);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn streamed_save_matches_to_json_exactly() {
+        // The streamed writer hand-rolls the envelope; it must stay
+        // byte-identical to the canonical serializer or cache files stop
+        // being diffable.
+        let (_, c) = cache_one();
+        let cache = PredCache { slides: vec![c] };
+        let dir = std::env::temp_dir().join(format!("pyramidai_stream_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cache.json");
+        cache.save(&path).unwrap();
+        let on_disk = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(on_disk, cache.to_json().to_string());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn file_roundtrip_preserves_replay_and_tuning_inputs() {
+        // Save → load must preserve everything downstream code consumes:
+        // replayed trees (1e-6 prob quantization must not flip any zoom
+        // decision at these thresholds) and per-level tuning pairs.
+        let (_, c) = cache_one();
+        let cache = PredCache {
+            slides: vec![c.clone()],
+        };
+        let dir = std::env::temp_dir().join(format!("pyramidai_replay_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cache.json");
+        cache.save(&path).unwrap();
+        let loaded = PredCache::load(&path).unwrap();
+        let lp = &loaded.slides[0];
+        assert_eq!(lp.initial, c.initial, "initial working set survives I/O");
+        for thr in [0.2, 0.4, 0.7] {
+            let t = Thresholds::uniform(3, thr);
+            let orig = c.replay(&t);
+            let back = lp.replay(&t);
+            back.check_consistency().unwrap();
+            assert_eq!(orig.analyzed_per_level(), back.analyzed_per_level());
+            assert_eq!(
+                orig.nodes.iter().flatten().map(|n| n.tile).collect::<Vec<_>>(),
+                back.nodes.iter().flatten().map(|n| n.tile).collect::<Vec<_>>(),
+                "replayed tile sets differ at thr={thr}"
+            );
+        }
+        for level in 0..3 {
+            assert_eq!(
+                lp.level_pairs(level).len(),
+                c.level_pairs(level).len(),
+                "tuning pairs lost at level {level}"
+            );
+        }
+        assert_eq!(lp.reference_count(), c.reference_count());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

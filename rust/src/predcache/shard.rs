@@ -1,0 +1,356 @@
+//! The versioned binary shard format — one file per slide.
+//!
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//! magic    b"PYSH"                                    4 bytes
+//! version  u32                                        (= SHARD_VERSION)
+//! spec     u32 length + canonical SlideSpec JSON      (UTF-8)
+//! initial  u32 count + count × (level u32, tx u32, ty u32)
+//! levels   u32 count, then per level:
+//!   tiles_x u32, tiles_y u32
+//!   present bitset   ceil(tiles_x·tiles_y/64) × u64
+//!   tumor   bitset   ceil(tiles_x·tiles_y/64) × u64
+//!   probs   u32 count + count × f32   (row-major order of present bits)
+//! crc32    u32 over every preceding byte (magic included)
+//! ```
+//!
+//! Probabilities are stored only for present tiles, so a shard is a
+//! fraction of the dense plane's size on disk while decoding back into
+//! the dense [`LevelGrid`](super::LevelGrid) representation. Every
+//! decode validates magic, version, structural bounds and the trailing
+//! CRC — corrupt or truncated shards surface as [`ShardError`]s, never
+//! panics.
+
+use crate::slide::tile::TileId;
+use crate::synth::slide_gen::SlideSpec;
+use crate::util::json::{Json, JsonError};
+use crate::util::png::crc32;
+
+use super::grid::LevelGrid;
+use super::SlidePredictions;
+
+/// Shard file magic bytes.
+pub const SHARD_MAGIC: [u8; 4] = *b"PYSH";
+/// Current shard format version. Bump on any layout change.
+pub const SHARD_VERSION: u32 = 1;
+
+/// Why a shard failed to decode.
+#[derive(Debug, thiserror::Error)]
+pub enum ShardError {
+    /// The file does not start with [`SHARD_MAGIC`].
+    #[error("not a prediction shard (bad magic)")]
+    BadMagic,
+    /// The shard was written by an unknown format version.
+    #[error("unsupported shard version {0} (this build reads {SHARD_VERSION})")]
+    Version(u32),
+    /// The file ended before the structure did.
+    #[error("shard truncated at byte {at}: needed {needed} more bytes")]
+    Truncated {
+        /// Offset at which the read ran out.
+        at: usize,
+        /// How many bytes the next field needed.
+        needed: usize,
+    },
+    /// The trailing CRC does not match the content.
+    #[error("shard checksum mismatch: stored {stored:#010x}, computed {computed:#010x}")]
+    Checksum {
+        /// Checksum stored in the shard footer.
+        stored: u32,
+        /// Checksum recomputed over the payload.
+        computed: u32,
+    },
+    /// Structurally invalid content (bounds, counts, geometry).
+    #[error("corrupt shard: {0}")]
+    Corrupt(String),
+    /// The embedded slide spec failed to parse.
+    #[error("corrupt shard spec: {0}")]
+    Spec(#[from] JsonError),
+}
+
+struct Reader<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], ShardError> {
+        if self.bytes.len() - self.pos < n {
+            return Err(ShardError::Truncated {
+                at: self.pos,
+                needed: n - (self.bytes.len() - self.pos),
+            });
+        }
+        let s = &self.bytes[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32, ShardError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn f32_vec(&mut self, n: usize) -> Result<Vec<f32>, ShardError> {
+        let raw = self.take(n.checked_mul(4).ok_or_else(|| {
+            ShardError::Corrupt("f32 vector length overflows".to_string())
+        })?)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn u64_vec(&mut self, n: usize) -> Result<Vec<u64>, ShardError> {
+        let raw = self.take(n.checked_mul(8).ok_or_else(|| {
+            ShardError::Corrupt("u64 vector length overflows".to_string())
+        })?)?;
+        Ok(raw
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+}
+
+/// Encode one slide's predictions into the binary shard format
+/// (checksummed, self-contained).
+pub fn encode_slide(preds: &SlidePredictions) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(&SHARD_MAGIC);
+    out.extend_from_slice(&SHARD_VERSION.to_le_bytes());
+
+    let spec = preds.spec.to_json().to_string();
+    out.extend_from_slice(&(spec.len() as u32).to_le_bytes());
+    out.extend_from_slice(spec.as_bytes());
+
+    out.extend_from_slice(&(preds.initial.len() as u32).to_le_bytes());
+    for t in &preds.initial {
+        out.extend_from_slice(&(t.level as u32).to_le_bytes());
+        out.extend_from_slice(&t.tx.to_le_bytes());
+        out.extend_from_slice(&t.ty.to_le_bytes());
+    }
+
+    let grids = preds.grids();
+    out.extend_from_slice(&(grids.len() as u32).to_le_bytes());
+    for g in grids {
+        out.extend_from_slice(&(g.tiles_x() as u32).to_le_bytes());
+        out.extend_from_slice(&(g.tiles_y() as u32).to_le_bytes());
+        for w in g.present_words() {
+            out.extend_from_slice(&w.to_le_bytes());
+        }
+        for w in g.tumor_words() {
+            out.extend_from_slice(&w.to_le_bytes());
+        }
+        out.extend_from_slice(&(g.len() as u32).to_le_bytes());
+        // Probabilities for present tiles only, in row-major bit order —
+        // the same order `pairs()` sweeps, so decode is a linear fill.
+        for (prob, _) in g.pairs() {
+            out.extend_from_slice(&prob.to_le_bytes());
+        }
+    }
+
+    let crc = crc32(&out);
+    out.extend_from_slice(&crc.to_le_bytes());
+    out
+}
+
+/// Decode a binary shard back into a slide's predictions. Validates
+/// magic, version, structure and checksum; returns [`ShardError`] on any
+/// corruption — truncation, bit flips, version skew — and never panics.
+pub fn decode_slide(bytes: &[u8]) -> Result<SlidePredictions, ShardError> {
+    if bytes.len() < 12 {
+        return Err(ShardError::Truncated {
+            at: bytes.len(),
+            needed: 12 - bytes.len(),
+        });
+    }
+    if bytes[..4] != SHARD_MAGIC {
+        return Err(ShardError::BadMagic);
+    }
+    // Checksum first: a corrupt length field must not turn into a
+    // confusing structural error (or a huge allocation).
+    let stored = u32::from_le_bytes(bytes[bytes.len() - 4..].try_into().unwrap());
+    let computed = crc32(&bytes[..bytes.len() - 4]);
+    if stored != computed {
+        return Err(ShardError::Checksum { stored, computed });
+    }
+    let mut r = Reader {
+        bytes: &bytes[..bytes.len() - 4],
+        pos: 4,
+    };
+    let version = r.u32()?;
+    if version != SHARD_VERSION {
+        return Err(ShardError::Version(version));
+    }
+
+    let spec_len = r.u32()? as usize;
+    let spec_raw = std::str::from_utf8(r.take(spec_len)?)
+        .map_err(|e| ShardError::Corrupt(format!("spec is not UTF-8: {e}")))?;
+    let spec_json = Json::parse(spec_raw)?;
+    // SlideSpec::new panics on inconsistent geometry; a crafted shard
+    // must surface that as an error, not an unwind.
+    let spec = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        SlideSpec::from_json(&spec_json)
+    }))
+    .map_err(|_| ShardError::Corrupt("spec geometry failed validation".to_string()))??;
+
+    let n_initial = r.u32()? as usize;
+    let mut initial = Vec::with_capacity(n_initial.min(1 << 20));
+    for _ in 0..n_initial {
+        let (level, tx, ty) = (r.u32()?, r.u32()?, r.u32()?);
+        initial.push(TileId::new(level as usize, tx as usize, ty as usize));
+    }
+
+    let n_levels = r.u32()? as usize;
+    if n_levels != spec.levels {
+        return Err(ShardError::Corrupt(format!(
+            "shard has {n_levels} level planes but the spec declares {}",
+            spec.levels
+        )));
+    }
+    let mut grids = Vec::with_capacity(n_levels);
+    for level in 0..n_levels {
+        let (nx, ny) = (r.u32()? as usize, r.u32()? as usize);
+        if nx != spec.tiles_x >> level || ny != spec.tiles_y >> level {
+            return Err(ShardError::Corrupt(format!(
+                "level {level} plane is {nx}x{ny}, expected {}x{}",
+                spec.tiles_x >> level,
+                spec.tiles_y >> level
+            )));
+        }
+        let words = (nx * ny).div_ceil(64);
+        let present = r.u64_vec(words)?;
+        let tumor = r.u64_vec(words)?;
+        let n_probs = r.u32()? as usize;
+        let expected: usize = present.iter().map(|w| w.count_ones() as usize).sum();
+        if n_probs != expected {
+            return Err(ShardError::Corrupt(format!(
+                "level {level} stores {n_probs} probabilities for {expected} present tiles"
+            )));
+        }
+        let packed = r.f32_vec(n_probs)?;
+        // Scatter the packed probabilities back onto the dense plane.
+        let mut probs = vec![f32::NAN; nx * ny];
+        let mut it = packed.into_iter();
+        for (w, &word) in present.iter().enumerate() {
+            let mut word = word;
+            while word != 0 {
+                let idx = w * 64 + word.trailing_zeros() as usize;
+                word &= word - 1;
+                if idx >= probs.len() {
+                    return Err(ShardError::Corrupt(format!(
+                        "level {level} presence bit {idx} outside the {nx}x{ny} plane"
+                    )));
+                }
+                probs[idx] = it.next().expect("count matches popcount");
+            }
+        }
+        let grid = LevelGrid::from_parts(nx, ny, probs, present, tumor).ok_or_else(|| {
+            ShardError::Corrupt(format!("level {level} plane failed validation"))
+        })?;
+        grids.push(grid);
+    }
+    if r.pos != r.bytes.len() {
+        return Err(ShardError::Corrupt(format!(
+            "{} trailing bytes after the last level plane",
+            r.bytes.len() - r.pos
+        )));
+    }
+    SlidePredictions::from_parts(spec, initial, grids)
+        .map_err(|e| ShardError::Corrupt(e.to_string()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::oracle::OracleAnalyzer;
+    use crate::slide::pyramid::Slide;
+    use crate::synth::slide_gen::SlideKind;
+
+    fn sample() -> SlidePredictions {
+        let s = Slide::from_spec(SlideSpec::new(
+            "shard",
+            5,
+            16,
+            8,
+            3,
+            64,
+            SlideKind::SmallScattered,
+        ));
+        SlidePredictions::collect(&s, &OracleAnalyzer::new(1), 16)
+    }
+
+    #[test]
+    fn binary_roundtrip_is_exact() {
+        let p = sample();
+        let bytes = encode_slide(&p);
+        let back = decode_slide(&bytes).unwrap();
+        assert_eq!(back.spec, p.spec);
+        assert_eq!(back.initial, p.initial);
+        assert_eq!(back.len(), p.len());
+        for (t, pred) in p.iter() {
+            assert_eq!(back.get(t), Some(pred), "mismatch at {t}");
+        }
+    }
+
+    #[test]
+    fn truncation_is_an_error_at_every_length() {
+        let bytes = encode_slide(&sample());
+        // Every strict prefix must fail loudly, never panic. (Checksum
+        // catches most; short headers hit Truncated.)
+        for cut in [0, 3, 8, 11, 40, bytes.len() / 2, bytes.len() - 1] {
+            let err = decode_slide(&bytes[..cut]).unwrap_err();
+            assert!(
+                matches!(
+                    err,
+                    ShardError::Truncated { .. } | ShardError::Checksum { .. }
+                ),
+                "cut={cut} gave {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn bitflip_fails_the_checksum() {
+        let mut bytes = encode_slide(&sample());
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        assert!(matches!(
+            decode_slide(&bytes).unwrap_err(),
+            ShardError::Checksum { .. }
+        ));
+    }
+
+    #[test]
+    fn bad_magic_and_future_version_are_rejected() {
+        let mut bytes = encode_slide(&sample());
+        bytes[0] = b'X';
+        assert!(matches!(
+            decode_slide(&bytes).unwrap_err(),
+            ShardError::BadMagic
+        ));
+
+        let mut bytes = encode_slide(&sample());
+        bytes[4..8].copy_from_slice(&99u32.to_le_bytes());
+        // Re-seal the checksum so the version check is what fires.
+        let n = bytes.len();
+        let crc = crc32(&bytes[..n - 4]);
+        bytes[n - 4..].copy_from_slice(&crc.to_le_bytes());
+        assert!(matches!(
+            decode_slide(&bytes).unwrap_err(),
+            ShardError::Version(99)
+        ));
+    }
+
+    #[test]
+    fn binary_is_smaller_than_json() {
+        let p = sample();
+        let bytes = encode_slide(&p);
+        let json = p.to_json().to_string();
+        assert!(
+            bytes.len() * 2 < json.len(),
+            "shard {} bytes vs json {} bytes",
+            bytes.len(),
+            json.len()
+        );
+    }
+}

@@ -1,0 +1,612 @@
+//! The sharded on-disk prediction store: one binary shard per slide, a
+//! JSON manifest with sizes and checksums, and budgeted lazy loading.
+//!
+//! [`save_sharded`] writes a [`PredCache`](super::PredCache) as
+//! `NNNN_<slide-id>.shard` files (encoded and written in parallel on
+//! scoped threads that *borrow* the cache — no per-slide deep clone of
+//! a possibly near-RAM-sized slide set) plus a `manifest.json`; the
+//! manifest is written last, so a crashed or interrupted save never
+//! looks like a complete store.
+//!
+//! [`ShardedPredStore`] opens the manifest and serves slides on demand:
+//! a shard is read, checksummed and decoded only when first touched,
+//! kept resident under a configurable memory budget, and evicted LRU
+//! when the budget is exceeded — replay jobs over huge slide sets stream
+//! shards instead of pinning the whole set in memory.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use crate::pyramid::tree::{ExecTree, Thresholds};
+use crate::util::json::{Json, JsonError};
+
+use super::shard::{decode_slide, encode_slide, ShardError, SHARD_VERSION};
+use super::{PredCache, PredSource, SlidePredictions};
+
+/// Manifest file name inside a store directory.
+pub const MANIFEST_FILE: &str = "manifest.json";
+
+/// Why a store operation failed.
+#[derive(Debug, thiserror::Error)]
+pub enum StoreError {
+    /// Filesystem failure.
+    #[error("store i/o: {0}")]
+    Io(#[from] std::io::Error),
+    /// The manifest is missing or malformed.
+    #[error("store manifest: {0}")]
+    Manifest(String),
+    /// Manifest JSON failed to parse.
+    #[error("store manifest json: {0}")]
+    Json(#[from] JsonError),
+    /// A shard failed to decode (truncation, checksum, version…).
+    #[error("shard for slide {slide:?}: {source}")]
+    Shard {
+        /// Slide id of the offending shard.
+        slide: String,
+        /// The underlying decode failure.
+        source: ShardError,
+    },
+    /// A shard's on-disk size diverged from the manifest (partial write
+    /// or external tampering).
+    #[error("shard for slide {slide:?} is {actual} bytes on disk, manifest says {expected}")]
+    SizeMismatch {
+        /// Slide id of the offending shard.
+        slide: String,
+        /// Byte size recorded in the manifest.
+        expected: u64,
+        /// Byte size observed on disk.
+        actual: u64,
+    },
+    /// Slide index outside the manifest.
+    #[error("slide index {index} out of range ({len} slides)")]
+    OutOfRange {
+        /// The requested index.
+        index: usize,
+        /// Number of slides in the store.
+        len: usize,
+    },
+    /// A streamed replay failed (the underlying shard load error is
+    /// formatted into the message).
+    #[error("streamed replay failed: {0}")]
+    Replay(String),
+}
+
+/// One manifest row.
+#[derive(Debug, Clone)]
+struct ShardEntry {
+    /// Slide id (matches the embedded spec).
+    id: String,
+    /// Shard file name relative to the store directory.
+    file: String,
+    /// Shard byte size (validated on load).
+    bytes: u64,
+    /// Shard CRC-32 (the shard's own footer; cross-checked on load).
+    crc32: u32,
+    /// Pyramid depth (service admission needs it without loading).
+    levels: usize,
+}
+
+/// Residency and traffic counters of a store (see
+/// [`ShardedPredStore::stats`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StoreStats {
+    /// Shard files read and decoded (a reload after eviction counts
+    /// again).
+    pub loads: u64,
+    /// Requests served from resident memory.
+    pub hits: u64,
+    /// Shards evicted to stay under the budget.
+    pub evictions: u64,
+    /// Bytes currently resident.
+    pub resident_bytes: usize,
+    /// Slides currently resident.
+    pub resident_slides: usize,
+}
+
+struct Residency {
+    /// Resident slides by index.
+    resident: HashMap<usize, Arc<SlidePredictions>>,
+    /// LRU order: front = least recently used.
+    order: Vec<usize>,
+    bytes: usize,
+    loads: u64,
+    hits: u64,
+    evictions: u64,
+}
+
+/// Lazily-loading, budgeted view over a shard directory.
+pub struct ShardedPredStore {
+    dir: PathBuf,
+    entries: Vec<ShardEntry>,
+    /// Resident-set budget in bytes (`usize::MAX` = unlimited).
+    budget: usize,
+    state: Mutex<Residency>,
+}
+
+fn sanitize(id: &str) -> String {
+    id.chars()
+        .map(|c| {
+            if c.is_ascii_alphanumeric() || c == '_' || c == '-' {
+                c
+            } else {
+                '_'
+            }
+        })
+        .collect()
+}
+
+/// Write `cache` as one binary shard per slide plus a manifest under
+/// `dir` (created if needed). Shards are encoded and written in parallel
+/// when `jobs > 1`; the manifest goes last so a torn save is never
+/// openable.
+pub fn save_sharded(cache: &PredCache, dir: &Path, jobs: usize) -> Result<(), StoreError> {
+    std::fs::create_dir_all(dir)?;
+    let names: Vec<String> = cache
+        .slides
+        .iter()
+        .enumerate()
+        .map(|(i, s)| format!("{i:04}_{}.shard", sanitize(&s.spec.id)))
+        .collect();
+    let write_one = |slide: &SlidePredictions, file: &str| -> Result<(u64, u32), StoreError> {
+        let bytes = encode_slide(slide);
+        let crc = u32::from_le_bytes(bytes[bytes.len() - 4..].try_into().expect("crc footer"));
+        std::fs::write(dir.join(file), &bytes)?;
+        Ok((bytes.len() as u64, crc))
+    };
+    let n = cache.slides.len();
+    let mut written: Vec<Option<Result<(u64, u32), StoreError>>> = (0..n).map(|_| None).collect();
+    let workers = jobs.max(1).min(n.max(1));
+    if workers > 1 {
+        // Scoped threads borrow the cache directly — no per-slide deep
+        // clone, so a near-RAM-sized cache saves without doubling its
+        // footprint (the whole point of the sharded store).
+        let slides = &cache.slides;
+        let names = &names;
+        let write_one = &write_one;
+        let chunks: Vec<Vec<(usize, Result<(u64, u32), StoreError>)>> =
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = (0..workers)
+                    .map(|t| {
+                        scope.spawn(move || {
+                            (t..n)
+                                .step_by(workers)
+                                .map(|i| (i, write_one(&slides[i], &names[i])))
+                                .collect::<Vec<_>>()
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("shard writer thread"))
+                    .collect()
+            });
+        for chunk in chunks {
+            for (i, r) in chunk {
+                written[i] = Some(r);
+            }
+        }
+    } else {
+        for (i, (s, name)) in cache.slides.iter().zip(&names).enumerate() {
+            written[i] = Some(write_one(s, name));
+        }
+    }
+    let mut rows = Vec::with_capacity(n);
+    for ((slide, name), res) in cache.slides.iter().zip(&names).zip(written) {
+        let (bytes, crc) = res.expect("every slide written")?;
+        rows.push(
+            Json::obj()
+                .set("id", slide.spec.id.as_str())
+                .set("file", name.as_str())
+                .set("bytes", bytes as f64)
+                .set("crc32", crc as f64)
+                .set("levels", slide.spec.levels as f64),
+        );
+    }
+    let manifest = Json::obj()
+        .set("version", SHARD_VERSION as f64)
+        .set("slides", Json::Arr(rows));
+    std::fs::write(dir.join(MANIFEST_FILE), manifest.to_pretty())?;
+    Ok(())
+}
+
+impl ShardedPredStore {
+    /// Open a store directory with no memory budget (everything touched
+    /// stays resident).
+    pub fn open(dir: &Path) -> Result<ShardedPredStore, StoreError> {
+        Self::open_with_budget(dir, None)
+    }
+
+    /// Open a store directory keeping at most `budget_mb` MiB of decoded
+    /// slides resident (LRU eviction; the most recent slide always
+    /// stays). `None` = unlimited.
+    pub fn open_with_budget(
+        dir: &Path,
+        budget_mb: Option<usize>,
+    ) -> Result<ShardedPredStore, StoreError> {
+        let path = dir.join(MANIFEST_FILE);
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            StoreError::Manifest(format!("cannot read {}: {e}", path.display()))
+        })?;
+        let v = Json::parse(&text)?;
+        let version = v.get("version")?.as_u64()? as u32;
+        if version != SHARD_VERSION {
+            return Err(StoreError::Manifest(format!(
+                "manifest version {version}, this build reads {SHARD_VERSION}"
+            )));
+        }
+        let mut entries = Vec::new();
+        for row in v.get("slides")?.as_arr()? {
+            entries.push(ShardEntry {
+                id: row.get("id")?.as_str()?.to_string(),
+                file: row.get("file")?.as_str()?.to_string(),
+                bytes: row.get("bytes")?.as_u64()?,
+                crc32: row.get("crc32")?.as_u64()? as u32,
+                levels: row.get("levels")?.as_usize()?,
+            });
+        }
+        Ok(ShardedPredStore {
+            dir: dir.to_path_buf(),
+            entries,
+            budget: budget_mb.map_or(usize::MAX, |mb| mb.saturating_mul(1 << 20)),
+            state: Mutex::new(Residency {
+                resident: HashMap::new(),
+                order: Vec::new(),
+                bytes: 0,
+                loads: 0,
+                hits: 0,
+                evictions: 0,
+            }),
+        })
+    }
+
+    /// The store directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Number of slides in the manifest.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when the manifest lists no slides.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Slide id at `index` (manifest order = collection order).
+    pub fn slide_id(&self, index: usize) -> Option<&str> {
+        self.entries.get(index).map(|e| e.id.as_str())
+    }
+
+    /// Pyramid depth of the slide at `index`, without loading its shard.
+    pub fn slide_levels(&self, index: usize) -> Option<usize> {
+        self.entries.get(index).map(|e| e.levels)
+    }
+
+    /// Residency/traffic counters (loads, hits, evictions, bytes).
+    pub fn stats(&self) -> StoreStats {
+        let s = self.state.lock().unwrap();
+        StoreStats {
+            loads: s.loads,
+            hits: s.hits,
+            evictions: s.evictions,
+            resident_bytes: s.bytes,
+            resident_slides: s.resident.len(),
+        }
+    }
+
+    /// One slide's predictions, loading (and possibly evicting) under
+    /// the budget. The returned `Arc` stays valid after eviction — the
+    /// store merely drops *its* reference.
+    pub fn slide(&self, index: usize) -> Result<Arc<SlidePredictions>, StoreError> {
+        let entry = self.entries.get(index).ok_or(StoreError::OutOfRange {
+            index,
+            len: self.entries.len(),
+        })?;
+        {
+            let mut s = self.state.lock().unwrap();
+            if let Some(p) = s.resident.get(&index) {
+                let p = Arc::clone(p);
+                s.hits += 1;
+                // Move to most-recently-used.
+                s.order.retain(|&i| i != index);
+                s.order.push(index);
+                return Ok(p);
+            }
+        }
+        // Read + checksum + decode happen outside the residency lock, so
+        // a concurrent user hitting an already-resident slide never
+        // stalls behind this miss's disk work.
+        let path = self.dir.join(&entry.file);
+        let bytes = std::fs::read(&path)?;
+        if bytes.len() as u64 != entry.bytes {
+            return Err(StoreError::SizeMismatch {
+                slide: entry.id.clone(),
+                expected: entry.bytes,
+                actual: bytes.len() as u64,
+            });
+        }
+        // Guard the footer slice: a manifest that (corruptly) records a
+        // sub-header size must error, not panic.
+        if bytes.len() < 12 {
+            return Err(StoreError::Shard {
+                slide: entry.id.clone(),
+                source: ShardError::Truncated {
+                    at: bytes.len(),
+                    needed: 12 - bytes.len(),
+                },
+            });
+        }
+        // Cross-check the shard footer against the manifest row. This is
+        // *not* a content checksum (decode recomputes that); a mismatch
+        // here means the shard was replaced without rewriting the
+        // manifest — say so, instead of masquerading as file corruption.
+        let stored_crc = u32::from_le_bytes(bytes[bytes.len() - 4..].try_into().unwrap());
+        if stored_crc != entry.crc32 {
+            return Err(StoreError::Manifest(format!(
+                "shard {} footer crc {stored_crc:#010x} does not match manifest crc \
+                 {:#010x} — stale or tampered manifest",
+                entry.file, entry.crc32
+            )));
+        }
+        let decoded = decode_slide(&bytes).map_err(|source| StoreError::Shard {
+            slide: entry.id.clone(),
+            source,
+        })?;
+        if decoded.spec.id != entry.id {
+            return Err(StoreError::Manifest(format!(
+                "shard {} contains slide {:?}, manifest says {:?}",
+                entry.file, decoded.spec.id, entry.id
+            )));
+        }
+        let p = Arc::new(decoded);
+        let mut s = self.state.lock().unwrap();
+        if let Some(existing) = s.resident.get(&index) {
+            // A concurrent caller loaded the same slide while we read the
+            // disk; keep its copy (one resident instance per slide).
+            let existing = Arc::clone(existing);
+            s.hits += 1;
+            s.order.retain(|&i| i != index);
+            s.order.push(index);
+            return Ok(existing);
+        }
+        s.loads += 1;
+        s.bytes += p.resident_bytes();
+        s.resident.insert(index, Arc::clone(&p));
+        s.order.push(index);
+        // Evict least-recently-used shards until back under budget; the
+        // slide just loaded is always allowed to stay (a budget smaller
+        // than one slide degrades to load-per-touch, not failure).
+        while s.bytes > self.budget && s.order.len() > 1 {
+            let victim = s.order.remove(0);
+            if let Some(v) = s.resident.remove(&victim) {
+                s.bytes -= v.resident_bytes();
+                s.evictions += 1;
+            }
+        }
+        Ok(p)
+    }
+
+    /// Decode every shard once, sequentially under the budget — a cheap
+    /// integrity pass for CLI entry points.
+    pub fn validate(&self) -> Result<(), StoreError> {
+        for i in 0..self.len() {
+            self.slide(i)?;
+        }
+        Ok(())
+    }
+
+    /// Load the whole store into a fully-resident [`PredCache`]
+    /// (collection order). Ignores the budget — use only when the caller
+    /// genuinely needs everything in memory (the experiment context).
+    pub fn load_all(&self) -> Result<PredCache, StoreError> {
+        let mut slides = Vec::with_capacity(self.len());
+        for i in 0..self.len() {
+            slides.push(self.slide(i)?.as_ref().clone());
+        }
+        Ok(PredCache { slides })
+    }
+
+    /// Replay one slide under `thresholds`, streaming its shard through
+    /// the budgeted store (the shard may be evicted and reloaded between
+    /// frontier requests). The tree is byte-identical to
+    /// [`SlidePredictions::replay`] on the same data.
+    pub fn replay(&self, index: usize, thresholds: &Thresholds) -> Result<ExecTree, StoreError> {
+        let (id, levels, initial) = {
+            let s = self.slide(index)?;
+            (s.spec.id.clone(), s.spec.levels, s.initial.clone())
+        };
+        let mut backend = crate::pyramid::backend::StoreReplayBackend::new(self, index);
+        let tree = crate::pyramid::backend::run_on_backend(
+            &id, levels, initial, thresholds, 0, &mut backend,
+        );
+        match tree {
+            Ok(t) => Ok(t),
+            Err(e) => Err(backend
+                .take_error()
+                .unwrap_or_else(|| StoreError::Replay(e.to_string()))),
+        }
+    }
+}
+
+impl PredSource for ShardedPredStore {
+    fn n_slides(&self) -> usize {
+        self.len()
+    }
+
+    fn with_slide(
+        &self,
+        index: usize,
+        f: &mut dyn FnMut(&SlidePredictions),
+    ) -> anyhow::Result<()> {
+        let s = self.slide(index)?;
+        f(&s);
+        Ok(())
+    }
+}
+
+/// Convert a legacy whole-cache JSON file into a shard directory.
+/// Returns the number of slides migrated.
+pub fn import_json(json_path: &Path, dir: &Path, jobs: usize) -> anyhow::Result<usize> {
+    let cache = PredCache::load(json_path)?;
+    let n = cache.slides.len();
+    save_sharded(&cache, dir, jobs)?;
+    Ok(n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::oracle::OracleAnalyzer;
+    use crate::slide::pyramid::Slide;
+    use crate::synth::slide_gen::{gen_slide_set, DatasetParams};
+
+    fn small_cache(n: usize, seed: u64) -> PredCache {
+        let params = DatasetParams {
+            tiles_x: 16,
+            tiles_y: 8,
+            levels: 3,
+            tile_px: 64,
+        };
+        let slides: Vec<Slide> = gen_slide_set("st", n, seed, &params)
+            .into_iter()
+            .map(Slide::from_spec)
+            .collect();
+        PredCache::collect_set(&slides, &OracleAnalyzer::new(1), 16)
+    }
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "pyramidai_store_{tag}_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn save_open_roundtrip_preserves_everything() {
+        let cache = small_cache(3, 7);
+        let dir = tmp_dir("rt");
+        save_sharded(&cache, &dir, 2).unwrap();
+        let store = ShardedPredStore::open(&dir).unwrap();
+        assert_eq!(store.len(), 3);
+        for i in 0..3 {
+            assert_eq!(store.slide_id(i).unwrap(), cache.slides[i].spec.id);
+            assert_eq!(store.slide_levels(i), Some(3));
+            let s = store.slide(i).unwrap();
+            assert_eq!(s.len(), cache.slides[i].len());
+            for (t, p) in cache.slides[i].iter() {
+                assert_eq!(s.get(t), Some(p), "slide {i} tile {t}");
+            }
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn lru_budget_evicts_and_reloads() {
+        let cache = small_cache(4, 9);
+        let dir = tmp_dir("lru");
+        save_sharded(&cache, &dir, 1).unwrap();
+        // Budget of 0 MiB: only the most recent slide is ever resident.
+        let store = ShardedPredStore::open_with_budget(&dir, Some(0)).unwrap();
+        for i in 0..4 {
+            store.slide(i).unwrap();
+        }
+        let st = store.stats();
+        assert_eq!(st.resident_slides, 1, "tiny budget keeps one shard");
+        assert_eq!(st.loads, 4);
+        assert_eq!(st.evictions, 3);
+        // Touching an evicted slide reloads it.
+        store.slide(0).unwrap();
+        assert_eq!(store.stats().loads, 5);
+        // Touching the resident one is a hit.
+        store.slide(0).unwrap();
+        assert_eq!(store.stats().hits, 1);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn pooled_pairs_match_in_memory_cache() {
+        let cache = small_cache(3, 11);
+        let dir = tmp_dir("pairs");
+        save_sharded(&cache, &dir, 1).unwrap();
+        let store = ShardedPredStore::open_with_budget(&dir, Some(0)).unwrap();
+        for level in 0..3 {
+            let a = PredSource::pooled_pairs(&cache, level).unwrap();
+            let b = store.pooled_pairs(level).unwrap();
+            assert_eq!(a, b, "level {level}");
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn corrupt_shard_is_an_error_not_a_panic() {
+        let cache = small_cache(1, 13);
+        let dir = tmp_dir("corrupt");
+        save_sharded(&cache, &dir, 1).unwrap();
+        let store = ShardedPredStore::open(&dir).unwrap();
+        let file = dir.join(
+            std::fs::read_dir(&dir)
+                .unwrap()
+                .filter_map(|e| e.ok())
+                .map(|e| e.file_name().to_string_lossy().into_owned())
+                .find(|n| n.ends_with(".shard"))
+                .unwrap(),
+        );
+        // Flip one payload byte without changing the size.
+        let mut bytes = std::fs::read(&file).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x10;
+        std::fs::write(&file, &bytes).unwrap();
+        assert!(matches!(
+            store.slide(0).unwrap_err(),
+            StoreError::Shard { .. }
+        ));
+        // Truncate: size mismatch against the manifest.
+        std::fs::write(&file, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(matches!(
+            store.slide(0).unwrap_err(),
+            StoreError::SizeMismatch { .. }
+        ));
+        assert!(store.validate().is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn missing_manifest_fails_cleanly() {
+        let dir = tmp_dir("nomanifest");
+        assert!(matches!(
+            ShardedPredStore::open(&dir).unwrap_err(),
+            StoreError::Manifest(_)
+        ));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn json_import_preserves_replay() {
+        let cache = small_cache(2, 17);
+        let dir = tmp_dir("import");
+        let json = dir.join("cache.json");
+        cache.save(&json).unwrap();
+        let shard_dir = dir.join("shards");
+        let n = import_json(&json, &shard_dir, 1).unwrap();
+        assert_eq!(n, 2);
+        let store = ShardedPredStore::open(&shard_dir).unwrap();
+        // The JSON format quantizes probabilities to 1e-6, so compare
+        // against the *JSON-loaded* cache — the shard must preserve it
+        // exactly from there.
+        let from_json = PredCache::load(&json).unwrap();
+        let thr = Thresholds::uniform(3, 0.4);
+        for i in 0..2 {
+            let a = from_json.slides[i].replay(&thr);
+            let b = store.slide(i).unwrap().replay(&thr);
+            assert_eq!(a.nodes, b.nodes, "slide {i}");
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

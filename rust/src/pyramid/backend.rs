@@ -7,7 +7,9 @@
 //! * [`PoolBackend`] — the in-process analyzer pool
 //!   ([`crate::service::pool::AnalyzerPool`]).
 //! * [`ReplayBackend`] — post-mortem replay of a
-//!   [`crate::predcache::SlidePredictions`] (§4.3 methodology).
+//!   [`crate::predcache::SlidePredictions`] (§4.3 methodology);
+//!   [`StoreReplayBackend`] is its streaming sibling over a budgeted
+//!   [`crate::predcache::ShardedPredStore`].
 //! * [`crate::cluster::ClusterBackend`] — the TCP work-stealing cluster
 //!   (§5.4): frontier chunks are dealt to workers as steal-able units.
 //! * [`crate::sim::SimBackend`] — the §5.1 simulator's virtual workers,
@@ -21,7 +23,7 @@ use std::collections::VecDeque;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 
-use crate::predcache::SlidePredictions;
+use crate::predcache::{ShardedPredStore, SlidePredictions, StoreError};
 use crate::service::pool::AnalyzerPool;
 use crate::slide::pyramid::Slide;
 
@@ -256,11 +258,71 @@ impl<'a> ReplayBackend<'a> {
 
 impl ExecutionBackend for ReplayBackend<'_> {
     fn dispatch(&mut self, req: FrontierRequest) {
+        // O(1) dense-grid reads — no hashing on the replay hot path.
         let probs: Vec<f32> = req
             .tiles
             .iter()
-            .filter_map(|t| self.preds.preds.get(t).map(|p| p.prob))
+            .filter_map(|&t| self.preds.prob(t))
             .collect();
+        self.ready.push_back(Completion { id: req.id, probs });
+    }
+
+    fn poll(&mut self, _block: bool) -> Option<Completion> {
+        self.ready.pop_front()
+    }
+
+    fn in_flight(&self) -> usize {
+        self.ready.len()
+    }
+}
+
+/// Streamed post-mortem backend: probabilities come from a
+/// [`ShardedPredStore`], whose budgeted LRU may evict and reload the
+/// slide's shard *between* frontier requests — replay over a huge slide
+/// set never needs the whole set resident. A shard load failure
+/// (corrupt/truncated file) is recorded and surfaced as an empty
+/// completion, which the run rejects via
+/// [`FeedError::WrongCount`](super::run::FeedError::WrongCount); callers
+/// inspect [`StoreReplayBackend::take_error`] for the root cause.
+pub struct StoreReplayBackend<'a> {
+    store: &'a ShardedPredStore,
+    slide: usize,
+    ready: VecDeque<Completion>,
+    error: Option<StoreError>,
+}
+
+impl<'a> StoreReplayBackend<'a> {
+    /// Replay slide `slide` (manifest index) of `store`.
+    pub fn new(store: &'a ShardedPredStore, slide: usize) -> StoreReplayBackend<'a> {
+        StoreReplayBackend {
+            store,
+            slide,
+            ready: VecDeque::new(),
+            error: None,
+        }
+    }
+
+    /// The first shard-load failure this backend hit, if any.
+    pub fn take_error(&mut self) -> Option<StoreError> {
+        self.error.take()
+    }
+}
+
+impl ExecutionBackend for StoreReplayBackend<'_> {
+    fn dispatch(&mut self, req: FrontierRequest) {
+        let probs = match self.store.slide(self.slide) {
+            Ok(preds) => req
+                .tiles
+                .iter()
+                .filter_map(|&t| preds.prob(t))
+                .collect(),
+            Err(e) => {
+                if self.error.is_none() {
+                    self.error = Some(e);
+                }
+                Vec::new()
+            }
+        };
         self.ready.push_back(Completion { id: req.id, probs });
     }
 
@@ -398,7 +460,7 @@ mod tests {
         let mut preds = SlidePredictions::collect(&s, &analyzer, 16);
         // Drop one lowest-level tile from the cache.
         let victim = preds.initial[0];
-        preds.preds.remove(&victim);
+        preds.remove(victim);
         let initial = preds.initial.clone();
 
         let mut backend = ReplayBackend::new(&preds);

@@ -25,6 +25,7 @@ pub mod tree;
 
 pub use backend::{
     drive, run_on_backend, Completion, DriveError, ExecutionBackend, PoolBackend, ReplayBackend,
+    StoreReplayBackend,
 };
 pub use driver::{run_pyramidal, run_reference, run_with_provider, DEFAULT_BATCH};
 pub use run::{FeedError, FrontierRequest, PyramidRun, RequestId};

@@ -8,7 +8,7 @@
 use std::sync::Arc;
 use std::time::Duration;
 
-use crate::predcache::SlidePredictions;
+use crate::predcache::{ShardedPredStore, SlidePredictions};
 use crate::pyramid::tree::{ExecTree, Thresholds};
 use crate::synth::slide_gen::SlideSpec;
 
@@ -65,8 +65,19 @@ pub enum JobSource {
     /// Live analysis: rebuild the slide from its spec and run the shared
     /// analyzer pool over every frontier batch.
     Spec(SlideSpec),
-    /// Post-mortem replay of a prediction cache (no analyzer time).
+    /// Post-mortem replay of a fully-resident prediction cache pinned
+    /// behind an `Arc` for the job's lifetime (no analyzer time).
     Cached(Arc<SlidePredictions>),
+    /// Streamed replay out of a sharded on-disk store: the slide's shard
+    /// is loaded lazily under the store's memory budget — and may be
+    /// evicted and reloaded between frontier chunks — so replay jobs
+    /// over huge slide sets never pin the whole set in memory.
+    Sharded {
+        /// The shared shard store (one per slide set).
+        store: Arc<ShardedPredStore>,
+        /// Manifest index of the slide to replay.
+        slide: usize,
+    },
 }
 
 impl JobSource {
@@ -75,14 +86,19 @@ impl JobSource {
         match self {
             JobSource::Spec(s) => &s.id,
             JobSource::Cached(c) => &c.spec.id,
+            JobSource::Sharded { store, slide } => {
+                store.slide_id(*slide).unwrap_or("<invalid-slide>")
+            }
         }
     }
 
-    /// Pyramid depth of the source slide.
+    /// Pyramid depth of the source slide. An out-of-range shard index
+    /// reports 0 levels, which admission rejects as invalid.
     pub fn levels(&self) -> usize {
         match self {
             JobSource::Spec(s) => s.levels,
             JobSource::Cached(c) => c.spec.levels,
+            JobSource::Sharded { store, slide } => store.slide_levels(*slide).unwrap_or(0),
         }
     }
 }
@@ -92,6 +108,9 @@ impl std::fmt::Debug for JobSource {
         match self {
             JobSource::Spec(s) => write!(f, "Spec({})", s.id),
             JobSource::Cached(c) => write!(f, "Cached({})", c.spec.id),
+            JobSource::Sharded { slide, .. } => {
+                write!(f, "Sharded({}#{slide})", self.slide_id())
+            }
         }
     }
 }

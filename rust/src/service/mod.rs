@@ -6,8 +6,11 @@
 //! flight at once, where admission and scheduling dominate (cf. Tellez et
 //! al. on gigapixel slide streams). This subsystem owns that concurrency:
 //!
-//! * [`job`] — job descriptors (live spec or predcache replay, thresholds,
-//!   priority, tenant, deadline) and terminal results.
+//! * [`job`] — job descriptors (live spec, pinned predcache replay, or
+//!   streamed replay out of a sharded prediction store
+//!   ([`crate::predcache::ShardedPredStore`]) whose LRU budget keeps
+//!   huge slide sets off the heap; thresholds, priority, tenant,
+//!   deadline) and terminal results.
 //! * [`queue`] — bounded admission queue with backpressure + cancellation.
 //! * [`scheduler`] — the event loop over the shared scheduling-policy
 //!   core ([`crate::sched`]): FIFO / strict-priority / weighted-fair-share

@@ -6,7 +6,8 @@
 //! orders them by the configured [`SchedulingPolicy`], and fires them at
 //! the job's execution substrate: the shared [`AnalyzerPool`] (same-level
 //! requests from different jobs coalesce into one dispatch group), an
-//! inline predcache replay, or the persistent TCP cluster
+//! inline predcache replay (pinned `Arc` or streamed through a budgeted
+//! [`ShardedPredStore`]), or the persistent TCP cluster
 //! ([`ClusterExec`]). Completions come back as events and are fed into
 //! the owning run; because a run's tree depends only on what was
 //! analyzed — never on scheduling or feed order — a job's ExecTree is
@@ -42,7 +43,7 @@ use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::cluster::ClusterExec;
-use crate::predcache::SlidePredictions;
+use crate::predcache::{ShardedPredStore, SlidePredictions};
 use crate::preprocess::otsu::background_removal;
 use crate::pyramid::driver::BG_MARGIN;
 use crate::pyramid::{FrontierRequest, PyramidRun, RequestId};
@@ -138,6 +139,13 @@ enum JobExec {
     Pool(Arc<Slide>),
     /// Inline predcache replay (no analyzer time).
     Replay(Arc<SlidePredictions>),
+    /// Inline streamed replay: each chunk re-resolves the slide through
+    /// the sharded store, so its LRU may evict the shard between chunks
+    /// — nothing is pinned for the job's lifetime.
+    Sharded {
+        store: Arc<ShardedPredStore>,
+        slide: usize,
+    },
     /// Chunks dealt to the persistent TCP cluster.
     Cluster(SlideSpec),
 }
@@ -575,38 +583,70 @@ impl Scheduler {
         // admit() already registered q.id in running_ids (under the queue
         // lock), so `cancel` can see this job throughout the slide
         // materialization below.
-        let prep = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
-            || -> (String, usize, Vec<crate::slide::tile::TileId>, JobExec) {
-                match &q.spec.source {
-                    JobSource::Spec(spec) => {
-                        let slide = Arc::new(Slide::from_spec(spec.clone()));
-                        let initial = background_removal(&slide, BG_MARGIN).tissue_tiles;
-                        let exec = if cluster_mode {
-                            JobExec::Cluster(spec.clone())
-                        } else {
-                            JobExec::Pool(Arc::clone(&slide))
-                        };
-                        (slide.id().to_string(), slide.levels(), initial, exec)
-                    }
-                    JobSource::Cached(c) => (
-                        c.spec.id.clone(),
-                        c.spec.levels,
-                        c.initial.clone(),
-                        JobExec::Replay(Arc::clone(c)),
-                    ),
+        type Prep = Result<(String, usize, Vec<crate::slide::tile::TileId>, JobExec), String>;
+        let prep = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| -> Prep {
+            match &q.spec.source {
+                JobSource::Spec(spec) => {
+                    let slide = Arc::new(Slide::from_spec(spec.clone()));
+                    let initial = background_removal(&slide, BG_MARGIN).tissue_tiles;
+                    let exec = if cluster_mode {
+                        JobExec::Cluster(spec.clone())
+                    } else {
+                        JobExec::Pool(Arc::clone(&slide))
+                    };
+                    Ok((slide.id().to_string(), slide.levels(), initial, exec))
                 }
-            },
-        ));
+                JobSource::Cached(c) => Ok((
+                    c.spec.id.clone(),
+                    c.spec.levels,
+                    c.initial.clone(),
+                    JobExec::Replay(Arc::clone(c)),
+                )),
+                JobSource::Sharded { store, slide } => {
+                    // The first shard load happens here (initial working
+                    // set + depth); a corrupt/missing shard fails this
+                    // one job, never the scheduler.
+                    let preds = store
+                        .slide(*slide)
+                        .map_err(|e| format!("shard load failed: {e}"))?;
+                    // Admission validated the threshold count against the
+                    // *manifest* depth; a shard whose spec disagrees with
+                    // its manifest row must fail here, not panic the
+                    // PyramidRun constructor below.
+                    if store.slide_levels(*slide) != Some(preds.spec.levels) {
+                        return Err(format!(
+                            "shard {} declares {} levels, manifest says {:?}",
+                            preds.spec.id,
+                            preds.spec.levels,
+                            store.slide_levels(*slide)
+                        ));
+                    }
+                    Ok((
+                        preds.spec.id.clone(),
+                        preds.spec.levels,
+                        preds.initial.clone(),
+                        JobExec::Sharded {
+                            store: Arc::clone(store),
+                            slide: *slide,
+                        },
+                    ))
+                }
+            }
+        }));
+        let prep = match prep {
+            Ok(r) => r,
+            Err(p) => Err(panic_message(&p)),
+        };
         let (slide_id, levels, initial, exec) = match prep {
             Ok(t) => t,
-            Err(p) => {
+            Err(msg) => {
                 self.running_ids.lock().unwrap().remove(&q.id);
                 self.results.push(JobResult {
                     id: q.id,
                     slide_id: q.spec.source.slide_id().to_string(),
                     tenant: q.spec.tenant,
                     priority: q.spec.priority,
-                    state: JobState::Failed(panic_message(&p)),
+                    state: JobState::Failed(msg),
                     tree: None,
                     queue_wait,
                     run_time: Duration::ZERO,
@@ -707,11 +747,13 @@ impl Scheduler {
             enum Fire {
                 Pool,
                 Replay(Arc<SlidePredictions>),
+                Sharded(Arc<ShardedPredStore>, usize),
                 Cluster(SlideSpec),
             }
             let fire = match &self.running.get(&job).expect("dispatch implies running").exec {
                 JobExec::Pool(_) => Fire::Pool,
                 JobExec::Replay(c) => Fire::Replay(Arc::clone(c)),
+                JobExec::Sharded { store, slide } => Fire::Sharded(Arc::clone(store), *slide),
                 JobExec::Cluster(spec) => Fire::Cluster(spec.clone()),
             };
             match fire {
@@ -728,16 +770,40 @@ impl Scheduler {
                     self.flush_group(group_level, g);
                     // Missing lineage tiles (corrupt cache) reply short;
                     // the feed rejects that and fails the one job.
-                    let probs: Vec<f32> = req
-                        .tiles
-                        .iter()
-                        .filter_map(|t| c.preds.get(t).map(|p| p.prob))
-                        .collect();
+                    let probs: Vec<f32> =
+                        req.tiles.iter().filter_map(|&t| c.prob(t)).collect();
                     let _ = self.events_tx.send(Event::ChunkDone {
                         job,
                         req: req.id,
                         probs,
                     });
+                }
+                Fire::Sharded(store, slide) => {
+                    let g = std::mem::take(&mut group);
+                    self.flush_group(group_level, g);
+                    // Re-resolve through the store each chunk: the shard
+                    // may have been evicted since the last one, in which
+                    // case it streams back in off disk. A load failure
+                    // (file corrupted after admission) fails this one
+                    // job, never the service.
+                    match store.slide(slide) {
+                        Ok(preds) => {
+                            let probs: Vec<f32> =
+                                req.tiles.iter().filter_map(|&t| preds.prob(t)).collect();
+                            let _ = self.events_tx.send(Event::ChunkDone {
+                                job,
+                                req: req.id,
+                                probs,
+                            });
+                        }
+                        Err(e) => {
+                            if let Some(r) = self.running.get_mut(&job) {
+                                r.dispatched = r.dispatched.saturating_sub(1);
+                                r.failed = Some(format!("shard load failed: {e}"));
+                            }
+                            self.pending.retain(|(j, _)| *j != job);
+                        }
+                    }
                 }
                 Fire::Cluster(spec) => {
                     let g = std::mem::take(&mut group);

@@ -6,8 +6,10 @@
 //! retention-vs-speedup curve (Fig. 5) from which the user picks a single
 //! β for the desired trade-off.
 
+use anyhow::Result;
+
+use crate::predcache::PredSource;
 use crate::pyramid::tree::Thresholds;
-use crate::predcache::PredCache;
 use crate::util::json::Json;
 
 use super::fbeta::{best_threshold, BETA_RANGE};
@@ -26,11 +28,14 @@ pub struct EmpiricalPoint {
     pub speedup: f64,
 }
 
-/// Full β sweep (Fig. 5 series).
-pub fn sweep(cache: &PredCache, levels: usize) -> Vec<EmpiricalPoint> {
+/// Full β sweep (Fig. 5 series). Works over any [`PredSource`] — a
+/// fully-resident cache or a disk-sharded store streaming slides under
+/// its memory budget; errors are disk/codec failures from such sources.
+pub fn sweep(cache: &impl PredSource, levels: usize) -> Result<Vec<EmpiricalPoint>> {
     // Per-level pooled pairs, computed once.
-    let pairs_per_level: Vec<Vec<(f32, bool)>> =
-        (0..levels).map(|l| cache.level_pairs(l)).collect();
+    let pairs_per_level: Vec<Vec<(f32, bool)>> = (0..levels)
+        .map(|l| cache.pooled_pairs(l))
+        .collect::<Result<_>>()?;
     BETA_RANGE
         .map(|beta| {
             let mut thresholds = Thresholds::pass_through(levels);
@@ -38,13 +43,13 @@ pub fn sweep(cache: &PredCache, levels: usize) -> Vec<EmpiricalPoint> {
                 thresholds.zoom[level] =
                     best_threshold(&pairs_per_level[level], beta as f64);
             }
-            let (retention, speedup, _) = evaluate(cache, &thresholds);
-            EmpiricalPoint {
+            let (retention, speedup, _) = evaluate(cache, &thresholds)?;
+            Ok(EmpiricalPoint {
                 beta,
                 thresholds,
                 retention,
                 speedup,
-            }
+            })
         })
         .collect()
 }
@@ -65,19 +70,23 @@ pub struct EmpiricalSelection {
 
 /// Pick the smallest β whose train retention meets the target (the paper
 /// picks β=8 for a 0.90 target). Falls back to the largest β.
-pub fn select(cache: &PredCache, levels: usize, target_retention: f64) -> EmpiricalSelection {
-    let points = sweep(cache, levels);
+pub fn select(
+    cache: &impl PredSource,
+    levels: usize,
+    target_retention: f64,
+) -> Result<EmpiricalSelection> {
+    let points = sweep(cache, levels)?;
     let chosen = points
         .iter()
         .find(|p| p.retention >= target_retention)
         .or_else(|| points.last())
         .expect("non-empty β range");
-    EmpiricalSelection {
+    Ok(EmpiricalSelection {
         target_retention,
         beta: chosen.beta,
         thresholds: chosen.thresholds.clone(),
         points,
-    }
+    })
 }
 
 impl EmpiricalSelection {
@@ -109,6 +118,7 @@ impl EmpiricalSelection {
 mod tests {
     use super::*;
     use crate::model::oracle::OracleAnalyzer;
+    use crate::predcache::PredCache;
     use crate::slide::pyramid::Slide;
     use crate::synth::slide_gen::{gen_slide_set, DatasetParams};
 
@@ -123,7 +133,7 @@ mod tests {
     #[test]
     fn sweep_has_14_points_with_tradeoff_shape() {
         let cache = train_cache(6);
-        let points = sweep(&cache, 3);
+        let points = sweep(&cache, 3).unwrap();
         assert_eq!(points.len(), 14);
         for w in points.windows(2) {
             // retention weakly increases with β, speedup weakly decreases
@@ -139,7 +149,7 @@ mod tests {
     #[test]
     fn select_meets_target_on_train() {
         let cache = train_cache(9);
-        let sel = select(&cache, 3, 0.90);
+        let sel = select(&cache, 3, 0.90).unwrap();
         assert!(
             sel.points
                 .iter()
@@ -157,15 +167,15 @@ mod tests {
     #[test]
     fn lower_target_picks_smaller_or_equal_beta() {
         let cache = train_cache(6);
-        let lo = select(&cache, 3, 0.75);
-        let hi = select(&cache, 3, 0.95);
+        let lo = select(&cache, 3, 0.75).unwrap();
+        let hi = select(&cache, 3, 0.95).unwrap();
         assert!(lo.beta <= hi.beta);
     }
 
     #[test]
     fn json_has_sweep_rows() {
         let cache = train_cache(3);
-        let sel = select(&cache, 3, 0.9);
+        let sel = select(&cache, 3, 0.9).unwrap();
         let j = sel.to_json();
         assert_eq!(j.get("sweep").unwrap().as_arr().unwrap().len(), 14);
     }

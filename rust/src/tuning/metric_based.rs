@@ -7,8 +7,10 @@
 //! retention (averaged over the train slides) meets the per-level
 //! objective; the level's threshold is then argmax F_β.
 
+use anyhow::Result;
+
 use crate::metrics::retention::{retention_and_speedup, RunMetrics};
-use crate::predcache::PredCache;
+use crate::predcache::PredSource;
 use crate::pyramid::tree::Thresholds;
 use crate::util::json::Json;
 
@@ -45,35 +47,48 @@ pub fn isolated_thresholds(levels: usize, level: usize, t: f64) -> Thresholds {
 }
 
 /// Mean retention and speedup of a threshold setting over a slide set.
-pub fn evaluate(cache: &PredCache, thresholds: &Thresholds) -> (f64, f64, Vec<RunMetrics>) {
-    let mut metrics = Vec::with_capacity(cache.slides.len());
-    for sp in &cache.slides {
-        let tree = sp.replay(thresholds);
-        metrics.push(retention_and_speedup(sp, &tree));
+/// Slides are visited one at a time through [`PredSource`], so a
+/// [`ShardedPredStore`](crate::predcache::ShardedPredStore) source
+/// evaluates out-of-core under its memory budget; errors are disk/codec
+/// failures from such streaming sources.
+pub fn evaluate(
+    cache: &impl PredSource,
+    thresholds: &Thresholds,
+) -> Result<(f64, f64, Vec<RunMetrics>)> {
+    let mut metrics = Vec::with_capacity(cache.n_slides());
+    for i in 0..cache.n_slides() {
+        cache.with_slide(i, &mut |sp| {
+            let tree = sp.replay(thresholds);
+            metrics.push(retention_and_speedup(sp, &tree));
+        })?;
     }
     let n = metrics.len().max(1) as f64;
     let retention = metrics.iter().map(|m| m.retention()).sum::<f64>() / n;
     let speedup = metrics.iter().map(|m| m.speedup()).sum::<f64>() / n;
-    (retention, speedup, metrics)
+    Ok((retention, speedup, metrics))
 }
 
 /// Sweep β over one isolated level (Fig. 3 for that level).
-pub fn isolated_curve(cache: &PredCache, levels: usize, level: usize) -> IsolatedCurve {
-    let pairs = cache.level_pairs(level);
+pub fn isolated_curve(
+    cache: &impl PredSource,
+    levels: usize,
+    level: usize,
+) -> Result<IsolatedCurve> {
+    let pairs = cache.pooled_pairs(level)?;
     let points = BETA_RANGE
-        .map(|beta| {
+        .map(|beta| -> Result<IsolatedPoint> {
             let threshold = best_threshold(&pairs, beta as f64);
             let thr = isolated_thresholds(levels, level, threshold);
-            let (retention, speedup, _) = evaluate(cache, &thr);
-            IsolatedPoint {
+            let (retention, speedup, _) = evaluate(cache, &thr)?;
+            Ok(IsolatedPoint {
                 beta,
                 threshold,
                 retention,
                 speedup,
-            }
+            })
         })
-        .collect();
-    IsolatedCurve { level, points }
+        .collect::<Result<Vec<_>>>()?;
+    Ok(IsolatedCurve { level, points })
 }
 
 /// Result of the metric-based selection.
@@ -95,7 +110,11 @@ pub struct MetricBasedSelection {
 /// the smallest β whose isolated retention meets `objective^(1/n)`.
 /// Falls back to the largest β (max recall) when no β reaches the
 /// per-level objective.
-pub fn select(cache: &PredCache, levels: usize, objective: f64) -> MetricBasedSelection {
+pub fn select(
+    cache: &impl PredSource,
+    levels: usize,
+    objective: f64,
+) -> Result<MetricBasedSelection> {
     assert!((0.0..=1.0).contains(&objective));
     let n_intermediate = levels - 1; // levels 1..levels-1 carry decisions
     let per_level_objective = objective.powf(1.0 / n_intermediate as f64);
@@ -104,7 +123,7 @@ pub fn select(cache: &PredCache, levels: usize, objective: f64) -> MetricBasedSe
     let mut betas = vec![None; levels];
     let mut curves = Vec::new();
     for level in 1..levels {
-        let curve = isolated_curve(cache, levels, level);
+        let curve = isolated_curve(cache, levels, level)?;
         let chosen = curve
             .points
             .iter()
@@ -116,13 +135,13 @@ pub fn select(cache: &PredCache, levels: usize, objective: f64) -> MetricBasedSe
         }
         curves.push(curve);
     }
-    MetricBasedSelection {
+    Ok(MetricBasedSelection {
         objective,
         per_level_objective,
         betas,
         thresholds,
         curves,
-    }
+    })
 }
 
 impl MetricBasedSelection {
@@ -152,6 +171,7 @@ impl MetricBasedSelection {
 mod tests {
     use super::*;
     use crate::model::oracle::OracleAnalyzer;
+    use crate::predcache::PredCache;
     use crate::slide::pyramid::Slide;
     use crate::synth::slide_gen::{gen_slide_set, DatasetParams};
 
@@ -166,7 +186,7 @@ mod tests {
     #[test]
     fn isolated_curve_monotone_retention_in_beta() {
         let cache = train_cache(6);
-        let curve = isolated_curve(&cache, 3, 2);
+        let curve = isolated_curve(&cache, 3, 2).unwrap();
         assert_eq!(curve.points.len(), 14);
         // Higher β → lower threshold → weakly higher retention.
         for w in curve.points.windows(2) {
@@ -195,7 +215,7 @@ mod tests {
     #[test]
     fn selection_meets_objective_on_train_set() {
         let cache = train_cache(9);
-        let sel = select(&cache, 3, 0.90);
+        let sel = select(&cache, 3, 0.90).unwrap();
         assert!((sel.per_level_objective - 0.90f64.sqrt()).abs() < 1e-12);
         // Betas chosen for both intermediate levels.
         assert!(sel.betas[1].is_some());
@@ -203,7 +223,7 @@ mod tests {
         // The combined execution should meet (approximately) the global
         // objective on the train set: per-level isolation guarantees the
         // product bound, allow small slack for interactions.
-        let (retention, speedup, _) = evaluate(&cache, &sel.thresholds);
+        let (retention, speedup, _) = evaluate(&cache, &sel.thresholds).unwrap();
         assert!(
             retention >= 0.85,
             "train retention {retention} far below objective"
@@ -214,8 +234,8 @@ mod tests {
     #[test]
     fn stricter_objective_needs_higher_or_equal_betas() {
         let cache = train_cache(6);
-        let loose = select(&cache, 3, 0.80);
-        let strict = select(&cache, 3, 0.97);
+        let loose = select(&cache, 3, 0.80).unwrap();
+        let strict = select(&cache, 3, 0.97).unwrap();
         for level in 1..3 {
             let (l, s) = (loose.betas[level].unwrap(), strict.betas[level].unwrap());
             assert!(s >= l, "level {level}: strict β {s} < loose β {l}");

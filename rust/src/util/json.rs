@@ -43,6 +43,10 @@ pub enum JsonError {
     #[error("json missing key: {0}")]
     /// A required object key was absent.
     MissingKey(String),
+    #[error("json value error: {0}")]
+    /// A well-formed value was semantically invalid for its consumer
+    /// (out-of-range coordinates, inconsistent geometry…).
+    Value(String),
 }
 
 /// Result alias with [`JsonError`].
@@ -192,6 +196,54 @@ impl Json {
         let mut out = String::new();
         self.write_pretty(&mut out, 0);
         out
+    }
+
+    /// Serialize compactly into an `io::Write` without materializing the
+    /// whole document as one string — containers recurse element by
+    /// element, scalars and keys format through one reused scratch
+    /// buffer (no per-value allocation). Byte-identical to
+    /// [`Json::to_string`].
+    pub fn write_to<W: std::io::Write>(&self, w: &mut W) -> std::io::Result<()> {
+        let mut scratch = String::new();
+        self.write_to_inner(w, &mut scratch)
+    }
+
+    fn write_to_inner<W: std::io::Write>(
+        &self,
+        w: &mut W,
+        scratch: &mut String,
+    ) -> std::io::Result<()> {
+        match self {
+            Json::Arr(a) => {
+                w.write_all(b"[")?;
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        w.write_all(b",")?;
+                    }
+                    v.write_to_inner(w, scratch)?;
+                }
+                w.write_all(b"]")
+            }
+            Json::Obj(m) => {
+                w.write_all(b"{")?;
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        w.write_all(b",")?;
+                    }
+                    scratch.clear();
+                    write_str(k, scratch);
+                    w.write_all(scratch.as_bytes())?;
+                    w.write_all(b":")?;
+                    v.write_to_inner(w, scratch)?;
+                }
+                w.write_all(b"}")
+            }
+            scalar => {
+                scratch.clear();
+                scalar.write(scratch);
+                w.write_all(scratch.as_bytes())
+            }
+        }
     }
 
     fn write(&self, out: &mut String) {
@@ -596,6 +648,15 @@ mod tests {
         let v = Json::parse(src).unwrap();
         assert_eq!(Json::parse(&v.to_string()).unwrap(), v);
         assert_eq!(Json::parse(&v.to_pretty()).unwrap(), v);
+    }
+
+    #[test]
+    fn write_to_matches_to_string_byte_for_byte() {
+        let src = r#"{"arr":[1,2.5,"s\n\"q\""],"b":false,"nested":{"k":[true,null]},"z":-3}"#;
+        let v = Json::parse(src).unwrap();
+        let mut streamed = Vec::new();
+        v.write_to(&mut streamed).unwrap();
+        assert_eq!(String::from_utf8(streamed).unwrap(), v.to_string());
     }
 
     #[test]

@@ -11,8 +11,10 @@
 use std::io;
 use std::path::Path;
 
-/// CRC-32 (IEEE 802.3), bitwise — the PNG chunk checksum.
-fn crc32(data: &[u8]) -> u32 {
+/// CRC-32 (IEEE 802.3), bitwise — the PNG chunk checksum, also the
+/// integrity check of the binary prediction shards
+/// ([`crate::predcache::shard`]).
+pub fn crc32(data: &[u8]) -> u32 {
     let mut crc = 0xffff_ffffu32;
     for &b in data {
         crc ^= b as u32;

@@ -35,8 +35,9 @@ fn full_pipeline_reproduces_paper_shape() {
     let (train_cache, test_cache, _) = caches();
 
     // --- empirical strategy (§4.5): tune on train, evaluate on test ----
-    let sel = empirical::select(&train_cache, 3, 0.90);
-    let (test_ret, test_speedup, _) = metric_based::evaluate(&test_cache, &sel.thresholds);
+    let sel = empirical::select(&train_cache, 3, 0.90).unwrap();
+    let (test_ret, test_speedup, _) =
+        metric_based::evaluate(&test_cache, &sel.thresholds).unwrap();
     assert!(
         test_ret >= 0.80,
         "test retention {test_ret} collapsed vs train target 0.90"
@@ -47,8 +48,8 @@ fn full_pipeline_reproduces_paper_shape() {
     );
 
     // --- metric-based strategy (§4.4) ----------------------------------
-    let mb = metric_based::select(&train_cache, 3, 0.90);
-    let (mb_ret, mb_speedup, _) = metric_based::evaluate(&test_cache, &mb.thresholds);
+    let mb = metric_based::select(&train_cache, 3, 0.90).unwrap();
+    let (mb_ret, mb_speedup, _) = metric_based::evaluate(&test_cache, &mb.thresholds).unwrap();
     assert!(mb_ret >= 0.80, "metric-based test retention {mb_ret}");
     assert!(mb_speedup > 1.0, "metric-based speedup {mb_speedup}");
 
@@ -63,9 +64,8 @@ fn full_pipeline_reproduces_paper_shape() {
     // Train on the train set's replayed trees, test on the test set.
     let label = |cache: &PredCache, i: usize| -> bool {
         cache.slides[i]
-            .preds
-            .iter()
-            .any(|(t, p)| t.level == 0 && p.tumor && p.prob >= POSITIVE_THRESHOLD as f32)
+            .iter_level(0)
+            .any(|(_, p)| p.tumor && p.prob >= POSITIVE_THRESHOLD as f32)
     };
     let mk_samples = |cache: &PredCache| -> Vec<Sample> {
         (0..cache.slides.len())
@@ -85,12 +85,12 @@ fn full_pipeline_reproduces_paper_shape() {
 #[test]
 fn retention_speedup_tradeoff_exists_on_test_set() {
     let (train_cache, test_cache, _) = caches();
-    let points = empirical::sweep(&train_cache, 3);
+    let points = empirical::sweep(&train_cache, 3).unwrap();
     // Evaluate the extreme betas on the held-out test set.
     let (lo_ret, lo_speedup, _) =
-        metric_based::evaluate(&test_cache, &points.first().unwrap().thresholds);
+        metric_based::evaluate(&test_cache, &points.first().unwrap().thresholds).unwrap();
     let (hi_ret, hi_speedup, _) =
-        metric_based::evaluate(&test_cache, &points.last().unwrap().thresholds);
+        metric_based::evaluate(&test_cache, &points.last().unwrap().thresholds).unwrap();
     assert!(hi_ret > lo_ret, "retention: β=14 {hi_ret} vs β=1 {lo_ret}");
     assert!(lo_speedup > hi_speedup, "speedup: β=1 {lo_speedup} vs β=14 {hi_speedup}");
     // Fig 5 headline: low β should be dramatically faster.
@@ -100,7 +100,7 @@ fn retention_speedup_tradeoff_exists_on_test_set() {
 #[test]
 fn metrics_consistent_between_cache_and_replay() {
     let (train_cache, _, _) = caches();
-    let sel = empirical::select(&train_cache, 3, 0.9);
+    let sel = empirical::select(&train_cache, 3, 0.9).unwrap();
     for sp in &train_cache.slides {
         let tree = sp.replay(&sel.thresholds);
         tree.check_consistency().unwrap();

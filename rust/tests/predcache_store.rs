@@ -1,0 +1,312 @@
+//! Sharded prediction store integration: streamed replay equivalence
+//! under eviction pressure, corrupt-shard error paths, JSON→binary
+//! migration, the service's `JobSource::Sharded` path, and the golden
+//! shard fixture that pins the on-disk format.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use pyramidai::model::oracle::OracleAnalyzer;
+use pyramidai::predcache::shard::{decode_slide, encode_slide};
+use pyramidai::predcache::store::{import_json, save_sharded, MANIFEST_FILE};
+use pyramidai::predcache::{PredCache, PredSource, ShardedPredStore, StoreError};
+use pyramidai::pyramid::tree::Thresholds;
+use pyramidai::service::{AnalysisService, JobSource, JobSpec, JobState, ServiceConfig};
+use pyramidai::slide::pyramid::Slide;
+use pyramidai::synth::slide_gen::{gen_slide_set, DatasetParams};
+use pyramidai::tuning::empirical;
+
+fn params() -> DatasetParams {
+    DatasetParams {
+        tiles_x: 16,
+        tiles_y: 8,
+        levels: 3,
+        tile_px: 64,
+    }
+}
+
+fn collect(n: usize, seed: u64) -> PredCache {
+    let slides: Vec<Slide> = gen_slide_set("pcs", n, seed, &params())
+        .into_iter()
+        .map(Slide::from_spec)
+        .collect();
+    PredCache::collect_set(&slides, &OracleAnalyzer::new(1), 16)
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "pyramidai_itest_{tag}_{}_{:?}",
+        std::process::id(),
+        std::thread::current().id()
+    ));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn streamed_replay_is_byte_identical_under_tiny_eviction_budget() {
+    let cache = collect(5, 41);
+    let dir = tmp_dir("equiv");
+    save_sharded(&cache, &dir, 2).unwrap();
+    // Budget 0 MiB: at most one shard resident — every slide switch
+    // evicts, every replay of another slide streams back off disk.
+    let store = Arc::new(ShardedPredStore::open_with_budget(&dir, Some(0)).unwrap());
+    for thr in [0.2, 0.4, 0.7] {
+        let t = Thresholds::uniform(3, thr);
+        for i in 0..cache.slides.len() {
+            let in_memory = cache.slides[i].replay(&t);
+            let streamed = store.replay(i, &t).unwrap();
+            assert_eq!(
+                in_memory.nodes, streamed.nodes,
+                "slide {i} thr {thr}: streamed tree diverged"
+            );
+            assert_eq!(in_memory.initial, streamed.initial);
+        }
+    }
+    let st = store.stats();
+    assert!(
+        st.evictions > 0,
+        "budget never bit — the test did not exercise streaming ({st:?})"
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn service_sharded_jobs_match_pinned_cached_jobs() {
+    let cache = collect(4, 43);
+    let dir = tmp_dir("svc");
+    save_sharded(&cache, &dir, 1).unwrap();
+    let store = Arc::new(ShardedPredStore::open_with_budget(&dir, Some(0)).unwrap());
+    let thr = Thresholds::uniform(3, 0.35);
+    let expect: Vec<_> = cache.slides.iter().map(|s| s.replay(&thr)).collect();
+
+    let svc = AnalysisService::start(
+        Arc::new(OracleAnalyzer::new(1)),
+        ServiceConfig {
+            workers: 1,
+            max_in_flight: 2,
+            ..ServiceConfig::default()
+        },
+    );
+    let ids: Vec<_> = (0..cache.slides.len())
+        .map(|i| {
+            svc.submit(JobSpec::new(
+                JobSource::Sharded {
+                    store: Arc::clone(&store),
+                    slide: i,
+                },
+                thr.clone(),
+            ))
+            .unwrap()
+        })
+        .collect();
+    let report = svc.shutdown();
+    for (i, id) in ids.iter().enumerate() {
+        let r = report.job(*id).unwrap();
+        assert_eq!(r.state, JobState::Completed, "job {i}");
+        assert_eq!(
+            r.tree.as_ref().unwrap().nodes,
+            expect[i].nodes,
+            "sharded job {i} diverged from in-memory replay"
+        );
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn corrupt_shard_fails_the_job_not_the_service() {
+    let cache = collect(2, 47);
+    let dir = tmp_dir("svccorrupt");
+    save_sharded(&cache, &dir, 1).unwrap();
+    // Corrupt slide 1's shard (flip a payload byte, size unchanged).
+    let shard1 = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .find(|p| {
+            p.file_name()
+                .map(|n| n.to_string_lossy().starts_with("0001_"))
+                .unwrap_or(false)
+        })
+        .unwrap();
+    let mut bytes = std::fs::read(&shard1).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x20;
+    std::fs::write(&shard1, &bytes).unwrap();
+
+    let store = Arc::new(ShardedPredStore::open(&dir).unwrap());
+    let thr = Thresholds::uniform(3, 0.35);
+    let svc = AnalysisService::start(Arc::new(OracleAnalyzer::new(1)), ServiceConfig::default());
+    let ok = svc
+        .submit(JobSpec::new(
+            JobSource::Sharded {
+                store: Arc::clone(&store),
+                slide: 0,
+            },
+            thr.clone(),
+        ))
+        .unwrap();
+    let bad = svc
+        .submit(JobSpec::new(
+            JobSource::Sharded {
+                store: Arc::clone(&store),
+                slide: 1,
+            },
+            thr.clone(),
+        ))
+        .unwrap();
+    let report = svc.shutdown();
+    assert_eq!(report.job(ok).unwrap().state, JobState::Completed);
+    assert!(
+        matches!(report.job(bad).unwrap().state, JobState::Failed(_)),
+        "corrupt shard must fail its job, got {:?}",
+        report.job(bad).unwrap().state
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn corrupt_paths_error_never_panic() {
+    let cache = collect(1, 53);
+    let dir = tmp_dir("errors");
+    save_sharded(&cache, &dir, 1).unwrap();
+    let shard = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .find(|p| p.extension().map(|e| e == "shard").unwrap_or(false))
+        .unwrap();
+    let good = std::fs::read(&shard).unwrap();
+
+    // Truncation at many lengths.
+    for cut in [0usize, 5, 11, good.len() / 3, good.len() - 1] {
+        assert!(decode_slide(&good[..cut]).is_err(), "cut={cut}");
+    }
+    // Bit flip.
+    let mut flipped = good.clone();
+    let mid = flipped.len() / 2;
+    flipped[mid] ^= 1;
+    assert!(decode_slide(&flipped).is_err());
+    // Version skew (re-sealed checksum so the version check fires).
+    let mut vskew = good.clone();
+    vskew[4..8].copy_from_slice(&7u32.to_le_bytes());
+    let n = vskew.len();
+    let crc = {
+        // Reuse the library's own encoder to find the correct CRC: a
+        // freshly encoded shard ends with crc32(payload).
+        // (Recompute via decode error message is overkill — flip the
+        // version back and forth instead.)
+        pyramidai::util::png::crc32(&vskew[..n - 4])
+    };
+    vskew[n - 4..].copy_from_slice(&crc.to_le_bytes());
+    assert!(matches!(
+        decode_slide(&vskew),
+        Err(pyramidai::predcache::ShardError::Version(7))
+    ));
+
+    // Store-level: truncated file is a size mismatch, missing manifest a
+    // manifest error.
+    std::fs::write(&shard, &good[..good.len() / 2]).unwrap();
+    let store = ShardedPredStore::open(&dir).unwrap();
+    assert!(matches!(
+        store.slide(0),
+        Err(StoreError::SizeMismatch { .. })
+    ));
+    std::fs::remove_file(dir.join(MANIFEST_FILE)).unwrap();
+    assert!(matches!(
+        ShardedPredStore::open(&dir),
+        Err(StoreError::Manifest(_))
+    ));
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn json_migration_preserves_replay_and_tuning_pairs() {
+    let cache = collect(3, 59);
+    let dir = tmp_dir("migrate");
+    let json = dir.join("legacy.json");
+    cache.save(&json).unwrap();
+    let shards = dir.join("shards");
+    assert_eq!(import_json(&json, &shards, 2).unwrap(), 3);
+
+    let from_json = PredCache::load(&json).unwrap();
+    let store = Arc::new(ShardedPredStore::open_with_budget(&shards, Some(0)).unwrap());
+    // Tuning pairs: identical per level, pooled across slides.
+    for level in 0..3 {
+        assert_eq!(
+            PredSource::pooled_pairs(&from_json, level).unwrap(),
+            store.pooled_pairs(level).unwrap(),
+            "level {level}"
+        );
+    }
+    // Replay: identical trees at several thresholds.
+    for thr in [0.25, 0.5] {
+        let t = Thresholds::uniform(3, thr);
+        for i in 0..3 {
+            assert_eq!(
+                from_json.slides[i].replay(&t).nodes,
+                store.replay(i, &t).unwrap().nodes,
+                "slide {i} thr {thr}"
+            );
+        }
+    }
+    // A full tuning selection over the streamed store matches in-memory.
+    let a = empirical::select(&from_json, 3, 0.9).unwrap();
+    let b = empirical::select(store.as_ref(), 3, 0.9).unwrap();
+    assert_eq!(a.beta, b.beta);
+    assert_eq!(a.thresholds.zoom, b.thresholds.zoom);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// The checked-in golden shard pins the binary format: if an encoder or
+/// decoder change alters the layout without a version bump, this fails
+/// the build.
+#[test]
+fn golden_shard_fixture_decodes_and_reencodes_byte_identically() {
+    let fixture = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("rust")
+        .join("tests")
+        .join("fixtures")
+        .join("golden");
+    let bytes = std::fs::read(fixture.join("0000_golden.shard")).unwrap();
+    let preds = decode_slide(&bytes).unwrap();
+
+    // Pinned contents (mirrors the generator that produced the fixture).
+    assert_eq!(preds.spec.id, "golden");
+    assert_eq!(preds.spec.seed, 7);
+    assert_eq!(preds.spec.tiles_x, 4);
+    assert_eq!(preds.spec.tiles_y, 4);
+    assert_eq!(preds.spec.levels, 2);
+    assert_eq!(preds.initial.len(), 4);
+    assert_eq!(preds.len(), 4 + 16);
+    use pyramidai::slide::tile::TileId;
+    for i in 0..4 {
+        let t = TileId::new(1, i % 2, i / 2);
+        let p = preds.get(t).unwrap();
+        assert!((p.prob - (i as f32 + 1.0) / 10.0).abs() < 1e-6, "{t}");
+        assert_eq!(p.tumor, i % 2 == 0, "{t}");
+    }
+    for i in 0..16 {
+        let t = TileId::new(0, i % 4, i / 4);
+        let p = preds.get(t).unwrap();
+        assert!((p.prob - i as f32 / 32.0).abs() < 1e-6, "{t}");
+        assert_eq!(p.tumor, i % 3 == 0, "{t}");
+    }
+
+    // Re-encoding must reproduce the checked-in bytes exactly.
+    assert_eq!(
+        encode_slide(&preds),
+        bytes,
+        "shard encoder no longer matches the golden fixture — bump SHARD_VERSION"
+    );
+
+    // The fixture directory is a complete store: manifest opens, replay
+    // runs.
+    let store = Arc::new(ShardedPredStore::open(&fixture).unwrap());
+    assert_eq!(store.len(), 1);
+    assert_eq!(store.slide_id(0), Some("golden"));
+    let tree = store.replay(0, &Thresholds::uniform(2, 0.25)).unwrap();
+    tree.check_consistency().unwrap();
+    assert_eq!(tree.nodes[1].len(), 4, "all four initial tiles analyzed");
+}
