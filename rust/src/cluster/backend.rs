@@ -49,7 +49,7 @@
 
 use std::collections::{HashMap, VecDeque};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -57,6 +57,7 @@ use std::time::{Duration, Instant};
 use anyhow::{Context, Result};
 
 use crate::model::Analyzer;
+use crate::obs::{self, Level};
 use crate::pyramid::{Completion, ExecutionBackend, FrontierRequest, RequestId};
 use crate::slide::pyramid::Slide;
 use crate::synth::slide_gen::SlideSpec;
@@ -177,6 +178,9 @@ struct ExecState {
     workers: Mutex<Vec<WorkerSlot>>,
     pending: Mutex<HashMap<u64, PendingChunk>>,
     rr: AtomicUsize,
+    /// Next chunk trace id ([`ChunkTask::trace`]); `0` is reserved for
+    /// frames from pre-tracing peers.
+    trace_seq: AtomicU64,
     done: AtomicBool,
     workers_lost: AtomicUsize,
     workers_joined: AtomicUsize,
@@ -261,6 +265,7 @@ impl ClusterExec {
             ),
             pending: Mutex::new(HashMap::new()),
             rr: AtomicUsize::new(0),
+            trace_seq: AtomicU64::new(1),
             done: AtomicBool::new(false),
             workers_lost: AtomicUsize::new(0),
             workers_joined: AtomicUsize::new(0),
@@ -386,14 +391,29 @@ impl ClusterExec {
         level: usize,
         tiles: Vec<crate::slide::tile::TileId>,
     ) -> Result<()> {
+        let trace = self.state.trace_seq.fetch_add(1, Ordering::Relaxed);
         let task = ChunkTask {
             key,
             spec: spec.clone(),
             level,
             tiles,
             exclude: Vec::new(),
+            trace,
         };
         let target = self.state.pick_worker(&[]);
+        obs::global_metrics().counter("cluster.chunks_dealt").inc();
+        obs::event(
+            Level::Debug,
+            "cluster",
+            "chunk_dealt",
+            &[
+                ("key", key.into()),
+                ("trace", trace.into()),
+                ("worker", target.map(|(id, _)| id as i64).unwrap_or(-1).into()),
+                ("level", level.into()),
+                ("tiles", task.tiles.len().into()),
+            ],
+        );
         self.state.pending.lock().unwrap().insert(
             key,
             PendingChunk {
@@ -560,14 +580,33 @@ fn leader_loop(listener: TcpListener, state: Arc<ExecState>, tx: Sender<ExecEven
                 stream.set_nonblocking(false).ok();
                 stream.set_read_timeout(Some(Duration::from_secs(30))).ok();
                 match Msg::read_from(&mut stream) {
-                    Ok(Msg::ChunkDone { key, worker, probs }) => {
+                    Ok(Msg::ChunkDone {
+                        key,
+                        worker,
+                        probs,
+                        trace,
+                    }) => {
                         // Only chunks still pending are forwarded; a
                         // duplicate completion from a resubmission race is
                         // dropped here, so the dispatcher sees each key at
                         // most once.
                         let known = state.pending.lock().unwrap().remove(&key).is_some();
-                        if known && tx.send(ExecEvent::Done { key, worker, probs }).is_err() {
-                            return; // every receiver gone
+                        obs::event(
+                            if known { Level::Debug } else { Level::Trace },
+                            "cluster",
+                            if known { "chunk_done" } else { "chunk_done_dup" },
+                            &[
+                                ("key", key.into()),
+                                ("trace", trace.into()),
+                                ("worker", worker.into()),
+                                ("probs", probs.len().into()),
+                            ],
+                        );
+                        if known {
+                            obs::global_metrics().counter("cluster.chunks_done").inc();
+                            if tx.send(ExecEvent::Done { key, worker, probs }).is_err() {
+                                return; // every receiver gone
+                            }
                         }
                         // A completing worker is demonstrably alive.
                         if let Some(s) = state.workers.lock().unwrap().get_mut(worker) {
@@ -587,10 +626,29 @@ fn leader_loop(listener: TcpListener, state: Arc<ExecState>, tx: Sender<ExecEven
                             ws.len() - 1
                         };
                         state.workers_joined.fetch_add(1, Ordering::Relaxed);
-                        eprintln!("[cluster] worker {id} joined on :{port}");
+                        obs::global_metrics()
+                            .counter("cluster.workers_joined")
+                            .inc();
+                        obs::event(
+                            Level::Info,
+                            "cluster",
+                            "worker_joined",
+                            &[("worker", id.into()), ("port", port.into())],
+                        );
                         let _ = Msg::Welcome { id }.write_to(&mut stream);
                     }
-                    Ok(Msg::ChunkMoved { key, worker }) => {
+                    Ok(Msg::ChunkMoved { key, worker, trace }) => {
+                        obs::global_metrics().counter("cluster.chunks_moved").inc();
+                        obs::event(
+                            Level::Debug,
+                            "cluster",
+                            "chunk_moved",
+                            &[
+                                ("key", key.into()),
+                                ("trace", trace.into()),
+                                ("worker", worker.into()),
+                            ],
+                        );
                         if let Some(p) = state.pending.lock().unwrap().get_mut(&key) {
                             p.assigned = Some(worker);
                         }
@@ -647,8 +705,12 @@ fn monitor_loop(state: Arc<ExecState>, tx: Sender<ExecEvent>, heartbeat: Duratio
             };
             if died {
                 state.workers_lost.fetch_add(1, Ordering::Relaxed);
-                eprintln!(
-                    "[cluster] worker {id} (:{port}) lost — resubmitting its in-flight chunks"
+                obs::global_metrics().counter("cluster.workers_lost").inc();
+                obs::event(
+                    Level::Warn,
+                    "cluster",
+                    "worker_lost",
+                    &[("worker", id.into()), ("port", port.into())],
                 );
                 redeal_chunks(&state, &tx, Some(id));
             }
@@ -666,8 +728,8 @@ fn monitor_loop(state: Arc<ExecState>, tx: Sender<ExecEvent>, heartbeat: Duratio
 /// dispatcher as [`ExecEvent::Lost`]; with no live worker at all it
 /// stays orphaned for a rejoin.
 fn redeal_chunks(state: &ExecState, tx: &Sender<ExecEvent>, dead: Option<usize>) {
-    let mut sends: Vec<(u16, ChunkTask)> = Vec::new();
-    let mut lost: Vec<u64> = Vec::new();
+    let mut sends: Vec<(usize, u16, ChunkTask)> = Vec::new();
+    let mut lost: Vec<(u64, u64)> = Vec::new();
     {
         let mut pending = state.pending.lock().unwrap();
         let keys: Vec<u64> = pending
@@ -688,26 +750,32 @@ fn redeal_chunks(state: &ExecState, tx: &Sender<ExecEvent>, dead: Option<usize>)
             match state.pick_worker(&p.task.exclude) {
                 Some((w, port)) => {
                     p.assigned = Some(w);
-                    sends.push((port, p.task.clone()));
+                    sends.push((w, port, p.task.clone()));
                 }
                 None => {
                     if state.alive_ports().is_empty() {
                         p.assigned = None; // orphan: wait for a rejoin
                     } else {
-                        lost.push(key); // failed on every live worker
+                        lost.push((key, p.task.trace)); // failed on every live worker
                     }
                 }
             }
         }
-        for key in &lost {
+        for (key, _) in &lost {
             pending.remove(key);
         }
     }
     deliver(state, sends);
-    for key in lost {
+    for (key, trace) in lost {
         state.chunks_abandoned.fetch_add(1, Ordering::Relaxed);
-        eprintln!(
-            "[cluster] chunk {key} abandoned (failed on every worker) — handing it back to the dispatcher"
+        obs::global_metrics()
+            .counter("cluster.chunks_abandoned")
+            .inc();
+        obs::event(
+            Level::Warn,
+            "cluster",
+            "chunk_abandoned",
+            &[("key", key.into()), ("trace", trace.into())],
         );
         let _ = tx.send(ExecEvent::Lost { key });
     }
@@ -716,11 +784,25 @@ fn redeal_chunks(state: &ExecState, tx: &Sender<ExecEvent>, dead: Option<usize>)
 /// Send planned resubmissions outside any lock; failures re-orphan (and
 /// are not counted — the eventual successful re-deal is the one logical
 /// resubmission).
-fn deliver(state: &ExecState, sends: Vec<(u16, ChunkTask)>) {
-    for (port, task) in sends {
+fn deliver(state: &ExecState, sends: Vec<(usize, u16, ChunkTask)>) {
+    for (worker, port, task) in sends {
         let key = task.key;
+        let trace = task.trace;
         if send_to_deadline(port, &Msg::Chunk(task), DEAL_PATIENCE).is_ok() {
             state.chunks_resubmitted.fetch_add(1, Ordering::Relaxed);
+            obs::global_metrics()
+                .counter("cluster.chunks_resubmitted")
+                .inc();
+            obs::event(
+                Level::Info,
+                "cluster",
+                "chunk_resubmitted",
+                &[
+                    ("key", key.into()),
+                    ("trace", trace.into()),
+                    ("worker", worker.into()),
+                ],
+            );
         } else if let Some(p) = state.pending.lock().unwrap().get_mut(&key) {
             p.assigned = None;
         }
@@ -785,10 +867,28 @@ fn run_exec_worker(cfg: ExecWorkerConfig, listener: TcpListener, analyzer: Arc<d
                 // A panicking analyzer yields a short (empty) result; the
                 // dispatcher's PyramidRun rejects it and fails that one
                 // run — the worker itself survives, like the pool does.
+                let exec_start = Instant::now();
                 let mut probs = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                     analyzer.analyze(slide, t.level, &t.tiles)
                 }))
                 .unwrap_or_default();
+                let exec_us = exec_start.elapsed().as_micros() as u64;
+                obs::global_metrics()
+                    .histogram("cluster.chunk_exec_us")
+                    .record(exec_us);
+                obs::span_event(
+                    Level::Debug,
+                    "cluster",
+                    "chunk_exec",
+                    exec_us,
+                    &[
+                        ("key", t.key.into()),
+                        ("trace", t.trace.into()),
+                        ("worker", cfg.id.into()),
+                        ("level", t.level.into()),
+                        ("tiles", t.tiles.len().into()),
+                    ],
+                );
                 // Non-finite probabilities cannot survive the JSON wire
                 // (they serialize as null and the leader would drop the
                 // whole frame, stranding the run). Send a short reply
@@ -809,6 +909,7 @@ fn run_exec_worker(cfg: ExecWorkerConfig, listener: TcpListener, analyzer: Arc<d
                     key: t.key,
                     worker: cfg.id,
                     probs,
+                    trace: t.trace,
                 };
                 while send_to(cfg.leader_port, &msg).is_err() {
                     if shared.done.load(Ordering::Acquire) {
@@ -832,6 +933,18 @@ fn run_exec_worker(cfg: ExecWorkerConfig, listener: TcpListener, analyzer: Arc<d
                         }
                     };
                     if let Ok((Some(task), _)) = request_chunk_steal(cfg.ports[victim], cfg.id) {
+                        obs::global_metrics().counter("cluster.chunks_stolen").inc();
+                        obs::event(
+                            Level::Debug,
+                            "cluster",
+                            "chunk_stolen",
+                            &[
+                                ("key", task.key.into()),
+                                ("trace", task.trace.into()),
+                                ("worker", cfg.id.into()),
+                                ("victim", victim.into()),
+                            ],
+                        );
                         // Tell the leader the chunk moved, so a future
                         // death of *this* worker resubmits it (§10).
                         let _ = send_to(
@@ -839,6 +952,7 @@ fn run_exec_worker(cfg: ExecWorkerConfig, listener: TcpListener, analyzer: Arc<d
                             &Msg::ChunkMoved {
                                 key: task.key,
                                 worker: cfg.id,
+                                trace: task.trace,
                             },
                         );
                         shared.queue.lock().unwrap().push_back(task);
@@ -948,7 +1062,17 @@ pub fn run_standalone_worker(
         other => anyhow::bail!("unexpected handshake reply {other:?}"),
     };
     drop(stream);
-    eprintln!("[worker {id}] joined leader at {addr} (listening on :{my_port})");
+    obs::set_proc_name(&format!("worker-{id}"));
+    obs::event(
+        Level::Info,
+        "cluster",
+        "worker_ready",
+        &[
+            ("worker", id.into()),
+            ("port", my_port.into()),
+            ("leader", addr.into()),
+        ],
+    );
     let cfg = ExecWorkerConfig {
         id,
         ports: Vec::new(), // external workers do not steal

@@ -33,6 +33,11 @@ pub struct ChunkTask {
     /// thieves on the list are refused the chunk, so a flaky node is not
     /// immediately re-handed the same work (DESIGN.md §10).
     pub exclude: Vec<usize>,
+    /// Trace id assigned by the leader when the chunk is first dealt and
+    /// carried unchanged through steals and resubmissions, so every
+    /// process's trace events for this chunk share one id (DESIGN.md
+    /// §12). `0` in frames from pre-tracing peers.
+    pub trace: u64,
 }
 
 #[derive(Debug, Clone, PartialEq)]
@@ -66,6 +71,9 @@ pub enum Msg {
         key: u64,
         worker: usize,
         probs: Vec<f32>,
+        /// The chunk's trace id, echoed from [`ChunkTask::trace`] (`0`
+        /// from pre-tracing workers).
+        trace: u64,
     },
     /// Worker → worker: give me a whole chunk (backend steal unit).
     ChunkSteal { thief: usize },
@@ -107,6 +115,9 @@ pub enum Msg {
         key: u64,
         /// The thief's worker id (the chunk's new holder).
         worker: usize,
+        /// The chunk's trace id, echoed from [`ChunkTask::trace`] (`0`
+        /// from pre-tracing thieves).
+        trace: u64,
     },
 }
 
@@ -140,6 +151,7 @@ fn chunk_json(c: &ChunkTask) -> Json {
             "exclude",
             Json::Arr(c.exclude.iter().map(|&w| Json::Num(w as f64)).collect()),
         )
+        .set("trace", c.trace)
 }
 
 fn chunk_from(v: &Json) -> Result<ChunkTask> {
@@ -161,6 +173,11 @@ fn chunk_from(v: &Json) -> Result<ChunkTask> {
                 .map(|w| w.as_usize())
                 .collect::<Result<Vec<_>, _>>()?,
             None => Vec::new(),
+        },
+        // Absent in pre-tracing frames: the null trace id.
+        trace: match v.opt("trace") {
+            Some(t) => t.as_u64()?,
+            None => 0,
         },
     })
 }
@@ -197,10 +214,16 @@ impl Msg {
                 .set("tree", tree.to_json()),
             Msg::Shutdown => Json::obj().set("t", "shutdown"),
             Msg::Chunk(c) => Json::obj().set("t", "chunk").set("chunk", chunk_json(c)),
-            Msg::ChunkDone { key, worker, probs } => Json::obj()
+            Msg::ChunkDone {
+                key,
+                worker,
+                probs,
+                trace,
+            } => Json::obj()
                 .set("t", "chunk_done")
                 .set("key", *key)
                 .set("worker", *worker)
+                .set("trace", *trace)
                 .set(
                     "probs",
                     Json::Arr(probs.iter().map(|&p| Json::Num(p as f64)).collect()),
@@ -223,10 +246,11 @@ impl Msg {
             Msg::Kill => Json::obj().set("t", "kill"),
             Msg::Hello { port } => Json::obj().set("t", "hello").set("port", *port as u64),
             Msg::Welcome { id } => Json::obj().set("t", "welcome").set("id", *id),
-            Msg::ChunkMoved { key, worker } => Json::obj()
+            Msg::ChunkMoved { key, worker, trace } => Json::obj()
                 .set("t", "chunk_moved")
                 .set("key", *key)
-                .set("worker", *worker),
+                .set("worker", *worker)
+                .set("trace", *trace),
         }
     }
 
@@ -266,6 +290,10 @@ impl Msg {
                     .iter()
                     .map(|p| Ok(p.as_f64()? as f32))
                     .collect::<Result<Vec<f32>>>()?,
+                trace: match v.opt("trace") {
+                    Some(t) => t.as_u64()?,
+                    None => 0,
+                },
             },
             "chunk_steal" => Msg::ChunkSteal {
                 thief: v.get("thief")?.as_usize()?,
@@ -289,6 +317,10 @@ impl Msg {
             "chunk_moved" => Msg::ChunkMoved {
                 key: v.get("key")?.as_u64()?,
                 worker: v.get("worker")?.as_usize()?,
+                trace: match v.opt("trace") {
+                    Some(t) => t.as_u64()?,
+                    None => 0,
+                },
             },
             other => return Err(anyhow!("unknown message type {other:?}")),
         })
@@ -373,6 +405,7 @@ mod tests {
             level: 2,
             tiles: vec![TileId::new(2, 1, 0), TileId::new(2, 3, 1)],
             exclude: vec![0, 4],
+            trace: 91,
         };
         let msgs = vec![
             Msg::Chunk(task.clone()),
@@ -380,6 +413,7 @@ mod tests {
                 key: task.key,
                 worker: 1,
                 probs: vec![0.25, 0.75],
+                trace: 91,
             },
             Msg::ChunkSteal { thief: 2 },
             Msg::ChunkStealReply {
@@ -409,6 +443,7 @@ mod tests {
             Msg::ChunkMoved {
                 key: (3u64 << 21) | 9,
                 worker: 2,
+                trace: 17,
             },
         ];
         for m in msgs {
@@ -427,12 +462,36 @@ mod tests {
             level: 1,
             tiles: vec![TileId::new(1, 0, 0)],
             exclude: Vec::new(),
+            trace: 0,
         };
         let mut j = chunk_json(&task).as_obj().unwrap().clone();
         j.remove("exclude");
+        j.remove("trace");
         let wrapped = Json::obj().set("t", "chunk").set("chunk", Json::Obj(j));
         match Msg::from_json(&wrapped).unwrap() {
             Msg::Chunk(back) => assert_eq!(back, task),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn frames_without_trace_field_parse_as_trace_zero() {
+        // Pre-tracing peers omit the trace id everywhere it can ride.
+        let done = Json::parse(
+            r#"{"t":"chunk_done","key":4,"worker":1,"probs":[0.5]}"#,
+        )
+        .unwrap();
+        match Msg::from_json(&done).unwrap() {
+            Msg::ChunkDone { trace, key, .. } => {
+                assert_eq!((key, trace), (4, 0));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        let moved = Json::parse(r#"{"t":"chunk_moved","key":9,"worker":2}"#).unwrap();
+        match Msg::from_json(&moved).unwrap() {
+            Msg::ChunkMoved { trace, key, .. } => {
+                assert_eq!((key, trace), (9, 0));
+            }
             other => panic!("unexpected {other:?}"),
         }
     }

@@ -49,6 +49,10 @@ pub mod wsi;
 pub mod metrics;
 /// Tile analyzers: the calibrated oracle, the PJRT model, delay shims.
 pub mod model;
+/// Observability: structured tracing with per-process JSONL sinks, the
+/// leveled stderr logger, the global metrics registry, the Chrome
+/// trace-event merger and the `pyramidai bench` harness.
+pub mod obs;
 /// Columnar per-slide prediction caches for post-mortem replay (§4.3):
 /// dense level grids in memory, binary shards + budgeted LRU store on
 /// disk.

@@ -14,8 +14,17 @@
 //! pyramidai simulate  --workers 1,2,4,8,12 [--model oracle]
 //! pyramidai cluster   --workers 4 [--steal=true] [--per-tile-ms 20]
 //! pyramidai worker    --connect 127.0.0.1:PORT [--model auto]
+//! pyramidai trace     --dir traces/ [--out trace_chrome.json] [--timelines]
+//! pyramidai bench     [--smoke] [--out BENCH_1.json] [--label 1]
 //! pyramidai report    [--model auto] [--fast=true]
 //! ```
+//!
+//! Every subcommand also honors the global observability flags
+//! `--log-level error|warn|info|debug|trace` (stderr verbosity, default
+//! `info` or `PYRAMIDAI_LOG`) and `--trace-out DIR` (write this process's
+//! structured events to `DIR/trace-<role>-<pid>.jsonl`; `serve
+//! --external-workers N` forwards the flag to the worker processes so one
+//! directory collects the whole cluster's timeline).
 
 use std::path::Path;
 use std::time::Duration;
@@ -25,6 +34,7 @@ use anyhow::{anyhow, Result};
 use pyramidai::cli::Args;
 use pyramidai::experiments::{self, Ctx, CtxConfig, ModelKind};
 use pyramidai::harness::print_table;
+use pyramidai::obs;
 use pyramidai::metrics::retention::retention_and_speedup;
 use pyramidai::predcache::{PredCache, PredSource, ShardedPredStore, SlidePredictions};
 use pyramidai::pyramid::driver::{run_pyramidal, run_reference};
@@ -39,14 +49,39 @@ fn main() {
     let code = match dispatch(&args) {
         Ok(()) => 0,
         Err(e) => {
-            eprintln!("error: {e:#}");
+            obs::event(
+                obs::Level::Error,
+                "cli",
+                "fatal",
+                &[("err", format!("{e:#}").into())],
+            );
             2
         }
     };
+    obs::flush_trace();
     std::process::exit(code);
 }
 
 fn dispatch(args: &Args) -> Result<()> {
+    // Global observability flags, honored before any subcommand runs:
+    // --log-level gates the stderr logger, --trace-out installs this
+    // process's JSONL trace sink (named after the subcommand role).
+    if let Some(s) = args.get("log-level") {
+        let level = obs::Level::parse(s).ok_or_else(|| {
+            anyhow!("unknown --log-level {s:?} (error|warn|info|debug|trace)")
+        })?;
+        obs::set_log_level(level);
+    }
+    if let Some(dir) = args.get("trace-out") {
+        let role = args.subcommand.as_deref().unwrap_or("main");
+        let path = obs::init_trace_dir(Path::new(dir), role)?;
+        obs::event(
+            obs::Level::Info,
+            "cli",
+            "trace_sink",
+            &[("path", path.display().to_string().into())],
+        );
+    }
     match args.subcommand.as_deref() {
         Some("gen") => cmd_gen(args),
         Some("predict") => cmd_predict(args),
@@ -56,6 +91,8 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("cluster") => cmd_cluster(args),
         Some("worker") => cmd_worker(args),
         Some("serve") => cmd_serve(args),
+        Some("trace") => cmd_trace(args),
+        Some("bench") => cmd_bench(args),
         Some("report") => cmd_report(args),
         Some(other) => Err(anyhow!("unknown subcommand {other:?}\n{USAGE}")),
         None => {
@@ -96,7 +133,23 @@ subcommands:
                                                    --external-workers --heartbeat-ms
                                                    --cache-dir DIR --cache-budget-mb N
                                                    for streamed shard replay)
-  report    regenerate every paper table/figure   (--model --fast)";
+  trace     merge --trace-out JSONL shards        (--dir DIR --out FILE
+                                                   --check --timelines; writes a
+                                                   Chrome trace-event file and
+                                                   prints per-event latency and
+                                                   per-chunk cross-process
+                                                   timelines)
+  bench     measured perf record                  (--smoke --out FILE --label N;
+                                                   writes BENCH_<n>.json with
+                                                   service + predcache throughput
+                                                   and the metrics snapshot)
+  report    regenerate every paper table/figure   (--model --fast)
+
+global flags: --log-level error|warn|info|debug|trace   (default info, or
+              PYRAMIDAI_LOG)
+              --trace-out DIR   write structured events to
+              DIR/trace-<role>-<pid>.jsonl (serve forwards the flag to
+              external workers)";
 
 fn model_kind(args: &Args) -> Result<ModelKind> {
     let s = args.str_or("model", "auto");
@@ -333,9 +386,20 @@ fn cmd_worker(args: &Args) -> Result<()> {
     let analyzer_seed = args.u64_or("analyzer-seed", 7)?;
     args.finish()?;
     let (analyzer, name) = experiments::ctx::make_analyzer(model, analyzer_seed)?;
-    eprintln!("worker process ({name}) connecting to {connect}…");
+    obs::event(
+        obs::Level::Info,
+        "cli",
+        "worker_connecting",
+        &[("model", name.into()), ("leader", connect.as_str().into())],
+    );
     let id = pyramidai::cluster::run_standalone_worker(&connect, analyzer, analyzer_seed)?;
-    eprintln!("worker {id} shut down cleanly");
+    obs::event(
+        obs::Level::Info,
+        "cli",
+        "worker_exit",
+        &[("worker", id.into())],
+    );
+    obs::flush_trace();
     Ok(())
 }
 
@@ -395,23 +459,36 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
     let exec = match backend.as_str() {
         "pool" | "replay" => ExecMode::Pool,
-        "cluster" => ExecMode::Cluster(ClusterExecConfig {
-            workers,
-            steal: true,
-            seed,
-            heartbeat: Duration::from_millis(heartbeat_ms.max(1)),
-            external_workers,
+        "cluster" => {
             // External worker processes must build the *same* analyzer
             // as the leader (same resolved model, same seed) or their
             // chunks would silently produce a mixed tree.
-            external_args: vec![
+            let mut external_args = vec![
                 "--model".to_string(),
                 name.to_string(),
                 "--analyzer-seed".to_string(),
                 "7".to_string(),
-            ],
-            ..ClusterExecConfig::default()
-        }),
+            ];
+            // Forward the observability flags so every worker process
+            // writes its own JSONL shard into the same trace directory.
+            if let Some(dir) = args.get("trace-out") {
+                external_args.push("--trace-out".to_string());
+                external_args.push(dir.to_string());
+            }
+            if let Some(level) = args.get("log-level") {
+                external_args.push("--log-level".to_string());
+                external_args.push(level.to_string());
+            }
+            ExecMode::Cluster(ClusterExecConfig {
+                workers,
+                steal: true,
+                seed,
+                heartbeat: Duration::from_millis(heartbeat_ms.max(1)),
+                external_workers,
+                external_args,
+                ..ClusterExecConfig::default()
+            })
+        }
         other => return Err(anyhow!("unknown --backend {other:?} (pool|cluster|replay)")),
     };
 
@@ -561,6 +638,94 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if report.metrics.expired > 0 && deadline_ms == 0 {
         return Err(anyhow!("{} jobs expired without deadlines", report.metrics.expired));
     }
+    Ok(())
+}
+
+fn cmd_trace(args: &Args) -> Result<()> {
+    use pyramidai::obs::chrome;
+    let dir = args.require("dir")?;
+    let out = args.str_or("out", "trace_chrome.json");
+    let check = args.bool("check");
+    let timelines = args.bool("timelines");
+    args.finish()?;
+    // merge_dir validates every record against the JSONL schema, so
+    // --check needs no extra pass — reaching this line is the proof.
+    let records = chrome::merge_dir(Path::new(&dir))?;
+    println!("merged {} trace records from {dir}", records.len());
+    if check {
+        println!("schema check passed");
+    }
+    let doc = chrome::to_chrome_trace(&records);
+    std::fs::write(&out, doc.to_string())?;
+    println!("wrote Chrome trace-event file to {out} (open in Perfetto or chrome://tracing)");
+    let summary = chrome::summarize(&records);
+    let rows: Vec<Vec<String>> = summary
+        .iter()
+        .map(|s| {
+            let (p50, p95) = if s.durs_us.is_empty() {
+                ("-".to_string(), "-".to_string())
+            } else {
+                (
+                    format!("{:.0}", s.dur_percentile(50.0)),
+                    format!("{:.0}", s.dur_percentile(95.0)),
+                )
+            };
+            vec![format!("{}.{}", s.sub, s.ev), s.count.to_string(), p50, p95]
+        })
+        .collect();
+    print_table(
+        "trace summary",
+        &["event", "count", "p50 µs", "p95 µs"],
+        &rows,
+    );
+    if timelines {
+        for (key, steps) in chrome::chunk_timelines(&records) {
+            let path: Vec<String> = steps
+                .iter()
+                .map(|s| match s.worker {
+                    Some(w) => format!("{}[{}/w{w}]", s.ev, s.proc),
+                    None => format!("{}[{}]", s.ev, s.proc),
+                })
+                .collect();
+            println!("chunk {key}: {}", path.join(" -> "));
+        }
+    }
+    Ok(())
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    use pyramidai::obs::bench::{
+        next_bench_label, run_benches, validate_bench_json, BenchConfig,
+    };
+    let smoke = args.bool("smoke");
+    let out = args.get("out").map(String::from);
+    let label = match args.get("label") {
+        Some(_) => args.u64_or("label", 0)?,
+        None => next_bench_label(Path::new(".")),
+    };
+    args.finish()?;
+    println!(
+        "running {} benches (service_e2e + predcache_io)…",
+        if smoke { "smoke" } else { "full" }
+    );
+    let doc = run_benches(BenchConfig { smoke }, label)?;
+    validate_bench_json(&doc).map_err(|e| anyhow!("bench self-validation failed: {e}"))?;
+    let svc = doc.get("benches")?.get("service_e2e")?;
+    println!(
+        "service_e2e: {:.0} tiles/s over {:.2}s wall ({} jobs)",
+        svc.get("tiles_per_sec")?.as_f64()?,
+        svc.get("wall_s")?.as_f64()?,
+        svc.get("jobs")?.as_u64()?,
+    );
+    let pc = doc.get("benches")?.get("predcache_io")?;
+    println!(
+        "predcache_io: save {:.1} MB/s, load {:.1} MB/s",
+        pc.get("save_mb_per_s")?.as_f64()?,
+        pc.get("load_mb_per_s")?.as_f64()?,
+    );
+    let path = out.unwrap_or_else(|| format!("BENCH_{label}.json"));
+    std::fs::write(&path, doc.to_pretty())?;
+    println!("wrote {path}");
     Ok(())
 }
 

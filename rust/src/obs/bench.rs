@@ -1,0 +1,269 @@
+//! The `pyramidai bench` harness: run the end-to-end service bench and
+//! the predcache I/O bench off the shared metrics registry and produce a
+//! `BENCH_<n>.json` record for the repo's perf trajectory.
+//!
+//! Keeping the harness in the library (instead of a `benches/` binary)
+//! lets CI and the CLI run the exact same measurement with `--smoke`
+//! sizing, and lets the output embed the live [`super::metrics`]
+//! snapshot so regressions show up per-subsystem, not just end-to-end.
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::model::oracle::OracleAnalyzer;
+use crate::model::{Analyzer, DelayAnalyzer};
+use crate::obs::metrics;
+use crate::predcache::{PredCache, ShardedPredStore};
+use crate::pyramid::tree::Thresholds;
+use crate::service::{AnalysisService, JobSource, JobSpec, PolicySpec, ServiceConfig};
+use crate::slide::pyramid::Slide;
+use crate::synth::slide_gen::{gen_slide_set, DatasetParams};
+use crate::util::json::Json;
+use crate::util::stats::percentile;
+
+/// Sizing knobs for one bench run.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchConfig {
+    /// Smoke mode: seconds-scale sizes for CI gating; full mode sizes
+    /// measure meaningfully on a laptop-class machine.
+    pub smoke: bool,
+}
+
+fn dataset(smoke: bool) -> DatasetParams {
+    if smoke {
+        DatasetParams {
+            tiles_x: 16,
+            tiles_y: 8,
+            levels: 3,
+            tile_px: 64,
+        }
+    } else {
+        DatasetParams {
+            tiles_x: 32,
+            tiles_y: 16,
+            levels: 3,
+            tile_px: 64,
+        }
+    }
+}
+
+/// End-to-end service throughput: the same synthetic stream as the
+/// `service_throughput` cargo bench (delay-per-tile analyzer over a pool),
+/// reported as tiles/s plus job-latency percentiles.
+pub fn bench_service_e2e(cfg: BenchConfig) -> Json {
+    let (jobs, workers, per_tile) = if cfg.smoke {
+        (3usize, 2usize, Duration::from_micros(200))
+    } else {
+        (9usize, 4usize, Duration::from_millis(2))
+    };
+    let analyzer: Arc<dyn Analyzer> =
+        Arc::new(DelayAnalyzer::new(OracleAnalyzer::new(1), per_tile));
+    let svc = AnalysisService::start(
+        analyzer,
+        ServiceConfig {
+            workers,
+            queue_capacity: jobs,
+            max_in_flight: 4,
+            batch: 4,
+            policy: PolicySpec::fifo(),
+            coalesce: true,
+            ..ServiceConfig::default()
+        },
+    );
+    let thr = Thresholds {
+        zoom: vec![0.5, 0.35, 0.35],
+    };
+    for spec in gen_slide_set("bench", jobs, 77, &dataset(cfg.smoke)) {
+        svc.submit(JobSpec::new(JobSource::Spec(spec), thr.clone()))
+            .expect("queue sized for all jobs");
+    }
+    let report = svc.shutdown();
+    assert_eq!(report.metrics.completed, jobs, "all bench jobs must complete");
+    let job_ms: Vec<f64> = report
+        .results
+        .iter()
+        .map(|r| r.run_time.as_secs_f64() * 1e3)
+        .collect();
+    let chunk = report.sched_metrics.histogram("sched.chunk_latency_us");
+    Json::obj()
+        .set("jobs", jobs as f64)
+        .set("workers", workers as f64)
+        .set("tiles", report.metrics.tiles as f64)
+        .set("wall_s", report.metrics.wall.as_secs_f64())
+        .set("tiles_per_sec", report.metrics.tiles_per_sec())
+        .set("job_ms_p50", percentile(&job_ms, 50.0))
+        .set("job_ms_p95", percentile(&job_ms, 95.0))
+        .set("chunks", chunk.count as f64)
+        .set(
+            "chunk_us_p50",
+            if chunk.count == 0 { 0.0 } else { chunk.percentile(50.0) },
+        )
+        .set(
+            "chunk_us_p95",
+            if chunk.count == 0 { 0.0 } else { chunk.percentile(95.0) },
+        )
+}
+
+/// Predcache shard I/O: collect a synthetic prediction set, time
+/// `save_sharded`, then stream every slide back through a zero-budget
+/// store (every access decodes off disk), reporting bytes/s and decode
+/// percentiles off the global registry.
+pub fn bench_predcache_io(cfg: BenchConfig) -> Result<Json> {
+    let (slides, rounds) = if cfg.smoke { (3usize, 1usize) } else { (10usize, 3usize) };
+    let set: Vec<Slide> = gen_slide_set("benchpc", slides, 91, &dataset(cfg.smoke))
+        .into_iter()
+        .map(Slide::from_spec)
+        .collect();
+    let cache = PredCache::collect_set(&set, &OracleAnalyzer::new(1), 16);
+    let dir = std::env::temp_dir().join(format!("pyramidai_bench_pc_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir)?;
+
+    let t0 = Instant::now();
+    crate::predcache::store::save_sharded(&cache, &dir, 2)?;
+    let save_s = t0.elapsed().as_secs_f64();
+    let bytes: u64 = std::fs::read_dir(&dir)?
+        .filter_map(|e| e.ok())
+        .filter_map(|e| e.metadata().ok())
+        .map(|m| m.len())
+        .sum();
+
+    // Budget 0 ⇒ at most one shard resident: every slide switch streams
+    // a shard back off disk, exercising the decode path `rounds` times.
+    let store = ShardedPredStore::open_with_budget(&dir, Some(0))?;
+    let t1 = Instant::now();
+    for _ in 0..rounds {
+        for i in 0..store.len() {
+            let _ = store.slide(i)?;
+        }
+    }
+    let load_s = t1.elapsed().as_secs_f64();
+    let stats = store.stats();
+    let decode = metrics::global().histogram("predcache.decode_us").snapshot();
+    // With a zero budget each full pass streams every shard once, so the
+    // bytes pulled off disk are ≈ the shard set size per round.
+    let loaded_bytes = bytes as f64 * rounds as f64;
+    std::fs::remove_dir_all(&dir).ok();
+    Ok(Json::obj()
+        .set("slides", slides as f64)
+        .set("shard_bytes", bytes as f64)
+        .set("save_s", save_s)
+        .set("save_mb_per_s", bytes as f64 / 1e6 / save_s.max(1e-9))
+        .set("load_s", load_s)
+        .set("load_mb_per_s", loaded_bytes / 1e6 / load_s.max(1e-9))
+        .set("loads", stats.loads as f64)
+        .set("evictions", stats.evictions as f64)
+        .set("decode_count", decode.count as f64)
+        .set(
+            "decode_us_p50",
+            if decode.count == 0 { 0.0 } else { decode.percentile(50.0) },
+        )
+        .set(
+            "decode_us_p95",
+            if decode.count == 0 { 0.0 } else { decode.percentile(95.0) },
+        ))
+}
+
+/// Run every bench and assemble the `BENCH_<n>.json` document, embedding
+/// the end-of-run global metrics snapshot.
+pub fn run_benches(cfg: BenchConfig, label: u64) -> Result<Json> {
+    let service = bench_service_e2e(cfg);
+    let predcache = bench_predcache_io(cfg)?;
+    Ok(Json::obj()
+        .set("schema", "pyramidai-bench-v1")
+        .set("label", label as f64)
+        .set("smoke", cfg.smoke)
+        .set(
+            "benches",
+            Json::obj().set("service_e2e", service).set("predcache_io", predcache),
+        )
+        .set("metrics", metrics::global().snapshot().to_json()))
+}
+
+/// Validate a `BENCH_<n>.json` document (CI gate for the checked-in
+/// trajectory): schema tag, label, and the required throughput/latency
+/// keys of both benches.
+pub fn validate_bench_json(doc: &Json) -> std::result::Result<(), String> {
+    if doc.opt("schema").and_then(|s| s.as_str().ok().map(str::to_string))
+        != Some("pyramidai-bench-v1".to_string())
+    {
+        return Err("missing or wrong schema tag".into());
+    }
+    doc.opt("label")
+        .and_then(|l| l.as_u64().ok())
+        .ok_or("missing label")?;
+    let benches = doc.opt("benches").ok_or("missing benches")?;
+    let svc = benches.opt("service_e2e").ok_or("missing benches.service_e2e")?;
+    for k in ["tiles_per_sec", "wall_s", "job_ms_p50", "job_ms_p95"] {
+        if svc.opt(k).and_then(|v| v.as_f64().ok()).is_none() {
+            return Err(format!("service_e2e missing {k}"));
+        }
+    }
+    let pc = benches.opt("predcache_io").ok_or("missing benches.predcache_io")?;
+    for k in ["load_mb_per_s", "save_s", "decode_us_p50", "decode_us_p95"] {
+        if pc.opt(k).and_then(|v| v.as_f64().ok()).is_none() {
+            return Err(format!("predcache_io missing {k}"));
+        }
+    }
+    Ok(())
+}
+
+/// Next free label in `dir`: one past the highest existing
+/// `BENCH_<n>.json`, or 0 when the trajectory is empty.
+pub fn next_bench_label(dir: &Path) -> u64 {
+    let mut next = 0u64;
+    if let Ok(entries) = std::fs::read_dir(dir) {
+        for e in entries.filter_map(|e| e.ok()) {
+            let name = e.file_name();
+            let name = name.to_string_lossy();
+            if let Some(n) = name
+                .strip_prefix("BENCH_")
+                .and_then(|s| s.strip_suffix(".json"))
+                .and_then(|s| s.parse::<u64>().ok())
+            {
+                next = next.max(n + 1);
+            }
+        }
+    }
+    next
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoke_bench_produces_valid_doc() {
+        let doc = run_benches(BenchConfig { smoke: true }, 3).unwrap();
+        validate_bench_json(&doc).expect("smoke bench doc validates");
+        assert_eq!(doc.get("label").unwrap().as_u64().unwrap(), 3);
+        let tps = doc
+            .get("benches")
+            .unwrap()
+            .get("service_e2e")
+            .unwrap()
+            .get("tiles_per_sec")
+            .unwrap()
+            .as_f64()
+            .unwrap();
+        assert!(tps > 0.0);
+        // Round-trip through text like the checked-in file will.
+        let reparsed = Json::parse(&doc.to_pretty()).unwrap();
+        validate_bench_json(&reparsed).unwrap();
+    }
+
+    #[test]
+    fn label_scan_picks_next_free() {
+        let dir = std::env::temp_dir().join(format!("pyr_bench_label_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        assert_eq!(next_bench_label(&dir), 0);
+        std::fs::write(dir.join("BENCH_0.json"), "{}").unwrap();
+        std::fs::write(dir.join("BENCH_4.json"), "{}").unwrap();
+        std::fs::write(dir.join("BENCH_x.json"), "{}").unwrap();
+        assert_eq!(next_bench_label(&dir), 5);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,303 @@
+//! Merge per-process JSONL trace files into a Chrome trace-event file
+//! (loadable in Perfetto / `chrome://tracing`) plus text summaries.
+//!
+//! Input: every `trace-*.jsonl` under a directory, one JSON record per
+//! line in the [`super::trace::TraceRecord`] schema. Records are merged
+//! and sorted by their wall-anchored timestamps, so events from the
+//! leader and external worker processes interleave correctly on one
+//! timeline.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+use crate::util::stats::percentile;
+
+/// Required keys of one JSONL trace record; [`validate_record`] enforces
+/// them, and CI round-trips a real run through this check.
+pub const REQUIRED_KEYS: &[&str] = &["ts", "pid", "tid", "proc", "lvl", "sub", "ev", "f"];
+
+/// Check one parsed JSONL record against the schema. Returns a
+/// description of the first violation, if any.
+pub fn validate_record(rec: &Json) -> std::result::Result<(), String> {
+    for k in REQUIRED_KEYS {
+        if rec.opt(k).is_none() {
+            return Err(format!("missing key {k:?}"));
+        }
+    }
+    for k in ["ts", "pid", "tid"] {
+        if rec.get(k).unwrap().as_u64().is_err() {
+            return Err(format!("key {k:?} is not an unsigned integer"));
+        }
+    }
+    for k in ["proc", "lvl", "sub", "ev"] {
+        if rec.get(k).unwrap().as_str().is_err() {
+            return Err(format!("key {k:?} is not a string"));
+        }
+    }
+    if rec.get("f").unwrap().as_obj().is_err() {
+        return Err("key \"f\" is not an object".to_string());
+    }
+    Ok(())
+}
+
+/// Load and merge every `trace-*.jsonl` under `dir`, sorted by
+/// timestamp. Fails on unparseable lines or schema violations (line
+/// numbers included), so it doubles as the CI validator.
+pub fn merge_dir(dir: &Path) -> Result<Vec<Json>> {
+    let mut records = Vec::new();
+    let mut files = 0usize;
+    for entry in std::fs::read_dir(dir).with_context(|| format!("read {}", dir.display()))? {
+        let path = entry?.path();
+        let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("");
+        if !(name.starts_with("trace-") && name.ends_with(".jsonl")) {
+            continue;
+        }
+        files += 1;
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {}", path.display()))?;
+        for (i, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let rec = Json::parse(line)
+                .with_context(|| format!("{}:{}", path.display(), i + 1))?;
+            validate_record(&rec)
+                .map_err(|e| anyhow::anyhow!("{}:{}: {e}", path.display(), i + 1))?;
+            records.push(rec);
+        }
+    }
+    anyhow::ensure!(files > 0, "no trace-*.jsonl files under {}", dir.display());
+    records.sort_by(|a, b| {
+        let ta = a.get("ts").unwrap().as_u64().unwrap();
+        let tb = b.get("ts").unwrap().as_u64().unwrap();
+        ta.cmp(&tb)
+    });
+    Ok(records)
+}
+
+/// Convert merged records to the Chrome trace-event JSON object
+/// (`{"traceEvents": [...]}`). Spans (`dur` set) become complete `"X"`
+/// events; the rest become instant `"i"` events. Per-process metadata
+/// events name each pid after its recorded role.
+pub fn to_chrome_trace(records: &[Json]) -> Json {
+    let mut events = Vec::new();
+    let mut proc_names: BTreeMap<u64, String> = BTreeMap::new();
+    for rec in records {
+        let pid = rec.get("pid").unwrap().as_u64().unwrap();
+        let proc = rec.get("proc").unwrap().as_str().unwrap();
+        proc_names.entry(pid).or_insert_with(|| proc.to_string());
+        let sub = rec.get("sub").unwrap().as_str().unwrap();
+        let ev = rec.get("ev").unwrap().as_str().unwrap();
+        let mut e = Json::obj()
+            .set("name", format!("{sub}.{ev}"))
+            .set("cat", sub)
+            .set("ts", rec.get("ts").unwrap().as_f64().unwrap())
+            .set("pid", pid as f64)
+            .set("tid", rec.get("tid").unwrap().as_f64().unwrap())
+            .set("args", rec.get("f").unwrap().clone());
+        e = match rec.opt("dur") {
+            Some(d) => e
+                .set("ph", "X")
+                .set("dur", d.as_f64().unwrap_or(0.0))
+                // "X" events describe [ts-dur, ts] here: records are
+                // stamped at span *end*, Chrome wants the start.
+                .set(
+                    "ts",
+                    rec.get("ts").unwrap().as_f64().unwrap() - d.as_f64().unwrap_or(0.0),
+                ),
+            None => e.set("ph", "i").set("s", "t"),
+        };
+        events.push(e);
+    }
+    for (pid, name) in proc_names {
+        events.push(
+            Json::obj()
+                .set("name", "process_name")
+                .set("ph", "M")
+                .set("pid", pid as f64)
+                .set("args", Json::obj().set("name", name)),
+        );
+    }
+    Json::obj()
+        .set("traceEvents", Json::Arr(events))
+        .set("displayTimeUnit", "ms")
+}
+
+/// Per-(subsystem, event) aggregate over merged records.
+#[derive(Debug, Clone)]
+pub struct EventSummary {
+    /// `"cluster"`, `"sched"`, ...
+    pub sub: String,
+    /// Event name.
+    pub ev: String,
+    /// Occurrences.
+    pub count: usize,
+    /// Span durations in µs (empty for instant events).
+    pub durs_us: Vec<f64>,
+}
+
+impl EventSummary {
+    /// p-th percentile of span durations (NaN when instant-only).
+    pub fn dur_percentile(&self, p: f64) -> f64 {
+        percentile(&self.durs_us, p)
+    }
+}
+
+/// Aggregate merged records per (subsystem, event), sorted by subsystem
+/// then event name.
+pub fn summarize(records: &[Json]) -> Vec<EventSummary> {
+    let mut map: BTreeMap<(String, String), EventSummary> = BTreeMap::new();
+    for rec in records {
+        let sub = rec.get("sub").unwrap().as_str().unwrap().to_string();
+        let ev = rec.get("ev").unwrap().as_str().unwrap().to_string();
+        let entry = map
+            .entry((sub.clone(), ev.clone()))
+            .or_insert_with(|| EventSummary {
+                sub,
+                ev,
+                count: 0,
+                durs_us: Vec::new(),
+            });
+        entry.count += 1;
+        if let Some(d) = rec.opt("dur") {
+            entry.durs_us.push(d.as_f64().unwrap_or(0.0));
+        }
+    }
+    map.into_values().collect()
+}
+
+/// One step of a chunk's cross-process life.
+#[derive(Debug, Clone)]
+pub struct TimelineStep {
+    /// Wall-anchored µs timestamp.
+    pub ts_us: u64,
+    /// Role of the emitting process.
+    pub proc: String,
+    /// Event name (`chunk_dealt`, `chunk_resubmitted`, `chunk_done`, ...).
+    pub ev: String,
+    /// Worker id involved, when the record carried one.
+    pub worker: Option<u64>,
+}
+
+/// Reconstruct per-chunk timelines: every record whose fields carry a
+/// `key` (the chunk routing key), grouped by key, in timestamp order.
+pub fn chunk_timelines(records: &[Json]) -> BTreeMap<u64, Vec<TimelineStep>> {
+    let mut out: BTreeMap<u64, Vec<TimelineStep>> = BTreeMap::new();
+    for rec in records {
+        let f = rec.get("f").unwrap();
+        let Some(key) = f.opt("key").and_then(|k| k.as_u64().ok()) else {
+            continue;
+        };
+        out.entry(key).or_default().push(TimelineStep {
+            ts_us: rec.get("ts").unwrap().as_u64().unwrap(),
+            proc: rec.get("proc").unwrap().as_str().unwrap().to_string(),
+            ev: rec.get("ev").unwrap().as_str().unwrap().to_string(),
+            worker: f.opt("worker").and_then(|w| w.as_u64().ok()),
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::log::Level;
+    use crate::obs::trace::{FieldVal, TraceRecord};
+
+    fn rec(ts: u64, ev: &'static str, dur: Option<u64>, key: Option<u64>) -> Json {
+        let mut fields: Vec<(&'static str, FieldVal)> = Vec::new();
+        if let Some(k) = key {
+            fields.push(("key", FieldVal::U(k)));
+        }
+        TraceRecord {
+            ts_us: ts,
+            pid: 100,
+            tid: 1,
+            level: Level::Info,
+            sub: "cluster",
+            ev,
+            dur_us: dur,
+            fields,
+        }
+        .to_json()
+    }
+
+    #[test]
+    fn validate_accepts_real_records_and_rejects_broken_ones() {
+        let good = rec(5, "chunk_dealt", None, Some(9));
+        assert!(validate_record(&good).is_ok());
+        let bad = Json::obj().set("ts", 1.0);
+        assert!(validate_record(&bad).is_err());
+        let wrong_type = Json::parse(
+            r#"{"ts":"soon","pid":1,"tid":1,"proc":"x","lvl":"info","sub":"s","ev":"e","f":{}}"#,
+        )
+        .unwrap();
+        assert!(validate_record(&wrong_type).is_err());
+    }
+
+    #[test]
+    fn chrome_conversion_spans_and_instants() {
+        let records = vec![rec(100, "chunk_exec", Some(40), Some(1)), rec(10, "chunk_dealt", None, Some(1))];
+        let chrome = to_chrome_trace(&records);
+        let events = chrome.get("traceEvents").unwrap().as_arr().unwrap();
+        // 2 records + 1 process_name metadata event
+        assert_eq!(events.len(), 3);
+        let span = &events[0];
+        assert_eq!(span.get("ph").unwrap().as_str().unwrap(), "X");
+        // stamped at end ⇒ chrome ts is start = 100 - 40
+        assert_eq!(span.get("ts").unwrap().as_u64().unwrap(), 60);
+        assert_eq!(span.get("dur").unwrap().as_u64().unwrap(), 40);
+        let inst = &events[1];
+        assert_eq!(inst.get("ph").unwrap().as_str().unwrap(), "i");
+        let meta = &events[2];
+        assert_eq!(meta.get("ph").unwrap().as_str().unwrap(), "M");
+        // The whole thing must serialize to parseable JSON (round-trip).
+        let txt = chrome.to_string();
+        assert!(Json::parse(&txt).is_ok());
+    }
+
+    #[test]
+    fn merge_dir_sorts_across_files_and_validates() {
+        let dir = std::env::temp_dir().join(format!("pyr_obs_chrome_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("trace-leader-1.jsonl"),
+            format!("{}\n{}\n", rec(30, "b", None, None).to_string(), rec(10, "a", None, None).to_string()),
+        )
+        .unwrap();
+        std::fs::write(
+            dir.join("trace-worker-2.jsonl"),
+            format!("{}\n", rec(20, "m", None, None).to_string()),
+        )
+        .unwrap();
+        std::fs::write(dir.join("notes.txt"), "ignored").unwrap();
+        let merged = merge_dir(&dir).unwrap();
+        let evs: Vec<&str> = merged
+            .iter()
+            .map(|r| r.get("ev").unwrap().as_str().unwrap())
+            .collect();
+        assert_eq!(evs, vec!["a", "m", "b"]);
+        // A malformed line fails the merge with its location.
+        std::fs::write(dir.join("trace-bad-3.jsonl"), "{not json\n").unwrap();
+        assert!(merge_dir(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn timelines_group_by_chunk_key() {
+        let records = vec![
+            rec(10, "chunk_dealt", None, Some(7)),
+            rec(20, "chunk_dealt", None, Some(8)),
+            rec(30, "chunk_resubmitted", None, Some(7)),
+            rec(40, "chunk_done", None, Some(7)),
+            rec(5, "worker_joined", None, None),
+        ];
+        let tl = chunk_timelines(&records);
+        assert_eq!(tl.len(), 2);
+        let seven: Vec<&str> = tl[&7].iter().map(|s| s.ev.as_str()).collect();
+        assert_eq!(seven, vec!["chunk_dealt", "chunk_resubmitted", "chunk_done"]);
+    }
+}

@@ -1,0 +1,123 @@
+//! Leveled stderr logger behind `--log-level` / `PYRAMIDAI_LOG`.
+//!
+//! The level gate is a single relaxed atomic load, so disabled levels cost
+//! a branch. Records render as one line:
+//!
+//! ```text
+//! 12.345s  INFO cluster worker_joined worker=1 port=41233
+//! ```
+//!
+//! All structured emission goes through [`super::trace::event`]; this
+//! module owns only the level state and the stderr rendering.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+/// Log/trace severity, ordered from most to least severe.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    /// Unrecoverable or surprising failures.
+    Error = 0,
+    /// Faults the system absorbed (worker death, resubmission).
+    Warn = 1,
+    /// Lifecycle milestones (join, admit, done).
+    Info = 2,
+    /// Per-chunk decision detail.
+    Debug = 3,
+    /// Per-tile / per-message firehose.
+    Trace = 4,
+}
+
+impl Level {
+    /// Lower-case name, as accepted by `--log-level`.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+            Level::Trace => "trace",
+        }
+    }
+
+    /// Parse a level name (case-insensitive). `off` maps to `Error` with
+    /// the stderr sink disabled separately.
+    pub fn parse(s: &str) -> Option<Level> {
+        match s.to_ascii_lowercase().as_str() {
+            "error" => Some(Level::Error),
+            "warn" | "warning" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            "trace" => Some(Level::Trace),
+            _ => None,
+        }
+    }
+
+    fn from_u8(v: u8) -> Level {
+        match v {
+            0 => Level::Error,
+            1 => Level::Warn,
+            3 => Level::Debug,
+            4 => Level::Trace,
+            _ => Level::Info,
+        }
+    }
+}
+
+/// 255 = uninitialized (resolve from env on first use).
+static LOG_LEVEL: AtomicU8 = AtomicU8::new(255);
+
+fn env_default() -> Level {
+    static FROM_ENV: OnceLock<Level> = OnceLock::new();
+    *FROM_ENV.get_or_init(|| {
+        std::env::var("PYRAMIDAI_LOG")
+            .ok()
+            .and_then(|s| Level::parse(&s))
+            .unwrap_or(Level::Info)
+    })
+}
+
+/// Current stderr log level. Defaults to `PYRAMIDAI_LOG`, else `info`.
+pub fn log_level() -> Level {
+    let raw = LOG_LEVEL.load(Ordering::Relaxed);
+    if raw == 255 {
+        let l = env_default();
+        LOG_LEVEL.store(l as u8, Ordering::Relaxed);
+        l
+    } else {
+        Level::from_u8(raw)
+    }
+}
+
+/// Override the stderr log level (e.g. from `--log-level`).
+pub fn set_log_level(l: Level) {
+    LOG_LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+/// Would a record at `l` print to stderr right now?
+pub fn log_enabled(l: Level) -> bool {
+    l <= log_level()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip_and_aliases() {
+        for l in [Level::Error, Level::Warn, Level::Info, Level::Debug, Level::Trace] {
+            assert_eq!(Level::parse(l.as_str()), Some(l));
+            assert_eq!(Level::parse(&l.as_str().to_uppercase()), Some(l));
+        }
+        assert_eq!(Level::parse("warning"), Some(Level::Warn));
+        assert_eq!(Level::parse("nope"), None);
+    }
+
+    #[test]
+    fn severity_orders_error_lowest() {
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Warn < Level::Info);
+        assert!(Level::Info < Level::Debug);
+        assert!(Level::Debug < Level::Trace);
+    }
+}

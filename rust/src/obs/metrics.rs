@@ -1,0 +1,530 @@
+//! Global metrics registry: atomic counters, gauges and log-bucketed
+//! histograms, snapshotable mid-run.
+//!
+//! The registry is name-keyed (`"cluster.chunks_dealt"`) and get-or-create:
+//! any subsystem may ask for a handle and increment it without coordination.
+//! Handles are `Arc`s over plain atomics, so the hot path after the first
+//! lookup is a single `fetch_add` — hot loops should resolve handles once
+//! at construction time and keep them.
+//!
+//! Histograms are log-bucketed (16 sub-buckets per power of two, ≈4.5 %
+//! relative bucket width) so p50/p95/p99 can be estimated without storing
+//! samples; a histogram is ~8 KiB of atomics regardless of sample count.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::util::json::Json;
+
+/// Monotonically increasing event count.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    /// Add 1.
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Add `n`.
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Current total.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Instantaneous signed level (queue depth, resident bytes, ...).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    /// Set to an absolute value.
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    /// Add a (possibly negative) delta.
+    pub fn add(&self, d: i64) {
+        self.0.fetch_add(d, Ordering::Relaxed);
+    }
+
+    /// Current level.
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Bucket layout: values `< 16` are exact (one bucket per integer); above
+/// that, 16 sub-buckets per power of two. Index space tops out at u64::MAX.
+const HIST_BUCKETS: usize = 976;
+
+fn bucket_index(v: u64) -> usize {
+    if v < 16 {
+        v as usize
+    } else {
+        let exp = 63 - v.leading_zeros() as usize; // >= 4
+        let sub = ((v >> (exp - 4)) & 0xF) as usize;
+        (exp - 3) * 16 + sub
+    }
+}
+
+/// Lower bound of the value range covered by bucket `i`.
+fn bucket_lower(i: usize) -> u64 {
+    if i < 16 {
+        i as u64
+    } else {
+        let exp = i / 16 + 3;
+        let sub = (i % 16) as u64;
+        (16 + sub) << (exp - 4)
+    }
+}
+
+/// Upper bound (exclusive) of bucket `i`.
+fn bucket_upper(i: usize) -> u64 {
+    if i + 1 >= HIST_BUCKETS {
+        u64::MAX
+    } else {
+        bucket_lower(i + 1)
+    }
+}
+
+/// Log-bucketed histogram of u64 samples (durations in µs, sizes in
+/// bytes, ...). Records into fixed atomic buckets; percentiles are
+/// estimated by midpoint interpolation inside the matched bucket.
+pub struct Histogram {
+    buckets: Box<[AtomicU64; HIST_BUCKETS]>,
+    count: AtomicU64,
+    sum: AtomicU64,
+    min: AtomicU64,
+    max: AtomicU64,
+}
+
+impl std::fmt::Debug for Histogram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Histogram")
+            .field("count", &self.count.load(Ordering::Relaxed))
+            .finish()
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    /// Empty histogram.
+    pub fn new() -> Self {
+        // `AtomicU64` is not Copy; build the array through a Vec.
+        let v: Vec<AtomicU64> = (0..HIST_BUCKETS).map(|_| AtomicU64::new(0)).collect();
+        let buckets: Box<[AtomicU64; HIST_BUCKETS]> =
+            v.into_boxed_slice().try_into().expect("bucket count");
+        Self {
+            buckets,
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            min: AtomicU64::new(u64::MAX),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one sample.
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.min.fetch_min(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Record a duration as whole microseconds.
+    pub fn record_duration(&self, d: std::time::Duration) {
+        self.record(d.as_micros() as u64);
+    }
+
+    /// Samples recorded so far.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Point-in-time copy of the bucket state.
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        let count = self.count.load(Ordering::Relaxed);
+        let buckets = self
+            .buckets
+            .iter()
+            .enumerate()
+            .filter_map(|(i, b)| {
+                let n = b.load(Ordering::Relaxed);
+                (n > 0).then_some((i, n))
+            })
+            .collect();
+        HistogramSnapshot {
+            count,
+            sum: self.sum.load(Ordering::Relaxed),
+            min: if count == 0 {
+                0
+            } else {
+                self.min.load(Ordering::Relaxed)
+            },
+            max: self.max.load(Ordering::Relaxed),
+            buckets,
+        }
+    }
+}
+
+/// Frozen histogram state: sparse `(bucket index, count)` pairs plus
+/// count/sum/min/max. Mergeable and queryable for percentiles.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct HistogramSnapshot {
+    /// Total samples.
+    pub count: u64,
+    /// Sum of all samples.
+    pub sum: u64,
+    /// Smallest sample (0 when empty).
+    pub min: u64,
+    /// Largest sample (0 when empty).
+    pub max: u64,
+    /// Non-empty buckets as `(index, count)`, ascending by index.
+    pub buckets: Vec<(usize, u64)>,
+}
+
+impl HistogramSnapshot {
+    /// Estimate the p-th percentile (p in [0, 100]). Returns the midpoint
+    /// of the bucket containing the target rank, clamped to the observed
+    /// min/max so single-sample and narrow distributions stay exact-ish.
+    /// NaN when empty.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        let target = (p / 100.0 * self.count as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for &(i, n) in &self.buckets {
+            seen += n;
+            if seen >= target {
+                let lo = bucket_lower(i) as f64;
+                let hi = bucket_upper(i).min(self.max.max(1)) as f64;
+                let mid = (lo + hi) / 2.0;
+                return mid.clamp(self.min as f64, self.max as f64);
+            }
+        }
+        self.max as f64
+    }
+
+    /// Mean of all samples (NaN when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Merge another snapshot into this one (bucket-wise addition), e.g.
+    /// to combine per-process histograms of the same metric.
+    pub fn merge(&mut self, other: &HistogramSnapshot) {
+        if other.count == 0 {
+            return;
+        }
+        let mut merged: BTreeMap<usize, u64> = self.buckets.iter().copied().collect();
+        for &(i, n) in &other.buckets {
+            *merged.entry(i).or_insert(0) += n;
+        }
+        self.buckets = merged.into_iter().collect();
+        if self.count == 0 {
+            self.min = other.min;
+        } else {
+            self.min = self.min.min(other.min);
+        }
+        self.max = self.max.max(other.max);
+        self.count += other.count;
+        self.sum += other.sum;
+    }
+
+    /// JSON form used by `pyramidai bench` and metric dumps.
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("count", self.count as f64)
+            .set("sum", self.sum as f64)
+            .set("min", self.min as f64)
+            .set("max", self.max as f64)
+            .set("mean", if self.count == 0 { 0.0 } else { self.mean() })
+            .set("p50", if self.count == 0 { 0.0 } else { self.percentile(50.0) })
+            .set("p95", if self.count == 0 { 0.0 } else { self.percentile(95.0) })
+            .set("p99", if self.count == 0 { 0.0 } else { self.percentile(99.0) })
+    }
+}
+
+/// Name-keyed registry of counters, gauges and histograms.
+///
+/// A process has one [`global()`] registry; scoped registries (the
+/// scheduler's, the simulator's) exist where a run needs its own isolated
+/// totals — e.g. the sim-vs-service parity check.
+#[derive(Debug, Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
+    histograms: Mutex<BTreeMap<String, Arc<Histogram>>>,
+}
+
+impl Registry {
+    /// Empty registry.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Get or create the counter `name`.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut m = self.counters.lock().unwrap();
+        Arc::clone(m.entry(name.to_string()).or_default())
+    }
+
+    /// Get or create the gauge `name`.
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut m = self.gauges.lock().unwrap();
+        Arc::clone(m.entry(name.to_string()).or_default())
+    }
+
+    /// Get or create the histogram `name`.
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        let mut m = self.histograms.lock().unwrap();
+        Arc::clone(
+            m.entry(name.to_string())
+                .or_insert_with(|| Arc::new(Histogram::new())),
+        )
+    }
+
+    /// Point-in-time snapshot of every registered metric.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            counters: self
+                .counters
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|(k, v)| (k.clone(), v.get()))
+                .collect(),
+            gauges: self
+                .gauges
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|(k, v)| (k.clone(), v.get()))
+                .collect(),
+            histograms: self
+                .histograms
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|(k, v)| (k.clone(), v.snapshot()))
+                .collect(),
+        }
+    }
+}
+
+/// Frozen registry state: every counter/gauge total and histogram summary
+/// at snapshot time.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MetricsSnapshot {
+    /// Counter totals by name.
+    pub counters: BTreeMap<String, u64>,
+    /// Gauge levels by name.
+    pub gauges: BTreeMap<String, i64>,
+    /// Histogram snapshots by name.
+    pub histograms: BTreeMap<String, HistogramSnapshot>,
+}
+
+impl MetricsSnapshot {
+    /// Counter total (0 when the counter was never touched).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// Gauge level (0 when absent).
+    pub fn gauge(&self, name: &str) -> i64 {
+        self.gauges.get(name).copied().unwrap_or(0)
+    }
+
+    /// Histogram snapshot (empty when absent).
+    pub fn histogram(&self, name: &str) -> HistogramSnapshot {
+        self.histograms.get(name).cloned().unwrap_or_default()
+    }
+
+    /// JSON form: `{counters: {...}, gauges: {...}, histograms: {...}}`.
+    pub fn to_json(&self) -> Json {
+        let mut counters = Json::obj();
+        for (k, v) in &self.counters {
+            counters = counters.set(k.as_str(), *v as f64);
+        }
+        let mut gauges = Json::obj();
+        for (k, v) in &self.gauges {
+            gauges = gauges.set(k.as_str(), *v as f64);
+        }
+        let mut hists = Json::obj();
+        for (k, v) in &self.histograms {
+            hists = hists.set(k.as_str(), v.to_json());
+        }
+        Json::obj()
+            .set("counters", counters)
+            .set("gauges", gauges)
+            .set("histograms", hists)
+    }
+}
+
+/// The process-wide registry. Cluster, predcache, thread-pool and pyramid
+/// instrumentation all record here.
+pub fn global() -> &'static Registry {
+    static GLOBAL: OnceLock<Registry> = OnceLock::new();
+    GLOBAL.get_or_init(Registry::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_layout_is_continuous_and_monotone() {
+        // Every value maps to a bucket whose [lower, upper) contains it,
+        // and indices are non-decreasing in the value.
+        let mut prev = 0usize;
+        for v in [
+            0u64,
+            1,
+            15,
+            16,
+            17,
+            31,
+            32,
+            100,
+            1_000,
+            65_535,
+            65_536,
+            1 << 30,
+            (1 << 40) + 12345,
+            u64::MAX / 2,
+            u64::MAX,
+        ] {
+            let i = bucket_index(v);
+            assert!(bucket_lower(i) <= v, "lower({i}) <= {v}");
+            assert!(v < bucket_upper(i) || i == HIST_BUCKETS - 1, "{v} < upper({i})");
+            assert!(i >= prev, "index monotone at {v}");
+            prev = i;
+        }
+    }
+
+    #[test]
+    fn histogram_empty() {
+        let h = Histogram::new();
+        let s = h.snapshot();
+        assert_eq!(s.count, 0);
+        assert!(s.percentile(50.0).is_nan());
+        assert!(s.mean().is_nan());
+        assert_eq!(s.min, 0);
+        assert_eq!(s.max, 0);
+    }
+
+    #[test]
+    fn histogram_single_sample_is_exact() {
+        let h = Histogram::new();
+        h.record(1234);
+        let s = h.snapshot();
+        assert_eq!(s.count, 1);
+        assert_eq!(s.min, 1234);
+        assert_eq!(s.max, 1234);
+        // clamped to [min, max] ⇒ exact for a single sample
+        assert_eq!(s.percentile(0.0), 1234.0);
+        assert_eq!(s.percentile(50.0), 1234.0);
+        assert_eq!(s.percentile(100.0), 1234.0);
+        assert_eq!(s.mean(), 1234.0);
+    }
+
+    #[test]
+    fn histogram_percentiles_are_monotone_and_bounded() {
+        let h = Histogram::new();
+        // Skewed distribution: many fast samples, a slow tail.
+        for i in 0..1000u64 {
+            h.record(10 + i % 50);
+        }
+        for _ in 0..10 {
+            h.record(100_000);
+        }
+        let s = h.snapshot();
+        let ps: Vec<f64> = [1.0, 25.0, 50.0, 75.0, 90.0, 95.0, 99.0, 99.9, 100.0]
+            .iter()
+            .map(|&p| s.percentile(p))
+            .collect();
+        for w in ps.windows(2) {
+            assert!(w[0] <= w[1], "percentiles must be monotone: {ps:?}");
+        }
+        assert!(ps[0] >= s.min as f64);
+        assert!(*ps.last().unwrap() <= s.max as f64);
+        // p50 is inside the fast cluster, p99.9+ reaches the tail bucket.
+        assert!(s.percentile(50.0) < 100.0, "p50 {}", s.percentile(50.0));
+        assert!(s.percentile(99.9) > 50_000.0, "p99.9 {}", s.percentile(99.9));
+    }
+
+    #[test]
+    fn histogram_relative_error_is_bounded() {
+        let h = Histogram::new();
+        for v in [100u64, 1_000, 10_000, 100_000, 1_000_000] {
+            for _ in 0..100 {
+                h.record(v);
+            }
+        }
+        let s = h.snapshot();
+        // p50 of this 5-spike distribution is the 10_000 spike; the
+        // bucket midpoint must land within one bucket width (≈ 4.5 %).
+        let p50 = s.percentile(50.0);
+        assert!((p50 - 10_000.0).abs() / 10_000.0 < 0.05, "p50 {p50}");
+    }
+
+    #[test]
+    fn snapshot_merge_matches_combined_recording() {
+        let a = Histogram::new();
+        let b = Histogram::new();
+        let both = Histogram::new();
+        for v in [5u64, 17, 900, 42] {
+            a.record(v);
+            both.record(v);
+        }
+        for v in [1u64, 1_000_000, 33] {
+            b.record(v);
+            both.record(v);
+        }
+        let mut m = a.snapshot();
+        m.merge(&b.snapshot());
+        assert_eq!(m, both.snapshot());
+        // Merging an empty snapshot is the identity.
+        let before = m.clone();
+        m.merge(&HistogramSnapshot::default());
+        assert_eq!(m, before);
+        // Merging *into* an empty snapshot copies.
+        let mut e = HistogramSnapshot::default();
+        e.merge(&before);
+        assert_eq!(e, before);
+    }
+
+    #[test]
+    fn registry_get_or_create_and_snapshot() {
+        let r = Registry::new();
+        r.counter("a.ticks").add(3);
+        r.counter("a.ticks").inc();
+        r.gauge("a.depth").set(7);
+        r.gauge("a.depth").add(-2);
+        r.histogram("a.lat").record(50);
+        let s = r.snapshot();
+        assert_eq!(s.counter("a.ticks"), 4);
+        assert_eq!(s.gauge("a.depth"), 5);
+        assert_eq!(s.histogram("a.lat").count, 1);
+        assert_eq!(s.counter("never.touched"), 0);
+        let j = s.to_json();
+        assert_eq!(j.get("counters").unwrap().get("a.ticks").unwrap().as_u64().unwrap(), 4);
+    }
+}

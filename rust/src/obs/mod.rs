@@ -1,0 +1,42 @@
+//! Observability: structured tracing, leveled logging, and a global
+//! metrics registry — zero external dependencies, one schema end-to-end.
+//!
+//! The paper's argument is quantitative (how much data each worker
+//! touches, where time goes as slides stream through the cluster), so
+//! the reproduction needs to *measure itself*: this module is how a
+//! chunk's life — dealt → stolen → resubmitted-after-death → done — is
+//! reconstructed across leader and worker OS processes, and how perf
+//! becomes a versioned artifact (`BENCH_<n>.json`).
+//!
+//! Layout:
+//! - [`log`] — severity levels and the stderr gate
+//!   (`--log-level` / `PYRAMIDAI_LOG`);
+//! - [`trace`] — span/event records, per-process JSONL sinks
+//!   (`--trace-out`), thread-local capture for deterministic tests;
+//! - [`metrics`] — atomic counters / gauges / log-bucketed histograms in
+//!   name-keyed registries, snapshotable mid-run;
+//! - [`chrome`] — merging per-process JSONL into a Chrome trace-event
+//!   file (`pyramidai trace`);
+//! - [`bench`] — the `pyramidai bench` harness behind the repo's
+//!   `BENCH_<n>.json` trajectory.
+//!
+//! Cross-process propagation: cluster wire messages carry a `trace` id
+//! (the chunk's routing key namespace) so records emitted by different
+//! processes join on `f.key`/`f.trace`; see `cluster::proto`.
+//!
+//! Overhead budget: with no sink installed and the level disabled, an
+//! [`event`] call is an atomic load and a branch — the `service_throughput`
+//! bench stays within 2 % of the uninstrumented baseline.
+
+pub mod bench;
+pub mod chrome;
+pub mod log;
+pub mod metrics;
+pub mod trace;
+
+pub use log::{log_enabled, log_level, set_log_level, Level};
+pub use metrics::{global as global_metrics, MetricsSnapshot, Registry};
+pub use trace::{
+    capture, event, flush_trace, init_trace_dir, now_us, set_proc_name, span, span_event,
+    FieldVal, SpanGuard, TraceRecord,
+};

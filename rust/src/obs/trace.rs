@@ -1,0 +1,408 @@
+//! Span/event tracing with monotonic timestamps and per-process JSONL
+//! sinks.
+//!
+//! Every record carries a wall-anchored monotonic timestamp (unix µs at
+//! process start plus a monotonic offset), the pid, a small per-process
+//! tid, a process role name ("leader", "worker-3", ...), a level, a
+//! subsystem, an event name, optional duration and structured fields.
+//! One schema serves three sinks:
+//!
+//! - **stderr** — rendered as a log line when the level passes
+//!   [`super::log::log_enabled`];
+//! - **JSONL trace file** — one JSON object per line when a sink was
+//!   installed via [`init_trace_dir`] (the `--trace-out` flag);
+//! - **thread-local capture** — for deterministic tests
+//!   ([`capture`]).
+//!
+//! With no sink installed and the level disabled, [`event`] is a few
+//! atomic loads — cheap enough to leave call sites unconditional.
+
+use std::cell::RefCell;
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::{Instant, SystemTime};
+
+use super::log::{log_enabled, Level};
+use crate::util::json::Json;
+
+/// One structured field value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FieldVal {
+    /// Unsigned integer.
+    U(u64),
+    /// Signed integer.
+    I(i64),
+    /// Float.
+    F(f64),
+    /// String.
+    S(String),
+    /// Boolean.
+    B(bool),
+}
+
+impl FieldVal {
+    fn to_json(&self) -> Json {
+        match self {
+            FieldVal::U(v) => Json::Num(*v as f64),
+            FieldVal::I(v) => Json::Num(*v as f64),
+            FieldVal::F(v) => Json::Num(*v),
+            FieldVal::S(v) => Json::Str(v.clone()),
+            FieldVal::B(v) => Json::Bool(*v),
+        }
+    }
+
+    fn render(&self) -> String {
+        match self {
+            FieldVal::U(v) => v.to_string(),
+            FieldVal::I(v) => v.to_string(),
+            FieldVal::F(v) => format!("{v:.3}"),
+            FieldVal::S(v) => v.clone(),
+            FieldVal::B(v) => v.to_string(),
+        }
+    }
+}
+
+macro_rules! fieldval_from {
+    ($($t:ty => $variant:ident as $conv:ty),*) => {
+        $(impl From<$t> for FieldVal {
+            fn from(v: $t) -> FieldVal { FieldVal::$variant(v as $conv) }
+        })*
+    };
+}
+fieldval_from!(u32 => U as u64, u16 => U as u64, u8 => U as u64,
+               usize => U as u64, i32 => I as i64);
+
+impl From<u64> for FieldVal {
+    fn from(v: u64) -> FieldVal {
+        FieldVal::U(v)
+    }
+}
+
+impl From<i64> for FieldVal {
+    fn from(v: i64) -> FieldVal {
+        FieldVal::I(v)
+    }
+}
+
+impl From<f64> for FieldVal {
+    fn from(v: f64) -> FieldVal {
+        FieldVal::F(v)
+    }
+}
+
+impl From<bool> for FieldVal {
+    fn from(v: bool) -> FieldVal {
+        FieldVal::B(v)
+    }
+}
+
+impl From<&str> for FieldVal {
+    fn from(v: &str) -> FieldVal {
+        FieldVal::S(v.to_string())
+    }
+}
+
+impl From<String> for FieldVal {
+    fn from(v: String) -> FieldVal {
+        FieldVal::S(v)
+    }
+}
+
+/// One trace record (an event, or a completed span when `dur_us` is set).
+#[derive(Debug, Clone)]
+pub struct TraceRecord {
+    /// Wall-anchored monotonic timestamp, µs since the unix epoch.
+    pub ts_us: u64,
+    /// OS process id.
+    pub pid: u32,
+    /// Small per-process thread id (assignment order, not the OS tid).
+    pub tid: u64,
+    /// Severity.
+    pub level: Level,
+    /// Subsystem ("cluster", "sched", "predcache", ...).
+    pub sub: &'static str,
+    /// Event name ("chunk_dealt", "job_admitted", ...).
+    pub ev: &'static str,
+    /// Span duration in µs; `None` for instant events.
+    pub dur_us: Option<u64>,
+    /// Structured fields.
+    pub fields: Vec<(&'static str, FieldVal)>,
+}
+
+impl TraceRecord {
+    /// JSONL wire form (one line of a trace file).
+    pub fn to_json(&self) -> Json {
+        let mut f = Json::obj();
+        for (k, v) in &self.fields {
+            f = f.set(k, v.to_json());
+        }
+        let mut j = Json::obj()
+            .set("ts", self.ts_us as f64)
+            .set("pid", self.pid as f64)
+            .set("tid", self.tid as f64)
+            .set("proc", proc_name().as_str())
+            .set("lvl", self.level.as_str())
+            .set("sub", self.sub)
+            .set("ev", self.ev)
+            .set("f", f);
+        if let Some(d) = self.dur_us {
+            j = j.set("dur", d as f64);
+        }
+        j
+    }
+}
+
+fn epoch() -> &'static (u64, Instant) {
+    static EPOCH: OnceLock<(u64, Instant)> = OnceLock::new();
+    EPOCH.get_or_init(|| {
+        let unix = SystemTime::now()
+            .duration_since(SystemTime::UNIX_EPOCH)
+            .map(|d| d.as_micros() as u64)
+            .unwrap_or(0);
+        (unix, Instant::now())
+    })
+}
+
+/// Current timestamp: unix µs anchored at process start, advanced by the
+/// monotonic clock (never goes backwards within a process).
+pub fn now_us() -> u64 {
+    let (unix, start) = epoch();
+    unix + start.elapsed().as_micros() as u64
+}
+
+fn tid() -> u64 {
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    thread_local! {
+        static TID: u64 = NEXT.fetch_add(1, Ordering::Relaxed);
+    }
+    TID.with(|t| *t)
+}
+
+fn proc_name_cell() -> &'static Mutex<String> {
+    static NAME: OnceLock<Mutex<String>> = OnceLock::new();
+    NAME.get_or_init(|| Mutex::new("main".to_string()))
+}
+
+/// Role name of this process in trace output ("leader", "worker-2", ...).
+pub fn proc_name() -> String {
+    proc_name_cell().lock().unwrap().clone()
+}
+
+/// Set the process role name (once, early; workers call this on join).
+pub fn set_proc_name(name: &str) {
+    *proc_name_cell().lock().unwrap() = name.to_string();
+}
+
+static SINK_ACTIVE: AtomicBool = AtomicBool::new(false);
+
+fn sink() -> &'static Mutex<Option<BufWriter<File>>> {
+    static SINK: OnceLock<Mutex<Option<BufWriter<File>>>> = OnceLock::new();
+    SINK.get_or_init(|| Mutex::new(None))
+}
+
+/// Install a per-process JSONL sink under `dir` (created if missing).
+/// The file is named `trace-<proc>-<pid>.jsonl`; returns its path. A
+/// `trace_meta` record with the process role is written first so the
+/// merger can label processes.
+pub fn init_trace_dir(dir: &Path, proc_name: &str) -> std::io::Result<PathBuf> {
+    std::fs::create_dir_all(dir)?;
+    set_proc_name(proc_name);
+    let path = dir.join(format!("trace-{}-{}.jsonl", proc_name, std::process::id()));
+    let file = File::create(&path)?;
+    *sink().lock().unwrap() = Some(BufWriter::new(file));
+    SINK_ACTIVE.store(true, Ordering::Release);
+    event(Level::Info, "obs", "trace_meta", &[("role", proc_name.into())]);
+    Ok(path)
+}
+
+/// Flush the JSONL sink (no-op when none is installed). Call before
+/// process exit; events are buffered.
+pub fn flush_trace() {
+    if let Some(w) = sink().lock().unwrap().as_mut() {
+        let _ = w.flush();
+    }
+}
+
+thread_local! {
+    static CAPTURE: RefCell<Option<Vec<TraceRecord>>> = const { RefCell::new(None) };
+}
+
+fn capture_active() -> bool {
+    CAPTURE.with(|c| c.borrow().is_some())
+}
+
+/// Run `f` with this thread's trace events captured, returning them
+/// alongside the result. Only events emitted on the calling thread are
+/// captured; sinks and stderr still receive them as usual.
+pub fn capture<R>(f: impl FnOnce() -> R) -> (R, Vec<TraceRecord>) {
+    CAPTURE.with(|c| *c.borrow_mut() = Some(Vec::new()));
+    let r = f();
+    let recs = CAPTURE.with(|c| c.borrow_mut().take().unwrap_or_default());
+    (r, recs)
+}
+
+/// Would an event at `level` reach any sink right now? Call sites in hot
+/// loops may pre-check this, but plain [`event`] calls are already cheap
+/// when everything is disabled.
+pub fn wanted(level: Level) -> bool {
+    log_enabled(level) || SINK_ACTIVE.load(Ordering::Acquire) || capture_active()
+}
+
+/// Emit an instant event.
+pub fn event(level: Level, sub: &'static str, ev: &'static str, fields: &[(&'static str, FieldVal)]) {
+    emit(level, sub, ev, None, fields);
+}
+
+/// Emit a completed span of `dur_us` microseconds.
+pub fn span_event(
+    level: Level,
+    sub: &'static str,
+    ev: &'static str,
+    dur_us: u64,
+    fields: &[(&'static str, FieldVal)],
+) {
+    emit(level, sub, ev, Some(dur_us), fields);
+}
+
+fn emit(
+    level: Level,
+    sub: &'static str,
+    ev: &'static str,
+    dur_us: Option<u64>,
+    fields: &[(&'static str, FieldVal)],
+) {
+    if !wanted(level) {
+        return;
+    }
+    let rec = TraceRecord {
+        ts_us: now_us(),
+        pid: std::process::id(),
+        tid: tid(),
+        level,
+        sub,
+        ev,
+        dur_us,
+        fields: fields.to_vec(),
+    };
+    if log_enabled(level) {
+        let (unix, _) = epoch();
+        let rel = (rec.ts_us - unix) as f64 / 1e6;
+        let mut line = format!("{rel:9.3}s {:>5} {} {}", level.as_str().to_uppercase(), sub, ev);
+        for (k, v) in &rec.fields {
+            line.push_str(&format!(" {k}={}", v.render()));
+        }
+        if let Some(d) = dur_us {
+            line.push_str(&format!(" dur={d}µs"));
+        }
+        eprintln!("{line}");
+    }
+    if SINK_ACTIVE.load(Ordering::Acquire) {
+        if let Some(w) = sink().lock().unwrap().as_mut() {
+            let _ = writeln!(w, "{}", rec.to_json().to_string());
+        }
+    }
+    CAPTURE.with(|c| {
+        if let Some(buf) = c.borrow_mut().as_mut() {
+            buf.push(rec);
+        }
+    });
+}
+
+/// RAII span: measures from construction to drop, then emits a record
+/// with `dur_us` set. Created via [`span`].
+pub struct SpanGuard {
+    level: Level,
+    sub: &'static str,
+    ev: &'static str,
+    start: Instant,
+    fields: Vec<(&'static str, FieldVal)>,
+}
+
+impl SpanGuard {
+    /// Attach another field before the span closes.
+    pub fn field(&mut self, k: &'static str, v: impl Into<FieldVal>) {
+        self.fields.push((k, v.into()));
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        let dur = self.start.elapsed().as_micros() as u64;
+        emit(self.level, self.sub, self.ev, Some(dur), &self.fields);
+    }
+}
+
+/// Open a span; the record is emitted when the guard drops.
+pub fn span(
+    level: Level,
+    sub: &'static str,
+    ev: &'static str,
+    fields: &[(&'static str, FieldVal)],
+) -> SpanGuard {
+    SpanGuard {
+        level,
+        sub,
+        ev,
+        start: Instant::now(),
+        fields: fields.to_vec(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capture_collects_this_threads_events() {
+        let ((), recs) = capture(|| {
+            event(Level::Error, "test", "alpha", &[("k", 1u64.into())]);
+            event(Level::Error, "test", "beta", &[("s", "x".into())]);
+        });
+        let names: Vec<&str> = recs.iter().filter(|r| r.sub == "test").map(|r| r.ev).collect();
+        assert_eq!(names, vec!["alpha", "beta"]);
+        assert_eq!(recs[0].fields, vec![("k", FieldVal::U(1))]);
+    }
+
+    #[test]
+    fn span_records_duration() {
+        let ((), recs) = capture(|| {
+            let mut g = span(Level::Error, "test", "work", &[]);
+            g.field("n", 3u64);
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        });
+        let r = recs.iter().find(|r| r.ev == "work").expect("span emitted");
+        assert!(r.dur_us.unwrap() >= 1_000, "dur {:?}", r.dur_us);
+        assert_eq!(r.fields, vec![("n", FieldVal::U(3))]);
+    }
+
+    #[test]
+    fn record_json_schema_has_required_keys() {
+        let rec = TraceRecord {
+            ts_us: 42,
+            pid: 7,
+            tid: 1,
+            level: Level::Info,
+            sub: "cluster",
+            ev: "chunk_dealt",
+            dur_us: Some(10),
+            fields: vec![("key", FieldVal::U(5)), ("ok", FieldVal::B(true))],
+        };
+        let j = rec.to_json();
+        for k in ["ts", "pid", "tid", "proc", "lvl", "sub", "ev", "f", "dur"] {
+            assert!(j.opt(k).is_some(), "missing {k}");
+        }
+        assert_eq!(j.get("f").unwrap().get("key").unwrap().as_u64().unwrap(), 5);
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("ev").unwrap().as_str().unwrap(), "chunk_dealt");
+    }
+
+    #[test]
+    fn timestamps_are_monotone() {
+        let a = now_us();
+        let b = now_us();
+        assert!(b >= a);
+    }
+}

@@ -17,7 +17,9 @@
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
+use crate::obs::{self, Level};
 use crate::pyramid::tree::{ExecTree, Thresholds};
 use crate::util::json::{Json, JsonError};
 
@@ -310,6 +312,7 @@ impl ShardedPredStore {
             if let Some(p) = s.resident.get(&index) {
                 let p = Arc::clone(p);
                 s.hits += 1;
+                obs::global_metrics().counter("predcache.hits").inc();
                 // Move to most-recently-used.
                 s.order.retain(|&i| i != index);
                 s.order.push(index);
@@ -319,6 +322,7 @@ impl ShardedPredStore {
         // Read + checksum + decode happen outside the residency lock, so
         // a concurrent user hitting an already-resident slide never
         // stalls behind this miss's disk work.
+        let decode_start = Instant::now();
         let path = self.dir.join(&entry.file);
         let bytes = std::fs::read(&path)?;
         if bytes.len() as u64 != entry.bytes {
@@ -361,6 +365,20 @@ impl ShardedPredStore {
                 entry.file, decoded.spec.id, entry.id
             )));
         }
+        let decode_us = decode_start.elapsed().as_micros() as u64;
+        obs::global_metrics()
+            .histogram("predcache.decode_us")
+            .record(decode_us);
+        obs::span_event(
+            Level::Debug,
+            "predcache",
+            "shard_decode",
+            decode_us,
+            &[
+                ("slide", index.into()),
+                ("bytes", entry.bytes.into()),
+            ],
+        );
         let p = Arc::new(decoded);
         let mut s = self.state.lock().unwrap();
         if let Some(existing) = s.resident.get(&index) {
@@ -368,11 +386,13 @@ impl ShardedPredStore {
             // disk; keep its copy (one resident instance per slide).
             let existing = Arc::clone(existing);
             s.hits += 1;
+            obs::global_metrics().counter("predcache.hits").inc();
             s.order.retain(|&i| i != index);
             s.order.push(index);
             return Ok(existing);
         }
         s.loads += 1;
+        obs::global_metrics().counter("predcache.loads").inc();
         s.bytes += p.resident_bytes();
         s.resident.insert(index, Arc::clone(&p));
         s.order.push(index);
@@ -384,6 +404,7 @@ impl ShardedPredStore {
             if let Some(v) = s.resident.remove(&victim) {
                 s.bytes -= v.resident_bytes();
                 s.evictions += 1;
+                obs::global_metrics().counter("predcache.evictions").inc();
             }
         }
         Ok(p)

@@ -12,6 +12,7 @@
 //! code.
 
 use crate::model::Analyzer;
+use crate::obs::{self, Level};
 use crate::preprocess::otsu::background_removal;
 use crate::slide::pyramid::Slide;
 use crate::slide::tile::TileId;
@@ -47,8 +48,22 @@ where
     // mismatches with the same messages this function always used.
     let mut run = PyramidRun::new(slide_id, levels, initial, thresholds.clone(), 0);
     while let Some(req) = run.next_request() {
+        let t0 = std::time::Instant::now();
         let ps = probs(req.level, &req.tiles);
         assert_eq!(ps.len(), req.tiles.len(), "provider returned wrong count");
+        let us = t0.elapsed().as_micros() as u64;
+        obs::global_metrics().histogram("pyramid.level_us").record(us);
+        obs::span_event(
+            Level::Debug,
+            "pyramid",
+            "level_analyzed",
+            us,
+            &[
+                ("slide", slide_id.into()),
+                ("level", req.level.into()),
+                ("tiles", req.tiles.len().into()),
+            ],
+        );
         run.feed(req.id, ps)
             .expect("synchronous feed of a just-issued request");
     }

@@ -148,6 +148,11 @@ pub struct ServiceReport {
     /// resubmitted/abandoned); `None` when live jobs ran on the
     /// in-process pool instead of the TCP cluster.
     pub cluster_faults: Option<FaultStats>,
+    /// Snapshot of the scheduler's scoped metrics registry (admissions,
+    /// dispatches, preemptions, chunk/queue latency histograms). The
+    /// simulator emits the same counter names from virtual time, so the
+    /// two are directly comparable.
+    pub sched_metrics: crate::obs::MetricsSnapshot,
 }
 
 impl ServiceReport {
@@ -172,6 +177,8 @@ pub struct AnalysisService {
     cluster_pump: Option<std::thread::JoinHandle<()>>,
     /// Recovery counters captured when the cluster drains.
     cluster_faults: Option<FaultStats>,
+    /// The scheduler's scoped metrics registry, snapshot at shutdown.
+    registry: Arc<crate::obs::Registry>,
     started: Instant,
 }
 
@@ -224,6 +231,7 @@ impl AnalysisService {
                 .expect("spawn cluster pump")
         });
 
+        let registry = Arc::new(crate::obs::Registry::new());
         let sched = Scheduler::new(
             SchedulerConfig {
                 max_in_flight: cfg.max_in_flight,
@@ -237,6 +245,7 @@ impl AnalysisService {
             cluster.clone(),
             tx.clone(),
             Arc::clone(&running_ids),
+            Arc::clone(&registry),
         );
         let scheduler = std::thread::Builder::new()
             .name("service-scheduler".to_string())
@@ -251,6 +260,7 @@ impl AnalysisService {
             scheduler: Some(scheduler),
             cluster_pump,
             cluster_faults: None,
+            registry,
             started: Instant::now(),
         }
     }
@@ -330,6 +340,7 @@ impl AnalysisService {
             metrics,
             pool_panics: self.pool.panic_count(),
             cluster_faults: self.cluster_faults,
+            sched_metrics: self.registry.snapshot(),
         }
     }
 }

@@ -43,6 +43,8 @@ use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::cluster::ClusterExec;
+use crate::obs::metrics::{Counter, Histogram, Registry};
+use crate::obs::{self, Level};
 use crate::predcache::{ShardedPredStore, SlidePredictions};
 use crate::preprocess::otsu::background_removal;
 use crate::pyramid::driver::BG_MARGIN;
@@ -200,6 +202,39 @@ struct ParkedJob {
     preemptions: usize,
 }
 
+/// Metric handles resolved once at construction, so hot-path recording
+/// is a single relaxed atomic op per event. Counter names are shared
+/// verbatim with [`crate::sim::engine::simulate_workload`]'s virtual-time
+/// registry, making service and sim snapshots directly comparable.
+struct SchedObs {
+    jobs_admitted: Arc<Counter>,
+    jobs_parked: Arc<Counter>,
+    jobs_resumed: Arc<Counter>,
+    chunks_dealt: Arc<Counter>,
+    chunks_requeued: Arc<Counter>,
+    queue_wait_us: Arc<Histogram>,
+    run_time_us: Arc<Histogram>,
+    chunk_latency_us: Arc<Histogram>,
+}
+
+impl SchedObs {
+    fn new(registry: &Registry) -> SchedObs {
+        // Touch the steal counter so parity snapshots always carry it,
+        // even for workloads where nothing is ever stolen.
+        registry.counter("sched.chunks_stolen");
+        SchedObs {
+            jobs_admitted: registry.counter("sched.jobs_admitted"),
+            jobs_parked: registry.counter("sched.jobs_parked"),
+            jobs_resumed: registry.counter("sched.jobs_resumed"),
+            chunks_dealt: registry.counter("sched.chunks_dealt"),
+            chunks_requeued: registry.counter("sched.chunks_requeued"),
+            queue_wait_us: registry.histogram("sched.queue_wait_us"),
+            run_time_us: registry.histogram("sched.run_time_us"),
+            chunk_latency_us: registry.histogram("sched.chunk_latency_us"),
+        }
+    }
+}
+
 pub(crate) struct Scheduler {
     cfg: SchedulerConfig,
     policy: Box<dyn SchedulingPolicy>,
@@ -220,6 +255,10 @@ pub(crate) struct Scheduler {
     usage: HashMap<String, u64>,
     results: Vec<JobResult>,
     closed: bool,
+    obs: SchedObs,
+    /// Fire stamp of every in-flight chunk, keyed by the routing key —
+    /// feeds the dispatch→completion latency histogram.
+    chunk_fired: HashMap<u64, Instant>,
 }
 
 impl Scheduler {
@@ -231,7 +270,9 @@ impl Scheduler {
         cluster: Option<Arc<ClusterExec>>,
         events_tx: Sender<Event>,
         running_ids: Arc<Mutex<HashSet<JobId>>>,
+        registry: Arc<Registry>,
     ) -> Scheduler {
+        let obs = SchedObs::new(&registry);
         Scheduler {
             cfg,
             policy,
@@ -247,6 +288,8 @@ impl Scheduler {
             usage: HashMap::new(),
             results: Vec::new(),
             closed: false,
+            obs,
+            chunk_fired: HashMap::new(),
         }
     }
 
@@ -329,6 +372,20 @@ impl Scheduler {
                 }
             }
             Event::ChunkDone { job, req, probs } => {
+                if let Some(t0) = self.chunk_fired.remove(&pack_key(job, req)) {
+                    self.obs.chunk_latency_us.record_duration(t0.elapsed());
+                }
+                obs::event(
+                    Level::Trace,
+                    "sched",
+                    "chunk_done",
+                    &[
+                        ("job", job.into()),
+                        ("req", req.into()),
+                        ("key", pack_key(job, req).into()),
+                        ("probs", probs.len().into()),
+                    ],
+                );
                 let mut failed_now = false;
                 if let Some(r) = self.running.get_mut(&job) {
                     r.dispatched = r.dispatched.saturating_sub(1);
@@ -345,6 +402,17 @@ impl Scheduler {
                 }
             }
             Event::ChunkLost { job, req } => {
+                self.chunk_fired.remove(&pack_key(job, req));
+                obs::event(
+                    Level::Warn,
+                    "sched",
+                    "chunk_lost",
+                    &[
+                        ("job", job.into()),
+                        ("req", req.into()),
+                        ("key", pack_key(job, req).into()),
+                    ],
+                );
                 if let Some(r) = self.running.get_mut(&job) {
                     r.dispatched = r.dispatched.saturating_sub(1);
                     // Cancelled/failed jobs just drain; healthy ones get
@@ -352,6 +420,7 @@ impl Scheduler {
                     // change — only when it materializes).
                     if !r.cancelled && r.failed.is_none() {
                         let _ = r.run.requeue(req);
+                        self.obs.chunks_requeued.inc();
                     }
                 }
             }
@@ -467,6 +536,21 @@ impl Scheduler {
                 (Some(q), _) => {
                     let waited = q.submitted.elapsed();
                     if q.spec.deadline.map_or(false, |d| waited > d) {
+                        obs::event(
+                            Level::Warn,
+                            "sched",
+                            "job_expired",
+                            &[
+                                ("job", q.id.into()),
+                                ("tenant", q.spec.tenant.as_str().into()),
+                                ("waited_us", (waited.as_micros() as u64).into()),
+                                (
+                                    "deadline_us",
+                                    (q.spec.deadline.unwrap_or_default().as_micros() as u64)
+                                        .into(),
+                                ),
+                            ],
+                        );
                         self.running_ids.lock().unwrap().remove(&q.id);
                         self.results.push(JobResult {
                             id: q.id,
@@ -496,6 +580,18 @@ impl Scheduler {
     /// would have produced.
     fn resume_job(&mut self, id: JobId) {
         let p = self.parked.remove(&id).expect("resume targets parked job");
+        self.obs.jobs_resumed.inc();
+        obs::event(
+            Level::Info,
+            "sched",
+            "job_resumed",
+            &[
+                ("job", id.into()),
+                ("slide", p.slide_id.as_str().into()),
+                ("policy", self.policy.name().into()),
+                ("preemptions", p.preemptions.into()),
+            ],
+        );
         self.running.insert(
             id,
             RunningJob {
@@ -572,6 +668,17 @@ impl Scheduler {
         // transition in settle() — a victim whose draining chunks turn
         // out to complete its run was never really suspended.
         r.parking = true;
+        obs::event(
+            Level::Info,
+            "sched",
+            "preempt_marked",
+            &[
+                ("job", victim.into()),
+                ("tenant", r.tenant.as_str().into()),
+                ("policy", self.policy.name().into()),
+                ("waiting", waiting.len().into()),
+            ],
+        );
     }
 
     /// Materialize a job into a running [`PyramidRun`]. Source faults
@@ -641,6 +748,12 @@ impl Scheduler {
             Ok(t) => t,
             Err(msg) => {
                 self.running_ids.lock().unwrap().remove(&q.id);
+                obs::event(
+                    Level::Warn,
+                    "sched",
+                    "job_setup_failed",
+                    &[("job", q.id.into()), ("error", msg.as_str().into())],
+                );
                 self.results.push(JobResult {
                     id: q.id,
                     slide_id: q.spec.source.slide_id().to_string(),
@@ -656,6 +769,23 @@ impl Scheduler {
                 return;
             }
         };
+        self.obs.jobs_admitted.inc();
+        self.obs
+            .queue_wait_us
+            .record(queue_wait.as_micros() as u64);
+        obs::event(
+            Level::Info,
+            "sched",
+            "job_admitted",
+            &[
+                ("job", q.id.into()),
+                ("slide", slide_id.as_str().into()),
+                ("tenant", q.spec.tenant.as_str().into()),
+                ("priority", q.spec.priority.rank().into()),
+                ("policy", self.policy.name().into()),
+                ("queue_wait_us", (queue_wait.as_micros() as u64).into()),
+            ],
+        );
         // The admission queue validated levels and threshold counts, so
         // this constructor cannot panic.
         let run = PyramidRun::new(slide_id.as_str(), levels, initial, thresholds, self.cfg.batch);
@@ -738,6 +868,20 @@ impl Scheduler {
             r.dispatched += 1;
             let tenant = r.tenant.clone();
             *self.usage.entry(tenant).or_default() += req.tiles.len() as u64;
+            self.obs.chunks_dealt.inc();
+            self.chunk_fired.insert(pack_key(job, req.id), Instant::now());
+            obs::event(
+                Level::Debug,
+                "sched",
+                "chunk_dispatched",
+                &[
+                    ("job", job.into()),
+                    ("req", req.id.into()),
+                    ("key", pack_key(job, req.id).into()),
+                    ("level", req.level.into()),
+                    ("tiles", req.tiles.len().into()),
+                ],
+            );
             order.push((job, req));
         }
         // Fire, grouping adjacent same-level pool requests.
@@ -797,6 +941,7 @@ impl Scheduler {
                             });
                         }
                         Err(e) => {
+                            self.chunk_fired.remove(&pack_key(job, req.id));
                             if let Some(r) = self.running.get_mut(&job) {
                                 r.dispatched = r.dispatched.saturating_sub(1);
                                 r.failed = Some(format!("shard load failed: {e}"));
@@ -813,6 +958,7 @@ impl Scheduler {
                     // — the same fault isolation the pool path has.
                     let sent = exec.submit(pack_key(job, req.id), &spec, req.level, req.tiles);
                     if let Err(e) = sent {
+                        self.chunk_fired.remove(&pack_key(job, req.id));
                         if let Some(r) = self.running.get_mut(&job) {
                             r.dispatched = r.dispatched.saturating_sub(1);
                             r.failed = Some(format!("cluster dispatch failed: {e}"));
@@ -888,6 +1034,19 @@ impl Scheduler {
                 }
                 let r = self.running.remove(&id).expect("listed above");
                 debug_assert_eq!(r.run.in_flight(), 0, "park with chunks in flight");
+                self.obs.jobs_parked.inc();
+                obs::event(
+                    Level::Info,
+                    "sched",
+                    "job_parked",
+                    &[
+                        ("job", id.into()),
+                        ("slide", r.slide_id.as_str().into()),
+                        ("tenant", r.tenant.as_str().into()),
+                        ("level", r.run.current_level().into()),
+                        ("preemptions", (r.preemptions + 1).into()),
+                    ],
+                );
                 self.parked.insert(
                     id,
                     ParkedJob {
@@ -926,6 +1085,29 @@ impl Scheduler {
                 let tiles = tree.total_analyzed();
                 (JobState::Cancelled, Some(tree), tiles)
             };
+            self.obs.run_time_us.record_duration(run_time);
+            obs::event(
+                Level::Info,
+                "sched",
+                "job_done",
+                &[
+                    ("job", id.into()),
+                    ("slide", r.slide_id.as_str().into()),
+                    (
+                        "state",
+                        match &state {
+                            JobState::Completed => "completed",
+                            JobState::Cancelled => "cancelled",
+                            JobState::Failed(_) => "failed",
+                            JobState::Expired => "expired",
+                        }
+                        .into(),
+                    ),
+                    ("tiles", tiles.into()),
+                    ("run_time_us", (run_time.as_micros() as u64).into()),
+                    ("preemptions", r.preemptions.into()),
+                ],
+            );
             self.results.push(JobResult {
                 id,
                 slide_id: r.slide_id,
@@ -1038,7 +1220,12 @@ mod tests {
     /// jobs: the queue is pre-filled, `Close` is pre-sent, and replay
     /// completions flow deterministically through the event channel — so
     /// the completion order is exactly the policy's decision sequence.
-    fn service_completion_order(spec: &PolicySpec, wl: &[WorkloadJob]) -> Vec<JobId> {
+    /// Also returns the scheduler's scoped metrics snapshot, so parity
+    /// checks can compare counter totals against the simulator's.
+    fn service_completion_order(
+        spec: &PolicySpec,
+        wl: &[WorkloadJob],
+    ) -> (Vec<JobId>, crate::obs::MetricsSnapshot) {
         let queue = Arc::new(AdmissionQueue::new(16));
         for w in wl {
             queue
@@ -1054,6 +1241,7 @@ mod tests {
         let pool = Arc::new(AnalyzerPool::new(analyzer, 1));
         let (tx, rx) = mpsc::channel();
         tx.send(Event::Close).unwrap();
+        let registry = Arc::new(crate::obs::Registry::new());
         let sched = Scheduler::new(
             SchedulerConfig {
                 max_in_flight: 1,
@@ -1067,22 +1255,27 @@ mod tests {
             None,
             tx,
             Arc::new(Mutex::new(HashSet::new())),
+            Arc::clone(&registry),
         );
         let results = sched.run(rx);
         assert_eq!(results.len(), wl.len());
-        results
+        let order = results
             .iter()
             .map(|r| {
                 assert_eq!(r.state, JobState::Completed, "job {} not completed", r.id);
                 r.id
             })
-            .collect()
+            .collect();
+        (order, registry.snapshot())
     }
 
     /// Run the workload simulator with the *same* policy object
     /// configuration over the same jobs (arrival 0, deadlines in µs to
     /// match the service's clock units).
-    fn sim_completion_order(spec: &PolicySpec, wl: &[WorkloadJob]) -> Vec<JobId> {
+    fn sim_completion_order(
+        spec: &PolicySpec,
+        wl: &[WorkloadJob],
+    ) -> (Vec<JobId>, crate::obs::MetricsSnapshot) {
         let jobs: Vec<SimJobSpec> = wl
             .iter()
             .map(|w| SimJobSpec {
@@ -1108,7 +1301,8 @@ mod tests {
         );
         // Sim job index i ↔ service id i+1 (the admission queue assigns
         // 1-based monotonic ids in submission order).
-        res.completion_order.iter().map(|&i| i as JobId + 1).collect()
+        let order = res.completion_order.iter().map(|&i| i as JobId + 1).collect();
+        (order, res.metrics)
     }
 
     #[test]
@@ -1126,13 +1320,28 @@ mod tests {
         ];
         let mut fingerprints = Vec::new();
         for spec in &specs {
-            let svc = service_completion_order(spec, &wl);
-            let sim = sim_completion_order(spec, &wl);
+            let (svc, svc_metrics) = service_completion_order(spec, &wl);
+            let (sim, sim_metrics) = sim_completion_order(spec, &wl);
             assert_eq!(
                 svc,
                 sim,
                 "policy {} diverged between service and simulator",
                 spec.as_str()
+            );
+            // The two substrates emit the same counter names into their
+            // scoped registries; on the same workload the totals must be
+            // identical — chunks dealt, stolen and requeued.
+            for c in ["sched.chunks_dealt", "sched.chunks_stolen", "sched.chunks_requeued"] {
+                assert_eq!(
+                    svc_metrics.counter(c),
+                    sim_metrics.counter(c),
+                    "policy {}: counter {c} diverged",
+                    spec.as_str()
+                );
+            }
+            assert!(
+                svc_metrics.counter("sched.chunks_dealt") > 0,
+                "workload dealt no chunks — counter parity is vacuous"
             );
             fingerprints.push(svc);
         }

@@ -394,6 +394,12 @@ pub struct WorkloadResult {
     /// Chunks lost to injected worker failures and requeued — the
     /// recovery-overhead counter ([`WorkerFailure`]).
     pub requeued_chunks: usize,
+    /// Virtual-time metrics snapshot from the sim's scoped registry. The
+    /// counter names (`sched.chunks_dealt`, `sched.chunks_stolen`,
+    /// `sched.chunks_requeued`, ...) match the service scheduler's
+    /// registry exactly, so sim and service snapshots are directly
+    /// comparable on the same workload; histograms are in ticks, not µs.
+    pub metrics: crate::obs::MetricsSnapshot,
 }
 
 /// Internal per-job state of the workload simulator.
@@ -423,6 +429,8 @@ enum SimState {
 
 /// A dispatched chunk travelling through virtual time.
 struct InFlightChunk {
+    /// Tick the chunk was dealt (virtual-latency histogram input).
+    fired: u64,
     finish: u64,
     /// Dispatch sequence number: deterministic tiebreak for chunks
     /// finishing at the same tick.
@@ -467,6 +475,16 @@ pub fn simulate_workload(
             assert!(r > f.at, "rejoin tick must be after the failure tick");
         }
     }
+    // Scoped virtual-time registry: same counter names as the service
+    // scheduler's, so the parity test can compare totals directly.
+    let registry = crate::obs::Registry::new();
+    let m_admitted = registry.counter("sched.jobs_admitted");
+    let m_parked = registry.counter("sched.jobs_parked");
+    let m_resumed = registry.counter("sched.jobs_resumed");
+    let m_dealt = registry.counter("sched.chunks_dealt");
+    let m_requeued = registry.counter("sched.chunks_requeued");
+    registry.counter("sched.chunks_stolen");
+    let m_latency = registry.histogram("sched.chunk_latency_ticks");
     let mut fails: Vec<(u64, usize)> = cfg.failures.iter().map(|f| (f.at, f.worker)).collect();
     fails.sort_unstable();
     let mut rejoins: Vec<(u64, usize)> = cfg
@@ -574,6 +592,7 @@ pub fn simulate_workload(
                     continue;
                 }
                 sim[i].admitted_at = now;
+                m_admitted.inc();
                 sim[i].run = Some(PyramidRun::new(
                     jobs[i].tree.slide_id.as_str(),
                     jobs[i].tree.levels,
@@ -581,6 +600,9 @@ pub fn simulate_workload(
                     jobs[i].thresholds.clone(),
                     cfg.chunk,
                 ));
+            }
+            if sim[i].state == SimState::Parked {
+                m_resumed.inc();
             }
             sim[i].state = SimState::Running;
             sim[i].parking = false;
@@ -660,6 +682,7 @@ pub fn simulate_workload(
                 let (i, req) = pending.remove(sel);
                 sim[i].tiles += req.tiles.len();
                 sim[i].dispatched += 1;
+                m_dealt.inc();
                 *usage.entry(jobs[i].tenant.clone()).or_default() += req.tiles.len() as u64;
                 let start = worker_free[w].max(now);
                 let finish = start + req.tiles.len() as u64;
@@ -675,6 +698,7 @@ pub fn simulate_workload(
                     })
                     .collect();
                 in_flight.push(InFlightChunk {
+                    fired: now,
                     finish,
                     seq,
                     job: i,
@@ -709,6 +733,7 @@ pub fn simulate_workload(
                 s.parking = false;
                 s.preemptions += 1;
                 total_preemptions += 1;
+                m_parked.inc();
                 progressed = true;
             }
         }
@@ -748,6 +773,7 @@ pub fn simulate_workload(
                     let i = chunk.job;
                     now = now.max(chunk.finish);
                     makespan = makespan.max(chunk.finish);
+                    m_latency.record(chunk.finish - chunk.fired);
                     per_worker[chunk.worker] += chunk.probs.len();
                     sim[i].dispatched -= 1;
                     sim[i]
@@ -767,6 +793,7 @@ pub fn simulate_workload(
                         sim[i].parking = false;
                         sim[i].preemptions += 1;
                         total_preemptions += 1;
+                        m_parked.inc();
                     }
                     progressed = true;
                 }
@@ -799,6 +826,7 @@ pub fn simulate_workload(
                             if c.worker == w && c.finish > at {
                                 sim[c.job].dispatched -= 1;
                                 requeued_chunks += 1;
+                                m_requeued.inc();
                                 sim[c.job]
                                     .run
                                     .as_mut()
@@ -832,13 +860,26 @@ pub fn simulate_workload(
         sim.iter().all(|s| s.state == SimState::Done),
         "workload drained every job"
     );
+    let outcomes: Vec<SimJobOutcome> =
+        outcomes.into_iter().map(|o| o.expect("job done")).collect();
+    // Virtual-time analogues of the service's queue-wait / run-time
+    // histograms (ticks instead of µs).
+    let queue_wait = registry.histogram("sched.queue_wait_ticks");
+    let run_time = registry.histogram("sched.run_time_ticks");
+    for (i, o) in outcomes.iter().enumerate() {
+        if !o.expired {
+            queue_wait.record(o.admitted_at.saturating_sub(jobs[i].arrival));
+            run_time.record(o.completed_at.saturating_sub(o.admitted_at));
+        }
+    }
     WorkloadResult {
-        outcomes: outcomes.into_iter().map(|o| o.expect("job done")).collect(),
+        outcomes,
         completion_order,
         per_worker,
         makespan,
         preemptions: total_preemptions,
         requeued_chunks,
+        metrics: registry.snapshot(),
     }
 }
 

@@ -165,6 +165,45 @@ mod tests {
     }
 
     #[test]
+    fn percentile_single_element_is_constant() {
+        let xs = [42.0];
+        for p in [0.0, 1.0, 50.0, 99.0, 100.0] {
+            assert_eq!(percentile(&xs, p), 42.0, "p={p}");
+        }
+    }
+
+    #[test]
+    fn percentile_sorts_its_input_copy() {
+        let xs = [9.0, 1.0, 5.0, 3.0, 7.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), 5.0);
+        assert_eq!(percentile(&xs, 100.0), 9.0);
+        // The input slice itself is untouched.
+        assert_eq!(xs, [9.0, 1.0, 5.0, 3.0, 7.0]);
+    }
+
+    #[test]
+    fn percentile_handles_duplicates_and_two_elements() {
+        let dup = [3.0, 3.0, 3.0, 3.0];
+        assert_eq!(percentile(&dup, 37.0), 3.0);
+        let two = [10.0, 20.0];
+        assert!((percentile(&two, 25.0) - 12.5).abs() < 1e-12);
+        assert!((percentile(&two, 75.0) - 17.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_is_monotone_in_p() {
+        let xs = [4.0, 8.0, 15.0, 16.0, 23.0, 42.0];
+        let mut last = f64::NEG_INFINITY;
+        for p in 0..=100 {
+            let v = percentile(&xs, p as f64);
+            assert!(v >= last, "p={p}: {v} < {last}");
+            last = v;
+        }
+        assert_eq!(last, 42.0);
+    }
+
+    #[test]
     fn duration_formatting() {
         assert_eq!(fmt_duration(Duration::from_secs(3 * 3600 + 120)), "3h02min");
         assert_eq!(fmt_duration(Duration::from_secs(65)), "1min05s");

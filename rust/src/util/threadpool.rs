@@ -8,6 +8,9 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::obs;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
@@ -47,6 +50,7 @@ impl ThreadPool {
                                 );
                                 if r.is_err() {
                                     panics.fetch_add(1, Ordering::SeqCst);
+                                    obs::global_metrics().counter("pool.task_panics").inc();
                                 }
                             }
                             Err(_) => break, // sender dropped: shut down
@@ -83,12 +87,28 @@ impl ThreadPool {
         self.panics.load(Ordering::SeqCst)
     }
 
-    /// Submit a job.
+    /// Submit a job. Queue depth and per-task latency feed the global
+    /// metrics registry (`pool.queue_depth`, `pool.queue_wait_us`,
+    /// `pool.task_us`).
     pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
+        let m = obs::global_metrics();
+        m.gauge("pool.queue_depth").add(1);
+        m.counter("pool.tasks").inc();
+        let queued = Instant::now();
+        let wrapped = move || {
+            let m = obs::global_metrics();
+            m.gauge("pool.queue_depth").add(-1);
+            m.histogram("pool.queue_wait_us")
+                .record(queued.elapsed().as_micros() as u64);
+            let start = Instant::now();
+            job();
+            m.histogram("pool.task_us")
+                .record(start.elapsed().as_micros() as u64);
+        };
         self.tx
             .as_ref()
             .expect("pool alive")
-            .send(Box::new(job))
+            .send(Box::new(wrapped))
             .expect("pool workers alive");
     }
 

@@ -1,0 +1,118 @@
+//! Determinism gates for the observability layer: the same deterministic
+//! work must emit the same event sequence (names, subsystems, structured
+//! fields) on every run — only timestamps and durations may differ.
+//! Anything less and traces can't be diffed across runs or machines.
+
+use pyramidai::model::oracle::OracleAnalyzer;
+use pyramidai::obs::{self, capture, TraceRecord};
+use pyramidai::predcache::{PredCache, ShardedPredStore};
+use pyramidai::pyramid::driver::run_pyramidal;
+use pyramidai::pyramid::tree::Thresholds;
+use pyramidai::slide::pyramid::Slide;
+use pyramidai::synth::slide_gen::{gen_slide_set, DatasetParams};
+
+/// The timestamp-free shape of a trace: everything that must be stable
+/// across reruns of deterministic work.
+fn shape(recs: &[TraceRecord]) -> Vec<String> {
+    recs.iter()
+        .map(|r| {
+            let fields: Vec<String> = r
+                .fields
+                .iter()
+                .map(|(k, v)| format!("{k}={v:?}"))
+                .collect();
+            format!("{}/{}/{}[{}]", r.level.as_str(), r.sub, r.ev, fields.join(","))
+        })
+        .collect()
+}
+
+fn params() -> DatasetParams {
+    DatasetParams {
+        tiles_x: 16,
+        tiles_y: 8,
+        levels: 3,
+        tile_px: 64,
+    }
+}
+
+#[test]
+fn pyramidal_run_trace_is_deterministic() {
+    let slide = Slide::from_spec(gen_slide_set("obsdet", 1, 41, &params()).remove(0));
+    let analyzer = OracleAnalyzer::new(1);
+    let thr = Thresholds::uniform(3, 0.35);
+    let run = || run_pyramidal(&slide, &analyzer, &thr, 8);
+
+    let (tree_a, recs_a) = capture(run);
+    let (tree_b, recs_b) = capture(run);
+
+    assert_eq!(tree_a.nodes, tree_b.nodes, "replayed trees must match");
+    let pyr_a: Vec<_> = recs_a.iter().filter(|r| r.sub == "pyramid").cloned().collect();
+    let pyr_b: Vec<_> = recs_b.iter().filter(|r| r.sub == "pyramid").cloned().collect();
+    assert!(
+        !pyr_a.is_empty(),
+        "a pyramidal run must emit pyramid events under capture"
+    );
+    assert_eq!(
+        shape(&pyr_a),
+        shape(&pyr_b),
+        "same work, same event sequence (timestamps aside)"
+    );
+    // Every frontier analysis is a span: durations present, timestamps
+    // monotone within the thread.
+    for r in &pyr_a {
+        assert!(r.dur_us.is_some(), "{} must be a span", r.ev);
+    }
+    for w in recs_a.windows(2) {
+        assert!(w[1].ts_us >= w[0].ts_us, "timestamps must be monotone");
+    }
+}
+
+#[test]
+fn shard_stream_trace_is_deterministic() {
+    let slides: Vec<Slide> = gen_slide_set("obsstore", 3, 43, &params())
+        .into_iter()
+        .map(Slide::from_spec)
+        .collect();
+    let cache = PredCache::collect_set(&slides, &OracleAnalyzer::new(1), 16);
+    let dir = std::env::temp_dir().join(format!(
+        "pyramidai_obs_trace_{}_{:?}",
+        std::process::id(),
+        std::thread::current().id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    pyramidai::predcache::store::save_sharded(&cache, &dir, 1).unwrap();
+
+    let decode_before = obs::global_metrics()
+        .histogram("predcache.decode_us")
+        .snapshot()
+        .count;
+
+    let stream = || {
+        // Budget 0: every slide switch decodes a shard off disk.
+        let store = ShardedPredStore::open_with_budget(&dir, Some(0)).unwrap();
+        for i in 0..store.len() {
+            store.slide(i).unwrap();
+        }
+    };
+    let ((), recs_a) = capture(stream);
+    let ((), recs_b) = capture(stream);
+
+    let pc = |recs: &[TraceRecord]| -> Vec<TraceRecord> {
+        recs.iter().filter(|r| r.sub == "predcache").cloned().collect()
+    };
+    let (a, b) = (pc(&recs_a), pc(&recs_b));
+    assert_eq!(a.len(), 3, "one shard_decode per slide");
+    assert_eq!(shape(&a), shape(&b), "same stream, same decode events");
+
+    // The decode histogram in the global registry advanced by at least
+    // the decodes this test performed (other tests may add more).
+    let decode_after = obs::global_metrics()
+        .histogram("predcache.decode_us")
+        .snapshot()
+        .count;
+    assert!(
+        decode_after >= decode_before + 6,
+        "decode histogram must count both streams: {decode_before} -> {decode_after}"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
