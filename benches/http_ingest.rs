@@ -1,0 +1,40 @@
+//! HTTP ingest bench: drive the admission front-end over loopback with
+//! raw one-shot connections — submit, poll, stream for every job — and
+//! report end-to-end jobs/s plus per-request latency percentiles. The
+//! same measurement `pyramidai bench --smoke` runs as a CI gate, here at
+//! full size.
+
+use pyramidai::harness::{print_table, CsvOut};
+use pyramidai::obs::bench::{bench_http_ingest, BenchConfig};
+
+fn main() {
+    let doc = bench_http_ingest(BenchConfig { smoke: false }).expect("http ingest bench");
+    let f = |k: &str| doc.get(k).unwrap().as_f64().unwrap();
+    let mut csv = CsvOut::create(
+        "http_ingest.csv",
+        &["jobs", "requests", "jobs_per_sec", "req_ms_p50", "req_ms_p95", "stream_mb_per_s"],
+    )
+    .expect("bench_results dir");
+    csv.row(&[
+        format!("{}", f("jobs")),
+        format!("{}", f("requests")),
+        format!("{:.1}", f("jobs_per_sec")),
+        format!("{:.3}", f("req_ms_p50")),
+        format!("{:.3}", f("req_ms_p95")),
+        format!("{:.2}", f("stream_mb_per_s")),
+    ])
+    .unwrap();
+    print_table(
+        "HTTP ingest over loopback (submit + poll + stream per job)",
+        &["jobs", "requests", "jobs/s", "req p50 (ms)", "req p95 (ms)", "stream MB/s"],
+        &[vec![
+            format!("{}", f("jobs")),
+            format!("{}", f("requests")),
+            format!("{:.1}", f("jobs_per_sec")),
+            format!("{:.3}", f("req_ms_p50")),
+            format!("{:.3}", f("req_ms_p95")),
+            format!("{:.2}", f("stream_mb_per_s")),
+        ]],
+    );
+    println!("csv: {}", csv.path().display());
+}

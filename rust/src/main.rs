@@ -127,12 +127,19 @@ subcommands:
                                                    chunks until shutdown)
   serve     multi-slide analysis service          (--jobs --workers --backend pool|cluster|replay
                                                    --policy fifo|priority|edf|wfs[:t=w,..][;quota=n]
-                                                   --preempt --deadline-ms --max-in-flight
-                                                   --queue-cap --batch --coalesce --per-tile-ms
+                                                   --preempt --park-aging-ms --deadline-ms
+                                                   --max-in-flight --queue-cap --batch
+                                                   --coalesce --per-tile-ms
                                                    --tenants --seed --model --csv
                                                    --external-workers --heartbeat-ms
                                                    --cache-dir DIR --cache-budget-mb N
-                                                   for streamed shard replay)
+                                                   for streamed shard replay;
+                                                   --listen HOST:PORT --tokens-file FILE
+                                                   --listen-secs N starts the HTTP
+                                                   admission front-end instead of the
+                                                   synthetic stream: POST /v1/jobs,
+                                                   GET /v1/jobs/<id>[/result], DELETE
+                                                   /v1/jobs/<id>, GET /v1/metrics)
   trace     merge --trace-out JSONL shards        (--dir DIR --out FILE
                                                    --check --timelines; writes a
                                                    Chrome trace-event file and
@@ -445,7 +452,24 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // memory as before.
     let cache_dir = args.get("cache-dir").map(String::from);
     let cache_budget_mb = args.usize_or("cache-budget-mb", 0)?;
+    // HTTP admission front-end: with --listen the service takes jobs over
+    // the wire instead of synthesizing a stream. --tokens-file maps bearer
+    // tokens onto scheduler tenants; --listen-secs bounds the server's
+    // lifetime (0 = run until killed), which is how CI smoke-tests it.
+    let listen = args.get("listen").map(String::from);
+    let tokens_file = args.get("tokens-file").map(String::from);
+    let listen_secs = args.u64_or("listen-secs", 0)?;
+    // Parked-job starvation aging (0 = off): parked jobs accrue rank
+    // credit over time so a hot tenant cannot strand them indefinitely.
+    let park_aging_ms = args.u64_or("park-aging-ms", 500)?;
     args.finish()?;
+
+    if listen.is_some() && backend == "replay" {
+        return Err(anyhow!(
+            "--listen serves jobs submitted over HTTP (--backend pool|cluster); \
+             it cannot replay a synthetic set"
+        ));
+    }
 
     let (base_analyzer, name) = experiments::ctx::make_analyzer(model, 7)?;
     let analyzer: std::sync::Arc<dyn pyramidai::model::Analyzer> = if per_tile_ms > 0 {
@@ -492,10 +516,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         other => return Err(anyhow!("unknown --backend {other:?} (pool|cluster|replay)")),
     };
 
-    println!(
-        "serving {jobs} jobs on {workers} workers ({name}, backend={backend}, policy={}, preempt={preempt}, max-in-flight={max_in_flight}, queue-cap={queue_cap})…",
-        policy.as_str()
-    );
+    let policy_desc = policy.as_str();
+    if listen.is_none() {
+        println!(
+            "serving {jobs} jobs on {workers} workers ({name}, backend={backend}, policy={policy_desc}, preempt={preempt}, max-in-flight={max_in_flight}, queue-cap={queue_cap})…"
+        );
+    }
 
     // Synthetic job stream: kinds, priorities and tenants cycle so every
     // policy has something to bite on; seeds derive from --seed.
@@ -569,9 +595,71 @@ fn cmd_serve(args: &Args) -> Result<()> {
             policy,
             coalesce,
             preempt,
+            park_aging: if park_aging_ms == 0 {
+                None
+            } else {
+                Some(Duration::from_millis(park_aging_ms))
+            },
             exec,
         },
     );
+
+    // Server mode: hand the service to the HTTP front-end and idle until
+    // the lifetime elapses; jobs, priorities and tenants all come from
+    // authenticated clients instead of the synthetic stream below.
+    if let Some(listen_addr) = listen {
+        use pyramidai::service::http::{HttpConfig, HttpFrontend, TokenTable};
+        let tokens_path = tokens_file.ok_or_else(|| {
+            anyhow!("--listen requires --tokens-file FILE (`token tenant` lines)")
+        })?;
+        let tokens = TokenTable::load(&tokens_path).map_err(|e| anyhow!(e))?;
+        let n_tokens = tokens.len();
+        let svc = std::sync::Arc::new(svc);
+        let frontend = HttpFrontend::start(
+            std::sync::Arc::clone(&svc),
+            HttpConfig::new(listen_addr, tokens),
+        )
+        .map_err(|e| anyhow!(e))?;
+        println!(
+            "HTTP admission front-end on http://{} ({n_tokens} credential(s), backend={backend}, policy={policy_desc}, queue-cap={queue_cap})",
+            frontend.addr()
+        );
+        if listen_secs > 0 {
+            std::thread::sleep(Duration::from_secs(listen_secs));
+        } else {
+            loop {
+                std::thread::sleep(Duration::from_secs(3600));
+            }
+        }
+        frontend.stop();
+        let svc = std::sync::Arc::try_unwrap(svc)
+            .map_err(|_| anyhow!("HTTP handlers still hold the service after stop"))?;
+        let report = svc.shutdown();
+        svc_metrics::print_report(&report.results, &report.metrics);
+        let m = &report.sched_metrics;
+        println!(
+            "http: {} request(s), {} job(s) submitted, {} cancelled, {} rejected (queue full), {} stream byte(s)",
+            m.counter("http.requests"),
+            m.counter("http.jobs_submitted"),
+            m.counter("http.jobs_cancelled"),
+            m.counter("http.rejected_queue_full"),
+            m.counter("http.bytes_streamed"),
+        );
+        if report.pool_panics > 0 {
+            println!("pool absorbed {} analyzer panics", report.pool_panics);
+        }
+        if let Some(f) = report.cluster_faults {
+            println!(
+                "cluster recovery: {} worker(s) lost, {} joined, {} chunk(s) resubmitted, {} abandoned",
+                f.workers_lost, f.workers_joined, f.chunks_resubmitted, f.chunks_abandoned
+            );
+        }
+        if csv {
+            let path = svc_metrics::write_csv(&report.results, "service_jobs.csv")?;
+            println!("wrote {}", path.display());
+        }
+        return Ok(());
+    }
 
     let prios = [Priority::Low, Priority::Normal, Priority::High];
     for (i, spec) in specs.into_iter().enumerate() {

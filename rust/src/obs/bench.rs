@@ -167,18 +167,152 @@ pub fn bench_predcache_io(cfg: BenchConfig) -> Result<Json> {
         ))
 }
 
+/// HTTP ingest: sustained submit + poll + stream against a live
+/// loopback front-end, one raw `Connection: close` request per call —
+/// the cost a `curl`-driven client actually pays, including connection
+/// setup, parsing and chunked-stream framing. Reports jobs/s and
+/// request-latency percentiles across every request of the run.
+pub fn bench_http_ingest(cfg: BenchConfig) -> Result<Json> {
+    use std::io::{Read as _, Write as _};
+    use std::net::TcpStream;
+
+    use crate::service::http::{HttpConfig, HttpFrontend, TokenTable};
+
+    let (jobs, per_tile) = if cfg.smoke {
+        (4usize, Duration::from_micros(200))
+    } else {
+        (16usize, Duration::from_millis(1))
+    };
+    let analyzer: Arc<dyn Analyzer> =
+        Arc::new(DelayAnalyzer::new(OracleAnalyzer::new(1), per_tile));
+    let svc = Arc::new(AnalysisService::start(
+        analyzer,
+        ServiceConfig {
+            workers: 4,
+            queue_capacity: jobs,
+            max_in_flight: 4,
+            batch: 8,
+            policy: PolicySpec::fifo(),
+            ..ServiceConfig::default()
+        },
+    ));
+    let tokens =
+        TokenTable::parse("bench-a lab_a\nbench-b lab_b\n").map_err(anyhow::Error::msg)?;
+    let fe = HttpFrontend::start(Arc::clone(&svc), HttpConfig::new("127.0.0.1:0", tokens))
+        .map_err(anyhow::Error::msg)?;
+    let addr = fe.addr();
+    let d = dataset(cfg.smoke);
+
+    let mut req_ms: Vec<f64> = Vec::new();
+    let mut request = |raw: String| -> Result<(u16, Vec<u8>)> {
+        let t = Instant::now();
+        let mut s = TcpStream::connect(addr)?;
+        s.write_all(raw.as_bytes())?;
+        let mut buf = Vec::new();
+        s.read_to_end(&mut buf)?;
+        req_ms.push(t.elapsed().as_secs_f64() * 1e3);
+        let head = buf
+            .windows(4)
+            .position(|w| w == b"\r\n\r\n")
+            .ok_or_else(|| anyhow::anyhow!("response without head"))?;
+        if buf.len() < 12 || !buf.starts_with(b"HTTP/1.1 ") {
+            anyhow::bail!("malformed status line");
+        }
+        let status: u16 = std::str::from_utf8(&buf[9..12])?.parse()?;
+        Ok((status, buf.split_off(head + 4)))
+    };
+
+    let t0 = Instant::now();
+    let mut ids = Vec::new();
+    for i in 0..jobs {
+        let body = Json::obj()
+            .set(
+                "slide",
+                Json::obj()
+                    .set("id", format!("bench_http_{i}"))
+                    .set("seed", 300 + i as u64)
+                    .set("tiles_x", d.tiles_x)
+                    .set("tiles_y", d.tiles_y)
+                    .set("levels", d.levels)
+                    .set("tile_px", d.tile_px)
+                    .set("kind", ["large_tumor", "small_scattered", "negative"][i % 3]),
+            )
+            .to_string();
+        let token = ["bench-a", "bench-b"][i % 2];
+        let raw = format!(
+            "POST /v1/jobs HTTP/1.1\r\nHost: b\r\nAuthorization: Bearer {token}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+            body.len()
+        );
+        let (status, resp) = request(raw)?;
+        if status != 201 {
+            anyhow::bail!("submit {i} answered {status}");
+        }
+        let v = Json::parse(std::str::from_utf8(&resp)?)?;
+        ids.push((v.get("job")?.as_u64()?, token));
+    }
+    let mut stream_bytes = 0usize;
+    for &(id, token) in &ids {
+        let raw = format!(
+            "GET /v1/jobs/{id} HTTP/1.1\r\nHost: b\r\nAuthorization: Bearer {token}\r\nConnection: close\r\n\r\n"
+        );
+        let (status, _) = request(raw)?;
+        if status != 200 {
+            anyhow::bail!("status poll for job {id} answered {status}");
+        }
+        let raw = format!(
+            "GET /v1/jobs/{id}/result HTTP/1.1\r\nHost: b\r\nAuthorization: Bearer {token}\r\nConnection: close\r\n\r\n"
+        );
+        let (status, body) = request(raw)?;
+        if status != 200 {
+            anyhow::bail!("result stream for job {id} answered {status}");
+        }
+        if !body.windows(11).any(|w| w == b"\"done\":true") {
+            anyhow::bail!("stream for job {id} ended without a terminal line");
+        }
+        stream_bytes += body.len();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    fe.stop();
+    let report = Arc::try_unwrap(svc)
+        .map_err(|_| anyhow::anyhow!("front-end left live service handles"))?
+        .shutdown();
+    if report.metrics.completed != jobs {
+        anyhow::bail!(
+            "{} of {jobs} HTTP-submitted jobs completed",
+            report.metrics.completed
+        );
+    }
+    let requests = req_ms.len();
+    Ok(Json::obj()
+        .set("jobs", jobs as f64)
+        .set("requests", requests as f64)
+        .set("wall_s", wall)
+        .set("jobs_per_sec", jobs as f64 / wall.max(1e-9))
+        .set("req_ms_p50", percentile(&req_ms, 50.0))
+        .set("req_ms_p95", percentile(&req_ms, 95.0))
+        .set("stream_bytes", stream_bytes as f64)
+        .set(
+            "stream_mb_per_s",
+            stream_bytes as f64 / 1e6 / wall.max(1e-9),
+        ))
+}
+
 /// Run every bench and assemble the `BENCH_<n>.json` document, embedding
 /// the end-of-run global metrics snapshot.
 pub fn run_benches(cfg: BenchConfig, label: u64) -> Result<Json> {
     let service = bench_service_e2e(cfg);
     let predcache = bench_predcache_io(cfg)?;
+    let http = bench_http_ingest(cfg)?;
     Ok(Json::obj()
         .set("schema", "pyramidai-bench-v1")
         .set("label", label as f64)
         .set("smoke", cfg.smoke)
         .set(
             "benches",
-            Json::obj().set("service_e2e", service).set("predcache_io", predcache),
+            Json::obj()
+                .set("service_e2e", service)
+                .set("predcache_io", predcache)
+                .set("http_ingest", http),
         )
         .set("metrics", metrics::global().snapshot().to_json()))
 }
@@ -206,6 +340,15 @@ pub fn validate_bench_json(doc: &Json) -> std::result::Result<(), String> {
     for k in ["load_mb_per_s", "save_s", "decode_us_p50", "decode_us_p95"] {
         if pc.opt(k).and_then(|v| v.as_f64().ok()).is_none() {
             return Err(format!("predcache_io missing {k}"));
+        }
+    }
+    // http_ingest joined the suite later; docs from before it are still
+    // valid v1, but when the section is present its keys are mandatory.
+    if let Some(http) = benches.opt("http_ingest") {
+        for k in ["jobs_per_sec", "req_ms_p50", "req_ms_p95", "wall_s"] {
+            if http.opt(k).and_then(|v| v.as_f64().ok()).is_none() {
+                return Err(format!("http_ingest missing {k}"));
+            }
         }
     }
     Ok(())
@@ -250,6 +393,16 @@ mod tests {
             .as_f64()
             .unwrap();
         assert!(tps > 0.0);
+        let jps = doc
+            .get("benches")
+            .unwrap()
+            .get("http_ingest")
+            .unwrap()
+            .get("jobs_per_sec")
+            .unwrap()
+            .as_f64()
+            .unwrap();
+        assert!(jps > 0.0, "http ingest bench must push jobs through");
         // Round-trip through text like the checked-in file will.
         let reparsed = Json::parse(&doc.to_pretty()).unwrap();
         validate_bench_json(&reparsed).unwrap();

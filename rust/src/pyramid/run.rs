@@ -285,6 +285,32 @@ impl PyramidRun {
         self.tree.total_analyzed()
     }
 
+    /// Number of pyramid levels in this run's tree.
+    pub fn levels(&self) -> usize {
+        self.tree.levels
+    }
+
+    /// The initial working set (tiles surviving background removal) this
+    /// run descends from.
+    pub fn initial(&self) -> &[crate::slide::tile::TileId] {
+        &self.tree.initial
+    }
+
+    /// Is `level` *final* — fully analyzed and recorded in the tree, never
+    /// to change again? True for every level above the current one and for
+    /// all levels once the run completes. Progressive consumers (the HTTP
+    /// result stream) publish a level's nodes exactly when it flips final.
+    pub fn level_final(&self, level: usize) -> bool {
+        self.complete || level > self.level
+    }
+
+    /// The recorded nodes of one level, in frontier order. Empty until
+    /// [`PyramidRun::level_final`] reports the level final (or when the
+    /// run never zoomed that deep).
+    pub fn level_nodes(&self, level: usize) -> &[ExecNode] {
+        &self.tree.nodes[level]
+    }
+
     /// Consume the run and return the execution tree. For a complete run
     /// this is the full tree; for an abandoned run (cancellation at a
     /// frontier boundary) it contains exactly the fully completed levels —

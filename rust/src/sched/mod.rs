@@ -191,20 +191,72 @@ pub fn pick_preemption_victim(
     running: &[SchedCandidate<'_>],
     ctx: &SchedContext<'_>,
 ) -> Option<usize> {
-    let incoming = waiting[pick_admission(policy, waiting, ctx)?];
-    let mut preemptible: Vec<usize> = (0..running.len())
-        .filter(|&i| policy.preempts(&incoming, &running[i], ctx))
-        .collect();
-    if preemptible.is_empty() {
-        return None;
+    pick_preemption_victims(policy, waiting, running, ctx, 1)
+        .into_iter()
+        .next()
+        .map(|(_, victim)| victim)
+}
+
+/// Multi-victim generalization of [`pick_preemption_victim`]: repeatedly
+/// pair the best admissible waiter with the policy-worst running
+/// candidate it preempts, removing both from contention, until `max`
+/// pairs are formed or no further preemption is justified. Returns
+/// `(waiting_index, running_index)` pairs — decision order, so schedulers
+/// can park several victims in one pass instead of serializing one park
+/// per frontier boundary. The single-victim helper is the `max = 1`
+/// special case, so existing callers keep byte-identical decisions.
+pub fn pick_preemption_victims(
+    policy: &dyn SchedulingPolicy,
+    waiting: &[SchedCandidate<'_>],
+    running: &[SchedCandidate<'_>],
+    ctx: &SchedContext<'_>,
+    max: usize,
+) -> Vec<(usize, usize)> {
+    let mut pairs = Vec::new();
+    let mut waiters: Vec<usize> = (0..waiting.len()).collect();
+    let mut runners: Vec<usize> = (0..running.len()).collect();
+    while pairs.len() < max && !waiters.is_empty() && !runners.is_empty() {
+        let wsub: Vec<SchedCandidate<'_>> = waiters.iter().map(|&i| waiting[i]).collect();
+        let Some(wbest) = pick_admission(policy, &wsub, ctx) else {
+            break;
+        };
+        let incoming = wsub[wbest];
+        let mut preemptible: Vec<usize> = runners
+            .iter()
+            .copied()
+            .filter(|&i| policy.preempts(&incoming, &running[i], ctx))
+            .collect();
+        if preemptible.is_empty() {
+            break;
+        }
+        while preemptible.len() > 1 {
+            let cands: Vec<SchedCandidate<'_>> =
+                preemptible.iter().map(|&i| running[i]).collect();
+            let best = policy.select(&cands, ctx).expect("nonempty candidate set");
+            preemptible.remove(best);
+        }
+        let victim = preemptible[0];
+        pairs.push((waiters[wbest], victim));
+        waiters.remove(wbest);
+        runners.retain(|&i| i != victim);
     }
-    while preemptible.len() > 1 {
-        let cands: Vec<SchedCandidate<'_>> =
-            preemptible.iter().map(|&i| running[i]).collect();
-        let best = policy.select(&cands, ctx).expect("nonempty candidate set");
-        preemptible.remove(best);
+    pairs
+}
+
+/// Starvation aging for parked jobs: the effective priority rank of a
+/// candidate that has waited `waited` clock units grows by one rank per
+/// `interval` (saturating at `u8::MAX`). `interval == 0` disables aging.
+/// Both the service scheduler and the simulator feed parked candidates
+/// through this before consulting the policy, so a low-priority job
+/// parked under sustained high-priority load eventually outranks fresh
+/// arrivals and resumes — the same arithmetic in both worlds keeps the
+/// parity tests exact.
+pub fn aged_rank(base: u8, waited: u64, interval: u64) -> u8 {
+    if interval == 0 {
+        return base;
     }
-    Some(preemptible[0])
+    let boost = (waited / interval).min(u8::MAX as u64) as u8;
+    base.saturating_add(boost)
 }
 
 /// Select helper: minimize a key, break ties by lowest job id.
@@ -716,6 +768,45 @@ mod tests {
             pick_preemption_victim(&StrictPriority, &[], &running, &c),
             None
         );
+    }
+
+    #[test]
+    fn pick_preemption_victims_pairs_waiters_with_worst_runners() {
+        let usage = HashMap::new();
+        let running_m = HashMap::new();
+        let c = ctx(&usage, &running_m);
+        // Two high-rank waiters, three running jobs of ranks 0/1/2.
+        let waiting = [cand(10, 3, "a"), cand(11, 3, "a")];
+        let running = [cand(1, 1, "a"), cand(2, 0, "a"), cand(3, 2, "a")];
+        let pairs =
+            pick_preemption_victims(&StrictPriority, &waiting, &running, &c, 8);
+        // First pair: best waiter (id 10) evicts the rank-0 job; second
+        // pair: remaining waiter evicts the rank-1 job. The rank-2 peer
+        // is never preemptible (equal rank).
+        assert_eq!(pairs, vec![(0, 1), (1, 0)]);
+        // max bounds the pair count and the first pair matches the
+        // singular helper exactly.
+        let one = pick_preemption_victims(&StrictPriority, &waiting, &running, &c, 1);
+        assert_eq!(one, vec![(0, 1)]);
+        assert_eq!(
+            pick_preemption_victim(&StrictPriority, &waiting, &running, &c),
+            Some(1)
+        );
+        // No waiters or no preemptible runners → no pairs.
+        assert!(pick_preemption_victims(&StrictPriority, &[], &running, &c, 4).is_empty());
+        let peers = [cand(1, 3, "a")];
+        assert!(pick_preemption_victims(&StrictPriority, &waiting, &peers, &c, 4).is_empty());
+    }
+
+    #[test]
+    fn aged_rank_boosts_per_interval_and_saturates() {
+        assert_eq!(aged_rank(1, 0, 100), 1);
+        assert_eq!(aged_rank(1, 99, 100), 1);
+        assert_eq!(aged_rank(1, 100, 100), 2);
+        assert_eq!(aged_rank(1, 350, 100), 4);
+        assert_eq!(aged_rank(1, u64::MAX, 1), u8::MAX, "saturates");
+        assert_eq!(aged_rank(250, 1000, 100), u8::MAX, "saturating add");
+        assert_eq!(aged_rank(1, 10_000, 0), 1, "interval 0 disables aging");
     }
 
     #[test]

@@ -1,0 +1,462 @@
+//! Job progress board: the publication seam between the scheduler and
+//! progressive result consumers (the HTTP front-end).
+//!
+//! The scheduler owns every [`PyramidRun`] and steps it privately; an
+//! external consumer streaming a result must never reach into that state.
+//! Instead the scheduler *publishes* onto this board at well-defined
+//! moments — admission, every feed that finalizes a pyramid level,
+//! park/resume, and the terminal record — and consumers block on a
+//! condvar for new per-level deltas. Because a level's nodes are
+//! immutable once [`PyramidRun::level_final`] reports it final, each
+//! delta is published exactly once and the concatenation of all deltas
+//! plus the initial set reassembles the byte-identical [`ExecTree`] the
+//! scheduler finalizes.
+//!
+//! The board is bounded: terminal entries beyond [`JobBoard::new`]'s
+//! capacity are evicted oldest-first, so a long-lived `serve` process
+//! does not accumulate one tree clone per job forever. Consumers of an
+//! evicted job observe "unknown job", the same as a never-submitted id.
+//!
+//! [`PyramidRun`]: crate::pyramid::PyramidRun
+//! [`PyramidRun::level_final`]: crate::pyramid::PyramidRun::level_final
+//! [`ExecTree`]: crate::pyramid::tree::ExecTree
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::pyramid::tree::ExecNode;
+use crate::pyramid::PyramidRun;
+use crate::slide::tile::TileId;
+
+use super::job::{JobId, JobResult};
+
+/// Where a job currently is in its service lifecycle, as visible to
+/// external observers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobPhase {
+    /// Waiting in the admission queue.
+    Queued,
+    /// In the running set, being stepped by the scheduler.
+    Running,
+    /// Suspended at a level-frontier boundary (preempted), waiting to
+    /// resume.
+    Parked,
+    /// Terminal: completed, cancelled, expired or failed — the
+    /// [`JobResult`] on the entry is authoritative.
+    Done,
+}
+
+impl JobPhase {
+    /// Stable name for the wire protocol and tables.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            JobPhase::Queued => "queued",
+            JobPhase::Running => "running",
+            JobPhase::Parked => "parked",
+            JobPhase::Done => "done",
+        }
+    }
+}
+
+/// One published per-level tree delta: every node of one pyramid level,
+/// in frontier order, published exactly once when the level became final.
+#[derive(Debug, Clone)]
+pub struct LevelDelta {
+    /// The finalized pyramid level.
+    pub level: usize,
+    /// Its recorded nodes (frontier order — the same order
+    /// [`crate::pyramid::tree::ExecTree`] serializes).
+    pub nodes: Vec<ExecNode>,
+}
+
+/// Observer-facing snapshot of one job's board entry (deltas elided —
+/// stream those with [`JobBoard::wait_deltas`]).
+#[derive(Debug, Clone)]
+pub struct JobView {
+    /// The analyzed slide.
+    pub slide_id: String,
+    /// Owning tenant (authorization boundary for the HTTP API).
+    pub tenant: String,
+    /// Pyramid depth of the slide.
+    pub levels: usize,
+    /// Level-0 grid (tiles_x, tiles_y) when known — the heatmap canvas.
+    pub grid: Option<(usize, usize)>,
+    /// Current lifecycle phase.
+    pub phase: JobPhase,
+    /// The initial working set (tiles surviving background removal);
+    /// empty until the job starts.
+    pub initial: Vec<TileId>,
+    /// Per-level deltas published so far.
+    pub delta_count: usize,
+    /// Tiles across all published deltas.
+    pub tiles_streamed: usize,
+    /// Frontier-boundary preemptions suffered so far.
+    pub preemptions: usize,
+    /// Terminal record, once [`JobPhase::Done`].
+    pub result: Option<JobResult>,
+}
+
+struct Entry {
+    slide_id: String,
+    tenant: String,
+    levels: usize,
+    grid: Option<(usize, usize)>,
+    phase: JobPhase,
+    initial: Vec<TileId>,
+    deltas: Vec<LevelDelta>,
+    /// Per-level "already published" flags.
+    published: Vec<bool>,
+    preemptions: usize,
+    result: Option<JobResult>,
+    /// Eviction stamp, set when the entry turns terminal.
+    done_at: Option<Instant>,
+}
+
+impl Entry {
+    fn view(&self) -> JobView {
+        JobView {
+            slide_id: self.slide_id.clone(),
+            tenant: self.tenant.clone(),
+            levels: self.levels,
+            grid: self.grid,
+            phase: self.phase,
+            initial: self.initial.clone(),
+            delta_count: self.deltas.len(),
+            tiles_streamed: self.deltas.iter().map(|d| d.nodes.len()).sum(),
+            preemptions: self.preemptions,
+            result: self.result.clone(),
+        }
+    }
+}
+
+/// Shared progress board (see the module docs). One per
+/// [`crate::service::AnalysisService`]; cheap to share behind an `Arc`.
+pub struct JobBoard {
+    inner: Mutex<Inner>,
+    changed: Condvar,
+    /// Max terminal entries retained before oldest-first eviction.
+    capacity: usize,
+}
+
+struct Inner {
+    entries: HashMap<JobId, Entry>,
+    /// Terminal ids in completion order (the eviction queue).
+    done_order: VecDeque<JobId>,
+}
+
+impl JobBoard {
+    /// A board retaining at most `capacity` terminal entries (live
+    /// entries are never evicted). Capacity is clamped to ≥ 1.
+    pub fn new(capacity: usize) -> JobBoard {
+        JobBoard {
+            inner: Mutex::new(Inner {
+                entries: HashMap::new(),
+                done_order: VecDeque::new(),
+            }),
+            changed: Condvar::new(),
+            capacity: capacity.max(1),
+        }
+    }
+
+    /// Upsert an entry without regressing scheduler-made progress: the
+    /// submit path and the scheduler race to create the entry, and
+    /// whichever loses must not clobber phase or deltas.
+    fn ensure<'a>(
+        inner: &'a mut Inner,
+        id: JobId,
+        slide_id: &str,
+        tenant: &str,
+        levels: usize,
+    ) -> &'a mut Entry {
+        inner.entries.entry(id).or_insert_with(|| Entry {
+            slide_id: slide_id.to_string(),
+            tenant: tenant.to_string(),
+            levels,
+            grid: None,
+            phase: JobPhase::Queued,
+            initial: Vec::new(),
+            deltas: Vec::new(),
+            published: vec![false; levels],
+            preemptions: 0,
+            result: None,
+            done_at: None,
+        })
+    }
+
+    /// Register a submitted job (submit path; no-op when the scheduler
+    /// already created the entry).
+    pub fn submitted(&self, id: JobId, slide_id: &str, tenant: &str, levels: usize) {
+        let mut inner = self.inner.lock().unwrap();
+        Self::ensure(&mut inner, id, slide_id, tenant, levels);
+        drop(inner);
+        self.changed.notify_all();
+    }
+
+    /// The job entered the running set (scheduler path): record the
+    /// initial working set and the level-0 grid, flip to
+    /// [`JobPhase::Running`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn started(
+        &self,
+        id: JobId,
+        slide_id: &str,
+        tenant: &str,
+        levels: usize,
+        grid: Option<(usize, usize)>,
+        initial: &[TileId],
+    ) {
+        let mut inner = self.inner.lock().unwrap();
+        let e = Self::ensure(&mut inner, id, slide_id, tenant, levels);
+        if e.phase != JobPhase::Done {
+            e.phase = JobPhase::Running;
+        }
+        e.grid = grid;
+        e.initial = initial.to_vec();
+        drop(inner);
+        self.changed.notify_all();
+    }
+
+    /// Phase transition for an existing entry (park/resume). Unknown ids
+    /// and terminal entries are left untouched.
+    pub fn phase(&self, id: JobId, phase: JobPhase) {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(e) = inner.entries.get_mut(&id) {
+            if e.phase != JobPhase::Done {
+                e.phase = phase;
+                if phase == JobPhase::Parked {
+                    e.preemptions += 1;
+                }
+            }
+        }
+        drop(inner);
+        self.changed.notify_all();
+    }
+
+    /// Publish every newly-final level of `run` as one delta each
+    /// (descending level order — the order levels finalize). Idempotent:
+    /// already-published levels are skipped, so callers may invoke this
+    /// after every feed.
+    pub fn progress(&self, id: JobId, run: &PyramidRun) {
+        let mut inner = self.inner.lock().unwrap();
+        let Some(e) = inner.entries.get_mut(&id) else {
+            return;
+        };
+        let mut published_any = false;
+        for level in (0..run.levels().min(e.published.len())).rev() {
+            if e.published[level] || !run.level_final(level) {
+                continue;
+            }
+            e.published[level] = true;
+            e.deltas.push(LevelDelta {
+                level,
+                nodes: run.level_nodes(level).to_vec(),
+            });
+            published_any = true;
+        }
+        drop(inner);
+        if published_any {
+            self.changed.notify_all();
+        }
+    }
+
+    /// Publish the terminal record. Any levels of the final tree not yet
+    /// streamed (e.g. a cancelled run's completed levels) are published
+    /// first, so the delta stream is always complete when the terminal
+    /// line lands. Also enforces the terminal-entry retention bound.
+    pub fn finished(&self, id: JobId, result: &JobResult) {
+        let mut inner = self.inner.lock().unwrap();
+        let e = Self::ensure(
+            &mut inner,
+            id,
+            &result.slide_id,
+            &result.tenant,
+            result.tree.as_ref().map(|t| t.levels).unwrap_or(0),
+        );
+        if e.phase == JobPhase::Done {
+            drop(inner);
+            return; // already terminal (duplicate event)
+        }
+        if let Some(tree) = &result.tree {
+            if e.initial.is_empty() {
+                e.initial = tree.initial.clone();
+            }
+            for level in (0..tree.levels.min(e.published.len())).rev() {
+                if e.published[level] {
+                    continue;
+                }
+                // A terminal tree's unpublished levels are final by
+                // definition (completed runs) or empty-but-final
+                // (cancelled runs never record partial frontiers).
+                e.published[level] = true;
+                e.deltas.push(LevelDelta {
+                    level,
+                    nodes: tree.nodes[level].clone(),
+                });
+            }
+        }
+        e.phase = JobPhase::Done;
+        e.preemptions = result.preemptions;
+        e.result = Some(result.clone());
+        e.done_at = Some(Instant::now());
+        inner.done_order.push_back(id);
+        while inner.done_order.len() > self.capacity {
+            if let Some(old) = inner.done_order.pop_front() {
+                inner.entries.remove(&old);
+            }
+        }
+        drop(inner);
+        self.changed.notify_all();
+    }
+
+    /// Observer snapshot of one job (deltas elided). `None` for unknown
+    /// or evicted ids.
+    pub fn snapshot(&self, id: JobId) -> Option<JobView> {
+        self.inner.lock().unwrap().entries.get(&id).map(Entry::view)
+    }
+
+    /// Block until the job has more than `seen` deltas, turns terminal,
+    /// or `timeout` elapses; returns the deltas past `seen` plus the
+    /// current view. `None` for unknown/evicted ids — including an entry
+    /// evicted *while* waiting.
+    pub fn wait_deltas(
+        &self,
+        id: JobId,
+        seen: usize,
+        timeout: Duration,
+    ) -> Option<(Vec<LevelDelta>, JobView)> {
+        let deadline = Instant::now() + timeout;
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            let e = inner.entries.get(&id)?;
+            if e.deltas.len() > seen || e.phase == JobPhase::Done {
+                return Some((e.deltas[seen.min(e.deltas.len())..].to_vec(), e.view()));
+            }
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                let e = inner.entries.get(&id)?;
+                return Some((Vec::new(), e.view()));
+            }
+            let (guard, _) = self.changed.wait_timeout(inner, left).unwrap();
+            inner = guard;
+        }
+    }
+
+    /// Live (non-terminal) entries on the board.
+    pub fn live(&self) -> usize {
+        self.inner
+            .lock()
+            .unwrap()
+            .entries
+            .values()
+            .filter(|e| e.phase != JobPhase::Done)
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pyramid::tree::Thresholds;
+    use crate::service::job::JobState;
+
+    fn result(id: JobId, tree: Option<crate::pyramid::tree::ExecTree>) -> JobResult {
+        JobResult {
+            id,
+            slide_id: "b".into(),
+            tenant: "t".into(),
+            priority: crate::service::Priority::Normal,
+            state: JobState::Completed,
+            tree,
+            queue_wait: Duration::ZERO,
+            run_time: Duration::ZERO,
+            tiles: 0,
+            preemptions: 0,
+        }
+    }
+
+    #[test]
+    fn progress_publishes_each_level_once_in_finalization_order() {
+        let board = JobBoard::new(8);
+        let thr = Thresholds::uniform(2, 0.5);
+        let mut run = PyramidRun::new("b", 2, vec![TileId::new(1, 0, 0)], thr, 0);
+        board.started(7, "b", "t", 2, Some((2, 2)), &[TileId::new(1, 0, 0)]);
+        board.progress(7, &run); // nothing final yet
+        assert_eq!(board.snapshot(7).unwrap().delta_count, 0);
+
+        let req = run.next_request().unwrap();
+        run.feed(req.id, vec![0.9]).unwrap();
+        board.progress(7, &run); // level 1 final
+        board.progress(7, &run); // idempotent
+        let v = board.snapshot(7).unwrap();
+        assert_eq!(v.delta_count, 1);
+        assert_eq!(v.tiles_streamed, 1);
+
+        let req = run.next_request().unwrap();
+        run.feed(req.id, vec![0.1, 0.2, 0.3, 0.4]).unwrap();
+        board.progress(7, &run);
+        let (deltas, v) = board
+            .wait_deltas(7, 0, Duration::from_millis(1))
+            .expect("entry exists");
+        assert_eq!(v.delta_count, 2);
+        assert_eq!(deltas.len(), 2);
+        assert_eq!(deltas[0].level, 1, "levels publish top-down");
+        assert_eq!(deltas[1].level, 0);
+        assert_eq!(deltas[1].nodes.len(), 4);
+    }
+
+    #[test]
+    fn finished_backfills_unstreamed_levels_and_bounds_retention() {
+        let board = JobBoard::new(1);
+        let thr = Thresholds::uniform(2, 0.5);
+        let mut run = PyramidRun::new("b", 2, vec![TileId::new(1, 0, 0)], thr, 0);
+        let req = run.next_request().unwrap();
+        run.feed(req.id, vec![0.9]).unwrap();
+        let req = run.next_request().unwrap();
+        run.feed(req.id, vec![0.1, 0.2, 0.3, 0.4]).unwrap();
+        let tree = run.finish();
+
+        board.submitted(1, "b", "t", 2);
+        board.finished(1, &result(1, Some(tree.clone())));
+        let v = board.snapshot(1).unwrap();
+        assert_eq!(v.phase, JobPhase::Done);
+        assert_eq!(v.delta_count, 2, "terminal publish backfills all levels");
+        assert_eq!(v.initial, tree.initial);
+
+        // Capacity 1: a second terminal entry evicts the first.
+        board.submitted(2, "b2", "t", 2);
+        board.finished(2, &result(2, None));
+        assert!(board.snapshot(1).is_none(), "oldest terminal entry evicted");
+        assert!(board.snapshot(2).is_some());
+        assert_eq!(board.live(), 0);
+    }
+
+    #[test]
+    fn wait_deltas_times_out_with_a_view_and_none_for_unknown() {
+        let board = JobBoard::new(4);
+        assert!(board.wait_deltas(99, 0, Duration::from_millis(1)).is_none());
+        board.submitted(3, "b", "t", 2);
+        let (deltas, v) = board
+            .wait_deltas(3, 0, Duration::from_millis(5))
+            .expect("known job");
+        assert!(deltas.is_empty());
+        assert_eq!(v.phase, JobPhase::Queued);
+        assert_eq!(board.live(), 1);
+    }
+
+    #[test]
+    fn phase_transitions_count_preemptions_and_respect_terminal() {
+        let board = JobBoard::new(4);
+        board.submitted(5, "b", "t", 2);
+        board.phase(5, JobPhase::Running);
+        board.phase(5, JobPhase::Parked);
+        board.phase(5, JobPhase::Running);
+        board.phase(5, JobPhase::Parked);
+        let v = board.snapshot(5).unwrap();
+        assert_eq!(v.phase, JobPhase::Parked);
+        assert_eq!(v.preemptions, 2);
+        board.finished(5, &result(5, None));
+        board.phase(5, JobPhase::Running); // must not resurrect
+        assert_eq!(board.snapshot(5).unwrap().phase, JobPhase::Done);
+    }
+}

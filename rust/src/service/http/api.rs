@@ -1,0 +1,706 @@
+//! Request routing and handlers: the REST surface over the admission
+//! queue, scheduler board and metrics registry.
+//!
+//! | Route | Semantics |
+//! |---|---|
+//! | `POST /v1/jobs` | submit a SlideSpec job → `201` + job id |
+//! | `GET /v1/jobs/{id}` | status + progress counters |
+//! | `DELETE /v1/jobs/{id}` | cancel at the next frontier boundary |
+//! | `GET /v1/jobs/{id}/result` | progressive JSONL delta stream (or `?format=png`) |
+//! | `GET /v1/metrics` | scheduler + HTTP metrics snapshot |
+//! | `GET /healthz` | unauthenticated liveness probe |
+//!
+//! Every `/v1/*` route requires a bearer token; the resolved tenant is
+//! both the scheduler's fair-share key and the authorization boundary —
+//! a job submitted by tenant A does not exist for tenant B (`404`, not
+//! `403`, so ids don't leak). Backpressure surfaces as
+//! `429 Too Many Requests` with a `Retry-After` hint; the client
+//! decides whether to retry or shed, exactly like an in-process
+//! [`SubmitError::QueueFull`] consumer.
+
+use std::io::Write;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::obs::metrics::{Counter, Histogram};
+use crate::obs::{self, Level};
+use crate::pyramid::tree::{ExecNode, Thresholds};
+use crate::service::board::{JobBoard, JobPhase, JobView};
+use crate::service::job::{JobSource, JobSpec, Priority};
+use crate::service::{AnalysisService, SubmitError};
+use crate::slide::tile::TileId;
+use crate::synth::slide_gen::{SlideKind, SlideSpec};
+use crate::util::json::Json;
+
+use super::auth::TokenTable;
+use super::parser::Request;
+use super::wire::{respond, respond_error, ChunkedWriter};
+
+/// Hard caps on submitted slide geometry, enforced before
+/// [`SlideSpec::new`] ever sees the values (its own validation panics —
+/// fine for internal callers, unacceptable for wire input).
+const MAX_LEVELS: usize = 12;
+const MAX_GRID: usize = 1 << 13;
+const MAX_TILE_PX: usize = 4096;
+const MAX_ID_LEN: usize = 160;
+
+/// `http.*` instrument handles, registered once in the service's shared
+/// registry so one snapshot carries both `sched.*` and `http.*`.
+struct HttpMetrics {
+    requests: Arc<Counter>,
+    responses_2xx: Arc<Counter>,
+    responses_4xx: Arc<Counter>,
+    responses_5xx: Arc<Counter>,
+    parse_errors: Arc<Counter>,
+    auth_failures: Arc<Counter>,
+    jobs_submitted: Arc<Counter>,
+    jobs_cancelled: Arc<Counter>,
+    rejected_queue_full: Arc<Counter>,
+    bytes_streamed: Arc<Counter>,
+    latency_us: Arc<Histogram>,
+}
+
+impl HttpMetrics {
+    fn new(reg: &crate::obs::Registry) -> HttpMetrics {
+        HttpMetrics {
+            requests: reg.counter("http.requests"),
+            responses_2xx: reg.counter("http.responses_2xx"),
+            responses_4xx: reg.counter("http.responses_4xx"),
+            responses_5xx: reg.counter("http.responses_5xx"),
+            parse_errors: reg.counter("http.parse_errors"),
+            auth_failures: reg.counter("http.auth_failures"),
+            jobs_submitted: reg.counter("http.jobs_submitted"),
+            jobs_cancelled: reg.counter("http.jobs_cancelled"),
+            rejected_queue_full: reg.counter("http.rejected_queue_full"),
+            bytes_streamed: reg.counter("http.bytes_streamed"),
+            latency_us: reg.histogram("http.request_latency_us"),
+        }
+    }
+
+    fn classify(&self, status: u16) {
+        match status {
+            200..=299 => self.responses_2xx.inc(),
+            400..=499 => self.responses_4xx.inc(),
+            _ => self.responses_5xx.inc(),
+        }
+    }
+}
+
+/// Shared request router: one per front-end, used concurrently by every
+/// connection handler thread.
+pub struct Router {
+    svc: Arc<AnalysisService>,
+    tokens: TokenTable,
+    stop: Arc<AtomicBool>,
+    m: HttpMetrics,
+}
+
+impl Router {
+    /// A router over a running service. `stop` is the front-end's
+    /// shutdown flag — long-lived streams check it so server shutdown
+    /// is not gated on jobs finishing.
+    pub fn new(svc: Arc<AnalysisService>, tokens: TokenTable, stop: Arc<AtomicBool>) -> Router {
+        let m = HttpMetrics::new(&svc.registry());
+        Router { svc, tokens, stop, m }
+    }
+
+    /// Record a parser rejection (the connection loop answers it).
+    pub fn note_parse_error(&self, status: Option<u16>) {
+        self.m.parse_errors.inc();
+        if let Some(s) = status {
+            self.m.requests.inc();
+            self.m.classify(s);
+        }
+    }
+
+    /// Handle one parsed request, writing the complete response to `w`.
+    /// Returns whether the connection may be reused.
+    pub fn handle(&self, req: &Request, w: &mut impl Write) -> std::io::Result<bool> {
+        let start = Instant::now();
+        self.m.requests.inc();
+        let keep = req.keep_alive();
+        let segs: Vec<&str> = req
+            .path
+            .trim_start_matches('/')
+            .trim_end_matches('/')
+            .split('/')
+            .collect();
+        let status = self.dispatch(req, &segs, keep, w)?;
+        self.m.classify(status);
+        self.m.latency_us.record_duration(start.elapsed());
+        obs::event(
+            Level::Trace,
+            "http",
+            "request",
+            &[
+                ("method", req.method.as_str().into()),
+                ("path", req.path.as_str().into()),
+                ("status", status.into()),
+            ],
+        );
+        Ok(keep)
+    }
+
+    fn dispatch(
+        &self,
+        req: &Request,
+        segs: &[&str],
+        keep: bool,
+        w: &mut impl Write,
+    ) -> std::io::Result<u16> {
+        if segs == ["healthz"] {
+            if req.method != "GET" {
+                return self.method_not_allowed(w, "GET", keep);
+            }
+            let body = Json::obj()
+                .set("ok", true)
+                .set("queued", self.svc.queued())
+                .set("live", self.svc.board().live())
+                .to_string();
+            respond(w, 200, "application/json", &[], body.as_bytes(), keep)?;
+            return Ok(200);
+        }
+        if segs.first() != Some(&"v1") {
+            respond_error(w, 404, "unknown route", &[], keep)?;
+            return Ok(404);
+        }
+        // Everything under /v1 is tenant-scoped.
+        let Some(tenant) = self.tokens.tenant(req.header("authorization")) else {
+            self.m.auth_failures.inc();
+            respond_error(
+                w,
+                401,
+                "missing or unknown bearer token",
+                &[("WWW-Authenticate", "Bearer".to_string())],
+                keep,
+            )?;
+            return Ok(401);
+        };
+        let tenant = tenant.to_string();
+        match (req.method.as_str(), &segs[1..]) {
+            ("POST", ["jobs"]) => self.submit(req, &tenant, keep, w),
+            ("GET", ["jobs", id]) => self.status(*id, &tenant, keep, w),
+            ("DELETE", ["jobs", id]) => self.cancel(*id, &tenant, keep, w),
+            ("GET", ["jobs", id, "result"]) => self.result(req, *id, &tenant, keep, w),
+            ("GET", ["metrics"]) => {
+                let body = self.svc.registry().snapshot().to_json().to_string();
+                respond(w, 200, "application/json", &[], body.as_bytes(), keep)?;
+                Ok(200)
+            }
+            (_, ["jobs"]) => self.method_not_allowed(w, "POST", keep),
+            (_, ["jobs", _]) => self.method_not_allowed(w, "GET, DELETE", keep),
+            (_, ["jobs", _, "result"]) | (_, ["metrics"]) => {
+                self.method_not_allowed(w, "GET", keep)
+            }
+            _ => {
+                respond_error(w, 404, "unknown route", &[], keep)?;
+                Ok(404)
+            }
+        }
+    }
+
+    fn method_not_allowed(
+        &self,
+        w: &mut impl Write,
+        allow: &str,
+        keep: bool,
+    ) -> std::io::Result<u16> {
+        respond_error(
+            w,
+            405,
+            "method not allowed",
+            &[("Allow", allow.to_string())],
+            keep,
+        )?;
+        Ok(405)
+    }
+
+    /// The board view of `id` as seen by `tenant`: `None` when the job
+    /// is unknown, evicted, or owned by another tenant — all three are
+    /// indistinguishable on the wire.
+    fn tenant_view(&self, board: &JobBoard, id: u64, tenant: &str) -> Option<JobView> {
+        board.snapshot(id).filter(|v| v.tenant == tenant)
+    }
+
+    // ---- POST /v1/jobs -------------------------------------------------
+
+    fn submit(
+        &self,
+        req: &Request,
+        tenant: &str,
+        keep: bool,
+        w: &mut impl Write,
+    ) -> std::io::Result<u16> {
+        let spec = match parse_submit(&req.body, tenant) {
+            Ok(s) => s,
+            Err(msg) => {
+                respond_error(w, 400, &msg, &[], keep)?;
+                return Ok(400);
+            }
+        };
+        let slide = spec.source.slide_id().to_string();
+        match self.svc.submit(spec) {
+            Ok(id) => {
+                self.m.jobs_submitted.inc();
+                let body = Json::obj()
+                    .set("job", id)
+                    .set("slide", slide.as_str())
+                    .set("tenant", tenant)
+                    .to_string();
+                let loc = ("Location", format!("/v1/jobs/{id}"));
+                respond(w, 201, "application/json", &[loc], body.as_bytes(), keep)?;
+                Ok(201)
+            }
+            Err(SubmitError::QueueFull(cap)) => {
+                self.m.rejected_queue_full.inc();
+                let body = Json::obj()
+                    .set("error", "admission queue full")
+                    .set("capacity", cap)
+                    .set("retry_after", 1u32)
+                    .to_string();
+                let retry = ("Retry-After", "1".to_string());
+                respond(w, 429, "application/json", &[retry], body.as_bytes(), keep)?;
+                Ok(429)
+            }
+            Err(SubmitError::Closed) => {
+                respond_error(w, 503, "service is shutting down", &[], keep)?;
+                Ok(503)
+            }
+            Err(SubmitError::Invalid(msg)) => {
+                respond_error(w, 400, &msg, &[], keep)?;
+                Ok(400)
+            }
+        }
+    }
+
+    // ---- GET /v1/jobs/{id} ---------------------------------------------
+
+    fn status(
+        &self,
+        id: &str,
+        tenant: &str,
+        keep: bool,
+        w: &mut impl Write,
+    ) -> std::io::Result<u16> {
+        let board = self.svc.board();
+        let Some(v) = parse_id(id).and_then(|id| self.tenant_view(&board, id, tenant)) else {
+            respond_error(w, 404, "no such job", &[], keep)?;
+            return Ok(404);
+        };
+        let mut body = Json::obj()
+            .set("job", parse_id(id).unwrap_or(0))
+            .set("slide", v.slide_id.as_str())
+            .set("phase", v.phase.as_str())
+            .set("levels", v.levels)
+            .set("deltas", v.delta_count)
+            .set("tiles_streamed", v.tiles_streamed)
+            .set("preemptions", v.preemptions);
+        if let Some((gx, gy)) = v.grid {
+            body = body.set("grid", vec![gx, gy]);
+        }
+        if let Some(r) = &v.result {
+            body = body
+                .set("state", r.state.as_str())
+                .set("tiles", r.tiles)
+                .set("queue_wait_us", r.queue_wait.as_micros() as u64)
+                .set("run_time_us", r.run_time.as_micros() as u64);
+        }
+        respond(w, 200, "application/json", &[], body.to_string().as_bytes(), keep)?;
+        Ok(200)
+    }
+
+    // ---- DELETE /v1/jobs/{id} ------------------------------------------
+
+    fn cancel(
+        &self,
+        id: &str,
+        tenant: &str,
+        keep: bool,
+        w: &mut impl Write,
+    ) -> std::io::Result<u16> {
+        let board = self.svc.board();
+        let Some(jid) = parse_id(id).filter(|&jid| self.tenant_view(&board, jid, tenant).is_some())
+        else {
+            respond_error(w, 404, "no such job", &[], keep)?;
+            return Ok(404);
+        };
+        let accepted = self.svc.cancel(jid);
+        if accepted {
+            self.m.jobs_cancelled.inc();
+        }
+        let body = Json::obj()
+            .set("job", jid)
+            .set("cancelled", accepted)
+            .to_string();
+        respond(w, 202, "application/json", &[], body.as_bytes(), keep)?;
+        Ok(202)
+    }
+
+    // ---- GET /v1/jobs/{id}/result --------------------------------------
+
+    fn result(
+        &self,
+        req: &Request,
+        id: &str,
+        tenant: &str,
+        keep: bool,
+        w: &mut impl Write,
+    ) -> std::io::Result<u16> {
+        let board = self.svc.board();
+        let Some(jid) = parse_id(id).filter(|&jid| self.tenant_view(&board, jid, tenant).is_some())
+        else {
+            respond_error(w, 404, "no such job", &[], keep)?;
+            return Ok(404);
+        };
+        if req.query_param("format") == Some("png") {
+            return self.result_png(&board, jid, tenant, keep, w);
+        }
+        self.result_stream(&board, jid, tenant, keep, w)
+    }
+
+    /// Block (in shutdown-aware slices) until the job is terminal, then
+    /// render the level-0 probability heatmap as a grayscale PNG.
+    fn result_png(
+        &self,
+        board: &JobBoard,
+        id: u64,
+        tenant: &str,
+        keep: bool,
+        w: &mut impl Write,
+    ) -> std::io::Result<u16> {
+        let view = loop {
+            let Some(v) = self.tenant_view(board, id, tenant) else {
+                respond_error(w, 404, "no such job", &[], keep)?;
+                return Ok(404);
+            };
+            if v.phase == JobPhase::Done {
+                break v;
+            }
+            if self.stop.load(Ordering::Relaxed) {
+                respond_error(w, 503, "server shutting down", &[], false)?;
+                return Ok(503);
+            }
+            let _ = board.wait_deltas(id, v.delta_count, Duration::from_millis(200));
+        };
+        let tree = view.result.as_ref().and_then(|r| r.tree.as_ref());
+        let (Some(tree), Some((gx, gy))) = (tree, view.grid) else {
+            respond_error(w, 409, "job finished without a result tree", &[], keep)?;
+            return Ok(409);
+        };
+        let mut pixels = vec![0u8; gx * gy];
+        for n in &tree.nodes[0] {
+            let (tx, ty) = (n.tile.tx as usize, n.tile.ty as usize);
+            if tx < gx && ty < gy {
+                pixels[ty * gx + tx] = (n.prob.clamp(0.0, 1.0) * 255.0).round() as u8;
+            }
+        }
+        let png = crate::util::png::encode_gray_png(gx, gy, &pixels);
+        self.m.bytes_streamed.add(png.len() as u64);
+        respond(w, 200, "image/png", &[], &png, keep)?;
+        Ok(200)
+    }
+
+    /// Progressive JSONL stream: header line (identity + initial working
+    /// set), one line per finalized level as the scheduler publishes it,
+    /// then a terminal line. The concatenated lines reassemble the
+    /// byte-identical ExecTree of a standalone run.
+    fn result_stream(
+        &self,
+        board: &JobBoard,
+        id: u64,
+        tenant: &str,
+        keep: bool,
+        w: &mut impl Write,
+    ) -> std::io::Result<u16> {
+        // Wait for the initial working set (published when the scheduler
+        // starts the job) so the header line is complete; a job that goes
+        // terminal while queued (cancel/expiry) proceeds with an empty set.
+        let head = loop {
+            let Some(v) = self.tenant_view(board, id, tenant) else {
+                respond_error(w, 404, "no such job", &[], keep)?;
+                return Ok(404);
+            };
+            if !v.initial.is_empty() || v.phase == JobPhase::Done {
+                break v;
+            }
+            if self.stop.load(Ordering::Relaxed) {
+                respond_error(w, 503, "server shutting down", &[], false)?;
+                return Ok(503);
+            }
+            let _ = board.wait_deltas(id, v.delta_count, Duration::from_millis(200));
+        };
+        let mut cw = ChunkedWriter::start(w, 200, "application/x-ndjson", keep)?;
+        let header = Json::obj()
+            .set("job", id)
+            .set("slide", head.slide_id.as_str())
+            .set("levels", head.levels)
+            .set(
+                "initial",
+                Json::Arr(head.initial.iter().map(tile_json).collect()),
+            )
+            .to_string();
+        cw.chunk(format!("{header}\n").as_bytes())?;
+        let mut seen = 0usize;
+        let status = loop {
+            if self.stop.load(Ordering::Relaxed) {
+                cw.chunk(b"{\"error\":\"server shutting down\"}\n")?;
+                break 503;
+            }
+            let Some((deltas, view)) = board.wait_deltas(id, seen, Duration::from_millis(250))
+            else {
+                // Evicted mid-stream (tiny board + heavy churn).
+                cw.chunk(b"{\"error\":\"job evicted from board\"}\n")?;
+                break 500;
+            };
+            seen += deltas.len();
+            for d in &deltas {
+                let line = Json::obj()
+                    .set("level", d.level)
+                    .set(
+                        "nodes",
+                        Json::Arr(d.nodes.iter().map(node_json).collect()),
+                    )
+                    .to_string();
+                cw.chunk(format!("{line}\n").as_bytes())?;
+            }
+            if view.phase == JobPhase::Done {
+                let mut line = Json::obj().set("done", true).set("preemptions", view.preemptions);
+                if let Some(r) = &view.result {
+                    line = line.set("state", r.state.as_str()).set("tiles", r.tiles);
+                }
+                let line = line.to_string();
+                cw.chunk(format!("{line}\n").as_bytes())?;
+                break 200;
+            }
+        };
+        self.m.bytes_streamed.add(cw.sent() as u64);
+        cw.finish()?;
+        Ok(status)
+    }
+}
+
+/// Parse a path segment as a job id.
+fn parse_id(s: &str) -> Option<u64> {
+    if s.is_empty() || s.len() > 19 || !s.bytes().all(|b| b.is_ascii_digit()) {
+        return None;
+    }
+    s.parse().ok()
+}
+
+/// `[level, tx, ty]` — the ExecTree initial-set wire form.
+fn tile_json(t: &TileId) -> Json {
+    Json::Arr(vec![
+        Json::Num(t.level as f64),
+        Json::Num(t.tx as f64),
+        Json::Num(t.ty as f64),
+    ])
+}
+
+/// `[level, tx, ty, prob, zoom]` — the ExecTree node wire form.
+fn node_json(n: &ExecNode) -> Json {
+    Json::Arr(vec![
+        Json::Num(n.tile.level as f64),
+        Json::Num(n.tile.tx as f64),
+        Json::Num(n.tile.ty as f64),
+        Json::Num(n.prob as f64),
+        Json::Bool(n.zoom),
+    ])
+}
+
+/// Parse and validate a submission body into a [`JobSpec`] for `tenant`.
+///
+/// Body shape:
+/// ```json
+/// {
+///   "slide": {"id": "...", "seed": 1, "tiles_x": 48, "tiles_y": 32,
+///             "levels": 3, "tile_px": 64, "kind": "large_tumor"},
+///   "thresholds": 0.35,            // or [0.35, 0.35, 0.35]; optional
+///   "priority": "normal",          // optional
+///   "deadline_ms": 5000            // optional
+/// }
+/// ```
+///
+/// Geometry is bounded and checked *here*, because [`SlideSpec::new`]
+/// asserts — a panic is fine for internal misuse but must never be
+/// reachable from the wire.
+fn parse_submit(body: &[u8], tenant: &str) -> Result<JobSpec, String> {
+    let text = std::str::from_utf8(body).map_err(|_| "body is not UTF-8".to_string())?;
+    let v = Json::parse(text).map_err(|e| e.to_string())?;
+    let slide = v.get("slide").map_err(|e| e.to_string())?;
+    let spec = parse_slide(slide)?;
+    let levels = spec.levels;
+    let thresholds = match v.opt("thresholds") {
+        None => Thresholds::uniform(levels, 0.35),
+        Some(Json::Num(t)) => {
+            if !t.is_finite() {
+                return Err("thresholds must be finite".to_string());
+            }
+            Thresholds::uniform(levels, *t)
+        }
+        Some(Json::Arr(a)) => {
+            if a.len() != levels {
+                return Err(format!(
+                    "thresholds has {} entries for {} levels",
+                    a.len(),
+                    levels
+                ));
+            }
+            let zoom = a
+                .iter()
+                .map(|x| x.as_f64().map_err(|e| e.to_string()))
+                .collect::<Result<Vec<f64>, String>>()?;
+            if zoom.iter().any(|t| !t.is_finite()) {
+                return Err("thresholds must be finite".to_string());
+            }
+            Thresholds { zoom }
+        }
+        Some(other) => {
+            return Err(format!(
+                "thresholds must be a number or array, got {}",
+                other.type_name()
+            ))
+        }
+    };
+    let mut spec = JobSpec::new(JobSource::Spec(spec), thresholds).with_tenant(tenant);
+    if let Some(p) = v.opt("priority") {
+        let p = p.as_str().map_err(|e| e.to_string())?;
+        let p = Priority::from_str(p).ok_or_else(|| format!("unknown priority {p:?}"))?;
+        spec = spec.with_priority(p);
+    }
+    if let Some(d) = v.opt("deadline_ms") {
+        let ms = d.as_u64().map_err(|e| e.to_string())?;
+        spec = spec.with_deadline(Duration::from_millis(ms));
+    }
+    Ok(spec)
+}
+
+/// Validate wire geometry and build the [`SlideSpec`].
+fn parse_slide(v: &Json) -> Result<SlideSpec, String> {
+    let id = v
+        .get("id")
+        .and_then(|x| x.as_str())
+        .map_err(|e| e.to_string())?;
+    if id.is_empty() || id.len() > MAX_ID_LEN {
+        return Err(format!("slide id must be 1..={MAX_ID_LEN} bytes"));
+    }
+    let num = |key: &str| -> Result<usize, String> {
+        v.get(key).and_then(|x| x.as_usize()).map_err(|e| e.to_string())
+    };
+    let seed = v
+        .get("seed")
+        .and_then(|x| x.as_u64())
+        .map_err(|e| e.to_string())?;
+    let (tiles_x, tiles_y) = (num("tiles_x")?, num("tiles_y")?);
+    let levels = num("levels")?;
+    let tile_px = num("tile_px")?;
+    let kind = v
+        .get("kind")
+        .and_then(|x| x.as_str())
+        .map_err(|e| e.to_string())?;
+    let kind = SlideKind::from_str(kind).ok_or_else(|| format!("unknown slide kind {kind:?}"))?;
+    if !(1..=MAX_LEVELS).contains(&levels) {
+        return Err(format!("levels must be 1..={MAX_LEVELS}"));
+    }
+    if !(1..=MAX_GRID).contains(&tiles_x) || !(1..=MAX_GRID).contains(&tiles_y) {
+        return Err(format!("tile grid must be 1..={MAX_GRID} per side"));
+    }
+    let div = 1usize << (levels - 1);
+    if tiles_x % div != 0 || tiles_y % div != 0 {
+        return Err(format!(
+            "tile grid {tiles_x}x{tiles_y} not divisible by 2^(levels-1)={div}"
+        ));
+    }
+    if !(8..=MAX_TILE_PX).contains(&tile_px) {
+        return Err(format!("tile_px must be 8..={MAX_TILE_PX}"));
+    }
+    Ok(SlideSpec::new(id, seed, tiles_x, tiles_y, levels, tile_px, kind))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn slide_json() -> Json {
+        Json::obj()
+            .set("id", "s0")
+            .set("seed", 7u64)
+            .set("tiles_x", 16usize)
+            .set("tiles_y", 8usize)
+            .set("levels", 3usize)
+            .set("tile_px", 64usize)
+            .set("kind", "large_tumor")
+    }
+
+    #[test]
+    fn submit_body_parses_with_defaults_and_options() {
+        let body = Json::obj().set("slide", slide_json()).to_string();
+        let spec = parse_submit(body.as_bytes(), "lab_a").unwrap();
+        assert_eq!(spec.tenant, "lab_a");
+        assert_eq!(spec.source.slide_id(), "s0");
+        assert_eq!(spec.thresholds, Thresholds::uniform(3, 0.35));
+        assert_eq!(spec.priority, Priority::Normal);
+        assert_eq!(spec.deadline, None);
+
+        let body = Json::obj()
+            .set("slide", slide_json())
+            .set("thresholds", Json::Arr(vec![0.1.into(), 0.2.into(), 0.3.into()]))
+            .set("priority", "high")
+            .set("deadline_ms", 1500u64)
+            .to_string();
+        let spec = parse_submit(body.as_bytes(), "lab_b").unwrap();
+        assert_eq!(spec.thresholds.zoom, vec![0.1, 0.2, 0.3]);
+        assert_eq!(spec.priority, Priority::High);
+        assert_eq!(spec.deadline, Some(Duration::from_millis(1500)));
+    }
+
+    #[test]
+    fn invalid_geometry_is_an_error_not_a_panic() {
+        for (key, val) in [
+            ("levels", Json::Num(0.0)),
+            ("levels", Json::Num(99.0)),
+            ("tiles_x", Json::Num(0.0)),
+            ("tiles_x", Json::Num(15.0)), // not divisible by 2^(levels-1)
+            ("tile_px", Json::Num(2.0)),
+            ("kind", Json::Str("bogus".to_string())),
+        ] {
+            let body = Json::obj().set("slide", slide_json().set(key, val)).to_string();
+            assert!(
+                parse_submit(body.as_bytes(), "t").is_err(),
+                "bad {key} must be rejected"
+            );
+        }
+        assert!(parse_submit(b"not json", "t").is_err());
+        assert!(parse_submit(b"{}", "t").is_err());
+        assert!(parse_submit(&[0xff, 0xfe], "t").is_err());
+    }
+
+    #[test]
+    fn threshold_count_must_match_levels() {
+        let body = Json::obj()
+            .set("slide", slide_json())
+            .set("thresholds", Json::Arr(vec![0.5.into()]))
+            .to_string();
+        assert!(parse_submit(body.as_bytes(), "t").is_err());
+    }
+
+    #[test]
+    fn job_ids_parse_strictly() {
+        assert_eq!(parse_id("12"), Some(12));
+        assert_eq!(parse_id(""), None);
+        assert_eq!(parse_id("12x"), None);
+        assert_eq!(parse_id("-3"), None);
+        assert_eq!(parse_id("99999999999999999999999"), None);
+    }
+
+    #[test]
+    fn wire_forms_match_exec_tree_serialization() {
+        let n = ExecNode {
+            tile: TileId::new(1, 2, 3),
+            prob: 0.5,
+            zoom: true,
+        };
+        assert_eq!(node_json(&n).to_string(), "[1,2,3,0.5,true]");
+        assert_eq!(tile_json(&n.tile).to_string(), "[1,2,3]");
+    }
+}

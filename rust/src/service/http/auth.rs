@@ -1,0 +1,123 @@
+//! Bearer-token authentication mapping tokens onto scheduler tenants.
+//!
+//! The token table is a plain text file of `token tenant` lines — the
+//! deployment story for a modest cluster is "scp a file", not an IdP.
+//! Multiple tokens may map to the same tenant (per-client credentials,
+//! shared fair-share account); the tenant string is the same key the
+//! scheduler's weighted-fair-share policy weighs and quota-gates, so an
+//! authenticated submission lands directly in its tenant's share.
+//!
+//! Token comparison is length-then-byte equality over short secrets;
+//! the threat model here is a modest trusted cluster's LAN, not a
+//! public internet edge.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+/// Immutable token → tenant table, loaded once at startup.
+#[derive(Debug, Clone, Default)]
+pub struct TokenTable {
+    tokens: HashMap<String, String>,
+}
+
+impl TokenTable {
+    /// Parse a table from `token tenant` lines. Blank lines and `#`
+    /// comments are skipped; a line with fewer or more than two fields,
+    /// or a duplicate token, is an error.
+    pub fn parse(text: &str) -> Result<TokenTable, String> {
+        let mut tokens = HashMap::new();
+        for (i, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let fields: Vec<&str> = line.split_whitespace().collect();
+            if fields.len() != 2 {
+                return Err(format!(
+                    "tokens file line {}: expected `token tenant`, got {} fields",
+                    i + 1,
+                    fields.len()
+                ));
+            }
+            if tokens.insert(fields[0].to_string(), fields[1].to_string()).is_some() {
+                return Err(format!("tokens file line {}: duplicate token", i + 1));
+            }
+        }
+        if tokens.is_empty() {
+            return Err("tokens file has no credentials".to_string());
+        }
+        Ok(TokenTable { tokens })
+    }
+
+    /// Load and parse a tokens file.
+    pub fn load(path: impl AsRef<Path>) -> Result<TokenTable, String> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| format!("read tokens file {}: {e}", path.as_ref().display()))?;
+        TokenTable::parse(&text)
+    }
+
+    /// A single-credential table (tests, ephemeral servers).
+    pub fn single(token: &str, tenant: &str) -> TokenTable {
+        let mut tokens = HashMap::new();
+        tokens.insert(token.to_string(), tenant.to_string());
+        TokenTable { tokens }
+    }
+
+    /// Resolve an `Authorization` header value to a tenant. `None` for a
+    /// missing header, a non-Bearer scheme, or an unknown token — the
+    /// caller answers 401 without distinguishing which (no oracle).
+    pub fn tenant(&self, authorization: Option<&str>) -> Option<&str> {
+        let auth = authorization?;
+        let (scheme, token) = auth.split_once(' ')?;
+        if !scheme.eq_ignore_ascii_case("bearer") {
+            return None;
+        }
+        self.tokens.get(token.trim()).map(String::as_str)
+    }
+
+    /// Number of credentials in the table.
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    /// Whether the table holds no credentials.
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_comments_blanks_and_multiple_tenants() {
+        let t = TokenTable::parse(
+            "# credentials\n\nalpha-key lab_a\nbeta-key lab_b\nalpha-key2  lab_a\n",
+        )
+        .unwrap();
+        assert_eq!(t.len(), 3);
+        assert_eq!(t.tenant(Some("Bearer alpha-key")), Some("lab_a"));
+        assert_eq!(t.tenant(Some("bearer beta-key")), Some("lab_b"));
+        assert_eq!(t.tenant(Some("Bearer alpha-key2")), Some("lab_a"));
+    }
+
+    #[test]
+    fn rejects_malformed_tables() {
+        assert!(TokenTable::parse("").is_err());
+        assert!(TokenTable::parse("just-a-token\n").is_err());
+        assert!(TokenTable::parse("a b c\n").is_err());
+        assert!(TokenTable::parse("k t1\nk t2\n").is_err());
+    }
+
+    #[test]
+    fn unknown_scheme_or_token_resolves_to_none() {
+        let t = TokenTable::single("s3cret", "lab_a");
+        assert_eq!(t.tenant(None), None);
+        assert_eq!(t.tenant(Some("s3cret")), None, "missing scheme");
+        assert_eq!(t.tenant(Some("Basic s3cret")), None);
+        assert_eq!(t.tenant(Some("Bearer wrong")), None);
+        assert_eq!(t.tenant(Some("Bearer s3cret")), Some("lab_a"));
+        assert!(!t.is_empty());
+    }
+}

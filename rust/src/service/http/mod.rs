@@ -1,0 +1,253 @@
+//! Zero-dependency HTTP/1.1 admission front-end (§ deployment).
+//!
+//! Turns the in-process [`AnalysisService`] into a network service an
+//! external client can drive with nothing but `curl`: jobs come in over
+//! the wire as SlideSpec JSON, results stream back progressively as
+//! per-level tree deltas while the scheduler is still working. The
+//! stack is hand-rolled on `std::net` — the crate's dependency budget
+//! (anyhow/thiserror/log/once_cell) stays untouched:
+//!
+//! * [`parser`] — hardened incremental request parser: strict limits,
+//!   smuggling-shaped inputs rejected, every malformed request a clean
+//!   4xx/5xx, never a panic.
+//! * [`wire`] — response serialization + the chunked-transfer writer
+//!   behind progressive result streaming.
+//! * [`auth`] — bearer-token → tenant table; the resolved tenant is the
+//!   scheduler's fair-share key, so HTTP clients land directly in the
+//!   weighted-fair-share/quota machinery.
+//! * [`api`] — routing and handlers over the admission queue, the
+//!   scheduler's [`JobBoard`](crate::service::board::JobBoard) and the
+//!   shared metrics registry.
+//!
+//! [`HttpFrontend`] owns the listener thread and one thread per
+//! connection (bounded by [`HttpConfig::max_connections`]; excess
+//! connections get an immediate `503`). Backpressure from the bounded
+//! admission queue surfaces as `429 Too Many Requests` + `Retry-After`.
+//! Shutdown is cooperative: the stop flag short-circuits keep-alive
+//! loops and in-flight result streams, and the socket read timeout
+//! bounds how long an idle connection can delay [`HttpFrontend::stop`].
+
+/// Request routing and endpoint handlers.
+pub mod api;
+/// Bearer-token → tenant authentication.
+pub mod auth;
+/// Hardened HTTP/1.1 request parsing.
+pub mod parser;
+/// Response serialization and chunked streaming.
+pub mod wire;
+
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use crate::obs::{self, Level};
+use crate::service::AnalysisService;
+
+pub use auth::TokenTable;
+pub use parser::Limits;
+
+use api::Router;
+
+/// Front-end configuration.
+#[derive(Debug, Clone)]
+pub struct HttpConfig {
+    /// Bind address (`host:port`; port 0 picks an ephemeral port).
+    pub listen: String,
+    /// Credential table mapping bearer tokens onto scheduler tenants.
+    pub tokens: TokenTable,
+    /// Parser size/patience bounds.
+    pub limits: Limits,
+    /// Maximum concurrent connections; excess accepts answer `503`.
+    pub max_connections: usize,
+}
+
+impl HttpConfig {
+    /// A config with default limits and connection bound.
+    pub fn new(listen: impl Into<String>, tokens: TokenTable) -> HttpConfig {
+        HttpConfig {
+            listen: listen.into(),
+            tokens,
+            limits: Limits::default(),
+            max_connections: 64,
+        }
+    }
+}
+
+/// A running HTTP front-end over an [`AnalysisService`].
+///
+/// The service itself is shared behind an `Arc`: the front-end never
+/// owns shutdown of the scheduler, it only stops accepting and serving
+/// connections — the embedding binary stops the front-end first, then
+/// drains the service for its final report.
+pub struct HttpFrontend {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    listener: Option<JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+/// Decrements the active-connection count even if a handler panics.
+struct ActiveGuard(Arc<AtomicUsize>);
+
+impl Drop for ActiveGuard {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+impl HttpFrontend {
+    /// Bind `cfg.listen` and start serving `svc`. Fails on bind errors
+    /// or an empty token table (an unauthenticated admission endpoint is
+    /// a misconfiguration, not a default).
+    pub fn start(svc: Arc<AnalysisService>, cfg: HttpConfig) -> Result<HttpFrontend, String> {
+        if cfg.tokens.is_empty() {
+            return Err("refusing to serve without credentials (empty token table)".to_string());
+        }
+        let listener =
+            TcpListener::bind(&cfg.listen).map_err(|e| format!("bind {}: {e}", cfg.listen))?;
+        let addr = listener
+            .local_addr()
+            .map_err(|e| format!("local_addr: {e}"))?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let registry = svc.registry();
+        let m_conns = registry.counter("http.connections");
+        let m_busy = registry.counter("http.rejected_busy");
+        let router = Arc::new(Router::new(svc, cfg.tokens.clone(), Arc::clone(&stop)));
+        let conns: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+        let active = Arc::new(AtomicUsize::new(0));
+        obs::event(
+            Level::Info,
+            "http",
+            "listen",
+            &[("addr", addr.to_string().into())],
+        );
+        let accept_stop = Arc::clone(&stop);
+        let accept_conns = Arc::clone(&conns);
+        let limits = cfg.limits.clone();
+        let max_conns = cfg.max_connections.max(1);
+        let listener_thread = std::thread::Builder::new()
+            .name("http-listener".to_string())
+            .spawn(move || loop {
+                let (stream, _peer) = match listener.accept() {
+                    Ok(pair) => pair,
+                    Err(_) => {
+                        if accept_stop.load(Ordering::Relaxed) {
+                            break;
+                        }
+                        // Transient accept failure (e.g. fd exhaustion):
+                        // back off instead of spinning.
+                        std::thread::sleep(std::time::Duration::from_millis(10));
+                        continue;
+                    }
+                };
+                if accept_stop.load(Ordering::Relaxed) {
+                    // Woken by the stop() self-connect (or a late client).
+                    let _ = stream.shutdown(Shutdown::Both);
+                    break;
+                }
+                m_conns.inc();
+                let mut pool = accept_conns.lock().unwrap();
+                // Reap finished handler threads so a long-lived server
+                // doesn't accumulate handles (dropping a finished handle
+                // is a no-op join).
+                pool.retain(|h| !h.is_finished());
+                if active.load(Ordering::Relaxed) >= max_conns {
+                    m_busy.inc();
+                    let mut s = stream;
+                    let _ = wire::respond_error(&mut s, 503, "connection limit", &[], false);
+                    let _ = s.shutdown(Shutdown::Both);
+                    continue;
+                }
+                active.fetch_add(1, Ordering::Relaxed);
+                let guard = ActiveGuard(Arc::clone(&active));
+                let router = Arc::clone(&router);
+                let limits = limits.clone();
+                let handle = std::thread::Builder::new()
+                    .name("http-conn".to_string())
+                    .spawn(move || {
+                        let _guard = guard;
+                        handle_connection(&router, &limits, stream);
+                    });
+                match handle {
+                    Ok(h) => pool.push(h),
+                    Err(_) => { /* spawn failed; guard already dropped with the closure */ }
+                }
+            })
+            .map_err(|e| format!("spawn http listener: {e}"))?;
+        Ok(HttpFrontend {
+            addr,
+            stop,
+            listener: Some(listener_thread),
+            conns,
+        })
+    }
+
+    /// The bound address (resolves port 0 to the actual port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting, interrupt keep-alive loops and in-flight streams,
+    /// and join every thread. Bounded by the parser read timeout.
+    pub fn stop(mut self) {
+        self.drain();
+    }
+
+    fn drain(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        // Wake the blocking accept.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(l) = self.listener.take() {
+            let _ = l.join();
+        }
+        let handles: Vec<JoinHandle<()>> = std::mem::take(&mut *self.conns.lock().unwrap());
+        for h in handles {
+            let _ = h.join();
+        }
+        obs::event(Level::Info, "http", "stopped", &[]);
+    }
+}
+
+impl Drop for HttpFrontend {
+    fn drop(&mut self) {
+        if self.listener.is_some() {
+            self.drain();
+        }
+    }
+}
+
+/// Serve one connection: parse requests in a keep-alive loop, route
+/// them, answer parser rejections with their mapped status.
+fn handle_connection(router: &Router, limits: &Limits, stream: TcpStream) {
+    let _ = stream.set_read_timeout(Some(limits.read_timeout));
+    let _ = stream.set_nodelay(true);
+    let Ok(read_half) = stream.try_clone() else {
+        return;
+    };
+    let mut reader = parser::RequestReader::new(read_half, limits.clone());
+    let mut writer = stream;
+    loop {
+        match reader.read_request() {
+            Ok(None) => break,
+            Ok(Some(req)) => match router.handle(&req, &mut writer) {
+                Ok(true) => continue,
+                _ => break,
+            },
+            Err(e) => {
+                router.note_parse_error(e.status());
+                if let Some(code) = e.status() {
+                    let _ = wire::respond_error(&mut writer, code, &e.to_string(), &[], false);
+                }
+                obs::event(
+                    Level::Debug,
+                    "http",
+                    "parse_reject",
+                    &[("reason", e.to_string().into())],
+                );
+                break;
+            }
+        }
+    }
+    let _ = writer.shutdown(Shutdown::Both);
+}

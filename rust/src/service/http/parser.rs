@@ -1,0 +1,517 @@
+//! Hardened incremental HTTP/1.1 request parser.
+//!
+//! Hand-rolled because the crate carries zero HTTP dependencies, and
+//! hardened because the admission front-end is the one surface an
+//! untrusted peer can reach. The parser is strict where the RFCs allow
+//! leniency whenever that leniency is a known request-smuggling vector:
+//!
+//! * every line must end in CRLF — a bare LF is rejected, not repaired;
+//! * `Transfer-Encoding` together with `Content-Length` is rejected
+//!   outright (the classic CL.TE / TE.CL desync primitive), as are
+//!   duplicate or non-digit `Content-Length` values;
+//! * only the `chunked` transfer coding is accepted, chunk-size
+//!   extensions and trailer fields are rejected, and decoded bodies are
+//!   capped before buffering;
+//! * header names must be RFC 7230 tokens (no embedded whitespace before
+//!   the colon), obs-fold continuation lines are rejected, and control
+//!   bytes in values are rejected;
+//! * request line, per-header size, header count and body size are all
+//!   bounded by [`Limits`]; a peer that trickles bytes (slow-loris) hits
+//!   the socket read timeout and is dropped with `408`.
+//!
+//! Every rejection maps to a deterministic 4xx/5xx via
+//! [`ParseError::status`]; malformed input can never panic the service.
+
+use std::io::Read;
+use std::time::Duration;
+
+/// Size and patience bounds enforced while parsing one request.
+#[derive(Debug, Clone)]
+pub struct Limits {
+    /// Maximum request-line length in bytes (method + target + version).
+    pub request_line: usize,
+    /// Maximum length of a single header line in bytes.
+    pub header_line: usize,
+    /// Maximum number of headers per request.
+    pub max_headers: usize,
+    /// Maximum decoded body size in bytes (fixed or chunked).
+    pub max_body: usize,
+    /// Socket read timeout the owner arms on the stream; the parser maps
+    /// the resulting `WouldBlock`/`TimedOut` errors to
+    /// [`ParseError::Timeout`].
+    pub read_timeout: Duration,
+}
+
+impl Default for Limits {
+    fn default() -> Limits {
+        Limits {
+            request_line: 8 * 1024,
+            header_line: 8 * 1024,
+            max_headers: 64,
+            max_body: 1024 * 1024,
+            read_timeout: Duration::from_secs(5),
+        }
+    }
+}
+
+/// Why a request was rejected. [`ParseError::status`] maps each variant
+/// to the response status the connection handler sends before closing.
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+pub enum ParseError {
+    #[error("bad request: {0}")]
+    /// Malformed syntax or a smuggling-shaped construct (400).
+    Bad(&'static str),
+    #[error("request line too long")]
+    /// Request line exceeded [`Limits::request_line`] (414).
+    UriTooLong,
+    #[error("headers too large")]
+    /// A header line or the header count exceeded its bound (431).
+    HeadersTooLarge,
+    #[error("body too large")]
+    /// Declared or decoded body exceeded [`Limits::max_body`] (413).
+    BodyTooLarge,
+    #[error("read timed out mid-request")]
+    /// The peer stalled after starting a request — slow-loris (408).
+    Timeout,
+    #[error("http version not supported")]
+    /// Not HTTP/1.0 or HTTP/1.1 (505).
+    Version,
+    #[error("connection closed mid-request")]
+    /// EOF after the request started but before it completed; nothing to
+    /// answer, the handler just drops the connection.
+    Truncated,
+    #[error("socket error: {0}")]
+    /// Transport-level failure; the handler drops the connection.
+    Io(String),
+}
+
+impl ParseError {
+    /// The HTTP status this rejection answers with (`None`: close the
+    /// connection without a response — there is no one to answer).
+    pub fn status(&self) -> Option<u16> {
+        match self {
+            ParseError::Bad(_) => Some(400),
+            ParseError::UriTooLong => Some(414),
+            ParseError::HeadersTooLarge => Some(431),
+            ParseError::BodyTooLarge => Some(413),
+            ParseError::Timeout => Some(408),
+            ParseError::Version => Some(505),
+            ParseError::Truncated | ParseError::Io(_) => None,
+        }
+    }
+}
+
+/// HTTP version of a parsed request (only 1.0 / 1.1 are accepted).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Version {
+    /// HTTP/1.0 — connections close by default.
+    V10,
+    /// HTTP/1.1 — connections persist by default.
+    V11,
+}
+
+/// One fully-read request: head plus buffered body.
+#[derive(Debug, Clone)]
+pub struct Request {
+    /// Request method, uppercase token (`GET`, `POST`, …).
+    pub method: String,
+    /// Path component of the request target (before `?`).
+    pub path: String,
+    /// Raw query string (after `?`, empty when absent).
+    pub query: String,
+    /// Protocol version.
+    pub version: Version,
+    /// Headers in arrival order; names lowercased, values trimmed.
+    pub headers: Vec<(String, String)>,
+    /// The decoded body (empty when the request carried none).
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// First value of a header, by lowercase name.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// Whether the connection persists after this request
+    /// (`Connection` header over the version default).
+    pub fn keep_alive(&self) -> bool {
+        match self.header("connection").map(str::to_ascii_lowercase) {
+            Some(v) if v == "close" => false,
+            Some(v) if v == "keep-alive" => true,
+            _ => self.version == Version::V11,
+        }
+    }
+
+    /// First value of a query parameter (`?format=png`). No percent
+    /// decoding — the API's parameter values are plain tokens.
+    pub fn query_param(&self, name: &str) -> Option<&str> {
+        self.query.split('&').find_map(|pair| {
+            let (k, v) = pair.split_once('=').unwrap_or((pair, ""));
+            (k == name).then_some(v)
+        })
+    }
+}
+
+/// RFC 7230 `tchar`: the characters legal in a header-name / method token.
+fn is_tchar(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b"!#$%&'*+-.^_`|~".contains(&b)
+}
+
+/// Incremental request reader over one connection. Owns a buffer so
+/// pipelined bytes read past one request are kept for the next.
+pub struct RequestReader<R: Read> {
+    src: R,
+    buf: Vec<u8>,
+    /// Consumed prefix of `buf`.
+    pos: usize,
+    limits: Limits,
+}
+
+impl<R: Read> RequestReader<R> {
+    /// A reader enforcing `limits` over `src`. The caller is responsible
+    /// for arming [`Limits::read_timeout`] on the underlying socket.
+    pub fn new(src: R, limits: Limits) -> RequestReader<R> {
+        RequestReader {
+            src,
+            buf: Vec::new(),
+            pos: 0,
+            limits,
+        }
+    }
+
+    /// Read one complete request. `Ok(None)` on clean EOF (or an idle
+    /// timeout) before the first byte of a request — the keep-alive
+    /// connection just ended.
+    pub fn read_request(&mut self) -> Result<Option<Request>, ParseError> {
+        let line = match self.read_line(self.limits.request_line, ParseError::UriTooLong) {
+            Ok(l) => l,
+            // An idle keep-alive peer that times out or disconnects
+            // between requests is not an error worth answering.
+            Err(ParseError::Truncated) | Err(ParseError::Timeout) if self.buf.len() == self.pos => {
+                return Ok(None)
+            }
+            Err(e) => return Err(e),
+        };
+        let (method, path, query, version) = parse_request_line(&line)?;
+        let headers = self.read_headers()?;
+        let body = self.read_body(&headers, version)?;
+        Ok(Some(Request {
+            method,
+            path,
+            query,
+            version,
+            headers,
+            body,
+        }))
+    }
+
+    /// Pull more bytes from the socket into the buffer. `Ok(false)` on EOF.
+    fn fill(&mut self) -> Result<bool, ParseError> {
+        // Compact the consumed prefix occasionally so pipelining cannot
+        // grow the buffer without bound.
+        if self.pos > 0 && self.pos == self.buf.len() {
+            self.buf.clear();
+            self.pos = 0;
+        }
+        let mut chunk = [0u8; 4096];
+        match self.src.read(&mut chunk) {
+            Ok(0) => Ok(false),
+            Ok(n) => {
+                self.buf.extend_from_slice(&chunk[..n]);
+                Ok(true)
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                Err(ParseError::Timeout)
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => Ok(true),
+            Err(e) => Err(ParseError::Io(e.to_string())),
+        }
+    }
+
+    /// Read one CRLF-terminated line (returned without the CRLF),
+    /// rejecting bare-LF terminators and lines longer than `max`.
+    fn read_line(&mut self, max: usize, too_long: ParseError) -> Result<Vec<u8>, ParseError> {
+        loop {
+            if let Some(nl) = self.buf[self.pos..].iter().position(|&b| b == b'\n') {
+                let end = self.pos + nl;
+                if end == self.pos || self.buf[end - 1] != b'\r' {
+                    return Err(ParseError::Bad("bare LF line terminator"));
+                }
+                if end - 1 - self.pos > max {
+                    return Err(too_long);
+                }
+                let line = self.buf[self.pos..end - 1].to_vec();
+                self.pos = end + 1;
+                return Ok(line);
+            }
+            if self.buf.len() - self.pos > max + 2 {
+                return Err(too_long);
+            }
+            if !self.fill()? {
+                return Err(ParseError::Truncated);
+            }
+        }
+    }
+
+    /// Read exactly `n` body bytes.
+    fn read_exact_body(&mut self, n: usize) -> Result<Vec<u8>, ParseError> {
+        while self.buf.len() - self.pos < n {
+            if !self.fill()? {
+                return Err(ParseError::Truncated);
+            }
+        }
+        let out = self.buf[self.pos..self.pos + n].to_vec();
+        self.pos += n;
+        Ok(out)
+    }
+
+    /// Parse the header block up to the empty line.
+    fn read_headers(&mut self) -> Result<Vec<(String, String)>, ParseError> {
+        let mut headers = Vec::new();
+        loop {
+            let line = self.read_line(self.limits.header_line, ParseError::HeadersTooLarge)?;
+            if line.is_empty() {
+                return Ok(headers);
+            }
+            if headers.len() >= self.limits.max_headers {
+                return Err(ParseError::HeadersTooLarge);
+            }
+            if line[0] == b' ' || line[0] == b'\t' {
+                // RFC 7230 deprecated line folding; accepting it lets a
+                // front/back-end pair disagree about header boundaries.
+                return Err(ParseError::Bad("obsolete header line folding"));
+            }
+            let colon = line
+                .iter()
+                .position(|&b| b == b':')
+                .ok_or(ParseError::Bad("header line without colon"))?;
+            let name = &line[..colon];
+            if name.is_empty() || !name.iter().all(|&b| is_tchar(b)) {
+                // Catches embedded whitespace before the colon, another
+                // classic boundary-disagreement primitive.
+                return Err(ParseError::Bad("invalid header name"));
+            }
+            let value = &line[colon + 1..];
+            if value.iter().any(|&b| b < 0x20 && b != b'\t') || value.contains(&0x7f) {
+                return Err(ParseError::Bad("control byte in header value"));
+            }
+            let name = String::from_utf8_lossy(name).to_ascii_lowercase();
+            let value = String::from_utf8_lossy(value).trim().to_string();
+            headers.push((name, value));
+        }
+    }
+
+    /// Read the message body as declared by the headers.
+    fn read_body(
+        &mut self,
+        headers: &[(String, String)],
+        version: Version,
+    ) -> Result<Vec<u8>, ParseError> {
+        let te: Vec<&str> = headers
+            .iter()
+            .filter(|(n, _)| n == "transfer-encoding")
+            .map(|(_, v)| v.as_str())
+            .collect();
+        let cl: Vec<&str> = headers
+            .iter()
+            .filter(|(n, _)| n == "content-length")
+            .map(|(_, v)| v.as_str())
+            .collect();
+        if !te.is_empty() && !cl.is_empty() {
+            // The CL.TE / TE.CL smuggling primitive: two framing
+            // declarations that different parsers may rank differently.
+            return Err(ParseError::Bad(
+                "both transfer-encoding and content-length",
+            ));
+        }
+        if !te.is_empty() {
+            if version == Version::V10 {
+                return Err(ParseError::Bad("transfer-encoding in HTTP/1.0"));
+            }
+            if te.len() > 1 || !te[0].eq_ignore_ascii_case("chunked") {
+                return Err(ParseError::Bad("unsupported transfer-encoding"));
+            }
+            return self.read_chunked_body();
+        }
+        match cl.len() {
+            0 => Ok(Vec::new()),
+            1 => {
+                let v = cl[0];
+                if v.is_empty() || v.len() > 19 || !v.bytes().all(|b| b.is_ascii_digit()) {
+                    return Err(ParseError::Bad("malformed content-length"));
+                }
+                let n: u64 = v.parse().map_err(|_| ParseError::Bad("malformed content-length"))?;
+                if n as usize > self.limits.max_body {
+                    return Err(ParseError::BodyTooLarge);
+                }
+                self.read_exact_body(n as usize)
+            }
+            // Duplicate Content-Length headers — even when they agree —
+            // are rejected rather than reconciled.
+            _ => Err(ParseError::Bad("duplicate content-length")),
+        }
+    }
+
+    /// Decode a `chunked` body: strict hex sizes, no chunk extensions,
+    /// no trailer fields, total bounded by [`Limits::max_body`].
+    fn read_chunked_body(&mut self) -> Result<Vec<u8>, ParseError> {
+        let mut body = Vec::new();
+        loop {
+            let line = self.read_line(32, ParseError::Bad("chunk size line too long"))?;
+            if line.is_empty() || line.len() > 8 {
+                return Err(ParseError::Bad("malformed chunk size"));
+            }
+            if !line.iter().all(|b| b.is_ascii_hexdigit()) {
+                // Also rejects chunk extensions (`;ext=…`), which some
+                // chains parse and others ignore.
+                return Err(ParseError::Bad("malformed chunk size"));
+            }
+            let size = usize::from_str_radix(std::str::from_utf8(&line).unwrap_or(""), 16)
+                .map_err(|_| ParseError::Bad("malformed chunk size"))?;
+            if size == 0 {
+                // Strict final sequence: `0 CRLF CRLF`, no trailers.
+                let trailer = self.read_line(self.limits.header_line, ParseError::HeadersTooLarge)?;
+                if !trailer.is_empty() {
+                    return Err(ParseError::Bad("trailer fields not accepted"));
+                }
+                return Ok(body);
+            }
+            if body.len() + size > self.limits.max_body {
+                return Err(ParseError::BodyTooLarge);
+            }
+            body.extend_from_slice(&self.read_exact_body(size)?);
+            let sep = self.read_exact_body(2)?;
+            if sep != b"\r\n" {
+                return Err(ParseError::Bad("chunk data not CRLF-terminated"));
+            }
+        }
+    }
+}
+
+/// Split and validate `METHOD SP target SP HTTP/1.x`.
+fn parse_request_line(line: &[u8]) -> Result<(String, String, String, Version), ParseError> {
+    if line.is_empty() {
+        return Err(ParseError::Bad("empty request line"));
+    }
+    if line.iter().any(|&b| b < 0x20 || b == 0x7f) {
+        return Err(ParseError::Bad("control byte in request line"));
+    }
+    let parts: Vec<&[u8]> = line.split(|&b| b == b' ').collect();
+    if parts.len() != 3 || parts.iter().any(|p| p.is_empty()) {
+        return Err(ParseError::Bad("malformed request line"));
+    }
+    let (method, target, version) = (parts[0], parts[1], parts[2]);
+    if method.len() > 16 || !method.iter().all(|&b| is_tchar(b)) {
+        return Err(ParseError::Bad("malformed method token"));
+    }
+    let version = match version {
+        b"HTTP/1.1" => Version::V11,
+        b"HTTP/1.0" => Version::V10,
+        v if v.starts_with(b"HTTP/") => return Err(ParseError::Version),
+        _ => return Err(ParseError::Bad("malformed http version")),
+    };
+    if target[0] != b'/' {
+        // No absolute-form or authority-form targets: this server is an
+        // origin, never a proxy.
+        return Err(ParseError::Bad("request target must be origin-form"));
+    }
+    let target = String::from_utf8_lossy(target).to_string();
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), q.to_string()),
+        None => (target, String::new()),
+    };
+    let method = String::from_utf8_lossy(method).to_string();
+    Ok((method, path, query, version))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(input: &[u8]) -> Result<Option<Request>, ParseError> {
+        RequestReader::new(input, Limits::default()).read_request()
+    }
+
+    #[test]
+    fn simple_get_parses() {
+        let r = parse(b"GET /v1/jobs/3?format=png HTTP/1.1\r\nHost: x\r\n\r\n")
+            .unwrap()
+            .unwrap();
+        assert_eq!(r.method, "GET");
+        assert_eq!(r.path, "/v1/jobs/3");
+        assert_eq!(r.query_param("format"), Some("png"));
+        assert_eq!(r.header("host"), Some("x"));
+        assert!(r.keep_alive());
+        assert!(r.body.is_empty());
+    }
+
+    #[test]
+    fn fixed_and_chunked_bodies_decode() {
+        let r = parse(b"POST / HTTP/1.1\r\nContent-Length: 4\r\n\r\nabcd")
+            .unwrap()
+            .unwrap();
+        assert_eq!(r.body, b"abcd");
+        let r = parse(b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n3\r\nabc\r\n2\r\nde\r\n0\r\n\r\n")
+            .unwrap()
+            .unwrap();
+        assert_eq!(r.body, b"abcde");
+    }
+
+    #[test]
+    fn smuggling_shapes_are_rejected() {
+        // TE + CL together.
+        assert_eq!(
+            parse(b"POST / HTTP/1.1\r\nContent-Length: 3\r\nTransfer-Encoding: chunked\r\n\r\n0\r\n\r\n")
+                .unwrap_err()
+                .status(),
+            Some(400)
+        );
+        // Duplicate Content-Length.
+        assert!(parse(b"POST / HTTP/1.1\r\nContent-Length: 3\r\nContent-Length: 3\r\n\r\nabc").is_err());
+        // Bare LF terminator.
+        assert!(parse(b"GET / HTTP/1.1\nHost: x\r\n\r\n").is_err());
+        // Whitespace before the header colon.
+        assert!(parse(b"GET / HTTP/1.1\r\nHost : x\r\n\r\n").is_err());
+        // Obsolete folding.
+        assert!(parse(b"GET / HTTP/1.1\r\nA: b\r\n c\r\n\r\n").is_err());
+        // Chunk extension.
+        assert!(parse(b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n3;x=1\r\nabc\r\n0\r\n\r\n").is_err());
+    }
+
+    #[test]
+    fn limits_map_to_statuses() {
+        let long = format!("GET /{} HTTP/1.1\r\n\r\n", "a".repeat(9000));
+        assert_eq!(parse(long.as_bytes()).unwrap_err().status(), Some(414));
+        let big = format!("POST / HTTP/1.1\r\nContent-Length: {}\r\n\r\n", 2 * 1024 * 1024);
+        assert_eq!(parse(big.as_bytes()).unwrap_err().status(), Some(413));
+        assert_eq!(
+            parse(b"GET / HTTP/2.0\r\n\r\n").unwrap_err().status(),
+            Some(505)
+        );
+        let many = format!("GET / HTTP/1.1\r\n{}\r\n", "X-A: 1\r\n".repeat(100));
+        assert_eq!(parse(many.as_bytes()).unwrap_err().status(), Some(431));
+    }
+
+    #[test]
+    fn eof_before_a_request_is_a_clean_end() {
+        assert!(parse(b"").unwrap().is_none());
+        assert!(matches!(
+            parse(b"GET / HTT"),
+            Err(ParseError::Truncated)
+        ));
+    }
+
+    #[test]
+    fn http10_closes_by_default_and_rejects_te() {
+        let r = parse(b"GET / HTTP/1.0\r\n\r\n").unwrap().unwrap();
+        assert!(!r.keep_alive());
+        assert!(parse(b"POST / HTTP/1.0\r\nTransfer-Encoding: chunked\r\n\r\n0\r\n\r\n").is_err());
+    }
+}

@@ -1,0 +1,184 @@
+//! HTTP/1.1 response serialization: fixed-length responses and the
+//! chunked writer the result stream rides on.
+//!
+//! Responses are written in one buffered burst (status line, headers,
+//! body) so a killed connection can never leave a half-written header
+//! block followed by a reused socket. The [`ChunkedWriter`] frames each
+//! payload as one `Transfer-Encoding: chunked` chunk and flushes it
+//! immediately — progressive consumers (a `curl` following a running
+//! job) see every per-level delta the moment it is published, not when
+//! the job ends.
+
+use std::io::{self, Write};
+
+/// Reason phrase for the status codes this API emits.
+pub fn reason(code: u16) -> &'static str {
+    match code {
+        200 => "OK",
+        201 => "Created",
+        202 => "Accepted",
+        400 => "Bad Request",
+        401 => "Unauthorized",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        409 => "Conflict",
+        413 => "Payload Too Large",
+        414 => "URI Too Long",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        505 => "HTTP Version Not Supported",
+        _ => "Unknown",
+    }
+}
+
+/// Write a complete fixed-length response in one burst.
+///
+/// `extra` headers are emitted verbatim after the standard set
+/// (`Retry-After`, `Allow`, `WWW-Authenticate`…).
+pub fn respond(
+    w: &mut impl Write,
+    code: u16,
+    content_type: &str,
+    extra: &[(&str, String)],
+    body: &[u8],
+    keep_alive: bool,
+) -> io::Result<()> {
+    let mut out = Vec::with_capacity(256 + body.len());
+    write!(out, "HTTP/1.1 {} {}\r\n", code, reason(code))?;
+    write!(out, "Content-Type: {content_type}\r\n")?;
+    write!(out, "Content-Length: {}\r\n", body.len())?;
+    for (k, v) in extra {
+        write!(out, "{k}: {v}\r\n")?;
+    }
+    write!(
+        out,
+        "Connection: {}\r\n\r\n",
+        if keep_alive { "keep-alive" } else { "close" }
+    )?;
+    out.extend_from_slice(body);
+    w.write_all(&out)?;
+    w.flush()
+}
+
+/// Write a JSON error body with the conventional shape
+/// `{"error": "..."}` plus any extra headers.
+pub fn respond_error(
+    w: &mut impl Write,
+    code: u16,
+    msg: &str,
+    extra: &[(&str, String)],
+    keep_alive: bool,
+) -> io::Result<()> {
+    let body = crate::util::json::Json::obj()
+        .set("error", msg)
+        .to_string();
+    respond(w, code, "application/json", extra, body.as_bytes(), keep_alive)
+}
+
+/// Progressive chunked-transfer body writer. Construct with
+/// [`ChunkedWriter::start`] (which emits the response head), feed
+/// payloads with [`ChunkedWriter::chunk`], and terminate the stream
+/// with [`ChunkedWriter::finish`].
+pub struct ChunkedWriter<'a, W: Write> {
+    w: &'a mut W,
+    /// Payload bytes framed so far (the `http.bytes_streamed` series).
+    sent: usize,
+}
+
+impl<'a, W: Write> ChunkedWriter<'a, W> {
+    /// Emit the chunked response head and return the writer.
+    pub fn start(
+        w: &'a mut W,
+        code: u16,
+        content_type: &str,
+        keep_alive: bool,
+    ) -> io::Result<ChunkedWriter<'a, W>> {
+        let head = format!(
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nTransfer-Encoding: chunked\r\nConnection: {}\r\n\r\n",
+            code,
+            reason(code),
+            content_type,
+            if keep_alive { "keep-alive" } else { "close" }
+        );
+        w.write_all(head.as_bytes())?;
+        w.flush()?;
+        Ok(ChunkedWriter { w, sent: 0 })
+    }
+
+    /// Frame and flush one payload. Empty payloads are skipped — an
+    /// empty chunk would terminate the stream.
+    pub fn chunk(&mut self, data: &[u8]) -> io::Result<()> {
+        if data.is_empty() {
+            return Ok(());
+        }
+        let mut framed = Vec::with_capacity(data.len() + 16);
+        write!(framed, "{:x}\r\n", data.len())?;
+        framed.extend_from_slice(data);
+        framed.extend_from_slice(b"\r\n");
+        self.w.write_all(&framed)?;
+        self.sent += data.len();
+        self.w.flush()
+    }
+
+    /// Payload bytes framed so far.
+    pub fn sent(&self) -> usize {
+        self.sent
+    }
+
+    /// Terminate the stream (`0 CRLF CRLF`).
+    pub fn finish(self) -> io::Result<()> {
+        self.w.write_all(b"0\r\n\r\n")?;
+        self.w.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_response_has_length_and_connection_headers() {
+        let mut out = Vec::new();
+        respond(&mut out, 201, "application/json", &[], b"{}", true).unwrap();
+        let s = String::from_utf8(out).unwrap();
+        assert!(s.starts_with("HTTP/1.1 201 Created\r\n"));
+        assert!(s.contains("Content-Length: 2\r\n"));
+        assert!(s.contains("Connection: keep-alive\r\n"));
+        assert!(s.ends_with("\r\n\r\n{}"));
+    }
+
+    #[test]
+    fn error_response_carries_extra_headers() {
+        let mut out = Vec::new();
+        respond_error(
+            &mut out,
+            429,
+            "queue full",
+            &[("Retry-After", "1".to_string())],
+            false,
+        )
+        .unwrap();
+        let s = String::from_utf8(out).unwrap();
+        assert!(s.starts_with("HTTP/1.1 429 Too Many Requests\r\n"));
+        assert!(s.contains("Retry-After: 1\r\n"));
+        assert!(s.contains("Connection: close\r\n"));
+        assert!(s.contains("{\"error\":\"queue full\"}"));
+    }
+
+    #[test]
+    fn chunked_stream_frames_and_terminates() {
+        let mut out = Vec::new();
+        let mut cw = ChunkedWriter::start(&mut out, 200, "application/x-ndjson", true).unwrap();
+        cw.chunk(b"hello\n").unwrap();
+        cw.chunk(b"").unwrap(); // skipped, not a terminator
+        cw.chunk(b"world\n").unwrap();
+        assert_eq!(cw.sent(), 12);
+        cw.finish().unwrap();
+        let s = String::from_utf8(out).unwrap();
+        assert!(s.contains("Transfer-Encoding: chunked\r\n"));
+        assert!(s.ends_with("6\r\nhello\n\r\n6\r\nworld\n\r\n0\r\n\r\n"));
+    }
+}

@@ -55,6 +55,11 @@
 //!
 //! [`PyramidRun`]: crate::pyramid::PyramidRun
 
+/// Job progress board published by the scheduler for streaming
+/// consumers.
+pub mod board;
+/// Zero-dependency HTTP/1.1 admission front-end.
+pub mod http;
 /// Job descriptors, priorities and terminal results.
 pub mod job;
 /// Per-job and per-tenant throughput/latency metrics.
@@ -69,7 +74,7 @@ pub mod scheduler;
 use std::collections::HashSet;
 use std::sync::mpsc::{self, Sender};
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::cluster::{ClusterExec, ClusterExecConfig, ExecEvent, FaultStats};
 use crate::model::Analyzer;
@@ -116,6 +121,13 @@ pub struct ServiceConfig {
     /// favor of waiting ones (strict-priority and EDF preempt; FIFO and
     /// weighted fair share never do).
     pub preempt: bool,
+    /// Starvation aging for parked jobs: each elapsed interval of parked
+    /// time raises a parked job's effective priority rank by one, and the
+    /// earned boost freezes into the job on resume — so a low-priority
+    /// job preempted under a sustained high-priority stream eventually
+    /// outranks the newcomers instead of starving. `None` disables
+    /// aging (parked jobs compete at their nominal rank forever).
+    pub park_aging: Option<Duration>,
     /// Execution substrate for live jobs.
     pub exec: ExecMode,
 }
@@ -130,6 +142,7 @@ impl Default for ServiceConfig {
             policy: PolicySpec::fifo(),
             coalesce: true,
             preempt: false,
+            park_aging: Some(Duration::from_millis(500)),
             exec: ExecMode::Pool,
         }
     }
@@ -179,6 +192,9 @@ pub struct AnalysisService {
     cluster_faults: Option<FaultStats>,
     /// The scheduler's scoped metrics registry, snapshot at shutdown.
     registry: Arc<crate::obs::Registry>,
+    /// Progress board the scheduler publishes onto; streaming consumers
+    /// (the HTTP front-end) observe it through [`AnalysisService::board`].
+    board: Arc<board::JobBoard>,
     started: Instant,
 }
 
@@ -232,12 +248,14 @@ impl AnalysisService {
         });
 
         let registry = Arc::new(crate::obs::Registry::new());
+        let board = Arc::new(board::JobBoard::new(1024));
         let sched = Scheduler::new(
             SchedulerConfig {
                 max_in_flight: cfg.max_in_flight,
                 batch: cfg.batch,
                 coalesce: cfg.coalesce,
                 preempt: cfg.preempt,
+                park_aging: cfg.park_aging,
             },
             cfg.policy.build(),
             Arc::clone(&queue),
@@ -246,6 +264,7 @@ impl AnalysisService {
             tx.clone(),
             Arc::clone(&running_ids),
             Arc::clone(&registry),
+            Arc::clone(&board),
         );
         let scheduler = std::thread::Builder::new()
             .name("service-scheduler".to_string())
@@ -261,6 +280,7 @@ impl AnalysisService {
             cluster_pump,
             cluster_faults: None,
             registry,
+            board,
             started: Instant::now(),
         }
     }
@@ -272,7 +292,14 @@ impl AnalysisService {
     /// Submit a job. Fails fast with [`SubmitError::QueueFull`] under
     /// backpressure — the caller decides whether to retry or shed.
     pub fn submit(&self, spec: JobSpec) -> Result<JobId, SubmitError> {
+        let slide_id = spec.source.slide_id().to_string();
+        let tenant = spec.tenant.clone();
+        let levels = spec.source.levels();
         let id = self.queue.submit(spec)?;
+        // Register on the progress board so observers can see the job
+        // from the instant its id exists (merge-safe: if the scheduler
+        // admitted it before we got here, its entry wins).
+        self.board.submitted(id, &slide_id, &tenant, levels);
         let _ = self.events().send(Event::JobsAvailable);
         Ok(id)
     }
@@ -299,6 +326,25 @@ impl AnalysisService {
     /// Jobs currently waiting for admission.
     pub fn queued(&self) -> usize {
         self.queue.len()
+    }
+
+    /// Admission queue capacity (the backpressure bound surfaced to HTTP
+    /// clients as `Retry-After` hints).
+    pub fn queue_capacity(&self) -> usize {
+        self.queue.capacity()
+    }
+
+    /// The progress board the scheduler publishes onto: phase
+    /// transitions, per-level tree deltas and terminal records.
+    pub fn board(&self) -> Arc<board::JobBoard> {
+        Arc::clone(&self.board)
+    }
+
+    /// The scheduler's scoped metrics registry (live — snapshot any
+    /// time). The HTTP front-end records its `http.*` series here so one
+    /// snapshot carries the whole service.
+    pub fn registry(&self) -> Arc<crate::obs::Registry> {
+        Arc::clone(&self.registry)
     }
 
     /// Handle to the TCP cluster backing live jobs (`None` in pool

@@ -50,11 +50,13 @@ use crate::preprocess::otsu::background_removal;
 use crate::pyramid::driver::BG_MARGIN;
 use crate::pyramid::{FrontierRequest, PyramidRun, RequestId};
 use crate::sched::{
-    pick_admission, pick_preemption_victim, SchedCandidate, SchedContext, SchedulingPolicy,
+    aged_rank, pick_admission, pick_preemption_victims, SchedCandidate, SchedContext,
+    SchedulingPolicy,
 };
 use crate::slide::pyramid::Slide;
 use crate::synth::slide_gen::SlideSpec;
 
+use super::board::{JobBoard, JobPhase};
 use super::job::{JobId, JobResult, JobState, Priority};
 use super::pool::{AnalyzerPool, CoalescedItem};
 use super::queue::{AdmissionQueue, QueuedJob};
@@ -133,6 +135,12 @@ pub struct SchedulerConfig {
     /// Allow the policy to park running jobs at frontier boundaries in
     /// favor of waiting ones ([`crate::sched::SchedulingPolicy::preempts`]).
     pub preempt: bool,
+    /// Starvation aging for parked jobs: every elapsed interval of parked
+    /// time raises the job's effective priority rank by one
+    /// ([`crate::sched::aged_rank`]), and the earned boost is frozen into
+    /// the job on resume so it cannot be re-preempted by the same
+    /// sustained high-priority stream forever. `None` disables aging.
+    pub park_aging: Option<Duration>,
 }
 
 /// Where one job's frontier requests execute.
@@ -181,6 +189,10 @@ struct RunningJob {
     parking: bool,
     /// Times this job has been parked so far.
     preemptions: usize,
+    /// Starvation-aging rank boost frozen in at the last resume: the
+    /// job's effective rank is `priority.rank() + boost`, which keeps a
+    /// previously starved job from being immediately re-victimized.
+    boost: u8,
     cancelled: bool,
     failed: Option<String>,
 }
@@ -200,6 +212,13 @@ struct ParkedJob {
     exec: JobExec,
     tiles: usize,
     preemptions: usize,
+    /// When the job parked — the aging clock for
+    /// [`SchedulerConfig::park_aging`].
+    parked_at: Instant,
+    /// Rank boost carried from previous park/resume cycles (see
+    /// `RunningJob::boost`). While parked, the *effective* rank also
+    /// includes the age earned since `parked_at`.
+    boost: u8,
 }
 
 /// Metric handles resolved once at construction, so hot-path recording
@@ -259,9 +278,14 @@ pub(crate) struct Scheduler {
     /// Fire stamp of every in-flight chunk, keyed by the routing key —
     /// feeds the dispatch→completion latency histogram.
     chunk_fired: HashMap<u64, Instant>,
+    /// Progress board external consumers (the HTTP front-end) observe:
+    /// the scheduler publishes phase transitions, per-level tree deltas
+    /// and terminal records here.
+    board: Arc<JobBoard>,
 }
 
 impl Scheduler {
+    #[allow(clippy::too_many_arguments)]
     pub(crate) fn new(
         cfg: SchedulerConfig,
         policy: Box<dyn SchedulingPolicy>,
@@ -271,6 +295,7 @@ impl Scheduler {
         events_tx: Sender<Event>,
         running_ids: Arc<Mutex<HashSet<JobId>>>,
         registry: Arc<Registry>,
+        board: Arc<JobBoard>,
     ) -> Scheduler {
         let obs = SchedObs::new(&registry);
         Scheduler {
@@ -290,6 +315,7 @@ impl Scheduler {
             closed: false,
             obs,
             chunk_fired: HashMap::new(),
+            board,
         }
     }
 
@@ -331,7 +357,7 @@ impl Scheduler {
         match ev {
             Event::JobsAvailable => {}
             Event::Cancelled(q) => {
-                self.results.push(JobResult {
+                let res = JobResult {
                     id: q.id,
                     slide_id: q.spec.source.slide_id().to_string(),
                     tenant: q.spec.tenant,
@@ -342,7 +368,9 @@ impl Scheduler {
                     run_time: Duration::ZERO,
                     tiles: 0,
                     preemptions: 0,
-                });
+                };
+                self.board.finished(q.id, &res);
+                self.results.push(res);
             }
             Event::CancelRunning(id) => {
                 if let Some(r) = self.running.get_mut(&id) {
@@ -357,7 +385,7 @@ impl Scheduler {
                     self.running_ids.lock().unwrap().remove(&id);
                     let tree = p.run.finish();
                     let tiles = tree.total_analyzed();
-                    self.results.push(JobResult {
+                    let res = JobResult {
                         id,
                         slide_id: p.slide_id,
                         tenant: p.tenant,
@@ -368,7 +396,9 @@ impl Scheduler {
                         run_time: p.first_started.elapsed(),
                         tiles,
                         preemptions: p.preemptions,
-                    });
+                    };
+                    self.board.finished(id, &res);
+                    self.results.push(res);
                 }
             }
             Event::ChunkDone { job, req, probs } => {
@@ -399,6 +429,11 @@ impl Scheduler {
                 if failed_now {
                     // Its undispatched requests will never be needed.
                     self.pending.retain(|(j, _)| *j != job);
+                } else if let Some(r) = self.running.get(&job) {
+                    // Publish any level this feed finalized, so streaming
+                    // consumers see coarse results while finer levels are
+                    // still being analyzed.
+                    self.board.progress(job, &r.run);
                 }
             }
             Event::ChunkLost { job, req } => {
@@ -462,10 +497,25 @@ impl Scheduler {
         )
     }
 
+    /// Park-aging interval in µs (0 disables — [`aged_rank`]'s contract).
+    fn aging_interval_us(&self) -> u64 {
+        self.cfg
+            .park_aging
+            .map(|d| d.as_micros() as u64)
+            .unwrap_or(0)
+    }
+
+    /// A parked candidate's effective rank grows while it waits: frozen
+    /// boost from earlier cycles plus one rank per elapsed aging
+    /// interval. This is what breaks starvation under a sustained
+    /// high-priority stream — the parked job eventually outranks the
+    /// newcomers.
     fn parked_tuple(&self, id: JobId, p: &ParkedJob) -> CandTuple {
+        let base = p.priority.rank().saturating_add(p.boost);
+        let waited = p.parked_at.elapsed().as_micros() as u64;
         (
             id,
-            p.priority.rank(),
+            aged_rank(base, waited, self.aging_interval_us()),
             p.tenant.clone(),
             self.micros_of(p.submitted),
             self.abs_deadline(p.submitted, p.deadline),
@@ -475,7 +525,9 @@ impl Scheduler {
     fn running_tuple(&self, id: JobId, r: &RunningJob) -> CandTuple {
         (
             id,
-            r.priority.rank(),
+            // The frozen boost shields a previously starved job from
+            // being immediately re-victimized after resume.
+            r.priority.rank().saturating_add(r.boost),
             r.tenant.clone(),
             self.micros_of(r.submitted),
             self.abs_deadline(r.submitted, r.deadline),
@@ -552,7 +604,7 @@ impl Scheduler {
                             ],
                         );
                         self.running_ids.lock().unwrap().remove(&q.id);
-                        self.results.push(JobResult {
+                        let res = JobResult {
                             id: q.id,
                             slide_id: q.spec.source.slide_id().to_string(),
                             tenant: q.spec.tenant,
@@ -563,7 +615,9 @@ impl Scheduler {
                             run_time: Duration::ZERO,
                             tiles: 0,
                             preemptions: 0,
-                        });
+                        };
+                        self.board.finished(q.id, &res);
+                        self.results.push(res);
                         continue;
                     }
                     self.start_job(q, waited);
@@ -581,6 +635,14 @@ impl Scheduler {
     fn resume_job(&mut self, id: JobId) {
         let p = self.parked.remove(&id).expect("resume targets parked job");
         self.obs.jobs_resumed.inc();
+        // Freeze the age earned while parked into the job's boost: the
+        // effective rank that won this slot keeps protecting the job
+        // while it runs (and across any future park).
+        let boost = aged_rank(
+            p.boost,
+            p.parked_at.elapsed().as_micros() as u64,
+            self.aging_interval_us(),
+        );
         obs::event(
             Level::Info,
             "sched",
@@ -590,8 +652,10 @@ impl Scheduler {
                 ("slide", p.slide_id.as_str().into()),
                 ("policy", self.policy.name().into()),
                 ("preemptions", p.preemptions.into()),
+                ("boost", boost.into()),
             ],
         );
+        self.board.phase(id, JobPhase::Running);
         self.running.insert(
             id,
             RunningJob {
@@ -608,26 +672,32 @@ impl Scheduler {
                 dispatched: 0,
                 parking: false,
                 preemptions: p.preemptions,
+                boost,
                 cancelled: false,
                 failed: None,
             },
         );
     }
 
-    /// When the running set is full and a waiting candidate (queued or
-    /// parked) outranks a running job per [`SchedulingPolicy::preempts`],
-    /// mark the policy-worst such running job for parking: it stops
-    /// being issued requests and moves to the parked set once its
-    /// in-flight chunks drain — a clean suspension at the next
-    /// level-frontier boundary. At most one job parks at a time, which
-    /// bounds churn and is enough to free one slot for the preemptor.
+    /// When the running set is full and waiting candidates (queued or
+    /// parked) outrank running jobs per [`SchedulingPolicy::preempts`],
+    /// mark running jobs for parking: each stops being issued requests
+    /// and moves to the parked set once its in-flight chunks drain — a
+    /// clean suspension at the next level-frontier boundary.
+    ///
+    /// Multiple jobs may drain concurrently, but churn stays bounded:
+    /// the shared core pairs each preempting waiter with exactly one
+    /// victim ([`pick_preemption_victims`]), and suspensions already in
+    /// flight are counted against the pairing budget — the first
+    /// `parking` pairs are treated as satisfied by the jobs already
+    /// draining, so a single waiter can never cascade multiple parks.
     fn maybe_preempt(&mut self) {
         if !self.cfg.preempt || self.running.len() < self.slots() {
             return;
         }
-        if self.running.values().any(|r| r.parking) {
-            return; // a suspension is already draining
-        }
+        // Suspensions already draining: they will free one slot each, so
+        // that many of the strongest waiters need no fresh victim.
+        let parking = self.running.values().filter(|r| r.parking).count();
         let running_per_tenant = self.running_per_tenant();
         let now = self.now_micros();
         let ctx = SchedContext {
@@ -649,36 +719,40 @@ impl Scheduler {
         });
         waiting.extend(self.parked.iter().map(|(id, p)| self.parked_tuple(*id, p)));
         let waiting_cands: Vec<SchedCandidate<'_>> = waiting.iter().map(tuple_cand).collect();
-        // Candidate victims: running and healthy.
+        // Candidate victims: running, healthy, not already suspending.
         let victims: Vec<CandTuple> = self
             .running
             .iter()
-            .filter(|(_, r)| !r.cancelled && r.failed.is_none())
+            .filter(|(_, r)| !r.cancelled && r.failed.is_none() && !r.parking)
             .map(|(id, r)| self.running_tuple(*id, r))
             .collect();
         let victim_cands: Vec<SchedCandidate<'_>> = victims.iter().map(tuple_cand).collect();
-        let Some(vidx) =
-            pick_preemption_victim(&*self.policy, &waiting_cands, &victim_cands, &ctx)
-        else {
-            return;
-        };
-        let victim = victims[vidx].0;
-        let r = self.running.get_mut(&victim).expect("victim is running");
-        // The preemption *count* is recorded at the actual park
-        // transition in settle() — a victim whose draining chunks turn
-        // out to complete its run was never really suspended.
-        r.parking = true;
-        obs::event(
-            Level::Info,
-            "sched",
-            "preempt_marked",
-            &[
-                ("job", victim.into()),
-                ("tenant", r.tenant.as_str().into()),
-                ("policy", self.policy.name().into()),
-                ("waiting", waiting.len().into()),
-            ],
+        let pairs = pick_preemption_victims(
+            &*self.policy,
+            &waiting_cands,
+            &victim_cands,
+            &ctx,
+            parking + victim_cands.len(),
         );
+        for (_, vidx) in pairs.into_iter().skip(parking) {
+            let victim = victims[vidx].0;
+            let r = self.running.get_mut(&victim).expect("victim is running");
+            // The preemption *count* is recorded at the actual park
+            // transition in settle() — a victim whose draining chunks
+            // turn out to complete its run was never really suspended.
+            r.parking = true;
+            obs::event(
+                Level::Info,
+                "sched",
+                "preempt_marked",
+                &[
+                    ("job", victim.into()),
+                    ("tenant", r.tenant.as_str().into()),
+                    ("policy", self.policy.name().into()),
+                    ("waiting", waiting.len().into()),
+                ],
+            );
+        }
     }
 
     /// Materialize a job into a running [`PyramidRun`]. Source faults
@@ -690,10 +764,20 @@ impl Scheduler {
         // admit() already registered q.id in running_ids (under the queue
         // lock), so `cancel` can see this job throughout the slide
         // materialization below.
-        type Prep = Result<(String, usize, Vec<crate::slide::tile::TileId>, JobExec), String>;
+        type Prep = Result<
+            (
+                String,
+                usize,
+                (usize, usize),
+                Vec<crate::slide::tile::TileId>,
+                JobExec,
+            ),
+            String,
+        >;
         let prep = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| -> Prep {
             match &q.spec.source {
                 JobSource::Spec(spec) => {
+                    let grid = (spec.tiles_x, spec.tiles_y);
                     let slide = Arc::new(Slide::from_spec(spec.clone()));
                     let initial = background_removal(&slide, BG_MARGIN).tissue_tiles;
                     let exec = if cluster_mode {
@@ -701,11 +785,12 @@ impl Scheduler {
                     } else {
                         JobExec::Pool(Arc::clone(&slide))
                     };
-                    Ok((slide.id().to_string(), slide.levels(), initial, exec))
+                    Ok((slide.id().to_string(), slide.levels(), grid, initial, exec))
                 }
                 JobSource::Cached(c) => Ok((
                     c.spec.id.clone(),
                     c.spec.levels,
+                    (c.spec.tiles_x, c.spec.tiles_y),
                     c.initial.clone(),
                     JobExec::Replay(Arc::clone(c)),
                 )),
@@ -731,6 +816,7 @@ impl Scheduler {
                     Ok((
                         preds.spec.id.clone(),
                         preds.spec.levels,
+                        (preds.spec.tiles_x, preds.spec.tiles_y),
                         preds.initial.clone(),
                         JobExec::Sharded {
                             store: Arc::clone(store),
@@ -744,7 +830,7 @@ impl Scheduler {
             Ok(r) => r,
             Err(p) => Err(panic_message(&p)),
         };
-        let (slide_id, levels, initial, exec) = match prep {
+        let (slide_id, levels, grid, initial, exec) = match prep {
             Ok(t) => t,
             Err(msg) => {
                 self.running_ids.lock().unwrap().remove(&q.id);
@@ -754,7 +840,7 @@ impl Scheduler {
                     "job_setup_failed",
                     &[("job", q.id.into()), ("error", msg.as_str().into())],
                 );
-                self.results.push(JobResult {
+                let res = JobResult {
                     id: q.id,
                     slide_id: q.spec.source.slide_id().to_string(),
                     tenant: q.spec.tenant,
@@ -765,7 +851,9 @@ impl Scheduler {
                     run_time: Duration::ZERO,
                     tiles: 0,
                     preemptions: 0,
-                });
+                };
+                self.board.finished(q.id, &res);
+                self.results.push(res);
                 return;
             }
         };
@@ -789,6 +877,14 @@ impl Scheduler {
         // The admission queue validated levels and threshold counts, so
         // this constructor cannot panic.
         let run = PyramidRun::new(slide_id.as_str(), levels, initial, thresholds, self.cfg.batch);
+        self.board.started(
+            q.id,
+            slide_id.as_str(),
+            q.spec.tenant.as_str(),
+            levels,
+            Some(grid),
+            run.initial(),
+        );
         self.running.insert(
             q.id,
             RunningJob {
@@ -805,6 +901,7 @@ impl Scheduler {
                 dispatched: 0,
                 parking: false,
                 preemptions: 0,
+                boost: 0,
                 cancelled: false,
                 failed: None,
             },
@@ -1047,6 +1144,7 @@ impl Scheduler {
                         ("preemptions", (r.preemptions + 1).into()),
                     ],
                 );
+                self.board.phase(id, JobPhase::Parked);
                 self.parked.insert(
                     id,
                     ParkedJob {
@@ -1064,6 +1162,8 @@ impl Scheduler {
                         // the parking mark — a job that completed while
                         // draining was never preempted.
                         preemptions: r.preemptions + 1,
+                        parked_at: Instant::now(),
+                        boost: r.boost,
                     },
                 );
                 changed += 1;
@@ -1108,7 +1208,7 @@ impl Scheduler {
                     ("preemptions", r.preemptions.into()),
                 ],
             );
-            self.results.push(JobResult {
+            let res = JobResult {
                 id,
                 slide_id: r.slide_id,
                 tenant: r.tenant,
@@ -1119,7 +1219,9 @@ impl Scheduler {
                 run_time,
                 tiles,
                 preemptions: r.preemptions,
-            });
+            };
+            self.board.finished(id, &res);
+            self.results.push(res);
             changed += 1;
         }
         changed
@@ -1248,6 +1350,7 @@ mod tests {
                 batch: CHUNK,
                 coalesce: false,
                 preempt: false,
+                park_aging: None,
             },
             spec.build(),
             Arc::clone(&queue),
@@ -1256,6 +1359,7 @@ mod tests {
             tx,
             Arc::new(Mutex::new(HashSet::new())),
             Arc::clone(&registry),
+            Arc::new(crate::service::board::JobBoard::new(64)),
         );
         let results = sched.run(rx);
         assert_eq!(results.len(), wl.len());
@@ -1296,6 +1400,7 @@ mod tests {
                 max_in_flight: 1,
                 chunk: CHUNK,
                 preempt: false,
+                park_aging: 0,
                 failures: vec![],
             },
         );

@@ -27,7 +27,8 @@ use std::collections::{HashMap, VecDeque};
 use crate::pyramid::tree::{ExecTree, Thresholds};
 use crate::pyramid::PyramidRun;
 use crate::sched::{
-    pick_admission, pick_preemption_victim, SchedCandidate, SchedContext, SchedulingPolicy,
+    aged_rank, pick_admission, pick_preemption_victims, SchedCandidate, SchedContext,
+    SchedulingPolicy,
 };
 use crate::slide::tile::TileId;
 use crate::util::prng::Pcg32;
@@ -334,6 +335,12 @@ pub struct WorkloadConfig {
     pub chunk: usize,
     /// Allow the policy to park running jobs at frontier boundaries.
     pub preempt: bool,
+    /// Starvation aging for parked jobs, in virtual ticks per rank step
+    /// (the service's [`crate::service::ServiceConfig::park_aging`] in
+    /// tick units): every `park_aging` ticks of parked time raise a
+    /// parked job's effective priority rank by one, and the earned boost
+    /// freezes in on resume. `0` disables aging.
+    pub park_aging: u64,
     /// Injected worker faults (§10 failure model). A schedule that
     /// leaves no worker alive (and none rejoining) while work remains
     /// cannot drain and panics — leave capacity.
@@ -347,6 +354,7 @@ impl Default for WorkloadConfig {
             max_in_flight: 4,
             chunk: 16,
             preempt: false,
+            park_aging: 0,
             failures: Vec::new(),
         }
     }
@@ -415,6 +423,10 @@ struct SimJob {
     /// In-flight chunk count (the service's `dispatched`).
     dispatched: usize,
     parking: bool,
+    /// Tick of the last park transition (aging clock while Parked).
+    parked_at: u64,
+    /// Rank boost frozen in at resume (the service's `RunningJob::boost`).
+    boost: u8,
     state: SimState,
 }
 
@@ -509,6 +521,8 @@ pub fn simulate_workload(
             preemptions: 0,
             dispatched: 0,
             parking: false,
+            parked_at: 0,
+            boost: 0,
             state: SimState::NotArrived,
         })
         .collect();
@@ -526,12 +540,23 @@ pub fn simulate_workload(
     let mut total_preemptions = 0usize;
     let mut makespan = 0u64;
 
-    let cand_of = |i: usize, sim: &[SimJob]| SchedCandidate {
-        job: sim[i].id,
-        priority_rank: jobs[i].priority_rank,
-        tenant: &jobs[i].tenant,
-        arrival: jobs[i].arrival,
-        deadline: jobs[i].deadline,
+    // Effective rank mirrors the service's tuple helpers: nominal rank
+    // plus the frozen boost, and — while parked — one more rank per
+    // elapsed aging interval.
+    let cand_of = |i: usize, sim: &[SimJob], now: u64| {
+        let base = jobs[i].priority_rank.saturating_add(sim[i].boost);
+        let rank = if sim[i].state == SimState::Parked {
+            aged_rank(base, now.saturating_sub(sim[i].parked_at), cfg.park_aging)
+        } else {
+            base
+        };
+        SchedCandidate {
+            job: sim[i].id,
+            priority_rank: rank,
+            tenant: &jobs[i].tenant,
+            arrival: jobs[i].arrival,
+            deadline: jobs[i].deadline,
+        }
     };
 
     loop {
@@ -567,7 +592,7 @@ pub fn simulate_workload(
                 .filter(|&i| matches!(sim[i].state, SimState::Waiting | SimState::Parked))
                 .collect();
             let cands: Vec<SchedCandidate<'_>> =
-                waiting.iter().map(|&i| cand_of(i, &sim)).collect();
+                waiting.iter().map(|&i| cand_of(i, &sim, now)).collect();
             let Some(sel) = pick_admission(policy, &cands, &ctx) else {
                 break;
             };
@@ -603,17 +628,27 @@ pub fn simulate_workload(
             }
             if sim[i].state == SimState::Parked {
                 m_resumed.inc();
+                // Freeze the age earned while parked into the boost, the
+                // same freeze the service applies on resume.
+                sim[i].boost = aged_rank(
+                    sim[i].boost,
+                    now.saturating_sub(sim[i].parked_at),
+                    cfg.park_aging,
+                );
             }
             sim[i].state = SimState::Running;
             sim[i].parking = false;
         }
-        // Preemption: the policy-worst preemptible running job parks at
-        // its next frontier boundary (one suspension in flight at a
-        // time, like the service).
-        if cfg.preempt
-            && running_count(&sim) >= slots
-            && !sim.iter().any(|s| s.state == SimState::Running && s.parking)
-        {
+        // Preemption: pair each preempting waiter with the policy-worst
+        // preemptible running job; every picked victim parks at its next
+        // frontier boundary. Suspensions already draining count against
+        // the pairing budget (the first `parking` pairs are treated as
+        // satisfied by them), exactly like the service's maybe_preempt.
+        if cfg.preempt && running_count(&sim) >= slots {
+            let parking = sim
+                .iter()
+                .filter(|s| s.state == SimState::Running && s.parking)
+                .count();
             let running_per_tenant = tenants_running(&sim);
             let ctx = SchedContext {
                 usage: &usage,
@@ -633,15 +668,20 @@ pub fn simulate_workload(
                 })
                 .collect();
             let waiting_cands: Vec<SchedCandidate<'_>> =
-                waiting.iter().map(|&i| cand_of(i, &sim)).collect();
+                waiting.iter().map(|&i| cand_of(i, &sim, now)).collect();
             let running_idx: Vec<usize> = (0..sim.len())
-                .filter(|&i| sim[i].state == SimState::Running)
+                .filter(|&i| sim[i].state == SimState::Running && !sim[i].parking)
                 .collect();
             let running_cands: Vec<SchedCandidate<'_>> =
-                running_idx.iter().map(|&i| cand_of(i, &sim)).collect();
-            if let Some(v) =
-                pick_preemption_victim(policy, &waiting_cands, &running_cands, &ctx)
-            {
+                running_idx.iter().map(|&i| cand_of(i, &sim, now)).collect();
+            let pairs = pick_preemption_victims(
+                policy,
+                &waiting_cands,
+                &running_cands,
+                &ctx,
+                parking + running_cands.len(),
+            );
+            for (_, v) in pairs.into_iter().skip(parking) {
                 // Counted at the actual park transition, not here — a
                 // victim that completes while draining was never really
                 // suspended.
@@ -677,7 +717,7 @@ pub fn simulate_workload(
                     now,
                 };
                 let cands: Vec<SchedCandidate<'_>> =
-                    pending.iter().map(|&(i, _)| cand_of(i, &sim)).collect();
+                    pending.iter().map(|&(i, _)| cand_of(i, &sim, now)).collect();
                 let sel = policy.select(&cands, &ctx).expect("nonempty pending");
                 let (i, req) = pending.remove(sel);
                 sim[i].tiles += req.tiles.len();
@@ -731,6 +771,7 @@ pub fn simulate_workload(
             if s.state == SimState::Running && s.parking && s.dispatched == 0 && !stranded {
                 s.state = SimState::Parked;
                 s.parking = false;
+                s.parked_at = now;
                 s.preemptions += 1;
                 total_preemptions += 1;
                 m_parked.inc();
@@ -791,6 +832,7 @@ pub fn simulate_workload(
                         // boundary.
                         sim[i].state = SimState::Parked;
                         sim[i].parking = false;
+                        sim[i].parked_at = now;
                         sim[i].preemptions += 1;
                         total_preemptions += 1;
                         m_parked.inc();
@@ -1107,6 +1149,7 @@ mod tests {
                     max_in_flight: 2,
                     chunk: 8,
                     preempt,
+                    park_aging: 0,
                     failures: vec![],
                 };
                 let res = simulate_workload(&jobs, policy.as_ref(), &cfg);
@@ -1136,6 +1179,7 @@ mod tests {
             max_in_flight: 2,
             chunk: 4,
             preempt: true,
+            park_aging: 0,
             failures: vec![],
         };
         let a = simulate_workload(&jobs, &StrictPriority, &cfg);
@@ -1161,6 +1205,7 @@ mod tests {
             max_in_flight: 1,
             chunk: 8,
             preempt: true,
+            park_aging: 0,
             failures: vec![],
         };
         let res = simulate_workload(&jobs, &StrictPriority, &cfg);
@@ -1210,6 +1255,7 @@ mod tests {
             max_in_flight: 2,
             chunk: 16,
             preempt: false,
+            park_aging: 0,
             failures: vec![],
         };
         let fifo = simulate_workload(&jobs, &Fifo, &cfg);
@@ -1249,6 +1295,7 @@ mod tests {
             max_in_flight: 1,
             chunk: 0,
             preempt: false,
+            park_aging: 0,
             failures: vec![],
         };
         let res = simulate_workload(&jobs, &Edf, &cfg);
@@ -1272,6 +1319,7 @@ mod tests {
             max_in_flight: 1,
             chunk: 0,
             preempt: false,
+            park_aging: 0,
             failures: vec![],
         };
         let res = simulate_workload(&jobs, &Fifo, &cfg);
@@ -1301,6 +1349,7 @@ mod tests {
             failures: vec![],
             chunk: 0,
             preempt: false,
+            park_aging: 0,
         };
         let quota = WeightedFairShare::new(HashMap::new(), 1.0, Some(1));
         let res = simulate_workload(&jobs, &quota, &cfg);
@@ -1316,6 +1365,102 @@ mod tests {
             free.makespan,
             res.makespan
         );
+    }
+
+    #[test]
+    fn multiple_jobs_park_concurrently_for_simultaneous_preemptors() {
+        // Two low-priority jobs own both slots; two high-priority jobs
+        // arrive together. The shared core pairs each preemptor with its
+        // own victim, so BOTH lows park (concurrently — both highs run
+        // while both lows sit in the parked set) instead of the old
+        // one-suspension-at-a-time serialization.
+        let jobs = vec![
+            workload_job(170, "t", 0, 0, None),
+            workload_job(171, "t", 0, 0, None),
+            workload_job(172, "t", 2, 5, None),
+            workload_job(173, "t", 2, 5, None),
+        ];
+        let cfg = WorkloadConfig {
+            workers: 2,
+            max_in_flight: 2,
+            chunk: 4,
+            preempt: true,
+            park_aging: 0,
+            failures: vec![],
+        };
+        let res = simulate_workload(&jobs, &StrictPriority, &cfg);
+        assert!(
+            res.outcomes[0].preemptions >= 1 && res.outcomes[1].preemptions >= 1,
+            "both low jobs must be parked: {:?}",
+            res.outcomes.iter().map(|o| o.preemptions).collect::<Vec<_>>()
+        );
+        assert_eq!(
+            &res.completion_order[..2],
+            &[2, 3],
+            "both preemptors run (and finish) while both victims are parked: {:?}",
+            res.completion_order
+        );
+        for (i, out) in res.outcomes.iter().enumerate() {
+            assert_eq!(out.tree, jobs[i].tree, "park/resume changed job {i}'s tree");
+        }
+        assert!(res.metrics.counter("sched.jobs_parked") >= 2);
+        assert!(res.metrics.counter("sched.jobs_resumed") >= 2);
+    }
+
+    #[test]
+    fn park_aging_breaks_starvation_under_a_sustained_high_priority_stream() {
+        // One low-priority job, then a backlog of high-priority jobs deep
+        // enough to starve it for the whole run under strict priority.
+        // Without aging the low job is parked once and only resumes after
+        // the entire backlog drains — it completes last. With aging its
+        // effective rank climbs one step per interval of parked time, so
+        // it wins a slot back mid-backlog and is NOT last; the earned
+        // boost freezes in on resume, so the still-queued (never-parked,
+        // never-aged) high jobs cannot re-victimize it.
+        let mut jobs = vec![workload_job(180, "t", 0, 0, None)];
+        for i in 0..5 {
+            jobs.push(workload_job(181 + i, "t", 2, 1 + i, None));
+        }
+        let base = WorkloadConfig {
+            workers: 1,
+            max_in_flight: 1,
+            chunk: 8,
+            preempt: true,
+            park_aging: 0,
+            failures: vec![],
+        };
+        let starved = simulate_workload(&jobs, &StrictPriority, &base);
+        assert_eq!(
+            starved.completion_order.last(),
+            Some(&0),
+            "without aging the low job starves to the very end: {:?}",
+            starved.completion_order
+        );
+        let aged_cfg = WorkloadConfig {
+            park_aging: 50,
+            ..base
+        };
+        let aged = simulate_workload(&jobs, &StrictPriority, &aged_cfg);
+        assert_ne!(
+            aged.completion_order.last(),
+            Some(&0),
+            "aging must let the low job back in before the backlog drains: {:?}",
+            aged.completion_order
+        );
+        let pos = |order: &[usize]| order.iter().position(|&i| i == 0).unwrap();
+        assert!(
+            pos(&aged.completion_order) < pos(&starved.completion_order),
+            "aging must strictly improve the low job's completion position"
+        );
+        // Aging changes *when*, never *what*: every tree byte-identical.
+        for (i, out) in aged.outcomes.iter().enumerate() {
+            assert_eq!(out.tree, jobs[i].tree, "aging changed job {i}'s tree");
+        }
+        assert!(aged.metrics.counter("sched.jobs_resumed") >= 1);
+        // Determinism holds with aging on.
+        let again = simulate_workload(&jobs, &StrictPriority, &aged_cfg);
+        assert_eq!(aged.completion_order, again.completion_order);
+        assert_eq!(aged.makespan, again.makespan);
     }
 
     // ---- §10 failure injection -------------------------------------
@@ -1336,6 +1481,7 @@ mod tests {
             max_in_flight: 2,
             chunk: 4,
             preempt: false,
+            park_aging: 0,
             failures: vec![],
         };
         let clean = simulate_workload(&jobs, &Fifo, &clean_cfg);
@@ -1400,6 +1546,7 @@ mod tests {
             max_in_flight: 2,
             chunk: 8,
             preempt: false,
+            park_aging: 0,
             failures: vec![
                 WorkerFailure {
                     worker: 0,

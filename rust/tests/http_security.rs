@@ -1,0 +1,234 @@
+//! Adversarial parser suite against a live front-end: every malformed,
+//! oversized, smuggling-shaped or stalling request must be answered with
+//! a clean 4xx/5xx (or silently dropped when there is nothing to answer)
+//! and must never panic or wedge the server — after the full barrage the
+//! same listener still serves well-formed requests.
+
+use std::io::{Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+use pyramidai::model::oracle::OracleAnalyzer;
+use pyramidai::service::http::{HttpConfig, HttpFrontend, TokenTable};
+use pyramidai::service::{AnalysisService, ServiceConfig};
+
+/// A front-end with a short read timeout so the slow-loris case runs in
+/// test time rather than the 5 s production default.
+fn start() -> (Arc<AnalysisService>, HttpFrontend) {
+    let svc = Arc::new(AnalysisService::start(
+        Arc::new(OracleAnalyzer::new(1)),
+        ServiceConfig::default(),
+    ));
+    let mut cfg = HttpConfig::new("127.0.0.1:0", TokenTable::single("sec-tok", "lab"));
+    cfg.limits.read_timeout = Duration::from_millis(250);
+    let fe = HttpFrontend::start(Arc::clone(&svc), cfg).expect("bind");
+    (svc, fe)
+}
+
+/// Send raw bytes, optionally half-close the write side (simulating a
+/// peer that disconnects mid-request), and return the response status —
+/// `None` when the server closed without answering.
+fn roundtrip(addr: SocketAddr, raw: &[u8], half_close: bool) -> (Option<u16>, Vec<u8>) {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(raw).unwrap();
+    if half_close {
+        s.shutdown(Shutdown::Write).unwrap();
+    }
+    let mut buf = Vec::new();
+    s.read_to_end(&mut buf).unwrap();
+    let status = buf
+        .strip_prefix(b"HTTP/1.1 ")
+        .and_then(|rest| std::str::from_utf8(&rest[..3]).ok())
+        .and_then(|code| code.parse::<u16>().ok());
+    (status, buf)
+}
+
+fn expect_status(addr: SocketAddr, raw: &[u8], want: u16, what: &str) {
+    let (status, buf) = roundtrip(addr, raw, false);
+    assert_eq!(
+        status,
+        Some(want),
+        "{what}: {:?}",
+        String::from_utf8_lossy(&buf[..buf.len().min(200)])
+    );
+}
+
+#[test]
+fn adversarial_requests_get_clean_rejections_and_never_kill_the_server() {
+    let (svc, fe) = start();
+    let addr = fe.addr();
+
+    // -- size limits map to their statuses ------------------------------
+    let long_uri = format!("GET /{} HTTP/1.1\r\n\r\n", "a".repeat(9000));
+    expect_status(addr, long_uri.as_bytes(), 414, "oversized request line");
+    let long_header = format!("GET / HTTP/1.1\r\nX-Pad: {}\r\n\r\n", "b".repeat(9000));
+    expect_status(addr, long_header.as_bytes(), 431, "oversized header line");
+    let many_headers = format!("GET / HTTP/1.1\r\n{}\r\n", "X-A: 1\r\n".repeat(100));
+    expect_status(addr, many_headers.as_bytes(), 431, "too many headers");
+    expect_status(
+        addr,
+        b"POST / HTTP/1.1\r\nContent-Length: 2097152\r\n\r\n",
+        413,
+        "declared body over the cap",
+    );
+
+    // -- header splitting / CRLF-injection shapes ------------------------
+    expect_status(
+        addr,
+        b"GET / HTTP/1.1\nHost: x\r\n\r\n",
+        400,
+        "bare-LF request line terminator",
+    );
+    expect_status(
+        addr,
+        b"GET / HTTP/1.1\r\nHost: x\nX-Inject: 1\r\n\r\n",
+        400,
+        "bare-LF header terminator",
+    );
+    expect_status(
+        addr,
+        b"GET / HTTP/1.1\r\nHost : x\r\n\r\n",
+        400,
+        "whitespace before header colon",
+    );
+    expect_status(
+        addr,
+        b"GET / HTTP/1.1\r\nA: b\r\n folded\r\n\r\n",
+        400,
+        "obsolete header folding",
+    );
+    expect_status(
+        addr,
+        b"GET / HTTP/1.1\r\nX-A: a\x01b\r\n\r\n",
+        400,
+        "control byte in header value",
+    );
+
+    // -- request-smuggling framing conflicts -----------------------------
+    expect_status(
+        addr,
+        b"POST / HTTP/1.1\r\nContent-Length: 3\r\nTransfer-Encoding: chunked\r\n\r\n0\r\n\r\n",
+        400,
+        "CL + TE conflict",
+    );
+    expect_status(
+        addr,
+        b"POST / HTTP/1.1\r\nContent-Length: 3\r\nContent-Length: 3\r\n\r\nabc",
+        400,
+        "duplicate content-length",
+    );
+    expect_status(
+        addr,
+        b"POST / HTTP/1.1\r\nContent-Length: 1e3\r\n\r\n",
+        400,
+        "non-digit content-length",
+    );
+
+    // -- malformed chunked bodies ----------------------------------------
+    expect_status(
+        addr,
+        b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\nzz\r\nabc\r\n0\r\n\r\n",
+        400,
+        "non-hex chunk size",
+    );
+    expect_status(
+        addr,
+        b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n3;x=1\r\nabc\r\n0\r\n\r\n",
+        400,
+        "chunk extension",
+    );
+    expect_status(
+        addr,
+        b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n0\r\nX-Trailer: 1\r\n\r\n",
+        400,
+        "trailer fields",
+    );
+    expect_status(
+        addr,
+        b"POST / HTTP/1.1\r\nTransfer-Encoding: gzip\r\n\r\n",
+        400,
+        "non-chunked transfer coding",
+    );
+
+    // -- request-line / version edges ------------------------------------
+    expect_status(addr, b"GET / HTTP/2.0\r\n\r\n", 505, "HTTP/2 preface-ish");
+    expect_status(addr, b"GET / HTTP/9.9\r\n\r\n", 505, "future version");
+    expect_status(addr, b"G@T / HTTP/1.1\r\n\r\n", 400, "non-token method");
+    expect_status(
+        addr,
+        b"GET http://evil/ HTTP/1.1\r\n\r\n",
+        400,
+        "absolute-form target (proxy probe)",
+    );
+    expect_status(addr, b"\x16\x03\x01\x02garbage\r\n\r\n", 400, "binary garbage");
+
+    // -- truncation and stalls -------------------------------------------
+    // Peer disconnects mid-chunked-body: nothing to answer, clean drop.
+    let (status, buf) = roundtrip(
+        addr,
+        b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n3\r\nab",
+        true,
+    );
+    assert_eq!(status, None, "truncated body answered: {buf:?}");
+    // Slow-loris: a started-but-stalled request hits the read timeout.
+    expect_status(addr, b"GET /v1/jo", 408, "slow-loris stall");
+
+    // -- the server survived all of it -----------------------------------
+    let (status, buf) = roundtrip(
+        addr,
+        b"GET /healthz HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n",
+        false,
+    );
+    assert_eq!(
+        status,
+        Some(200),
+        "server must still serve after the barrage: {:?}",
+        String::from_utf8_lossy(&buf)
+    );
+    let snap = svc.registry().snapshot();
+    assert!(
+        snap.counter("http.parse_errors") >= 15,
+        "every rejection recorded: {}",
+        snap.counter("http.parse_errors")
+    );
+
+    fe.stop();
+    let report = Arc::try_unwrap(svc).ok().expect("handlers joined").shutdown();
+    assert_eq!(report.results.len(), 0, "no job ever admitted");
+}
+
+#[test]
+fn unauthenticated_and_oversized_submissions_cannot_reach_the_scheduler() {
+    let (svc, fe) = start();
+    let addr = fe.addr();
+
+    // Valid HTTP, no/wrong credentials: 401 before any body is parsed.
+    let body = r#"{"slide":{"id":"x","seed":1,"tiles_x":16,"tiles_y":8,"levels":3,"tile_px":64,"kind":"negative"}}"#;
+    let req = format!(
+        "POST /v1/jobs HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    expect_status(addr, req.as_bytes(), 401, "submission without a token");
+
+    // Authenticated but hostile geometry: rejected by validation (400),
+    // never a SlideSpec::new panic.
+    for bad in [
+        r#"{"slide":{"id":"x","seed":1,"tiles_x":16,"tiles_y":8,"levels":0,"tile_px":64,"kind":"negative"}}"#,
+        r#"{"slide":{"id":"x","seed":1,"tiles_x":15,"tiles_y":8,"levels":3,"tile_px":64,"kind":"negative"}}"#,
+        r#"{"slide":{"id":"x","seed":1,"tiles_x":1000000,"tiles_y":8,"levels":3,"tile_px":64,"kind":"negative"}}"#,
+        r#"{"slide":{"id":"x","seed":1,"tiles_x":16,"tiles_y":8,"levels":3,"tile_px":64,"kind":"exploit"}}"#,
+        "not json at all",
+        "{}",
+    ] {
+        let req = format!(
+            "POST /v1/jobs HTTP/1.1\r\nHost: t\r\nAuthorization: Bearer sec-tok\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{bad}",
+            bad.len()
+        );
+        expect_status(addr, req.as_bytes(), 400, "hostile submission body");
+    }
+
+    fe.stop();
+    let report = Arc::try_unwrap(svc).ok().expect("handlers joined").shutdown();
+    assert_eq!(report.results.len(), 0, "nothing reached the scheduler");
+}

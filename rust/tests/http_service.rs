@@ -1,0 +1,477 @@
+//! HTTP front-end end-to-end integration: a real TCP client submits jobs
+//! across two tenants against both execution backends, streams results
+//! progressively as per-level deltas, and reassembles them into trees
+//! byte-identical to standalone `run_pyramidal` — plus mid-run
+//! cancellation (partial tree), queue-full backpressure (`429` +
+//! `Retry-After`), bearer auth, tenant isolation and keep-alive.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use pyramidai::cluster::ClusterExecConfig;
+use pyramidai::model::oracle::OracleAnalyzer;
+use pyramidai::model::{Analyzer, DelayAnalyzer};
+use pyramidai::pyramid::driver::run_pyramidal;
+use pyramidai::pyramid::tree::{ExecNode, ExecTree, Thresholds};
+use pyramidai::service::http::{HttpConfig, HttpFrontend, TokenTable};
+use pyramidai::service::{
+    AnalysisService, ExecMode, PolicySpec, ServiceConfig, ServiceReport,
+};
+use pyramidai::slide::pyramid::Slide;
+use pyramidai::slide::tile::TileId;
+use pyramidai::synth::slide_gen::{SlideKind, SlideSpec};
+use pyramidai::util::json::Json;
+
+fn oracle() -> Arc<dyn Analyzer> {
+    Arc::new(OracleAnalyzer::new(1))
+}
+
+fn slow_oracle(per_tile_ms: u64) -> Arc<dyn Analyzer> {
+    Arc::new(DelayAnalyzer::new(
+        OracleAnalyzer::new(1),
+        Duration::from_millis(per_tile_ms),
+    ))
+}
+
+/// Service + front-end with two tenants: `tok-a` → `lab_a`, `tok-b` → `lab_b`.
+fn start(
+    analyzer: Arc<dyn Analyzer>,
+    exec: ExecMode,
+    queue_capacity: usize,
+    max_in_flight: usize,
+) -> (Arc<AnalysisService>, HttpFrontend) {
+    let svc = Arc::new(AnalysisService::start(
+        analyzer,
+        ServiceConfig {
+            workers: 4,
+            queue_capacity,
+            max_in_flight,
+            batch: 8,
+            policy: PolicySpec::fifo(),
+            exec,
+            ..ServiceConfig::default()
+        },
+    ));
+    let tokens = TokenTable::parse("tok-a lab_a\ntok-b lab_b\n").unwrap();
+    let fe = HttpFrontend::start(Arc::clone(&svc), HttpConfig::new("127.0.0.1:0", tokens))
+        .expect("bind ephemeral port");
+    (svc, fe)
+}
+
+/// Stop the front-end (joining every handler) and drain the service.
+fn finish(svc: Arc<AnalysisService>, fe: HttpFrontend) -> ServiceReport {
+    fe.stop();
+    Arc::try_unwrap(svc)
+        .ok()
+        .expect("front-end joined every handler")
+        .shutdown()
+}
+
+// ---- minimal raw HTTP/1.1 client -------------------------------------------
+
+struct Response {
+    status: u16,
+    headers: Vec<(String, String)>,
+    body: Vec<u8>,
+}
+
+impl Response {
+    fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    fn json(&self) -> Json {
+        Json::parse(std::str::from_utf8(&self.body).unwrap()).unwrap()
+    }
+
+    /// Parse an NDJSON body into one `Json` per line.
+    fn lines(&self) -> Vec<Json> {
+        std::str::from_utf8(&self.body)
+            .unwrap()
+            .lines()
+            .map(|l| Json::parse(l).unwrap())
+            .collect()
+    }
+}
+
+fn decode_chunked(mut b: &[u8]) -> Vec<u8> {
+    let mut out = Vec::new();
+    loop {
+        let pos = b.windows(2).position(|w| w == b"\r\n").expect("chunk size line");
+        let size = usize::from_str_radix(std::str::from_utf8(&b[..pos]).unwrap(), 16).unwrap();
+        b = &b[pos + 2..];
+        if size == 0 {
+            break;
+        }
+        out.extend_from_slice(&b[..size]);
+        b = &b[size + 2..];
+    }
+    out
+}
+
+fn parse_response(buf: &[u8]) -> Response {
+    let head_end = buf
+        .windows(4)
+        .position(|w| w == b"\r\n\r\n")
+        .unwrap_or_else(|| panic!("no response head in {:?}", String::from_utf8_lossy(buf)));
+    let head = std::str::from_utf8(&buf[..head_end]).unwrap();
+    let mut it = head.split("\r\n");
+    let status: u16 = it
+        .next()
+        .unwrap()
+        .split(' ')
+        .nth(1)
+        .expect("status code")
+        .parse()
+        .unwrap();
+    let headers: Vec<(String, String)> = it
+        .map(|l| {
+            let (k, v) = l.split_once(':').expect("header line");
+            (k.trim().to_ascii_lowercase(), v.trim().to_string())
+        })
+        .collect();
+    let raw_body = &buf[head_end + 4..];
+    let chunked = headers
+        .iter()
+        .any(|(k, v)| k == "transfer-encoding" && v == "chunked");
+    let body = if chunked {
+        decode_chunked(raw_body)
+    } else {
+        raw_body.to_vec()
+    };
+    Response {
+        status,
+        headers,
+        body,
+    }
+}
+
+/// One `Connection: close` request/response round trip.
+fn http(addr: SocketAddr, raw: &str) -> Response {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(raw.as_bytes()).unwrap();
+    let mut buf = Vec::new();
+    s.read_to_end(&mut buf).unwrap();
+    parse_response(&buf)
+}
+
+fn get(addr: SocketAddr, path: &str, token: &str) -> Response {
+    http(
+        addr,
+        &format!(
+            "GET {path} HTTP/1.1\r\nHost: t\r\nAuthorization: Bearer {token}\r\nConnection: close\r\n\r\n"
+        ),
+    )
+}
+
+fn delete(addr: SocketAddr, path: &str, token: &str) -> Response {
+    http(
+        addr,
+        &format!(
+            "DELETE {path} HTTP/1.1\r\nHost: t\r\nAuthorization: Bearer {token}\r\nConnection: close\r\n\r\n"
+        ),
+    )
+}
+
+fn post(addr: SocketAddr, path: &str, token: &str, body: &str) -> Response {
+    http(
+        addr,
+        &format!(
+            "POST {path} HTTP/1.1\r\nHost: t\r\nAuthorization: Bearer {token}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+            body.len()
+        ),
+    )
+}
+
+// ---- wire ↔ tree helpers ----------------------------------------------------
+
+fn submit_body(id: &str, seed: u64, tiles_x: usize, tiles_y: usize, kind: &str) -> String {
+    Json::obj()
+        .set(
+            "slide",
+            Json::obj()
+                .set("id", id)
+                .set("seed", seed)
+                .set("tiles_x", tiles_x)
+                .set("tiles_y", tiles_y)
+                .set("levels", 3usize)
+                .set("tile_px", 64usize)
+                .set("kind", kind),
+        )
+        .set(
+            "thresholds",
+            Json::Arr(vec![0.5.into(), 0.35.into(), 0.35.into()]),
+        )
+        .to_string()
+}
+
+fn thresholds() -> Thresholds {
+    Thresholds {
+        zoom: vec![0.5, 0.35, 0.35],
+    }
+}
+
+fn tile(v: &Json) -> TileId {
+    let a = v.as_arr().unwrap();
+    TileId::new(
+        a[0].as_usize().unwrap(),
+        a[1].as_usize().unwrap(),
+        a[2].as_usize().unwrap(),
+    )
+}
+
+/// Rebuild an [`ExecTree`] from a result stream's lines; returns the
+/// tree and the terminal line.
+fn reassemble(mut lines: Vec<Json>) -> (ExecTree, Json) {
+    assert!(lines.len() >= 2, "header + terminal at minimum: {lines:?}");
+    let terminal = lines.pop().unwrap();
+    assert!(
+        terminal.get("done").unwrap().as_bool().unwrap(),
+        "stream must end with the terminal line: {terminal:?}"
+    );
+    let header = lines.remove(0);
+    let levels = header.get("levels").unwrap().as_usize().unwrap();
+    let slide = header.get("slide").unwrap().as_str().unwrap();
+    let mut tree = ExecTree::new(slide, levels);
+    for t in header.get("initial").unwrap().as_arr().unwrap() {
+        tree.initial.push(tile(t));
+    }
+    for line in &lines {
+        let level = line.get("level").unwrap().as_usize().unwrap();
+        for n in line.get("nodes").unwrap().as_arr().unwrap() {
+            let a = n.as_arr().unwrap();
+            tree.nodes[level].push(ExecNode {
+                tile: tile(n),
+                prob: a[3].as_f64().unwrap() as f32,
+                zoom: a[4].as_bool().unwrap(),
+            });
+        }
+    }
+    (tree, terminal)
+}
+
+// ---- tests ------------------------------------------------------------------
+
+#[test]
+fn streamed_deltas_reassemble_byte_identical_trees_on_both_backends() {
+    let cases: [(u64, &str); 4] = [
+        (900, "large_tumor"),
+        (901, "small_scattered"),
+        (902, "negative"),
+        (903, "large_tumor"),
+    ];
+    let thr = thresholds();
+    let solo: Vec<ExecTree> = cases
+        .iter()
+        .map(|&(seed, kind)| {
+            let sp = SlideSpec::new(
+                format!("http_{seed}"),
+                seed,
+                16,
+                8,
+                3,
+                64,
+                SlideKind::from_str(kind).unwrap(),
+            );
+            run_pyramidal(&Slide::from_spec(sp), oracle().as_ref(), &thr, 8)
+        })
+        .collect();
+
+    let backends = [
+        ExecMode::Pool,
+        ExecMode::Cluster(ClusterExecConfig {
+            workers: 2,
+            steal: true,
+            seed: 5,
+            ..ClusterExecConfig::default()
+        }),
+    ];
+    for exec in backends {
+        let label = format!("{exec:?}");
+        let (svc, fe) = start(oracle(), exec, 16, 2);
+        let addr = fe.addr();
+        let tokens = ["tok-a", "tok-b"];
+        let mut ids = Vec::new();
+        for (i, &(seed, kind)) in cases.iter().enumerate() {
+            let body = submit_body(&format!("http_{seed}"), seed, 16, 8, kind);
+            let r = post(addr, "/v1/jobs", tokens[i % 2], &body);
+            assert_eq!(r.status, 201, "{label}: {}", String::from_utf8_lossy(&r.body));
+            let v = r.json();
+            assert_eq!(
+                r.header("location"),
+                Some(format!("/v1/jobs/{}", v.get("job").unwrap().as_u64().unwrap()).as_str())
+            );
+            assert_eq!(v.get("tenant").unwrap().as_str().unwrap(), ["lab_a", "lab_b"][i % 2]);
+            ids.push(v.get("job").unwrap().as_u64().unwrap());
+        }
+        for (i, id) in ids.iter().enumerate() {
+            let r = get(addr, &format!("/v1/jobs/{id}/result"), tokens[i % 2]);
+            assert_eq!(r.status, 200, "{label} job {i}");
+            let (tree, terminal) = reassemble(r.lines());
+            assert_eq!(
+                terminal.get("state").unwrap().as_str().unwrap(),
+                "completed",
+                "{label} job {i}"
+            );
+            tree.check_consistency().unwrap();
+            assert_eq!(
+                tree.to_json().to_string(),
+                solo[i].to_json().to_string(),
+                "{label}: job {i} stream did not reassemble the standalone tree"
+            );
+            assert_eq!(
+                terminal.get("tiles").unwrap().as_usize().unwrap(),
+                solo[i].total_analyzed()
+            );
+        }
+        // Status after completion reports the terminal record.
+        let r = get(addr, &format!("/v1/jobs/{}", ids[0]), "tok-a");
+        assert_eq!(r.status, 200);
+        let v = r.json();
+        assert_eq!(v.get("phase").unwrap().as_str().unwrap(), "done");
+        assert_eq!(v.get("state").unwrap().as_str().unwrap(), "completed");
+        // Tenant isolation: the other tenant's token sees a 404, not a 403.
+        assert_eq!(get(addr, &format!("/v1/jobs/{}", ids[0]), "tok-b").status, 404);
+        let report = finish(svc, fe);
+        assert_eq!(report.metrics.completed, cases.len(), "{label}");
+    }
+}
+
+#[test]
+fn cancel_mid_run_streams_a_partial_tree() {
+    let sp = SlideSpec::new("http_cancel", 910, 48, 32, 3, 64, SlideKind::LargeTumor);
+    let thr = thresholds();
+    let solo = run_pyramidal(&Slide::from_spec(sp), oracle().as_ref(), &thr, 8);
+
+    let (svc, fe) = start(slow_oracle(2), ExecMode::Pool, 4, 1);
+    let addr = fe.addr();
+    let body = submit_body("http_cancel", 910, 48, 32, "large_tumor");
+    let r = post(addr, "/v1/jobs", "tok-a", &body);
+    assert_eq!(r.status, 201, "{}", String::from_utf8_lossy(&r.body));
+    let id = r.json().get("job").unwrap().as_u64().unwrap();
+
+    // Wait until the scheduler picks the job up, give the first frontier
+    // a head start, then cancel over the wire.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let v = get(addr, &format!("/v1/jobs/{id}"), "tok-a").json();
+        if v.get("phase").unwrap().as_str().unwrap() == "running" {
+            break;
+        }
+        assert!(Instant::now() < deadline, "job never started: {v:?}");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    std::thread::sleep(Duration::from_millis(30));
+    let r = delete(addr, &format!("/v1/jobs/{id}"), "tok-a");
+    assert_eq!(r.status, 202);
+    assert!(r.json().get("cancelled").unwrap().as_bool().unwrap());
+
+    let r = get(addr, &format!("/v1/jobs/{id}/result"), "tok-a");
+    assert_eq!(r.status, 200);
+    let (tree, terminal) = reassemble(r.lines());
+    assert_eq!(terminal.get("state").unwrap().as_str().unwrap(), "cancelled");
+    tree.check_consistency().unwrap();
+    assert!(
+        tree.total_analyzed() < solo.total_analyzed(),
+        "cancellation must cut the run short ({} vs {})",
+        tree.total_analyzed(),
+        solo.total_analyzed()
+    );
+    // Frontier-boundary semantics survive the wire: every streamed level
+    // is byte-identical to the standalone run's, or absent entirely.
+    for (level, nodes) in tree.nodes.iter().enumerate() {
+        assert!(
+            nodes.is_empty() || *nodes == solo.nodes[level],
+            "level {level} streamed partially"
+        );
+    }
+    let report = finish(svc, fe);
+    assert_eq!(report.metrics.cancelled, 1);
+}
+
+#[test]
+fn full_queue_answers_429_with_retry_after() {
+    let (svc, fe) = start(slow_oracle(3), ExecMode::Pool, 1, 1);
+    let addr = fe.addr();
+    let r = post(addr, "/v1/jobs", "tok-a", &submit_body("q0", 920, 16, 8, "large_tumor"));
+    assert_eq!(r.status, 201);
+    // Wait until the first job leaves the queue for its run slot, so the
+    // single queue seat is genuinely free for the second submission.
+    while svc.queued() > 0 {
+        std::thread::sleep(Duration::from_micros(200));
+    }
+    let r = post(addr, "/v1/jobs", "tok-a", &submit_body("q1", 921, 16, 8, "large_tumor"));
+    assert_eq!(r.status, 201);
+    // Queue full (q1 parked in it, q0 running): backpressure surfaces.
+    let r = post(addr, "/v1/jobs", "tok-b", &submit_body("q2", 922, 16, 8, "large_tumor"));
+    assert_eq!(r.status, 429, "{}", String::from_utf8_lossy(&r.body));
+    assert_eq!(r.header("retry-after"), Some("1"));
+    let v = r.json();
+    assert_eq!(v.get("capacity").unwrap().as_usize().unwrap(), 1);
+    assert_eq!(v.get("retry_after").unwrap().as_u64().unwrap(), 1);
+    let report = finish(svc, fe);
+    assert_eq!(report.metrics.completed, 2, "only the admitted jobs ran");
+}
+
+#[test]
+fn auth_routing_and_metrics_edges() {
+    let (svc, fe) = start(oracle(), ExecMode::Pool, 4, 2);
+    let addr = fe.addr();
+
+    // Liveness probe needs no credentials.
+    let r = http(addr, "GET /healthz HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n");
+    assert_eq!(r.status, 200);
+    assert!(r.json().get("ok").unwrap().as_bool().unwrap());
+
+    // Every /v1 route requires a bearer token.
+    let r = http(addr, "GET /v1/metrics HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n");
+    assert_eq!(r.status, 401);
+    assert_eq!(r.header("www-authenticate"), Some("Bearer"));
+    assert_eq!(get(addr, "/v1/metrics", "wrong-token").status, 401);
+
+    // Wrong method → 405 with Allow; unknown routes and ids → 404.
+    let r = http(
+        addr,
+        "PUT /v1/jobs HTTP/1.1\r\nHost: t\r\nAuthorization: Bearer tok-a\r\nConnection: close\r\n\r\n",
+    );
+    assert_eq!(r.status, 405);
+    assert_eq!(r.header("allow"), Some("POST"));
+    assert_eq!(get(addr, "/v1/jobs/999", "tok-a").status, 404);
+    assert_eq!(get(addr, "/v1/nope", "tok-a").status, 404);
+    assert_eq!(get(addr, "/v1/jobs/12x", "tok-a").status, 404);
+
+    // The metrics snapshot carries the http.* series.
+    let r = get(addr, "/v1/metrics", "tok-a");
+    assert_eq!(r.status, 200);
+    let counters = r.json().get("counters").unwrap().clone();
+    assert!(counters.get("http.requests").unwrap().as_u64().unwrap() >= 1);
+    assert!(counters.get("http.auth_failures").unwrap().as_u64().unwrap() >= 2);
+    finish(svc, fe);
+}
+
+#[test]
+fn keep_alive_serves_sequential_requests_on_one_connection() {
+    let (svc, fe) = start(oracle(), ExecMode::Pool, 4, 2);
+    let mut s = TcpStream::connect(fe.addr()).unwrap();
+    // Two pipelined requests; the second closes the connection, so one
+    // read_to_end captures both responses.
+    s.write_all(
+        b"GET /healthz HTTP/1.1\r\nHost: t\r\n\r\n\
+          GET /healthz HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n",
+    )
+    .unwrap();
+    let mut buf = Vec::new();
+    s.read_to_end(&mut buf).unwrap();
+    let text = String::from_utf8_lossy(&buf);
+    assert_eq!(
+        text.matches("HTTP/1.1 200 OK").count(),
+        2,
+        "both pipelined requests answered: {text}"
+    );
+    finish(svc, fe);
+}
