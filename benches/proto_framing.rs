@@ -1,0 +1,70 @@
+//! Wire-framing bench: round-trip the hot cluster messages through the
+//! JSON v1 encoding and the binary frame v2 encoding and report
+//! ns/message plus bytes/message for both, alongside the tile-synthesis
+//! hot path. The same measurements `pyramidai bench --smoke` runs as a
+//! CI gate, here at full size.
+
+use pyramidai::harness::{print_table, CsvOut};
+use pyramidai::obs::bench::{bench_proto_framing, bench_synth_tile, BenchConfig};
+
+fn main() {
+    let cfg = BenchConfig { smoke: false };
+    let framing = bench_proto_framing(cfg);
+    let synth = bench_synth_tile(cfg);
+    let f = |doc: &pyramidai::util::json::Json, k: &str| doc.get(k).unwrap().as_f64().unwrap();
+
+    let mut csv = CsvOut::create(
+        "proto_framing.csv",
+        &[
+            "bench",
+            "slow_ns",
+            "fast_ns",
+            "speedup",
+            "slow_bytes",
+            "fast_bytes",
+        ],
+    )
+    .expect("bench_results dir");
+    csv.row(&[
+        "proto_framing".to_string(),
+        format!("{:.1}", f(&framing, "json_ns_per_msg")),
+        format!("{:.1}", f(&framing, "binary_ns_per_msg")),
+        format!("{:.2}", f(&framing, "speedup")),
+        format!("{}", f(&framing, "json_bytes_per_msg")),
+        format!("{}", f(&framing, "binary_bytes_per_msg")),
+    ])
+    .unwrap();
+    csv.row(&[
+        "synth_tile".to_string(),
+        format!("{:.2}", f(&synth, "scalar_ns_per_px")),
+        format!("{:.2}", f(&synth, "fast_ns_per_px")),
+        format!("{:.2}", f(&synth, "speedup")),
+        String::new(),
+        String::new(),
+    ])
+    .unwrap();
+
+    print_table(
+        "Hot paths: wire framing (per ChunkDone msg) and tile synthesis (per px)",
+        &["bench", "slow", "fast", "speedup", "slow bytes", "fast bytes"],
+        &[
+            vec![
+                "proto_framing (ns/msg)".to_string(),
+                format!("{:.0}", f(&framing, "json_ns_per_msg")),
+                format!("{:.0}", f(&framing, "binary_ns_per_msg")),
+                format!("{:.2}x", f(&framing, "speedup")),
+                format!("{}", f(&framing, "json_bytes_per_msg")),
+                format!("{}", f(&framing, "binary_bytes_per_msg")),
+            ],
+            vec![
+                "synth_tile (ns/px)".to_string(),
+                format!("{:.1}", f(&synth, "scalar_ns_per_px")),
+                format!("{:.1}", f(&synth, "fast_ns_per_px")),
+                format!("{:.2}x", f(&synth, "speedup")),
+                String::new(),
+                String::new(),
+            ],
+        ],
+    );
+    println!("csv: {}", csv.path().display());
+}

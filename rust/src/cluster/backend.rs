@@ -63,8 +63,9 @@ use crate::slide::pyramid::Slide;
 use crate::synth::slide_gen::SlideSpec;
 use crate::util::prng::Pcg32;
 
-use super::leader::{send_to, send_to_deadline};
-use super::proto::{ChunkTask, Msg};
+use super::framev2::FrameBuf;
+use super::leader::{send_wire, send_wire_deadline};
+use super::proto::{ChunkTask, Msg, WireVersion};
 
 /// Patience for dealing a chunk to a worker believed alive: long enough
 /// for transient congestion, short enough that a just-crashed worker
@@ -97,6 +98,13 @@ pub struct ClusterExecConfig {
     /// Extra CLI flags appended after `worker --connect <addr>` for each
     /// external worker (e.g. `--model oracle --analyzer-seed 1`).
     pub external_args: Vec<String>,
+    /// Treat the first `n` in-process workers as wire-v1 peers: the
+    /// leader sends them JSON frames and they reply in JSON, exactly like
+    /// a pre-v2 `pyramidai worker` binary. The rest speak binary v2 for
+    /// hot messages. Mixed clusters are the rolling-upgrade scenario the
+    /// negotiation exists for (`backend_equivalence` proves the tree is
+    /// identical either way).
+    pub v1_json_workers: usize,
 }
 
 impl Default for ClusterExecConfig {
@@ -110,7 +118,18 @@ impl Default for ClusterExecConfig {
             external_workers: 0,
             external_program: String::new(),
             external_args: Vec::new(),
+            v1_json_workers: 0,
         }
+    }
+}
+
+/// Wire version of in-process worker `id` under `cfg` (the first
+/// [`ClusterExecConfig::v1_json_workers`] workers emulate pre-v2 peers).
+fn wire_for(id: usize, cfg: &ClusterExecConfig) -> WireVersion {
+    if id < cfg.v1_json_workers {
+        WireVersion::V1Json
+    } else {
+        WireVersion::V2Binary
     }
 }
 
@@ -157,6 +176,10 @@ struct WorkerSlot {
     port: u16,
     alive: bool,
     missed: u32,
+    /// Negotiated wire encoding for frames *sent to* this worker; what
+    /// the worker sends back is its own choice (every reader
+    /// auto-detects), but the negotiation keeps both directions aligned.
+    wire: WireVersion,
 }
 
 /// One dealt-but-unfinished chunk. `assigned == None` means orphaned:
@@ -189,25 +212,25 @@ struct ExecState {
 }
 
 impl ExecState {
-    /// Snapshot of the live workers as (id, port) pairs.
-    fn alive_ports(&self) -> Vec<(usize, u16)> {
+    /// Snapshot of the live workers as (id, port, wire) triples.
+    fn alive_ports(&self) -> Vec<(usize, u16, WireVersion)> {
         self.workers
             .lock()
             .unwrap()
             .iter()
             .enumerate()
             .filter(|(_, s)| s.alive)
-            .map(|(i, s)| (i, s.port))
+            .map(|(i, s)| (i, s.port, s.wire))
             .collect()
     }
 
     /// Pick a live worker not on `exclude`, round-robin. `None` when no
     /// registered worker is eligible.
-    fn pick_worker(&self, exclude: &[usize]) -> Option<(usize, u16)> {
-        let eligible: Vec<(usize, u16)> = self
+    fn pick_worker(&self, exclude: &[usize]) -> Option<(usize, u16, WireVersion)> {
+        let eligible: Vec<(usize, u16, WireVersion)> = self
             .alive_ports()
             .into_iter()
-            .filter(|(id, _)| !exclude.contains(id))
+            .filter(|(id, _, _)| !exclude.contains(id))
             .collect();
         if eligible.is_empty() {
             return None;
@@ -256,10 +279,12 @@ impl ClusterExec {
             workers: Mutex::new(
                 ports
                     .iter()
-                    .map(|&port| WorkerSlot {
+                    .enumerate()
+                    .map(|(id, &port)| WorkerSlot {
                         port,
                         alive: true,
                         missed: 0,
+                        wire: wire_for(id, cfg),
                     })
                     .collect(),
             ),
@@ -281,6 +306,7 @@ impl ClusterExec {
                 leader_port,
                 steal: cfg.steal,
                 seed: cfg.seed,
+                wire: wire_for(id, cfg),
             };
             let analyzer = Arc::clone(&analyzer);
             workers.push(
@@ -391,44 +417,79 @@ impl ClusterExec {
         level: usize,
         tiles: Vec<crate::slide::tile::TileId>,
     ) -> Result<()> {
-        let trace = self.state.trace_seq.fetch_add(1, Ordering::Relaxed);
-        let task = ChunkTask {
-            key,
-            spec: spec.clone(),
-            level,
-            tiles,
-            exclude: Vec::new(),
-            trace,
-        };
-        let target = self.state.pick_worker(&[]);
-        obs::global_metrics().counter("cluster.chunks_dealt").inc();
-        obs::event(
-            Level::Debug,
-            "cluster",
-            "chunk_dealt",
-            &[
-                ("key", key.into()),
-                ("trace", trace.into()),
-                ("worker", target.map(|(id, _)| id as i64).unwrap_or(-1).into()),
-                ("level", level.into()),
-                ("tiles", task.tiles.len().into()),
-            ],
-        );
-        self.state.pending.lock().unwrap().insert(
-            key,
-            PendingChunk {
-                task: task.clone(),
-                assigned: target.map(|(id, _)| id),
-            },
-        );
-        if let Some((id, port)) = target {
-            if send_to_deadline(port, &Msg::Chunk(task), DEAL_PATIENCE).is_err() {
-                // The worker vanished mid-send: orphan the chunk; the
+        self.submit_batch(spec, vec![(key, level, tiles)])
+    }
+
+    /// Deal a batch of chunks of one slide in one call, grouping
+    /// deliveries per worker: a v2 worker placed with several chunks of
+    /// the batch receives them as one [`Msg::ChunkBatch`] frame (one
+    /// connection, one write) instead of a frame each; v1 workers get
+    /// individual JSON [`Msg::Chunk`] frames. Placement, tracking and
+    /// recovery are exactly as if [`ClusterExec::submit`] had been called
+    /// per chunk in batch order.
+    pub fn submit_batch(
+        &self,
+        spec: &SlideSpec,
+        reqs: Vec<(u64, usize, Vec<crate::slide::tile::TileId>)>,
+    ) -> Result<()> {
+        // One entry per worker placed with chunks of this batch:
+        // (id, port, wire, its chunks in batch order).
+        let mut groups: Vec<(usize, u16, WireVersion, Vec<ChunkTask>)> = Vec::new();
+        for (key, level, tiles) in reqs {
+            let trace = self.state.trace_seq.fetch_add(1, Ordering::Relaxed);
+            let task = ChunkTask {
+                key,
+                spec: spec.clone(),
+                level,
+                tiles,
+                exclude: Vec::new(),
+                trace,
+            };
+            let target = self.state.pick_worker(&[]);
+            obs::global_metrics().counter("cluster.chunks_dealt").inc();
+            obs::event(
+                Level::Debug,
+                "cluster",
+                "chunk_dealt",
+                &[
+                    ("key", key.into()),
+                    ("trace", trace.into()),
+                    (
+                        "worker",
+                        target.map(|(id, _, _)| id as i64).unwrap_or(-1).into(),
+                    ),
+                    ("level", level.into()),
+                    ("tiles", task.tiles.len().into()),
+                ],
+            );
+            self.state.pending.lock().unwrap().insert(
+                key,
+                PendingChunk {
+                    task: task.clone(),
+                    assigned: target.map(|(id, _, _)| id),
+                },
+            );
+            if let Some((id, port, wire)) = target {
+                match groups.iter_mut().find(|g| g.0 == id) {
+                    Some(g) => g.3.push(task),
+                    None => groups.push((id, port, wire, vec![task])),
+                }
+            }
+        }
+        let mut buf = FrameBuf::new();
+        for (id, port, wire, tasks) in groups {
+            let keys: Vec<u64> = tasks.iter().map(|t| t.key).collect();
+            if send_chunks(port, wire, tasks, &mut buf).is_err() {
+                // The worker vanished mid-send: orphan the group; the
                 // monitor re-deals it once the death is confirmed or a
-                // new worker joins.
-                if let Some(p) = self.state.pending.lock().unwrap().get_mut(&key) {
-                    if p.assigned == Some(id) {
-                        p.assigned = None;
+                // new worker joins. (A chunk delivered before the failure
+                // may run twice; the pending map dedups its completion.)
+                let mut pending = self.state.pending.lock().unwrap();
+                for key in keys {
+                    if let Some(p) = pending.get_mut(&key) {
+                        if p.assigned == Some(id) {
+                            p.assigned = None;
+                        }
                     }
                 }
             }
@@ -552,6 +613,33 @@ fn try_send(port: u16, msg: &Msg) -> Result<()> {
     msg.write_to(&mut stream)
 }
 
+/// Put one worker's group of chunks on the wire: a multi-chunk group on
+/// a v2 connection goes as a single [`Msg::ChunkBatch`] frame; anything
+/// else as per-chunk frames (stopping at the first failure). `buf` is
+/// the caller's reused encode buffer.
+fn send_chunks(
+    port: u16,
+    wire: WireVersion,
+    tasks: Vec<ChunkTask>,
+    buf: &mut FrameBuf,
+) -> Result<()> {
+    if wire == WireVersion::V2Binary && tasks.len() > 1 {
+        obs::global_metrics().counter("cluster.chunk_batches").inc();
+        obs::event(
+            Level::Debug,
+            "cluster",
+            "chunk_batch_sent",
+            &[("port", port.into()), ("chunks", tasks.len().into())],
+        );
+        send_wire_deadline(port, &Msg::ChunkBatch(tasks), wire, DEAL_PATIENCE, buf)
+    } else {
+        for task in tasks {
+            send_wire_deadline(port, &Msg::Chunk(task), wire, DEAL_PATIENCE, buf)?;
+        }
+        Ok(())
+    }
+}
+
 /// Liveness probe: Ping, expect Pong on the same stream.
 fn probe(port: u16, timeout: Duration) -> bool {
     let Ok(mut stream) = TcpStream::connect(("127.0.0.1", port)) else {
@@ -615,13 +703,17 @@ fn leader_loop(listener: TcpListener, state: Arc<ExecState>, tx: Sender<ExecEven
                             }
                         }
                     }
-                    Ok(Msg::Hello { port }) => {
+                    Ok(Msg::Hello { port, wire }) => {
+                        // Negotiation: the leader speaks both encodings,
+                        // so the worker's proposal is accepted as-is (a
+                        // pre-v2 peer omits the field and lands on v1).
                         let id = {
                             let mut ws = state.workers.lock().unwrap();
                             ws.push(WorkerSlot {
                                 port,
                                 alive: true,
                                 missed: 0,
+                                wire,
                             });
                             ws.len() - 1
                         };
@@ -633,9 +725,13 @@ fn leader_loop(listener: TcpListener, state: Arc<ExecState>, tx: Sender<ExecEven
                             Level::Info,
                             "cluster",
                             "worker_joined",
-                            &[("worker", id.into()), ("port", port.into())],
+                            &[
+                                ("worker", id.into()),
+                                ("port", port.into()),
+                                ("wire", (wire.as_u64() as i64).into()),
+                            ],
                         );
-                        let _ = Msg::Welcome { id }.write_to(&mut stream);
+                        let _ = Msg::Welcome { id, wire }.write_to(&mut stream);
                     }
                     Ok(Msg::ChunkMoved { key, worker, trace }) => {
                         obs::global_metrics().counter("cluster.chunks_moved").inc();
@@ -678,7 +774,7 @@ fn monitor_loop(state: Arc<ExecState>, tx: Sender<ExecEvent>, heartbeat: Duratio
         if state.done.load(Ordering::Acquire) {
             return;
         }
-        for (id, port) in state.alive_ports() {
+        for (id, port, _) in state.alive_ports() {
             if state.done.load(Ordering::Acquire) {
                 return;
             }
@@ -728,7 +824,7 @@ fn monitor_loop(state: Arc<ExecState>, tx: Sender<ExecEvent>, heartbeat: Duratio
 /// dispatcher as [`ExecEvent::Lost`]; with no live worker at all it
 /// stays orphaned for a rejoin.
 fn redeal_chunks(state: &ExecState, tx: &Sender<ExecEvent>, dead: Option<usize>) {
-    let mut sends: Vec<(usize, u16, ChunkTask)> = Vec::new();
+    let mut sends: Vec<(usize, u16, WireVersion, ChunkTask)> = Vec::new();
     let mut lost: Vec<(u64, u64)> = Vec::new();
     {
         let mut pending = state.pending.lock().unwrap();
@@ -748,9 +844,9 @@ fn redeal_chunks(state: &ExecState, tx: &Sender<ExecEvent>, dead: Option<usize>)
                 }
             }
             match state.pick_worker(&p.task.exclude) {
-                Some((w, port)) => {
+                Some((w, port, wire)) => {
                     p.assigned = Some(w);
-                    sends.push((w, port, p.task.clone()));
+                    sends.push((w, port, wire, p.task.clone()));
                 }
                 None => {
                     if state.alive_ports().is_empty() {
@@ -781,30 +877,47 @@ fn redeal_chunks(state: &ExecState, tx: &Sender<ExecEvent>, dead: Option<usize>)
     }
 }
 
-/// Send planned resubmissions outside any lock; failures re-orphan (and
-/// are not counted — the eventual successful re-deal is the one logical
-/// resubmission).
-fn deliver(state: &ExecState, sends: Vec<(usize, u16, ChunkTask)>) {
-    for (worker, port, task) in sends {
-        let key = task.key;
-        let trace = task.trace;
-        if send_to_deadline(port, &Msg::Chunk(task), DEAL_PATIENCE).is_ok() {
-            state.chunks_resubmitted.fetch_add(1, Ordering::Relaxed);
-            obs::global_metrics()
-                .counter("cluster.chunks_resubmitted")
-                .inc();
-            obs::event(
-                Level::Info,
-                "cluster",
-                "chunk_resubmitted",
-                &[
-                    ("key", key.into()),
-                    ("trace", trace.into()),
-                    ("worker", worker.into()),
-                ],
-            );
-        } else if let Some(p) = state.pending.lock().unwrap().get_mut(&key) {
-            p.assigned = None;
+/// Send planned resubmissions outside any lock, grouped per worker like
+/// the submit path (one [`Msg::ChunkBatch`] to a v2 worker getting
+/// several chunks); failures re-orphan (and are not counted — the
+/// eventual successful re-deal is the one logical resubmission).
+fn deliver(state: &ExecState, sends: Vec<(usize, u16, WireVersion, ChunkTask)>) {
+    let mut groups: Vec<(usize, u16, WireVersion, Vec<ChunkTask>)> = Vec::new();
+    for (worker, port, wire, task) in sends {
+        match groups.iter_mut().find(|g| g.0 == worker) {
+            Some(g) => g.3.push(task),
+            None => groups.push((worker, port, wire, vec![task])),
+        }
+    }
+    let mut buf = FrameBuf::new();
+    for (worker, port, wire, tasks) in groups {
+        let meta: Vec<(u64, u64)> = tasks.iter().map(|t| (t.key, t.trace)).collect();
+        if send_chunks(port, wire, tasks, &mut buf).is_ok() {
+            for (key, trace) in meta {
+                state.chunks_resubmitted.fetch_add(1, Ordering::Relaxed);
+                obs::global_metrics()
+                    .counter("cluster.chunks_resubmitted")
+                    .inc();
+                obs::event(
+                    Level::Info,
+                    "cluster",
+                    "chunk_resubmitted",
+                    &[
+                        ("key", key.into()),
+                        ("trace", trace.into()),
+                        ("worker", worker.into()),
+                    ],
+                );
+            }
+        } else {
+            let mut pending = state.pending.lock().unwrap();
+            for (key, _) in meta {
+                if let Some(p) = pending.get_mut(&key) {
+                    if p.assigned == Some(worker) {
+                        p.assigned = None;
+                    }
+                }
+            }
         }
     }
 }
@@ -815,6 +928,8 @@ struct ExecWorkerConfig {
     leader_port: u16,
     steal: bool,
     seed: u64,
+    /// Negotiated wire encoding for this worker's uploads to the leader.
+    wire: WireVersion,
 }
 
 struct ExecShared {
@@ -849,6 +964,9 @@ fn run_exec_worker(cfg: ExecWorkerConfig, listener: TcpListener, analyzer: Arc<d
     let mut slides: HashMap<String, Slide> = HashMap::new();
     let mut rng = Pcg32::new(cfg.seed ^ ((cfg.id as u64) << 32) ^ 0xC1C1);
     let mut idle_streak: u32 = 0;
+    // One encode buffer for every hot frame this worker ever uploads —
+    // zero steady-state allocation on the v2 wire (DESIGN.md §14).
+    let mut wire_buf = FrameBuf::new();
     loop {
         if shared.killed.load(Ordering::Acquire) {
             break; // crash: queued work dies with us, nobody is told
@@ -889,10 +1007,13 @@ fn run_exec_worker(cfg: ExecWorkerConfig, listener: TcpListener, analyzer: Arc<d
                         ("tiles", t.tiles.len().into()),
                     ],
                 );
-                // Non-finite probabilities cannot survive the JSON wire
-                // (they serialize as null and the leader would drop the
-                // whole frame, stranding the run). Send a short reply
-                // instead: the dispatcher fails that one job cleanly.
+                // Non-finite probabilities cannot survive the JSON v1
+                // wire (they serialize as null and the leader would drop
+                // the whole frame, stranding the run). The binary v2 wire
+                // could carry them bit-exactly, but clearing on both
+                // wires keeps failure behavior encoding-independent: a
+                // short reply makes the dispatcher fail that one job
+                // cleanly no matter which wire the worker negotiated.
                 if probs.iter().any(|p| !p.is_finite()) {
                     probs.clear();
                 }
@@ -911,7 +1032,7 @@ fn run_exec_worker(cfg: ExecWorkerConfig, listener: TcpListener, analyzer: Arc<d
                     probs,
                     trace: t.trace,
                 };
-                while send_to(cfg.leader_port, &msg).is_err() {
+                while send_wire(cfg.leader_port, &msg, cfg.wire, &mut wire_buf).is_err() {
                     if shared.done.load(Ordering::Acquire) {
                         break; // shutting down: the dispatcher is gone
                     }
@@ -947,13 +1068,15 @@ fn run_exec_worker(cfg: ExecWorkerConfig, listener: TcpListener, analyzer: Arc<d
                         );
                         // Tell the leader the chunk moved, so a future
                         // death of *this* worker resubmits it (§10).
-                        let _ = send_to(
+                        let _ = send_wire(
                             cfg.leader_port,
                             &Msg::ChunkMoved {
                                 key: task.key,
                                 worker: cfg.id,
                                 trace: task.trace,
                             },
+                            cfg.wire,
+                            &mut wire_buf,
                         );
                         shared.queue.lock().unwrap().push_back(task);
                         continue;
@@ -982,6 +1105,15 @@ fn exec_listen_loop(listener: TcpListener, shared: Arc<ExecShared>) {
                     match msg {
                         Msg::Chunk(t) => {
                             shared.queue.lock().unwrap().push_back(t);
+                        }
+                        Msg::ChunkBatch(ts) => {
+                            // Semantically identical to that many Chunk
+                            // frames in order, amortizing connection and
+                            // framing cost across the batch.
+                            let mut q = shared.queue.lock().unwrap();
+                            for t in ts {
+                                q.push_back(t);
+                            }
                         }
                         Msg::ChunkSteal { thief } => {
                             let (task, idle) = {
@@ -1045,6 +1177,7 @@ pub fn run_standalone_worker(
     addr: &str,
     analyzer: Arc<dyn Analyzer>,
     seed: u64,
+    wire: WireVersion,
 ) -> Result<usize> {
     let leader_port: u16 = addr
         .rsplit(':')
@@ -1056,9 +1189,15 @@ pub fn run_standalone_worker(
     let mut stream = TcpStream::connect(addr).with_context(|| format!("connect leader {addr}"))?;
     stream.set_nodelay(true).ok();
     stream.set_read_timeout(Some(Duration::from_secs(30))).ok();
-    Msg::Hello { port: my_port }.write_to(&mut stream)?;
-    let id = match Msg::read_from(&mut stream)? {
-        Msg::Welcome { id } => id,
+    Msg::Hello {
+        port: my_port,
+        wire,
+    }
+    .write_to(&mut stream)?;
+    // Adopt the leader's negotiated encoding (a pre-v2 leader's Welcome
+    // carries no wire field and parses as v1, so uploads stay JSON).
+    let (id, wire) = match Msg::read_from(&mut stream)? {
+        Msg::Welcome { id, wire } => (id, wire),
         other => anyhow::bail!("unexpected handshake reply {other:?}"),
     };
     drop(stream);
@@ -1071,6 +1210,7 @@ pub fn run_standalone_worker(
             ("worker", id.into()),
             ("port", my_port.into()),
             ("leader", addr.into()),
+            ("wire", wire.as_u64().into()),
         ],
     );
     let cfg = ExecWorkerConfig {
@@ -1079,6 +1219,7 @@ pub fn run_standalone_worker(
         leader_port,
         steal: false,
         seed,
+        wire,
     };
     run_exec_worker(cfg, listener, analyzer);
     Ok(id)
@@ -1095,6 +1236,10 @@ pub struct ClusterBackend {
     spec: SlideSpec,
     in_flight: usize,
     lost: Vec<RequestId>,
+    /// Requests dispatched since the last poll, staged so one frontier
+    /// expansion becomes one [`ClusterExec::submit_batch`] call (batched
+    /// multi-chunk frames to v2 workers) instead of a send per request.
+    staged: Vec<(u64, usize, Vec<crate::slide::tile::TileId>)>,
 }
 
 impl ClusterBackend {
@@ -1111,6 +1256,7 @@ impl ClusterBackend {
             spec,
             in_flight: 0,
             lost: Vec::new(),
+            staged: Vec::new(),
         })
     }
 
@@ -1131,13 +1277,20 @@ impl ClusterBackend {
 
 impl ExecutionBackend for ClusterBackend {
     fn dispatch(&mut self, req: FrontierRequest) {
-        self.exec
-            .submit(req.id, &self.spec, req.level, req.tiles)
-            .expect("cluster chunk submission");
+        // Stage, don't send: the driver dispatches a whole frontier
+        // expansion before polling, and the flush in `poll` turns those
+        // requests into grouped per-worker deliveries.
+        self.staged.push((req.id, req.level, req.tiles));
         self.in_flight += 1;
     }
 
     fn poll(&mut self, block: bool) -> Option<Completion> {
+        if !self.staged.is_empty() {
+            let reqs = std::mem::take(&mut self.staged);
+            self.exec
+                .submit_batch(&self.spec, reqs)
+                .expect("cluster chunk submission");
+        }
         while self.in_flight > 0 {
             let ev = if block {
                 self.exec.recv_event()
@@ -1216,6 +1369,41 @@ mod tests {
             assert_eq!(tree.nodes, expect.nodes, "workers={workers}");
             tree.check_consistency().unwrap();
         }
+    }
+
+    #[test]
+    fn mixed_wire_cluster_matches_v2_only_tree() {
+        // One v1-JSON worker + one v2-binary worker: the rolling-upgrade
+        // cluster must produce the same tree as the blocking driver (and
+        // hence as a uniform-wire cluster).
+        let sp = spec(402);
+        let analyzer: Arc<dyn Analyzer> = Arc::new(OracleAnalyzer::new(1));
+        let thr = Thresholds::uniform(3, 0.35);
+        let slide = Slide::from_spec(sp.clone());
+        let expect = run_pyramidal(&slide, analyzer.as_ref(), &thr, 8);
+        let mut backend = ClusterBackend::start(
+            sp,
+            Arc::clone(&analyzer),
+            &ClusterExecConfig {
+                workers: 2,
+                steal: true,
+                seed: 13,
+                v1_json_workers: 1,
+                ..ClusterExecConfig::default()
+            },
+        )
+        .unwrap();
+        let tree = run_on_backend(
+            slide.id(),
+            slide.levels(),
+            expect.initial.clone(),
+            &thr,
+            4,
+            &mut backend,
+        )
+        .unwrap();
+        assert_eq!(tree.nodes, expect.nodes);
+        tree.check_consistency().unwrap();
     }
 
     #[test]
@@ -1327,7 +1515,8 @@ mod tests {
         let addr = exec.leader_addr();
         let worker_analyzer = Arc::clone(&analyzer);
         let joiner = std::thread::spawn(move || {
-            run_standalone_worker(&addr, worker_analyzer, 77).expect("standalone worker")
+            run_standalone_worker(&addr, worker_analyzer, 77, WireVersion::V2Binary)
+                .expect("standalone worker")
         });
         assert!(
             exec.wait_for_workers(2, Duration::from_secs(10)),

@@ -1,0 +1,526 @@
+//! Binary frame format **v2** for the cluster's hot messages.
+//!
+//! PR 6's cross-process traces show the chunk wire dominated by three
+//! message shapes: `Chunk` (leader→worker deal/redeal, and its batched
+//! form `ChunkBatch`), `ChunkDone` (worker→leader, carrying one f32
+//! probability per tile) and `ChunkMoved` (steal bookkeeping). v1 encodes
+//! all of them as JSON — every probability is formatted and re-parsed
+//! through `f64` text, every encode allocates a tree of `Json` nodes plus
+//! the output `String`. v2 replaces exactly those hot messages with a flat
+//! little-endian binary layout written into a caller-owned reused buffer
+//! ([`FrameBuf`]) — zero per-message heap allocation on the encode path —
+//! while every *control* message (Hello, Ping, Subtree, steals, …) stays
+//! JSON v1.
+//!
+//! # Frame layout
+//!
+//! The outer framing is unchanged from v1: a 4-byte little-endian body
+//! length, then the body. A v2 body is
+//!
+//! ```text
+//! MAGIC(0xB5)  VERSION(0x02)  TAG(u8)  payload…
+//! ```
+//!
+//! JSON bodies always start with `{` (0x7B), so a reader can dispatch on
+//! the first body byte without negotiation — self-describing frames are
+//! what makes mixed v1/v2 clusters safe (see `proto::Msg::read_from`).
+//! Negotiation at `Hello`/`Welcome` only decides what a peer may *send*.
+//!
+//! Payloads (all integers little-endian):
+//!
+//! ```text
+//! chunk       := key:u64 trace:u64 level:u32 spec tiles excl
+//! spec        := seed:u64 tiles_x:u32 tiles_y:u32 levels:u32 tile_px:u32
+//!                kind:u8 id_len:u16 id:bytes
+//! tiles       := count:u32 (level:u8 tx:u32 ty:u32)*
+//! excl        := count:u32 (worker:u64)*
+//! CHUNK(1)       := chunk
+//! CHUNK_DONE(2)  := key:u64 worker:u64 trace:u64 count:u32 (prob:f32)*
+//! CHUNK_MOVED(3) := key:u64 worker:u64 trace:u64
+//! CHUNK_BATCH(4) := count:u32 chunk*
+//! ```
+//!
+//! # Hardening invariants
+//!
+//! * Every read is bounds-checked; malformed frames yield a typed
+//!   [`FrameError`], never a panic (`rust/tests/proto_security.rs` is the
+//!   adversarial suite, mirroring `http_security`).
+//! * Element counts are validated against the *remaining payload bytes*
+//!   (each element has a known minimum encoded size) **before** any
+//!   allocation, so a forged count cannot balloon memory.
+//! * Decoded [`SlideSpec`]s are built by struct literal — unlike the JSON
+//!   path this never routes attacker-controlled geometry through the
+//!   panicking `SlideSpec::new`.
+//! * Exactly the payload must be consumed: trailing bytes are an error.
+//!
+//! This module intentionally never touches `util::json` — CI greps that
+//! the hot-message encode path contains no `Json` construction.
+
+use thiserror::Error;
+
+use crate::slide::tile::TileId;
+use crate::synth::slide_gen::{SlideKind, SlideSpec};
+
+use super::proto::{ChunkTask, Msg};
+
+/// First byte of every v2 body. Distinct from `{` (0x7B), the first byte
+/// of every v1 JSON body.
+pub const MAGIC: u8 = 0xB5;
+/// Wire format version carried in the second body byte.
+pub const VERSION: u8 = 2;
+
+/// Tag byte: [`Msg::Chunk`].
+pub const TAG_CHUNK: u8 = 1;
+/// Tag byte: [`Msg::ChunkDone`].
+pub const TAG_CHUNK_DONE: u8 = 2;
+/// Tag byte: [`Msg::ChunkMoved`].
+pub const TAG_CHUNK_MOVED: u8 = 3;
+/// Tag byte: [`Msg::ChunkBatch`].
+pub const TAG_CHUNK_BATCH: u8 = 4;
+
+/// Minimum encoded size of one tile (level:u8 tx:u32 ty:u32).
+const TILE_BYTES: usize = 9;
+/// Minimum encoded size of one chunk (all fixed fields, empty id/lists).
+const CHUNK_MIN_BYTES: usize = 8 + 8 + 4 + (8 + 4 * 4 + 1 + 2) + 4 + 4;
+
+/// Typed decode failure of a v2 frame. Every malformed input maps here —
+/// the decoder never panics and never allocates based on unvalidated
+/// counts.
+#[derive(Debug, Clone, PartialEq, Eq, Error)]
+pub enum FrameError {
+    /// The body ended before a field could be read.
+    #[error("frame truncated reading {what}: need {need} byte(s), {have} left")]
+    Truncated {
+        /// Field being read when the body ran out.
+        what: &'static str,
+        /// Bytes the field needs.
+        need: usize,
+        /// Bytes that were left.
+        have: usize,
+    },
+    /// First body byte is neither `{` (JSON) nor [`MAGIC`].
+    #[error("bad frame magic 0x{0:02x} (expected 0x{MAGIC:02x})")]
+    BadMagic(u8),
+    /// Version byte this build does not speak.
+    #[error("unsupported frame version {0} (this build speaks {VERSION})")]
+    BadVersion(u8),
+    /// Unknown message tag.
+    #[error("unknown frame tag {0}")]
+    BadTag(u8),
+    /// A length/count field larger than the remaining payload could hold.
+    #[error("{what} count {count} impossible with {remaining} payload byte(s) left")]
+    BadCount {
+        /// Which collection claimed the count.
+        what: &'static str,
+        /// The claimed element count.
+        count: usize,
+        /// Remaining payload bytes.
+        remaining: usize,
+    },
+    /// Slide id bytes are not UTF-8.
+    #[error("slide id is not valid UTF-8")]
+    BadUtf8,
+    /// Unknown [`SlideKind`] code.
+    #[error("unknown slide kind code {0}")]
+    BadKind(u8),
+    /// Bytes left over after the message was fully decoded.
+    #[error("{0} trailing byte(s) after message body")]
+    TrailingBytes(usize),
+}
+
+// ---------------------------------------------------------------------
+// Encoding
+// ---------------------------------------------------------------------
+
+fn kind_code(k: SlideKind) -> u8 {
+    match k {
+        SlideKind::Negative => 0,
+        SlideKind::SmallScattered => 1,
+        SlideKind::LargeTumor => 2,
+    }
+}
+
+fn kind_from(code: u8) -> Result<SlideKind, FrameError> {
+    match code {
+        0 => Ok(SlideKind::Negative),
+        1 => Ok(SlideKind::SmallScattered),
+        2 => Ok(SlideKind::LargeTumor),
+        other => Err(FrameError::BadKind(other)),
+    }
+}
+
+fn put_chunk(buf: &mut Vec<u8>, c: &ChunkTask) {
+    buf.extend_from_slice(&c.key.to_le_bytes());
+    buf.extend_from_slice(&c.trace.to_le_bytes());
+    buf.extend_from_slice(&(c.level as u32).to_le_bytes());
+    let s = &c.spec;
+    buf.extend_from_slice(&s.seed.to_le_bytes());
+    buf.extend_from_slice(&(s.tiles_x as u32).to_le_bytes());
+    buf.extend_from_slice(&(s.tiles_y as u32).to_le_bytes());
+    buf.extend_from_slice(&(s.levels as u32).to_le_bytes());
+    buf.extend_from_slice(&(s.tile_px as u32).to_le_bytes());
+    buf.push(kind_code(s.kind));
+    let id = s.id.as_bytes();
+    // Slide ids are short human-readable names; 64 KiB is far beyond any
+    // real id and keeps the length a fixed 2 bytes.
+    debug_assert!(id.len() <= u16::MAX as usize, "slide id too long for wire");
+    buf.extend_from_slice(&(id.len().min(u16::MAX as usize) as u16).to_le_bytes());
+    buf.extend_from_slice(&id[..id.len().min(u16::MAX as usize)]);
+    buf.extend_from_slice(&(c.tiles.len() as u32).to_le_bytes());
+    for t in &c.tiles {
+        buf.push(t.level);
+        buf.extend_from_slice(&t.tx.to_le_bytes());
+        buf.extend_from_slice(&t.ty.to_le_bytes());
+    }
+    buf.extend_from_slice(&(c.exclude.len() as u32).to_le_bytes());
+    for &w in &c.exclude {
+        buf.extend_from_slice(&(w as u64).to_le_bytes());
+    }
+}
+
+/// Encode `msg` as a v2 body (no length prefix) appended to `buf`.
+/// Returns `false` (leaving `buf` untouched) when `msg` is not one of the
+/// hot messages — callers fall back to JSON v1 for those.
+pub fn encode_body(msg: &Msg, buf: &mut Vec<u8>) -> bool {
+    match msg {
+        Msg::Chunk(c) => {
+            buf.extend_from_slice(&[MAGIC, VERSION, TAG_CHUNK]);
+            put_chunk(buf, c);
+        }
+        Msg::ChunkDone {
+            key,
+            worker,
+            probs,
+            trace,
+        } => {
+            buf.extend_from_slice(&[MAGIC, VERSION, TAG_CHUNK_DONE]);
+            buf.extend_from_slice(&key.to_le_bytes());
+            buf.extend_from_slice(&(*worker as u64).to_le_bytes());
+            buf.extend_from_slice(&trace.to_le_bytes());
+            buf.extend_from_slice(&(probs.len() as u32).to_le_bytes());
+            // Raw little-endian f32 — no text round-trip, no per-element
+            // allocation.
+            for p in probs {
+                buf.extend_from_slice(&p.to_le_bytes());
+            }
+        }
+        Msg::ChunkMoved { key, worker, trace } => {
+            buf.extend_from_slice(&[MAGIC, VERSION, TAG_CHUNK_MOVED]);
+            buf.extend_from_slice(&key.to_le_bytes());
+            buf.extend_from_slice(&(*worker as u64).to_le_bytes());
+            buf.extend_from_slice(&trace.to_le_bytes());
+        }
+        Msg::ChunkBatch(chunks) => {
+            buf.extend_from_slice(&[MAGIC, VERSION, TAG_CHUNK_BATCH]);
+            buf.extend_from_slice(&(chunks.len() as u32).to_le_bytes());
+            for c in chunks {
+                put_chunk(buf, c);
+            }
+        }
+        _ => return false,
+    }
+    true
+}
+
+/// Reused frame-encoding buffer: one per sender loop, cleared (capacity
+/// kept) per message, so steady-state hot-message encoding performs zero
+/// heap allocation.
+#[derive(Default)]
+pub struct FrameBuf {
+    buf: Vec<u8>,
+}
+
+impl FrameBuf {
+    /// An empty buffer (grows to the largest frame it ever carries, then
+    /// stays there).
+    pub fn new() -> FrameBuf {
+        FrameBuf::default()
+    }
+
+    /// Encode `msg` as a complete length-prefixed v2 frame into the
+    /// reused buffer and return the bytes to put on the wire, or `None`
+    /// when `msg` has no binary encoding (send it as JSON v1 instead).
+    pub fn encode_frame(&mut self, msg: &Msg) -> Option<&[u8]> {
+        self.buf.clear();
+        self.buf.extend_from_slice(&[0, 0, 0, 0]);
+        if !encode_body(msg, &mut self.buf) {
+            return None;
+        }
+        let n = (self.buf.len() - 4) as u32;
+        self.buf[..4].copy_from_slice(&n.to_le_bytes());
+        Some(&self.buf)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Decoding
+// ---------------------------------------------------------------------
+
+/// Bounds-checked cursor over a frame body.
+struct Rd<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Rd<'a> {
+    fn remaining(&self) -> usize {
+        self.b.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize, what: &'static str) -> Result<&'a [u8], FrameError> {
+        if self.remaining() < n {
+            return Err(FrameError::Truncated {
+                what,
+                need: n,
+                have: self.remaining(),
+            });
+        }
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self, what: &'static str) -> Result<u8, FrameError> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    fn u16(&mut self, what: &'static str) -> Result<u16, FrameError> {
+        Ok(u16::from_le_bytes(self.take(2, what)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self, what: &'static str) -> Result<u32, FrameError> {
+        Ok(u32::from_le_bytes(self.take(4, what)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self, what: &'static str) -> Result<u64, FrameError> {
+        Ok(u64::from_le_bytes(self.take(8, what)?.try_into().unwrap()))
+    }
+
+    /// Read a count and pre-validate it against the remaining bytes given
+    /// each element occupies at least `elem_min` bytes — the guard that
+    /// makes `Vec::with_capacity(count)` safe.
+    fn count(&mut self, elem_min: usize, what: &'static str) -> Result<usize, FrameError> {
+        let n = self.u32(what)? as usize;
+        match n.checked_mul(elem_min) {
+            Some(bytes) if bytes <= self.remaining() => Ok(n),
+            _ => Err(FrameError::BadCount {
+                what,
+                count: n,
+                remaining: self.remaining(),
+            }),
+        }
+    }
+}
+
+fn get_chunk(r: &mut Rd) -> Result<ChunkTask, FrameError> {
+    let key = r.u64("chunk.key")?;
+    let trace = r.u64("chunk.trace")?;
+    let level = r.u32("chunk.level")? as usize;
+    let seed = r.u64("spec.seed")?;
+    let tiles_x = r.u32("spec.tiles_x")? as usize;
+    let tiles_y = r.u32("spec.tiles_y")? as usize;
+    let levels = r.u32("spec.levels")? as usize;
+    let tile_px = r.u32("spec.tile_px")? as usize;
+    let kind = kind_from(r.u8("spec.kind")?)?;
+    let id_len = r.u16("spec.id_len")? as usize;
+    let id = std::str::from_utf8(r.take(id_len, "spec.id")?)
+        .map_err(|_| FrameError::BadUtf8)?
+        .to_string();
+    // Struct literal on purpose: decoding must never panic on hostile
+    // geometry the way `SlideSpec::new` would.
+    let spec = SlideSpec {
+        id,
+        seed,
+        tiles_x,
+        tiles_y,
+        levels,
+        tile_px,
+        kind,
+    };
+    let n_tiles = r.count(TILE_BYTES, "chunk.tiles")?;
+    let mut tiles = Vec::with_capacity(n_tiles);
+    for _ in 0..n_tiles {
+        let level = r.u8("tile.level")?;
+        let tx = r.u32("tile.tx")?;
+        let ty = r.u32("tile.ty")?;
+        tiles.push(TileId { level, tx, ty });
+    }
+    let n_excl = r.count(8, "chunk.exclude")?;
+    let mut exclude = Vec::with_capacity(n_excl);
+    for _ in 0..n_excl {
+        exclude.push(r.u64("exclude.worker")? as usize);
+    }
+    Ok(ChunkTask {
+        key,
+        spec,
+        level,
+        tiles,
+        exclude,
+        trace,
+    })
+}
+
+/// Decode a complete v2 body (as produced by [`encode_body`] /
+/// [`FrameBuf::encode_frame`], without the length prefix).
+pub fn decode_body(body: &[u8]) -> Result<Msg, FrameError> {
+    let mut r = Rd { b: body, pos: 0 };
+    let magic = r.u8("magic")?;
+    if magic != MAGIC {
+        return Err(FrameError::BadMagic(magic));
+    }
+    let version = r.u8("version")?;
+    if version != VERSION {
+        return Err(FrameError::BadVersion(version));
+    }
+    let tag = r.u8("tag")?;
+    let msg = match tag {
+        TAG_CHUNK => Msg::Chunk(get_chunk(&mut r)?),
+        TAG_CHUNK_DONE => {
+            let key = r.u64("done.key")?;
+            let worker = r.u64("done.worker")? as usize;
+            let trace = r.u64("done.trace")?;
+            let n = r.count(4, "done.probs")?;
+            let mut probs = Vec::with_capacity(n);
+            for _ in 0..n {
+                let b = r.take(4, "done.prob")?;
+                probs.push(f32::from_le_bytes(b.try_into().unwrap()));
+            }
+            Msg::ChunkDone {
+                key,
+                worker,
+                probs,
+                trace,
+            }
+        }
+        TAG_CHUNK_MOVED => {
+            let key = r.u64("moved.key")?;
+            let worker = r.u64("moved.worker")? as usize;
+            let trace = r.u64("moved.trace")?;
+            Msg::ChunkMoved { key, worker, trace }
+        }
+        TAG_CHUNK_BATCH => {
+            let n = r.count(CHUNK_MIN_BYTES, "batch.chunks")?;
+            let mut chunks = Vec::with_capacity(n);
+            for _ in 0..n {
+                chunks.push(get_chunk(&mut r)?);
+            }
+            Msg::ChunkBatch(chunks)
+        }
+        other => return Err(FrameError::BadTag(other)),
+    };
+    if r.remaining() != 0 {
+        return Err(FrameError::TrailingBytes(r.remaining()));
+    }
+    Ok(msg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chunk(key: u64) -> ChunkTask {
+        ChunkTask {
+            key,
+            spec: SlideSpec::new("fv2", 11, 16, 8, 3, 64, SlideKind::SmallScattered),
+            level: 2,
+            tiles: vec![TileId::new(2, 1, 0), TileId::new(2, 3, 1)],
+            exclude: vec![0, 4],
+            trace: 1234,
+        }
+    }
+
+    fn roundtrip(m: &Msg) -> Msg {
+        let mut buf = Vec::new();
+        assert!(encode_body(m, &mut buf), "expected a hot message");
+        decode_body(&buf).expect("decode")
+    }
+
+    #[test]
+    fn binary_roundtrip_hot_messages() {
+        let msgs = [
+            Msg::Chunk(chunk(7)),
+            Msg::ChunkDone {
+                key: 7,
+                worker: 3,
+                probs: vec![0.25, 0.75, f32::MIN_POSITIVE, 1.0e-30],
+                trace: 99,
+            },
+            Msg::ChunkMoved {
+                key: 9,
+                worker: 2,
+                trace: 17,
+            },
+            Msg::ChunkBatch(vec![chunk(1), chunk(2), chunk(3)]),
+            Msg::ChunkBatch(Vec::new()),
+            Msg::ChunkDone {
+                key: 0,
+                worker: 0,
+                probs: Vec::new(),
+                trace: 0,
+            },
+        ];
+        for m in &msgs {
+            assert_eq!(&roundtrip(m), m);
+        }
+    }
+
+    #[test]
+    fn probs_are_bit_exact_on_the_wire() {
+        // The v1 JSON path happens to round-trip f32 losslessly through
+        // f64 text; v2 must preserve the exact bits by construction,
+        // including NaN payloads and negative zero.
+        let probs = vec![0.1f32, -0.0, f32::NAN, f32::INFINITY, 1.0e-44];
+        let m = Msg::ChunkDone {
+            key: 1,
+            worker: 1,
+            probs: probs.clone(),
+            trace: 0,
+        };
+        match roundtrip(&m) {
+            Msg::ChunkDone { probs: back, .. } => {
+                let a: Vec<u32> = probs.iter().map(|p| p.to_bits()).collect();
+                let b: Vec<u32> = back.iter().map(|p| p.to_bits()).collect();
+                assert_eq!(a, b);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn control_messages_have_no_binary_encoding() {
+        let mut buf = Vec::new();
+        for m in [
+            Msg::Ping,
+            Msg::Shutdown,
+            Msg::Hello {
+                port: 1,
+                wire: super::super::proto::WireVersion::V2Binary,
+            },
+        ] {
+            assert!(!encode_body(&m, &mut buf));
+            assert!(buf.is_empty(), "non-hot encode must leave buf untouched");
+        }
+    }
+
+    #[test]
+    fn frame_buf_reuses_capacity() {
+        let mut fb = FrameBuf::new();
+        let m = Msg::ChunkDone {
+            key: 1,
+            worker: 2,
+            probs: vec![0.5; 256],
+            trace: 3,
+        };
+        let len1 = fb.encode_frame(&m).unwrap().len();
+        let cap = fb.buf.capacity();
+        for _ in 0..100 {
+            assert_eq!(fb.encode_frame(&m).unwrap().len(), len1);
+        }
+        assert_eq!(fb.buf.capacity(), cap, "steady state must not realloc");
+        // Length prefix matches the body.
+        let frame = fb.encode_frame(&m).unwrap();
+        let n = u32::from_le_bytes(frame[..4].try_into().unwrap()) as usize;
+        assert_eq!(n, frame.len() - 4);
+        assert!(fb.encode_frame(&Msg::Ping).is_none());
+    }
+}

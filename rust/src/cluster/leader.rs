@@ -16,7 +16,8 @@ use crate::sim::distribution::Distribution;
 use crate::slide::pyramid::Slide;
 use crate::synth::slide_gen::SlideSpec;
 
-use super::proto::Msg;
+use super::framev2::FrameBuf;
+use super::proto::{Msg, WireVersion};
 use super::worker::{run_worker, WorkerConfig};
 
 /// Cluster run configuration.
@@ -182,13 +183,41 @@ pub(crate) fn send_to(port: u16, msg: &Msg) -> Result<()> {
 /// the chunk can be orphaned for the monitor instead of stalling the
 /// dispatcher until the heartbeat notices.
 pub(crate) fn send_to_deadline(port: u16, msg: &Msg, patience: Duration) -> Result<()> {
+    // A throwaway FrameBuf is free on the v1 path: the JSON fallback
+    // never touches it, so no allocation happens.
+    let mut buf = FrameBuf::new();
+    send_wire_deadline(port, msg, WireVersion::V1Json, patience, &mut buf)
+}
+
+/// [`send_to`] in an explicit wire encoding and with a default 5-second
+/// patience: hot messages go binary on a v2 connection (encoded into the
+/// caller's reused `buf`), everything else JSON.
+pub(crate) fn send_wire(
+    port: u16,
+    msg: &Msg,
+    wire: WireVersion,
+    buf: &mut FrameBuf,
+) -> Result<()> {
+    send_wire_deadline(port, msg, wire, Duration::from_secs(5), buf)
+}
+
+/// [`send_wire`] with an explicit patience bound (see
+/// [`send_to_deadline`] for why the fault-tolerant backend wants a short
+/// one).
+pub(crate) fn send_wire_deadline(
+    port: u16,
+    msg: &Msg,
+    wire: WireVersion,
+    patience: Duration,
+    buf: &mut FrameBuf,
+) -> Result<()> {
     let mut delay = Duration::from_micros(200);
     let deadline = Instant::now() + patience;
     loop {
         match TcpStream::connect(("127.0.0.1", port)) {
             Ok(mut stream) => {
                 stream.set_nodelay(true).ok();
-                return msg.write_to(&mut stream);
+                return msg.write_wire(&mut stream, wire, buf);
             }
             Err(e) => {
                 if Instant::now() > deadline {

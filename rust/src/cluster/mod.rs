@@ -17,9 +17,12 @@
 
 /// Persistent fault-tolerant chunk-execution cluster (§10).
 pub mod backend;
+/// Binary frame format v2 for hot messages (§14).
+pub mod framev2;
 /// One-shot cluster leader: deal, collect subtrees, merge.
 pub mod leader;
-/// Length-prefixed JSON wire protocol shared by both modes.
+/// Length-prefixed wire protocol (JSON v1 + binary v2) shared by both
+/// modes.
 pub mod proto;
 /// One-shot cluster worker: queue, analyze, steal, upload.
 pub mod worker;

@@ -1,8 +1,20 @@
 //! Wire protocol of the decentralized cluster (§5.4).
 //!
-//! Length-prefixed JSON frames over TCP — the role DecentralizePy's
-//! TCP layer plays in the paper. Messages are small (a tile id, a steal
-//! request) except the final subtree upload to node 0.
+//! Length-prefixed frames over TCP — the role DecentralizePy's TCP layer
+//! plays in the paper. Two body encodings coexist (DESIGN.md §14):
+//!
+//! * **v1 JSON** — every message; the compatibility baseline. A JSON body
+//!   always starts with `{`.
+//! * **v2 binary** ([`super::framev2`]) — the hot messages only
+//!   ([`Msg::Chunk`], [`Msg::ChunkBatch`], [`Msg::ChunkDone`],
+//!   [`Msg::ChunkMoved`]), flat little-endian layouts starting with the
+//!   magic byte `0xB5`.
+//!
+//! Frames are *self-describing* (readers dispatch on the first body
+//! byte), so any peer can always receive both encodings; the
+//! [`Hello`](Msg::Hello)/[`Welcome`](Msg::Welcome) handshake only
+//! negotiates what a peer may **send** ([`WireVersion`]), which keeps
+//! mixed v1/v2 clusters interoperable.
 
 use std::io::{Read, Write};
 use std::net::TcpStream;
@@ -13,6 +25,40 @@ use crate::pyramid::tree::ExecTree;
 use crate::slide::tile::TileId;
 use crate::synth::slide_gen::SlideSpec;
 use crate::util::json::Json;
+
+use super::framev2::{self, FrameBuf};
+
+/// The highest frame encoding a peer is willing to *send* hot messages
+/// in, negotiated at [`Msg::Hello`]/[`Msg::Welcome`]. Peers that omit the
+/// field (pre-v2 builds) are v1.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum WireVersion {
+    /// Length-prefixed JSON bodies for every message.
+    V1Json,
+    /// Binary bodies (`framev2`) for hot messages, JSON for the rest.
+    V2Binary,
+}
+
+impl WireVersion {
+    /// Numeric form carried in the handshake JSON.
+    pub fn as_u64(self) -> u64 {
+        match self {
+            WireVersion::V1Json => 1,
+            WireVersion::V2Binary => 2,
+        }
+    }
+
+    /// Parse a peer-advertised version. Unknown *higher* versions clamp
+    /// to the newest we speak (the peer also speaks ours); `0`/absent
+    /// means the pre-negotiation JSON wire.
+    pub fn from_u64(v: u64) -> WireVersion {
+        if v >= 2 {
+            WireVersion::V2Binary
+        } else {
+            WireVersion::V1Json
+        }
+    }
+}
 
 /// One steal-able unit of frontier work in the persistent execution
 /// cluster (`cluster::backend`): a same-level chunk of one slide's
@@ -66,6 +112,12 @@ pub enum Msg {
     Shutdown,
     /// Backend leader → worker: one frontier chunk for your queue.
     Chunk(ChunkTask),
+    /// Backend leader → worker: several chunks in one frame — one write
+    /// and one connection for a whole dispatch wave, amortizing syscalls.
+    /// Only sent to peers that negotiated [`WireVersion::V2Binary`];
+    /// semantically identical to that many [`Msg::Chunk`] frames in
+    /// order.
+    ChunkBatch(Vec<ChunkTask>),
     /// Worker → backend leader: a chunk's probabilities (tile order).
     ChunkDone {
         key: u64,
@@ -101,11 +153,17 @@ pub enum Msg {
     Hello {
         /// The joining worker's chunk/steal listener port.
         port: u16,
+        /// Highest wire version the worker can speak. Pre-v2 peers omit
+        /// the field and parse as [`WireVersion::V1Json`].
+        wire: WireVersion,
     },
     /// Reply to [`Msg::Hello`]: the id the leader assigned.
     Welcome {
         /// Assigned worker id (never reused, even after a loss).
         id: usize,
+        /// The negotiated wire version: `min(worker offer, leader max)`.
+        /// Both sides send hot messages in this encoding from here on.
+        wire: WireVersion,
     },
     /// Thief → leader: chunk `key` now lives on worker `worker`. Keeps
     /// the leader's pending-chunk assignment map accurate under work
@@ -214,6 +272,10 @@ impl Msg {
                 .set("tree", tree.to_json()),
             Msg::Shutdown => Json::obj().set("t", "shutdown"),
             Msg::Chunk(c) => Json::obj().set("t", "chunk").set("chunk", chunk_json(c)),
+            Msg::ChunkBatch(chunks) => Json::obj().set("t", "chunk_batch").set(
+                "chunks",
+                Json::Arr(chunks.iter().map(chunk_json).collect()),
+            ),
             Msg::ChunkDone {
                 key,
                 worker,
@@ -244,8 +306,14 @@ impl Msg {
             Msg::Ping => Json::obj().set("t", "ping"),
             Msg::Pong => Json::obj().set("t", "pong"),
             Msg::Kill => Json::obj().set("t", "kill"),
-            Msg::Hello { port } => Json::obj().set("t", "hello").set("port", *port as u64),
-            Msg::Welcome { id } => Json::obj().set("t", "welcome").set("id", *id),
+            Msg::Hello { port, wire } => Json::obj()
+                .set("t", "hello")
+                .set("port", *port as u64)
+                .set("wire", wire.as_u64()),
+            Msg::Welcome { id, wire } => Json::obj()
+                .set("t", "welcome")
+                .set("id", *id)
+                .set("wire", wire.as_u64()),
             Msg::ChunkMoved { key, worker, trace } => Json::obj()
                 .set("t", "chunk_moved")
                 .set("key", *key)
@@ -281,6 +349,13 @@ impl Msg {
             },
             "shutdown" => Msg::Shutdown,
             "chunk" => Msg::Chunk(chunk_from(v.get("chunk")?)?),
+            "chunk_batch" => Msg::ChunkBatch(
+                v.get("chunks")?
+                    .as_arr()?
+                    .iter()
+                    .map(chunk_from)
+                    .collect::<Result<Vec<_>>>()?,
+            ),
             "chunk_done" => Msg::ChunkDone {
                 key: v.get("key")?.as_u64()?,
                 worker: v.get("worker")?.as_usize()?,
@@ -310,9 +385,18 @@ impl Msg {
             "kill" => Msg::Kill,
             "hello" => Msg::Hello {
                 port: v.get("port")?.as_u64()? as u16,
+                // Absent in pre-v2 frames: the peer only speaks JSON.
+                wire: WireVersion::from_u64(match v.opt("wire") {
+                    Some(w) => w.as_u64()?,
+                    None => 1,
+                }),
             },
             "welcome" => Msg::Welcome {
                 id: v.get("id")?.as_usize()?,
+                wire: WireVersion::from_u64(match v.opt("wire") {
+                    Some(w) => w.as_u64()?,
+                    None => 1,
+                }),
             },
             "chunk_moved" => Msg::ChunkMoved {
                 key: v.get("key")?.as_u64()?,
@@ -326,7 +410,8 @@ impl Msg {
         })
     }
 
-    /// Write one length-prefixed frame.
+    /// Write one length-prefixed frame as v1 JSON (always valid: every
+    /// message has a JSON encoding and every reader accepts it).
     pub fn write_to(&self, stream: &mut TcpStream) -> Result<()> {
         let body = self.to_json().to_string();
         let len = (body.len() as u32).to_le_bytes();
@@ -336,7 +421,31 @@ impl Msg {
         Ok(())
     }
 
-    /// Read one length-prefixed frame.
+    /// Write one frame in the negotiated encoding. On a
+    /// [`WireVersion::V2Binary`] wire, hot messages are encoded into the
+    /// caller's reused [`FrameBuf`] (zero per-message allocation) and
+    /// written in one call; everything else — and everything on a v1
+    /// wire — falls back to [`Msg::write_to`]'s JSON.
+    pub fn write_wire(
+        &self,
+        stream: &mut TcpStream,
+        wire: WireVersion,
+        buf: &mut FrameBuf,
+    ) -> Result<()> {
+        if wire == WireVersion::V2Binary {
+            if let Some(frame) = buf.encode_frame(self) {
+                stream.write_all(frame)?;
+                stream.flush()?;
+                return Ok(());
+            }
+        }
+        self.write_to(stream)
+    }
+
+    /// Read one length-prefixed frame, auto-detecting the body encoding:
+    /// bodies opening with `framev2::MAGIC` decode as binary v2, anything
+    /// else parses as v1 JSON. This makes every reader bilingual
+    /// regardless of what was negotiated.
     pub fn read_from(stream: &mut TcpStream) -> Result<Msg> {
         let mut len = [0u8; 4];
         stream.read_exact(&mut len)?;
@@ -346,6 +455,9 @@ impl Msg {
         }
         let mut body = vec![0u8; n];
         stream.read_exact(&mut body)?;
+        if body.first() == Some(&framev2::MAGIC) {
+            return framev2::decode_body(&body).map_err(|e| anyhow!("bad v2 frame: {e}"));
+        }
         let text = String::from_utf8(body)?;
         Msg::from_json(&Json::parse(&text)?)
     }
@@ -438,8 +550,18 @@ mod tests {
             Msg::Ping,
             Msg::Pong,
             Msg::Kill,
-            Msg::Hello { port: 61234 },
-            Msg::Welcome { id: 7 },
+            Msg::Hello {
+                port: 61234,
+                wire: WireVersion::V2Binary,
+            },
+            Msg::Hello {
+                port: 61234,
+                wire: WireVersion::V1Json,
+            },
+            Msg::Welcome {
+                id: 7,
+                wire: WireVersion::V2Binary,
+            },
             Msg::ChunkMoved {
                 key: (3u64 << 21) | 9,
                 worker: 2,
@@ -517,5 +639,78 @@ mod tests {
     fn rejects_unknown_type() {
         let v = Json::parse(r#"{"t": "bogus"}"#).unwrap();
         assert!(Msg::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn hello_welcome_without_wire_field_parse_as_v1() {
+        // Pre-v2 peers advertise nothing; they must be treated as JSON-only.
+        let hello = Json::parse(r#"{"t":"hello","port":4000}"#).unwrap();
+        match Msg::from_json(&hello).unwrap() {
+            Msg::Hello { port, wire } => {
+                assert_eq!((port, wire), (4000, WireVersion::V1Json));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        let welcome = Json::parse(r#"{"t":"welcome","id":3}"#).unwrap();
+        match Msg::from_json(&welcome).unwrap() {
+            Msg::Welcome { id, wire } => {
+                assert_eq!((id, wire), (3, WireVersion::V1Json));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // A peer from the future clamps down to what we speak.
+        assert_eq!(WireVersion::from_u64(7), WireVersion::V2Binary);
+    }
+
+    #[test]
+    fn chunk_batch_roundtrips_in_both_encodings() {
+        use crate::synth::slide_gen::{SlideKind, SlideSpec};
+        let task = ChunkTask {
+            key: 42,
+            spec: SlideSpec::new("cb", 5, 16, 8, 3, 64, SlideKind::Negative),
+            level: 1,
+            tiles: vec![TileId::new(1, 0, 0), TileId::new(1, 1, 0)],
+            exclude: vec![2],
+            trace: 8,
+        };
+        let m = Msg::ChunkBatch(vec![task.clone(), task]);
+        // JSON v1
+        let j = m.to_json().to_string();
+        assert_eq!(Msg::from_json(&Json::parse(&j).unwrap()).unwrap(), m);
+        // Binary v2
+        let mut buf = Vec::new();
+        assert!(framev2::encode_body(&m, &mut buf));
+        assert_eq!(framev2::decode_body(&buf).unwrap(), m);
+    }
+
+    #[test]
+    fn tcp_reader_autodetects_v1_and_v2_bodies() {
+        use std::net::TcpListener;
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let moved = Msg::ChunkMoved {
+            key: 11,
+            worker: 4,
+            trace: 2,
+        };
+        let expect = moved.clone();
+        let handle = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            // First frame arrives as binary, second as JSON — one reader
+            // handles both without being told.
+            let a = Msg::read_from(&mut s).unwrap();
+            let b = Msg::read_from(&mut s).unwrap();
+            assert_eq!(a, expect);
+            assert_eq!(b, expect);
+        });
+        let mut stream = TcpStream::connect(addr).unwrap();
+        let mut fb = FrameBuf::new();
+        moved
+            .write_wire(&mut stream, WireVersion::V2Binary, &mut fb)
+            .unwrap();
+        moved
+            .write_wire(&mut stream, WireVersion::V1Json, &mut fb)
+            .unwrap();
+        handle.join().unwrap();
     }
 }

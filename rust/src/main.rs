@@ -122,7 +122,10 @@ subcommands:
                                                    --compare-service=true for the Fig-7b
                                                    service-vs-one-shot sweep)
   worker    standalone cluster worker process     (--connect host:port --model
-                                                   --analyzer-seed; joins a serve
+                                                   --analyzer-seed
+                                                   --wire v1|v2 (default v2; v1
+                                                   forces JSON frames for
+                                                   pre-v2 leaders); joins a serve
                                                    --backend cluster leader and serves
                                                    chunks until shutdown)
   serve     multi-slide analysis service          (--jobs --workers --backend pool|cluster|replay
@@ -148,8 +151,10 @@ subcommands:
                                                    timelines)
   bench     measured perf record                  (--smoke --out FILE --label N;
                                                    writes BENCH_<n>.json with
-                                                   service + predcache throughput
-                                                   and the metrics snapshot)
+                                                   service + predcache throughput,
+                                                   tile-synthesis and wire-framing
+                                                   hot-path numbers, and the
+                                                   metrics snapshot)
   report    regenerate every paper table/figure   (--model --fast)
 
 global flags: --log-level error|warn|info|debug|trace   (default info, or
@@ -386,20 +391,30 @@ fn cmd_cluster(args: &Args) -> Result<()> {
 }
 
 fn cmd_worker(args: &Args) -> Result<()> {
+    use pyramidai::cluster::proto::WireVersion;
     let connect = args.require("connect")?;
     let model = model_kind(args)?;
     // Must match the leader's analyzer for byte-identical trees — the
     // default mirrors `make_analyzer`'s everywhere else.
     let analyzer_seed = args.u64_or("analyzer-seed", 7)?;
+    let wire = match args.str_or("wire", "v2").as_str() {
+        "v1" | "1" | "json" => WireVersion::V1Json,
+        "v2" | "2" | "binary" => WireVersion::V2Binary,
+        other => anyhow::bail!("unknown --wire {other:?} (expected v1 or v2)"),
+    };
     args.finish()?;
     let (analyzer, name) = experiments::ctx::make_analyzer(model, analyzer_seed)?;
     obs::event(
         obs::Level::Info,
         "cli",
         "worker_connecting",
-        &[("model", name.into()), ("leader", connect.as_str().into())],
+        &[
+            ("model", name.into()),
+            ("leader", connect.as_str().into()),
+            ("wire", wire.as_u64().into()),
+        ],
     );
-    let id = pyramidai::cluster::run_standalone_worker(&connect, analyzer, analyzer_seed)?;
+    let id = pyramidai::cluster::run_standalone_worker(&connect, analyzer, analyzer_seed, wire)?;
     obs::event(
         obs::Level::Info,
         "cli",
@@ -793,7 +808,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
     };
     args.finish()?;
     println!(
-        "running {} benches (service_e2e + predcache_io)…",
+        "running {} benches (service_e2e + predcache_io + http_ingest + synth_tile + proto_framing)…",
         if smoke { "smoke" } else { "full" }
     );
     let doc = run_benches(BenchConfig { smoke }, label)?;
@@ -810,6 +825,20 @@ fn cmd_bench(args: &Args) -> Result<()> {
         "predcache_io: save {:.1} MB/s, load {:.1} MB/s",
         pc.get("save_mb_per_s")?.as_f64()?,
         pc.get("load_mb_per_s")?.as_f64()?,
+    );
+    let st = doc.get("benches")?.get("synth_tile")?;
+    println!(
+        "synth_tile: scalar {:.1} ns/px, renderer {:.1} ns/px ({:.2}x)",
+        st.get("scalar_ns_per_px")?.as_f64()?,
+        st.get("fast_ns_per_px")?.as_f64()?,
+        st.get("speedup")?.as_f64()?,
+    );
+    let pf = doc.get("benches")?.get("proto_framing")?;
+    println!(
+        "proto_framing: json {:.0} ns/msg, binary {:.0} ns/msg ({:.2}x)",
+        pf.get("json_ns_per_msg")?.as_f64()?,
+        pf.get("binary_ns_per_msg")?.as_f64()?,
+        pf.get("speedup")?.as_f64()?,
     );
     let path = out.unwrap_or_else(|| format!("BENCH_{label}.json"));
     std::fs::write(&path, doc.to_pretty())?;

@@ -297,12 +297,162 @@ pub fn bench_http_ingest(cfg: BenchConfig) -> Result<Json> {
         ))
 }
 
+/// Tile-synthesis hot path: render the same level-0 tiles once through
+/// the scalar per-pixel `Texture::pixel` reference and once through the
+/// flat-array [`TileRenderer`](crate::synth::render::TileRenderer), and
+/// report ns/pixel for both plus the speedup. The two outputs are
+/// asserted bit-identical first, so the numbers always compare the same
+/// work (the golden tests in `synth/render.rs` are the real gate; this
+/// is a belt on top of suspenders).
+pub fn bench_synth_tile(cfg: BenchConfig) -> Json {
+    use crate::synth::render::TileRenderer;
+    use crate::synth::slide_gen::{SlideKind, SlideSpec};
+    use crate::synth::texture::{Texture, TextureParams};
+
+    let d = dataset(cfg.smoke);
+    let reps = if cfg.smoke { 1usize } else { 4 };
+    // SmallScattered is the renderer's hardest case: the most blobs and
+    // the most nuclei lattice work per pixel.
+    let spec = SlideSpec::new(
+        "benchsynth",
+        4321,
+        d.tiles_x,
+        d.tiles_y,
+        d.levels,
+        d.tile_px,
+        SlideKind::SmallScattered,
+    );
+    let (tissue, tumor, distractor) = spec.fields();
+    let params = TextureParams::default();
+    let tex = Texture {
+        seed: spec.seed,
+        tissue: &tissue,
+        tumor: &tumor,
+        distractor: &distractor,
+        params: &params,
+    };
+    let tp = spec.tile_px;
+    let (w_px, h_px) = (spec.tiles_x * tp, spec.tiles_y * tp);
+    // A diagonal band of level-0 tiles: tissue, tumor and background mix.
+    let tiles: Vec<(usize, usize)> = (0..if cfg.smoke { 4usize } else { 8 })
+        .map(|i| (i * 2 % spec.tiles_x, i % spec.tiles_y))
+        .collect();
+    let px_total = (tiles.len() * tp * tp * reps) as f64;
+
+    // Scalar reference: one full `Texture::pixel` call tree per pixel.
+    let mut scalar_out: Vec<f32> = Vec::with_capacity(tp * tp * 3);
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        for &(tx, ty) in &tiles {
+            scalar_out.clear();
+            for py in ty * tp..(ty + 1) * tp {
+                for px in tx * tp..(tx + 1) * tp {
+                    scalar_out.extend_from_slice(&tex.pixel(0, px, py, w_px, h_px));
+                }
+            }
+        }
+    }
+    let scalar_ns = t0.elapsed().as_nanos() as f64 / px_total;
+
+    // Hot path: the flat-array renderer `Slide::tile_pixels` actually
+    // runs, one renderer reused across all tiles (the level-sweep shape).
+    let mut r = TileRenderer::new(&tex, 0, w_px, h_px);
+    let mut fast_out = Vec::new();
+    let t1 = Instant::now();
+    for _ in 0..reps {
+        for &(tx, ty) in &tiles {
+            fast_out = r.render_rect(tx * tp, ty * tp, tp, tp);
+        }
+    }
+    let fast_ns = t1.elapsed().as_nanos() as f64 / px_total;
+
+    // Bit-identity on the last tile rendered by both loops.
+    let (tx, ty) = *tiles.last().expect("bench tile set is never empty");
+    scalar_out.clear();
+    for py in ty * tp..(ty + 1) * tp {
+        for px in tx * tp..(tx + 1) * tp {
+            scalar_out.extend_from_slice(&tex.pixel(0, px, py, w_px, h_px));
+        }
+    }
+    assert_eq!(scalar_out, fast_out, "bench paths diverged — numbers are void");
+
+    Json::obj()
+        .set("tiles", tiles.len() as f64)
+        .set("reps", reps as f64)
+        .set("tile_px", tp as f64)
+        .set("scalar_ns_per_px", scalar_ns)
+        .set("fast_ns_per_px", fast_ns)
+        .set("speedup", scalar_ns / fast_ns.max(1e-9))
+}
+
+/// Protocol framing hot path: round-trip a representative `ChunkDone`
+/// (the highest-volume cluster message — one per chunk, carrying the
+/// probability slice) through the JSON v1 encoding and through the
+/// binary frame v2 encoding, reporting ns/message for both. The binary
+/// path reuses one [`FrameBuf`](crate::cluster::framev2::FrameBuf)
+/// exactly as a worker's upload loop does.
+pub fn bench_proto_framing(cfg: BenchConfig) -> Json {
+    use crate::cluster::framev2::{decode_body, FrameBuf};
+    use crate::cluster::proto::Msg;
+
+    let msgs = if cfg.smoke { 200usize } else { 5000 };
+    // 128 probabilities ≈ a whole level-1 frontier chunk of the full-size
+    // bench slide; realistic, not flattering (bigger slices favor v2).
+    let probs_len = 128usize;
+    let probs: Vec<f32> = (0..probs_len).map(|i| (i % 97) as f32 / 96.0).collect();
+    let msg = Msg::ChunkDone {
+        key: 0x0123_4567_89AB_CDEF,
+        worker: 3,
+        probs,
+        trace: 42,
+    };
+
+    // v1: length-prefixed JSON — serialize to text, parse, rebuild.
+    let mut sink = 0usize;
+    let json_bytes = msg.to_json().to_string().len();
+    let t0 = Instant::now();
+    for _ in 0..msgs {
+        let text = msg.to_json().to_string();
+        let back = Msg::from_json(&Json::parse(&text).expect("own JSON parses"))
+            .expect("own JSON decodes");
+        if let Msg::ChunkDone { probs, .. } = back {
+            sink += probs.len();
+        }
+    }
+    let json_ns = t0.elapsed().as_nanos() as f64 / msgs as f64;
+
+    // v2: binary frame into a reused buffer, then decode the body.
+    let mut fb = FrameBuf::new();
+    let binary_bytes = fb.encode_frame(&msg).expect("hot message encodes").len();
+    let t1 = Instant::now();
+    for _ in 0..msgs {
+        let frame = fb.encode_frame(&msg).expect("hot message encodes");
+        let back = decode_body(&frame[4..]).expect("own frame decodes");
+        if let Msg::ChunkDone { probs, .. } = back {
+            sink += probs.len();
+        }
+    }
+    let binary_ns = t1.elapsed().as_nanos() as f64 / msgs as f64;
+    assert_eq!(sink, 2 * msgs * probs_len, "round trips must preserve the slice");
+
+    Json::obj()
+        .set("msgs", msgs as f64)
+        .set("probs_per_msg", probs_len as f64)
+        .set("json_bytes_per_msg", json_bytes as f64)
+        .set("binary_bytes_per_msg", binary_bytes as f64)
+        .set("json_ns_per_msg", json_ns)
+        .set("binary_ns_per_msg", binary_ns)
+        .set("speedup", json_ns / binary_ns.max(1e-9))
+}
+
 /// Run every bench and assemble the `BENCH_<n>.json` document, embedding
 /// the end-of-run global metrics snapshot.
 pub fn run_benches(cfg: BenchConfig, label: u64) -> Result<Json> {
     let service = bench_service_e2e(cfg);
     let predcache = bench_predcache_io(cfg)?;
     let http = bench_http_ingest(cfg)?;
+    let synth = bench_synth_tile(cfg);
+    let framing = bench_proto_framing(cfg);
     Ok(Json::obj()
         .set("schema", "pyramidai-bench-v1")
         .set("label", label as f64)
@@ -312,7 +462,9 @@ pub fn run_benches(cfg: BenchConfig, label: u64) -> Result<Json> {
             Json::obj()
                 .set("service_e2e", service)
                 .set("predcache_io", predcache)
-                .set("http_ingest", http),
+                .set("http_ingest", http)
+                .set("synth_tile", synth)
+                .set("proto_framing", framing),
         )
         .set("metrics", metrics::global().snapshot().to_json()))
 }
@@ -348,6 +500,22 @@ pub fn validate_bench_json(doc: &Json) -> std::result::Result<(), String> {
         for k in ["jobs_per_sec", "req_ms_p50", "req_ms_p95", "wall_s"] {
             if http.opt(k).and_then(|v| v.as_f64().ok()).is_none() {
                 return Err(format!("http_ingest missing {k}"));
+            }
+        }
+    }
+    // Same deal for the hot-path sections (synth_tile / proto_framing):
+    // optional for pre-existing docs, keys mandatory once present.
+    if let Some(st) = benches.opt("synth_tile") {
+        for k in ["scalar_ns_per_px", "fast_ns_per_px", "speedup"] {
+            if st.opt(k).and_then(|v| v.as_f64().ok()).is_none() {
+                return Err(format!("synth_tile missing {k}"));
+            }
+        }
+    }
+    if let Some(pf) = benches.opt("proto_framing") {
+        for k in ["json_ns_per_msg", "binary_ns_per_msg", "speedup"] {
+            if pf.opt(k).and_then(|v| v.as_f64().ok()).is_none() {
+                return Err(format!("proto_framing missing {k}"));
             }
         }
     }
@@ -403,9 +571,57 @@ mod tests {
             .as_f64()
             .unwrap();
         assert!(jps > 0.0, "http ingest bench must push jobs through");
+        for (section, key) in [
+            ("synth_tile", "fast_ns_per_px"),
+            ("proto_framing", "binary_ns_per_msg"),
+        ] {
+            let v = doc
+                .get("benches")
+                .unwrap()
+                .get(section)
+                .unwrap()
+                .get(key)
+                .unwrap()
+                .as_f64()
+                .unwrap();
+            assert!(v > 0.0, "{section}.{key} must be a real measurement");
+        }
         // Round-trip through text like the checked-in file will.
         let reparsed = Json::parse(&doc.to_pretty()).unwrap();
         validate_bench_json(&reparsed).unwrap();
+    }
+
+    #[test]
+    fn validator_gates_hot_path_sections_when_present() {
+        let svc = Json::obj()
+            .set("tiles_per_sec", 1.0)
+            .set("wall_s", 1.0)
+            .set("job_ms_p50", 1.0)
+            .set("job_ms_p95", 1.0);
+        let pc = Json::obj()
+            .set("load_mb_per_s", 1.0)
+            .set("save_s", 1.0)
+            .set("decode_us_p50", 1.0)
+            .set("decode_us_p95", 1.0);
+        let doc = |benches: Json| {
+            Json::obj()
+                .set("schema", "pyramidai-bench-v1")
+                .set("label", 1.0)
+                .set("benches", benches)
+        };
+        let base = Json::obj()
+            .set("service_e2e", svc)
+            .set("predcache_io", pc);
+        // Docs from before the hot-path sections stay valid v1.
+        validate_bench_json(&doc(base.clone())).unwrap();
+        // But a present section with a missing key is rejected.
+        let bad = doc(base.clone().set(
+            "synth_tile",
+            Json::obj().set("scalar_ns_per_px", 1.0).set("fast_ns_per_px", 1.0),
+        ));
+        assert!(validate_bench_json(&bad).unwrap_err().contains("synth_tile"));
+        let bad = doc(base.set("proto_framing", Json::obj().set("speedup", 2.0)));
+        assert!(validate_bench_json(&bad).unwrap_err().contains("proto_framing"));
     }
 
     #[test]

@@ -93,10 +93,9 @@ pub const LUMA_STRIDE: usize = 4;
 pub fn background_removal(slide: &Slide, margin: f64) -> BackgroundMask {
     let level = slide.lowest_level();
     let ids = slide.level_tile_ids(level);
-    let lumas: Vec<f64> = ids
-        .iter()
-        .map(|&t| slide.tile_mean_luma(t, LUMA_STRIDE))
-        .collect();
+    // One level-wide renderer sweep (row-major, same order as `ids`)
+    // instead of a fresh per-tile pixel resampling pass.
+    let lumas = slide.level_tile_lumas(level, LUMA_STRIDE);
     let threshold = otsu_threshold(&lumas);
     let tissue_tiles = ids
         .iter()

@@ -2,6 +2,7 @@
 //! pyramid geometry, tile pixel extraction and per-tile ground truth.
 
 use crate::synth::field::Field;
+use crate::synth::render::TileRenderer;
 use crate::synth::slide_gen::SlideSpec;
 use crate::synth::texture::{Texture, TextureParams};
 
@@ -97,21 +98,17 @@ impl Slide {
 
     /// Extract a tile as HWC f32 RGB (len = tile_px² · 3), channels in
     /// [0,1]. This is the L2 model's expected input layout.
+    ///
+    /// Rendered by the flat-array [`TileRenderer`] hot path, which is
+    /// bit-identical to evaluating `Texture::pixel` per pixel (golden
+    /// tests in `synth/render.rs`).
     pub fn tile_pixels(&self, t: TileId) -> Vec<f32> {
         let level = t.level as usize;
         let (w_px, h_px) = self.level_px(level);
         let tp = self.spec.tile_px;
         let tex = self.texture();
-        let mut out = Vec::with_capacity(tp * tp * 3);
-        let x0 = t.tx as usize * tp;
-        let y0 = t.ty as usize * tp;
-        for py in 0..tp {
-            for px in 0..tp {
-                let rgb = tex.pixel(level, x0 + px, y0 + py, w_px, h_px);
-                out.extend_from_slice(&rgb);
-            }
-        }
-        out
+        let mut r = TileRenderer::new(&tex, level, w_px, h_px);
+        r.render_rect(t.tx as usize * tp, t.ty as usize * tp, tp, tp)
     }
 
     /// Normalized-coordinate bounds of a tile.
@@ -151,18 +148,34 @@ impl Slide {
     }
 
     /// Mean luma of a tile sampled with `stride` (Otsu histogram input).
+    /// Bit-identical to the scalar `Texture::tile_mean_luma` reference.
     pub fn tile_mean_luma(&self, t: TileId, stride: usize) -> f64 {
         let level = t.level as usize;
         let (w_px, h_px) = self.level_px(level);
-        self.texture().tile_mean_luma(
-            level,
-            t.tx as usize,
-            t.ty as usize,
-            self.spec.tile_px,
-            w_px,
-            h_px,
-            stride,
-        )
+        let tex = self.texture();
+        let mut r = TileRenderer::new(&tex, level, w_px, h_px);
+        r.tile_mean_luma(t.tx as usize, t.ty as usize, self.spec.tile_px, stride)
+    }
+
+    /// Mean lumas of *every* tile at `level`, row-major (the order of
+    /// [`level_tile_ids`](Self::level_tile_ids)). One [`TileRenderer`] is
+    /// reused across the whole sweep, so the per-slide field/nuclei setup
+    /// and the span scratch buffers are paid once per level instead of
+    /// once per tile — this is the Otsu histogram builder's input path.
+    /// Each element is bit-identical to `tile_mean_luma` on that tile.
+    pub fn level_tile_lumas(&self, level: usize, stride: usize) -> Vec<f64> {
+        let (ntx, nty) = self.level_tiles(level);
+        let (w_px, h_px) = self.level_px(level);
+        let tp = self.spec.tile_px;
+        let tex = self.texture();
+        let mut r = TileRenderer::new(&tex, level, w_px, h_px);
+        let mut out = Vec::with_capacity(ntx * nty);
+        for ty in 0..nty {
+            for tx in 0..ntx {
+                out.push(r.tile_mean_luma(tx, ty, tp, stride));
+            }
+        }
+        out
     }
 }
 

@@ -4,11 +4,14 @@
 
 /// Gaussian-blob density fields (tumor/distractor layouts).
 pub mod field;
+/// Flat-array hot-path tile renderer (bit-identical to `Texture::pixel`).
+pub mod render;
 /// Slide recipes ([`slide_gen::SlideSpec`]) and set generation.
 pub mod slide_gen;
 /// Deterministic per-tile texture statistics and hashing.
 pub mod texture;
 
 pub use field::Field;
+pub use render::TileRenderer;
 pub use slide_gen::{gen_slide_set, DatasetParams, SlideKind, SlideSpec};
 pub use texture::{Texture, TextureParams};

@@ -1,0 +1,673 @@
+//! Flat-array tile renderer: the hot-path replacement for per-pixel
+//! [`Texture::pixel`] calls, **bit-identical by construction**.
+//!
+//! `Texture::pixel` is beautiful and slow: every pixel re-walks every
+//! metaball blob of three fields (recomputing `2r²` denominators and the
+//! row-constant `dv²` terms), re-hashes the 3×3 nuclei neighborhood, and
+//! re-derives per-column quantities like `u = (px+0.5)/w` from scratch.
+//! [`TileRenderer`] renders a whole span of columns row by row and hoists
+//! everything that is constant along one of the two axes:
+//!
+//! * **Per span (column axis)** — `u`, `x0 = (px+0.5)·scale`, the nuclei
+//!   cell index `⌊x0/cell⌋`, and the per-blob `du²` table, laid out
+//!   per-pixel-contiguous (`du2[col·n + i]`) so the inner blob loop walks
+//!   one cache line instead of striding across the span.
+//! * **Per row (row axis)** — `v`, `y0`, each field's `dv²` terms, and an
+//!   *active-blob compaction*: blobs whose row distance alone already puts
+//!   them past the far cutoff are dropped from the row's working set, so
+//!   the inner loop does literally zero work for them.
+//! * **Per cell row** — when columns advance by less than one nuclei cell
+//!   (contiguous rendering at fine levels) the 3 lattice rows covering the
+//!   span are cached; the cheap presence hash is taken eagerly, the jitter
+//!   and radius hashes lazily on first contribution. When the sampling
+//!   stride jumps whole cells (the strided Otsu luma pass at coarse
+//!   levels) the cache would be built and thrown away, so the renderer
+//!   falls back to the scalar 3×3 scan there.
+//!
+//! # Bit-identity
+//!
+//! The scalar path stays in `texture.rs` as the reference implementation,
+//! and `golden_*` tests below assert bit-identical `f32` output across
+//! levels, tile sizes, strides and boundary tiles. Identity holds because
+//! every floating-point operation that *feeds a result* is performed in
+//! the same order on the same values as the scalar code; hoisting only
+//! changes *when* a value is computed, never *how*. Two transformations
+//! need an argument beyond reordering:
+//!
+//! * **Far-blob skip.** A blob is skipped when `d² ≥ 77·(2r²)`, i.e. its
+//!   term `w·exp(-d²/2r²) < w·e⁻⁷⁷ ≈ w·3.6e-34 < 2⁻¹⁰⁸` for any sane
+//!   weight (|w| ≤ 10⁴; generated weights are ≤ 4). Field sums feed
+//!   `sigmoid((s-1)·8)` with s otherwise ≥ 0 terms; a perturbation below
+//!   2⁻¹⁰⁸ is smaller than half an ulp of every downstream double, so the
+//!   rounded result cannot change. Validated exhaustively against the
+//!   scalar path in tests.
+//! * **Empty-sum shortcut.** If no blob contributes (compacted set empty,
+//!   or every candidate skipped, so `s == 0.0` exactly) the scalar path
+//!   computes `sigmoid((0.0-1.0)·8.0)`; the renderer returns that exact
+//!   cached constant.
+//!
+//! The C/Python prototypes of this scheme (see EXPERIMENTS.md, "Hot-path
+//! overhaul") measured 1.6x on small-scattered slides (the paper's hard
+//! case, many small blobs → heavy compaction wins) and 1.2–1.3x on the
+//! other kinds at level 0, with zero mismatching pixels.
+
+use super::field::{sigmoid, Field};
+use super::texture::{hash2, unit, Texture, TextureParams, NUCLEI_CELL_L0};
+
+/// Skip a blob when `d² ≥ FAR_CUT · 2r²`: its term is below `e⁻⁷⁷` of its
+/// weight, far under half an ulp of anything the sum feeds (see module
+/// docs).
+const FAR_CUT: f64 = 77.0;
+
+/// One metaball field, preprocessed for row-major span rendering.
+struct FieldRows {
+    n: usize,
+    cx: Vec<f64>,
+    cy: Vec<f64>,
+    w: Vec<f64>,
+    /// `2r²` per blob — the Gaussian denominator the scalar path
+    /// recomputes per pixel.
+    denom: Vec<f64>,
+    /// `FAR_CUT · denom` per blob.
+    cut: Vec<f64>,
+    /// Per-span `du²` table, per-pixel-contiguous: `du2[col·n + i]`.
+    du2: Vec<f64>,
+    /// Indices of blobs not already past the cutoff on the current row.
+    act: Vec<u32>,
+    /// `dv²` of each active blob (parallel to `act`).
+    adv2: Vec<f64>,
+    /// `sigmoid((0.0-1.0)·8.0)` — the scalar result when the sum is 0.
+    sig_empty: f64,
+}
+
+impl FieldRows {
+    fn new(f: &Field) -> FieldRows {
+        let n = f.blobs.len();
+        let mut r = FieldRows {
+            n,
+            cx: Vec::with_capacity(n),
+            cy: Vec::with_capacity(n),
+            w: Vec::with_capacity(n),
+            denom: Vec::with_capacity(n),
+            cut: Vec::with_capacity(n),
+            du2: Vec::new(),
+            act: Vec::with_capacity(n),
+            adv2: Vec::with_capacity(n),
+            sig_empty: sigmoid((0.0 - 1.0) * 8.0),
+        };
+        for b in &f.blobs {
+            r.cx.push(b.cx);
+            r.cy.push(b.cy);
+            r.w.push(b.w);
+            // Same association as the scalar `2.0 * b.r * b.r`.
+            let denom = 2.0 * b.r * b.r;
+            r.denom.push(denom);
+            r.cut.push(FAR_CUT * denom);
+        }
+        r
+    }
+
+    /// Precompute `du²` for every (column, blob) pair of the span.
+    fn set_cols(&mut self, us: &[f64]) {
+        self.du2.clear();
+        self.du2.reserve(us.len() * self.n);
+        for &u in us {
+            for &cx in &self.cx {
+                let du = u - cx;
+                self.du2.push(du * du);
+            }
+        }
+    }
+
+    /// Enter a row: compute `dv²` and compact the active blob set.
+    fn set_row(&mut self, v: f64) {
+        self.act.clear();
+        self.adv2.clear();
+        for i in 0..self.n {
+            let dv = v - self.cy[i];
+            let dv2 = dv * dv;
+            if dv2 < self.cut[i] {
+                self.act.push(i as u32);
+                self.adv2.push(dv2);
+            }
+        }
+    }
+
+    /// `Field::soft` at span column `col` of the current row.
+    #[inline]
+    fn soft_at(&self, col: usize) -> f64 {
+        if self.act.is_empty() {
+            return self.sig_empty;
+        }
+        let du2 = &self.du2[col * self.n..(col + 1) * self.n];
+        let mut s = 0.0;
+        for (k, &i) in self.act.iter().enumerate() {
+            let i = i as usize;
+            // Same order as scalar `du*du + dv*dv`.
+            let d2 = du2[i] + self.adv2[k];
+            if d2 >= self.cut[i] {
+                continue;
+            }
+            s += self.w[i] * (-d2 / self.denom[i]).exp();
+        }
+        if s == 0.0 {
+            return self.sig_empty;
+        }
+        sigmoid((s - 1.0) * 8.0)
+    }
+}
+
+/// Per-column precomputed values of the current span.
+#[derive(Clone, Copy)]
+struct ColPre {
+    /// Column position in the level's pixel grid.
+    px: usize,
+    /// `x0 = (px+0.5)·scale` in level-0 pixel space.
+    x0: f64,
+    /// Nuclei lattice column `⌊x0/cell⌋`.
+    cx: i64,
+}
+
+/// One nuclei lattice cell of the cached 3-row neighborhood.
+struct Cell {
+    /// Presence hash value `unit(h)` (taken eagerly: one hash per cell).
+    uh: f64,
+    /// The cell's base hash, for lazy jitter/radius derivation.
+    h: u64,
+    gx: i64,
+    gy: i64,
+    /// Jittered nucleus center (valid when `filled`).
+    nx: f64,
+    ny: f64,
+    /// Radius hash `unit(hash2(h,3,0))` (valid when `filled`).
+    u3: f64,
+    filled: bool,
+}
+
+impl Cell {
+    #[inline]
+    fn fill(&mut self) {
+        let jx = unit(hash2(self.h, 1, 0));
+        let jy = unit(hash2(self.h, 2, 0));
+        self.nx = (self.gx as f64 + jx) * NUCLEI_CELL_L0;
+        self.ny = (self.gy as f64 + jy) * NUCLEI_CELL_L0;
+        self.u3 = unit(hash2(self.h, 3, 0));
+        self.filled = true;
+    }
+}
+
+/// Row-major span renderer over one slide level. Build once per tile (or
+/// reuse across a whole level's tiles), call [`set_span`](Self::set_span)
+/// per column set, [`begin_row`](Self::begin_row) per row, and
+/// [`pixel`](Self::pixel) per span column.
+pub struct TileRenderer<'a> {
+    params: &'a TextureParams,
+    seed: u64,
+    noise_seed: u64,
+    nuc_seed: u64,
+    w_px: usize,
+    h_px: usize,
+    w_f: f64,
+    h_f: f64,
+    scale: f64,
+    blur2: f64,
+    attenuation: f64,
+    tissue: FieldRows,
+    tumor: FieldRows,
+    distractor: FieldRows,
+    // --- span state -----------------------------------------------------
+    cols: Vec<ColPre>,
+    /// Use the cached 3-row nuclei neighborhood (columns advance by less
+    /// than a lattice cell) vs the direct scalar 3×3 scan.
+    use_cell_cache: bool,
+    // --- row state ------------------------------------------------------
+    py: usize,
+    y0: f64,
+    row_cy: i64,
+    cells: Vec<Cell>,
+    cells_cy: i64,
+    cells_gx0: i64,
+    cells_nx: usize,
+    cells_valid: bool,
+}
+
+impl<'a> TileRenderer<'a> {
+    /// Prepare a renderer for `tex` at pyramid `level`, whose full image
+    /// is `w_px × h_px` pixels.
+    pub fn new(tex: &Texture<'a>, level: usize, w_px: usize, h_px: usize) -> TileRenderer<'a> {
+        let scale = (1u64 << level) as f64;
+        TileRenderer {
+            params: tex.params,
+            seed: tex.seed,
+            noise_seed: tex.seed ^ 0xA5A5_0000 ^ level as u64,
+            nuc_seed: tex.seed ^ 0x5EED_0001,
+            w_px,
+            h_px,
+            w_f: w_px as f64,
+            h_f: h_px as f64,
+            scale,
+            blur2: (scale * 0.5) * (scale * 0.5),
+            attenuation: 1.0 / (1.0 + 0.30 * (scale - 1.0)),
+            tissue: FieldRows::new(tex.tissue),
+            tumor: FieldRows::new(tex.tumor),
+            distractor: FieldRows::new(tex.distractor),
+            cols: Vec::new(),
+            use_cell_cache: true,
+            py: 0,
+            y0: 0.0,
+            row_cy: 0,
+            cells: Vec::new(),
+            cells_cy: i64::MIN,
+            cells_gx0: 0,
+            cells_nx: 0,
+            cells_valid: false,
+        }
+    }
+
+    /// Define the span: columns `px0 + k·stride` for `k < n_cols`. All
+    /// per-column work (u, x0, cell index, `du²` tables) happens here.
+    pub fn set_span(&mut self, px0: usize, n_cols: usize, stride: usize) {
+        let stride = stride.max(1);
+        self.cols.clear();
+        self.cols.reserve(n_cols);
+        let mut us = Vec::with_capacity(n_cols);
+        for k in 0..n_cols {
+            let px = px0 + k * stride;
+            let u = (px as f64 + 0.5) / self.w_f;
+            let x0 = (px as f64 + 0.5) * self.scale;
+            self.cols.push(ColPre {
+                px,
+                x0,
+                cx: (x0 / NUCLEI_CELL_L0).floor() as i64,
+            });
+            us.push(u);
+        }
+        self.tissue.set_cols(&us);
+        self.tumor.set_cols(&us);
+        self.distractor.set_cols(&us);
+        // A cache of 3 lattice rows only pays off when consecutive columns
+        // land in the same or adjacent cells.
+        self.use_cell_cache = (stride as f64) * self.scale < NUCLEI_CELL_L0;
+        self.cells_valid = false;
+    }
+
+    /// Enter row `py`: per-row field terms, active-blob compaction, and
+    /// (when caching) the 3-row nuclei neighborhood.
+    pub fn begin_row(&mut self, py: usize) {
+        let v = (py as f64 + 0.5) / self.h_f;
+        self.tissue.set_row(v);
+        self.tumor.set_row(v);
+        self.distractor.set_row(v);
+        self.py = py;
+        self.y0 = (py as f64 + 0.5) * self.scale;
+        self.row_cy = (self.y0 / NUCLEI_CELL_L0).floor() as i64;
+        if !self.use_cell_cache || self.cols.is_empty() {
+            return;
+        }
+        let cy = self.row_cy;
+        let gx0 = self.cols[0].cx - 1;
+        let gx1 = self.cols[self.cols.len() - 1].cx + 1;
+        let nx = (gx1 - gx0 + 1) as usize;
+        if self.cells_valid && cy == self.cells_cy && gx0 == self.cells_gx0 && nx == self.cells_nx
+        {
+            return; // same lattice rows as the previous pixel row
+        }
+        self.cells.clear();
+        self.cells.reserve(3 * nx);
+        for gy in cy - 1..=cy + 1 {
+            for gx in gx0..=gx1 {
+                let h = hash2(self.nuc_seed, gx, gy);
+                self.cells.push(Cell {
+                    uh: unit(h),
+                    h,
+                    gx,
+                    gy,
+                    nx: 0.0,
+                    ny: 0.0,
+                    u3: 0.0,
+                    filled: false,
+                });
+            }
+        }
+        self.cells_cy = cy;
+        self.cells_gx0 = gx0;
+        self.cells_nx = nx;
+        self.cells_valid = true;
+    }
+
+    /// Nucleus darkening at span column `c` — mirrors
+    /// `Texture::nuclei_darkening` exactly (same 3×3 neighborhood walked
+    /// in the same dy-outer/dx-inner order).
+    fn darkening(&mut self, c: usize, s_tissue: f64, s_tumor: f64, s_distr: f64) -> f64 {
+        if s_tissue < 0.02 {
+            return 0.0;
+        }
+        let p = self.params;
+        let dense = (s_tumor + s_distr).min(1.0);
+        let p_nucleus = p.p_nucleus_normal * (1.0 - dense) + p.p_nucleus_tumor * dense;
+        let strength = (p.dark_normal * (1.0 - s_tumor - 0.45 * s_distr)
+            + p.dark_tumor * (s_tumor + 0.45 * s_distr))
+            * self.attenuation;
+        let x0 = self.cols[c].x0;
+        let cx = self.cols[c].cx;
+        let y0 = self.y0;
+        let blur2 = self.blur2;
+        let mut dark: f64 = 0.0;
+        if self.cells_valid {
+            let cells_nx = self.cells_nx;
+            let col0 = (cx - 1 - self.cells_gx0) as usize;
+            for row in 0..3 {
+                let base = row * cells_nx + col0;
+                for e in &mut self.cells[base..base + 3] {
+                    if e.uh >= p_nucleus {
+                        continue;
+                    }
+                    if !e.filled {
+                        e.fill();
+                    }
+                    let r = 2.2 + 1.8 * (0.35 * e.u3 + 0.65 * s_tumor);
+                    let r2 = r * r;
+                    let r_eff2 = r2 + blur2;
+                    let d2 = (x0 - e.nx) * (x0 - e.nx) + (y0 - e.ny) * (y0 - e.ny);
+                    let amp = strength * r2 / r_eff2;
+                    dark += amp * (-d2 / (2.0 * r_eff2)).exp();
+                }
+            }
+        } else {
+            // Strided access: the scalar 3×3 scan, verbatim.
+            let cell = NUCLEI_CELL_L0;
+            let cy = self.row_cy;
+            for dy in -1..=1i64 {
+                for dx in -1..=1i64 {
+                    let gx = cx + dx;
+                    let gy = cy + dy;
+                    let h = hash2(self.nuc_seed, gx, gy);
+                    if unit(h) >= p_nucleus {
+                        continue;
+                    }
+                    let jx = unit(hash2(h, 1, 0));
+                    let jy = unit(hash2(h, 2, 0));
+                    let nx = (gx as f64 + jx) * cell;
+                    let ny = (gy as f64 + jy) * cell;
+                    let r = 2.2 + 1.8 * (0.35 * unit(hash2(h, 3, 0)) + 0.65 * s_tumor);
+                    let r2 = r * r;
+                    let r_eff2 = r2 + blur2;
+                    let d2 = (x0 - nx) * (x0 - nx) + (y0 - ny) * (y0 - ny);
+                    let amp = strength * r2 / r_eff2;
+                    dark += amp * (-d2 / (2.0 * r_eff2)).exp();
+                }
+            }
+        }
+        (dark * s_tissue).min(0.95)
+    }
+
+    /// RGB of span column `c` on the current row. Bit-identical to
+    /// `Texture::pixel(level, cols[c].px, py, w_px, h_px)`.
+    #[inline]
+    pub fn pixel(&mut self, c: usize) -> [f32; 3] {
+        let s_tissue = self.tissue.soft_at(c);
+        let s_tumor = self.tumor.soft_at(c) * s_tissue;
+        let s_distr = self.distractor.soft_at(c) * s_tissue * (1.0 - s_tumor);
+
+        let p = self.params;
+        let mut rgb = [0.0f64; 3];
+        for ch in 0..3 {
+            let tissue_c = p.tissue[ch] * (1.0 - s_tumor) + p.tumor[ch] * s_tumor;
+            rgb[ch] = p.bg[ch] * (1.0 - s_tissue) + tissue_c * s_tissue;
+        }
+
+        let dark = self.darkening(c, s_tissue, s_tumor, s_distr);
+        for ch in 0..3 {
+            rgb[ch] *= 1.0 - dark * p.nucleus_tint[ch];
+        }
+
+        let nh = hash2(self.noise_seed, self.cols[c].px as i64, self.py as i64);
+        for (ch, v) in rgb.iter_mut().enumerate() {
+            let n = unit(hash2(nh, ch as i64, 0)) - 0.5;
+            *v = (*v + n * 2.0 * p.noise_amp).clamp(0.0, 1.0);
+        }
+
+        [rgb[0] as f32, rgb[1] as f32, rgb[2] as f32]
+    }
+
+    /// Render the `w×h` pixel rectangle at `(px0, py0)` into HWC f32 RGB
+    /// (the tile extraction hot path).
+    pub fn render_rect(&mut self, px0: usize, py0: usize, w: usize, h: usize) -> Vec<f32> {
+        self.set_span(px0, w, 1);
+        let mut out = vec![0.0f32; w * h * 3];
+        let mut o = 0;
+        for py in py0..py0 + h {
+            self.begin_row(py);
+            for c in 0..w {
+                let rgb = self.pixel(c);
+                out[o..o + 3].copy_from_slice(&rgb);
+                o += 3;
+            }
+        }
+        out
+    }
+
+    /// Mean luma of tile `(tx, ty)` sampled with `stride`, clamped to the
+    /// image bounds — bit-identical to the (fixed) scalar
+    /// `Texture::tile_mean_luma`. Returns 0.0 for tiles fully outside the
+    /// image.
+    pub fn tile_mean_luma(&mut self, tx: usize, ty: usize, tile_px: usize, stride: usize) -> f64 {
+        let stride = stride.max(1);
+        let px_lo = tx * tile_px;
+        let py_lo = ty * tile_px;
+        let px_hi = ((tx + 1) * tile_px).min(self.w_px);
+        let py_hi = ((ty + 1) * tile_px).min(self.h_px);
+        if px_lo >= px_hi || py_lo >= py_hi {
+            return 0.0;
+        }
+        let n_cols = (px_hi - px_lo).div_ceil(stride);
+        self.set_span(px_lo, n_cols, stride);
+        let mut sum = 0.0;
+        let mut n = 0usize;
+        let mut py = py_lo;
+        while py < py_hi {
+            self.begin_row(py);
+            for c in 0..n_cols {
+                let [r, g, b] = self.pixel(c);
+                sum += 0.299 * r as f64 + 0.587 * g as f64 + 0.114 * b as f64;
+                n += 1;
+            }
+            py += stride;
+        }
+        sum / n as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::synth::field::Blob;
+    use crate::synth::slide_gen::{SlideKind, SlideSpec};
+
+    fn fields_of(kind: SlideKind) -> (Field, Field, Field) {
+        SlideSpec::new("rtest", 4321, 16, 8, 3, 64, kind).fields()
+    }
+
+    /// Bit-exact comparison helper: f32 bits, not approximate equality.
+    fn assert_px_eq(a: [f32; 3], b: [f32; 3], ctx: &str) {
+        let ab: Vec<u32> = a.iter().map(|v| v.to_bits()).collect();
+        let bb: Vec<u32> = b.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(ab, bb, "pixel bits differ at {ctx}: {a:?} vs {b:?}");
+    }
+
+    #[test]
+    fn golden_bit_identity_across_levels_and_kinds() {
+        for kind in [
+            SlideKind::LargeTumor,
+            SlideKind::SmallScattered,
+            SlideKind::Negative,
+        ] {
+            let (tissue, tumor, distractor) = fields_of(kind);
+            let params = TextureParams::default();
+            let tex = Texture {
+                seed: 77,
+                tissue: &tissue,
+                tumor: &tumor,
+                distractor: &distractor,
+                params: &params,
+            };
+            for level in 0..3usize {
+                let (w_px, h_px) = (1024 >> level, 512 >> level);
+                let mut r = TileRenderer::new(&tex, level, w_px, h_px);
+                r.set_span(0, w_px.min(96), 1);
+                for py in (0..h_px.min(48)).chain([h_px - 1]) {
+                    r.begin_row(py);
+                    for c in 0..w_px.min(96) {
+                        let got = r.pixel(c);
+                        let want = tex.pixel(level, c, py, w_px, h_px);
+                        assert_px_eq(got, want, &format!("{kind:?} L{level} ({c},{py})"));
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn golden_bit_identity_on_odd_dims_and_strides() {
+        // Dimensions that are not tile-aligned and strided spans (the luma
+        // pass shape), including the last row/column.
+        let (tissue, tumor, distractor) = fields_of(SlideKind::SmallScattered);
+        let params = TextureParams::default();
+        let tex = Texture {
+            seed: 9,
+            tissue: &tissue,
+            tumor: &tumor,
+            distractor: &distractor,
+            params: &params,
+        };
+        let (w_px, h_px) = (1000usize, 514usize);
+        for level in [0usize, 2] {
+            for stride in [1usize, 4, 7] {
+                let mut r = TileRenderer::new(&tex, level, w_px, h_px);
+                let n_cols = w_px.div_ceil(stride);
+                r.set_span(0, n_cols, stride);
+                for py in (0..h_px).step_by(61).chain([h_px - 1]) {
+                    r.begin_row(py);
+                    for c in (0..n_cols).step_by(3) {
+                        let px = c * stride;
+                        let got = r.pixel(c);
+                        let want = tex.pixel(level, px, py, w_px, h_px);
+                        assert_px_eq(got, want, &format!("L{level} s{stride} ({px},{py})"));
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn golden_render_rect_matches_scalar_tiles() {
+        let (tissue, tumor, distractor) = fields_of(SlideKind::LargeTumor);
+        let params = TextureParams::default();
+        let tex = Texture {
+            seed: 31,
+            tissue: &tissue,
+            tumor: &tumor,
+            distractor: &distractor,
+            params: &params,
+        };
+        let (w_px, h_px) = (256usize, 128usize);
+        // Tile sizes that divide and don't divide the image.
+        for tp in [32usize, 48] {
+            let mut r = TileRenderer::new(&tex, 0, w_px, h_px);
+            for (tx, ty) in [(0usize, 0usize), (1, 1), (w_px / tp - 1, h_px / tp - 1)] {
+                let got = r.render_rect(tx * tp, ty * tp, tp, tp);
+                let mut want = Vec::with_capacity(tp * tp * 3);
+                for py in 0..tp {
+                    for px in 0..tp {
+                        want.extend_from_slice(&tex.pixel(
+                            0,
+                            tx * tp + px,
+                            ty * tp + py,
+                            w_px,
+                            h_px,
+                        ));
+                    }
+                }
+                let gb: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+                let wb: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(gb, wb, "tile ({tx},{ty}) tp={tp} differs");
+            }
+        }
+    }
+
+    #[test]
+    fn tile_mean_luma_matches_scalar_including_boundary_tiles() {
+        let (tissue, tumor, distractor) = fields_of(SlideKind::LargeTumor);
+        let params = TextureParams::default();
+        let tex = Texture {
+            seed: 55,
+            tissue: &tissue,
+            tumor: &tumor,
+            distractor: &distractor,
+            params: &params,
+        };
+        // 100×70 image with 32-px tiles: right/bottom tiles are partial.
+        let (w_px, h_px) = (100usize, 70usize);
+        let tp = 32usize;
+        let mut r = TileRenderer::new(&tex, 0, w_px, h_px);
+        for ty in 0..=2 {
+            for tx in 0..=3 {
+                let got = r.tile_mean_luma(tx, ty, tp, 4);
+                let want = tex.tile_mean_luma(0, tx, ty, tp, w_px, h_px, 4);
+                assert_eq!(
+                    got.to_bits(),
+                    want.to_bits(),
+                    "tile ({tx},{ty}) luma differs: {got} vs {want}"
+                );
+            }
+        }
+        // Fully-out-of-range tile: defined as 0.0 on both paths.
+        assert_eq!(r.tile_mean_luma(4, 0, tp, 4), 0.0);
+        assert_eq!(tex.tile_mean_luma(0, 4, 0, tp, w_px, h_px, 4), 0.0);
+    }
+
+    #[test]
+    fn boundary_tile_sampling_stays_in_range() {
+        // Regression for the edge-tile bug: boundary tiles must only
+        // sample coordinates inside the image. The clamped luma of a
+        // partial tile equals the mean over only its in-range pixels.
+        let tissue = Field {
+            blobs: vec![Blob {
+                cx: 0.5,
+                cy: 0.5,
+                r: 0.3,
+                w: 3.0,
+            }],
+        };
+        let empty = Field { blobs: vec![] };
+        let params = TextureParams::default();
+        let tex = Texture {
+            seed: 2,
+            tissue: &tissue,
+            tumor: &empty,
+            distractor: &empty,
+            params: &params,
+        };
+        let (w_px, h_px) = (90usize, 90usize);
+        let tp = 64usize;
+        // Tile (1,1) covers px 64..90 only. Manual mean over the clamped range:
+        let mut sum = 0.0;
+        let mut n = 0usize;
+        let mut py = 64;
+        while py < 90 {
+            let mut px = 64;
+            while px < 90 {
+                let [r, g, b] = tex.pixel(0, px, py, w_px, h_px);
+                sum += 0.299 * r as f64 + 0.587 * g as f64 + 0.114 * b as f64;
+                n += 1;
+                px += 4;
+            }
+            py += 4;
+        }
+        let want = sum / n as f64;
+        let got = tex.tile_mean_luma(0, 1, 1, tp, w_px, h_px, 4);
+        assert_eq!(got.to_bits(), want.to_bits(), "clamped luma mismatch");
+        let mut r = TileRenderer::new(&tex, 0, w_px, h_px);
+        assert_eq!(r.tile_mean_luma(1, 1, tp, 4).to_bits(), want.to_bits());
+    }
+}

@@ -217,18 +217,26 @@ impl<'a> Texture<'a> {
         stride: usize,
     ) -> f64 {
         let stride = stride.max(1);
+        // Clamp to the image: right/bottom boundary tiles cover fewer than
+        // tile_px pixels, and sampling past `w_px`/`h_px` would feed the
+        // fields out-of-range UV coordinates.
+        let px_hi = ((tx + 1) * tile_px).min(w_px);
+        let py_hi = ((ty + 1) * tile_px).min(h_px);
         let mut sum = 0.0;
         let mut n = 0usize;
         let mut py = ty * tile_px;
-        while py < (ty + 1) * tile_px {
+        while py < py_hi {
             let mut px = tx * tile_px;
-            while px < (tx + 1) * tile_px {
+            while px < px_hi {
                 let [r, g, b] = self.pixel(level, px, py, w_px, h_px);
                 sum += 0.299 * r as f64 + 0.587 * g as f64 + 0.114 * b as f64;
                 n += 1;
                 px += stride;
             }
             py += stride;
+        }
+        if n == 0 {
+            return 0.0; // tile entirely outside the image
         }
         sum / n as f64
     }

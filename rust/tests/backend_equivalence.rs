@@ -93,6 +93,34 @@ fn all_backends_produce_identical_trees() {
         check("cluster", &expect, &got);
         assert_eq!(cluster_backend.in_flight(), 0, "no leaked cluster work");
 
+        // The same cluster with a mixed wire: worker 0 is held on the
+        // JSON v1 encoding while worker 1 speaks binary v2 (frame v2
+        // rolling-upgrade scenario). The encoding must never leak into
+        // the tree.
+        let mut mixed_backend = ClusterBackend::start(
+            spec.clone(),
+            Arc::clone(&analyzer),
+            &ClusterExecConfig {
+                workers: 2,
+                steal: true,
+                seed: 17,
+                v1_json_workers: 1,
+                ..ClusterExecConfig::default()
+            },
+        )
+        .unwrap();
+        let got = run_on_backend(
+            slide.id(),
+            slide.levels(),
+            initial.clone(),
+            &thr,
+            chunk,
+            &mut mixed_backend,
+        )
+        .unwrap();
+        check("cluster-mixed-wire", &expect, &got);
+        assert_eq!(mixed_backend.in_flight(), 0, "no leaked cluster work");
+
         let mut sim_backend = SimBackend::new(&expect, 4);
         let got = run_on_backend(
             slide.id(),

@@ -39,6 +39,7 @@ fn external_cfg(workers: usize, external: usize, seed: u64) -> ClusterExecConfig
             "--analyzer-seed".to_string(),
             "1".to_string(),
         ],
+        v1_json_workers: 0,
     }
 }
 
@@ -73,6 +74,41 @@ fn external_worker_processes_serve_chunks() {
     got.check_consistency().unwrap();
     assert_eq!(got.nodes, expect.nodes, "multi-process tree diverged");
     assert_eq!(backend.in_flight(), 0);
+}
+
+#[test]
+fn v1_json_external_worker_interops_with_v2_cluster() {
+    // Rolling-upgrade smoke: the in-process worker negotiates binary v2,
+    // the external process is pinned to the JSON v1 wire with `--wire v1`
+    // (a stand-in for a pre-v2 binary). The mixed cluster must produce
+    // the same tree as the blocking driver.
+    let spec = SlideSpec::new("mp_v1", 903, 32, 16, 3, 64, SlideKind::LargeTumor);
+    let analyzer: Arc<dyn Analyzer> = Arc::new(OracleAnalyzer::new(1));
+    let slide = Slide::from_spec(spec.clone());
+    let thr = Thresholds {
+        zoom: vec![0.5, 0.35, 0.35],
+    };
+    let expect = run_pyramidal(&slide, analyzer.as_ref(), &thr, 8);
+
+    let mut cfg = external_cfg(1, 1, 41);
+    cfg.external_args.push("--wire".to_string());
+    cfg.external_args.push("v1".to_string());
+    let mut backend = ClusterBackend::start(spec, analyzer, &cfg).unwrap();
+    assert!(
+        backend.exec().wait_for_workers(2, Duration::from_secs(30)),
+        "the v1 worker must register through the Hello handshake"
+    );
+    let got = run_on_backend(
+        slide.id(),
+        slide.levels(),
+        expect.initial.clone(),
+        &thr,
+        4,
+        &mut backend,
+    )
+    .unwrap();
+    got.check_consistency().unwrap();
+    assert_eq!(got.nodes, expect.nodes, "mixed v1/v2 wire changed the tree");
 }
 
 #[test]

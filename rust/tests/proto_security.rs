@@ -1,0 +1,240 @@
+//! Adversarial tests of the binary frame format v2 (`cluster::framev2`),
+//! mirroring `http_security`: the decoder faces truncations at every
+//! byte boundary, forged counts, bad magic/version/tag bytes, bit flips
+//! and raw socket garbage — and must always answer with a typed
+//! [`FrameError`] (or an `anyhow` error at the socket layer), never a
+//! panic, never an unbounded allocation, and a live cluster must keep
+//! serving chunks afterwards.
+
+use std::io::Write;
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+use pyramidai::cluster::framev2::{
+    decode_body, encode_body, FrameError, MAGIC, TAG_CHUNK_DONE, TAG_CHUNK_MOVED, VERSION,
+};
+use pyramidai::cluster::proto::{ChunkTask, Msg};
+use pyramidai::cluster::{ClusterExec, ClusterExecConfig};
+use pyramidai::model::oracle::OracleAnalyzer;
+use pyramidai::model::Analyzer;
+use pyramidai::slide::pyramid::Slide;
+use pyramidai::slide::tile::TileId;
+use pyramidai::synth::slide_gen::{SlideKind, SlideSpec};
+
+fn sample_chunk(key: u64) -> ChunkTask {
+    ChunkTask {
+        key,
+        spec: SlideSpec::new("sec", 42, 16, 8, 3, 64, SlideKind::LargeTumor),
+        level: 2,
+        tiles: vec![TileId::new(2, 0, 0), TileId::new(2, 1, 0), TileId::new(2, 2, 1)],
+        exclude: vec![1, 3],
+        trace: 77,
+    }
+}
+
+/// Every hot message, encoded to a valid v2 body.
+fn valid_bodies() -> Vec<Vec<u8>> {
+    let msgs = [
+        Msg::Chunk(sample_chunk(1)),
+        Msg::ChunkDone {
+            key: 2,
+            worker: 1,
+            probs: vec![0.25, 0.5, 0.75],
+            trace: 9,
+        },
+        Msg::ChunkMoved {
+            key: 3,
+            worker: 0,
+            trace: 10,
+        },
+        Msg::ChunkBatch(vec![sample_chunk(4), sample_chunk(5)]),
+    ];
+    msgs.iter()
+        .map(|m| {
+            let mut b = Vec::new();
+            assert!(encode_body(m, &mut b), "hot message must encode");
+            b
+        })
+        .collect()
+}
+
+#[test]
+fn every_truncation_is_a_typed_error() {
+    // Any strict prefix of a valid body must decode to an error — the
+    // decoder consumes exactly the full body, so a cut at any boundary
+    // lands mid-field (Truncated) or invalidates a count (BadCount).
+    for body in valid_bodies() {
+        for cut in 0..body.len() {
+            match decode_body(&body[..cut]) {
+                Err(
+                    FrameError::Truncated { .. }
+                    | FrameError::BadCount { .. }
+                    | FrameError::BadUtf8,
+                ) => {}
+                Err(other) => panic!("cut at {cut}/{}: unexpected error {other}", body.len()),
+                Ok(m) => panic!("cut at {cut}/{} decoded as {m:?}", body.len()),
+            }
+        }
+    }
+}
+
+#[test]
+fn forged_counts_do_not_allocate() {
+    // A ChunkDone claiming u32::MAX probabilities with an empty payload:
+    // the count guard must reject it before `Vec::with_capacity` ever
+    // sees the number (this test OOMs or hangs if it does not).
+    let mut body = vec![MAGIC, VERSION, TAG_CHUNK_DONE];
+    body.extend_from_slice(&1u64.to_le_bytes()); // key
+    body.extend_from_slice(&0u64.to_le_bytes()); // worker
+    body.extend_from_slice(&0u64.to_le_bytes()); // trace
+    body.extend_from_slice(&u32::MAX.to_le_bytes()); // probs count
+    match decode_body(&body) {
+        Err(FrameError::BadCount {
+            what: "done.probs",
+            count,
+            remaining: 0,
+        }) => assert_eq!(count, u32::MAX as usize),
+        other => panic!("unexpected {other:?}"),
+    }
+
+    // Same for a batch header: count * CHUNK_MIN_BYTES overflows usize on
+    // 32-bit and vastly exceeds the payload on 64-bit — both must land in
+    // BadCount via the checked multiply.
+    let mut body = vec![MAGIC, VERSION, pyramidai::cluster::framev2::TAG_CHUNK_BATCH];
+    body.extend_from_slice(&u32::MAX.to_le_bytes());
+    assert!(matches!(
+        decode_body(&body),
+        Err(FrameError::BadCount { what: "batch.chunks", .. })
+    ));
+}
+
+#[test]
+fn bad_magic_version_tag_kind_and_trailing_bytes() {
+    // Magic: anything that is not 0xB5 (JSON bodies never reach
+    // decode_body — `Msg::read_from` dispatches on the first byte).
+    assert_eq!(decode_body(&[0x00, VERSION, 1]), Err(FrameError::BadMagic(0x00)));
+    assert_eq!(decode_body(&[b'{', VERSION, 1]), Err(FrameError::BadMagic(b'{')));
+
+    // Version skew: a frame from a hypothetical v3 peer must be refused,
+    // not half-parsed.
+    assert_eq!(decode_body(&[MAGIC, 3, TAG_CHUNK_MOVED]), Err(FrameError::BadVersion(3)));
+    assert_eq!(decode_body(&[MAGIC, 0, 1]), Err(FrameError::BadVersion(0)));
+
+    // Unknown tag.
+    assert_eq!(decode_body(&[MAGIC, VERSION, 99]), Err(FrameError::BadTag(99)));
+
+    // Unknown slide-kind code inside a chunk: corrupt the kind byte of a
+    // valid Chunk body (offset: magic+ver+tag=3, key 8, trace 8, level 4,
+    // seed 8, 4×u32 geometry = 16 → kind at 3+8+8+4+8+16 = 47).
+    let mut body = Vec::new();
+    assert!(encode_body(&Msg::Chunk(sample_chunk(1)), &mut body));
+    body[47] = 9;
+    assert_eq!(decode_body(&body), Err(FrameError::BadKind(9)));
+
+    // Non-UTF-8 slide id: the id "sec" starts right after kind + id_len.
+    let mut body = Vec::new();
+    assert!(encode_body(&Msg::Chunk(sample_chunk(1)), &mut body));
+    body[50] = 0xFF;
+    assert_eq!(decode_body(&body), Err(FrameError::BadUtf8));
+
+    // Trailing bytes after a complete message.
+    let mut body = Vec::new();
+    assert!(encode_body(
+        &Msg::ChunkMoved {
+            key: 1,
+            worker: 2,
+            trace: 3
+        },
+        &mut body
+    ));
+    body.push(0xAA);
+    assert_eq!(decode_body(&body), Err(FrameError::TrailingBytes(1)));
+}
+
+#[test]
+fn single_bit_flips_never_panic() {
+    // Exhaustive single-bit corruption of every valid hot-message body.
+    // Many flips decode fine (a different key, a different probability);
+    // the invariant is that none of them panic or hang — every outcome
+    // is Ok(_) or a typed FrameError.
+    for body in valid_bodies() {
+        for i in 0..body.len() {
+            for bit in 0..8 {
+                let mut fuzzed = body.clone();
+                fuzzed[i] ^= 1 << bit;
+                let _ = decode_body(&fuzzed);
+            }
+        }
+    }
+}
+
+#[test]
+fn live_cluster_survives_socket_garbage() {
+    let analyzer: Arc<dyn Analyzer> = Arc::new(OracleAnalyzer::new(1));
+    let exec = ClusterExec::start(
+        Arc::clone(&analyzer),
+        &ClusterExecConfig {
+            workers: 1,
+            steal: false,
+            seed: 3,
+            ..ClusterExecConfig::default()
+        },
+    )
+    .unwrap();
+    let addr = exec.leader_addr();
+
+    // Hostile frames at the leader's control port: raw noise, an
+    // oversized length prefix, a length prefix with no body (early
+    // close), a v2 frame with a bad tag, and a forged-count ChunkDone.
+    let mut forged = vec![MAGIC, VERSION, TAG_CHUNK_DONE];
+    forged.extend_from_slice(&[0u8; 24]);
+    forged.extend_from_slice(&u32::MAX.to_le_bytes());
+    let payloads: Vec<Vec<u8>> = vec![
+        b"not a frame at all".to_vec(),
+        u32::MAX.to_le_bytes().to_vec(),
+        {
+            let mut v = 100u32.to_le_bytes().to_vec();
+            v.extend_from_slice(b"abc"); // promises 100 bytes, sends 3
+            v
+        },
+        {
+            let mut v = 3u32.to_le_bytes().to_vec();
+            v.extend_from_slice(&[MAGIC, VERSION, 200]);
+            v
+        },
+        {
+            let mut v = (forged.len() as u32).to_le_bytes().to_vec();
+            v.extend_from_slice(&forged);
+            v
+        },
+    ];
+    for p in &payloads {
+        let mut s = TcpStream::connect(&addr).unwrap();
+        let _ = s.write_all(p);
+        let _ = s.flush();
+        // Dropping the stream closes it — the truncated-body case makes
+        // the leader's read_exact fail fast instead of waiting.
+    }
+
+    // The cluster still serves real work after all of that.
+    let sp = SlideSpec::new("sec_live", 7, 16, 8, 3, 64, SlideKind::LargeTumor);
+    let slide = Slide::from_spec(sp.clone());
+    let tiles = slide.level_tile_ids(2);
+    let want = analyzer.analyze(&slide, 2, &tiles);
+    exec.submit(1, &sp, 2, tiles).unwrap();
+    let deadline = std::time::Instant::now() + Duration::from_secs(30);
+    let got = loop {
+        if let Some((key, probs)) = exec.try_result() {
+            assert_eq!(key, 1);
+            break probs;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "cluster wedged by garbage frames"
+        );
+        std::thread::sleep(Duration::from_millis(2));
+    };
+    assert_eq!(got, want);
+    exec.shutdown();
+}
