@@ -39,6 +39,20 @@
 //!   the [`Msg::Hello`]/[`Msg::Welcome`] handshake and immediately become
 //!   resubmission targets; chunks orphaned while no worker was eligible
 //!   are re-dealt on the next monitor tick.
+//! * **Leader failover (DESIGN.md §15)** — with
+//!   [`ClusterExecConfig::standby`] set, every ledger-relevant transition
+//!   (run registration, chunk deal, completion, loss) streams to the
+//!   standby as sequence-numbered [`Msg::Ledger`] frames on a dedicated
+//!   replication connection. [`Msg::Welcome`] advertises the standby to
+//!   every worker; a worker that cannot reach its leader re-Hellos the
+//!   standby, which takes over (see [`super::standby`]), replays the log
+//!   into a fresh `ClusterExec` and resumes the incomplete runs —
+//!   byte-identical trees, proven by `rust/tests/chaos_cluster.rs`.
+//! * **Adaptive heartbeat** — the monitor measures each probe's RTT and
+//!   keeps a per-worker EWMA + jitter estimate; the probe timeout is
+//!   `ewma + 4·jitter` clamped to `[heartbeat, 4·heartbeat]` (floors at
+//!   20ms), so a fast LAN declares death quickly while a loaded worker
+//!   gets the old fixed patience as its worst case.
 //!
 //! Because the dispatcher's `PyramidRun` accepts chunked, out-of-order
 //! feeds and its tree depends only on *what* was analyzed, recovery never
@@ -47,7 +61,7 @@
 //!
 //! [`FrontierRequest`]: crate::pyramid::FrontierRequest
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -65,6 +79,7 @@ use crate::util::prng::Pcg32;
 
 use super::framev2::FrameBuf;
 use super::leader::{send_wire, send_wire_deadline};
+use super::ledger::{pack_key, req_of, run_of, LedgerOp, LedgerRecord};
 use super::proto::{ChunkTask, Msg, WireVersion};
 
 /// Patience for dealing a chunk to a worker believed alive: long enough
@@ -105,6 +120,17 @@ pub struct ClusterExecConfig {
     /// negotiation exists for (`backend_equivalence` proves the tree is
     /// identical either way).
     pub v1_json_workers: usize,
+    /// Standby leader address (`host:port`). When set, the chunk ledger
+    /// is replicated there as [`Msg::Ledger`] frames and every Welcome
+    /// advertises it so workers know where to re-Hello on leader death.
+    pub standby: Option<String>,
+    /// Host this leader advertises to workers as its reachable address
+    /// (`--advertise`); workers on other machines must not be handed
+    /// loopback.
+    pub advertise_host: String,
+    /// Address the leader's control/result listener binds
+    /// (`host:port`, port 0 = OS-assigned).
+    pub listen: String,
 }
 
 impl Default for ClusterExecConfig {
@@ -119,6 +145,9 @@ impl Default for ClusterExecConfig {
             external_program: String::new(),
             external_args: Vec::new(),
             v1_json_workers: 0,
+            standby: None,
+            advertise_host: "127.0.0.1".to_string(),
+            listen: "127.0.0.1:0".to_string(),
         }
     }
 }
@@ -152,6 +181,13 @@ pub enum ExecEvent {
         /// The routing key of the abandoned chunk.
         key: u64,
     },
+    /// The leader's dispatch state was discarded wholesale
+    /// ([`ClusterExec::trigger_failover`]): every in-flight chunk is
+    /// gone and dispatchers must requeue *all* outstanding work. This is
+    /// what a dispatcher that survives its leader (the service
+    /// scheduler) observes; a dispatcher that dies *with* the leader is
+    /// instead resumed from the replicated ledger by the standby.
+    Failover,
 }
 
 /// Counters of everything the recovery machinery did — the operator's
@@ -173,13 +209,60 @@ pub struct FaultStats {
 /// worker keeps its slot (marked dead) and rejoining processes get fresh
 /// ids, so excluded-victim lists stay unambiguous.
 struct WorkerSlot {
-    port: u16,
+    /// Reachable `host:port` of the worker's chunk listener — loopback
+    /// for in-process workers, whatever the Hello advertised for joined
+    /// processes.
+    addr: String,
     alive: bool,
     missed: u32,
     /// Negotiated wire encoding for frames *sent to* this worker; what
     /// the worker sends back is its own choice (every reader
     /// auto-detects), but the negotiation keeps both directions aligned.
     wire: WireVersion,
+    /// EWMA of observed probe round-trips, microseconds; 0 until the
+    /// first successful probe.
+    rtt_ewma_us: f64,
+    /// EWMA of |rtt − ewma| (mean deviation, TCP-RTO style).
+    rtt_jitter_us: f64,
+}
+
+impl WorkerSlot {
+    fn new(addr: String, wire: WireVersion) -> WorkerSlot {
+        WorkerSlot {
+            addr,
+            alive: true,
+            missed: 0,
+            wire,
+            rtt_ewma_us: 0.0,
+            rtt_jitter_us: 0.0,
+        }
+    }
+
+    /// Fold one observed probe RTT into the estimate (α=1/8, β=1/4 — the
+    /// classic RTO smoothing constants).
+    fn observe_rtt(&mut self, rtt: Duration) {
+        let us = rtt.as_micros() as f64;
+        if self.rtt_ewma_us <= 0.0 {
+            self.rtt_ewma_us = us;
+            self.rtt_jitter_us = us / 2.0;
+        } else {
+            let err = (us - self.rtt_ewma_us).abs();
+            self.rtt_jitter_us += (err - self.rtt_jitter_us) / 4.0;
+            self.rtt_ewma_us += (us - self.rtt_ewma_us) / 8.0;
+        }
+    }
+
+    /// Adaptive probe timeout: `ewma + 4·jitter`, clamped to
+    /// `[floor, cap]`. Before any observation the cap (the old fixed
+    /// timeout) applies, so behavior is never worse than the
+    /// pre-adaptive monitor.
+    fn probe_timeout(&self, floor: Duration, cap: Duration) -> Duration {
+        if self.rtt_ewma_us <= 0.0 {
+            return cap;
+        }
+        let us = self.rtt_ewma_us + 4.0 * self.rtt_jitter_us;
+        Duration::from_micros(us as u64).clamp(floor, cap)
+    }
 }
 
 /// One dealt-but-unfinished chunk. `assigned == None` means orphaned:
@@ -196,7 +279,16 @@ struct PendingChunk {
 /// Lock order: `pending` may be held while taking `workers` (placement
 /// decisions), never the reverse.
 struct ExecState {
-    leader_port: u16,
+    /// The leader's advertised control/result address (`host:port`).
+    leader_addr: String,
+    /// Standby leader advertised to workers via Welcome.
+    standby: Option<String>,
+    /// Replication channel to the ledger streamer thread (`None` without
+    /// a standby — every ledger call is then a no-op).
+    repl: Option<Sender<Msg>>,
+    /// Next ledger sequence number (1-based; the standby drops
+    /// duplicates by seq).
+    ledger_seq: AtomicU64,
     max_missed: u32,
     workers: Mutex<Vec<WorkerSlot>>,
     pending: Mutex<HashMap<u64, PendingChunk>>,
@@ -212,23 +304,23 @@ struct ExecState {
 }
 
 impl ExecState {
-    /// Snapshot of the live workers as (id, port, wire) triples.
-    fn alive_ports(&self) -> Vec<(usize, u16, WireVersion)> {
+    /// Snapshot of the live workers as (id, addr, wire) triples.
+    fn alive_addrs(&self) -> Vec<(usize, String, WireVersion)> {
         self.workers
             .lock()
             .unwrap()
             .iter()
             .enumerate()
             .filter(|(_, s)| s.alive)
-            .map(|(i, s)| (i, s.port, s.wire))
+            .map(|(i, s)| (i, s.addr.clone(), s.wire))
             .collect()
     }
 
     /// Pick a live worker not on `exclude`, round-robin. `None` when no
     /// registered worker is eligible.
-    fn pick_worker(&self, exclude: &[usize]) -> Option<(usize, u16, WireVersion)> {
-        let eligible: Vec<(usize, u16, WireVersion)> = self
-            .alive_ports()
+    fn pick_worker(&self, exclude: &[usize]) -> Option<(usize, String, WireVersion)> {
+        let eligible: Vec<(usize, String, WireVersion)> = self
+            .alive_addrs()
             .into_iter()
             .filter(|(id, _, _)| !exclude.contains(id))
             .collect();
@@ -236,7 +328,24 @@ impl ExecState {
             return None;
         }
         let i = self.rr.fetch_add(1, Ordering::Relaxed) % eligible.len();
-        Some(eligible[i])
+        Some(eligible[i].clone())
+    }
+
+    /// Whether ledger replication is active (a standby is configured).
+    fn replicating(&self) -> bool {
+        self.repl.is_some()
+    }
+
+    /// Append one op to the replicated ledger. No-op without a standby;
+    /// with one, the op gets the next sequence number and is handed to
+    /// the streamer thread (which owns the TCP connection and its
+    /// retries — this never blocks the caller).
+    fn ledger(&self, op: LedgerOp) {
+        if let Some(tx) = &self.repl {
+            let seq = self.ledger_seq.fetch_add(1, Ordering::Relaxed);
+            obs::global_metrics().counter("cluster.ledger_records").inc();
+            let _ = tx.send(Msg::Ledger(LedgerRecord { seq, op }));
+        }
     }
 }
 
@@ -246,9 +355,12 @@ impl ExecState {
 pub struct ClusterExec {
     state: Arc<ExecState>,
     results: Mutex<Receiver<ExecEvent>>,
+    /// A clone of the event sender, for [`ClusterExec::trigger_failover`].
+    events_tx: Sender<ExecEvent>,
     workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
     reader: Mutex<Option<std::thread::JoinHandle<()>>>,
     monitor: Mutex<Option<std::thread::JoinHandle<()>>>,
+    repl: Mutex<Option<std::thread::JoinHandle<()>>>,
     children: Mutex<Vec<std::process::Child>>,
 }
 
@@ -257,35 +369,60 @@ impl ClusterExec {
     /// monitor and the result reader, and launch any configured external
     /// worker processes (their Hello handshakes complete asynchronously —
     /// see [`ClusterExec::wait_for_workers`]).
+    ///
+    /// A cluster may start with zero workers (a takeover leader, or an
+    /// active leader waiting for external joins): chunks submitted before
+    /// the first Hello are parked as orphans and dealt on join.
     pub fn start(analyzer: Arc<dyn Analyzer>, cfg: &ClusterExecConfig) -> Result<ClusterExec> {
-        assert!(
-            cfg.workers + cfg.external_workers >= 1,
-            "cluster needs at least one worker"
-        );
         let leader_listener =
-            TcpListener::bind(("127.0.0.1", 0)).context("backend leader bind")?;
+            TcpListener::bind(cfg.listen.as_str()).context("backend leader bind")?;
+        ClusterExec::start_with_listener(analyzer, cfg, leader_listener)
+    }
+
+    /// [`ClusterExec::start`] on a pre-bound control listener. The
+    /// standby uses this at takeover: workers re-Hello the address they
+    /// were told about in Welcome, so the new leader must accept on
+    /// exactly that socket.
+    pub fn start_with_listener(
+        analyzer: Arc<dyn Analyzer>,
+        cfg: &ClusterExecConfig,
+        leader_listener: TcpListener,
+    ) -> Result<ClusterExec> {
         let leader_port = leader_listener.local_addr()?.port();
+        let leader_addr = format!("{}:{}", cfg.advertise_host, leader_port);
         let mut listeners = Vec::with_capacity(cfg.workers);
-        let mut ports = Vec::with_capacity(cfg.workers);
+        let mut peer_addrs = Vec::with_capacity(cfg.workers);
         for _ in 0..cfg.workers {
             let l = TcpListener::bind(("127.0.0.1", 0)).context("backend worker bind")?;
-            ports.push(l.local_addr()?.port());
+            peer_addrs.push(format!("127.0.0.1:{}", l.local_addr()?.port()));
             listeners.push(l);
         }
 
+        // Ledger replication: one streamer thread owns the standby
+        // connection so the dispatch path never blocks on it.
+        let (repl_tx, repl_handle) = match &cfg.standby {
+            Some(standby) => {
+                let (tx, rx) = channel::<Msg>();
+                let standby = standby.clone();
+                let h = std::thread::Builder::new()
+                    .name("exec-ledger-repl".to_string())
+                    .spawn(move || replication_loop(&standby, rx))?;
+                (Some(tx), Some(h))
+            }
+            None => (None, None),
+        };
+
         let state = Arc::new(ExecState {
-            leader_port,
+            leader_addr,
+            standby: cfg.standby.clone(),
+            repl: repl_tx,
+            ledger_seq: AtomicU64::new(1),
             max_missed: cfg.max_missed.max(1),
             workers: Mutex::new(
-                ports
+                peer_addrs
                     .iter()
                     .enumerate()
-                    .map(|(id, &port)| WorkerSlot {
-                        port,
-                        alive: true,
-                        missed: 0,
-                        wire: wire_for(id, cfg),
-                    })
+                    .map(|(id, addr)| WorkerSlot::new(addr.clone(), wire_for(id, cfg)))
                     .collect(),
             ),
             pending: Mutex::new(HashMap::new()),
@@ -298,12 +435,16 @@ impl ClusterExec {
             chunks_abandoned: AtomicUsize::new(0),
         });
 
+        // In-process workers talk to the leader over loopback no matter
+        // what host it advertises to external machines.
+        let local_leader = format!("127.0.0.1:{leader_port}");
         let mut workers = Vec::with_capacity(cfg.workers);
         for (id, listener) in listeners.into_iter().enumerate() {
             let wcfg = ExecWorkerConfig {
                 id,
-                ports: ports.clone(),
-                leader_port,
+                peers: peer_addrs.clone(),
+                link: Arc::new(WorkerLink::new(id, local_leader.clone(), None)),
+                advertise_host: "127.0.0.1".to_string(),
                 steal: cfg.steal,
                 seed: cfg.seed,
                 wire: wire_for(id, cfg),
@@ -326,6 +467,7 @@ impl ClusterExec {
         };
         let monitor = {
             let state = Arc::clone(&state);
+            let tx = tx.clone();
             let heartbeat = cfg.heartbeat.max(Duration::from_millis(1));
             std::thread::Builder::new()
                 .name("exec-leader-monitor".to_string())
@@ -345,7 +487,7 @@ impl ClusterExec {
             let mut cmd = std::process::Command::new(&program);
             cmd.arg("worker")
                 .arg("--connect")
-                .arg(format!("127.0.0.1:{leader_port}"))
+                .arg(&local_leader)
                 .args(&cfg.external_args);
             children.push(
                 cmd.spawn()
@@ -356,9 +498,11 @@ impl ClusterExec {
         Ok(ClusterExec {
             state,
             results: Mutex::new(rx),
+            events_tx: tx,
             workers: Mutex::new(workers),
             reader: Mutex::new(Some(reader)),
             monitor: Mutex::new(Some(monitor)),
+            repl: Mutex::new(repl_handle),
             children: Mutex::new(children),
         })
     }
@@ -370,13 +514,13 @@ impl ClusterExec {
 
     /// Workers currently believed alive.
     pub fn alive_workers(&self) -> usize {
-        self.state.alive_ports().len()
+        self.state.alive_addrs().len()
     }
 
-    /// The leader's control/result address, for `pyramidai worker
-    /// --connect` processes joining from outside.
+    /// The leader's advertised control/result address, for `pyramidai
+    /// worker --connect` processes joining from outside.
     pub fn leader_addr(&self) -> String {
-        format!("127.0.0.1:{}", self.state.leader_port)
+        self.state.leader_addr.clone()
     }
 
     /// Block until at least `n` workers are alive, or `timeout` lapses;
@@ -393,6 +537,14 @@ impl ClusterExec {
             }
             std::thread::sleep(Duration::from_millis(5));
         }
+    }
+
+    /// Chunks currently dealt to workers and awaiting completion (the
+    /// leader's pending map). Fault-injection tests poll this instead of
+    /// sleeping a fixed interval, so a kill is guaranteed to land while
+    /// the victim actually holds work.
+    pub fn pending_chunks(&self) -> usize {
+        self.state.pending.lock().unwrap().len()
     }
 
     /// What the recovery machinery has done so far.
@@ -433,8 +585,8 @@ impl ClusterExec {
         reqs: Vec<(u64, usize, Vec<crate::slide::tile::TileId>)>,
     ) -> Result<()> {
         // One entry per worker placed with chunks of this batch:
-        // (id, port, wire, its chunks in batch order).
-        let mut groups: Vec<(usize, u16, WireVersion, Vec<ChunkTask>)> = Vec::new();
+        // (id, addr, wire, its chunks in batch order).
+        let mut groups: Vec<(usize, String, WireVersion, Vec<ChunkTask>)> = Vec::new();
         for (key, level, tiles) in reqs {
             let trace = self.state.trace_seq.fetch_add(1, Ordering::Relaxed);
             let task = ChunkTask {
@@ -456,30 +608,37 @@ impl ClusterExec {
                     ("trace", trace.into()),
                     (
                         "worker",
-                        target.map(|(id, _, _)| id as i64).unwrap_or(-1).into(),
+                        target
+                            .as_ref()
+                            .map(|(id, _, _)| *id as i64)
+                            .unwrap_or(-1)
+                            .into(),
                     ),
                     ("level", level.into()),
                     ("tiles", task.tiles.len().into()),
                 ],
             );
+            if self.state.replicating() {
+                self.state.ledger(LedgerOp::Append(task.clone()));
+            }
             self.state.pending.lock().unwrap().insert(
                 key,
                 PendingChunk {
                     task: task.clone(),
-                    assigned: target.map(|(id, _, _)| id),
+                    assigned: target.as_ref().map(|(id, _, _)| *id),
                 },
             );
-            if let Some((id, port, wire)) = target {
+            if let Some((id, addr, wire)) = target {
                 match groups.iter_mut().find(|g| g.0 == id) {
                     Some(g) => g.3.push(task),
-                    None => groups.push((id, port, wire, vec![task])),
+                    None => groups.push((id, addr, wire, vec![task])),
                 }
             }
         }
         let mut buf = FrameBuf::new();
-        for (id, port, wire, tasks) in groups {
+        for (id, addr, wire, tasks) in groups {
             let keys: Vec<u64> = tasks.iter().map(|t| t.key).collect();
-            if send_chunks(port, wire, tasks, &mut buf).is_err() {
+            if send_chunks(&addr, wire, tasks, &mut buf).is_err() {
                 // The worker vanished mid-send: orphan the group; the
                 // monitor re-deals it once the death is confirmed or a
                 // new worker joins. (A chunk delivered before the failure
@@ -495,6 +654,62 @@ impl ClusterExec {
             }
         }
         Ok(())
+    }
+
+    /// Record the start of a run in the replicated ledger: the slide
+    /// recipe, thresholds, initial frontier and chunk size — everything
+    /// a standby needs to rebuild the run's `PyramidRun` from scratch.
+    /// Call before the first chunk of the run is submitted. No-op
+    /// without a standby.
+    pub fn register_run(
+        &self,
+        run: u64,
+        spec: &SlideSpec,
+        thresholds: &[f64],
+        initial: &[crate::slide::tile::TileId],
+        chunk: usize,
+    ) {
+        if self.state.replicating() {
+            self.state.ledger(LedgerOp::RunStart {
+                run,
+                spec: spec.clone(),
+                thresholds: thresholds.to_vec(),
+                initial: initial.to_vec(),
+                chunk: chunk as u64,
+            });
+        }
+    }
+
+    /// Record a run's completion in the replicated ledger, so a standby
+    /// taking over later does not re-execute it. No-op without a standby.
+    pub fn ledger_run_done(&self, run: u64) {
+        if self.state.replicating() {
+            self.state.ledger(LedgerOp::RunDone { run });
+        }
+    }
+
+    /// Failure injection (test/chaos hook): discard the leader's entire
+    /// dispatch state, as if this process had just taken over from a
+    /// crashed predecessor with no pending map. Every in-flight chunk is
+    /// dropped and a single [`ExecEvent::Failover`] tells dispatchers to
+    /// requeue all outstanding work. Returns the number of chunks
+    /// dropped.
+    pub fn trigger_failover(&self) -> usize {
+        let dropped = {
+            let mut pending = self.state.pending.lock().unwrap();
+            let n = pending.len();
+            pending.clear();
+            n
+        };
+        obs::global_metrics().counter("cluster.failovers").inc();
+        obs::event(
+            Level::Warn,
+            "cluster",
+            "failover_triggered",
+            &[("dropped", dropped.into())],
+        );
+        let _ = self.events_tx.send(ExecEvent::Failover);
+        dropped
     }
 
     /// Next completion-stream event; blocks until one arrives. `None`
@@ -516,7 +731,7 @@ impl ClusterExec {
         loop {
             match self.recv_event()? {
                 ExecEvent::Done { key, probs, .. } => return Some((key, probs)),
-                ExecEvent::Lost { .. } => continue,
+                ExecEvent::Lost { .. } | ExecEvent::Failover => continue,
             }
         }
     }
@@ -527,7 +742,7 @@ impl ClusterExec {
         loop {
             match self.try_event()? {
                 ExecEvent::Done { key, probs, .. } => return Some((key, probs)),
-                ExecEvent::Lost { .. } => continue,
+                ExecEvent::Lost { .. } | ExecEvent::Failover => continue,
             }
         }
     }
@@ -538,12 +753,12 @@ impl ClusterExec {
     /// heartbeat monitor's job. Returns whether the kill order could be
     /// delivered.
     pub fn kill_worker(&self, id: usize) -> bool {
-        let port = {
+        let addr = {
             let ws = self.state.workers.lock().unwrap();
-            ws.get(id).filter(|s| s.alive).map(|s| s.port)
+            ws.get(id).filter(|s| s.alive).map(|s| s.addr.clone())
         };
-        match port {
-            Some(p) => try_send(p, &Msg::Kill).is_ok(),
+        match addr {
+            Some(a) => try_send(&a, &Msg::Kill).is_ok(),
             None => false,
         }
     }
@@ -570,17 +785,17 @@ impl ClusterExec {
         if self.state.done.swap(true, Ordering::SeqCst) {
             return;
         }
-        // Shutdown goes to every *registered* port, dead ones included:
-        // try_send fails instantly on a truly dead listener, while a
-        // worker the heartbeat wrongly declared dead (a descheduled
-        // probe under load) is still a live thread that must hear
-        // Shutdown or the joins below would hang forever.
-        let ports: Vec<u16> = {
+        // Shutdown goes to every *registered* address, dead ones
+        // included: try_send fails instantly on a truly dead listener,
+        // while a worker the heartbeat wrongly declared dead (a
+        // descheduled probe under load) is still a live thread that must
+        // hear Shutdown or the joins below would hang forever.
+        let addrs: Vec<String> = {
             let ws = self.state.workers.lock().unwrap();
-            ws.iter().map(|s| s.port).collect()
+            ws.iter().map(|s| s.addr.clone()).collect()
         };
-        for port in ports {
-            let _ = try_send(port, &Msg::Shutdown);
+        for addr in addrs {
+            let _ = try_send(&addr, &Msg::Shutdown);
         }
         for h in self.workers.lock().unwrap().drain(..) {
             let _ = h.join();
@@ -595,6 +810,14 @@ impl ClusterExec {
         if let Some(h) = self.monitor.lock().unwrap().take() {
             let _ = h.join();
         }
+        // Tell the standby this was a *clean* shutdown (it must not take
+        // over), then let the streamer drain and exit.
+        if let Some(tx) = &self.state.repl {
+            let _ = tx.send(Msg::Shutdown);
+        }
+        if let Some(h) = self.repl.lock().unwrap().take() {
+            let _ = h.join();
+        }
     }
 }
 
@@ -607,10 +830,54 @@ impl Drop for ClusterExec {
 /// One connect attempt, no retry — for messages where a dead peer is an
 /// acceptable (or expected) outcome, unlike `send_to`'s 5-second
 /// patience.
-fn try_send(port: u16, msg: &Msg) -> Result<()> {
-    let mut stream = TcpStream::connect(("127.0.0.1", port))?;
+fn try_send(addr: &str, msg: &Msg) -> Result<()> {
+    let mut stream = TcpStream::connect(addr)?;
     stream.set_nodelay(true).ok();
     msg.write_to(&mut stream)
+}
+
+/// Stream ledger records to the standby over one long-lived connection,
+/// reconnecting with bounded patience. A record that cannot be delivered
+/// within ~2s is dropped (counted) — the standby's replay is
+/// gap-tolerant: an unreplicated Append simply re-executes, an
+/// unreplicated Ack re-analyzes, and determinism keeps the tree
+/// identical either way.
+fn replication_loop(standby: &str, rx: Receiver<Msg>) {
+    let mut conn: Option<TcpStream> = None;
+    let mut buf = FrameBuf::new();
+    while let Ok(msg) = rx.recv() {
+        let is_shutdown = matches!(msg, Msg::Shutdown);
+        let mut attempts = 0u32;
+        loop {
+            if conn.is_none() {
+                if let Ok(s) = TcpStream::connect(standby) {
+                    s.set_nodelay(true).ok();
+                    conn = Some(s);
+                }
+            }
+            if let Some(s) = conn.as_mut() {
+                if msg.write_wire(s, WireVersion::V2Binary, &mut buf).is_ok() {
+                    break;
+                }
+                conn = None; // stale stream: reconnect and retry
+            }
+            attempts += 1;
+            if attempts >= 20 {
+                obs::global_metrics().counter("cluster.ledger_dropped").inc();
+                obs::event(
+                    Level::Warn,
+                    "cluster",
+                    "ledger_record_dropped",
+                    &[("standby", standby.into())],
+                );
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(100));
+        }
+        if is_shutdown {
+            return;
+        }
+    }
 }
 
 /// Put one worker's group of chunks on the wire: a multi-chunk group on
@@ -618,7 +885,7 @@ fn try_send(port: u16, msg: &Msg) -> Result<()> {
 /// else as per-chunk frames (stopping at the first failure). `buf` is
 /// the caller's reused encode buffer.
 fn send_chunks(
-    port: u16,
+    addr: &str,
     wire: WireVersion,
     tasks: Vec<ChunkTask>,
     buf: &mut FrameBuf,
@@ -629,30 +896,30 @@ fn send_chunks(
             Level::Debug,
             "cluster",
             "chunk_batch_sent",
-            &[("port", port.into()), ("chunks", tasks.len().into())],
+            &[("addr", addr.into()), ("chunks", tasks.len().into())],
         );
-        send_wire_deadline(port, &Msg::ChunkBatch(tasks), wire, DEAL_PATIENCE, buf)
+        send_wire_deadline(addr, &Msg::ChunkBatch(tasks), wire, DEAL_PATIENCE, buf)
     } else {
         for task in tasks {
-            send_wire_deadline(port, &Msg::Chunk(task), wire, DEAL_PATIENCE, buf)?;
+            send_wire_deadline(addr, &Msg::Chunk(task), wire, DEAL_PATIENCE, buf)?;
         }
         Ok(())
     }
 }
 
-/// Liveness probe: Ping, expect Pong on the same stream.
-fn probe(port: u16, timeout: Duration) -> bool {
-    let Ok(mut stream) = TcpStream::connect(("127.0.0.1", port)) else {
-        return false;
-    };
+/// Liveness probe: Ping, expect Pong on the same stream. Returns the
+/// observed round-trip (connect to Pong) on success — the input to the
+/// adaptive per-worker timeout.
+fn probe(addr: &str, timeout: Duration) -> Option<Duration> {
+    let t0 = Instant::now();
+    let mut stream = TcpStream::connect(addr).ok()?;
     stream.set_nodelay(true).ok();
-    if stream.set_read_timeout(Some(timeout)).is_err() {
-        return false;
+    stream.set_read_timeout(Some(timeout)).ok()?;
+    Msg::Ping.write_to(&mut stream).ok()?;
+    match Msg::read_from(&mut stream) {
+        Ok(Msg::Pong) => Some(t0.elapsed()),
+        _ => None,
     }
-    if Msg::Ping.write_to(&mut stream).is_err() {
-        return false;
-    }
-    matches!(Msg::read_from(&mut stream), Ok(Msg::Pong))
 }
 
 /// Accept loop on the leader's control/result port: completions
@@ -692,6 +959,12 @@ fn leader_loop(listener: TcpListener, state: Arc<ExecState>, tx: Sender<ExecEven
                         );
                         if known {
                             obs::global_metrics().counter("cluster.chunks_done").inc();
+                            if state.replicating() {
+                                state.ledger(LedgerOp::Ack {
+                                    key,
+                                    probs: probs.clone(),
+                                });
+                            }
                             if tx.send(ExecEvent::Done { key, worker, probs }).is_err() {
                                 return; // every receiver gone
                             }
@@ -703,18 +976,16 @@ fn leader_loop(listener: TcpListener, state: Arc<ExecState>, tx: Sender<ExecEven
                             }
                         }
                     }
-                    Ok(Msg::Hello { port, wire }) => {
+                    Ok(Msg::Hello { host, port, wire }) => {
                         // Negotiation: the leader speaks both encodings,
                         // so the worker's proposal is accepted as-is (a
                         // pre-v2 peer omits the field and lands on v1).
+                        // Pre-cross-host peers omit the host and land on
+                        // loopback.
+                        let addr = format!("{host}:{port}");
                         let id = {
                             let mut ws = state.workers.lock().unwrap();
-                            ws.push(WorkerSlot {
-                                port,
-                                alive: true,
-                                missed: 0,
-                                wire,
-                            });
+                            ws.push(WorkerSlot::new(addr.clone(), wire));
                             ws.len() - 1
                         };
                         state.workers_joined.fetch_add(1, Ordering::Relaxed);
@@ -727,11 +998,23 @@ fn leader_loop(listener: TcpListener, state: Arc<ExecState>, tx: Sender<ExecEven
                             "worker_joined",
                             &[
                                 ("worker", id.into()),
-                                ("port", port.into()),
+                                ("addr", addr.into()),
                                 ("wire", (wire.as_u64() as i64).into()),
                             ],
                         );
-                        let _ = Msg::Welcome { id, wire }.write_to(&mut stream);
+                        let _ = Msg::Welcome {
+                            id,
+                            wire,
+                            standby: state.standby.clone(),
+                        }
+                        .write_to(&mut stream);
+                    }
+                    Ok(Msg::Ping) => {
+                        // Workers with a standby configured probe their
+                        // leader's liveness between chunks; answering
+                        // keeps them from re-Helloing away from a
+                        // healthy leader.
+                        let _ = Msg::Pong.write_to(&mut stream);
                     }
                     Ok(Msg::ChunkMoved { key, worker, trace }) => {
                         obs::global_metrics().counter("cluster.chunks_moved").inc();
@@ -766,21 +1049,34 @@ fn leader_loop(listener: TcpListener, state: Arc<ExecState>, tx: Sender<ExecEven
 /// Heartbeat monitor: probe live workers, declare the unresponsive dead
 /// (resubmitting their chunks), and re-deal orphaned chunks.
 fn monitor_loop(state: Arc<ExecState>, tx: Sender<ExecEvent>, heartbeat: Duration) {
-    // Localhost probe replies arrive in microseconds; the timeout only
-    // bounds a hung (rather than dead) peer.
-    let probe_timeout = heartbeat.max(Duration::from_millis(20)) * 4;
+    // Clamp bounds for the adaptive per-worker timeout: the floor keeps
+    // a sub-millisecond LAN estimate from flapping on one descheduled
+    // reply; the cap is the old fixed timeout, so the adaptive monitor
+    // is never *more* patient than the pre-adaptive one.
+    let floor = heartbeat.max(Duration::from_millis(20));
+    let cap = floor * 4;
     loop {
         std::thread::sleep(heartbeat);
         if state.done.load(Ordering::Acquire) {
             return;
         }
-        for (id, port, _) in state.alive_ports() {
+        for (id, addr, _) in state.alive_addrs() {
             if state.done.load(Ordering::Acquire) {
                 return;
             }
-            if probe(port, probe_timeout) {
+            let timeout = {
+                let ws = state.workers.lock().unwrap();
+                ws.get(id)
+                    .map(|s| s.probe_timeout(floor, cap))
+                    .unwrap_or(cap)
+            };
+            if let Some(rtt) = probe(&addr, timeout) {
+                obs::global_metrics()
+                    .histogram("cluster.probe_rtt_us")
+                    .record(rtt.as_micros() as u64);
                 if let Some(s) = state.workers.lock().unwrap().get_mut(id) {
                     s.missed = 0;
+                    s.observe_rtt(rtt);
                 }
                 continue;
             }
@@ -806,7 +1102,7 @@ fn monitor_loop(state: Arc<ExecState>, tx: Sender<ExecEvent>, heartbeat: Duratio
                     Level::Warn,
                     "cluster",
                     "worker_lost",
-                    &[("worker", id.into()), ("port", port.into())],
+                    &[("worker", id.into()), ("addr", addr.into())],
                 );
                 redeal_chunks(&state, &tx, Some(id));
             }
@@ -824,7 +1120,7 @@ fn monitor_loop(state: Arc<ExecState>, tx: Sender<ExecEvent>, heartbeat: Duratio
 /// dispatcher as [`ExecEvent::Lost`]; with no live worker at all it
 /// stays orphaned for a rejoin.
 fn redeal_chunks(state: &ExecState, tx: &Sender<ExecEvent>, dead: Option<usize>) {
-    let mut sends: Vec<(usize, u16, WireVersion, ChunkTask)> = Vec::new();
+    let mut sends: Vec<(usize, String, WireVersion, ChunkTask)> = Vec::new();
     let mut lost: Vec<(u64, u64)> = Vec::new();
     {
         let mut pending = state.pending.lock().unwrap();
@@ -844,12 +1140,12 @@ fn redeal_chunks(state: &ExecState, tx: &Sender<ExecEvent>, dead: Option<usize>)
                 }
             }
             match state.pick_worker(&p.task.exclude) {
-                Some((w, port, wire)) => {
+                Some((w, addr, wire)) => {
                     p.assigned = Some(w);
-                    sends.push((w, port, wire, p.task.clone()));
+                    sends.push((w, addr, wire, p.task.clone()));
                 }
                 None => {
-                    if state.alive_ports().is_empty() {
+                    if state.alive_addrs().is_empty() {
                         p.assigned = None; // orphan: wait for a rejoin
                     } else {
                         lost.push((key, p.task.trace)); // failed on every live worker
@@ -873,6 +1169,11 @@ fn redeal_chunks(state: &ExecState, tx: &Sender<ExecEvent>, dead: Option<usize>)
             "chunk_abandoned",
             &[("key", key.into()), ("trace", trace.into())],
         );
+        if state.replicating() {
+            // The dispatcher will requeue under a fresh key; tell the
+            // standby this one is no longer pending.
+            state.ledger(LedgerOp::Lost { key });
+        }
         let _ = tx.send(ExecEvent::Lost { key });
     }
 }
@@ -881,18 +1182,18 @@ fn redeal_chunks(state: &ExecState, tx: &Sender<ExecEvent>, dead: Option<usize>)
 /// the submit path (one [`Msg::ChunkBatch`] to a v2 worker getting
 /// several chunks); failures re-orphan (and are not counted — the
 /// eventual successful re-deal is the one logical resubmission).
-fn deliver(state: &ExecState, sends: Vec<(usize, u16, WireVersion, ChunkTask)>) {
-    let mut groups: Vec<(usize, u16, WireVersion, Vec<ChunkTask>)> = Vec::new();
-    for (worker, port, wire, task) in sends {
+fn deliver(state: &ExecState, sends: Vec<(usize, String, WireVersion, ChunkTask)>) {
+    let mut groups: Vec<(usize, String, WireVersion, Vec<ChunkTask>)> = Vec::new();
+    for (worker, addr, wire, task) in sends {
         match groups.iter_mut().find(|g| g.0 == worker) {
             Some(g) => g.3.push(task),
-            None => groups.push((worker, port, wire, vec![task])),
+            None => groups.push((worker, addr, wire, vec![task])),
         }
     }
     let mut buf = FrameBuf::new();
-    for (worker, port, wire, tasks) in groups {
+    for (worker, addr, wire, tasks) in groups {
         let meta: Vec<(u64, u64)> = tasks.iter().map(|t| (t.key, t.trace)).collect();
-        if send_chunks(port, wire, tasks, &mut buf).is_ok() {
+        if send_chunks(&addr, wire, tasks, &mut buf).is_ok() {
             for (key, trace) in meta {
                 state.chunks_resubmitted.fetch_add(1, Ordering::Relaxed);
                 obs::global_metrics()
@@ -922,10 +1223,107 @@ fn deliver(state: &ExecState, sends: Vec<(usize, u16, WireVersion, ChunkTask)>) 
     }
 }
 
+/// A worker's view of its control plane: current leader address, the
+/// advertised standby (if any) and the id this worker holds under the
+/// current leader. Re-Helloing a standby swaps all three atomically
+/// enough for a single-threaded compute loop (the fields are only read
+/// between chunks).
+struct WorkerLink {
+    id: AtomicUsize,
+    leader: Mutex<String>,
+    standby: Mutex<Option<String>>,
+}
+
+impl WorkerLink {
+    fn new(id: usize, leader: String, standby: Option<String>) -> WorkerLink {
+        WorkerLink {
+            id: AtomicUsize::new(id),
+            leader: Mutex::new(leader),
+            standby: Mutex::new(standby),
+        }
+    }
+
+    fn id(&self) -> usize {
+        self.id.load(Ordering::Acquire)
+    }
+
+    fn leader(&self) -> String {
+        self.leader.lock().unwrap().clone()
+    }
+
+    fn standby(&self) -> Option<String> {
+        self.standby.lock().unwrap().clone()
+    }
+
+    /// Adopt a new leader after a successful re-Hello: the old standby
+    /// becomes the leader, the Welcome names the next standby (if the
+    /// new leader has one) and this worker's fresh id.
+    fn adopt(&self, id: usize, leader: String, standby: Option<String>) {
+        *self.leader.lock().unwrap() = leader;
+        *self.standby.lock().unwrap() = standby;
+        self.id.store(id, Ordering::Release);
+    }
+}
+
+/// Re-register with the advertised standby leader. On success the link
+/// points at the new leader (with a fresh worker id) and `true` is
+/// returned; any failure (no standby, not yet taken over, connect
+/// refused) leaves the link untouched.
+fn rehello(link: &WorkerLink, host: &str, port: u16, wire: WireVersion) -> bool {
+    let Some(standby) = link.standby() else {
+        return false;
+    };
+    let Ok(mut stream) = TcpStream::connect(standby.as_str()) else {
+        return false;
+    };
+    stream.set_nodelay(true).ok();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(2)))
+        .ok();
+    if (Msg::Hello {
+        host: host.to_string(),
+        port,
+        wire,
+    })
+    .write_to(&mut stream)
+    .is_err()
+    {
+        return false;
+    }
+    match Msg::read_from(&mut stream) {
+        Ok(Msg::Welcome {
+            id,
+            standby: next, ..
+        }) => {
+            obs::global_metrics()
+                .counter("cluster.failover_rehellos")
+                .inc();
+            obs::event(
+                Level::Warn,
+                "cluster",
+                "worker_rehello",
+                &[
+                    ("old_worker", link.id().into()),
+                    ("worker", id.into()),
+                    ("leader", standby.clone().into()),
+                ],
+            );
+            link.adopt(id, standby, next);
+            true
+        }
+        _ => false,
+    }
+}
+
 struct ExecWorkerConfig {
     id: usize,
-    ports: Vec<u16>,
-    leader_port: u16,
+    /// Steal-victim listen addresses (in-process peers only; joined
+    /// workers do not steal).
+    peers: Vec<String>,
+    /// Shared control-plane view (leader, standby, current id).
+    link: Arc<WorkerLink>,
+    /// Host this worker advertises in a (re-)Hello.
+    advertise_host: String,
     steal: bool,
     seed: u64,
     /// Negotiated wire encoding for this worker's uploads to the leader.
@@ -948,6 +1346,7 @@ fn run_exec_worker(cfg: ExecWorkerConfig, listener: TcpListener, analyzer: Arc<d
         idle: AtomicBool::new(true),
         killed: AtomicBool::new(false),
     });
+    let my_port = listener.local_addr().map(|a| a.port()).unwrap_or(0);
     if listener.set_nonblocking(true).is_err() {
         return;
     }
@@ -964,6 +1363,11 @@ fn run_exec_worker(cfg: ExecWorkerConfig, listener: TcpListener, analyzer: Arc<d
     let mut slides: HashMap<String, Slide> = HashMap::new();
     let mut rng = Pcg32::new(cfg.seed ^ ((cfg.id as u64) << 32) ^ 0xC1C1);
     let mut idle_streak: u32 = 0;
+    // Leader-liveness probing (only meaningful with a standby to fail
+    // over to): consecutive failed probes before re-Helloing.
+    const PROBE_FAIL_LIMIT: u32 = 3;
+    let mut last_probe = Instant::now();
+    let mut probe_fails: u32 = 0;
     // One encode buffer for every hot frame this worker ever uploads —
     // zero steady-state allocation on the v2 wire (DESIGN.md §14).
     let mut wire_buf = FrameBuf::new();
@@ -1024,36 +1428,61 @@ fn run_exec_worker(cfg: ExecWorkerConfig, listener: TcpListener, analyzer: Arc<d
                 // strand the dispatcher's run until the heartbeat declares
                 // this worker dead. send_to retries with backoff for 5s;
                 // on top of that, keep trying for as long as the cluster
-                // is alive (failure with the leader still up means
-                // transient congestion, not loss).
-                let msg = Msg::ChunkDone {
+                // is alive. With a standby configured, a persistently
+                // unreachable leader triggers a re-Hello there: the new
+                // leader has replayed this chunk from the ledger and will
+                // either accept the completion or re-deal the work.
+                let mut msg = Msg::ChunkDone {
                     key: t.key,
-                    worker: cfg.id,
+                    worker: cfg.link.id(),
                     probs,
                     trace: t.trace,
                 };
-                while send_wire(cfg.leader_port, &msg, cfg.wire, &mut wire_buf).is_err() {
+                let mut upload_fails = 0u32;
+                // With a standby to fail over to, give up on each
+                // attempt quickly — the 5s default patience would delay
+                // takeover by PROBE_FAIL_LIMIT × 5s.
+                let patience = if cfg.link.standby().is_some() {
+                    Duration::from_millis(300)
+                } else {
+                    Duration::from_secs(5)
+                };
+                while send_wire_deadline(&cfg.link.leader(), &msg, cfg.wire, patience, &mut wire_buf)
+                    .is_err()
+                {
                     if shared.done.load(Ordering::Acquire) {
                         break; // shutting down: the dispatcher is gone
                     }
+                    upload_fails += 1;
+                    if upload_fails >= PROBE_FAIL_LIMIT
+                        && rehello(&cfg.link, &cfg.advertise_host, my_port, cfg.wire)
+                    {
+                        upload_fails = 0;
+                        if let Msg::ChunkDone { worker, .. } = &mut msg {
+                            *worker = cfg.link.id();
+                        }
+                        continue;
+                    }
                     std::thread::sleep(Duration::from_millis(10));
                 }
+                probe_fails = 0;
+                last_probe = Instant::now();
             }
             None => {
                 shared.idle.store(true, Ordering::Release);
                 if shared.done.load(Ordering::Acquire) {
                     break;
                 }
-                if cfg.steal && cfg.ports.len() > 1 {
+                if cfg.steal && cfg.peers.len() > 1 {
                     let victim = {
-                        let v = rng.usize_range(0, cfg.ports.len() - 1);
+                        let v = rng.usize_range(0, cfg.peers.len() - 1);
                         if v >= cfg.id {
                             v + 1
                         } else {
                             v
                         }
                     };
-                    if let Ok((Some(task), _)) = request_chunk_steal(cfg.ports[victim], cfg.id) {
+                    if let Ok((Some(task), _)) = request_chunk_steal(&cfg.peers[victim], cfg.id) {
                         obs::global_metrics().counter("cluster.chunks_stolen").inc();
                         obs::event(
                             Level::Debug,
@@ -1069,10 +1498,10 @@ fn run_exec_worker(cfg: ExecWorkerConfig, listener: TcpListener, analyzer: Arc<d
                         // Tell the leader the chunk moved, so a future
                         // death of *this* worker resubmits it (§10).
                         let _ = send_wire(
-                            cfg.leader_port,
+                            &cfg.link.leader(),
                             &Msg::ChunkMoved {
                                 key: task.key,
-                                worker: cfg.id,
+                                worker: cfg.link.id(),
                                 trace: task.trace,
                             },
                             cfg.wire,
@@ -1080,6 +1509,25 @@ fn run_exec_worker(cfg: ExecWorkerConfig, listener: TcpListener, analyzer: Arc<d
                         );
                         shared.queue.lock().unwrap().push_back(task);
                         continue;
+                    }
+                }
+                // Idle leader-liveness probing: an idle worker would
+                // otherwise never notice its leader died (nothing to
+                // upload), leaving it stranded while the standby waits
+                // for workers. Only bother when there is a standby.
+                if cfg.link.standby().is_some()
+                    && last_probe.elapsed() >= Duration::from_millis(100)
+                {
+                    last_probe = Instant::now();
+                    if probe(&cfg.link.leader(), Duration::from_millis(500)).is_some() {
+                        probe_fails = 0;
+                    } else {
+                        probe_fails += 1;
+                        if probe_fails >= PROBE_FAIL_LIMIT
+                            && rehello(&cfg.link, &cfg.advertise_host, my_port, cfg.wire)
+                        {
+                            probe_fails = 0;
+                        }
                     }
                 }
                 // Exponential backoff while idle: persistent workers sit
@@ -1156,8 +1604,8 @@ fn exec_listen_loop(listener: TcpListener, shared: Arc<ExecShared>) {
     }
 }
 
-fn request_chunk_steal(victim_port: u16, thief: usize) -> Result<(Option<ChunkTask>, bool)> {
-    let mut stream = TcpStream::connect(("127.0.0.1", victim_port))?;
+fn request_chunk_steal(victim: &str, thief: usize) -> Result<(Option<ChunkTask>, bool)> {
+    let mut stream = TcpStream::connect(victim)?;
     stream.set_nodelay(true).ok();
     stream.set_read_timeout(Some(Duration::from_secs(30)))?;
     Msg::ChunkSteal { thief }.write_to(&mut stream)?;
@@ -1168,36 +1616,44 @@ fn request_chunk_steal(victim_port: u16, thief: usize) -> Result<(Option<ChunkTa
 }
 
 /// Run one standalone worker process against a leader at `addr`
-/// (`host:port`, localhost in practice — the chunk protocol addresses
-/// workers by port on 127.0.0.1). Binds a fresh listener, registers
-/// through the [`Msg::Hello`]/[`Msg::Welcome`] handshake, then serves
-/// chunks until the leader says [`Msg::Shutdown`] (or a [`Msg::Kill`]
-/// crash order arrives). This is what `pyramidai worker --connect` runs.
+/// (`host:port`). Binds a fresh listener, registers through the
+/// [`Msg::Hello`]/[`Msg::Welcome`] handshake (advertising
+/// `advertise_host` as its reachable host — loopback for same-machine
+/// clusters), then serves chunks until the leader says [`Msg::Shutdown`]
+/// (or a [`Msg::Kill`] crash order arrives). If the Welcome named a
+/// standby leader, the worker re-Hellos there whenever its leader stops
+/// answering — the §15 failover path. This is what `pyramidai worker
+/// --connect` runs.
 pub fn run_standalone_worker(
     addr: &str,
+    advertise_host: &str,
     analyzer: Arc<dyn Analyzer>,
     seed: u64,
     wire: WireVersion,
 ) -> Result<usize> {
-    let leader_port: u16 = addr
-        .rsplit(':')
-        .next()
-        .and_then(|p| p.parse().ok())
-        .with_context(|| format!("no port in leader address {addr:?}"))?;
-    let listener = TcpListener::bind(("127.0.0.1", 0)).context("worker bind")?;
+    // A worker advertising loopback can only ever be reached from its
+    // own machine, so binding loopback is exact; advertising anything
+    // else means cross-host traffic, so listen on every interface.
+    let bind_host = if advertise_host == "127.0.0.1" {
+        "127.0.0.1"
+    } else {
+        "0.0.0.0"
+    };
+    let listener = TcpListener::bind((bind_host, 0)).context("worker bind")?;
     let my_port = listener.local_addr()?.port();
     let mut stream = TcpStream::connect(addr).with_context(|| format!("connect leader {addr}"))?;
     stream.set_nodelay(true).ok();
     stream.set_read_timeout(Some(Duration::from_secs(30))).ok();
     Msg::Hello {
+        host: advertise_host.to_string(),
         port: my_port,
         wire,
     }
     .write_to(&mut stream)?;
     // Adopt the leader's negotiated encoding (a pre-v2 leader's Welcome
     // carries no wire field and parses as v1, so uploads stay JSON).
-    let (id, wire) = match Msg::read_from(&mut stream)? {
-        Msg::Welcome { id, wire } => (id, wire),
+    let (id, wire, standby) = match Msg::read_from(&mut stream)? {
+        Msg::Welcome { id, wire, standby } => (id, wire, standby),
         other => anyhow::bail!("unexpected handshake reply {other:?}"),
     };
     drop(stream);
@@ -1210,13 +1666,15 @@ pub fn run_standalone_worker(
             ("worker", id.into()),
             ("port", my_port.into()),
             ("leader", addr.into()),
+            ("standby", standby.clone().unwrap_or_default().into()),
             ("wire", wire.as_u64().into()),
         ],
     );
     let cfg = ExecWorkerConfig {
         id,
-        ports: Vec::new(), // external workers do not steal
-        leader_port,
+        peers: Vec::new(), // external workers do not steal
+        link: Arc::new(WorkerLink::new(id, addr.to_string(), standby)),
+        advertise_host: advertise_host.to_string(),
         steal: false,
         seed,
         wire,
@@ -1234,7 +1692,14 @@ pub fn run_standalone_worker(
 pub struct ClusterBackend {
     exec: Arc<ClusterExec>,
     spec: SlideSpec,
-    in_flight: usize,
+    /// Run-id namespace for routing keys: submissions go out as
+    /// `pack_key(run, req.id)` and completions are unpacked back. Run 0
+    /// leaves request ids unchanged (single-run clusters), matching the
+    /// service scheduler's job/request packing for shared clusters.
+    run: u64,
+    /// Packed keys submitted and not yet completed or lost — the set a
+    /// [`ExecEvent::Failover`] converts to losses wholesale.
+    submitted: HashSet<u64>,
     lost: Vec<RequestId>,
     /// Requests dispatched since the last poll, staged so one frontier
     /// expansion becomes one [`ClusterExec::submit_batch`] call (batched
@@ -1251,13 +1716,25 @@ impl ClusterBackend {
         analyzer: Arc<dyn Analyzer>,
         cfg: &ClusterExecConfig,
     ) -> Result<ClusterBackend> {
-        Ok(ClusterBackend {
-            exec: Arc::new(ClusterExec::start(analyzer, cfg)?),
+        Ok(ClusterBackend::with_exec(
+            Arc::new(ClusterExec::start(analyzer, cfg)?),
             spec,
-            in_flight: 0,
+            0,
+        ))
+    }
+
+    /// Drive one slide's run over an existing cluster, with routing keys
+    /// namespaced under `run`. This is how a standby leader resumes
+    /// replayed runs (one at a time) over its takeover cluster.
+    pub fn with_exec(exec: Arc<ClusterExec>, spec: SlideSpec, run: u64) -> ClusterBackend {
+        ClusterBackend {
+            exec,
+            spec,
+            run,
+            submitted: HashSet::new(),
             lost: Vec::new(),
             staged: Vec::new(),
-        })
+        }
     }
 
     /// The underlying cluster handle. Sharing one cluster between many
@@ -1280,18 +1757,19 @@ impl ExecutionBackend for ClusterBackend {
         // Stage, don't send: the driver dispatches a whole frontier
         // expansion before polling, and the flush in `poll` turns those
         // requests into grouped per-worker deliveries.
-        self.staged.push((req.id, req.level, req.tiles));
-        self.in_flight += 1;
+        self.staged
+            .push((pack_key(self.run, req.id), req.level, req.tiles));
     }
 
     fn poll(&mut self, block: bool) -> Option<Completion> {
         if !self.staged.is_empty() {
             let reqs = std::mem::take(&mut self.staged);
+            self.submitted.extend(reqs.iter().map(|(k, _, _)| *k));
             self.exec
                 .submit_batch(&self.spec, reqs)
                 .expect("cluster chunk submission");
         }
-        while self.in_flight > 0 {
+        while !self.submitted.is_empty() {
             let ev = if block {
                 self.exec.recv_event()
             } else {
@@ -1299,14 +1777,30 @@ impl ExecutionBackend for ClusterBackend {
             };
             match ev {
                 Some(ExecEvent::Done { key, probs, .. }) => {
-                    self.in_flight -= 1;
-                    return Some(Completion { id: key, probs });
+                    // Stale events of another run (possible on a shared
+                    // post-takeover cluster) are not ours to count.
+                    if run_of(key) != self.run || !self.submitted.remove(&key) {
+                        continue;
+                    }
+                    return Some(Completion {
+                        id: req_of(key),
+                        probs,
+                    });
                 }
                 Some(ExecEvent::Lost { key }) => {
                     // No longer in flight; the driver requeues it via
                     // take_lost and re-dispatches.
-                    self.in_flight -= 1;
-                    self.lost.push(key);
+                    if run_of(key) != self.run || !self.submitted.remove(&key) {
+                        continue;
+                    }
+                    self.lost.push(req_of(key));
+                }
+                Some(ExecEvent::Failover) => {
+                    // The leader's dispatch state is gone: everything we
+                    // had in flight must be requeued and re-dispatched.
+                    for key in self.submitted.drain() {
+                        self.lost.push(req_of(key));
+                    }
                 }
                 None => return None,
             }
@@ -1315,7 +1809,7 @@ impl ExecutionBackend for ClusterBackend {
     }
 
     fn in_flight(&self) -> usize {
-        self.in_flight
+        self.staged.len() + self.submitted.len()
     }
 
     fn take_lost(&mut self) -> Vec<RequestId> {
@@ -1476,6 +1970,7 @@ mod tests {
                     assert!(got.insert(key, probs).is_none(), "duplicate key {key}");
                 }
                 ExecEvent::Lost { key } => panic!("chunk {key} abandoned with a live worker"),
+                ExecEvent::Failover => panic!("no failover was triggered"),
             }
         }
         let stats = exec.fault_stats();
@@ -1515,7 +2010,7 @@ mod tests {
         let addr = exec.leader_addr();
         let worker_analyzer = Arc::clone(&analyzer);
         let joiner = std::thread::spawn(move || {
-            run_standalone_worker(&addr, worker_analyzer, 77, WireVersion::V2Binary)
+            run_standalone_worker(&addr, "127.0.0.1", worker_analyzer, 77, WireVersion::V2Binary)
                 .expect("standalone worker")
         });
         assert!(
@@ -1547,5 +2042,139 @@ mod tests {
         exec.shutdown();
         let id = joiner.join().expect("worker thread");
         assert_eq!(id, 1, "first joined worker gets the next id");
+    }
+
+    #[test]
+    fn batch_send_failure_reorphans_and_redeals() {
+        // PR 8's grouped delivery has a failure path: a worker that dies
+        // between placement and send gets its whole ChunkBatch group
+        // re-orphaned. Forge such a worker by Hello-ing with a
+        // bound-then-dropped port: placement succeeds, delivery cannot.
+        // Every chunk must still complete exactly once via the monitor's
+        // re-deal to the real worker.
+        let analyzer: Arc<dyn Analyzer> = Arc::new(OracleAnalyzer::new(1));
+        let exec = ClusterExec::start(
+            Arc::clone(&analyzer),
+            &ClusterExecConfig {
+                workers: 1,
+                steal: false,
+                seed: 3,
+                heartbeat: Duration::from_millis(10),
+                max_missed: 1,
+                ..ClusterExecConfig::default()
+            },
+        )
+        .unwrap();
+        let dead_port = {
+            let l = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+            l.local_addr().unwrap().port()
+        }; // listener dropped: connects now fail instantly
+        let mut hello = TcpStream::connect(exec.leader_addr()).unwrap();
+        Msg::Hello {
+            host: "127.0.0.1".to_string(),
+            port: dead_port,
+            wire: WireVersion::V2Binary,
+        }
+        .write_to(&mut hello)
+        .unwrap();
+        let welcomed = matches!(Msg::read_from(&mut hello), Ok(Msg::Welcome { .. }));
+        assert!(welcomed, "forged worker must register");
+        drop(hello);
+        exec.wait_for_workers(2, Duration::from_secs(5));
+
+        let sp = spec(440);
+        let slide = Slide::from_spec(sp.clone());
+        let tiles = slide.level_tile_ids(2);
+        let chunks: Vec<_> = tiles.chunks(2).map(|c| c.to_vec()).collect();
+        let n = chunks.len();
+        assert!(n >= 4, "need several chunks so both workers are dealt to");
+        // One submit_batch call: the round-robin spreads the chunks over
+        // the live worker and the forged dead one, whose group delivery
+        // fails and re-orphans.
+        exec.submit_batch(
+            &sp,
+            chunks
+                .into_iter()
+                .enumerate()
+                .map(|(i, c)| (i as u64, 2usize, c))
+                .collect(),
+        )
+        .unwrap();
+        let mut got: HashMap<u64, Vec<f32>> = HashMap::new();
+        while got.len() < n {
+            match exec.recv_event().expect("cluster alive") {
+                ExecEvent::Done { key, probs, .. } => {
+                    assert!(got.insert(key, probs).is_none(), "duplicate key {key}");
+                }
+                ExecEvent::Lost { key } => panic!("chunk {key} abandoned with a live worker"),
+                ExecEvent::Failover => panic!("no failover was triggered"),
+            }
+        }
+        for (key, probs) in &got {
+            let start = *key as usize * 2;
+            let want = analyzer.analyze(&slide, 2, &tiles[start..start + probs.len()]);
+            assert_eq!(probs, &want, "chunk {key}");
+        }
+        exec.shutdown();
+    }
+
+    #[test]
+    fn rejoin_racing_resubmission_completes_every_chunk() {
+        // A worker dies mid-run while a fresh standalone worker joins
+        // concurrently — the §10 rejoin racing the monitor's
+        // resubmission sweep. Whatever interleaving the scheduler picks,
+        // each key must complete exactly once and with correct probs.
+        let analyzer: Arc<dyn Analyzer> = Arc::new(DelayAnalyzer::new(
+            OracleAnalyzer::new(1),
+            Duration::from_millis(3),
+        ));
+        let exec = Arc::new(
+            ClusterExec::start(
+                Arc::clone(&analyzer),
+                &ClusterExecConfig {
+                    workers: 2,
+                    steal: false,
+                    seed: 17,
+                    heartbeat: Duration::from_millis(10),
+                    max_missed: 2,
+                    ..ClusterExecConfig::default()
+                },
+            )
+            .unwrap(),
+        );
+        let sp = spec(450);
+        let slide = Slide::from_spec(sp.clone());
+        let tiles = slide.level_tile_ids(2);
+        let chunks: Vec<_> = tiles.chunks(2).map(|c| c.to_vec()).collect();
+        let n = chunks.len();
+        for (i, c) in chunks.into_iter().enumerate() {
+            exec.submit(i as u64, &sp, 2, c).unwrap();
+        }
+        // Kill one holder and immediately join a replacement, so the
+        // resubmission sweep and the Hello handshake race.
+        assert!(exec.kill_worker(0));
+        let addr = exec.leader_addr();
+        let worker_analyzer = Arc::clone(&analyzer);
+        let joiner = std::thread::spawn(move || {
+            run_standalone_worker(&addr, "127.0.0.1", worker_analyzer, 23, WireVersion::V2Binary)
+        });
+        let mut got: HashMap<u64, Vec<f32>> = HashMap::new();
+        while got.len() < n {
+            match exec.recv_event().expect("cluster alive") {
+                ExecEvent::Done { key, probs, .. } => {
+                    assert!(got.insert(key, probs).is_none(), "duplicate key {key}");
+                }
+                ExecEvent::Lost { key } => panic!("chunk {key} abandoned with live workers"),
+                ExecEvent::Failover => panic!("no failover was triggered"),
+            }
+        }
+        for (key, probs) in &got {
+            let start = *key as usize * 2;
+            let want = analyzer.analyze(&slide, 2, &tiles[start..start + probs.len()]);
+            assert_eq!(probs, &want, "chunk {key}");
+        }
+        assert_eq!(exec.fault_stats().workers_joined, 1);
+        exec.shutdown();
+        joiner.join().expect("worker thread").expect("worker ok");
     }
 }

@@ -38,6 +38,13 @@
 //! CHUNK_DONE(2)  := key:u64 worker:u64 trace:u64 count:u32 (prob:f32)*
 //! CHUNK_MOVED(3) := key:u64 worker:u64 trace:u64
 //! CHUNK_BATCH(4) := count:u32 chunk*
+//! LEDGER(5)      := seq:u64 op:u8 op-payload
+//!   op 0 RunStart := run:u64 chunk:u64 spec
+//!                    count:u32 (thr:f64)* count:u32 (level:u8 tx:u32 ty:u32)*
+//!   op 1 Append   := chunk
+//!   op 2 Ack      := key:u64 count:u32 (prob:f32)*
+//!   op 3 Lost     := key:u64
+//!   op 4 RunDone  := run:u64
 //! ```
 //!
 //! # Hardening invariants
@@ -61,6 +68,7 @@ use thiserror::Error;
 use crate::slide::tile::TileId;
 use crate::synth::slide_gen::{SlideKind, SlideSpec};
 
+use super::ledger::{LedgerOp, LedgerRecord};
 use super::proto::{ChunkTask, Msg};
 
 /// First byte of every v2 body. Distinct from `{` (0x7B), the first byte
@@ -77,6 +85,21 @@ pub const TAG_CHUNK_DONE: u8 = 2;
 pub const TAG_CHUNK_MOVED: u8 = 3;
 /// Tag byte: [`Msg::ChunkBatch`].
 pub const TAG_CHUNK_BATCH: u8 = 4;
+/// Tag byte: [`Msg::Ledger`] — replicated-ledger records streamed from
+/// the active leader to its standby (DESIGN.md §15). Purely additive:
+/// the PR 8 chunk layouts are frozen byte-for-byte.
+pub const TAG_LEDGER: u8 = 5;
+
+/// Op byte: [`LedgerOp::RunStart`].
+const LOP_RUN_START: u8 = 0;
+/// Op byte: [`LedgerOp::Append`].
+const LOP_APPEND: u8 = 1;
+/// Op byte: [`LedgerOp::Ack`].
+const LOP_ACK: u8 = 2;
+/// Op byte: [`LedgerOp::Lost`].
+const LOP_LOST: u8 = 3;
+/// Op byte: [`LedgerOp::RunDone`].
+const LOP_RUN_DONE: u8 = 4;
 
 /// Minimum encoded size of one tile (level:u8 tx:u32 ty:u32).
 const TILE_BYTES: usize = 9;
@@ -149,11 +172,7 @@ fn kind_from(code: u8) -> Result<SlideKind, FrameError> {
     }
 }
 
-fn put_chunk(buf: &mut Vec<u8>, c: &ChunkTask) {
-    buf.extend_from_slice(&c.key.to_le_bytes());
-    buf.extend_from_slice(&c.trace.to_le_bytes());
-    buf.extend_from_slice(&(c.level as u32).to_le_bytes());
-    let s = &c.spec;
+fn put_spec(buf: &mut Vec<u8>, s: &SlideSpec) {
     buf.extend_from_slice(&s.seed.to_le_bytes());
     buf.extend_from_slice(&(s.tiles_x as u32).to_le_bytes());
     buf.extend_from_slice(&(s.tiles_y as u32).to_le_bytes());
@@ -166,15 +185,75 @@ fn put_chunk(buf: &mut Vec<u8>, c: &ChunkTask) {
     debug_assert!(id.len() <= u16::MAX as usize, "slide id too long for wire");
     buf.extend_from_slice(&(id.len().min(u16::MAX as usize) as u16).to_le_bytes());
     buf.extend_from_slice(&id[..id.len().min(u16::MAX as usize)]);
-    buf.extend_from_slice(&(c.tiles.len() as u32).to_le_bytes());
-    for t in &c.tiles {
+}
+
+fn put_tiles(buf: &mut Vec<u8>, tiles: &[TileId]) {
+    buf.extend_from_slice(&(tiles.len() as u32).to_le_bytes());
+    for t in tiles {
         buf.push(t.level);
         buf.extend_from_slice(&t.tx.to_le_bytes());
         buf.extend_from_slice(&t.ty.to_le_bytes());
     }
+}
+
+fn put_probs(buf: &mut Vec<u8>, probs: &[f32]) {
+    buf.extend_from_slice(&(probs.len() as u32).to_le_bytes());
+    // Raw little-endian f32 — no text round-trip, no per-element
+    // allocation.
+    for p in probs {
+        buf.extend_from_slice(&p.to_le_bytes());
+    }
+}
+
+fn put_chunk(buf: &mut Vec<u8>, c: &ChunkTask) {
+    buf.extend_from_slice(&c.key.to_le_bytes());
+    buf.extend_from_slice(&c.trace.to_le_bytes());
+    buf.extend_from_slice(&(c.level as u32).to_le_bytes());
+    put_spec(buf, &c.spec);
+    put_tiles(buf, &c.tiles);
     buf.extend_from_slice(&(c.exclude.len() as u32).to_le_bytes());
     for &w in &c.exclude {
         buf.extend_from_slice(&(w as u64).to_le_bytes());
+    }
+}
+
+fn put_ledger(buf: &mut Vec<u8>, rec: &LedgerRecord) {
+    buf.extend_from_slice(&rec.seq.to_le_bytes());
+    match &rec.op {
+        LedgerOp::RunStart {
+            run,
+            spec,
+            thresholds,
+            initial,
+            chunk,
+        } => {
+            buf.push(LOP_RUN_START);
+            buf.extend_from_slice(&run.to_le_bytes());
+            buf.extend_from_slice(&chunk.to_le_bytes());
+            put_spec(buf, spec);
+            buf.extend_from_slice(&(thresholds.len() as u32).to_le_bytes());
+            for t in thresholds {
+                buf.extend_from_slice(&t.to_le_bytes());
+            }
+            put_tiles(buf, initial);
+        }
+        LedgerOp::Append(task) => {
+            buf.push(LOP_APPEND);
+            put_chunk(buf, task);
+        }
+        LedgerOp::Ack { key, probs } => {
+            buf.push(LOP_ACK);
+            buf.extend_from_slice(&key.to_le_bytes());
+            put_probs(buf, probs);
+        }
+        LedgerOp::Lost { key } => {
+            buf.push(LOP_LOST);
+            buf.extend_from_slice(&key.to_le_bytes());
+        }
+        LedgerOp::RunDone { run } => {
+            buf.push(LOP_RUN_DONE);
+            buf.extend_from_slice(&run.to_le_bytes());
+        }
     }
 }
 
@@ -197,12 +276,7 @@ pub fn encode_body(msg: &Msg, buf: &mut Vec<u8>) -> bool {
             buf.extend_from_slice(&key.to_le_bytes());
             buf.extend_from_slice(&(*worker as u64).to_le_bytes());
             buf.extend_from_slice(&trace.to_le_bytes());
-            buf.extend_from_slice(&(probs.len() as u32).to_le_bytes());
-            // Raw little-endian f32 — no text round-trip, no per-element
-            // allocation.
-            for p in probs {
-                buf.extend_from_slice(&p.to_le_bytes());
-            }
+            put_probs(buf, probs);
         }
         Msg::ChunkMoved { key, worker, trace } => {
             buf.extend_from_slice(&[MAGIC, VERSION, TAG_CHUNK_MOVED]);
@@ -216,6 +290,10 @@ pub fn encode_body(msg: &Msg, buf: &mut Vec<u8>) -> bool {
             for c in chunks {
                 put_chunk(buf, c);
             }
+        }
+        Msg::Ledger(rec) => {
+            buf.extend_from_slice(&[MAGIC, VERSION, TAG_LEDGER]);
+            put_ledger(buf, rec);
         }
         _ => return false,
     }
@@ -312,10 +390,7 @@ impl<'a> Rd<'a> {
     }
 }
 
-fn get_chunk(r: &mut Rd) -> Result<ChunkTask, FrameError> {
-    let key = r.u64("chunk.key")?;
-    let trace = r.u64("chunk.trace")?;
-    let level = r.u32("chunk.level")? as usize;
+fn get_spec(r: &mut Rd) -> Result<SlideSpec, FrameError> {
     let seed = r.u64("spec.seed")?;
     let tiles_x = r.u32("spec.tiles_x")? as usize;
     let tiles_y = r.u32("spec.tiles_y")? as usize;
@@ -328,7 +403,7 @@ fn get_chunk(r: &mut Rd) -> Result<ChunkTask, FrameError> {
         .to_string();
     // Struct literal on purpose: decoding must never panic on hostile
     // geometry the way `SlideSpec::new` would.
-    let spec = SlideSpec {
+    Ok(SlideSpec {
         id,
         seed,
         tiles_x,
@@ -336,8 +411,11 @@ fn get_chunk(r: &mut Rd) -> Result<ChunkTask, FrameError> {
         levels,
         tile_px,
         kind,
-    };
-    let n_tiles = r.count(TILE_BYTES, "chunk.tiles")?;
+    })
+}
+
+fn get_tiles(r: &mut Rd, what: &'static str) -> Result<Vec<TileId>, FrameError> {
+    let n_tiles = r.count(TILE_BYTES, what)?;
     let mut tiles = Vec::with_capacity(n_tiles);
     for _ in 0..n_tiles {
         let level = r.u8("tile.level")?;
@@ -345,6 +423,25 @@ fn get_chunk(r: &mut Rd) -> Result<ChunkTask, FrameError> {
         let ty = r.u32("tile.ty")?;
         tiles.push(TileId { level, tx, ty });
     }
+    Ok(tiles)
+}
+
+fn get_probs(r: &mut Rd, what: &'static str) -> Result<Vec<f32>, FrameError> {
+    let n = r.count(4, what)?;
+    let mut probs = Vec::with_capacity(n);
+    for _ in 0..n {
+        let b = r.take(4, "prob")?;
+        probs.push(f32::from_le_bytes(b.try_into().unwrap()));
+    }
+    Ok(probs)
+}
+
+fn get_chunk(r: &mut Rd) -> Result<ChunkTask, FrameError> {
+    let key = r.u64("chunk.key")?;
+    let trace = r.u64("chunk.trace")?;
+    let level = r.u32("chunk.level")? as usize;
+    let spec = get_spec(r)?;
+    let tiles = get_tiles(r, "chunk.tiles")?;
     let n_excl = r.count(8, "chunk.exclude")?;
     let mut exclude = Vec::with_capacity(n_excl);
     for _ in 0..n_excl {
@@ -379,12 +476,7 @@ pub fn decode_body(body: &[u8]) -> Result<Msg, FrameError> {
             let key = r.u64("done.key")?;
             let worker = r.u64("done.worker")? as usize;
             let trace = r.u64("done.trace")?;
-            let n = r.count(4, "done.probs")?;
-            let mut probs = Vec::with_capacity(n);
-            for _ in 0..n {
-                let b = r.take(4, "done.prob")?;
-                probs.push(f32::from_le_bytes(b.try_into().unwrap()));
-            }
+            let probs = get_probs(&mut r, "done.probs")?;
             Msg::ChunkDone {
                 key,
                 worker,
@@ -405,6 +497,43 @@ pub fn decode_body(body: &[u8]) -> Result<Msg, FrameError> {
                 chunks.push(get_chunk(&mut r)?);
             }
             Msg::ChunkBatch(chunks)
+        }
+        TAG_LEDGER => {
+            let seq = r.u64("ledger.seq")?;
+            let op = match r.u8("ledger.op")? {
+                LOP_RUN_START => {
+                    let run = r.u64("ledger.run")?;
+                    let chunk = r.u64("ledger.chunk")?;
+                    let spec = get_spec(&mut r)?;
+                    let n_thr = r.count(8, "ledger.thresholds")?;
+                    let mut thresholds = Vec::with_capacity(n_thr);
+                    for _ in 0..n_thr {
+                        let b = r.take(8, "ledger.threshold")?;
+                        thresholds.push(f64::from_le_bytes(b.try_into().unwrap()));
+                    }
+                    let initial = get_tiles(&mut r, "ledger.initial")?;
+                    LedgerOp::RunStart {
+                        run,
+                        spec,
+                        thresholds,
+                        initial,
+                        chunk,
+                    }
+                }
+                LOP_APPEND => LedgerOp::Append(get_chunk(&mut r)?),
+                LOP_ACK => LedgerOp::Ack {
+                    key: r.u64("ledger.key")?,
+                    probs: get_probs(&mut r, "ledger.probs")?,
+                },
+                LOP_LOST => LedgerOp::Lost {
+                    key: r.u64("ledger.key")?,
+                },
+                LOP_RUN_DONE => LedgerOp::RunDone {
+                    run: r.u64("ledger.run")?,
+                },
+                other => return Err(FrameError::BadTag(other)),
+            };
+            Msg::Ledger(LedgerRecord { seq, op })
         }
         other => return Err(FrameError::BadTag(other)),
     };
@@ -487,12 +616,41 @@ mod tests {
     }
 
     #[test]
+    fn binary_roundtrip_ledger_records() {
+        use crate::cluster::ledger::{LedgerOp, LedgerRecord};
+        let ops = [
+            LedgerOp::RunStart {
+                run: 3,
+                spec: SlideSpec::new("led", 7, 16, 8, 3, 64, SlideKind::LargeTumor),
+                thresholds: vec![0.5, 0.25, 0.125],
+                initial: vec![TileId::new(2, 0, 0), TileId::new(2, 1, 0)],
+                chunk: 4,
+            },
+            LedgerOp::Append(chunk(11)),
+            LedgerOp::Ack {
+                key: 11,
+                probs: vec![0.1, f32::MIN_POSITIVE],
+            },
+            LedgerOp::Lost { key: 12 },
+            LedgerOp::RunDone { run: 3 },
+        ];
+        for (i, op) in ops.into_iter().enumerate() {
+            let m = Msg::Ledger(LedgerRecord {
+                seq: i as u64 + 1,
+                op,
+            });
+            assert_eq!(roundtrip(&m), m);
+        }
+    }
+
+    #[test]
     fn control_messages_have_no_binary_encoding() {
         let mut buf = Vec::new();
         for m in [
             Msg::Ping,
             Msg::Shutdown,
             Msg::Hello {
+                host: "127.0.0.1".to_string(),
                 port: 1,
                 wire: super::super::proto::WireVersion::V2Binary,
             },

@@ -75,12 +75,12 @@ pub fn run_cluster(
     // ranges, no races, no collisions with concurrent runs.
     let leader_listener =
         TcpListener::bind(("127.0.0.1", 0)).context("leader bind")?;
-    let leader_port = leader_listener.local_addr()?.port();
+    let leader_addr = format!("127.0.0.1:{}", leader_listener.local_addr()?.port());
     let mut worker_listeners = Vec::with_capacity(cfg.workers);
-    let mut worker_ports = Vec::with_capacity(cfg.workers);
+    let mut worker_addrs = Vec::with_capacity(cfg.workers);
     for _ in 0..cfg.workers {
         let l = TcpListener::bind(("127.0.0.1", 0)).context("worker bind")?;
-        worker_ports.push(l.local_addr()?.port());
+        worker_addrs.push(format!("127.0.0.1:{}", l.local_addr()?.port()));
         worker_listeners.push(l);
     }
 
@@ -97,8 +97,8 @@ pub fn run_cluster(
     for (id, listener) in worker_listeners.into_iter().enumerate() {
         let wcfg = WorkerConfig {
             id,
-            ports: worker_ports.clone(),
-            leader_port,
+            peers: worker_addrs.clone(),
+            leader: leader_addr.clone(),
             slide: spec.clone(),
             thresholds: thresholds.clone(),
             batch: cfg.batch,
@@ -116,11 +116,11 @@ pub fn run_cluster(
     let t0 = Instant::now();
     for (w, tiles) in assignment.iter().enumerate() {
         for &tile in tiles {
-            send_to(worker_ports[w], &Msg::Task { tile })?;
+            send_to(&worker_addrs[w], &Msg::Task { tile })?;
         }
     }
     for (w, tiles) in assignment.iter().enumerate() {
-        send_to(worker_ports[w], &Msg::Start { tasks: tiles.len() })?;
+        send_to(&worker_addrs[w], &Msg::Start { tasks: tiles.len() })?;
     }
 
     // Collect subtrees.
@@ -150,8 +150,8 @@ pub fn run_cluster(
     let wall = t0.elapsed();
 
     // Shut everything down and join.
-    for &p in &worker_ports {
-        let _ = send_to(p, &Msg::Shutdown);
+    for a in &worker_addrs {
+        let _ = send_to(a, &Msg::Shutdown);
     }
     for h in handles {
         h.join().map_err(|_| anyhow!("worker panicked"))??;
@@ -172,40 +172,41 @@ pub fn run_cluster(
 /// Connect with retry/backoff — worker listeners bind asynchronously and
 /// the leader must not race them (observed flaking at ~1 in 100 runs with
 /// a fixed pre-sleep). Shared with the persistent chunk backend
-/// (`cluster::backend`).
-pub(crate) fn send_to(port: u16, msg: &Msg) -> Result<()> {
-    send_to_deadline(port, msg, Duration::from_secs(5))
+/// (`cluster::backend`). `addr` is a full `host:port` — since the
+/// cross-host PR nothing below this helper assumes loopback.
+pub(crate) fn send_to(addr: &str, msg: &Msg) -> Result<()> {
+    send_to_deadline(addr, msg, Duration::from_secs(5))
 }
 
 /// [`send_to`] with an explicit patience bound. The fault-tolerant
 /// backend deals chunks with a short bound: its listeners are pre-bound
-/// (no startup race to wait out), and a dead port should fail fast so
+/// (no startup race to wait out), and a dead peer should fail fast so
 /// the chunk can be orphaned for the monitor instead of stalling the
 /// dispatcher until the heartbeat notices.
-pub(crate) fn send_to_deadline(port: u16, msg: &Msg, patience: Duration) -> Result<()> {
+pub(crate) fn send_to_deadline(addr: &str, msg: &Msg, patience: Duration) -> Result<()> {
     // A throwaway FrameBuf is free on the v1 path: the JSON fallback
     // never touches it, so no allocation happens.
     let mut buf = FrameBuf::new();
-    send_wire_deadline(port, msg, WireVersion::V1Json, patience, &mut buf)
+    send_wire_deadline(addr, msg, WireVersion::V1Json, patience, &mut buf)
 }
 
 /// [`send_to`] in an explicit wire encoding and with a default 5-second
 /// patience: hot messages go binary on a v2 connection (encoded into the
 /// caller's reused `buf`), everything else JSON.
 pub(crate) fn send_wire(
-    port: u16,
+    addr: &str,
     msg: &Msg,
     wire: WireVersion,
     buf: &mut FrameBuf,
 ) -> Result<()> {
-    send_wire_deadline(port, msg, wire, Duration::from_secs(5), buf)
+    send_wire_deadline(addr, msg, wire, Duration::from_secs(5), buf)
 }
 
 /// [`send_wire`] with an explicit patience bound (see
 /// [`send_to_deadline`] for why the fault-tolerant backend wants a short
 /// one).
 pub(crate) fn send_wire_deadline(
-    port: u16,
+    addr: &str,
     msg: &Msg,
     wire: WireVersion,
     patience: Duration,
@@ -214,14 +215,14 @@ pub(crate) fn send_wire_deadline(
     let mut delay = Duration::from_micros(200);
     let deadline = Instant::now() + patience;
     loop {
-        match TcpStream::connect(("127.0.0.1", port)) {
+        match TcpStream::connect(addr) {
             Ok(mut stream) => {
                 stream.set_nodelay(true).ok();
                 return msg.write_wire(&mut stream, wire, buf);
             }
             Err(e) => {
                 if Instant::now() > deadline {
-                    return Err(e).with_context(|| format!("connect :{port}"));
+                    return Err(e).with_context(|| format!("connect {addr}"));
                 }
                 std::thread::sleep(delay);
                 delay = (delay * 2).min(Duration::from_millis(50));

@@ -1,0 +1,336 @@
+//! Replicated chunk ledger: the leader's dispatch state as a
+//! sequence-numbered operation log (DESIGN.md §15).
+//!
+//! The execution leader (`cluster::backend::ClusterExec`) owns the only
+//! copy of "which chunks exist, who holds them, which are done" — the
+//! last structural single point of failure. This module makes that state
+//! a replicated log: every mutation of the pending map is mirrored as a
+//! [`LedgerOp`], wrapped in a [`LedgerRecord`] with a monotonically
+//! increasing sequence number, and streamed over the ordinary cluster
+//! wire (`framev2::TAG_LEDGER`) to a standby process
+//! (`cluster::standby`). The standby folds records into a
+//! [`LedgerState`]; on leader death it holds everything needed to resume
+//! each in-flight run and finish with a byte-identical tree:
+//!
+//! * [`LedgerOp::RunStart`] carries the full run recipe (slide spec,
+//!   thresholds, initial working set, chunk size) — a fresh
+//!   [`crate::pyramid::PyramidRun`] can be rebuilt from it alone.
+//! * [`LedgerOp::Append`] mirrors a chunk entering the pending map (the
+//!   task itself, so the standby knows the tiles behind each key).
+//! * [`LedgerOp::Ack`] mirrors a chunk's completion (the probabilities,
+//!   so finished work is never re-analyzed).
+//! * [`LedgerOp::Lost`] mirrors abandonment (every eligible worker
+//!   died); the driver requeues and re-appends under a fresh key.
+//! * [`LedgerOp::RunDone`] truncates: a finished run's state is dropped.
+//!
+//! Replay is *order-tolerant*: the tree a run produces depends only on
+//! which tiles were analyzed with which probabilities (the sans-IO
+//! `PyramidRun` is feed-order independent), so a standby that missed
+//! records (replication is best-effort during network trouble) merely
+//! re-analyzes the affected chunks — determinism of the analyzers keeps
+//! the final tree byte-identical.
+
+use std::collections::{BTreeMap, HashMap};
+
+use crate::slide::tile::TileId;
+use crate::synth::slide_gen::SlideSpec;
+
+use super::proto::ChunkTask;
+
+/// Bits of a routing key reserved for the per-run request id; the run id
+/// occupies the high bits. Matches the service scheduler's `pack_key`
+/// split so service jobs replicate under their job id.
+pub const RUN_SHIFT: u32 = 21;
+
+/// Compose a routing key from a run id and a per-run request id.
+pub fn pack_key(run: u64, req: u64) -> u64 {
+    debug_assert!(req < (1 << RUN_SHIFT), "request id overflows key space");
+    (run << RUN_SHIFT) | req
+}
+
+/// The run id a routing key belongs to.
+pub fn run_of(key: u64) -> u64 {
+    key >> RUN_SHIFT
+}
+
+/// The per-run request id inside a routing key.
+pub fn req_of(key: u64) -> u64 {
+    key & ((1 << RUN_SHIFT) - 1)
+}
+
+/// One mutation of the leader's dispatch state.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LedgerOp {
+    /// A run was admitted: everything needed to rebuild its
+    /// [`crate::pyramid::PyramidRun`] from scratch.
+    RunStart {
+        /// Run id — the high bits of every routing key the run issues.
+        run: u64,
+        /// Replicated slide recipe.
+        spec: SlideSpec,
+        /// Per-level zoom thresholds (`Thresholds::zoom`).
+        thresholds: Vec<f64>,
+        /// Initial working set (lowest-level tiles after background
+        /// removal).
+        initial: Vec<TileId>,
+        /// Frontier chunk size the run was configured with.
+        chunk: u64,
+    },
+    /// A chunk entered the pending map (first deal).
+    Append(ChunkTask),
+    /// A chunk completed: its probabilities, in the task's tile order.
+    Ack {
+        /// Routing key of the finished chunk.
+        key: u64,
+        /// One probability per tile.
+        probs: Vec<f32>,
+    },
+    /// A chunk was abandoned (no eligible worker remains); the driver
+    /// requeues the work under a fresh key.
+    Lost {
+        /// Routing key of the abandoned chunk.
+        key: u64,
+    },
+    /// A run finished — truncate its ledger state.
+    RunDone {
+        /// Run id being retired.
+        run: u64,
+    },
+}
+
+/// A sequence-numbered ledger entry as it travels on the wire.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LedgerRecord {
+    /// Position in the leader's log, starting at 1 and strictly
+    /// increasing. The standby uses it to drop duplicates on
+    /// reconnection replays.
+    pub seq: u64,
+    /// The mutation.
+    pub op: LedgerOp,
+}
+
+/// Everything the ledger knows about one in-flight run.
+#[derive(Debug, Clone)]
+pub struct RunLedger {
+    /// Replicated slide recipe.
+    pub spec: SlideSpec,
+    /// Per-level zoom thresholds.
+    pub thresholds: Vec<f64>,
+    /// Initial working set.
+    pub initial: Vec<TileId>,
+    /// Frontier chunk size.
+    pub chunk: u64,
+    /// Chunks dealt and not yet acked or lost (the pending set).
+    pub pending: HashMap<u64, ChunkTask>,
+    /// Finished chunks: the dealt task plus its probabilities.
+    pub done: HashMap<u64, (ChunkTask, Vec<f32>)>,
+    /// Acks whose `Append` never arrived (replication gap): probabilities
+    /// without tiles. Replay ignores them — the chunks are re-analyzed.
+    pub blind_acks: Vec<u64>,
+    /// Keys abandoned by the leader (the work re-enters under new keys).
+    pub lost: Vec<u64>,
+    /// Whether [`LedgerOp::RunDone`] was seen.
+    pub complete: bool,
+}
+
+/// The standby's fold over the record stream.
+#[derive(Debug, Default)]
+pub struct LedgerState {
+    /// Highest sequence number applied.
+    pub last_seq: u64,
+    /// Per-run state, keyed by run id (ordered so takeover resumes runs
+    /// deterministically).
+    pub runs: BTreeMap<u64, RunLedger>,
+    /// Records skipped as duplicates (seq ≤ `last_seq`).
+    pub duplicates: u64,
+    /// Records whose run was unknown (gap before `RunStart`, or ops after
+    /// truncation raced the stream).
+    pub orphaned: u64,
+}
+
+impl LedgerState {
+    /// Fresh, empty state.
+    pub fn new() -> LedgerState {
+        LedgerState::default()
+    }
+
+    /// Fold one record in. Duplicate sequence numbers (≤ the highest seen)
+    /// are dropped, which makes reconnection replays idempotent; gaps are
+    /// tolerated (see the module docs on order-tolerant replay).
+    pub fn apply(&mut self, rec: &LedgerRecord) {
+        if rec.seq <= self.last_seq {
+            self.duplicates += 1;
+            return;
+        }
+        self.last_seq = rec.seq;
+        match &rec.op {
+            LedgerOp::RunStart {
+                run,
+                spec,
+                thresholds,
+                initial,
+                chunk,
+            } => {
+                self.runs.insert(
+                    *run,
+                    RunLedger {
+                        spec: spec.clone(),
+                        thresholds: thresholds.clone(),
+                        initial: initial.clone(),
+                        chunk: *chunk,
+                        pending: HashMap::new(),
+                        done: HashMap::new(),
+                        blind_acks: Vec::new(),
+                        lost: Vec::new(),
+                        complete: false,
+                    },
+                );
+            }
+            LedgerOp::Append(task) => {
+                if let Some(r) = self.runs.get_mut(&run_of(task.key)) {
+                    r.pending.insert(task.key, task.clone());
+                } else {
+                    self.orphaned += 1;
+                }
+            }
+            LedgerOp::Ack { key, probs } => {
+                if let Some(r) = self.runs.get_mut(&run_of(*key)) {
+                    match r.pending.remove(key) {
+                        Some(task) => {
+                            r.done.insert(*key, (task, probs.clone()));
+                        }
+                        None => r.blind_acks.push(*key),
+                    }
+                } else {
+                    self.orphaned += 1;
+                }
+            }
+            LedgerOp::Lost { key } => {
+                if let Some(r) = self.runs.get_mut(&run_of(*key)) {
+                    r.pending.remove(key);
+                    r.lost.push(*key);
+                } else {
+                    self.orphaned += 1;
+                }
+            }
+            LedgerOp::RunDone { run } => {
+                // Truncation: a finished run needs no recovery state.
+                if let Some(r) = self.runs.get_mut(run) {
+                    r.complete = true;
+                    r.pending.clear();
+                    r.done.clear();
+                    r.blind_acks.clear();
+                    r.lost.clear();
+                }
+            }
+        }
+    }
+
+    /// Runs that started but never finished — the takeover work list, in
+    /// run-id order.
+    pub fn incomplete_runs(&self) -> Vec<u64> {
+        self.runs
+            .iter()
+            .filter(|(_, r)| !r.complete)
+            .map(|(&run, _)| run)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::synth::slide_gen::SlideKind;
+
+    fn task(key: u64) -> ChunkTask {
+        ChunkTask {
+            key,
+            spec: SlideSpec::new("lg", 3, 16, 8, 3, 64, SlideKind::LargeTumor),
+            level: 2,
+            tiles: vec![TileId::new(2, 0, 0), TileId::new(2, 1, 0)],
+            exclude: vec![],
+            trace: key,
+        }
+    }
+
+    fn start(run: u64) -> LedgerOp {
+        LedgerOp::RunStart {
+            run,
+            spec: SlideSpec::new("lg", 3, 16, 8, 3, 64, SlideKind::LargeTumor),
+            thresholds: vec![0.5, 0.5, 0.5],
+            initial: vec![TileId::new(2, 0, 0)],
+            chunk: 4,
+        }
+    }
+
+    #[test]
+    fn append_ack_lost_track_pending_and_done() {
+        let mut st = LedgerState::new();
+        let mut seq = 0u64;
+        let mut push = |st: &mut LedgerState, op: LedgerOp| {
+            seq += 1;
+            st.apply(&LedgerRecord { seq, op });
+        };
+        push(&mut st, start(1));
+        push(&mut st, LedgerOp::Append(task(pack_key(1, 0))));
+        push(&mut st, LedgerOp::Append(task(pack_key(1, 1))));
+        push(
+            &mut st,
+            LedgerOp::Ack {
+                key: pack_key(1, 0),
+                probs: vec![0.9, 0.1],
+            },
+        );
+        push(
+            &mut st,
+            LedgerOp::Lost {
+                key: pack_key(1, 1),
+            },
+        );
+        let r = &st.runs[&1];
+        assert!(r.pending.is_empty());
+        assert_eq!(r.done.len(), 1);
+        assert_eq!(r.lost, vec![pack_key(1, 1)]);
+        assert!(!r.complete);
+        assert_eq!(st.incomplete_runs(), vec![1]);
+        push(&mut st, LedgerOp::RunDone { run: 1 });
+        assert!(st.runs[&1].complete);
+        assert!(st.incomplete_runs().is_empty());
+    }
+
+    #[test]
+    fn duplicate_sequence_numbers_are_dropped() {
+        let mut st = LedgerState::new();
+        st.apply(&LedgerRecord { seq: 1, op: start(2) });
+        let rec = LedgerRecord {
+            seq: 2,
+            op: LedgerOp::Append(task(pack_key(2, 0))),
+        };
+        st.apply(&rec);
+        st.apply(&rec); // reconnection replay
+        assert_eq!(st.runs[&2].pending.len(), 1);
+        assert_eq!(st.duplicates, 1);
+    }
+
+    #[test]
+    fn ack_without_append_is_a_blind_ack() {
+        let mut st = LedgerState::new();
+        st.apply(&LedgerRecord { seq: 5, op: start(3) });
+        st.apply(&LedgerRecord {
+            seq: 9, // gap: the Append at seq 6..8 never arrived
+            op: LedgerOp::Ack {
+                key: pack_key(3, 4),
+                probs: vec![0.5],
+            },
+        });
+        assert_eq!(st.runs[&3].blind_acks, vec![pack_key(3, 4)]);
+        assert_eq!(st.last_seq, 9);
+    }
+
+    #[test]
+    fn key_packing_roundtrips() {
+        let k = pack_key(77, 1234);
+        assert_eq!(run_of(k), 77);
+        assert_eq!(req_of(k), 1234);
+    }
+}

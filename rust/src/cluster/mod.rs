@@ -13,7 +13,11 @@
 //!   Dead workers are detected by heartbeat and their chunks resubmitted
 //!   with excluded-victim lists; workers — including standalone
 //!   `pyramidai worker` OS processes — can join or rejoin mid-run
-//!   (DESIGN.md §10).
+//!   (DESIGN.md §10). With a standby leader configured, the chunk
+//!   ledger is replicated as sequence-numbered [`proto::Msg::Ledger`]
+//!   frames and the standby takes over on leader death (DESIGN.md §15):
+//!   [`ledger`] holds the replicated log, [`standby`] the takeover
+//!   logic.
 
 /// Persistent fault-tolerant chunk-execution cluster (§10).
 pub mod backend;
@@ -21,9 +25,14 @@ pub mod backend;
 pub mod framev2;
 /// One-shot cluster leader: deal, collect subtrees, merge.
 pub mod leader;
+/// Replicated chunk ledger: operations, records, replayable state (§15).
+pub mod ledger;
 /// Length-prefixed wire protocol (JSON v1 + binary v2) shared by both
 /// modes.
 pub mod proto;
+/// Standby leader: apply the replicated ledger, take over on leader
+/// death, resume incomplete runs (§15).
+pub mod standby;
 /// One-shot cluster worker: queue, analyze, steal, upload.
 pub mod worker;
 
@@ -31,3 +40,5 @@ pub use backend::{
     run_standalone_worker, ClusterBackend, ClusterExec, ClusterExecConfig, ExecEvent, FaultStats,
 };
 pub use leader::{run_cluster, ClusterConfig, ClusterResult};
+pub use ledger::{LedgerOp, LedgerRecord, LedgerState};
+pub use standby::{run_standby, StandbyConfig};

@@ -27,6 +27,7 @@ use crate::synth::slide_gen::SlideSpec;
 use crate::util::json::Json;
 
 use super::framev2::{self, FrameBuf};
+use super::ledger::{LedgerOp, LedgerRecord};
 
 /// The highest frame encoding a peer is willing to *send* hot messages
 /// in, negotiated at [`Msg::Hello`]/[`Msg::Welcome`]. Peers that omit the
@@ -147,10 +148,14 @@ pub enum Msg {
     /// dies *without* telling the leader — detecting the loss is the
     /// heartbeat's job, exactly as with a yanked power cord.
     Kill,
-    /// External worker → leader: the §10 rejoin handshake. `port` is the
-    /// worker's freshly bound listener; the leader registers it and
-    /// answers [`Msg::Welcome`] on the same stream.
+    /// External worker → leader: the §10 rejoin handshake. `host:port`
+    /// is the worker's freshly bound listener as reachable *from the
+    /// leader's host*; the leader registers it and answers
+    /// [`Msg::Welcome`] on the same stream.
     Hello {
+        /// The host the worker advertises its listener on (`--advertise`;
+        /// pre-cross-host peers omit the field and parse as loopback).
+        host: String,
         /// The joining worker's chunk/steal listener port.
         port: u16,
         /// Highest wire version the worker can speak. Pre-v2 peers omit
@@ -164,7 +169,15 @@ pub enum Msg {
         /// The negotiated wire version: `min(worker offer, leader max)`.
         /// Both sides send hot messages in this encoding from here on.
         wire: WireVersion,
+        /// Address (`host:port`) of the leader's standby, when one is
+        /// replicating the ledger. Workers that lose the leader re-Hello
+        /// here (DESIGN.md §15); `None` when the cluster runs without
+        /// failover.
+        standby: Option<String>,
     },
+    /// Active leader → standby: one replicated-ledger record (DESIGN.md
+    /// §15). Rides the v2 binary wire on the replication stream.
+    Ledger(LedgerRecord),
     /// Thief → leader: chunk `key` now lives on worker `worker`. Keeps
     /// the leader's pending-chunk assignment map accurate under work
     /// stealing, so a dead thief's stolen chunks are resubmitted too.
@@ -306,14 +319,62 @@ impl Msg {
             Msg::Ping => Json::obj().set("t", "ping"),
             Msg::Pong => Json::obj().set("t", "pong"),
             Msg::Kill => Json::obj().set("t", "kill"),
-            Msg::Hello { port, wire } => Json::obj()
+            Msg::Hello { host, port, wire } => Json::obj()
                 .set("t", "hello")
+                .set("host", host.as_str())
                 .set("port", *port as u64)
                 .set("wire", wire.as_u64()),
-            Msg::Welcome { id, wire } => Json::obj()
-                .set("t", "welcome")
-                .set("id", *id)
-                .set("wire", wire.as_u64()),
+            Msg::Welcome { id, wire, standby } => {
+                let j = Json::obj()
+                    .set("t", "welcome")
+                    .set("id", *id)
+                    .set("wire", wire.as_u64());
+                match standby {
+                    Some(addr) => j.set("standby", addr.as_str()),
+                    None => j,
+                }
+            }
+            Msg::Ledger(rec) => {
+                let op = match &rec.op {
+                    LedgerOp::RunStart {
+                        run,
+                        spec,
+                        thresholds,
+                        initial,
+                        chunk,
+                    } => Json::obj()
+                        .set("op", "run_start")
+                        .set("run", *run)
+                        .set("chunk", *chunk)
+                        .set("spec", spec.to_json())
+                        .set(
+                            "thresholds",
+                            Json::Arr(thresholds.iter().map(|&t| Json::Num(t)).collect()),
+                        )
+                        .set(
+                            "initial",
+                            Json::Arr(initial.iter().map(|&t| tile_json(t)).collect()),
+                        ),
+                    LedgerOp::Append(task) => {
+                        Json::obj().set("op", "append").set("task", chunk_json(task))
+                    }
+                    LedgerOp::Ack { key, probs } => Json::obj()
+                        .set("op", "ack")
+                        .set("key", *key)
+                        .set(
+                            "probs",
+                            Json::Arr(probs.iter().map(|&p| Json::Num(p as f64)).collect()),
+                        ),
+                    LedgerOp::Lost { key } => Json::obj().set("op", "lost").set("key", *key),
+                    LedgerOp::RunDone { run } => {
+                        Json::obj().set("op", "run_done").set("run", *run)
+                    }
+                };
+                Json::obj()
+                    .set("t", "ledger")
+                    .set("seq", rec.seq)
+                    .set("rec", op)
+            }
             Msg::ChunkMoved { key, worker, trace } => Json::obj()
                 .set("t", "chunk_moved")
                 .set("key", *key)
@@ -384,6 +445,11 @@ impl Msg {
             "pong" => Msg::Pong,
             "kill" => Msg::Kill,
             "hello" => Msg::Hello {
+                // Absent in pre-cross-host frames: the peer is loopback.
+                host: match v.opt("host") {
+                    Some(h) => h.as_str()?.to_string(),
+                    None => "127.0.0.1".to_string(),
+                },
                 port: v.get("port")?.as_u64()? as u16,
                 // Absent in pre-v2 frames: the peer only speaks JSON.
                 wire: WireVersion::from_u64(match v.opt("wire") {
@@ -397,7 +463,55 @@ impl Msg {
                     Some(w) => w.as_u64()?,
                     None => 1,
                 }),
+                // Absent when the leader runs without a standby.
+                standby: match v.opt("standby") {
+                    Some(s) => Some(s.as_str()?.to_string()),
+                    None => None,
+                },
             },
+            "ledger" => {
+                let rec = v.get("rec")?;
+                let op = match rec.get("op")?.as_str()? {
+                    "run_start" => LedgerOp::RunStart {
+                        run: rec.get("run")?.as_u64()?,
+                        chunk: rec.get("chunk")?.as_u64()?,
+                        spec: SlideSpec::from_json(rec.get("spec")?)?,
+                        thresholds: rec
+                            .get("thresholds")?
+                            .as_arr()?
+                            .iter()
+                            .map(|t| t.as_f64())
+                            .collect::<Result<Vec<f64>, _>>()?,
+                        initial: rec
+                            .get("initial")?
+                            .as_arr()?
+                            .iter()
+                            .map(tile_from)
+                            .collect::<Result<Vec<_>>>()?,
+                    },
+                    "append" => LedgerOp::Append(chunk_from(rec.get("task")?)?),
+                    "ack" => LedgerOp::Ack {
+                        key: rec.get("key")?.as_u64()?,
+                        probs: rec
+                            .get("probs")?
+                            .as_arr()?
+                            .iter()
+                            .map(|p| Ok(p.as_f64()? as f32))
+                            .collect::<Result<Vec<f32>>>()?,
+                    },
+                    "lost" => LedgerOp::Lost {
+                        key: rec.get("key")?.as_u64()?,
+                    },
+                    "run_done" => LedgerOp::RunDone {
+                        run: rec.get("run")?.as_u64()?,
+                    },
+                    other => return Err(anyhow!("unknown ledger op {other:?}")),
+                };
+                Msg::Ledger(LedgerRecord {
+                    seq: v.get("seq")?.as_u64()?,
+                    op,
+                })
+            }
             "chunk_moved" => Msg::ChunkMoved {
                 key: v.get("key")?.as_u64()?,
                 worker: v.get("worker")?.as_usize()?,
@@ -551,16 +665,24 @@ mod tests {
             Msg::Pong,
             Msg::Kill,
             Msg::Hello {
+                host: "10.0.0.7".to_string(),
                 port: 61234,
                 wire: WireVersion::V2Binary,
             },
             Msg::Hello {
+                host: "127.0.0.1".to_string(),
                 port: 61234,
                 wire: WireVersion::V1Json,
             },
             Msg::Welcome {
                 id: 7,
                 wire: WireVersion::V2Binary,
+                standby: None,
+            },
+            Msg::Welcome {
+                id: 8,
+                wire: WireVersion::V2Binary,
+                standby: Some("10.0.0.9:4100".to_string()),
             },
             Msg::ChunkMoved {
                 key: (3u64 << 21) | 9,
@@ -646,15 +768,18 @@ mod tests {
         // Pre-v2 peers advertise nothing; they must be treated as JSON-only.
         let hello = Json::parse(r#"{"t":"hello","port":4000}"#).unwrap();
         match Msg::from_json(&hello).unwrap() {
-            Msg::Hello { port, wire } => {
+            Msg::Hello { host, port, wire } => {
                 assert_eq!((port, wire), (4000, WireVersion::V1Json));
+                // Pre-cross-host peers also omit the host: loopback.
+                assert_eq!(host, "127.0.0.1");
             }
             other => panic!("unexpected {other:?}"),
         }
         let welcome = Json::parse(r#"{"t":"welcome","id":3}"#).unwrap();
         match Msg::from_json(&welcome).unwrap() {
-            Msg::Welcome { id, wire } => {
+            Msg::Welcome { id, wire, standby } => {
                 assert_eq!((id, wire), (3, WireVersion::V1Json));
+                assert_eq!(standby, None);
             }
             other => panic!("unexpected {other:?}"),
         }
@@ -681,6 +806,60 @@ mod tests {
         let mut buf = Vec::new();
         assert!(framev2::encode_body(&m, &mut buf));
         assert_eq!(framev2::decode_body(&buf).unwrap(), m);
+    }
+
+    #[test]
+    fn ledger_records_roundtrip_in_both_encodings() {
+        use crate::synth::slide_gen::{SlideKind, SlideSpec};
+        let task = ChunkTask {
+            key: (4u64 << 21) | 2,
+            spec: SlideSpec::new("led", 3, 16, 8, 3, 64, SlideKind::SmallScattered),
+            level: 1,
+            tiles: vec![TileId::new(1, 0, 0)],
+            exclude: vec![1],
+            trace: 5,
+        };
+        let recs = vec![
+            LedgerRecord {
+                seq: 1,
+                op: LedgerOp::RunStart {
+                    run: 4,
+                    spec: task.spec.clone(),
+                    thresholds: vec![0.5, 0.5, 0.5],
+                    initial: vec![TileId::new(2, 0, 0)],
+                    chunk: 8,
+                },
+            },
+            LedgerRecord {
+                seq: 2,
+                op: LedgerOp::Append(task.clone()),
+            },
+            LedgerRecord {
+                seq: 3,
+                op: LedgerOp::Ack {
+                    key: task.key,
+                    probs: vec![0.125],
+                },
+            },
+            LedgerRecord {
+                seq: 4,
+                op: LedgerOp::Lost { key: task.key },
+            },
+            LedgerRecord {
+                seq: 5,
+                op: LedgerOp::RunDone { run: 4 },
+            },
+        ];
+        for rec in recs {
+            let m = Msg::Ledger(rec);
+            // JSON v1
+            let j = m.to_json().to_string();
+            assert_eq!(Msg::from_json(&Json::parse(&j).unwrap()).unwrap(), m);
+            // Binary v2 (the encoding the replication stream uses)
+            let mut buf = Vec::new();
+            assert!(framev2::encode_body(&m, &mut buf));
+            assert_eq!(framev2::decode_body(&buf).unwrap(), m);
+        }
     }
 
     #[test]

@@ -1,0 +1,396 @@
+//! Standby leader (DESIGN.md §15): absorb the replicated chunk ledger,
+//! detect the active leader's death, take over its cluster and resume
+//! every incomplete run to a byte-identical tree.
+//!
+//! The standby binds one listener up front and everything arrives there:
+//!
+//! * the active leader's replication stream ([`super::proto::Msg::Ledger`]
+//!   frames, folded into a [`LedgerState`]);
+//! * a [`super::proto::Msg::Shutdown`] on that stream, marking a *clean*
+//!   leader exit — the standby exits too, no takeover;
+//! * after takeover, worker re-Hellos — the takeover `ClusterExec`
+//!   inherits the very same listener, so workers that were told this
+//!   address in their Welcome land on the new leader's accept loop.
+//!
+//! Death detection is the replication stream's EOF *without* a prior
+//! Shutdown (a SIGKILLed leader's sockets are closed by the kernel, so
+//! EOF arrives promptly), debounced by a short grace window in which a
+//! reconnecting leader (transient network trouble) is welcomed back.
+//!
+//! # Resuming a run
+//!
+//! Replay exploits the sans-IO [`PyramidRun`]'s feed-order independence:
+//! a fresh run is rebuilt from the ledger's
+//! [`super::ledger::LedgerOp::RunStart`] recipe, requests whose
+//! `(level, tiles)` signature matches a ledger-acked chunk are fed the
+//! recorded probabilities immediately, and everything else — requests
+//! never dealt, dealt but unacked, or acked into a replication gap — is
+//! dispatched to the re-joined workers like ordinary work. Deterministic
+//! analyzers make the re-analysis byte-identical to the lost originals,
+//! so the resulting [`ExecTree`] equals the unfailed run's regardless of
+//! where the ledger was truncated.
+
+use std::collections::HashMap;
+use std::io::Write;
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::model::Analyzer;
+use crate::obs::{self, Level};
+use crate::pyramid::backend::drive;
+use crate::pyramid::tree::{ExecTree, Thresholds};
+use crate::pyramid::PyramidRun;
+use crate::slide::tile::TileId;
+
+use super::backend::{ClusterBackend, ClusterExec, ClusterExecConfig};
+use super::ledger::{LedgerState, RunLedger};
+use super::proto::Msg;
+
+/// Configuration of one standby leader process.
+#[derive(Debug, Clone)]
+pub struct StandbyConfig {
+    /// Address to bind (`host:port`; port 0 = OS-assigned). This is the
+    /// address the active leader must be given as `--standby-addr`.
+    pub listen: String,
+    /// Host advertised to workers after takeover (the takeover cluster's
+    /// `advertise_host`).
+    pub advertise_host: String,
+    /// Directory resumed trees are written to, one `run_<id>.json` per
+    /// resumed run. `None` = don't persist (tests read the return value).
+    pub out_dir: Option<PathBuf>,
+    /// Heartbeat interval of the takeover cluster.
+    pub heartbeat: Duration,
+    /// `max_missed` of the takeover cluster.
+    pub max_missed: u32,
+    /// How long to wait for the active leader's first replication
+    /// contact before giving up (guards a standby started against a
+    /// leader that never came up).
+    pub first_contact: Duration,
+    /// Grace window after a replication-stream EOF in which a
+    /// reconnecting leader cancels the takeover.
+    pub reconnect_grace: Duration,
+    /// How long the takeover waits for at least one worker to re-Hello
+    /// before declaring the cluster unrecoverable.
+    pub worker_wait: Duration,
+}
+
+impl Default for StandbyConfig {
+    fn default() -> StandbyConfig {
+        StandbyConfig {
+            listen: "127.0.0.1:0".to_string(),
+            advertise_host: "127.0.0.1".to_string(),
+            out_dir: None,
+            heartbeat: Duration::from_millis(25),
+            max_missed: 4,
+            first_contact: Duration::from_secs(60),
+            reconnect_grace: Duration::from_millis(500),
+            worker_wait: Duration::from_secs(30),
+        }
+    }
+}
+
+/// What one standby session did.
+#[derive(Debug)]
+pub struct StandbyReport {
+    /// Whether the standby took over (false = the leader shut down
+    /// cleanly and there was nothing to do).
+    pub took_over: bool,
+    /// Ledger records applied before the decision.
+    pub records_applied: u64,
+    /// The resumed runs' trees, in run-id order (also written to
+    /// `out_dir` when configured).
+    pub resumed: Vec<(u64, ExecTree)>,
+}
+
+/// A bound-but-not-yet-running standby: binding is split from running so
+/// the caller can learn (and publish) the actual listen address before
+/// the blocking watch loop starts.
+pub struct Standby {
+    cfg: StandbyConfig,
+    listener: TcpListener,
+}
+
+impl Standby {
+    /// Bind the standby listener.
+    pub fn bind(cfg: StandbyConfig) -> Result<Standby> {
+        let listener = TcpListener::bind(cfg.listen.as_str())
+            .with_context(|| format!("standby bind {}", cfg.listen))?;
+        Ok(Standby { cfg, listener })
+    }
+
+    /// The address the active leader should replicate to (and that this
+    /// process will serve from after takeover): `advertise_host:port`.
+    pub fn addr(&self) -> String {
+        let port = self
+            .listener
+            .local_addr()
+            .map(|a| a.port())
+            .unwrap_or_default();
+        format!("{}:{}", self.cfg.advertise_host, port)
+    }
+
+    /// Watch the replication stream until the leader exits — cleanly
+    /// (return, no takeover) or not (take over, resume every incomplete
+    /// run on `analyzer`, return the trees).
+    pub fn run(self, analyzer: Arc<dyn Analyzer>) -> Result<StandbyReport> {
+        let Standby { cfg, listener } = self;
+        listener
+            .set_nonblocking(true)
+            .context("standby listener nonblocking")?;
+        let mut state = LedgerState::new();
+        let started = Instant::now();
+        let mut leader_seen = false;
+        let mut pending_eof: Option<Instant> = None;
+        let clean = 'watch: loop {
+            match listener.accept() {
+                Ok((stream, _)) => match drain_connection(stream, &mut state) {
+                    ConnEnd::Clean => break 'watch true,
+                    ConnEnd::LeaderEof => {
+                        leader_seen = true;
+                        pending_eof = Some(Instant::now());
+                    }
+                    ConnEnd::Uninteresting => {}
+                },
+                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if let Some(t) = pending_eof {
+                        if t.elapsed() >= cfg.reconnect_grace {
+                            break 'watch false; // crash confirmed
+                        }
+                    } else if !leader_seen && started.elapsed() >= cfg.first_contact {
+                        anyhow::bail!(
+                            "no leader contacted the standby within {:?}",
+                            cfg.first_contact
+                        );
+                    }
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                Err(e) => return Err(e).context("standby accept"),
+            }
+        };
+        let records_applied = state.last_seq;
+        if clean {
+            obs::event(
+                Level::Info,
+                "cluster",
+                "standby_clean_exit",
+                &[("records", records_applied.into())],
+            );
+            return Ok(StandbyReport {
+                took_over: false,
+                records_applied,
+                resumed: Vec::new(),
+            });
+        }
+
+        // --- takeover ----------------------------------------------------
+        obs::global_metrics()
+            .counter("cluster.failover_takeovers")
+            .inc();
+        let incomplete = state.incomplete_runs();
+        obs::event(
+            Level::Warn,
+            "cluster",
+            "standby_takeover",
+            &[
+                ("records", records_applied.into()),
+                ("incomplete_runs", incomplete.len().into()),
+            ],
+        );
+        let mut resumed = Vec::new();
+        if incomplete.is_empty() {
+            return Ok(StandbyReport {
+                took_over: true,
+                records_applied,
+                resumed,
+            });
+        }
+        // The takeover cluster starts with zero local workers and
+        // inherits the standby's own listener: the orphaned workers'
+        // re-Hellos — aimed at the address their Welcome advertised —
+        // land directly on the new leader's accept loop.
+        let exec = Arc::new(ClusterExec::start_with_listener(
+            Arc::clone(&analyzer),
+            &ClusterExecConfig {
+                workers: 0,
+                steal: false,
+                heartbeat: cfg.heartbeat,
+                max_missed: cfg.max_missed,
+                advertise_host: cfg.advertise_host.clone(),
+                ..ClusterExecConfig::default()
+            },
+            listener,
+        )?);
+        if !exec.wait_for_workers(1, cfg.worker_wait) {
+            anyhow::bail!(
+                "takeover: no worker re-registered within {:?}",
+                cfg.worker_wait
+            );
+        }
+        for run_id in incomplete {
+            let ledger = state.runs.get(&run_id).expect("listed as incomplete");
+            let tree = resume_run(&exec, run_id, ledger)
+                .with_context(|| format!("resume run {run_id}"))?;
+            obs::global_metrics()
+                .counter("cluster.failover_runs_resumed")
+                .inc();
+            obs::event(
+                Level::Info,
+                "cluster",
+                "run_resumed",
+                &[
+                    ("run", run_id.into()),
+                    ("tiles", tree.total_analyzed().into()),
+                ],
+            );
+            if let Some(dir) = &cfg.out_dir {
+                write_tree(dir, run_id, &tree)?;
+            }
+            resumed.push((run_id, tree));
+        }
+        exec.shutdown();
+        Ok(StandbyReport {
+            took_over: true,
+            records_applied,
+            resumed,
+        })
+    }
+}
+
+/// Bind + run in one call, for callers that don't need the address
+/// up-front (the leader was configured with a fixed standby port).
+pub fn run_standby(cfg: StandbyConfig, analyzer: Arc<dyn Analyzer>) -> Result<StandbyReport> {
+    Standby::bind(cfg)?.run(analyzer)
+}
+
+enum ConnEnd {
+    /// The stream delivered a clean-shutdown marker.
+    Clean,
+    /// A stream that had delivered ledger records hit EOF — the crash
+    /// signal (subject to the reconnect grace window).
+    LeaderEof,
+    /// Anything else: a pre-takeover worker Hello (dropped — the worker
+    /// retries), a health-check Ping, garbage.
+    Uninteresting,
+}
+
+/// Read one accepted connection to its end, folding ledger records into
+/// `state`.
+fn drain_connection(mut stream: TcpStream, state: &mut LedgerState) -> ConnEnd {
+    stream.set_nodelay(true).ok();
+    // The timeout only paces the loop: a quiet-but-alive leader (idle
+    // service between jobs) times out reads forever without tripping
+    // EOF detection.
+    stream
+        .set_read_timeout(Some(Duration::from_millis(500)))
+        .ok();
+    let mut saw_ledger = false;
+    loop {
+        match Msg::read_from(&mut stream) {
+            Ok(Msg::Ledger(rec)) => {
+                saw_ledger = true;
+                state.apply(&rec);
+            }
+            Ok(Msg::Shutdown) => return ConnEnd::Clean,
+            Ok(Msg::Ping) => {
+                let _ = Msg::Pong.write_to(&mut stream);
+                return ConnEnd::Uninteresting;
+            }
+            Ok(_) => return ConnEnd::Uninteresting,
+            Err(e) => {
+                if is_timeout(&e) {
+                    continue;
+                }
+                return if saw_ledger {
+                    ConnEnd::LeaderEof
+                } else {
+                    ConnEnd::Uninteresting
+                };
+            }
+        }
+    }
+}
+
+fn is_timeout(e: &anyhow::Error) -> bool {
+    e.downcast_ref::<std::io::Error>().is_some_and(|io| {
+        matches!(
+            io.kind(),
+            std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+        )
+    })
+}
+
+/// Resume one incomplete run over the takeover cluster: rebuild the
+/// [`PyramidRun`] from the ledger recipe, feed ledger-acked chunks their
+/// recorded probabilities by `(level, tiles)` signature, dispatch
+/// everything else to the workers, and drive to completion.
+fn resume_run(exec: &Arc<ClusterExec>, run_id: u64, ledger: &RunLedger) -> Result<ExecTree> {
+    // Recorded completions, keyed by what was analyzed — request ids are
+    // meaningless across leaders (the rebuilt run re-numbers from 0),
+    // but a frontier chunk's (level, tiles) signature is stable because
+    // the frontier itself is deterministic.
+    let mut acked: HashMap<(usize, Vec<TileId>), Vec<f32>> = ledger
+        .done
+        .values()
+        .map(|(task, probs)| ((task.level, task.tiles.clone()), probs.clone()))
+        .collect();
+    let thresholds = Thresholds {
+        zoom: ledger.thresholds.clone(),
+    };
+    let mut run = PyramidRun::new(
+        ledger.spec.id.clone(),
+        ledger.spec.levels,
+        ledger.initial.clone(),
+        thresholds,
+        ledger.chunk as usize,
+    );
+    let mut backend = ClusterBackend::with_exec(Arc::clone(exec), ledger.spec.clone(), run_id);
+    // Feed every request the ledger already knows the answer to; feeding
+    // can complete a frontier and surface the next level's requests, so
+    // iterate until no request matches. Unmatched requests go to the
+    // cluster (staged in the backend until its first poll, which drive
+    // performs).
+    use crate::pyramid::ExecutionBackend;
+    loop {
+        let mut fed = false;
+        while let Some(req) = run.next_request() {
+            match acked.remove(&(req.level, req.tiles.clone())) {
+                Some(probs) => {
+                    run.feed(req.id, probs)
+                        .map_err(|e| anyhow::anyhow!("replay feed: {e}"))?;
+                    fed = true;
+                }
+                None => backend.dispatch(req),
+            }
+        }
+        if !fed {
+            break;
+        }
+    }
+    if run.is_complete() {
+        return Ok(run.finish());
+    }
+    drive(&mut run, &mut backend).map_err(|e| anyhow::anyhow!("drive resumed run: {e}"))?;
+    Ok(run.finish())
+}
+
+/// Persist one resumed tree as `run_<id>.json`, atomically (tmp +
+/// rename) so a concurrent reader never sees a half-written file.
+fn write_tree(dir: &std::path::Path, run_id: u64, tree: &ExecTree) -> Result<()> {
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("create out dir {}", dir.display()))?;
+    let tmp = dir.join(format!(".run_{run_id}.json.tmp"));
+    let path = dir.join(format!("run_{run_id}.json"));
+    let mut f = std::fs::File::create(&tmp)
+        .with_context(|| format!("create {}", tmp.display()))?;
+    f.write_all(tree.to_json().to_string().as_bytes())
+        .and_then(|()| f.sync_all())
+        .with_context(|| format!("write {}", tmp.display()))?;
+    drop(f);
+    std::fs::rename(&tmp, &path)
+        .with_context(|| format!("rename into {}", path.display()))?;
+    Ok(())
+}

@@ -25,12 +25,13 @@ use super::proto::Msg;
 /// Static configuration of one worker.
 #[derive(Clone)]
 pub struct WorkerConfig {
-    /// This worker's id (index into `ports`).
+    /// This worker's id (index into `peers`).
     pub id: usize,
-    /// Listen address of every worker, indexed by worker id.
-    pub ports: Vec<u16>,
-    /// Where subtrees are uploaded (node 0).
-    pub leader_port: u16,
+    /// Listen address (`host:port`) of every worker, indexed by worker
+    /// id.
+    pub peers: Vec<String>,
+    /// Where subtrees are uploaded (node 0), as `host:port`.
+    pub leader: String,
     /// Replicated slide recipe (workers rebuild pixels locally).
     pub slide: SlideSpec,
     /// Per-level zoom thresholds for local zoom decisions.
@@ -102,7 +103,7 @@ pub fn run_worker(
         shared.running.store(true, Ordering::Release);
     }
     let mut rng = Pcg32::new(cfg.seed ^ (cfg.id as u64) << 32);
-    let mut victims: Vec<usize> = (0..cfg.ports.len()).filter(|&v| v != cfg.id).collect();
+    let mut victims: Vec<usize> = (0..cfg.peers.len()).filter(|&v| v != cfg.id).collect();
     let mut steals = 0usize;
     let mut steal_fails = 0usize;
 
@@ -140,7 +141,7 @@ pub fn run_worker(
             while !victims.is_empty() {
                 let vi = rng.usize_range(0, victims.len());
                 let victim = victims[vi];
-                match request_steal(cfg.ports[victim], cfg.id) {
+                match request_steal(&cfg.peers[victim], cfg.id) {
                     Ok((Some(task), _)) => {
                         steals += 1;
                         shared.queue.lock().unwrap().push_back(task);
@@ -181,7 +182,7 @@ pub fn run_worker(
     shared.idle.store(true, Ordering::Release);
 
     // --- upload subtree to node 0 ---------------------------------------
-    let mut leader = TcpStream::connect(("127.0.0.1", cfg.leader_port))?;
+    let mut leader = TcpStream::connect(cfg.leader.as_str())?;
     Msg::Subtree {
         worker: cfg.id,
         tree: tree.clone(),
@@ -256,8 +257,8 @@ fn listen_loop(listener: TcpListener, shared: Arc<Shared>) {
     }
 }
 
-fn request_steal(victim_port: u16, thief: usize) -> Result<(Option<TileId>, bool)> {
-    let mut stream = TcpStream::connect(("127.0.0.1", victim_port))?;
+fn request_steal(victim: &str, thief: usize) -> Result<(Option<TileId>, bool)> {
+    let mut stream = TcpStream::connect(victim)?;
     stream.set_nodelay(true).ok();
     stream.set_read_timeout(Some(Duration::from_secs(30)))?;
     Msg::StealRequest { thief }.write_to(&mut stream)?;

@@ -13,7 +13,9 @@
 //!                     [--thresholds thresholds.json]
 //! pyramidai simulate  --workers 1,2,4,8,12 [--model oracle]
 //! pyramidai cluster   --workers 4 [--steal=true] [--per-tile-ms 20]
-//! pyramidai worker    --connect 127.0.0.1:PORT [--model auto]
+//! pyramidai worker    --connect 127.0.0.1:PORT [--model auto] [--advertise HOST]
+//! pyramidai leader    [--standby-addr HOST:PORT] [--out tree.json] | --standby
+//!                     [--out-dir trees/]
 //! pyramidai trace     --dir traces/ [--out trace_chrome.json] [--timelines]
 //! pyramidai bench     [--smoke] [--out BENCH_1.json] [--label 1]
 //! pyramidai report    [--model auto] [--fast=true]
@@ -90,6 +92,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("simulate") => cmd_simulate(args),
         Some("cluster") => cmd_cluster(args),
         Some("worker") => cmd_worker(args),
+        Some("leader") => cmd_leader(args),
         Some("serve") => cmd_serve(args),
         Some("trace") => cmd_trace(args),
         Some("bench") => cmd_bench(args),
@@ -122,12 +125,25 @@ subcommands:
                                                    --compare-service=true for the Fig-7b
                                                    service-vs-one-shot sweep)
   worker    standalone cluster worker process     (--connect host:port --model
-                                                   --analyzer-seed
+                                                   --analyzer-seed --per-tile-ms
+                                                   --advertise HOST (host the leader
+                                                   reaches this worker at; default
+                                                   127.0.0.1)
                                                    --wire v1|v2 (default v2; v1
                                                    forces JSON frames for
                                                    pre-v2 leaders); joins a serve
                                                    --backend cluster leader and serves
                                                    chunks until shutdown)
+  leader    one-shot cluster leader / standby     (--slide-seed --kind --workers
+                                                   --wait-workers N --chunk
+                                                   --standby-addr HOST:PORT
+                                                   --listen --advertise --addr-file
+                                                   --out FILE.json --per-tile-ms;
+                                                   with --standby: warm standby that
+                                                   replays the replicated ledger on
+                                                   leader death and resumes its runs
+                                                   (--out-dir DIR writes run_<id>.json
+                                                   trees byte-identical to --out))
   serve     multi-slide analysis service          (--jobs --workers --backend pool|cluster|replay
                                                    --policy fifo|priority|edf|wfs[:t=w,..][;quota=n]
                                                    --preempt --park-aging-ms --deadline-ms
@@ -135,6 +151,10 @@ subcommands:
                                                    --coalesce --per-tile-ms
                                                    --tenants --seed --model --csv
                                                    --external-workers --heartbeat-ms
+                                                   --standby-addr HOST:PORT (replicate
+                                                   the chunk ledger) --advertise HOST
+                                                   --fail-leader-after-ms N (chaos:
+                                                   drop all dispatch state mid-run)
                                                    --cache-dir DIR --cache-budget-mb N
                                                    for streamed shard replay;
                                                    --listen HOST:PORT --tokens-file FILE
@@ -392,11 +412,18 @@ fn cmd_cluster(args: &Args) -> Result<()> {
 
 fn cmd_worker(args: &Args) -> Result<()> {
     use pyramidai::cluster::proto::WireVersion;
+    use pyramidai::model::DelayAnalyzer;
     let connect = args.require("connect")?;
     let model = model_kind(args)?;
     // Must match the leader's analyzer for byte-identical trees — the
     // default mirrors `make_analyzer`'s everywhere else.
     let analyzer_seed = args.u64_or("analyzer-seed", 7)?;
+    // Host this worker tells the leader to reach it at (loopback is only
+    // valid when leader and worker share a machine).
+    let advertise = args.str_or("advertise", "127.0.0.1");
+    // Per-tile analysis delay, e.g. to make chaos tests reliably catch a
+    // leader kill mid-run. Purely additive: results are unchanged.
+    let per_tile_ms = args.u64_or("per-tile-ms", 0)?;
     let wire = match args.str_or("wire", "v2").as_str() {
         "v1" | "1" | "json" => WireVersion::V1Json,
         "v2" | "2" | "binary" => WireVersion::V2Binary,
@@ -404,6 +431,14 @@ fn cmd_worker(args: &Args) -> Result<()> {
     };
     args.finish()?;
     let (analyzer, name) = experiments::ctx::make_analyzer(model, analyzer_seed)?;
+    let analyzer: std::sync::Arc<dyn pyramidai::model::Analyzer> = if per_tile_ms > 0 {
+        std::sync::Arc::new(DelayAnalyzer::new(
+            analyzer,
+            Duration::from_millis(per_tile_ms),
+        ))
+    } else {
+        analyzer
+    };
     obs::event(
         obs::Level::Info,
         "cli",
@@ -411,10 +446,17 @@ fn cmd_worker(args: &Args) -> Result<()> {
         &[
             ("model", name.into()),
             ("leader", connect.as_str().into()),
+            ("advertise", advertise.as_str().into()),
             ("wire", wire.as_u64().into()),
         ],
     );
-    let id = pyramidai::cluster::run_standalone_worker(&connect, analyzer, analyzer_seed, wire)?;
+    let id = pyramidai::cluster::run_standalone_worker(
+        &connect,
+        &advertise,
+        analyzer,
+        analyzer_seed,
+        wire,
+    )?;
     obs::event(
         obs::Level::Info,
         "cli",
@@ -422,6 +464,175 @@ fn cmd_worker(args: &Args) -> Result<()> {
         &[("worker", id.into())],
     );
     obs::flush_trace();
+    Ok(())
+}
+
+/// One-shot cluster leader (active mode) or warm standby (`--standby`).
+///
+/// Active mode runs a single synthetic slide on the work-stealing
+/// cluster, streaming every ledger op to `--standby-addr` so a SIGKILL
+/// mid-run loses nothing: the standby replays the log, workers re-Hello
+/// the address they were told about in Welcome, and the finished tree is
+/// byte-identical to an unfailed run (DESIGN.md §15). `--addr-file`
+/// publishes the control address for scripts that spawn workers; `--out`
+/// writes the finished tree as JSON in the exact format the standby's
+/// `--out-dir` uses, so CI can byte-compare the two.
+fn cmd_leader(args: &Args) -> Result<()> {
+    use pyramidai::cluster::standby::Standby;
+    use pyramidai::cluster::{ClusterBackend, ClusterExec, ClusterExecConfig, StandbyConfig};
+    use pyramidai::model::DelayAnalyzer;
+    use pyramidai::preprocess::background_removal;
+    use pyramidai::pyramid::driver::BG_MARGIN;
+    use pyramidai::pyramid::run_on_backend;
+    use std::sync::Arc;
+
+    let standby_mode = args.bool("standby");
+    let model = model_kind(args)?;
+    let analyzer_seed = args.u64_or("analyzer-seed", 7)?;
+    let per_tile_ms = args.u64_or("per-tile-ms", 0)?;
+    let listen = args.str_or("listen", "127.0.0.1:0");
+    let advertise = args.str_or("advertise", "127.0.0.1");
+    let heartbeat_ms = args.u64_or("heartbeat-ms", 25)?;
+    let addr_file = args.get("addr-file").map(String::from);
+
+    let (analyzer, name) = experiments::ctx::make_analyzer(model, analyzer_seed)?;
+    let analyzer: Arc<dyn pyramidai::model::Analyzer> = if per_tile_ms > 0 {
+        Arc::new(DelayAnalyzer::new(
+            analyzer,
+            Duration::from_millis(per_tile_ms),
+        ))
+    } else {
+        analyzer
+    };
+
+    if standby_mode {
+        let out_dir = args.get("out-dir").map(std::path::PathBuf::from);
+        args.finish()?;
+        let standby = Standby::bind(StandbyConfig {
+            listen,
+            advertise_host: advertise,
+            out_dir,
+            heartbeat: Duration::from_millis(heartbeat_ms.max(1)),
+            ..StandbyConfig::default()
+        })?;
+        if let Some(path) = &addr_file {
+            write_text_atomic(Path::new(path), &standby.addr())?;
+        }
+        println!(
+            "standby on {} ({name}), waiting for a leader…",
+            standby.addr()
+        );
+        let report = standby.run(analyzer)?;
+        if report.took_over {
+            println!(
+                "standby took over: {} ledger record(s) replayed, {} run(s) resumed",
+                report.records_applied,
+                report.resumed.len()
+            );
+            for (run, tree) in &report.resumed {
+                println!("  run {run}: {} tiles analyzed", tree.total_analyzed());
+            }
+        } else {
+            println!(
+                "leader shut down cleanly after {} record(s); standby exiting",
+                report.records_applied
+            );
+        }
+        return Ok(());
+    }
+
+    let seed = args.u64_or("slide-seed", 1)?;
+    let kind_s = args.str_or("kind", "large_tumor");
+    let kind = SlideKind::from_str(&kind_s).ok_or_else(|| anyhow!("bad --kind"))?;
+    let params = dataset_params(args)?;
+    let workers = args.usize_or("workers", 0)?;
+    let wait_workers = args.usize_or("wait-workers", 0)?;
+    let chunk = args.usize_or("chunk", 8)?;
+    let standby_addr = args.get("standby-addr").map(String::from);
+    let out = args.get("out").map(String::from);
+    let thr = match args.get("thresholds") {
+        Some(p) => load_thresholds(p)?,
+        None if params.levels == 3 => Thresholds {
+            zoom: vec![0.5, 0.35, 0.35],
+        },
+        None => Thresholds::uniform(params.levels, 0.35),
+    };
+    args.finish()?;
+
+    // Same slide + initial-tile derivation as the scheduler's cluster
+    // jobs, so the tree here is comparable with every other path.
+    let spec = SlideSpec::new(
+        format!("cli_{seed}"),
+        seed,
+        params.tiles_x,
+        params.tiles_y,
+        params.levels,
+        params.tile_px,
+        kind,
+    );
+    let slide = Slide::from_spec(spec.clone());
+    let initial = background_removal(&slide, BG_MARGIN).tissue_tiles;
+
+    let exec = Arc::new(ClusterExec::start(
+        Arc::clone(&analyzer),
+        &ClusterExecConfig {
+            workers,
+            steal: true,
+            heartbeat: Duration::from_millis(heartbeat_ms.max(1)),
+            standby: standby_addr,
+            advertise_host: advertise,
+            listen,
+            ..ClusterExecConfig::default()
+        },
+    )?);
+    if let Some(path) = &addr_file {
+        write_text_atomic(Path::new(path), &exec.leader_addr())?;
+    }
+    println!(
+        "leader on {} ({name}, {workers} in-process worker(s), chunk={chunk})",
+        exec.leader_addr()
+    );
+    if wait_workers > 0 && !exec.wait_for_workers(wait_workers, Duration::from_secs(60)) {
+        exec.shutdown();
+        return Err(anyhow!("timed out waiting for {wait_workers} worker(s)"));
+    }
+    // Chaos harnesses key their kill clocks off this line: everything
+    // before it is setup, everything after is the run proper.
+    println!("workers ready: {}", exec.alive_workers());
+
+    const RUN_ID: u64 = 1;
+    exec.register_run(RUN_ID, &spec, &thr.zoom, &initial, chunk);
+    let mut backend = ClusterBackend::with_exec(Arc::clone(&exec), spec.clone(), RUN_ID);
+    let tree = run_on_backend(&spec.id, spec.levels, initial, &thr, chunk, &mut backend)?;
+    println!(
+        "run complete: {} tiles analyzed across {} level(s)",
+        tree.total_analyzed(),
+        spec.levels
+    );
+    // Persist the tree *before* recording RunDone in the ledger: a crash
+    // in between leaves the run incomplete from the standby's point of
+    // view, so it re-finishes and writes the identical tree — whereas the
+    // opposite order has a window where the run is ledger-complete but no
+    // tree exists anywhere.
+    if let Some(path) = &out {
+        write_text_atomic(Path::new(path), &tree.to_json().to_string())?;
+        println!("wrote {path}");
+    }
+    exec.ledger_run_done(RUN_ID);
+    exec.shutdown();
+    Ok(())
+}
+
+/// Write `text` to `path` atomically (tmp + rename), so concurrent
+/// readers — scripts polling an `--addr-file`, the chaos harness
+/// byte-comparing trees — never observe a partial file.
+fn write_text_atomic(path: &Path, text: &str) -> Result<()> {
+    use std::io::Write;
+    let tmp = path.with_extension("tmp");
+    let mut f = std::fs::File::create(&tmp)?;
+    f.write_all(text.as_bytes())?;
+    f.sync_all()?;
+    std::fs::rename(&tmp, path)?;
     Ok(())
 }
 
@@ -459,6 +670,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // probe interval (DESIGN.md §10).
     let external_workers = args.usize_or("external-workers", 0)?;
     let heartbeat_ms = args.u64_or("heartbeat-ms", 25)?;
+    // Decentralized control plane (DESIGN.md §15): stream the chunk
+    // ledger to a standby so a leader crash never loses a run, advertise
+    // a reachable host for cross-machine workers, and optionally inject a
+    // leader failover mid-run to exercise the recovery path end to end.
+    let standby_addr = args.get("standby-addr").map(String::from);
+    let advertise = args.str_or("advertise", "127.0.0.1");
+    let fail_leader_after_ms = args.u64_or("fail-leader-after-ms", 0)?;
     let model = model_kind(args)?;
     let params = dataset_params(args)?;
     let csv = args.bool("csv");
@@ -525,6 +743,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 heartbeat: Duration::from_millis(heartbeat_ms.max(1)),
                 external_workers,
                 external_args,
+                standby: standby_addr.clone(),
+                advertise_host: advertise.clone(),
                 ..ClusterExecConfig::default()
             })
         }
@@ -618,6 +838,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
             exec,
         },
     );
+
+    // Chaos injection: after N ms, discard the leader's dispatch state as
+    // if the process had been SIGKILLed. The scheduler requeues every
+    // outstanding chunk and the run must still finish with an identical
+    // tree — CI asserts the exit code, which cmd_serve ties to
+    // completeness below.
+    if fail_leader_after_ms > 0 {
+        if let Some(cluster) = svc.cluster() {
+            std::thread::spawn(move || {
+                std::thread::sleep(Duration::from_millis(fail_leader_after_ms));
+                cluster.trigger_failover();
+            });
+        }
+    }
 
     // Server mode: hand the service to the HTTP front-end and idle until
     // the lifetime elapses; jobs, priorities and tenants all come from

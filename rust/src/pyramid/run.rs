@@ -209,6 +209,19 @@ impl PyramidRun {
         Ok(())
     }
 
+    /// Hand back *every* issued-but-unfed request at once — the
+    /// wholesale form of [`PyramidRun::requeue`] for leader failover,
+    /// where the entire dispatch state vanished with the old leader and
+    /// no individual loss notices will ever arrive. Every outstanding
+    /// span re-issues under a fresh id; the tree is unchanged, exactly
+    /// as for single requeues. Returns the number of requests requeued.
+    pub fn requeue_all_outstanding(&mut self) -> usize {
+        let n = self.outstanding.len();
+        self.requeued
+            .extend(self.outstanding.drain().map(|(_, span)| span));
+        n
+    }
+
     /// Return the probabilities for one issued request (any order). When
     /// the last chunk of a frontier lands, the run applies the level's
     /// threshold, records the level's nodes in frontier order and builds
@@ -494,6 +507,41 @@ mod tests {
         }
         let tree = run.finish();
         assert_eq!(tree.nodes, expect.nodes, "requeues must not change the tree");
+        tree.check_consistency().unwrap();
+    }
+
+    #[test]
+    fn requeue_all_outstanding_recovers_a_whole_failed_frontier() {
+        // Leader failover drops every in-flight request at once; the
+        // wholesale requeue must re-issue all of them and the tree must
+        // come out byte-identical.
+        let s = slide();
+        let a = OracleAnalyzer::new(1);
+        let expect = run_pyramidal(&s, &a, &thr(), 8);
+
+        let mut run = PyramidRun::new(s.id(), s.levels(), expect.initial.clone(), thr(), 4);
+        let mut failed_once = false;
+        while !run.is_complete() {
+            let mut reqs = Vec::new();
+            while let Some(r) = run.next_request() {
+                reqs.push(r);
+            }
+            if !failed_once {
+                // The whole first frontier is "in flight" when the
+                // leader dies: nothing was fed, everything requeues.
+                failed_once = true;
+                let n = reqs.len();
+                assert_eq!(run.requeue_all_outstanding(), n);
+                assert_eq!(run.in_flight(), 0);
+                continue; // the spans re-issue on the next pass
+            }
+            for req in reqs {
+                let ps = a.analyze(&s, req.level, &req.tiles);
+                run.feed(req.id, ps).unwrap();
+            }
+        }
+        let tree = run.finish();
+        assert_eq!(tree.nodes, expect.nodes, "failover must not change the tree");
         tree.check_consistency().unwrap();
     }
 

@@ -238,6 +238,7 @@ impl AnalysisService {
                                 let (job, req) = unpack_key(key);
                                 tx.send(Event::ChunkLost { job, req })
                             }
+                            ExecEvent::Failover => tx.send(Event::LeaderFailover),
                         };
                         if sent.is_err() {
                             break;

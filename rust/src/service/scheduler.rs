@@ -81,6 +81,12 @@ pub(crate) enum Event {
     /// owning run requeues it and the ordinary pump/dispatch path
     /// re-fires it, with a fresh excluded-victim list.
     ChunkLost { job: JobId, req: RequestId },
+    /// The cluster leader's dispatch state was discarded wholesale
+    /// ([`crate::cluster::ExecEvent::Failover`]): a standby took over, or
+    /// failure injection simulated one. Every in-flight cluster chunk is
+    /// gone; the owning runs requeue *all* outstanding work and the
+    /// ordinary dispatch path re-fires it on the (re-registered) workers.
+    LeaderFailover,
     /// Admission is closed; exit once everything drains.
     Close,
 }
@@ -231,6 +237,7 @@ struct SchedObs {
     jobs_resumed: Arc<Counter>,
     chunks_dealt: Arc<Counter>,
     chunks_requeued: Arc<Counter>,
+    leader_failovers: Arc<Counter>,
     queue_wait_us: Arc<Histogram>,
     run_time_us: Arc<Histogram>,
     chunk_latency_us: Arc<Histogram>,
@@ -247,6 +254,7 @@ impl SchedObs {
             jobs_resumed: registry.counter("sched.jobs_resumed"),
             chunks_dealt: registry.counter("sched.chunks_dealt"),
             chunks_requeued: registry.counter("sched.chunks_requeued"),
+            leader_failovers: registry.counter("sched.leader_failovers"),
             queue_wait_us: registry.histogram("sched.queue_wait_us"),
             run_time_us: registry.histogram("sched.run_time_us"),
             chunk_latency_us: registry.histogram("sched.chunk_latency_us"),
@@ -458,6 +466,51 @@ impl Scheduler {
                         self.obs.chunks_requeued.inc();
                     }
                 }
+            }
+            Event::LeaderFailover => {
+                self.obs.leader_failovers.inc();
+                let mut requeued = 0usize;
+                let mut jobs_hit = 0usize;
+                for (id, r) in self.running.iter_mut() {
+                    if !matches!(r.exec, JobExec::Cluster(_)) {
+                        continue;
+                    }
+                    // Every chunk this job had on the old leader —
+                    // dispatched or still queued behind the policy — is
+                    // re-issued from scratch: the dispatched ones died
+                    // with the leader's pending map, and the queued ones
+                    // hold request ids the requeue below invalidates.
+                    self.pending.retain(|(j, _)| j != id);
+                    if r.cancelled || r.failed.is_some() {
+                        // Draining jobs only waited for their in-flight
+                        // chunks, which no longer exist.
+                        r.dispatched = 0;
+                        continue;
+                    }
+                    let n = r.run.requeue_all_outstanding();
+                    r.dispatched = 0;
+                    requeued += n;
+                    if n > 0 {
+                        jobs_hit += 1;
+                    }
+                }
+                self.obs.chunks_requeued.add(requeued as u64);
+                self.chunk_fired.retain(|key, _| {
+                    let (job, _) = unpack_key(*key);
+                    !matches!(
+                        self.running.get(&job).map(|r| &r.exec),
+                        Some(JobExec::Cluster(_))
+                    )
+                });
+                obs::event(
+                    Level::Warn,
+                    "sched",
+                    "leader_failover",
+                    &[
+                        ("jobs", jobs_hit.into()),
+                        ("chunks_requeued", requeued.into()),
+                    ],
+                );
             }
             Event::Close => self.closed = true,
         }
@@ -874,6 +927,12 @@ impl Scheduler {
                 ("queue_wait_us", (queue_wait.as_micros() as u64).into()),
             ],
         );
+        // Cluster jobs enter the replicated ledger before their first
+        // chunk can be dealt, so a standby always holds the run's full
+        // recipe (no-op without a standby).
+        if let (JobExec::Cluster(spec), Some(exec)) = (&exec, self.cluster.as_ref()) {
+            exec.register_run(q.id, spec, &thresholds.zoom, &initial, self.cfg.batch);
+        }
         // The admission queue validated levels and threshold counts, so
         // this constructor cannot panic.
         let run = PyramidRun::new(slide_id.as_str(), levels, initial, thresholds, self.cfg.batch);
@@ -1172,6 +1231,11 @@ impl Scheduler {
             let r = self.running.remove(&id).expect("listed above");
             self.running_ids.lock().unwrap().remove(&id);
             self.pending.retain(|(j, _)| *j != id);
+            // Terminal in every state — a standby must not resurrect a
+            // cancelled or failed run any more than a completed one.
+            if let (JobExec::Cluster(_), Some(exec)) = (&r.exec, self.cluster.as_ref()) {
+                exec.ledger_run_done(id);
+            }
             let tree = r.run.finish();
             let run_time = r.first_started.elapsed();
             let (state, tree, tiles) = if let Some(msg) = r.failed {
@@ -1402,6 +1466,7 @@ mod tests {
                 preempt: false,
                 park_aging: 0,
                 failures: vec![],
+                leader_failures: vec![],
             },
         );
         // Sim job index i ↔ service id i+1 (the admission queue assigns

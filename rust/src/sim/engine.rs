@@ -345,6 +345,14 @@ pub struct WorkloadConfig {
     /// leaves no worker alive (and none rejoining) while work remains
     /// cannot drain and panics — leave capacity.
     pub failures: Vec<WorkerFailure>,
+    /// Injected leader failovers (§15): at each tick the leader's entire
+    /// dispatch state is discarded — every in-flight chunk dies with the
+    /// old leader's pending map and every running job requeues *all* its
+    /// outstanding work wholesale, exactly the service's
+    /// `Event::LeaderFailover` recovery. Workers survive (they re-Hello
+    /// the standby); only already-dealt work is lost. Results stay
+    /// byte-identical; makespan and the requeue counters grow.
+    pub leader_failures: Vec<u64>,
 }
 
 impl Default for WorkloadConfig {
@@ -356,6 +364,7 @@ impl Default for WorkloadConfig {
             preempt: false,
             park_aging: 0,
             failures: Vec::new(),
+            leader_failures: Vec::new(),
         }
     }
 }
@@ -495,10 +504,14 @@ pub fn simulate_workload(
     let m_resumed = registry.counter("sched.jobs_resumed");
     let m_dealt = registry.counter("sched.chunks_dealt");
     let m_requeued = registry.counter("sched.chunks_requeued");
+    let m_leader_failovers = registry.counter("sched.leader_failovers");
     registry.counter("sched.chunks_stolen");
     let m_latency = registry.histogram("sched.chunk_latency_ticks");
     let mut fails: Vec<(u64, usize)> = cfg.failures.iter().map(|f| (f.at, f.worker)).collect();
     fails.sort_unstable();
+    let mut lfails: Vec<u64> = cfg.leader_failures.clone();
+    lfails.sort_unstable();
+    let mut li = 0usize;
     let mut rejoins: Vec<(u64, usize)> = cfg
         .failures
         .iter()
@@ -804,8 +817,11 @@ pub fn simulate_workload(
             if let Some(&(at, _)) = fails.get(fi) {
                 events.push((at, 2));
             }
-            if let Some(at) = next_arrival {
+            if let Some(&at) = lfails.get(li) {
                 events.push((at, 3));
+            }
+            if let Some(at) = next_arrival {
+                events.push((at, 4));
             }
             match events.into_iter().min() {
                 Some((_, 0)) => {
@@ -881,6 +897,31 @@ pub fn simulate_workload(
                         }
                         in_flight = keep;
                     }
+                    now = now.max(at);
+                    progressed = true;
+                }
+                Some((at, 3)) => {
+                    li += 1;
+                    m_leader_failovers.inc();
+                    // The leader's dispatch state dies wholesale: every
+                    // in-flight chunk was tracked only in the old
+                    // leader's pending map, and every issued-but-
+                    // undispatched request holds an id the requeue below
+                    // invalidates. Mirror of Event::LeaderFailover.
+                    in_flight.clear();
+                    pending.clear();
+                    let mut lost = 0usize;
+                    for s in sim.iter_mut() {
+                        if s.state != SimState::Running {
+                            continue;
+                        }
+                        if let Some(run) = s.run.as_mut() {
+                            lost += run.requeue_all_outstanding();
+                        }
+                        s.dispatched = 0;
+                    }
+                    requeued_chunks += lost;
+                    m_requeued.add(lost as u64);
                     now = now.max(at);
                     progressed = true;
                 }
@@ -1151,6 +1192,7 @@ mod tests {
                     preempt,
                     park_aging: 0,
                     failures: vec![],
+                    leader_failures: vec![],
                 };
                 let res = simulate_workload(&jobs, policy.as_ref(), &cfg);
                 assert_eq!(res.completion_order.len(), jobs.len());
@@ -1181,6 +1223,7 @@ mod tests {
             preempt: true,
             park_aging: 0,
             failures: vec![],
+            leader_failures: vec![],
         };
         let a = simulate_workload(&jobs, &StrictPriority, &cfg);
         let b = simulate_workload(&jobs, &StrictPriority, &cfg);
@@ -1207,6 +1250,7 @@ mod tests {
             preempt: true,
             park_aging: 0,
             failures: vec![],
+            leader_failures: vec![],
         };
         let res = simulate_workload(&jobs, &StrictPriority, &cfg);
         assert!(
@@ -1231,6 +1275,7 @@ mod tests {
         let cfg = WorkloadConfig {
             preempt: false,
             failures: vec![],
+            leader_failures: vec![],
             ..cfg
         };
         let res = simulate_workload(&jobs, &StrictPriority, &cfg);
@@ -1257,6 +1302,7 @@ mod tests {
             preempt: false,
             park_aging: 0,
             failures: vec![],
+            leader_failures: vec![],
         };
         let fifo = simulate_workload(&jobs, &Fifo, &cfg);
         let wfs = simulate_workload(&jobs, &WeightedFairShare::default(), &cfg);
@@ -1297,6 +1343,7 @@ mod tests {
             preempt: false,
             park_aging: 0,
             failures: vec![],
+            leader_failures: vec![],
         };
         let res = simulate_workload(&jobs, &Edf, &cfg);
         assert_eq!(res.completion_order, vec![2, 1, 0]);
@@ -1321,6 +1368,7 @@ mod tests {
             preempt: false,
             park_aging: 0,
             failures: vec![],
+            leader_failures: vec![],
         };
         let res = simulate_workload(&jobs, &Fifo, &cfg);
         assert!(res.outcomes[1].expired, "lapsed job must expire");
@@ -1347,6 +1395,7 @@ mod tests {
             workers: 4,
             max_in_flight: 2,
             failures: vec![],
+            leader_failures: vec![],
             chunk: 0,
             preempt: false,
             park_aging: 0,
@@ -1387,6 +1436,7 @@ mod tests {
             preempt: true,
             park_aging: 0,
             failures: vec![],
+            leader_failures: vec![],
         };
         let res = simulate_workload(&jobs, &StrictPriority, &cfg);
         assert!(
@@ -1428,6 +1478,7 @@ mod tests {
             preempt: true,
             park_aging: 0,
             failures: vec![],
+            leader_failures: vec![],
         };
         let starved = simulate_workload(&jobs, &StrictPriority, &base);
         assert_eq!(
@@ -1483,6 +1534,7 @@ mod tests {
             preempt: false,
             park_aging: 0,
             failures: vec![],
+            leader_failures: vec![],
         };
         let clean = simulate_workload(&jobs, &Fifo, &clean_cfg);
         assert_eq!(clean.requeued_chunks, 0);
@@ -1559,6 +1611,7 @@ mod tests {
                     rejoin: None,
                 },
             ],
+            leader_failures: vec![],
         };
         let a = simulate_workload(&jobs, &Fifo, &cfg);
         let b = simulate_workload(&jobs, &Fifo, &cfg);
@@ -1572,5 +1625,59 @@ mod tests {
         // Only the rejoined worker can have completed work after tick 2
         // (everything on worker 1 after the outage was requeued).
         assert!(a.requeued_chunks > 0);
+    }
+
+    #[test]
+    fn injected_leader_failover_requeues_everything_but_changes_no_tree() {
+        // At tick 3 the leader's dispatch state dies wholesale (§15):
+        // every chunk in flight is orphaned and every running job
+        // requeues all outstanding work. The trees must still be
+        // byte-identical to their recordings — failover is pure
+        // recovery overhead, same as the service's Event::LeaderFailover.
+        let jobs: Vec<SimJobSpec> = (0..3)
+            .map(|i| workload_job(170 + i, "t", 1, 0, None))
+            .collect();
+        let total: usize = jobs.iter().map(|j| j.tree.total_analyzed()).sum();
+        let clean_cfg = WorkloadConfig {
+            workers: 3,
+            max_in_flight: 2,
+            chunk: 4,
+            preempt: false,
+            park_aging: 0,
+            failures: vec![],
+            leader_failures: vec![],
+        };
+        let clean = simulate_workload(&jobs, &Fifo, &clean_cfg);
+        let failover_cfg = WorkloadConfig {
+            leader_failures: vec![3],
+            ..clean_cfg
+        };
+        let hit = simulate_workload(&jobs, &Fifo, &failover_cfg);
+        for (i, out) in hit.outcomes.iter().enumerate() {
+            assert_eq!(
+                out.tree, jobs[i].tree,
+                "job {i}: a leader failover must not change the result"
+            );
+        }
+        assert_eq!(hit.completion_order.len(), jobs.len());
+        assert_eq!(hit.metrics.counter("sched.leader_failovers"), 1);
+        assert!(
+            hit.requeued_chunks > 0,
+            "a tick-3 failover must orphan chunks in flight"
+        );
+        assert!(
+            hit.makespan > clean.makespan,
+            "redoing orphaned work must cost virtual time ({} vs {})",
+            hit.makespan,
+            clean.makespan
+        );
+        // Conservation: every analyzed tile completed on exactly one
+        // worker; orphaned attempts are excluded.
+        assert_eq!(hit.per_worker.iter().sum::<usize>(), total);
+        // Same schedule twice ⇒ same trace.
+        let again = simulate_workload(&jobs, &Fifo, &failover_cfg);
+        assert_eq!(again.makespan, hit.makespan);
+        assert_eq!(again.per_worker, hit.per_worker);
+        assert_eq!(again.requeued_chunks, hit.requeued_chunks);
     }
 }

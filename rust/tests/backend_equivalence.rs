@@ -184,7 +184,13 @@ fn killing_a_worker_mid_run_preserves_the_tree() {
     .unwrap();
     let exec = backend.exec_handle();
     let killer = std::thread::spawn(move || {
-        std::thread::sleep(Duration::from_millis(40));
+        // Wait for dealt work rather than sleeping a fixed interval, so
+        // the crash always lands while the victim holds chunks.
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while exec.pending_chunks() == 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert!(exec.pending_chunks() > 0, "run never dealt a chunk");
         assert!(exec.kill_worker(0), "kill order must be deliverable");
     });
     let got = run_on_backend(

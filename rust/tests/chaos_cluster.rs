@@ -1,0 +1,302 @@
+//! Deterministic chaos harness for the decentralized control plane
+//! (DESIGN.md §15): real OS processes, real SIGKILLs, seeded schedules.
+//!
+//! Each scenario spawns a standby, a leader replicating its chunk ledger
+//! to it, and two external worker processes, then kills the leader AND
+//! one worker at times drawn from a seeded PRNG. Whatever the schedule —
+//! kill before the run starts, mid-run, or after it finished — exactly
+//! one invariant must hold: the tree that survives (the leader's `--out`
+//! on a clean finish, the standby's `run_1.json` after a takeover) is
+//! byte-identical to the unfailed in-process run.
+//!
+//! Schedules are reproducible: `CHAOS_SEED=n cargo test -p pyramidai
+//! --test chaos_cluster` replays exactly one seed, and every failure
+//! message leads with the seed that produced it.
+
+use std::io::BufRead;
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use pyramidai::model::oracle::OracleAnalyzer;
+use pyramidai::model::Analyzer;
+use pyramidai::pyramid::driver::run_pyramidal;
+use pyramidai::pyramid::tree::Thresholds;
+use pyramidai::slide::pyramid::Slide;
+use pyramidai::synth::slide_gen::{SlideKind, SlideSpec};
+use pyramidai::util::prng::Pcg32;
+
+const BIN: &str = env!("CARGO_BIN_EXE_pyramidai");
+const SLIDE_SEED: u64 = 5;
+const TILES_X: usize = 16;
+const TILES_Y: usize = 8;
+
+/// Kill-on-drop child wrapper so a failed assertion never leaks
+/// processes into the test runner.
+struct Proc(Child);
+
+impl Drop for Proc {
+    fn drop(&mut self) {
+        let _ = self.0.kill();
+        let _ = self.0.wait();
+    }
+}
+
+/// The tree an unfailed run must produce, in the exact byte format
+/// `pyramidai leader --out` and the standby's `--out-dir` both write.
+fn golden_tree_json() -> String {
+    let spec = SlideSpec::new(
+        format!("cli_{SLIDE_SEED}"),
+        SLIDE_SEED,
+        TILES_X,
+        TILES_Y,
+        3,
+        64,
+        SlideKind::LargeTumor,
+    );
+    let analyzer: Arc<dyn Analyzer> = Arc::new(OracleAnalyzer::new(1));
+    let slide = Slide::from_spec(spec);
+    let thr = Thresholds {
+        zoom: vec![0.5, 0.35, 0.35],
+    };
+    run_pyramidal(&slide, analyzer.as_ref(), &thr, 8)
+        .to_json()
+        .to_string()
+}
+
+/// Poll until `path` exists and is non-empty (the writers rename into
+/// place, so existence means complete content).
+fn wait_for_file(path: &Path, timeout: Duration) -> bool {
+    let deadline = Instant::now() + timeout;
+    while Instant::now() < deadline {
+        if std::fs::metadata(path).map(|m| m.len() > 0).unwrap_or(false) {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    false
+}
+
+fn wait_for_exit(child: &mut Child, timeout: Duration) -> bool {
+    let deadline = Instant::now() + timeout;
+    while Instant::now() < deadline {
+        if child.try_wait().ok().flatten().is_some() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    false
+}
+
+/// One seeded scenario. Returns whether the standby took over (i.e. the
+/// surviving tree came from `run_1.json`).
+fn run_scenario(seed: u64, golden: &str) -> bool {
+    let dir = std::env::temp_dir().join(format!(
+        "pyramidai_chaos_{}_{}",
+        std::process::id(),
+        seed
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let standby_addr_file = dir.join("standby.addr");
+    let leader_addr_file = dir.join("leader.addr");
+    let leader_out = dir.join("leader_tree.json");
+    let out_dir = dir.join("trees");
+
+    // Seeded fault schedule: independent kill delays for the leader and
+    // one worker, both measured from the moment the leader reports its
+    // worker quorum (the start of the run proper).
+    let mut rng = Pcg32::new(0xC4A0_5EED ^ seed);
+    let leader_kill_ms = rng.usize_range(20, 150) as u64;
+    let worker_kill_ms = rng.usize_range(20, 150) as u64;
+
+    let mut standby = Proc(
+        Command::new(BIN)
+            .args([
+                "leader",
+                "--standby",
+                "--listen",
+                "127.0.0.1:0",
+                "--addr-file",
+                standby_addr_file.to_str().unwrap(),
+                "--out-dir",
+                out_dir.to_str().unwrap(),
+                "--model",
+                "oracle",
+                "--analyzer-seed",
+                "1",
+                "--heartbeat-ms",
+                "15",
+            ])
+            .stdout(Stdio::null())
+            .stderr(Stdio::null())
+            .spawn()
+            .expect("spawn standby"),
+    );
+    assert!(
+        wait_for_file(&standby_addr_file, Duration::from_secs(30)),
+        "chaos seed {seed}: standby never published its address"
+    );
+    let standby_addr = std::fs::read_to_string(&standby_addr_file).unwrap();
+
+    let mut leader = Proc(
+        Command::new(BIN)
+            .args([
+                "leader",
+                "--slide-seed",
+                &SLIDE_SEED.to_string(),
+                "--kind",
+                "large_tumor",
+                "--tiles-x",
+                &TILES_X.to_string(),
+                "--tiles-y",
+                &TILES_Y.to_string(),
+                "--workers",
+                "0",
+                "--wait-workers",
+                "2",
+                "--chunk",
+                "4",
+                "--standby-addr",
+                standby_addr.trim(),
+                "--addr-file",
+                leader_addr_file.to_str().unwrap(),
+                "--out",
+                leader_out.to_str().unwrap(),
+                "--model",
+                "oracle",
+                "--analyzer-seed",
+                "1",
+                "--heartbeat-ms",
+                "15",
+            ])
+            .stdout(Stdio::piped())
+            .stderr(Stdio::null())
+            .spawn()
+            .expect("spawn leader"),
+    );
+    assert!(
+        wait_for_file(&leader_addr_file, Duration::from_secs(30)),
+        "chaos seed {seed}: leader never published its address"
+    );
+    let leader_addr = std::fs::read_to_string(&leader_addr_file).unwrap();
+
+    let spawn_worker = || {
+        Proc(
+            Command::new(BIN)
+                .args([
+                    "worker",
+                    "--connect",
+                    leader_addr.trim(),
+                    "--model",
+                    "oracle",
+                    "--analyzer-seed",
+                    "1",
+                    "--per-tile-ms",
+                    "4",
+                ])
+                .stdout(Stdio::null())
+                .stderr(Stdio::null())
+                .spawn()
+                .expect("spawn worker"),
+        )
+    };
+    let mut workers = [spawn_worker(), spawn_worker()];
+
+    // The kill clocks start when the leader confirms its quorum; killing
+    // earlier could strand the run before it ever registered in the
+    // ledger, which tests setup, not failover.
+    {
+        let stdout = leader.0.stdout.take().expect("leader stdout piped");
+        let mut lines = std::io::BufReader::new(stdout).lines();
+        let ready = loop {
+            match lines.next() {
+                Some(Ok(l)) if l.starts_with("workers ready") => break true,
+                Some(Ok(_)) => continue,
+                _ => break false,
+            }
+        };
+        assert!(ready, "chaos seed {seed}: leader exited before quorum");
+        // Keep draining in the background so the leader never blocks on a
+        // full pipe after we stop reading.
+        std::thread::spawn(move || for _ in lines {});
+    }
+
+    let t0 = Instant::now();
+    let victim = (seed % 2) as usize;
+    let mut killed_leader = false;
+    let mut killed_worker = false;
+    while !(killed_leader && killed_worker) {
+        let elapsed = t0.elapsed();
+        if !killed_leader && elapsed >= Duration::from_millis(leader_kill_ms) {
+            let _ = leader.0.kill(); // SIGKILL; no-op if already done
+            killed_leader = true;
+        }
+        if !killed_worker && elapsed >= Duration::from_millis(worker_kill_ms) {
+            let _ = workers[victim].0.kill();
+            killed_worker = true;
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+
+    // The standby exits on its own in every outcome: clean leader
+    // shutdown (no takeover) or takeover + resume of the ledgered runs.
+    assert!(
+        wait_for_exit(&mut standby.0, Duration::from_secs(120)),
+        "chaos seed {seed}: standby never exited \
+         (leader@{leader_kill_ms}ms, worker{victim}@{worker_kill_ms}ms)"
+    );
+
+    let standby_tree = out_dir.join("run_1.json");
+    let (took_over, tree_path): (bool, PathBuf) = if standby_tree.exists() {
+        (true, standby_tree)
+    } else {
+        (false, leader_out.clone())
+    };
+    assert!(
+        tree_path.exists(),
+        "chaos seed {seed}: no tree survived \
+         (leader@{leader_kill_ms}ms, worker{victim}@{worker_kill_ms}ms)"
+    );
+    let got = std::fs::read_to_string(&tree_path).unwrap();
+    assert_eq!(
+        got, golden,
+        "chaos seed {seed}: tree diverged from the unfailed run \
+         (leader@{leader_kill_ms}ms, worker{victim}@{worker_kill_ms}ms, \
+         took_over={took_over})"
+    );
+
+    // Reap the children before removing their tempdir.
+    drop(workers);
+    drop(leader);
+    drop(standby);
+    let _ = std::fs::remove_dir_all(&dir);
+    took_over
+}
+
+#[test]
+fn seeded_kill_schedules_never_change_the_tree() {
+    let golden = golden_tree_json();
+    let seeds: Vec<u64> = match std::env::var("CHAOS_SEED") {
+        Ok(s) => vec![s.parse().expect("CHAOS_SEED must be an integer")],
+        Err(_) => (1..=8).collect(),
+    };
+    let mut takeovers = 0usize;
+    for &seed in &seeds {
+        eprintln!("chaos seed {seed}: starting");
+        if run_scenario(seed, &golden) {
+            takeovers += 1;
+        }
+        eprintln!("chaos seed {seed}: ok");
+    }
+    // With kill times of 20–150 ms against a run slowed to ~4 ms/tile,
+    // the full default schedule must exercise the takeover path at least
+    // once; a single CHAOS_SEED replay may legitimately miss it.
+    if seeds.len() >= 8 {
+        assert!(
+            takeovers > 0,
+            "no seed exercised a standby takeover — kill windows too late?"
+        );
+    }
+}

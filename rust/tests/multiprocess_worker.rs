@@ -40,6 +40,7 @@ fn external_cfg(workers: usize, external: usize, seed: u64) -> ClusterExecConfig
             "1".to_string(),
         ],
         v1_json_workers: 0,
+        ..ClusterExecConfig::default()
     }
 }
 
@@ -136,7 +137,14 @@ fn killed_external_worker_process_does_not_change_the_tree() {
     );
     let exec = backend.exec_handle();
     let killer = std::thread::spawn(move || {
-        std::thread::sleep(Duration::from_millis(30));
+        // Readiness-driven, not a fixed sleep: wait until the leader has
+        // actually dealt chunks, so the SIGKILL is guaranteed to land
+        // while work is outstanding instead of racing the run's start.
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        while exec.pending_chunks() == 0 && std::time::Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert!(exec.pending_chunks() > 0, "run never dealt a chunk");
         assert!(exec.kill_external_worker(0), "a child process must die");
     });
     let got = run_on_backend(

@@ -11,16 +11,22 @@ use std::net::TcpStream;
 use std::sync::Arc;
 use std::time::Duration;
 
+use std::collections::{HashMap, HashSet};
+
 use pyramidai::cluster::framev2::{
-    decode_body, encode_body, FrameError, MAGIC, TAG_CHUNK_DONE, TAG_CHUNK_MOVED, VERSION,
+    decode_body, encode_body, FrameError, MAGIC, TAG_CHUNK_DONE, TAG_CHUNK_MOVED, TAG_LEDGER,
+    VERSION,
 };
+use pyramidai::cluster::ledger::pack_key;
 use pyramidai::cluster::proto::{ChunkTask, Msg};
-use pyramidai::cluster::{ClusterExec, ClusterExecConfig};
+use pyramidai::cluster::{ClusterExec, ClusterExecConfig, LedgerOp, LedgerRecord, LedgerState};
 use pyramidai::model::oracle::OracleAnalyzer;
 use pyramidai::model::Analyzer;
 use pyramidai::slide::pyramid::Slide;
 use pyramidai::slide::tile::TileId;
 use pyramidai::synth::slide_gen::{SlideKind, SlideSpec};
+use pyramidai::util::prng::Pcg32;
+use pyramidai::util::quickcheck::forall_explain;
 
 fn sample_chunk(key: u64) -> ChunkTask {
     ChunkTask {
@@ -49,6 +55,39 @@ fn valid_bodies() -> Vec<Vec<u8>> {
             trace: 10,
         },
         Msg::ChunkBatch(vec![sample_chunk(4), sample_chunk(5)]),
+        // Replicated-ledger records (§15): every op variant rides the same
+        // wire, so the truncation/bit-flip sweeps below cover them too.
+        Msg::Ledger(LedgerRecord {
+            seq: 1,
+            op: LedgerOp::RunStart {
+                run: 1,
+                spec: SlideSpec::new("sec", 42, 16, 8, 3, 64, SlideKind::LargeTumor),
+                thresholds: vec![0.5, 0.35, 0.35],
+                initial: vec![TileId::new(2, 0, 0), TileId::new(2, 1, 1)],
+                chunk: 4,
+            },
+        }),
+        Msg::Ledger(LedgerRecord {
+            seq: 2,
+            op: LedgerOp::Append(sample_chunk(pack_key(1, 6))),
+        }),
+        Msg::Ledger(LedgerRecord {
+            seq: 3,
+            op: LedgerOp::Ack {
+                key: pack_key(1, 6),
+                probs: vec![0.1, 0.9],
+            },
+        }),
+        Msg::Ledger(LedgerRecord {
+            seq: 4,
+            op: LedgerOp::Lost {
+                key: pack_key(1, 6),
+            },
+        }),
+        Msg::Ledger(LedgerRecord {
+            seq: 5,
+            op: LedgerOp::RunDone { run: 1 },
+        }),
     ];
     msgs.iter()
         .map(|m| {
@@ -237,4 +276,243 @@ fn live_cluster_survives_socket_garbage() {
     };
     assert_eq!(got, want);
     exec.shutdown();
+}
+
+/// Corrupt ledger op byte: refused as a typed error, like any bad tag.
+#[test]
+fn unknown_ledger_op_is_a_typed_error() {
+    let mut body = vec![MAGIC, VERSION, TAG_LEDGER];
+    body.extend_from_slice(&7u64.to_le_bytes()); // seq
+    body.push(99); // no such op
+    assert_eq!(decode_body(&body), Err(FrameError::BadTag(99)));
+}
+
+/// What the leader knows at the moment it emits a record — the oracle the
+/// standby's replay is checked against.
+#[derive(Debug, Default)]
+struct LiveRun {
+    pending: HashSet<u64>,
+    done: HashMap<u64, Vec<f32>>,
+    blind_acks: usize,
+    complete: bool,
+    appended: HashSet<u64>,
+}
+
+/// Seeded leader simulation: an arbitrary interleaving of
+/// start/append/ack/lost/truncate ops across up to three concurrent runs,
+/// with strictly increasing sequence numbers, plus the matching live
+/// state at every step.
+fn gen_schedule(rng: &mut Pcg32) -> (Vec<LedgerRecord>, HashMap<u64, LiveRun>) {
+    let runs: Vec<u64> = (1..=(rng.usize_range(1, 4) as u64)).collect();
+    let mut live: HashMap<u64, LiveRun> = HashMap::new();
+    let mut recs = Vec::new();
+    let mut seq = 0u64;
+    let mut next_req: HashMap<u64, u64> = HashMap::new();
+    let steps = rng.usize_range(5, 60);
+    for _ in 0..steps {
+        let run = *rng.choose(&runs).unwrap();
+        let started = live.contains_key(&run);
+        let complete = started && live[&run].complete;
+        if complete {
+            continue;
+        }
+        seq += 1;
+        let op = if !started {
+            live.insert(run, LiveRun::default());
+            LedgerOp::RunStart {
+                run,
+                spec: SlideSpec::new(
+                    format!("prop_{run}"),
+                    run,
+                    16,
+                    8,
+                    3,
+                    64,
+                    SlideKind::LargeTumor,
+                ),
+                thresholds: vec![0.5, 0.35, 0.35],
+                initial: vec![TileId::new(2, 0, 0)],
+                chunk: 4,
+            }
+        } else {
+            let state = live.get_mut(&run).unwrap();
+            let outstanding: Vec<u64> = state.pending.iter().copied().collect();
+            match rng.usize_range(0, 10) {
+                0..=3 => {
+                    let req = next_req.entry(run).or_insert(0);
+                    let key = pack_key(run, *req);
+                    *req += 1;
+                    state.pending.insert(key);
+                    state.appended.insert(key);
+                    LedgerOp::Append(sample_chunk(key))
+                }
+                4..=6 if !outstanding.is_empty() => {
+                    let key = outstanding[rng.usize_range(0, outstanding.len())];
+                    let probs = vec![rng.f32(), rng.f32()];
+                    state.pending.remove(&key);
+                    state.done.insert(key, probs.clone());
+                    LedgerOp::Ack { key, probs }
+                }
+                7 if !outstanding.is_empty() => {
+                    let key = outstanding[rng.usize_range(0, outstanding.len())];
+                    state.pending.remove(&key);
+                    LedgerOp::Lost { key }
+                }
+                8 => {
+                    // Ack for a chunk whose Append the leader never dealt
+                    // under this run id (e.g. a pre-failover orphan): the
+                    // replay must park it as a blind ack, not invent work.
+                    state.blind_acks += 1;
+                    LedgerOp::Ack {
+                        key: pack_key(run, 1_000_000),
+                        probs: vec![0.5],
+                    }
+                }
+                _ => {
+                    // Truncation: RunDone clears the run's recovery state.
+                    state.pending.clear();
+                    state.done.clear();
+                    state.blind_acks = 0;
+                    state.complete = true;
+                    LedgerOp::RunDone { run }
+                }
+            }
+        };
+        recs.push(LedgerRecord { seq, op });
+    }
+    (recs, live)
+}
+
+/// Encode one record to a v2 body and decode it back, as the repl wire
+/// would.
+fn wire_roundtrip(rec: &LedgerRecord) -> LedgerRecord {
+    let mut body = Vec::new();
+    assert!(encode_body(&Msg::Ledger(rec.clone()), &mut body));
+    match decode_body(&body) {
+        Ok(Msg::Ledger(back)) => back,
+        other => panic!("ledger frame decoded as {other:?}"),
+    }
+}
+
+fn check_against_live(state: &LedgerState, live: &HashMap<u64, LiveRun>) -> Result<(), String> {
+    for (run, l) in live {
+        let r = state
+            .runs
+            .get(run)
+            .ok_or_else(|| format!("run {run} missing after replay"))?;
+        if r.complete != l.complete {
+            return Err(format!("run {run}: complete {} vs live {}", r.complete, l.complete));
+        }
+        let pending: HashSet<u64> = r.pending.keys().copied().collect();
+        if pending != l.pending {
+            return Err(format!("run {run}: pending {pending:?} vs live {:?}", l.pending));
+        }
+        let done: HashMap<u64, Vec<f32>> =
+            r.done.iter().map(|(k, (_, p))| (*k, p.clone())).collect();
+        if done != l.done {
+            return Err(format!("run {run}: done sets diverge"));
+        }
+        if r.blind_acks.len() != l.blind_acks {
+            return Err(format!(
+                "run {run}: {} blind acks vs live {}",
+                r.blind_acks.len(),
+                l.blind_acks
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn replayed_ledger_matches_live_state_even_with_duplicate_delivery() {
+    // Property: for any interleaving of ops across concurrent runs, a
+    // standby that replays the wire-roundtripped records — including
+    // reconnect-style duplicate re-delivery of an arbitrary suffix —
+    // reconstructs exactly the pending/done/blind/complete sets the
+    // leader's live ledger held.
+    forall_explain(
+        0x1ED6E4,
+        150,
+        |rng| {
+            let (recs, live) = gen_schedule(rng);
+            // Reconnect replay: re-deliver a suffix of what was already
+            // streamed, possibly several times.
+            let mut delivered = Vec::new();
+            for (i, rec) in recs.iter().enumerate() {
+                delivered.push(rec.clone());
+                if rng.bool(0.1) && i > 0 {
+                    let from = rng.usize_range(0, i);
+                    delivered.extend(recs[from..=i].iter().cloned());
+                }
+            }
+            (delivered, recs.len(), live)
+        },
+        |(delivered, n_unique, live)| {
+            let mut state = LedgerState::new();
+            for rec in delivered {
+                state.apply(&wire_roundtrip(rec));
+            }
+            check_against_live(&state, live)?;
+            let dups = (delivered.len() - n_unique) as u64;
+            if state.duplicates != dups {
+                return Err(format!(
+                    "{} duplicates counted, {dups} injected",
+                    state.duplicates
+                ));
+            }
+            if state.orphaned != 0 {
+                return Err(format!("{} orphaned records", state.orphaned));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn ledger_replay_tolerates_arbitrary_gaps() {
+    // Dropped records (the repl link gives up after bounded retries) must
+    // never panic or corrupt the state: whatever survives is a subset of
+    // what the live leader knew, and completed runs stay recognizable
+    // whenever their RunDone made it through.
+    forall_explain(
+        0x6A95,
+        150,
+        |rng| {
+            let (recs, live) = gen_schedule(rng);
+            let kept: Vec<LedgerRecord> =
+                recs.into_iter().filter(|_| !rng.bool(0.3)).collect();
+            (kept, live)
+        },
+        |(kept, live)| {
+            let mut state = LedgerState::new();
+            for rec in kept {
+                state.apply(&wire_roundtrip(rec));
+            }
+            for (run, r) in &state.runs {
+                let l = live
+                    .get(run)
+                    .ok_or_else(|| format!("replay invented run {run}"))?;
+                for key in r.pending.keys() {
+                    if !l.appended.contains(key) {
+                        return Err(format!("run {run}: pending {key} never appended live"));
+                    }
+                }
+                for (key, (_, probs)) in &r.done {
+                    match l.done.get(key) {
+                        Some(p) if p == probs => {}
+                        Some(_) => return Err(format!("run {run}: done {key} probs diverge")),
+                        None => {
+                            return Err(format!("run {run}: done {key} not done live"))
+                        }
+                    }
+                }
+            }
+            for run in state.incomplete_runs() {
+                if !live.contains_key(&run) {
+                    return Err(format!("incomplete run {run} never started live"));
+                }
+            }
+            Ok(())
+        },
+    );
 }

@@ -490,6 +490,79 @@ fn cluster_worker_loss_mid_service_recovers_and_is_reported() {
     assert_eq!(faults.workers_lost, 1, "the crash must be detected and counted");
 }
 
+/// §15 at the service layer: the leader's entire dispatch state vanishes
+/// mid-run — exactly what a standby that took over from a crashed leader
+/// presents to the scheduler (workers alive, pending map empty). The
+/// scheduler must count the failover, requeue every outstanding cluster
+/// chunk, and finish every job with the standalone-driver tree.
+#[test]
+fn leader_failover_mid_service_requeues_and_completes() {
+    use pyramidai::cluster::ClusterExecConfig;
+    use pyramidai::service::ExecMode;
+
+    let specs: Vec<SlideSpec> = (0..3).map(|i| spec(750 + i, SlideKind::LargeTumor)).collect();
+    let thr = thresholds();
+    let solo: Vec<_> = specs
+        .iter()
+        .map(|sp| {
+            let slide = Slide::from_spec(sp.clone());
+            run_pyramidal(&slide, oracle().as_ref(), &thr, 8)
+        })
+        .collect();
+
+    let svc = AnalysisService::start(
+        slow_oracle(2),
+        ServiceConfig {
+            workers: 2,
+            queue_capacity: 8,
+            max_in_flight: 3,
+            batch: 6,
+            policy: PolicySpec::fifo(),
+            exec: ExecMode::Cluster(ClusterExecConfig {
+                workers: 2,
+                steal: true,
+                seed: 53,
+                ..ClusterExecConfig::default()
+            }),
+            ..ServiceConfig::default()
+        },
+    );
+    let cluster = svc.cluster().expect("cluster mode exposes the handle");
+    let ids: Vec<_> = specs
+        .iter()
+        .map(|sp| {
+            svc.submit(JobSpec::new(JobSource::Spec(sp.clone()), thr.clone()))
+                .unwrap()
+        })
+        .collect();
+    // Fire the failover only once chunks are genuinely in flight, so the
+    // injection is guaranteed to hit dispatched work (readiness-driven,
+    // not a fixed sleep).
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    while cluster.pending_chunks() == 0 && std::time::Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    assert!(cluster.pending_chunks() > 0, "no chunks were ever dealt");
+    let dropped = cluster.trigger_failover();
+    assert!(dropped > 0, "failover must drop the in-flight chunks");
+
+    let report = svc.shutdown();
+    assert_eq!(report.metrics.completed, specs.len(), "no job may wedge");
+    assert!(
+        report.sched_metrics.counter("sched.leader_failovers") >= 1,
+        "the scheduler must count the failover it absorbed"
+    );
+    for (i, id) in ids.iter().enumerate() {
+        let r = report.job(*id).unwrap();
+        assert_eq!(r.state, JobState::Completed, "job {i}");
+        assert_eq!(
+            r.tree.as_ref().unwrap().nodes,
+            solo[i].nodes,
+            "leader failover changed job {i}'s tree"
+        );
+    }
+}
+
 #[test]
 fn coalescing_toggle_does_not_change_trees() {
     let specs: Vec<SlideSpec> = (0..4).map(|i| spec(720 + i, SlideKind::LargeTumor)).collect();
