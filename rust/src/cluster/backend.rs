@@ -102,6 +102,19 @@ pub struct ClusterExecConfig {
     /// Consecutive failed probes before a worker is declared dead and its
     /// pending chunks are resubmitted. Clamped to ≥ 1.
     pub max_missed: u32,
+    /// Gray-failure detection: a probe RTT above this threshold counts
+    /// as a *slow* probe. A worker that answers — but slowly — for
+    /// [`ClusterExecConfig::gray_strikes`] consecutive probes is
+    /// quarantined (drained and excluded from placement, but still
+    /// probed) instead of declared dead; once it answers fast for
+    /// [`ClusterExecConfig::gray_probation`] consecutive probes it is
+    /// reinstated. `None` disables gray detection.
+    pub gray_rtt: Option<Duration>,
+    /// Consecutive slow probes before quarantine. Clamped to ≥ 1.
+    pub gray_strikes: u32,
+    /// Consecutive healthy probes before a quarantined worker is
+    /// reinstated. Clamped to ≥ 1.
+    pub gray_probation: u32,
     /// Also spawn this many workers as *separate OS processes* running
     /// `<external_program> worker --connect <leader addr>` — the
     /// multi-process mode where workers really are isolated machines
@@ -141,6 +154,9 @@ impl Default for ClusterExecConfig {
             seed: 0x5EED,
             heartbeat: Duration::from_millis(25),
             max_missed: 4,
+            gray_rtt: None,
+            gray_strikes: 3,
+            gray_probation: 2,
             external_workers: 0,
             external_program: String::new(),
             external_args: Vec::new(),
@@ -203,6 +219,11 @@ pub struct FaultStats {
     pub chunks_resubmitted: usize,
     /// Chunks abandoned to the dispatcher as [`ExecEvent::Lost`].
     pub chunks_abandoned: usize,
+    /// Workers quarantined as gray (slow-but-answering) — drained, not
+    /// declared dead.
+    pub workers_quarantined: usize,
+    /// Quarantined workers reinstated after a healthy probation.
+    pub workers_reinstated: usize,
 }
 
 /// One registered worker, indexed by id. Ids are never reused: a lost
@@ -215,6 +236,13 @@ struct WorkerSlot {
     addr: String,
     alive: bool,
     missed: u32,
+    /// Quarantined as gray (slow-but-answering): excluded from placement
+    /// and stealing, still probed, not counted dead.
+    quarantined: bool,
+    /// Consecutive probes whose RTT exceeded the gray threshold.
+    slow_probes: u32,
+    /// Consecutive healthy probes since quarantine (probation progress).
+    probation_ok: u32,
     /// Negotiated wire encoding for frames *sent to* this worker; what
     /// the worker sends back is its own choice (every reader
     /// auto-detects), but the negotiation keeps both directions aligned.
@@ -232,6 +260,9 @@ impl WorkerSlot {
             addr,
             alive: true,
             missed: 0,
+            quarantined: false,
+            slow_probes: 0,
+            probation_ok: 0,
             wire,
             rtt_ewma_us: 0.0,
             rtt_jitter_us: 0.0,
@@ -290,6 +321,10 @@ struct ExecState {
     /// duplicates by seq).
     ledger_seq: AtomicU64,
     max_missed: u32,
+    /// Gray-failure thresholds (see [`ClusterExecConfig::gray_rtt`]).
+    gray_rtt: Option<Duration>,
+    gray_strikes: u32,
+    gray_probation: u32,
     workers: Mutex<Vec<WorkerSlot>>,
     pending: Mutex<HashMap<u64, PendingChunk>>,
     rr: AtomicUsize,
@@ -301,6 +336,8 @@ struct ExecState {
     workers_joined: AtomicUsize,
     chunks_resubmitted: AtomicUsize,
     chunks_abandoned: AtomicUsize,
+    workers_quarantined: AtomicUsize,
+    workers_reinstated: AtomicUsize,
 }
 
 impl ExecState {
@@ -311,8 +348,22 @@ impl ExecState {
             .unwrap()
             .iter()
             .enumerate()
-            .filter(|(_, s)| s.alive)
+            .filter(|(_, s)| s.alive && !s.quarantined)
             .map(|(i, s)| (i, s.addr.clone(), s.wire))
+            .collect()
+    }
+
+    /// Snapshot of every worker the monitor must probe: the live ones,
+    /// *including* quarantined grays (they stay probed so they can be
+    /// reinstated — or declared dead if they stop answering entirely).
+    fn probe_targets(&self) -> Vec<(usize, String)> {
+        self.workers
+            .lock()
+            .unwrap()
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.alive)
+            .map(|(i, s)| (i, s.addr.clone()))
             .collect()
     }
 
@@ -418,6 +469,9 @@ impl ClusterExec {
             repl: repl_tx,
             ledger_seq: AtomicU64::new(1),
             max_missed: cfg.max_missed.max(1),
+            gray_rtt: cfg.gray_rtt,
+            gray_strikes: cfg.gray_strikes.max(1),
+            gray_probation: cfg.gray_probation.max(1),
             workers: Mutex::new(
                 peer_addrs
                     .iter()
@@ -433,6 +487,8 @@ impl ClusterExec {
             workers_joined: AtomicUsize::new(0),
             chunks_resubmitted: AtomicUsize::new(0),
             chunks_abandoned: AtomicUsize::new(0),
+            workers_quarantined: AtomicUsize::new(0),
+            workers_reinstated: AtomicUsize::new(0),
         });
 
         // In-process workers talk to the leader over loopback no matter
@@ -527,16 +583,9 @@ impl ClusterExec {
     /// returns whether the quorum was reached. Useful after spawning
     /// external workers, whose Hello handshake completes asynchronously.
     pub fn wait_for_workers(&self, n: usize, timeout: Duration) -> bool {
-        let deadline = Instant::now() + timeout;
-        loop {
-            if self.alive_workers() >= n {
-                return true;
-            }
-            if Instant::now() >= deadline {
-                return false;
-            }
-            std::thread::sleep(Duration::from_millis(5));
-        }
+        crate::fault::poll_until(timeout, Duration::from_millis(5), || {
+            self.alive_workers() >= n
+        })
     }
 
     /// Chunks currently dealt to workers and awaiting completion (the
@@ -554,7 +603,34 @@ impl ClusterExec {
             workers_joined: self.state.workers_joined.load(Ordering::Relaxed),
             chunks_resubmitted: self.state.chunks_resubmitted.load(Ordering::Relaxed),
             chunks_abandoned: self.state.chunks_abandoned.load(Ordering::Relaxed),
+            workers_quarantined: self.state.workers_quarantined.load(Ordering::Relaxed),
+            workers_reinstated: self.state.workers_reinstated.load(Ordering::Relaxed),
         }
+    }
+
+    /// Workers currently quarantined as gray (alive, excluded from
+    /// placement).
+    pub fn quarantined_workers(&self) -> usize {
+        self.state
+            .workers
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|s| s.alive && s.quarantined)
+            .count()
+    }
+
+    /// Reachable addresses of every currently-registered worker, by id
+    /// (dead slots included, as `None`). Lets tests and chaos harnesses
+    /// scope fault-plan rules to one specific worker.
+    pub fn worker_addrs(&self) -> Vec<Option<String>> {
+        self.state
+            .workers
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|s| s.alive.then(|| s.addr.clone()))
+            .collect()
     }
 
     /// Deal one chunk to a live worker (round-robin; stealing
@@ -845,9 +921,12 @@ fn try_send(addr: &str, msg: &Msg) -> Result<()> {
 fn replication_loop(standby: &str, rx: Receiver<Msg>) {
     let mut conn: Option<TcpStream> = None;
     let mut buf = FrameBuf::new();
+    // ~2s total patience per record, as before, but with jittered
+    // backoff instead of 20 lockstep 100ms naps.
+    let policy = crate::fault::RetryPolicy::link(Duration::from_secs(2));
     while let Ok(msg) = rx.recv() {
         let is_shutdown = matches!(msg, Msg::Shutdown);
-        let mut attempts = 0u32;
+        let mut backoff = crate::fault::Backoff::new("cluster.ledger_repl", &policy);
         loop {
             if conn.is_none() {
                 if let Ok(s) = TcpStream::connect(standby) {
@@ -861,8 +940,7 @@ fn replication_loop(standby: &str, rx: Receiver<Msg>) {
                 }
                 conn = None; // stale stream: reconnect and retry
             }
-            attempts += 1;
-            if attempts >= 20 {
+            if !backoff.sleep() {
                 obs::global_metrics().counter("cluster.ledger_dropped").inc();
                 obs::event(
                     Level::Warn,
@@ -872,7 +950,6 @@ fn replication_loop(standby: &str, rx: Receiver<Msg>) {
                 );
                 break;
             }
-            std::thread::sleep(Duration::from_millis(100));
         }
         if is_shutdown {
             return;
@@ -1039,6 +1116,7 @@ fn leader_loop(listener: TcpListener, state: Arc<ExecState>, tx: Sender<ExecEven
                 if state.done.load(Ordering::Acquire) {
                     return;
                 }
+                // timer: non-blocking accept nap, not a retry loop
                 std::thread::sleep(Duration::from_micros(200));
             }
             Err(_) => return,
@@ -1056,11 +1134,11 @@ fn monitor_loop(state: Arc<ExecState>, tx: Sender<ExecEvent>, heartbeat: Duratio
     let floor = heartbeat.max(Duration::from_millis(20));
     let cap = floor * 4;
     loop {
-        std::thread::sleep(heartbeat);
+        std::thread::sleep(heartbeat); // timer: heartbeat cadence
         if state.done.load(Ordering::Acquire) {
             return;
         }
-        for (id, addr, _) in state.alive_addrs() {
+        for (id, addr) in state.probe_targets() {
             if state.done.load(Ordering::Acquire) {
                 return;
             }
@@ -1074,9 +1152,86 @@ fn monitor_loop(state: Arc<ExecState>, tx: Sender<ExecEvent>, heartbeat: Duratio
                 obs::global_metrics()
                     .histogram("cluster.probe_rtt_us")
                     .record(rtt.as_micros() as u64);
-                if let Some(s) = state.workers.lock().unwrap().get_mut(id) {
-                    s.missed = 0;
-                    s.observe_rtt(rtt);
+                // Gray detection: the worker answered, but how fast?
+                // `None` = no transition, `Some(true)` = quarantined,
+                // `Some(false)` = reinstated.
+                let transition = {
+                    let mut ws = state.workers.lock().unwrap();
+                    match ws.get_mut(id) {
+                        Some(s) => {
+                            s.missed = 0;
+                            s.observe_rtt(rtt);
+                            let slow = state.gray_rtt.is_some_and(|thr| rtt > thr);
+                            if s.quarantined {
+                                if slow {
+                                    s.probation_ok = 0;
+                                    None
+                                } else {
+                                    s.probation_ok += 1;
+                                    if s.probation_ok >= state.gray_probation {
+                                        s.quarantined = false;
+                                        s.slow_probes = 0;
+                                        s.probation_ok = 0;
+                                        Some(false)
+                                    } else {
+                                        None
+                                    }
+                                }
+                            } else if slow {
+                                s.slow_probes += 1;
+                                if s.slow_probes >= state.gray_strikes {
+                                    s.quarantined = true;
+                                    s.probation_ok = 0;
+                                    Some(true)
+                                } else {
+                                    None
+                                }
+                            } else {
+                                s.slow_probes = 0;
+                                None
+                            }
+                        }
+                        None => None,
+                    }
+                };
+                match transition {
+                    Some(true) => {
+                        state.workers_quarantined.fetch_add(1, Ordering::Relaxed);
+                        obs::global_metrics()
+                            .counter("cluster.workers_quarantined")
+                            .inc();
+                        obs::event(
+                            Level::Warn,
+                            "cluster",
+                            "worker_quarantined",
+                            &[
+                                ("worker", id.into()),
+                                ("addr", addr.clone().into()),
+                                ("rtt_us", (rtt.as_micros() as u64).into()),
+                            ],
+                        );
+                        // Drain: its chunks go back through the normal
+                        // resubmission path; the worker itself stays
+                        // alive and keeps getting probed.
+                        redeal_chunks(&state, &tx, Some(id));
+                    }
+                    Some(false) => {
+                        state.workers_reinstated.fetch_add(1, Ordering::Relaxed);
+                        obs::global_metrics()
+                            .counter("cluster.workers_reinstated")
+                            .inc();
+                        obs::event(
+                            Level::Info,
+                            "cluster",
+                            "worker_reinstated",
+                            &[
+                                ("worker", id.into()),
+                                ("addr", addr.clone().into()),
+                                ("rtt_us", (rtt.as_micros() as u64).into()),
+                            ],
+                        );
+                    }
+                    None => {}
                 }
                 continue;
             }
@@ -1447,6 +1602,8 @@ fn run_exec_worker(cfg: ExecWorkerConfig, listener: TcpListener, analyzer: Arc<d
                 } else {
                     Duration::from_secs(5)
                 };
+                let upload_policy = crate::fault::RetryPolicy::link(Duration::from_secs(60));
+                let mut backoff = crate::fault::Backoff::new("cluster.upload", &upload_policy);
                 while send_wire_deadline(&cfg.link.leader(), &msg, cfg.wire, patience, &mut wire_buf)
                     .is_err()
                 {
@@ -1458,12 +1615,18 @@ fn run_exec_worker(cfg: ExecWorkerConfig, listener: TcpListener, analyzer: Arc<d
                         && rehello(&cfg.link, &cfg.advertise_host, my_port, cfg.wire)
                     {
                         upload_fails = 0;
+                        backoff.reset();
                         if let Msg::ChunkDone { worker, .. } = &mut msg {
                             *worker = cfg.link.id();
                         }
                         continue;
                     }
-                    std::thread::sleep(Duration::from_millis(10));
+                    if !backoff.sleep() {
+                        // Never abandon a result while the cluster lives
+                        // (a silently dropped ChunkDone strands the run);
+                        // rewind and keep trying at the capped cadence.
+                        backoff.reset();
+                    }
                 }
                 probe_fails = 0;
                 last_probe = Instant::now();
@@ -1533,6 +1696,7 @@ fn run_exec_worker(cfg: ExecWorkerConfig, listener: TcpListener, analyzer: Arc<d
                 // Exponential backoff while idle: persistent workers sit
                 // between frontiers without hammering their victims.
                 idle_streak = (idle_streak + 1).min(6);
+                // timer: idle pacing between frontiers, not a retry loop
                 std::thread::sleep(Duration::from_micros(200) * (1u32 << idle_streak));
             }
         }
@@ -1597,6 +1761,7 @@ fn exec_listen_loop(listener: TcpListener, shared: Arc<ExecShared>) {
                 if shared.done.load(Ordering::Acquire) {
                     return;
                 }
+                // timer: non-blocking accept nap, not a retry loop
                 std::thread::sleep(Duration::from_micros(200));
             }
             Err(_) => return,
@@ -2176,5 +2341,96 @@ mod tests {
         assert_eq!(exec.fault_stats().workers_joined, 1);
         exec.shutdown();
         joiner.join().expect("worker thread").expect("worker ok");
+    }
+
+    #[test]
+    fn gray_worker_is_quarantined_then_reinstated_without_dying() {
+        use crate::fault::{FaultKind, FaultPlan, FaultRule};
+        // §16 gray failure: a worker that still answers probes, just
+        // slowly (injected 20–25 ms link latency against a 5 ms gray
+        // threshold). The monitor must quarantine it — drained, excluded
+        // from placement, still probed — and reinstate it after a
+        // healthy probation, without ever declaring it dead.
+        let _guard = crate::fault::test_guard();
+        crate::fault::clear();
+        let analyzer: Arc<dyn Analyzer> = Arc::new(OracleAnalyzer::new(1));
+        let exec = ClusterExec::start(
+            Arc::clone(&analyzer),
+            &ClusterExecConfig {
+                workers: 2,
+                steal: false,
+                seed: 9,
+                heartbeat: Duration::from_millis(10),
+                // Death takes 10 misses; the gray worker must never
+                // accumulate even one (its probes succeed, slowly).
+                max_missed: 10,
+                gray_rtt: Some(Duration::from_millis(5)),
+                gray_strikes: 2,
+                gray_probation: 2,
+                ..ClusterExecConfig::default()
+            },
+        )
+        .unwrap();
+        let victim = exec
+            .worker_addrs()
+            .into_iter()
+            .flatten()
+            .next()
+            .expect("a live worker to slow down");
+        // 20–25 ms per matching net op: far past the gray threshold,
+        // comfortably under the 80 ms adaptive probe cap (4× the 20 ms
+        // floor), so probes succeed-but-slow instead of timing out.
+        crate::fault::install(FaultPlan::new(0xC0FFEE).rule(FaultRule {
+            kind: FaultKind::NetDelay {
+                min_us: 20_000,
+                max_us: 25_000,
+            },
+            p: 1.0,
+            peer: Some(victim.clone()),
+            path: None,
+            after_ms: 0,
+            dur_ms: None,
+        }));
+        let quarantined = crate::fault::poll_until(
+            Duration::from_secs(20),
+            Duration::from_millis(5),
+            || exec.fault_stats().workers_quarantined >= 1,
+        );
+        assert!(quarantined, "slow-but-alive worker must be quarantined");
+        assert_eq!(exec.quarantined_workers(), 1);
+        assert_eq!(
+            exec.alive_workers(),
+            1,
+            "quarantine excludes the gray worker from placement"
+        );
+        assert_eq!(exec.fault_stats().workers_lost, 0, "gray is not dead");
+
+        // The cluster still completes work while the gray worker drains:
+        // everything lands on the healthy one.
+        let sp = spec(430);
+        let slide = Slide::from_spec(sp.clone());
+        let tiles = slide.level_tile_ids(2);
+        let want = analyzer.analyze(&slide, 2, &tiles);
+        exec.submit(1, &sp, 2, tiles).unwrap();
+        let (key, probs) = exec.recv_result().expect("cluster alive");
+        assert_eq!(key, 1);
+        assert_eq!(probs, want);
+
+        // Heal the link: two healthy probes (probation) reinstate it.
+        crate::fault::clear();
+        let reinstated = crate::fault::poll_until(
+            Duration::from_secs(20),
+            Duration::from_millis(5),
+            || exec.fault_stats().workers_reinstated >= 1,
+        );
+        assert!(reinstated, "healthy probation must reinstate the worker");
+        assert_eq!(exec.quarantined_workers(), 0);
+        assert_eq!(exec.alive_workers(), 2);
+        assert_eq!(
+            exec.fault_stats().workers_lost,
+            0,
+            "a gray worker is never declared dead"
+        );
+        exec.shutdown();
     }
 }

@@ -212,21 +212,11 @@ pub(crate) fn send_wire_deadline(
     patience: Duration,
     buf: &mut FrameBuf,
 ) -> Result<()> {
-    let mut delay = Duration::from_micros(200);
-    let deadline = Instant::now() + patience;
-    loop {
-        match TcpStream::connect(addr) {
-            Ok(mut stream) => {
-                stream.set_nodelay(true).ok();
-                return msg.write_wire(&mut stream, wire, buf);
-            }
-            Err(e) => {
-                if Instant::now() > deadline {
-                    return Err(e).with_context(|| format!("connect {addr}"));
-                }
-                std::thread::sleep(delay);
-                delay = (delay * 2).min(Duration::from_millis(50));
-            }
-        }
-    }
+    let policy = crate::fault::RetryPolicy::connect(patience);
+    let mut stream = crate::fault::retry::retry("cluster.connect", &policy, || {
+        TcpStream::connect(addr)
+    })
+    .with_context(|| format!("connect {addr}"))?;
+    stream.set_nodelay(true).ok();
+    msg.write_wire(&mut stream, wire, buf)
 }

@@ -529,6 +529,9 @@ impl Msg {
     pub fn write_to(&self, stream: &mut TcpStream) -> Result<()> {
         let body = self.to_json().to_string();
         let len = (body.len() as u32).to_le_bytes();
+        if let Some(inj) = crate::fault::active() {
+            return inj.net_send(stream, &len, body.as_bytes());
+        }
         stream.write_all(&len)?;
         stream.write_all(body.as_bytes())?;
         stream.flush()?;
@@ -548,6 +551,9 @@ impl Msg {
     ) -> Result<()> {
         if wire == WireVersion::V2Binary {
             if let Some(frame) = buf.encode_frame(self) {
+                if let Some(inj) = crate::fault::active() {
+                    return inj.net_send(stream, &frame[..4], &frame[4..]);
+                }
                 stream.write_all(frame)?;
                 stream.flush()?;
                 return Ok(());
@@ -561,6 +567,9 @@ impl Msg {
     /// else parses as v1 JSON. This makes every reader bilingual
     /// regardless of what was negotiated.
     pub fn read_from(stream: &mut TcpStream) -> Result<Msg> {
+        if let Some(inj) = crate::fault::active() {
+            inj.net_recv_gate(stream)?;
+        }
         let mut len = [0u8; 4];
         stream.read_exact(&mut len)?;
         let n = u32::from_le_bytes(len) as usize;

@@ -31,7 +31,6 @@
 //! where the ledger was truncated.
 
 use std::collections::HashMap;
-use std::io::Write;
 use std::net::{TcpListener, TcpStream};
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -145,16 +144,32 @@ impl Standby {
         let started = Instant::now();
         let mut leader_seen = false;
         let mut pending_eof: Option<Instant> = None;
+        // Accept-poll pacing through the shared backoff policy: the nap
+        // grows from 200µs toward a 2ms cap during a quiet stretch (an
+        // idle standby must not spin) and rewinds on every accepted
+        // connection so the first poll after activity stays snappy. The
+        // cap sits far below any sane `reconnect_grace`, so the grace
+        // window is still observed with sub-grace precision.
+        let nap_policy = crate::fault::RetryPolicy {
+            base: Duration::from_micros(200),
+            cap: Duration::from_millis(2),
+            deadline: Duration::from_secs(3600),
+            max_attempts: u32::MAX,
+        };
+        let mut nap = crate::fault::Backoff::new("standby.accept_poll", &nap_policy);
         let clean = 'watch: loop {
             match listener.accept() {
-                Ok((stream, _)) => match drain_connection(stream, &mut state) {
-                    ConnEnd::Clean => break 'watch true,
-                    ConnEnd::LeaderEof => {
-                        leader_seen = true;
-                        pending_eof = Some(Instant::now());
+                Ok((stream, _)) => {
+                    nap.reset();
+                    match drain_connection(stream, &mut state) {
+                        ConnEnd::Clean => break 'watch true,
+                        ConnEnd::LeaderEof => {
+                            leader_seen = true;
+                            pending_eof = Some(Instant::now());
+                        }
+                        ConnEnd::Uninteresting => {}
                     }
-                    ConnEnd::Uninteresting => {}
-                },
+                }
                 Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                     if let Some(t) = pending_eof {
                         if t.elapsed() >= cfg.reconnect_grace {
@@ -166,7 +181,9 @@ impl Standby {
                             cfg.first_contact
                         );
                     }
-                    std::thread::sleep(Duration::from_millis(1));
+                    if !nap.sleep() {
+                        nap.reset(); // the watch has no deadline of its own
+                    }
                 }
                 Err(e) => return Err(e).context("standby accept"),
             }
@@ -378,19 +395,21 @@ fn resume_run(exec: &Arc<ClusterExec>, run_id: u64, ledger: &RunLedger) -> Resul
 }
 
 /// Persist one resumed tree as `run_<id>.json`, atomically (tmp +
-/// rename) so a concurrent reader never sees a half-written file.
+/// fsync + rename via [`crate::fault::write_atomic`]) so a concurrent
+/// reader never sees a half-written file. Transient write failures
+/// (torn writes, brief I/O errors) are retried under the shared link
+/// policy — the resumed tree is the takeover's whole point, so the
+/// standby does not give it up on the first flaky write.
 fn write_tree(dir: &std::path::Path, run_id: u64, tree: &ExecTree) -> Result<()> {
     std::fs::create_dir_all(dir)
         .with_context(|| format!("create out dir {}", dir.display()))?;
-    let tmp = dir.join(format!(".run_{run_id}.json.tmp"));
     let path = dir.join(format!("run_{run_id}.json"));
-    let mut f = std::fs::File::create(&tmp)
-        .with_context(|| format!("create {}", tmp.display()))?;
-    f.write_all(tree.to_json().to_string().as_bytes())
-        .and_then(|()| f.sync_all())
-        .with_context(|| format!("write {}", tmp.display()))?;
-    drop(f);
-    std::fs::rename(&tmp, &path)
-        .with_context(|| format!("rename into {}", path.display()))?;
+    let bytes = tree.to_json().to_string();
+    crate::fault::retry(
+        "standby.write_tree",
+        &crate::fault::RetryPolicy::link(Duration::from_secs(10)),
+        || crate::fault::write_atomic(&path, bytes.as_bytes()),
+    )
+    .with_context(|| format!("write {}", path.display()))?;
     Ok(())
 }

@@ -93,6 +93,7 @@ pub fn run_worker(
         if expected != usize::MAX && shared.queue.lock().unwrap().len() >= expected {
             break;
         }
+        // timer: deal-arrival poll, bounded by the leader's Start frame
         std::thread::sleep(Duration::from_micros(200));
     }
     // --- compute loop ----------------------------------------------------
@@ -153,7 +154,7 @@ pub fn run_worker(
                         if idle {
                             victims.swap_remove(vi);
                         } else {
-                            // busy victim with no spare task right now
+                            // timer: busy victim with no spare task right now
                             std::thread::sleep(Duration::from_micros(300));
                         }
                     }
@@ -250,6 +251,7 @@ fn listen_loop(listener: TcpListener, shared: Arc<Shared>) {
                 if shared.done.load(Ordering::Acquire) {
                     return;
                 }
+                // timer: non-blocking accept nap, not a retry loop
                 std::thread::sleep(Duration::from_micros(200));
             }
             Err(_) => return,

@@ -83,6 +83,10 @@ pub fn run(
                     // this 1-core box (listener backlog, bind timing);
                     // retry the whole run like a real deployment would.
                     let mut attempt = 0;
+                    let mut backoff = crate::fault::Backoff::new(
+                        "fig7.cluster_run",
+                        &crate::fault::RetryPolicy::link(Duration::from_secs(5)),
+                    );
                     let res = loop {
                         attempt += 1;
                         match run_cluster(
@@ -100,7 +104,7 @@ pub fn run(
                             Ok(r) => break r,
                             Err(e) if attempt < 3 => {
                                 log::warn!("cluster run retry {attempt}: {e:#}");
-                                std::thread::sleep(Duration::from_millis(100));
+                                backoff.sleep();
                             }
                             Err(e) => return Err(e),
                         }

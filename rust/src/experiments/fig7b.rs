@@ -93,6 +93,10 @@ pub fn run(
                     // TCP setup can flake under heavy thread contention
                     // on a small box; retry like a real deployment would.
                     let mut attempt = 0;
+                    let mut backoff = crate::fault::Backoff::new(
+                        "fig7b.cluster_run",
+                        &crate::fault::RetryPolicy::link(Duration::from_secs(5)),
+                    );
                     loop {
                         attempt += 1;
                         match run_cluster(
@@ -110,7 +114,7 @@ pub fn run(
                             Ok(_) => break,
                             Err(e) if attempt < 3 => {
                                 log::warn!("one-shot cluster retry {attempt}: {e:#}");
-                                std::thread::sleep(Duration::from_millis(100));
+                                backoff.sleep();
                             }
                             Err(e) => return Err(e),
                         }

@@ -1,0 +1,425 @@
+//! Fault-carrying I/O wrappers and the atomic-write primitive.
+//!
+//! [`FaultyStream`] wraps any `Read`/`Write` byte stream (the HTTP
+//! connection halves, in-memory test pipes) and consults an
+//! [`Injector`] on every call; [`FaultyFile`] wraps a writer with the
+//! disk fault classes (torn write, bit flip, `ENOSPC`). [`write_atomic`]
+//! is the crash-safe file write — tmp + `fsync` + rename — every
+//! persistent artifact in the repo goes through; it is also the seam the
+//! disk faults inject at, so a "torn" write tears the *temp* file and
+//! the destination is never left half-written (exactly the guarantee
+//! `pyramidai fsck` then verifies).
+
+use std::io::{self, Read, Write};
+use std::path::Path;
+use std::sync::Arc;
+
+use super::Injector;
+
+/// A byte stream that runs every read and write through an injector,
+/// scoped by a peer label.
+#[derive(Debug)]
+pub struct FaultyStream<S> {
+    inner: S,
+    peer: String,
+    inj: Arc<Injector>,
+}
+
+impl<S> FaultyStream<S> {
+    /// Wrap `inner`; faults whose `peer` scope matches `peer` apply.
+    pub fn new(inner: S, peer: impl Into<String>, inj: Arc<Injector>) -> FaultyStream<S> {
+        FaultyStream {
+            inner,
+            peer: peer.into(),
+            inj,
+        }
+    }
+
+    /// The wrapped stream.
+    pub fn get_ref(&self) -> &S {
+        &self.inner
+    }
+
+    /// Unwrap.
+    pub fn into_inner(self) -> S {
+        self.inner
+    }
+}
+
+fn sever_err(label: &'static str, peer: &str) -> io::Error {
+    io::Error::new(
+        io::ErrorKind::ConnectionReset,
+        format!("{label}: {peer}"),
+    )
+}
+
+impl<S: Read> Read for FaultyStream<S> {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        let d = self.inj.net_decision(&self.peer, false);
+        if let Some(delay) = d.delay {
+            std::thread::sleep(delay); // timer: injected network latency
+        }
+        if let Some(label) = d.sever {
+            return Err(sever_err(label, &self.peer));
+        }
+        self.inner.read(buf)
+    }
+}
+
+impl<S: Write> Write for FaultyStream<S> {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        let d = self.inj.net_decision(&self.peer, true);
+        if let Some(delay) = d.delay {
+            std::thread::sleep(delay); // timer: injected network latency
+        }
+        if let Some(label) = d.sever {
+            return Err(sever_err(label, &self.peer));
+        }
+        if d.corrupt && !buf.is_empty() {
+            let (at, mask) = self.inj.pick_bit(buf.len());
+            let mut garbled = buf.to_vec();
+            garbled[at] ^= mask;
+            let n = self.inner.write(&garbled)?;
+            return if n == buf.len() {
+                Err(sever_err("frame corrupted (injected)", &self.peer))
+            } else {
+                Ok(n)
+            };
+        }
+        self.inner.write(buf)
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        self.inner.flush()
+    }
+}
+
+/// A writer that injects the disk fault classes. The faults are drawn
+/// once at wrap time (one file = one failure story); a file that drew
+/// none behaves exactly like the inner writer.
+#[derive(Debug)]
+pub struct FaultyFile<W: Write> {
+    inner: W,
+    inj: Arc<Injector>,
+    faults: super::DiskWriteFaults,
+    written: u64,
+    dead: bool,
+}
+
+impl<W: Write> FaultyFile<W> {
+    /// Wrap `inner` for a write to `path`, drawing this file's faults
+    /// from `inj`'s rules.
+    pub fn new(inner: W, path: &str, inj: Arc<Injector>) -> FaultyFile<W> {
+        let faults = inj.disk_write_faults(path);
+        FaultyFile {
+            inner,
+            inj,
+            faults,
+            written: 0,
+            dead: false,
+        }
+    }
+
+    /// Unwrap (for the final `sync_all`).
+    pub fn into_inner(self) -> W {
+        self.inner
+    }
+}
+
+/// The error an injected full disk produces (`ErrorKind::Other`, message
+/// mentions ENOSPC — callers must not match on a real `StorageFull`).
+pub fn enospc_error() -> io::Error {
+    io::Error::other("ENOSPC (injected): no space left on device")
+}
+
+fn torn_error() -> io::Error {
+    io::Error::other("torn write (injected): power lost mid-write")
+}
+
+impl<W: Write> Write for FaultyFile<W> {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        if self.dead {
+            return Err(torn_error());
+        }
+        if let Some(budget) = self.faults.enospc_after {
+            if self.written + buf.len() as u64 > budget {
+                let room = budget.saturating_sub(self.written) as usize;
+                if room > 0 {
+                    let n = self.inner.write(&buf[..room])?;
+                    self.written += n as u64;
+                    if n < room {
+                        return Ok(n);
+                    }
+                }
+                self.inj.count_enospc();
+                self.dead = true;
+                return Err(enospc_error());
+            }
+        }
+        if self.faults.torn {
+            // Persist a random prefix, then "lose power": everything
+            // after the cut — including any later write call — errors.
+            let cut = self.inj.pick_bit(buf.len().max(1)).0;
+            if cut > 0 {
+                let n = self.inner.write(&buf[..cut])?;
+                self.written += n as u64;
+                if n < cut {
+                    return Ok(n);
+                }
+            }
+            let _ = self.inner.flush();
+            self.inj.count_torn();
+            self.dead = true;
+            return Err(torn_error());
+        }
+        if self.faults.bitflip && !buf.is_empty() {
+            let (at, mask) = self.inj.pick_bit(buf.len());
+            let mut garbled = buf.to_vec();
+            garbled[at] ^= mask;
+            self.inj.count_bitflip();
+            // One flip per file is enough to model silent corruption.
+            self.faults.bitflip = false;
+            let n = self.inner.write(&garbled)?;
+            self.written += n as u64;
+            return Ok(n);
+        }
+        let n = self.inner.write(buf)?;
+        self.written += n as u64;
+        Ok(n)
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        self.inner.flush()
+    }
+}
+
+/// Crash-safe file write: write `bytes` to a dot-prefixed `*.tmp`
+/// sibling, `fsync`, rename over `path`, then `fsync` the directory. A
+/// crash (or injected fault) at any point leaves either the old file or
+/// the new one — never a truncated hybrid. The temp file is cleaned up
+/// on failure; a stale one from a hard crash is swept by `fsck`.
+pub fn write_atomic(path: &Path, bytes: &[u8]) -> io::Result<()> {
+    let dir = path.parent().filter(|d| !d.as_os_str().is_empty());
+    let name = path
+        .file_name()
+        .ok_or_else(|| io::Error::new(io::ErrorKind::InvalidInput, "write_atomic: no file name"))?
+        .to_string_lossy();
+    let tmp = match dir {
+        Some(d) => d.join(format!(".{name}.tmp")),
+        None => std::path::PathBuf::from(format!(".{name}.tmp")),
+    };
+    let label = path.to_string_lossy();
+    let result = (|| {
+        let f = std::fs::File::create(&tmp)?;
+        let f = match super::active() {
+            Some(inj) => {
+                let mut ff = FaultyFile::new(f, &label, inj);
+                ff.write_all(bytes)?;
+                ff.flush()?;
+                ff.into_inner()
+            }
+            None => {
+                let mut f = f;
+                f.write_all(bytes)?;
+                f
+            }
+        };
+        f.sync_all()?;
+        drop(f);
+        std::fs::rename(&tmp, path)?;
+        if let Some(d) = dir {
+            // Directory fsync makes the rename itself durable; best
+            // effort — not every filesystem supports opening a dir.
+            if let Ok(dh) = std::fs::File::open(d) {
+                let _ = dh.sync_all();
+            }
+        }
+        Ok(())
+    })();
+    if result.is_err() {
+        let _ = std::fs::remove_file(&tmp);
+    }
+    result
+}
+
+/// Read a whole file, applying any injected read-side bit flip (the
+/// on-disk bytes stay intact — this models a flaky controller, not rot).
+pub fn read(path: &Path) -> io::Result<Vec<u8>> {
+    let mut bytes = std::fs::read(path)?;
+    if let Some(inj) = super::active() {
+        if !bytes.is_empty() && inj.disk_read_bitflip(&path.to_string_lossy()) {
+            let (at, mask) = inj.pick_bit(bytes.len());
+            bytes[at] ^= mask;
+            inj.count_bitflip();
+        }
+    }
+    Ok(bytes)
+}
+
+/// Sleep an injected delay and fail reads during an injected partition,
+/// for loops that poll a socket they cannot wrap (the cluster wire goes
+/// through [`crate::cluster::proto::Msg`] instead).
+pub fn gate_read(inj: &Injector, peer: &str) -> io::Result<()> {
+    let d = inj.net_decision(peer, false);
+    if let Some(delay) = d.delay {
+        std::thread::sleep(delay); // timer: injected network latency
+    }
+    if let Some(label) = d.sever {
+        return Err(sever_err(label, peer));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{FaultKind, FaultPlan, FaultRule};
+    use super::*;
+
+    fn injector(plan: FaultPlan) -> Arc<Injector> {
+        Arc::new(Injector::new(plan))
+    }
+
+    #[test]
+    fn clean_stream_passes_bytes_through() {
+        let inj = injector(FaultPlan::new(1));
+        let mut s = FaultyStream::new(Vec::<u8>::new(), "p:1", inj);
+        s.write_all(b"hello").unwrap();
+        assert_eq!(s.get_ref(), b"hello");
+    }
+
+    #[test]
+    fn partitioned_stream_errors_both_ways() {
+        let inj = injector(
+            FaultPlan::new(2).rule(FaultRule::always(FaultKind::NetPartition)),
+        );
+        let mut s = FaultyStream::new(std::io::Cursor::new(vec![1, 2, 3]), "p:1", inj);
+        let mut buf = [0u8; 3];
+        assert_eq!(
+            s.read(&mut buf).unwrap_err().kind(),
+            io::ErrorKind::ConnectionReset
+        );
+        assert_eq!(
+            s.write(b"x").unwrap_err().kind(),
+            io::ErrorKind::ConnectionReset
+        );
+    }
+
+    #[test]
+    fn corrupt_stream_garbles_exactly_one_bit_then_dies() {
+        let inj = injector(
+            FaultPlan::new(3).rule(FaultRule::always(FaultKind::NetCorrupt)),
+        );
+        let payload = vec![0u8; 64];
+        let mut s = FaultyStream::new(Vec::<u8>::new(), "p:1", inj);
+        let err = s.write(&payload).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::ConnectionReset);
+        let written = s.into_inner();
+        assert_eq!(written.len(), 64);
+        let flipped: u32 = written
+            .iter()
+            .zip(&payload)
+            .map(|(a, b)| (a ^ b).count_ones())
+            .sum();
+        assert_eq!(flipped, 1, "exactly one bit must differ");
+    }
+
+    #[test]
+    fn torn_write_persists_only_a_prefix() {
+        let inj = injector(
+            FaultPlan::new(4).rule(FaultRule::always(FaultKind::DiskTornWrite)),
+        );
+        let mut f = FaultyFile::new(Vec::<u8>::new(), "/x/shard.pysh", inj);
+        let payload = vec![0xAB; 4096];
+        let err = f.write_all(&payload).unwrap_err();
+        assert!(err.to_string().contains("torn"), "{err}");
+        let persisted = f.into_inner();
+        assert!(persisted.len() < payload.len());
+        assert_eq!(&payload[..persisted.len()], &persisted[..]);
+    }
+
+    #[test]
+    fn enospc_stops_at_the_byte_budget() {
+        let inj = injector(
+            FaultPlan::new(5)
+                .rule(FaultRule::always(FaultKind::DiskEnospc { after_bytes: 100 })),
+        );
+        let mut f = FaultyFile::new(Vec::<u8>::new(), "/x/big.bin", inj);
+        let err = f.write_all(&[0u8; 4096]).unwrap_err();
+        assert!(err.to_string().contains("ENOSPC"), "{err}");
+        assert_eq!(f.into_inner().len(), 100);
+    }
+
+    #[test]
+    fn bitflip_corrupts_one_bit_without_erroring() {
+        let inj = injector(
+            FaultPlan::new(6).rule(FaultRule::always(FaultKind::DiskBitflip)),
+        );
+        let payload = vec![0x55; 512];
+        let mut f = FaultyFile::new(Vec::<u8>::new(), "/x/s.pysh", inj);
+        f.write_all(&payload).unwrap();
+        let persisted = f.into_inner();
+        assert_eq!(persisted.len(), payload.len());
+        let flipped: u32 = persisted
+            .iter()
+            .zip(&payload)
+            .map(|(a, b)| (a ^ b).count_ones())
+            .sum();
+        assert_eq!(flipped, 1);
+    }
+
+    #[test]
+    fn write_atomic_leaves_no_tmp_on_failure() {
+        let _guard = super::super::test_guard();
+        let dir = std::env::temp_dir().join(format!(
+            "pyramidai_fault_io_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let dest = dir.join("out.bin");
+
+        // Clean path first.
+        write_atomic(&dest, b"v1").unwrap();
+        assert_eq!(std::fs::read(&dest).unwrap(), b"v1");
+
+        // Torn path: the destination keeps the old content, no *.tmp
+        // residue survives.
+        super::super::install(
+            FaultPlan::new(7).rule(FaultRule::always(FaultKind::DiskTornWrite)),
+        );
+        let err = write_atomic(&dest, &vec![9u8; 2048]).unwrap_err();
+        super::super::clear();
+        assert!(err.to_string().contains("torn"), "{err}");
+        assert_eq!(std::fs::read(&dest).unwrap(), b"v1", "old content survives");
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().ends_with(".tmp"))
+            .collect();
+        assert!(leftovers.is_empty(), "tmp residue: {leftovers:?}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn faulty_read_flips_one_transient_bit() {
+        let _guard = super::super::test_guard();
+        let dir = std::env::temp_dir().join(format!(
+            "pyramidai_fault_read_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("data.bin");
+        std::fs::write(&p, vec![0xF0; 256]).unwrap();
+        super::super::install(
+            FaultPlan::new(8).rule(FaultRule::always(FaultKind::DiskBitflip)),
+        );
+        let seen = read(&p).unwrap();
+        super::super::clear();
+        let flipped: u32 = seen.iter().map(|b| (b ^ 0xF0).count_ones()).sum();
+        assert_eq!(flipped, 1);
+        // On-disk bytes are untouched.
+        assert!(std::fs::read(&p).unwrap().iter().all(|&b| b == 0xF0));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

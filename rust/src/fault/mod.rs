@@ -1,0 +1,719 @@
+//! Deterministic fault injection and the one sanctioned retry policy
+//! (DESIGN.md §16).
+//!
+//! The paper's target is a *modest* cluster: commodity NICs that slow
+//! down before they die, disks that tear writes under power loss, links
+//! that drop or garble frames. This module gives every I/O seam in the
+//! repo one switchboard for such gray failures:
+//!
+//! * a [`FaultPlan`] — a seeded, windowed rule list (`net.delay`,
+//!   `net.drop`, `net.corrupt`, `net.partition`, `disk.torn_write`,
+//!   `disk.bitflip`, `disk.enospc`) parsed from JSON and driven by the
+//!   repo's own [`Pcg32`] so every schedule replays bit-identically;
+//! * an [`Injector`] consulted by the cluster wire
+//!   ([`crate::cluster::proto::Msg`]), the shard store
+//!   ([`crate::predcache`]) and the HTTP front door via the
+//!   [`io::FaultyStream`]/[`io::FaultyFile`] wrappers — installed
+//!   globally by `--faults plan.json` or handed around explicitly in
+//!   tests;
+//! * the [`retry`] submodule: exponential backoff with decorrelated
+//!   jitter, per-op deadline and attempt budget — the only place in the
+//!   crate allowed to sleep inside a retry loop (CI greps for strays).
+//!
+//! Injected faults never forge success: a dropped frame surfaces as a
+//! connection error the existing recovery paths (redeal, rehello,
+//! standby takeover) already handle, a corrupted frame is guaranteed to
+//! fail framing on the receiver, and a torn shard write is caught by the
+//! store's CRC on the next load. Under any plan the surviving execution
+//! tree stays byte-identical to the unfailed run — that is the invariant
+//! `tests/chaos_cluster.rs` holds the whole stack to.
+
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::obs;
+use crate::obs::metrics::Counter;
+use crate::util::json::Json;
+use crate::util::prng::Pcg32;
+
+pub mod io;
+pub mod retry;
+
+pub use io::{write_atomic, FaultyFile, FaultyStream};
+pub use retry::{poll_until, retry, Backoff, RetryPolicy};
+
+/// One fault class, with its kind-specific parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FaultKind {
+    /// Stall matching net operations by a uniform random duration.
+    NetDelay {
+        /// Minimum injected latency, microseconds.
+        min_us: u64,
+        /// Maximum injected latency, microseconds (exclusive).
+        max_us: u64,
+    },
+    /// Lose an outgoing frame: the connection is severed and the caller
+    /// sees a connection error (never a silent fake success).
+    NetDrop,
+    /// Garble an outgoing frame so the receiver's framing rejects it
+    /// (one bit of the first body byte is flipped — breaking both the
+    /// JSON opening brace and the v2 magic — and the connection dies).
+    NetCorrupt,
+    /// Two-way cut: every matching read and write errors for the rule's
+    /// window, then traffic resumes.
+    NetPartition,
+    /// A write persists only a random prefix before erroring — the
+    /// classic power-loss torn write.
+    DiskTornWrite,
+    /// One random bit of the payload is flipped (on write: persisted
+    /// corrupt; on read: transient corruption of the loaded bytes).
+    DiskBitflip,
+    /// Writes fail with an `ENOSPC`-style error once the file exceeds a
+    /// byte budget.
+    DiskEnospc {
+        /// Bytes allowed before the device "fills up".
+        after_bytes: u64,
+    },
+}
+
+impl FaultKind {
+    /// The wire name used in plan files (`net.delay`, `disk.enospc`, …).
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultKind::NetDelay { .. } => "net.delay",
+            FaultKind::NetDrop => "net.drop",
+            FaultKind::NetCorrupt => "net.corrupt",
+            FaultKind::NetPartition => "net.partition",
+            FaultKind::DiskTornWrite => "disk.torn_write",
+            FaultKind::DiskBitflip => "disk.bitflip",
+            FaultKind::DiskEnospc { .. } => "disk.enospc",
+        }
+    }
+}
+
+/// One scoped, windowed, probabilistic rule of a [`FaultPlan`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultRule {
+    /// What to inject.
+    pub kind: FaultKind,
+    /// Per-operation trigger probability in `[0, 1]`.
+    pub p: f64,
+    /// Substring filter on the connection's peer label (`host:port`).
+    /// `None` or `"*"` matches every connection.
+    pub peer: Option<String>,
+    /// Substring filter on the file path for disk rules. `None` or `"*"`
+    /// matches every path.
+    pub path: Option<String>,
+    /// Window start, ms after the injector was installed.
+    pub after_ms: u64,
+    /// Window length, ms; `None` = open-ended.
+    pub dur_ms: Option<u64>,
+}
+
+impl FaultRule {
+    /// Unconditional rule: `p = 1.0`, no peer/path scope, open window.
+    pub fn always(kind: FaultKind) -> FaultRule {
+        FaultRule {
+            kind,
+            p: 1.0,
+            peer: None,
+            path: None,
+            after_ms: 0,
+            dur_ms: None,
+        }
+    }
+
+    fn in_window(&self, elapsed_ms: u64) -> bool {
+        elapsed_ms >= self.after_ms
+            && self
+                .dur_ms
+                .map_or(true, |d| elapsed_ms < self.after_ms.saturating_add(d))
+    }
+
+    fn matches_peer(&self, peer: &str) -> bool {
+        match self.peer.as_deref() {
+            None | Some("*") => true,
+            Some(scope) => peer.contains(scope),
+        }
+    }
+
+    fn matches_path(&self, path: &str) -> bool {
+        match self.path.as_deref() {
+            None | Some("*") => true,
+            Some(scope) => path.contains(scope),
+        }
+    }
+}
+
+/// A seeded, deterministic fault schedule: the unit of replay.
+///
+/// Plan files are JSON:
+///
+/// ```json
+/// {
+///   "seed": 7,
+///   "rules": [
+///     {"kind": "net.delay", "p": 1.0, "peer": "127.0.0.1:9001",
+///      "after_ms": 50, "dur_ms": 200, "min_us": 20000, "max_us": 30000},
+///     {"kind": "net.partition", "p": 1.0, "after_ms": 100, "dur_ms": 150},
+///     {"kind": "disk.torn_write", "p": 0.5, "path": "cache"},
+///     {"kind": "disk.enospc", "after_bytes": 4096}
+///   ]
+/// }
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    /// PRNG seed all probabilistic draws derive from.
+    pub seed: u64,
+    /// Rules, evaluated in order; their effects compose.
+    pub rules: Vec<FaultRule>,
+}
+
+impl FaultPlan {
+    /// Empty plan (injects nothing).
+    pub fn new(seed: u64) -> FaultPlan {
+        FaultPlan {
+            seed,
+            rules: Vec::new(),
+        }
+    }
+
+    /// Builder-style rule append.
+    pub fn rule(mut self, rule: FaultRule) -> FaultPlan {
+        self.rules.push(rule);
+        self
+    }
+
+    /// Parse a plan from its JSON text.
+    pub fn parse(text: &str) -> Result<FaultPlan> {
+        let v = Json::parse(text).context("fault plan JSON")?;
+        let seed = match v.opt("seed") {
+            Some(s) => s.as_u64().context("fault plan seed")?,
+            None => 0,
+        };
+        let mut rules = Vec::new();
+        if let Some(rs) = v.opt("rules") {
+            for (i, r) in rs.as_arr().context("fault plan rules")?.iter().enumerate() {
+                rules.push(
+                    parse_rule(r).with_context(|| format!("fault plan rule #{i}"))?,
+                );
+            }
+        }
+        Ok(FaultPlan { seed, rules })
+    }
+
+    /// Load and parse a plan file (the `--faults plan.json` path).
+    pub fn from_file(path: &std::path::Path) -> Result<FaultPlan> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read fault plan {}", path.display()))?;
+        FaultPlan::parse(&text)
+            .with_context(|| format!("parse fault plan {}", path.display()))
+    }
+}
+
+fn parse_rule(r: &Json) -> Result<FaultRule> {
+    let kind_name = r.get("kind")?.as_str()?;
+    let u64_or = |key: &str, dflt: u64| -> Result<u64> {
+        match r.opt(key) {
+            Some(v) => Ok(v.as_u64()?),
+            None => Ok(dflt),
+        }
+    };
+    let kind = match kind_name {
+        "net.delay" => {
+            let min_us = u64_or("min_us", 1_000)?;
+            let max_us = u64_or("max_us", min_us.saturating_mul(5).max(min_us + 1))?;
+            if max_us <= min_us {
+                return Err(anyhow!("net.delay needs max_us > min_us"));
+            }
+            FaultKind::NetDelay { min_us, max_us }
+        }
+        "net.drop" => FaultKind::NetDrop,
+        "net.corrupt" => FaultKind::NetCorrupt,
+        "net.partition" => FaultKind::NetPartition,
+        "disk.torn_write" => FaultKind::DiskTornWrite,
+        "disk.bitflip" => FaultKind::DiskBitflip,
+        "disk.enospc" => FaultKind::DiskEnospc {
+            after_bytes: u64_or("after_bytes", 0)?,
+        },
+        other => return Err(anyhow!("unknown fault kind {other:?}")),
+    };
+    let p = match r.opt("p") {
+        Some(v) => v.as_f64()?,
+        None => 1.0,
+    };
+    if !(0.0..=1.0).contains(&p) {
+        return Err(anyhow!("fault probability {p} outside [0, 1]"));
+    }
+    let opt_str = |key: &str| -> Result<Option<String>> {
+        match r.opt(key) {
+            Some(v) => Ok(Some(v.as_str()?.to_string())),
+            None => Ok(None),
+        }
+    };
+    Ok(FaultRule {
+        kind,
+        p,
+        peer: opt_str("peer")?,
+        path: opt_str("path")?,
+        after_ms: u64_or("after_ms", 0)?,
+        dur_ms: match r.opt("dur_ms") {
+            Some(v) => Some(v.as_u64()?),
+            None => None,
+        },
+    })
+}
+
+/// What the injector decided for one network operation. Effects compose:
+/// a delayed *and* partitioned write sleeps, then errors.
+#[derive(Debug, Default)]
+pub struct NetDecision {
+    /// Sleep this long before touching the socket.
+    pub delay: Option<Duration>,
+    /// Sever the connection with this error label instead of performing
+    /// the operation.
+    pub sever: Option<&'static str>,
+    /// Flip a framing bit in the outgoing frame (writes only).
+    pub corrupt: bool,
+}
+
+/// Verdict for one disk write, decided when the [`FaultyFile`] wraps the
+/// destination.
+#[derive(Debug, Default, Clone)]
+pub struct DiskWriteFaults {
+    /// Tear the write: persist a random prefix of the first write call,
+    /// then error.
+    pub torn: bool,
+    /// Flip one random payload bit before it reaches the device.
+    pub bitflip: bool,
+    /// Fail with `ENOSPC` once this many bytes are written.
+    pub enospc_after: Option<u64>,
+}
+
+impl DiskWriteFaults {
+    /// True when no fault was drawn for this file.
+    pub fn is_clean(&self) -> bool {
+        !self.torn && !self.bitflip && self.enospc_after.is_none()
+    }
+}
+
+struct FaultCounters {
+    net_delays: Arc<Counter>,
+    net_drops: Arc<Counter>,
+    net_corrupts: Arc<Counter>,
+    net_partition_hits: Arc<Counter>,
+    disk_torn_writes: Arc<Counter>,
+    disk_bitflips: Arc<Counter>,
+    disk_enospc: Arc<Counter>,
+}
+
+impl FaultCounters {
+    fn new() -> FaultCounters {
+        let m = obs::global_metrics();
+        FaultCounters {
+            net_delays: m.counter("fault.net_delays"),
+            net_drops: m.counter("fault.net_drops"),
+            net_corrupts: m.counter("fault.net_corrupts"),
+            net_partition_hits: m.counter("fault.net_partition_hits"),
+            disk_torn_writes: m.counter("fault.disk_torn_writes"),
+            disk_bitflips: m.counter("fault.disk_bitflips"),
+            disk_enospc: m.counter("fault.disk_enospc"),
+        }
+    }
+}
+
+/// A live fault plan: rules + the seeded PRNG + the install-time clock
+/// that anchors every rule window.
+pub struct Injector {
+    plan: FaultPlan,
+    rng: Mutex<Pcg32>,
+    t0: Instant,
+    m: FaultCounters,
+}
+
+impl std::fmt::Debug for Injector {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Injector")
+            .field("plan", &self.plan)
+            .finish_non_exhaustive()
+    }
+}
+
+impl Injector {
+    /// Arm a plan. The window clock starts now.
+    pub fn new(plan: FaultPlan) -> Injector {
+        let rng = Mutex::new(Pcg32::new(plan.seed ^ 0xFA_017));
+        Injector {
+            plan,
+            rng,
+            t0: Instant::now(),
+            m: FaultCounters::new(),
+        }
+    }
+
+    /// Milliseconds since the injector was armed (rule windows are
+    /// relative to this clock).
+    pub fn elapsed_ms(&self) -> u64 {
+        self.t0.elapsed().as_millis() as u64
+    }
+
+    fn roll(&self, p: f64) -> bool {
+        if p >= 1.0 {
+            return true;
+        }
+        if p <= 0.0 {
+            return false;
+        }
+        self.rng.lock().unwrap().bool(p)
+    }
+
+    fn rand_range(&self, lo: u64, hi: u64) -> u64 {
+        debug_assert!(hi > lo);
+        lo + self.rng.lock().unwrap().next_u64() % (hi - lo)
+    }
+
+    /// Decide the fate of one network operation against `peer`.
+    /// `write` selects direction: drops and corruptions only hit writes,
+    /// partitions and delays hit both.
+    pub fn net_decision(&self, peer: &str, write: bool) -> NetDecision {
+        let elapsed = self.elapsed_ms();
+        let mut d = NetDecision::default();
+        for rule in &self.plan.rules {
+            if !rule.in_window(elapsed) || !rule.matches_peer(peer) {
+                continue;
+            }
+            match rule.kind {
+                FaultKind::NetDelay { min_us, max_us } => {
+                    if self.roll(rule.p) {
+                        let us = self.rand_range(min_us, max_us);
+                        let add = Duration::from_micros(us);
+                        d.delay = Some(d.delay.map_or(add, |prev| prev + add));
+                        self.m.net_delays.inc();
+                    }
+                }
+                FaultKind::NetDrop if write => {
+                    if d.sever.is_none() && self.roll(rule.p) {
+                        d.sever = Some("frame dropped (injected)");
+                        self.m.net_drops.inc();
+                    }
+                }
+                FaultKind::NetPartition => {
+                    if d.sever.is_none() && self.roll(rule.p) {
+                        d.sever = Some("network partition (injected)");
+                        self.m.net_partition_hits.inc();
+                    }
+                }
+                FaultKind::NetCorrupt if write => {
+                    if !d.corrupt && self.roll(rule.p) {
+                        d.corrupt = true;
+                        self.m.net_corrupts.inc();
+                    }
+                }
+                _ => {}
+            }
+        }
+        d
+    }
+
+    /// Decide the faults for one disk write to `path`.
+    pub fn disk_write_faults(&self, path: &str) -> DiskWriteFaults {
+        let elapsed = self.elapsed_ms();
+        let mut f = DiskWriteFaults::default();
+        for rule in &self.plan.rules {
+            if !rule.in_window(elapsed) || !rule.matches_path(path) {
+                continue;
+            }
+            match rule.kind {
+                FaultKind::DiskTornWrite => f.torn = f.torn || self.roll(rule.p),
+                FaultKind::DiskBitflip => f.bitflip = f.bitflip || self.roll(rule.p),
+                FaultKind::DiskEnospc { after_bytes } => {
+                    if f.enospc_after.is_none() && self.roll(rule.p) {
+                        f.enospc_after = Some(after_bytes);
+                    }
+                }
+                _ => {}
+            }
+        }
+        f
+    }
+
+    /// Whether a read of `path` should see one bit flipped (transient —
+    /// the on-disk bytes stay intact).
+    pub fn disk_read_bitflip(&self, path: &str) -> bool {
+        let elapsed = self.elapsed_ms();
+        self.plan.rules.iter().any(|rule| {
+            matches!(rule.kind, FaultKind::DiskBitflip)
+                && rule.in_window(elapsed)
+                && rule.matches_path(path)
+                && self.roll(rule.p)
+        })
+    }
+
+    /// Pick a random bit offset within `len` bytes.
+    pub(crate) fn pick_bit(&self, len: usize) -> (usize, u8) {
+        if len == 0 {
+            return (0, 1);
+        }
+        let r = self.rng.lock().unwrap().next_u64();
+        ((r as usize / 8) % len, 1u8 << (r % 8) as u8)
+    }
+
+    pub(crate) fn count_torn(&self) {
+        self.m.disk_torn_writes.inc();
+    }
+
+    pub(crate) fn count_bitflip(&self) {
+        self.m.disk_bitflips.inc();
+    }
+
+    pub(crate) fn count_enospc(&self) {
+        self.m.disk_enospc.inc();
+    }
+
+    /// Gate + perform one framed write on the cluster wire: sleep any
+    /// injected delay, sever on drop/partition (shutting the socket so
+    /// the peer sees the break too), flip a framing bit on corruption.
+    /// `prefix` is the 4-byte length header, `body` the frame body.
+    pub fn net_send(
+        &self,
+        stream: &mut TcpStream,
+        prefix: &[u8],
+        body: &[u8],
+    ) -> Result<()> {
+        use std::io::Write;
+        let peer = peer_label(stream);
+        let d = self.net_decision(&peer, true);
+        if let Some(delay) = d.delay {
+            std::thread::sleep(delay); // timer: injected network latency
+        }
+        if let Some(label) = d.sever {
+            let _ = stream.shutdown(std::net::Shutdown::Both);
+            return Err(anyhow!("{label}: send to {peer}"));
+        }
+        stream.write_all(prefix)?;
+        if d.corrupt && !body.is_empty() {
+            // Flipping a bit of the first body byte breaks both valid
+            // framings (`{` for JSON, the v2 magic), so the receiver is
+            // guaranteed to reject the frame rather than silently accept
+            // garbled payload.
+            let (_, mask) = self.pick_bit(1);
+            let mut corrupted = body.to_vec();
+            corrupted[0] ^= mask;
+            stream.write_all(&corrupted)?;
+            stream.flush()?;
+            let _ = stream.shutdown(std::net::Shutdown::Both);
+            return Err(anyhow!("frame corrupted (injected): send to {peer}"));
+        }
+        stream.write_all(body)?;
+        stream.flush()?;
+        Ok(())
+    }
+
+    /// Gate one framed read on the cluster wire: sleep any injected
+    /// delay, sever on partition.
+    pub fn net_recv_gate(&self, stream: &TcpStream) -> Result<()> {
+        let peer = peer_label(stream);
+        let d = self.net_decision(&peer, false);
+        if let Some(delay) = d.delay {
+            std::thread::sleep(delay); // timer: injected network latency
+        }
+        if let Some(label) = d.sever {
+            let _ = stream.shutdown(std::net::Shutdown::Both);
+            return Err(anyhow!("{label}: recv from {peer}"));
+        }
+        Ok(())
+    }
+}
+
+/// The peer label faults are scoped by: the remote `host:port`, or `"?"`
+/// when the socket is already dead.
+pub fn peer_label(stream: &TcpStream) -> String {
+    stream
+        .peer_addr()
+        .map(|a| a.to_string())
+        .unwrap_or_else(|_| "?".to_string())
+}
+
+// --- global installation (the `--faults` path) --------------------------
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static GLOBAL: Mutex<Option<Arc<Injector>>> = Mutex::new(None);
+
+/// Arm `plan` process-wide: every seam that consults [`active`] starts
+/// injecting. Returns the injector for direct use (tests, assertions).
+pub fn install(plan: FaultPlan) -> Arc<Injector> {
+    let inj = Arc::new(Injector::new(plan));
+    *GLOBAL.lock().unwrap() = Some(Arc::clone(&inj));
+    ENABLED.store(true, Ordering::Release);
+    inj
+}
+
+/// Disarm the process-wide injector.
+pub fn clear() {
+    ENABLED.store(false, Ordering::Release);
+    *GLOBAL.lock().unwrap() = None;
+}
+
+/// The process-wide injector, if one is armed. The disarmed fast path is
+/// a single atomic load — the production seams pay nothing when faults
+/// are off.
+pub fn active() -> Option<Arc<Injector>> {
+    if !ENABLED.load(Ordering::Acquire) {
+        return None;
+    }
+    GLOBAL.lock().unwrap().clone()
+}
+
+#[cfg(test)]
+pub(crate) fn test_guard() -> std::sync::MutexGuard<'static, ()> {
+    // Tests that arm the process-wide injector serialize here so
+    // parallel test threads never see each other's plans.
+    static GUARD: Mutex<()> = Mutex::new(());
+    GUARD.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_parses_every_kind() {
+        let plan = FaultPlan::parse(
+            r#"{"seed": 9, "rules": [
+                {"kind": "net.delay", "min_us": 100, "max_us": 200, "peer": "1.2.3.4"},
+                {"kind": "net.drop", "p": 0.5},
+                {"kind": "net.corrupt", "after_ms": 10, "dur_ms": 20},
+                {"kind": "net.partition"},
+                {"kind": "disk.torn_write", "path": "cache"},
+                {"kind": "disk.bitflip"},
+                {"kind": "disk.enospc", "after_bytes": 4096}
+            ]}"#,
+        )
+        .unwrap();
+        assert_eq!(plan.seed, 9);
+        assert_eq!(plan.rules.len(), 7);
+        assert_eq!(
+            plan.rules[0].kind,
+            FaultKind::NetDelay {
+                min_us: 100,
+                max_us: 200
+            }
+        );
+        assert_eq!(plan.rules[0].peer.as_deref(), Some("1.2.3.4"));
+        assert_eq!(plan.rules[1].p, 0.5);
+        assert_eq!(plan.rules[2].after_ms, 10);
+        assert_eq!(plan.rules[2].dur_ms, Some(20));
+        assert_eq!(plan.rules[4].path.as_deref(), Some("cache"));
+        assert_eq!(
+            plan.rules[6].kind,
+            FaultKind::DiskEnospc { after_bytes: 4096 }
+        );
+    }
+
+    #[test]
+    fn plan_rejects_garbage() {
+        assert!(FaultPlan::parse("{").is_err());
+        assert!(FaultPlan::parse(r#"{"rules": [{"kind": "net.meow"}]}"#).is_err());
+        assert!(
+            FaultPlan::parse(r#"{"rules": [{"kind": "net.drop", "p": 1.5}]}"#).is_err()
+        );
+        assert!(FaultPlan::parse(
+            r#"{"rules": [{"kind": "net.delay", "min_us": 5, "max_us": 5}]}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn windows_scope_rules() {
+        let rule = FaultRule {
+            after_ms: 100,
+            dur_ms: Some(50),
+            ..FaultRule::always(FaultKind::NetPartition)
+        };
+        assert!(!rule.in_window(99));
+        assert!(rule.in_window(100));
+        assert!(rule.in_window(149));
+        assert!(!rule.in_window(150));
+        let open = FaultRule::always(FaultKind::NetPartition);
+        assert!(open.in_window(0));
+        assert!(open.in_window(u64::MAX));
+    }
+
+    #[test]
+    fn peer_scoping_is_substring() {
+        let inj = Injector::new(FaultPlan::new(1).rule(FaultRule {
+            peer: Some("127.0.0.1:9000".to_string()),
+            ..FaultRule::always(FaultKind::NetPartition)
+        }));
+        assert!(inj.net_decision("127.0.0.1:9000", false).sever.is_some());
+        assert!(inj.net_decision("127.0.0.1:9001", false).sever.is_none());
+        let any = Injector::new(
+            FaultPlan::new(1).rule(FaultRule::always(FaultKind::NetPartition)),
+        );
+        assert!(any.net_decision("10.0.0.7:1234", true).sever.is_some());
+    }
+
+    #[test]
+    fn drop_and_corrupt_only_hit_writes() {
+        let inj = Injector::new(
+            FaultPlan::new(2)
+                .rule(FaultRule::always(FaultKind::NetDrop))
+                .rule(FaultRule::always(FaultKind::NetCorrupt)),
+        );
+        let w = inj.net_decision("a:1", true);
+        assert!(w.sever.is_some());
+        let r = inj.net_decision("a:1", false);
+        assert!(r.sever.is_none() && !r.corrupt);
+    }
+
+    #[test]
+    fn probability_draws_are_seed_deterministic() {
+        let draws = |seed: u64| -> Vec<bool> {
+            let inj = Injector::new(FaultPlan::new(seed).rule(FaultRule {
+                p: 0.5,
+                ..FaultRule::always(FaultKind::NetDrop)
+            }));
+            (0..64)
+                .map(|_| inj.net_decision("x:1", true).sever.is_some())
+                .collect()
+        };
+        assert_eq!(draws(42), draws(42));
+        assert_ne!(draws(42), draws(43));
+    }
+
+    #[test]
+    fn disk_faults_compose_and_scope_by_path() {
+        let inj = Injector::new(
+            FaultPlan::new(3)
+                .rule(FaultRule {
+                    path: Some("cache".to_string()),
+                    ..FaultRule::always(FaultKind::DiskTornWrite)
+                })
+                .rule(FaultRule::always(FaultKind::DiskEnospc { after_bytes: 10 })),
+        );
+        let f = inj.disk_write_faults("/tmp/cache/shard_0.pysh");
+        assert!(f.torn);
+        assert_eq!(f.enospc_after, Some(10));
+        let g = inj.disk_write_faults("/tmp/other.bin");
+        assert!(!g.torn);
+        assert_eq!(g.enospc_after, Some(10));
+        assert!(Injector::new(FaultPlan::new(3))
+            .disk_write_faults("/x")
+            .is_clean());
+    }
+
+    #[test]
+    fn global_install_round_trips() {
+        let _guard = test_guard();
+        assert!(active().is_none());
+        let inj = install(FaultPlan::new(5));
+        let seen = active().expect("armed");
+        assert!(Arc::ptr_eq(&inj, &seen));
+        clear();
+        assert!(active().is_none());
+    }
+}

@@ -1,0 +1,327 @@
+//! The crate's one retry/backoff policy: exponential growth with
+//! decorrelated jitter, a per-operation deadline and an attempt budget.
+//!
+//! Before this module the repo had ~10 hand-rolled `loop { try; sleep }`
+//! constructs, each with its own fixed delay — the classic retry-storm
+//! recipe when a whole cluster hits the same failure at once. Every
+//! retry loop now goes through [`Backoff`]/[`retry`] (CI greps for
+//! strays), which:
+//!
+//! * grows sleeps exponentially from `base` toward `cap` with
+//!   *decorrelated jitter* (`sleep = clamp(base + rand·(3·prev − base),
+//!   cap)`, after Brooker's "Exponential Backoff And Jitter") so
+//!   contending retriers spread out instead of thundering in phase;
+//! * stops at a wall-clock `deadline` *and* an attempt budget,
+//!   whichever comes first — no retry loop can hang a shutdown;
+//! * records every attempt in the obs registry (`retry.attempts`,
+//!   `retry.exhausted` counters, `retry.backoff_us` histogram) so a run
+//!   that survived on retries is visible in `/v1/metrics`.
+//!
+//! Plain wait-for-condition polls (not error retries) use
+//! [`poll_until`], which bounds the wait and keeps the sleep here too.
+
+use std::time::{Duration, Instant};
+
+use crate::obs;
+use crate::util::prng::Pcg32;
+
+/// Bounds for one class of retried operation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// First / minimum sleep.
+    pub base: Duration,
+    /// Largest single sleep the jitter may reach.
+    pub cap: Duration,
+    /// Total wall-clock budget measured from the first failure; once
+    /// exceeded the caller gets the last error back.
+    pub deadline: Duration,
+    /// Attempt budget (sleeps, not tries: `max_attempts = 0` means fail
+    /// immediately on the first error).
+    pub max_attempts: u32,
+}
+
+impl RetryPolicy {
+    /// Policy for connecting to a peer that may still be binding its
+    /// listener: fast first probes, capped growth, caller-chosen
+    /// patience.
+    pub fn connect(patience: Duration) -> RetryPolicy {
+        RetryPolicy {
+            base: Duration::from_micros(200),
+            cap: Duration::from_millis(50),
+            deadline: patience,
+            max_attempts: u32::MAX,
+        }
+    }
+
+    /// Policy for re-sending over a link that is expected to heal
+    /// (replication stream, worker uploads): patient, coarser sleeps.
+    pub fn link(patience: Duration) -> RetryPolicy {
+        RetryPolicy {
+            base: Duration::from_millis(2),
+            cap: Duration::from_millis(250),
+            deadline: patience,
+            max_attempts: u32::MAX,
+        }
+    }
+
+    /// Replace the attempt budget.
+    pub fn attempts(mut self, max_attempts: u32) -> RetryPolicy {
+        self.max_attempts = max_attempts;
+        self
+    }
+}
+
+/// Stateful backoff: one per retry loop. Construction is free; metrics
+/// are only touched when a sleep actually happens.
+#[derive(Debug)]
+pub struct Backoff {
+    op: &'static str,
+    policy: RetryPolicy,
+    deadline: Instant,
+    prev_us: u64,
+    attempts: u32,
+    rng: Pcg32,
+}
+
+impl Backoff {
+    /// Start a backoff for operation `op` (a static label used for the
+    /// exhaustion event).
+    pub fn new(op: &'static str, policy: &RetryPolicy) -> Backoff {
+        // Seed from the op label plus a process-wide counter: jitter
+        // streams across concurrent retriers must *differ* (that is the
+        // whole point of decorrelation), while everything that needs
+        // replay determinism draws from explicit seeds elsewhere.
+        use std::sync::atomic::{AtomicU64, Ordering};
+        static NONCE: AtomicU64 = AtomicU64::new(0);
+        let mut seed = 0xcbf2_9ce4_8422_2325u64;
+        for b in op.bytes() {
+            seed = (seed ^ b as u64).wrapping_mul(0x1000_0000_01b3);
+        }
+        seed ^= NONCE.fetch_add(1, Ordering::Relaxed).wrapping_mul(0x9E37);
+        Backoff {
+            op,
+            policy: *policy,
+            deadline: Instant::now() + policy.deadline,
+            prev_us: policy.base.as_micros() as u64,
+            attempts: 0,
+            rng: Pcg32::new(seed),
+        }
+    }
+
+    /// Sleeps performed so far.
+    pub fn attempts(&self) -> u32 {
+        self.attempts
+    }
+
+    /// True once the deadline or attempt budget is spent.
+    pub fn exhausted(&self) -> bool {
+        self.attempts >= self.policy.max_attempts || Instant::now() >= self.deadline
+    }
+
+    /// Rewind the budget (an operation succeeded; the next failure
+    /// starts a fresh window). Keeps the jitter stream.
+    pub fn reset(&mut self) {
+        self.deadline = Instant::now() + self.policy.deadline;
+        self.prev_us = self.policy.base.as_micros() as u64;
+        self.attempts = 0;
+    }
+
+    /// Sleep the next jittered interval. Returns `false` — without
+    /// sleeping — once the deadline or attempt budget is exhausted, at
+    /// which point the caller must give up and surface its last error.
+    pub fn sleep(&mut self) -> bool {
+        let now = Instant::now();
+        if self.attempts >= self.policy.max_attempts || now >= self.deadline {
+            obs::global_metrics().counter("retry.exhausted").inc();
+            obs::event(
+                obs::Level::Debug,
+                "fault",
+                "retry_exhausted",
+                &[("op", self.op.into()), ("attempts", self.attempts.into())],
+            );
+            return false;
+        }
+        let base = (self.policy.base.as_micros() as u64).max(1);
+        let cap = (self.policy.cap.as_micros() as u64).max(base);
+        // Decorrelated jitter: uniform in [base, 3·prev), clamped to cap.
+        let hi = self.prev_us.saturating_mul(3).max(base + 1);
+        let us = (base + self.rng.next_u64() % (hi - base)).min(cap);
+        let left = self.deadline - now;
+        let nap = Duration::from_micros(us).min(left);
+        std::thread::sleep(nap); // the one sanctioned retry sleep
+        self.prev_us = us;
+        self.attempts += 1;
+        let m = obs::global_metrics();
+        m.counter("retry.attempts").inc();
+        m.histogram("retry.backoff_us").record(us);
+        true
+    }
+}
+
+/// Run `f` until it succeeds or `policy` is exhausted; the final error
+/// is returned unchanged.
+pub fn retry<T, E>(
+    op: &'static str,
+    policy: &RetryPolicy,
+    mut f: impl FnMut() -> Result<T, E>,
+) -> Result<T, E> {
+    let mut backoff = Backoff::new(op, policy);
+    loop {
+        match f() {
+            Ok(v) => return Ok(v),
+            Err(e) => {
+                if !backoff.sleep() {
+                    return Err(e);
+                }
+            }
+        }
+    }
+}
+
+/// Poll `f` every `step` until it returns true or `timeout` elapses.
+/// The sanctioned wait-for-condition loop (a poll is not an error retry,
+/// so it gets a fixed step, not backoff).
+pub fn poll_until(timeout: Duration, step: Duration, mut f: impl FnMut() -> bool) -> bool {
+    let deadline = Instant::now() + timeout;
+    loop {
+        if f() {
+            return true;
+        }
+        let now = Instant::now();
+        if now >= deadline {
+            return false;
+        }
+        std::thread::sleep(step.min(deadline - now)); // timer: bounded poll
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn retry_returns_first_success() {
+        let mut calls = 0;
+        let policy = RetryPolicy {
+            base: Duration::from_micros(10),
+            cap: Duration::from_micros(50),
+            deadline: Duration::from_secs(5),
+            max_attempts: 100,
+        };
+        let out: Result<u32, &str> = retry("test.flaky", &policy, || {
+            calls += 1;
+            if calls < 4 {
+                Err("nope")
+            } else {
+                Ok(99)
+            }
+        });
+        assert_eq!(out, Ok(99));
+        assert_eq!(calls, 4);
+    }
+
+    #[test]
+    fn retry_respects_attempt_budget() {
+        let mut calls = 0;
+        let policy = RetryPolicy {
+            base: Duration::from_micros(1),
+            cap: Duration::from_micros(5),
+            deadline: Duration::from_secs(5),
+            max_attempts: 3,
+        };
+        let out: Result<(), &str> = retry("test.doomed", &policy, || {
+            calls += 1;
+            Err("always")
+        });
+        assert_eq!(out, Err("always"));
+        // max_attempts sleeps separate max_attempts + 1 tries.
+        assert_eq!(calls, 4);
+    }
+
+    #[test]
+    fn retry_respects_deadline() {
+        let policy = RetryPolicy {
+            base: Duration::from_millis(5),
+            cap: Duration::from_millis(10),
+            deadline: Duration::from_millis(40),
+            max_attempts: u32::MAX,
+        };
+        let t0 = Instant::now();
+        let out: Result<(), &str> = retry("test.slow", &policy, || Err("down"));
+        assert_eq!(out, Err("down"));
+        let took = t0.elapsed();
+        assert!(took >= Duration::from_millis(35), "gave up early: {took:?}");
+        assert!(took < Duration::from_secs(2), "overshot: {took:?}");
+    }
+
+    #[test]
+    fn backoff_grows_toward_cap_with_jitter() {
+        let policy = RetryPolicy {
+            base: Duration::from_micros(100),
+            cap: Duration::from_micros(2_000),
+            deadline: Duration::from_secs(10),
+            max_attempts: u32::MAX,
+        };
+        let mut b = Backoff::new("test.growth", &policy);
+        let mut prev_seen = Vec::new();
+        for _ in 0..12 {
+            assert!(b.sleep());
+            prev_seen.push(b.prev_us);
+        }
+        assert!(prev_seen.iter().all(|&us| (100..=2_000).contains(&us)));
+        // The late draws must be able to exceed the first (growth), and
+        // the stream must not be constant (jitter).
+        assert!(prev_seen.windows(2).any(|w| w[1] != w[0]));
+    }
+
+    #[test]
+    fn backoff_reset_restores_budget() {
+        let policy = RetryPolicy {
+            base: Duration::from_micros(1),
+            cap: Duration::from_micros(2),
+            deadline: Duration::from_secs(5),
+            max_attempts: 2,
+        };
+        let mut b = Backoff::new("test.reset", &policy);
+        assert!(b.sleep());
+        assert!(b.sleep());
+        assert!(!b.sleep());
+        b.reset();
+        assert!(b.sleep());
+    }
+
+    #[test]
+    fn poll_until_true_and_timeout() {
+        let mut n = 0;
+        assert!(poll_until(
+            Duration::from_secs(2),
+            Duration::from_micros(50),
+            || {
+                n += 1;
+                n >= 3
+            }
+        ));
+        assert_eq!(n, 3);
+        let t0 = Instant::now();
+        assert!(!poll_until(
+            Duration::from_millis(20),
+            Duration::from_millis(2),
+            || false
+        ));
+        assert!(t0.elapsed() >= Duration::from_millis(18));
+    }
+
+    #[test]
+    fn retry_metrics_flow_into_the_registry() {
+        let before = obs::global_metrics().snapshot().counter("retry.attempts");
+        let policy = RetryPolicy {
+            base: Duration::from_micros(1),
+            cap: Duration::from_micros(2),
+            deadline: Duration::from_secs(1),
+            max_attempts: 2,
+        };
+        let _: Result<(), &str> = retry("test.metrics", &policy, || Err("x"));
+        let after = obs::global_metrics().snapshot().counter("retry.attempts");
+        assert!(after >= before + 2, "attempts {before} -> {after}");
+    }
+}

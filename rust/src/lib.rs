@@ -30,6 +30,9 @@ pub mod cli;
 pub mod cluster;
 /// Paper figure/table reproductions and their shared context.
 pub mod experiments;
+/// Deterministic fault injection (seeded plans over every I/O seam) and
+/// the crate-wide retry/backoff policy (DESIGN.md §16).
+pub mod fault;
 /// Table/CSV rendering shared by experiments and the service.
 pub mod harness;
 /// Background removal (Otsu) and stain normalization.

@@ -84,6 +84,24 @@ fn dispatch(args: &Args) -> Result<()> {
             &[("path", path.display().to_string().into())],
         );
     }
+    // --faults plan.json arms deterministic fault injection process-wide
+    // (DESIGN.md §16): every wire frame, shard write and HTTP connection
+    // consults the installed plan. Parsed before dispatch so serve,
+    // leader and worker all honor it.
+    if let Some(plan_path) = args.get("faults") {
+        let plan = pyramidai::fault::FaultPlan::from_file(Path::new(plan_path))?;
+        obs::event(
+            obs::Level::Warn,
+            "cli",
+            "faults_armed",
+            &[
+                ("plan", plan_path.into()),
+                ("seed", plan.seed.into()),
+                ("rules", plan.rules.len().into()),
+            ],
+        );
+        pyramidai::fault::install(plan);
+    }
     match args.subcommand.as_deref() {
         Some("gen") => cmd_gen(args),
         Some("predict") => cmd_predict(args),
@@ -94,6 +112,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("worker") => cmd_worker(args),
         Some("leader") => cmd_leader(args),
         Some("serve") => cmd_serve(args),
+        Some("fsck") => cmd_fsck(args),
         Some("trace") => cmd_trace(args),
         Some("bench") => cmd_bench(args),
         Some("report") => cmd_report(args),
@@ -143,7 +162,10 @@ subcommands:
                                                    replays the replicated ledger on
                                                    leader death and resumes its runs
                                                    (--out-dir DIR writes run_<id>.json
-                                                   trees byte-identical to --out))
+                                                   trees byte-identical to --out;
+                                                   --reconnect-grace-ms N debounces
+                                                   takeover on replication EOF,
+                                                   default 500))
   serve     multi-slide analysis service          (--jobs --workers --backend pool|cluster|replay
                                                    --policy fifo|priority|edf|wfs[:t=w,..][;quota=n]
                                                    --preempt --park-aging-ms --deadline-ms
@@ -163,6 +185,14 @@ subcommands:
                                                    synthetic stream: POST /v1/jobs,
                                                    GET /v1/jobs/<id>[/result], DELETE
                                                    /v1/jobs/<id>, GET /v1/metrics)
+  fsck      verify & repair a shard cache dir     (--cache-dir DIR [--dry-run];
+                                                   checks every shard against the
+                                                   manifest — size, CRC, decode,
+                                                   id — sweeps torn-write debris,
+                                                   moves bad shards to quarantine/
+                                                   and rewrites the manifest;
+                                                   --dry-run reports only and
+                                                   exits nonzero on damage)
   trace     merge --trace-out JSONL shards        (--dir DIR --out FILE
                                                    --check --timelines; writes a
                                                    Chrome trace-event file and
@@ -181,7 +211,10 @@ global flags: --log-level error|warn|info|debug|trace   (default info, or
               PYRAMIDAI_LOG)
               --trace-out DIR   write structured events to
               DIR/trace-<role>-<pid>.jsonl (serve forwards the flag to
-              external workers)";
+              external workers)
+              --faults PLAN.json   arm deterministic fault injection on
+              every I/O seam (net.delay/drop/corrupt/partition,
+              disk.torn_write/bitflip/enospc; DESIGN.md §16)";
 
 fn model_kind(args: &Args) -> Result<ModelKind> {
     let s = args.str_or("model", "auto");
@@ -507,12 +540,14 @@ fn cmd_leader(args: &Args) -> Result<()> {
 
     if standby_mode {
         let out_dir = args.get("out-dir").map(std::path::PathBuf::from);
+        let reconnect_grace_ms = args.u64_or("reconnect-grace-ms", 500)?;
         args.finish()?;
         let standby = Standby::bind(StandbyConfig {
             listen,
             advertise_host: advertise,
             out_dir,
             heartbeat: Duration::from_millis(heartbeat_ms.max(1)),
+            reconnect_grace: Duration::from_millis(reconnect_grace_ms.max(1)),
             ..StandbyConfig::default()
         })?;
         if let Some(path) = &addr_file {
@@ -847,6 +882,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if fail_leader_after_ms > 0 {
         if let Some(cluster) = svc.cluster() {
             std::thread::spawn(move || {
+                // timer: scheduled chaos trigger, not a retry loop
                 std::thread::sleep(Duration::from_millis(fail_leader_after_ms));
                 cluster.trigger_failover();
             });
@@ -858,29 +894,69 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // authenticated clients instead of the synthetic stream below.
     if let Some(listen_addr) = listen {
         use pyramidai::service::http::{HttpConfig, HttpFrontend, TokenTable};
+        use std::sync::atomic::{AtomicBool, Ordering};
         let tokens_path = tokens_file.ok_or_else(|| {
             anyhow!("--listen requires --tokens-file FILE (`token tenant` lines)")
         })?;
         let tokens = TokenTable::load(&tokens_path).map_err(|e| anyhow!(e))?;
         let n_tokens = tokens.len();
         let svc = std::sync::Arc::new(svc);
-        let frontend = HttpFrontend::start(
-            std::sync::Arc::clone(&svc),
-            HttpConfig::new(listen_addr, tokens),
-        )
-        .map_err(|e| anyhow!(e))?;
+        let cfg = HttpConfig::new(listen_addr, tokens);
+        let health = std::sync::Arc::clone(&cfg.health);
+        let frontend = HttpFrontend::start(std::sync::Arc::clone(&svc), cfg)
+            .map_err(|e| anyhow!(e))?;
+        // Gray-failure watchdog: probe the shard-store directory and the
+        // cluster for impairment, and flip the front-end's degraded
+        // state accordingly. While degraded the service answers 503 on
+        // /healthz and submission instead of accepting work it cannot
+        // finish; recovery clears the flag and admission resumes.
+        let watch_stop = std::sync::Arc::new(AtomicBool::new(false));
+        let watchdog = {
+            let svc = std::sync::Arc::clone(&svc);
+            let stop = std::sync::Arc::clone(&watch_stop);
+            let probe_dir = cache_dir.clone();
+            std::thread::spawn(move || {
+                while !stop.load(Ordering::Relaxed) {
+                    if let Some(cluster) = svc.cluster() {
+                        let impaired = cluster.registered_workers() > 0
+                            && cluster.alive_workers() == 0;
+                        if impaired {
+                            health.set_degraded("cluster: no live workers");
+                        } else {
+                            health.clear_degraded("cluster: no live workers");
+                        }
+                    }
+                    if let Some(dir) = &probe_dir {
+                        let probe = Path::new(dir).join(".health_probe.tmp");
+                        let ok = std::fs::write(&probe, b"ok").is_ok();
+                        let _ = std::fs::remove_file(&probe);
+                        if ok {
+                            health.clear_degraded("store: cache dir not writable");
+                        } else {
+                            health.set_degraded("store: cache dir not writable");
+                        }
+                    }
+                    // timer: health probe cadence
+                    std::thread::sleep(Duration::from_millis(250));
+                }
+            })
+        };
         println!(
             "HTTP admission front-end on http://{} ({n_tokens} credential(s), backend={backend}, policy={policy_desc}, queue-cap={queue_cap})",
             frontend.addr()
         );
         if listen_secs > 0 {
+            // timer: configured server lifetime
             std::thread::sleep(Duration::from_secs(listen_secs));
         } else {
             loop {
+                // timer: serve until killed
                 std::thread::sleep(Duration::from_secs(3600));
             }
         }
         frontend.stop();
+        watch_stop.store(true, Ordering::Relaxed);
+        let _ = watchdog.join();
         let svc = std::sync::Arc::try_unwrap(svc)
             .map_err(|_| anyhow!("HTTP handlers still hold the service after stop"))?;
         let report = svc.shutdown();
@@ -926,15 +1002,27 @@ fn cmd_serve(args: &Args) -> Result<()> {
         if deadline_ms > 0 {
             job = job.with_deadline(Duration::from_millis(deadline_ms * (1 + i as u64 % 4)));
         }
-        // Backpressure: retry until the queue has room.
-        loop {
-            match svc.submit(job.clone()) {
-                Ok(_) => break,
-                Err(SubmitError::QueueFull(_)) => {
-                    std::thread::sleep(Duration::from_millis(1));
+        // Backpressure: poll until the queue has room, through the
+        // shared bounded wait — a wedged scheduler fails the run loudly
+        // instead of hanging the submitter forever.
+        let mut fatal: Option<SubmitError> = None;
+        let submitted = pyramidai::fault::poll_until(
+            Duration::from_secs(600),
+            Duration::from_millis(1),
+            || match svc.submit(job.clone()) {
+                Ok(_) => true,
+                Err(SubmitError::QueueFull(_)) => false,
+                Err(e) => {
+                    fatal = Some(e);
+                    true
                 }
-                Err(e) => return Err(e.into()),
-            }
+            },
+        );
+        if let Some(e) = fatal {
+            return Err(e.into());
+        }
+        if !submitted {
+            return Err(anyhow!("queue stayed full for 600s — scheduler wedged?"));
         }
     }
     let report = svc.shutdown();
@@ -974,6 +1062,45 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     if report.metrics.expired > 0 && deadline_ms == 0 {
         return Err(anyhow!("{} jobs expired without deadlines", report.metrics.expired));
+    }
+    Ok(())
+}
+
+/// Verify (and unless `--dry-run`, repair) a sharded prediction cache:
+/// the recovery half of the §16 disk-fault story. Damage on a dry run is
+/// an error so scripts can gate on the exit code.
+fn cmd_fsck(args: &Args) -> Result<()> {
+    use pyramidai::predcache::store::fsck;
+    let dir = args.require("cache-dir")?;
+    let dry_run = args.bool("dry-run");
+    args.finish()?;
+    let report = fsck(Path::new(&dir), dry_run)?;
+    println!(
+        "fsck {}: {} shard(s) checked, {} bad, {} orphan(s), {} quarantined",
+        dir,
+        report.checked,
+        report.bad.len(),
+        report.orphans.len(),
+        report.quarantined
+    );
+    for (file, reason) in &report.bad {
+        println!("  bad    {file}: {reason}");
+    }
+    for file in &report.orphans {
+        println!("  orphan {file}");
+    }
+    if dry_run && !report.clean() {
+        return Err(anyhow!(
+            "store has {} bad shard(s) and {} orphan(s); rerun without --dry-run to repair",
+            report.bad.len(),
+            report.orphans.len()
+        ));
+    }
+    if !dry_run && !report.clean() {
+        println!(
+            "store repaired: bad shards moved to {}/, manifest rewritten",
+            pyramidai::predcache::store::QUARANTINE_DIR
+        );
     }
     Ok(())
 }

@@ -66,6 +66,7 @@ impl<A: Analyzer> DelayAnalyzer<A> {
 impl<A: Analyzer> Analyzer for DelayAnalyzer<A> {
     fn analyze(&self, slide: &Slide, level: usize, tiles: &[TileId]) -> Vec<f32> {
         let out = self.inner.analyze(slide, level, tiles);
+        // timer: simulated per-tile compute latency
         std::thread::sleep(self.per_tile * tiles.len() as u32);
         out
     }

@@ -371,6 +371,7 @@ mod tests {
         let ((), recs) = capture(|| {
             let mut g = span(Level::Error, "test", "work", &[]);
             g.field("n", 3u64);
+            // timer: make the span long enough to measure
             std::thread::sleep(std::time::Duration::from_millis(2));
         });
         let r = recs.iter().find(|r| r.ev == "work").expect("span emitted");

@@ -153,7 +153,9 @@ pub fn save_sharded(cache: &PredCache, dir: &Path, jobs: usize) -> Result<(), St
     let write_one = |slide: &SlidePredictions, file: &str| -> Result<(u64, u32), StoreError> {
         let bytes = encode_slide(slide);
         let crc = u32::from_le_bytes(bytes[bytes.len() - 4..].try_into().expect("crc footer"));
-        std::fs::write(dir.join(file), &bytes)?;
+        // Atomic (tmp + fsync + rename): a crash or injected disk fault
+        // mid-save leaves no half-written shard under the final name.
+        crate::fault::write_atomic(&dir.join(file), &bytes)?;
         Ok((bytes.len() as u64, crc))
     };
     let n = cache.slides.len();
@@ -196,20 +198,62 @@ pub fn save_sharded(cache: &PredCache, dir: &Path, jobs: usize) -> Result<(), St
     let mut rows = Vec::with_capacity(n);
     for ((slide, name), res) in cache.slides.iter().zip(&names).zip(written) {
         let (bytes, crc) = res.expect("every slide written")?;
-        rows.push(
-            Json::obj()
-                .set("id", slide.spec.id.as_str())
-                .set("file", name.as_str())
-                .set("bytes", bytes as f64)
-                .set("crc32", crc as f64)
-                .set("levels", slide.spec.levels as f64),
-        );
+        rows.push(ShardEntry {
+            id: slide.spec.id.clone(),
+            file: name.clone(),
+            bytes,
+            crc32: crc,
+            levels: slide.spec.levels,
+        });
     }
+    write_manifest(dir, &rows)
+}
+
+/// Write the manifest for `rows` atomically (tmp + fsync + rename): a
+/// reader opening the store concurrently sees the old complete manifest
+/// or the new one, never a torn hybrid.
+fn write_manifest(dir: &Path, rows: &[ShardEntry]) -> Result<(), StoreError> {
+    let json_rows: Vec<Json> = rows
+        .iter()
+        .map(|e| {
+            Json::obj()
+                .set("id", e.id.as_str())
+                .set("file", e.file.as_str())
+                .set("bytes", e.bytes as f64)
+                .set("crc32", e.crc32 as f64)
+                .set("levels", e.levels as f64)
+        })
+        .collect();
     let manifest = Json::obj()
         .set("version", SHARD_VERSION as f64)
-        .set("slides", Json::Arr(rows));
-    std::fs::write(dir.join(MANIFEST_FILE), manifest.to_pretty())?;
+        .set("slides", Json::Arr(json_rows));
+    crate::fault::write_atomic(&dir.join(MANIFEST_FILE), manifest.to_pretty().as_bytes())?;
     Ok(())
+}
+
+/// Parse a store directory's manifest into its rows.
+fn read_manifest(dir: &Path) -> Result<Vec<ShardEntry>, StoreError> {
+    let path = dir.join(MANIFEST_FILE);
+    let text = std::fs::read_to_string(&path)
+        .map_err(|e| StoreError::Manifest(format!("cannot read {}: {e}", path.display())))?;
+    let v = Json::parse(&text)?;
+    let version = v.get("version")?.as_u64()? as u32;
+    if version != SHARD_VERSION {
+        return Err(StoreError::Manifest(format!(
+            "manifest version {version}, this build reads {SHARD_VERSION}"
+        )));
+    }
+    let mut entries = Vec::new();
+    for row in v.get("slides")?.as_arr()? {
+        entries.push(ShardEntry {
+            id: row.get("id")?.as_str()?.to_string(),
+            file: row.get("file")?.as_str()?.to_string(),
+            bytes: row.get("bytes")?.as_u64()?,
+            crc32: row.get("crc32")?.as_u64()? as u32,
+            levels: row.get("levels")?.as_usize()?,
+        });
+    }
+    Ok(entries)
 }
 
 impl ShardedPredStore {
@@ -226,27 +270,7 @@ impl ShardedPredStore {
         dir: &Path,
         budget_mb: Option<usize>,
     ) -> Result<ShardedPredStore, StoreError> {
-        let path = dir.join(MANIFEST_FILE);
-        let text = std::fs::read_to_string(&path).map_err(|e| {
-            StoreError::Manifest(format!("cannot read {}: {e}", path.display()))
-        })?;
-        let v = Json::parse(&text)?;
-        let version = v.get("version")?.as_u64()? as u32;
-        if version != SHARD_VERSION {
-            return Err(StoreError::Manifest(format!(
-                "manifest version {version}, this build reads {SHARD_VERSION}"
-            )));
-        }
-        let mut entries = Vec::new();
-        for row in v.get("slides")?.as_arr()? {
-            entries.push(ShardEntry {
-                id: row.get("id")?.as_str()?.to_string(),
-                file: row.get("file")?.as_str()?.to_string(),
-                bytes: row.get("bytes")?.as_u64()?,
-                crc32: row.get("crc32")?.as_u64()? as u32,
-                levels: row.get("levels")?.as_usize()?,
-            });
-        }
+        let entries = read_manifest(dir)?;
         Ok(ShardedPredStore {
             dir: dir.to_path_buf(),
             entries,
@@ -324,7 +348,9 @@ impl ShardedPredStore {
         // stalls behind this miss's disk work.
         let decode_start = Instant::now();
         let path = self.dir.join(&entry.file);
-        let bytes = std::fs::read(&path)?;
+        // `fault::io::read` = `fs::read` plus any injected transient
+        // read-side bit flip; the CRC checks below are the detectors.
+        let bytes = crate::fault::io::read(&path)?;
         if bytes.len() as u64 != entry.bytes {
             return Err(StoreError::SizeMismatch {
                 slide: entry.id.clone(),
@@ -477,6 +503,151 @@ pub fn import_json(json_path: &Path, dir: &Path, jobs: usize) -> anyhow::Result<
     Ok(n)
 }
 
+/// Subdirectory bad shards are moved into by a repairing [`fsck`].
+pub const QUARANTINE_DIR: &str = "quarantine";
+
+/// Outcome of one [`fsck`] pass over a shard store.
+#[derive(Debug, Default)]
+pub struct FsckReport {
+    /// Manifest rows examined.
+    pub checked: usize,
+    /// Bad shards as `(file, reason)` — missing, truncated, corrupt,
+    /// mislabeled, or diverged from the manifest.
+    pub bad: Vec<(String, String)>,
+    /// Files in the store directory the manifest does not account for:
+    /// leftover `*.tmp` from torn writes, unlisted shards, strays.
+    pub orphans: Vec<String>,
+    /// Shards moved to [`QUARANTINE_DIR`] (always 0 on a dry run).
+    pub quarantined: usize,
+}
+
+impl FsckReport {
+    /// True when every shard verified clean and nothing was orphaned.
+    pub fn clean(&self) -> bool {
+        self.bad.is_empty() && self.orphans.is_empty()
+    }
+}
+
+/// Check every shard a store's manifest lists — existence, manifest
+/// size, footer CRC against the manifest row, full decode (payload
+/// checksum, version, truncation) and slide-id cross-check — plus a
+/// directory sweep for files the manifest does not account for.
+///
+/// With `dry_run` the report only describes the damage. Without it the
+/// store is *repaired in place to a degraded but openable state*: bad
+/// and orphaned shards move to `quarantine/`, leftover `*.tmp` files
+/// from torn writes are deleted, and the manifest is atomically
+/// rewritten without the quarantined rows — readers lose the bad
+/// slides instead of losing the store (DESIGN.md §16 degraded-mode
+/// contract).
+pub fn fsck(dir: &Path, dry_run: bool) -> Result<FsckReport, StoreError> {
+    let entries = read_manifest(dir)?;
+    let mut report = FsckReport {
+        checked: entries.len(),
+        ..FsckReport::default()
+    };
+    let mut good = Vec::with_capacity(entries.len());
+    for entry in entries {
+        match check_shard(dir, &entry) {
+            None => good.push(entry),
+            Some(reason) => report.bad.push((entry.file.clone(), reason)),
+        }
+    }
+    // Sweep for files the manifest does not explain. Shard saves are
+    // tmp+rename, so a `.tmp` here is the debris of a torn write.
+    let listed: std::collections::HashSet<&str> = good.iter().map(|e| e.file.as_str()).collect();
+    let bad_files: std::collections::HashSet<&str> =
+        report.bad.iter().map(|(f, _)| f.as_str()).collect();
+    for e in std::fs::read_dir(dir)? {
+        let e = e?;
+        let name = e.file_name().to_string_lossy().into_owned();
+        if name == MANIFEST_FILE
+            || name == QUARANTINE_DIR
+            || listed.contains(name.as_str())
+            || bad_files.contains(name.as_str())
+        {
+            continue;
+        }
+        if e.file_type()?.is_file() {
+            report.orphans.push(name);
+        }
+    }
+    report.orphans.sort();
+    if report.clean() || dry_run {
+        return Ok(report);
+    }
+
+    // --- repair: quarantine, sweep, rewrite ------------------------------
+    let qdir = dir.join(QUARANTINE_DIR);
+    std::fs::create_dir_all(&qdir)?;
+    for (file, _) in &report.bad {
+        // A missing shard has nothing to move; everything else is
+        // preserved for post-mortem rather than deleted.
+        if std::fs::rename(dir.join(file), qdir.join(file)).is_ok() {
+            report.quarantined += 1;
+        }
+    }
+    for name in &report.orphans {
+        if name.ends_with(".tmp") {
+            std::fs::remove_file(dir.join(name))?;
+        } else if std::fs::rename(dir.join(name), qdir.join(name)).is_ok() {
+            report.quarantined += 1;
+        }
+    }
+    write_manifest(dir, &good)?;
+    obs::global_metrics()
+        .counter("predcache.fsck_quarantined")
+        .add(report.quarantined as u64);
+    obs::event(
+        Level::Warn,
+        "predcache",
+        "fsck_repair",
+        &[
+            ("bad", report.bad.len().into()),
+            ("orphans", report.orphans.len().into()),
+            ("quarantined", report.quarantined.into()),
+            ("kept", good.len().into()),
+        ],
+    );
+    Ok(report)
+}
+
+/// Validate one manifest row against its on-disk shard; `None` = clean,
+/// `Some(reason)` = every detectable corruption class from the §16
+/// fault taxonomy (torn write → size mismatch or truncated decode,
+/// bit flip → CRC mismatch, replaced file → footer or id divergence).
+fn check_shard(dir: &Path, entry: &ShardEntry) -> Option<String> {
+    let bytes = match std::fs::read(dir.join(&entry.file)) {
+        Ok(b) => b,
+        Err(e) => return Some(format!("unreadable: {e}")),
+    };
+    if bytes.len() as u64 != entry.bytes {
+        return Some(format!(
+            "{} bytes on disk, manifest says {} (torn write?)",
+            bytes.len(),
+            entry.bytes
+        ));
+    }
+    if bytes.len() < 12 {
+        return Some(format!("{} bytes is below the shard header", bytes.len()));
+    }
+    let footer = u32::from_le_bytes(bytes[bytes.len() - 4..].try_into().unwrap());
+    if footer != entry.crc32 {
+        return Some(format!(
+            "footer crc {footer:#010x} != manifest crc {:#010x}",
+            entry.crc32
+        ));
+    }
+    match decode_slide(&bytes) {
+        Err(e) => Some(format!("decode failed: {e}")),
+        Ok(decoded) if decoded.spec.id != entry.id => Some(format!(
+            "contains slide {:?}, manifest says {:?}",
+            decoded.spec.id, entry.id
+        )),
+        Ok(_) => None,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -595,6 +766,83 @@ mod tests {
             StoreError::SizeMismatch { .. }
         ));
         assert!(store.validate().is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn fsck_detects_and_quarantines_every_corruption_class() {
+        let cache = small_cache(3, 19);
+        let dir = tmp_dir("fsck");
+        save_sharded(&cache, &dir, 1).unwrap();
+        let mut shards: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .map(|e| e.file_name().to_string_lossy().into_owned())
+            .filter(|n| n.ends_with(".shard"))
+            .collect();
+        shards.sort();
+        assert_eq!(shards.len(), 3);
+        // Class 1: payload bit flip (footer stays → decode CRC catches it).
+        let f0 = dir.join(&shards[0]);
+        let mut b = std::fs::read(&f0).unwrap();
+        let mid = b.len() / 2;
+        b[mid] ^= 0x01;
+        std::fs::write(&f0, &b).unwrap();
+        // Class 2: torn write (size diverges from the manifest).
+        let f1 = dir.join(&shards[1]);
+        let b = std::fs::read(&f1).unwrap();
+        std::fs::write(&f1, &b[..b.len() / 3]).unwrap();
+        // Class 3: torn-write debris — a stray tmp the sweep must flag.
+        std::fs::write(dir.join(".9999_junk.shard.tmp"), b"partial").unwrap();
+
+        let dry = fsck(&dir, true).unwrap();
+        assert_eq!(dry.checked, 3);
+        assert_eq!(dry.bad.len(), 2, "bad: {:?}", dry.bad);
+        assert_eq!(dry.orphans, vec![".9999_junk.shard.tmp".to_string()]);
+        assert_eq!(dry.quarantined, 0, "dry run must not touch the store");
+        assert!(!dry.clean());
+        // Dry run left the damage in place: the store still errors.
+        assert!(ShardedPredStore::open(&dir).unwrap().validate().is_err());
+
+        let rep = fsck(&dir, false).unwrap();
+        assert_eq!(rep.bad.len(), 2);
+        assert_eq!(rep.quarantined, 2, "both bad shards moved");
+        assert!(!dir.join(".9999_junk.shard.tmp").exists(), "tmp swept");
+        assert!(dir.join(QUARANTINE_DIR).join(&shards[0]).exists());
+        assert!(dir.join(QUARANTINE_DIR).join(&shards[1]).exists());
+        // The repaired store opens degraded (one slide) but fully valid.
+        let store = ShardedPredStore::open(&dir).unwrap();
+        assert_eq!(store.len(), 1);
+        store.validate().unwrap();
+        assert!(fsck(&dir, true).unwrap().clean());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn fsck_flags_missing_and_mislabeled_shards() {
+        let cache = small_cache(2, 23);
+        let dir = tmp_dir("fsck2");
+        save_sharded(&cache, &dir, 1).unwrap();
+        let mut shards: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .map(|e| e.file_name().to_string_lossy().into_owned())
+            .filter(|n| n.ends_with(".shard"))
+            .collect();
+        shards.sort();
+        // Missing file + mislabeled content (slide 1's bytes under slide
+        // 0's name — footer crc diverges from the manifest row).
+        let b1 = std::fs::read(dir.join(&shards[1])).unwrap();
+        std::fs::write(dir.join(&shards[0]), &b1).unwrap();
+        std::fs::remove_file(dir.join(&shards[1])).unwrap();
+        let dry = fsck(&dir, true).unwrap();
+        assert_eq!(dry.bad.len(), 2, "bad: {:?}", dry.bad);
+        let rep = fsck(&dir, false).unwrap();
+        // The missing shard has nothing to move; the mislabeled one does.
+        assert_eq!(rep.quarantined, 1);
+        let store = ShardedPredStore::open(&dir).unwrap();
+        assert_eq!(store.len(), 0);
+        assert!(fsck(&dir, true).unwrap().clean());
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

@@ -6,9 +6,9 @@
 //! | `POST /v1/jobs` | submit a SlideSpec job → `201` + job id |
 //! | `GET /v1/jobs/{id}` | status + progress counters |
 //! | `DELETE /v1/jobs/{id}` | cancel at the next frontier boundary |
-//! | `GET /v1/jobs/{id}/result` | progressive JSONL delta stream (or `?format=png`) |
+//! | `GET /v1/jobs/{id}/result` | progressive JSONL delta stream (`?format=png`; resume via `?from_level=N`) |
 //! | `GET /v1/metrics` | scheduler + HTTP metrics snapshot |
-//! | `GET /healthz` | unauthenticated liveness probe |
+//! | `GET /healthz` | unauthenticated liveness probe (`503` + reasons while degraded) |
 //!
 //! Every `/v1/*` route requires a bearer token; the resolved tenant is
 //! both the scheduler's fair-share key and the authorization boundary —
@@ -36,6 +36,7 @@ use crate::util::json::Json;
 use super::auth::TokenTable;
 use super::parser::Request;
 use super::wire::{respond, respond_error, ChunkedWriter};
+use super::HealthState;
 
 /// Hard caps on submitted slide geometry, enforced before
 /// [`SlideSpec::new`] ever sees the values (its own validation panics —
@@ -57,6 +58,7 @@ struct HttpMetrics {
     jobs_submitted: Arc<Counter>,
     jobs_cancelled: Arc<Counter>,
     rejected_queue_full: Arc<Counter>,
+    rejected_degraded: Arc<Counter>,
     bytes_streamed: Arc<Counter>,
     latency_us: Arc<Histogram>,
 }
@@ -73,6 +75,7 @@ impl HttpMetrics {
             jobs_submitted: reg.counter("http.jobs_submitted"),
             jobs_cancelled: reg.counter("http.jobs_cancelled"),
             rejected_queue_full: reg.counter("http.rejected_queue_full"),
+            rejected_degraded: reg.counter("http.rejected_degraded"),
             bytes_streamed: reg.counter("http.bytes_streamed"),
             latency_us: reg.histogram("http.request_latency_us"),
         }
@@ -93,16 +96,23 @@ pub struct Router {
     svc: Arc<AnalysisService>,
     tokens: TokenTable,
     stop: Arc<AtomicBool>,
+    health: Arc<HealthState>,
     m: HttpMetrics,
 }
 
 impl Router {
     /// A router over a running service. `stop` is the front-end's
     /// shutdown flag — long-lived streams check it so server shutdown
-    /// is not gated on jobs finishing.
-    pub fn new(svc: Arc<AnalysisService>, tokens: TokenTable, stop: Arc<AtomicBool>) -> Router {
+    /// is not gated on jobs finishing. `health` is the degraded-state
+    /// registry consulted by `/healthz` and submission.
+    pub fn new(
+        svc: Arc<AnalysisService>,
+        tokens: TokenTable,
+        stop: Arc<AtomicBool>,
+        health: Arc<HealthState>,
+    ) -> Router {
         let m = HttpMetrics::new(&svc.registry());
-        Router { svc, tokens, stop, m }
+        Router { svc, tokens, stop, health, m }
     }
 
     /// Record a parser rejection (the connection loop answers it).
@@ -153,13 +163,23 @@ impl Router {
             if req.method != "GET" {
                 return self.method_not_allowed(w, "GET", keep);
             }
+            // Degraded is still *alive*: the body carries the reasons so
+            // an operator can tell a gray store/cluster from a dead
+            // process, but the 503 lets dumb load-balancer probes shed
+            // traffic without parsing anything.
+            let reasons = self.health.reasons();
+            let status = if reasons.is_empty() { 200 } else { 503 };
             let body = Json::obj()
-                .set("ok", true)
+                .set("ok", reasons.is_empty())
                 .set("queued", self.svc.queued())
                 .set("live", self.svc.board().live())
+                .set(
+                    "degraded",
+                    Json::Arr(reasons.into_iter().map(Json::Str).collect()),
+                )
                 .to_string();
-            respond(w, 200, "application/json", &[], body.as_bytes(), keep)?;
-            return Ok(200);
+            respond(w, status, "application/json", &[], body.as_bytes(), keep)?;
+            return Ok(status);
         }
         if segs.first() != Some(&"v1") {
             respond_error(w, 404, "unknown route", &[], keep)?;
@@ -232,6 +252,25 @@ impl Router {
         keep: bool,
         w: &mut impl Write,
     ) -> std::io::Result<u16> {
+        // Graceful degradation: while the store or cluster is impaired
+        // the service refuses new work outright — accepting a job it
+        // cannot finish just turns a gray failure into a queue of
+        // broken promises. 503 + Retry-After tells the client when to
+        // come back; in-flight jobs keep streaming.
+        if self.health.is_degraded() {
+            self.m.rejected_degraded.inc();
+            let body = Json::obj()
+                .set("error", "service degraded")
+                .set(
+                    "degraded",
+                    Json::Arr(self.health.reasons().into_iter().map(Json::Str).collect()),
+                )
+                .set("retry_after", 5u32)
+                .to_string();
+            let retry = ("Retry-After", "5".to_string());
+            respond(w, 503, "application/json", &[retry], body.as_bytes(), keep)?;
+            return Ok(503);
+        }
         let spec = match parse_submit(&req.body, tenant) {
             Ok(s) => s,
             Err(msg) => {
@@ -353,10 +392,26 @@ impl Router {
             respond_error(w, 404, "no such job", &[], keep)?;
             return Ok(404);
         };
+        let from_level = match req.query_param("from_level") {
+            None => None,
+            Some(raw) => match raw.parse::<usize>() {
+                Ok(n) => Some(n),
+                Err(_) => {
+                    respond_error(
+                        w,
+                        400,
+                        "from_level must be a non-negative integer",
+                        &[],
+                        keep,
+                    )?;
+                    return Ok(400);
+                }
+            },
+        };
         if req.query_param("format") == Some("png") {
             return self.result_png(&board, jid, tenant, keep, w);
         }
-        self.result_stream(&board, jid, tenant, keep, w)
+        self.result_stream(&board, jid, tenant, from_level, keep, w)
     }
 
     /// Block (in shutdown-aware slices) until the job is terminal, then
@@ -405,11 +460,19 @@ impl Router {
     /// set), one line per finalized level as the scheduler publishes it,
     /// then a terminal line. The concatenated lines reassemble the
     /// byte-identical ExecTree of a standalone run.
+    ///
+    /// `from_level` is the resume cursor for a disconnected client:
+    /// levels finalize coarsest-first (descending level numbers), so a
+    /// client that already holds every level above `N` reconnects with
+    /// `?from_level=N` and receives only the deltas for levels `<= N` —
+    /// concatenated after what it already has, the stream is still the
+    /// byte-identical tree.
     fn result_stream(
         &self,
         board: &JobBoard,
         id: u64,
         tenant: &str,
+        from_level: Option<usize>,
         keep: bool,
         w: &mut impl Write,
     ) -> std::io::Result<u16> {
@@ -455,6 +518,12 @@ impl Router {
             };
             seen += deltas.len();
             for d in &deltas {
+                // Resume filter: the client already holds the coarser
+                // levels. Skip their replay but keep counting them in
+                // `seen`, so the board cursor stays correct.
+                if from_level.is_some_and(|n| d.level > n) {
+                    continue;
+                }
                 let line = Json::obj()
                     .set("level", d.level)
                     .set(

@@ -22,7 +22,10 @@
 //! [`HttpFrontend`] owns the listener thread and one thread per
 //! connection (bounded by [`HttpConfig::max_connections`]; excess
 //! connections get an immediate `503`). Backpressure from the bounded
-//! admission queue surfaces as `429 Too Many Requests` + `Retry-After`.
+//! admission queue surfaces as `429 Too Many Requests` + `Retry-After`;
+//! gray degradation (an impaired shard store, a cluster with no live
+//! workers) surfaces as `503` on submission and a degraded `/healthz`,
+//! driven by the shared [`HealthState`] registry.
 //! Shutdown is cooperative: the stop flag short-circuits keep-alive
 //! loops and in-flight result streams, and the socket read timeout
 //! bounds how long an idle connection can delay [`HttpFrontend::stop`].
@@ -36,6 +39,8 @@ pub mod parser;
 /// Response serialization and chunked streaming.
 pub mod wire;
 
+use std::collections::BTreeSet;
+use std::io::{Read, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
@@ -49,6 +54,50 @@ pub use parser::Limits;
 
 use api::Router;
 
+/// Shared degraded-mode registry: gray failures observed elsewhere in
+/// the process (an impaired shard store, a cluster with no live
+/// workers) are posted here by watchdog threads, and the HTTP surface
+/// consults it — `/healthz` answers `503` with the active reasons and
+/// job submission sheds load with `Retry-After` instead of accepting
+/// work the service cannot currently finish.
+///
+/// Degradation is a *set* of independent reason strings: each source
+/// sets and clears its own reason, and the service is degraded while
+/// the set is non-empty. Transitions are logged as `http` events.
+#[derive(Debug, Default)]
+pub struct HealthState {
+    reasons: Mutex<BTreeSet<String>>,
+}
+
+impl HealthState {
+    /// Mark the service degraded for `reason` (idempotent).
+    pub fn set_degraded(&self, reason: &str) {
+        let mut r = self.reasons.lock().unwrap();
+        if r.insert(reason.to_string()) {
+            obs::event(Level::Warn, "http", "degraded", &[("reason", reason.into())]);
+        }
+    }
+
+    /// Clear `reason` (idempotent); the service recovers when the last
+    /// reason clears.
+    pub fn clear_degraded(&self, reason: &str) {
+        let mut r = self.reasons.lock().unwrap();
+        if r.remove(reason) && r.is_empty() {
+            obs::event(Level::Info, "http", "recovered", &[]);
+        }
+    }
+
+    /// Whether any degradation reason is active.
+    pub fn is_degraded(&self) -> bool {
+        !self.reasons.lock().unwrap().is_empty()
+    }
+
+    /// The active reasons, sorted.
+    pub fn reasons(&self) -> Vec<String> {
+        self.reasons.lock().unwrap().iter().cloned().collect()
+    }
+}
+
 /// Front-end configuration.
 #[derive(Debug, Clone)]
 pub struct HttpConfig {
@@ -60,6 +109,10 @@ pub struct HttpConfig {
     pub limits: Limits,
     /// Maximum concurrent connections; excess accepts answer `503`.
     pub max_connections: usize,
+    /// Degraded-state registry consulted by `/healthz` and submission.
+    /// Clone the `Arc` before [`HttpFrontend::start`] to drive it from
+    /// a watchdog.
+    pub health: Arc<HealthState>,
 }
 
 impl HttpConfig {
@@ -70,6 +123,7 @@ impl HttpConfig {
             tokens,
             limits: Limits::default(),
             max_connections: 64,
+            health: Arc::new(HealthState::default()),
         }
     }
 }
@@ -113,7 +167,12 @@ impl HttpFrontend {
         let registry = svc.registry();
         let m_conns = registry.counter("http.connections");
         let m_busy = registry.counter("http.rejected_busy");
-        let router = Arc::new(Router::new(svc, cfg.tokens.clone(), Arc::clone(&stop)));
+        let router = Arc::new(Router::new(
+            svc,
+            cfg.tokens.clone(),
+            Arc::clone(&stop),
+            Arc::clone(&cfg.health),
+        ));
         let conns: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
         let active = Arc::new(AtomicUsize::new(0));
         obs::event(
@@ -128,50 +187,67 @@ impl HttpFrontend {
         let max_conns = cfg.max_connections.max(1);
         let listener_thread = std::thread::Builder::new()
             .name("http-listener".to_string())
-            .spawn(move || loop {
-                let (stream, _peer) = match listener.accept() {
-                    Ok(pair) => pair,
-                    Err(_) => {
-                        if accept_stop.load(Ordering::Relaxed) {
-                            break;
+            .spawn(move || {
+                let accept_policy = crate::fault::RetryPolicy {
+                    base: std::time::Duration::from_millis(1),
+                    cap: std::time::Duration::from_millis(250),
+                    deadline: std::time::Duration::from_secs(3600),
+                    max_attempts: u32::MAX,
+                };
+                let mut nap = crate::fault::Backoff::new("http.accept", &accept_policy);
+                loop {
+                    let (stream, _peer) = match listener.accept() {
+                        Ok(pair) => {
+                            nap.reset();
+                            pair
                         }
-                        // Transient accept failure (e.g. fd exhaustion):
-                        // back off instead of spinning.
-                        std::thread::sleep(std::time::Duration::from_millis(10));
+                        Err(_) => {
+                            if accept_stop.load(Ordering::Relaxed) {
+                                break;
+                            }
+                            // Transient accept failure (e.g. fd
+                            // exhaustion): back off instead of spinning.
+                            // The listener has no deadline of its own —
+                            // exhaustion rewinds the ladder and keeps
+                            // retrying at the capped cadence.
+                            if !nap.sleep() {
+                                nap.reset();
+                            }
+                            continue;
+                        }
+                    };
+                    if accept_stop.load(Ordering::Relaxed) {
+                        // Woken by the stop() self-connect (or a late client).
+                        let _ = stream.shutdown(Shutdown::Both);
+                        break;
+                    }
+                    m_conns.inc();
+                    let mut pool = accept_conns.lock().unwrap();
+                    // Reap finished handler threads so a long-lived server
+                    // doesn't accumulate handles (dropping a finished handle
+                    // is a no-op join).
+                    pool.retain(|h| !h.is_finished());
+                    if active.load(Ordering::Relaxed) >= max_conns {
+                        m_busy.inc();
+                        let mut s = stream;
+                        let _ = wire::respond_error(&mut s, 503, "connection limit", &[], false);
+                        let _ = s.shutdown(Shutdown::Both);
                         continue;
                     }
-                };
-                if accept_stop.load(Ordering::Relaxed) {
-                    // Woken by the stop() self-connect (or a late client).
-                    let _ = stream.shutdown(Shutdown::Both);
-                    break;
-                }
-                m_conns.inc();
-                let mut pool = accept_conns.lock().unwrap();
-                // Reap finished handler threads so a long-lived server
-                // doesn't accumulate handles (dropping a finished handle
-                // is a no-op join).
-                pool.retain(|h| !h.is_finished());
-                if active.load(Ordering::Relaxed) >= max_conns {
-                    m_busy.inc();
-                    let mut s = stream;
-                    let _ = wire::respond_error(&mut s, 503, "connection limit", &[], false);
-                    let _ = s.shutdown(Shutdown::Both);
-                    continue;
-                }
-                active.fetch_add(1, Ordering::Relaxed);
-                let guard = ActiveGuard(Arc::clone(&active));
-                let router = Arc::clone(&router);
-                let limits = limits.clone();
-                let handle = std::thread::Builder::new()
-                    .name("http-conn".to_string())
-                    .spawn(move || {
-                        let _guard = guard;
-                        handle_connection(&router, &limits, stream);
-                    });
-                match handle {
-                    Ok(h) => pool.push(h),
-                    Err(_) => { /* spawn failed; guard already dropped with the closure */ }
+                    active.fetch_add(1, Ordering::Relaxed);
+                    let guard = ActiveGuard(Arc::clone(&active));
+                    let router = Arc::clone(&router);
+                    let limits = limits.clone();
+                    let handle = std::thread::Builder::new()
+                        .name("http-conn".to_string())
+                        .spawn(move || {
+                            let _guard = guard;
+                            handle_connection(&router, &limits, stream);
+                        });
+                    match handle {
+                        Ok(h) => pool.push(h),
+                        Err(_) => { /* spawn failed; guard dropped with the closure */ }
+                    }
                 }
             })
             .map_err(|e| format!("spawn http listener: {e}"))?;
@@ -218,15 +294,43 @@ impl Drop for HttpFrontend {
 }
 
 /// Serve one connection: parse requests in a keep-alive loop, route
-/// them, answer parser rejections with their mapped status.
+/// them, answer parser rejections with their mapped status. When a
+/// fault plan is armed, both connection halves run through a
+/// [`FaultyStream`](crate::fault::FaultyStream) labelled
+/// `http:<peer>`, so `net.*` rules scoped to that peer (or `*`) apply
+/// to this connection's reads and writes.
 fn handle_connection(router: &Router, limits: &Limits, stream: TcpStream) {
     let _ = stream.set_read_timeout(Some(limits.read_timeout));
     let _ = stream.set_nodelay(true);
+    let peer = stream
+        .peer_addr()
+        .map(|a| a.to_string())
+        .unwrap_or_else(|_| "unknown".to_string());
     let Ok(read_half) = stream.try_clone() else {
         return;
     };
+    let Ok(write_half) = stream.try_clone() else {
+        return;
+    };
+    match crate::fault::active() {
+        Some(inj) => {
+            let label = format!("http:{peer}");
+            serve_requests(
+                router,
+                limits,
+                crate::fault::FaultyStream::new(read_half, label.as_str(), Arc::clone(&inj)),
+                crate::fault::FaultyStream::new(write_half, label.as_str(), inj),
+            );
+        }
+        None => serve_requests(router, limits, read_half, write_half),
+    }
+    let _ = stream.shutdown(Shutdown::Both);
+}
+
+/// The keep-alive request loop over any byte stream (plain socket
+/// halves, or fault-wrapped ones).
+fn serve_requests(router: &Router, limits: &Limits, read_half: impl Read, mut writer: impl Write) {
     let mut reader = parser::RequestReader::new(read_half, limits.clone());
-    let mut writer = stream;
     loop {
         match reader.read_request() {
             Ok(None) => break,
@@ -249,5 +353,4 @@ fn handle_connection(router: &Router, limits: &Limits, stream: TcpStream) {
             }
         }
     }
-    let _ = writer.shutdown(Shutdown::Both);
 }

@@ -1467,6 +1467,7 @@ mod tests {
                 park_aging: 0,
                 failures: vec![],
                 leader_failures: vec![],
+                stragglers: vec![],
             },
         );
         // Sim job index i ↔ service id i+1 (the admission queue assigns

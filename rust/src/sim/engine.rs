@@ -313,6 +313,28 @@ pub struct SimJobSpec {
 /// with `None`). The simulator predicts *recovery overhead* the same
 /// way it predicts scheduling: results stay byte-identical; only the
 /// makespan (and re-dispatched tile count) grows.
+/// One injected gray worker for [`simulate_workload`]: the simulator
+/// counterpart of a machine that is slow but alive (thermal throttling,
+/// a half-duplex link, a failing disk) — the §16 gray-failure model.
+/// While the window is open, every chunk the worker *starts* takes
+/// `factor`× its normal service time. The worker never dies, so none of
+/// the recovery machinery fires; only placement and the makespan feel
+/// it. Results stay byte-identical — a straggler can slow a run, never
+/// corrupt it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Straggler {
+    /// Index of the slowed virtual worker.
+    pub worker: usize,
+    /// First tick of the slow window (a chunk starting at `from` is
+    /// already slow).
+    pub from: u64,
+    /// Tick the worker recovers (chunks starting at `until` run at full
+    /// speed again); `None` = gray for the rest of the run.
+    pub until: Option<u64>,
+    /// Integer service-time multiplier (values `< 1` are read as 1).
+    pub factor: u64,
+}
+
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct WorkerFailure {
     /// Index of the virtual worker that dies.
@@ -353,6 +375,9 @@ pub struct WorkloadConfig {
     /// the standby); only already-dealt work is lost. Results stay
     /// byte-identical; makespan and the requeue counters grow.
     pub leader_failures: Vec<u64>,
+    /// Injected gray workers (§16): slow-but-alive windows that stretch
+    /// chunk service time without tripping the failure model.
+    pub stragglers: Vec<Straggler>,
 }
 
 impl Default for WorkloadConfig {
@@ -365,6 +390,7 @@ impl Default for WorkloadConfig {
             park_aging: 0,
             failures: Vec::new(),
             leader_failures: Vec::new(),
+            stragglers: Vec::new(),
         }
     }
 }
@@ -738,7 +764,10 @@ pub fn simulate_workload(
                 m_dealt.inc();
                 *usage.entry(jobs[i].tenant.clone()).or_default() += req.tiles.len() as u64;
                 let start = worker_free[w].max(now);
-                let finish = start + req.tiles.len() as u64;
+                // A gray window stretches the whole chunk by the largest
+                // matching factor — service time, not correctness.
+                let slow = straggler_factor(&cfg.stragglers, w, start);
+                let finish = start + (req.tiles.len() as u64).saturating_mul(slow);
                 worker_free[w] = finish;
                 let probs: Vec<f32> = req
                     .tiles
@@ -977,6 +1006,18 @@ fn zoom_probs(tree: &ExecTree) -> HashMap<TileId, f32> {
     m
 }
 
+/// The service-time multiplier for a chunk starting on worker `w` at
+/// tick `start`: the largest factor among open gray windows, 1 when
+/// none match.
+fn straggler_factor(stragglers: &[Straggler], w: usize, start: u64) -> u64 {
+    stragglers
+        .iter()
+        .filter(|s| s.worker == w && start >= s.from && s.until.map_or(true, |u| start < u))
+        .map(|s| s.factor.max(1))
+        .max()
+        .unwrap_or(1)
+}
+
 fn finish_job(
     i: usize,
     now: u64,
@@ -1193,6 +1234,7 @@ mod tests {
                     park_aging: 0,
                     failures: vec![],
                     leader_failures: vec![],
+                    stragglers: vec![],
                 };
                 let res = simulate_workload(&jobs, policy.as_ref(), &cfg);
                 assert_eq!(res.completion_order.len(), jobs.len());
@@ -1224,6 +1266,7 @@ mod tests {
             park_aging: 0,
             failures: vec![],
             leader_failures: vec![],
+            stragglers: vec![],
         };
         let a = simulate_workload(&jobs, &StrictPriority, &cfg);
         let b = simulate_workload(&jobs, &StrictPriority, &cfg);
@@ -1251,6 +1294,7 @@ mod tests {
             park_aging: 0,
             failures: vec![],
             leader_failures: vec![],
+            stragglers: vec![],
         };
         let res = simulate_workload(&jobs, &StrictPriority, &cfg);
         assert!(
@@ -1276,6 +1320,7 @@ mod tests {
             preempt: false,
             failures: vec![],
             leader_failures: vec![],
+            stragglers: vec![],
             ..cfg
         };
         let res = simulate_workload(&jobs, &StrictPriority, &cfg);
@@ -1303,6 +1348,7 @@ mod tests {
             park_aging: 0,
             failures: vec![],
             leader_failures: vec![],
+            stragglers: vec![],
         };
         let fifo = simulate_workload(&jobs, &Fifo, &cfg);
         let wfs = simulate_workload(&jobs, &WeightedFairShare::default(), &cfg);
@@ -1344,6 +1390,7 @@ mod tests {
             park_aging: 0,
             failures: vec![],
             leader_failures: vec![],
+            stragglers: vec![],
         };
         let res = simulate_workload(&jobs, &Edf, &cfg);
         assert_eq!(res.completion_order, vec![2, 1, 0]);
@@ -1369,6 +1416,7 @@ mod tests {
             park_aging: 0,
             failures: vec![],
             leader_failures: vec![],
+            stragglers: vec![],
         };
         let res = simulate_workload(&jobs, &Fifo, &cfg);
         assert!(res.outcomes[1].expired, "lapsed job must expire");
@@ -1396,6 +1444,7 @@ mod tests {
             max_in_flight: 2,
             failures: vec![],
             leader_failures: vec![],
+            stragglers: vec![],
             chunk: 0,
             preempt: false,
             park_aging: 0,
@@ -1437,6 +1486,7 @@ mod tests {
             park_aging: 0,
             failures: vec![],
             leader_failures: vec![],
+            stragglers: vec![],
         };
         let res = simulate_workload(&jobs, &StrictPriority, &cfg);
         assert!(
@@ -1479,6 +1529,7 @@ mod tests {
             park_aging: 0,
             failures: vec![],
             leader_failures: vec![],
+            stragglers: vec![],
         };
         let starved = simulate_workload(&jobs, &StrictPriority, &base);
         assert_eq!(
@@ -1535,6 +1586,7 @@ mod tests {
             park_aging: 0,
             failures: vec![],
             leader_failures: vec![],
+            stragglers: vec![],
         };
         let clean = simulate_workload(&jobs, &Fifo, &clean_cfg);
         assert_eq!(clean.requeued_chunks, 0);
@@ -1612,6 +1664,7 @@ mod tests {
                 },
             ],
             leader_failures: vec![],
+            stragglers: vec![],
         };
         let a = simulate_workload(&jobs, &Fifo, &cfg);
         let b = simulate_workload(&jobs, &Fifo, &cfg);
@@ -1625,6 +1678,77 @@ mod tests {
         // Only the rejoined worker can have completed work after tick 2
         // (everything on worker 1 after the outage was requeued).
         assert!(a.requeued_chunks > 0);
+    }
+
+    #[test]
+    fn gray_straggler_slows_the_run_but_never_changes_a_tree() {
+        // §16 gray-failure mirror: a worker that is slow-but-alive for a
+        // window stretches the makespan, trips none of the recovery
+        // machinery, and leaves every tree byte-identical.
+        let jobs: Vec<SimJobSpec> = (0..3)
+            .map(|i| workload_job(180 + i, "t", 1, 0, None))
+            .collect();
+        let total: usize = jobs.iter().map(|j| j.tree.total_analyzed()).sum();
+        let clean_cfg = WorkloadConfig {
+            workers: 3,
+            max_in_flight: 2,
+            chunk: 4,
+            preempt: false,
+            park_aging: 0,
+            failures: vec![],
+            leader_failures: vec![],
+            stragglers: vec![],
+        };
+        let clean = simulate_workload(&jobs, &Fifo, &clean_cfg);
+        let gray_cfg = WorkloadConfig {
+            stragglers: vec![Straggler {
+                worker: 0,
+                from: 0,
+                until: None,
+                factor: 8,
+            }],
+            ..clean_cfg.clone()
+        };
+        let gray = simulate_workload(&jobs, &Fifo, &gray_cfg);
+        for (i, out) in gray.outcomes.iter().enumerate() {
+            assert_eq!(
+                out.tree, jobs[i].tree,
+                "job {i}: a straggler must not change the result"
+            );
+            // No chunk was ever lost: dispatched == analyzed.
+            assert_eq!(out.tiles, jobs[i].tree.total_analyzed());
+        }
+        assert!(
+            gray.makespan > clean.makespan,
+            "an 8x straggler must cost virtual time ({} vs {})",
+            gray.makespan,
+            clean.makespan
+        );
+        assert_eq!(gray.requeued_chunks, 0, "gray is not dead: nothing requeues");
+        assert_eq!(gray.per_worker.iter().sum::<usize>(), total);
+
+        // A window that closes lets the worker recover: bounded gray
+        // costs less than permanent gray.
+        let windowed_cfg = WorkloadConfig {
+            stragglers: vec![Straggler {
+                worker: 0,
+                from: 0,
+                until: Some(4),
+                factor: 8,
+            }],
+            ..clean_cfg
+        };
+        let windowed = simulate_workload(&jobs, &Fifo, &windowed_cfg);
+        assert!(windowed.makespan <= gray.makespan);
+        for (i, out) in windowed.outcomes.iter().enumerate() {
+            assert_eq!(out.tree, jobs[i].tree);
+        }
+
+        // Same schedule twice ⇒ same trace.
+        let again = simulate_workload(&jobs, &Fifo, &gray_cfg);
+        assert_eq!(again.makespan, gray.makespan);
+        assert_eq!(again.per_worker, gray.per_worker);
+        assert_eq!(again.completion_order, gray.completion_order);
     }
 
     #[test]
@@ -1646,10 +1770,12 @@ mod tests {
             park_aging: 0,
             failures: vec![],
             leader_failures: vec![],
+            stragglers: vec![],
         };
         let clean = simulate_workload(&jobs, &Fifo, &clean_cfg);
         let failover_cfg = WorkloadConfig {
             leader_failures: vec![3],
+            stragglers: vec![],
             ..clean_cfg
         };
         let hit = simulate_workload(&jobs, &Fifo, &failover_cfg);

@@ -16,6 +16,6 @@ pub mod engine;
 pub use backend::SimBackend;
 pub use distribution::Distribution;
 pub use engine::{
-    simulate, simulate_workload, Policy, SimJobOutcome, SimJobSpec, SimResult, WorkerFailure,
-    WorkloadConfig, WorkloadResult,
+    simulate, simulate_workload, Policy, SimJobOutcome, SimJobSpec, SimResult, Straggler,
+    WorkerFailure, WorkloadConfig, WorkloadResult,
 };

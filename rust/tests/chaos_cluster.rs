@@ -12,6 +12,12 @@
 //! Schedules are reproducible: `CHAOS_SEED=n cargo test -p pyramidai
 //! --test chaos_cluster` replays exactly one seed, and every failure
 //! message leads with the seed that produced it.
+//!
+//! The mixed-fault scenarios (DESIGN.md §16) compose process kills with
+//! deterministic `--faults` plans: a slow-link worker (`net.delay`), a
+//! worker behind a windowed `net.partition`, and a standby whose
+//! takeover tree write suffers probabilistic `disk.torn_write` faults.
+//! `CHAOS_MIXED_SEED=n` replays one mixed seed the same way.
 
 use std::io::BufRead;
 use std::path::{Path, PathBuf};
@@ -273,6 +279,268 @@ fn run_scenario(seed: u64, golden: &str) -> bool {
     drop(standby);
     let _ = std::fs::remove_dir_all(&dir);
     took_over
+}
+
+/// Write a fault plan file into the scenario dir and return its path.
+fn write_plan(dir: &Path, name: &str, json: &str) -> PathBuf {
+    let path = dir.join(name);
+    std::fs::write(&path, json).unwrap();
+    path
+}
+
+/// One seeded mixed-fault scenario: three workers — one on a seeded
+/// slow link, one behind a windowed partition, one SIGKILLed — plus a
+/// leader SIGKILL and a standby whose takeover tree write is hit by
+/// probabilistic torn writes. Whatever composes, the surviving tree
+/// must be byte-identical to the unfailed run. Returns whether the
+/// standby took over.
+fn run_mixed_scenario(seed: u64, golden: &str) -> bool {
+    let dir = std::env::temp_dir().join(format!(
+        "pyramidai_chaosmix_{}_{}",
+        std::process::id(),
+        seed
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let standby_addr_file = dir.join("standby.addr");
+    let leader_addr_file = dir.join("leader.addr");
+    let leader_out = dir.join("leader_tree.json");
+    let out_dir = dir.join("trees");
+
+    // Seeded schedule: kill clocks (measured from worker quorum) plus
+    // fault-plan windows (measured from each faulted process's start).
+    let mut rng = Pcg32::new(0x0C4A_F417 ^ seed);
+    let leader_kill_ms = rng.usize_range(40, 160) as u64;
+    let worker_kill_ms = rng.usize_range(40, 160) as u64;
+    let delay_min_us = rng.usize_range(200, 800) as u64;
+    let delay_max_us = delay_min_us + rng.usize_range(500, 1500) as u64;
+    let partition_after_ms = rng.usize_range(150, 400) as u64;
+    let partition_dur_ms = rng.usize_range(60, 200) as u64;
+
+    // The standby's only disk write is the resumed tree; torn writes at
+    // p=0.6 force its retry loop to re-draw until a write survives.
+    let standby_plan = write_plan(
+        &dir,
+        "standby_faults.json",
+        &format!(
+            r#"{{"seed": {seed}, "rules": [
+                {{"kind": "disk.torn_write", "p": 0.6, "path": "run_1.json"}}
+            ]}}"#
+        ),
+    );
+    // Worker 0: every wire op crawls (slow link, whole run).
+    let slow_plan = write_plan(
+        &dir,
+        "w0_faults.json",
+        &format!(
+            r#"{{"seed": {seed}, "rules": [
+                {{"kind": "net.delay", "p": 1.0,
+                  "min_us": {delay_min_us}, "max_us": {delay_max_us}}}
+            ]}}"#
+        ),
+    );
+    // Worker 1: a gray window in which every wire op fails, then heals.
+    let partition_plan = write_plan(
+        &dir,
+        "w1_faults.json",
+        &format!(
+            r#"{{"seed": {seed}, "rules": [
+                {{"kind": "net.partition", "p": 1.0,
+                  "after_ms": {partition_after_ms}, "dur_ms": {partition_dur_ms}}}
+            ]}}"#
+        ),
+    );
+
+    let mut standby = Proc(
+        Command::new(BIN)
+            .args([
+                "leader",
+                "--standby",
+                "--listen",
+                "127.0.0.1:0",
+                "--addr-file",
+                standby_addr_file.to_str().unwrap(),
+                "--out-dir",
+                out_dir.to_str().unwrap(),
+                "--model",
+                "oracle",
+                "--analyzer-seed",
+                "1",
+                "--heartbeat-ms",
+                "15",
+                "--faults",
+                standby_plan.to_str().unwrap(),
+            ])
+            .stdout(Stdio::null())
+            .stderr(Stdio::null())
+            .spawn()
+            .expect("spawn standby"),
+    );
+    assert!(
+        wait_for_file(&standby_addr_file, Duration::from_secs(30)),
+        "mixed seed {seed}: standby never published its address"
+    );
+    let standby_addr = std::fs::read_to_string(&standby_addr_file).unwrap();
+
+    let mut leader = Proc(
+        Command::new(BIN)
+            .args([
+                "leader",
+                "--slide-seed",
+                &SLIDE_SEED.to_string(),
+                "--kind",
+                "large_tumor",
+                "--tiles-x",
+                &TILES_X.to_string(),
+                "--tiles-y",
+                &TILES_Y.to_string(),
+                "--workers",
+                "0",
+                "--wait-workers",
+                "3",
+                "--chunk",
+                "4",
+                "--standby-addr",
+                standby_addr.trim(),
+                "--addr-file",
+                leader_addr_file.to_str().unwrap(),
+                "--out",
+                leader_out.to_str().unwrap(),
+                "--model",
+                "oracle",
+                "--analyzer-seed",
+                "1",
+                "--heartbeat-ms",
+                "15",
+            ])
+            .stdout(Stdio::piped())
+            .stderr(Stdio::null())
+            .spawn()
+            .expect("spawn leader"),
+    );
+    assert!(
+        wait_for_file(&leader_addr_file, Duration::from_secs(30)),
+        "mixed seed {seed}: leader never published its address"
+    );
+    let leader_addr = std::fs::read_to_string(&leader_addr_file).unwrap();
+
+    let spawn_worker = |plan: Option<&Path>| {
+        let mut cmd = Command::new(BIN);
+        cmd.args([
+            "worker",
+            "--connect",
+            leader_addr.trim(),
+            "--model",
+            "oracle",
+            "--analyzer-seed",
+            "1",
+            "--per-tile-ms",
+            "4",
+        ]);
+        if let Some(p) = plan {
+            cmd.args(["--faults", p.to_str().unwrap()]);
+        }
+        Proc(
+            cmd.stdout(Stdio::null())
+                .stderr(Stdio::null())
+                .spawn()
+                .expect("spawn worker"),
+        )
+    };
+    // w0 crawls, w1 gets partitioned, w2 is the kill victim.
+    let w0 = spawn_worker(Some(slow_plan.as_path()));
+    let w1 = spawn_worker(Some(partition_plan.as_path()));
+    let mut w2 = spawn_worker(None);
+
+    {
+        let stdout = leader.0.stdout.take().expect("leader stdout piped");
+        let mut lines = std::io::BufReader::new(stdout).lines();
+        let ready = loop {
+            match lines.next() {
+                Some(Ok(l)) if l.starts_with("workers ready") => break true,
+                Some(Ok(_)) => continue,
+                _ => break false,
+            }
+        };
+        assert!(ready, "mixed seed {seed}: leader exited before quorum");
+        std::thread::spawn(move || for _ in lines {});
+    }
+
+    let t0 = Instant::now();
+    let mut killed_leader = false;
+    let mut killed_worker = false;
+    while !(killed_leader && killed_worker) {
+        let elapsed = t0.elapsed();
+        if !killed_leader && elapsed >= Duration::from_millis(leader_kill_ms) {
+            let _ = leader.0.kill();
+            killed_leader = true;
+        }
+        if !killed_worker && elapsed >= Duration::from_millis(worker_kill_ms) {
+            let _ = w2.0.kill();
+            killed_worker = true;
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+
+    assert!(
+        wait_for_exit(&mut standby.0, Duration::from_secs(120)),
+        "mixed seed {seed}: standby never exited (leader@{leader_kill_ms}ms, \
+         w2@{worker_kill_ms}ms, partition@{partition_after_ms}+{partition_dur_ms}ms, \
+         delay {delay_min_us}-{delay_max_us}us)"
+    );
+
+    let standby_tree = out_dir.join("run_1.json");
+    let (took_over, tree_path): (bool, PathBuf) = if standby_tree.exists() {
+        (true, standby_tree)
+    } else {
+        (false, leader_out.clone())
+    };
+    assert!(
+        tree_path.exists(),
+        "mixed seed {seed}: no tree survived (leader@{leader_kill_ms}ms, \
+         w2@{worker_kill_ms}ms, partition@{partition_after_ms}+{partition_dur_ms}ms)"
+    );
+    let got = std::fs::read_to_string(&tree_path).unwrap();
+    assert_eq!(
+        got, golden,
+        "mixed seed {seed}: tree diverged from the unfailed run \
+         (leader@{leader_kill_ms}ms, w2@{worker_kill_ms}ms, \
+         partition@{partition_after_ms}+{partition_dur_ms}ms, \
+         delay {delay_min_us}-{delay_max_us}us, took_over={took_over})"
+    );
+
+    drop(w2);
+    drop(w1);
+    drop(w0);
+    drop(leader);
+    drop(standby);
+    let _ = std::fs::remove_dir_all(&dir);
+    took_over
+}
+
+#[test]
+fn seeded_mixed_fault_schedules_never_change_the_tree() {
+    let golden = golden_tree_json();
+    let seeds: Vec<u64> = match std::env::var("CHAOS_MIXED_SEED") {
+        Ok(s) => vec![s.parse().expect("CHAOS_MIXED_SEED must be an integer")],
+        Err(_) => (1..=4).collect(),
+    };
+    let mut takeovers = 0usize;
+    for &seed in &seeds {
+        eprintln!("mixed chaos seed {seed}: starting");
+        if run_mixed_scenario(seed, &golden) {
+            takeovers += 1;
+        }
+        eprintln!("mixed chaos seed {seed}: ok");
+    }
+    // Leader kills land 40-160 ms into a run that takes hundreds of ms;
+    // the full default schedule must see at least one takeover.
+    if seeds.len() >= 4 {
+        assert!(
+            takeovers > 0,
+            "no mixed seed exercised a standby takeover — kill windows too late?"
+        );
+    }
 }
 
 #[test]

@@ -454,6 +454,197 @@ fn auth_routing_and_metrics_edges() {
     finish(svc, fe);
 }
 
+/// Open file-descriptor count for this process (Linux); `None` where
+/// `/proc` is absent so the fd-leak assertion degrades to a no-op.
+fn count_fds() -> Option<usize> {
+    std::fs::read_dir("/proc/self/fd").ok().map(|d| d.count())
+}
+
+#[test]
+fn keep_alive_reuse_under_load_leaks_no_fds_and_keeps_histograms_sane() {
+    const CONNS: usize = 12;
+    const REQS: usize = 16;
+    let (svc, fe) = start(oracle(), ExecMode::Pool, 4, 2);
+    let addr = fe.addr();
+    let before = get(addr, "/v1/metrics", "tok-a").json();
+    let requests_before = before
+        .get("counters")
+        .unwrap()
+        .get("http.requests")
+        .unwrap()
+        .as_u64()
+        .unwrap();
+    let fds_before = count_fds();
+
+    for _ in 0..CONNS {
+        let mut s = TcpStream::connect(addr).unwrap();
+        let mut pipelined = String::new();
+        for i in 0..REQS {
+            let close = if i + 1 == REQS {
+                "Connection: close\r\n"
+            } else {
+                ""
+            };
+            pipelined.push_str(&format!("GET /healthz HTTP/1.1\r\nHost: t\r\n{close}\r\n"));
+        }
+        s.write_all(pipelined.as_bytes()).unwrap();
+        let mut buf = Vec::new();
+        s.read_to_end(&mut buf).unwrap();
+        let text = String::from_utf8_lossy(&buf);
+        assert_eq!(
+            text.matches("HTTP/1.1 200 OK").count(),
+            REQS,
+            "every pipelined request answered on one connection: {text}"
+        );
+    }
+
+    // Handler sockets are released as each connection ends, not at
+    // stop(); allow the last handler threads a moment to unwind. The
+    // slack absorbs unrelated fds from concurrently running tests while
+    // still catching a per-connection (12) or per-request (192) leak.
+    if let Some(base) = fds_before {
+        let deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            let now = count_fds().unwrap();
+            if now <= base + 8 {
+                break;
+            }
+            assert!(
+                Instant::now() < deadline,
+                "fd count never settled: {base} before load, {now} after"
+            );
+            std::thread::sleep(Duration::from_millis(10));
+        }
+    }
+
+    let after = get(addr, "/v1/metrics", "tok-a").json();
+    let requests_after = after
+        .get("counters")
+        .unwrap()
+        .get("http.requests")
+        .unwrap()
+        .as_u64()
+        .unwrap();
+    assert!(
+        requests_after >= requests_before + (CONNS * REQS) as u64,
+        "request counter must cover the pipelined load: {requests_before} -> {requests_after}"
+    );
+    let lat = after
+        .get("histograms")
+        .unwrap()
+        .get("http.request_latency_us")
+        .unwrap()
+        .clone();
+    let count = lat.get("count").unwrap().as_u64().unwrap();
+    assert!(count >= (CONNS * REQS) as u64, "one latency sample per request: {count}");
+    let p50 = lat.get("p50").unwrap().as_f64().unwrap();
+    let p99 = lat.get("p99").unwrap().as_f64().unwrap();
+    assert!(p50 <= p99, "histogram percentiles stay ordered under load: p50 {p50} p99 {p99}");
+    finish(svc, fe);
+}
+
+#[test]
+fn result_stream_resumes_from_a_coarser_level() {
+    let (svc, fe) = start(oracle(), ExecMode::Pool, 4, 2);
+    let addr = fe.addr();
+    let r = post(addr, "/v1/jobs", "tok-a", &submit_body("resume", 930, 16, 8, "large_tumor"));
+    assert_eq!(r.status, 201, "{}", String::from_utf8_lossy(&r.body));
+    let id = r.json().get("job").unwrap().as_u64().unwrap();
+
+    let full = get(addr, &format!("/v1/jobs/{id}/result"), "tok-a");
+    assert_eq!(full.status, 200);
+    let full_lines = full.lines();
+    let (tree, _) = reassemble(full_lines.clone());
+    tree.check_consistency().unwrap();
+    assert!(
+        full_lines
+            .iter()
+            .any(|l| l.opt("level").is_some_and(|lv| lv.as_usize().unwrap() == 2)),
+        "slide must zoom to level 2 for the resume test to bite"
+    );
+
+    // Levels publish coarsest-first, so a client that disconnected after
+    // receiving the level-2 deltas resumes with `?from_level=1`: header,
+    // the level<=1 deltas and the terminal line — byte-identical to the
+    // corresponding suffix of the full stream.
+    let resumed = get(addr, &format!("/v1/jobs/{id}/result?from_level=1"), "tok-a");
+    assert_eq!(resumed.status, 200);
+    let got: Vec<String> = resumed.lines().iter().map(|l| l.to_string()).collect();
+    let want: Vec<String> = full_lines
+        .iter()
+        .filter(|l| l.opt("level").map_or(true, |lv| lv.as_usize().unwrap() <= 1))
+        .map(|l| l.to_string())
+        .collect();
+    assert_eq!(got, want, "resume replays exactly the fine-level suffix");
+    assert!(got.len() < full_lines.len(), "the level-2 delta was skipped");
+
+    // Garbage resume points are rejected before the stream starts.
+    let r = get(addr, &format!("/v1/jobs/{id}/result?from_level=zebra"), "tok-a");
+    assert_eq!(r.status, 400);
+    finish(svc, fe);
+}
+
+#[test]
+fn degraded_health_sheds_submissions_until_recovery() {
+    let svc = Arc::new(AnalysisService::start(
+        oracle(),
+        ServiceConfig {
+            workers: 4,
+            queue_capacity: 4,
+            max_in_flight: 2,
+            batch: 8,
+            policy: PolicySpec::fifo(),
+            exec: ExecMode::Pool,
+            ..ServiceConfig::default()
+        },
+    ));
+    let tokens = TokenTable::parse("tok-a lab_a\n").unwrap();
+    let cfg = HttpConfig::new("127.0.0.1:0", tokens);
+    let health = Arc::clone(&cfg.health);
+    let fe = HttpFrontend::start(Arc::clone(&svc), cfg).expect("bind ephemeral port");
+    let addr = fe.addr();
+
+    let r = http(addr, "GET /healthz HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n");
+    assert_eq!(r.status, 200);
+    assert!(r.json().get("ok").unwrap().as_bool().unwrap());
+
+    health.set_degraded("store: cache dir not writable");
+    let r = http(addr, "GET /healthz HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n");
+    assert_eq!(r.status, 503);
+    let v = r.json();
+    assert!(!v.get("ok").unwrap().as_bool().unwrap());
+    let reasons: Vec<&str> = v
+        .get("degraded")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|j| j.as_str().unwrap())
+        .collect();
+    assert_eq!(reasons, ["store: cache dir not writable"]);
+
+    // New work is shed with a retry hint while degraded.
+    let r = post(addr, "/v1/jobs", "tok-a", &submit_body("deg0", 940, 16, 8, "large_tumor"));
+    assert_eq!(r.status, 503, "{}", String::from_utf8_lossy(&r.body));
+    assert_eq!(r.header("retry-after"), Some("5"));
+    assert_eq!(r.json().get("retry_after").unwrap().as_u64().unwrap(), 5);
+
+    // Recovery is symmetric: clear the reason, service admits again.
+    health.clear_degraded("store: cache dir not writable");
+    let r = http(addr, "GET /healthz HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n");
+    assert_eq!(r.status, 200);
+    let r = post(addr, "/v1/jobs", "tok-a", &submit_body("deg1", 941, 16, 8, "large_tumor"));
+    assert_eq!(r.status, 201, "{}", String::from_utf8_lossy(&r.body));
+    let id = r.json().get("job").unwrap().as_u64().unwrap();
+    let r = get(addr, &format!("/v1/jobs/{id}/result"), "tok-a");
+    assert_eq!(r.status, 200);
+    let (tree, terminal) = reassemble(r.lines());
+    assert_eq!(terminal.get("state").unwrap().as_str().unwrap(), "completed");
+    tree.check_consistency().unwrap();
+    let report = finish(svc, fe);
+    assert_eq!(report.metrics.completed, 1);
+}
+
 #[test]
 fn keep_alive_serves_sequential_requests_on_one_connection() {
     let (svc, fe) = start(oracle(), ExecMode::Pool, 4, 2);

@@ -221,6 +221,88 @@ fn corrupt_paths_error_never_panic() {
     std::fs::remove_dir_all(&dir).unwrap();
 }
 
+/// Property held across injected torn-write and ENOSPC schedules: a
+/// failed re-save NEVER damages the existing store (atomic writes tear
+/// the tmp, not the destination), and a *silent* write-side bit flip is
+/// caught by the shard CRC and repaired away by `fsck`.
+#[test]
+fn faulted_saves_never_tear_the_store_and_fsck_repairs_silent_corruption() {
+    use pyramidai::fault::{self, FaultKind, FaultPlan, FaultRule};
+    use pyramidai::predcache::store::fsck;
+
+    let cache = collect(3, 61);
+    let dir = tmp_dir("faultsave");
+    // Scope every rule to this test's unique directory name: the
+    // injector is global, and sibling tests in this binary write shards
+    // of their own concurrently.
+    let tag = dir.file_name().unwrap().to_string_lossy().into_owned();
+    save_sharded(&cache, &dir, 1).unwrap();
+    ShardedPredStore::open(&dir).unwrap().validate().unwrap();
+    let thr = Thresholds::uniform(3, 0.4);
+    let golden: Vec<_> = cache.slides.iter().map(|s| s.replay(&thr)).collect();
+
+    for (seed, kind) in [
+        (1u64, FaultKind::DiskTornWrite),
+        (2, FaultKind::DiskTornWrite),
+        (3, FaultKind::DiskEnospc { after_bytes: 64 }),
+        (4, FaultKind::DiskEnospc { after_bytes: 1024 }),
+    ] {
+        let mut rule = FaultRule::always(kind);
+        rule.path = Some(tag.clone());
+        fault::install(FaultPlan::new(seed).rule(rule));
+        let err = save_sharded(&cache, &dir, 1).unwrap_err();
+        fault::clear();
+        let msg = err.to_string();
+        assert!(
+            msg.contains("torn") || msg.contains("ENOSPC"),
+            "seed {seed}: unexpected error {msg}"
+        );
+        // The pre-existing store is byte-for-byte unharmed.
+        let store = ShardedPredStore::open(&dir).unwrap();
+        store.validate().unwrap();
+        for (i, g) in golden.iter().enumerate() {
+            assert_eq!(
+                store.replay(i, &thr).unwrap().nodes,
+                g.nodes,
+                "slide {i} diverged after faulted save (seed {seed})"
+            );
+        }
+        let rep = fsck(&dir, true).unwrap();
+        assert!(rep.clean(), "residue after faulted save: {rep:?}");
+    }
+
+    // Silent corruption: a bit flip in slide 0's re-saved shard persists
+    // without an error (the save "succeeds")…
+    let mut rule = FaultRule::always(FaultKind::DiskBitflip);
+    rule.path = Some(format!("{tag}/0000_"));
+    fault::install(FaultPlan::new(9).rule(rule));
+    let saved = save_sharded(&cache, &dir, 1);
+    fault::clear();
+    saved.unwrap();
+    // …the CRC catches it on load…
+    let store = ShardedPredStore::open(&dir).unwrap();
+    assert!(store.validate().is_err(), "bit flip went undetected");
+    drop(store);
+    // …and fsck quarantines exactly that shard, leaving a degraded but
+    // fully valid store whose surviving replays still match.
+    let rep = fsck(&dir, false).unwrap();
+    assert_eq!(rep.bad.len(), 1, "bad: {:?}", rep.bad);
+    assert_eq!(rep.quarantined, 1);
+    let store = ShardedPredStore::open(&dir).unwrap();
+    assert_eq!(store.len(), 2);
+    store.validate().unwrap();
+    for i in 0..store.len() {
+        let id = store.slide_id(i).unwrap().to_string();
+        let j = cache
+            .slides
+            .iter()
+            .position(|s| s.spec.id == id)
+            .expect("surviving slide is one of the originals");
+        assert_eq!(store.replay(i, &thr).unwrap().nodes, golden[j].nodes);
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
 #[test]
 fn json_migration_preserves_replay_and_tuning_pairs() {
     let cache = collect(3, 59);
